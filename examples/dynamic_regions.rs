@@ -1,0 +1,75 @@
+//! Dynamic interval management (paper §3): region moves without
+//! re-matching from scratch.
+//!
+//! Builds the two-tree dynamic DDM state, then streams region moves
+//! and compares the incremental cost against full SBM re-matching —
+//! the trade-off the paper highlights in its conclusions.
+//!
+//!     cargo run --release --example dynamic_regions -- --n 2e4 --moves 2000
+
+use ddm::algos::dynamic::{DynamicDdm, Side};
+use ddm::algos::sbm;
+use ddm::cli::Args;
+use ddm::core::interval::Interval;
+use ddm::core::sink::CountSink;
+use ddm::prng::Rng;
+use ddm::sets::SetImpl;
+use ddm::workload::{alpha_workload, AlphaParams};
+
+fn main() {
+    let args = Args::from_env();
+    let n_total = args.size("n", 20_000);
+    let n_moves = args.size("moves", 2_000);
+    let params = AlphaParams {
+        n_total,
+        alpha: args.opt("alpha", 1.0),
+        space: 1e6,
+    };
+    let (subs, upds) = alpha_workload(args.opt("seed", 11u64), &params);
+    let l = params.region_len();
+
+    println!("dynamic_regions: N={} α={} moves={}", n_total, params.alpha, n_moves);
+    let t0 = std::time::Instant::now();
+    let mut ddm_state = DynamicDdm::new(subs.clone(), upds.clone());
+    println!(
+        "built two interval trees in {}",
+        ddm::bench::stats::fmt_secs(t0.elapsed().as_secs_f64())
+    );
+
+    // Stream random moves through the incremental path.
+    let mut rng = Rng::new(99);
+    let t1 = std::time::Instant::now();
+    let (mut added, mut removed) = (0usize, 0usize);
+    for _ in 0..n_moves {
+        let side = if rng.chance(0.5) { Side::Subscription } else { Side::Update };
+        let count = match side {
+            Side::Subscription => ddm_state.n_subs(),
+            Side::Update => ddm_state.n_upds(),
+        };
+        let idx = rng.below(count as u64) as u32;
+        let lo = rng.uniform(0.0, params.space - l);
+        let diff = ddm_state.move_region(side, idx, Interval::new(lo, lo + l));
+        added += diff.added.len();
+        removed += diff.removed.len();
+    }
+    let t_inc = t1.elapsed();
+    println!(
+        "incremental: {n_moves} moves in {} ({:.1} µs/move; +{added} / -{removed} overlaps)",
+        ddm::bench::stats::fmt_secs(t_inc.as_secs_f64()),
+        t_inc.as_secs_f64() * 1e6 / n_moves as f64
+    );
+
+    // Compare: full SBM re-match after every move would cost ~moves × T(SBM).
+    let t2 = std::time::Instant::now();
+    let mut sink = CountSink::default();
+    sbm::match_seq_with::<CountSink>(SetImpl::Bit, &subs, &upds);
+    let _ = &mut sink;
+    let t_full = t2.elapsed();
+    println!(
+        "one full SBM match: {} -> {n_moves} re-matches would cost ~{}",
+        ddm::bench::stats::fmt_secs(t_full.as_secs_f64()),
+        ddm::bench::stats::fmt_secs(t_full.as_secs_f64() * n_moves as f64)
+    );
+    let speedup = t_full.as_secs_f64() * n_moves as f64 / t_inc.as_secs_f64();
+    println!("incremental advantage on this stream: {speedup:.0}x");
+}

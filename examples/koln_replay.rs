@@ -1,0 +1,59 @@
+//! Köln-trace replay (paper Fig. 14 workload as an application).
+//!
+//! Generates the Köln-like vehicular trace (or loads one from CSV),
+//! runs the three algorithms the paper compares on it (GBM, ITM,
+//! Parallel SBM), and reports wall-clock + K — a small version of the
+//! paper's realistic-workload experiment usable as a library demo.
+//!
+//!     cargo run --release --example koln_replay -- --scale 0.05 --threads 4
+//!     cargo run --release --example koln_replay -- --csv /tmp/trace.csv
+
+use ddm::algos::{Algo, MatchParams};
+use ddm::cli::Args;
+use ddm::exec::ThreadPool;
+use ddm::workload::koln::{koln_workload, load_positions_csv, save_positions_csv, KolnParams};
+
+fn main() {
+    let args = Args::from_env();
+    let threads = args.opt("threads", 4usize);
+    let params = KolnParams::default().scaled(args.opt("scale", 0.05f64));
+
+    let (subs, upds) = match args.get("csv") {
+        Some(path) => {
+            let p = std::path::Path::new(path);
+            println!("loading trace from {}", p.display());
+            load_positions_csv(p, params.width).expect("trace CSV loads")
+        }
+        None => {
+            let w = koln_workload(args.opt("seed", 62u64), &params);
+            if let Some(out) = args.get("save-csv") {
+                save_positions_csv(std::path::Path::new(out), &w.0).expect("CSV saved");
+                println!("saved positions to {out}");
+            }
+            w
+        }
+    };
+    println!(
+        "koln-like trace: {} positions -> {} sub + {} upd regions of {} m",
+        subs.len(),
+        subs.len(),
+        upds.len(),
+        params.width
+    );
+
+    let pool = ThreadPool::new(threads.saturating_sub(1));
+    let mp = MatchParams {
+        ncells: args.opt("ncells", 3000usize),
+        ..Default::default()
+    };
+    // The paper's Fig. 14 algorithm set.
+    for algo in [Algo::Gbm, Algo::Itm, Algo::Psbm] {
+        let t0 = std::time::Instant::now();
+        let k = ddm::algos::run_count(algo, &pool, threads, &subs, &upds, &mp);
+        println!(
+            "  {:6} K={k:<14} {}",
+            algo.name(),
+            ddm::bench::stats::fmt_secs(t0.elapsed().as_secs_f64())
+        );
+    }
+}

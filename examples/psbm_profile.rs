@@ -1,0 +1,25 @@
+//! Perf-pass diagnostic: per-region cost breakdown of Parallel SBM.
+use ddm::algos::psbm;
+use ddm::core::sink::CountSink;
+use ddm::exec::ThreadPool;
+use ddm::sets::SetImpl;
+use ddm::workload::{alpha_workload, AlphaParams};
+
+fn main() {
+    let args = ddm::cli::Args::from_env();
+    let n = args.size("n", 1_000_000);
+    let p = args.opt("p", 16usize);
+    let (subs, upds) = alpha_workload(1, &AlphaParams { n_total: n, alpha: 100.0, space: 1e6 });
+    let pool = ThreadPool::new(31);
+    // warmup
+    let _: Vec<CountSink> = psbm::match_par_with(SetImpl::Sparse, &pool, p, &subs, &upds);
+    pool.start_log();
+    let _: Vec<CountSink> = psbm::match_par_with(SetImpl::Sparse, &pool, p, &subs, &upds);
+    let log = pool.take_log();
+    println!("P={p} regions={} serial={:?}", log.regions.len(), log.serial);
+    for (i, r) in log.regions.iter().enumerate() {
+        let sum: std::time::Duration = r.iter().sum();
+        let max = r.iter().max().unwrap();
+        println!("  region {i}: workers={} sum={:?} max={:?}", r.len(), sum, max);
+    }
+}

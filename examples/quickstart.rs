@@ -1,0 +1,47 @@
+//! Quickstart: the region matching problem in 30 lines.
+//!
+//! Generates the paper's synthetic workload, runs every matching
+//! algorithm, and checks they agree — the library's "hello world".
+//!
+//!     cargo run --release --example quickstart -- --n 1e5 --alpha 10 --threads 4
+
+use ddm::algos::{Algo, MatchParams};
+use ddm::cli::Args;
+use ddm::exec::ThreadPool;
+use ddm::workload::{alpha_workload, AlphaParams};
+
+fn main() {
+    let args = Args::from_env();
+    let params = AlphaParams {
+        n_total: args.size("n", 100_000),
+        alpha: args.opt("alpha", 10.0),
+        space: 1e6,
+    };
+    let threads = args.opt("threads", 4usize);
+    let (subs, upds) = alpha_workload(args.opt("seed", 1u64), &params);
+    println!(
+        "workload: N={} α={} -> {} subscriptions, {} updates",
+        params.n_total,
+        params.alpha,
+        subs.len(),
+        upds.len()
+    );
+
+    let pool = ThreadPool::new(threads.saturating_sub(1));
+    let mp = MatchParams::default();
+    let mut last_k = None;
+    for algo in Algo::ALL {
+        let t0 = std::time::Instant::now();
+        let k = ddm::algos::run_count(algo, &pool, threads, &subs, &upds, &mp);
+        println!(
+            "  {:10} K={k:<12} {}",
+            algo.name(),
+            ddm::bench::stats::fmt_secs(t0.elapsed().as_secs_f64())
+        );
+        if let Some(prev) = last_k {
+            assert_eq!(k, prev, "{} disagrees", algo.name());
+        }
+        last_k = Some(k);
+    }
+    println!("all {} algorithms agree ✓", Algo::ALL.len());
+}

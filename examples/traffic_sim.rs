@@ -1,0 +1,144 @@
+//! **End-to-end driver** (DESIGN.md §4, experiment E2E): the paper's
+//! Fig. 1 road-traffic scenario running on the full stack.
+//!
+//! Four federates — cars, scooters, trucks, traffic lights — register
+//! subscription/update regions with the coordinator service. Vehicles
+//! move every step (skewed subscription regions toward the direction
+//! of motion, as in the paper's figure), lights only publish. Each step
+//! the coordinator routes update notifications through the DDM service;
+//! the run reports notification throughput and end-to-end latencies —
+//! the paper's headline "DDM as a service" metric.
+//!
+//!     cargo run --release --example traffic_sim -- --steps 200 --vehicles 300
+
+use std::time::Instant;
+
+use ddm::algos::Algo;
+use ddm::cli::Args;
+use ddm::coordinator::{Coordinator, CoordinatorConfig};
+use ddm::hla::{RegionKind, RegionSpec, RoutingSpace};
+use ddm::prng::Rng;
+
+/// Road length (meters) and entity geometry, loosely scaled to Fig. 1.
+const ROAD: u64 = 50_000;
+const SUB_AHEAD: u64 = 120; // subscription skewed toward motion
+const SUB_BEHIND: u64 = 20;
+const UPD_HALF: u64 = 15;
+const LIGHT_RANGE: u64 = 60;
+
+struct Vehicle {
+    x: u64,
+    speed: u64,
+    sub: ddm::hla::RegionHandle,
+    upd: ddm::hla::RegionHandle,
+}
+
+fn vehicle_regions(x: u64) -> (RegionSpec, RegionSpec) {
+    let sub = RegionSpec::interval(x.saturating_sub(SUB_BEHIND), (x + SUB_AHEAD).min(ROAD));
+    let upd = RegionSpec::interval(x.saturating_sub(UPD_HALF), (x + UPD_HALF).min(ROAD));
+    (sub, upd)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let steps = args.opt("steps", 200usize);
+    let n_vehicles = args.opt("vehicles", 300usize);
+    let n_lights = args.opt("lights", 20usize);
+    let threads = args.opt("threads", 4usize);
+    let seed = args.opt("seed", 2026u64);
+
+    println!("traffic_sim: {n_vehicles} vehicles, {n_lights} lights, {steps} steps");
+    let coord = Coordinator::spawn(CoordinatorConfig {
+        space: RoutingSpace::new(vec![ddm::hla::Dimension::new("road-x", ROAD)]),
+        nthreads: threads,
+        ..Default::default()
+    });
+    let c = coord.client();
+
+    // Federates as in Fig. 1 (bottom): F1 cars, F2 scooters, F3 trucks,
+    // F4 traffic lights.
+    let fleets = [c.join("cars"), c.join("scooters"), c.join("trucks")];
+    let lights_fed = c.join("traffic-lights");
+
+    let mut rng = Rng::new(seed);
+    let mut vehicles: Vec<(usize, Vehicle)> = Vec::new();
+    for i in 0..n_vehicles {
+        let fleet = i % fleets.len();
+        let x = rng.below(ROAD - SUB_AHEAD);
+        let (sub_spec, upd_spec) = vehicle_regions(x);
+        let sub = c
+            .register(fleets[fleet], RegionKind::Subscription, sub_spec)
+            .unwrap();
+        let upd = c
+            .register(fleets[fleet], RegionKind::Update, upd_spec)
+            .unwrap();
+        vehicles.push((
+            fleet,
+            Vehicle {
+                x,
+                speed: 5 + rng.below(20),
+                sub,
+                upd,
+            },
+        ));
+    }
+    // Traffic lights: pure publishers (update regions only).
+    let lights: Vec<ddm::hla::RegionHandle> = (0..n_lights)
+        .map(|i| {
+            let x = (i as u64 + 1) * ROAD / (n_lights as u64 + 1);
+            c.register(
+                lights_fed,
+                RegionKind::Update,
+                RegionSpec::interval(x.saturating_sub(LIGHT_RANGE), x + LIGHT_RANGE),
+            )
+            .unwrap()
+        })
+        .collect();
+
+    // Sanity: full match on the initial configuration.
+    let k0 = c.match_all(Algo::Psbm);
+    println!("initial full match: {k0} overlapping (sub, upd) pairs");
+
+    let t0 = Instant::now();
+    let mut notifications = 0usize;
+    let mut received = 0usize;
+    for step in 0..steps {
+        // Vehicles advance and publish their new position.
+        for (_, v) in vehicles.iter_mut() {
+            v.x = (v.x + v.speed) % (ROAD - SUB_AHEAD);
+            let (sub_spec, upd_spec) = vehicle_regions(v.x);
+            c.modify(v.sub, sub_spec).unwrap();
+            c.modify(v.upd, upd_spec).unwrap();
+            notifications += c.publish(v.upd, step as u64).unwrap();
+        }
+        // Lights change phase every 10 steps.
+        if step % 10 == 0 {
+            for &l in &lights {
+                notifications += c.publish(l, step as u64).unwrap();
+            }
+        }
+        // Fleets consume their mailboxes.
+        for &f in fleets.iter() {
+            received += c.poll(f).len();
+        }
+    }
+    let dt = t0.elapsed();
+    let published = steps * n_vehicles + (steps / 10 + usize::from(steps % 10 != 0)) * n_lights;
+
+    println!("\n== results ==");
+    println!("steps                : {steps}");
+    println!("publishes            : {published}");
+    println!("notifications routed : {notifications}");
+    println!("notifications polled : {received}");
+    println!(
+        "wall-clock           : {} ({:.0} publishes/s, {:.0} notifications/s)",
+        ddm::bench::stats::fmt_secs(dt.as_secs_f64()),
+        published as f64 / dt.as_secs_f64(),
+        notifications as f64 / dt.as_secs_f64()
+    );
+    assert_eq!(notifications, received, "all routed notifications polled");
+
+    let metrics = coord.shutdown();
+    println!("\ncoordinator metrics:");
+    metrics.table().print();
+}

@@ -1,0 +1,73 @@
+//! The XLA/Pallas accelerator path: match with the AOT-compiled
+//! JAX+Pallas kernels from Rust, and cross-check against native BFM.
+//!
+//! Requires `make artifacts` (Python runs once, at build time only).
+//!
+//!     cargo run --release --example xla_backend -- --n 4096 --alpha 10
+
+use ddm::algos::bfm;
+use ddm::cli::Args;
+use ddm::core::sink::CountSink;
+use ddm::runtime::XlaMatchBackend;
+use ddm::workload::{alpha_workload, AlphaParams};
+
+fn main() {
+    let dir = std::path::Path::new(ddm::runtime::DEFAULT_ARTIFACT_DIR);
+    if !ddm::runtime::artifacts_available(dir) {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let args = Args::from_env();
+    let params = AlphaParams {
+        n_total: args.size("n", 4096),
+        alpha: args.opt("alpha", 10.0),
+        space: 1e5,
+    };
+    let (subs, upds) = alpha_workload(args.opt("seed", 3u64), &params);
+    // The XLA kernels compute in f32; quantize so both backends see
+    // bit-identical coordinates (see runtime::backend::quantize_f32).
+    let subs = ddm::runtime::backend::quantize_f32(&subs);
+    let upds = ddm::runtime::backend::quantize_f32(&upds);
+
+    let t0 = std::time::Instant::now();
+    let be = XlaMatchBackend::load(dir).expect("backend loads");
+    println!(
+        "backend: compiled {} artifacts in {}",
+        5,
+        ddm::bench::stats::fmt_secs(t0.elapsed().as_secs_f64())
+    );
+    if let Some((n, m)) = be.counts_capacity(1) {
+        println!("counts kernel capacity: {n} x {m} (d=1); larger inputs are tiled");
+    }
+
+    let t1 = std::time::Instant::now();
+    let k_xla = be.match_counts_1d(&subs, &upds).expect("xla match");
+    let t_xla = t1.elapsed();
+
+    let t2 = std::time::Instant::now();
+    let mut sink = CountSink::default();
+    bfm::match_seq(&subs, &upds, &mut sink);
+    let t_bfm = t2.elapsed();
+
+    println!(
+        "XLA tiled kernel : K={k_xla:<12} {}",
+        ddm::bench::stats::fmt_secs(t_xla.as_secs_f64())
+    );
+    println!(
+        "native serial BFM: K={:<12} {}",
+        sink.count,
+        ddm::bench::stats::fmt_secs(t_bfm.as_secs_f64())
+    );
+    assert_eq!(k_xla, sink.count, "backends must agree");
+    println!("backends agree ✓");
+
+    // Bonus: the compiled Fig.-7 prefix-sum pipeline.
+    let xs: Vec<i32> = (0..1000).map(|i| (i % 7) - 3).collect();
+    let ps = be.prefix_sum(&xs).expect("scan runs");
+    let mut acc = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        acc += x;
+        assert_eq!(ps[i], acc);
+    }
+    println!("compiled prefix-sum pipeline verified ✓");
+}

@@ -1,0 +1,110 @@
+"""AOT compile path: lower the L2 graphs to HLO **text** artifacts.
+
+Run once at build time (``make artifacts``); Python never appears on the
+request path. The Rust runtime loads every artifact listed in
+``artifacts/manifest.txt`` through ``HloModuleProto::from_text_file``.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the pinned
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot [--out DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import scan
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _lower_match_mask(n, m, d, ts, tu):
+    fn = lambda sl, sh, ul, uh: (model.match_mask(sl, sh, ul, uh, ts=ts, tu=tu),)
+    args = (_spec((n, d)), _spec((n, d)), _spec((m, d)), _spec((m, d)))
+    return jax.jit(fn).lower(*args)
+
+
+def _lower_match_counts(n, m, d, ts, tu):
+    fn = lambda sl, sh, ul, uh: model.match_counts(sl, sh, ul, uh, ts=ts, tu=tu)
+    args = (_spec((n, d)), _spec((n, d)), _spec((m, d)), _spec((m, d)))
+    return jax.jit(fn).lower(*args)
+
+
+def _lower_prefix_sum(n, block):
+    fn = lambda x: (model.parallel_prefix_sum(x, block=block),)
+    return jax.jit(fn).lower(_spec((n,), I32))
+
+
+# (name, kind, params) — the artifact set the Rust runtime expects.
+# Shapes are fixed at AOT time; the Rust backend pads to the next
+# compiled shape with the kernels' PAD sentinel.
+ARTIFACTS = [
+    ("match_mask_1024x1024_d1", "mask", dict(n=1024, m=1024, d=1, ts=256, tu=256)),
+    ("match_mask_512x512_d2", "mask", dict(n=512, m=512, d=2, ts=128, tu=128)),
+    ("match_counts_2048x2048_d1", "counts", dict(n=2048, m=2048, d=1, ts=256, tu=256)),
+    ("match_counts_2048x2048_d2", "counts", dict(n=2048, m=2048, d=2, ts=256, tu=256)),
+    ("prefix_sum_65536", "scan", dict(n=65536, block=4096)),
+]
+
+
+def build(outdir: str) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    manifest_lines = []
+    for name, kind, p in ARTIFACTS:
+        if kind == "mask":
+            lowered = _lower_match_mask(**p)
+            meta = f"n={p['n']} m={p['m']} d={p['d']} ts={p['ts']} tu={p['tu']}"
+        elif kind == "counts":
+            lowered = _lower_match_counts(**p)
+            meta = f"n={p['n']} m={p['m']} d={p['d']} ts={p['ts']} tu={p['tu']}"
+        elif kind == "scan":
+            lowered = _lower_prefix_sum(**p)
+            meta = f"n={p['n']} block={p['block']}"
+        else:  # pragma: no cover - config error
+            raise ValueError(kind)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest_lines.append(f"{name} kind={kind} file={fname} sha256={digest} {meta}")
+        print(f"  {fname}  {len(text)} chars  sha256={digest}")
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(ARTIFACTS)} artifacts + manifest.txt to {outdir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""L1 Pallas kernels: tiled d-dimensional region-overlap matching.
+
+This is the TPU adaptation of the paper's data-parallel matching
+discussion (§4 "remarks on GPU implementations" and §6): SBM and ITM are
+branch- and pointer-heavy and therefore ill suited to SIMD hardware,
+while the dense (brute-force / bit-vector) formulation maps naturally
+onto wide vector units. On a GPU the paper would tile the n×m pair space
+across threadblocks over shared memory; here the same decomposition is
+expressed with a Pallas ``grid`` + ``BlockSpec`` schedule that stages
+(TS × d) subscription and (TU × d) update tiles from HBM into VMEM and
+evaluates a (TS × TU) intersection tile with vectorized compares (VPU
+work — there is no matmul in this problem, so the MXU is intentionally
+idle; see DESIGN.md §7 for the roofline accounting).
+
+Interval semantics are half-open ``[lo, hi)`` (paper Algorithm 1):
+``x.lo < y.hi and y.lo < x.hi``. Padding convention: rows with
+``lo = hi`` (e.g. the ``PAD`` sentinel) never intersect anything, so
+callers can pad batches up to the compiled tile multiple.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and the artifacts produced from these
+kernels must run inside the Rust coordinator via the CPU client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sentinel for padded (never-matching) regions: lo = hi = PAD.
+PAD = 1.0e30
+
+# Default tile sizes. 128 lanes is the TPU vector width; 8×128 is the
+# native f32 VPU tile, so TS and TU default to multiples of those.
+DEFAULT_TS = 256
+DEFAULT_TU = 256
+
+
+def _intersect_tile(s_lo, s_hi, u_lo, u_hi):
+    """(TS×TU) boolean intersection tile from (TS,d) and (TU,d) bounds.
+
+    The d-dimensional reduction of paper §2: rectangles intersect iff
+    their projections intersect on every dimension. ``d`` is static at
+    trace time, so the loop unrolls into ``d`` fused compare/and stages.
+    """
+    ts, d = s_lo.shape
+    acc = None
+    for k in range(d):
+        slo = s_lo[:, k][:, None]  # [TS, 1]
+        shi = s_hi[:, k][:, None]
+        ulo = u_lo[:, k][None, :]  # [1, TU]
+        uhi = u_hi[:, k][None, :]
+        dim_mask = (slo < uhi) & (ulo < shi)
+        acc = dim_mask if acc is None else (acc & dim_mask)
+    return acc
+
+
+def _mask_kernel(s_lo_ref, s_hi_ref, u_lo_ref, u_hi_ref, o_ref):
+    """Write one (TS × TU) tile of the intersection mask as uint8."""
+    tile = _intersect_tile(
+        s_lo_ref[...], s_hi_ref[...], u_lo_ref[...], u_hi_ref[...]
+    )
+    o_ref[...] = tile.astype(jnp.uint8)
+
+
+def _count_kernel(s_lo_ref, s_hi_ref, u_lo_ref, u_hi_ref, o_ref):
+    """Accumulate per-subscription match counts across update tiles.
+
+    The output block is indexed by the subscription tile only, so it is
+    revisited for every update tile ``j``; the first visit initializes,
+    later visits accumulate (the standard Pallas reduction idiom).
+    """
+    j = pl.program_id(1)
+    tile = _intersect_tile(
+        s_lo_ref[...], s_hi_ref[...], u_lo_ref[...], u_hi_ref[...]
+    )
+    partial = tile.astype(jnp.int32).sum(axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + partial
+
+
+def _check_args(s_lo, s_hi, u_lo, u_hi, ts, tu):
+    n, d = s_lo.shape
+    m, d2 = u_lo.shape
+    if s_hi.shape != (n, d) or u_hi.shape != (m, d2) or d != d2:
+        raise ValueError(
+            f"inconsistent shapes: s {s_lo.shape}/{s_hi.shape}, "
+            f"u {u_lo.shape}/{u_hi.shape}"
+        )
+    if n % ts != 0 or m % tu != 0:
+        raise ValueError(
+            f"n={n} and m={m} must be multiples of the tile sizes "
+            f"ts={ts}, tu={tu}; pad with PAD rows"
+        )
+    return n, m, d
+
+
+@functools.partial(jax.jit, static_argnames=("ts", "tu"))
+def overlap_mask(s_lo, s_hi, u_lo, u_hi, *, ts=DEFAULT_TS, tu=DEFAULT_TU):
+    """Dense intersection mask ``[n, m]`` (uint8) via the tiled kernel.
+
+    Args:
+      s_lo, s_hi: ``[n, d]`` f32 subscription bounds (n multiple of ts).
+      u_lo, u_hi: ``[m, d]`` f32 update bounds (m multiple of tu).
+    """
+    n, m, d = _check_args(s_lo, s_hi, u_lo, u_hi, ts, tu)
+    grid = (n // ts, m // tu)
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ts, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((ts, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tu, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tu, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((ts, tu), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.uint8),
+        interpret=True,
+    )(s_lo, s_hi, u_lo, u_hi)
+
+
+@functools.partial(jax.jit, static_argnames=("ts", "tu"))
+def overlap_counts(s_lo, s_hi, u_lo, u_hi, *, ts=DEFAULT_TS, tu=DEFAULT_TU):
+    """Per-subscription match counts ``[n]`` (int32) via the tiled kernel."""
+    n, m, d = _check_args(s_lo, s_hi, u_lo, u_hi, ts, tu)
+    grid = (n // ts, m // tu)
+    return pl.pallas_call(
+        _count_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ts, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((ts, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tu, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tu, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((ts,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(s_lo, s_hi, u_lo, u_hi)
+
+
+def pad_regions(lo, hi, multiple):
+    """Pad ``[k, d]`` bounds with PAD sentinel rows up to ``multiple``."""
+    k, d = lo.shape
+    rem = (-k) % multiple
+    if rem == 0:
+        return lo, hi
+    pad = jnp.full((rem, d), PAD, lo.dtype)
+    return jnp.concatenate([lo, pad]), jnp.concatenate([hi, pad])

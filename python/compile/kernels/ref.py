@@ -1,0 +1,60 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+These are the *reference semantics* every kernel is tested against.
+Intervals are half-open ``[lo, hi)`` exactly as paper Algorithm 1
+(Intersect-1D): two intervals x, y intersect iff
+
+    x.lo < y.hi  and  y.lo < x.hi
+
+d-dimensional rectangles intersect iff their projections intersect on
+every dimension (paper §2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def intersect_mask(s_lo, s_hi, u_lo, u_hi):
+    """Dense d-dimensional intersection mask.
+
+    Args:
+      s_lo, s_hi: ``[n, d]`` subscription lower/upper bounds.
+      u_lo, u_hi: ``[m, d]`` update lower/upper bounds.
+
+    Returns:
+      ``[n, m]`` bool — ``mask[i, j]`` iff subscription ``i`` and update
+      ``j`` intersect on every dimension.
+    """
+    s_lo = jnp.asarray(s_lo)[:, None, :]  # [n, 1, d]
+    s_hi = jnp.asarray(s_hi)[:, None, :]
+    u_lo = jnp.asarray(u_lo)[None, :, :]  # [1, m, d]
+    u_hi = jnp.asarray(u_hi)[None, :, :]
+    per_dim = (s_lo < u_hi) & (u_lo < s_hi)  # [n, m, d]
+    return jnp.all(per_dim, axis=-1)
+
+
+def intersect_counts(s_lo, s_hi, u_lo, u_hi):
+    """Per-subscription intersection counts ``[n]`` (int32)."""
+    return intersect_mask(s_lo, s_hi, u_lo, u_hi).sum(axis=1, dtype=jnp.int32)
+
+
+def intersect_total(s_lo, s_hi, u_lo, u_hi):
+    """Total number of intersecting (subscription, update) pairs."""
+    return intersect_mask(s_lo, s_hi, u_lo, u_hi).sum(dtype=jnp.int32)
+
+
+def prefix_sum(x):
+    """Inclusive prefix sum along axis 0 (oracle for the scan kernel)."""
+    return jnp.cumsum(jnp.asarray(x), axis=0, dtype=jnp.int32)
+
+
+def active_counts(markers):
+    """SBM sweep oracle: given endpoint markers sorted by position
+    (``+1`` for a lower endpoint, ``-1`` for an upper endpoint), return
+    the number of active regions *after* processing each endpoint.
+
+    This is the data-parallel reformulation of the paper's SubSet/UpdSet
+    cardinality tracking (§4): an inclusive prefix sum of the markers.
+    """
+    return prefix_sum(markers)

@@ -1,0 +1,92 @@
+"""L1 Pallas kernels: blocked parallel prefix sum (paper Fig. 7).
+
+The parallel SBM initialization (paper §4, Algorithm 7) is a prefix
+computation: each processor scans its segment locally, a master combines
+the per-segment summaries, and each processor applies its incoming
+offset. These kernels express exactly that three-step schedule on the
+TPU grid:
+
+  step 1  ``block_scan``    — per-block inclusive scan + block totals
+  step 2  (L2, tiny)        — exclusive scan of the block totals
+  step 3  ``block_add``     — add each block's incoming offset
+
+The L2 composition lives in ``compile.model.parallel_prefix_sum``. The
+cardinality form of SBM's SubSet/UpdSet tracking (`active_counts`) is a
+direct client: markers are +1 at a region's lower endpoint and -1 at its
+upper endpoint, and the inclusive scan yields the number of active
+regions after each endpoint of the sorted sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 8×128 int32 VPU tile => 1024 elements is the natural minimum block.
+DEFAULT_BLOCK = 4096
+
+
+def _block_scan_kernel(x_ref, scan_ref, tot_ref):
+    """Inclusive scan of one block; emit the block total."""
+    x = x_ref[...]
+    s = jnp.cumsum(x, dtype=jnp.int32)
+    scan_ref[...] = s
+    tot_ref[...] = s[-1:]
+
+
+def _block_add_kernel(scan_ref, off_ref, o_ref):
+    """Add the per-block exclusive offset to a scanned block."""
+    o_ref[...] = scan_ref[...] + off_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def block_scan(x, *, block=DEFAULT_BLOCK):
+    """Step 1: per-block inclusive scans and block totals.
+
+    Args:
+      x: ``[n]`` int32, n a multiple of ``block``.
+
+    Returns:
+      ``(scans [n] int32, totals [n // block] int32)``.
+    """
+    (n,) = x.shape
+    if n % block != 0:
+        raise ValueError(f"n={n} must be a multiple of block={block}")
+    nblocks = n // block
+    return pl.pallas_call(
+        _block_scan_kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks,), jnp.int32),
+        ],
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def block_add(scans, offsets, *, block=DEFAULT_BLOCK):
+    """Step 3: apply per-block exclusive offsets to the local scans."""
+    (n,) = scans.shape
+    nblocks = n // block
+    if offsets.shape != (nblocks,):
+        raise ValueError(f"offsets {offsets.shape} != ({nblocks},)")
+    return pl.pallas_call(
+        _block_add_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(scans, offsets)

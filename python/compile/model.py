@@ -1,0 +1,72 @@
+"""L2: the JAX compute graph for DDM matching, built on the L1 kernels.
+
+Three exported computations (all AOT-lowered by ``compile.aot`` to HLO
+text and executed from the Rust coordinator through PJRT):
+
+* ``match_mask``   — dense [n, m] uint8 intersection mask (tiled Pallas
+  kernel). The Rust backend enumerates (i, j) pairs from the mask; this
+  is the data-parallel BFM of paper Algorithm 2.
+* ``match_counts`` — per-subscription counts [n] plus the scalar total
+  K, fused count+reduce (the benches only need K, exactly like the
+  paper's experiments, which count intersections without storing them).
+* ``parallel_prefix_sum`` / ``sbm_active_counts`` — the paper Fig. 7
+  three-step scan composed from the Pallas scan kernels; the "GPU SBM"
+  building block discussed in §4's closing remarks.
+
+Everything here is shape-polymorphic at trace time but fixed at AOT
+time; the Rust side pads with the kernels' PAD sentinel to the compiled
+shape (see ``runtime::xla_backend``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import overlap, scan
+
+
+def match_mask(s_lo, s_hi, u_lo, u_hi, *, ts=None, tu=None):
+    """Dense intersection mask [n, m] (uint8)."""
+    kw = {}
+    if ts is not None:
+        kw["ts"] = ts
+    if tu is not None:
+        kw["tu"] = tu
+    return overlap.overlap_mask(s_lo, s_hi, u_lo, u_hi, **kw)
+
+
+def match_counts(s_lo, s_hi, u_lo, u_hi, *, ts=None, tu=None):
+    """Per-subscription counts [n] and total K (the paper's metric)."""
+    kw = {}
+    if ts is not None:
+        kw["ts"] = ts
+    if tu is not None:
+        kw["tu"] = tu
+    counts = overlap.overlap_counts(s_lo, s_hi, u_lo, u_hi, **kw)
+    # int32 is safe for every compiled artifact shape (K <= n*m <= 2^22).
+    return counts, counts.sum(dtype=jnp.int32)
+
+
+def parallel_prefix_sum(x, *, block=scan.DEFAULT_BLOCK):
+    """Paper Fig. 7: block scans -> master combine -> offset apply.
+
+    The middle step runs on the [nblocks] totals vector — the "executed
+    by the master" step of Algorithm 7 — and is negligible by design
+    (O(P) in the paper, O(nblocks) here).
+    """
+    scans, totals = scan.block_scan(x, block=block)
+    # Exclusive scan of block totals: offsets[i] = sum(totals[:i]).
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(totals, dtype=jnp.int32)[:-1]]
+    )
+    return scan.block_add(scans, offsets, block=block)
+
+
+def sbm_active_counts(markers, *, block=scan.DEFAULT_BLOCK):
+    """Number of active regions after each sorted endpoint (§4).
+
+    ``markers`` is +1 for lower endpoints, -1 for upper endpoints, in
+    sweep order. The result after the endpoint closing region x equals
+    |SubSet| + |UpdSet| as maintained by Algorithm 4.
+    """
+    return parallel_prefix_sum(markers, block=block)

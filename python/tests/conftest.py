@@ -1,0 +1,22 @@
+"""Shared fixtures for the L1/L2 test suite."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Make `compile` importable when pytest is launched from anywhere.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xDD77)
+
+
+def random_regions(rng, k, d, space=1000.0, max_len=20.0, dtype=np.float32):
+    """Random half-open d-rectangles: lo uniform, extent uniform > 0."""
+    lo = rng.uniform(0.0, space, (k, d)).astype(dtype)
+    hi = lo + rng.uniform(0.0, max_len, (k, d)).astype(dtype)
+    return lo, hi

@@ -1,0 +1,77 @@
+"""L2 model graphs + AOT pipeline checks (shapes, manifest, HLO text)."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+from tests.conftest import random_regions
+
+ARTIFACT_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "artifacts",
+)
+
+
+def test_match_counts_total(rng):
+    n, m, d = 32, 32, 2
+    slo, shi = random_regions(rng, n, d)
+    ulo, uhi = random_regions(rng, m, d)
+    counts, total = model.match_counts(slo, shi, ulo, uhi, ts=8, tu=8)
+    want_mask = np.asarray(ref.intersect_mask(slo, shi, ulo, uhi))
+    assert int(total) == want_mask.sum()
+    np.testing.assert_array_equal(np.asarray(counts), want_mask.sum(axis=1))
+
+
+def test_match_mask_dtype_uint8(rng):
+    slo, shi = random_regions(rng, 8, 1)
+    ulo, uhi = random_regions(rng, 8, 1)
+    mask = model.match_mask(slo, shi, ulo, uhi, ts=8, tu=8)
+    assert np.asarray(mask).dtype == np.uint8
+    assert set(np.unique(np.asarray(mask))) <= {0, 1}
+
+
+def test_hlo_text_is_parsable_hlo():
+    """The interchange text must be classic HLO (HloModule header) and
+    must not be StableHLO/MHLO (which the Rust-side parser rejects)."""
+    lowered = aot._lower_prefix_sum(n=64, block=16)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "stablehlo" not in text
+    assert "ENTRY" in text
+
+
+def test_artifact_registry_is_consistent():
+    names = [name for name, _, _ in aot.ARTIFACTS]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    for name, kind, p in aot.ARTIFACTS:
+        assert kind in ("mask", "counts", "scan")
+        if kind in ("mask", "counts"):
+            assert p["n"] % p["ts"] == 0 and p["m"] % p["tu"] == 0
+            assert str(p["d"]) in name
+        else:
+            assert p["n"] % p["block"] == 0
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACT_DIR, "manifest.txt")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_matches_files_on_disk():
+    with open(os.path.join(ARTIFACT_DIR, "manifest.txt")) as f:
+        lines = [l.strip() for l in f if l.strip()]
+    assert len(lines) == len(aot.ARTIFACTS)
+    for line in lines:
+        fields = dict(
+            kv.split("=", 1) for kv in line.split()[1:] if "=" in kv
+        )
+        path = os.path.join(ARTIFACT_DIR, fields["file"])
+        assert os.path.exists(path), f"missing artifact {path}"
+        with open(path) as f:
+            text = f.read()
+        assert text.startswith("HloModule")
+        import hashlib
+
+        assert hashlib.sha256(text.encode()).hexdigest()[:16] == fields["sha256"]

@@ -1,0 +1,179 @@
+"""L1 overlap kernel vs pure-jnp oracle — the core correctness signal.
+
+The Pallas kernels must agree bit-for-bit with ``ref.py`` (boolean
+output, so exact equality — no allclose tolerance games) on random,
+adversarial, and hypothesis-generated inputs.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import overlap, ref
+from tests.conftest import random_regions
+
+# Small tiles so tests exercise multi-tile grids cheaply.
+TS = TU = 8
+
+
+def run_both(slo, shi, ulo, uhi, ts=TS, tu=TU):
+    got = np.asarray(overlap.overlap_mask(slo, shi, ulo, uhi, ts=ts, tu=tu))
+    want = np.asarray(ref.intersect_mask(slo, shi, ulo, uhi))
+    return got.astype(bool), want
+
+
+@pytest.mark.parametrize("d", [1, 2, 3])
+@pytest.mark.parametrize("n,m", [(8, 8), (32, 16), (64, 64)])
+def test_mask_matches_ref_random(rng, n, m, d):
+    slo, shi = random_regions(rng, n, d)
+    ulo, uhi = random_regions(rng, m, d)
+    got, want = run_both(slo, shi, ulo, uhi)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("d", [1, 2])
+def test_counts_match_mask_rowsums(rng, d):
+    n, m = 32, 48
+    slo, shi = random_regions(rng, n, d)
+    ulo, uhi = random_regions(rng, m, d)
+    counts = np.asarray(overlap.overlap_counts(slo, shi, ulo, uhi, ts=TS, tu=TU))
+    want = np.asarray(ref.intersect_mask(slo, shi, ulo, uhi)).sum(axis=1)
+    np.testing.assert_array_equal(counts, want)
+
+
+def test_half_open_touching_endpoints_do_not_intersect():
+    # [0, 1) and [1, 2) share only the endpoint 1 -> no intersection.
+    slo = np.array([[0.0]], np.float32)
+    shi = np.array([[1.0]], np.float32)
+    ulo = np.array([[1.0]], np.float32)
+    uhi = np.array([[2.0]], np.float32)
+    got, want = run_both(slo, shi, ulo, uhi, ts=1, tu=1)
+    assert not got.any()
+    assert not want.any()
+
+
+def test_identical_intervals_intersect():
+    lo = np.full((4, 1), 5.0, np.float32)
+    hi = np.full((4, 1), 7.0, np.float32)
+    got, want = run_both(lo, hi, lo, hi, ts=4, tu=4)
+    assert got.all() and want.all()
+
+
+def test_nested_intervals_intersect():
+    slo = np.array([[0.0]], np.float32)
+    shi = np.array([[100.0]], np.float32)
+    ulo = np.array([[40.0]], np.float32)
+    uhi = np.array([[41.0]], np.float32)
+    got, _ = run_both(slo, shi, ulo, uhi, ts=1, tu=1)
+    assert got.all()
+
+
+def test_empty_interval_follows_alg1():
+    """Paper Algorithm 1 assumes non-empty intervals: for an empty
+    interval [5,5) strictly inside [0,10) the formula
+    ``x.lo < y.hi and y.lo < x.hi`` still reports an intersection.
+    Kernel and oracle must agree on this (documented) behavior; the PAD
+    sentinel relies on PAD exceeding every real coordinate, not on
+    emptiness (see test_pad_sentinel_rows_never_match)."""
+    slo = np.array([[5.0]], np.float32)
+    shi = np.array([[5.0]], np.float32)
+    ulo = np.array([[0.0]], np.float32)
+    uhi = np.array([[10.0]], np.float32)
+    got, want = run_both(slo, shi, ulo, uhi, ts=1, tu=1)
+    np.testing.assert_array_equal(got, want)
+    assert got.all()  # Alg-1 semantics
+    # Outside one another, empty intervals do not intersect.
+    got2, want2 = run_both(slo, shi, np.array([[6.0]], np.float32),
+                           np.array([[10.0]], np.float32), ts=1, tu=1)
+    np.testing.assert_array_equal(got2, want2)
+    assert not got2.any()
+
+
+def test_pad_sentinel_rows_never_match(rng):
+    n, m, d = 5, 7, 2
+    slo, shi = random_regions(rng, n, d)
+    ulo, uhi = random_regions(rng, m, d)
+    slo_p, shi_p = overlap.pad_regions(slo, shi, 8)
+    ulo_p, uhi_p = overlap.pad_regions(ulo, uhi, 8)
+    assert slo_p.shape == (8, d) and ulo_p.shape == (8, d)
+    got, _ = run_both(np.asarray(slo_p), np.asarray(shi_p),
+                      np.asarray(ulo_p), np.asarray(uhi_p))
+    # Padded rows/cols are all-false.
+    assert not got[n:, :].any()
+    assert not got[:, m:].any()
+    # Live corner equals the unpadded reference.
+    want = np.asarray(ref.intersect_mask(slo, shi, ulo, uhi))
+    np.testing.assert_array_equal(got[:n, :m], want)
+
+
+def test_d2_requires_overlap_on_both_dims():
+    # Overlap on dim 0 only -> no intersection.
+    slo = np.array([[0.0, 0.0]], np.float32)
+    shi = np.array([[10.0, 1.0]], np.float32)
+    ulo = np.array([[5.0, 2.0]], np.float32)
+    uhi = np.array([[6.0, 3.0]], np.float32)
+    got, _ = run_both(slo, shi, ulo, uhi, ts=1, tu=1)
+    assert not got.any()
+
+
+def test_tile_shape_mismatch_raises(rng):
+    slo, shi = random_regions(rng, 10, 1)
+    ulo, uhi = random_regions(rng, 8, 1)
+    with pytest.raises(ValueError, match="multiple"):
+        overlap.overlap_mask(slo, shi, ulo, uhi, ts=8, tu=8)
+
+
+def test_inconsistent_bounds_shape_raises(rng):
+    slo, shi = random_regions(rng, 8, 1)
+    ulo, uhi = random_regions(rng, 8, 2)
+    with pytest.raises(ValueError, match="inconsistent"):
+        overlap.overlap_mask(slo, shi, ulo, uhi, ts=8, tu=8)
+
+
+@pytest.mark.parametrize("ts,tu", [(4, 8), (8, 4), (16, 16)])
+def test_tiling_is_invisible(rng, ts, tu):
+    """Result must not depend on the VMEM tiling (pure schedule change)."""
+    n, m = 16, 16
+    slo, shi = random_regions(rng, n, 1)
+    ulo, uhi = random_regions(rng, m, 1)
+    base = np.asarray(overlap.overlap_mask(slo, shi, ulo, uhi, ts=16, tu=16))
+    tiled = np.asarray(overlap.overlap_mask(slo, shi, ulo, uhi, ts=ts, tu=tu))
+    np.testing.assert_array_equal(base, tiled)
+
+
+finite_coord = st.floats(
+    min_value=-1e6, max_value=1e6, allow_nan=False, width=32
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    data=st.data(),
+    n=st.integers(1, 8),
+    m=st.integers(1, 8),
+    d=st.integers(1, 3),
+)
+def test_hypothesis_mask_matches_ref(data, n, m, d):
+    """Hypothesis sweep: arbitrary (possibly degenerate) f32 rectangles."""
+    def rects(k):
+        lo = np.array(
+            data.draw(st.lists(st.lists(finite_coord, min_size=d, max_size=d),
+                               min_size=k, max_size=k)),
+            np.float32,
+        ).reshape(k, d)
+        ext = np.array(
+            data.draw(st.lists(st.lists(
+                st.floats(min_value=0, max_value=1e5, allow_nan=False,
+                          width=32), min_size=d, max_size=d),
+                min_size=k, max_size=k)),
+            np.float32,
+        ).reshape(k, d)
+        return lo, lo + ext
+
+    slo, shi = rects(n)
+    ulo, uhi = rects(m)
+    got = np.asarray(
+        overlap.overlap_mask(slo, shi, ulo, uhi, ts=n, tu=m)
+    ).astype(bool)
+    want = np.asarray(ref.intersect_mask(slo, shi, ulo, uhi))
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,68 @@
+"""Scan kernels (paper Fig. 7 three-step prefix sum) vs jnp.cumsum."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref, scan
+
+
+@pytest.mark.parametrize("n,block", [(16, 4), (64, 8), (4096, 256)])
+def test_block_scan_blocks_and_totals(rng, n, block):
+    x = rng.integers(-5, 6, n).astype(np.int32)
+    scans, totals = scan.block_scan(x, block=block)
+    scans, totals = np.asarray(scans), np.asarray(totals)
+    for b in range(n // block):
+        seg = x[b * block : (b + 1) * block]
+        np.testing.assert_array_equal(scans[b * block : (b + 1) * block],
+                                      np.cumsum(seg))
+        assert totals[b] == seg.sum()
+
+
+@pytest.mark.parametrize("n,block", [(16, 4), (4096, 512), (65536, 4096)])
+def test_parallel_prefix_sum_matches_cumsum(rng, n, block):
+    x = rng.integers(-100, 101, n).astype(np.int32)
+    got = np.asarray(model.parallel_prefix_sum(x, block=block))
+    np.testing.assert_array_equal(got, np.cumsum(x))
+
+
+def test_non_multiple_block_raises(rng):
+    x = rng.integers(0, 2, 10).astype(np.int32)
+    with pytest.raises(ValueError, match="multiple"):
+        scan.block_scan(x, block=4)
+
+
+def test_sbm_active_counts_semantics(rng):
+    """Markers from a valid sweep: counts never negative, end at zero."""
+    k = 128
+    lo = rng.uniform(0, 100, k)
+    hi = lo + rng.uniform(0.1, 10, k)
+    # endpoints sorted by position, +1 lower / -1 upper
+    pts = sorted([(p, +1) for p in lo] + [(p, -1) for p in hi])
+    markers = np.array([s for _, s in pts], np.int32)
+    active = np.asarray(model.sbm_active_counts(markers, block=32))
+    assert (active >= 0).all()
+    assert active[-1] == 0
+    assert active.max() <= k
+
+
+def test_active_counts_oracle_agreement(rng):
+    markers = rng.integers(-1, 2, 256).astype(np.int32)
+    got = np.asarray(model.sbm_active_counts(markers, block=64))
+    want = np.asarray(ref.active_counts(markers))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    vals=st.lists(st.integers(-1000, 1000), min_size=1, max_size=64),
+    block_pow=st.integers(0, 4),
+)
+def test_hypothesis_prefix_sum(vals, block_pow):
+    block = 2 ** block_pow
+    n = ((len(vals) + block - 1) // block) * block
+    x = np.zeros(n, np.int32)
+    x[: len(vals)] = vals
+    got = np.asarray(model.parallel_prefix_sum(x, block=block))
+    np.testing.assert_array_equal(got, np.cumsum(x))

@@ -1,0 +1,63 @@
+//! Ablation A1 (paper §5's data-structure study): active-set
+//! implementation for SBM/Parallel SBM.
+//!
+//! The paper compared std::vector<bool>, raw bit vectors, std::set,
+//! std::unordered_set and boost::dynamic_bitset, finding std::set
+//! fastest in C++. We re-run the study in Rust (bitvec / hash / btree /
+//! sortedvec) across the paper's three α regimes — the winner flips
+//! with the active-set density, which is the insight behind making the
+//! set pluggable.
+//!
+//!   cargo bench --bench abl_sets -- [--n 2e5] [--quick]
+
+use ddm::algos::psbm;
+use ddm::bench::harness::FigCtx;
+use ddm::bench::stats::fmt_secs;
+use ddm::bench::table::{banner, Table};
+use ddm::core::sink::CountSink;
+use ddm::sets::SetImpl;
+use ddm::workload::{alpha_workload, AlphaParams};
+
+fn main() {
+    let ctx = FigCtx::new(8);
+    let n_total = ctx.args.size("n", if ctx.quick { 40_000 } else { 200_000 });
+    let p = ctx.args.opt("p", 4usize);
+    let alphas: Vec<f64> = ctx.args.list("alphas", &[0.01, 1.0, 100.0]);
+    banner(
+        "A1",
+        "Parallel SBM active-set implementation study",
+        &format!("N={n_total} P={p} α ∈ {alphas:?} (paper picked std::set)"),
+    );
+    let mut table = Table::new(vec!["alpha", "set", "WCT(model)", "K"]);
+    for &alpha in &alphas {
+        let wp = AlphaParams {
+            n_total,
+            alpha,
+            space: 1e6,
+        };
+        let (subs, upds) = alpha_workload(21, &wp);
+        let mut best: Option<(f64, SetImpl)> = None;
+        for set_impl in SetImpl::ALL {
+            let point = ctx.measure(p, |pool, p| {
+                let sinks: Vec<CountSink> =
+                    psbm::match_par_with(set_impl, pool, p, &subs, &upds);
+                ddm::core::sink::total_count(&sinks)
+            });
+            let wct = point.modeled.mean;
+            if best.map_or(true, |(b, _)| wct < b) {
+                best = Some((wct, set_impl));
+            }
+            table.row(vec![
+                format!("{alpha}"),
+                set_impl.name().to_string(),
+                fmt_secs(wct),
+                point.value.to_string(),
+            ]);
+        }
+        if let Some((_, w)) = best {
+            println!("α={alpha}: fastest = {}", w.name());
+        }
+    }
+    table.print();
+    ctx.maybe_csv("abl_sets", &table);
+}

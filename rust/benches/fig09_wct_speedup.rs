@@ -1,0 +1,99 @@
+//! Figure 9 (paper §5): wall-clock time and relative speedup of
+//! parallel BFM, GBM, ITM and SBM vs the number of threads P.
+//!
+//! Paper parameters: N = 10⁶, α = 100, GBM with 3000 cells, P = 1..32
+//! on a 16-core/32-thread Xeon. Default here is N = 10⁵ (BFM is Θ(N²);
+//! the full N is a `--n 1e6` flag away — shapes are N-invariant).
+//! WCT(P) is the work-span model over measured per-worker CPU time
+//! (DESIGN.md §3); the raw (oversubscribed) wall-clock is also shown
+//! for P = 1.
+//!
+//!   cargo bench --bench fig09_wct_speedup -- --n 1e5 [--quick] [--csv]
+
+use ddm::algos::{Algo, MatchParams};
+use ddm::bench::harness::FigCtx;
+use ddm::bench::stats::fmt_secs;
+use ddm::bench::table::{banner, Table};
+use ddm::workload::{alpha_workload, AlphaParams};
+
+fn main() {
+    let ctx = FigCtx::new(32);
+    let n_total = ctx.args.size("n", if ctx.quick { 20_000 } else { 100_000 });
+    let alpha = ctx.args.opt("alpha", 100.0);
+    let ncells = ctx.args.opt("ncells", 3000usize);
+    let wp = AlphaParams {
+        n_total,
+        alpha,
+        space: 1e6,
+    };
+    banner(
+        "Fig. 9",
+        "WCT and speedup of parallel {BFM, GBM, ITM, SBM}",
+        &format!(
+            "N={n_total} α={alpha} ncells={ncells} (paper: N=1e6 α=100, 3000 cells)"
+        ),
+    );
+    let (subs, upds) = alpha_workload(ctx.args.opt("seed", 42u64), &wp);
+    let params = MatchParams {
+        ncells,
+        ..Default::default()
+    };
+
+    // BFM is quadratic; keep its sweep affordable by subsampling when
+    // the workload is large, and report the scale honestly.
+    let bfm_cap = ctx.args.size("bfm-cap", 40_000);
+    let bfm_scale = (n_total as f64 / bfm_cap as f64).max(1.0);
+    let (bfm_subs, bfm_upds) = if n_total > bfm_cap {
+        let p2 = AlphaParams {
+            n_total: bfm_cap,
+            alpha,
+            space: 1e6,
+        };
+        alpha_workload(7, &p2)
+    } else {
+        (subs.clone(), upds.clone())
+    };
+    if bfm_scale > 1.0 {
+        println!(
+            "(BFM measured at N={bfm_cap} and scaled ×{:.1} = (N/Nbfm)² in the table)",
+            bfm_scale * bfm_scale
+        );
+    }
+
+    let algos = [Algo::Bfm, Algo::Gbm, Algo::Itm, Algo::Psbm];
+    let mut table = Table::new(vec![
+        "P", "algo", "WCT(model)", "speedup", "WCT(raw)", "K",
+    ]);
+    let mut t1: Vec<f64> = vec![0.0; algos.len()];
+    for &p in &ctx.thread_counts() {
+        for (ai, &algo) in algos.iter().enumerate() {
+            let (s, u, scale) = if algo == Algo::Bfm {
+                (&bfm_subs, &bfm_upds, bfm_scale * bfm_scale)
+            } else {
+                (&subs, &upds, 1.0)
+            };
+            let point = ctx.measure(p, |pool, p| {
+                ddm::algos::run_count(algo, pool, p, s, u, &params)
+            });
+            let wct = point.modeled.mean * scale;
+            if p == 1 {
+                t1[ai] = wct;
+            }
+            let speedup = t1[ai] / wct;
+            table.row(vec![
+                p.to_string(),
+                algo.name().to_string(),
+                fmt_secs(wct),
+                format!("{speedup:.2}"),
+                fmt_secs(point.measured.mean * scale),
+                point.value.to_string(),
+            ]);
+        }
+    }
+    table.print();
+    ctx.maybe_csv("fig09", &table);
+    println!(
+        "\npaper shape check: BFM most scalable (embarrassingly parallel), \
+         SBM fastest but least scalable; HT region (P>16) bends every curve."
+    );
+}

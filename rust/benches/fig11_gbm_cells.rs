@@ -1,0 +1,84 @@
+//! Figure 11 (paper §5): GBM wall-clock as a function of (P, ncells),
+//! with the per-P optimum marked (the paper's red dots).
+//!
+//! The paper's point: the optimal cell count depends on P (many cells
+//! at low P, fewer at high P) and shifts erratically — GBM needs
+//! workload- and machine-specific tuning, unlike ITM/SBM.
+//!
+//!   cargo bench --bench fig11_gbm_cells -- [--n 1e5] [--quick]
+
+use ddm::algos::gbm::{self, GbmParams};
+use ddm::bench::harness::FigCtx;
+use ddm::bench::table::{banner, Table};
+use ddm::core::sink::CountSink;
+use ddm::workload::{alpha_workload, AlphaParams};
+
+fn main() {
+    let ctx = FigCtx::new(32);
+    let n_total = ctx.args.size("n", if ctx.quick { 20_000 } else { 100_000 });
+    let alpha = ctx.args.opt("alpha", 100.0);
+    let wp = AlphaParams {
+        n_total,
+        alpha,
+        space: 1e6,
+    };
+    banner(
+        "Fig. 11",
+        "GBM WCT vs (P, number of grid cells); * marks the per-P optimum",
+        &format!("N={n_total} α={alpha} (paper: N=1e6 α=100)"),
+    );
+    let (subs, upds) = alpha_workload(ctx.args.opt("seed", 11u64), &wp);
+
+    let cell_counts: Vec<usize> = ctx.args.list(
+        "cells",
+        if ctx.quick {
+            &[30, 300, 3000, 30_000]
+        } else {
+            &[10, 30, 100, 300, 1000, 3000, 10_000, 30_000, 100_000]
+        },
+    );
+    let threads: Vec<usize> = ctx.args.list("threads", &[1, 4, 16, 32]);
+
+    let mut header: Vec<String> = vec!["ncells".into()];
+    header.extend(threads.iter().map(|p| format!("P={p}")));
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for &nc in &cell_counts {
+        let mut row = Vec::new();
+        for &p in &threads {
+            let params = GbmParams {
+                ncells: nc,
+                ..Default::default()
+            };
+            let point = ctx.measure(p, |pool, p| {
+                let sinks: Vec<CountSink> = gbm::match_par(pool, p, &subs, &upds, &params);
+                ddm::core::sink::total_count(&sinks)
+            });
+            row.push(point.modeled.mean);
+        }
+        rows.push(row);
+    }
+    // Column minima = the paper's red dots.
+    let mins: Vec<usize> = (0..threads.len())
+        .map(|c| {
+            (0..rows.len())
+                .min_by(|&a, &b| rows[a][c].total_cmp(&rows[b][c]))
+                .unwrap()
+        })
+        .collect();
+
+    let mut table = Table::new(header);
+    for (ri, row) in rows.iter().enumerate() {
+        let mut cells: Vec<String> = vec![cell_counts[ri].to_string()];
+        for (ci, &v) in row.iter().enumerate() {
+            let mark = if mins[ci] == ri { " *" } else { "" };
+            cells.push(format!("{}{mark}", ddm::bench::stats::fmt_secs(v)));
+        }
+        table.row(cells);
+    }
+    table.print();
+    ctx.maybe_csv("fig11", &table);
+    println!(
+        "\npaper shape check: optimum ncells drifts with P (larger grids pay off \
+         at low P; coarser grids win as P grows and per-cell lists shrink)."
+    );
+}

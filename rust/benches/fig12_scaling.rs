@@ -1,0 +1,94 @@
+//! Figure 12 (paper §5): parallel ITM and SBM wall-clock (a) as a
+//! function of N at α = 100, and (b) as a function of α at fixed N —
+//! both at P = 32 threads.
+//!
+//! Shapes to check: both grow polylog-linearly in N; SBM is flat in α
+//! (its cost does not depend on the number of intersections) while ITM
+//! grows with α (its query cost is output-sensitive, O(K lg n)).
+//!
+//!   cargo bench --bench fig12_scaling -- [--quick]
+
+use ddm::algos::{Algo, MatchParams};
+use ddm::bench::harness::FigCtx;
+use ddm::bench::stats::fmt_secs;
+use ddm::bench::table::{banner, Table};
+use ddm::workload::{alpha_workload, AlphaParams};
+
+fn main() {
+    let ctx = FigCtx::new(32);
+    let p = ctx.args.opt("p", 32usize);
+    let params = MatchParams::default();
+    let algos = [Algo::Itm, Algo::Psbm];
+
+    // ---- (a) WCT vs N at α = 100 ----------------------------------------
+    let ns: Vec<usize> = ctx.args.list(
+        "ns",
+        if ctx.quick {
+            &[50_000, 100_000, 200_000]
+        } else {
+            &[100_000, 200_000, 400_000, 800_000, 1_600_000]
+        },
+    );
+    banner(
+        "Fig. 12(a)",
+        "WCT vs number of regions N (P = 32, α = 100)",
+        &format!("N ∈ {ns:?} (paper: 1e7..1e8)"),
+    );
+    let mut ta = Table::new(vec!["N", "algo", "WCT(model)", "K"]);
+    for &n in &ns {
+        let wp = AlphaParams {
+            n_total: n,
+            alpha: 100.0,
+            space: 1e6,
+        };
+        let (subs, upds) = alpha_workload(12, &wp);
+        for &algo in &algos {
+            let point = ctx.measure(p, |pool, p| {
+                ddm::algos::run_count(algo, pool, p, &subs, &upds, &params)
+            });
+            ta.row(vec![
+                n.to_string(),
+                algo.name().to_string(),
+                fmt_secs(point.modeled.mean),
+                point.value.to_string(),
+            ]);
+        }
+    }
+    ta.print();
+    ctx.maybe_csv("fig12a", &ta);
+
+    // ---- (b) WCT vs α at fixed N -----------------------------------------
+    let n_total = ctx.args.size("n", if ctx.quick { 100_000 } else { 800_000 });
+    let alphas: Vec<f64> = ctx.args.list("alphas", &[0.01, 1.0, 100.0]);
+    banner(
+        "Fig. 12(b)",
+        "WCT vs overlapping degree α (P = 32)",
+        &format!("N={n_total}, α ∈ {alphas:?} (paper: N=1e8)"),
+    );
+    let mut tb = Table::new(vec!["alpha", "algo", "WCT(model)", "K"]);
+    for &alpha in &alphas {
+        let wp = AlphaParams {
+            n_total,
+            alpha,
+            space: 1e6,
+        };
+        let (subs, upds) = alpha_workload(13, &wp);
+        for &algo in &algos {
+            let point = ctx.measure(p, |pool, p| {
+                ddm::algos::run_count(algo, pool, p, &subs, &upds, &params)
+            });
+            tb.row(vec![
+                format!("{alpha}"),
+                algo.name().to_string(),
+                fmt_secs(point.modeled.mean),
+                point.value.to_string(),
+            ]);
+        }
+    }
+    tb.print();
+    ctx.maybe_csv("fig12b", &tb);
+    println!(
+        "\npaper shape check: (a) polylog growth in N for both; \
+         (b) SBM ~flat in α, ITM grows with α (output-sensitive queries)."
+    );
+}

@@ -1,0 +1,137 @@
+//! Figure 13 (paper §5): peak resident set size (VmHWM) of BFM, GBM,
+//! ITM and SBM (a) vs the number of regions N and (b) vs threads P.
+//!
+//! VmHWM is a per-process high-water mark, so each (algo, N, P) point
+//! runs in a fresh child process (this binary re-execs itself with
+//! `--child`). Shapes to check: linear growth in N for all; BFM
+//! smallest, SBM largest (endpoint array + per-worker sets ≈ 3× BFM);
+//! RSS flat in P.
+//!
+//!   cargo bench --bench fig13_memory -- [--quick]
+
+use ddm::algos::{Algo, MatchParams};
+use ddm::bench::rss;
+use ddm::bench::table::{banner, Table};
+use ddm::cli::Args;
+use ddm::exec::ThreadPool;
+use ddm::workload::{alpha_workload, AlphaParams};
+
+fn child(args: &Args) {
+    let algo: Algo = args.get("algo").unwrap().parse().unwrap();
+    let n_total = args.size("n", 100_000);
+    let threads = args.opt("threads", 4usize);
+    let wp = AlphaParams {
+        n_total,
+        alpha: args.opt("alpha", 100.0),
+        space: 1e6,
+    };
+    let (subs, upds) = alpha_workload(13, &wp);
+    let baseline = rss::peak_rss_bytes().unwrap_or(0);
+    let pool = ThreadPool::new(threads.saturating_sub(1));
+    let params = MatchParams::default();
+    // BFM's peak RSS is input-dominated (O(1) extra memory) but its
+    // runtime is Θ(N²); cap the *compute* on a subscription prefix so
+    // the measurement stays affordable — the full arrays stay
+    // allocated, which is what VmHWM sees.
+    let k = if algo == Algo::Bfm && subs.len() > 20_000 {
+        let head = ddm::core::Regions1D {
+            lo: subs.lo[..20_000].to_vec(),
+            hi: subs.hi[..20_000].to_vec(),
+        };
+        let k = ddm::algos::run_count(algo, &pool, threads, &head, &upds, &params);
+        std::hint::black_box(&subs);
+        k
+    } else {
+        ddm::algos::run_count(algo, &pool, threads, &subs, &upds, &params)
+    };
+    let peak = rss::peak_rss_bytes().unwrap_or(0);
+    // Parent parses this exact line.
+    println!("CHILD_RESULT algo={} peak={peak} base={baseline} k={k}", algo.name());
+}
+
+fn run_child(algo: Algo, n: usize, threads: usize, alpha: f64) -> Option<(u64, u64)> {
+    let exe = std::env::current_exe().ok()?;
+    let out = std::process::Command::new(exe)
+        .args([
+            "--child",
+            "--algo",
+            algo.name(),
+            "--n",
+            &n.to_string(),
+            "--threads",
+            &threads.to_string(),
+            "--alpha",
+            &alpha.to_string(),
+        ])
+        .output()
+        .ok()?;
+    let text = String::from_utf8_lossy(&out.stdout);
+    let line = text.lines().find(|l| l.starts_with("CHILD_RESULT"))?;
+    let field = |k: &str| -> Option<u64> {
+        line.split_whitespace()
+            .find_map(|t| t.strip_prefix(&format!("{k}=")))
+            .and_then(|v| v.parse().ok())
+    };
+    Some((field("peak")?, field("k")?))
+}
+
+fn main() {
+    let args = Args::from_env();
+    if args.flag("child") {
+        child(&args);
+        return;
+    }
+    let quick = args.flag("quick");
+    let algos = [Algo::Bfm, Algo::Gbm, Algo::Itm, Algo::Psbm];
+
+    // ---- (a) RSS vs N ----------------------------------------------------
+    let ns: Vec<usize> = args.list(
+        "ns",
+        if quick {
+            &[50_000, 200_000]
+        } else {
+            &[100_000, 200_000, 400_000, 800_000, 1_600_000]
+        },
+    );
+    banner(
+        "Fig. 13(a)",
+        "peak RSS (VmHWM) vs number of regions N (α=100, P=4)",
+        &format!("N ∈ {ns:?} (paper: 2.5e7..1e8; BFM lowest, SBM ≈3× BFM)"),
+    );
+    let mut ta = Table::new(vec!["N", "bfm", "gbm", "itm", "psbm"]);
+    for &n in &ns {
+        let mut row = vec![n.to_string()];
+        for &algo in &algos {
+            match run_child(algo, n, 4, 100.0) {
+                Some((peak, _)) => row.push(rss::fmt_bytes(peak)),
+                None => row.push("?".into()),
+            }
+        }
+        ta.row(row);
+    }
+    ta.print();
+
+    // ---- (b) RSS vs P ------------------------------------------------------
+    let n_fixed = args.size("n", if quick { 100_000 } else { 400_000 });
+    let threads: Vec<usize> = args.list("threads", &[1, 2, 4, 8, 16, 32]);
+    banner(
+        "Fig. 13(b)",
+        "peak RSS (VmHWM) vs threads P",
+        &format!("N={n_fixed} α=100 (paper: flat in P)"),
+    );
+    let mut tb = Table::new(vec!["P", "bfm", "gbm", "itm", "psbm"]);
+    for &p in &threads {
+        let mut row = vec![p.to_string()];
+        for &algo in &algos {
+            match run_child(algo, n_fixed, p, 100.0) {
+                Some((peak, _)) => row.push(rss::fmt_bytes(peak)),
+                None => row.push("?".into()),
+            }
+        }
+        tb.row(row);
+    }
+    tb.print();
+    println!(
+        "\npaper shape check: RSS linear in N; BFM smallest, SBM largest; flat in P."
+    );
+}

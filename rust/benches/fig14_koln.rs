@@ -1,0 +1,71 @@
+//! Figure 14 (paper §5): WCT and speedup of parallel GBM, ITM and SBM
+//! on the Cologne vehicular trace (here: the Köln-like synthetic trace,
+//! DESIGN.md §3 substitution 2 — the real trace is not downloadable
+//! offline).
+//!
+//! Paper: 541,222 positions → ~10⁶ regions of width 100 m and
+//! ≈3.9×10⁹ intersections; GBM slowest, parallel SBM fastest by a wide
+//! margin, SBM speedup limited by its tiny absolute runtime.
+//!
+//!   cargo bench --bench fig14_koln -- [--scale 0.25] [--quick]
+
+use ddm::algos::{Algo, MatchParams};
+use ddm::bench::harness::FigCtx;
+use ddm::bench::stats::fmt_secs;
+use ddm::bench::table::{banner, Table};
+use ddm::workload::koln::{koln_workload, KolnParams};
+
+fn main() {
+    let ctx = FigCtx::new(32);
+    // Default 10% of the full trace: the arterial clustering makes K
+    // grow quadratically with scale, and GBM must do Ω(K) work per
+    // rep; 10% keeps the full P-sweep affordable on one core. Use
+    // `--scale 1.0` for the paper-size run on a real multicore box.
+    let scale = ctx.args.opt("scale", if ctx.quick { 0.02 } else { 0.1 });
+    let kp = KolnParams::default().scaled(scale);
+    banner(
+        "Fig. 14",
+        "WCT and speedup on the Köln-like trace",
+        &format!(
+            "positions={} width={} m extent={} m (paper: 541222 / 100 m; K≈3.9e9 — \
+             scaled target K≈{:.3e})",
+            kp.positions,
+            kp.width,
+            kp.extent,
+            3.9e9 * scale * scale
+        ),
+    );
+    let (subs, upds) = koln_workload(ctx.args.opt("seed", 62u64), &kp);
+    let params = MatchParams {
+        ncells: ctx.args.opt("ncells", 3000usize),
+        ..Default::default()
+    };
+
+    let algos = [Algo::Gbm, Algo::Itm, Algo::Psbm];
+    let mut table = Table::new(vec!["P", "algo", "WCT(model)", "speedup", "K"]);
+    let mut t1 = [0.0f64; 3];
+    for &p in &ctx.thread_counts() {
+        for (ai, &algo) in algos.iter().enumerate() {
+            let point = ctx.measure(p, |pool, p| {
+                ddm::algos::run_count(algo, pool, p, &subs, &upds, &params)
+            });
+            let wct = point.modeled.mean;
+            if p == 1 {
+                t1[ai] = wct;
+            }
+            table.row(vec![
+                p.to_string(),
+                algo.name().to_string(),
+                fmt_secs(wct),
+                format!("{:.2}", t1[ai] / wct),
+                point.value.to_string(),
+            ]);
+        }
+    }
+    table.print();
+    ctx.maybe_csv("fig14", &table);
+    println!(
+        "\npaper shape check: GBM slowest, parallel SBM fastest by a wide margin; \
+         SBM's speedup stays low because its absolute runtime is tiny."
+    );
+}

@@ -1,0 +1,115 @@
+//! Brute-Force Matching (paper Algorithm 2, "region-based" matching).
+//!
+//! Θ(n·m) pair tests; optimal only in the worst case but — as the paper
+//! stresses — *embarrassingly parallel*: the outer loop carries no
+//! dependencies, so the parallel version simply splits the subscription
+//! set across workers (`#pragma omp parallel for` in the paper's code,
+//! [`crate::exec::pfor::parallel_for_static`] here).
+
+use crate::core::sink::MatchSink;
+use crate::core::Regions1D;
+use crate::exec::pfor::chunks;
+use crate::exec::ThreadPool;
+
+/// Serial BFM (Algorithm 2 verbatim).
+pub fn match_seq(subs: &Regions1D, upds: &Regions1D, sink: &mut dyn MatchSink) {
+    match_range(subs, upds, 0..subs.len(), sink);
+}
+
+/// BFM over a subscription index sub-range (the parallel work unit).
+#[inline]
+pub fn match_range(
+    subs: &Regions1D,
+    upds: &Regions1D,
+    range: std::ops::Range<usize>,
+    sink: &mut dyn MatchSink,
+) {
+    let (ulo, uhi) = (&upds.lo[..], &upds.hi[..]);
+    for i in range {
+        let (slo, shi) = (subs.lo[i], subs.hi[i]);
+        // Hot loop: branch-light Intersect-1D over SoA arrays.
+        for j in 0..ulo.len() {
+            if slo < uhi[j] && ulo[j] < shi {
+                sink.report(i as u32, j as u32);
+            }
+        }
+    }
+}
+
+/// Parallel BFM: static split of the subscription loop (paper §5).
+pub fn match_par<S>(
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &Regions1D,
+    upds: &Regions1D,
+) -> Vec<S>
+where
+    S: MatchSink + Default,
+{
+    let ranges = chunks(subs.len(), nthreads);
+    super::par_collect(pool, nthreads, |p, sink| {
+        match_range(subs, upds, ranges[p].clone(), sink);
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::interval::Interval;
+    use crate::core::sink::{canonical_pairs, canonicalize, VecSink};
+    use crate::core::region::random_regions_1d;
+
+    #[test]
+    fn simple_known_case() {
+        let subs = Regions1D::from_intervals(&[
+            Interval::new(0.0, 2.0),
+            Interval::new(5.0, 6.0),
+        ]);
+        let upds = Regions1D::from_intervals(&[
+            Interval::new(1.0, 3.0),
+            Interval::new(2.0, 5.0),
+            Interval::new(5.5, 7.0),
+        ]);
+        let mut sink = VecSink::default();
+        match_seq(&subs, &upds, &mut sink);
+        assert_eq!(canonicalize(sink.pairs), vec![(0, 0), (1, 2)]);
+    }
+
+    #[test]
+    fn parallel_equals_serial_for_all_p() {
+        let pool = ThreadPool::new(7);
+        let mut rng = crate::prng::Rng::new(0xBF);
+        let subs = random_regions_1d(&mut rng, 500, 1000.0, 4.0);
+        let upds = random_regions_1d(&mut rng, 400, 1000.0, 4.0);
+        let mut want = VecSink::default();
+        match_seq(&subs, &upds, &mut want);
+        let want = canonicalize(want.pairs);
+        for p in 1..=8 {
+            let got = canonical_pairs(match_par::<VecSink>(&pool, p, &subs, &upds));
+            assert_eq!(got, want, "p={p}");
+        }
+    }
+
+    #[test]
+    fn empty_sets() {
+        let mut sink = VecSink::default();
+        match_seq(&Regions1D::default(), &Regions1D::default(), &mut sink);
+        assert!(sink.pairs.is_empty());
+        let pool = ThreadPool::new(1);
+        let sinks = match_par::<VecSink>(&pool, 2, &Regions1D::default(), &Regions1D::default());
+        assert!(canonical_pairs(sinks).is_empty());
+    }
+
+    #[test]
+    fn exactly_once_property() {
+        crate::bench::prop::prop_check("bfm-exactly-once", 0xB1, |rng| {
+            let n = rng.below(100) as usize;
+            let m = rng.below(100) as usize;
+            let subs = random_regions_1d(rng, n.max(1), 100.0, 10.0);
+            let upds = random_regions_1d(rng, m.max(1), 100.0, 10.0);
+            let mut sink = VecSink::default();
+            match_seq(&subs, &upds, &mut sink);
+            crate::core::sink::assert_exactly_once(&canonicalize(sink.pairs))
+        });
+    }
+}

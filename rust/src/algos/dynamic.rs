@@ -1,0 +1,238 @@
+//! Dynamic interval management (paper §3, "Dynamic interval
+//! management") — the ITM feature the paper highlights against SBM.
+//!
+//! Two interval trees index the subscription and update sets. When a
+//! region moves or resizes, the affected overlaps are recomputed in
+//! O(min{n, K lg n}) by querying the *opposite* tree, and the region's
+//! own tree is updated with one delete + one insert (O(lg n) each) —
+//! no full re-match. [`MoveDiff`] reports which pairs appeared and
+//! disappeared, which is exactly what the HLA notification layer needs.
+
+use crate::core::interval::Interval;
+use crate::core::Regions1D;
+
+use super::interval_tree::IntervalTree;
+
+/// Which side a region belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    Subscription,
+    Update,
+}
+
+/// Overlap changes caused by one region move.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MoveDiff {
+    /// Pairs that stopped overlapping (sorted opposite-side indices).
+    pub removed: Vec<u32>,
+    /// Pairs that started overlapping (sorted opposite-side indices).
+    pub added: Vec<u32>,
+}
+
+/// The two-tree dynamic DDM state of §3.
+pub struct DynamicDdm {
+    subs: Regions1D,
+    upds: Regions1D,
+    tree_s: IntervalTree,
+    tree_u: IntervalTree,
+}
+
+impl DynamicDdm {
+    pub fn new(subs: Regions1D, upds: Regions1D) -> Self {
+        let tree_s = IntervalTree::from_regions(&subs);
+        let tree_u = IntervalTree::from_regions(&upds);
+        Self {
+            subs,
+            upds,
+            tree_s,
+            tree_u,
+        }
+    }
+
+    pub fn n_subs(&self) -> usize {
+        self.subs.len()
+    }
+
+    pub fn n_upds(&self) -> usize {
+        self.upds.len()
+    }
+
+    pub fn interval(&self, side: Side, idx: u32) -> Interval {
+        match side {
+            Side::Subscription => self.subs.get(idx as usize),
+            Side::Update => self.upds.get(idx as usize),
+        }
+    }
+
+    /// Current overlaps of one region (opposite-side indices, sorted).
+    pub fn overlaps(&self, side: Side, idx: u32) -> Vec<u32> {
+        let q = self.interval(side, idx);
+        match side {
+            Side::Subscription => self.tree_u.query_vec(q),
+            Side::Update => self.tree_s.query_vec(q),
+        }
+    }
+
+    /// Move/resize a region; returns the overlap diff.
+    ///
+    /// Cost: two opposite-tree queries (O(min{n, K lg n})) plus one
+    /// delete + insert in the region's own tree (O(lg n)).
+    pub fn move_region(&mut self, side: Side, idx: u32, new_iv: Interval) -> MoveDiff {
+        let old_iv = self.interval(side, idx);
+        let (old, new) = match side {
+            Side::Subscription => {
+                let old = self.tree_u.query_vec(old_iv);
+                let new = self.tree_u.query_vec(new_iv);
+                let ok = self.tree_s.remove(old_iv, idx);
+                debug_assert!(ok);
+                self.tree_s.insert(new_iv, idx);
+                self.subs.set(idx as usize, new_iv);
+                (old, new)
+            }
+            Side::Update => {
+                let old = self.tree_s.query_vec(old_iv);
+                let new = self.tree_s.query_vec(new_iv);
+                let ok = self.tree_u.remove(old_iv, idx);
+                debug_assert!(ok);
+                self.tree_u.insert(new_iv, idx);
+                self.upds.set(idx as usize, new_iv);
+                (old, new)
+            }
+        };
+        diff_sorted(&old, &new)
+    }
+
+    /// Full current pair set (for validation): query every update
+    /// against the subscription tree.
+    pub fn all_pairs(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::new();
+        for j in 0..self.upds.len() {
+            let q = self.upds.get(j);
+            self.tree_s.query(q, &mut |s| out.push((s, j as u32)));
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Structural self-check (tests).
+    pub fn check(&self) {
+        self.tree_s.check_invariants();
+        self.tree_u.check_invariants();
+        assert_eq!(self.tree_s.len(), self.subs.len());
+        assert_eq!(self.tree_u.len(), self.upds.len());
+    }
+}
+
+/// Set difference of two sorted vectors: (old \ new, new \ old).
+fn diff_sorted(old: &[u32], new: &[u32]) -> MoveDiff {
+    let mut removed = Vec::new();
+    let mut added = Vec::new();
+    let (mut i, mut j) = (0, 0);
+    while i < old.len() && j < new.len() {
+        match old[i].cmp(&new[j]) {
+            std::cmp::Ordering::Less => {
+                removed.push(old[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                added.push(new[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    removed.extend_from_slice(&old[i..]);
+    added.extend_from_slice(&new[j..]);
+    MoveDiff { removed, added }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::bfm;
+    use crate::core::region::random_regions_1d;
+    use crate::core::sink::{canonicalize, VecSink};
+    use crate::prng::Rng;
+
+    fn bfm_pairs(subs: &Regions1D, upds: &Regions1D) -> Vec<(u32, u32)> {
+        let mut sink = VecSink::default();
+        bfm::match_seq(subs, upds, &mut sink);
+        canonicalize(sink.pairs)
+    }
+
+    #[test]
+    fn diff_sorted_basics() {
+        let d = diff_sorted(&[1, 2, 3], &[2, 3, 4]);
+        assert_eq!(d.removed, vec![1]);
+        assert_eq!(d.added, vec![4]);
+        let d2 = diff_sorted(&[], &[7]);
+        assert_eq!((d2.removed.len(), d2.added), (0, vec![7]));
+    }
+
+    #[test]
+    fn initial_state_matches_bfm() {
+        let mut rng = Rng::new(0xD0);
+        let subs = random_regions_1d(&mut rng, 150, 300.0, 8.0);
+        let upds = random_regions_1d(&mut rng, 150, 300.0, 8.0);
+        let ddm = DynamicDdm::new(subs.clone(), upds.clone());
+        ddm.check();
+        assert_eq!(ddm.all_pairs(), bfm_pairs(&subs, &upds));
+    }
+
+    #[test]
+    fn moves_track_bfm_property() {
+        crate::bench::prop::prop_check("dynamic-moves-vs-bfm", 0xD1, |rng| {
+            let n = 5 + rng.below(60) as usize;
+            let subs = random_regions_1d(rng, n, 100.0, 6.0);
+            let upds = random_regions_1d(rng, n, 100.0, 6.0);
+            let mut ddm = DynamicDdm::new(subs.clone(), upds.clone());
+            let (mut subs, mut upds) = (subs, upds);
+            for _ in 0..30 {
+                let side = if rng.chance(0.5) {
+                    Side::Subscription
+                } else {
+                    Side::Update
+                };
+                let idx = rng.below(n as u64) as u32;
+                let lo = rng.uniform(0.0, 94.0);
+                let new_iv = Interval::new(lo, lo + rng.uniform(0.0, 8.0));
+                let before = ddm.overlaps(side, idx);
+                let diff = ddm.move_region(side, idx, new_iv);
+                let after = ddm.overlaps(side, idx);
+                // Diff consistency: before - removed + added == after.
+                let mut expect: Vec<u32> = before
+                    .iter()
+                    .filter(|x| !diff.removed.contains(x))
+                    .cloned()
+                    .collect();
+                expect.extend(diff.added.iter().cloned());
+                expect.sort_unstable();
+                if expect != after {
+                    return Err(format!("diff inconsistent: {expect:?} vs {after:?}"));
+                }
+                match side {
+                    Side::Subscription => subs.set(idx as usize, new_iv),
+                    Side::Update => upds.set(idx as usize, new_iv),
+                }
+            }
+            ddm.check();
+            crate::bench::prop::expect_eq(
+                &ddm.all_pairs(),
+                &bfm_pairs(&subs, &upds),
+                "pair set after moves",
+            )
+        });
+    }
+
+    #[test]
+    fn move_to_same_place_is_noop_diff() {
+        let subs = Regions1D::from_intervals(&[Interval::new(0.0, 10.0)]);
+        let upds = Regions1D::from_intervals(&[Interval::new(5.0, 15.0)]);
+        let mut ddm = DynamicDdm::new(subs, upds);
+        let d = ddm.move_region(Side::Subscription, 0, Interval::new(0.0, 10.0));
+        assert_eq!(d, MoveDiff::default());
+    }
+}

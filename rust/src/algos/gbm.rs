@@ -1,0 +1,349 @@
+//! Grid-Based Matching (paper Algorithm 3, [16, 63]).
+//!
+//! The routing space is split into `ncells` equal cells; update regions
+//! are binned into the cells they overlap (phase 1), then every
+//! subscription is tested against the update lists of its cells
+//! (phase 2). Two concurrency strategies for the phase-1 data race on
+//! the cell lists (paper §5: OpenMP `critical` vs their ad-hoc
+//! lock-free list) and two duplicate-suppression strategies (the
+//! paper's `res` set vs the standard first-shared-cell rule) are
+//! selectable — `benches/abl_gbm_list.rs` re-runs the paper's
+//! comparison.
+
+use std::sync::Mutex;
+
+use crate::core::sink::MatchSink;
+use crate::core::Regions1D;
+use crate::exec::lflist::LfList;
+use crate::exec::pfor::chunks;
+use crate::exec::ThreadPool;
+
+/// Phase-1 cell-list synchronization strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CellList {
+    /// One mutex per cell (the paper's `#pragma omp critical` is one
+    /// *global* lock; per-cell locks are the charitable version).
+    #[default]
+    Mutex,
+    /// The ad-hoc lock-free append list (paper §5).
+    LockFree,
+}
+
+/// Duplicate-suppression strategy for phase 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Dedup {
+    /// Report (s,u) only in the first cell both share — no `res` set,
+    /// no extra memory (the standard grid dedup rule).
+    #[default]
+    FirstCell,
+    /// The paper's Algorithm 3 `res` set (per subscription, which is
+    /// equivalent to the paper's global set: duplicates only arise
+    /// among the cells of one subscription).
+    ResSet,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct GbmParams {
+    pub ncells: usize,
+    pub cell_list: CellList,
+    pub dedup: Dedup,
+}
+
+impl Default for GbmParams {
+    fn default() -> Self {
+        Self {
+            ncells: 3000,
+            cell_list: CellList::Mutex,
+            dedup: Dedup::FirstCell,
+        }
+    }
+}
+
+struct Grid {
+    lb: f64,
+    width: f64,
+    ncells: usize,
+}
+
+impl Grid {
+    fn new(subs: &Regions1D, upds: &Regions1D, ncells: usize) -> Option<Grid> {
+        let b = match (subs.bounds(), upds.bounds()) {
+            (Some(a), Some(b)) => a.hull(&b),
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            (None, None) => return None,
+        };
+        let span = (b.hi - b.lo).max(f64::MIN_POSITIVE);
+        Some(Grid {
+            lb: b.lo,
+            width: span / ncells as f64,
+            ncells,
+        })
+    }
+
+    /// Cell containing point `x` (clamped).
+    #[inline]
+    fn cell_of(&self, x: f64) -> usize {
+        (((x - self.lb) / self.width) as usize).min(self.ncells - 1)
+    }
+
+    /// Iterate the cells interval `[lo, hi)` overlaps (Algorithm 3's
+    /// `while (i < ncells) && (i*width < upper)` loop).
+    #[inline]
+    fn cells(&self, lo: f64, hi: f64) -> std::ops::RangeInclusive<usize> {
+        let first = self.cell_of(lo);
+        // last cell whose start is < hi
+        let mut last = self.cell_of(hi);
+        if last > first && self.lb + last as f64 * self.width >= hi {
+            last -= 1;
+        }
+        first..=last
+    }
+}
+
+/// Serial GBM (Algorithm 3).
+pub fn match_seq(
+    subs: &Regions1D,
+    upds: &Regions1D,
+    params: &GbmParams,
+    sink: &mut dyn MatchSink,
+) {
+    let Some(grid) = Grid::new(subs, upds, params.ncells) else {
+        return;
+    };
+    // Phase 1: bin updates.
+    let mut cells: Vec<Vec<u32>> = vec![Vec::new(); grid.ncells];
+    for j in 0..upds.len() {
+        for c in grid.cells(upds.lo[j], upds.hi[j]) {
+            cells[c].push(j as u32);
+        }
+    }
+    // Phase 2: scan subscriptions.
+    let mut res = std::collections::HashSet::new();
+    for i in 0..subs.len() {
+        let (slo, shi) = (subs.lo[i], subs.hi[i]);
+        if params.dedup == Dedup::ResSet {
+            res.clear();
+        }
+        for c in grid.cells(slo, shi) {
+            for &j in &cells[c] {
+                let (ulo, uhi) = (upds.lo[j as usize], upds.hi[j as usize]);
+                if slo < uhi && ulo < shi {
+                    match params.dedup {
+                        Dedup::FirstCell => {
+                            if c == grid.cell_of(slo.max(ulo)) {
+                                sink.report(i as u32, j);
+                            }
+                        }
+                        Dedup::ResSet => {
+                            if res.insert(j) {
+                                sink.report(i as u32, j);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Parallel GBM (both phases parallel; phase 1 races on the cell lists
+/// and uses the selected synchronization strategy).
+pub fn match_par<S>(
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &Regions1D,
+    upds: &Regions1D,
+    params: &GbmParams,
+) -> Vec<S>
+where
+    S: MatchSink + Default,
+{
+    let Some(grid) = Grid::new(subs, upds, params.ncells) else {
+        return (0..nthreads).map(|_| S::default()).collect();
+    };
+    let grid = &grid;
+
+    // ---- Phase 1 (parallel over updates) --------------------------------
+    let cells: Vec<Vec<u32>> = match params.cell_list {
+        CellList::Mutex => {
+            let lists: Vec<Mutex<Vec<u32>>> =
+                (0..grid.ncells).map(|_| Mutex::new(Vec::new())).collect();
+            let ranges = chunks(upds.len(), nthreads);
+            pool.run(nthreads, |p| {
+                for j in ranges[p].clone() {
+                    for c in grid.cells(upds.lo[j], upds.hi[j]) {
+                        lists[c].lock().unwrap().push(j as u32);
+                    }
+                }
+            });
+            lists.into_iter().map(|m| m.into_inner().unwrap()).collect()
+        }
+        CellList::LockFree => {
+            let lists: Vec<LfList<u32>> =
+                (0..grid.ncells).map(|_| LfList::new()).collect();
+            let ranges = chunks(upds.len(), nthreads);
+            pool.run(nthreads, |p| {
+                for j in ranges[p].clone() {
+                    for c in grid.cells(upds.lo[j], upds.hi[j]) {
+                        lists[c].push(j as u32);
+                    }
+                }
+            });
+            lists
+                .iter()
+                .map(|l| l.iter().copied().collect())
+                .collect()
+        }
+    };
+    let cells = &cells;
+
+    // ---- Phase 2 (parallel over subscriptions, independent) -------------
+    let ranges = chunks(subs.len(), nthreads);
+    super::par_collect(pool, nthreads, |p, sink: &mut S| {
+        let mut res = std::collections::HashSet::new();
+        for i in ranges[p].clone() {
+            let (slo, shi) = (subs.lo[i], subs.hi[i]);
+            if params.dedup == Dedup::ResSet {
+                res.clear();
+            }
+            for c in grid.cells(slo, shi) {
+                for &j in &cells[c] {
+                    let (ulo, uhi) = (upds.lo[j as usize], upds.hi[j as usize]);
+                    if slo < uhi && ulo < shi {
+                        match params.dedup {
+                            Dedup::FirstCell => {
+                                if c == grid.cell_of(slo.max(ulo)) {
+                                    sink.report(i as u32, j);
+                                }
+                            }
+                            Dedup::ResSet => {
+                                if res.insert(j) {
+                                    sink.report(i as u32, j);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::bfm;
+    use crate::core::interval::Interval;
+    use crate::core::region::random_regions_1d;
+    use crate::core::sink::{canonical_pairs, canonicalize, VecSink};
+
+    fn bfm_pairs(subs: &Regions1D, upds: &Regions1D) -> Vec<(u32, u32)> {
+        let mut want = VecSink::default();
+        bfm::match_seq(subs, upds, &mut want);
+        canonicalize(want.pairs)
+    }
+
+    #[test]
+    fn serial_matches_bfm_both_dedups() {
+        let mut rng = crate::prng::Rng::new(0x6B);
+        let subs = random_regions_1d(&mut rng, 400, 1000.0, 15.0);
+        let upds = random_regions_1d(&mut rng, 350, 1000.0, 15.0);
+        let want = bfm_pairs(&subs, &upds);
+        for dedup in [Dedup::FirstCell, Dedup::ResSet] {
+            let params = GbmParams {
+                ncells: 37,
+                dedup,
+                ..Default::default()
+            };
+            let mut sink = VecSink::default();
+            match_seq(&subs, &upds, &params, &mut sink);
+            assert_eq!(canonicalize(sink.pairs), want, "{dedup:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_bfm_all_strategies() {
+        let pool = ThreadPool::new(3);
+        let mut rng = crate::prng::Rng::new(0x6C);
+        let subs = random_regions_1d(&mut rng, 300, 500.0, 8.0);
+        let upds = random_regions_1d(&mut rng, 300, 500.0, 8.0);
+        let want = bfm_pairs(&subs, &upds);
+        for cell_list in [CellList::Mutex, CellList::LockFree] {
+            for dedup in [Dedup::FirstCell, Dedup::ResSet] {
+                let params = GbmParams {
+                    ncells: 50,
+                    cell_list,
+                    dedup,
+                };
+                let got =
+                    canonical_pairs(match_par::<VecSink>(&pool, 4, &subs, &upds, &params));
+                assert_eq!(got, want, "{cell_list:?}/{dedup:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn ncells_does_not_change_result_property() {
+        crate::bench::prop::prop_check("gbm-ncells-invariance", 0x6D, |rng| {
+            let n = 1 + rng.below(120) as usize;
+            let subs = { let l = rng.uniform(0.5, 50.0); random_regions_1d(rng, n, 200.0, l) };
+            let upds = { let l = rng.uniform(0.5, 50.0); random_regions_1d(rng, n, 200.0, l) };
+            let want = bfm_pairs(&subs, &upds);
+            let ncells = 1 + rng.below(300) as usize;
+            let params = GbmParams {
+                ncells,
+                ..Default::default()
+            };
+            let mut sink = VecSink::default();
+            match_seq(&subs, &upds, &params, &mut sink);
+            crate::bench::prop::expect_eq(
+                &canonicalize(sink.pairs),
+                &want,
+                &format!("ncells={ncells}"),
+            )
+        });
+    }
+
+    #[test]
+    fn regions_spanning_many_cells() {
+        let subs = Regions1D::from_intervals(&[Interval::new(0.0, 100.0)]);
+        let upds = Regions1D::from_intervals(&[
+            Interval::new(50.0, 51.0),
+            Interval::new(0.0, 100.0),
+        ]);
+        let params = GbmParams {
+            ncells: 10,
+            ..Default::default()
+        };
+        let mut sink = VecSink::default();
+        match_seq(&subs, &upds, &params, &mut sink);
+        assert_eq!(canonicalize(sink.pairs), vec![(0, 0), (0, 1)]);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let params = GbmParams::default();
+        let mut sink = VecSink::default();
+        match_seq(&Regions1D::default(), &Regions1D::default(), &params, &mut sink);
+        assert!(sink.pairs.is_empty());
+        let pool = ThreadPool::new(1);
+        let sinks =
+            match_par::<VecSink>(&pool, 2, &Regions1D::default(), &Regions1D::default(), &params);
+        assert!(canonical_pairs(sinks).is_empty());
+    }
+
+    #[test]
+    fn single_cell_degenerates_to_bfm() {
+        let mut rng = crate::prng::Rng::new(0x6E);
+        let subs = random_regions_1d(&mut rng, 50, 100.0, 10.0);
+        let upds = random_regions_1d(&mut rng, 50, 100.0, 10.0);
+        let params = GbmParams {
+            ncells: 1,
+            ..Default::default()
+        };
+        let mut sink = VecSink::default();
+        match_seq(&subs, &upds, &params, &mut sink);
+        assert_eq!(canonicalize(sink.pairs), bfm_pairs(&subs, &upds));
+    }
+}

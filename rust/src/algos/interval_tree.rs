@@ -1,0 +1,688 @@
+//! Augmented AVL interval tree (paper §3, Fig. 6).
+//!
+//! Each node stores an interval plus `minlower`/`maxupper` over its
+//! subtree — the two fields Algorithm 5's Interval-Query uses to prune
+//! irrelevant subtrees. Nodes are kept in an arena (`Vec`) with index
+//! links: no per-node allocation on the hot path, cache-friendly
+//! traversal, and a free list so deletions recycle slots (dynamic
+//! interval management, §3).
+//!
+//! Ordering key is `(lo, region idx)` so duplicate lower bounds are
+//! totally ordered and every region is individually addressable for
+//! deletion.
+
+use crate::core::interval::Interval;
+use crate::core::Regions1D;
+
+const NIL: i32 = -1;
+
+/// Recursively build the subtree for `range` (sorted-order indices)
+/// into implicit slots (`slot = mid`). Returns the subtree root.
+///
+/// # Safety
+/// `nodes` must have capacity covering `range`, and no other thread
+/// may touch slots inside `range`.
+unsafe fn fill_subtree(
+    nodes: *mut Node,
+    regions: &Regions1D,
+    order: &[u32],
+    range: std::ops::Range<usize>,
+) -> i32 {
+    if range.is_empty() {
+        return NIL;
+    }
+    let mid = (range.start + range.end) / 2;
+    let left = fill_subtree(nodes, regions, order, range.start..mid);
+    let right = fill_subtree(nodes, regions, order, mid + 1..range.end);
+    write_node(nodes, regions, order, mid, left, right);
+    mid as i32
+}
+
+/// Write slot `mid` from its (already written) children.
+///
+/// # Safety
+/// Children slots must be initialized; slot `mid` owned by the caller.
+unsafe fn write_node(
+    nodes: *mut Node,
+    regions: &Regions1D,
+    order: &[u32],
+    mid: usize,
+    left: i32,
+    right: i32,
+) {
+    let idx = order[mid];
+    let (lo, hi) = (regions.lo[idx as usize], regions.hi[idx as usize]);
+    let mut height = 0;
+    let mut minlower = lo;
+    let mut maxupper = hi;
+    for c in [left, right] {
+        if c != NIL {
+            let cn = &*nodes.add(c as usize);
+            height = height.max(cn.height + 1);
+            minlower = minlower.min(cn.minlower);
+            maxupper = maxupper.max(cn.maxupper);
+        }
+    }
+    *nodes.add(mid) = Node {
+        lo,
+        hi,
+        idx,
+        left,
+        right,
+        height,
+        minlower,
+        maxupper,
+    };
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    lo: f64,
+    hi: f64,
+    idx: u32,
+    left: i32,
+    right: i32,
+    height: i32,
+    minlower: f64,
+    maxupper: f64,
+}
+
+/// The interval tree.
+#[derive(Debug, Clone)]
+pub struct IntervalTree {
+    nodes: Vec<Node>,
+    root: i32,
+    free: Vec<u32>,
+    len: usize,
+}
+
+impl Default for IntervalTree {
+    fn default() -> Self {
+        Self {
+            nodes: Vec::new(),
+            root: NIL, // NB: derived Default would yield root = 0
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+}
+
+impl IntervalTree {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bulk build from a region set: O(n) balanced construction from
+    /// the sorted (lo, idx) order. (The paper builds by repeated
+    /// insertion in O(n lg n); see `new_by_insertion` for that path —
+    /// the bulk build is our perf-pass replacement, same structure
+    /// invariants.)
+    pub fn from_regions(regions: &Regions1D) -> Self {
+        let n = regions.len();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_unstable_by(|&a, &b| {
+            let ka = (crate::exec::f64_key(regions.lo[a as usize]), a);
+            let kb = (crate::exec::f64_key(regions.lo[b as usize]), b);
+            ka.cmp(&kb)
+        });
+        let mut tree = Self {
+            nodes: Vec::with_capacity(n),
+            root: NIL,
+            free: Vec::new(),
+            len: n,
+        };
+        tree.root = tree.build_balanced(regions, &order);
+        tree
+    }
+
+    /// Parallel bulk build (perf pass): nodes live at *implicit* slots
+    /// (`slot = mid of the node's sorted-order range`), so P workers
+    /// can fill disjoint subtrees of a preallocated arena without
+    /// synchronization; the master stitches the top ⌈lg P⌉ levels.
+    /// Produces the same query semantics as [`Self::from_regions`]
+    /// (checked by `builders_agree`); used by parallel ITM, where the
+    /// serial build otherwise bounds speedup (EXPERIMENTS.md §Perf).
+    pub fn from_regions_par(
+        pool: &crate::exec::ThreadPool,
+        nthreads: usize,
+        regions: &Regions1D,
+    ) -> Self {
+        let n = regions.len();
+        if nthreads <= 1 || n < 4 * nthreads {
+            return Self::from_regions(regions);
+        }
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        crate::exec::psort::par_sort_by_key(pool, nthreads, &mut order, |&i| {
+            ((crate::exec::f64_key(regions.lo[i as usize]) as u128) << 32) | i as u128
+        });
+
+        // Split the order range until we have >= nthreads segments.
+        let mut segments: Vec<std::ops::Range<usize>> = vec![0..n];
+        while segments.len() < nthreads {
+            let mut next = Vec::with_capacity(segments.len() * 2);
+            for r in &segments {
+                let mid = (r.start + r.end) / 2;
+                next.push(r.start..mid);
+                next.push(mid + 1..r.end);
+            }
+            if next.iter().any(|r| r.is_empty()) && next.len() >= nthreads {
+                break;
+            }
+            segments = next;
+        }
+
+        let mut nodes: Vec<Node> = vec![
+            Node {
+                lo: 0.0,
+                hi: 0.0,
+                idx: 0,
+                left: NIL,
+                right: NIL,
+                height: 0,
+                minlower: 0.0,
+                maxupper: 0.0,
+            };
+            n
+        ];
+        #[derive(Clone, Copy)]
+        struct SendPtr(*mut Node);
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        let base = SendPtr(nodes.as_mut_ptr());
+        let order_ref = &order;
+        let segs = &segments;
+        pool.run(nthreads.min(segments.len()), |p| {
+            let base = base;
+            let workers = nthreads.min(segs.len());
+            let mut s = p;
+            while s < segs.len() {
+                // SAFETY: segments are disjoint order-ranges; each node
+                // slot (= an index inside the range) is written by
+                // exactly one worker.
+                unsafe { fill_subtree(base.0, regions, order_ref, segs[s].clone()) };
+                s += workers;
+            }
+        });
+
+        // Master: stitch the levels above the segments (the recursion
+        // below segment granularity was done by workers).
+        fn stitch(
+            nodes: *mut Node,
+            regions: &Regions1D,
+            order: &[u32],
+            range: std::ops::Range<usize>,
+            segments: &[std::ops::Range<usize>],
+        ) -> i32 {
+            if range.is_empty() {
+                return NIL;
+            }
+            if segments.iter().any(|s| *s == range) {
+                return ((range.start + range.end) / 2) as i32;
+            }
+            let mid = (range.start + range.end) / 2;
+            let left = stitch(nodes, regions, order, range.start..mid, segments);
+            let right = stitch(nodes, regions, order, mid + 1..range.end, segments);
+            // SAFETY: slot `mid` belongs to no worker segment at this level.
+            unsafe { write_node(nodes, regions, order, mid, left, right) };
+            mid as i32
+        }
+        let root = pool.serial_section(|| stitch(base.0, regions, &order, 0..n, &segments));
+        Self {
+            nodes,
+            root,
+            free: Vec::new(),
+            len: n,
+        }
+    }
+
+    /// Paper-faithful O(n lg n) build by repeated insertion.
+    pub fn new_by_insertion(regions: &Regions1D) -> Self {
+        let mut tree = Self::new();
+        for i in 0..regions.len() {
+            tree.insert(regions.get(i), i as u32);
+        }
+        tree
+    }
+
+    fn build_balanced(&mut self, regions: &Regions1D, order: &[u32]) -> i32 {
+        if order.is_empty() {
+            return NIL;
+        }
+        let mid = order.len() / 2;
+        let idx = order[mid];
+        let iv = regions.get(idx as usize);
+        let left = self.build_balanced(regions, &order[..mid]);
+        let right = self.build_balanced(regions, &order[mid + 1..]);
+        let id = self.nodes.len() as i32;
+        self.nodes.push(Node {
+            lo: iv.lo,
+            hi: iv.hi,
+            idx,
+            left,
+            right,
+            height: 0,
+            minlower: iv.lo,
+            maxupper: iv.hi,
+        });
+        self.pull(id);
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    // ---- node helpers ---------------------------------------------------
+
+    #[inline]
+    fn h(&self, id: i32) -> i32 {
+        if id == NIL {
+            -1
+        } else {
+            self.nodes[id as usize].height
+        }
+    }
+
+    /// Recompute height / minlower / maxupper from children.
+    #[inline]
+    fn pull(&mut self, id: i32) {
+        let (l, r) = {
+            let n = &self.nodes[id as usize];
+            (n.left, n.right)
+        };
+        let mut height = 0;
+        let n_lo = self.nodes[id as usize].lo;
+        let n_hi = self.nodes[id as usize].hi;
+        let mut minlower = n_lo;
+        let mut maxupper = n_hi;
+        for c in [l, r] {
+            if c != NIL {
+                let cn = &self.nodes[c as usize];
+                height = height.max(cn.height + 1);
+                minlower = minlower.min(cn.minlower);
+                maxupper = maxupper.max(cn.maxupper);
+            }
+        }
+        let n = &mut self.nodes[id as usize];
+        n.height = height;
+        n.minlower = minlower;
+        n.maxupper = maxupper;
+    }
+
+    fn rotate_right(&mut self, y: i32) -> i32 {
+        let x = self.nodes[y as usize].left;
+        let t2 = self.nodes[x as usize].right;
+        self.nodes[x as usize].right = y;
+        self.nodes[y as usize].left = t2;
+        self.pull(y);
+        self.pull(x);
+        x
+    }
+
+    fn rotate_left(&mut self, x: i32) -> i32 {
+        let y = self.nodes[x as usize].right;
+        let t2 = self.nodes[y as usize].left;
+        self.nodes[y as usize].left = x;
+        self.nodes[x as usize].right = t2;
+        self.pull(x);
+        self.pull(y);
+        y
+    }
+
+    fn rebalance(&mut self, id: i32) -> i32 {
+        self.pull(id);
+        let bf = self.h(self.nodes[id as usize].left) - self.h(self.nodes[id as usize].right);
+        if bf > 1 {
+            let l = self.nodes[id as usize].left;
+            if self.h(self.nodes[l as usize].left) < self.h(self.nodes[l as usize].right) {
+                let nl = self.rotate_left(l);
+                self.nodes[id as usize].left = nl;
+                self.pull(id);
+            }
+            self.rotate_right(id)
+        } else if bf < -1 {
+            let r = self.nodes[id as usize].right;
+            if self.h(self.nodes[r as usize].right) < self.h(self.nodes[r as usize].left) {
+                let nr = self.rotate_right(r);
+                self.nodes[id as usize].right = nr;
+                self.pull(id);
+            }
+            self.rotate_left(id)
+        } else {
+            id
+        }
+    }
+
+    #[inline]
+    fn key(&self, id: i32) -> (u64, u32) {
+        let n = &self.nodes[id as usize];
+        (crate::exec::f64_key(n.lo), n.idx)
+    }
+
+    fn alloc(&mut self, iv: Interval, idx: u32) -> i32 {
+        let node = Node {
+            lo: iv.lo,
+            hi: iv.hi,
+            idx,
+            left: NIL,
+            right: NIL,
+            height: 0,
+            minlower: iv.lo,
+            maxupper: iv.hi,
+        };
+        if let Some(slot) = self.free.pop() {
+            self.nodes[slot as usize] = node;
+            slot as i32
+        } else {
+            self.nodes.push(node);
+            self.nodes.len() as i32 - 1
+        }
+    }
+
+    // ---- public ops -----------------------------------------------------
+
+    /// Insert region `idx` with interval `iv` — O(lg n).
+    pub fn insert(&mut self, iv: Interval, idx: u32) {
+        let key = (crate::exec::f64_key(iv.lo), idx);
+        let node = self.alloc(iv, idx);
+        self.root = self.insert_at(self.root, node, key);
+        self.len += 1;
+    }
+
+    fn insert_at(&mut self, id: i32, node: i32, key: (u64, u32)) -> i32 {
+        if id == NIL {
+            return node;
+        }
+        if key < self.key(id) {
+            let nl = self.insert_at(self.nodes[id as usize].left, node, key);
+            self.nodes[id as usize].left = nl;
+        } else {
+            let nr = self.insert_at(self.nodes[id as usize].right, node, key);
+            self.nodes[id as usize].right = nr;
+        }
+        self.rebalance(id)
+    }
+
+    /// Remove region `idx` whose current interval is `iv` — O(lg n).
+    /// Returns true if found and removed.
+    pub fn remove(&mut self, iv: Interval, idx: u32) -> bool {
+        let key = (crate::exec::f64_key(iv.lo), idx);
+        let mut removed = false;
+        self.root = self.remove_at(self.root, key, idx, &mut removed);
+        if removed {
+            self.len -= 1;
+        }
+        removed
+    }
+
+    fn remove_at(&mut self, id: i32, key: (u64, u32), idx: u32, removed: &mut bool) -> i32 {
+        if id == NIL {
+            return NIL;
+        }
+        let nkey = self.key(id);
+        if key < nkey {
+            let nl = self.remove_at(self.nodes[id as usize].left, key, idx, removed);
+            self.nodes[id as usize].left = nl;
+        } else if key > nkey {
+            let nr = self.remove_at(self.nodes[id as usize].right, key, idx, removed);
+            self.nodes[id as usize].right = nr;
+        } else {
+            debug_assert_eq!(self.nodes[id as usize].idx, idx);
+            *removed = true;
+            let (l, r) = (self.nodes[id as usize].left, self.nodes[id as usize].right);
+            if l == NIL || r == NIL {
+                self.free.push(id as u32);
+                return if l == NIL { r } else { l };
+            }
+            // Two children: replace payload with in-order successor,
+            // then delete the successor from the right subtree.
+            let mut s = r;
+            while self.nodes[s as usize].left != NIL {
+                s = self.nodes[s as usize].left;
+            }
+            let (slo, shi, sidx) = {
+                let sn = &self.nodes[s as usize];
+                (sn.lo, sn.hi, sn.idx)
+            };
+            let skey = (crate::exec::f64_key(slo), sidx);
+            let mut dummy = false;
+            let nr = self.remove_at(r, skey, sidx, &mut dummy);
+            debug_assert!(dummy);
+            let n = &mut self.nodes[id as usize];
+            n.lo = slo;
+            n.hi = shi;
+            n.idx = sidx;
+            n.right = nr;
+        }
+        self.rebalance(id)
+    }
+
+    /// Paper Algorithm 5: report every stored interval intersecting
+    /// `q` (half-open semantics) exactly once.
+    pub fn query(&self, q: Interval, f: &mut dyn FnMut(u32)) {
+        self.query_at(self.root, q, f);
+    }
+
+    fn query_at(&self, id: i32, q: Interval, f: &mut dyn FnMut(u32)) {
+        if id == NIL {
+            return;
+        }
+        let n = &self.nodes[id as usize];
+        // Prune: subtree's [minlower, maxupper) cannot touch q.
+        if n.maxupper <= q.lo || n.minlower >= q.hi {
+            return;
+        }
+        self.query_at(n.left, q, f);
+        if n.lo < q.hi && q.lo < n.hi {
+            f(n.idx);
+        }
+        // Right subtree has lowers >= n.lo; descend only if q extends
+        // past this node's lower bound.
+        if q.hi > n.lo {
+            self.query_at(n.right, q, f);
+        }
+    }
+
+    /// Collect intersections into a sorted Vec (test convenience).
+    pub fn query_vec(&self, q: Interval) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.query(q, &mut |i| out.push(i));
+        out.sort_unstable();
+        out
+    }
+
+    /// Tree height (root = 0; empty = -1).
+    pub fn height(&self) -> i32 {
+        self.h(self.root)
+    }
+
+    // ---- invariants (tests / property checks) ---------------------------
+
+    /// Validate AVL balance, BST order and augmentation; returns node
+    /// count. Panics with a description on violation.
+    pub fn check_invariants(&self) -> usize {
+        let mut count = 0;
+        self.check_at(self.root, None, None, &mut count);
+        assert_eq!(count, self.len, "len bookkeeping");
+        count
+    }
+
+    fn check_at(
+        &self,
+        id: i32,
+        min: Option<(u64, u32)>,
+        max: Option<(u64, u32)>,
+        count: &mut usize,
+    ) -> (i32, f64, f64) {
+        if id == NIL {
+            return (-1, f64::INFINITY, f64::NEG_INFINITY);
+        }
+        *count += 1;
+        let n = &self.nodes[id as usize];
+        let key = self.key(id);
+        if let Some(mn) = min {
+            assert!(key > mn, "BST order violated");
+        }
+        if let Some(mx) = max {
+            assert!(key < mx, "BST order violated");
+        }
+        let (hl, minl, maxl) = self.check_at(n.left, min, Some(key), count);
+        let (hr, minr, maxr) = self.check_at(n.right, Some(key), max, count);
+        assert!((hl - hr).abs() <= 1, "AVL balance violated");
+        let h = 1 + hl.max(hr);
+        assert_eq!(n.height, h, "height field stale");
+        let minlower = n.lo.min(minl).min(minr);
+        let maxupper = n.hi.max(maxl).max(maxr);
+        assert_eq!(n.minlower, minlower, "minlower stale");
+        assert_eq!(n.maxupper, maxupper, "maxupper stale");
+        (h, minlower, maxupper)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::region::random_regions_1d;
+    use crate::prng::Rng;
+
+    fn brute_query(regions: &Regions1D, q: Interval) -> Vec<u32> {
+        (0..regions.len() as u32)
+            .filter(|&i| regions.get(i as usize).intersects(&q))
+            .collect()
+    }
+
+    #[test]
+    fn figure6_style_queries() {
+        // A handful of intervals with nesting and duplicates.
+        let regions = Regions1D::from_intervals(&[
+            Interval::new(0.0, 10.0),
+            Interval::new(2.0, 3.0),
+            Interval::new(2.0, 8.0),
+            Interval::new(5.0, 6.0),
+            Interval::new(9.0, 12.0),
+        ]);
+        let t = IntervalTree::from_regions(&regions);
+        t.check_invariants();
+        assert_eq!(t.query_vec(Interval::new(2.5, 5.5)), vec![0, 1, 2, 3]);
+        assert_eq!(t.query_vec(Interval::new(10.0, 11.0)), vec![4]);
+        assert_eq!(t.query_vec(Interval::new(100.0, 101.0)), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn parallel_build_agrees_with_serial() {
+        let pool = crate::exec::ThreadPool::new(7);
+        let mut rng = Rng::new(0x9A12);
+        for n in [1usize, 2, 7, 100, 1000, 4096] {
+            let regions = random_regions_1d(&mut rng, n, 1000.0, 10.0);
+            let serial = IntervalTree::from_regions(&regions);
+            for p in [2usize, 3, 8] {
+                let par = IntervalTree::from_regions_par(&pool, p, &regions);
+                par.check_invariants();
+                for _ in 0..10 {
+                    let lo = rng.uniform(0.0, 990.0);
+                    let q = Interval::new(lo, lo + rng.uniform(0.0, 20.0));
+                    assert_eq!(par.query_vec(q), serial.query_vec(q), "n={n} p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn builders_agree() {
+        let mut rng = Rng::new(0x17EE);
+        let regions = random_regions_1d(&mut rng, 500, 100.0, 8.0);
+        let bulk = IntervalTree::from_regions(&regions);
+        let ins = IntervalTree::new_by_insertion(&regions);
+        bulk.check_invariants();
+        ins.check_invariants();
+        for _ in 0..50 {
+            let lo = rng.uniform(0.0, 95.0);
+            let q = Interval::new(lo, lo + rng.uniform(0.0, 10.0));
+            assert_eq!(bulk.query_vec(q), ins.query_vec(q));
+        }
+    }
+
+    #[test]
+    fn query_matches_brute_force_property() {
+        crate::bench::prop::prop_check("itree-query-vs-brute", 0x7E, |rng| {
+            let n = 1 + rng.below(200) as usize;
+            let regions = random_regions_1d(rng, n, 50.0, 6.0);
+            let t = IntervalTree::from_regions(&regions);
+            t.check_invariants();
+            for _ in 0..10 {
+                let lo = rng.uniform(0.0, 48.0);
+                let q = Interval::new(lo, lo + rng.uniform(0.0, 8.0));
+                let got = t.query_vec(q);
+                let want = brute_query(&regions, q);
+                if got != want {
+                    return Err(format!("q={q:?}: got {got:?}, want {want:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn insert_delete_random_sequence_keeps_invariants() {
+        crate::bench::prop::prop_check("itree-insert-delete", 0xDE1, |rng| {
+            let mut t = IntervalTree::new();
+            let mut live: Vec<(Interval, u32)> = Vec::new();
+            let mut next_idx = 0u32;
+            for _ in 0..300 {
+                if live.is_empty() || rng.chance(0.6) {
+                    let lo = rng.uniform(0.0, 100.0);
+                    let iv = Interval::new(lo, lo + rng.uniform(0.0, 10.0));
+                    t.insert(iv, next_idx);
+                    live.push((iv, next_idx));
+                    next_idx += 1;
+                } else {
+                    let k = rng.below(live.len() as u64) as usize;
+                    let (iv, idx) = live.swap_remove(k);
+                    if !t.remove(iv, idx) {
+                        return Err(format!("failed to remove idx {idx}"));
+                    }
+                }
+                t.check_invariants();
+            }
+            // Final query cross-check against the live list.
+            let q = Interval::new(20.0, 40.0);
+            let mut want: Vec<u32> = live
+                .iter()
+                .filter(|(iv, _)| iv.intersects(&q))
+                .map(|&(_, i)| i)
+                .collect();
+            want.sort_unstable();
+            crate::bench::prop::expect_eq(&t.query_vec(q), &want, "query after churn")
+        });
+    }
+
+    #[test]
+    fn removing_absent_returns_false() {
+        let mut t = IntervalTree::new();
+        t.insert(Interval::new(0.0, 1.0), 0);
+        assert!(!t.remove(Interval::new(0.0, 1.0), 99));
+        assert!(t.remove(Interval::new(0.0, 1.0), 0));
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn height_is_logarithmic() {
+        let mut rng = Rng::new(1);
+        let regions = random_regions_1d(&mut rng, 10_000, 1e6, 10.0);
+        let t = IntervalTree::from_regions(&regions);
+        // AVL height bound: 1.44 lg(n+2); bulk build is near-perfect.
+        assert!(t.height() <= 20, "height {} too large", t.height());
+    }
+
+    #[test]
+    fn touching_intervals_not_reported() {
+        let regions = Regions1D::from_intervals(&[Interval::new(0.0, 5.0)]);
+        let t = IntervalTree::from_regions(&regions);
+        assert!(t.query_vec(Interval::new(5.0, 6.0)).is_empty());
+        assert_eq!(t.query_vec(Interval::new(4.999, 6.0)), vec![0]);
+    }
+}

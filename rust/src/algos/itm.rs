@@ -1,0 +1,154 @@
+//! Interval Tree Matching (paper Algorithm 5, §3).
+//!
+//! Build an interval tree over the subscription set, then query it with
+//! every update region. Queries are read-only, so the loop over update
+//! regions parallelizes freely; per-query work varies with K_u, so we
+//! use dynamic scheduling (the OpenMP runtime does the same with its
+//! default chunking when the static schedule is imbalanced).
+//!
+//! The role swap the paper describes (build the tree on the *smaller*
+//! set) is implemented in [`match_par`].
+
+use crate::core::sink::MatchSink;
+use crate::core::Regions1D;
+use crate::exec::ThreadPool;
+
+use super::interval_tree::IntervalTree;
+use super::par_collect;
+
+/// Dynamic-schedule chunk: big enough to amortize the cursor CAS,
+/// small enough to balance skewed K_u.
+const QUERY_CHUNK: usize = 64;
+
+/// Serial ITM (tree on S, query with every u).
+pub fn match_seq(subs: &Regions1D, upds: &Regions1D, sink: &mut dyn MatchSink) {
+    let tree = IntervalTree::from_regions(subs);
+    for j in 0..upds.len() {
+        let q = upds.get(j);
+        tree.query(q, &mut |i| sink.report(i, j as u32));
+    }
+}
+
+/// Parallel ITM (Algorithm 5's `for all u in parallel`), with the
+/// smaller-set build optimization.
+pub fn match_par<S>(
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &Regions1D,
+    upds: &Regions1D,
+) -> Vec<S>
+where
+    S: MatchSink + Default,
+{
+    // Build on the smaller side: tree height and build time drop, the
+    // parallel query loop grows — strictly more parallel work.
+    let swap = upds.len() < subs.len();
+    let (tree_side, query_side) = if swap { (upds, subs) } else { (subs, upds) };
+    let tree = IntervalTree::from_regions_par(pool, nthreads, tree_side);
+
+    // One sink per worker; queries pulled via a shared dynamic cursor
+    // (per-query work K_u is skewed, so static chunks would imbalance).
+    let cursor = crate::exec::pool::WorkCounter::new();
+    let collected = par_collect(pool, nthreads, |_p, sink: &mut S| {
+        while let Some(r) = cursor.next_chunk(QUERY_CHUNK, query_side.len()) {
+            for j in r {
+                let q = query_side.get(j);
+                if swap {
+                    // tree holds updates; j indexes subscriptions
+                    tree.query(q, &mut |u| sink.report(j as u32, u));
+                } else {
+                    tree.query(q, &mut |s| sink.report(s, j as u32));
+                }
+            }
+        }
+    });
+    collected
+}
+
+/// Parallel ITM with a *static* schedule (no role swap) — the
+/// scheduling ablation's comparison point against the dynamic default.
+pub fn match_par_static<S>(
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &Regions1D,
+    upds: &Regions1D,
+) -> Vec<S>
+where
+    S: MatchSink + Default,
+{
+    let tree = IntervalTree::from_regions(subs);
+    let tree = &tree;
+    let ranges = crate::exec::pfor::chunks(upds.len(), nthreads);
+    par_collect(pool, nthreads, |p, sink: &mut S| {
+        for j in ranges[p].clone() {
+            let q = upds.get(j);
+            tree.query(q, &mut |s| sink.report(s, j as u32));
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::bfm;
+    use crate::core::region::random_regions_1d;
+    use crate::core::sink::{canonical_pairs, canonicalize, VecSink};
+
+    #[test]
+    fn matches_bfm_serial() {
+        let mut rng = crate::prng::Rng::new(0x11);
+        let subs = random_regions_1d(&mut rng, 300, 500.0, 5.0);
+        let upds = random_regions_1d(&mut rng, 200, 500.0, 5.0);
+        let mut want = VecSink::default();
+        bfm::match_seq(&subs, &upds, &mut want);
+        let mut got = VecSink::default();
+        match_seq(&subs, &upds, &mut got);
+        assert_eq!(canonicalize(got.pairs), canonicalize(want.pairs));
+    }
+
+    #[test]
+    fn parallel_matches_serial_all_p_and_swaps() {
+        let pool = ThreadPool::new(7);
+        let mut rng = crate::prng::Rng::new(0x12);
+        // m << n triggers the role swap.
+        let subs = random_regions_1d(&mut rng, 600, 500.0, 5.0);
+        let upds = random_regions_1d(&mut rng, 50, 500.0, 5.0);
+        let mut want = VecSink::default();
+        bfm::match_seq(&subs, &upds, &mut want);
+        let want = canonicalize(want.pairs);
+        for p in 1..=8 {
+            let got = canonical_pairs(match_par::<VecSink>(&pool, p, &subs, &upds));
+            assert_eq!(got, want, "p={p}");
+        }
+        // n << m: no swap.
+        let subs2 = random_regions_1d(&mut rng, 50, 500.0, 5.0);
+        let upds2 = random_regions_1d(&mut rng, 600, 500.0, 5.0);
+        let mut want2 = VecSink::default();
+        bfm::match_seq(&subs2, &upds2, &mut want2);
+        let got2 = canonical_pairs(match_par::<VecSink>(&pool, 4, &subs2, &upds2));
+        assert_eq!(got2, canonicalize(want2.pairs));
+    }
+
+    #[test]
+    fn static_variant_agrees() {
+        let pool = ThreadPool::new(3);
+        let mut rng = crate::prng::Rng::new(0x13);
+        let subs = random_regions_1d(&mut rng, 200, 100.0, 3.0);
+        let upds = random_regions_1d(&mut rng, 150, 100.0, 3.0);
+        let a = canonical_pairs(match_par::<VecSink>(&pool, 4, &subs, &upds));
+        let b = canonical_pairs(match_par_static::<VecSink>(&pool, 4, &subs, &upds));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let pool = ThreadPool::new(1);
+        let got = canonical_pairs(match_par::<VecSink>(
+            &pool,
+            2,
+            &Regions1D::default(),
+            &Regions1D::default(),
+        ));
+        assert!(got.is_empty());
+    }
+}

@@ -1,0 +1,201 @@
+//! The matching algorithms (paper §2–§4).
+//!
+//! * [`bfm`] — Brute-Force Matching (Algorithm 2), serial + parallel.
+//! * [`gbm`] — Grid-Based Matching (Algorithm 3), serial + parallel,
+//!   with selectable cell-list synchronization and dedup strategies.
+//! * [`interval_tree`] — the augmented AVL interval tree of §3.
+//! * [`itm`] — Interval Tree Matching (Algorithm 5), parallel queries.
+//! * [`sbm`] — Sort-Based Matching (Algorithm 4), the sequential
+//!   state of the art the paper starts from.
+//! * [`psbm`] — **Parallel SBM** (Algorithms 6+7), the paper's main
+//!   contribution.
+//! * [`sbm_binary`] — the binary-search-enhanced SBM baseline in the
+//!   spirit of Li et al. [38].
+//! * [`dynamic`] — dynamic interval management (§3's two-tree scheme).
+
+pub mod bfm;
+pub mod dynamic;
+pub mod gbm;
+pub mod interval_tree;
+pub mod itm;
+pub mod psbm;
+pub mod sbm;
+pub mod sbm_binary;
+
+use std::sync::Mutex;
+
+use crate::core::sink::{CountSink, MatchSink, VecSink};
+use crate::core::Regions1D;
+use crate::exec::ThreadPool;
+use crate::sets::SetImpl;
+
+/// Run `f(p, &mut local_sink)` on `nthreads` workers and return the
+/// per-worker sinks ordered by worker index. The hot path stays
+/// lock-free: each worker owns its sink and publishes it once.
+pub fn par_collect<S, F>(pool: &ThreadPool, nthreads: usize, f: F) -> Vec<S>
+where
+    S: MatchSink + Default,
+    F: Fn(usize, &mut S) + Sync,
+{
+    let out: Mutex<Vec<(usize, S)>> = Mutex::new(Vec::with_capacity(nthreads));
+    pool.run(nthreads, |p| {
+        let mut sink = S::default();
+        f(p, &mut sink);
+        out.lock().unwrap().push((p, sink));
+    });
+    let mut v = out.into_inner().unwrap();
+    v.sort_by_key(|(p, _)| *p);
+    v.into_iter().map(|(_, s)| s).collect()
+}
+
+/// Algorithm selector used by the CLI, coordinator and benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    Bfm,
+    Gbm,
+    Itm,
+    Sbm,
+    Psbm,
+    SbmBinary,
+}
+
+impl Algo {
+    pub const ALL: [Algo; 6] = [
+        Algo::Bfm,
+        Algo::Gbm,
+        Algo::Itm,
+        Algo::Sbm,
+        Algo::Psbm,
+        Algo::SbmBinary,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Bfm => "bfm",
+            Algo::Gbm => "gbm",
+            Algo::Itm => "itm",
+            Algo::Sbm => "sbm",
+            Algo::Psbm => "psbm",
+            Algo::SbmBinary => "sbm-binary",
+        }
+    }
+}
+
+impl std::str::FromStr for Algo {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "bfm" | "brute" | "bruteforce" => Ok(Algo::Bfm),
+            "gbm" | "grid" => Ok(Algo::Gbm),
+            "itm" | "tree" => Ok(Algo::Itm),
+            "sbm" | "sort" => Ok(Algo::Sbm),
+            "psbm" | "parallel-sbm" | "sbm-par" => Ok(Algo::Psbm),
+            "sbm-binary" | "binary" => Ok(Algo::SbmBinary),
+            other => Err(format!("unknown algorithm '{other}'")),
+        }
+    }
+}
+
+/// Knobs shared by the 1-D matchers.
+#[derive(Debug, Clone, Copy)]
+pub struct MatchParams {
+    /// GBM: number of grid cells (paper: user-provided, e.g. 3000).
+    pub ncells: usize,
+    /// SBM/PSBM active-set implementation (paper §5 study).
+    pub set_impl: SetImpl,
+}
+
+impl Default for MatchParams {
+    fn default() -> Self {
+        Self {
+            ncells: 3000,
+            set_impl: SetImpl::Sparse,
+        }
+    }
+}
+
+/// Count intersections with `algo` using `nthreads` workers — the
+/// entry point the benches use (counting sink, like the paper's
+/// evaluation).
+pub fn run_count(
+    algo: Algo,
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &Regions1D,
+    upds: &Regions1D,
+    params: &MatchParams,
+) -> u64 {
+    let sinks: Vec<CountSink> = run_collect(algo, pool, nthreads, subs, upds, params);
+    crate::core::sink::total_count(&sinks)
+}
+
+/// Run `algo` collecting per-worker sinks of type `S`.
+pub fn run_collect<S>(
+    algo: Algo,
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &Regions1D,
+    upds: &Regions1D,
+    params: &MatchParams,
+) -> Vec<S>
+where
+    S: MatchSink + Default,
+{
+    match algo {
+        Algo::Bfm => bfm::match_par(pool, nthreads, subs, upds),
+        Algo::Gbm => gbm::match_par(
+            pool,
+            nthreads,
+            subs,
+            upds,
+            &gbm::GbmParams {
+                ncells: params.ncells,
+                ..Default::default()
+            },
+        ),
+        Algo::Itm => itm::match_par(pool, nthreads, subs, upds),
+        Algo::Sbm => {
+            // Intrinsically serial baseline (the paper's Algorithm 4);
+            // runs on one thread regardless of nthreads.
+            vec![sbm::match_seq_with(params.set_impl, subs, upds)]
+        }
+        Algo::Psbm => psbm::match_par_with(params.set_impl, pool, nthreads, subs, upds),
+        Algo::SbmBinary => sbm_binary::match_par(pool, nthreads, subs, upds),
+    }
+}
+
+/// Canonical pair list for `algo` (test helper).
+pub fn run_pairs(
+    algo: Algo,
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &Regions1D,
+    upds: &Regions1D,
+    params: &MatchParams,
+) -> crate::core::sink::PairVec {
+    let sinks: Vec<VecSink> = run_collect(algo, pool, nthreads, subs, upds, params);
+    crate::core::sink::canonical_pairs(sinks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_parse_roundtrip() {
+        for a in Algo::ALL {
+            assert_eq!(a.name().parse::<Algo>().unwrap(), a);
+        }
+        assert!("nope".parse::<Algo>().is_err());
+    }
+
+    #[test]
+    fn par_collect_orders_by_worker() {
+        let pool = ThreadPool::new(3);
+        let sinks: Vec<VecSink> = par_collect(&pool, 4, |p, sink: &mut VecSink| {
+            sink.report(p as u32, 0);
+        });
+        let firsts: Vec<u32> = sinks.iter().map(|s| s.pairs[0].0).collect();
+        assert_eq!(firsts, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,283 @@
+//! **Parallel Sort-Based Matching** (paper §4, Algorithms 6 + 7) — the
+//! paper's main contribution.
+//!
+//! Three phases:
+//!
+//! 1. Build and sort the endpoint array in parallel
+//!    ([`super::sbm::build_endpoints`] + [`crate::exec::psort`]).
+//! 2. Initialize per-segment active sets with a prefix computation:
+//!    every worker scans its segment recording the *delta* it would
+//!    apply to SubSet/UpdSet (`Sadd/Sdel/Uadd/Udel`, Algorithm 7
+//!    lines 1–17, invariants (1)–(2) of §4), then the master combines
+//!    the deltas serially (lines 18–21; the O(N/P + P) two-level scan
+//!    of Fig. 7).
+//! 3. Every worker sweeps its segment with its private, correctly
+//!    initialized SubSet/UpdSet (Algorithm 6), reporting into a
+//!    per-worker sink — zero synchronization on the hot path.
+//!
+//! The result is bit-identical to serial SBM for every thread count
+//! (property-tested below, including the half-open tie-breaking).
+
+use std::sync::Mutex;
+
+use crate::core::sink::MatchSink;
+use crate::core::Regions1D;
+use crate::exec::pfor::chunks;
+use crate::exec::psort::par_sort_by_key;
+use crate::exec::ThreadPool;
+use crate::sets::{ActiveSet, BTreeActiveSet, BitSet, HashActiveSet, SetImpl, SortedVecSet, SparseSet};
+
+use super::sbm::{sweep, Endpoint};
+
+/// Per-segment delta (Algorithm 7 invariants):
+/// * `sadd`/`uadd` — regions whose lower endpoint is in the segment but
+///   whose upper endpoint is not (they *stay* active);
+/// * `sdel`/`udel` — regions whose upper endpoint is in the segment but
+///   whose lower endpoint is not (they *cease* to be active).
+struct Delta<Set> {
+    sadd: Set,
+    sdel: Set,
+    uadd: Set,
+    udel: Set,
+}
+
+/// Scan one segment computing its delta (Algorithm 7 lines 2–17).
+fn segment_delta<Set: ActiveSet>(
+    endpoints: &[Endpoint],
+    n_subs: usize,
+    n_upds: usize,
+) -> Delta<Set> {
+    let mut d = Delta {
+        sadd: Set::with_universe(n_subs),
+        sdel: Set::with_universe(n_subs),
+        uadd: Set::with_universe(n_upds),
+        udel: Set::with_universe(n_upds),
+    };
+    for &e in endpoints {
+        let idx = e.idx();
+        let (add, del) = if e.is_update() {
+            (&mut d.uadd, &mut d.udel)
+        } else {
+            (&mut d.sadd, &mut d.sdel)
+        };
+        if !e.is_upper() {
+            add.insert(idx);
+        } else if add.contains(idx) {
+            add.remove(idx);
+        } else {
+            del.insert(idx);
+        }
+    }
+    d
+}
+
+/// Parallel SBM, generic over the active-set implementation.
+pub fn match_par<Set, S>(
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &Regions1D,
+    upds: &Regions1D,
+) -> Vec<S>
+where
+    Set: ActiveSet,
+    S: MatchSink + Default,
+{
+    let (n, m) = (subs.len(), upds.len());
+    let total = 2 * (n + m);
+
+    // ---- Phase 1a: build the endpoint array in parallel -----------------
+    let mut endpoints = vec![Endpoint::default(); total];
+    {
+        #[derive(Clone, Copy)]
+        struct SendPtr(*mut Endpoint);
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        let base = SendPtr(endpoints.as_mut_ptr());
+        // Regions (not endpoints) are chunked; each region owns two
+        // adjacent slots, so chunks stay disjoint.
+        let sub_ranges = chunks(n, nthreads);
+        let upd_ranges = chunks(m, nthreads);
+        pool.run(nthreads, |p| {
+            let base = base;
+            for i in sub_ranges[p].clone() {
+                // SAFETY: slot 2i / 2i+1 written exactly once, by this worker.
+                unsafe {
+                    *base.0.add(2 * i) = Endpoint::new(subs.lo[i], i as u32, false, false);
+                    *base.0.add(2 * i + 1) = Endpoint::new(subs.hi[i], i as u32, true, false);
+                }
+            }
+            for j in upd_ranges[p].clone() {
+                unsafe {
+                    *base.0.add(2 * n + 2 * j) =
+                        Endpoint::new(upds.lo[j], j as u32, false, true);
+                    *base.0.add(2 * n + 2 * j + 1) =
+                        Endpoint::new(upds.hi[j], j as u32, true, true);
+                }
+            }
+        });
+    }
+
+    // ---- Phase 1b: parallel sort (Algorithm 6 line 4) -------------------
+    par_sort_by_key(pool, nthreads, &mut endpoints, |e| e.sort_key());
+
+    // ---- Phase 2: per-segment deltas + master combine (Algorithm 7) -----
+    let segments = chunks(total, nthreads);
+    let deltas: Mutex<Vec<(usize, Delta<Set>)>> = Mutex::new(Vec::with_capacity(nthreads));
+    pool.run(nthreads, |p| {
+        let d = segment_delta::<Set>(&endpoints[segments[p].clone()], n, m);
+        deltas.lock().unwrap().push((p, d));
+    });
+    let mut deltas = deltas.into_inner().unwrap();
+    deltas.sort_by_key(|(p, _)| *p);
+
+    // Master-only combine (Algorithm 7 lines 18–21): SubSet[p] =
+    // SubSet[p-1] ∪ Sadd[p-1] \ Sdel[p-1], likewise UpdSet.
+    let init_sets: Vec<(Set, Set)> = pool.serial_section(|| {
+        let mut out = Vec::with_capacity(nthreads);
+        let mut sub = Set::with_universe(n);
+        let mut upd = Set::with_universe(m);
+        for (_, d) in &deltas {
+            out.push((sub.clone(), upd.clone()));
+            sub.union_with(&d.sadd);
+            sub.subtract(&d.sdel);
+            upd.union_with(&d.uadd);
+            upd.subtract(&d.udel);
+        }
+        out
+    });
+
+    // ---- Phase 3: per-segment sweeps (Algorithm 6 lines 7–20) -----------
+    let init_sets: Vec<Mutex<Option<(Set, Set)>>> =
+        init_sets.into_iter().map(|s| Mutex::new(Some(s))).collect();
+    super::par_collect(pool, nthreads, |p, sink: &mut S| {
+        let (mut sub_set, mut upd_set) = init_sets[p].lock().unwrap().take().unwrap();
+        sweep(&endpoints[segments[p].clone()], &mut sub_set, &mut upd_set, sink);
+    })
+}
+
+/// Runtime-dispatched Parallel SBM.
+pub fn match_par_with<S>(
+    set_impl: SetImpl,
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &Regions1D,
+    upds: &Regions1D,
+) -> Vec<S>
+where
+    S: MatchSink + Default,
+{
+    match set_impl {
+        SetImpl::Bit => match_par::<BitSet, S>(pool, nthreads, subs, upds),
+        SetImpl::Hash => match_par::<HashActiveSet, S>(pool, nthreads, subs, upds),
+        SetImpl::BTree => match_par::<BTreeActiveSet, S>(pool, nthreads, subs, upds),
+        SetImpl::SortedVec => match_par::<SortedVecSet, S>(pool, nthreads, subs, upds),
+        SetImpl::Sparse => match_par::<SparseSet, S>(pool, nthreads, subs, upds),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::{bfm, sbm};
+    use crate::core::interval::Interval;
+    use crate::core::region::random_regions_1d;
+    use crate::core::sink::{canonical_pairs, canonicalize, VecSink};
+
+    fn bfm_pairs(subs: &Regions1D, upds: &Regions1D) -> Vec<(u32, u32)> {
+        let mut want = VecSink::default();
+        bfm::match_seq(subs, upds, &mut want);
+        canonicalize(want.pairs)
+    }
+
+    #[test]
+    fn equals_serial_sbm_and_bfm_for_all_thread_counts() {
+        let pool = ThreadPool::new(7);
+        let mut rng = crate::prng::Rng::new(0x95B);
+        let subs = random_regions_1d(&mut rng, 700, 1000.0, 12.0);
+        let upds = random_regions_1d(&mut rng, 600, 1000.0, 12.0);
+        let want = bfm_pairs(&subs, &upds);
+        let serial: VecSink = sbm::match_seq_with(SetImpl::Bit, &subs, &upds);
+        assert_eq!(canonicalize(serial.pairs), want);
+        for p in 1..=8 {
+            let got =
+                canonical_pairs(match_par::<BitSet, VecSink>(&pool, p, &subs, &upds));
+            assert_eq!(got, want, "p={p}");
+        }
+    }
+
+    #[test]
+    fn all_set_impls_agree_in_parallel() {
+        let pool = ThreadPool::new(3);
+        let mut rng = crate::prng::Rng::new(0x95C);
+        let subs = random_regions_1d(&mut rng, 300, 500.0, 25.0);
+        let upds = random_regions_1d(&mut rng, 300, 500.0, 25.0);
+        let want = bfm_pairs(&subs, &upds);
+        for set_impl in SetImpl::ALL {
+            let got: Vec<VecSink> = match_par_with(set_impl, &pool, 4, &subs, &upds);
+            assert_eq!(canonical_pairs(got), want, "{}", set_impl.name());
+        }
+    }
+
+    #[test]
+    fn segment_boundary_straddling_regions() {
+        // One long region spanning every segment, many short ones.
+        let pool = ThreadPool::new(7);
+        let mut intervals = vec![Interval::new(0.0, 1000.0)];
+        for i in 0..100 {
+            let lo = i as f64 * 10.0;
+            intervals.push(Interval::new(lo, lo + 5.0));
+        }
+        let subs = Regions1D::from_intervals(&intervals);
+        let upds = Regions1D::from_intervals(&intervals);
+        let want = bfm_pairs(&subs, &upds);
+        for p in [2, 3, 5, 8] {
+            let got =
+                canonical_pairs(match_par::<BitSet, VecSink>(&pool, p, &subs, &upds));
+            assert_eq!(got, want, "p={p}");
+        }
+    }
+
+    #[test]
+    fn property_p_invariance_random_workloads() {
+        let pool = ThreadPool::new(5);
+        crate::bench::prop::prop_check("psbm-p-invariance", 0x95D, |rng| {
+            let n = 1 + rng.below(200) as usize;
+            let m = 1 + rng.below(200) as usize;
+            let l = rng.uniform(0.1, 40.0);
+            let subs = random_regions_1d(rng, n, 100.0, l);
+            let upds = random_regions_1d(rng, m, 100.0, l);
+            let want = bfm_pairs(&subs, &upds);
+            let p = 1 + rng.below(6) as usize;
+            let got =
+                canonical_pairs(match_par::<BitSet, VecSink>(&pool, p, &subs, &upds));
+            crate::bench::prop::expect_eq(&got, &want, "pairs")
+        });
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let pool = ThreadPool::new(3);
+        let empty = Regions1D::default();
+        let got = canonical_pairs(match_par::<BitSet, VecSink>(&pool, 4, &empty, &empty));
+        assert!(got.is_empty());
+        let one = Regions1D::from_intervals(&[Interval::new(0.0, 1.0)]);
+        let got = canonical_pairs(match_par::<BitSet, VecSink>(&pool, 4, &one, &one));
+        assert_eq!(got, vec![(0, 0)]);
+    }
+
+    #[test]
+    fn duplicate_endpoints_across_segments() {
+        // All endpoints identical: worst case for tie-breaking + segmenting.
+        let pool = ThreadPool::new(7);
+        let iv = Interval::new(5.0, 6.0);
+        let subs = Regions1D::from_intervals(&[iv; 20]);
+        let upds = Regions1D::from_intervals(&[iv; 20]);
+        let want = bfm_pairs(&subs, &upds);
+        assert_eq!(want.len(), 400);
+        for p in [1, 2, 4, 8] {
+            let got =
+                canonical_pairs(match_par::<BitSet, VecSink>(&pool, p, &subs, &upds));
+            assert_eq!(got, want, "p={p}");
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Sort-Based Matching (paper Algorithm 4; Raczy, Tan & Yu [52]).
+//!
+//! Endpoints of all regions are sorted and swept in non-decreasing
+//! order while two active sets track the open subscription and update
+//! regions. When a region's upper endpoint is encountered it is
+//! reported against every active region of the opposite kind — no
+//! Intersect-1D calls at all.
+//!
+//! **Tie-breaking.** Positions can collide; intervals are half-open, so
+//! at equal position the *upper* endpoints must be processed before the
+//! lower ones — `[a, b)` and `[b, c)` must not match. The endpoint sort
+//! key encodes this (see [`Endpoint::sort_key`]); the choice is
+//! property-tested against BFM, which never looks at ordering.
+//!
+//! The module also exports the endpoint encoding and the sweep core so
+//! Parallel SBM ([`super::psbm`]) reuses the exact same semantics.
+
+use crate::core::sink::MatchSink;
+use crate::core::Regions1D;
+use crate::exec::f64_key;
+use crate::sets::{ActiveSet, BTreeActiveSet, BitSet, HashActiveSet, SetImpl, SortedVecSet, SparseSet};
+
+/// One interval endpoint, stored **sort-ready**: the position is kept
+/// as its order-preserving bit pattern (`f64_key`) and the tie-break
+/// bits are pre-composed, so sorting compares two plain u64 words with
+/// no per-comparison key recomputation (a measured win on the sort
+/// phase — EXPERIMENTS.md §Perf).
+///
+/// `lo` layout: bit 63 = side-first flag (0 for *upper* endpoints so
+/// they sort before lowers at equal positions — half-open semantics);
+/// bits 2.. = region idx; bit 1 = is_upper; bit 0 = is_update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Endpoint {
+    /// `f64_key(pos)` — order-preserving position bits.
+    pub hi: u64,
+    /// Tie-break + payload bits (see layout above).
+    pub lo: u64,
+}
+
+const LOWER_SORTS_LAST: u64 = 1 << 63;
+
+impl Endpoint {
+    #[inline]
+    pub fn new(pos: f64, idx: u32, is_upper: bool, is_update: bool) -> Self {
+        let side = if is_upper { 0 } else { LOWER_SORTS_LAST };
+        Self {
+            hi: f64_key(pos),
+            lo: side | (idx as u64) << 2 | (is_upper as u64) << 1 | is_update as u64,
+        }
+    }
+
+    #[inline]
+    pub fn idx(self) -> u32 {
+        ((self.lo & !LOWER_SORTS_LAST) >> 2) as u32
+    }
+
+    #[inline]
+    pub fn is_upper(self) -> bool {
+        self.lo & 2 != 0
+    }
+
+    #[inline]
+    pub fn is_update(self) -> bool {
+        self.lo & 1 != 0
+    }
+
+    /// Position (decoded from the order-preserving bits; debug use).
+    pub fn pos(self) -> f64 {
+        let bits = if self.hi & (1 << 63) != 0 {
+            self.hi & !(1 << 63)
+        } else {
+            !self.hi
+        };
+        f64::from_bits(bits)
+    }
+
+    /// Total sort key: position, then side (uppers first), then
+    /// kind/idx for determinism — a pure bit concatenation of the
+    /// stored words, no recomputation.
+    #[inline]
+    pub fn sort_key(self) -> u128 {
+        (self.hi as u128) << 64 | self.lo as u128
+    }
+}
+
+/// Build the 2(n+m) endpoint array (Algorithm 4 lines 1–3).
+pub fn build_endpoints(subs: &Regions1D, upds: &Regions1D) -> Vec<Endpoint> {
+    let mut t = Vec::with_capacity(2 * (subs.len() + upds.len()));
+    for i in 0..subs.len() {
+        t.push(Endpoint::new(subs.lo[i], i as u32, false, false));
+        t.push(Endpoint::new(subs.hi[i], i as u32, true, false));
+    }
+    for j in 0..upds.len() {
+        t.push(Endpoint::new(upds.lo[j], j as u32, false, true));
+        t.push(Endpoint::new(upds.hi[j], j as u32, true, true));
+    }
+    t
+}
+
+/// The sweep core (Algorithm 4 lines 6–18 / Algorithm 6 lines 8–20):
+/// process `endpoints` in order against the given active sets.
+#[inline]
+pub fn sweep<Set: ActiveSet>(
+    endpoints: &[Endpoint],
+    sub_set: &mut Set,
+    upd_set: &mut Set,
+    sink: &mut dyn MatchSink,
+) {
+    for &e in endpoints {
+        let idx = e.idx();
+        if e.is_update() {
+            if !e.is_upper() {
+                upd_set.insert(idx);
+            } else {
+                upd_set.remove(idx);
+                sub_set.for_each(&mut |s| sink.report(s, idx));
+            }
+        } else if !e.is_upper() {
+            sub_set.insert(idx);
+        } else {
+            sub_set.remove(idx);
+            upd_set.for_each(&mut |u| sink.report(idx, u));
+        }
+    }
+}
+
+/// Serial SBM (Algorithm 4) with a chosen active-set implementation.
+pub fn match_seq<Set: ActiveSet>(
+    subs: &Regions1D,
+    upds: &Regions1D,
+    sink: &mut dyn MatchSink,
+) {
+    let mut t = build_endpoints(subs, upds);
+    t.sort_unstable_by_key(|e| e.sort_key());
+    let mut sub_set = Set::with_universe(subs.len());
+    let mut upd_set = Set::with_universe(upds.len());
+    sweep(&t, &mut sub_set, &mut upd_set, sink);
+}
+
+/// Runtime-dispatched serial SBM returning a fresh sink.
+pub fn match_seq_with<S>(set_impl: SetImpl, subs: &Regions1D, upds: &Regions1D) -> S
+where
+    S: MatchSink + Default,
+{
+    let mut sink = S::default();
+    match set_impl {
+        SetImpl::Bit => match_seq::<BitSet>(subs, upds, &mut sink),
+        SetImpl::Hash => match_seq::<HashActiveSet>(subs, upds, &mut sink),
+        SetImpl::BTree => match_seq::<BTreeActiveSet>(subs, upds, &mut sink),
+        SetImpl::SortedVec => match_seq::<SortedVecSet>(subs, upds, &mut sink),
+        SetImpl::Sparse => match_seq::<SparseSet>(subs, upds, &mut sink),
+    }
+    sink
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::bfm;
+    use crate::core::interval::Interval;
+    use crate::core::region::random_regions_1d;
+    use crate::core::sink::{canonicalize, VecSink};
+
+    #[test]
+    fn endpoint_encoding_roundtrip() {
+        let e = Endpoint::new(3.5, 1234, true, false);
+        assert_eq!(e.idx(), 1234);
+        assert!(e.is_upper());
+        assert!(!e.is_update());
+        let e2 = Endpoint::new(-1.0, 0, false, true);
+        assert!(!e2.is_upper());
+        assert!(e2.is_update());
+    }
+
+    #[test]
+    fn uppers_sort_before_lowers_at_equal_pos() {
+        let upper = Endpoint::new(5.0, 7, true, false);
+        let lower = Endpoint::new(5.0, 3, false, true);
+        assert!(upper.sort_key() < lower.sort_key());
+        // and position dominates
+        let earlier = Endpoint::new(4.9, 9, false, false);
+        assert!(earlier.sort_key() < upper.sort_key());
+    }
+
+    #[test]
+    fn touching_intervals_do_not_match() {
+        let subs = Regions1D::from_intervals(&[Interval::new(0.0, 5.0)]);
+        let upds = Regions1D::from_intervals(&[Interval::new(5.0, 9.0)]);
+        let mut sink = VecSink::default();
+        match_seq::<BitSet>(&subs, &upds, &mut sink);
+        assert!(sink.pairs.is_empty());
+    }
+
+    #[test]
+    fn figure5_style_sweep() {
+        // Overlapping chain: s0=[0,4), s1=[2,6); u0=[3,5).
+        let subs = Regions1D::from_intervals(&[
+            Interval::new(0.0, 4.0),
+            Interval::new(2.0, 6.0),
+        ]);
+        let upds = Regions1D::from_intervals(&[Interval::new(3.0, 5.0)]);
+        let mut sink = VecSink::default();
+        match_seq::<BitSet>(&subs, &upds, &mut sink);
+        assert_eq!(canonicalize(sink.pairs), vec![(0, 0), (1, 0)]);
+    }
+
+    #[test]
+    fn all_set_impls_match_bfm_property() {
+        crate::bench::prop::prop_check("sbm-vs-bfm", 0x5B, |rng| {
+            let n = 1 + rng.below(150) as usize;
+            let m = 1 + rng.below(150) as usize;
+            // Mix of long and short intervals; occasional duplicates.
+            let space = 100.0;
+            let subs = { let l = rng.uniform(0.5, 30.0); random_regions_1d(rng, n, space, l) };
+            let upds = { let l = rng.uniform(0.5, 30.0); random_regions_1d(rng, m, space, l) };
+            let mut want = VecSink::default();
+            bfm::match_seq(&subs, &upds, &mut want);
+            let want = canonicalize(want.pairs);
+            for set_impl in SetImpl::ALL {
+                let got: VecSink = match_seq_with(set_impl, &subs, &upds);
+                let got = canonicalize(got.pairs);
+                if got != want {
+                    return Err(format!(
+                        "{}: {} pairs vs bfm {}",
+                        set_impl.name(),
+                        got.len(),
+                        want.len()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn identical_endpoints_stress() {
+        // Many regions sharing exact endpoints.
+        let iv = Interval::new(1.0, 2.0);
+        let subs = Regions1D::from_intervals(&[iv; 8]);
+        let upds = Regions1D::from_intervals(&[iv; 8]);
+        let mut sink = VecSink::default();
+        match_seq::<BitSet>(&subs, &upds, &mut sink);
+        assert_eq!(sink.pairs.len(), 64);
+        crate::core::sink::assert_exactly_once(&canonicalize(sink.pairs)).unwrap();
+    }
+}

@@ -1,0 +1,89 @@
+//! Mini property-testing harness (offline replacement for `proptest`).
+//!
+//! Runs a seeded generator/check loop; on failure it reports the exact
+//! case seed so the case can be replayed with
+//! `DDM_PROP_SEED=<seed> cargo test <name>`. Case count scales with
+//! `DDM_PROP_CASES` (default 64).
+
+use crate::prng::Rng;
+
+/// Number of cases to run (env-overridable).
+pub fn cases() -> u64 {
+    std::env::var("DDM_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `check(rng)` for `cases()` seeds derived from `base_seed`.
+///
+/// `check` returns `Err(description)` to fail the property; the failure
+/// message includes the replay seed.
+pub fn prop_check<F>(name: &str, base_seed: u64, check: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    // Replay mode: a single explicit seed.
+    if let Ok(seed) = std::env::var("DDM_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("DDM_PROP_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = check(&mut rng) {
+            panic!("property '{name}' failed under replay seed {seed}: {msg}");
+        }
+        return;
+    }
+    let mut seeder = Rng::new(base_seed);
+    for case in 0..cases() {
+        let seed = seeder.next_u64();
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = check(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (replay: DDM_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert-eq helper producing a `Result` for use inside properties.
+pub fn expect_eq<T: PartialEq + std::fmt::Debug>(
+    got: &T,
+    want: &T,
+    what: &str,
+) -> Result<(), String> {
+    if got == want {
+        Ok(())
+    } else {
+        Err(format!("{what}: got {got:?}, want {want:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check("tautology", 1, |rng| {
+            let x = rng.below(100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay: DDM_PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        prop_check("always-fails", 2, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn expect_eq_formats() {
+        assert!(expect_eq(&1, &1, "x").is_ok());
+        let e = expect_eq(&1, &2, "x").unwrap_err();
+        assert!(e.contains("got 1"));
+    }
+}

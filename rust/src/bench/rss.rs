@@ -1,0 +1,72 @@
+//! Memory metrics (paper Fig. 13: peak resident set size, VmHWM).
+
+/// Read a field (kB) from /proc/self/status.
+fn proc_status_kb(field: &str) -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(field) {
+            let rest = rest.trim_start_matches(':').trim();
+            let kb: u64 = rest.split_whitespace().next()?.parse().ok()?;
+            return Some(kb);
+        }
+    }
+    None
+}
+
+/// Peak resident set size in bytes (VmHWM — what the paper reports).
+pub fn peak_rss_bytes() -> Option<u64> {
+    proc_status_kb("VmHWM").map(|kb| kb * 1024)
+}
+
+/// Current resident set size in bytes (VmRSS).
+pub fn current_rss_bytes() -> Option<u64> {
+    proc_status_kb("VmRSS").map(|kb| kb * 1024)
+}
+
+/// Human-readable bytes.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_readable_on_linux() {
+        let peak = peak_rss_bytes().expect("VmHWM readable");
+        let cur = current_rss_bytes().expect("VmRSS readable");
+        assert!(peak > 0 && cur > 0);
+        assert!(peak >= cur / 2, "peak {peak} vs current {cur}");
+    }
+
+    #[test]
+    fn peak_grows_with_allocation() {
+        let before = peak_rss_bytes().unwrap();
+        let v: Vec<u8> = vec![1; 64 << 20]; // 64 MiB touched
+        std::hint::black_box(&v);
+        let after = peak_rss_bytes().unwrap();
+        assert!(
+            after >= before + (32 << 20),
+            "peak rss did not grow: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(7 * 1024 * 1024 * 1024), "7.00 GiB");
+    }
+}

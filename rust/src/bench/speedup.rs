@@ -1,0 +1,200 @@
+//! Work-span speedup model (DESIGN.md §3, substitution 1).
+//!
+//! The paper measures wall-clock on a dual-socket 16-core (32 HT
+//! threads) Xeon. This reproduction testbed has **one** physical core,
+//! so wall-clock under P-thread oversubscription measures the OS
+//! scheduler, not the algorithm. Instead the [`crate::exec::ThreadPool`]
+//! measures each worker's **CPU time** (immune to preemption), and this
+//! module converts a logged run into the wall-clock a P-core machine
+//! would see:
+//!
+//! ```text
+//! WCT(P) = Σ_regions max( max_p busy_p , Σ_p busy_p / eff(P) )
+//!        + serial + fork_join_cost · #regions
+//! ```
+//!
+//! `eff(P)` models the paper's Hyper-Threading knee: beyond the
+//! physical core count C the extra "virtual" cores only add ~22%
+//! throughput (the 16–28% band the paper cites from Intel [44]).
+//!
+//! The model intentionally preserves the *shapes* of Figs. 9/10/14 —
+//! embarrassingly-parallel BFM scales ~linearly; SBM saturates because
+//! of its serial master step and sort span; the HT region bends — while
+//! absolute numbers are tied to this host's single-core throughput.
+
+use std::time::Duration;
+
+/// A logged parallel execution (filled by `ThreadPool` logging).
+#[derive(Debug, Clone, Default)]
+pub struct CostLog {
+    /// Per-region, per-worker CPU busy times.
+    pub regions: Vec<Vec<Duration>>,
+    /// CPU time spent in master-only (serial) sections.
+    pub serial: Duration,
+}
+
+impl CostLog {
+    pub fn total_work(&self) -> Duration {
+        let par: Duration = self
+            .regions
+            .iter()
+            .flat_map(|r| r.iter())
+            .sum();
+        par + self.serial
+    }
+}
+
+/// Model parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelOpts {
+    /// Physical cores of the modeled machine (paper Table 1: 16).
+    pub physical_cores: usize,
+    /// Max logical CPUs (paper: 32). P beyond this is not modeled.
+    pub logical_cpus: usize,
+    /// Relative throughput of one HT sibling pair vs one core (~1.22).
+    pub ht_throughput: f64,
+    /// Fork-join cost per parallel region (calibrated or default 10 µs).
+    pub fork_join: Duration,
+}
+
+impl Default for ModelOpts {
+    /// Mirror of the paper's testbed (Table 1).
+    fn default() -> Self {
+        ModelOpts {
+            physical_cores: 16,
+            logical_cpus: 32,
+            ht_throughput: 1.22,
+            fork_join: Duration::from_micros(10),
+        }
+    }
+}
+
+impl ModelOpts {
+    /// Effective core count available to a P-thread region.
+    pub fn effective_cores(&self, p: usize) -> f64 {
+        let c = self.physical_cores as f64;
+        let p = p.min(self.logical_cpus) as f64;
+        if p <= c {
+            p
+        } else {
+            // c cores fully used; (p - c) of them run a second HT
+            // thread, each such pair delivering ht_throughput total.
+            let paired = p - c;
+            (c - paired) + paired * self.ht_throughput
+        }
+    }
+
+    /// Modeled wall-clock for a logged run at `p` threads.
+    pub fn modeled_wct(&self, log: &CostLog, p: usize) -> f64 {
+        let mut total = log.serial.as_secs_f64();
+        let eff = self.effective_cores(p);
+        for region in &log.regions {
+            let max_busy = region
+                .iter()
+                .map(|d| d.as_secs_f64())
+                .fold(0.0f64, f64::max);
+            let sum_busy: f64 = region.iter().map(|d| d.as_secs_f64()).sum();
+            // A region cannot finish before its critical path (max) nor
+            // before the machine has executed all its work (sum/eff).
+            total += max_busy.max(sum_busy / eff) + self.fork_join.as_secs_f64();
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn secs(s: f64) -> Duration {
+        Duration::from_secs_f64(s)
+    }
+
+    fn balanced_log(p: usize, work: f64) -> CostLog {
+        CostLog {
+            regions: vec![(0..p).map(|_| secs(work / p as f64)).collect()],
+            serial: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn perfectly_balanced_scales_linearly() {
+        let m = ModelOpts {
+            fork_join: Duration::ZERO,
+            ..ModelOpts::default()
+        };
+        let t1 = m.modeled_wct(&balanced_log(1, 16.0), 1);
+        let t16 = m.modeled_wct(&balanced_log(16, 16.0), 16);
+        assert!((t1 / t16 - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ht_region_bends() {
+        let m = ModelOpts {
+            fork_join: Duration::ZERO,
+            ..ModelOpts::default()
+        };
+        let t16 = m.modeled_wct(&balanced_log(16, 32.0), 16);
+        let t32 = m.modeled_wct(&balanced_log(32, 32.0), 32);
+        let s = t16 / t32;
+        // 32 threads on 16 HT cores: eff = 16 * 1.22 = 19.52 -> speedup
+        // over 16 threads is 1.22, far from 2.0.
+        assert!((s - 1.22).abs() < 1e-6, "got {s}");
+    }
+
+    #[test]
+    fn serial_fraction_limits_speedup() {
+        let m = ModelOpts {
+            fork_join: Duration::ZERO,
+            ..ModelOpts::default()
+        };
+        let mk = |p: usize| CostLog {
+            serial: secs(1.0),
+            regions: vec![(0..p).map(|_| secs(1.0 / p as f64)).collect()],
+        };
+        let t1 = m.modeled_wct(&mk(1), 1);
+        let t16 = m.modeled_wct(&mk(16), 16);
+        // Amdahl: 2.0 / (1 + 1/16) ≈ 1.88
+        assert!((t1 / t16 - 2.0 / (1.0 + 1.0 / 16.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn imbalance_limits_speedup() {
+        let m = ModelOpts {
+            fork_join: Duration::ZERO,
+            ..ModelOpts::default()
+        };
+        // One worker got all the work.
+        let log = CostLog {
+            regions: vec![vec![secs(1.0), secs(0.0), secs(0.0), secs(0.0)]],
+            serial: Duration::ZERO,
+        };
+        assert!((m.modeled_wct(&log, 4) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fork_join_counts_per_region() {
+        let m = ModelOpts {
+            fork_join: Duration::from_millis(1),
+            ..ModelOpts::default()
+        };
+        let log = CostLog {
+            regions: vec![vec![secs(0.0)]; 5],
+            serial: Duration::ZERO,
+        };
+        assert!((m.modeled_wct(&log, 1) - 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn effective_cores_monotone() {
+        let m = ModelOpts::default();
+        let mut prev = 0.0;
+        for p in 1..=32 {
+            let e = m.effective_cores(p);
+            assert!(e >= prev);
+            prev = e;
+        }
+        assert_eq!(m.effective_cores(16), 16.0);
+        assert!((m.effective_cores(32) - 16.0 * 1.22).abs() < 1e-9);
+    }
+}

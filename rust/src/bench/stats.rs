@@ -1,0 +1,126 @@
+//! Summary statistics for repeated measurements.
+
+/// Mean, standard deviation, min/max and a 95% confidence half-width
+/// (Student t for small samples, the paper's "50 independent runs"
+/// methodology scaled down).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub min: f64,
+    pub max: f64,
+    pub ci95: f64,
+}
+
+/// Two-sided 95% Student-t quantiles for df = 1..=30 (df > 30 ≈ 1.96).
+const T95: [f64; 30] = [
+    12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228,
+    2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086,
+    2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+];
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    let n = xs.len();
+    if n == 0 {
+        return Summary {
+            n: 0,
+            mean: 0.0,
+            sd: 0.0,
+            min: 0.0,
+            max: 0.0,
+            ci95: 0.0,
+        };
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let sd = var.sqrt();
+    let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &x in xs {
+        min = min.min(x);
+        max = max.max(x);
+    }
+    let ci95 = if n > 1 {
+        let t = T95.get(n - 2).copied().unwrap_or(1.96);
+        t * sd / (n as f64).sqrt()
+    } else {
+        0.0
+    };
+    Summary {
+        n,
+        mean,
+        sd,
+        min,
+        max,
+        ci95,
+    }
+}
+
+/// Relative speedup S(P) = T(1)/T(P) (paper §5).
+pub fn speedup(t1: f64, tp: f64) -> f64 {
+    if tp > 0.0 {
+        t1 / tp
+    } else {
+        f64::NAN
+    }
+}
+
+/// Format seconds with an adaptive unit (s / ms / µs).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constants() {
+        let s = summarize(&[2.0, 2.0, 2.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.sd, 0.0);
+        assert_eq!(s.ci95, 0.0);
+        assert_eq!((s.min, s.max), (2.0, 2.0));
+    }
+
+    #[test]
+    fn summary_known_values() {
+        // sample sd of [1,2,3,4] = sqrt(5/3)
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.sd - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        // t(df=3) = 3.182
+        assert!((s.ci95 - 3.182 * s.sd / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(summarize(&[]).n, 0);
+        let s = summarize(&[5.0]);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.ci95, 0.0);
+    }
+
+    #[test]
+    fn speedup_basic() {
+        assert_eq!(speedup(10.0, 2.0), 5.0);
+        assert!(speedup(1.0, 0.0).is_nan());
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+        assert_eq!(fmt_secs(0.0025), "2.500 ms");
+        assert_eq!(fmt_secs(0.0000025), "2.5 µs");
+    }
+}

@@ -1,0 +1,124 @@
+//! Host description (the paper's Table 1 analog, printed by benches).
+
+use once_cell::sync::Lazy;
+
+#[derive(Debug, Clone)]
+pub struct SysInfo {
+    pub cpu_model: String,
+    pub physical_cores: usize,
+    pub logical_cpus: usize,
+    pub ram_gb: f64,
+    pub os: String,
+}
+
+fn read_cpuinfo() -> (String, usize, usize) {
+    let text = std::fs::read_to_string("/proc/cpuinfo").unwrap_or_default();
+    let mut model = String::from("unknown");
+    let mut logical = 0usize;
+    let mut cores_per_socket = 0usize;
+    let mut sockets = std::collections::HashSet::new();
+    for line in text.lines() {
+        let mut kv = line.splitn(2, ':');
+        let k = kv.next().unwrap_or("").trim();
+        let v = kv.next().unwrap_or("").trim();
+        match k {
+            "model name" => {
+                if model == "unknown" {
+                    model = v.to_string();
+                }
+                logical += 1;
+            }
+            "cpu cores" => cores_per_socket = v.parse().unwrap_or(0),
+            "physical id" => {
+                sockets.insert(v.to_string());
+            }
+            _ => {}
+        }
+    }
+    let physical = if cores_per_socket > 0 {
+        cores_per_socket * sockets.len().max(1)
+    } else {
+        logical.max(1)
+    };
+    (model, physical.max(1), logical.max(1))
+}
+
+fn read_ram_gb() -> f64 {
+    let text = std::fs::read_to_string("/proc/meminfo").unwrap_or_default();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("MemTotal:") {
+            if let Some(kb) = rest.trim().split_whitespace().next() {
+                if let Ok(kb) = kb.parse::<f64>() {
+                    return kb / (1024.0 * 1024.0);
+                }
+            }
+        }
+    }
+    0.0
+}
+
+static SYSINFO: Lazy<SysInfo> = Lazy::new(|| {
+    let (cpu_model, physical_cores, logical_cpus) = read_cpuinfo();
+    SysInfo {
+        cpu_model,
+        physical_cores,
+        logical_cpus,
+        ram_gb: read_ram_gb(),
+        os: std::fs::read_to_string("/etc/os-release")
+            .ok()
+            .and_then(|t| {
+                t.lines()
+                    .find(|l| l.starts_with("PRETTY_NAME="))
+                    .map(|l| l.trim_start_matches("PRETTY_NAME=").trim_matches('"').to_string())
+            })
+            .unwrap_or_else(|| "linux".to_string()),
+    }
+});
+
+pub fn get() -> &'static SysInfo {
+    &SYSINFO
+}
+
+/// One-line host summary for bench banners.
+pub fn summary_line() -> String {
+    let s = get();
+    format!(
+        "{} | {} physical / {} logical cpus | {:.1} GB RAM | {}",
+        s.cpu_model, s.physical_cores, s.logical_cpus, s.ram_gb, s.os
+    )
+}
+
+/// The paper's Table 1 as a rendered table for EXPERIMENTS.md.
+pub fn table1() -> super::table::Table {
+    let s = get();
+    let mut t = super::table::Table::new(vec!["field", "paper (Table 1)", "this host"]);
+    t.row(vec!["CPU", "Intel Xeon E5-2640", s.cpu_model.as_str()]);
+    t.row(vec!["Processors", "2", "1"]);
+    let pc = s.physical_cores.to_string();
+    t.row(vec!["Total cores", "16", pc.as_str()]);
+    let lc = s.logical_cpus.to_string();
+    t.row(vec!["Logical CPUs", "32 (HT)", lc.as_str()]);
+    let ram = format!("{:.0} GB", s.ram_gb);
+    t.row(vec!["RAM", "128 GB", ram.as_str()]);
+    t.row(vec!["OS", "Ubuntu 16.04.3 LTS", s.os.as_str()]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn sysinfo_is_populated() {
+        let s = super::get();
+        assert!(s.logical_cpus >= 1);
+        assert!(s.physical_cores >= 1);
+        assert!(s.ram_gb > 0.0);
+        assert!(!super::summary_line().is_empty());
+    }
+
+    #[test]
+    fn table1_renders() {
+        let t = super::table1();
+        let s = t.render();
+        assert!(s.contains("Xeon E5-2640"));
+    }
+}

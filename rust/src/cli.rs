@@ -1,0 +1,177 @@
+//! Minimal command-line parsing (offline replacement for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positionals, and
+//! typed getters with defaults. Used by the `ddm` binary, the examples
+//! and every bench harness.
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — does NOT include argv[0].
+    pub fn from_iter<I, S>(iter: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut it = iter.into_iter().map(Into::into).peekable();
+        let mut out = Args::default();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` end-of-options marker
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    // Lookahead: `--key value` unless next looks like an option.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.opts.insert(body.to_string(), v);
+                        }
+                        _ => out.flags.push(body.to_string()),
+                    }
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process arguments (skips argv[0]).
+    pub fn from_env() -> Self {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.get(name).is_some_and(|v| v == "true")
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    /// Typed option with default; panics with a readable message on a
+    /// malformed value (CLI surface, so fail fast is correct).
+    pub fn opt<T>(&self, name: &str, default: T) -> T
+    where
+        T: FromStr,
+        T::Err: std::fmt::Display,
+    {
+        match self.opts.get(name) {
+            None => default,
+            Some(raw) => raw
+                .parse()
+                .unwrap_or_else(|e| panic!("--{name}={raw}: {e}")),
+        }
+    }
+
+    /// Scientific-notation-friendly usize (`--n 1e6`).
+    pub fn size(&self, name: &str, default: usize) -> usize {
+        match self.opts.get(name) {
+            None => default,
+            Some(raw) => parse_size(raw).unwrap_or_else(|| panic!("--{name}={raw}: bad size")),
+        }
+    }
+
+    /// Comma-separated typed list (`--threads 1,2,4,8`).
+    pub fn list<T>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: FromStr + Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.opts.get(name) {
+            None => default.to_vec(),
+            Some(raw) => raw
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().unwrap_or_else(|e| panic!("--{name}: {e}")))
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Parse "1000", "1e6", "2.5e3", "10k", "3M" into usize.
+pub fn parse_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    if let Ok(v) = s.parse::<usize>() {
+        return Some(v);
+    }
+    let (num, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1_000.0),
+        'm' | 'M' => (&s[..s.len() - 1], 1_000_000.0),
+        'g' | 'G' => (&s[..s.len() - 1], 1_000_000_000.0),
+        _ => (s, 1.0),
+    };
+    let v: f64 = num.parse().ok()?;
+    if v < 0.0 || !v.is_finite() {
+        return None;
+    }
+    Some((v * mult).round() as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed_styles() {
+        // NOTE: a bare `--flag` followed by a non-option token is
+        // parsed as `--flag <value>` (documented lookahead rule); put
+        // flags last or use `--flag=true` when mixing with positionals.
+        let a = Args::from_iter([
+            "pos1", "--n", "1e6", "--alpha=100", "--threads", "1,2,4", "--verbose",
+        ]);
+        assert_eq!(a.size("n", 0), 1_000_000);
+        assert_eq!(a.opt::<f64>("alpha", 0.0), 100.0);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+        assert_eq!(a.list::<usize>("threads", &[]), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::from_iter(["--x=1"]);
+        assert_eq!(a.opt::<u32>("missing", 7), 7);
+        assert!(!a.flag("quick"));
+        assert_eq!(a.list::<u32>("l", &[3, 4]), vec![3, 4]);
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = Args::from_iter(["--quick", "--n", "10"]);
+        assert!(a.flag("quick"));
+        assert_eq!(a.size("n", 0), 10);
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = Args::from_iter(["--a=1", "--", "--not-an-opt"]);
+        assert_eq!(a.positional(), &["--not-an-opt".to_string()]);
+    }
+
+    #[test]
+    fn size_suffixes() {
+        assert_eq!(parse_size("10k"), Some(10_000));
+        assert_eq!(parse_size("2M"), Some(2_000_000));
+        assert_eq!(parse_size("1e8"), Some(100_000_000));
+        assert_eq!(parse_size("2.5e3"), Some(2_500));
+        assert_eq!(parse_size("abc"), None);
+        assert_eq!(parse_size("-5"), None);
+    }
+}

@@ -1,0 +1,285 @@
+//! Configuration files for the coordinator/launcher (serde-free).
+//!
+//! A pragmatic TOML subset: `[section]` headers, `key = value` pairs,
+//! `#` comments, strings (quoted or bare), integers, floats, booleans,
+//! and flat arrays `[a, b, c]`. This covers the launcher configs in
+//! `examples/` and the `ddm serve --config` path.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::List(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// A parsed config: `section.key -> Value` (top-level keys live in the
+/// "" section).
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<(String, String), Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn parse_scalar(raw: &str) -> Value {
+    let raw = raw.trim();
+    if let Some(stripped) = raw.strip_prefix('"').and_then(|r| r.strip_suffix('"')) {
+        return Value::Str(stripped.to_string());
+    }
+    match raw {
+        "true" => return Value::Bool(true),
+        "false" => return Value::Bool(false),
+        _ => {}
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Value::Int(i);
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Value::Float(f);
+    }
+    Value::Str(raw.to_string())
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (idx, raw_line) in text.lines().enumerate() {
+            let line = raw_line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| ParseError {
+                line: idx + 1,
+                msg: format!("expected `key = value`, got `{line}`"),
+            })?;
+            let key = key.trim().to_string();
+            let val = val.trim();
+            let value = if let Some(body) =
+                val.strip_prefix('[').and_then(|v| v.strip_suffix(']'))
+            {
+                Value::List(
+                    body.split(',')
+                        .map(str::trim)
+                        .filter(|s| !s.is_empty())
+                        .map(parse_scalar)
+                        .collect(),
+                )
+            } else {
+                parse_scalar(val)
+            };
+            cfg.values.insert((section.clone(), key), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key)
+            .and_then(Value::as_float)
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.values.keys().map(|(s, _)| s.as_str()).collect();
+        v.dedup();
+        v
+    }
+}
+
+/// Minimal JSON writer for machine-readable bench results (serde-free).
+pub mod json {
+    use std::fmt::Write;
+
+    pub fn escape(s: &str) -> String {
+        let mut out = String::with_capacity(s.len() + 2);
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(out, "\\u{:04x}", c as u32);
+                }
+                c => out.push(c),
+            }
+        }
+        out
+    }
+
+    /// Render an object from key/raw-value pairs (values pre-rendered).
+    pub fn object(fields: &[(&str, String)]) -> String {
+        let body: Vec<String> = fields
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{}", escape(k), v))
+            .collect();
+        format!("{{{}}}", body.join(","))
+    }
+
+    pub fn string(s: &str) -> String {
+        format!("\"{}\"", escape(s))
+    }
+
+    pub fn num(x: f64) -> String {
+        if x.is_finite() {
+            format!("{x}")
+        } else {
+            "null".to_string()
+        }
+    }
+
+    pub fn array(items: &[String]) -> String {
+        format!("[{}]", items.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let text = r#"
+# top comment
+name = "ddm-service"
+threads = 8
+[match]
+algo = psbm        # bare string
+alpha = 100.5
+verbose = true
+cells = [10, 20, 30]
+"#;
+        let cfg = Config::parse(text).unwrap();
+        assert_eq!(cfg.str_or("", "name", ""), "ddm-service");
+        assert_eq!(cfg.int_or("", "threads", 0), 8);
+        assert_eq!(cfg.str_or("match", "algo", ""), "psbm");
+        assert_eq!(cfg.float_or("match", "alpha", 0.0), 100.5);
+        assert!(cfg.bool_or("match", "verbose", false));
+        let cells = cfg.get("match", "cells").unwrap().as_list().unwrap();
+        assert_eq!(cells.len(), 3);
+        assert_eq!(cells[1].as_int(), Some(20));
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.int_or("x", "y", 42), 42);
+        assert!(cfg.get("x", "y").is_none());
+    }
+
+    #[test]
+    fn bad_line_is_an_error() {
+        let err = Config::parse("not a kv line").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let cfg = Config::parse("x = 3").unwrap();
+        assert_eq!(cfg.float_or("", "x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn json_writer_escapes() {
+        let s = json::object(&[
+            ("name", json::string("a\"b")),
+            ("v", json::num(1.5)),
+            ("xs", json::array(&[json::num(1.0), json::num(2.0)])),
+        ]);
+        assert_eq!(s, r#"{"name":"a\"b","v":1.5,"xs":[1,2]}"#);
+    }
+}

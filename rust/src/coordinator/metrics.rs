@@ -1,0 +1,89 @@
+//! Lightweight service metrics (counters + latency accumulators).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Latency accumulator: count, total, max (enough for service tables
+/// without a full histogram dependency).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyStat {
+    pub count: u64,
+    pub total: Duration,
+    pub max: Duration,
+}
+
+impl LatencyStat {
+    pub fn record(&mut self, d: Duration) {
+        self.count += 1;
+        self.total += d;
+        self.max = self.max.max(d);
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.count as u32
+        }
+    }
+}
+
+/// Named counters + latencies.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub counters: BTreeMap<&'static str, u64>,
+    pub latencies: BTreeMap<&'static str, LatencyStat>,
+}
+
+impl Metrics {
+    pub fn inc(&mut self, name: &'static str, by: u64) {
+        *self.counters.entry(name).or_default() += by;
+    }
+
+    pub fn time(&mut self, name: &'static str, d: Duration) {
+        self.latencies.entry(name).or_default().record(d);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Render as an aligned table.
+    pub fn table(&self) -> crate::bench::table::Table {
+        let mut t = crate::bench::table::Table::new(vec![
+            "metric", "count", "mean", "max",
+        ]);
+        for (name, v) in &self.counters {
+            t.row(vec![name.to_string(), v.to_string(), "-".into(), "-".into()]);
+        }
+        for (name, l) in &self.latencies {
+            t.row(vec![
+                name.to_string(),
+                l.count.to_string(),
+                crate::bench::stats::fmt_secs(l.mean().as_secs_f64()),
+                crate::bench::stats::fmt_secs(l.max.as_secs_f64()),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_latencies() {
+        let mut m = Metrics::default();
+        m.inc("publishes", 1);
+        m.inc("publishes", 2);
+        assert_eq!(m.counter("publishes"), 3);
+        m.time("publish", Duration::from_millis(2));
+        m.time("publish", Duration::from_millis(4));
+        let l = m.latencies["publish"];
+        assert_eq!(l.count, 2);
+        assert_eq!(l.mean(), Duration::from_millis(3));
+        assert_eq!(l.max, Duration::from_millis(4));
+        assert!(m.table().render().contains("publishes"));
+    }
+}

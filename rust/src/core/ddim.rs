@@ -1,0 +1,166 @@
+//! d-dimensional reduction (paper §2, footnote 1).
+//!
+//! Two d-rectangles intersect iff their projections intersect on every
+//! dimension, so any 1-D matcher extends to d dimensions by running it
+//! once per dimension and intersecting the partial result sets. The
+//! paper notes the combination step must be O(f(n, m)) with hash-based
+//! sets — we intersect via a `HashSet<u64>` of packed pairs, giving
+//! O(K₀ + K₁ + … + K_{d-1}) expected combine time.
+
+use std::collections::HashSet;
+
+use super::region::{Regions1D, RegionsNd};
+use super::sink::{MatchSink, VecSink};
+
+#[inline]
+fn pack(s: u32, u: u32) -> u64 {
+    (s as u64) << 32 | u as u64
+}
+
+#[inline]
+fn unpack(p: u64) -> (u32, u32) {
+    ((p >> 32) as u32, p as u32)
+}
+
+/// Extend a 1-D matcher to d dimensions.
+///
+/// `match1d(s_proj, u_proj, sink)` must report every intersecting pair
+/// of the 1-D projections exactly once.
+pub fn match_nd<F>(
+    subs: &RegionsNd,
+    upds: &RegionsNd,
+    match1d: F,
+    sink: &mut dyn MatchSink,
+) where
+    F: Fn(&Regions1D, &Regions1D, &mut VecSink),
+{
+    assert_eq!(subs.d(), upds.d(), "dimension mismatch");
+    let d = subs.d();
+    if d == 1 {
+        let mut v = VecSink::default();
+        match1d(subs.project(0), upds.project(0), &mut v);
+        for (s, u) in v.pairs {
+            sink.report(s, u);
+        }
+        return;
+    }
+
+    // Dimension 0 seeds the candidate set…
+    let mut v = VecSink::default();
+    match1d(subs.project(0), upds.project(0), &mut v);
+    let mut candidates: HashSet<u64> =
+        v.pairs.iter().map(|&(s, u)| pack(s, u)).collect();
+
+    // …and each further dimension filters it.
+    for k in 1..d {
+        if candidates.is_empty() {
+            return;
+        }
+        let mut vk = VecSink::default();
+        match1d(subs.project(k), upds.project(k), &mut vk);
+        let dim_pairs: HashSet<u64> =
+            vk.pairs.iter().map(|&(s, u)| pack(s, u)).collect();
+        candidates.retain(|p| dim_pairs.contains(p));
+    }
+
+    let mut out: Vec<u64> = candidates.into_iter().collect();
+    out.sort_unstable(); // deterministic report order
+    for p in out {
+        let (s, u) = unpack(p);
+        sink.report(s, u);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::interval::Interval;
+    use crate::core::sink::{canonicalize, VecSink};
+
+    /// Trivial 1-D matcher oracle (BFM is defined in algos; core tests
+    /// stay dependency-free with a local quadratic loop).
+    fn bf1d(s: &Regions1D, u: &Regions1D, sink: &mut VecSink) {
+        for i in 0..s.len() {
+            for j in 0..u.len() {
+                if s.get(i).intersects(&u.get(j)) {
+                    sink.report(i as u32, j as u32);
+                }
+            }
+        }
+    }
+
+    fn direct_nd(subs: &RegionsNd, upds: &RegionsNd) -> Vec<(u32, u32)> {
+        let mut out = Vec::new();
+        for i in 0..subs.len() {
+            for j in 0..upds.len() {
+                if subs.rects_intersect(i, upds, j) {
+                    out.push((i as u32, j as u32));
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_direct_nd_on_random_rects() {
+        crate::bench::prop::prop_check("ddim-vs-direct", 0xD1, |rng| {
+            let d = 1 + rng.below(3) as usize;
+            let n = 1 + rng.below(30) as usize;
+            let m = 1 + rng.below(30) as usize;
+            let mut subs = RegionsNd::new(d);
+            let mut upds = RegionsNd::new(d);
+            for _ in 0..n {
+                let rect: Vec<Interval> = (0..d)
+                    .map(|_| {
+                        let lo = rng.uniform(0.0, 50.0);
+                        Interval::new(lo, lo + rng.uniform(0.0, 20.0))
+                    })
+                    .collect();
+                subs.push(&rect);
+            }
+            for _ in 0..m {
+                let rect: Vec<Interval> = (0..d)
+                    .map(|_| {
+                        let lo = rng.uniform(0.0, 50.0);
+                        Interval::new(lo, lo + rng.uniform(0.0, 20.0))
+                    })
+                    .collect();
+                upds.push(&rect);
+            }
+            let mut sink = VecSink::default();
+            match_nd(&subs, &upds, bf1d, &mut sink);
+            let got = canonicalize(sink.pairs);
+            let want = canonicalize(direct_nd(&subs, &upds));
+            crate::bench::prop::expect_eq(&got, &want, "pair sets")
+        });
+    }
+
+    #[test]
+    fn figure3_example() {
+        // Paper Fig. 3: S1..S3, U1..U2 in d=2; expected overlaps
+        // {(S1,U1),(S2,U2),(S3,U1),(S3,U2)}. Coordinates chosen to
+        // reproduce the figure's topology.
+        let mut subs = RegionsNd::new(2);
+        subs.push(&[Interval::new(0.0, 4.0), Interval::new(4.0, 9.0)]); // S1
+        subs.push(&[Interval::new(7.0, 12.0), Interval::new(0.0, 3.0)]); // S2
+        subs.push(&[Interval::new(2.0, 10.0), Interval::new(1.0, 6.0)]); // S3
+        let mut upds = RegionsNd::new(2);
+        upds.push(&[Interval::new(1.0, 5.0), Interval::new(2.0, 7.0)]); // U1
+        upds.push(&[Interval::new(6.0, 11.0), Interval::new(2.0, 5.0)]); // U2
+        let mut sink = VecSink::default();
+        match_nd(&subs, &upds, bf1d, &mut sink);
+        assert_eq!(
+            canonicalize(sink.pairs),
+            vec![(0, 0), (1, 1), (2, 0), (2, 1)]
+        );
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let subs = RegionsNd::new(2);
+        let upds = RegionsNd::new(2);
+        let mut sink = VecSink::default();
+        match_nd(&subs, &upds, bf1d, &mut sink);
+        assert!(sink.pairs.is_empty());
+    }
+}

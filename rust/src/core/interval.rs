@@ -1,0 +1,114 @@
+//! Half-open 1-D intervals and the paper's Intersect-1D (Algorithm 1).
+
+/// A half-open interval `[lo, hi)` on one dimension.
+///
+/// The paper's Algorithm 1 tests `x.lo < y.hi && y.lo < x.hi`
+/// (non-empty intervals assumed); HLA ranges are half-open
+/// `[lower bound, upper bound)`, which is what the strict comparisons
+/// implement: touching intervals do **not** intersect.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Interval {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Interval {
+    #[inline]
+    pub fn new(lo: f64, hi: f64) -> Self {
+        debug_assert!(lo <= hi, "interval [{lo}, {hi}) has lo > hi");
+        Self { lo, hi }
+    }
+
+    /// Paper Algorithm 1: Intersect-1D.
+    #[inline]
+    pub fn intersects(&self, other: &Interval) -> bool {
+        self.lo < other.hi && other.lo < self.hi
+    }
+
+    #[inline]
+    pub fn len(&self) -> f64 {
+        self.hi - self.lo
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.lo >= self.hi
+    }
+
+    #[inline]
+    pub fn contains_point(&self, x: f64) -> bool {
+        self.lo <= x && x < self.hi
+    }
+
+    /// Smallest interval covering both (used by GBM's bounding box).
+    #[inline]
+    pub fn hull(&self, other: &Interval) -> Interval {
+        Interval {
+            lo: self.lo.min(other.lo),
+            hi: self.hi.max(other.hi),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlapping() {
+        assert!(Interval::new(0.0, 2.0).intersects(&Interval::new(1.0, 3.0)));
+        assert!(Interval::new(1.0, 3.0).intersects(&Interval::new(0.0, 2.0)));
+    }
+
+    #[test]
+    fn touching_half_open_do_not_intersect() {
+        assert!(!Interval::new(0.0, 1.0).intersects(&Interval::new(1.0, 2.0)));
+        assert!(!Interval::new(1.0, 2.0).intersects(&Interval::new(0.0, 1.0)));
+    }
+
+    #[test]
+    fn nested_intersect() {
+        assert!(Interval::new(0.0, 10.0).intersects(&Interval::new(4.0, 5.0)));
+        assert!(Interval::new(4.0, 5.0).intersects(&Interval::new(0.0, 10.0)));
+    }
+
+    #[test]
+    fn identical_intersect() {
+        let a = Interval::new(2.0, 4.0);
+        assert!(a.intersects(&a));
+    }
+
+    #[test]
+    fn disjoint_do_not_intersect() {
+        assert!(!Interval::new(0.0, 1.0).intersects(&Interval::new(5.0, 6.0)));
+    }
+
+    #[test]
+    fn intersects_is_symmetric_property() {
+        crate::bench::prop::prop_check("intersect-symmetry", 0xA11CE, |rng| {
+            let mk = |rng: &mut crate::prng::Rng| {
+                let lo = rng.uniform(0.0, 100.0);
+                Interval::new(lo, lo + rng.uniform(0.0, 10.0))
+            };
+            let (a, b) = (mk(rng), mk(rng));
+            if a.intersects(&b) == b.intersects(&a) {
+                Ok(())
+            } else {
+                Err(format!("{a:?} vs {b:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn point_containment_half_open() {
+        let i = Interval::new(1.0, 2.0);
+        assert!(i.contains_point(1.0));
+        assert!(!i.contains_point(2.0));
+    }
+
+    #[test]
+    fn hull_covers_both() {
+        let h = Interval::new(0.0, 1.0).hull(&Interval::new(5.0, 6.0));
+        assert_eq!(h, Interval::new(0.0, 6.0));
+    }
+}

@@ -1,0 +1,14 @@
+//! Problem-domain types: intervals, d-rectangles, region sets, match
+//! sinks, and the d-dimensional reduction (paper §2).
+
+pub mod ddim;
+pub mod interval;
+pub mod region;
+pub mod sink;
+
+pub use interval::Interval;
+pub use region::{Regions1D, RegionsNd};
+pub use sink::{CountSink, MatchSink, PairVec, VecSink};
+
+/// Index of a region inside its set (regions are dense arrays).
+pub type RegionIdx = u32;

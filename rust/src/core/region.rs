@@ -1,0 +1,188 @@
+//! Region storage: structure-of-arrays interval sets.
+//!
+//! The matching algorithms operate on dense arrays of intervals (the
+//! paper's S and U). SoA layout (`lo[]`, `hi[]`) keeps the hot loops
+//! vectorizable and mirrors the L1 kernel's input layout.
+
+use super::interval::Interval;
+use crate::prng::Rng;
+
+/// A set of 1-D regions in SoA layout.
+#[derive(Debug, Clone, Default)]
+pub struct Regions1D {
+    pub lo: Vec<f64>,
+    pub hi: Vec<f64>,
+}
+
+impl Regions1D {
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            lo: Vec::with_capacity(n),
+            hi: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn from_intervals(intervals: &[Interval]) -> Self {
+        Self {
+            lo: intervals.iter().map(|i| i.lo).collect(),
+            hi: intervals.iter().map(|i| i.hi).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, iv: Interval) {
+        self.lo.push(iv.lo);
+        self.hi.push(iv.hi);
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.lo.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.lo.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> Interval {
+        Interval {
+            lo: self.lo[i],
+            hi: self.hi[i],
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, iv: Interval) {
+        self.lo[i] = iv.lo;
+        self.hi[i] = iv.hi;
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = Interval> + '_ {
+        self.lo
+            .iter()
+            .zip(&self.hi)
+            .map(|(&lo, &hi)| Interval { lo, hi })
+    }
+
+    /// Bounding interval of the whole set (GBM's `[lb, ub)`).
+    pub fn bounds(&self) -> Option<Interval> {
+        if self.is_empty() {
+            return None;
+        }
+        let lo = self.lo.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = self.hi.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        Some(Interval { lo, hi })
+    }
+}
+
+/// A set of d-dimensional axis-parallel rectangles, stored per
+/// dimension (paper §2's d-rectangles).
+#[derive(Debug, Clone)]
+pub struct RegionsNd {
+    /// One Regions1D per dimension; all have the same length.
+    pub dims: Vec<Regions1D>,
+}
+
+impl RegionsNd {
+    pub fn new(d: usize) -> Self {
+        assert!(d >= 1);
+        Self {
+            dims: (0..d).map(|_| Regions1D::default()).collect(),
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims[0].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append a rectangle given as per-dimension intervals.
+    pub fn push(&mut self, rect: &[Interval]) {
+        assert_eq!(rect.len(), self.d());
+        for (dim, iv) in self.dims.iter_mut().zip(rect) {
+            dim.push(*iv);
+        }
+    }
+
+    pub fn get(&self, i: usize) -> Vec<Interval> {
+        self.dims.iter().map(|d| d.get(i)).collect()
+    }
+
+    /// Two rectangles intersect iff all their projections intersect.
+    pub fn rects_intersect(&self, i: usize, other: &RegionsNd, j: usize) -> bool {
+        debug_assert_eq!(self.d(), other.d());
+        self.dims
+            .iter()
+            .zip(&other.dims)
+            .all(|(a, b)| a.get(i).intersects(&b.get(j)))
+    }
+
+    /// The 1-D projection onto dimension `k`.
+    pub fn project(&self, k: usize) -> &Regions1D {
+        &self.dims[k]
+    }
+}
+
+/// Generate `count` random 1-D regions of fixed length `l` on
+/// `[0, space)` — the paper §5 synthetic workload building block.
+pub fn random_regions_1d(rng: &mut Rng, count: usize, space: f64, l: f64) -> Regions1D {
+    let mut out = Regions1D::with_capacity(count);
+    for _ in 0..count {
+        let lo = rng.uniform(0.0, space - l);
+        out.push(Interval::new(lo, lo + l));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soa_roundtrip() {
+        let mut r = Regions1D::default();
+        r.push(Interval::new(1.0, 2.0));
+        r.push(Interval::new(3.0, 5.0));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get(1), Interval::new(3.0, 5.0));
+        r.set(0, Interval::new(0.0, 9.0));
+        assert_eq!(r.get(0), Interval::new(0.0, 9.0));
+        assert_eq!(r.bounds(), Some(Interval::new(0.0, 9.0)));
+    }
+
+    #[test]
+    fn bounds_of_empty_is_none() {
+        assert!(Regions1D::default().bounds().is_none());
+    }
+
+    #[test]
+    fn nd_projection_intersection() {
+        let mut a = RegionsNd::new(2);
+        a.push(&[Interval::new(0.0, 2.0), Interval::new(0.0, 2.0)]);
+        let mut b = RegionsNd::new(2);
+        b.push(&[Interval::new(1.0, 3.0), Interval::new(5.0, 6.0)]);
+        b.push(&[Interval::new(1.0, 3.0), Interval::new(1.0, 3.0)]);
+        assert!(!a.rects_intersect(0, &b, 0)); // dim 1 disjoint
+        assert!(a.rects_intersect(0, &b, 1));
+    }
+
+    #[test]
+    fn random_regions_have_length_l() {
+        let mut rng = Rng::new(3);
+        let r = random_regions_1d(&mut rng, 100, 1000.0, 5.0);
+        assert_eq!(r.len(), 100);
+        for iv in r.iter() {
+            assert!((iv.len() - 5.0).abs() < 1e-9);
+            assert!(iv.lo >= 0.0 && iv.hi <= 1000.0);
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Match reporting (the paper's `Report(s, u)` callback).
+//!
+//! Every matcher reports each intersecting (subscription, update) pair
+//! exactly once through a [`MatchSink`]. Benches count (like the
+//! paper's evaluation, which counts intersections without storing
+//! them); tests collect and compare pair sets; the coordinator routes
+//! notifications. Parallel matchers use one sink per worker and merge
+//! afterwards, keeping the hot loop lock-free.
+
+use super::RegionIdx;
+
+/// Receiver for reported (subscription, update) intersections.
+pub trait MatchSink: Send {
+    fn report(&mut self, s: RegionIdx, u: RegionIdx);
+}
+
+/// Counts intersections (the paper's evaluation sink).
+#[derive(Debug, Default, Clone)]
+pub struct CountSink {
+    pub count: u64,
+}
+
+impl MatchSink for CountSink {
+    #[inline]
+    fn report(&mut self, _s: RegionIdx, _u: RegionIdx) {
+        self.count += 1;
+    }
+}
+
+/// Collects pairs (test/routing sink).
+#[derive(Debug, Default, Clone)]
+pub struct VecSink {
+    pub pairs: Vec<(RegionIdx, RegionIdx)>,
+}
+
+impl MatchSink for VecSink {
+    #[inline]
+    fn report(&mut self, s: RegionIdx, u: RegionIdx) {
+        self.pairs.push((s, u));
+    }
+}
+
+/// Closure adapter.
+pub struct FnSink<F: FnMut(RegionIdx, RegionIdx) + Send>(pub F);
+
+impl<F: FnMut(RegionIdx, RegionIdx) + Send> MatchSink for FnSink<F> {
+    #[inline]
+    fn report(&mut self, s: RegionIdx, u: RegionIdx) {
+        (self.0)(s, u);
+    }
+}
+
+/// A sorted, deduplicated pair list — canonical form for comparisons.
+pub type PairVec = Vec<(RegionIdx, RegionIdx)>;
+
+/// Merge per-worker VecSinks into canonical form.
+pub fn canonical_pairs(sinks: Vec<VecSink>) -> PairVec {
+    let mut all: PairVec = sinks.into_iter().flat_map(|s| s.pairs).collect();
+    all.sort_unstable();
+    all
+}
+
+/// Canonicalize a single pair list (sort; callers assert no dups).
+pub fn canonicalize(mut pairs: PairVec) -> PairVec {
+    pairs.sort_unstable();
+    pairs
+}
+
+/// Assert that a canonical pair list contains no duplicates — the
+/// paper's "each pair reported exactly once" contract.
+pub fn assert_exactly_once(pairs: &PairVec) -> Result<(), String> {
+    for w in pairs.windows(2) {
+        if w[0] == w[1] {
+            return Err(format!("pair {:?} reported more than once", w[0]));
+        }
+    }
+    Ok(())
+}
+
+/// Total count across per-worker CountSinks.
+pub fn total_count(sinks: &[CountSink]) -> u64 {
+    sinks.iter().map(|s| s.count).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_sink_counts() {
+        let mut s = CountSink::default();
+        s.report(1, 2);
+        s.report(3, 4);
+        assert_eq!(s.count, 2);
+    }
+
+    #[test]
+    fn canonical_merge() {
+        let a = VecSink {
+            pairs: vec![(2, 1), (0, 0)],
+        };
+        let b = VecSink {
+            pairs: vec![(1, 5)],
+        };
+        assert_eq!(canonical_pairs(vec![a, b]), vec![(0, 0), (1, 5), (2, 1)]);
+    }
+
+    #[test]
+    fn exactly_once_detects_duplicates() {
+        let ok = vec![(0, 1), (0, 2)];
+        assert!(assert_exactly_once(&ok).is_ok());
+        let bad = vec![(0, 1), (0, 1)];
+        assert!(assert_exactly_once(&bad).is_err());
+    }
+
+    #[test]
+    fn fn_sink_invokes_closure() {
+        let mut hits = Vec::new();
+        {
+            let mut s = FnSink(|a, b| hits.push((a, b)));
+            s.report(7, 9);
+        }
+        assert_eq!(hits, vec![(7, 9)]);
+    }
+}

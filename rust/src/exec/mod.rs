@@ -1,0 +1,65 @@
+//! The shared-memory parallel runtime (the paper's OpenMP substrate).
+//!
+//! The paper parallelizes its algorithms with OpenMP `parallel for`
+//! regions, parallel STL sorts and a hand-rolled two-level prefix scan
+//! (Fig. 7). This module provides the equivalent building blocks in
+//! std-only Rust:
+//!
+//! * [`pool::ThreadPool`] — persistent worker pool with fork-join
+//!   parallel regions (`#pragma omp parallel`), including per-worker
+//!   busy-time measurement used by the speedup model.
+//! * [`pfor`] — static and dynamic loop scheduling
+//!   (`#pragma omp for schedule(static|dynamic)`).
+//! * [`psort`] — parallel merge sort (the `-D_GLIBCXX_PARALLEL`
+//!   `std::sort` replacement).
+//! * [`scan`] — sequential and two-level parallel prefix scans
+//!   (paper Fig. 7 / Algorithm 7 master step).
+//! * [`lflist`] — a lock-free append-only list (the paper's §5 ad-hoc
+//!   GBM cell list experiment).
+
+pub mod lflist;
+pub mod pfor;
+pub mod pool;
+pub mod psort;
+pub mod scan;
+
+pub use pool::ThreadPool;
+
+/// Total order for `f64` keys (sign-magnitude flip). NaNs sort above
+/// +inf; workload code never produces them, but the order stays total.
+#[inline]
+pub fn f64_key(x: f64) -> u64 {
+    let bits = x.to_bits();
+    if bits & 0x8000_0000_0000_0000 != 0 {
+        !bits
+    } else {
+        bits | 0x8000_0000_0000_0000
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::f64_key;
+
+    #[test]
+    fn f64_key_is_monotone() {
+        let xs = [
+            f64::NEG_INFINITY,
+            -1.0e30,
+            -2.5,
+            -0.0,
+            0.0,
+            1.0e-300,
+            1.0,
+            3.5,
+            f64::INFINITY,
+        ];
+        for w in xs.windows(2) {
+            assert!(f64_key(w[0]) <= f64_key(w[1]), "{} vs {}", w[0], w[1]);
+        }
+        // -0.0 and 0.0 compare equal in IEEE; keys may differ but must
+        // preserve <= ordering, checked above. Distinct values strict:
+        assert!(f64_key(-2.5) < f64_key(-1.0));
+        assert!(f64_key(1.0) < f64_key(2.0));
+    }
+}

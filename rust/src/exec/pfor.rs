@@ -1,0 +1,125 @@
+//! Loop scheduling on top of [`super::pool::ThreadPool`] — the
+//! `#pragma omp for` replacements.
+//!
+//! * [`chunks`] — static schedule: `0..n` is split into `P` contiguous
+//!   chunks (what the paper's BFM/ITM/GBM parallelizations use).
+//! * [`parallel_for_static`] — static schedule driving a per-index body.
+//! * [`parallel_for_dynamic`] — dynamic schedule with a shared atomic
+//!   cursor (`schedule(dynamic, chunk)`), useful when per-item work is
+//!   skewed (e.g. ITM queries with different K_u).
+
+use std::ops::Range;
+use std::time::Duration;
+
+use super::pool::{ThreadPool, WorkCounter};
+
+/// Split `0..n` into `p` near-equal contiguous chunks.
+/// The first `n % p` chunks get one extra element (OpenMP static).
+pub fn chunks(n: usize, p: usize) -> Vec<Range<usize>> {
+    assert!(p >= 1);
+    let base = n / p;
+    let extra = n % p;
+    let mut out = Vec::with_capacity(p);
+    let mut start = 0;
+    for i in 0..p {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Static-schedule parallel for: `body(p, range_p)` once per worker.
+/// Returns per-worker busy times.
+pub fn parallel_for_static<F>(
+    pool: &ThreadPool,
+    nthreads: usize,
+    n: usize,
+    body: F,
+) -> Vec<Duration>
+where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    let ranges = chunks(n, nthreads);
+    pool.run(nthreads, |p| body(p, ranges[p].clone()))
+}
+
+/// Dynamic-schedule parallel for: workers repeatedly grab `chunk`-sized
+/// ranges from a shared cursor and call `body(p, range)`.
+pub fn parallel_for_dynamic<F>(
+    pool: &ThreadPool,
+    nthreads: usize,
+    n: usize,
+    chunk: usize,
+    body: F,
+) -> Vec<Duration>
+where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    assert!(chunk >= 1);
+    let cursor = WorkCounter::new();
+    pool.run(nthreads, |p| {
+        while let Some(r) = cursor.next_chunk(chunk, n) {
+            body(p, r);
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    #[test]
+    fn chunks_cover_and_partition() {
+        for n in [0usize, 1, 7, 100, 101, 1023] {
+            for p in [1usize, 2, 3, 8, 32] {
+                let cs = chunks(n, p);
+                assert_eq!(cs.len(), p);
+                let mut next = 0;
+                for c in &cs {
+                    assert_eq!(c.start, next);
+                    next = c.end;
+                }
+                assert_eq!(next, n);
+                let lens: Vec<usize> = cs.iter().map(|c| c.len()).collect();
+                let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(mx - mn <= 1, "balanced chunks: {lens:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn static_for_touches_each_index_once() {
+        let pool = ThreadPool::new(3);
+        let n = 1000;
+        let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        parallel_for_static(&pool, 4, n, |_, r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn dynamic_for_touches_each_index_once() {
+        let pool = ThreadPool::new(3);
+        let n = 1003;
+        let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        parallel_for_dynamic(&pool, 4, n, 17, |_, r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_loop_is_fine() {
+        let pool = ThreadPool::new(2);
+        parallel_for_static(&pool, 3, 0, |_, r| assert!(r.is_empty()));
+        parallel_for_dynamic(&pool, 3, 0, 8, |_, _| panic!("no work expected"));
+    }
+}

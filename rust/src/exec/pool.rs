@@ -1,0 +1,334 @@
+//! Persistent worker pool with OpenMP-style fork-join parallel regions.
+//!
+//! `ThreadPool::run(P, |p| ...)` executes the closure on `P` logical
+//! workers (worker 0 runs on the calling thread, like an OpenMP master)
+//! and blocks until all complete — the moral equivalent of
+//! `#pragma omp parallel num_threads(P)`.
+//!
+//! The pool also measures each worker's busy time. On this single-core
+//! reproduction testbed the busy times feed the work-span speedup model
+//! (DESIGN.md §3.1): wall-clock under oversubscription is meaningless,
+//! but `max_p busy_p` is exactly the quantity a P-core machine's
+//! wall-clock would track.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::bench::speedup::CostLog;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// CPU time consumed by the calling thread (CLOCK_THREAD_CPUTIME_ID).
+///
+/// Unlike `Instant`, this is immune to preemption: on an oversubscribed
+/// host a P-thread region still reports each worker's true compute
+/// cost, which is what the speedup model needs (DESIGN.md §3).
+pub fn thread_cpu_time() -> Duration {
+    let mut ts = libc::timespec {
+        tv_sec: 0,
+        tv_nsec: 0,
+    };
+    // SAFETY: ts is a valid out-pointer; the clock id is a constant.
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    if rc == 0 {
+        Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
+    } else {
+        Duration::ZERO
+    }
+}
+
+struct Shared {
+    pending: Mutex<usize>,
+    all_done: Condvar,
+}
+
+/// A persistent pool of `capacity` background workers (plus the caller,
+/// which acts as worker 0 of every region).
+pub struct ThreadPool {
+    senders: Vec<mpsc::Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    shared: Arc<Shared>,
+    /// Optional cost log (per-region busy times + serial CPU time)
+    /// consumed by the work-span speedup model.
+    log: Mutex<Option<CostLog>>,
+}
+
+impl ThreadPool {
+    /// Pool able to serve regions with up to `capacity + 1` workers.
+    pub fn new(capacity: usize) -> Self {
+        let shared = Arc::new(Shared {
+            pending: Mutex::new(0),
+            all_done: Condvar::new(),
+        });
+        let mut senders = Vec::with_capacity(capacity);
+        let mut handles = Vec::with_capacity(capacity);
+        for i in 0..capacity {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let shared2 = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("ddm-worker-{}", i + 1))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        job();
+                        let mut pending = shared2.pending.lock().unwrap();
+                        *pending -= 1;
+                        if *pending == 0 {
+                            shared2.all_done.notify_all();
+                        }
+                    }
+                })
+                .expect("spawn pool worker");
+            senders.push(tx);
+            handles.push(h);
+        }
+        Self {
+            senders,
+            handles,
+            shared,
+            log: Mutex::new(None),
+        }
+    }
+
+    /// Number of workers a region can use (background + caller).
+    pub fn max_threads(&self) -> usize {
+        self.senders.len() + 1
+    }
+
+    /// Start recording region costs (resets any previous log).
+    pub fn start_log(&self) {
+        *self.log.lock().unwrap() = Some(CostLog::default());
+    }
+
+    /// Stop recording and return the accumulated log.
+    pub fn take_log(&self) -> CostLog {
+        self.log.lock().unwrap().take().unwrap_or_default()
+    }
+
+    /// Record master-only (serial) CPU time; algorithms call this
+    /// around their sequential sections (e.g. Algorithm 7 lines 18–21).
+    pub fn log_serial(&self, d: Duration) {
+        if let Some(log) = self.log.lock().unwrap().as_mut() {
+            log.serial += d;
+        }
+    }
+
+    /// Run a master-only section, logging its CPU time when enabled.
+    pub fn serial_section<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = thread_cpu_time();
+        let out = f();
+        self.log_serial(thread_cpu_time().saturating_sub(t0));
+        out
+    }
+
+    /// Fork-join parallel region: run `f(p)` for `p in 0..nthreads`,
+    /// caller executes `p = 0`. Returns per-worker busy times.
+    ///
+    /// # Panics
+    /// If `nthreads` exceeds [`Self::max_threads`] or is zero.
+    pub fn run<F>(&self, nthreads: usize, f: F) -> Vec<Duration>
+    where
+        F: Fn(usize) + Sync,
+    {
+        assert!(nthreads >= 1, "need at least one thread");
+        assert!(
+            nthreads <= self.max_threads(),
+            "region of {} threads on a pool of {}",
+            nthreads,
+            self.max_threads()
+        );
+        let busy: Vec<Mutex<Duration>> =
+            (0..nthreads).map(|_| Mutex::new(Duration::ZERO)).collect();
+
+        {
+            let mut pending = self.shared.pending.lock().unwrap();
+            *pending = nthreads - 1;
+        }
+
+        // SAFETY: the closures borrow `f` and `busy`, which outlive the
+        // region because we block on `all_done` before returning (and
+        // before the borrows go out of scope). This is the standard
+        // scoped-execution pattern (what rayon/crossbeam do internally);
+        // the 'static bound on Job is satisfied by transmuting the
+        // borrow lifetime, never observed beyond the join below.
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        let f_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        let busy_ref: &[Mutex<Duration>] = &busy;
+        let busy_static: &'static [Mutex<Duration>] =
+            unsafe { std::mem::transmute(busy_ref) };
+
+        for p in 1..nthreads {
+            let job: Job = Box::new(move || {
+                let t0 = thread_cpu_time();
+                f_static(p);
+                *busy_static[p].lock().unwrap() =
+                    thread_cpu_time().saturating_sub(t0);
+            });
+            self.senders[p - 1].send(job).expect("worker hung up");
+        }
+
+        let t0 = thread_cpu_time();
+        f(0);
+        *busy[0].lock().unwrap() = thread_cpu_time().saturating_sub(t0);
+
+        // Join: wait until every background worker of this region is done.
+        let mut pending = self.shared.pending.lock().unwrap();
+        while *pending != 0 {
+            pending = self.shared.all_done.wait(pending).unwrap();
+        }
+        drop(pending);
+
+        let busy: Vec<Duration> = busy.iter().map(|m| *m.lock().unwrap()).collect();
+        if let Some(log) = self.log.lock().unwrap().as_mut() {
+            log.regions.push(busy.clone());
+        }
+        busy
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.senders.clear(); // close channels; workers exit their loop
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One-shot scoped parallel region without a persistent pool
+/// (convenience for tests and cold paths).
+pub fn scoped_region<F>(nthreads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    std::thread::scope(|s| {
+        for p in 1..nthreads {
+            let f = &f;
+            s.spawn(move || f(p));
+        }
+        f(0);
+    });
+}
+
+/// Shared atomic work counter for dynamic scheduling experiments.
+pub struct WorkCounter(AtomicUsize);
+
+impl WorkCounter {
+    pub fn new() -> Self {
+        Self(AtomicUsize::new(0))
+    }
+    #[inline]
+    pub fn next_chunk(&self, chunk: usize, limit: usize) -> Option<std::ops::Range<usize>> {
+        let start = self.0.fetch_add(chunk, Ordering::Relaxed);
+        if start >= limit {
+            None
+        } else {
+            Some(start..(start + chunk).min(limit))
+        }
+    }
+}
+
+impl Default for WorkCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn region_runs_every_worker_exactly_once() {
+        let pool = ThreadPool::new(7);
+        let hits: Vec<AtomicU64> = (0..8).map(|_| AtomicU64::new(0)).collect();
+        pool.run(8, |p| {
+            hits[p].fetch_add(1, Ordering::Relaxed);
+        });
+        for (p, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "worker {p}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_regions() {
+        let pool = ThreadPool::new(3);
+        let total = AtomicU64::new(0);
+        for _ in 0..50 {
+            pool.run(4, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn region_smaller_than_pool() {
+        let pool = ThreadPool::new(8);
+        let total = AtomicU64::new(0);
+        pool.run(2, |_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn busy_times_reported_for_all_workers() {
+        let pool = ThreadPool::new(3);
+        let busy = pool.run(4, |p| {
+            // Unequal work so at least some busy times are non-trivial.
+            let mut x = 0u64;
+            for i in 0..(p as u64 + 1) * 100_000 {
+                x = x.wrapping_add(i * i);
+            }
+            std::hint::black_box(x);
+        });
+        assert_eq!(busy.len(), 4);
+    }
+
+    #[test]
+    fn single_thread_region_runs_on_caller() {
+        let pool = ThreadPool::new(0);
+        let id = std::thread::current().id();
+        let same = Mutex::new(false);
+        pool.run(1, |p| {
+            assert_eq!(p, 0);
+            *same.lock().unwrap() = std::thread::current().id() == id;
+        });
+        assert!(*same.lock().unwrap());
+    }
+
+    #[test]
+    #[should_panic(expected = "region of")]
+    fn oversubscribed_region_panics() {
+        let pool = ThreadPool::new(1);
+        pool.run(3, |_| {});
+    }
+
+    #[test]
+    fn scoped_region_covers_all_indices() {
+        let hits: Vec<AtomicU64> = (0..5).map(|_| AtomicU64::new(0)).collect();
+        scoped_region(5, |p| {
+            hits[p].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn work_counter_covers_range_without_overlap() {
+        let wc = WorkCounter::new();
+        let seen = Mutex::new(vec![0u8; 1000]);
+        scoped_region(4, |_| {
+            while let Some(r) = wc.next_chunk(7, 1000) {
+                let mut s = seen.lock().unwrap();
+                for i in r {
+                    s[i] += 1;
+                }
+            }
+        });
+        assert!(seen.lock().unwrap().iter().all(|&c| c == 1));
+    }
+}

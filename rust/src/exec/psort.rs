@@ -1,0 +1,305 @@
+//! Parallel merge sort — the replacement for the parallel `std::sort`
+//! the paper gets from `-D_GLIBCXX_PARALLEL` (multiway mergesort).
+//!
+//! Phase 1: the input is split into `P` chunks, each sorted locally
+//! (`slice::sort_unstable_by_key`). Phase 2: ⌈log₂ P⌉ rounds of
+//! pairwise merges between an input and an output buffer; each merge is
+//! itself split across workers with **merge-path partitioning** (binary
+//! search for the (i, j) split at a given output rank), so the span of
+//! every round is O(N/P + lg N) — without the split, the final round
+//! is a serial O(N) merge that caps SBM's speedup (this showed up
+//! directly in the Fig. 10 reproduction; EXPERIMENTS.md §Perf step 5).
+
+use super::pfor::chunks;
+use super::pool::ThreadPool;
+
+/// Raw-pointer wrapper so disjoint `&mut` chunks can cross the region
+/// boundary. SAFETY: every use partitions index ranges disjointly.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Sort `data` by `key` using up to `nthreads` workers of `pool`.
+pub fn par_sort_by_key<T, K, F>(
+    pool: &ThreadPool,
+    nthreads: usize,
+    data: &mut [T],
+    key: F,
+) where
+    T: Copy + Send + Sync,
+    K: Ord,
+    F: Fn(&T) -> K + Sync,
+{
+    let n = data.len();
+    if nthreads <= 1 || n < 4 * nthreads {
+        data.sort_unstable_by_key(|x| key(x));
+        return;
+    }
+
+    // Phase 1: sort P disjoint chunks in parallel.
+    let bounds = chunks(n, nthreads);
+    let base = SendPtr(data.as_mut_ptr());
+    pool.run(nthreads, |p| {
+        let base = base; // capture the SendPtr wrapper, not the raw field
+        let r = bounds[p].clone();
+        // SAFETY: chunks are disjoint.
+        let slice =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(r.start), r.len()) };
+        slice.sort_unstable_by_key(|x| key(x));
+    });
+
+    // Phase 2: pairwise merge rounds, ping-ponging with an aux buffer.
+    let mut aux: Vec<T> = data.to_vec();
+    let mut runs: Vec<std::ops::Range<usize>> = bounds;
+    let mut src_is_data = true;
+    while runs.len() > 1 {
+        let pairs: Vec<(std::ops::Range<usize>, std::ops::Range<usize>)> = runs
+            .chunks(2)
+            .map(|c| {
+                if c.len() == 2 {
+                    (c[0].clone(), c[1].clone())
+                } else {
+                    (c[0].clone(), c[0].end..c[0].end)
+                }
+            })
+            .collect();
+
+        // Merge-path task decomposition: split every pair into enough
+        // sub-merges that all workers stay busy even in the last round
+        // (1 pair). Each task copies a disjoint output range.
+        let per_pair = nthreads.div_ceil(pairs.len());
+        let mut tasks: Vec<(std::ops::Range<usize>, std::ops::Range<usize>, usize)> =
+            Vec::with_capacity(pairs.len() * per_pair);
+        {
+            let src: &[T] = if src_is_data { &*data } else { &aux };
+            for (a, b) in &pairs {
+                let total = a.len() + b.len();
+                let mut prev = (0usize, 0usize); // (i into a, j into b)
+                for t in 1..=per_pair {
+                    let r = total * t / per_pair;
+                    let cut = if t == per_pair {
+                        (a.len(), b.len())
+                    } else {
+                        merge_path_split(&src[a.clone()], &src[b.clone()], r, &key)
+                    };
+                    if cut != prev {
+                        tasks.push((
+                            a.start + prev.0..a.start + cut.0,
+                            b.start + prev.1..b.start + cut.1,
+                            a.start + prev.0 + prev.1,
+                        ));
+                        prev = cut;
+                    }
+                }
+            }
+        }
+
+        {
+            let (src_ptr, dst_ptr) = if src_is_data {
+                (SendPtr(data.as_mut_ptr()), SendPtr(aux.as_mut_ptr()))
+            } else {
+                (SendPtr(aux.as_mut_ptr()), SendPtr(data.as_mut_ptr()))
+            };
+            let key = &key;
+            let tasks = &tasks;
+            let workers = tasks.len().min(nthreads);
+            pool.run(workers, |p| {
+                let (src_ptr, dst_ptr) = (src_ptr, dst_ptr); // capture wrappers
+                // Round-robin distribution of sub-merges over workers.
+                let mut i = p;
+                while i < tasks.len() {
+                    let (a, b, out) = tasks[i].clone();
+                    // SAFETY: task output ranges are disjoint; src/dst
+                    // are distinct buffers.
+                    unsafe {
+                        merge_into(src_ptr.0, dst_ptr.0, a, b, out, key);
+                    }
+                    i += workers;
+                }
+            });
+        }
+        runs = pairs.iter().map(|(a, b)| a.start..b.end).collect();
+        src_is_data = !src_is_data;
+    }
+
+    if !src_is_data {
+        data.copy_from_slice(&aux);
+    }
+}
+
+/// Find the (i, j) with i + j = r such that merging `a[..i]` and
+/// `b[..j]` yields the first `r` elements of the stable merge of a, b
+/// (the "merge path" split; a-elements win ties, preserving stability).
+fn merge_path_split<T, K, F>(a: &[T], b: &[T], r: usize, key: &F) -> (usize, usize)
+where
+    K: Ord,
+    F: Fn(&T) -> K,
+{
+    let (mut lo, mut hi) = (r.saturating_sub(b.len()), r.min(a.len()));
+    while lo < hi {
+        let i = (lo + hi) / 2;
+        let j = r - i;
+        // Too few a-elements taken: a[i] belongs before b[j-1].
+        if j > 0 && i < a.len() && key(&a[i]) < key(&b[j - 1]) {
+            lo = i + 1;
+        } else if i > 0 && j < b.len() && key(&b[j]) < key(&a[i - 1]) {
+            // Too many a-elements taken: b[j] belongs before a[i-1].
+            hi = i - 1;
+        } else {
+            return (i, r - i);
+        }
+    }
+    (lo, r - lo)
+}
+
+/// Merge sorted `src[a]` and `src[b]` into `dst[out..]` (stable:
+/// a-elements win ties).
+unsafe fn merge_into<T, K, F>(
+    src: *const T,
+    dst: *mut T,
+    a: std::ops::Range<usize>,
+    b: std::ops::Range<usize>,
+    out: usize,
+    key: &F,
+) where
+    T: Copy,
+    K: Ord,
+    F: Fn(&T) -> K,
+{
+    let (mut i, mut j, mut o) = (a.start, b.start, out);
+    while i < a.end && j < b.end {
+        let (x, y) = (*src.add(i), *src.add(j));
+        if key(&x) <= key(&y) {
+            *dst.add(o) = x;
+            i += 1;
+        } else {
+            *dst.add(o) = y;
+            j += 1;
+        }
+        o += 1;
+    }
+    while i < a.end {
+        *dst.add(o) = *src.add(i);
+        i += 1;
+        o += 1;
+    }
+    while j < b.end {
+        *dst.add(o) = *src.add(j);
+        j += 1;
+        o += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn check_sorted(pool: &ThreadPool, nthreads: usize, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let mut data: Vec<u64> = (0..n).map(|_| rng.next_u64() % 1000).collect();
+        let mut want = data.clone();
+        want.sort_unstable();
+        par_sort_by_key(pool, nthreads, &mut data, |&x| x);
+        assert_eq!(data, want, "n={n} p={nthreads}");
+    }
+
+    #[test]
+    fn sorts_like_std_across_thread_counts() {
+        let pool = ThreadPool::new(7);
+        for &p in &[1usize, 2, 3, 4, 8] {
+            for &n in &[0usize, 1, 2, 17, 100, 1000, 10_000] {
+                check_sorted(&pool, p, n, 42 + n as u64 + p as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn sorts_already_sorted_and_reversed() {
+        let pool = ThreadPool::new(3);
+        let mut asc: Vec<u64> = (0..5000).collect();
+        let want = asc.clone();
+        par_sort_by_key(&pool, 4, &mut asc, |&x| x);
+        assert_eq!(asc, want);
+        let mut desc: Vec<u64> = (0..5000).rev().collect();
+        par_sort_by_key(&pool, 4, &mut desc, |&x| x);
+        assert_eq!(desc, want);
+    }
+
+    #[test]
+    fn sorts_with_many_duplicates() {
+        let pool = ThreadPool::new(3);
+        let mut rng = Rng::new(9);
+        let mut data: Vec<u64> = (0..20_000).map(|_| rng.below(4)).collect();
+        let mut want = data.clone();
+        want.sort_unstable();
+        par_sort_by_key(&pool, 4, &mut data, |&x| x);
+        assert_eq!(data, want);
+    }
+
+    #[test]
+    fn all_equal_keys() {
+        let pool = ThreadPool::new(7);
+        let mut data: Vec<u64> = vec![7; 10_000];
+        par_sort_by_key(&pool, 8, &mut data, |&x| x);
+        assert!(data.iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn composite_keys_via_f64_key() {
+        use crate::exec::f64_key;
+        let pool = ThreadPool::new(3);
+        let mut rng = Rng::new(31);
+        let mut data: Vec<(f64, u32)> = (0..10_000)
+            .map(|i| (rng.uniform(-100.0, 100.0), i as u32))
+            .collect();
+        par_sort_by_key(&pool, 4, &mut data, |&(pos, id)| {
+            ((f64_key(pos) as u128) << 32) | id as u128
+        });
+        for w in data.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_result() {
+        let pool = ThreadPool::new(7);
+        let mut rng = Rng::new(77);
+        let base: Vec<u64> = (0..9999).map(|_| rng.next_u64()).collect();
+        let mut one = base.clone();
+        par_sort_by_key(&pool, 1, &mut one, |&x| x);
+        for p in 2..=8 {
+            let mut v = base.clone();
+            par_sort_by_key(&pool, p, &mut v, |&x| x);
+            assert_eq!(v, one, "p={p}");
+        }
+    }
+
+    #[test]
+    fn merge_path_split_properties() {
+        let a = [1u64, 3, 5, 7, 9];
+        let b = [2u64, 4, 6, 8];
+        for r in 0..=a.len() + b.len() {
+            let (i, j) = merge_path_split(&a, &b, r, &|&x| x);
+            assert_eq!(i + j, r);
+            // Everything taken is <= everything not yet taken.
+            if i > 0 && j < b.len() {
+                assert!(a[i - 1] <= b[j], "r={r}");
+            }
+            if j > 0 && i < a.len() {
+                assert!(b[j - 1] <= a[i], "r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_path_split_with_duplicates() {
+        let a = [5u64; 6];
+        let b = [5u64; 6];
+        for r in 0..=12 {
+            let (i, j) = merge_path_split(&a, &b, r, &|&x| x);
+            assert_eq!(i + j, r);
+        }
+    }
+}

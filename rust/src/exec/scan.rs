@@ -1,0 +1,202 @@
+//! Prefix computations (paper §4, Fig. 7).
+//!
+//! Parallel SBM needs an exclusive scan over *per-segment set deltas*
+//! with a non-commutative (but associative) combine operator; the
+//! paper's two-level scheme is: ① per-worker local scans, ② a serial
+//! master combine over `P` partial results, ③ per-worker offset apply.
+//! Because `P ≪ N`, step ② is O(P) and the whole scan is O(N/P + P).
+//!
+//! [`seq_exclusive_scan`] is the master-step building block (also used
+//! directly by Algorithm 7 lines 18–21); [`par_inclusive_scan`] is the
+//! full three-step pipeline for plain `Copy` elements, mirroring the L1
+//! Pallas scan kernels (`python/compile/kernels/scan.py`) layer by
+//! layer.
+
+use super::pfor::chunks;
+use super::pool::ThreadPool;
+
+/// Exclusive scan: `out[i] = identity ⊕ x₀ ⊕ … ⊕ xᵢ₋₁`.
+pub fn seq_exclusive_scan<T, F>(items: &[T], identity: T, op: F) -> Vec<T>
+where
+    T: Clone,
+    F: Fn(&T, &T) -> T,
+{
+    let mut out = Vec::with_capacity(items.len());
+    let mut acc = identity;
+    for x in items {
+        out.push(acc.clone());
+        acc = op(&acc, x);
+    }
+    out
+}
+
+/// Inclusive scan: `out[i] = x₀ ⊕ … ⊕ xᵢ`.
+pub fn seq_inclusive_scan<T, F>(items: &[T], op: F) -> Vec<T>
+where
+    T: Clone,
+    F: Fn(&T, &T) -> T,
+{
+    let mut out = Vec::with_capacity(items.len());
+    for x in items {
+        let next = match out.last() {
+            Some(prev) => op(prev, x),
+            None => x.clone(),
+        };
+        out.push(next);
+    }
+    out
+}
+
+/// In-place parallel inclusive scan (paper Fig. 7, steps ①–③).
+///
+/// `op` must be associative; `identity` its neutral element.
+pub fn par_inclusive_scan<T, F>(
+    pool: &ThreadPool,
+    nthreads: usize,
+    data: &mut [T],
+    identity: T,
+    op: F,
+) where
+    T: Copy + Send + Sync,
+    F: Fn(T, T) -> T + Sync,
+{
+    let n = data.len();
+    if nthreads <= 1 || n < 2 * nthreads {
+        let mut acc = identity;
+        for x in data.iter_mut() {
+            acc = op(acc, *x);
+            *x = acc;
+        }
+        return;
+    }
+
+    #[derive(Clone, Copy)]
+    struct SendPtr<T>(*mut T);
+    unsafe impl<T> Send for SendPtr<T> {}
+    unsafe impl<T> Sync for SendPtr<T> {}
+
+    let bounds = chunks(n, nthreads);
+    let base = SendPtr(data.as_mut_ptr());
+
+    // Step ①: local inclusive scans.
+    pool.run(nthreads, |p| {
+        let base = base; // capture the SendPtr wrapper, not the raw field
+        let r = bounds[p].clone();
+        // SAFETY: disjoint chunks.
+        let s = unsafe { std::slice::from_raw_parts_mut(base.0.add(r.start), r.len()) };
+        let mut acc = identity;
+        for x in s.iter_mut() {
+            acc = op(acc, *x);
+            *x = acc;
+        }
+    });
+
+    // Step ②: master — exclusive scan of the per-chunk totals.
+    let totals: Vec<T> = bounds
+        .iter()
+        .map(|r| {
+            if r.is_empty() {
+                identity
+            } else {
+                data[r.end - 1]
+            }
+        })
+        .collect();
+    let offsets = seq_exclusive_scan(&totals, identity, |a, b| op(*a, *b));
+
+    // Step ③: apply offsets (worker 0's offset is the identity).
+    pool.run(nthreads, |p| {
+        let base = base; // capture the SendPtr wrapper, not the raw field
+        if p == 0 {
+            return;
+        }
+        let r = bounds[p].clone();
+        let off = offsets[p];
+        // SAFETY: disjoint chunks.
+        let s = unsafe { std::slice::from_raw_parts_mut(base.0.add(r.start), r.len()) };
+        for x in s.iter_mut() {
+            *x = op(off, *x);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    #[test]
+    fn seq_exclusive_matches_definition() {
+        let xs = [1i64, 2, 3, 4];
+        assert_eq!(seq_exclusive_scan(&xs, 0, |a, b| a + b), vec![0, 1, 3, 6]);
+        let empty: [i64; 0] = [];
+        assert!(seq_exclusive_scan(&empty, 0, |a, b| a + b).is_empty());
+    }
+
+    #[test]
+    fn seq_inclusive_matches_definition() {
+        let xs = [1i64, 2, 3, 4];
+        assert_eq!(seq_inclusive_scan(&xs, |a, b| a + b), vec![1, 3, 6, 10]);
+    }
+
+    #[test]
+    fn par_scan_matches_seq_for_all_thread_counts() {
+        let pool = ThreadPool::new(7);
+        let mut rng = Rng::new(5);
+        let base: Vec<i64> = (0..10_001).map(|_| rng.range(-50, 51)).collect();
+        let want = seq_inclusive_scan(&base, |a, b| a + b);
+        for p in 1..=8 {
+            let mut v = base.clone();
+            par_inclusive_scan(&pool, p, &mut v, 0, |a, b| a + b);
+            assert_eq!(v, want, "p={p}");
+        }
+    }
+
+    #[test]
+    fn par_scan_with_non_commutative_op() {
+        // 2x2 integer matrix multiply: associative, NOT commutative —
+        // exactly the class of operator the set-delta combine is in.
+        // Wrapping arithmetic keeps associativity exact mod 2^64.
+        type M = [i64; 4];
+        const I: M = [1, 0, 0, 1];
+        fn mul(a: M, b: M) -> M {
+            let e = |x: i64, y: i64, z: i64, w: i64| {
+                x.wrapping_mul(y).wrapping_add(z.wrapping_mul(w))
+            };
+            [
+                e(a[0], b[0], a[1], b[2]),
+                e(a[0], b[1], a[1], b[3]),
+                e(a[2], b[0], a[3], b[2]),
+                e(a[2], b[1], a[3], b[3]),
+            ]
+        }
+        let pool = ThreadPool::new(3);
+        let mut rng = Rng::new(8);
+        let base: Vec<M> = (0..257)
+            .map(|_| {
+                [
+                    rng.range(-2, 3),
+                    rng.range(-2, 3),
+                    rng.range(-2, 3),
+                    rng.range(-2, 3),
+                ]
+            })
+            .collect();
+        let want = seq_inclusive_scan(&base, |a, b| mul(*a, *b));
+        let mut got = base.clone();
+        par_inclusive_scan(&pool, 4, &mut got, I, mul);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_scan_tiny_inputs() {
+        let pool = ThreadPool::new(7);
+        for n in 0..8usize {
+            let base: Vec<i64> = (0..n as i64).collect();
+            let want = seq_inclusive_scan(&base, |a, b| a + b);
+            let mut got = base.clone();
+            par_inclusive_scan(&pool, 8, &mut got, 0, |a, b| a + b);
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+}

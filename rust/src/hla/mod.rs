@@ -1,0 +1,22 @@
+//! A miniature HLA/RTI **Data Distribution Management** service — the
+//! system the paper's matchers exist to serve (paper §1).
+//!
+//! The HLA model (IEEE 1516): a simulation declares *dimensions* (integer
+//! ranges `0..upper`); federates register *region specifications* (one
+//! range per dimension) as subscription or update regions; the DDM
+//! service computes subscription/update overlaps and routes each update
+//! notification to the federates whose subscriptions intersect the
+//! update region (the paper's Fig. 1 traffic example).
+//!
+//! * [`space`] — dimensions and the routing space.
+//! * [`region`] — region specifications and validation.
+//! * [`service`] — federate management, region registration,
+//!   matching, notification routing, and dynamic region modification.
+
+pub mod region;
+pub mod service;
+pub mod space;
+
+pub use region::{RegionHandle, RegionKind, RegionSpec};
+pub use service::{DdmService, FederateId, Notification};
+pub use space::{Dimension, RoutingSpace};

@@ -1,0 +1,90 @@
+//! Region specifications (HLA OMT "region specification": one range
+//! per dimension).
+
+use crate::core::interval::Interval;
+
+/// Subscription or update side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RegionKind {
+    Subscription,
+    Update,
+}
+
+/// Stable external handle for a registered region.
+///
+/// Handles survive internal compaction (the service maintains a
+/// handle → dense-index map); `kind` is encoded so misuse is caught.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RegionHandle {
+    pub kind: RegionKind,
+    pub id: u32,
+}
+
+/// A region specification: one half-open integer range per dimension.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegionSpec {
+    pub ranges: Vec<(u64, u64)>,
+}
+
+impl RegionSpec {
+    pub fn new(ranges: Vec<(u64, u64)>) -> Self {
+        Self { ranges }
+    }
+
+    /// 1-D helper.
+    pub fn interval(lo: u64, hi: u64) -> Self {
+        Self {
+            ranges: vec![(lo, hi)],
+        }
+    }
+
+    /// 2-D helper.
+    pub fn rect(x: (u64, u64), y: (u64, u64)) -> Self {
+        Self {
+            ranges: vec![x, y],
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Convert to per-dimension f64 intervals (matching layer input).
+    pub fn to_intervals(&self) -> Vec<Interval> {
+        self.ranges
+            .iter()
+            .map(|&(lo, hi)| Interval::new(lo as f64, hi as f64))
+            .collect()
+    }
+
+    /// HLA-semantics overlap (projection test on every dimension).
+    pub fn overlaps(&self, other: &RegionSpec) -> bool {
+        debug_assert_eq!(self.d(), other.d());
+        self.ranges
+            .iter()
+            .zip(&other.ranges)
+            .all(|(&(alo, ahi), &(blo, bhi))| alo < bhi && blo < ahi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        let spec = RegionSpec::rect((0, 10), (5, 8));
+        let ivs = spec.to_intervals();
+        assert_eq!(ivs[0], Interval::new(0.0, 10.0));
+        assert_eq!(ivs[1], Interval::new(5.0, 8.0));
+    }
+
+    #[test]
+    fn overlap_semantics() {
+        let a = RegionSpec::rect((0, 10), (0, 10));
+        let b = RegionSpec::rect((5, 15), (9, 20));
+        let c = RegionSpec::rect((10, 15), (0, 10)); // touches a on x
+        assert!(a.overlaps(&b));
+        assert!(!a.overlaps(&c));
+    }
+}

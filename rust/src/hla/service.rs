@@ -1,0 +1,461 @@
+//! The DDM service: federates, region registration, matching and
+//! notification routing (the paper's Fig. 1 scenario, as a library).
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Context, Result};
+
+use super::region::{RegionHandle, RegionKind, RegionSpec};
+use super::space::RoutingSpace;
+use crate::algos::interval_tree::IntervalTree;
+use crate::algos::{Algo, MatchParams};
+use crate::core::sink::VecSink;
+use crate::core::{ddim, RegionsNd};
+use crate::exec::ThreadPool;
+
+/// Identifies a joined federate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FederateId(pub u32);
+
+/// An update notification delivered to a subscribing federate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Notification {
+    pub from: FederateId,
+    pub update: RegionHandle,
+    pub subscription: RegionHandle,
+    pub payload: u64,
+}
+
+struct Federate {
+    name: String,
+    mailbox: VecDeque<Notification>,
+}
+
+/// Dense storage of one side's regions with stable handles.
+struct SideStore {
+    regions: RegionsNd,
+    owner: Vec<FederateId>,
+    /// dense index -> handle id
+    handle_of: Vec<u32>,
+    /// handle id -> dense index (None = deleted)
+    index_of: Vec<Option<u32>>,
+}
+
+impl SideStore {
+    fn new(d: usize) -> Self {
+        Self {
+            regions: RegionsNd::new(d),
+            owner: Vec::new(),
+            handle_of: Vec::new(),
+            index_of: Vec::new(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.regions.len()
+    }
+
+    fn insert(&mut self, spec: &RegionSpec, owner: FederateId) -> u32 {
+        let handle_id = self.index_of.len() as u32;
+        let dense = self.regions.len() as u32;
+        self.regions.push(&spec.to_intervals());
+        self.owner.push(owner);
+        self.handle_of.push(handle_id);
+        self.index_of.push(Some(dense));
+        handle_id
+    }
+
+    fn dense(&self, handle_id: u32) -> Result<usize> {
+        self.index_of
+            .get(handle_id as usize)
+            .copied()
+            .flatten()
+            .map(|i| i as usize)
+            .with_context(|| format!("region handle {handle_id} is not registered"))
+    }
+
+    fn modify(&mut self, handle_id: u32, spec: &RegionSpec) -> Result<()> {
+        let i = self.dense(handle_id)?;
+        for (k, iv) in spec.to_intervals().into_iter().enumerate() {
+            self.regions.dims[k].set(i, iv);
+        }
+        Ok(())
+    }
+
+    /// Swap-remove, fixing up the displaced region's handle mapping.
+    fn delete(&mut self, handle_id: u32) -> Result<()> {
+        let i = self.dense(handle_id)?;
+        let last = self.regions.len() - 1;
+        for dim in self.regions.dims.iter_mut() {
+            dim.lo.swap_remove(i);
+            dim.hi.swap_remove(i);
+        }
+        self.owner.swap_remove(i);
+        let moved_handle = self.handle_of[last];
+        self.handle_of.swap_remove(i);
+        if i <= last && i < self.handle_of.len() {
+            self.index_of[moved_handle as usize] = Some(i as u32);
+        }
+        self.index_of[handle_id as usize] = None;
+        Ok(())
+    }
+}
+
+/// The Data Distribution Management service.
+pub struct DdmService {
+    space: RoutingSpace,
+    federates: Vec<Federate>,
+    subs: SideStore,
+    upds: SideStore,
+    /// Cached dim-0 interval tree over subscriptions (publish path);
+    /// rebuilt lazily after mutations.
+    sub_tree: Option<IntervalTree>,
+    /// Counters.
+    pub notifications_routed: u64,
+    pub matches_run: u64,
+}
+
+impl DdmService {
+    pub fn new(space: RoutingSpace) -> Self {
+        let d = space.d().max(1);
+        Self {
+            space,
+            federates: Vec::new(),
+            subs: SideStore::new(d),
+            upds: SideStore::new(d),
+            sub_tree: None,
+            notifications_routed: 0,
+            matches_run: 0,
+        }
+    }
+
+    pub fn space(&self) -> &RoutingSpace {
+        &self.space
+    }
+
+    pub fn n_subscriptions(&self) -> usize {
+        self.subs.len()
+    }
+
+    pub fn n_updates(&self) -> usize {
+        self.upds.len()
+    }
+
+    // ---- federates -------------------------------------------------------
+
+    pub fn join(&mut self, name: impl Into<String>) -> FederateId {
+        let id = FederateId(self.federates.len() as u32);
+        self.federates.push(Federate {
+            name: name.into(),
+            mailbox: VecDeque::new(),
+        });
+        id
+    }
+
+    pub fn federate_name(&self, id: FederateId) -> Option<&str> {
+        self.federates.get(id.0 as usize).map(|f| f.name.as_str())
+    }
+
+    /// Drain a federate's mailbox.
+    pub fn poll(&mut self, id: FederateId) -> Vec<Notification> {
+        match self.federates.get_mut(id.0 as usize) {
+            Some(f) => f.mailbox.drain(..).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    pub fn mailbox_len(&self, id: FederateId) -> usize {
+        self.federates
+            .get(id.0 as usize)
+            .map_or(0, |f| f.mailbox.len())
+    }
+
+    // ---- region registration ----------------------------------------------
+
+    pub fn register(
+        &mut self,
+        fed: FederateId,
+        kind: RegionKind,
+        spec: &RegionSpec,
+    ) -> Result<RegionHandle> {
+        self.space.validate_ranges(&spec.ranges)?;
+        if fed.0 as usize >= self.federates.len() {
+            bail!("federate {} has not joined", fed.0);
+        }
+        let store = match kind {
+            RegionKind::Subscription => &mut self.subs,
+            RegionKind::Update => &mut self.upds,
+        };
+        let id = store.insert(spec, fed);
+        if kind == RegionKind::Subscription {
+            self.sub_tree = None;
+        }
+        Ok(RegionHandle { kind, id })
+    }
+
+    pub fn modify(&mut self, handle: RegionHandle, spec: &RegionSpec) -> Result<()> {
+        self.space.validate_ranges(&spec.ranges)?;
+        match handle.kind {
+            RegionKind::Subscription => {
+                self.subs.modify(handle.id, spec)?;
+                self.sub_tree = None;
+            }
+            RegionKind::Update => self.upds.modify(handle.id, spec)?,
+        }
+        Ok(())
+    }
+
+    pub fn delete(&mut self, handle: RegionHandle) -> Result<()> {
+        match handle.kind {
+            RegionKind::Subscription => {
+                self.subs.delete(handle.id)?;
+                self.sub_tree = None;
+            }
+            RegionKind::Update => self.upds.delete(handle.id)?,
+        }
+        Ok(())
+    }
+
+    // ---- matching ----------------------------------------------------------
+
+    /// Full match: every overlapping (subscription, update) handle pair,
+    /// computed with the selected algorithm on `nthreads` workers.
+    pub fn match_all(
+        &mut self,
+        algo: Algo,
+        pool: &ThreadPool,
+        nthreads: usize,
+        params: &MatchParams,
+    ) -> Vec<(RegionHandle, RegionHandle)> {
+        self.matches_run += 1;
+        let subs = &self.subs.regions;
+        let upds = &self.upds.regions;
+        let mut sink = VecSink::default();
+        ddim::match_nd(
+            subs,
+            upds,
+            |s1, u1, out| {
+                let pairs = crate::algos::run_pairs(algo, pool, nthreads, s1, u1, params);
+                out.pairs.extend(pairs);
+            },
+            &mut sink,
+        );
+        sink.pairs
+            .into_iter()
+            .map(|(si, uj)| {
+                (
+                    RegionHandle {
+                        kind: RegionKind::Subscription,
+                        id: self.subs.handle_of[si as usize],
+                    },
+                    RegionHandle {
+                        kind: RegionKind::Update,
+                        id: self.upds.handle_of[uj as usize],
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// Subscriptions overlapping one update region (the publish path):
+    /// dim-0 interval-tree candidates, filtered on the remaining
+    /// dimensions (§3's dynamic usage of the interval tree).
+    pub fn overlapping_subscriptions(&mut self, update: RegionHandle) -> Result<Vec<RegionHandle>> {
+        if update.kind != RegionKind::Update {
+            bail!("overlapping_subscriptions takes an update handle");
+        }
+        let uj = self.upds.dense(update.id)?;
+        let tree = self
+            .sub_tree
+            .get_or_insert_with(|| IntervalTree::from_regions(self.subs.regions.project(0)));
+        let q0 = self.upds.regions.dims[0].get(uj);
+        let mut out = Vec::new();
+        let subs = &self.subs;
+        let upds = &self.upds;
+        tree.query(q0, &mut |si| {
+            let ok = (1..subs.regions.d()).all(|k| {
+                subs.regions.dims[k]
+                    .get(si as usize)
+                    .intersects(&upds.regions.dims[k].get(uj))
+            });
+            if ok {
+                out.push(RegionHandle {
+                    kind: RegionKind::Subscription,
+                    id: subs.handle_of[si as usize],
+                });
+            }
+        });
+        Ok(out)
+    }
+
+    /// Publish an update: route `payload` to every federate owning an
+    /// overlapping subscription (at-most-once per overlapping region).
+    pub fn publish(&mut self, update: RegionHandle, payload: u64) -> Result<usize> {
+        let targets = self.overlapping_subscriptions(update)?;
+        let from = self.upds.owner[self.upds.dense(update.id)?];
+        let mut delivered = 0;
+        for sub in targets {
+            let dense = self.subs.dense(sub.id)?;
+            let owner = self.subs.owner[dense];
+            self.federates[owner.0 as usize].mailbox.push_back(Notification {
+                from,
+                update,
+                subscription: sub,
+                payload,
+            });
+            delivered += 1;
+        }
+        self.notifications_routed += delivered as u64;
+        Ok(delivered)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_fed_service() -> (DdmService, FederateId, FederateId) {
+        let mut svc = DdmService::new(RoutingSpace::uniform(2, 1000));
+        let a = svc.join("vehicles");
+        let b = svc.join("lights");
+        (svc, a, b)
+    }
+
+    #[test]
+    fn register_match_publish_roundtrip() {
+        let (mut svc, veh, lights) = two_fed_service();
+        let s1 = svc
+            .register(veh, RegionKind::Subscription, &RegionSpec::rect((0, 100), (0, 100)))
+            .unwrap();
+        let _s2 = svc
+            .register(veh, RegionKind::Subscription, &RegionSpec::rect((500, 600), (0, 100)))
+            .unwrap();
+        let u1 = svc
+            .register(lights, RegionKind::Update, &RegionSpec::rect((50, 150), (50, 150)))
+            .unwrap();
+
+        // match_all sees exactly (s1, u1).
+        let pool = ThreadPool::new(1);
+        let pairs = svc.match_all(Algo::Psbm, &pool, 2, &MatchParams::default());
+        assert_eq!(pairs, vec![(s1, u1)]);
+
+        // publish routes one notification to the vehicles federate.
+        let delivered = svc.publish(u1, 42).unwrap();
+        assert_eq!(delivered, 1);
+        let mail = svc.poll(veh);
+        assert_eq!(mail.len(), 1);
+        assert_eq!(mail[0].payload, 42);
+        assert_eq!(mail[0].subscription, s1);
+        assert!(svc.poll(veh).is_empty(), "mailbox drained");
+    }
+
+    #[test]
+    fn validation_rejects_out_of_space() {
+        let (mut svc, veh, _) = two_fed_service();
+        let err = svc.register(
+            veh,
+            RegionKind::Subscription,
+            &RegionSpec::rect((0, 100), (0, 2000)),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn modify_moves_matches() {
+        let (mut svc, veh, lights) = two_fed_service();
+        let s = svc
+            .register(veh, RegionKind::Subscription, &RegionSpec::rect((0, 10), (0, 10)))
+            .unwrap();
+        let u = svc
+            .register(lights, RegionKind::Update, &RegionSpec::rect((50, 60), (0, 10)))
+            .unwrap();
+        assert_eq!(svc.overlapping_subscriptions(u).unwrap(), vec![]);
+        svc.modify(s, &RegionSpec::rect((55, 65), (0, 10))).unwrap();
+        assert_eq!(svc.overlapping_subscriptions(u).unwrap(), vec![s]);
+        svc.modify(u, &RegionSpec::rect((100, 110), (0, 10))).unwrap();
+        assert_eq!(svc.overlapping_subscriptions(u).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn delete_with_swap_keeps_handles_stable() {
+        let (mut svc, veh, lights) = two_fed_service();
+        let spec = |x: u64| RegionSpec::rect((x, x + 10), (0, 10));
+        let s0 = svc.register(veh, RegionKind::Subscription, &spec(0)).unwrap();
+        let s1 = svc.register(veh, RegionKind::Subscription, &spec(100)).unwrap();
+        let s2 = svc.register(veh, RegionKind::Subscription, &spec(200)).unwrap();
+        let u = svc
+            .register(lights, RegionKind::Update, &RegionSpec::rect((205, 215), (0, 10)))
+            .unwrap();
+        svc.delete(s0).unwrap(); // swap-remove displaces s2
+        assert_eq!(svc.overlapping_subscriptions(u).unwrap(), vec![s2]);
+        svc.delete(s2).unwrap();
+        assert_eq!(svc.overlapping_subscriptions(u).unwrap(), vec![]);
+        // s1 still valid.
+        svc.modify(s1, &spec(210)).unwrap();
+        assert_eq!(svc.overlapping_subscriptions(u).unwrap(), vec![s1]);
+        // deleted handles error.
+        assert!(svc.modify(s0, &spec(0)).is_err());
+    }
+
+    #[test]
+    fn publish_fans_out_to_multiple_federates() {
+        let mut svc = DdmService::new(RoutingSpace::uniform(1, 1000));
+        let feds: Vec<FederateId> = (0..4).map(|i| svc.join(format!("f{i}"))).collect();
+        for &f in &feds {
+            svc.register(f, RegionKind::Subscription, &RegionSpec::interval(0, 500))
+                .unwrap();
+        }
+        let pub_fed = svc.join("publisher");
+        let u = svc
+            .register(pub_fed, RegionKind::Update, &RegionSpec::interval(100, 200))
+            .unwrap();
+        let delivered = svc.publish(u, 7).unwrap();
+        assert_eq!(delivered, 4);
+        for &f in &feds {
+            assert_eq!(svc.mailbox_len(f), 1);
+        }
+        assert_eq!(svc.notifications_routed, 4);
+    }
+
+    #[test]
+    fn match_all_algorithms_agree_on_service_state() {
+        let mut svc = DdmService::new(RoutingSpace::uniform(2, 10_000));
+        let f = svc.join("f");
+        let mut rng = crate::prng::Rng::new(0x44A);
+        for _ in 0..80 {
+            let x = rng.below(9000);
+            let y = rng.below(9000);
+            svc.register(
+                f,
+                RegionKind::Subscription,
+                &RegionSpec::rect((x, x + 500), (y, y + 500)),
+            )
+            .unwrap();
+        }
+        for _ in 0..60 {
+            let x = rng.below(9000);
+            let y = rng.below(9000);
+            svc.register(
+                f,
+                RegionKind::Update,
+                &RegionSpec::rect((x, x + 400), (y, y + 400)),
+            )
+            .unwrap();
+        }
+        let pool = ThreadPool::new(3);
+        let params = MatchParams {
+            ncells: 64,
+            ..Default::default()
+        };
+        let mut sets: Vec<Vec<(RegionHandle, RegionHandle)>> = Vec::new();
+        for algo in Algo::ALL {
+            let mut pairs = svc.match_all(algo, &pool, 4, &params);
+            pairs.sort_by_key(|(a, b)| (a.id, b.id));
+            sets.push(pairs);
+        }
+        for w in sets.windows(2) {
+            assert_eq!(w[0], w[1]);
+        }
+        assert!(!sets[0].is_empty());
+    }
+}

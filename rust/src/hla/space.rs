@@ -1,0 +1,95 @@
+//! HLA dimensions and routing spaces (IEEE 1516 OMT, paper §1).
+
+use anyhow::{bail, Result};
+
+/// One HLA dimension: integer values `0..upper`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dimension {
+    pub name: String,
+    pub upper: u64,
+}
+
+impl Dimension {
+    pub fn new(name: impl Into<String>, upper: u64) -> Self {
+        Self {
+            name: name.into(),
+            upper,
+        }
+    }
+}
+
+/// An ordered set of dimensions (what region specs range over).
+#[derive(Debug, Clone, Default)]
+pub struct RoutingSpace {
+    pub dimensions: Vec<Dimension>,
+}
+
+impl RoutingSpace {
+    pub fn new(dimensions: Vec<Dimension>) -> Self {
+        Self { dimensions }
+    }
+
+    /// Convenience: a d-dimensional space with uniform upper bound.
+    pub fn uniform(d: usize, upper: u64) -> Self {
+        Self {
+            dimensions: (0..d)
+                .map(|i| Dimension::new(format!("dim{i}"), upper))
+                .collect(),
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.dimensions.len()
+    }
+
+    pub fn dim_index(&self, name: &str) -> Option<usize> {
+        self.dimensions.iter().position(|d| d.name == name)
+    }
+
+    /// Validate a per-dimension list of half-open integer ranges.
+    pub fn validate_ranges(&self, ranges: &[(u64, u64)]) -> Result<()> {
+        if ranges.len() != self.d() {
+            bail!(
+                "region has {} ranges but the space has {} dimensions",
+                ranges.len(),
+                self.d()
+            );
+        }
+        for (k, &(lo, hi)) in ranges.iter().enumerate() {
+            let dim = &self.dimensions[k];
+            if lo > hi {
+                bail!("dimension '{}': range [{lo}, {hi}) has lo > hi", dim.name);
+            }
+            if hi > dim.upper {
+                bail!(
+                    "dimension '{}': upper bound {hi} exceeds dimension bound {}",
+                    dim.name,
+                    dim.upper
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_space() {
+        let s = RoutingSpace::uniform(2, 100);
+        assert_eq!(s.d(), 2);
+        assert_eq!(s.dim_index("dim1"), Some(1));
+        assert_eq!(s.dim_index("nope"), None);
+    }
+
+    #[test]
+    fn validation() {
+        let s = RoutingSpace::uniform(2, 100);
+        assert!(s.validate_ranges(&[(0, 10), (5, 100)]).is_ok());
+        assert!(s.validate_ranges(&[(0, 10)]).is_err()); // wrong arity
+        assert!(s.validate_ranges(&[(0, 10), (5, 101)]).is_err()); // over bound
+        assert!(s.validate_ranges(&[(11, 10), (0, 1)]).is_err()); // lo > hi
+    }
+}

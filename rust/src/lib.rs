@@ -1,0 +1,45 @@
+//! # ddm — Parallel Data Distribution Management
+//!
+//! A reproduction of *"Parallel Data Distribution Management on
+//! Shared-Memory Multiprocessors"* (Marzolla & D'Angelo, ACM TOMACS 2020,
+//! DOI 10.1145/3369759) as a production-shaped library.
+//!
+//! The crate contains:
+//!
+//! * [`core`] — intervals, d-rectangles, regions and the d-dimensional
+//!   reduction of the region matching problem (paper §2).
+//! * [`exec`] — the shared-memory parallel runtime the paper builds on
+//!   OpenMP for: a thread pool, chunked `parallel_for`, parallel merge
+//!   sort and the two-level parallel prefix scan of paper Fig. 7.
+//! * [`sets`] — pluggable active-set data structures (the paper's §5
+//!   `std::set` / bit-vector / hash study).
+//! * [`algos`] — the matching algorithms: BFM (Alg. 2), GBM (Alg. 3),
+//!   SBM (Alg. 4), ITM (Alg. 5, §3) and **Parallel SBM** (Alg. 6+7, §4,
+//!   the paper's main contribution), plus dynamic interval management.
+//! * [`hla`] — a miniature HLA/RTI Data Distribution Management service:
+//!   dimensions, region specifications, federates and notification
+//!   routing (the system that consumes the matchers).
+//! * [`workload`] — synthetic α-model workloads (§5) and a Köln-like
+//!   vehicular trace generator (Fig. 14 substitution).
+//! * [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX+Pallas
+//!   matching kernels (`artifacts/*.hlo.txt`).
+//! * [`coordinator`] — the service layer: region registration, match
+//!   scheduling, notification fan-out, metrics.
+//! * [`bench`] — measurement harness: timing, statistics, speedup
+//!   modeling, RSS metrics, paper-style table output.
+
+pub mod core;
+pub mod exec;
+pub mod sets;
+pub mod algos;
+pub mod hla;
+pub mod workload;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod prng;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

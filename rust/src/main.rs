@@ -1,0 +1,196 @@
+//! `ddm` — the coordinator binary.
+//!
+//! Subcommands:
+//!   ddm match      run one matching job and report K + wall-clock
+//!   ddm xla-match  same, on the AOT-compiled XLA backend
+//!   ddm serve      run the coordinator service on a scripted scenario
+//!   ddm info       host/Table-1 report + artifact status
+//!
+//! Examples:
+//!   ddm match --algo psbm --n 1e6 --alpha 100 --threads 8 --set bit
+//!   ddm match --algo gbm --workload koln --scale 0.1 --ncells 3000
+//!   ddm xla-match --n 4096 --alpha 10
+//!   ddm serve --config examples/service.toml
+
+use std::time::Instant;
+
+use ddm::algos::{Algo, MatchParams};
+use ddm::bench::{rss, sysinfo};
+use ddm::cli::Args;
+use ddm::coordinator::{Coordinator, CoordinatorConfig};
+use ddm::exec::ThreadPool;
+use ddm::hla::{RegionKind, RegionSpec, RoutingSpace};
+use ddm::sets::SetImpl;
+use ddm::workload::koln::{koln_workload, KolnParams};
+use ddm::workload::{alpha_workload, AlphaParams};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: ddm <match|xla-match|serve|info> [options]\n\
+         options are documented in rust/src/main.rs and README.md"
+    );
+    std::process::exit(2)
+}
+
+fn load_workload(args: &Args) -> (ddm::core::Regions1D, ddm::core::Regions1D, String) {
+    let seed: u64 = args.opt("seed", 42u64);
+    match args.get("workload").unwrap_or("alpha") {
+        "koln" => {
+            let p = KolnParams::default().scaled(args.opt("scale", 1.0f64));
+            let (s, u) = koln_workload(seed, &p);
+            (s, u, format!("koln positions={}", p.positions))
+        }
+        _ => {
+            let p = AlphaParams {
+                n_total: args.size("n", 1_000_000),
+                alpha: args.opt("alpha", 100.0),
+                space: args.opt("space", 1e6),
+            };
+            let (s, u) = alpha_workload(seed, &p);
+            (s, u, format!("alpha N={} α={}", p.n_total, p.alpha))
+        }
+    }
+}
+
+fn cmd_match(args: &Args) {
+    let algo: Algo = args
+        .get("algo")
+        .unwrap_or("psbm")
+        .parse()
+        .unwrap_or_else(|e| panic!("{e}"));
+    let threads: usize = args.opt("threads", 4usize);
+    let params = MatchParams {
+        ncells: args.opt("ncells", 3000usize),
+        set_impl: args
+            .get("set")
+            .map(|s| s.parse::<SetImpl>().unwrap_or_else(|e| panic!("{e}")))
+            .unwrap_or(SetImpl::Sparse),
+    };
+    let (subs, upds, desc) = load_workload(args);
+    let pool = ThreadPool::new(threads.saturating_sub(1));
+    println!(
+        "match: algo={} threads={} set={} workload=[{}]",
+        algo.name(),
+        threads,
+        params.set_impl.name(),
+        desc
+    );
+    let t0 = Instant::now();
+    let k = ddm::algos::run_count(algo, &pool, threads, &subs, &upds, &params);
+    let dt = t0.elapsed();
+    println!(
+        "K={k} intersections in {} (peak RSS {})",
+        ddm::bench::stats::fmt_secs(dt.as_secs_f64()),
+        rss::peak_rss_bytes().map(rss::fmt_bytes).unwrap_or_default()
+    );
+}
+
+fn cmd_xla_match(args: &Args) {
+    let dir = std::path::Path::new(ddm::runtime::DEFAULT_ARTIFACT_DIR);
+    if !ddm::runtime::artifacts_available(dir) {
+        eprintln!("artifacts missing: run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let (subs, upds, desc) = load_workload(args);
+    println!("xla-match: workload=[{desc}]");
+    let t0 = Instant::now();
+    let be = ddm::runtime::XlaMatchBackend::load(dir).expect("backend");
+    let t_load = t0.elapsed();
+    let t1 = Instant::now();
+    let k = be.match_counts_1d(&subs, &upds).expect("xla match");
+    println!(
+        "K={k} in {} (backend load+compile {})",
+        ddm::bench::stats::fmt_secs(t1.elapsed().as_secs_f64()),
+        ddm::bench::stats::fmt_secs(t_load.as_secs_f64()),
+    );
+}
+
+fn cmd_serve(args: &Args) {
+    // Scripted scenario driven by a config file: a population of
+    // moving vehicle federates publishing position updates each step.
+    let cfg_path = args.get("config").map(std::path::PathBuf::from);
+    let cfg = cfg_path
+        .as_deref()
+        .map(|p| ddm::config::Config::load(p).expect("config loads"))
+        .unwrap_or_else(|| ddm::config::Config::parse("").unwrap());
+    let steps = args.opt("steps", cfg.int_or("serve", "steps", 50) as usize);
+    let vehicles = args.opt("vehicles", cfg.int_or("serve", "vehicles", 200) as usize);
+    let threads = args.opt("threads", cfg.int_or("serve", "threads", 2) as usize);
+    let space_len = cfg.int_or("serve", "space", 100_000) as u64;
+
+    let coord = Coordinator::spawn(CoordinatorConfig {
+        space: RoutingSpace::uniform(1, space_len),
+        nthreads: threads,
+        ..Default::default()
+    });
+    let c = coord.client();
+    let fed = c.join("vehicles");
+    let mut rng = ddm::prng::Rng::new(args.opt("seed", 7u64));
+    let mut handles = Vec::new();
+    for _ in 0..vehicles {
+        let x = rng.below(space_len - 200);
+        let sub = c
+            .register(fed, RegionKind::Subscription, RegionSpec::interval(x, x + 200))
+            .unwrap();
+        let upd = c
+            .register(fed, RegionKind::Update, RegionSpec::interval(x + 50, x + 150))
+            .unwrap();
+        handles.push((sub, upd, x));
+    }
+    let t0 = Instant::now();
+    let mut delivered = 0usize;
+    for step in 0..steps {
+        for (sub, upd, x) in handles.iter_mut() {
+            *x = (*x + rng.below(20)).min(space_len - 200);
+            c.modify(*sub, RegionSpec::interval(*x, *x + 200)).unwrap();
+            c.modify(*upd, RegionSpec::interval(*x + 50, *x + 150)).unwrap();
+            delivered += c.publish(*upd, step as u64).unwrap();
+        }
+        let _ = c.poll(fed);
+    }
+    let dt = t0.elapsed();
+    println!(
+        "serve: {steps} steps x {vehicles} vehicles -> {delivered} notifications in {} \
+         ({:.0} publishes/s)",
+        ddm::bench::stats::fmt_secs(dt.as_secs_f64()),
+        (steps * vehicles) as f64 / dt.as_secs_f64()
+    );
+    let m = coord.shutdown();
+    m.table().print();
+}
+
+fn cmd_info(_args: &Args) {
+    println!("host:");
+    sysinfo::table1().print();
+    let dir = std::path::Path::new(ddm::runtime::DEFAULT_ARTIFACT_DIR);
+    if ddm::runtime::artifacts_available(dir) {
+        let m = ddm::runtime::Manifest::load(dir).expect("manifest");
+        println!("\nartifacts ({}):", m.entries.len());
+        for e in m.entries {
+            println!(
+                "  {} kind={:?} n={} m={} d={} [{}]",
+                e.name,
+                e.kind,
+                e.n,
+                e.m,
+                e.d,
+                e.path.display()
+            );
+        }
+    } else {
+        println!("\nartifacts: NOT BUILT (run `make artifacts`)");
+    }
+}
+
+fn main() {
+    let all: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = all.first().cloned() else { usage() };
+    let args = Args::from_iter(all.into_iter().skip(1));
+    match cmd.as_str() {
+        "match" => cmd_match(&args),
+        "xla-match" => cmd_xla_match(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(&args),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,352 @@
+//! The XLA matching backend: DDM matching on the AOT-compiled
+//! JAX+Pallas kernels.
+//!
+//! This is the system's "accelerator path": the dense tiled matcher
+//! (DESIGN.md §3, hardware adaptation of the paper's GPU remarks).
+//! Inputs of arbitrary size are tiled over the compiled capacity and
+//! padded with the kernels' PAD sentinel (`1e30`, half-open ⇒ padded
+//! rows never match).
+//!
+//! Coordinates are converted f64 → f32; callers whose coordinates
+//! exceed f32's 24-bit integer range should pre-scale (the HLA spec's
+//! integer dimensions fit comfortably for upper bounds < 2²⁴).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::loader::{ArtifactKind, LoadedArtifact, Runtime};
+use crate::core::{Regions1D, RegionsNd};
+
+/// Padding sentinel — must match `python/compile/kernels/overlap.py`.
+pub const PAD: f32 = 1.0e30;
+
+/// DDM matching backed by compiled XLA executables.
+pub struct XlaMatchBackend {
+    rt: Runtime,
+}
+
+impl XlaMatchBackend {
+    pub fn load(dir: &Path) -> Result<Self> {
+        Ok(Self {
+            rt: Runtime::load(dir)?,
+        })
+    }
+
+    /// Capacities (n, m) of the counts artifact for dimension `d`.
+    pub fn counts_capacity(&self, d: usize) -> Option<(usize, usize)> {
+        self.rt
+            .find(ArtifactKind::Counts, d)
+            .map(|a| (a.meta.n, a.meta.m))
+    }
+
+    /// Pack one side's bounds for a tile: `[cap, d]` f32, PAD-filled.
+    fn pack(
+        regions: &RegionsNd,
+        range: std::ops::Range<usize>,
+        cap: usize,
+        lower: bool,
+    ) -> Vec<f32> {
+        let d = regions.d();
+        let mut out = vec![PAD; cap * d];
+        for (row, i) in range.enumerate() {
+            for (k, dim) in regions.dims.iter().enumerate() {
+                out[row * d + k] = if lower {
+                    dim.lo[i] as f32
+                } else {
+                    dim.hi[i] as f32
+                };
+            }
+        }
+        out
+    }
+
+    fn literal(data: &[f32], rows: usize, d: usize) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, d as i64])?)
+    }
+
+    /// Total intersection count via the tiled counts kernel.
+    ///
+    /// Tiles the (n × m) pair space over the compiled capacity; each
+    /// tile is one PJRT execution. K = Σ tile totals.
+    pub fn match_counts(&self, subs: &RegionsNd, upds: &RegionsNd) -> Result<u64> {
+        let d = subs.d();
+        if upds.d() != d {
+            bail!("dimension mismatch: {} vs {}", d, upds.d());
+        }
+        let art = self
+            .rt
+            .find(ArtifactKind::Counts, d)
+            .with_context(|| format!("no counts artifact for d={d}"))?;
+        let (cap_n, cap_m) = (art.meta.n, art.meta.m);
+        let mut total = 0u64;
+        let mut i = 0;
+        while i < subs.len().max(1) {
+            let si = i..(i + cap_n).min(subs.len());
+            let s_lo = Self::pack(subs, si.clone(), cap_n, true);
+            let s_hi = Self::pack(subs, si.clone(), cap_n, false);
+            let mut j = 0;
+            while j < upds.len().max(1) {
+                let uj = j..(j + cap_m).min(upds.len());
+                let u_lo = Self::pack(upds, uj.clone(), cap_m, true);
+                let u_hi = Self::pack(upds, uj.clone(), cap_m, false);
+                total += self.run_counts_tile(art, &s_lo, &s_hi, &u_lo, &u_hi, d)?;
+                j += cap_m;
+                if upds.is_empty() {
+                    break;
+                }
+            }
+            i += cap_n;
+            if subs.is_empty() {
+                break;
+            }
+        }
+        Ok(total)
+    }
+
+    fn run_counts_tile(
+        &self,
+        art: &LoadedArtifact,
+        s_lo: &[f32],
+        s_hi: &[f32],
+        u_lo: &[f32],
+        u_hi: &[f32],
+        d: usize,
+    ) -> Result<u64> {
+        let (cap_n, cap_m) = (art.meta.n, art.meta.m);
+        let args = [
+            Self::literal(s_lo, cap_n, d)?,
+            Self::literal(s_hi, cap_n, d)?,
+            Self::literal(u_lo, cap_m, d)?,
+            Self::literal(u_hi, cap_m, d)?,
+        ];
+        let result = art.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        // L2 lowers with return_tuple=True: (counts[n], total).
+        let (_counts, total) = result.to_tuple2()?;
+        let t: Vec<i32> = total.to_vec()?;
+        Ok(t[0] as u64)
+    }
+
+    /// Enumerate intersecting pairs via the mask kernel (single tile —
+    /// meant for coordinator batches up to the compiled capacity).
+    pub fn match_pairs(
+        &self,
+        subs: &RegionsNd,
+        upds: &RegionsNd,
+    ) -> Result<Vec<(u32, u32)>> {
+        let d = subs.d();
+        let art = self
+            .rt
+            .find(ArtifactKind::Mask, d)
+            .with_context(|| format!("no mask artifact for d={d}"))?;
+        let (cap_n, cap_m) = (art.meta.n, art.meta.m);
+        if subs.len() > cap_n || upds.len() > cap_m {
+            bail!(
+                "mask capacity exceeded: {}x{} > {}x{}",
+                subs.len(),
+                upds.len(),
+                cap_n,
+                cap_m
+            );
+        }
+        let s_lo = Self::pack(subs, 0..subs.len(), cap_n, true);
+        let s_hi = Self::pack(subs, 0..subs.len(), cap_n, false);
+        let u_lo = Self::pack(upds, 0..upds.len(), cap_m, true);
+        let u_hi = Self::pack(upds, 0..upds.len(), cap_m, false);
+        let args = [
+            Self::literal(&s_lo, cap_n, d)?,
+            Self::literal(&s_hi, cap_n, d)?,
+            Self::literal(&u_lo, cap_m, d)?,
+            Self::literal(&u_hi, cap_m, d)?,
+        ];
+        let result = art.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let mask = result.to_tuple1()?;
+        let bytes: Vec<u8> = mask.to_vec()?;
+        let mut pairs = Vec::new();
+        for i in 0..subs.len() {
+            let row = &bytes[i * cap_m..i * cap_m + upds.len()];
+            for (j, &b) in row.iter().enumerate() {
+                if b != 0 {
+                    pairs.push((i as u32, j as u32));
+                }
+            }
+        }
+        Ok(pairs)
+    }
+
+    /// Run the compiled Fig.-7 prefix-sum pipeline (demo/validation).
+    pub fn prefix_sum(&self, xs: &[i32]) -> Result<Vec<i32>> {
+        let art = self
+            .rt
+            .find(ArtifactKind::Scan, 0)
+            .context("no scan artifact")?;
+        let cap = art.meta.n;
+        if xs.len() > cap {
+            bail!("scan capacity exceeded: {} > {cap}", xs.len());
+        }
+        let mut data = vec![0i32; cap];
+        data[..xs.len()].copy_from_slice(xs);
+        let lit = xla::Literal::vec1(&data);
+        let result = art.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let scanned = result.to_tuple1()?;
+        let out: Vec<i32> = scanned.to_vec()?;
+        Ok(out[..xs.len()].to_vec())
+    }
+
+    /// 1-D convenience wrappers (benches use these).
+    pub fn match_counts_1d(&self, subs: &Regions1D, upds: &Regions1D) -> Result<u64> {
+        self.match_counts(&wrap_1d(subs), &wrap_1d(upds))
+    }
+
+    pub fn match_pairs_1d(
+        &self,
+        subs: &Regions1D,
+        upds: &Regions1D,
+    ) -> Result<Vec<(u32, u32)>> {
+        self.match_pairs(&wrap_1d(subs), &wrap_1d(upds))
+    }
+}
+
+fn wrap_1d(r: &Regions1D) -> RegionsNd {
+    RegionsNd {
+        dims: vec![r.clone()],
+    }
+}
+
+/// Round region coordinates to f32 precision (in f64 storage).
+///
+/// The XLA kernels compute in f32; results agree with the native f64
+/// matchers exactly on f32-representable inputs. Callers comparing
+/// backends (tests, the `xla_backend` example, the A3 ablation) should
+/// quantize first; production users with sub-f32-ulp coordinate
+/// differences should scale their routing space instead.
+pub fn quantize_f32(r: &Regions1D) -> Regions1D {
+    Regions1D {
+        lo: r.lo.iter().map(|&x| x as f32 as f64).collect(),
+        hi: r.hi.iter().map(|&x| x as f32 as f64).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::bfm;
+    use crate::core::interval::Interval;
+    use crate::core::region::random_regions_1d;
+    use crate::core::sink::{canonicalize, CountSink, VecSink};
+    use crate::prng::Rng;
+
+    fn backend() -> Option<XlaMatchBackend> {
+        let dir = Path::new(crate::runtime::DEFAULT_ARTIFACT_DIR);
+        if !crate::runtime::artifacts_available(dir) {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(XlaMatchBackend::load(dir).expect("backend loads"))
+    }
+
+    /// f32-exact random regions (backend computes in f32).
+    fn q_regions(rng: &mut Rng, k: usize, space: f64, len: f64) -> Regions1D {
+        quantize_f32(&random_regions_1d(rng, k, space, len))
+    }
+
+    #[test]
+    fn counts_match_bfm_1d() {
+        let Some(be) = backend() else { return };
+        let mut rng = Rng::new(0xA1A);
+        let subs = q_regions(&mut rng, 300, 1000.0, 12.0);
+        let upds = q_regions(&mut rng, 450, 1000.0, 12.0);
+        let mut want = CountSink::default();
+        bfm::match_seq(&subs, &upds, &mut want);
+        let got = be.match_counts_1d(&subs, &upds).unwrap();
+        assert_eq!(got, want.count);
+    }
+
+    #[test]
+    fn counts_tile_across_capacity() {
+        let Some(be) = backend() else { return };
+        let (cap_n, cap_m) = be.counts_capacity(1).unwrap();
+        // Exceed both capacities to force 4+ tiles.
+        let mut rng = Rng::new(0xA1B);
+        let subs = q_regions(&mut rng, cap_n + 17, 1e5, 30.0);
+        let upds = q_regions(&mut rng, cap_m + 5, 1e5, 30.0);
+        let mut want = CountSink::default();
+        bfm::match_seq(&subs, &upds, &mut want);
+        let got = be.match_counts_1d(&subs, &upds).unwrap();
+        assert_eq!(got, want.count);
+    }
+
+    #[test]
+    fn pairs_match_bfm_1d() {
+        let Some(be) = backend() else { return };
+        let mut rng = Rng::new(0xA1C);
+        let subs = q_regions(&mut rng, 64, 100.0, 5.0);
+        let upds = q_regions(&mut rng, 80, 100.0, 5.0);
+        let mut want = VecSink::default();
+        bfm::match_seq(&subs, &upds, &mut want);
+        let got = be.match_pairs_1d(&subs, &upds).unwrap();
+        assert_eq!(canonicalize(got), canonicalize(want.pairs));
+    }
+
+    #[test]
+    fn counts_match_d2() {
+        let Some(be) = backend() else { return };
+        let mut rng = Rng::new(0xA1D);
+        let mut subs = RegionsNd::new(2);
+        let mut upds = RegionsNd::new(2);
+        for _ in 0..200 {
+            let r: Vec<Interval> = (0..2)
+                .map(|_| {
+                    let lo = rng.uniform(0.0, 100.0) as f32 as f64;
+                    let len = rng.uniform(0.0, 10.0) as f32 as f64;
+                    Interval::new(lo, (lo + len) as f32 as f64)
+                })
+                .collect();
+            subs.push(&r);
+        }
+        for _ in 0..150 {
+            let r: Vec<Interval> = (0..2)
+                .map(|_| {
+                    let lo = rng.uniform(0.0, 100.0) as f32 as f64;
+                    let len = rng.uniform(0.0, 10.0) as f32 as f64;
+                    Interval::new(lo, (lo + len) as f32 as f64)
+                })
+                .collect();
+            upds.push(&r);
+        }
+        let mut want = 0u64;
+        for i in 0..subs.len() {
+            for j in 0..upds.len() {
+                if subs.rects_intersect(i, &upds, j) {
+                    want += 1;
+                }
+            }
+        }
+        let got = be.match_counts(&subs, &upds).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn prefix_sum_matches_cumsum() {
+        let Some(be) = backend() else { return };
+        let mut rng = Rng::new(0xA1E);
+        let xs: Vec<i32> = (0..10_000).map(|_| rng.range(-5, 6) as i32).collect();
+        let got = be.prefix_sum(&xs).unwrap();
+        let mut acc = 0;
+        let want: Vec<i32> = xs
+            .iter()
+            .map(|&x| {
+                acc += x;
+                acc
+            })
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_inputs_count_zero() {
+        let Some(be) = backend() else { return };
+        let empty = Regions1D::default();
+        assert_eq!(be.match_counts_1d(&empty, &empty).unwrap(), 0);
+    }
+}

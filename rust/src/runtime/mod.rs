@@ -1,0 +1,27 @@
+//! PJRT/XLA runtime: load and execute the AOT-compiled JAX+Pallas
+//! matching kernels from `artifacts/*.hlo.txt`.
+//!
+//! This is the request-path end of the three-layer architecture:
+//! Python lowers the L2 graphs once at build time (`make artifacts`);
+//! the Rust coordinator compiles the HLO text with the PJRT CPU client
+//! at startup and executes it directly — no Python anywhere near the
+//! request path.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`), not
+//! serialized protos: jax ≥ 0.5 emits 64-bit instruction ids that the
+//! pinned xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod backend;
+pub mod loader;
+
+pub use backend::XlaMatchBackend;
+pub use loader::{ArtifactKind, ArtifactMeta, Manifest};
+
+/// Default artifact directory (relative to the repo root / CWD).
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// True if AOT artifacts are present (tests/benches skip politely
+/// when `make artifacts` has not run).
+pub fn artifacts_available(dir: &std::path::Path) -> bool {
+    dir.join("manifest.txt").exists()
+}

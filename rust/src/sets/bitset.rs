@@ -1,0 +1,133 @@
+//! Bit-vector active set (the paper's `boost::dynamic_bitset` analog).
+//!
+//! O(1) insert/remove/contains, O(universe/64) iteration and set
+//! algebra with word-parallel operations. Memory is Θ(universe) bits
+//! regardless of occupancy — the trade-off the paper's §4 GPU remarks
+//! discuss.
+
+use super::ActiveSet;
+
+#[derive(Debug, Clone)]
+pub struct BitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitSet {
+    #[inline]
+    fn slot(id: u32) -> (usize, u64) {
+        ((id >> 6) as usize, 1u64 << (id & 63))
+    }
+}
+
+impl ActiveSet for BitSet {
+    const NAME: &'static str = "bitvec";
+
+    fn with_universe(universe: usize) -> Self {
+        Self {
+            words: vec![0; universe.div_ceil(64)],
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn insert(&mut self, id: u32) {
+        let (w, m) = Self::slot(id);
+        let old = self.words[w];
+        self.words[w] = old | m;
+        self.len += usize::from(old & m == 0);
+    }
+
+    #[inline]
+    fn remove(&mut self, id: u32) {
+        let (w, m) = Self::slot(id);
+        let old = self.words[w];
+        self.words[w] = old & !m;
+        self.len -= usize::from(old & m != 0);
+    }
+
+    #[inline]
+    fn contains(&self, id: u32) -> bool {
+        let (w, m) = Self::slot(id);
+        self.words.get(w).is_some_and(|&x| x & m != 0)
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn clear(&mut self) {
+        self.words.fill(0);
+        self.len = 0;
+    }
+
+    fn for_each(&self, f: &mut dyn FnMut(u32)) {
+        for (wi, &word) in self.words.iter().enumerate() {
+            let mut w = word;
+            while w != 0 {
+                let bit = w.trailing_zeros();
+                f((wi as u32) << 6 | bit);
+                w &= w - 1;
+            }
+        }
+    }
+
+    /// Word-parallel union (overrides the per-element default).
+    fn union_with(&mut self, other: &Self) {
+        debug_assert_eq!(self.words.len(), other.words.len());
+        let mut len = 0usize;
+        for (a, &b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+            len += a.count_ones() as usize;
+        }
+        self.len = len;
+    }
+
+    /// Word-parallel difference (overrides the per-element default).
+    fn subtract(&mut self, other: &Self) {
+        debug_assert_eq!(self.words.len(), other.words.len());
+        let mut len = 0usize;
+        for (a, &b) in self.words.iter_mut().zip(&other.words) {
+            *a &= !b;
+            len += a.count_ones() as usize;
+        }
+        self.len = len;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_boundaries() {
+        let mut s = BitSet::with_universe(130);
+        for id in [0u32, 63, 64, 127, 128, 129] {
+            s.insert(id);
+            assert!(s.contains(id), "{id}");
+        }
+        assert_eq!(s.len(), 6);
+        assert_eq!(s.to_sorted_vec(), vec![0, 63, 64, 127, 128, 129]);
+    }
+
+    #[test]
+    fn word_parallel_algebra_keeps_len_consistent() {
+        let mut a = BitSet::with_universe(256);
+        let mut b = BitSet::with_universe(256);
+        for i in (0..256).step_by(2) {
+            a.insert(i);
+        }
+        for i in (0..256).step_by(3) {
+            b.insert(i);
+        }
+        let mut u = a.clone();
+        u.union_with(&b);
+        assert_eq!(u.len(), u.to_sorted_vec().len());
+        let mut d = a.clone();
+        d.subtract(&b);
+        assert_eq!(d.len(), d.to_sorted_vec().len());
+        // |A \ B| + |A ∩ B| = |A|
+        let inter = a.to_sorted_vec().iter().filter(|&&i| b.contains(i)).count();
+        assert_eq!(d.len() + inter, a.len());
+    }
+}

@@ -1,0 +1,51 @@
+//! Ordered-tree active set (the paper's `std::set`, found fastest in
+//! their C++ experiments; Rust's B-tree has far better cache behavior
+//! than a red-black tree, so this is the strongest like-for-like).
+
+use std::collections::BTreeSet;
+
+use super::ActiveSet;
+
+#[derive(Debug, Clone)]
+pub struct BTreeActiveSet {
+    inner: BTreeSet<u32>,
+}
+
+impl ActiveSet for BTreeActiveSet {
+    const NAME: &'static str = "btree";
+
+    fn with_universe(_universe: usize) -> Self {
+        Self {
+            inner: BTreeSet::new(),
+        }
+    }
+
+    #[inline]
+    fn insert(&mut self, id: u32) {
+        self.inner.insert(id);
+    }
+
+    #[inline]
+    fn remove(&mut self, id: u32) {
+        self.inner.remove(&id);
+    }
+
+    #[inline]
+    fn contains(&self, id: u32) -> bool {
+        self.inner.contains(&id)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn clear(&mut self) {
+        self.inner.clear();
+    }
+
+    fn for_each(&self, f: &mut dyn FnMut(u32)) {
+        for &i in &self.inner {
+            f(i);
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! Hash-table active set (the paper's `std::unordered_set`).
+
+use std::collections::HashSet;
+
+use super::ActiveSet;
+
+#[derive(Debug, Clone)]
+pub struct HashActiveSet {
+    inner: HashSet<u32>,
+}
+
+impl ActiveSet for HashActiveSet {
+    const NAME: &'static str = "hash";
+
+    fn with_universe(_universe: usize) -> Self {
+        Self {
+            inner: HashSet::new(),
+        }
+    }
+
+    #[inline]
+    fn insert(&mut self, id: u32) {
+        self.inner.insert(id);
+    }
+
+    #[inline]
+    fn remove(&mut self, id: u32) {
+        self.inner.remove(&id);
+    }
+
+    #[inline]
+    fn contains(&self, id: u32) -> bool {
+        self.inner.contains(&id)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn clear(&mut self) {
+        self.inner.clear();
+    }
+
+    fn for_each(&self, f: &mut dyn FnMut(u32)) {
+        for &i in &self.inner {
+            f(i);
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Active-set data structures for the SBM sweep (paper §5).
+//!
+//! SBM and Parallel SBM track the sets of *active* subscription and
+//! update regions; Parallel SBM additionally needs whole-set unions and
+//! differences for the Algorithm 7 master combine. The paper compared
+//! `std::vector<bool>`, raw bit vectors, `std::set` (red-black tree),
+//! `std::unordered_set` (hash) and `boost::dynamic_bitset`, and found
+//! `std::set` fastest on their workloads. We reproduce that study with
+//! four Rust implementations behind one trait and re-measure in
+//! `benches/abl_sets.rs` (see EXPERIMENTS.md §A1 for what changes in
+//! Rust — spoiler: the bit vector wins at high densities, the BTree at
+//! very low ones).
+
+mod bitset;
+mod btree;
+mod hash;
+mod sortedvec;
+mod sparse;
+
+pub use bitset::BitSet;
+pub use btree::BTreeActiveSet;
+pub use hash::HashActiveSet;
+pub use sortedvec::SortedVecSet;
+pub use sparse::SparseSet;
+
+/// A set of region ids in a bounded universe `0..universe`.
+///
+/// All operations take `u32` region indices (the paper's regions are
+/// dense arrays, so ids are indices, not keys).
+pub trait ActiveSet: Clone + Send + 'static {
+    /// Human-readable name for benches/tables.
+    const NAME: &'static str;
+
+    /// Empty set over `0..universe`.
+    fn with_universe(universe: usize) -> Self;
+
+    fn insert(&mut self, id: u32);
+    fn remove(&mut self, id: u32);
+    fn contains(&self, id: u32) -> bool;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn clear(&mut self);
+
+    /// Visit every element (ascending order NOT guaranteed).
+    fn for_each(&self, f: &mut dyn FnMut(u32));
+
+    /// `self ← self ∪ other` (Algorithm 7 line 20).
+    fn union_with(&mut self, other: &Self) {
+        other.for_each(&mut |i| self.insert(i));
+    }
+
+    /// `self ← self \ other` (Algorithm 7 line 20).
+    fn subtract(&mut self, other: &Self) {
+        other.for_each(&mut |i| self.remove(i));
+    }
+
+    /// Collect to a sorted Vec (test/debug helper).
+    fn to_sorted_vec(&self) -> Vec<u32> {
+        let mut v = Vec::with_capacity(self.len());
+        self.for_each(&mut |i| v.push(i));
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Which set implementation to use (runtime-selectable for benches/CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SetImpl {
+    Bit,
+    Hash,
+    BTree,
+    SortedVec,
+    Sparse,
+}
+
+impl SetImpl {
+    pub const ALL: [SetImpl; 5] = [
+        SetImpl::Bit,
+        SetImpl::Hash,
+        SetImpl::BTree,
+        SetImpl::SortedVec,
+        SetImpl::Sparse,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SetImpl::Bit => BitSet::NAME,
+            SetImpl::Hash => HashActiveSet::NAME,
+            SetImpl::BTree => BTreeActiveSet::NAME,
+            SetImpl::SortedVec => SortedVecSet::NAME,
+            SetImpl::Sparse => SparseSet::NAME,
+        }
+    }
+}
+
+impl std::str::FromStr for SetImpl {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "bit" | "bitvec" => Ok(SetImpl::Bit),
+            "hash" => Ok(SetImpl::Hash),
+            "btree" | "set" => Ok(SetImpl::BTree),
+            "sortedvec" | "vec" => Ok(SetImpl::SortedVec),
+            "sparse" => Ok(SetImpl::Sparse),
+            other => Err(format!("unknown set impl '{other}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn exercise<S: ActiveSet>() {
+        let mut s = S::with_universe(1000);
+        assert!(s.is_empty());
+        s.insert(3);
+        s.insert(999);
+        s.insert(3); // duplicate insert is a no-op
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(3) && s.contains(999) && !s.contains(4));
+        s.remove(3);
+        s.remove(3); // duplicate remove is a no-op
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.to_sorted_vec(), vec![999]);
+        s.clear();
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn basic_ops_all_impls() {
+        exercise::<BitSet>();
+        exercise::<HashActiveSet>();
+        exercise::<BTreeActiveSet>();
+        exercise::<SortedVecSet>();
+        exercise::<SparseSet>();
+    }
+
+    fn union_subtract<S: ActiveSet>() {
+        let mut a = S::with_universe(100);
+        let mut add = S::with_universe(100);
+        let mut del = S::with_universe(100);
+        for i in [1u32, 5, 9] {
+            a.insert(i);
+        }
+        for i in [5u32, 20] {
+            add.insert(i);
+        }
+        for i in [9u32, 50] {
+            del.insert(i);
+        }
+        // (a ∪ add) \ del — Algorithm 7's master combine shape.
+        a.union_with(&add);
+        a.subtract(&del);
+        assert_eq!(a.to_sorted_vec(), vec![1, 5, 20]);
+    }
+
+    #[test]
+    fn union_subtract_all_impls() {
+        union_subtract::<BitSet>();
+        union_subtract::<HashActiveSet>();
+        union_subtract::<BTreeActiveSet>();
+        union_subtract::<SortedVecSet>();
+        union_subtract::<SparseSet>();
+    }
+
+    /// Property: all four implementations agree under a random op
+    /// sequence (the oracle is a model Vec<bool>).
+    #[test]
+    fn prop_impls_agree_with_model() {
+        let universe = 256;
+        let mut rng = Rng::new(0xABCD);
+        for _case in 0..50 {
+            let mut bit = BitSet::with_universe(universe);
+            let mut hash = HashActiveSet::with_universe(universe);
+            let mut btree = BTreeActiveSet::with_universe(universe);
+            let mut sv = SortedVecSet::with_universe(universe);
+            let mut sp = SparseSet::with_universe(universe);
+            let mut model = vec![false; universe];
+            for _op in 0..200 {
+                let id = rng.below(universe as u64) as u32;
+                if rng.chance(0.5) {
+                    bit.insert(id);
+                    hash.insert(id);
+                    btree.insert(id);
+                    sv.insert(id);
+                    sp.insert(id);
+                    model[id as usize] = true;
+                } else {
+                    bit.remove(id);
+                    hash.remove(id);
+                    btree.remove(id);
+                    sv.remove(id);
+                    sp.remove(id);
+                    model[id as usize] = false;
+                }
+            }
+            let want: Vec<u32> = (0..universe as u32)
+                .filter(|&i| model[i as usize])
+                .collect();
+            assert_eq!(bit.to_sorted_vec(), want, "bit");
+            assert_eq!(hash.to_sorted_vec(), want, "hash");
+            assert_eq!(btree.to_sorted_vec(), want, "btree");
+            assert_eq!(sv.to_sorted_vec(), want, "sortedvec");
+            assert_eq!(sp.to_sorted_vec(), want, "sparse");
+        }
+    }
+
+    #[test]
+    fn set_impl_parses() {
+        assert_eq!("bit".parse::<SetImpl>().unwrap(), SetImpl::Bit);
+        assert_eq!("set".parse::<SetImpl>().unwrap(), SetImpl::BTree);
+        assert_eq!("sparse".parse::<SetImpl>().unwrap(), SetImpl::Sparse);
+        assert!("nope".parse::<SetImpl>().is_err());
+    }
+}

@@ -1,0 +1,123 @@
+//! Sorted-vector active set.
+//!
+//! Not in the paper's C++ candidate list, but the natural Rust
+//! contender: contiguous memory, binary-search membership, O(k) splice
+//! on insert/remove. Wins when active sets are small (low overlap
+//! degree α), which is exactly the regime of the paper's α = 0.01
+//! configuration.
+
+use super::ActiveSet;
+
+#[derive(Debug, Clone)]
+pub struct SortedVecSet {
+    inner: Vec<u32>,
+}
+
+impl ActiveSet for SortedVecSet {
+    const NAME: &'static str = "sortedvec";
+
+    fn with_universe(_universe: usize) -> Self {
+        Self { inner: Vec::new() }
+    }
+
+    #[inline]
+    fn insert(&mut self, id: u32) {
+        if let Err(pos) = self.inner.binary_search(&id) {
+            self.inner.insert(pos, id);
+        }
+    }
+
+    #[inline]
+    fn remove(&mut self, id: u32) {
+        if let Ok(pos) = self.inner.binary_search(&id) {
+            self.inner.remove(pos);
+        }
+    }
+
+    #[inline]
+    fn contains(&self, id: u32) -> bool {
+        self.inner.binary_search(&id).is_ok()
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn clear(&mut self) {
+        self.inner.clear();
+    }
+
+    fn for_each(&self, f: &mut dyn FnMut(u32)) {
+        for &i in &self.inner {
+            f(i);
+        }
+    }
+
+    /// Merge two sorted vectors (overrides the per-element default).
+    fn union_with(&mut self, other: &Self) {
+        if other.inner.is_empty() {
+            return;
+        }
+        let mut merged = Vec::with_capacity(self.inner.len() + other.inner.len());
+        let (a, b) = (&self.inner, &other.inner);
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            match a[i].cmp(&b[j]) {
+                std::cmp::Ordering::Less => {
+                    merged.push(a[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    merged.push(b[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    merged.push(a[i]);
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        merged.extend_from_slice(&a[i..]);
+        merged.extend_from_slice(&b[j..]);
+        self.inner = merged;
+    }
+
+    /// Linear-merge difference (overrides the per-element default).
+    fn subtract(&mut self, other: &Self) {
+        if other.inner.is_empty() {
+            return;
+        }
+        let b = &other.inner;
+        let mut j = 0;
+        self.inner.retain(|&x| {
+            while j < b.len() && b[j] < x {
+                j += 1;
+            }
+            !(j < b.len() && b[j] == x)
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_union_and_subtract() {
+        let mut a = SortedVecSet::with_universe(0);
+        let mut b = SortedVecSet::with_universe(0);
+        for i in [1u32, 3, 5, 7] {
+            a.insert(i);
+        }
+        for i in [3u32, 4, 7, 9] {
+            b.insert(i);
+        }
+        let mut u = a.clone();
+        u.union_with(&b);
+        assert_eq!(u.to_sorted_vec(), vec![1, 3, 4, 5, 7, 9]);
+        let mut d = a.clone();
+        d.subtract(&b);
+        assert_eq!(d.to_sorted_vec(), vec![1, 5]);
+    }
+}

@@ -1,0 +1,125 @@
+//! Sparse-set active set (Briggs & Torczon, "An efficient
+//! representation for sparse sets", 1993) — the perf-pass winner.
+//!
+//! The SBM sweep calls `for_each` once per upper endpoint; with a bit
+//! vector that costs O(universe/64) per call — O(N²/64) overall, which
+//! measured 18 s at N = 10⁶ vs 0.5 s for tree sets (EXPERIMENTS.md
+//! §Perf). The sparse set gives O(1) insert/remove/contains **and**
+//! O(|active|) iteration: a dense array of members plus a
+//! member→position index. Memory is Θ(universe) like the bit vector
+//! (4 bytes/slot instead of 1 bit — the classic space/time trade).
+
+use super::ActiveSet;
+
+const NONE: u32 = u32::MAX;
+
+#[derive(Debug, Clone)]
+pub struct SparseSet {
+    /// position of id in `dense`, or NONE.
+    index: Vec<u32>,
+    /// the members, packed.
+    dense: Vec<u32>,
+}
+
+impl ActiveSet for SparseSet {
+    const NAME: &'static str = "sparse";
+
+    fn with_universe(universe: usize) -> Self {
+        Self {
+            index: vec![NONE; universe],
+            dense: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn insert(&mut self, id: u32) {
+        let slot = &mut self.index[id as usize];
+        if *slot == NONE {
+            *slot = self.dense.len() as u32;
+            self.dense.push(id);
+        }
+    }
+
+    #[inline]
+    fn remove(&mut self, id: u32) {
+        let pos = self.index[id as usize];
+        if pos != NONE {
+            let last = *self.dense.last().unwrap();
+            self.dense[pos as usize] = last;
+            self.index[last as usize] = pos;
+            self.dense.pop();
+            self.index[id as usize] = NONE;
+        }
+    }
+
+    #[inline]
+    fn contains(&self, id: u32) -> bool {
+        self.index
+            .get(id as usize)
+            .is_some_and(|&p| p != NONE)
+    }
+
+    fn len(&self) -> usize {
+        self.dense.len()
+    }
+
+    fn clear(&mut self) {
+        for &id in &self.dense {
+            self.index[id as usize] = NONE;
+        }
+        self.dense.clear();
+    }
+
+    #[inline]
+    fn for_each(&self, f: &mut dyn FnMut(u32)) {
+        for &id in &self.dense {
+            f(id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swap_remove_bookkeeping() {
+        let mut s = SparseSet::with_universe(10);
+        for id in [3u32, 7, 1, 9] {
+            s.insert(id);
+        }
+        s.remove(7); // middle removal swaps 9 into its slot
+        assert!(!s.contains(7));
+        assert!(s.contains(9) && s.contains(3) && s.contains(1));
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.to_sorted_vec(), vec![1, 3, 9]);
+        s.remove(9); // tail removal
+        assert_eq!(s.to_sorted_vec(), vec![1, 3]);
+        s.clear();
+        assert!(s.is_empty());
+        assert!(!s.contains(1));
+    }
+
+    #[test]
+    fn iteration_cost_is_membership_bound() {
+        // Smoke proxy for the O(|active|) claim: iterating an almost
+        // empty set over a huge universe visits only the members.
+        let mut s = SparseSet::with_universe(1_000_000);
+        s.insert(5);
+        s.insert(999_999);
+        let mut visits = 0;
+        s.for_each(&mut |_| visits += 1);
+        assert_eq!(visits, 2);
+    }
+
+    #[test]
+    fn double_insert_remove_are_noops() {
+        let mut s = SparseSet::with_universe(4);
+        s.insert(2);
+        s.insert(2);
+        assert_eq!(s.len(), 1);
+        s.remove(2);
+        s.remove(2);
+        assert_eq!(s.len(), 0);
+    }
+}

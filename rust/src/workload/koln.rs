@@ -1,0 +1,160 @@
+//! Köln-trace-like vehicular workload (paper Fig. 14 substitution).
+//!
+//! The paper uses the TAPASCologne trace [62]: 541,222 vehicle
+//! positions from the greater Cologne area (400 km²); the x coordinate
+//! of each position centers one subscription and one update region of
+//! width 100 m, giving N ≈ 10⁶ regions and ≈ 3.9×10⁹ intersections.
+//!
+//! The trace is not downloadable in this offline environment, so this
+//! generator synthesizes a trace with the documented statistics
+//! (DESIGN.md §3, substitution 2): vehicle x-positions are drawn from a
+//! mixture of Gaussian "arterial road" clusters over a ~15 km urban
+//! extent plus a uniform background — 15 km is the extent at which
+//! uniform placement of 541,222 double regions of 100 m width yields
+//! the paper's ≈3.9×10⁹ intersections (E[K] = n·m·2w/L). The achieved
+//! count is printed by `benches/fig14_koln.rs` and recorded in
+//! EXPERIMENTS.md.
+
+use crate::core::{Interval, Regions1D};
+use crate::prng::Rng;
+
+/// Trace parameters (defaults mirror the paper's setup).
+#[derive(Debug, Clone, Copy)]
+pub struct KolnParams {
+    /// Number of vehicle positions (each yields 1 sub + 1 upd region).
+    pub positions: usize,
+    /// Region width in meters (paper: 100 m).
+    pub width: f64,
+    /// Urban extent in meters.
+    pub extent: f64,
+    /// Number of arterial-road clusters.
+    pub clusters: usize,
+    /// Fraction of vehicles on arterials (vs uniform background).
+    pub arterial_fraction: f64,
+}
+
+impl Default for KolnParams {
+    fn default() -> Self {
+        Self {
+            positions: 541_222,
+            width: 100.0,
+            extent: 15_000.0,
+            clusters: 12,
+            arterial_fraction: 0.7,
+        }
+    }
+}
+
+impl KolnParams {
+    /// Scale the position count (benches use fractions of the full trace).
+    pub fn scaled(mut self, factor: f64) -> Self {
+        self.positions = ((self.positions as f64 * factor) as usize).max(1);
+        self
+    }
+}
+
+/// Generate the trace: `(subscriptions, updates)`, one of each per
+/// vehicle position, both centered on the vehicle's x coordinate.
+pub fn koln_workload(seed: u64, p: &KolnParams) -> (Regions1D, Regions1D) {
+    let mut rng = Rng::new(seed);
+    // Arterial clusters: position + spread (big roads are long).
+    let roads: Vec<(f64, f64)> = (0..p.clusters.max(1))
+        .map(|_| {
+            let center = rng.uniform(0.05 * p.extent, 0.95 * p.extent);
+            let sigma = rng.uniform(0.005 * p.extent, 0.03 * p.extent);
+            (center, sigma)
+        })
+        .collect();
+    let half = p.width / 2.0;
+    let mut subs = Regions1D::with_capacity(p.positions);
+    let mut upds = Regions1D::with_capacity(p.positions);
+    for _ in 0..p.positions {
+        let x = if rng.chance(p.arterial_fraction) {
+            let (c, s) = roads[rng.below(roads.len() as u64) as usize];
+            (c + rng.gaussian() * s).clamp(0.0, p.extent)
+        } else {
+            rng.uniform(0.0, p.extent)
+        };
+        let lo = (x - half).max(0.0);
+        let hi = (x + half).min(p.extent);
+        subs.push(Interval::new(lo, hi));
+        upds.push(Interval::new(lo, hi));
+    }
+    (subs, upds)
+}
+
+/// Write positions to a simple CSV (`x` per line) for trace replay.
+pub fn save_positions_csv(path: &std::path::Path, subs: &Regions1D) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "x")?;
+    for iv in subs.iter() {
+        writeln!(f, "{}", (iv.lo + iv.hi) / 2.0)?;
+    }
+    Ok(())
+}
+
+/// Load positions from CSV and rebuild the workload.
+pub fn load_positions_csv(
+    path: &std::path::Path,
+    width: f64,
+) -> std::io::Result<(Regions1D, Regions1D)> {
+    let text = std::fs::read_to_string(path)?;
+    let half = width / 2.0;
+    let mut subs = Regions1D::default();
+    let mut upds = Regions1D::default();
+    for line in text.lines().skip(1) {
+        if let Ok(x) = line.trim().parse::<f64>() {
+            let iv = Interval::new(x - half, x + half);
+            subs.push(iv);
+            upds.push(iv);
+        }
+    }
+    Ok((subs, upds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_bounds() {
+        let p = KolnParams::default().scaled(0.01);
+        let (s, u) = koln_workload(1, &p);
+        assert_eq!(s.len(), 5412);
+        assert_eq!(u.len(), 5412);
+        for iv in s.iter() {
+            assert!(iv.lo >= 0.0 && iv.hi <= p.extent);
+            assert!(iv.len() <= p.width + 1e-9);
+        }
+    }
+
+    #[test]
+    fn intersection_density_matches_paper_scale() {
+        // At 1% scale, K should scale as (0.01)² of ≈3.9e9 → ≈3.9e5,
+        // within a factor of ~4 (clustering adds variance).
+        let p = KolnParams::default().scaled(0.01);
+        let (s, u) = koln_workload(2, &p);
+        let mut sink = crate::core::sink::CountSink::default();
+        crate::algos::bfm::match_seq(&s, &u, &mut sink);
+        let k = sink.count as f64;
+        let target = 3.9e9 * 0.01 * 0.01;
+        let ratio = k / target;
+        assert!(
+            (0.25..4.0).contains(&ratio),
+            "K={k} vs scaled paper target {target}"
+        );
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = KolnParams::default().scaled(0.001);
+        let (s, _) = koln_workload(3, &p);
+        let path = std::env::temp_dir().join("ddm_koln_test.csv");
+        save_positions_csv(&path, &s).unwrap();
+        let (s2, u2) = load_positions_csv(&path, p.width).unwrap();
+        assert_eq!(s2.len(), s.len());
+        assert_eq!(u2.len(), s.len());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,13 @@
+//! Workload generators for the evaluation (paper §5).
+//!
+//! * [`synthetic`] — the paper's α-model: N fixed-length regions placed
+//!   uniformly on a segment, `α = N·l/L` (plus a clustered variant for
+//!   the GBM discussion of skewed cells).
+//! * [`koln`] — a Köln-trace-like vehicular workload (Fig. 14
+//!   substitution; the real trace is not downloadable offline —
+//!   DESIGN.md §3 documents the substitution).
+
+pub mod koln;
+pub mod synthetic;
+
+pub use synthetic::{alpha_workload, clustered_workload, AlphaParams};

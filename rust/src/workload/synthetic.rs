@@ -1,0 +1,165 @@
+//! The paper's synthetic workload (§5, methodology of Raczy et al. [52]).
+//!
+//! N total regions (n = N/2 subscriptions, m = N/2 updates), all of the
+//! same length `l`, placed uniformly at random on a segment of length
+//! `L = 10⁶`. The *overlapping degree* `α = N·l/L` fixes `l = αL/N`;
+//! the paper uses α ∈ {0.01, 1, 100}.
+
+use crate::core::region::random_regions_1d;
+use crate::core::Regions1D;
+use crate::prng::Rng;
+
+/// Parameters of the α-model.
+#[derive(Debug, Clone, Copy)]
+pub struct AlphaParams {
+    /// Total number of regions N (split evenly into S and U).
+    pub n_total: usize,
+    /// Overlapping degree α.
+    pub alpha: f64,
+    /// Routing-space length L (paper: 10⁶).
+    pub space: f64,
+}
+
+impl Default for AlphaParams {
+    fn default() -> Self {
+        Self {
+            n_total: 1_000_000,
+            alpha: 100.0,
+            space: 1e6,
+        }
+    }
+}
+
+impl AlphaParams {
+    /// Region length l = αL/N.
+    pub fn region_len(&self) -> f64 {
+        (self.alpha * self.space / self.n_total as f64).min(self.space)
+    }
+}
+
+/// Generate the paper's uniform workload: `(subscriptions, updates)`.
+pub fn alpha_workload(seed: u64, p: &AlphaParams) -> (Regions1D, Regions1D) {
+    let mut rng = Rng::new(seed);
+    let l = p.region_len();
+    let n = p.n_total / 2;
+    let m = p.n_total - n;
+    let subs = random_regions_1d(&mut rng, n, p.space, l);
+    let upds = random_regions_1d(&mut rng, m, p.space, l);
+    (subs, upds)
+}
+
+/// Clustered variant: region centers drawn from `k` Gaussian clusters
+/// (models the "localized cluster of interacting agents" that breaks
+/// GBM's uniform-cell assumption, paper §2).
+pub fn clustered_workload(
+    seed: u64,
+    p: &AlphaParams,
+    k_clusters: usize,
+    sigma: f64,
+) -> (Regions1D, Regions1D) {
+    let mut rng = Rng::new(seed);
+    let l = p.region_len();
+    let centers: Vec<f64> = (0..k_clusters.max(1))
+        .map(|_| rng.uniform(0.1 * p.space, 0.9 * p.space))
+        .collect();
+    let mut gen = |count: usize| {
+        let mut out = Regions1D::with_capacity(count);
+        for _ in 0..count {
+            let c = centers[rng.below(centers.len() as u64) as usize];
+            let x = (c + rng.gaussian() * sigma).clamp(0.0, p.space - l);
+            out.push(crate::core::Interval::new(x, x + l));
+        }
+        out
+    };
+    let n = p.n_total / 2;
+    let subs = gen(n);
+    let upds = gen(p.n_total - n);
+    (subs, upds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_len_from_alpha() {
+        let p = AlphaParams {
+            n_total: 1_000_000,
+            alpha: 100.0,
+            space: 1e6,
+        };
+        assert!((p.region_len() - 100.0).abs() < 1e-9);
+        let tiny = AlphaParams {
+            n_total: 100,
+            alpha: 0.01,
+            space: 1e6,
+        };
+        assert!((tiny.region_len() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn workload_shapes_and_bounds() {
+        let p = AlphaParams {
+            n_total: 10_001,
+            alpha: 1.0,
+            space: 1e6,
+        };
+        let (s, u) = alpha_workload(7, &p);
+        assert_eq!(s.len(), 5000);
+        assert_eq!(u.len(), 5001);
+        let l = p.region_len();
+        for iv in s.iter().chain(u.iter()) {
+            assert!(iv.lo >= 0.0 && iv.hi <= p.space);
+            assert!((iv.len() - l).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = AlphaParams {
+            n_total: 100,
+            alpha: 1.0,
+            space: 1e3,
+        };
+        let (a, _) = alpha_workload(9, &p);
+        let (b, _) = alpha_workload(9, &p);
+        assert_eq!(a.lo, b.lo);
+        let (c, _) = alpha_workload(10, &p);
+        assert_ne!(a.lo, c.lo);
+    }
+
+    #[test]
+    fn alpha_predicts_intersections() {
+        // E[K] ≈ n·m·2l/L for uniform placement; α=N·l/L ties them.
+        // Verify the empirical count is within 3x of the estimate.
+        let p = AlphaParams {
+            n_total: 2000,
+            alpha: 10.0,
+            space: 1e5,
+        };
+        let (s, u) = alpha_workload(3, &p);
+        let mut sink = crate::core::sink::CountSink::default();
+        crate::algos::bfm::match_seq(&s, &u, &mut sink);
+        let l = p.region_len();
+        let expect = (s.len() * u.len()) as f64 * 2.0 * l / p.space;
+        let ratio = sink.count as f64 / expect;
+        assert!((0.3..3.0).contains(&ratio), "K={} expect~{expect}", sink.count);
+    }
+
+    #[test]
+    fn clustered_is_denser_than_uniform() {
+        let p = AlphaParams {
+            n_total: 2000,
+            alpha: 1.0,
+            space: 1e5,
+        };
+        let (su, uu) = alpha_workload(5, &p);
+        let (sc, uc) = clustered_workload(5, &p, 3, 500.0);
+        let count = |s: &Regions1D, u: &Regions1D| {
+            let mut sink = crate::core::sink::CountSink::default();
+            crate::algos::bfm::match_seq(s, u, &mut sink);
+            sink.count
+        };
+        assert!(count(&sc, &uc) > 2 * count(&su, &uu));
+    }
+}

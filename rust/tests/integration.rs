@@ -1,0 +1,256 @@
+//! Cross-module integration tests: algorithms × workloads × service ×
+//! XLA backend. (Unit tests live in each module; these exercise the
+//! composed system.)
+
+use ddm::algos::{Algo, MatchParams};
+use ddm::core::sink::{canonicalize, VecSink};
+use ddm::core::{ddim, RegionsNd};
+use ddm::exec::ThreadPool;
+use ddm::hla::{RegionKind, RegionSpec, RoutingSpace};
+use ddm::prng::Rng;
+use ddm::sets::SetImpl;
+use ddm::workload::koln::{koln_workload, KolnParams};
+use ddm::workload::{alpha_workload, clustered_workload, AlphaParams};
+
+/// Every algorithm × every workload family × several thread counts
+/// produce the identical pair set.
+#[test]
+fn all_algorithms_agree_across_workloads() {
+    let pool = ThreadPool::new(7);
+    let params = MatchParams {
+        ncells: 128,
+        set_impl: SetImpl::Bit,
+    };
+    let ap = AlphaParams {
+        n_total: 3_000,
+        alpha: 10.0,
+        space: 1e5,
+    };
+    let workloads: Vec<(&str, _)> = vec![
+        ("uniform", alpha_workload(31, &ap)),
+        ("clustered", clustered_workload(32, &ap, 4, 800.0)),
+        (
+            "koln",
+            koln_workload(33, &KolnParams::default().scaled(0.003)),
+        ),
+    ];
+    for (name, (subs, upds)) in workloads {
+        let reference = ddm::algos::run_pairs(Algo::Bfm, &pool, 1, &subs, &upds, &params);
+        for algo in Algo::ALL {
+            for p in [1, 3, 8] {
+                let got = ddm::algos::run_pairs(algo, &pool, p, &subs, &upds, &params);
+                assert_eq!(
+                    got,
+                    reference,
+                    "{name}/{}/P={p} disagrees with BFM",
+                    algo.name()
+                );
+            }
+        }
+    }
+}
+
+/// The d-dimensional reduction with each parallel 1-D matcher equals
+/// the direct d-rectangle check.
+#[test]
+fn ddim_reduction_with_every_algo() {
+    let pool = ThreadPool::new(3);
+    let params = MatchParams {
+        ncells: 32,
+        set_impl: SetImpl::BTree,
+    };
+    let mut rng = Rng::new(0x1717);
+    for d in [2usize, 3] {
+        let mut subs = RegionsNd::new(d);
+        let mut upds = RegionsNd::new(d);
+        for _ in 0..150 {
+            let rect: Vec<ddm::core::Interval> = (0..d)
+                .map(|_| {
+                    let lo = rng.uniform(0.0, 100.0);
+                    ddm::core::Interval::new(lo, lo + rng.uniform(0.0, 15.0))
+                })
+                .collect();
+            subs.push(&rect);
+        }
+        for _ in 0..120 {
+            let rect: Vec<ddm::core::Interval> = (0..d)
+                .map(|_| {
+                    let lo = rng.uniform(0.0, 100.0);
+                    ddm::core::Interval::new(lo, lo + rng.uniform(0.0, 15.0))
+                })
+                .collect();
+            upds.push(&rect);
+        }
+        let mut want = Vec::new();
+        for i in 0..subs.len() {
+            for j in 0..upds.len() {
+                if subs.rects_intersect(i, &upds, j) {
+                    want.push((i as u32, j as u32));
+                }
+            }
+        }
+        for algo in [Algo::Psbm, Algo::Itm, Algo::Gbm] {
+            let mut sink = VecSink::default();
+            ddim::match_nd(
+                &subs,
+                &upds,
+                |s1, u1, out| {
+                    out.pairs
+                        .extend(ddm::algos::run_pairs(algo, &pool, 4, s1, u1, &params));
+                },
+                &mut sink,
+            );
+            assert_eq!(
+                canonicalize(sink.pairs),
+                want,
+                "d={d} algo={}",
+                algo.name()
+            );
+        }
+    }
+}
+
+/// Service end-to-end: Fig. 1 style scenario — registrations, full
+/// match, publish/poll routing, dynamic moves — all consistent.
+#[test]
+fn service_scenario_consistency() {
+    let mut svc = ddm::hla::DdmService::new(RoutingSpace::uniform(1, 100_000));
+    let fed_a = svc.join("a");
+    let fed_b = svc.join("b");
+    let mut rng = Rng::new(0x5E5E);
+    let mut subs = Vec::new();
+    for _ in 0..200 {
+        let x = rng.below(99_000);
+        subs.push(
+            svc.register(
+                fed_a,
+                RegionKind::Subscription,
+                &RegionSpec::interval(x, x + 500),
+            )
+            .unwrap(),
+        );
+    }
+    let mut upds = Vec::new();
+    for _ in 0..100 {
+        let x = rng.below(99_000);
+        upds.push(
+            svc.register(fed_b, RegionKind::Update, &RegionSpec::interval(x, x + 300))
+                .unwrap(),
+        );
+    }
+    let pool = ThreadPool::new(3);
+    let pairs = svc.match_all(Algo::Psbm, &pool, 4, &MatchParams::default());
+
+    // Publishing every update must deliver exactly the matched pairs.
+    let mut delivered = 0;
+    for &u in &upds {
+        delivered += svc.publish(u, 1).unwrap();
+    }
+    assert_eq!(delivered, pairs.len());
+    assert_eq!(svc.poll(fed_a).len(), delivered);
+
+    // Dynamic: move every subscription; match count changes coherently.
+    for &s in subs.iter().take(50) {
+        let x = rng.below(99_000);
+        svc.modify(s, &RegionSpec::interval(x, x + 500)).unwrap();
+    }
+    let pairs2 = svc.match_all(Algo::Itm, &pool, 4, &MatchParams::default());
+    let pairs3 = svc.match_all(Algo::Gbm, &pool, 2, &MatchParams::default());
+    let norm = |mut v: Vec<(ddm::hla::RegionHandle, ddm::hla::RegionHandle)>| {
+        v.sort_by_key(|(a, b)| (a.id, b.id));
+        v
+    };
+    assert_eq!(norm(pairs2), norm(pairs3));
+}
+
+/// XLA backend agrees with native matching on service-shaped data
+/// (skips when `make artifacts` has not run).
+#[test]
+fn xla_backend_matches_native_on_service_regions() {
+    let dir = std::path::Path::new(ddm::runtime::DEFAULT_ARTIFACT_DIR);
+    if !ddm::runtime::artifacts_available(dir) {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let be = ddm::runtime::XlaMatchBackend::load(dir).expect("backend");
+    let pool = ThreadPool::new(3);
+    let params = MatchParams::default();
+    let mut rng = Rng::new(0xCAFE);
+    // Integer (HLA-style) coordinates are f32-exact below 2^24.
+    let mut subs = ddm::core::Regions1D::default();
+    let mut upds = ddm::core::Regions1D::default();
+    for _ in 0..500 {
+        let x = rng.below(1_000_000) as f64;
+        subs.push(ddm::core::Interval::new(x, x + 1000.0));
+    }
+    for _ in 0..700 {
+        let x = rng.below(1_000_000) as f64;
+        upds.push(ddm::core::Interval::new(x, x + 800.0));
+    }
+    let k_native = ddm::algos::run_count(Algo::Psbm, &pool, 4, &subs, &upds, &params);
+    let k_xla = be.match_counts_1d(&subs, &upds).expect("xla count");
+    assert_eq!(k_native, k_xla);
+
+    let pairs_native =
+        ddm::algos::run_pairs(Algo::Bfm, &pool, 1, &subs, &upds, &params);
+    let mut pairs_xla = be.match_pairs_1d(&subs, &upds).expect("xla pairs");
+    pairs_xla.sort_unstable();
+    assert_eq!(pairs_native, pairs_xla);
+}
+
+/// Coordinator smoke: concurrent clients against one service loop.
+#[test]
+fn coordinator_handles_concurrent_clients() {
+    use ddm::coordinator::{Coordinator, CoordinatorConfig};
+    let coord = Coordinator::spawn(CoordinatorConfig {
+        space: RoutingSpace::uniform(1, 1_000_000),
+        nthreads: 2,
+        ..Default::default()
+    });
+    let c = coord.client();
+    let fed = c.join("shared");
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let c = coord.client();
+            s.spawn(move || {
+                let mut rng = Rng::new(t);
+                for _ in 0..50 {
+                    let x = rng.below(990_000);
+                    let h = c
+                        .register(
+                            fed,
+                            RegionKind::Subscription,
+                            RegionSpec::interval(x, x + 100),
+                        )
+                        .unwrap();
+                    c.modify(h, RegionSpec::interval(x, x + 200)).unwrap();
+                }
+            });
+        }
+    });
+    let m = c.metrics();
+    assert_eq!(m.counter("registers"), 200);
+    assert_eq!(m.counter("modifies"), 200);
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.counter("registers"), 200);
+}
+
+/// Thread-count invariance under the property harness (heavier than
+/// the per-module variants: full workload, many P values).
+#[test]
+fn psbm_thread_invariance_heavy() {
+    let pool = ThreadPool::new(15);
+    let ap = AlphaParams {
+        n_total: 10_000,
+        alpha: 100.0,
+        space: 1e6,
+    };
+    let (subs, upds) = alpha_workload(77, &ap);
+    let params = MatchParams::default();
+    let want = ddm::algos::run_pairs(Algo::Psbm, &pool, 1, &subs, &upds, &params);
+    for p in 2..=16 {
+        let got = ddm::algos::run_pairs(Algo::Psbm, &pool, p, &subs, &upds, &params);
+        assert_eq!(got.len(), want.len(), "P={p}");
+        assert_eq!(got, want, "P={p}");
+    }
+}
