@@ -8,8 +8,9 @@
 //!     cargo run --release --example koln_replay -- --scale 0.05 --threads 4
 //!     cargo run --release --example koln_replay -- --csv /tmp/trace.csv
 
-use ddm::algos::{Algo, MatchParams};
+use ddm::algos::Algo;
 use ddm::cli::Args;
+use ddm::engine::DdmEngine;
 use ddm::exec::ThreadPool;
 use ddm::workload::koln::{koln_workload, load_positions_csv, save_positions_csv, KolnParams};
 
@@ -41,18 +42,20 @@ fn main() {
         params.width
     );
 
-    let pool = ThreadPool::new(threads.saturating_sub(1));
-    let mp = MatchParams {
-        ncells: args.opt("ncells", 3000usize),
-        ..Default::default()
-    };
-    // The paper's Fig. 14 algorithm set.
+    let pool = std::sync::Arc::new(ThreadPool::new(threads.saturating_sub(1)));
+    // The paper's Fig. 14 algorithm set, each behind the same engine API.
     for algo in [Algo::Gbm, Algo::Itm, Algo::Psbm] {
+        let engine = DdmEngine::builder()
+            .algo(algo)
+            .threads(threads)
+            .ncells(args.opt("ncells", 3000usize))
+            .pool(std::sync::Arc::clone(&pool))
+            .build();
         let t0 = std::time::Instant::now();
-        let k = ddm::algos::run_count(algo, &pool, threads, &subs, &upds, &mp);
+        let k = engine.count_1d(&subs, &upds);
         println!(
             "  {:6} K={k:<14} {}",
-            algo.name(),
+            engine.algo_name(),
             ddm::bench::stats::fmt_secs(t0.elapsed().as_secs_f64())
         );
     }

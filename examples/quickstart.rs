@@ -1,12 +1,16 @@
 //! Quickstart: the region matching problem in 30 lines.
 //!
-//! Generates the paper's synthetic workload, runs every matching
-//! algorithm, and checks they agree — the library's "hello world".
+//! Generates the paper's synthetic workload, builds one `DdmEngine`
+//! per algorithm through the `EngineBuilder`, and checks they agree —
+//! the library's "hello world" for the unified matcher API.
 //!
 //!     cargo run --release --example quickstart -- --n 1e5 --alpha 10 --threads 4
 
-use ddm::algos::{Algo, MatchParams};
+use std::sync::Arc;
+
+use ddm::algos::Algo;
 use ddm::cli::Args;
+use ddm::engine::{DdmEngine, Matcher};
 use ddm::exec::ThreadPool;
 use ddm::workload::{alpha_workload, AlphaParams};
 
@@ -27,21 +31,40 @@ fn main() {
         upds.len()
     );
 
-    let pool = ThreadPool::new(threads.saturating_sub(1));
-    let mp = MatchParams::default();
+    // One pool, shared by every engine; swapping the algorithm is a
+    // one-line builder change.
+    let pool = Arc::new(ThreadPool::new(threads.saturating_sub(1)));
     let mut last_k = None;
     for algo in Algo::ALL {
+        let engine = DdmEngine::builder()
+            .algo(algo)
+            .threads(threads)
+            .pool(Arc::clone(&pool))
+            .build();
         let t0 = std::time::Instant::now();
-        let k = ddm::algos::run_count(algo, &pool, threads, &subs, &upds, &mp);
+        let k = engine.count_1d(&subs, &upds);
         println!(
             "  {:10} K={k:<12} {}",
-            algo.name(),
+            engine.algo_name(),
             ddm::bench::stats::fmt_secs(t0.elapsed().as_secs_f64())
         );
         if let Some(prev) = last_k {
-            assert_eq!(k, prev, "{} disagrees", algo.name());
+            assert_eq!(k, prev, "{} disagrees", engine.algo_name());
         }
         last_k = Some(k);
     }
-    println!("all {} algorithms agree ✓", Algo::ALL.len());
+
+    // The adaptive engine picks a sensible algorithm by itself.
+    let auto = DdmEngine::builder()
+        .auto()
+        .threads(threads)
+        .pool(Arc::clone(&pool))
+        .build();
+    let k = auto.count_1d(&subs, &upds);
+    assert_eq!(Some(k), last_k, "auto engine disagrees");
+    println!(
+        "all {} algorithms + auto agree ✓ (auto chose {})",
+        Algo::ALL.len(),
+        auto.matcher_for(subs.len(), upds.len()).name()
+    );
 }

@@ -13,7 +13,6 @@
 
 use std::time::Instant;
 
-use ddm::algos::Algo;
 use ddm::cli::Args;
 use ddm::coordinator::{Coordinator, CoordinatorConfig};
 use ddm::hla::{RegionKind, RegionSpec, RoutingSpace};
@@ -48,11 +47,17 @@ fn main() {
     let seed = args.opt("seed", 2026u64);
 
     println!("traffic_sim: {n_vehicles} vehicles, {n_lights} lights, {steps} steps");
-    let coord = Coordinator::spawn(CoordinatorConfig {
-        space: RoutingSpace::new(vec![ddm::hla::Dimension::new("road-x", ROAD)]),
-        nthreads: threads,
-        ..Default::default()
-    });
+    // The coordinator takes a fully-built engine: `--algo itm` (or any
+    // other matcher) changes the backend with no other code changes.
+    let engine = ddm::engine::DdmEngine::builder()
+        .algo_str(args.get("algo").unwrap_or("psbm"))
+        .unwrap_or_else(|e| panic!("{e}"))
+        .threads(threads)
+        .build();
+    let coord = Coordinator::spawn(CoordinatorConfig::new(
+        RoutingSpace::new(vec![ddm::hla::Dimension::new("road-x", ROAD)]),
+        engine,
+    ));
     let c = coord.client();
 
     // Federates as in Fig. 1 (bottom): F1 cars, F2 scooters, F3 trucks,
@@ -96,7 +101,7 @@ fn main() {
         .collect();
 
     // Sanity: full match on the initial configuration.
-    let k0 = c.match_all(Algo::Psbm);
+    let k0 = c.match_all();
     println!("initial full match: {k0} overlapping (sub, upd) pairs");
 
     let t0 = Instant::now();

@@ -1,20 +1,58 @@
 //! The XLA/Pallas accelerator path: match with the AOT-compiled
 //! JAX+Pallas kernels from Rust, and cross-check against native BFM.
 //!
-//! Requires `make artifacts` (Python runs once, at build time only).
+//! This is also the crate's demonstration of an **out-of-tree
+//! matcher**: `XlaMatcher` wraps the backend in the engine's `Matcher`
+//! trait, so the accelerator plugs into `EngineBuilder::matcher(..)`
+//! exactly like the six native algorithms — no `Algo` enum change.
 //!
-//!     cargo run --release --example xla_backend -- --n 4096 --alpha 10
+//! Requires a build with `--features xla` plus `make artifacts`
+//! (Python runs once, at build time only).
+//!
+//!     cargo run --release --features xla --example xla_backend -- --n 4096 --alpha 10
 
-use ddm::algos::bfm;
+use std::sync::Arc;
+
 use ddm::cli::Args;
-use ddm::core::sink::CountSink;
+use ddm::core::sink::MatchSink;
+use ddm::core::Regions1D;
+use ddm::engine::{DdmEngine, ExecCtx, Matcher};
 use ddm::runtime::XlaMatchBackend;
 use ddm::workload::{alpha_workload, AlphaParams};
+
+/// Out-of-tree backend behind the unified `Matcher` trait.
+struct XlaMatcher {
+    be: XlaMatchBackend,
+}
+
+impl Matcher for XlaMatcher {
+    fn name(&self) -> &str {
+        "xla"
+    }
+
+    fn match_1d(
+        &self,
+        _ctx: &ExecCtx<'_>,
+        subs: &Regions1D,
+        upds: &Regions1D,
+        sink: &mut dyn MatchSink,
+    ) {
+        for (s, u) in self.be.match_pairs_1d(subs, upds).expect("xla pairs") {
+            sink.report(s, u);
+        }
+    }
+
+    fn count_1d(&self, _ctx: &ExecCtx<'_>, subs: &Regions1D, upds: &Regions1D) -> u64 {
+        self.be.match_counts_1d(subs, upds).expect("xla counts")
+    }
+}
 
 fn main() {
     let dir = std::path::Path::new(ddm::runtime::DEFAULT_ARTIFACT_DIR);
     if !ddm::runtime::artifacts_available(dir) {
-        eprintln!("artifacts missing — run `make artifacts` first");
+        eprintln!(
+            "artifacts missing — build with `--features xla` and run `make artifacts` first"
+        );
         std::process::exit(1);
     }
     let args = Args::from_env();
@@ -25,28 +63,38 @@ fn main() {
     };
     let (subs, upds) = alpha_workload(args.opt("seed", 3u64), &params);
     // The XLA kernels compute in f32; quantize so both backends see
-    // bit-identical coordinates (see runtime::backend::quantize_f32).
-    let subs = ddm::runtime::backend::quantize_f32(&subs);
-    let upds = ddm::runtime::backend::quantize_f32(&upds);
+    // bit-identical coordinates (see runtime::quantize_f32).
+    let subs = ddm::runtime::quantize_f32(&subs);
+    let upds = ddm::runtime::quantize_f32(&upds);
 
     let t0 = std::time::Instant::now();
     let be = XlaMatchBackend::load(dir).expect("backend loads");
     println!(
-        "backend: compiled {} artifacts in {}",
-        5,
+        "backend: compiled artifacts in {}",
         ddm::bench::stats::fmt_secs(t0.elapsed().as_secs_f64())
     );
     if let Some((n, m)) = be.counts_capacity(1) {
         println!("counts kernel capacity: {n} x {m} (d=1); larger inputs are tiled");
     }
+    let prefix_demo = be.prefix_sum(&(0..1000).map(|i| (i % 7) - 3).collect::<Vec<i32>>());
+
+    // Register the accelerator behind the same engine API as the
+    // native algorithms.
+    let xla_engine = DdmEngine::builder()
+        .matcher(Arc::new(XlaMatcher { be }))
+        .threads(1)
+        .build();
+    let native_engine = DdmEngine::builder()
+        .algo(ddm::algos::Algo::Bfm)
+        .threads(1)
+        .build();
 
     let t1 = std::time::Instant::now();
-    let k_xla = be.match_counts_1d(&subs, &upds).expect("xla match");
+    let k_xla = xla_engine.count_1d(&subs, &upds);
     let t_xla = t1.elapsed();
 
     let t2 = std::time::Instant::now();
-    let mut sink = CountSink::default();
-    bfm::match_seq(&subs, &upds, &mut sink);
+    let k_native = native_engine.count_1d(&subs, &upds);
     let t_bfm = t2.elapsed();
 
     println!(
@@ -54,18 +102,16 @@ fn main() {
         ddm::bench::stats::fmt_secs(t_xla.as_secs_f64())
     );
     println!(
-        "native serial BFM: K={:<12} {}",
-        sink.count,
+        "native serial BFM: K={k_native:<12} {}",
         ddm::bench::stats::fmt_secs(t_bfm.as_secs_f64())
     );
-    assert_eq!(k_xla, sink.count, "backends must agree");
-    println!("backends agree ✓");
+    assert_eq!(k_xla, k_native, "backends must agree");
+    println!("backends agree behind one Matcher trait ✓");
 
     // Bonus: the compiled Fig.-7 prefix-sum pipeline.
-    let xs: Vec<i32> = (0..1000).map(|i| (i % 7) - 3).collect();
-    let ps = be.prefix_sum(&xs).expect("scan runs");
+    let ps = prefix_demo.expect("scan runs");
     let mut acc = 0;
-    for (i, &x) in xs.iter().enumerate() {
+    for (i, x) in (0..1000).map(|i| (i % 7) - 3).enumerate() {
         acc += x;
         assert_eq!(ps[i], acc);
     }

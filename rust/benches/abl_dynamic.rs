@@ -62,10 +62,8 @@ fn main() {
     let t_inc = t1.elapsed().as_secs_f64();
 
     // Full re-match path (parallel SBM per move, measured once).
-    let params = MatchParams::default();
-    let point = ctx.measure(4, |pool, p| {
-        ddm::algos::run_count(Algo::Psbm, pool, p, &subs, &upds, &params)
-    });
+    let matcher = ctx.matcher(Algo::Psbm, &MatchParams::default());
+    let point = ctx.measure_matcher(matcher.as_ref(), 4, &subs, &upds);
     let t_full = point.modeled.mean;
 
     let mut table = Table::new(vec!["metric", "value"]);

@@ -9,11 +9,10 @@
 //!
 //!   cargo bench --bench abl_gbm_list -- [--n 2e5] [--quick]
 
-use ddm::algos::gbm::{self, CellList, Dedup, GbmParams};
+use ddm::algos::gbm::{CellList, Dedup};
 use ddm::bench::harness::FigCtx;
 use ddm::bench::stats::fmt_secs;
 use ddm::bench::table::{banner, Table};
-use ddm::core::sink::CountSink;
 use ddm::workload::{alpha_workload, AlphaParams};
 
 fn main() {
@@ -37,16 +36,16 @@ fn main() {
     for &p in &threads {
         for cell_list in [CellList::Mutex, CellList::LockFree] {
             for dedup in [Dedup::FirstCell, Dedup::ResSet] {
-                let params = GbmParams {
+                // The strategy knobs ride the engine's parameter
+                // block, so ablations and production share one path.
+                let params = ddm::algos::MatchParams {
                     ncells,
                     cell_list,
                     dedup,
+                    ..Default::default()
                 };
-                let point = ctx.measure(p, |pool, p| {
-                    let sinks: Vec<CountSink> =
-                        gbm::match_par(pool, p, &subs, &upds, &params);
-                    ddm::core::sink::total_count(&sinks)
-                });
+                let engine = ctx.engine(ddm::algos::Algo::Gbm, p, &params);
+                let point = ctx.measure(p, |_pool, _p| engine.count_1d(&subs, &upds));
                 table.row(vec![
                     p.to_string(),
                     format!("{cell_list:?}"),

@@ -10,11 +10,9 @@
 //!
 //!   cargo bench --bench abl_sets -- [--n 2e5] [--quick]
 
-use ddm::algos::psbm;
 use ddm::bench::harness::FigCtx;
 use ddm::bench::stats::fmt_secs;
 use ddm::bench::table::{banner, Table};
-use ddm::core::sink::CountSink;
 use ddm::sets::SetImpl;
 use ddm::workload::{alpha_workload, AlphaParams};
 
@@ -38,11 +36,15 @@ fn main() {
         let (subs, upds) = alpha_workload(21, &wp);
         let mut best: Option<(f64, SetImpl)> = None;
         for set_impl in SetImpl::ALL {
-            let point = ctx.measure(p, |pool, p| {
-                let sinks: Vec<CountSink> =
-                    psbm::match_par_with(set_impl, pool, p, &subs, &upds);
-                ddm::core::sink::total_count(&sinks)
-            });
+            // Set implementations are an `EngineBuilder` knob.
+            let matcher = ddm::engine::algo_matcher(
+                ddm::algos::Algo::Psbm,
+                &ddm::algos::MatchParams {
+                    set_impl,
+                    ..Default::default()
+                },
+            );
+            let point = ctx.measure_matcher(matcher.as_ref(), p, &subs, &upds);
             let wct = point.modeled.mean;
             if best.map_or(true, |(b, _)| wct < b) {
                 best = Some((wct, set_impl));

@@ -60,12 +60,10 @@ fn main() {
             let k_xla = be.match_counts_1d(&subs, &upds).expect("xla");
             let t_xla = t.elapsed().as_secs_f64();
 
-            let bfm = ctx.measure(1, |pool, p| {
-                ddm::algos::run_count(Algo::Bfm, pool, p, &subs, &upds, &params)
-            });
-            let psbm = ctx.measure(4, |pool, p| {
-                ddm::algos::run_count(Algo::Psbm, pool, p, &subs, &upds, &params)
-            });
+            let bfm_matcher = ctx.matcher(Algo::Bfm, &params);
+            let bfm = ctx.measure_matcher(bfm_matcher.as_ref(), 1, &subs, &upds);
+            let psbm_matcher = ctx.matcher(Algo::Psbm, &params);
+            let psbm = ctx.measure_matcher(psbm_matcher.as_ref(), 4, &subs, &upds);
             assert_eq!(k_xla, bfm.value, "XLA vs BFM disagree");
             assert_eq!(k_xla, psbm.value, "XLA vs PSBM disagree");
             table.row(vec![

@@ -16,6 +16,10 @@ use ddm::bench::stats::fmt_secs;
 use ddm::bench::table::{banner, Table};
 use ddm::workload::{alpha_workload, AlphaParams};
 
+// Algorithms are driven through the engine API (`FigCtx::matcher` +
+// `FigCtx::measure_matcher`), so any `Matcher` — including out-of-tree
+// backends — can be added to the sweep.
+
 fn main() {
     let ctx = FigCtx::new(32);
     let n_total = ctx.args.size("n", if ctx.quick { 20_000 } else { 100_000 });
@@ -72,9 +76,8 @@ fn main() {
             } else {
                 (&subs, &upds, 1.0)
             };
-            let point = ctx.measure(p, |pool, p| {
-                ddm::algos::run_count(algo, pool, p, s, u, &params)
-            });
+            let matcher = ctx.matcher(algo, &params);
+            let point = ctx.measure_matcher(matcher.as_ref(), p, s, u);
             let wct = point.modeled.mean * scale;
             if p == 1 {
                 t1[ai] = wct;

@@ -37,9 +37,8 @@ fn main() {
     let mut t1 = [0.0f64; 2];
     for &p in &ctx.thread_counts() {
         for (ai, &algo) in algos.iter().enumerate() {
-            let point = ctx.measure(p, |pool, p| {
-                ddm::algos::run_count(algo, pool, p, &subs, &upds, &params)
-            });
+            let matcher = ctx.matcher(algo, &params);
+            let point = ctx.measure_matcher(matcher.as_ref(), p, &subs, &upds);
             let wct = point.modeled.mean;
             if p == 1 {
                 t1[ai] = wct;

@@ -10,7 +10,6 @@
 use ddm::algos::gbm::{self, GbmParams};
 use ddm::bench::harness::FigCtx;
 use ddm::bench::table::{banner, Table};
-use ddm::core::sink::CountSink;
 use ddm::workload::{alpha_workload, AlphaParams};
 
 fn main() {
@@ -45,14 +44,11 @@ fn main() {
     for &nc in &cell_counts {
         let mut row = Vec::new();
         for &p in &threads {
-            let params = GbmParams {
+            let matcher = gbm::GbmMatcher::new(GbmParams {
                 ncells: nc,
                 ..Default::default()
-            };
-            let point = ctx.measure(p, |pool, p| {
-                let sinks: Vec<CountSink> = gbm::match_par(pool, p, &subs, &upds, &params);
-                ddm::core::sink::total_count(&sinks)
             });
+            let point = ctx.measure_matcher(&matcher, p, &subs, &upds);
             row.push(point.modeled.mean);
         }
         rows.push(row);

@@ -43,9 +43,8 @@ fn main() {
         };
         let (subs, upds) = alpha_workload(12, &wp);
         for &algo in &algos {
-            let point = ctx.measure(p, |pool, p| {
-                ddm::algos::run_count(algo, pool, p, &subs, &upds, &params)
-            });
+            let matcher = ctx.matcher(algo, &params);
+            let point = ctx.measure_matcher(matcher.as_ref(), p, &subs, &upds);
             ta.row(vec![
                 n.to_string(),
                 algo.name().to_string(),
@@ -74,9 +73,8 @@ fn main() {
         };
         let (subs, upds) = alpha_workload(13, &wp);
         for &algo in &algos {
-            let point = ctx.measure(p, |pool, p| {
-                ddm::algos::run_count(algo, pool, p, &subs, &upds, &params)
-            });
+            let matcher = ctx.matcher(algo, &params);
+            let point = ctx.measure_matcher(matcher.as_ref(), p, &subs, &upds);
             tb.row(vec![
                 format!("{alpha}"),
                 algo.name().to_string(),

@@ -9,11 +9,11 @@
 //!
 //!   cargo bench --bench fig13_memory -- [--quick]
 
-use ddm::algos::{Algo, MatchParams};
+use ddm::algos::Algo;
 use ddm::bench::rss;
 use ddm::bench::table::{banner, Table};
 use ddm::cli::Args;
-use ddm::exec::ThreadPool;
+use ddm::engine::DdmEngine;
 use ddm::workload::{alpha_workload, AlphaParams};
 
 fn child(args: &Args) {
@@ -27,8 +27,7 @@ fn child(args: &Args) {
     };
     let (subs, upds) = alpha_workload(13, &wp);
     let baseline = rss::peak_rss_bytes().unwrap_or(0);
-    let pool = ThreadPool::new(threads.saturating_sub(1));
-    let params = MatchParams::default();
+    let engine = DdmEngine::builder().algo(algo).threads(threads).build();
     // BFM's peak RSS is input-dominated (O(1) extra memory) but its
     // runtime is Θ(N²); cap the *compute* on a subscription prefix so
     // the measurement stays affordable — the full arrays stay
@@ -38,11 +37,11 @@ fn child(args: &Args) {
             lo: subs.lo[..20_000].to_vec(),
             hi: subs.hi[..20_000].to_vec(),
         };
-        let k = ddm::algos::run_count(algo, &pool, threads, &head, &upds, &params);
+        let k = engine.count_1d(&head, &upds);
         std::hint::black_box(&subs);
         k
     } else {
-        ddm::algos::run_count(algo, &pool, threads, &subs, &upds, &params)
+        engine.count_1d(&subs, &upds)
     };
     let peak = rss::peak_rss_bytes().unwrap_or(0);
     // Parent parses this exact line.

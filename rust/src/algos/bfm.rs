@@ -52,6 +52,39 @@ where
     })
 }
 
+/// [`Matcher`](crate::engine::Matcher) backend for brute-force
+/// matching.
+pub struct BfmMatcher;
+
+impl crate::engine::Matcher for BfmMatcher {
+    fn name(&self) -> &str {
+        "bfm"
+    }
+
+    fn match_1d(
+        &self,
+        ctx: &crate::engine::ExecCtx<'_>,
+        subs: &Regions1D,
+        upds: &Regions1D,
+        sink: &mut dyn MatchSink,
+    ) {
+        let sinks: Vec<crate::core::sink::VecSink> =
+            match_par(ctx.pool, ctx.nthreads, subs, upds);
+        crate::core::sink::replay(sinks, sink);
+    }
+
+    fn count_1d(
+        &self,
+        ctx: &crate::engine::ExecCtx<'_>,
+        subs: &Regions1D,
+        upds: &Regions1D,
+    ) -> u64 {
+        let sinks: Vec<crate::core::sink::CountSink> =
+            match_par(ctx.pool, ctx.nthreads, subs, upds);
+        crate::core::sink::total_count(&sinks)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

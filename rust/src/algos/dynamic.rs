@@ -1,17 +1,126 @@
 //! Dynamic interval management (paper §3, "Dynamic interval
 //! management") — the ITM feature the paper highlights against SBM.
 //!
-//! Two interval trees index the subscription and update sets. When a
-//! region moves or resizes, the affected overlaps are recomputed in
-//! O(min{n, K lg n}) by querying the *opposite* tree, and the region's
-//! own tree is updated with one delete + one insert (O(lg n) each) —
-//! no full re-match. [`MoveDiff`] reports which pairs appeared and
+//! [`TreeIndex`] is the per-side building block: an interval tree plus
+//! a key → interval map, implementing the engine's
+//! [`DynamicMatcher`](crate::engine::DynamicMatcher) extension trait
+//! (insert/modify/remove in O(lg n), output-sensitive queries).
+//!
+//! [`DynamicDdm`] composes two of them — the paper's two-tree scheme —
+//! to index the subscription and update sets. When a region moves or
+//! resizes, the affected overlaps are recomputed in O(min{n, K lg n})
+//! by querying the *opposite* tree, and the region's own tree is
+//! updated with one delete + one insert (O(lg n) each) — no full
+//! re-match. [`MoveDiff`] reports which pairs appeared and
 //! disappeared, which is exactly what the HLA notification layer needs.
+
+use std::collections::BTreeMap;
 
 use crate::core::interval::Interval;
 use crate::core::Regions1D;
 
 use super::interval_tree::IntervalTree;
+
+/// A keyed incremental 1-D interval index: the native
+/// [`DynamicMatcher`](crate::engine::DynamicMatcher) of the
+/// interval-tree family (one side of the two-tree scheme).
+pub struct TreeIndex {
+    tree: IntervalTree,
+    ivs: BTreeMap<u32, Interval>,
+}
+
+impl TreeIndex {
+    pub fn new() -> Self {
+        Self {
+            tree: IntervalTree::new(),
+            ivs: BTreeMap::new(),
+        }
+    }
+
+    /// Bulk build keyed by dense index (O(n) tree construction).
+    pub fn from_regions(regions: &Regions1D) -> Self {
+        let tree = IntervalTree::from_regions(regions);
+        let ivs = (0..regions.len())
+            .map(|i| (i as u32, regions.get(i)))
+            .collect();
+        Self { tree, ivs }
+    }
+
+    /// Store `iv` under `key`, replacing any previous interval.
+    pub fn put(&mut self, key: u32, iv: Interval) {
+        if let Some(old) = self.ivs.insert(key, iv) {
+            let removed = self.tree.remove(old, key);
+            debug_assert!(removed);
+        }
+        self.tree.insert(iv, key);
+    }
+
+    /// Drop `key` (no-op if absent).
+    pub fn delete(&mut self, key: u32) {
+        if let Some(old) = self.ivs.remove(&key) {
+            let removed = self.tree.remove(old, key);
+            debug_assert!(removed);
+        }
+    }
+
+    /// The interval stored under `key`.
+    pub fn get(&self, key: u32) -> Option<Interval> {
+        self.ivs.get(&key).copied()
+    }
+
+    /// Keys of stored intervals overlapping `q`, ascending.
+    pub fn query_sorted(&self, q: Interval) -> Vec<u32> {
+        self.tree.query_vec(q)
+    }
+
+    pub fn len(&self) -> usize {
+        self.ivs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ivs.is_empty()
+    }
+
+    /// Iterate `(key, interval)` in ascending key order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, Interval)> + '_ {
+        self.ivs.iter().map(|(&k, &iv)| (k, iv))
+    }
+
+    /// Structural self-check (tests).
+    pub fn check_invariants(&self) {
+        self.tree.check_invariants();
+        assert_eq!(self.tree.len(), self.ivs.len());
+    }
+}
+
+impl Default for TreeIndex {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl crate::engine::DynamicMatcher for TreeIndex {
+    fn insert(&mut self, key: u32, iv: Interval) {
+        self.put(key, iv);
+    }
+
+    fn modify(&mut self, key: u32, iv: Interval) {
+        self.put(key, iv);
+    }
+
+    fn remove(&mut self, key: u32) {
+        self.delete(key);
+    }
+
+    fn query(&mut self, _ctx: &crate::engine::ExecCtx<'_>, q: Interval, out: &mut Vec<u32>) {
+        out.clear();
+        out.extend(self.query_sorted(q));
+    }
+
+    fn len(&self) -> usize {
+        self.ivs.len()
+    }
+}
 
 /// Which side a region belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -29,47 +138,42 @@ pub struct MoveDiff {
     pub added: Vec<u32>,
 }
 
-/// The two-tree dynamic DDM state of §3.
+/// The two-tree dynamic DDM state of §3: one [`TreeIndex`] per side.
 pub struct DynamicDdm {
-    subs: Regions1D,
-    upds: Regions1D,
-    tree_s: IntervalTree,
-    tree_u: IntervalTree,
+    tree_s: TreeIndex,
+    tree_u: TreeIndex,
 }
 
 impl DynamicDdm {
     pub fn new(subs: Regions1D, upds: Regions1D) -> Self {
-        let tree_s = IntervalTree::from_regions(&subs);
-        let tree_u = IntervalTree::from_regions(&upds);
         Self {
-            subs,
-            upds,
-            tree_s,
-            tree_u,
+            tree_s: TreeIndex::from_regions(&subs),
+            tree_u: TreeIndex::from_regions(&upds),
         }
     }
 
     pub fn n_subs(&self) -> usize {
-        self.subs.len()
+        self.tree_s.len()
     }
 
     pub fn n_upds(&self) -> usize {
-        self.upds.len()
+        self.tree_u.len()
     }
 
     pub fn interval(&self, side: Side, idx: u32) -> Interval {
-        match side {
-            Side::Subscription => self.subs.get(idx as usize),
-            Side::Update => self.upds.get(idx as usize),
-        }
+        let index = match side {
+            Side::Subscription => &self.tree_s,
+            Side::Update => &self.tree_u,
+        };
+        index.get(idx).expect("region index in range")
     }
 
     /// Current overlaps of one region (opposite-side indices, sorted).
     pub fn overlaps(&self, side: Side, idx: u32) -> Vec<u32> {
         let q = self.interval(side, idx);
         match side {
-            Side::Subscription => self.tree_u.query_vec(q),
-            Side::Update => self.tree_s.query_vec(q),
+            Side::Subscription => self.tree_u.query_sorted(q),
+            Side::Update => self.tree_s.query_sorted(q),
         }
     }
 
@@ -81,21 +185,15 @@ impl DynamicDdm {
         let old_iv = self.interval(side, idx);
         let (old, new) = match side {
             Side::Subscription => {
-                let old = self.tree_u.query_vec(old_iv);
-                let new = self.tree_u.query_vec(new_iv);
-                let ok = self.tree_s.remove(old_iv, idx);
-                debug_assert!(ok);
-                self.tree_s.insert(new_iv, idx);
-                self.subs.set(idx as usize, new_iv);
+                let old = self.tree_u.query_sorted(old_iv);
+                let new = self.tree_u.query_sorted(new_iv);
+                self.tree_s.put(idx, new_iv);
                 (old, new)
             }
             Side::Update => {
-                let old = self.tree_s.query_vec(old_iv);
-                let new = self.tree_s.query_vec(new_iv);
-                let ok = self.tree_u.remove(old_iv, idx);
-                debug_assert!(ok);
-                self.tree_u.insert(new_iv, idx);
-                self.upds.set(idx as usize, new_iv);
+                let old = self.tree_s.query_sorted(old_iv);
+                let new = self.tree_s.query_sorted(new_iv);
+                self.tree_u.put(idx, new_iv);
                 (old, new)
             }
         };
@@ -106,9 +204,8 @@ impl DynamicDdm {
     /// against the subscription tree.
     pub fn all_pairs(&self) -> Vec<(u32, u32)> {
         let mut out = Vec::new();
-        for j in 0..self.upds.len() {
-            let q = self.upds.get(j);
-            self.tree_s.query(q, &mut |s| out.push((s, j as u32)));
+        for (j, q) in self.tree_u.iter() {
+            out.extend(self.tree_s.query_sorted(q).into_iter().map(|s| (s, j)));
         }
         out.sort_unstable();
         out
@@ -118,8 +215,6 @@ impl DynamicDdm {
     pub fn check(&self) {
         self.tree_s.check_invariants();
         self.tree_u.check_invariants();
-        assert_eq!(self.tree_s.len(), self.subs.len());
-        assert_eq!(self.tree_u.len(), self.upds.len());
     }
 }
 
@@ -234,5 +329,41 @@ mod tests {
         let mut ddm = DynamicDdm::new(subs, upds);
         let d = ddm.move_region(Side::Subscription, 0, Interval::new(0.0, 10.0));
         assert_eq!(d, MoveDiff::default());
+    }
+
+    /// TreeIndex and the engine's rebuild-on-write adapter are two
+    /// implementations of the same DynamicMatcher contract.
+    #[test]
+    fn tree_index_agrees_with_rebuild_adapter() {
+        use crate::engine::{algo_matcher, DynamicMatcher, ExecCtx, RebuildDynamic};
+        let pool = crate::exec::ThreadPool::new(1);
+        let ctx = ExecCtx::new(&pool, 2);
+        let mut tree: Box<dyn DynamicMatcher> = Box::new(TreeIndex::new());
+        let mut rebuild: Box<dyn DynamicMatcher> = Box::new(RebuildDynamic::new(
+            algo_matcher(crate::algos::Algo::Psbm, &crate::algos::MatchParams::default()),
+        ));
+        let mut rng = Rng::new(0xD7);
+        for _ in 0..150 {
+            let key = rng.below(30) as u32;
+            match rng.below(3) {
+                0 | 1 => {
+                    let lo = rng.uniform(0.0, 90.0);
+                    let iv = Interval::new(lo, lo + rng.uniform(0.0, 10.0));
+                    tree.insert(key, iv);
+                    rebuild.insert(key, iv);
+                }
+                _ => {
+                    tree.remove(key);
+                    rebuild.remove(key);
+                }
+            }
+            let lo = rng.uniform(0.0, 95.0);
+            let q = Interval::new(lo, lo + 5.0);
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            tree.query(&ctx, q, &mut a);
+            rebuild.query(&ctx, q, &mut b);
+            assert_eq!(a, b);
+            assert_eq!(tree.len(), rebuild.len());
+        }
     }
 }

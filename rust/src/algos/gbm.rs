@@ -230,6 +230,51 @@ where
     })
 }
 
+/// [`Matcher`](crate::engine::Matcher) backend for grid-based
+/// matching, carrying its grid parameters.
+pub struct GbmMatcher {
+    params: GbmParams,
+}
+
+impl GbmMatcher {
+    pub fn new(params: GbmParams) -> Self {
+        Self { params }
+    }
+
+    pub fn params(&self) -> &GbmParams {
+        &self.params
+    }
+}
+
+impl crate::engine::Matcher for GbmMatcher {
+    fn name(&self) -> &str {
+        "gbm"
+    }
+
+    fn match_1d(
+        &self,
+        ctx: &crate::engine::ExecCtx<'_>,
+        subs: &Regions1D,
+        upds: &Regions1D,
+        sink: &mut dyn MatchSink,
+    ) {
+        let sinks: Vec<crate::core::sink::VecSink> =
+            match_par(ctx.pool, ctx.nthreads, subs, upds, &self.params);
+        crate::core::sink::replay(sinks, sink);
+    }
+
+    fn count_1d(
+        &self,
+        ctx: &crate::engine::ExecCtx<'_>,
+        subs: &Regions1D,
+        upds: &Regions1D,
+    ) -> u64 {
+        let sinks: Vec<crate::core::sink::CountSink> =
+            match_par(ctx.pool, ctx.nthreads, subs, upds, &self.params);
+        crate::core::sink::total_count(&sinks)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

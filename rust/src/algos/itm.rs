@@ -87,6 +87,45 @@ where
     })
 }
 
+/// [`Matcher`](crate::engine::Matcher) backend for interval-tree
+/// matching. The ITM family is the one with a native incremental
+/// index, so [`make_dynamic`](crate::engine::Matcher::make_dynamic)
+/// returns the interval-tree index instead of the rebuild adapter.
+pub struct ItmMatcher;
+
+impl crate::engine::Matcher for ItmMatcher {
+    fn name(&self) -> &str {
+        "itm"
+    }
+
+    fn match_1d(
+        &self,
+        ctx: &crate::engine::ExecCtx<'_>,
+        subs: &Regions1D,
+        upds: &Regions1D,
+        sink: &mut dyn MatchSink,
+    ) {
+        let sinks: Vec<crate::core::sink::VecSink> =
+            match_par(ctx.pool, ctx.nthreads, subs, upds);
+        crate::core::sink::replay(sinks, sink);
+    }
+
+    fn count_1d(
+        &self,
+        ctx: &crate::engine::ExecCtx<'_>,
+        subs: &Regions1D,
+        upds: &Regions1D,
+    ) -> u64 {
+        let sinks: Vec<crate::core::sink::CountSink> =
+            match_par(ctx.pool, ctx.nthreads, subs, upds);
+        crate::core::sink::total_count(&sinks)
+    }
+
+    fn make_dynamic(&self) -> Option<Box<dyn crate::engine::DynamicMatcher>> {
+        Some(Box::new(super::dynamic::TreeIndex::new()))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -85,24 +85,47 @@ impl std::str::FromStr for Algo {
     type Err = String;
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s.to_ascii_lowercase().as_str() {
-            "bfm" | "brute" | "bruteforce" => Ok(Algo::Bfm),
-            "gbm" | "grid" => Ok(Algo::Gbm),
-            "itm" | "tree" => Ok(Algo::Itm),
-            "sbm" | "sort" => Ok(Algo::Sbm),
+            "bfm" | "brute" | "bruteforce" | "brute-force" => Ok(Algo::Bfm),
+            "gbm" | "grid" | "grid-based" => Ok(Algo::Gbm),
+            "itm" | "tree" | "interval-tree" => Ok(Algo::Itm),
+            "sbm" | "sort" | "sort-based" => Ok(Algo::Sbm),
             "psbm" | "parallel-sbm" | "sbm-par" => Ok(Algo::Psbm),
             "sbm-binary" | "binary" => Ok(Algo::SbmBinary),
-            other => Err(format!("unknown algorithm '{other}'")),
+            other => {
+                let valid: Vec<&str> = Algo::ALL.iter().map(|a| a.name()).collect();
+                Err(format!(
+                    "unknown algorithm '{other}' (valid: {}, plus aliases \
+                     brute-force/grid-based/interval-tree/sort-based)",
+                    valid.join(", ")
+                ))
+            }
         }
     }
 }
 
-/// Knobs shared by the 1-D matchers.
+/// Knobs shared by the 1-D matchers (everything the
+/// [`EngineBuilder`](crate::engine::EngineBuilder) tunes).
 #[derive(Debug, Clone, Copy)]
 pub struct MatchParams {
     /// GBM: number of grid cells (paper: user-provided, e.g. 3000).
     pub ncells: usize,
     /// SBM/PSBM active-set implementation (paper §5 study).
     pub set_impl: SetImpl,
+    /// GBM phase-1 cell-list synchronization strategy.
+    pub cell_list: gbm::CellList,
+    /// GBM phase-2 duplicate-suppression strategy.
+    pub dedup: gbm::Dedup,
+}
+
+impl MatchParams {
+    /// The GBM parameter block this configuration implies.
+    pub fn gbm(&self) -> gbm::GbmParams {
+        gbm::GbmParams {
+            ncells: self.ncells,
+            cell_list: self.cell_list,
+            dedup: self.dedup,
+        }
+    }
 }
 
 impl Default for MatchParams {
@@ -110,13 +133,17 @@ impl Default for MatchParams {
         Self {
             ncells: 3000,
             set_impl: SetImpl::Sparse,
+            cell_list: gbm::CellList::default(),
+            dedup: gbm::Dedup::default(),
         }
     }
 }
 
-/// Count intersections with `algo` using `nthreads` workers — the
-/// entry point the benches use (counting sink, like the paper's
-/// evaluation).
+/// Count intersections with `algo` using `nthreads` workers.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `DdmEngine::builder().algo(..).build().count_1d(..)` (crate::engine)"
+)]
 pub fn run_count(
     algo: Algo,
     pool: &ThreadPool,
@@ -125,11 +152,16 @@ pub fn run_count(
     upds: &Regions1D,
     params: &MatchParams,
 ) -> u64 {
+    #[allow(deprecated)]
     let sinks: Vec<CountSink> = run_collect(algo, pool, nthreads, subs, upds, params);
     crate::core::sink::total_count(&sinks)
 }
 
 /// Run `algo` collecting per-worker sinks of type `S`.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `DdmEngine::match_1d` with a sink, or the module-level match functions"
+)]
 pub fn run_collect<S>(
     algo: Algo,
     pool: &ThreadPool,
@@ -143,16 +175,7 @@ where
 {
     match algo {
         Algo::Bfm => bfm::match_par(pool, nthreads, subs, upds),
-        Algo::Gbm => gbm::match_par(
-            pool,
-            nthreads,
-            subs,
-            upds,
-            &gbm::GbmParams {
-                ncells: params.ncells,
-                ..Default::default()
-            },
-        ),
+        Algo::Gbm => gbm::match_par(pool, nthreads, subs, upds, &params.gbm()),
         Algo::Itm => itm::match_par(pool, nthreads, subs, upds),
         Algo::Sbm => {
             // Intrinsically serial baseline (the paper's Algorithm 4);
@@ -165,6 +188,10 @@ where
 }
 
 /// Canonical pair list for `algo` (test helper).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `DdmEngine::builder().algo(..).build().pairs_1d(..)` (crate::engine)"
+)]
 pub fn run_pairs(
     algo: Algo,
     pool: &ThreadPool,
@@ -173,6 +200,7 @@ pub fn run_pairs(
     upds: &Regions1D,
     params: &MatchParams,
 ) -> crate::core::sink::PairVec {
+    #[allow(deprecated)]
     let sinks: Vec<VecSink> = run_collect(algo, pool, nthreads, subs, upds, params);
     crate::core::sink::canonical_pairs(sinks)
 }
@@ -187,6 +215,44 @@ mod tests {
             assert_eq!(a.name().parse::<Algo>().unwrap(), a);
         }
         assert!("nope".parse::<Algo>().is_err());
+    }
+
+    #[test]
+    fn algo_parse_long_aliases() {
+        assert_eq!("interval-tree".parse::<Algo>().unwrap(), Algo::Itm);
+        assert_eq!("grid-based".parse::<Algo>().unwrap(), Algo::Gbm);
+        assert_eq!("sort-based".parse::<Algo>().unwrap(), Algo::Sbm);
+        assert_eq!("brute-force".parse::<Algo>().unwrap(), Algo::Bfm);
+        assert_eq!("Interval-Tree".parse::<Algo>().unwrap(), Algo::Itm);
+    }
+
+    #[test]
+    fn algo_parse_error_lists_valid_names() {
+        let err = "frobnicate".parse::<Algo>().unwrap_err();
+        for a in Algo::ALL {
+            assert!(err.contains(a.name()), "error should list {}: {err}", a.name());
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_work() {
+        use crate::core::region::random_regions_1d;
+        let pool = ThreadPool::new(1);
+        let mut rng = crate::prng::Rng::new(0xA0);
+        let subs = random_regions_1d(&mut rng, 80, 100.0, 5.0);
+        let upds = random_regions_1d(&mut rng, 80, 100.0, 5.0);
+        let params = MatchParams::default();
+        let want = crate::engine::DdmEngine::builder()
+            .algo(Algo::Psbm)
+            .threads(2)
+            .build()
+            .pairs_1d(&subs, &upds);
+        assert_eq!(run_pairs(Algo::Psbm, &pool, 2, &subs, &upds, &params), want);
+        assert_eq!(
+            run_count(Algo::Psbm, &pool, 2, &subs, &upds, &params),
+            want.len() as u64
+        );
     }
 
     #[test]

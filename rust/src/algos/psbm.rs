@@ -175,6 +175,47 @@ where
     }
 }
 
+/// [`Matcher`](crate::engine::Matcher) backend for Parallel SBM (the
+/// paper's main contribution).
+pub struct PsbmMatcher {
+    set_impl: SetImpl,
+}
+
+impl PsbmMatcher {
+    pub fn new(set_impl: SetImpl) -> Self {
+        Self { set_impl }
+    }
+}
+
+impl crate::engine::Matcher for PsbmMatcher {
+    fn name(&self) -> &str {
+        "psbm"
+    }
+
+    fn match_1d(
+        &self,
+        ctx: &crate::engine::ExecCtx<'_>,
+        subs: &Regions1D,
+        upds: &Regions1D,
+        sink: &mut dyn MatchSink,
+    ) {
+        let sinks: Vec<crate::core::sink::VecSink> =
+            match_par_with(self.set_impl, ctx.pool, ctx.nthreads, subs, upds);
+        crate::core::sink::replay(sinks, sink);
+    }
+
+    fn count_1d(
+        &self,
+        ctx: &crate::engine::ExecCtx<'_>,
+        subs: &Regions1D,
+        upds: &Regions1D,
+    ) -> u64 {
+        let sinks: Vec<crate::core::sink::CountSink> =
+            match_par_with(self.set_impl, ctx.pool, ctx.nthreads, subs, upds);
+        crate::core::sink::total_count(&sinks)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

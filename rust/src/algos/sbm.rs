@@ -153,6 +153,47 @@ where
     sink
 }
 
+/// [`Matcher`](crate::engine::Matcher) backend for **serial** SBM
+/// (the paper's Algorithm 4, the sequential state of the art). Runs on
+/// one thread regardless of the context's thread count.
+pub struct SbmMatcher {
+    set_impl: SetImpl,
+}
+
+impl SbmMatcher {
+    pub fn new(set_impl: SetImpl) -> Self {
+        Self { set_impl }
+    }
+}
+
+impl crate::engine::Matcher for SbmMatcher {
+    fn name(&self) -> &str {
+        "sbm"
+    }
+
+    fn match_1d(
+        &self,
+        _ctx: &crate::engine::ExecCtx<'_>,
+        subs: &Regions1D,
+        upds: &Regions1D,
+        sink: &mut dyn MatchSink,
+    ) {
+        let collected: crate::core::sink::VecSink =
+            match_seq_with(self.set_impl, subs, upds);
+        crate::core::sink::replay(vec![collected], sink);
+    }
+
+    fn count_1d(
+        &self,
+        _ctx: &crate::engine::ExecCtx<'_>,
+        subs: &Regions1D,
+        upds: &Regions1D,
+    ) -> u64 {
+        let counted: crate::core::sink::CountSink = match_seq_with(self.set_impl, subs, upds);
+        counted.count
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

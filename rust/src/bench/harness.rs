@@ -8,12 +8,16 @@
 //! [`super::speedup::ModelOpts::modeled_wct`]. Raw oversubscribed
 //! wall-clock is also recorded for transparency.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::speedup::ModelOpts;
 use super::stats::{summarize, Summary};
 use super::Meter;
+use crate::algos::{Algo, MatchParams};
 use crate::cli::Args;
+use crate::core::Regions1D;
+use crate::engine::{algo_matcher, DdmEngine, ExecCtx, Matcher};
 use crate::exec::ThreadPool;
 
 /// Everything a figure bench needs.
@@ -21,7 +25,9 @@ pub struct FigCtx {
     pub args: Args,
     pub meter: Meter,
     pub model: ModelOpts,
-    pub pool: ThreadPool,
+    /// Shared worker pool (engines built via [`FigCtx::engine`] reuse
+    /// it so the cost log captures their regions).
+    pub pool: Arc<ThreadPool>,
     pub quick: bool,
     pub csv_dir: Option<std::path::PathBuf>,
 }
@@ -32,7 +38,7 @@ impl FigCtx {
         let args = Args::from_env();
         let quick = args.flag("quick");
         let meter = Meter::from_args(&args);
-        let pool = ThreadPool::new(max_threads.saturating_sub(1));
+        let pool = Arc::new(ThreadPool::new(max_threads.saturating_sub(1)));
         // Fork-join term: the modeled testbed's OpenMP-style barrier
         // (~10 µs, ModelOpts::default). Calibrating it from this host's
         // wall-clock would charge the 1-core scheduler's wakeup latency
@@ -98,6 +104,41 @@ impl FigCtx {
         }
     }
 
+    /// An engine for one in-tree algorithm, sharing this harness's
+    /// pool (so region costs land in the harness's log) and running
+    /// `p` workers per call.
+    pub fn engine(&self, algo: Algo, p: usize, params: &MatchParams) -> DdmEngine {
+        DdmEngine::builder()
+            .algo(algo)
+            .threads(p)
+            .params(*params)
+            .pool(Arc::clone(&self.pool))
+            .build()
+    }
+
+    /// The bare matcher for one in-tree algorithm (drive it through
+    /// [`Self::measure_matcher`]).
+    pub fn matcher(&self, algo: Algo, params: &MatchParams) -> Arc<dyn Matcher> {
+        algo_matcher(algo, params)
+    }
+
+    /// Measure the counting path of **any** [`Matcher`] — in-tree or
+    /// out-of-tree — at `p` workers, under the same cost-log protocol
+    /// as [`Self::measure`]. This is how custom backends get
+    /// benchmarked without touching the `Algo` enum.
+    pub fn measure_matcher(
+        &self,
+        matcher: &dyn Matcher,
+        p: usize,
+        subs: &Regions1D,
+        upds: &Regions1D,
+    ) -> Point {
+        self.measure(p, |pool, nthreads| {
+            let ctx = ExecCtx::new(pool, nthreads);
+            matcher.count_1d(&ctx, subs, upds)
+        })
+    }
+
     /// Write a table to `<csv_dir>/<name>.csv` when CSV output is on.
     pub fn maybe_csv(&self, name: &str, table: &super::table::Table) {
         if let Some(dir) = &self.csv_dir {
@@ -146,5 +187,52 @@ mod tests {
         let fj = calibrate_fork_join(&pool);
         assert!(fj > std::time::Duration::ZERO);
         assert!(fj < std::time::Duration::from_millis(60), "{fj:?}");
+    }
+
+    /// The harness drives any `&dyn Matcher` — including one that is
+    /// not in the `Algo` enum.
+    #[test]
+    fn measure_matcher_accepts_custom_backend() {
+        use crate::core::sink::MatchSink;
+
+        struct CountEverything;
+        impl Matcher for CountEverything {
+            fn name(&self) -> &str {
+                "count-everything"
+            }
+            fn match_1d(
+                &self,
+                _ctx: &ExecCtx<'_>,
+                subs: &Regions1D,
+                upds: &Regions1D,
+                sink: &mut dyn crate::core::sink::MatchSink,
+            ) {
+                for i in 0..subs.len() as u32 {
+                    for j in 0..upds.len() as u32 {
+                        sink.report(i, j);
+                    }
+                }
+            }
+        }
+
+        let ctx = FigCtx {
+            args: Args::from_iter(Vec::<String>::new()),
+            meter: Meter { warmup: 0, reps: 1 },
+            model: ModelOpts::default(),
+            pool: Arc::new(ThreadPool::new(1)),
+            quick: true,
+            csv_dir: None,
+        };
+        let regions = Regions1D {
+            lo: vec![0.0; 5],
+            hi: vec![1.0; 5],
+        };
+        let point = ctx.measure_matcher(&CountEverything, 2, &regions, &regions);
+        assert_eq!(point.value, 25);
+
+        // In-tree matchers ride the same path.
+        let psbm = ctx.matcher(Algo::Psbm, &MatchParams::default());
+        let point = ctx.measure_matcher(psbm.as_ref(), 2, &regions, &regions);
+        assert_eq!(point.value, 25);
     }
 }

@@ -62,6 +62,77 @@ pub fn expect_eq<T: PartialEq + std::fmt::Debug>(
 mod tests {
     use super::*;
 
+    /// The engine-API agreement property: for random 1-D **and** 3-D
+    /// workloads, every `Matcher` implementation produces the
+    /// identical canonical pair set through `DdmEngine`.
+    #[test]
+    fn engine_matchers_agree_on_random_1d_and_3d_workloads() {
+        use crate::algos::Algo;
+        use crate::core::interval::Interval;
+        use crate::core::region::{random_regions_1d, RegionsNd};
+        use crate::engine::DdmEngine;
+        use crate::exec::ThreadPool;
+        use std::sync::Arc;
+
+        let pool = Arc::new(ThreadPool::new(3));
+        let engines: Vec<DdmEngine> = Algo::ALL
+            .iter()
+            .map(|&algo| {
+                DdmEngine::builder()
+                    .algo(algo)
+                    .threads(3)
+                    .ncells(48)
+                    .pool(Arc::clone(&pool))
+                    .build()
+            })
+            .collect();
+
+        prop_check("engine-matchers-agree", 0xE16E, |rng| {
+            // ---- 1-D ----------------------------------------------------
+            let n = 1 + rng.below(120) as usize;
+            let m = 1 + rng.below(120) as usize;
+            let l = rng.uniform(0.5, 25.0);
+            let subs = random_regions_1d(rng, n, 200.0, l);
+            let upds = random_regions_1d(rng, m, 200.0, l);
+            let want = engines[0].pairs_1d(&subs, &upds);
+            for e in &engines[1..] {
+                let got = e.pairs_1d(&subs, &upds);
+                expect_eq(&got, &want, e.algo_name())?;
+                if e.count_1d(&subs, &upds) != want.len() as u64 {
+                    return Err(format!("{}: count != pair-set size", e.algo_name()));
+                }
+            }
+
+            // ---- 3-D ----------------------------------------------------
+            let d = 3;
+            let mut subs3 = RegionsNd::new(d);
+            let mut upds3 = RegionsNd::new(d);
+            for _ in 0..1 + rng.below(40) {
+                let rect: Vec<Interval> = (0..d)
+                    .map(|_| {
+                        let lo = rng.uniform(0.0, 60.0);
+                        Interval::new(lo, lo + rng.uniform(0.0, 15.0))
+                    })
+                    .collect();
+                subs3.push(&rect);
+            }
+            for _ in 0..1 + rng.below(40) {
+                let rect: Vec<Interval> = (0..d)
+                    .map(|_| {
+                        let lo = rng.uniform(0.0, 60.0);
+                        Interval::new(lo, lo + rng.uniform(0.0, 15.0))
+                    })
+                    .collect();
+                upds3.push(&rect);
+            }
+            let want3 = engines[0].pairs_nd(&subs3, &upds3);
+            for e in &engines[1..] {
+                expect_eq(&e.pairs_nd(&subs3, &upds3), &want3, e.algo_name())?;
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn passing_property_passes() {
         prop_check("tautology", 1, |rng| {

@@ -1,6 +1,6 @@
 //! Host description (the paper's Table 1 analog, printed by benches).
 
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
 #[derive(Debug, Clone)]
 pub struct SysInfo {
@@ -57,26 +57,26 @@ fn read_ram_gb() -> f64 {
     0.0
 }
 
-static SYSINFO: Lazy<SysInfo> = Lazy::new(|| {
-    let (cpu_model, physical_cores, logical_cpus) = read_cpuinfo();
-    SysInfo {
-        cpu_model,
-        physical_cores,
-        logical_cpus,
-        ram_gb: read_ram_gb(),
-        os: std::fs::read_to_string("/etc/os-release")
-            .ok()
-            .and_then(|t| {
-                t.lines()
-                    .find(|l| l.starts_with("PRETTY_NAME="))
-                    .map(|l| l.trim_start_matches("PRETTY_NAME=").trim_matches('"').to_string())
-            })
-            .unwrap_or_else(|| "linux".to_string()),
-    }
-});
+static SYSINFO: OnceLock<SysInfo> = OnceLock::new();
 
 pub fn get() -> &'static SysInfo {
-    &SYSINFO
+    SYSINFO.get_or_init(|| {
+        let (cpu_model, physical_cores, logical_cpus) = read_cpuinfo();
+        SysInfo {
+            cpu_model,
+            physical_cores,
+            logical_cpus,
+            ram_gb: read_ram_gb(),
+            os: std::fs::read_to_string("/etc/os-release")
+                .ok()
+                .and_then(|t| {
+                    t.lines()
+                        .find(|l| l.starts_with("PRETTY_NAME="))
+                        .map(|l| l.trim_start_matches("PRETTY_NAME=").trim_matches('"').to_string())
+                })
+                .unwrap_or_else(|| "linux".to_string()),
+        }
+    })
 }
 
 /// One-line host summary for bench banners.

@@ -80,12 +80,19 @@ pub struct Config {
     values: BTreeMap<(String, String), Value>,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("config parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 fn parse_scalar(raw: &str) -> Value {
     let raw = raw.trim();
@@ -143,7 +150,7 @@ impl Config {
         Ok(cfg)
     }
 
-    pub fn load(path: &Path) -> anyhow::Result<Self> {
+    pub fn load(path: &Path) -> crate::error::Result<Self> {
         let text = std::fs::read_to_string(path)?;
         Ok(Self::parse(&text)?)
     }

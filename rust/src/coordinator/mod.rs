@@ -1,7 +1,13 @@
-//! The L3 coordinator: the service loop that owns the DDM state, the
-//! worker pool and (optionally) the XLA backend, and serves commands
-//! from clients over a channel — the "router/batcher" shape of the
-//! three-layer architecture with Python nowhere on the request path.
+//! The L3 coordinator: the service loop that owns the DDM state and
+//! its matching engine, and serves commands from clients over a
+//! channel — the "router/batcher" shape of the three-layer
+//! architecture with Python nowhere on the request path.
+//!
+//! The coordinator is **algorithm-agnostic**: it is configured with a
+//! [`DdmEngine`](crate::engine::DdmEngine) and never names a concrete
+//! matcher — swapping algorithms is an
+//! [`EngineBuilder`](crate::engine::EngineBuilder) change at spawn
+//! time.
 //!
 //! Mutating commands (register/modify/publish) are processed in
 //! arrival batches: the loop drains whatever is queued before
@@ -14,11 +20,9 @@ pub mod metrics;
 use std::sync::mpsc;
 use std::time::Instant;
 
-use anyhow::Result;
-
-use crate::algos::{Algo, MatchParams};
+use crate::engine::DdmEngine;
+use crate::error::Result;
 use crate::hla::{DdmService, FederateId, Notification, RegionHandle, RegionKind, RegionSpec, RoutingSpace};
-use crate::exec::ThreadPool;
 use metrics::Metrics;
 
 /// Commands a client can send to the coordinator.
@@ -48,7 +52,6 @@ pub enum Command {
         reply: mpsc::Sender<Vec<Notification>>,
     },
     MatchAll {
-        algo: Algo,
         reply: mpsc::Sender<usize>,
     },
     Metrics {
@@ -57,23 +60,34 @@ pub enum Command {
     Shutdown,
 }
 
-/// Coordinator configuration.
+/// Coordinator configuration: the routing space, the matching engine
+/// (algorithm, threads, parameters — see
+/// [`EngineBuilder`](crate::engine::EngineBuilder)) and the batching
+/// bound.
 pub struct CoordinatorConfig {
     pub space: RoutingSpace,
-    pub nthreads: usize,
-    pub params: MatchParams,
+    pub engine: DdmEngine,
     /// Max commands drained per loop iteration (batching bound).
     pub batch_max: usize,
 }
 
-impl Default for CoordinatorConfig {
-    fn default() -> Self {
+impl CoordinatorConfig {
+    /// Config with the default batching bound. Prefer this over
+    /// `..Default::default()` when supplying an engine —
+    /// [`Default`] constructs (and would immediately discard) a full
+    /// engine with its worker pool.
+    pub fn new(space: RoutingSpace, engine: DdmEngine) -> Self {
         Self {
-            space: RoutingSpace::uniform(1, 1_000_000),
-            nthreads: 4,
-            params: MatchParams::default(),
+            space,
+            engine,
             batch_max: 256,
         }
+    }
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self::new(RoutingSpace::uniform(1, 1_000_000), DdmEngine::default())
     }
 }
 
@@ -131,8 +145,8 @@ impl Client {
         self.call(|reply| Command::Poll { fed, reply })
     }
 
-    pub fn match_all(&self, algo: Algo) -> usize {
-        self.call(|reply| Command::MatchAll { algo, reply })
+    pub fn match_all(&self) -> usize {
+        self.call(|reply| Command::MatchAll { reply })
     }
 
     pub fn metrics(&self) -> Metrics {
@@ -189,8 +203,7 @@ impl Drop for Coordinator {
 }
 
 fn service_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Command>) -> Metrics {
-    let mut svc = DdmService::new(cfg.space.clone());
-    let pool = ThreadPool::new(cfg.nthreads.saturating_sub(1));
+    let mut svc = DdmService::with_engine(cfg.space.clone(), cfg.engine);
     let mut metrics = Metrics::default();
     let mut batch: Vec<Command> = Vec::with_capacity(cfg.batch_max);
 
@@ -254,8 +267,8 @@ fn service_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Command>) -> Metrics 
                 Command::Poll { fed, reply } => {
                     let _ = reply.send(svc.poll(fed));
                 }
-                Command::MatchAll { algo, reply } => {
-                    let pairs = svc.match_all(algo, &pool, cfg.nthreads, &cfg.params);
+                Command::MatchAll { reply } => {
+                    let pairs = svc.match_all();
                     metrics.inc("match_all", 1);
                     metrics.time("match_all", t0.elapsed());
                     let _ = reply.send(pairs.len());
@@ -276,11 +289,10 @@ mod tests {
 
     #[test]
     fn end_to_end_service_roundtrip() {
-        let coord = Coordinator::spawn(CoordinatorConfig {
-            space: RoutingSpace::uniform(1, 1000),
-            nthreads: 2,
-            ..Default::default()
-        });
+        let coord = Coordinator::spawn(CoordinatorConfig::new(
+            RoutingSpace::uniform(1, 1000),
+            DdmEngine::builder().threads(2).build(),
+        ));
         let c = coord.client();
         let veh = c.join("vehicles");
         let lights = c.join("lights");
@@ -290,7 +302,7 @@ mod tests {
         let u = c
             .register(lights, RegionKind::Update, RegionSpec::interval(50, 150))
             .unwrap();
-        assert_eq!(c.match_all(Algo::Psbm), 1);
+        assert_eq!(c.match_all(), 1);
         assert_eq!(c.publish(u, 99).unwrap(), 1);
         let mail = c.poll(veh);
         assert_eq!(mail.len(), 1);
@@ -309,11 +321,10 @@ mod tests {
 
     #[test]
     fn burst_of_commands_is_batched() {
-        let coord = Coordinator::spawn(CoordinatorConfig {
-            space: RoutingSpace::uniform(1, 10_000),
-            nthreads: 1,
-            ..Default::default()
-        });
+        let coord = Coordinator::spawn(CoordinatorConfig::new(
+            RoutingSpace::uniform(1, 10_000),
+            DdmEngine::builder().threads(1).build(),
+        ));
         let c = coord.client();
         let f = c.join("f");
         for i in 0..100u64 {
@@ -330,6 +341,37 @@ mod tests {
         // plumbing, not the batching win (async clients get that).
         assert!(m.counter("batches") <= m.counter("commands"));
         coord.shutdown();
+    }
+
+    /// Swapping the coordinator's algorithm is a spawn-time engine
+    /// change only; behavior (match counts, routing) is identical.
+    #[test]
+    fn coordinator_is_engine_agnostic() {
+        use crate::algos::Algo;
+        let mut counts = Vec::new();
+        for algo in [Algo::Itm, Algo::Psbm, Algo::Gbm] {
+            let coord = Coordinator::spawn(CoordinatorConfig::new(
+                RoutingSpace::uniform(1, 100_000),
+                DdmEngine::builder().algo(algo).threads(2).ncells(128).build(),
+            ));
+            let c = coord.client();
+            let f = c.join("f");
+            let mut rng = crate::prng::Rng::new(9);
+            for _ in 0..100 {
+                let x = rng.below(99_000);
+                c.register(f, RegionKind::Subscription, RegionSpec::interval(x, x + 800))
+                    .unwrap();
+            }
+            for _ in 0..50 {
+                let x = rng.below(99_000);
+                c.register(f, RegionKind::Update, RegionSpec::interval(x, x + 500))
+                    .unwrap();
+            }
+            counts.push(c.match_all());
+            coord.shutdown();
+        }
+        assert!(counts[0] > 0);
+        assert!(counts.windows(2).all(|w| w[0] == w[1]));
     }
 
     #[test]

@@ -82,6 +82,17 @@ pub fn total_count(sinks: &[CountSink]) -> u64 {
     sinks.iter().map(|s| s.count).sum()
 }
 
+/// Replay per-worker VecSinks into one downstream sink (how the
+/// parallel matchers adapt their per-worker collection to the
+/// object-safe `&mut dyn MatchSink` engine API).
+pub fn replay(sinks: Vec<VecSink>, sink: &mut dyn MatchSink) {
+    for s in sinks {
+        for (a, b) in s.pairs {
+            sink.report(a, b);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

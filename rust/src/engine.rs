@@ -1,0 +1,741 @@
+//! The unified matching API: the [`Matcher`] trait, the
+//! [`DynamicMatcher`] incremental extension, and the [`DdmEngine`] /
+//! [`EngineBuilder`] entry points.
+//!
+//! The paper evaluates six interchangeable matching algorithms over
+//! the same subscription/update workload; its predecessors (parallel
+//! SBM, parallel GBM) make the same architectural point: the DDM
+//! *service* should be algorithm-agnostic so backends can be swapped
+//! and compared. This module is that seam:
+//!
+//! * [`Matcher`] — object-safe 1-D matching plus a provided N-D path
+//!   via the dimension reduction of paper §2 ([`crate::core::ddim`]).
+//!   All six in-tree algorithms implement it; out-of-tree backends
+//!   (e.g. the XLA runtime, see `examples/xla_backend.rs`) implement
+//!   the same trait and plug into the same engine.
+//! * [`DynamicMatcher`] — the incremental insert/delete/modify
+//!   extension (paper §3's dynamic interval management). Implemented
+//!   natively by the interval-tree index
+//!   ([`crate::algos::dynamic::TreeIndex`], the two-tree scheme's
+//!   per-side building block) and generically by [`RebuildDynamic`],
+//!   a rebuild-on-write adapter that makes *any* static matcher
+//!   dynamic.
+//! * [`DdmEngine`] — the entry point: owns the worker pool, the match
+//!   parameters and the selected matcher. Built via [`EngineBuilder`]
+//!   (algorithm, thread count, [`MatchParams`], set implementation,
+//!   GBM dedup strategy, or adaptive auto-selection by workload size).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::algos::{bfm, gbm, itm, psbm, sbm, sbm_binary};
+use crate::algos::{Algo, MatchParams};
+use crate::core::ddim;
+use crate::core::interval::Interval;
+use crate::core::sink::{canonicalize, CountSink, FnSink, MatchSink, PairVec, VecSink};
+use crate::core::{Regions1D, RegionsNd};
+use crate::exec::ThreadPool;
+use crate::sets::SetImpl;
+
+/// Execution context handed to every [`Matcher`] call: the worker pool
+/// and the number of workers the matcher may use for this call.
+pub struct ExecCtx<'a> {
+    pub pool: &'a ThreadPool,
+    pub nthreads: usize,
+}
+
+impl<'a> ExecCtx<'a> {
+    pub fn new(pool: &'a ThreadPool, nthreads: usize) -> Self {
+        assert!(nthreads >= 1, "ExecCtx needs at least one thread");
+        Self { pool, nthreads }
+    }
+}
+
+/// An interchangeable region-matching backend (the paper's six
+/// algorithms, plus anything out-of-tree).
+///
+/// Object-safe by design: services hold `Arc<dyn Matcher>` / take
+/// `&dyn Matcher`, so swapping the algorithm is a value change, not a
+/// type change. Implementations must report every intersecting
+/// (subscription, update) pair exactly once per call.
+pub trait Matcher: Send + Sync {
+    /// Short name for tables, logs and CLI round-trips.
+    fn name(&self) -> &str;
+
+    /// Match two 1-D region sets, reporting every intersecting pair
+    /// `(s, u)` of dense indices into `subs`/`upds` exactly once.
+    fn match_1d(
+        &self,
+        ctx: &ExecCtx<'_>,
+        subs: &Regions1D,
+        upds: &Regions1D,
+        sink: &mut dyn MatchSink,
+    );
+
+    /// Count intersections without retaining them (the paper's
+    /// evaluation protocol). Implementations override this with
+    /// per-worker counting sinks so the hot path stays allocation-free.
+    fn count_1d(&self, ctx: &ExecCtx<'_>, subs: &Regions1D, upds: &Regions1D) -> u64 {
+        let mut sink = CountSink::default();
+        self.match_1d(ctx, subs, upds, &mut sink);
+        sink.count
+    }
+
+    /// Match d-dimensional region sets via the per-dimension reduction
+    /// of paper §2 (provided; override for natively d-dimensional
+    /// backends such as the dense XLA kernels).
+    fn match_nd(
+        &self,
+        ctx: &ExecCtx<'_>,
+        subs: &RegionsNd,
+        upds: &RegionsNd,
+        sink: &mut dyn MatchSink,
+    ) {
+        ddim::match_nd(
+            subs,
+            upds,
+            |s1, u1, out| self.match_1d(ctx, s1, u1, out),
+            sink,
+        );
+    }
+
+    /// A dynamic (incremental) index natively maintained by this
+    /// matcher family, if it has one. `None` (the default) makes the
+    /// engine fall back to a generic index — the interval tree for
+    /// in-tree algorithms, the [`RebuildDynamic`] adapter for custom
+    /// backends (see [`DdmEngine::dynamic`]).
+    fn make_dynamic(&self) -> Option<Box<dyn DynamicMatcher>> {
+        None
+    }
+}
+
+/// Extension of the matcher family for incremental workloads (paper
+/// §3, dynamic interval management): a keyed 1-D interval index that
+/// stays queryable across insert/delete/modify without a full
+/// re-match.
+///
+/// Keys are caller-chosen `u32`s (the HLA service uses region handle
+/// ids, which — unlike dense indices — survive swap-removal).
+/// [`query`](Self::query) returns the keys of all stored intervals
+/// overlapping `q`, ascending.
+pub trait DynamicMatcher: Send {
+    /// Add an interval under `key` (keys are unique; inserting an
+    /// existing key replaces its interval).
+    fn insert(&mut self, key: u32, iv: Interval);
+
+    /// Replace the interval stored under `key`.
+    fn modify(&mut self, key: u32, iv: Interval);
+
+    /// Remove `key` (no-op if absent).
+    fn remove(&mut self, key: u32);
+
+    /// Clear `out` and fill it with the keys of stored intervals
+    /// overlapping `q`, ascending (`out` is a reusable scratch buffer,
+    /// not an accumulator). `&mut self` so rebuild-on-write adapters
+    /// can rebuild lazily.
+    fn query(&mut self, ctx: &ExecCtx<'_>, q: Interval, out: &mut Vec<u32>);
+
+    /// Number of stored intervals.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Rebuild-on-write [`DynamicMatcher`] adapter for static matchers:
+/// writes invalidate a cached dense snapshot; the next query rebuilds
+/// it and runs the wrapped matcher against the query interval.
+///
+/// This is the trade-off the paper highlights against the interval
+/// tree: O(1) writes, O(rebuild + match) reads — the right choice when
+/// writes vastly outnumber queries, or when the wrapped backend's
+/// matching semantics differ from exact interval overlap (a custom
+/// backend computing in f32, say) and queries must reproduce them.
+pub struct RebuildDynamic {
+    matcher: Arc<dyn Matcher>,
+    ivs: BTreeMap<u32, Interval>,
+    /// Dense snapshot (regions, key per row); `None` after a write.
+    dense: Option<(Regions1D, Vec<u32>)>,
+}
+
+impl RebuildDynamic {
+    pub fn new(matcher: Arc<dyn Matcher>) -> Self {
+        Self {
+            matcher,
+            ivs: BTreeMap::new(),
+            dense: None,
+        }
+    }
+}
+
+impl DynamicMatcher for RebuildDynamic {
+    fn insert(&mut self, key: u32, iv: Interval) {
+        self.ivs.insert(key, iv);
+        self.dense = None;
+    }
+
+    fn modify(&mut self, key: u32, iv: Interval) {
+        self.ivs.insert(key, iv);
+        self.dense = None;
+    }
+
+    fn remove(&mut self, key: u32) {
+        self.ivs.remove(&key);
+        self.dense = None;
+    }
+
+    fn query(&mut self, ctx: &ExecCtx<'_>, q: Interval, out: &mut Vec<u32>) {
+        out.clear();
+        if self.dense.is_none() {
+            let mut regions = Regions1D::with_capacity(self.ivs.len());
+            let mut keys = Vec::with_capacity(self.ivs.len());
+            for (&k, &iv) in &self.ivs {
+                regions.push(iv);
+                keys.push(k);
+            }
+            self.dense = Some((regions, keys));
+        }
+        let (regions, keys) = self.dense.as_ref().expect("just built");
+        let upd = Regions1D::from_intervals(&[q]);
+        let mut sink = FnSink(|s: u32, _u: u32| out.push(keys[s as usize]));
+        self.matcher.match_1d(ctx, regions, &upd, &mut sink);
+        out.sort_unstable();
+    }
+
+    fn len(&self) -> usize {
+        self.ivs.len()
+    }
+}
+
+/// How the engine picks its matcher.
+#[derive(Clone)]
+enum Selection {
+    /// One fixed in-tree algorithm.
+    Fixed(Algo),
+    /// Adaptive: pick per call by workload size and thread count.
+    Auto,
+    /// A caller-supplied backend.
+    Custom(Arc<dyn Matcher>),
+}
+
+/// Construct the [`Matcher`] for one in-tree algorithm.
+pub fn algo_matcher(algo: Algo, params: &MatchParams) -> Arc<dyn Matcher> {
+    match algo {
+        Algo::Bfm => Arc::new(bfm::BfmMatcher),
+        Algo::Gbm => Arc::new(gbm::GbmMatcher::new(params.gbm())),
+        Algo::Itm => Arc::new(itm::ItmMatcher),
+        Algo::Sbm => Arc::new(sbm::SbmMatcher::new(params.set_impl)),
+        Algo::Psbm => Arc::new(psbm::PsbmMatcher::new(params.set_impl)),
+        Algo::SbmBinary => Arc::new(sbm_binary::SbmBinaryMatcher),
+    }
+}
+
+/// Auto-selection heuristic (paper §5's summary findings): brute force
+/// for workloads too small to amortize a sort, serial SBM on one
+/// worker (the sequential state of the art), Parallel SBM otherwise
+/// (the paper's winner across every large workload).
+fn auto_algo(n: usize, m: usize, nthreads: usize) -> Algo {
+    if n + m <= 256 {
+        Algo::Bfm
+    } else if nthreads == 1 {
+        Algo::Sbm
+    } else {
+        Algo::Psbm
+    }
+}
+
+/// Builder for [`DdmEngine`].
+///
+/// ```
+/// use ddm::algos::Algo;
+/// use ddm::engine::DdmEngine;
+/// use ddm::sets::SetImpl;
+///
+/// let engine = DdmEngine::builder()
+///     .algo(Algo::Psbm)
+///     .threads(4)
+///     .set_impl(SetImpl::Bit)
+///     .build();
+/// assert_eq!(engine.algo_name(), "psbm");
+/// ```
+pub struct EngineBuilder {
+    selection: Selection,
+    nthreads: usize,
+    params: MatchParams,
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        Self {
+            selection: Selection::Fixed(Algo::Psbm),
+            nthreads: 4,
+            params: MatchParams::default(),
+            pool: None,
+        }
+    }
+
+    /// Use one fixed in-tree algorithm.
+    pub fn algo(mut self, algo: Algo) -> Self {
+        self.selection = Selection::Fixed(algo);
+        self
+    }
+
+    /// Adaptive algorithm selection by workload size (see
+    /// [`DdmEngine::algo_name`] for what gets picked).
+    pub fn auto(mut self) -> Self {
+        self.selection = Selection::Auto;
+        self
+    }
+
+    /// Use a caller-supplied (possibly out-of-tree) backend.
+    pub fn matcher(mut self, matcher: Arc<dyn Matcher>) -> Self {
+        self.selection = Selection::Custom(matcher);
+        self
+    }
+
+    /// Parse an algorithm name: every [`Algo`] alias plus `"auto"`.
+    pub fn algo_str(self, s: &str) -> Result<Self, String> {
+        if s.eq_ignore_ascii_case("auto") {
+            return Ok(self.auto());
+        }
+        Ok(self.algo(s.parse::<Algo>()?))
+    }
+
+    /// Number of workers per match call (≥ 1; serial algorithms
+    /// ignore it).
+    pub fn threads(mut self, nthreads: usize) -> Self {
+        self.nthreads = nthreads.max(1);
+        self
+    }
+
+    /// Replace the whole parameter block.
+    pub fn params(mut self, params: MatchParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// SBM/PSBM active-set implementation (paper §5 study).
+    pub fn set_impl(mut self, set_impl: SetImpl) -> Self {
+        self.params.set_impl = set_impl;
+        self
+    }
+
+    /// GBM grid-cell count.
+    pub fn ncells(mut self, ncells: usize) -> Self {
+        self.params.ncells = ncells;
+        self
+    }
+
+    /// GBM phase-2 duplicate-suppression strategy.
+    pub fn dedup(mut self, dedup: gbm::Dedup) -> Self {
+        self.params.dedup = dedup;
+        self
+    }
+
+    /// GBM phase-1 cell-list synchronization strategy.
+    pub fn cell_list(mut self, cell_list: gbm::CellList) -> Self {
+        self.params.cell_list = cell_list;
+        self
+    }
+
+    /// Share an existing pool (e.g. the bench harness pool) instead of
+    /// spawning one. The pool must be able to serve `threads` workers.
+    pub fn pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    pub fn build(self) -> DdmEngine {
+        let pool = self
+            .pool
+            .unwrap_or_else(|| Arc::new(ThreadPool::new(self.nthreads.saturating_sub(1))));
+        assert!(
+            self.nthreads <= pool.max_threads(),
+            "engine wants {} threads but the pool serves at most {}",
+            self.nthreads,
+            pool.max_threads()
+        );
+        let matcher = match &self.selection {
+            Selection::Fixed(algo) => algo_matcher(*algo, &self.params),
+            // Auto resolves per call; keep the paper's overall winner
+            // as the representative (dynamic-index donor, name).
+            Selection::Auto => algo_matcher(Algo::Psbm, &self.params),
+            Selection::Custom(m) => Arc::clone(m),
+        };
+        let auto_set = match self.selection {
+            Selection::Auto => Some(AutoSet {
+                bfm: algo_matcher(Algo::Bfm, &self.params),
+                sbm: algo_matcher(Algo::Sbm, &self.params),
+                psbm: algo_matcher(Algo::Psbm, &self.params),
+            }),
+            _ => None,
+        };
+        DdmEngine {
+            selection: self.selection,
+            matcher,
+            auto_set,
+            pool,
+            nthreads: self.nthreads,
+            params: self.params,
+        }
+    }
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Pre-built candidates for adaptive selection.
+#[derive(Clone)]
+struct AutoSet {
+    bfm: Arc<dyn Matcher>,
+    sbm: Arc<dyn Matcher>,
+    psbm: Arc<dyn Matcher>,
+}
+
+/// The algorithm-agnostic matching engine: worker pool + parameters +
+/// a [`Matcher`] behind one object-safe seam.
+///
+/// Cheap to clone (the pool and matcher are shared); use
+/// [`with_threads`](Self::with_threads) to sweep thread counts over
+/// one pool.
+#[derive(Clone)]
+pub struct DdmEngine {
+    selection: Selection,
+    matcher: Arc<dyn Matcher>,
+    auto_set: Option<AutoSet>,
+    pool: Arc<ThreadPool>,
+    nthreads: usize,
+    params: MatchParams,
+}
+
+impl DdmEngine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// The execution context handed to matcher calls.
+    pub fn ctx(&self) -> ExecCtx<'_> {
+        ExecCtx::new(self.pool.as_ref(), self.nthreads)
+    }
+
+    pub fn nthreads(&self) -> usize {
+        self.nthreads
+    }
+
+    pub fn params(&self) -> &MatchParams {
+        &self.params
+    }
+
+    /// The engine's matcher for a workload of the given size (adaptive
+    /// engines pick here; fixed/custom engines always return the same
+    /// backend).
+    pub fn matcher_for(&self, n: usize, m: usize) -> &Arc<dyn Matcher> {
+        match (&self.selection, &self.auto_set) {
+            (Selection::Auto, Some(set)) => match auto_algo(n, m, self.nthreads) {
+                Algo::Bfm => &set.bfm,
+                Algo::Sbm => &set.sbm,
+                _ => &set.psbm,
+            },
+            _ => &self.matcher,
+        }
+    }
+
+    /// The configured matcher (adaptive engines: the representative).
+    pub fn matcher(&self) -> &Arc<dyn Matcher> {
+        &self.matcher
+    }
+
+    /// `"auto"`, the fixed algorithm's name, or the custom backend's.
+    pub fn algo_name(&self) -> &str {
+        match &self.selection {
+            Selection::Auto => "auto",
+            _ => self.matcher.name(),
+        }
+    }
+
+    /// Clone sharing the pool but running `nthreads` workers per call
+    /// (bench sweeps). Panics at call time if `nthreads` exceeds the
+    /// shared pool's capacity.
+    pub fn with_threads(&self, nthreads: usize) -> DdmEngine {
+        let mut e = self.clone();
+        e.nthreads = nthreads.max(1);
+        e
+    }
+
+    // ---- matching ---------------------------------------------------------
+
+    /// Match 1-D region sets into `sink` (exactly-once per pair).
+    pub fn match_1d(&self, subs: &Regions1D, upds: &Regions1D, sink: &mut dyn MatchSink) {
+        let ctx = self.ctx();
+        self.matcher_for(subs.len(), upds.len())
+            .match_1d(&ctx, subs, upds, sink);
+    }
+
+    /// Count 1-D intersections (the paper's evaluation protocol).
+    pub fn count_1d(&self, subs: &Regions1D, upds: &Regions1D) -> u64 {
+        let ctx = self.ctx();
+        self.matcher_for(subs.len(), upds.len())
+            .count_1d(&ctx, subs, upds)
+    }
+
+    /// Canonical (sorted) 1-D pair list.
+    pub fn pairs_1d(&self, subs: &Regions1D, upds: &Regions1D) -> PairVec {
+        let mut sink = VecSink::default();
+        self.match_1d(subs, upds, &mut sink);
+        canonicalize(sink.pairs)
+    }
+
+    /// Match d-dimensional region sets into `sink`.
+    pub fn match_nd(&self, subs: &RegionsNd, upds: &RegionsNd, sink: &mut dyn MatchSink) {
+        let ctx = self.ctx();
+        self.matcher_for(subs.len(), upds.len())
+            .match_nd(&ctx, subs, upds, sink);
+    }
+
+    /// Count d-dimensional intersections.
+    pub fn count_nd(&self, subs: &RegionsNd, upds: &RegionsNd) -> u64 {
+        let mut sink = CountSink::default();
+        self.match_nd(subs, upds, &mut sink);
+        sink.count
+    }
+
+    /// Canonical (sorted) d-dimensional pair list.
+    pub fn pairs_nd(&self, subs: &RegionsNd, upds: &RegionsNd) -> PairVec {
+        let mut sink = VecSink::default();
+        self.match_nd(subs, upds, &mut sink);
+        canonicalize(sink.pairs)
+    }
+
+    // ---- dynamic ----------------------------------------------------------
+
+    /// A fresh incremental index for this engine's matcher family:
+    ///
+    /// * the matcher's native index when it has one (ITM's interval
+    ///   tree);
+    /// * for the other **in-tree** algorithms, the interval-tree index
+    ///   too — all six share exact half-open overlap semantics, and
+    ///   the tree keeps queries O(lg n + k) where rebuild-on-write
+    ///   would re-run a full match per query (the publish hot path);
+    /// * for **custom** backends, the [`RebuildDynamic`] adapter, so
+    ///   queries reproduce the backend's own matching semantics
+    ///   (e.g. the XLA backend's f32 comparisons) instead of assuming
+    ///   exact f64 overlap.
+    pub fn dynamic(&self) -> Box<dyn DynamicMatcher> {
+        if let Some(native) = self.matcher.make_dynamic() {
+            return native;
+        }
+        match &self.selection {
+            Selection::Custom(m) => Box::new(RebuildDynamic::new(Arc::clone(m))),
+            _ => Box::new(crate::algos::dynamic::TreeIndex::new()),
+        }
+    }
+}
+
+impl Default for DdmEngine {
+    fn default() -> Self {
+        EngineBuilder::new().build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::region::random_regions_1d;
+    use crate::prng::Rng;
+
+    /// A deliberately naive out-of-tree backend: quadratic loop.
+    struct LoopMatcher;
+
+    impl Matcher for LoopMatcher {
+        fn name(&self) -> &str {
+            "loop"
+        }
+
+        fn match_1d(
+            &self,
+            _ctx: &ExecCtx<'_>,
+            subs: &Regions1D,
+            upds: &Regions1D,
+            sink: &mut dyn MatchSink,
+        ) {
+            for i in 0..subs.len() {
+                for j in 0..upds.len() {
+                    if subs.get(i).intersects(&upds.get(j)) {
+                        sink.report(i as u32, j as u32);
+                    }
+                }
+            }
+        }
+    }
+
+    fn workload(seed: u64, n: usize, m: usize) -> (Regions1D, Regions1D) {
+        let mut rng = Rng::new(seed);
+        let subs = random_regions_1d(&mut rng, n, 500.0, 8.0);
+        let upds = random_regions_1d(&mut rng, m, 500.0, 8.0);
+        (subs, upds)
+    }
+
+    #[test]
+    fn every_algo_engine_agrees_with_custom_backend() {
+        let (subs, upds) = workload(0xE1, 300, 250);
+        let reference = DdmEngine::builder()
+            .matcher(Arc::new(LoopMatcher))
+            .threads(1)
+            .build()
+            .pairs_1d(&subs, &upds);
+        assert!(!reference.is_empty());
+        for algo in Algo::ALL {
+            let engine = DdmEngine::builder().algo(algo).threads(3).ncells(64).build();
+            assert_eq!(engine.pairs_1d(&subs, &upds), reference, "{}", algo.name());
+            assert_eq!(
+                engine.count_1d(&subs, &upds),
+                reference.len() as u64,
+                "{}",
+                algo.name()
+            );
+        }
+    }
+
+    #[test]
+    fn auto_engine_matches_fixed() {
+        let engine = DdmEngine::builder().auto().threads(2).build();
+        assert_eq!(engine.algo_name(), "auto");
+
+        // Tiny workload: auto picks BFM.
+        let (s_small, u_small) = workload(0xE2, 20, 20);
+        assert_eq!(engine.matcher_for(20, 20).name(), "bfm");
+
+        // Large workload on 2 threads: auto picks Parallel SBM.
+        let (s_big, u_big) = workload(0xE3, 600, 600);
+        assert_eq!(engine.matcher_for(600, 600).name(), "psbm");
+        // And one worker falls back to serial SBM.
+        assert_eq!(engine.with_threads(1).matcher_for(600, 600).name(), "sbm");
+
+        let fixed = DdmEngine::builder().algo(Algo::Bfm).threads(1).build();
+        assert_eq!(engine.pairs_1d(&s_small, &u_small), fixed.pairs_1d(&s_small, &u_small));
+        assert_eq!(engine.pairs_1d(&s_big, &u_big), fixed.pairs_1d(&s_big, &u_big));
+    }
+
+    #[test]
+    fn nd_paths_agree_with_direct_check() {
+        let mut rng = Rng::new(0xE4);
+        let d = 3;
+        let mut subs = RegionsNd::new(d);
+        let mut upds = RegionsNd::new(d);
+        for _ in 0..120 {
+            let rect: Vec<Interval> = (0..d)
+                .map(|_| {
+                    let lo = rng.uniform(0.0, 80.0);
+                    Interval::new(lo, lo + rng.uniform(0.0, 12.0))
+                })
+                .collect();
+            subs.push(&rect);
+        }
+        for _ in 0..100 {
+            let rect: Vec<Interval> = (0..d)
+                .map(|_| {
+                    let lo = rng.uniform(0.0, 80.0);
+                    Interval::new(lo, lo + rng.uniform(0.0, 12.0))
+                })
+                .collect();
+            upds.push(&rect);
+        }
+        let mut want = Vec::new();
+        for i in 0..subs.len() {
+            for j in 0..upds.len() {
+                if subs.rects_intersect(i, &upds, j) {
+                    want.push((i as u32, j as u32));
+                }
+            }
+        }
+        for algo in [Algo::Psbm, Algo::Itm, Algo::Gbm] {
+            let engine = DdmEngine::builder().algo(algo).threads(2).ncells(32).build();
+            assert_eq!(engine.pairs_nd(&subs, &upds), want, "{}", algo.name());
+            assert_eq!(engine.count_nd(&subs, &upds), want.len() as u64);
+        }
+    }
+
+    #[test]
+    fn shared_pool_and_thread_sweep() {
+        let pool = Arc::new(ThreadPool::new(7));
+        let base = DdmEngine::builder()
+            .algo(Algo::Psbm)
+            .threads(1)
+            .pool(Arc::clone(&pool))
+            .build();
+        let (subs, upds) = workload(0xE5, 400, 400);
+        let want = base.pairs_1d(&subs, &upds);
+        for p in 2..=8 {
+            assert_eq!(base.with_threads(p).pairs_1d(&subs, &upds), want, "p={p}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "engine wants")]
+    fn oversubscribed_shared_pool_panics_at_build() {
+        let pool = Arc::new(ThreadPool::new(0));
+        let _ = DdmEngine::builder().threads(4).pool(pool).build();
+    }
+
+    #[test]
+    fn rebuild_dynamic_tracks_brute_force() {
+        // A custom backend gets the rebuild-on-write adapter from
+        // `dynamic()` (in-tree algorithms get the interval tree).
+        let engine = DdmEngine::builder()
+            .matcher(Arc::new(LoopMatcher))
+            .threads(2)
+            .build();
+        let mut index = engine.dynamic();
+        assert!(index.is_empty());
+        let mut rng = Rng::new(0xE6);
+        let mut model: BTreeMap<u32, Interval> = BTreeMap::new();
+        for step in 0..200u32 {
+            let key = rng.below(40) as u32;
+            match rng.below(3) {
+                0 => {
+                    let lo = rng.uniform(0.0, 90.0);
+                    let iv = Interval::new(lo, lo + rng.uniform(0.0, 10.0));
+                    index.insert(key, iv);
+                    model.insert(key, iv);
+                }
+                1 => {
+                    if model.contains_key(&key) {
+                        let lo = rng.uniform(0.0, 90.0);
+                        let iv = Interval::new(lo, lo + rng.uniform(0.0, 10.0));
+                        index.modify(key, iv);
+                        model.insert(key, iv);
+                    }
+                }
+                _ => {
+                    index.remove(key);
+                    model.remove(&key);
+                }
+            }
+            let lo = rng.uniform(0.0, 95.0);
+            let q = Interval::new(lo, lo + 5.0);
+            let mut got = Vec::new();
+            index.query(&engine.ctx(), q, &mut got);
+            let want: Vec<u32> = model
+                .iter()
+                .filter(|(_, iv)| iv.intersects(&q))
+                .map(|(&k, _)| k)
+                .collect();
+            assert_eq!(got, want, "step {step}");
+            assert_eq!(index.len(), model.len());
+        }
+    }
+
+    #[test]
+    fn builder_algo_str_parses_auto_and_aliases() {
+        let e = DdmEngine::builder().algo_str("interval-tree").unwrap().build();
+        assert_eq!(e.algo_name(), "itm");
+        let e = DdmEngine::builder().algo_str("AUTO").unwrap().build();
+        assert_eq!(e.algo_name(), "auto");
+        assert!(EngineBuilder::new().algo_str("frobnicate").is_err());
+    }
+}

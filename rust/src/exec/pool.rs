@@ -25,18 +25,41 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// Unlike `Instant`, this is immune to preemption: on an oversubscribed
 /// host a P-thread region still reports each worker's true compute
 /// cost, which is what the speedup model needs (DESIGN.md §3).
+///
+/// The `clock_gettime` symbol is declared locally (std already links
+/// libc) so the crate stays dependency-free. The hand-rolled timespec
+/// layout matches 64-bit Linux only, so other targets (including
+/// 32-bit Linux, whose timespec is two 32-bit words) fall back to
+/// zero. On those hosts the work-span *modeled* WCT collapses to the
+/// fork-join term and is meaningless — read the measured wall-clock
+/// column of bench output instead.
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
 pub fn thread_cpu_time() -> Duration {
-    let mut ts = libc::timespec {
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+    extern "C" {
+        fn clock_gettime(clockid: i32, tp: *mut Timespec) -> i32;
+    }
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+    let mut ts = Timespec {
         tv_sec: 0,
         tv_nsec: 0,
     };
     // SAFETY: ts is a valid out-pointer; the clock id is a constant.
-    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
     if rc == 0 {
         Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
     } else {
         Duration::ZERO
     }
+}
+
+#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+pub fn thread_cpu_time() -> Duration {
+    Duration::ZERO
 }
 
 struct Shared {

@@ -1,17 +1,27 @@
 //! The DDM service: federates, region registration, matching and
 //! notification routing (the paper's Fig. 1 scenario, as a library).
+//!
+//! The service is **algorithm-agnostic**: it never names a concrete
+//! matcher. All matching goes through the injected
+//! [`DdmEngine`](crate::engine::DdmEngine) — full matches via the
+//! engine's N-D path, the publish hot path via the engine's
+//! [`DynamicMatcher`](crate::engine::DynamicMatcher) index over
+//! dimension 0 of the subscription set (an incremental interval tree
+//! for every in-tree algorithm family, rebuild-on-write for custom
+//! backends with their own matching semantics). Swapping the
+//! algorithm is an [`EngineBuilder`](crate::engine::EngineBuilder)
+//! change; the service code does not move.
 
 use std::collections::VecDeque;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::engine::{DdmEngine, DynamicMatcher};
+use crate::error::{Context, Result};
 
 use super::region::{RegionHandle, RegionKind, RegionSpec};
 use super::space::RoutingSpace;
-use crate::algos::interval_tree::IntervalTree;
-use crate::algos::{Algo, MatchParams};
-use crate::core::sink::VecSink;
-use crate::core::{ddim, RegionsNd};
-use crate::exec::ThreadPool;
+use crate::core::interval::Interval;
+use crate::core::RegionsNd;
 
 /// Identifies a joined federate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -74,14 +84,6 @@ impl SideStore {
             .with_context(|| format!("region handle {handle_id} is not registered"))
     }
 
-    fn modify(&mut self, handle_id: u32, spec: &RegionSpec) -> Result<()> {
-        let i = self.dense(handle_id)?;
-        for (k, iv) in spec.to_intervals().into_iter().enumerate() {
-            self.regions.dims[k].set(i, iv);
-        }
-        Ok(())
-    }
-
     /// Swap-remove, fixing up the displaced region's handle mapping.
     fn delete(&mut self, handle_id: u32) -> Result<()> {
         let i = self.dense(handle_id)?;
@@ -99,31 +101,49 @@ impl SideStore {
         self.index_of[handle_id as usize] = None;
         Ok(())
     }
+
+    fn modify(&mut self, handle_id: u32, spec: &RegionSpec) -> Result<()> {
+        let i = self.dense(handle_id)?;
+        for (k, iv) in spec.to_intervals().into_iter().enumerate() {
+            self.regions.dims[k].set(i, iv);
+        }
+        Ok(())
+    }
 }
 
 /// The Data Distribution Management service.
 pub struct DdmService {
     space: RoutingSpace,
+    engine: DdmEngine,
     federates: Vec<Federate>,
     subs: SideStore,
     upds: SideStore,
-    /// Cached dim-0 interval tree over subscriptions (publish path);
-    /// rebuilt lazily after mutations.
-    sub_tree: Option<IntervalTree>,
+    /// Dynamic index over dimension 0 of the subscriptions (publish
+    /// path), keyed by subscription **handle id** — stable across
+    /// swap-removal, unlike dense indices.
+    sub_index: Box<dyn DynamicMatcher>,
     /// Counters.
     pub notifications_routed: u64,
     pub matches_run: u64,
 }
 
 impl DdmService {
+    /// Service with the default engine (the builder's defaults).
     pub fn new(space: RoutingSpace) -> Self {
+        Self::with_engine(space, DdmEngine::default())
+    }
+
+    /// Service running every match on the given engine.
+    pub fn with_engine(space: RoutingSpace, engine: DdmEngine) -> Self {
         let d = space.d().max(1);
+        let sub_index = engine.dynamic();
         Self {
             space,
+            engine,
             federates: Vec::new(),
             subs: SideStore::new(d),
             upds: SideStore::new(d),
-            sub_tree: None,
+            sub_index,
             notifications_routed: 0,
             matches_run: 0,
         }
@@ -131,6 +151,10 @@ impl DdmService {
 
     pub fn space(&self) -> &RoutingSpace {
         &self.space
+    }
+
+    pub fn engine(&self) -> &DdmEngine {
+        &self.engine
     }
 
     pub fn n_subscriptions(&self) -> usize {
@@ -188,7 +212,7 @@ impl DdmService {
         };
         let id = store.insert(spec, fed);
         if kind == RegionKind::Subscription {
-            self.sub_tree = None;
+            self.sub_index.insert(id, dim0(spec));
         }
         Ok(RegionHandle { kind, id })
     }
@@ -198,7 +222,7 @@ impl DdmService {
         match handle.kind {
             RegionKind::Subscription => {
                 self.subs.modify(handle.id, spec)?;
-                self.sub_tree = None;
+                self.sub_index.modify(handle.id, dim0(spec));
             }
             RegionKind::Update => self.upds.modify(handle.id, spec)?,
         }
@@ -209,7 +233,7 @@ impl DdmService {
         match handle.kind {
             RegionKind::Subscription => {
                 self.subs.delete(handle.id)?;
-                self.sub_tree = None;
+                self.sub_index.remove(handle.id);
             }
             RegionKind::Update => self.upds.delete(handle.id)?,
         }
@@ -218,29 +242,12 @@ impl DdmService {
 
     // ---- matching ----------------------------------------------------------
 
-    /// Full match: every overlapping (subscription, update) handle pair,
-    /// computed with the selected algorithm on `nthreads` workers.
-    pub fn match_all(
-        &mut self,
-        algo: Algo,
-        pool: &ThreadPool,
-        nthreads: usize,
-        params: &MatchParams,
-    ) -> Vec<(RegionHandle, RegionHandle)> {
+    /// Full match on the injected engine: every overlapping
+    /// (subscription, update) handle pair.
+    pub fn match_all(&mut self) -> Vec<(RegionHandle, RegionHandle)> {
         self.matches_run += 1;
-        let subs = &self.subs.regions;
-        let upds = &self.upds.regions;
-        let mut sink = VecSink::default();
-        ddim::match_nd(
-            subs,
-            upds,
-            |s1, u1, out| {
-                let pairs = crate::algos::run_pairs(algo, pool, nthreads, s1, u1, params);
-                out.pairs.extend(pairs);
-            },
-            &mut sink,
-        );
-        sink.pairs
+        self.engine
+            .pairs_nd(&self.subs.regions, &self.upds.regions)
             .into_iter()
             .map(|(si, uj)| {
                 (
@@ -258,33 +265,32 @@ impl DdmService {
     }
 
     /// Subscriptions overlapping one update region (the publish path):
-    /// dim-0 interval-tree candidates, filtered on the remaining
-    /// dimensions (§3's dynamic usage of the interval tree).
+    /// dimension-0 candidates from the engine's dynamic index,
+    /// filtered on the remaining dimensions (§3's dynamic usage).
     pub fn overlapping_subscriptions(&mut self, update: RegionHandle) -> Result<Vec<RegionHandle>> {
         if update.kind != RegionKind::Update {
             bail!("overlapping_subscriptions takes an update handle");
         }
         let uj = self.upds.dense(update.id)?;
-        let tree = self
-            .sub_tree
-            .get_or_insert_with(|| IntervalTree::from_regions(self.subs.regions.project(0)));
         let q0 = self.upds.regions.dims[0].get(uj);
+        let mut keys = Vec::new();
+        let ctx = self.engine.ctx();
+        self.sub_index.query(&ctx, q0, &mut keys);
         let mut out = Vec::new();
-        let subs = &self.subs;
-        let upds = &self.upds;
-        tree.query(q0, &mut |si| {
-            let ok = (1..subs.regions.d()).all(|k| {
-                subs.regions.dims[k]
-                    .get(si as usize)
-                    .intersects(&upds.regions.dims[k].get(uj))
+        for key in keys {
+            let si = self.subs.dense(key)?;
+            let ok = (1..self.subs.regions.d()).all(|k| {
+                self.subs.regions.dims[k]
+                    .get(si)
+                    .intersects(&self.upds.regions.dims[k].get(uj))
             });
             if ok {
                 out.push(RegionHandle {
                     kind: RegionKind::Subscription,
-                    id: subs.handle_of[si as usize],
+                    id: key,
                 });
             }
-        });
+        }
         Ok(out)
     }
 
@@ -310,12 +316,27 @@ impl DdmService {
     }
 }
 
+/// Dimension-0 interval of a region spec (the publish-path index key
+/// space; remaining dimensions are filtered at query time).
+fn dim0(spec: &RegionSpec) -> Interval {
+    let (lo, hi) = spec.ranges[0];
+    Interval::new(lo as f64, hi as f64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algos::Algo;
+
+    fn engine(algo: Algo) -> DdmEngine {
+        DdmEngine::builder().algo(algo).threads(2).ncells(64).build()
+    }
 
     fn two_fed_service() -> (DdmService, FederateId, FederateId) {
-        let mut svc = DdmService::new(RoutingSpace::uniform(2, 1000));
+        let mut svc = DdmService::with_engine(
+            RoutingSpace::uniform(2, 1000),
+            engine(Algo::Psbm),
+        );
         let a = svc.join("vehicles");
         let b = svc.join("lights");
         (svc, a, b)
@@ -335,8 +356,7 @@ mod tests {
             .unwrap();
 
         // match_all sees exactly (s1, u1).
-        let pool = ThreadPool::new(1);
-        let pairs = svc.match_all(Algo::Psbm, &pool, 2, &MatchParams::default());
+        let pairs = svc.match_all();
         assert_eq!(pairs, vec![(s1, u1)]);
 
         // publish routes one notification to the vehicles federate.
@@ -399,7 +419,8 @@ mod tests {
 
     #[test]
     fn publish_fans_out_to_multiple_federates() {
-        let mut svc = DdmService::new(RoutingSpace::uniform(1, 1000));
+        let mut svc =
+            DdmService::with_engine(RoutingSpace::uniform(1, 1000), engine(Algo::Itm));
         let feds: Vec<FederateId> = (0..4).map(|i| svc.join(format!("f{i}"))).collect();
         for &f in &feds {
             svc.register(f, RegionKind::Subscription, &RegionSpec::interval(0, 500))
@@ -417,45 +438,114 @@ mod tests {
         assert_eq!(svc.notifications_routed, 4);
     }
 
+    /// The acceptance scenario: the same HLA notification workload runs
+    /// under engines with different matchers (ITM's native index plus
+    /// three other algorithm families and the adaptive engine) and
+    /// produces identical notifications. Swapping the algorithm is
+    /// purely an `EngineBuilder` change.
     #[test]
-    fn match_all_algorithms_agree_on_service_state() {
-        let mut svc = DdmService::new(RoutingSpace::uniform(2, 10_000));
-        let f = svc.join("f");
-        let mut rng = crate::prng::Rng::new(0x44A);
-        for _ in 0..80 {
-            let x = rng.below(9000);
-            let y = rng.below(9000);
-            svc.register(
-                f,
-                RegionKind::Subscription,
-                &RegionSpec::rect((x, x + 500), (y, y + 500)),
-            )
-            .unwrap();
-        }
-        for _ in 0..60 {
-            let x = rng.below(9000);
-            let y = rng.below(9000);
-            svc.register(
-                f,
-                RegionKind::Update,
-                &RegionSpec::rect((x, x + 400), (y, y + 400)),
-            )
-            .unwrap();
-        }
-        let pool = ThreadPool::new(3);
-        let params = MatchParams {
-            ncells: 64,
-            ..Default::default()
-        };
-        let mut sets: Vec<Vec<(RegionHandle, RegionHandle)>> = Vec::new();
-        for algo in Algo::ALL {
-            let mut pairs = svc.match_all(algo, &pool, 4, &params);
+    fn notification_scenario_is_engine_invariant() {
+        fn run_scenario(engine: DdmEngine) -> (Vec<(RegionHandle, RegionHandle)>, Vec<Notification>) {
+            let mut svc = DdmService::with_engine(RoutingSpace::uniform(2, 10_000), engine);
+            let watchers = svc.join("watchers");
+            let movers = svc.join("movers");
+            let mut rng = crate::prng::Rng::new(0x5CEA);
+            let mut subs = Vec::new();
+            for _ in 0..60 {
+                let x = rng.below(9000);
+                let y = rng.below(9000);
+                subs.push(
+                    svc.register(
+                        watchers,
+                        RegionKind::Subscription,
+                        &RegionSpec::rect((x, x + 600), (y, y + 600)),
+                    )
+                    .unwrap(),
+                );
+            }
+            let mut upds = Vec::new();
+            for _ in 0..40 {
+                let x = rng.below(9000);
+                let y = rng.below(9000);
+                upds.push(
+                    svc.register(
+                        movers,
+                        RegionKind::Update,
+                        &RegionSpec::rect((x, x + 400), (y, y + 400)),
+                    )
+                    .unwrap(),
+                );
+            }
+            // Churn: move a third of the subscriptions, delete a few.
+            for (i, &s) in subs.iter().enumerate().take(20) {
+                let x = rng.below(9000);
+                svc.modify(s, &RegionSpec::rect((x, x + 600), (0, 600))).unwrap();
+                if i % 5 == 0 {
+                    svc.delete(s).unwrap();
+                }
+            }
+            let mut pairs = svc.match_all();
             pairs.sort_by_key(|(a, b)| (a.id, b.id));
-            sets.push(pairs);
+            let mut mail = Vec::new();
+            for (step, &u) in upds.iter().enumerate() {
+                svc.publish(u, step as u64).unwrap();
+            }
+            mail.extend(svc.poll(watchers));
+            (pairs, mail)
         }
-        for w in sets.windows(2) {
+
+        let algos = [Algo::Itm, Algo::Psbm, Algo::Gbm, Algo::SbmBinary];
+        let (ref_pairs, ref_mail) = run_scenario(engine(algos[0]));
+        assert!(!ref_mail.is_empty());
+        for &algo in &algos[1..] {
+            let (pairs, mail) = run_scenario(engine(algo));
+            assert_eq!(pairs, ref_pairs, "{}", algo.name());
+            assert_eq!(mail, ref_mail, "{}", algo.name());
+        }
+        // And the adaptive engine routes the same notifications too.
+        let auto = DdmEngine::builder().auto().threads(3).build();
+        let (pairs, mail) = run_scenario(auto);
+        assert_eq!(pairs, ref_pairs);
+        assert_eq!(mail, ref_mail);
+    }
+
+    #[test]
+    fn match_all_engines_agree_on_service_state() {
+        let mut handles: Vec<Vec<(RegionHandle, RegionHandle)>> = Vec::new();
+        for algo in Algo::ALL {
+            let mut svc = DdmService::with_engine(
+                RoutingSpace::uniform(2, 10_000),
+                engine(algo),
+            );
+            let f = svc.join("f");
+            let mut rng = crate::prng::Rng::new(0x44A);
+            for _ in 0..80 {
+                let x = rng.below(9000);
+                let y = rng.below(9000);
+                svc.register(
+                    f,
+                    RegionKind::Subscription,
+                    &RegionSpec::rect((x, x + 500), (y, y + 500)),
+                )
+                .unwrap();
+            }
+            for _ in 0..60 {
+                let x = rng.below(9000);
+                let y = rng.below(9000);
+                svc.register(
+                    f,
+                    RegionKind::Update,
+                    &RegionSpec::rect((x, x + 400), (y, y + 400)),
+                )
+                .unwrap();
+            }
+            let mut pairs = svc.match_all();
+            pairs.sort_by_key(|(a, b)| (a.id, b.id));
+            handles.push(pairs);
+        }
+        for w in handles.windows(2) {
             assert_eq!(w[0], w[1]);
         }
-        assert!(!sets[0].is_empty());
+        assert!(!handles[0].is_empty());
     }
 }

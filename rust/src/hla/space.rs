@@ -1,6 +1,7 @@
 //! HLA dimensions and routing spaces (IEEE 1516 OMT, paper §1).
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::error::Result;
 
 /// One HLA dimension: integer values `0..upper`.
 #[derive(Debug, Clone, PartialEq, Eq)]

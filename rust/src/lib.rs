@@ -4,8 +4,35 @@
 //! Shared-Memory Multiprocessors"* (Marzolla & D'Angelo, ACM TOMACS 2020,
 //! DOI 10.1145/3369759) as a production-shaped library.
 //!
+//! ## Quickstart: the engine API
+//!
+//! All matching goes through [`engine::DdmEngine`], built with
+//! [`engine::EngineBuilder`]. The engine owns a worker pool and an
+//! algorithm backend behind the object-safe [`engine::Matcher`] trait,
+//! so swapping algorithms — including out-of-tree ones — is a one-line
+//! builder change:
+//!
+//! ```
+//! use ddm::algos::Algo;
+//! use ddm::core::{Interval, Regions1D};
+//! use ddm::engine::DdmEngine;
+//!
+//! let engine = DdmEngine::builder()
+//!     .algo(Algo::Psbm)   // or .auto(), or .matcher(my_backend)
+//!     .threads(2)
+//!     .build();
+//! let subs = Regions1D::from_intervals(&[Interval::new(0.0, 2.0)]);
+//! let upds = Regions1D::from_intervals(&[Interval::new(1.0, 3.0)]);
+//! assert_eq!(engine.count_1d(&subs, &upds), 1);
+//! assert_eq!(engine.pairs_1d(&subs, &upds), vec![(0, 0)]);
+//! ```
+//!
 //! The crate contains:
 //!
+//! * [`engine`] — the unified matching API: the [`engine::Matcher`]
+//!   trait all algorithms implement, the [`engine::DynamicMatcher`]
+//!   incremental-index extension, and the [`engine::DdmEngine`] /
+//!   [`engine::EngineBuilder`] entry points.
 //! * [`core`] — intervals, d-rectangles, regions and the d-dimensional
 //!   reduction of the region matching problem (paper §2).
 //! * [`exec`] — the shared-memory parallel runtime the paper builds on
@@ -28,7 +55,19 @@
 //! * [`bench`] — measurement harness: timing, statistics, speedup
 //!   modeling, RSS metrics, paper-style table output.
 
+// Style choices, not defects: index loops mirror the paper's
+// pseudocode, and builder/ctor arities follow the domain.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::new_without_default,
+    clippy::manual_div_ceil,
+    clippy::uninlined_format_args
+)]
+
 pub mod core;
+pub mod engine;
+pub mod error;
 pub mod exec;
 pub mod sets;
 pub mod algos;
@@ -41,5 +80,7 @@ pub mod cli;
 pub mod config;
 pub mod prng;
 
+pub use engine::{DdmEngine, DynamicMatcher, EngineBuilder, ExecCtx, Matcher};
+
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = error::Result<T>;

@@ -14,11 +14,10 @@
 
 use std::time::Instant;
 
-use ddm::algos::{Algo, MatchParams};
 use ddm::bench::{rss, sysinfo};
 use ddm::cli::Args;
 use ddm::coordinator::{Coordinator, CoordinatorConfig};
-use ddm::exec::ThreadPool;
+use ddm::engine::DdmEngine;
 use ddm::hla::{RegionKind, RegionSpec, RoutingSpace};
 use ddm::sets::SetImpl;
 use ddm::workload::koln::{koln_workload, KolnParams};
@@ -53,30 +52,28 @@ fn load_workload(args: &Args) -> (ddm::core::Regions1D, ddm::core::Regions1D, St
 }
 
 fn cmd_match(args: &Args) {
-    let algo: Algo = args
-        .get("algo")
-        .unwrap_or("psbm")
-        .parse()
-        .unwrap_or_else(|e| panic!("{e}"));
     let threads: usize = args.opt("threads", 4usize);
-    let params = MatchParams {
-        ncells: args.opt("ncells", 3000usize),
-        set_impl: args
-            .get("set")
-            .map(|s| s.parse::<SetImpl>().unwrap_or_else(|e| panic!("{e}")))
-            .unwrap_or(SetImpl::Sparse),
-    };
+    let engine = DdmEngine::builder()
+        .algo_str(args.get("algo").unwrap_or("psbm"))
+        .unwrap_or_else(|e| panic!("{e}"))
+        .threads(threads)
+        .ncells(args.opt("ncells", 3000usize))
+        .set_impl(
+            args.get("set")
+                .map(|s| s.parse::<SetImpl>().unwrap_or_else(|e| panic!("{e}")))
+                .unwrap_or(SetImpl::Sparse),
+        )
+        .build();
     let (subs, upds, desc) = load_workload(args);
-    let pool = ThreadPool::new(threads.saturating_sub(1));
     println!(
         "match: algo={} threads={} set={} workload=[{}]",
-        algo.name(),
+        engine.algo_name(),
         threads,
-        params.set_impl.name(),
+        engine.params().set_impl.name(),
         desc
     );
     let t0 = Instant::now();
-    let k = ddm::algos::run_count(algo, &pool, threads, &subs, &upds, &params);
+    let k = engine.count_1d(&subs, &upds);
     let dt = t0.elapsed();
     println!(
         "K={k} intersections in {} (peak RSS {})",
@@ -88,7 +85,11 @@ fn cmd_match(args: &Args) {
 fn cmd_xla_match(args: &Args) {
     let dir = std::path::Path::new(ddm::runtime::DEFAULT_ARTIFACT_DIR);
     if !ddm::runtime::artifacts_available(dir) {
-        eprintln!("artifacts missing: run `make artifacts` first");
+        if ddm::runtime::xla_enabled() {
+            eprintln!("artifacts missing: run `make artifacts` first");
+        } else {
+            eprintln!("XLA backend unavailable: rebuild with `--features xla` (and run `make artifacts`)");
+        }
         std::process::exit(1);
     }
     let (subs, upds, desc) = load_workload(args);
@@ -118,11 +119,15 @@ fn cmd_serve(args: &Args) {
     let threads = args.opt("threads", cfg.int_or("serve", "threads", 2) as usize);
     let space_len = cfg.int_or("serve", "space", 100_000) as u64;
 
-    let coord = Coordinator::spawn(CoordinatorConfig {
-        space: RoutingSpace::uniform(1, space_len),
-        nthreads: threads,
-        ..Default::default()
-    });
+    let algo = cfg.str_or("serve", "algo", "psbm");
+    let coord = Coordinator::spawn(CoordinatorConfig::new(
+        RoutingSpace::uniform(1, space_len),
+        DdmEngine::builder()
+            .algo_str(args.get("algo").unwrap_or(&algo))
+            .unwrap_or_else(|e| panic!("{e}"))
+            .threads(threads)
+            .build(),
+    ));
     let c = coord.client();
     let fed = c.join("vehicles");
     let mut rng = ddm::prng::Rng::new(args.opt("seed", 7u64));

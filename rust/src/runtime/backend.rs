@@ -13,13 +13,13 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 use super::loader::{ArtifactKind, LoadedArtifact, Runtime};
 use crate::core::{Regions1D, RegionsNd};
 
-/// Padding sentinel — must match `python/compile/kernels/overlap.py`.
-pub const PAD: f32 = 1.0e30;
+pub use super::{quantize_f32, PAD};
 
 /// DDM matching backed by compiled XLA executables.
 pub struct XlaMatchBackend {
@@ -210,20 +210,6 @@ impl XlaMatchBackend {
 fn wrap_1d(r: &Regions1D) -> RegionsNd {
     RegionsNd {
         dims: vec![r.clone()],
-    }
-}
-
-/// Round region coordinates to f32 precision (in f64 storage).
-///
-/// The XLA kernels compute in f32; results agree with the native f64
-/// matchers exactly on f32-representable inputs. Callers comparing
-/// backends (tests, the `xla_backend` example, the A3 ablation) should
-/// quantize first; production users with sub-f32-ulp coordinate
-/// differences should scale their routing space instead.
-pub fn quantize_f32(r: &Regions1D) -> Regions1D {
-    Regions1D {
-        lo: r.lo.iter().map(|&x| x as f32 as f64).collect(),
-        hi: r.hi.iter().map(|&x| x as f32 as f64).collect(),
     }
 }
 

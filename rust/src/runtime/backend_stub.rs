@@ -1,0 +1,77 @@
+//! Stub XLA backend (built when the `xla` feature is **off**).
+//!
+//! Keeps the full [`XlaMatchBackend`] API surface compiling in
+//! dependency-free builds; every entry point reports the backend as
+//! unavailable. [`crate::runtime::artifacts_available`] returns `false`
+//! in this configuration, so well-behaved callers (benches, examples,
+//! the `ddm xla-match` subcommand) skip before ever reaching these.
+
+use std::path::Path;
+
+use crate::bail;
+use crate::error::Result;
+use crate::core::{Regions1D, RegionsNd};
+
+pub use super::{quantize_f32, PAD};
+
+/// DDM matching backed by compiled XLA executables (stubbed out).
+pub struct XlaMatchBackend {
+    _private: (),
+}
+
+const UNAVAILABLE: &str =
+    "XLA backend unavailable: ddm was built without the `xla` feature";
+
+impl XlaMatchBackend {
+    pub fn load(_dir: &Path) -> Result<Self> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    /// Capacities (n, m) of the counts artifact for dimension `d`.
+    pub fn counts_capacity(&self, _d: usize) -> Option<(usize, usize)> {
+        None
+    }
+
+    /// Total intersection count via the tiled counts kernel.
+    pub fn match_counts(&self, _subs: &RegionsNd, _upds: &RegionsNd) -> Result<u64> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    /// Enumerate intersecting pairs via the mask kernel.
+    pub fn match_pairs(
+        &self,
+        _subs: &RegionsNd,
+        _upds: &RegionsNd,
+    ) -> Result<Vec<(u32, u32)>> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    /// Run the compiled Fig.-7 prefix-sum pipeline.
+    pub fn prefix_sum(&self, _xs: &[i32]) -> Result<Vec<i32>> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    /// 1-D convenience wrappers (benches use these).
+    pub fn match_counts_1d(&self, _subs: &Regions1D, _upds: &Regions1D) -> Result<u64> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn match_pairs_1d(
+        &self,
+        _subs: &Regions1D,
+        _upds: &Regions1D,
+    ) -> Result<Vec<(u32, u32)>> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = XlaMatchBackend::load(Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("xla"));
+    }
+}

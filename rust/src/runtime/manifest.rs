@@ -1,0 +1,150 @@
+//! Artifact manifest parsing (no PJRT dependency — usable whether or
+//! not the `xla` feature is enabled).
+//!
+//! `artifacts/manifest.txt` lines look like:
+//!
+//! ```text
+//! match_counts_2048x2048_d1 kind=counts file=match_counts_2048x2048_d1.hlo.txt sha256=747d... n=2048 m=2048 d=1 ts=256 tu=256
+//! prefix_sum_65536 kind=scan file=prefix_sum_65536.hlo.txt sha256=9f21... n=65536 block=4096
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::bail;
+use crate::error::{Context, Result};
+
+/// What a compiled artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Dense [n, m] uint8 intersection mask.
+    Mask,
+    /// Per-subscription counts [n] + scalar total.
+    Counts,
+    /// Blocked prefix sum over [n] int32.
+    Scan,
+}
+
+impl std::str::FromStr for ArtifactKind {
+    type Err = crate::error::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "mask" => Ok(ArtifactKind::Mask),
+            "counts" => Ok(ArtifactKind::Counts),
+            "scan" => Ok(ArtifactKind::Scan),
+            other => bail!("unknown artifact kind '{other}'"),
+        }
+    }
+}
+
+/// Parsed manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub path: PathBuf,
+    pub sha256_prefix: String,
+    /// `n`/`m`: compiled region capacities (or scan length in `n`).
+    pub n: usize,
+    pub m: usize,
+    /// Dimensionality (mask/counts) — 0 for scan artifacts.
+    pub d: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut toks = line.split_whitespace();
+            let name = toks.next().context("missing artifact name")?.to_string();
+            let kv: BTreeMap<&str, &str> = toks
+                .filter_map(|t| t.split_once('='))
+                .collect();
+            let get = |k: &str| -> Result<&str> {
+                kv.get(k)
+                    .copied()
+                    .with_context(|| format!("manifest line {}: missing {k}", ln + 1))
+            };
+            let kind: ArtifactKind = get("kind")?.parse()?;
+            let n: usize = get("n")?.parse()?;
+            let (m, d) = match kind {
+                ArtifactKind::Scan => (0, 0),
+                _ => (get("m")?.parse()?, get("d")?.parse()?),
+            };
+            entries.push(ArtifactMeta {
+                name,
+                kind,
+                path: dir.join(get("file")?),
+                sha256_prefix: get("sha256").unwrap_or("").to_string(),
+                n,
+                m,
+                d,
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Find the artifact of `kind` and dimensionality `d` with the
+    /// largest capacity (the backend tiles bigger inputs over it).
+    pub fn find(&self, kind: ArtifactKind, d: usize) -> Option<&ArtifactMeta> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind && (kind == ArtifactKind::Scan || e.d == d))
+            .max_by_key(|e| e.n * e.m.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+match_mask_1024x1024_d1 kind=mask file=a.hlo.txt sha256=abcd n=1024 m=1024 d=1 ts=256 tu=256
+match_counts_2048x2048_d2 kind=counts file=b.hlo.txt sha256=ef01 n=2048 m=2048 d=2 ts=256 tu=256
+prefix_sum_65536 kind=scan file=c.hlo.txt sha256=2345 n=65536 block=4096
+";
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.entries[0].kind, ArtifactKind::Mask);
+        assert_eq!(m.entries[0].n, 1024);
+        assert_eq!(m.entries[1].d, 2);
+        assert_eq!(m.entries[2].kind, ArtifactKind::Scan);
+        assert_eq!(m.entries[2].n, 65536);
+        assert!(m.entries[0].path.ends_with("a.hlo.txt"));
+    }
+
+    #[test]
+    fn find_selects_matching_dimension() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert!(m.find(ArtifactKind::Mask, 1).is_some());
+        assert!(m.find(ArtifactKind::Mask, 3).is_none());
+        assert_eq!(m.find(ArtifactKind::Counts, 2).unwrap().n, 2048);
+        assert!(m.find(ArtifactKind::Scan, 0).is_some());
+    }
+
+    #[test]
+    fn bad_kind_is_error() {
+        let bad = "x kind=frobnicate file=f n=1";
+        assert!(Manifest::parse(bad, Path::new(".")).is_err());
+    }
+}

@@ -7,21 +7,61 @@
 //! at startup and executes it directly — no Python anywhere near the
 //! request path.
 //!
-//! Interchange is HLO **text** (`HloModuleProto::from_text_file`), not
-//! serialized protos: jax ≥ 0.5 emits 64-bit instruction ids that the
-//! pinned xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//! The PJRT path needs the external `xla` crate, which offline builds
+//! do not have; it is therefore gated behind the **`xla` cargo
+//! feature**. Without the feature, [`backend`] is a stub whose entry
+//! points report the backend as unavailable and
+//! [`artifacts_available`] returns `false`, so every caller skips
+//! politely. Manifest parsing ([`manifest`]) works in both builds.
+//!
+//! The backend also plugs into the engine API: see
+//! `examples/xla_backend.rs`, which wraps [`XlaMatchBackend`] in a
+//! [`crate::engine::Matcher`] so it can be driven — and benchmarked —
+//! through the same trait as the native algorithms.
 
-pub mod backend;
+pub mod manifest;
+
+#[cfg(feature = "xla")]
 pub mod loader;
 
+#[cfg(feature = "xla")]
+pub mod backend;
+
+#[cfg(not(feature = "xla"))]
+#[path = "backend_stub.rs"]
+pub mod backend;
+
 pub use backend::XlaMatchBackend;
-pub use loader::{ArtifactKind, ArtifactMeta, Manifest};
+pub use manifest::{ArtifactKind, ArtifactMeta, Manifest};
 
 /// Default artifact directory (relative to the repo root / CWD).
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
 
-/// True if AOT artifacts are present (tests/benches skip politely
-/// when `make artifacts` has not run).
+/// Padding sentinel — must match `python/compile/kernels/overlap.py`.
+pub const PAD: f32 = 1.0e30;
+
+/// True when the crate was built with the `xla` feature.
+pub fn xla_enabled() -> bool {
+    cfg!(feature = "xla")
+}
+
+/// True if the XLA backend can actually run: the crate was built with
+/// the `xla` feature **and** AOT artifacts are present. Tests, benches
+/// and examples skip politely when this is false.
 pub fn artifacts_available(dir: &std::path::Path) -> bool {
-    dir.join("manifest.txt").exists()
+    xla_enabled() && dir.join("manifest.txt").exists()
+}
+
+/// Round region coordinates to f32 precision (in f64 storage).
+///
+/// The XLA kernels compute in f32; results agree with the native f64
+/// matchers exactly on f32-representable inputs. Callers comparing
+/// backends (tests, the `xla_backend` example, the A3 ablation) should
+/// quantize first; production users with sub-f32-ulp coordinate
+/// differences should scale their routing space instead.
+pub fn quantize_f32(r: &crate::core::Regions1D) -> crate::core::Regions1D {
+    crate::core::Regions1D {
+        lo: r.lo.iter().map(|&x| x as f32 as f64).collect(),
+        hi: r.hi.iter().map(|&x| x as f32 as f64).collect(),
+    }
 }

@@ -1,10 +1,11 @@
-//! Cross-module integration tests: algorithms × workloads × service ×
+//! Cross-module integration tests: engines × workloads × service ×
 //! XLA backend. (Unit tests live in each module; these exercise the
-//! composed system.)
+//! composed system through the public `DdmEngine` API.)
 
-use ddm::algos::{Algo, MatchParams};
-use ddm::core::sink::{canonicalize, VecSink};
-use ddm::core::{ddim, RegionsNd};
+use std::sync::Arc;
+
+use ddm::algos::Algo;
+use ddm::engine::DdmEngine;
 use ddm::exec::ThreadPool;
 use ddm::hla::{RegionKind, RegionSpec, RoutingSpace};
 use ddm::prng::Rng;
@@ -12,15 +13,21 @@ use ddm::sets::SetImpl;
 use ddm::workload::koln::{koln_workload, KolnParams};
 use ddm::workload::{alpha_workload, clustered_workload, AlphaParams};
 
+fn engine_on(pool: &Arc<ThreadPool>, algo: Algo, p: usize) -> DdmEngine {
+    DdmEngine::builder()
+        .algo(algo)
+        .threads(p)
+        .ncells(128)
+        .set_impl(SetImpl::Bit)
+        .pool(Arc::clone(pool))
+        .build()
+}
+
 /// Every algorithm × every workload family × several thread counts
-/// produce the identical pair set.
+/// produce the identical pair set through the engine API.
 #[test]
-fn all_algorithms_agree_across_workloads() {
-    let pool = ThreadPool::new(7);
-    let params = MatchParams {
-        ncells: 128,
-        set_impl: SetImpl::Bit,
-    };
+fn all_engines_agree_across_workloads() {
+    let pool = Arc::new(ThreadPool::new(7));
     let ap = AlphaParams {
         n_total: 3_000,
         alpha: 10.0,
@@ -35,10 +42,10 @@ fn all_algorithms_agree_across_workloads() {
         ),
     ];
     for (name, (subs, upds)) in workloads {
-        let reference = ddm::algos::run_pairs(Algo::Bfm, &pool, 1, &subs, &upds, &params);
+        let reference = engine_on(&pool, Algo::Bfm, 1).pairs_1d(&subs, &upds);
         for algo in Algo::ALL {
             for p in [1, 3, 8] {
-                let got = ddm::algos::run_pairs(algo, &pool, p, &subs, &upds, &params);
+                let got = engine_on(&pool, algo, p).pairs_1d(&subs, &upds);
                 assert_eq!(
                     got,
                     reference,
@@ -47,22 +54,25 @@ fn all_algorithms_agree_across_workloads() {
                 );
             }
         }
+        // The adaptive engine agrees too.
+        let auto = DdmEngine::builder()
+            .auto()
+            .threads(4)
+            .pool(Arc::clone(&pool))
+            .build();
+        assert_eq!(auto.pairs_1d(&subs, &upds), reference, "{name}/auto");
     }
 }
 
-/// The d-dimensional reduction with each parallel 1-D matcher equals
-/// the direct d-rectangle check.
+/// The engine's d-dimensional path with each parallel 1-D matcher
+/// equals the direct d-rectangle check.
 #[test]
-fn ddim_reduction_with_every_algo() {
-    let pool = ThreadPool::new(3);
-    let params = MatchParams {
-        ncells: 32,
-        set_impl: SetImpl::BTree,
-    };
+fn ddim_reduction_with_every_engine() {
+    let pool = Arc::new(ThreadPool::new(3));
     let mut rng = Rng::new(0x1717);
     for d in [2usize, 3] {
-        let mut subs = RegionsNd::new(d);
-        let mut upds = RegionsNd::new(d);
+        let mut subs = ddm::core::RegionsNd::new(d);
+        let mut upds = ddm::core::RegionsNd::new(d);
         for _ in 0..150 {
             let rect: Vec<ddm::core::Interval> = (0..d)
                 .map(|_| {
@@ -90,56 +100,67 @@ fn ddim_reduction_with_every_algo() {
             }
         }
         for algo in [Algo::Psbm, Algo::Itm, Algo::Gbm] {
-            let mut sink = VecSink::default();
-            ddim::match_nd(
-                &subs,
-                &upds,
-                |s1, u1, out| {
-                    out.pairs
-                        .extend(ddm::algos::run_pairs(algo, &pool, 4, s1, u1, &params));
-                },
-                &mut sink,
-            );
+            let engine = engine_on(&pool, algo, 4);
             assert_eq!(
-                canonicalize(sink.pairs),
+                engine.pairs_nd(&subs, &upds),
                 want,
                 "d={d} algo={}",
                 algo.name()
             );
+            assert_eq!(engine.count_nd(&subs, &upds), want.len() as u64);
         }
     }
 }
 
 /// Service end-to-end: Fig. 1 style scenario — registrations, full
-/// match, publish/poll routing, dynamic moves — all consistent.
+/// match, publish/poll routing, dynamic moves — all consistent, on an
+/// injected engine.
 #[test]
 fn service_scenario_consistency() {
-    let mut svc = ddm::hla::DdmService::new(RoutingSpace::uniform(1, 100_000));
-    let fed_a = svc.join("a");
-    let fed_b = svc.join("b");
-    let mut rng = Rng::new(0x5E5E);
-    let mut subs = Vec::new();
-    for _ in 0..200 {
-        let x = rng.below(99_000);
-        subs.push(
-            svc.register(
-                fed_a,
-                RegionKind::Subscription,
-                &RegionSpec::interval(x, x + 500),
-            )
-            .unwrap(),
-        );
-    }
-    let mut upds = Vec::new();
-    for _ in 0..100 {
-        let x = rng.below(99_000);
-        upds.push(
-            svc.register(fed_b, RegionKind::Update, &RegionSpec::interval(x, x + 300))
+    type Handles = (Vec<ddm::hla::RegionHandle>, Vec<ddm::hla::RegionHandle>);
+
+    // Deterministic state construction, replayable on any service.
+    fn build_state(svc: &mut ddm::hla::DdmService) -> (ddm::hla::FederateId, Handles) {
+        let fed_a = svc.join("a");
+        let fed_b = svc.join("b");
+        let mut rng = Rng::new(0x5E5E);
+        let mut subs = Vec::new();
+        for _ in 0..200 {
+            let x = rng.below(99_000);
+            subs.push(
+                svc.register(
+                    fed_a,
+                    RegionKind::Subscription,
+                    &RegionSpec::interval(x, x + 500),
+                )
                 .unwrap(),
-        );
+            );
+        }
+        let mut upds = Vec::new();
+        for _ in 0..100 {
+            let x = rng.below(99_000);
+            upds.push(
+                svc.register(fed_b, RegionKind::Update, &RegionSpec::interval(x, x + 300))
+                    .unwrap(),
+            );
+        }
+        (fed_a, (subs, upds))
     }
-    let pool = ThreadPool::new(3);
-    let pairs = svc.match_all(Algo::Psbm, &pool, 4, &MatchParams::default());
+
+    fn move_half(svc: &mut ddm::hla::DdmService, subs: &[ddm::hla::RegionHandle]) {
+        let mut rng = Rng::new(0x5E5F);
+        for &s in subs.iter().take(50) {
+            let x = rng.below(99_000);
+            svc.modify(s, &RegionSpec::interval(x, x + 500)).unwrap();
+        }
+    }
+
+    let mut svc = ddm::hla::DdmService::with_engine(
+        RoutingSpace::uniform(1, 100_000),
+        DdmEngine::builder().algo(Algo::Psbm).threads(4).build(),
+    );
+    let (fed_a, (subs, upds)) = build_state(&mut svc);
+    let pairs = svc.match_all();
 
     // Publishing every update must deliver exactly the matched pairs.
     let mut delivered = 0;
@@ -149,32 +170,38 @@ fn service_scenario_consistency() {
     assert_eq!(delivered, pairs.len());
     assert_eq!(svc.poll(fed_a).len(), delivered);
 
-    // Dynamic: move every subscription; match count changes coherently.
-    for &s in subs.iter().take(50) {
-        let x = rng.below(99_000);
-        svc.modify(s, &RegionSpec::interval(x, x + 500)).unwrap();
-    }
-    let pairs2 = svc.match_all(Algo::Itm, &pool, 4, &MatchParams::default());
-    let pairs3 = svc.match_all(Algo::Gbm, &pool, 2, &MatchParams::default());
-    let norm = |mut v: Vec<(ddm::hla::RegionHandle, ddm::hla::RegionHandle)>| {
+    // Dynamic: move subscriptions; a service on a *different* engine,
+    // fed the same state, agrees (swapping = builder change only).
+    move_half(&mut svc, &subs);
+    let mut pairs2 = svc.match_all();
+
+    let mut svc_itm = ddm::hla::DdmService::with_engine(
+        RoutingSpace::uniform(1, 100_000),
+        DdmEngine::builder().algo(Algo::Itm).threads(2).build(),
+    );
+    let (_, (subs2, _)) = build_state(&mut svc_itm);
+    move_half(&mut svc_itm, &subs2);
+    let mut pairs3 = svc_itm.match_all();
+
+    let norm = |v: &mut Vec<(ddm::hla::RegionHandle, ddm::hla::RegionHandle)>| {
         v.sort_by_key(|(a, b)| (a.id, b.id));
-        v
     };
-    assert_eq!(norm(pairs2), norm(pairs3));
+    norm(&mut pairs2);
+    norm(&mut pairs3);
+    assert!(!pairs2.is_empty());
+    assert_eq!(pairs2, pairs3);
 }
 
 /// XLA backend agrees with native matching on service-shaped data
-/// (skips when `make artifacts` has not run).
+/// (skips unless built with `--features xla` and `make artifacts` ran).
 #[test]
 fn xla_backend_matches_native_on_service_regions() {
     let dir = std::path::Path::new(ddm::runtime::DEFAULT_ARTIFACT_DIR);
     if !ddm::runtime::artifacts_available(dir) {
-        eprintln!("skipping: artifacts not built");
+        eprintln!("skipping: xla feature off or artifacts not built");
         return;
     }
     let be = ddm::runtime::XlaMatchBackend::load(dir).expect("backend");
-    let pool = ThreadPool::new(3);
-    let params = MatchParams::default();
     let mut rng = Rng::new(0xCAFE);
     // Integer (HLA-style) coordinates are f32-exact below 2^24.
     let mut subs = ddm::core::Regions1D::default();
@@ -187,12 +214,12 @@ fn xla_backend_matches_native_on_service_regions() {
         let x = rng.below(1_000_000) as f64;
         upds.push(ddm::core::Interval::new(x, x + 800.0));
     }
-    let k_native = ddm::algos::run_count(Algo::Psbm, &pool, 4, &subs, &upds, &params);
+    let native = DdmEngine::builder().algo(Algo::Psbm).threads(4).build();
+    let k_native = native.count_1d(&subs, &upds);
     let k_xla = be.match_counts_1d(&subs, &upds).expect("xla count");
     assert_eq!(k_native, k_xla);
 
-    let pairs_native =
-        ddm::algos::run_pairs(Algo::Bfm, &pool, 1, &subs, &upds, &params);
+    let pairs_native = native.pairs_1d(&subs, &upds);
     let mut pairs_xla = be.match_pairs_1d(&subs, &upds).expect("xla pairs");
     pairs_xla.sort_unstable();
     assert_eq!(pairs_native, pairs_xla);
@@ -202,11 +229,10 @@ fn xla_backend_matches_native_on_service_regions() {
 #[test]
 fn coordinator_handles_concurrent_clients() {
     use ddm::coordinator::{Coordinator, CoordinatorConfig};
-    let coord = Coordinator::spawn(CoordinatorConfig {
-        space: RoutingSpace::uniform(1, 1_000_000),
-        nthreads: 2,
-        ..Default::default()
-    });
+    let coord = Coordinator::spawn(CoordinatorConfig::new(
+        RoutingSpace::uniform(1, 1_000_000),
+        DdmEngine::builder().threads(2).build(),
+    ));
     let c = coord.client();
     let fed = c.join("shared");
     std::thread::scope(|s| {
@@ -235,21 +261,25 @@ fn coordinator_handles_concurrent_clients() {
     assert_eq!(metrics.counter("registers"), 200);
 }
 
-/// Thread-count invariance under the property harness (heavier than
-/// the per-module variants: full workload, many P values).
+/// Thread-count invariance under the engine API (heavier than the
+/// per-module variants: full workload, many P values, shared pool).
 #[test]
 fn psbm_thread_invariance_heavy() {
-    let pool = ThreadPool::new(15);
+    let pool = Arc::new(ThreadPool::new(15));
     let ap = AlphaParams {
         n_total: 10_000,
         alpha: 100.0,
         space: 1e6,
     };
     let (subs, upds) = alpha_workload(77, &ap);
-    let params = MatchParams::default();
-    let want = ddm::algos::run_pairs(Algo::Psbm, &pool, 1, &subs, &upds, &params);
+    let base = DdmEngine::builder()
+        .algo(Algo::Psbm)
+        .threads(1)
+        .pool(Arc::clone(&pool))
+        .build();
+    let want = base.pairs_1d(&subs, &upds);
     for p in 2..=16 {
-        let got = ddm::algos::run_pairs(Algo::Psbm, &pool, p, &subs, &upds, &params);
+        let got = base.with_threads(p).pairs_1d(&subs, &upds);
         assert_eq!(got.len(), want.len(), "P={p}");
         assert_eq!(got, want, "P={p}");
     }
