@@ -83,7 +83,7 @@ fn main() {
         format!("{crossover:.0}"),
     ]);
     table.print();
-    ctx.maybe_csv("abl_dynamic", &table);
+    ctx.emit("abl_dynamic", &table);
     println!(
         "\nreading: below ~{crossover:.0} moves per epoch the incremental tree wins — \
          the paper's argument for ITM in dynamic scenarios."

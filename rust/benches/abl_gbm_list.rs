@@ -57,7 +57,7 @@ fn main() {
         }
     }
     table.print();
-    ctx.maybe_csv("abl_gbm_list", &table);
+    ctx.emit("abl_gbm_list", &table);
     println!(
         "\npaper check: lock-free vs mutex should be close (the paper kept the \
          mutex); the res-set dedup pays a hash cost the first-cell rule avoids."

@@ -61,5 +61,5 @@ fn main() {
         }
     }
     table.print();
-    ctx.maybe_csv("abl_sets", &table);
+    ctx.emit("abl_sets", &table);
 }

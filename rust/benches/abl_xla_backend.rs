@@ -77,7 +77,7 @@ fn main() {
         }
     }
     table.print();
-    ctx.maybe_csv("abl_xla", &table);
+    ctx.emit("abl_xla", &table);
     println!(
         "\nreading: the dense kernel beats quadratic native BFM through \
          vectorized regularity but cannot beat O(N lg N) SBM asymptotically — \

@@ -94,7 +94,7 @@ fn main() {
         }
     }
     table.print();
-    ctx.maybe_csv("fig09", &table);
+    ctx.emit("fig09", &table);
     println!(
         "\npaper shape check: BFM most scalable (embarrassingly parallel), \
          SBM fastest but least scalable; HT region (P>16) bends every curve."

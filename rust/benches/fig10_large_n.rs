@@ -53,7 +53,7 @@ fn main() {
         }
     }
     table.print();
-    ctx.maybe_csv("fig10", &table);
+    ctx.emit("fig10", &table);
     println!(
         "\npaper shape check: SBM reaches ~7x at P=32 at N=1e8 (vs ~3.6x at N=1e6) — \
          larger per-worker work amortizes synchronization; ITM stays tree-build-bound."

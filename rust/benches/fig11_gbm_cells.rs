@@ -72,7 +72,7 @@ fn main() {
         table.row(cells);
     }
     table.print();
-    ctx.maybe_csv("fig11", &table);
+    ctx.emit("fig11", &table);
     println!(
         "\npaper shape check: optimum ncells drifts with P (larger grids pay off \
          at low P; coarser grids win as P grows and per-cell lists shrink)."

@@ -54,7 +54,7 @@ fn main() {
         }
     }
     ta.print();
-    ctx.maybe_csv("fig12a", &ta);
+    ctx.emit("fig12a", &ta);
 
     // ---- (b) WCT vs α at fixed N -----------------------------------------
     let n_total = ctx.args.size("n", if ctx.quick { 100_000 } else { 800_000 });
@@ -84,7 +84,7 @@ fn main() {
         }
     }
     tb.print();
-    ctx.maybe_csv("fig12b", &tb);
+    ctx.emit("fig12b", &tb);
     println!(
         "\npaper shape check: (a) polylog growth in N for both; \
          (b) SBM ~flat in α, ITM grows with α (output-sensitive queries)."

@@ -109,6 +109,7 @@ fn main() {
         ta.row(row);
     }
     ta.print();
+    ddm::bench::harness::json_with_args(&args, quick, "fig13a", &ta);
 
     // ---- (b) RSS vs P ------------------------------------------------------
     let n_fixed = args.size("n", if quick { 100_000 } else { 400_000 });
@@ -130,6 +131,7 @@ fn main() {
         tb.row(row);
     }
     tb.print();
+    ddm::bench::harness::json_with_args(&args, quick, "fig13b", &tb);
     println!(
         "\npaper shape check: RSS linear in N; BFM smallest, SBM largest; flat in P."
     );

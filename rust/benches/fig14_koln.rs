@@ -62,7 +62,7 @@ fn main() {
         }
     }
     table.print();
-    ctx.maybe_csv("fig14", &table);
+    ctx.emit("fig14", &table);
     println!(
         "\npaper shape check: GBM slowest, parallel SBM fastest by a wide margin; \
          SBM's speedup stays low because its absolute runtime is tiny."

@@ -13,6 +13,12 @@
 //! updated with one delete + one insert (O(lg n) each) — no full
 //! re-match. [`MoveDiff`] reports which pairs appeared and
 //! disappeared, which is exactly what the HLA notification layer needs.
+//!
+//! [`crate::session::DdmSession`] generalizes this scheme to batched,
+//! N-dimensional, epoch-committed churn: one [`TreeIndex`] per
+//! dimension per side, with whole-epoch
+//! [`MatchDiff`](crate::session::MatchDiff)s instead of per-move
+//! diffs.
 
 use std::collections::BTreeMap;
 
@@ -331,39 +337,66 @@ mod tests {
         assert_eq!(d, MoveDiff::default());
     }
 
-    /// TreeIndex and the engine's rebuild-on-write adapter are two
-    /// implementations of the same DynamicMatcher contract.
+    /// Property: TreeIndex and the engine's rebuild-on-write adapter
+    /// are interchangeable implementations of the DynamicMatcher
+    /// contract — identical query results and lengths under randomized
+    /// insert/modify/remove/query sequences, whatever static matcher
+    /// backs the adapter.
     #[test]
-    fn tree_index_agrees_with_rebuild_adapter() {
+    fn rebuild_adapter_agrees_with_tree_index_property() {
+        use crate::algos::{Algo, MatchParams};
         use crate::engine::{algo_matcher, DynamicMatcher, ExecCtx, RebuildDynamic};
         let pool = crate::exec::ThreadPool::new(1);
-        let ctx = ExecCtx::new(&pool, 2);
-        let mut tree: Box<dyn DynamicMatcher> = Box::new(TreeIndex::new());
-        let mut rebuild: Box<dyn DynamicMatcher> = Box::new(RebuildDynamic::new(
-            algo_matcher(crate::algos::Algo::Psbm, &crate::algos::MatchParams::default()),
-        ));
-        let mut rng = Rng::new(0xD7);
-        for _ in 0..150 {
-            let key = rng.below(30) as u32;
-            match rng.below(3) {
-                0 | 1 => {
-                    let lo = rng.uniform(0.0, 90.0);
-                    let iv = Interval::new(lo, lo + rng.uniform(0.0, 10.0));
-                    tree.insert(key, iv);
-                    rebuild.insert(key, iv);
+        crate::bench::prop::prop_check("rebuild-vs-tree-index", 0xD7, |rng| {
+            let ctx = ExecCtx::new(&pool, 2);
+            let backing = match rng.below(3) {
+                0 => Algo::Psbm,
+                1 => Algo::Itm,
+                _ => Algo::Sbm,
+            };
+            let mut tree: Box<dyn DynamicMatcher> = Box::new(TreeIndex::new());
+            let mut rebuild: Box<dyn DynamicMatcher> = Box::new(RebuildDynamic::new(
+                algo_matcher(backing, &MatchParams::default()),
+            ));
+            let nops = 30 + rng.below(80);
+            for step in 0..nops {
+                let key = rng.below(24) as u32;
+                let lo = rng.uniform(0.0, 90.0);
+                let iv = Interval::new(lo, lo + rng.uniform(0.0, 10.0));
+                match rng.below(4) {
+                    0 => {
+                        tree.insert(key, iv);
+                        rebuild.insert(key, iv);
+                    }
+                    1 => {
+                        tree.modify(key, iv);
+                        rebuild.modify(key, iv);
+                    }
+                    2 => {
+                        tree.remove(key);
+                        rebuild.remove(key);
+                    }
+                    _ => {} // query-only step
                 }
-                _ => {
-                    tree.remove(key);
-                    rebuild.remove(key);
+                let qlo = rng.uniform(0.0, 95.0);
+                let q = Interval::new(qlo, qlo + rng.uniform(0.5, 8.0));
+                let (mut a, mut b) = (Vec::new(), Vec::new());
+                tree.query(&ctx, q, &mut a);
+                rebuild.query(&ctx, q, &mut b);
+                crate::bench::prop::expect_eq(
+                    &a,
+                    &b,
+                    &format!("query at step {step} ({} backing)", backing.name()),
+                )?;
+                if tree.len() != rebuild.len() {
+                    return Err(format!(
+                        "len diverged at step {step}: tree {} vs rebuild {}",
+                        tree.len(),
+                        rebuild.len()
+                    ));
                 }
             }
-            let lo = rng.uniform(0.0, 95.0);
-            let q = Interval::new(lo, lo + 5.0);
-            let (mut a, mut b) = (Vec::new(), Vec::new());
-            tree.query(&ctx, q, &mut a);
-            rebuild.query(&ctx, q, &mut b);
-            assert_eq!(a, b);
-            assert_eq!(tree.len(), rebuild.len());
-        }
+            Ok(())
+        });
     }
 }

@@ -79,27 +79,52 @@ impl Algo {
             Algo::SbmBinary => "sbm-binary",
         }
     }
+
+    /// Every accepted spelling (lower-case canonical form; parsing is
+    /// ASCII-case-insensitive) — the single source of truth for
+    /// [`FromStr`](std::str::FromStr), error messages and tests.
+    pub const ALIASES: [(&'static str, Algo); 18] = [
+        ("bfm", Algo::Bfm),
+        ("brute", Algo::Bfm),
+        ("bruteforce", Algo::Bfm),
+        ("brute-force", Algo::Bfm),
+        ("gbm", Algo::Gbm),
+        ("grid", Algo::Gbm),
+        ("grid-based", Algo::Gbm),
+        ("itm", Algo::Itm),
+        ("tree", Algo::Itm),
+        ("interval-tree", Algo::Itm),
+        ("sbm", Algo::Sbm),
+        ("sort", Algo::Sbm),
+        ("sort-based", Algo::Sbm),
+        ("psbm", Algo::Psbm),
+        ("parallel-sbm", Algo::Psbm),
+        ("sbm-par", Algo::Psbm),
+        ("sbm-binary", Algo::SbmBinary),
+        ("binary", Algo::SbmBinary),
+    ];
 }
 
 impl std::str::FromStr for Algo {
     type Err = String;
     fn from_str(s: &str) -> Result<Self, Self::Err> {
-        match s.to_ascii_lowercase().as_str() {
-            "bfm" | "brute" | "bruteforce" | "brute-force" => Ok(Algo::Bfm),
-            "gbm" | "grid" | "grid-based" => Ok(Algo::Gbm),
-            "itm" | "tree" | "interval-tree" => Ok(Algo::Itm),
-            "sbm" | "sort" | "sort-based" => Ok(Algo::Sbm),
-            "psbm" | "parallel-sbm" | "sbm-par" => Ok(Algo::Psbm),
-            "sbm-binary" | "binary" => Ok(Algo::SbmBinary),
-            other => {
-                let valid: Vec<&str> = Algo::ALL.iter().map(|a| a.name()).collect();
-                Err(format!(
-                    "unknown algorithm '{other}' (valid: {}, plus aliases \
-                     brute-force/grid-based/interval-tree/sort-based)",
-                    valid.join(", ")
-                ))
+        let t = s.trim();
+        for (name, algo) in Algo::ALIASES {
+            if t.eq_ignore_ascii_case(name) {
+                return Ok(algo);
             }
         }
+        let valid: Vec<&str> = Algo::ALL.iter().map(|a| a.name()).collect();
+        let aliases: Vec<&str> = Algo::ALIASES
+            .iter()
+            .map(|&(n, _)| n)
+            .filter(|n| !valid.contains(n))
+            .collect();
+        Err(format!(
+            "unknown algorithm '{t}' (valid: {}; aliases: {})",
+            valid.join(", "),
+            aliases.join(", ")
+        ))
     }
 }
 
@@ -227,10 +252,28 @@ mod tests {
     }
 
     #[test]
-    fn algo_parse_error_lists_valid_names() {
-        let err = "frobnicate".parse::<Algo>().unwrap_err();
+    fn every_listed_alias_parses_case_insensitively() {
+        for (name, want) in Algo::ALIASES {
+            assert_eq!(name.parse::<Algo>().unwrap(), want, "{name}");
+            let upper = name.to_ascii_uppercase();
+            assert_eq!(upper.parse::<Algo>().unwrap(), want, "{upper}");
+            let mut mixed = name.to_string();
+            mixed[..1].make_ascii_uppercase();
+            assert_eq!(mixed.parse::<Algo>().unwrap(), want, "{mixed}");
+            // Surrounding whitespace is tolerated (CLI/config input).
+            assert_eq!(format!(" {name} ").parse::<Algo>().unwrap(), want);
+        }
+        // Canonical names are themselves aliases.
         for a in Algo::ALL {
-            assert!(err.contains(a.name()), "error should list {}: {err}", a.name());
+            assert!(Algo::ALIASES.iter().any(|&(n, b)| n == a.name() && b == a));
+        }
+    }
+
+    #[test]
+    fn algo_parse_error_lists_every_spelling() {
+        let err = "frobnicate".parse::<Algo>().unwrap_err();
+        for (alias, _) in Algo::ALIASES {
+            assert!(err.contains(alias), "error should list {alias}: {err}");
         }
     }
 

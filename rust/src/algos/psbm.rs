@@ -25,7 +25,9 @@ use crate::core::Regions1D;
 use crate::exec::pfor::chunks;
 use crate::exec::psort::par_sort_by_key;
 use crate::exec::ThreadPool;
-use crate::sets::{ActiveSet, BTreeActiveSet, BitSet, HashActiveSet, SetImpl, SortedVecSet, SparseSet};
+use crate::sets::{
+    ActiveSet, BTreeActiveSet, BitSet, HashActiveSet, SetImpl, SortedVecSet, SparseSet,
+};
 
 use super::sbm::{sweep, Endpoint};
 

@@ -18,7 +18,9 @@
 use crate::core::sink::MatchSink;
 use crate::core::Regions1D;
 use crate::exec::f64_key;
-use crate::sets::{ActiveSet, BTreeActiveSet, BitSet, HashActiveSet, SetImpl, SortedVecSet, SparseSet};
+use crate::sets::{
+    ActiveSet, BTreeActiveSet, BitSet, HashActiveSet, SetImpl, SortedVecSet, SparseSet,
+};
 
 /// One interval endpoint, stored **sort-ready**: the position is kept
 /// as its order-preserving bit pattern (`f64_key`) and the tie-break

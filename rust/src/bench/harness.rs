@@ -149,6 +149,43 @@ impl FigCtx {
             }
         }
     }
+
+    /// Write the machine-readable `BENCH_<name>.json` result file.
+    pub fn maybe_json(&self, name: &str, table: &super::table::Table) {
+        json_with_args(&self.args, self.quick, name, table);
+    }
+
+    /// Emit one bench table everywhere it is tracked: stdout already
+    /// printed by the caller, CSV when `--csv` is on, and the
+    /// `BENCH_<name>.json` trajectory file.
+    pub fn emit(&self, name: &str, table: &super::table::Table) {
+        self.maybe_csv(name, table);
+        self.maybe_json(name, table);
+    }
+}
+
+/// The machine-readable `BENCH_<name>.json` trajectory file (how the
+/// perf trajectory is tracked across PRs), from raw [`Args`] — for
+/// bench binaries that never build a [`FigCtx`] (fig13's re-exec'ing
+/// memory bench); everything else goes through [`FigCtx::emit`]. On by
+/// default into `bench_results/`; redirect with `--json <dir>`,
+/// disable with `--no-json`.
+pub fn json_with_args(args: &Args, quick: bool, name: &str, table: &super::table::Table) {
+    if args.flag("no-json") {
+        return;
+    }
+    let dir = args
+        .get("json")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("bench_results"));
+    let path = dir.join(format!("BENCH_{name}.json"));
+    let host = super::sysinfo::summary_line();
+    let quick = if quick { "true" } else { "false" };
+    let meta = [("fig", name), ("host", host.as_str()), ("quick", quick)];
+    match table.write_json(&path, &meta) {
+        Ok(()) => println!("(json written to {})", path.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
 }
 
 /// One measured (algo, P) point.

@@ -92,6 +92,71 @@ impl Table {
         let mut f = std::fs::File::create(path)?;
         f.write_all(self.to_csv().as_bytes())
     }
+
+    /// Machine-readable mirror for cross-PR perf tracking:
+    /// `{<meta fields>, "header": [...], "rows": [[...], ...]}`.
+    /// Cells that parse as finite numbers are emitted as JSON numbers,
+    /// everything else as strings.
+    pub fn to_json(&self, meta: &[(&str, &str)]) -> String {
+        fn esc(s: &str) -> String {
+            let mut out = String::with_capacity(s.len() + 2);
+            out.push('"');
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\t' => out.push_str("\\t"),
+                    '\r' => out.push_str("\\r"),
+                    c if (c as u32) < 0x20 => {
+                        let _ = write!(out, "\\u{:04x}", c as u32);
+                    }
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+            out
+        }
+        fn cell(s: &str) -> String {
+            // Bare only for strings that are themselves valid JSON
+            // numbers (leading digit or minus-digit, no trailing dot —
+            // rules out Rust-parseable non-JSON like ".5"/"5."/"nan").
+            let mut chars = s.chars();
+            let leading = match (chars.next(), chars.next()) {
+                (Some(c0), _) if c0.is_ascii_digit() => true,
+                (Some('-'), Some(c1)) if c1.is_ascii_digit() => true,
+                _ => false,
+            };
+            let numeric_shape = leading && !s.ends_with('.');
+            if numeric_shape && s.parse::<f64>().map(|v| v.is_finite()).unwrap_or(false) {
+                s.to_string()
+            } else {
+                esc(s)
+            }
+        }
+        let mut out = String::from("{\n");
+        for (k, v) in meta {
+            let _ = writeln!(out, "  {}: {},", esc(k), esc(v));
+        }
+        let header: Vec<String> = self.header.iter().map(|h| esc(h)).collect();
+        let _ = writeln!(out, "  \"header\": [{}],", header.join(", "));
+        out.push_str("  \"rows\": [\n");
+        for (i, row) in self.rows.iter().enumerate() {
+            let cells: Vec<String> = row.iter().map(|c| cell(c)).collect();
+            let comma = if i + 1 < self.rows.len() { "," } else { "" };
+            let _ = writeln!(out, "    [{}]{comma}", cells.join(", "));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    pub fn write_json(&self, path: &Path, meta: &[(&str, &str)]) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json(meta).as_bytes())
+    }
 }
 
 /// Standard bench banner: figure id, title, parameters.
@@ -132,5 +197,21 @@ mod tests {
         t.row(vec!["a,b", "1"]);
         let csv = t.to_csv();
         assert!(csv.contains("\"a,b\""));
+    }
+
+    #[test]
+    fn json_types_and_escaping() {
+        let mut t = Table::new(vec!["algo", "wct", "note"]);
+        t.row(vec!["psbm", "1.25", "he said \"hi\""]);
+        t.row(vec!["gbm", "2e-3", "nan"]);
+        let j = t.to_json(&[("fig", "t1")]);
+        assert!(j.contains("\"fig\": \"t1\""));
+        assert!(j.contains("\"header\": [\"algo\", \"wct\", \"note\"]"));
+        // Numeric cells stay bare; strings (incl. "nan") are quoted.
+        assert!(j.contains("[\"psbm\", 1.25, \"he said \\\"hi\\\"\"]"));
+        assert!(j.contains("[\"gbm\", 2e-3, \"nan\"]"));
+        // Structure is balanced (cheap well-formedness check).
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
     }
 }

@@ -9,11 +9,16 @@
 //! [`EngineBuilder`](crate::engine::EngineBuilder) change at spawn
 //! time.
 //!
-//! Mutating commands (register/modify/publish) are processed in
-//! arrival batches: the loop drains whatever is queued before
-//! answering queries, so a burst of region modifications triggers one
-//! index invalidation instead of many (see `batch_max`). Metrics track
-//! per-command-type counts and latencies.
+//! The service runs on an incremental
+//! [`DdmSession`](crate::session::DdmSession): mutating commands
+//! (register/modify/publish) stage batched ops, and the session epoch
+//! commits lazily — a burst of region modifications becomes ONE
+//! parallel batch apply at the next read (or explicit
+//! [`Client::commit`]), with the epoch's
+//! [`MatchDiff`](crate::session::MatchDiff) counted in the metrics
+//! (`commits`, `diff_added`, `diff_removed`). The command loop's
+//! `batch_max` bound drains queued commands before answering queries,
+//! so synchronous bursts coalesce into large staged batches.
 
 pub mod metrics;
 
@@ -22,7 +27,9 @@ use std::time::Instant;
 
 use crate::engine::DdmEngine;
 use crate::error::Result;
-use crate::hla::{DdmService, FederateId, Notification, RegionHandle, RegionKind, RegionSpec, RoutingSpace};
+use crate::hla::{
+    DdmService, FederateId, Notification, RegionHandle, RegionKind, RegionSpec, RoutingSpace,
+};
 use metrics::Metrics;
 
 /// Commands a client can send to the coordinator.
@@ -53,6 +60,11 @@ pub enum Command {
     },
     MatchAll {
         reply: mpsc::Sender<usize>,
+    },
+    /// Commit the staged session epoch; replies with
+    /// `(epoch, pairs added, pairs removed)`.
+    Commit {
+        reply: mpsc::Sender<(u64, usize, usize)>,
     },
     Metrics {
         reply: mpsc::Sender<Metrics>,
@@ -147,6 +159,13 @@ impl Client {
 
     pub fn match_all(&self) -> usize {
         self.call(|reply| Command::MatchAll { reply })
+    }
+
+    /// Commit the staged epoch: returns `(epoch, added, removed)` — the
+    /// size of the intersection diff produced by the batched region ops
+    /// since the previous epoch.
+    pub fn commit(&self) -> (u64, usize, usize) {
+        self.call(|reply| Command::Commit { reply })
     }
 
     pub fn metrics(&self) -> Metrics {
@@ -273,6 +292,14 @@ fn service_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Command>) -> Metrics 
                     metrics.time("match_all", t0.elapsed());
                     let _ = reply.send(pairs.len());
                 }
+                Command::Commit { reply } => {
+                    let diff = svc.commit();
+                    metrics.inc("commits", 1);
+                    metrics.inc("diff_added", diff.added.len() as u64);
+                    metrics.inc("diff_removed", diff.removed.len() as u64);
+                    metrics.time("commit", t0.elapsed());
+                    let _ = reply.send((diff.epoch, diff.added.len(), diff.removed.len()));
+                }
                 Command::Metrics { reply } => {
                     let _ = reply.send(metrics.clone());
                 }
@@ -372,6 +399,43 @@ mod tests {
         }
         assert!(counts[0] > 0);
         assert!(counts.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    /// A burst of staged region ops commits as ONE epoch whose diff
+    /// reports exactly the new pairs; a second commit is empty.
+    #[test]
+    fn staged_epoch_commit_returns_diff() {
+        let coord = Coordinator::spawn(CoordinatorConfig::new(
+            RoutingSpace::uniform(1, 10_000),
+            DdmEngine::builder().threads(2).build(),
+        ));
+        let c = coord.client();
+        let f = c.join("f");
+        for i in 0..20u64 {
+            c.register(
+                f,
+                RegionKind::Subscription,
+                RegionSpec::interval(i * 100, i * 100 + 150),
+            )
+            .unwrap();
+        }
+        let u = c
+            .register(f, RegionKind::Update, RegionSpec::interval(0, 250))
+            .unwrap();
+        let (epoch, added, removed) = c.commit();
+        assert_eq!(epoch, 1);
+        assert_eq!((added, removed), (3, 0)); // subs at 0, 100, 200 overlap [0, 250)
+        let (epoch, added, removed) = c.commit();
+        assert_eq!(epoch, 2);
+        assert_eq!((added, removed), (0, 0));
+        // Moving the update region flips the pair set; the diff says so.
+        c.modify(u, RegionSpec::interval(1800, 1950)).unwrap();
+        let (_, added, removed) = c.commit();
+        assert_eq!((added, removed), (3, 3)); // now overlaps subs at 1700, 1800, 1900
+        let m = coord.shutdown();
+        assert_eq!(m.counter("commits"), 3);
+        assert_eq!(m.counter("diff_added"), 6);
+        assert_eq!(m.counter("diff_removed"), 3);
     }
 
     #[test]

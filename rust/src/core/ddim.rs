@@ -10,17 +10,7 @@
 use std::collections::HashSet;
 
 use super::region::{Regions1D, RegionsNd};
-use super::sink::{MatchSink, VecSink};
-
-#[inline]
-fn pack(s: u32, u: u32) -> u64 {
-    (s as u64) << 32 | u as u64
-}
-
-#[inline]
-fn unpack(p: u64) -> (u32, u32) {
-    ((p >> 32) as u32, p as u32)
-}
+use super::sink::{pack_pair, unpack_pair, MatchSink, VecSink};
 
 /// Extend a 1-D matcher to d dimensions.
 ///
@@ -49,7 +39,7 @@ pub fn match_nd<F>(
     let mut v = VecSink::default();
     match1d(subs.project(0), upds.project(0), &mut v);
     let mut candidates: HashSet<u64> =
-        v.pairs.iter().map(|&(s, u)| pack(s, u)).collect();
+        v.pairs.iter().map(|&(s, u)| pack_pair(s, u)).collect();
 
     // …and each further dimension filters it.
     for k in 1..d {
@@ -59,14 +49,14 @@ pub fn match_nd<F>(
         let mut vk = VecSink::default();
         match1d(subs.project(k), upds.project(k), &mut vk);
         let dim_pairs: HashSet<u64> =
-            vk.pairs.iter().map(|&(s, u)| pack(s, u)).collect();
+            vk.pairs.iter().map(|&(s, u)| pack_pair(s, u)).collect();
         candidates.retain(|p| dim_pairs.contains(p));
     }
 
     let mut out: Vec<u64> = candidates.into_iter().collect();
     out.sort_unstable(); // deterministic report order
     for p in out {
-        let (s, u) = unpack(p);
+        let (s, u) = unpack_pair(p);
         sink.report(s, u);
     }
 }

@@ -53,6 +53,22 @@ impl<F: FnMut(RegionIdx, RegionIdx) + Send> MatchSink for FnSink<F> {
 /// A sorted, deduplicated pair list — canonical form for comparisons.
 pub type PairVec = Vec<(RegionIdx, RegionIdx)>;
 
+/// Pack a (subscription, update) pair into one `u64` key, subscription
+/// in the high half — the canonical pair-set element shared by the N-D
+/// reduction ([`crate::core::ddim`]) and the session diff store
+/// ([`crate::session`]). Packed keys sort in the same order as the
+/// `(s, u)` tuples.
+#[inline]
+pub fn pack_pair(s: RegionIdx, u: RegionIdx) -> u64 {
+    (s as u64) << 32 | u as u64
+}
+
+/// Inverse of [`pack_pair`].
+#[inline]
+pub fn unpack_pair(p: u64) -> (RegionIdx, RegionIdx) {
+    ((p >> 32) as u32, p as u32)
+}
+
 /// Merge per-worker VecSinks into canonical form.
 pub fn canonical_pairs(sinks: Vec<VecSink>) -> PairVec {
     let mut all: PairVec = sinks.into_iter().flat_map(|s| s.pairs).collect();
@@ -122,6 +138,16 @@ mod tests {
         assert!(assert_exactly_once(&ok).is_ok());
         let bad = vec![(0, 1), (0, 1)];
         assert!(assert_exactly_once(&bad).is_err());
+    }
+
+    #[test]
+    fn pack_pair_roundtrips_and_orders() {
+        for &(s, u) in &[(0u32, 0u32), (1, 2), (u32::MAX, 7), (3, u32::MAX)] {
+            assert_eq!(unpack_pair(pack_pair(s, u)), (s, u));
+        }
+        // Packed order == tuple order.
+        assert!(pack_pair(1, 9) < pack_pair(2, 0));
+        assert!(pack_pair(2, 0) < pack_pair(2, 1));
     }
 
     #[test]

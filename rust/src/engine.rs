@@ -24,6 +24,12 @@
 //!   parameters and the selected matcher. Built via [`EngineBuilder`]
 //!   (algorithm, thread count, [`MatchParams`], set implementation,
 //!   GBM dedup strategy, or adaptive auto-selection by workload size).
+//!   [`DdmEngine::session`] hands out epoch-based incremental matching
+//!   sessions ([`crate::session::DdmSession`]) configured by the
+//!   builder's session knobs
+//!   ([`session_set_impl`](EngineBuilder::session_set_impl),
+//!   [`batch_threshold`](EngineBuilder::batch_threshold),
+//!   [`parallel_cutoff`](EngineBuilder::parallel_cutoff)).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -35,6 +41,7 @@ use crate::core::interval::Interval;
 use crate::core::sink::{canonicalize, CountSink, FnSink, MatchSink, PairVec, VecSink};
 use crate::core::{Regions1D, RegionsNd};
 use crate::exec::ThreadPool;
+use crate::session::{DdmSession, SessionParams};
 use crate::sets::SetImpl;
 
 /// Execution context handed to every [`Matcher`] call: the worker pool
@@ -263,6 +270,7 @@ pub struct EngineBuilder {
     selection: Selection,
     nthreads: usize,
     params: MatchParams,
+    session: SessionParams,
     pool: Option<Arc<ThreadPool>>,
 }
 
@@ -272,6 +280,7 @@ impl EngineBuilder {
             selection: Selection::Fixed(Algo::Psbm),
             nthreads: 4,
             params: MatchParams::default(),
+            session: SessionParams::default(),
             pool: None,
         }
     }
@@ -340,6 +349,37 @@ impl EngineBuilder {
         self
     }
 
+    // ---- session knobs (see crate::session) --------------------------------
+
+    /// Backing store of session diff retention sets
+    /// ([`SessionParams::set_impl`]).
+    pub fn session_set_impl(mut self, set_impl: SetImpl) -> Self {
+        self.session.set_impl = set_impl;
+        self
+    }
+
+    /// Epoch batching threshold: sessions auto-apply staged ops to
+    /// their indexes once this many are pending (`0` = only at
+    /// `commit`). See [`SessionParams::batch_threshold`].
+    pub fn batch_threshold(mut self, ops: usize) -> Self {
+        self.session.batch_threshold = ops;
+        self
+    }
+
+    /// Minimum touched regions per session batch before apply and
+    /// recompute run on the worker pool. See
+    /// [`SessionParams::parallel_cutoff`].
+    pub fn parallel_cutoff(mut self, regions: usize) -> Self {
+        self.session.parallel_cutoff = regions;
+        self
+    }
+
+    /// Replace the whole session parameter block.
+    pub fn session_params(mut self, session: SessionParams) -> Self {
+        self.session = session;
+        self
+    }
+
     /// Share an existing pool (e.g. the bench harness pool) instead of
     /// spawning one. The pool must be able to serve `threads` workers.
     pub fn pool(mut self, pool: Arc<ThreadPool>) -> Self {
@@ -379,6 +419,7 @@ impl EngineBuilder {
             pool,
             nthreads: self.nthreads,
             params: self.params,
+            session: self.session,
         }
     }
 }
@@ -411,6 +452,7 @@ pub struct DdmEngine {
     pool: Arc<ThreadPool>,
     nthreads: usize,
     params: MatchParams,
+    session: SessionParams,
 }
 
 impl DdmEngine {
@@ -533,6 +575,22 @@ impl DdmEngine {
             Selection::Custom(m) => Box::new(RebuildDynamic::new(Arc::clone(m))),
             _ => Box::new(crate::algos::dynamic::TreeIndex::new()),
         }
+    }
+
+    // ---- sessions ----------------------------------------------------------
+
+    /// A fresh `d`-dimensional incremental matching session sharing
+    /// this engine's worker pool, thread count and session knobs: stage
+    /// batched region churn, `commit()` an epoch, get back only the
+    /// [`MatchDiff`](crate::session::MatchDiff) of intersections. See
+    /// [`crate::session`] for the full model.
+    pub fn session(&self, d: usize) -> DdmSession {
+        DdmSession::new(d, Arc::clone(&self.pool), self.nthreads, self.session)
+    }
+
+    /// The session knobs new sessions are created with.
+    pub fn session_params(&self) -> &SessionParams {
+        &self.session
     }
 }
 
@@ -728,6 +786,25 @@ mod tests {
             assert_eq!(got, want, "step {step}");
             assert_eq!(index.len(), model.len());
         }
+    }
+
+    #[test]
+    fn builder_session_knobs_flow_through() {
+        use crate::sets::SetImpl;
+        let e = DdmEngine::builder()
+            .threads(2)
+            .session_set_impl(SetImpl::Bit)
+            .batch_threshold(7)
+            .parallel_cutoff(3)
+            .build();
+        let p = e.session_params();
+        assert_eq!(p.set_impl, SetImpl::Bit);
+        assert_eq!(p.batch_threshold, 7);
+        assert_eq!(p.parallel_cutoff, 3);
+        let s = e.session(3);
+        assert_eq!(s.d(), 3);
+        assert_eq!(s.epoch(), 0);
+        assert_eq!(s.pending_ops(), 0);
     }
 
     #[test]

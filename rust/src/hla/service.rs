@@ -1,27 +1,37 @@
-//! The DDM service: federates, region registration, matching and
-//! notification routing (the paper's Fig. 1 scenario, as a library).
+//! The DDM service: federates, region registration, session-driven
+//! matching and notification routing (the paper's Fig. 1 scenario, as
+//! a library).
 //!
-//! The service is **algorithm-agnostic**: it never names a concrete
-//! matcher. All matching goes through the injected
-//! [`DdmEngine`](crate::engine::DdmEngine) — full matches via the
-//! engine's N-D path, the publish hot path via the engine's
-//! [`DynamicMatcher`](crate::engine::DynamicMatcher) index over
-//! dimension 0 of the subscription set (an incremental interval tree
-//! for every in-tree algorithm family, rebuild-on-write for custom
-//! backends with their own matching semantics). Swapping the
-//! algorithm is an [`EngineBuilder`](crate::engine::EngineBuilder)
-//! change; the service code does not move.
+//! The service runs **entirely on an incremental
+//! [`DdmSession`](crate::session::DdmSession)**: register, modify and
+//! delete stage batched ops keyed by region handle id; every read path
+//! ([`publish`](DdmService::publish), [`match_all`](DdmService::match_all),
+//! [`overlapping_subscriptions`](DdmService::overlapping_subscriptions))
+//! first flushes the staged batch (epoch stays open, so interleaved
+//! reads never swallow a diff) and answers from the session's
+//! retained pair set — no full re-match anywhere, and federate
+//! notifications are driven by the
+//! [`MatchDiff`](crate::session::MatchDiff)-maintained state (see
+//! [`notify_new_matches`](DdmService::notify_new_matches) for the
+//! literal diff-to-mailbox path).
+//!
+//! The service stays **algorithm- and configuration-agnostic**: the
+//! injected [`DdmEngine`](crate::engine::DdmEngine) supplies the worker
+//! pool and the session knobs (diff retention set, epoch batching
+//! threshold, parallel-apply cutoff — see the
+//! [`EngineBuilder`](crate::engine::EngineBuilder) session methods).
+//! Swapping any of that is a builder change; the service code does not
+//! move.
 
 use std::collections::VecDeque;
 
 use crate::bail;
-use crate::engine::{DdmEngine, DynamicMatcher};
+use crate::engine::DdmEngine;
 use crate::error::{Context, Result};
+use crate::session::{DdmSession, MatchDiff};
 
 use super::region::{RegionHandle, RegionKind, RegionSpec};
 use super::space::RoutingSpace;
-use crate::core::interval::Interval;
-use crate::core::RegionsNd;
 
 /// Identifies a joined federate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -41,72 +51,51 @@ struct Federate {
     mailbox: VecDeque<Notification>,
 }
 
-/// Dense storage of one side's regions with stable handles.
-struct SideStore {
-    regions: RegionsNd,
-    owner: Vec<FederateId>,
-    /// dense index -> handle id
-    handle_of: Vec<u32>,
-    /// handle id -> dense index (None = deleted)
-    index_of: Vec<Option<u32>>,
+/// One side's registered regions, keyed by handle id (the same key
+/// space the session indexes use — handles never need translation).
+struct RegionTable {
+    records: Vec<Option<(RegionSpec, FederateId)>>,
+    live: usize,
 }
 
-impl SideStore {
-    fn new(d: usize) -> Self {
+impl RegionTable {
+    fn new() -> Self {
         Self {
-            regions: RegionsNd::new(d),
-            owner: Vec::new(),
-            handle_of: Vec::new(),
-            index_of: Vec::new(),
+            records: Vec::new(),
+            live: 0,
         }
     }
 
-    fn len(&self) -> usize {
-        self.regions.len()
+    fn insert(&mut self, spec: RegionSpec, owner: FederateId) -> u32 {
+        let id = self.records.len() as u32;
+        self.records.push(Some((spec, owner)));
+        self.live += 1;
+        id
     }
 
-    fn insert(&mut self, spec: &RegionSpec, owner: FederateId) -> u32 {
-        let handle_id = self.index_of.len() as u32;
-        let dense = self.regions.len() as u32;
-        self.regions.push(&spec.to_intervals());
-        self.owner.push(owner);
-        self.handle_of.push(handle_id);
-        self.index_of.push(Some(dense));
-        handle_id
+    fn get(&self, id: u32) -> Result<&(RegionSpec, FederateId)> {
+        self.records
+            .get(id as usize)
+            .and_then(|r| r.as_ref())
+            .with_context(|| format!("region handle {id} is not registered"))
     }
 
-    fn dense(&self, handle_id: u32) -> Result<usize> {
-        self.index_of
-            .get(handle_id as usize)
-            .copied()
-            .flatten()
-            .map(|i| i as usize)
-            .with_context(|| format!("region handle {handle_id} is not registered"))
-    }
-
-    /// Swap-remove, fixing up the displaced region's handle mapping.
-    fn delete(&mut self, handle_id: u32) -> Result<()> {
-        let i = self.dense(handle_id)?;
-        let last = self.regions.len() - 1;
-        for dim in self.regions.dims.iter_mut() {
-            dim.lo.swap_remove(i);
-            dim.hi.swap_remove(i);
+    fn set_spec(&mut self, id: u32, spec: RegionSpec) -> Result<()> {
+        match self.records.get_mut(id as usize).and_then(|r| r.as_mut()) {
+            Some(rec) => {
+                rec.0 = spec;
+                Ok(())
+            }
+            None => bail!("region handle {id} is not registered"),
         }
-        self.owner.swap_remove(i);
-        let moved_handle = self.handle_of[last];
-        self.handle_of.swap_remove(i);
-        if i <= last && i < self.handle_of.len() {
-            self.index_of[moved_handle as usize] = Some(i as u32);
-        }
-        self.index_of[handle_id as usize] = None;
-        Ok(())
     }
 
-    fn modify(&mut self, handle_id: u32, spec: &RegionSpec) -> Result<()> {
-        let i = self.dense(handle_id)?;
-        for (k, iv) in spec.to_intervals().into_iter().enumerate() {
-            self.regions.dims[k].set(i, iv);
+    fn remove(&mut self, id: u32) -> Result<()> {
+        let taken = self.records.get_mut(id as usize).and_then(|slot| slot.take());
+        if taken.is_none() {
+            bail!("region handle {id} is not registered");
         }
+        self.live -= 1;
         Ok(())
     }
 }
@@ -116,15 +105,15 @@ pub struct DdmService {
     space: RoutingSpace,
     engine: DdmEngine,
     federates: Vec<Federate>,
-    subs: SideStore,
-    upds: SideStore,
-    /// Dynamic index over dimension 0 of the subscriptions (publish
-    /// path), keyed by subscription **handle id** — stable across
-    /// swap-removal, unlike dense indices.
-    sub_index: Box<dyn DynamicMatcher>,
+    subs: RegionTable,
+    upds: RegionTable,
+    /// The epoch-based incremental matching state. Every region op is
+    /// staged here (keyed by handle id); reads commit the epoch first.
+    session: DdmSession,
     /// Counters.
     pub notifications_routed: u64,
     pub matches_run: u64,
+    pub epochs_committed: u64,
 }
 
 impl DdmService {
@@ -133,19 +122,19 @@ impl DdmService {
         Self::with_engine(space, DdmEngine::default())
     }
 
-    /// Service running every match on the given engine.
+    /// Service running on the given engine's pool and session knobs.
     pub fn with_engine(space: RoutingSpace, engine: DdmEngine) -> Self {
-        let d = space.d().max(1);
-        let sub_index = engine.dynamic();
+        let session = engine.session(space.d().max(1));
         Self {
             space,
             engine,
             federates: Vec::new(),
-            subs: SideStore::new(d),
-            upds: SideStore::new(d),
-            sub_index,
+            subs: RegionTable::new(),
+            upds: RegionTable::new(),
+            session,
             notifications_routed: 0,
             matches_run: 0,
+            epochs_committed: 0,
         }
     }
 
@@ -157,12 +146,18 @@ impl DdmService {
         &self.engine
     }
 
+    /// The underlying incremental session (epoch counter, retained
+    /// pair set, staged-op count).
+    pub fn session(&self) -> &DdmSession {
+        &self.session
+    }
+
     pub fn n_subscriptions(&self) -> usize {
-        self.subs.len()
+        self.subs.live
     }
 
     pub fn n_updates(&self) -> usize {
-        self.upds.len()
+        self.upds.live
     }
 
     // ---- federates -------------------------------------------------------
@@ -194,7 +189,7 @@ impl DdmService {
             .map_or(0, |f| f.mailbox.len())
     }
 
-    // ---- region registration ----------------------------------------------
+    // ---- region registration (staged ops) ----------------------------------
 
     pub fn register(
         &mut self,
@@ -206,25 +201,34 @@ impl DdmService {
         if fed.0 as usize >= self.federates.len() {
             bail!("federate {} has not joined", fed.0);
         }
-        let store = match kind {
-            RegionKind::Subscription => &mut self.subs,
-            RegionKind::Update => &mut self.upds,
+        let ivs = spec.to_intervals();
+        let id = match kind {
+            RegionKind::Subscription => {
+                let id = self.subs.insert(spec.clone(), fed);
+                self.session.upsert_subscription(id, &ivs);
+                id
+            }
+            RegionKind::Update => {
+                let id = self.upds.insert(spec.clone(), fed);
+                self.session.upsert_update(id, &ivs);
+                id
+            }
         };
-        let id = store.insert(spec, fed);
-        if kind == RegionKind::Subscription {
-            self.sub_index.insert(id, dim0(spec));
-        }
         Ok(RegionHandle { kind, id })
     }
 
     pub fn modify(&mut self, handle: RegionHandle, spec: &RegionSpec) -> Result<()> {
         self.space.validate_ranges(&spec.ranges)?;
+        let ivs = spec.to_intervals();
         match handle.kind {
             RegionKind::Subscription => {
-                self.subs.modify(handle.id, spec)?;
-                self.sub_index.modify(handle.id, dim0(spec));
+                self.subs.set_spec(handle.id, spec.clone())?;
+                self.session.upsert_subscription(handle.id, &ivs);
             }
-            RegionKind::Update => self.upds.modify(handle.id, spec)?,
+            RegionKind::Update => {
+                self.upds.set_spec(handle.id, spec.clone())?;
+                self.session.upsert_update(handle.id, &ivs);
+            }
         }
         Ok(())
     }
@@ -232,32 +236,52 @@ impl DdmService {
     pub fn delete(&mut self, handle: RegionHandle) -> Result<()> {
         match handle.kind {
             RegionKind::Subscription => {
-                self.subs.delete(handle.id)?;
-                self.sub_index.remove(handle.id);
+                self.subs.remove(handle.id)?;
+                self.session.remove_subscription(handle.id);
             }
-            RegionKind::Update => self.upds.delete(handle.id)?,
+            RegionKind::Update => {
+                self.upds.remove(handle.id)?;
+                self.session.remove_update(handle.id);
+            }
         }
         Ok(())
     }
 
-    // ---- matching ----------------------------------------------------------
+    // ---- epochs and matching ------------------------------------------------
 
-    /// Full match on the injected engine: every overlapping
-    /// (subscription, update) handle pair.
+    /// Commit the staged epoch: apply all batched region ops and return
+    /// the intersection delta. The diff's keys ARE region handle ids
+    /// (subscription id, update id).
+    pub fn commit(&mut self) -> MatchDiff {
+        self.epochs_committed += 1;
+        self.session.commit()
+    }
+
+    /// Apply staged ops so reads see current state — WITHOUT closing
+    /// the epoch: the accumulated churn stays queued, so an interleaved
+    /// read never swallows the diff a later [`commit`](Self::commit) /
+    /// [`notify_new_matches`](Self::notify_new_matches) reports.
+    fn sync(&mut self) {
+        self.session.flush();
+    }
+
+    /// Every overlapping (subscription, update) handle pair — read from
+    /// the session's retained pair set in O(K), never re-matched.
     pub fn match_all(&mut self) -> Vec<(RegionHandle, RegionHandle)> {
+        self.sync();
         self.matches_run += 1;
-        self.engine
-            .pairs_nd(&self.subs.regions, &self.upds.regions)
+        self.session
+            .pairs()
             .into_iter()
-            .map(|(si, uj)| {
+            .map(|(s, u)| {
                 (
                     RegionHandle {
                         kind: RegionKind::Subscription,
-                        id: self.subs.handle_of[si as usize],
+                        id: s,
                     },
                     RegionHandle {
                         kind: RegionKind::Update,
-                        id: self.upds.handle_of[uj as usize],
+                        id: u,
                     },
                 )
             })
@@ -265,62 +289,75 @@ impl DdmService {
     }
 
     /// Subscriptions overlapping one update region (the publish path):
-    /// dimension-0 candidates from the engine's dynamic index,
-    /// filtered on the remaining dimensions (§3's dynamic usage).
+    /// an O(K_u) read of the session's retained pair set.
     pub fn overlapping_subscriptions(&mut self, update: RegionHandle) -> Result<Vec<RegionHandle>> {
         if update.kind != RegionKind::Update {
             bail!("overlapping_subscriptions takes an update handle");
         }
-        let uj = self.upds.dense(update.id)?;
-        let q0 = self.upds.regions.dims[0].get(uj);
-        let mut keys = Vec::new();
-        let ctx = self.engine.ctx();
-        self.sub_index.query(&ctx, q0, &mut keys);
-        let mut out = Vec::new();
-        for key in keys {
-            let si = self.subs.dense(key)?;
-            let ok = (1..self.subs.regions.d()).all(|k| {
-                self.subs.regions.dims[k]
-                    .get(si)
-                    .intersects(&self.upds.regions.dims[k].get(uj))
-            });
-            if ok {
-                out.push(RegionHandle {
-                    kind: RegionKind::Subscription,
-                    id: key,
-                });
-            }
-        }
-        Ok(out)
+        self.sync();
+        self.upds.get(update.id)?;
+        Ok(self
+            .session
+            .subscriptions_of(update.id)
+            .into_iter()
+            .map(|id| RegionHandle {
+                kind: RegionKind::Subscription,
+                id,
+            })
+            .collect())
     }
 
     /// Publish an update: route `payload` to every federate owning an
     /// overlapping subscription (at-most-once per overlapping region).
     pub fn publish(&mut self, update: RegionHandle, payload: u64) -> Result<usize> {
         let targets = self.overlapping_subscriptions(update)?;
-        let from = self.upds.owner[self.upds.dense(update.id)?];
+        let from = self.upds.get(update.id)?.1;
         let mut delivered = 0;
         for sub in targets {
-            let dense = self.subs.dense(sub.id)?;
-            let owner = self.subs.owner[dense];
-            self.federates[owner.0 as usize].mailbox.push_back(Notification {
-                from,
-                update,
-                subscription: sub,
-                payload,
-            });
+            let owner = self.subs.get(sub.id)?.1;
+            self.federates[owner.0 as usize]
+                .mailbox
+                .push_back(Notification {
+                    from,
+                    update,
+                    subscription: sub,
+                    payload,
+                });
             delivered += 1;
         }
         self.notifications_routed += delivered as u64;
         Ok(delivered)
     }
-}
 
-/// Dimension-0 interval of a region spec (the publish-path index key
-/// space; remaining dimensions are filtered at query time).
-fn dim0(spec: &RegionSpec) -> Interval {
-    let (lo, hi) = spec.ranges[0];
-    Interval::new(lo as f64, hi as f64)
+    /// Commit the epoch and deliver one notification per **newly
+    /// appeared** pair to the subscription's owner — match discovery
+    /// driven literally by the epoch's [`MatchDiff`], instead of
+    /// re-matching and re-notifying the whole pair set.
+    pub fn notify_new_matches(&mut self, payload: u64) -> Result<usize> {
+        let diff = self.commit();
+        let mut delivered = 0usize;
+        for &(s, u) in &diff.added {
+            let owner = self.subs.get(s)?.1;
+            let from = self.upds.get(u)?.1;
+            self.federates[owner.0 as usize]
+                .mailbox
+                .push_back(Notification {
+                    from,
+                    update: RegionHandle {
+                        kind: RegionKind::Update,
+                        id: u,
+                    },
+                    subscription: RegionHandle {
+                        kind: RegionKind::Subscription,
+                        id: s,
+                    },
+                    payload,
+                });
+            delivered += 1;
+        }
+        self.notifications_routed += delivered as u64;
+        Ok(delivered)
+    }
 }
 
 #[cfg(test)]
@@ -397,7 +434,7 @@ mod tests {
     }
 
     #[test]
-    fn delete_with_swap_keeps_handles_stable() {
+    fn delete_keeps_other_handles_stable() {
         let (mut svc, veh, lights) = two_fed_service();
         let spec = |x: u64| RegionSpec::rect((x, x + 10), (0, 10));
         let s0 = svc.register(veh, RegionKind::Subscription, &spec(0)).unwrap();
@@ -406,8 +443,9 @@ mod tests {
         let u = svc
             .register(lights, RegionKind::Update, &RegionSpec::rect((205, 215), (0, 10)))
             .unwrap();
-        svc.delete(s0).unwrap(); // swap-remove displaces s2
+        svc.delete(s0).unwrap();
         assert_eq!(svc.overlapping_subscriptions(u).unwrap(), vec![s2]);
+        assert_eq!(svc.n_subscriptions(), 2);
         svc.delete(s2).unwrap();
         assert_eq!(svc.overlapping_subscriptions(u).unwrap(), vec![]);
         // s1 still valid.
@@ -415,6 +453,7 @@ mod tests {
         assert_eq!(svc.overlapping_subscriptions(u).unwrap(), vec![s1]);
         // deleted handles error.
         assert!(svc.modify(s0, &spec(0)).is_err());
+        assert!(svc.delete(s0).is_err());
     }
 
     #[test]
@@ -438,14 +477,99 @@ mod tests {
         assert_eq!(svc.notifications_routed, 4);
     }
 
+    /// The service's epoch commit reports exactly the pair delta, and
+    /// repeated commits of an untouched service are empty.
+    #[test]
+    fn epoch_commit_reports_match_diffs() {
+        let (mut svc, veh, lights) = two_fed_service();
+        let s = svc
+            .register(veh, RegionKind::Subscription, &RegionSpec::rect((0, 100), (0, 100)))
+            .unwrap();
+        let u = svc
+            .register(lights, RegionKind::Update, &RegionSpec::rect((50, 150), (50, 150)))
+            .unwrap();
+        let d1 = svc.commit();
+        assert_eq!(d1.added, vec![(s.id, u.id)]);
+        assert!(d1.removed.is_empty());
+
+        svc.modify(s, &RegionSpec::rect((500, 600), (0, 100))).unwrap();
+        let d2 = svc.commit();
+        assert_eq!(d2.removed, vec![(s.id, u.id)]);
+        assert!(d2.added.is_empty());
+
+        let d3 = svc.commit();
+        assert!(d3.is_empty());
+        assert_eq!(svc.session().epoch(), 3);
+        assert_eq!(svc.epochs_committed, 3);
+    }
+
+    /// Reads interleaved between staging and commit must NOT swallow
+    /// the epoch diff (sync flushes, it does not commit).
+    #[test]
+    fn reads_do_not_swallow_epoch_diffs() {
+        let (mut svc, veh, lights) = two_fed_service();
+        let s = svc
+            .register(veh, RegionKind::Subscription, &RegionSpec::rect((0, 100), (0, 100)))
+            .unwrap();
+        let u = svc
+            .register(lights, RegionKind::Update, &RegionSpec::rect((50, 150), (50, 150)))
+            .unwrap();
+        // A full read between staging and commit…
+        assert_eq!(svc.match_all().len(), 1);
+        // …must leave the diff intact.
+        let d = svc.commit();
+        assert_eq!(d.added, vec![(s.id, u.id)]);
+
+        // Same through the diff-driven notification path, with a
+        // publish-path read interleaved.
+        svc.modify(u, &RegionSpec::rect((500, 600), (500, 600))).unwrap();
+        assert_eq!(svc.overlapping_subscriptions(u).unwrap(), vec![]);
+        assert_eq!(svc.notify_new_matches(8).unwrap(), 0); // removal only
+        svc.modify(u, &RegionSpec::rect((50, 150), (50, 150))).unwrap();
+        assert_eq!(svc.match_all().len(), 1); // read interleaves again
+        assert_eq!(svc.notify_new_matches(9).unwrap(), 1, "still delivered");
+        assert_eq!(svc.poll(veh).len(), 1);
+    }
+
+    /// Diff-driven match notifications: only newly appeared pairs hit
+    /// the mailboxes — repeats and removals deliver nothing.
+    #[test]
+    fn notify_new_matches_is_diff_driven() {
+        let (mut svc, veh, lights) = two_fed_service();
+        let s = svc
+            .register(veh, RegionKind::Subscription, &RegionSpec::rect((0, 100), (0, 100)))
+            .unwrap();
+        let u = svc
+            .register(lights, RegionKind::Update, &RegionSpec::rect((50, 150), (50, 150)))
+            .unwrap();
+        assert_eq!(svc.notify_new_matches(1).unwrap(), 1);
+        let mail = svc.poll(veh);
+        assert_eq!(mail.len(), 1);
+        assert_eq!(mail[0].subscription, s);
+        assert_eq!(mail[0].update, u);
+
+        // Nothing changed: nothing delivered.
+        assert_eq!(svc.notify_new_matches(2).unwrap(), 0);
+
+        // Pair removed: still nothing delivered (only additions notify).
+        svc.modify(u, &RegionSpec::rect((500, 600), (500, 600))).unwrap();
+        assert_eq!(svc.notify_new_matches(3).unwrap(), 0);
+
+        // Pair re-appears: one delivery again.
+        svc.modify(u, &RegionSpec::rect((50, 150), (50, 150))).unwrap();
+        assert_eq!(svc.notify_new_matches(4).unwrap(), 1);
+        assert_eq!(svc.poll(veh).len(), 1);
+    }
+
     /// The acceptance scenario: the same HLA notification workload runs
-    /// under engines with different matchers (ITM's native index plus
-    /// three other algorithm families and the adaptive engine) and
-    /// produces identical notifications. Swapping the algorithm is
+    /// under engines with different matchers and produces identical
+    /// notifications. Swapping the algorithm (or session knobs) is
     /// purely an `EngineBuilder` change.
     #[test]
     fn notification_scenario_is_engine_invariant() {
-        fn run_scenario(engine: DdmEngine) -> (Vec<(RegionHandle, RegionHandle)>, Vec<Notification>) {
+        fn run_scenario(
+            engine: DdmEngine,
+        ) -> (Vec<(RegionHandle, RegionHandle)>, Vec<Notification>) {
             let mut svc = DdmService::with_engine(RoutingSpace::uniform(2, 10_000), engine);
             let watchers = svc.join("watchers");
             let movers = svc.join("movers");
@@ -502,9 +626,20 @@ mod tests {
             assert_eq!(pairs, ref_pairs, "{}", algo.name());
             assert_eq!(mail, ref_mail, "{}", algo.name());
         }
-        // And the adaptive engine routes the same notifications too.
+        // The adaptive engine routes the same notifications…
         let auto = DdmEngine::builder().auto().threads(3).build();
         let (pairs, mail) = run_scenario(auto);
+        assert_eq!(pairs, ref_pairs);
+        assert_eq!(mail, ref_mail);
+        // …and so do different session configurations (eager batching,
+        // forced parallel apply, different retention set).
+        let tuned = DdmEngine::builder()
+            .threads(3)
+            .batch_threshold(8)
+            .parallel_cutoff(1)
+            .session_set_impl(crate::sets::SetImpl::Bit)
+            .build();
+        let (pairs, mail) = run_scenario(tuned);
         assert_eq!(pairs, ref_pairs);
         assert_eq!(mail, ref_mail);
     }
@@ -547,5 +682,52 @@ mod tests {
             assert_eq!(w[0], w[1]);
         }
         assert!(!handles[0].is_empty());
+    }
+
+    /// match_all answers from the retained pair set and agrees with a
+    /// fresh static match over the same live regions.
+    #[test]
+    fn match_all_agrees_with_static_rematch() {
+        let (mut svc, veh, _) = two_fed_service();
+        let mut rng = crate::prng::Rng::new(0x117);
+        let mut handles = Vec::new();
+        for _ in 0..50 {
+            let x = rng.below(900);
+            let y = rng.below(900);
+            let spec = RegionSpec::rect((x, x + 80), (y, y + 80));
+            handles.push(svc.register(veh, RegionKind::Subscription, &spec).unwrap());
+        }
+        for _ in 0..40 {
+            let x = rng.below(900);
+            let y = rng.below(900);
+            svc.register(veh, RegionKind::Update, &RegionSpec::rect((x, x + 60), (y, y + 60)))
+                .unwrap();
+        }
+        for &h in handles.iter().take(10) {
+            svc.delete(h).unwrap();
+        }
+        let pairs = svc.match_all();
+        // Static reference: match the live specs directly.
+        let mut want = Vec::new();
+        for (si, srec) in svc.subs.records.iter().enumerate() {
+            let Some((sspec, _)) = srec else { continue };
+            for (ui, urec) in svc.upds.records.iter().enumerate() {
+                let Some((uspec, _)) = urec else { continue };
+                if sspec.overlaps(uspec) {
+                    want.push((
+                        RegionHandle {
+                            kind: RegionKind::Subscription,
+                            id: si as u32,
+                        },
+                        RegionHandle {
+                            kind: RegionKind::Update,
+                            id: ui as u32,
+                        },
+                    ));
+                }
+            }
+        }
+        assert_eq!(pairs, want);
+        assert!(!pairs.is_empty());
     }
 }

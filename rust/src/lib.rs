@@ -27,12 +27,48 @@
 //! assert_eq!(engine.pairs_1d(&subs, &upds), vec![(0, 0)]);
 //! ```
 //!
+//! ## Incremental matching: sessions and `MatchDiff`
+//!
+//! Dynamic workloads should not re-match from scratch. A
+//! [`session::DdmSession`] (from [`engine::DdmEngine::session`])
+//! stages batched region churn and commits **epochs**; each commit
+//! applies the batch to per-dimension interval trees (paper §3's
+//! dynamic interval management, all dimensions indexed) and returns a
+//! [`session::MatchDiff`] — only the intersection pairs that appeared
+//! or disappeared:
+//!
+//! ```
+//! use ddm::core::Interval;
+//! use ddm::engine::DdmEngine;
+//!
+//! let engine = DdmEngine::builder().threads(2).build();
+//! let mut sess = engine.session(1);
+//! sess.upsert_subscription(0, &[Interval::new(0.0, 2.0)]);
+//! sess.upsert_update(7, &[Interval::new(1.0, 3.0)]);
+//! let diff = sess.commit();
+//! assert_eq!(diff.added, vec![(0, 7)]);
+//! assert!(diff.removed.is_empty());
+//!
+//! sess.upsert_update(7, &[Interval::new(10.0, 12.0)]); // moved away
+//! let diff = sess.commit();
+//! assert_eq!(diff.removed, vec![(0, 7)]);
+//! assert!(sess.pairs().is_empty());
+//! ```
+//!
+//! Prefer sessions over repeated [`engine::DdmEngine::pairs_nd`]
+//! whenever a minority of regions changes between reads; prefer the
+//! static path for one-shot matches or when nearly everything moves
+//! every step (`benches/abl_session.rs` measures the crossover).
+//!
 //! The crate contains:
 //!
 //! * [`engine`] — the unified matching API: the [`engine::Matcher`]
 //!   trait all algorithms implement, the [`engine::DynamicMatcher`]
 //!   incremental-index extension, and the [`engine::DdmEngine`] /
 //!   [`engine::EngineBuilder`] entry points.
+//! * [`session`] — epoch-based incremental matching: batched region
+//!   churn staged into [`session::DdmSession`], applied in parallel,
+//!   reported as [`session::MatchDiff`] intersection deltas.
 //! * [`core`] — intervals, d-rectangles, regions and the d-dimensional
 //!   reduction of the region matching problem (paper §2).
 //! * [`exec`] — the shared-memory parallel runtime the paper builds on
@@ -68,6 +104,7 @@
 pub mod core;
 pub mod engine;
 pub mod error;
+pub mod session;
 pub mod exec;
 pub mod sets;
 pub mod algos;
@@ -81,6 +118,7 @@ pub mod config;
 pub mod prng;
 
 pub use engine::{DdmEngine, DynamicMatcher, EngineBuilder, ExecCtx, Matcher};
+pub use session::{DdmSession, MatchDiff, SessionParams};
 
 /// Crate-wide result type.
 pub type Result<T> = error::Result<T>;

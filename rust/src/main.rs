@@ -3,12 +3,16 @@
 //! Subcommands:
 //!   ddm match      run one matching job and report K + wall-clock
 //!   ddm xla-match  same, on the AOT-compiled XLA backend
+//!   ddm replay     replay epochs of region churn (session diffs or
+//!                  full rebuild per epoch)
 //!   ddm serve      run the coordinator service on a scripted scenario
 //!   ddm info       host/Table-1 report + artifact status
 //!
 //! Examples:
 //!   ddm match --algo psbm --n 1e6 --alpha 100 --threads 8 --set bit
 //!   ddm match --algo gbm --workload koln --scale 0.1 --ncells 3000
+//!   ddm replay --n 50k --epochs 10 --churn 0.05 --mode session --verify
+//!   ddm replay --workload koln --scale 0.05 --mode rebuild
 //!   ddm xla-match --n 4096 --alpha 10
 //!   ddm serve --config examples/service.toml
 
@@ -25,7 +29,7 @@ use ddm::workload::{alpha_workload, AlphaParams};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: ddm <match|xla-match|serve|info> [options]\n\
+        "usage: ddm <match|xla-match|replay|serve|info> [options]\n\
          options are documented in rust/src/main.rs and README.md"
     );
     std::process::exit(2)
@@ -88,7 +92,9 @@ fn cmd_xla_match(args: &Args) {
         if ddm::runtime::xla_enabled() {
             eprintln!("artifacts missing: run `make artifacts` first");
         } else {
-            eprintln!("XLA backend unavailable: rebuild with `--features xla` (and run `make artifacts`)");
+            eprintln!(
+                "XLA backend unavailable: rebuild with `--features xla` (and run `make artifacts`)"
+            );
         }
         std::process::exit(1);
     }
@@ -104,6 +110,138 @@ fn cmd_xla_match(args: &Args) {
         ddm::bench::stats::fmt_secs(t1.elapsed().as_secs_f64()),
         ddm::bench::stats::fmt_secs(t_load.as_secs_f64()),
     );
+}
+
+/// Replay epochs of region churn over a workload, either on a
+/// `DdmSession` (staged batch + `MatchDiff` per epoch — the tentpole
+/// incremental path) or by full re-match per epoch (`--mode rebuild`,
+/// the baseline the session replaces). Both modes run the identical
+/// deterministic move script, so their reported per-epoch pair churn
+/// can be compared directly.
+fn cmd_replay(args: &Args) {
+    use ddm::workload::churn::{diff_pair_counts, relocate, MoveScript};
+
+    let threads: usize = args.opt("threads", 4usize);
+    let epochs: usize = args.opt("epochs", 10usize);
+    let churn: f64 = args.opt("churn", 0.05f64);
+    let mode = args.get("mode").unwrap_or("session").to_string();
+    let seed: u64 = args.opt("seed", 42u64);
+
+    let (mut subs, mut upds, desc) = match args.get("workload").unwrap_or("alpha") {
+        "koln" => {
+            let p = KolnParams::default().scaled(args.opt("scale", 0.05f64));
+            let (s, u) = koln_workload(seed, &p);
+            (s, u, format!("koln positions={}", p.positions))
+        }
+        _ => {
+            let p = AlphaParams {
+                n_total: args.size("n", 50_000),
+                alpha: args.opt("alpha", 100.0),
+                space: args.opt("space", 1e6),
+            };
+            let (s, u) = alpha_workload(seed, &p);
+            (s, u, format!("alpha N={} α={}", p.n_total, p.alpha))
+        }
+    };
+    let space_hi = subs
+        .bounds()
+        .map(|b| b.hi)
+        .unwrap_or(1e6)
+        .max(upds.bounds().map(|b| b.hi).unwrap_or(0.0));
+    let n_regions = subs.len() + upds.len();
+    let moves_per_epoch = ((n_regions as f64) * churn).ceil().max(1.0) as usize;
+    println!(
+        "replay: mode={mode} epochs={epochs} churn={churn} ({moves_per_epoch} moves/epoch) \
+         threads={threads} workload=[{desc}]"
+    );
+
+    let engine = DdmEngine::builder()
+        .algo_str(args.get("algo").unwrap_or("psbm"))
+        .unwrap_or_else(|e| panic!("{e}"))
+        .threads(threads)
+        .build();
+    // Both modes replay the identical deterministic move script.
+    let mut script = MoveScript::new(seed ^ 0xC0FFEE);
+    let (mut tot_added, mut tot_removed) = (0usize, 0usize);
+    match mode.as_str() {
+        "session" => {
+            let mut sess = engine.session(1);
+            let t0 = Instant::now();
+            sess.load_dense_1d(&subs, &upds);
+            let d0 = sess.commit();
+            println!(
+                "epoch 0: {} initial pairs in {}",
+                d0.added.len(),
+                ddm::bench::stats::fmt_secs(t0.elapsed().as_secs_f64())
+            );
+            let t1 = Instant::now();
+            for e in 1..=epochs {
+                for _ in 0..moves_per_epoch {
+                    let (sub_side, idx, frac) = script.next(subs.len(), upds.len());
+                    if sub_side {
+                        let iv = relocate(&mut subs, idx, frac, space_hi);
+                        sess.upsert_subscription(idx as u32, &[iv]);
+                    } else {
+                        let iv = relocate(&mut upds, idx, frac, space_hi);
+                        sess.upsert_update(idx as u32, &[iv]);
+                    }
+                }
+                let d = sess.commit();
+                tot_added += d.added.len();
+                tot_removed += d.removed.len();
+                println!("epoch {e}: +{} -{} pairs", d.added.len(), d.removed.len());
+            }
+            let dt = t1.elapsed().as_secs_f64();
+            println!(
+                "session replay: {} pairs live, +{tot_added} -{tot_removed} churned, \
+                 {} per epoch",
+                sess.n_pairs(),
+                ddm::bench::stats::fmt_secs(dt / epochs.max(1) as f64)
+            );
+            if args.flag("verify") {
+                let want = engine.pairs_1d(&subs, &upds);
+                assert_eq!(sess.pairs(), want, "session state diverged from static match");
+                println!("verify: session pair set == fresh static match ({} pairs)", want.len());
+            }
+        }
+        "rebuild" => {
+            let t0 = Instant::now();
+            let mut prev = engine.pairs_1d(&subs, &upds);
+            println!(
+                "epoch 0: {} initial pairs in {}",
+                prev.len(),
+                ddm::bench::stats::fmt_secs(t0.elapsed().as_secs_f64())
+            );
+            let t1 = Instant::now();
+            for e in 1..=epochs {
+                for _ in 0..moves_per_epoch {
+                    let (sub_side, idx, frac) = script.next(subs.len(), upds.len());
+                    if sub_side {
+                        relocate(&mut subs, idx, frac, space_hi);
+                    } else {
+                        relocate(&mut upds, idx, frac, space_hi);
+                    }
+                }
+                let cur = engine.pairs_1d(&subs, &upds);
+                let (added, removed) = diff_pair_counts(&prev, &cur);
+                tot_added += added;
+                tot_removed += removed;
+                println!("epoch {e}: +{added} -{removed} pairs");
+                prev = cur;
+            }
+            let dt = t1.elapsed().as_secs_f64();
+            println!(
+                "rebuild replay: {} pairs live, +{tot_added} -{tot_removed} churned, \
+                 {} per epoch",
+                prev.len(),
+                ddm::bench::stats::fmt_secs(dt / epochs.max(1) as f64)
+            );
+        }
+        other => {
+            eprintln!("unknown replay mode '{other}' (session|rebuild)");
+            std::process::exit(2);
+        }
+    }
 }
 
 fn cmd_serve(args: &Args) {
@@ -194,6 +332,7 @@ fn main() {
     match cmd.as_str() {
         "match" => cmd_match(&args),
         "xla-match" => cmd_xla_match(&args),
+        "replay" => cmd_replay(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
         _ => usage(),

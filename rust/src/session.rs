@@ -1,0 +1,872 @@
+//! Epoch-based incremental matching sessions: batched region churn
+//! in, intersection *diffs* out.
+//!
+//! [`DdmSession`] is the dynamic counterpart of the static
+//! [`DdmEngine`](crate::engine::DdmEngine) matching entry points, and
+//! the system-scale form of the paper's §3 dynamic interval
+//! management. A session owns the full N-D two-tree state — one keyed
+//! interval tree ([`TreeIndex`](crate::algos::dynamic::TreeIndex)) per
+//! dimension per side, not a dimension-0 index plus dense-array
+//! filtering — plus a retained pair set backed by the pluggable
+//! [`sets`](crate::sets) layer ([`DynSet`]).
+//!
+//! Callers stage region churn
+//! ([`upsert_subscription`](DdmSession::upsert_subscription),
+//! [`upsert_update`](DdmSession::upsert_update),
+//! [`remove_subscription`](DdmSession::remove_subscription), …) and
+//! [`commit`](DdmSession::commit) an **epoch**. Commit applies the
+//! coalesced batch to the `2d` per-dimension trees (in parallel on the
+//! engine's [`exec`](crate::exec) pool once the batch is large
+//! enough), recomputes the overlap sets of the *touched* regions only
+//! (output-sensitively, via opposite-tree queries), updates the
+//! retained pair set, and returns a [`MatchDiff`] — exactly the pairs
+//! that appeared and disappeared since the previous epoch. Nothing is
+//! ever re-matched from scratch and nothing already known is
+//! re-reported.
+//!
+//! Per-epoch cost with `t` touched regions: `O(t·d·lg n)` tree writes,
+//! `O(Σ_t K)` opposite-tree queries and `O(|diff|)` retained-set
+//! updates — against the `O(full re-match + full re-report)` of the
+//! rebuild path. `benches/abl_session.rs` measures the crossover over
+//! churn rates; at low churn (≤10% of regions touched per epoch) the
+//! diff path wins by a wide margin.
+//!
+//! Sessions are configured through the engine builder
+//! ([`session_set_impl`](crate::engine::EngineBuilder::session_set_impl),
+//! [`batch_threshold`](crate::engine::EngineBuilder::batch_threshold),
+//! [`parallel_cutoff`](crate::engine::EngineBuilder::parallel_cutoff))
+//! and created by [`DdmEngine::session`](crate::engine::DdmEngine::session).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::algos::dynamic::{Side, TreeIndex};
+use crate::core::interval::Interval;
+use crate::core::sink::{pack_pair, unpack_pair, PairVec};
+use crate::core::{Regions1D, RegionsNd};
+use crate::exec::ThreadPool;
+use crate::sets::{DynSet, SetImpl};
+
+/// Session tuning knobs (set through the
+/// [`EngineBuilder`](crate::engine::EngineBuilder)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionParams {
+    /// Backing store of the retained pair set (one [`DynSet`] of
+    /// opposite-side keys per region, both directions). Default
+    /// [`SetImpl::Hash`]: the Θ(universe)-per-set implementations
+    /// (`Bit`, `Sparse`) only pay off when the key space is small
+    /// relative to the average overlap degree.
+    pub set_impl: SetImpl,
+    /// Auto-apply the staged batch to the indexes once this many
+    /// distinct regions are pending (ops coalesce last-write-wins per
+    /// key at stage time, so this bounds *touched regions*, and with
+    /// it commit latency, under heavy churn; `0` = apply only at
+    /// [`DdmSession::commit`]). Applying early never changes the
+    /// committed diff — intra-epoch appear/disappear pairs cancel.
+    pub batch_threshold: usize,
+    /// Minimum touched regions per batch before the apply and
+    /// recompute phases run on the worker pool instead of inline.
+    pub parallel_cutoff: usize,
+}
+
+impl Default for SessionParams {
+    fn default() -> Self {
+        Self {
+            set_impl: SetImpl::Hash,
+            batch_threshold: 4096,
+            parallel_cutoff: 64,
+        }
+    }
+}
+
+/// The intersection delta of one committed epoch: every (subscription
+/// key, update key) pair that appeared or disappeared relative to the
+/// previous epoch, each list sorted and duplicate-free.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MatchDiff {
+    /// Epoch number this diff brought the session to (first commit ⇒ 1).
+    pub epoch: u64,
+    /// Pairs that started intersecting.
+    pub added: PairVec,
+    /// Pairs that stopped intersecting.
+    pub removed: PairVec,
+}
+
+impl MatchDiff {
+    pub fn is_empty(&self) -> bool {
+        self.added.is_empty() && self.removed.is_empty()
+    }
+
+    /// Total pair churn (|added| + |removed|).
+    pub fn churn(&self) -> usize {
+        self.added.len() + self.removed.len()
+    }
+}
+
+/// An epoch-based incremental matching session. See the
+/// [module docs](self) for the model and cost story.
+///
+/// Keys are caller-chosen `u32`s per side (the HLA service uses region
+/// handle ids). Upserting an existing key replaces its rectangle;
+/// removing an absent key is a no-op.
+pub struct DdmSession {
+    d: usize,
+    pool: Arc<ThreadPool>,
+    nthreads: usize,
+    params: SessionParams,
+    /// One keyed interval tree per dimension, subscription side.
+    sub_dims: Vec<TreeIndex>,
+    /// One keyed interval tree per dimension, update side.
+    upd_dims: Vec<TreeIndex>,
+    /// Retained pair set: subscription key → intersecting update keys.
+    sub_pairs: HashMap<u32, DynSet>,
+    /// Reverse direction: update key → intersecting subscription keys
+    /// (keeps update-side removal output-sensitive).
+    upd_pairs: HashMap<u32, DynSet>,
+    n_pairs: usize,
+    /// Universe hint for new [`DynSet`]s (max key seen + 1).
+    key_hint: usize,
+    /// Staged ops, coalesced last-write-wins at stage time:
+    /// key → `Some(rect)` upsert / `None` remove, per side.
+    pending_subs: BTreeMap<u32, Option<Vec<Interval>>>,
+    pending_upds: BTreeMap<u32, Option<Vec<Interval>>>,
+    /// Pair churn accumulated by intra-epoch applies, packed; an
+    /// appear/disappear of the same pair within one epoch cancels.
+    acc_added: HashSet<u64>,
+    acc_removed: HashSet<u64>,
+    epoch: u64,
+}
+
+impl DdmSession {
+    /// A fresh `d`-dimensional session running batch applies on
+    /// `nthreads` workers of `pool`. Usually constructed via
+    /// [`DdmEngine::session`](crate::engine::DdmEngine::session).
+    pub fn new(d: usize, pool: Arc<ThreadPool>, nthreads: usize, params: SessionParams) -> Self {
+        assert!(d >= 1, "sessions need at least one dimension");
+        assert!(nthreads >= 1, "sessions need at least one worker");
+        Self {
+            d,
+            pool,
+            nthreads,
+            params,
+            sub_dims: (0..d).map(|_| TreeIndex::new()).collect(),
+            upd_dims: (0..d).map(|_| TreeIndex::new()).collect(),
+            sub_pairs: HashMap::new(),
+            upd_pairs: HashMap::new(),
+            n_pairs: 0,
+            key_hint: 64,
+            pending_subs: BTreeMap::new(),
+            pending_upds: BTreeMap::new(),
+            acc_added: HashSet::new(),
+            acc_removed: HashSet::new(),
+            epoch: 0,
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of committed epochs.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Staged (coalesced) region ops not yet applied to the indexes.
+    pub fn pending_ops(&self) -> usize {
+        self.pending_subs.len() + self.pending_upds.len()
+    }
+
+    /// Live subscription regions (applied state).
+    pub fn n_subscriptions(&self) -> usize {
+        self.sub_dims[0].len()
+    }
+
+    /// Live update regions (applied state).
+    pub fn n_updates(&self) -> usize {
+        self.upd_dims[0].len()
+    }
+
+    /// Currently intersecting pairs (applied state).
+    pub fn n_pairs(&self) -> usize {
+        self.n_pairs
+    }
+
+    // ---- staging -----------------------------------------------------------
+
+    /// Stage an insert-or-replace of subscription region `key`.
+    pub fn upsert_subscription(&mut self, key: u32, rect: &[Interval]) {
+        self.stage(Side::Subscription, key, Some(rect.to_vec()));
+    }
+
+    /// Stage an insert-or-replace of update region `key`.
+    pub fn upsert_update(&mut self, key: u32, rect: &[Interval]) {
+        self.stage(Side::Update, key, Some(rect.to_vec()));
+    }
+
+    /// Stage removal of subscription region `key` (no-op if absent).
+    pub fn remove_subscription(&mut self, key: u32) {
+        self.stage(Side::Subscription, key, None);
+    }
+
+    /// Stage removal of update region `key` (no-op if absent).
+    pub fn remove_update(&mut self, key: u32) {
+        self.stage(Side::Update, key, None);
+    }
+
+    /// Stage a whole 1-D workload keyed by dense index (bulk ingest for
+    /// benches/replays).
+    pub fn load_dense_1d(&mut self, subs: &Regions1D, upds: &Regions1D) {
+        assert_eq!(self.d, 1, "load_dense_1d on a {}-d session", self.d);
+        for i in 0..subs.len() {
+            self.upsert_subscription(i as u32, &[subs.get(i)]);
+        }
+        for j in 0..upds.len() {
+            self.upsert_update(j as u32, &[upds.get(j)]);
+        }
+    }
+
+    /// Stage a whole d-dimensional workload keyed by dense index.
+    pub fn load_dense(&mut self, subs: &RegionsNd, upds: &RegionsNd) {
+        assert_eq!(subs.d(), self.d, "subscription dimension mismatch");
+        assert_eq!(upds.d(), self.d, "update dimension mismatch");
+        for i in 0..subs.len() {
+            self.upsert_subscription(i as u32, &subs.get(i));
+        }
+        for j in 0..upds.len() {
+            self.upsert_update(j as u32, &upds.get(j));
+        }
+    }
+
+    /// Stage one op, coalescing last-write-wins per (side, key) —
+    /// superseded rectangles are dropped at stage time, never stored.
+    fn stage(&mut self, side: Side, key: u32, op: Option<Vec<Interval>>) {
+        if let Some(rect) = &op {
+            assert_eq!(rect.len(), self.d, "rect dimension != session dimension {}", self.d);
+            self.key_hint = self.key_hint.max(key as usize + 1);
+        }
+        match side {
+            Side::Subscription => self.pending_subs.insert(key, op),
+            Side::Update => self.pending_upds.insert(key, op),
+        };
+        if self.params.batch_threshold > 0 && self.pending_ops() >= self.params.batch_threshold {
+            self.apply_pending();
+        }
+    }
+
+    // ---- committing --------------------------------------------------------
+
+    /// Apply all staged ops to the indexes **without closing the
+    /// epoch**: reads ([`pairs`](Self::pairs),
+    /// [`subscriptions_of`](Self::subscriptions_of), …) see current
+    /// state, while the accumulated churn stays queued so the next
+    /// [`commit`](Self::commit) still reports the full diff since the
+    /// last epoch. No-op when nothing is staged.
+    pub fn flush(&mut self) {
+        self.apply_pending();
+    }
+
+    /// Apply all staged ops and close the epoch, returning the
+    /// intersection delta relative to the previous epoch.
+    pub fn commit(&mut self) -> MatchDiff {
+        self.apply_pending();
+        self.epoch += 1;
+        let mut added: PairVec = self.acc_added.drain().map(unpack_pair).collect();
+        let mut removed: PairVec = self.acc_removed.drain().map(unpack_pair).collect();
+        added.sort_unstable();
+        removed.sort_unstable();
+        MatchDiff {
+            epoch: self.epoch,
+            added,
+            removed,
+        }
+    }
+
+    /// Apply the staged (already coalesced) batch: write the trees,
+    /// recompute the touched regions' overlap sets, fold the churn
+    /// into the epoch accumulator.
+    fn apply_pending(&mut self) {
+        if self.pending_subs.is_empty() && self.pending_upds.is_empty() {
+            return;
+        }
+        // Already coalesced at stage time: key → `Some(rect)` upsert /
+        // `None` remove, per side.
+        let sub_ops = std::mem::take(&mut self.pending_subs);
+        let upd_ops = std::mem::take(&mut self.pending_upds);
+        let touched_count = sub_ops.len() + upd_ops.len();
+        let par = self.nthreads > 1 && touched_count >= self.params.parallel_cutoff;
+
+        // Phase A: write the 2d per-dimension trees (each tree is an
+        // independent job; parallel over trees for big batches).
+        if par && self.d * 2 > 1 {
+            let sub_trees = std::mem::take(&mut self.sub_dims);
+            let upd_trees = std::mem::take(&mut self.upd_dims);
+            let mut jobs: Vec<Mutex<(Side, usize, TreeIndex)>> = Vec::with_capacity(self.d * 2);
+            for (k, t) in sub_trees.into_iter().enumerate() {
+                jobs.push(Mutex::new((Side::Subscription, k, t)));
+            }
+            for (k, t) in upd_trees.into_iter().enumerate() {
+                jobs.push(Mutex::new((Side::Update, k, t)));
+            }
+            let cursor = AtomicUsize::new(0);
+            let workers = self.nthreads.min(jobs.len());
+            self.pool.run(workers, |_p| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let mut slot = jobs[i].lock().unwrap();
+                let (side, k, tree) = &mut *slot;
+                let ops = match side {
+                    Side::Subscription => &sub_ops,
+                    Side::Update => &upd_ops,
+                };
+                apply_dim(tree, *k, ops);
+            });
+            for job in jobs {
+                let (side, _k, tree) = job.into_inner().unwrap();
+                match side {
+                    Side::Subscription => self.sub_dims.push(tree),
+                    Side::Update => self.upd_dims.push(tree),
+                }
+            }
+        } else {
+            for (k, tree) in self.sub_dims.iter_mut().enumerate() {
+                apply_dim(tree, k, &sub_ops);
+            }
+            for (k, tree) in self.upd_dims.iter_mut().enumerate() {
+                apply_dim(tree, k, &upd_ops);
+            }
+        }
+
+        // Phase B: recompute the post-apply overlap set of every
+        // touched region (read-only tree queries; parallel for big
+        // batches).
+        let mut touched: Vec<(Side, u32)> = Vec::with_capacity(touched_count);
+        touched.extend(sub_ops.keys().map(|&k| (Side::Subscription, k)));
+        touched.extend(upd_ops.keys().map(|&k| (Side::Update, k)));
+        let results: Vec<Vec<u32>> = if par && touched.len() > 1 {
+            let slots: Vec<Mutex<Vec<u32>>> =
+                touched.iter().map(|_| Mutex::new(Vec::new())).collect();
+            let cursor = AtomicUsize::new(0);
+            let sub_dims = &self.sub_dims;
+            let upd_dims = &self.upd_dims;
+            let workers = self.nthreads.min(touched.len());
+            self.pool.run(workers, |_p| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= touched.len() {
+                    break;
+                }
+                let (side, key) = touched[i];
+                *slots[i].lock().unwrap() = recompute(sub_dims, upd_dims, side, key);
+            });
+            slots.into_iter().map(|m| m.into_inner().unwrap()).collect()
+        } else {
+            touched
+                .iter()
+                .map(|&(side, key)| recompute(&self.sub_dims, &self.upd_dims, side, key))
+                .collect()
+        };
+
+        // Phase C: diff against the retained pair set and fold into the
+        // epoch accumulator (serial; O(|diff|) set updates).
+        let set_impl = self.params.set_impl;
+        let key_hint = self.key_hint;
+        let mut ri = 0usize;
+        for &skey in sub_ops.keys() {
+            let new_upds = &results[ri];
+            ri += 1;
+            let old = self.sub_pairs.remove(&skey);
+            let mut gone: Vec<u32> = Vec::new();
+            if let Some(o) = &old {
+                o.for_each(&mut |u| {
+                    if new_upds.binary_search(&u).is_err() {
+                        gone.push(u);
+                    }
+                });
+            }
+            let mut fresh: Vec<u32> = Vec::new();
+            for &u in new_upds {
+                let is_new = match &old {
+                    Some(o) => !o.contains(u),
+                    None => true,
+                };
+                if is_new {
+                    fresh.push(u);
+                }
+            }
+            for u in gone {
+                if let Some(set) = self.upd_pairs.get_mut(&u) {
+                    set.remove(skey);
+                }
+                self.n_pairs -= 1;
+                self.note(pack_pair(skey, u), false);
+            }
+            for &u in &fresh {
+                self.upd_pairs
+                    .entry(u)
+                    .or_insert_with(|| DynSet::new(set_impl, key_hint))
+                    .insert(skey);
+                self.n_pairs += 1;
+                self.note(pack_pair(skey, u), true);
+            }
+            if !new_upds.is_empty() {
+                let mut set = DynSet::new(set_impl, key_hint);
+                for &u in new_upds {
+                    set.insert(u);
+                }
+                self.sub_pairs.insert(skey, set);
+            }
+        }
+        for &ukey in upd_ops.keys() {
+            let new_subs = &results[ri];
+            ri += 1;
+            let old = self.upd_pairs.remove(&ukey);
+            // Pairs whose subscription was ALSO touched this batch are
+            // fully accounted by the subscription pass above — skip
+            // them here so nothing is double-reported.
+            let mut gone: Vec<u32> = Vec::new();
+            if let Some(o) = &old {
+                o.for_each(&mut |s| {
+                    if !sub_ops.contains_key(&s) && new_subs.binary_search(&s).is_err() {
+                        gone.push(s);
+                    }
+                });
+            }
+            let mut fresh: Vec<u32> = Vec::new();
+            for &s in new_subs {
+                if sub_ops.contains_key(&s) {
+                    continue;
+                }
+                let is_new = match &old {
+                    Some(o) => !o.contains(s),
+                    None => true,
+                };
+                if is_new {
+                    fresh.push(s);
+                }
+            }
+            for s in gone {
+                if let Some(set) = self.sub_pairs.get_mut(&s) {
+                    set.remove(ukey);
+                }
+                self.n_pairs -= 1;
+                self.note(pack_pair(s, ukey), false);
+            }
+            for &s in &fresh {
+                self.sub_pairs
+                    .entry(s)
+                    .or_insert_with(|| DynSet::new(set_impl, key_hint))
+                    .insert(ukey);
+                self.n_pairs += 1;
+                self.note(pack_pair(s, ukey), true);
+            }
+            if !new_subs.is_empty() {
+                let mut set = DynSet::new(set_impl, key_hint);
+                for &s in new_subs {
+                    set.insert(s);
+                }
+                self.upd_pairs.insert(ukey, set);
+            }
+        }
+    }
+
+    /// Fold one pair appearance/disappearance into the epoch
+    /// accumulator; an appear + disappear of the same pair within one
+    /// epoch cancels to nothing.
+    fn note(&mut self, pair: u64, appeared: bool) {
+        if appeared {
+            if !self.acc_removed.remove(&pair) {
+                self.acc_added.insert(pair);
+            }
+        } else if !self.acc_added.remove(&pair) {
+            self.acc_removed.insert(pair);
+        }
+    }
+
+    // ---- queries over the retained state -----------------------------------
+    //
+    // All of these answer from the *applied* state — staged ops not yet
+    // applied (see `pending_ops`) are invisible until `commit`.
+
+    /// Every currently intersecting (subscription key, update key)
+    /// pair, sorted (equivalent to a full static match, but read from
+    /// the retained set in O(K)).
+    pub fn pairs(&self) -> PairVec {
+        let mut out = Vec::with_capacity(self.n_pairs);
+        for (&s, set) in &self.sub_pairs {
+            set.for_each(&mut |u| out.push((s, u)));
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Update keys currently intersecting subscription `key`, sorted.
+    pub fn updates_of(&self, sub_key: u32) -> Vec<u32> {
+        self.sub_pairs
+            .get(&sub_key)
+            .map(|s| s.to_sorted_vec())
+            .unwrap_or_default()
+    }
+
+    /// Subscription keys currently intersecting update `key`, sorted.
+    pub fn subscriptions_of(&self, upd_key: u32) -> Vec<u32> {
+        self.upd_pairs
+            .get(&upd_key)
+            .map(|s| s.to_sorted_vec())
+            .unwrap_or_default()
+    }
+
+    /// Whether the pair currently intersects.
+    pub fn contains_pair(&self, sub_key: u32, upd_key: u32) -> bool {
+        self.sub_pairs
+            .get(&sub_key)
+            .is_some_and(|s| s.contains(upd_key))
+    }
+
+    /// The stored rectangle of subscription `key`, if live.
+    pub fn subscription_rect(&self, key: u32) -> Option<Vec<Interval>> {
+        rect_of(&self.sub_dims, key)
+    }
+
+    /// The stored rectangle of update `key`, if live.
+    pub fn update_rect(&self, key: u32) -> Option<Vec<Interval>> {
+        rect_of(&self.upd_dims, key)
+    }
+}
+
+fn rect_of(dims: &[TreeIndex], key: u32) -> Option<Vec<Interval>> {
+    let mut rect = Vec::with_capacity(dims.len());
+    for dim in dims {
+        rect.push(dim.get(key)?);
+    }
+    Some(rect)
+}
+
+/// Apply one side's coalesced batch to the dimension-`k` tree.
+fn apply_dim(tree: &mut TreeIndex, k: usize, ops: &BTreeMap<u32, Option<Vec<Interval>>>) {
+    for (&key, op) in ops {
+        match op {
+            Some(rect) => tree.put(key, rect[k]),
+            None => tree.delete(key),
+        }
+    }
+}
+
+/// Post-apply overlap set of one touched region: seed with the
+/// dimension-0 query of the opposite side's trees, then constrain by
+/// each remaining dimension — per-key interval lookups while the
+/// candidate set is small, tree query + sorted intersection once it is
+/// large. Returns ascending opposite-side keys; empty for a region
+/// removed this batch.
+fn recompute(sub_dims: &[TreeIndex], upd_dims: &[TreeIndex], side: Side, key: u32) -> Vec<u32> {
+    let (own, opp) = match side {
+        Side::Subscription => (sub_dims, upd_dims),
+        Side::Update => (upd_dims, sub_dims),
+    };
+    let Some(iv0) = own[0].get(key) else {
+        return Vec::new();
+    };
+    let mut cur = opp[0].query_sorted(iv0);
+    for k in 1..own.len() {
+        if cur.is_empty() {
+            break;
+        }
+        let ivk = own[k].get(key).expect("per-dimension trees agree on keys");
+        if cur.len() <= 32 {
+            cur.retain(|&c| opp[k].get(c).is_some_and(|civ| civ.intersects(&ivk)));
+        } else {
+            let dim_hits = opp[k].query_sorted(ivk);
+            cur = intersect_sorted(&cur, &dim_hits);
+        }
+    }
+    cur
+}
+
+/// Intersection of two ascending `u32` lists.
+fn intersect_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(a.len().min(b.len()));
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::DdmEngine;
+    use crate::prng::Rng;
+
+    fn engine() -> DdmEngine {
+        DdmEngine::builder().threads(2).build()
+    }
+
+    fn ivl(rng: &mut Rng) -> Interval {
+        let lo = rng.uniform(0.0, 90.0);
+        Interval::new(lo, lo + rng.uniform(0.5, 12.0))
+    }
+
+    #[test]
+    fn empty_commit_is_empty() {
+        let mut sess = engine().session(1);
+        let d = sess.commit();
+        assert!(d.is_empty());
+        assert_eq!(d.epoch, 1);
+        assert_eq!(sess.epoch(), 1);
+        assert_eq!(sess.n_pairs(), 0);
+        assert!(sess.pairs().is_empty());
+    }
+
+    #[test]
+    fn single_pair_lifecycle() {
+        let mut sess = engine().session(1);
+        sess.upsert_subscription(5, &[Interval::new(0.0, 10.0)]);
+        sess.upsert_update(9, &[Interval::new(5.0, 15.0)]);
+        assert_eq!(sess.pending_ops(), 2);
+        let d = sess.commit();
+        assert_eq!(d.added, vec![(5, 9)]);
+        assert!(d.removed.is_empty());
+        assert_eq!(sess.n_pairs(), 1);
+        assert!(sess.contains_pair(5, 9));
+        assert_eq!(sess.updates_of(5), vec![9]);
+        assert_eq!(sess.subscriptions_of(9), vec![5]);
+        assert_eq!(sess.subscription_rect(5), Some(vec![Interval::new(0.0, 10.0)]));
+
+        // Move the update away: the pair disappears.
+        sess.upsert_update(9, &[Interval::new(50.0, 60.0)]);
+        let d = sess.commit();
+        assert_eq!(d.removed, vec![(5, 9)]);
+        assert!(d.added.is_empty());
+        assert_eq!(sess.n_pairs(), 0);
+        assert!(!sess.contains_pair(5, 9));
+
+        // Remove everything: nothing left, nothing reported.
+        sess.remove_subscription(5);
+        sess.remove_update(9);
+        assert!(sess.commit().is_empty());
+        assert_eq!(sess.n_subscriptions(), 0);
+        assert_eq!(sess.n_updates(), 0);
+        assert_eq!(sess.subscription_rect(5), None);
+    }
+
+    /// flush() makes staged state visible without closing the epoch or
+    /// swallowing the pending diff.
+    #[test]
+    fn flush_preserves_pending_epoch_diff() {
+        let mut sess = engine().session(1);
+        sess.upsert_subscription(1, &[Interval::new(0.0, 10.0)]);
+        sess.upsert_update(2, &[Interval::new(5.0, 15.0)]);
+        sess.flush();
+        assert_eq!(sess.pending_ops(), 0);
+        assert_eq!(sess.n_pairs(), 1, "flushed state is readable");
+        assert!(sess.contains_pair(1, 2));
+        assert_eq!(sess.epoch(), 0, "flush does not close the epoch");
+        let d = sess.commit();
+        assert_eq!(d.added, vec![(1, 2)], "diff survives interleaved flush");
+        assert_eq!(d.epoch, 1);
+    }
+
+    #[test]
+    fn coalesced_same_epoch_churn_is_silent() {
+        let mut sess = engine().session(1);
+        sess.upsert_subscription(1, &[Interval::new(0.0, 10.0)]);
+        sess.upsert_update(2, &[Interval::new(5.0, 15.0)]);
+        sess.commit();
+        // Away and back within one staged batch: last write wins, no diff.
+        sess.upsert_update(2, &[Interval::new(100.0, 110.0)]);
+        sess.upsert_update(2, &[Interval::new(5.0, 15.0)]);
+        let d = sess.commit();
+        assert!(d.is_empty(), "{d:?}");
+        // Upsert then remove nets to a removal.
+        sess.upsert_update(2, &[Interval::new(6.0, 16.0)]);
+        sess.remove_update(2);
+        let d = sess.commit();
+        assert_eq!(d.removed, vec![(1, 2)]);
+        assert!(d.added.is_empty());
+    }
+
+    #[test]
+    fn auto_applied_batches_cancel_within_one_epoch() {
+        // batch_threshold == 1: every staged op applies immediately, so
+        // intra-epoch appear/disappear runs through the accumulator
+        // cancellation (not last-write-wins coalescing).
+        let mut sess = DdmEngine::builder()
+            .threads(1)
+            .batch_threshold(1)
+            .build()
+            .session(1);
+        sess.upsert_subscription(1, &[Interval::new(0.0, 10.0)]);
+        sess.upsert_update(2, &[Interval::new(5.0, 15.0)]); // pair appears
+        sess.upsert_update(2, &[Interval::new(100.0, 110.0)]); // disappears
+        sess.upsert_update(2, &[Interval::new(5.0, 15.0)]); // re-appears
+        assert_eq!(sess.pending_ops(), 0, "threshold applies eagerly");
+        let d = sess.commit();
+        assert_eq!(d.added, vec![(1, 2)]);
+        assert!(d.removed.is_empty());
+        // A full away-and-back across applies nets to an empty diff.
+        sess.upsert_update(2, &[Interval::new(100.0, 110.0)]);
+        sess.upsert_update(2, &[Interval::new(5.0, 15.0)]);
+        assert!(sess.commit().is_empty());
+    }
+
+    #[test]
+    fn parallel_and_serial_sessions_agree() {
+        let mut par = DdmEngine::builder()
+            .threads(4)
+            .parallel_cutoff(1)
+            .build()
+            .session(2);
+        let mut ser = DdmEngine::builder().threads(1).build().session(2);
+        let mut rng = Rng::new(0x5E01);
+        for _epoch in 0..8 {
+            for _ in 0..50 {
+                let key = rng.below(40) as u32;
+                let rect = [ivl(&mut rng), ivl(&mut rng)];
+                match rng.below(4) {
+                    0 | 1 => {
+                        par.upsert_subscription(key, &rect);
+                        ser.upsert_subscription(key, &rect);
+                    }
+                    2 => {
+                        par.upsert_update(key, &rect);
+                        ser.upsert_update(key, &rect);
+                    }
+                    _ => {
+                        par.remove_subscription(key);
+                        ser.remove_subscription(key);
+                        par.remove_update(key);
+                        ser.remove_update(key);
+                    }
+                }
+            }
+            let (dp, ds) = (par.commit(), ser.commit());
+            assert_eq!(dp, ds);
+            assert_eq!(par.pairs(), ser.pairs());
+            assert_eq!(par.n_pairs(), ser.n_pairs());
+        }
+    }
+
+    #[test]
+    fn all_retention_set_impls_agree() {
+        let mut sessions: Vec<DdmSession> = SetImpl::ALL
+            .iter()
+            .map(|&si| {
+                DdmEngine::builder()
+                    .threads(2)
+                    .session_set_impl(si)
+                    .build()
+                    .session(1)
+            })
+            .collect();
+        let mut rng = Rng::new(0x5E77);
+        for _epoch in 0..5 {
+            for _ in 0..60 {
+                let key = rng.below(30) as u32;
+                let iv = ivl(&mut rng);
+                let roll = rng.below(4);
+                for sess in &mut sessions {
+                    match roll {
+                        0 | 1 => sess.upsert_subscription(key, &[iv]),
+                        2 => sess.upsert_update(key, &[iv]),
+                        _ => sess.remove_update(key),
+                    }
+                }
+            }
+            let diffs: Vec<MatchDiff> = sessions.iter_mut().map(|s| s.commit()).collect();
+            for d in &diffs[1..] {
+                assert_eq!(d, &diffs[0]);
+            }
+            let pairs: Vec<PairVec> = sessions.iter().map(|s| s.pairs()).collect();
+            for p in &pairs[1..] {
+                assert_eq!(p, &pairs[0]);
+            }
+        }
+    }
+
+    /// The session's applied state tracks a brute-force oracle over
+    /// random multi-dimensional op sequences, and accumulated diffs
+    /// replay the oracle's pair set exactly.
+    #[test]
+    fn session_tracks_brute_force_property() {
+        let engine = DdmEngine::builder().threads(2).parallel_cutoff(8).build();
+        crate::bench::prop::prop_check("session-vs-brute-force", 0x5E02, |rng| {
+            let d = 1 + rng.below(3) as usize;
+            let mut sess = engine.session(d);
+            let mut model_s: BTreeMap<u32, Vec<Interval>> = BTreeMap::new();
+            let mut model_u: BTreeMap<u32, Vec<Interval>> = BTreeMap::new();
+            let mut live: HashSet<(u32, u32)> = HashSet::new();
+            for _epoch in 0..4 {
+                for _ in 0..30 {
+                    let key = rng.below(25) as u32;
+                    let rect: Vec<Interval> = (0..d).map(|_| ivl(rng)).collect();
+                    match rng.below(5) {
+                        0 | 1 => {
+                            sess.upsert_subscription(key, &rect);
+                            model_s.insert(key, rect);
+                        }
+                        2 | 3 => {
+                            sess.upsert_update(key, &rect);
+                            model_u.insert(key, rect);
+                        }
+                        _ => {
+                            if rng.chance(0.5) {
+                                sess.remove_subscription(key);
+                                model_s.remove(&key);
+                            } else {
+                                sess.remove_update(key);
+                                model_u.remove(&key);
+                            }
+                        }
+                    }
+                }
+                let diff = sess.commit();
+                for &(s, u) in &diff.removed {
+                    if !live.remove(&(s, u)) {
+                        return Err(format!("removed non-live pair ({s}, {u})"));
+                    }
+                }
+                for &(s, u) in &diff.added {
+                    if !live.insert((s, u)) {
+                        return Err(format!("added already-live pair ({s}, {u})"));
+                    }
+                }
+                // Brute-force oracle over the model.
+                let mut want: Vec<(u32, u32)> = Vec::new();
+                for (&sk, srect) in &model_s {
+                    for (&uk, urect) in &model_u {
+                        if srect.iter().zip(urect).all(|(a, b)| a.intersects(b)) {
+                            want.push((sk, uk));
+                        }
+                    }
+                }
+                want.sort_unstable();
+                let mut acc: Vec<(u32, u32)> = live.iter().copied().collect();
+                acc.sort_unstable();
+                crate::bench::prop::expect_eq(&acc, &want, "accumulated diffs (d-dim)")?;
+                crate::bench::prop::expect_eq(&sess.pairs(), &want, "retained pair set")?;
+                if sess.n_pairs() != want.len() {
+                    return Err(format!("n_pairs {} != oracle {}", sess.n_pairs(), want.len()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn intersect_sorted_basics() {
+        assert_eq!(intersect_sorted(&[1, 3, 5, 9], &[2, 3, 9, 11]), vec![3, 9]);
+        assert_eq!(intersect_sorted(&[], &[1]), Vec::<u32>::new());
+        assert_eq!(intersect_sorted(&[7], &[7]), vec![7]);
+    }
+}

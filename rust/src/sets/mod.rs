@@ -98,7 +98,7 @@ impl SetImpl {
 impl std::str::FromStr for SetImpl {
     type Err = String;
     fn from_str(s: &str) -> Result<Self, Self::Err> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "bit" | "bitvec" => Ok(SetImpl::Bit),
             "hash" => Ok(SetImpl::Hash),
             "btree" | "set" => Ok(SetImpl::BTree),
@@ -106,6 +106,144 @@ impl std::str::FromStr for SetImpl {
             "sparse" => Ok(SetImpl::Sparse),
             other => Err(format!("unknown set impl '{other}'")),
         }
+    }
+}
+
+/// A runtime-dispatched, growable active set over `u32` keys.
+///
+/// The static [`ActiveSet`] impls are monomorphized into the SBM/PSBM
+/// hot loops and assume a universe fixed up front. The session layer
+/// ([`crate::session`]) needs the same pluggable storage — the diff
+/// retention set is selected by [`SetImpl`] at run time — but keyed by
+/// long-lived region keys whose range grows as regions register.
+/// `DynSet` wraps the five implementations behind enum dispatch and
+/// transparently rebuilds on out-of-universe inserts (geometric
+/// growth, amortized O(1)); out-of-universe `contains`/`remove` are
+/// safe no-ops instead of panics.
+#[derive(Debug, Clone)]
+pub struct DynSet {
+    universe: usize,
+    imp: DynSetImpl,
+}
+
+#[derive(Debug, Clone)]
+enum DynSetImpl {
+    Bit(BitSet),
+    Hash(HashActiveSet),
+    BTree(BTreeActiveSet),
+    SortedVec(SortedVecSet),
+    Sparse(SparseSet),
+}
+
+impl DynSet {
+    /// Empty set of the given implementation; `universe_hint` sizes the
+    /// initial key range (growth handles underestimates).
+    pub fn new(which: SetImpl, universe_hint: usize) -> Self {
+        let universe = universe_hint.max(64);
+        let imp = match which {
+            SetImpl::Bit => DynSetImpl::Bit(BitSet::with_universe(universe)),
+            SetImpl::Hash => DynSetImpl::Hash(HashActiveSet::with_universe(universe)),
+            SetImpl::BTree => DynSetImpl::BTree(BTreeActiveSet::with_universe(universe)),
+            SetImpl::SortedVec => DynSetImpl::SortedVec(SortedVecSet::with_universe(universe)),
+            SetImpl::Sparse => DynSetImpl::Sparse(SparseSet::with_universe(universe)),
+        };
+        Self { universe, imp }
+    }
+
+    /// Which implementation backs this set.
+    pub fn which(&self) -> SetImpl {
+        match &self.imp {
+            DynSetImpl::Bit(_) => SetImpl::Bit,
+            DynSetImpl::Hash(_) => SetImpl::Hash,
+            DynSetImpl::BTree(_) => SetImpl::BTree,
+            DynSetImpl::SortedVec(_) => SetImpl::SortedVec,
+            DynSetImpl::Sparse(_) => SetImpl::Sparse,
+        }
+    }
+
+    fn grow_to(&mut self, min_universe: usize) {
+        let mut bigger = DynSet::new(self.which(), min_universe.next_power_of_two());
+        self.for_each(&mut |id| bigger.raw_insert(id));
+        *self = bigger;
+    }
+
+    #[inline]
+    fn raw_insert(&mut self, id: u32) {
+        match &mut self.imp {
+            DynSetImpl::Bit(s) => s.insert(id),
+            DynSetImpl::Hash(s) => s.insert(id),
+            DynSetImpl::BTree(s) => s.insert(id),
+            DynSetImpl::SortedVec(s) => s.insert(id),
+            DynSetImpl::Sparse(s) => s.insert(id),
+        }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, id: u32) {
+        if id as usize >= self.universe {
+            self.grow_to(id as usize + 1);
+        }
+        self.raw_insert(id);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, id: u32) {
+        if (id as usize) >= self.universe {
+            return;
+        }
+        match &mut self.imp {
+            DynSetImpl::Bit(s) => s.remove(id),
+            DynSetImpl::Hash(s) => s.remove(id),
+            DynSetImpl::BTree(s) => s.remove(id),
+            DynSetImpl::SortedVec(s) => s.remove(id),
+            DynSetImpl::Sparse(s) => s.remove(id),
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, id: u32) -> bool {
+        if (id as usize) >= self.universe {
+            return false;
+        }
+        match &self.imp {
+            DynSetImpl::Bit(s) => s.contains(id),
+            DynSetImpl::Hash(s) => s.contains(id),
+            DynSetImpl::BTree(s) => s.contains(id),
+            DynSetImpl::SortedVec(s) => s.contains(id),
+            DynSetImpl::Sparse(s) => s.contains(id),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.imp {
+            DynSetImpl::Bit(s) => s.len(),
+            DynSetImpl::Hash(s) => s.len(),
+            DynSetImpl::BTree(s) => s.len(),
+            DynSetImpl::SortedVec(s) => s.len(),
+            DynSetImpl::Sparse(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Visit every element (ascending order NOT guaranteed).
+    pub fn for_each(&self, f: &mut dyn FnMut(u32)) {
+        match &self.imp {
+            DynSetImpl::Bit(s) => s.for_each(f),
+            DynSetImpl::Hash(s) => s.for_each(f),
+            DynSetImpl::BTree(s) => s.for_each(f),
+            DynSetImpl::SortedVec(s) => s.for_each(f),
+            DynSetImpl::Sparse(s) => s.for_each(f),
+        }
+    }
+
+    pub fn to_sorted_vec(&self) -> Vec<u32> {
+        let mut v = Vec::with_capacity(self.len());
+        self.for_each(&mut |i| v.push(i));
+        v.sort_unstable();
+        v
     }
 }
 
@@ -215,5 +353,54 @@ mod tests {
         assert_eq!("set".parse::<SetImpl>().unwrap(), SetImpl::BTree);
         assert_eq!("sparse".parse::<SetImpl>().unwrap(), SetImpl::Sparse);
         assert!("nope".parse::<SetImpl>().is_err());
+        // Case-insensitive like Algo::from_str.
+        assert_eq!("BIT".parse::<SetImpl>().unwrap(), SetImpl::Bit);
+        assert_eq!("BTree".parse::<SetImpl>().unwrap(), SetImpl::BTree);
+        assert_eq!(" Sparse ".parse::<SetImpl>().unwrap(), SetImpl::Sparse);
+    }
+
+    #[test]
+    fn dyn_set_grows_past_initial_universe() {
+        for si in SetImpl::ALL {
+            let mut s = DynSet::new(si, 8);
+            assert_eq!(s.which(), si);
+            s.insert(3);
+            s.insert(1000);
+            s.insert(70_000);
+            assert!(s.contains(3) && s.contains(1000) && s.contains(70_000));
+            assert!(!s.contains(4));
+            assert!(!s.contains(1_000_000)); // beyond universe: false, no panic
+            s.remove(1_000_000); // beyond universe: no-op, no panic
+            s.remove(1000);
+            assert_eq!(s.to_sorted_vec(), vec![3, 70_000], "{}", si.name());
+            assert_eq!(s.len(), 2);
+            assert!(!s.is_empty());
+        }
+    }
+
+    #[test]
+    fn dyn_set_impls_agree_with_model() {
+        let mut rng = Rng::new(0xD55);
+        let mut sets: Vec<DynSet> = SetImpl::ALL.iter().map(|&si| DynSet::new(si, 16)).collect();
+        let mut model = std::collections::BTreeSet::new();
+        for _ in 0..500 {
+            let id = rng.below(4096) as u32;
+            if rng.chance(0.6) {
+                for s in &mut sets {
+                    s.insert(id);
+                }
+                model.insert(id);
+            } else {
+                for s in &mut sets {
+                    s.remove(id);
+                }
+                model.remove(&id);
+            }
+        }
+        let want: Vec<u32> = model.into_iter().collect();
+        for s in &sets {
+            assert_eq!(s.to_sorted_vec(), want, "{}", s.which().name());
+            assert_eq!(s.len(), want.len());
+        }
     }
 }

@@ -1,0 +1,112 @@
+//! Deterministic churn scripts: the shared move generator behind
+//! `ddm replay` and `benches/abl_session.rs`.
+//!
+//! Comparing the session diff path against the rebuild baseline is
+//! only honest when both replay the *identical* move sequence. A
+//! [`MoveScript`] owns the RNG and hands out side/index/position
+//! decisions; two consumers seeded identically stay in lockstep no
+//! matter which matching path they drive. [`relocate`] applies one
+//! move to a dense region array (keeping the region's length, which is
+//! what the α-model and the Köln trace both assume), and
+//! [`diff_pair_counts`] derives the `(added, removed)` sizes the
+//! rebuild path must pay to compute explicitly.
+
+use crate::core::interval::Interval;
+use crate::core::Regions1D;
+use crate::prng::Rng;
+
+/// A reproducible stream of region moves.
+pub struct MoveScript {
+    rng: Rng,
+}
+
+impl MoveScript {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// The next move: `(subscription side?, dense index, position
+    /// fraction in [0, 1))`. Consumes the RNG identically regardless
+    /// of how the caller applies the move.
+    pub fn next(&mut self, n_subs: usize, n_upds: usize) -> (bool, usize, f64) {
+        let sub_side = self.rng.chance(0.5);
+        let idx = if sub_side {
+            self.rng.below(n_subs as u64)
+        } else {
+            self.rng.below(n_upds as u64)
+        } as usize;
+        (sub_side, idx, self.rng.uniform(0.0, 1.0))
+    }
+}
+
+/// Relocate region `idx` to position fraction `frac` of `[0, space_hi)`,
+/// keeping its length; returns the new interval.
+pub fn relocate(regions: &mut Regions1D, idx: usize, frac: f64, space_hi: f64) -> Interval {
+    let l = regions.get(idx).len();
+    let lo = frac * (space_hi - l).max(0.0);
+    let iv = Interval::new(lo, lo + l);
+    regions.set(idx, iv);
+    iv
+}
+
+/// `(added, removed)` = `(|new \ old|, |old \ new|)` over two sorted
+/// pair lists — the delta the rebuild baseline derives by re-diffing
+/// full match results (a session reads it off its `MatchDiff`).
+pub fn diff_pair_counts(old: &[(u32, u32)], new: &[(u32, u32)]) -> (usize, usize) {
+    let (mut i, mut j) = (0usize, 0usize);
+    let (mut removed, mut added) = (0usize, 0usize);
+    while i < old.len() && j < new.len() {
+        match old[i].cmp(&new[j]) {
+            std::cmp::Ordering::Less => {
+                removed += 1;
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                added += 1;
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    removed += old.len() - i;
+    added += new.len() - j;
+    (added, removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripts_with_equal_seeds_are_lockstep() {
+        let mut a = MoveScript::new(9);
+        let mut b = MoveScript::new(9);
+        for _ in 0..50 {
+            assert_eq!(a.next(100, 80), b.next(100, 80));
+        }
+    }
+
+    #[test]
+    fn relocate_keeps_length_and_bounds() {
+        let mut r = Regions1D::from_intervals(&[Interval::new(10.0, 25.0)]);
+        let iv = relocate(&mut r, 0, 0.5, 100.0);
+        assert!((iv.len() - 15.0).abs() < 1e-9);
+        assert!(iv.lo >= 0.0 && iv.hi <= 100.0);
+        assert_eq!(r.get(0), iv);
+    }
+
+    #[test]
+    fn diff_pair_counts_two_pointer() {
+        let old = vec![(0, 0), (1, 1), (2, 2)];
+        let new = vec![(1, 1), (2, 3), (5, 5)];
+        assert_eq!(diff_pair_counts(&old, &new), (2, 2));
+        assert_eq!(diff_pair_counts(&[], &old), (3, 0));
+        assert_eq!(diff_pair_counts(&old, &[]), (0, 3));
+        assert_eq!(diff_pair_counts(&old, &old), (0, 0));
+    }
+}

@@ -6,7 +6,10 @@
 //! * [`koln`] — a Köln-trace-like vehicular workload (Fig. 14
 //!   substitution; the real trace is not downloadable offline —
 //!   DESIGN.md §3 documents the substitution).
+//! * [`churn`] — deterministic region-move scripts for replaying the
+//!   same churn through the session and rebuild paths.
 
+pub mod churn;
 pub mod koln;
 pub mod synthetic;
 

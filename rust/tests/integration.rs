@@ -261,6 +261,96 @@ fn coordinator_handles_concurrent_clients() {
     assert_eq!(metrics.counter("registers"), 200);
 }
 
+/// Session-vs-static equivalence (the DdmSession acceptance property):
+/// after ANY op sequence, accumulating the epochs' `MatchDiff`s
+/// reproduces exactly the pair set of a fresh `pairs_nd` over the same
+/// live regions — checked for two algorithms and d ∈ {1, 3}, with
+/// eager batching and forced parallel apply in the mix.
+#[test]
+fn session_diffs_reproduce_static_matching() {
+    use ddm::core::{Interval, RegionsNd};
+    use std::collections::{BTreeMap, HashSet};
+
+    let pool = Arc::new(ThreadPool::new(3));
+    for &algo in &[Algo::Psbm, Algo::Itm] {
+        for d in [1usize, 3] {
+            let engine = DdmEngine::builder()
+                .algo(algo)
+                .threads(3)
+                .pool(Arc::clone(&pool))
+                .parallel_cutoff(8)
+                .batch_threshold(16) // fires twice per 40-op epoch
+                .build();
+            let mut sess = engine.session(d);
+            let mut rng = Rng::new(0x5E55 + d as u64);
+            let mut model_s: BTreeMap<u32, Vec<Interval>> = BTreeMap::new();
+            let mut model_u: BTreeMap<u32, Vec<Interval>> = BTreeMap::new();
+            let mut live: HashSet<(u32, u32)> = HashSet::new();
+            for epoch in 0..12 {
+                for _ in 0..40 {
+                    let key = rng.below(60) as u32;
+                    let sub_side = rng.chance(0.5);
+                    if rng.chance(0.8) {
+                        let rect: Vec<Interval> = (0..d)
+                            .map(|_| {
+                                let lo = rng.uniform(0.0, 90.0);
+                                Interval::new(lo, lo + rng.uniform(0.5, 12.0))
+                            })
+                            .collect();
+                        if sub_side {
+                            sess.upsert_subscription(key, &rect);
+                            model_s.insert(key, rect);
+                        } else {
+                            sess.upsert_update(key, &rect);
+                            model_u.insert(key, rect);
+                        }
+                    } else if sub_side {
+                        sess.remove_subscription(key);
+                        model_s.remove(&key);
+                    } else {
+                        sess.remove_update(key);
+                        model_u.remove(&key);
+                    }
+                }
+                let diff = sess.commit();
+                for &(s, u) in &diff.removed {
+                    assert!(live.remove(&(s, u)), "removed non-live pair");
+                }
+                for &(s, u) in &diff.added {
+                    assert!(live.insert((s, u)), "added already-live pair");
+                }
+                // Fresh static match over the same live regions.
+                let mut subs = RegionsNd::new(d);
+                let mut skeys = Vec::new();
+                for (&k, rect) in &model_s {
+                    subs.push(rect);
+                    skeys.push(k);
+                }
+                let mut upds = RegionsNd::new(d);
+                let mut ukeys = Vec::new();
+                for (&k, rect) in &model_u {
+                    upds.push(rect);
+                    ukeys.push(k);
+                }
+                if subs.is_empty() || upds.is_empty() {
+                    assert!(live.is_empty());
+                    continue;
+                }
+                let want: HashSet<(u32, u32)> = engine
+                    .pairs_nd(&subs, &upds)
+                    .into_iter()
+                    .map(|(si, uj)| (skeys[si as usize], ukeys[uj as usize]))
+                    .collect();
+                assert_eq!(live, want, "algo={} d={d} epoch={epoch}", algo.name());
+                // The retained pair set agrees with the accumulation too.
+                let mut acc: Vec<(u32, u32)> = live.iter().copied().collect();
+                acc.sort_unstable();
+                assert_eq!(sess.pairs(), acc);
+            }
+        }
+    }
+}
+
 /// Thread-count invariance under the engine API (heavier than the
 /// per-module variants: full workload, many P values, shared pool).
 #[test]
