@@ -1,0 +1,194 @@
+//! Ablation A6: sharded sessions — per-epoch commit cost of a
+//! `ShardedSession` (spatial stripes, shard-parallel commits, merged
+//! deduplicated diffs) vs the unsharded `DdmSession`, swept over shard
+//! counts × churn rates on a **skewed** churn workload
+//! (`MoveScript::with_hotspot` drifts most moves into one corner, so
+//! shard imbalance is actually exercised and reported).
+//!
+//! Both paths replay the identical deterministic move script and are
+//! asserted to produce identical per-epoch diff sizes and end in the
+//! identical pair set. Two cost columns per row:
+//!
+//! * `commit/ep` — raw wall-clock on this host (oversubscribed when
+//!   P > cores);
+//! * `modeled/ep` — the work-span modeled wall-clock of the pooled
+//!   phases for a P-core machine (DESIGN.md §3; routing/merge work
+//!   outside pool regions is not charged, on either path).
+//!
+//!   cargo bench --bench abl_shard -- [--n 40k] [--epochs 6] \
+//!       [--shards 1,2,4,8] [--churns 0.05,0.2] [--hotspot 0.75] [--quick]
+
+use std::time::Instant;
+
+use ddm::algos::Algo;
+use ddm::bench::harness::FigCtx;
+use ddm::bench::stats::fmt_secs;
+use ddm::bench::table::{banner, Table};
+use ddm::core::Interval;
+use ddm::engine::DdmEngine;
+use ddm::shard::{AnySession, SpacePartitioner};
+use ddm::workload::churn::{relocate, MoveScript};
+use ddm::workload::{alpha_workload, AlphaParams};
+
+const THREADS: usize = 4;
+const SPACE: f64 = 1e6;
+const SCRIPT_SEED: u64 = 0xAB6;
+
+/// One replay's outcome: per-epoch costs, per-epoch diff sizes, the
+/// final pair set, total pair churn, and the final shard imbalance.
+struct Run {
+    meas_per_epoch: f64,
+    model_per_epoch: f64,
+    diffs: Vec<(usize, usize)>,
+    pairs: Vec<(u32, u32)>,
+    pair_churn: usize,
+    imbalance: Option<f64>,
+}
+
+/// One replay: load, epoch-0 commit, then `epochs` staged-move epochs.
+fn run(
+    ctx: &FigCtx,
+    mut sess: AnySession,
+    subs0: &ddm::core::Regions1D,
+    upds0: &ddm::core::Regions1D,
+    epochs: usize,
+    n_moves: usize,
+    hotspot: f64,
+) -> Run {
+    let (mut subs, mut upds) = (subs0.clone(), upds0.clone());
+    sess.load_dense_1d(&subs, &upds);
+    sess.commit();
+    let mut script = MoveScript::with_hotspot(SCRIPT_SEED, hotspot);
+    let (mut measured, mut modeled) = (0.0f64, 0.0f64);
+    let mut diffs = Vec::with_capacity(epochs);
+    let mut pair_churn = 0usize;
+    for _ in 0..epochs {
+        for _ in 0..n_moves {
+            let (sub_side, idx, frac) = script.next(subs.len(), upds.len());
+            if sub_side {
+                let iv = relocate(&mut subs, idx, frac, SPACE);
+                sess.upsert_subscription(idx as u32, &[iv]);
+            } else {
+                let iv = relocate(&mut upds, idx, frac, SPACE);
+                sess.upsert_update(idx as u32, &[iv]);
+            }
+        }
+        ctx.pool.start_log();
+        let t0 = Instant::now();
+        let d = sess.commit();
+        measured += t0.elapsed().as_secs_f64();
+        modeled += ctx.model.modeled_wct(&ctx.pool.take_log(), THREADS);
+        diffs.push((d.added.len(), d.removed.len()));
+        pair_churn += d.churn();
+    }
+    let e = epochs.max(1) as f64;
+    Run {
+        meas_per_epoch: measured / e,
+        model_per_epoch: modeled / e,
+        diffs,
+        pairs: sess.pairs(),
+        pair_churn,
+        imbalance: sess.imbalance(),
+    }
+}
+
+fn main() {
+    let ctx = FigCtx::new(THREADS);
+    let n_total = ctx.args.size("n", if ctx.quick { 8_000 } else { 40_000 });
+    let epochs = ctx.args.size("epochs", if ctx.quick { 2 } else { 6 });
+    let alpha = ctx.args.opt("alpha", 10.0);
+    let hotspot = ctx.args.opt("hotspot", 0.75);
+    let default_shards: &[usize] = if ctx.quick { &[1, 4] } else { &[1, 2, 4, 8] };
+    let shard_counts: Vec<usize> = ctx.args.list("shards", default_shards);
+    let default_churns: &[f64] = if ctx.quick { &[0.10] } else { &[0.05, 0.20] };
+    let churns: Vec<f64> = ctx.args.list("churns", default_churns);
+    banner(
+        "A6",
+        "sharded vs unsharded sessions: per-epoch commit cost under skewed churn",
+        &format!("N={n_total} α={alpha} epochs={epochs} hotspot={hotspot} P={THREADS}"),
+    );
+
+    let engine = DdmEngine::builder()
+        .algo(Algo::Psbm)
+        .threads(THREADS)
+        .pool(std::sync::Arc::clone(&ctx.pool))
+        .build();
+    let wp = AlphaParams {
+        n_total,
+        alpha,
+        space: SPACE,
+    };
+    let (subs0, upds0) = alpha_workload(77, &wp);
+    let span = Interval::new(0.0, SPACE);
+
+    let mut table = Table::new(vec![
+        "churn",
+        "path",
+        "shards",
+        "commit/ep",
+        "modeled/ep",
+        "speedup",
+        "imbalance",
+        "pair churn/ep",
+    ]);
+    for &churn in &churns {
+        let n_moves = ((n_total as f64) * churn).ceil().max(1.0) as usize;
+
+        // Unsharded baseline.
+        let base = run(
+            &ctx,
+            AnySession::Single(engine.session(1)),
+            &subs0,
+            &upds0,
+            epochs,
+            n_moves,
+            hotspot,
+        );
+        table.row(vec![
+            format!("{:.0}%", churn * 100.0),
+            "session".to_string(),
+            "-".to_string(),
+            fmt_secs(base.meas_per_epoch),
+            fmt_secs(base.model_per_epoch),
+            "1.0x".to_string(),
+            "-".to_string(),
+            (base.pair_churn / epochs.max(1)).to_string(),
+        ]);
+
+        // Sharded sweep on the identical script.
+        for &shards in &shard_counts {
+            let sess = AnySession::Sharded(
+                engine.sharded_session_with(1, SpacePartitioner::uniform(shards, 0, span)),
+            );
+            let r = run(&ctx, sess, &subs0, &upds0, epochs, n_moves, hotspot);
+            // Honesty checks: identical per-epoch diff sizes and end state.
+            assert_eq!(
+                r.diffs, base.diffs,
+                "sharded({shards}) per-epoch diffs diverged at churn {churn}"
+            );
+            assert_eq!(
+                r.pairs, base.pairs,
+                "sharded({shards}) end state diverged at churn {churn}"
+            );
+            table.row(vec![
+                format!("{:.0}%", churn * 100.0),
+                "sharded".to_string(),
+                shards.to_string(),
+                fmt_secs(r.meas_per_epoch),
+                fmt_secs(r.model_per_epoch),
+                format!("{:.1}x", base.model_per_epoch / r.model_per_epoch.max(1e-12)),
+                format!("{:.2}", r.imbalance.unwrap_or(1.0)),
+                (r.pair_churn / epochs.max(1)).to_string(),
+            ]);
+        }
+    }
+    table.print();
+    ctx.emit("abl_shard", &table);
+    println!(
+        "\nreading: the hotspot drives most churn into one stripe, so uniform stripes \
+         report imbalance well above 1.0 while the modeled per-epoch commit cost drops \
+         as shards (and with them the parallel fan-out) increase; the measured column \
+         is this host's oversubscribed wall-clock. Equal per-epoch diffs and end \
+         states vs the unsharded session are asserted, not assumed."
+    );
+}

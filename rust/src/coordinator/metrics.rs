@@ -28,11 +28,15 @@ impl LatencyStat {
     }
 }
 
-/// Named counters + latencies.
+/// Named counters + latencies + gauges.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub counters: BTreeMap<&'static str, u64>,
     pub latencies: BTreeMap<&'static str, LatencyStat>,
+    /// Last-write-wins instantaneous values (e.g. the shard imbalance
+    /// gauge) — unlike counters they describe *current* state, not
+    /// accumulation.
+    pub gauges: BTreeMap<&'static str, f64>,
 }
 
 impl Metrics {
@@ -44,8 +48,17 @@ impl Metrics {
         self.latencies.entry(name).or_default().record(d);
     }
 
+    /// Set an instantaneous gauge (overwrites the previous value).
+    pub fn gauge(&mut self, name: &'static str, value: f64) {
+        self.gauges.insert(name, value);
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
     }
 
     /// Render as an aligned table.
@@ -55,6 +68,9 @@ impl Metrics {
         ]);
         for (name, v) in &self.counters {
             t.row(vec![name.to_string(), v.to_string(), "-".into(), "-".into()]);
+        }
+        for (name, v) in &self.gauges {
+            t.row(vec![name.to_string(), format!("{v:.3}"), "-".into(), "-".into()]);
         }
         for (name, l) in &self.latencies {
             t.row(vec![
@@ -85,5 +101,16 @@ mod tests {
         assert_eq!(l.mean(), Duration::from_millis(3));
         assert_eq!(l.max, Duration::from_millis(4));
         assert!(m.table().render().contains("publishes"));
+    }
+
+    #[test]
+    fn gauges_are_last_write_wins() {
+        let mut m = Metrics::default();
+        assert_eq!(m.gauge_value("shard_imbalance"), None);
+        m.gauge("shard_imbalance", 2.5);
+        m.gauge("shard_imbalance", 1.25);
+        assert_eq!(m.gauge_value("shard_imbalance"), Some(1.25));
+        assert!(m.table().render().contains("shard_imbalance"));
+        assert!(m.table().render().contains("1.250"));
     }
 }

@@ -297,6 +297,30 @@ fn service_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Command>) -> Metrics 
                     metrics.inc("commits", 1);
                     metrics.inc("diff_added", diff.added.len() as u64);
                     metrics.inc("diff_removed", diff.removed.len() as u64);
+                    // Sharded engines: per-shard op/diff totals plus the
+                    // instantaneous load-imbalance gauge (1.0 = even,
+                    // `shards` = everything on one stripe).
+                    if let Some(stats) = svc.shard_stats() {
+                        metrics.inc(
+                            "shard_ops",
+                            stats.iter().map(|s| s.last_ops as u64).sum(),
+                        );
+                        metrics.inc(
+                            "shard_ops_max",
+                            stats.iter().map(|s| s.last_ops as u64).max().unwrap_or(0),
+                        );
+                        metrics.inc(
+                            "shard_diff_churn",
+                            stats.iter().map(|s| s.last_churn as u64).sum(),
+                        );
+                        metrics.gauge("shards", stats.len() as f64);
+                        // Derived from the snapshot in hand — no second
+                        // sweep of the shard locks.
+                        metrics.gauge(
+                            "shard_imbalance",
+                            crate::shard::ShardedSession::imbalance_of(&stats),
+                        );
+                    }
                     metrics.time("commit", t0.elapsed());
                     let _ = reply.send((diff.epoch, diff.added.len(), diff.removed.len()));
                 }
@@ -436,6 +460,38 @@ mod tests {
         assert_eq!(m.counter("commits"), 3);
         assert_eq!(m.counter("diff_added"), 6);
         assert_eq!(m.counter("diff_removed"), 3);
+    }
+
+    /// A sharded coordinator serves the same workload and reports
+    /// per-shard op/diff metrics plus the imbalance gauge on commit.
+    #[test]
+    fn sharded_coordinator_reports_shard_metrics() {
+        let coord = Coordinator::spawn(CoordinatorConfig::new(
+            RoutingSpace::uniform(1, 10_000),
+            DdmEngine::builder().threads(2).shards(4).build(),
+        ));
+        let c = coord.client();
+        let f = c.join("f");
+        for i in 0..20u64 {
+            c.register(
+                f,
+                RegionKind::Subscription,
+                RegionSpec::interval(i * 100, i * 100 + 150),
+            )
+            .unwrap();
+        }
+        c.register(f, RegionKind::Update, RegionSpec::interval(0, 250))
+            .unwrap();
+        let (epoch, added, removed) = c.commit();
+        assert_eq!(epoch, 1);
+        assert_eq!((added, removed), (3, 0), "same diff as the unsharded path");
+        let m = c.metrics();
+        assert_eq!(m.counter("shard_ops"), 21, "20 subs + 1 update routed");
+        assert!(m.counter("shard_ops_max") <= m.counter("shard_ops"));
+        assert_eq!(m.gauge_value("shards"), Some(4.0));
+        // Every region lands in stripe 0 of [0, 10k): maximal skew.
+        assert_eq!(m.gauge_value("shard_imbalance"), Some(4.0));
+        coord.shutdown();
     }
 
     #[test]

@@ -43,6 +43,7 @@ use crate::core::{Regions1D, RegionsNd};
 use crate::exec::ThreadPool;
 use crate::session::{DdmSession, SessionParams};
 use crate::sets::SetImpl;
+use crate::shard::{AnySession, ShardStrategy, ShardedMatcher, ShardedSession, SpacePartitioner};
 
 /// Execution context handed to every [`Matcher`] call: the worker pool
 /// and the number of workers the matcher may use for this call.
@@ -215,6 +216,31 @@ impl DynamicMatcher for RebuildDynamic {
     }
 }
 
+/// Spatial sharding configuration (see [`crate::shard`]): how many
+/// stripes, which dimension to split, and how cuts are derived.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardParams {
+    /// Number of spatial shards; `1` (the default) disables sharding
+    /// everywhere — sessions are plain [`DdmSession`]s and the static
+    /// matcher is not wrapped.
+    pub shards: usize,
+    /// Dimension whose extent is striped (clamped to `d - 1` at
+    /// session construction).
+    pub split_dim: usize,
+    /// Uniform cuts or sample-balanced quantile cuts.
+    pub strategy: ShardStrategy,
+}
+
+impl Default for ShardParams {
+    fn default() -> Self {
+        Self {
+            shards: 1,
+            split_dim: 0,
+            strategy: ShardStrategy::Uniform,
+        }
+    }
+}
+
 /// How the engine picks its matcher.
 #[derive(Clone)]
 enum Selection {
@@ -271,6 +297,7 @@ pub struct EngineBuilder {
     nthreads: usize,
     params: MatchParams,
     session: SessionParams,
+    shard: ShardParams,
     pool: Option<Arc<ThreadPool>>,
 }
 
@@ -281,6 +308,7 @@ impl EngineBuilder {
             nthreads: 4,
             params: MatchParams::default(),
             session: SessionParams::default(),
+            shard: ShardParams::default(),
             pool: None,
         }
     }
@@ -380,6 +408,41 @@ impl EngineBuilder {
         self
     }
 
+    // ---- shard knobs (see crate::shard) -------------------------------------
+
+    /// Number of spatial shards (stripes of the split dimension).
+    /// With `n > 1` the static matcher is wrapped in a
+    /// [`ShardedMatcher`] and
+    /// [`any_session`](DdmEngine::any_session) /
+    /// [`sharded_session`](DdmEngine::sharded_session) hand out
+    /// [`ShardedSession`]s. `1` (default) disables sharding.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shard.shards = n.max(1);
+        self
+    }
+
+    /// Which dimension to stripe (default 0; clamped to the session's
+    /// dimensionality at construction).
+    pub fn split_dim(mut self, k: usize) -> Self {
+        self.shard.split_dim = k;
+        self
+    }
+
+    /// Derive stripe cuts from a sample of the first staged batch
+    /// (quantile-balanced) instead of uniform widths — see
+    /// [`ShardStrategy::Balanced`].
+    pub fn balanced_shards(mut self) -> Self {
+        self.shard.strategy = ShardStrategy::Balanced;
+        self
+    }
+
+    /// Replace the whole shard parameter block.
+    pub fn shard_params(mut self, shard: ShardParams) -> Self {
+        self.shard = shard;
+        self.shard.shards = self.shard.shards.max(1);
+        self
+    }
+
     /// Share an existing pool (e.g. the bench harness pool) instead of
     /// spawning one. The pool must be able to serve `threads` workers.
     pub fn pool(mut self, pool: Arc<ThreadPool>) -> Self {
@@ -397,18 +460,28 @@ impl EngineBuilder {
             self.nthreads,
             pool.max_threads()
         );
-        let matcher = match &self.selection {
+        // With shards > 1 every static backend is striped behind a
+        // ShardedMatcher (dedup'd by the owner-stripe rule); the
+        // unwrapped selection is kept for `dynamic()`.
+        let wrap = |m: Arc<dyn Matcher>| -> Arc<dyn Matcher> {
+            if self.shard.shards > 1 {
+                Arc::new(ShardedMatcher::new(m, self.shard.shards))
+            } else {
+                m
+            }
+        };
+        let matcher = wrap(match &self.selection {
             Selection::Fixed(algo) => algo_matcher(*algo, &self.params),
             // Auto resolves per call; keep the paper's overall winner
             // as the representative (dynamic-index donor, name).
             Selection::Auto => algo_matcher(Algo::Psbm, &self.params),
             Selection::Custom(m) => Arc::clone(m),
-        };
+        });
         let auto_set = match self.selection {
             Selection::Auto => Some(AutoSet {
-                bfm: algo_matcher(Algo::Bfm, &self.params),
-                sbm: algo_matcher(Algo::Sbm, &self.params),
-                psbm: algo_matcher(Algo::Psbm, &self.params),
+                bfm: wrap(algo_matcher(Algo::Bfm, &self.params)),
+                sbm: wrap(algo_matcher(Algo::Sbm, &self.params)),
+                psbm: wrap(algo_matcher(Algo::Psbm, &self.params)),
             }),
             _ => None,
         };
@@ -420,6 +493,7 @@ impl EngineBuilder {
             nthreads: self.nthreads,
             params: self.params,
             session: self.session,
+            shard: self.shard,
         }
     }
 }
@@ -453,6 +527,7 @@ pub struct DdmEngine {
     nthreads: usize,
     params: MatchParams,
     session: SessionParams,
+    shard: ShardParams,
 }
 
 impl DdmEngine {
@@ -591,6 +666,63 @@ impl DdmEngine {
     /// The session knobs new sessions are created with.
     pub fn session_params(&self) -> &SessionParams {
         &self.session
+    }
+
+    // ---- sharding ----------------------------------------------------------
+
+    /// The shard configuration engines and services read.
+    pub fn shard_params(&self) -> &ShardParams {
+        &self.shard
+    }
+
+    /// A fresh `d`-dimensional [`ShardedSession`] striping the builder's
+    /// [`shards`](EngineBuilder::shards) over `span` on the (clamped)
+    /// [`split_dim`](EngineBuilder::split_dim). With the
+    /// [`balanced_shards`](EngineBuilder::balanced_shards) strategy the
+    /// uniform cuts over `span` are only the fallback until the first
+    /// batch is sampled.
+    pub fn sharded_session(&self, d: usize, span: crate::core::Interval) -> ShardedSession {
+        assert!(d >= 1, "sessions need at least one dimension");
+        let split = self.shard.split_dim.min(d - 1);
+        let part = SpacePartitioner::uniform(self.shard.shards, split, span);
+        self.sharded_session_with_strategy(d, part, self.shard.strategy)
+    }
+
+    /// A sharded session over an explicit partitioner (uniform-cut
+    /// semantics: the given cuts are used as-is).
+    pub fn sharded_session_with(&self, d: usize, part: SpacePartitioner) -> ShardedSession {
+        self.sharded_session_with_strategy(d, part, ShardStrategy::Uniform)
+    }
+
+    /// A sharded session over an explicit partitioner and cut strategy
+    /// ([`ShardStrategy::Balanced`] re-derives the cuts from the first
+    /// staged batch; `part` is the fallback until then).
+    pub fn sharded_session_with_strategy(
+        &self,
+        d: usize,
+        part: SpacePartitioner,
+        strategy: ShardStrategy,
+    ) -> ShardedSession {
+        ShardedSession::new(
+            d,
+            part,
+            strategy,
+            Arc::clone(&self.pool),
+            self.nthreads,
+            self.session,
+        )
+    }
+
+    /// A session dispatched by the builder's shard count: a plain
+    /// [`DdmSession`] for `shards == 1`, a [`ShardedSession`] striping
+    /// `span` otherwise. This is what the HLA service and the CLI use,
+    /// so turning sharding on is purely a builder change.
+    pub fn any_session(&self, d: usize, span: crate::core::Interval) -> AnySession {
+        if self.shard.shards > 1 {
+            AnySession::Sharded(self.sharded_session(d, span))
+        } else {
+            AnySession::Single(self.session(d))
+        }
     }
 }
 
@@ -805,6 +937,30 @@ mod tests {
         assert_eq!(s.d(), 3);
         assert_eq!(s.epoch(), 0);
         assert_eq!(s.pending_ops(), 0);
+    }
+
+    #[test]
+    fn builder_shard_knobs_flow_through() {
+        use crate::shard::ShardStrategy;
+        let e = DdmEngine::builder()
+            .threads(2)
+            .shards(6)
+            .split_dim(1)
+            .balanced_shards()
+            .build();
+        let p = e.shard_params();
+        assert_eq!(p.shards, 6);
+        assert_eq!(p.split_dim, 1);
+        assert_eq!(p.strategy, ShardStrategy::Balanced);
+        assert!(e.algo_name().starts_with("sharded("), "{}", e.algo_name());
+        // split_dim clamps to d - 1 for a 1-d session.
+        let s = e.sharded_session(1, Interval::new(0.0, 10.0));
+        assert_eq!(s.partitioner().split_dim(), 0);
+        assert_eq!(s.shards(), 6);
+        // shards(1) leaves the matcher unwrapped and sessions plain.
+        let plain = DdmEngine::builder().algo(Algo::Itm).threads(1).shards(1).build();
+        assert_eq!(plain.algo_name(), "itm");
+        assert_eq!(plain.shard_params(), &ShardParams::default());
     }
 
     #[test]

@@ -145,6 +145,30 @@ impl ThreadPool {
         out
     }
 
+    /// Work-stealing fork-join map: evaluate `f(i)` for `i in 0..n`
+    /// across up to `workers` pool workers (atomic-cursor dynamic
+    /// scheduling) and collect the results in index order. The shared
+    /// helper behind the shard fan-outs
+    /// ([`crate::shard::ShardedSession`], [`crate::shard::ShardedMatcher`])
+    /// and the session recompute phase.
+    pub fn fan_map<T, F>(&self, workers: usize, n: usize, f: F) -> Vec<T>
+    where
+        T: Default + Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let slots: Vec<Mutex<T>> = (0..n).map(|_| Mutex::new(T::default())).collect();
+        let cursor = AtomicUsize::new(0);
+        self.run(workers.min(n.max(1)).max(1), |_p| loop {
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            let out = f(i);
+            *slots[i].lock().unwrap() = out;
+        });
+        slots.into_iter().map(|m| m.into_inner().unwrap()).collect()
+    }
+
     /// Fork-join parallel region: run `f(p)` for `p in 0..nthreads`,
     /// caller executes `p = 0`. Returns per-worker busy times.
     ///
@@ -338,6 +362,16 @@ mod tests {
             hits[p].fetch_add(1, Ordering::Relaxed);
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn fan_map_collects_in_index_order() {
+        let pool = ThreadPool::new(3);
+        let got = pool.fan_map(4, 100, |i| i * i);
+        assert_eq!(got, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        assert!(pool.fan_map(4, 0, |i| i).is_empty());
+        // Fewer items than workers still covers everything once.
+        assert_eq!(pool.fan_map(4, 2, |i| i + 1), vec![1, 2]);
     }
 
     #[test]

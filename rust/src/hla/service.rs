@@ -26,9 +26,11 @@
 use std::collections::VecDeque;
 
 use crate::bail;
+use crate::core::Interval;
 use crate::engine::DdmEngine;
 use crate::error::{Context, Result};
-use crate::session::{DdmSession, MatchDiff};
+use crate::session::MatchDiff;
+use crate::shard::{AnySession, ShardStats};
 
 use super::region::{RegionHandle, RegionKind, RegionSpec};
 use super::space::RoutingSpace;
@@ -107,9 +109,12 @@ pub struct DdmService {
     federates: Vec<Federate>,
     subs: RegionTable,
     upds: RegionTable,
-    /// The epoch-based incremental matching state. Every region op is
-    /// staged here (keyed by handle id); reads commit the epoch first.
-    session: DdmSession,
+    /// The epoch-based incremental matching state — a plain session,
+    /// or a sharded one when the engine was built with
+    /// [`shards`](crate::engine::EngineBuilder::shards) > 1 (the
+    /// stripes span the routing space's split dimension). Every region
+    /// op is staged here (keyed by handle id); reads flush first.
+    session: AnySession,
     /// Counters.
     pub notifications_routed: u64,
     pub matches_run: u64,
@@ -123,8 +128,19 @@ impl DdmService {
     }
 
     /// Service running on the given engine's pool and session knobs.
+    /// An engine built with `shards(n > 1)` gives the service a
+    /// [`ShardedSession`](crate::shard::ShardedSession) striping the
+    /// routing space's split-dimension extent.
     pub fn with_engine(space: RoutingSpace, engine: DdmEngine) -> Self {
-        let session = engine.session(space.d().max(1));
+        let d = space.d().max(1);
+        let split = engine.shard_params().split_dim.min(d - 1);
+        let upper = space
+            .dimensions
+            .get(split)
+            .map(|dim| dim.upper as f64)
+            .unwrap_or(1.0)
+            .max(1.0);
+        let session = engine.any_session(d, Interval::new(0.0, upper));
         Self {
             space,
             engine,
@@ -147,9 +163,16 @@ impl DdmService {
     }
 
     /// The underlying incremental session (epoch counter, retained
-    /// pair set, staged-op count).
-    pub fn session(&self) -> &DdmSession {
+    /// pair set, staged-op count, shard count).
+    pub fn session(&self) -> &AnySession {
         &self.session
+    }
+
+    /// Per-shard load snapshot (`None` when the engine is unsharded) —
+    /// the coordinator's per-shard metrics and imbalance gauge read
+    /// this after each commit.
+    pub fn shard_stats(&self) -> Option<Vec<ShardStats>> {
+        self.session.shard_stats()
     }
 
     pub fn n_subscriptions(&self) -> usize {
@@ -642,6 +665,48 @@ mod tests {
         let (pairs, mail) = run_scenario(tuned);
         assert_eq!(pairs, ref_pairs);
         assert_eq!(mail, ref_mail);
+        // …and spatially sharded services (uniform and balanced cuts)
+        // route the identical notifications — sharding is invisible at
+        // the service surface.
+        let sharded = DdmEngine::builder().threads(3).shards(4).parallel_cutoff(1).build();
+        let (pairs, mail) = run_scenario(sharded);
+        assert_eq!(pairs, ref_pairs, "sharded");
+        assert_eq!(mail, ref_mail, "sharded");
+        let balanced = DdmEngine::builder().threads(2).shards(3).balanced_shards().build();
+        let (pairs, mail) = run_scenario(balanced);
+        assert_eq!(pairs, ref_pairs, "balanced-sharded");
+        assert_eq!(mail, ref_mail, "balanced-sharded");
+    }
+
+    /// A sharded service exposes per-shard stats, and regions land in
+    /// the stripes of the routing space's split dimension.
+    #[test]
+    fn sharded_service_exposes_shard_stats() {
+        let mut svc = DdmService::with_engine(
+            RoutingSpace::uniform(2, 1000),
+            DdmEngine::builder().threads(2).shards(4).build(),
+        );
+        let f = svc.join("f");
+        // One subscription per stripe of dim 0 (stripe width 250).
+        for i in 0..4u64 {
+            let x = i * 250 + 10;
+            svc.register(f, RegionKind::Subscription, &RegionSpec::rect((x, x + 50), (0, 100)))
+                .unwrap();
+        }
+        // One wide update crossing all stripes.
+        let u = svc
+            .register(f, RegionKind::Update, &RegionSpec::rect((0, 1000), (0, 100)))
+            .unwrap();
+        let diff = svc.commit();
+        assert_eq!(diff.added.len(), 4, "one pair per stripe, each dedup'd");
+        let stats = svc.shard_stats().expect("sharded engine exposes stats");
+        assert_eq!(stats.len(), 4);
+        assert!(stats.iter().all(|s| s.subscriptions == 1 && s.updates == 1), "{stats:?}");
+        assert_eq!(svc.session().shards(), 4);
+        assert_eq!(svc.session().imbalance(), Some(1.0));
+        // Publish still routes exactly once per overlapping pair.
+        assert_eq!(svc.publish(u, 5).unwrap(), 4);
+        assert_eq!(svc.poll(f).len(), 4);
     }
 
     #[test]

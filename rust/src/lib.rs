@@ -60,6 +60,35 @@
 //! static path for one-shot matches or when nearly everything moves
 //! every step (`benches/abl_session.rs` measures the crossover).
 //!
+//! ## Sharded matching: partition the routing space itself
+//!
+//! Large, churny workloads can additionally stripe the routing space
+//! into spatial **shards** ([`shard`]): each stripe owns an
+//! independent session, epochs commit shard-parallel, and per-shard
+//! diffs merge into one deduplicated [`session::MatchDiff`] — a pair
+//! straddling a stripe boundary is reported exactly once, and a
+//! region crossing a boundary while still intersecting its partner
+//! reports nothing. Turning it on is one builder call:
+//!
+//! ```
+//! use ddm::core::Interval;
+//! use ddm::engine::DdmEngine;
+//!
+//! let engine = DdmEngine::builder().threads(2).shards(8).build();
+//! let mut sess = engine.sharded_session(1, Interval::new(0.0, 1000.0));
+//! sess.upsert_subscription(0, &[Interval::new(0.0, 400.0)]); // spans 4 stripes
+//! sess.upsert_update(7, &[Interval::new(120.0, 130.0)]);
+//! let diff = sess.commit();
+//! assert_eq!(diff.added, vec![(0, 7)]); // boundary replicas dedup'd
+//! assert_eq!(sess.shards(), 8);
+//! ```
+//!
+//! The same builder setting routes everywhere: `engine.any_session(d,
+//! span)` (what [`hla::DdmService`] uses) dispatches between the plain
+//! and sharded paths, and the static matcher is wrapped in a
+//! [`shard::ShardedMatcher`]. `benches/abl_shard.rs` sweeps shard
+//! counts × churn rates against the unsharded session.
+//!
 //! The crate contains:
 //!
 //! * [`engine`] — the unified matching API: the [`engine::Matcher`]
@@ -69,6 +98,10 @@
 //! * [`session`] — epoch-based incremental matching: batched region
 //!   churn staged into [`session::DdmSession`], applied in parallel,
 //!   reported as [`session::MatchDiff`] intersection deltas.
+//! * [`shard`] — spatial sharding: [`shard::SpacePartitioner`] stripes
+//!   (uniform or sample-balanced), [`shard::ShardedSession`] with
+//!   per-shard sessions and merged deduplicated diffs,
+//!   [`shard::ShardedMatcher`] for the static path.
 //! * [`core`] — intervals, d-rectangles, regions and the d-dimensional
 //!   reduction of the region matching problem (paper §2).
 //! * [`exec`] — the shared-memory parallel runtime the paper builds on
@@ -105,6 +138,7 @@ pub mod core;
 pub mod engine;
 pub mod error;
 pub mod session;
+pub mod shard;
 pub mod exec;
 pub mod sets;
 pub mod algos;
@@ -119,6 +153,7 @@ pub mod prng;
 
 pub use engine::{DdmEngine, DynamicMatcher, EngineBuilder, ExecCtx, Matcher};
 pub use session::{DdmSession, MatchDiff, SessionParams};
+pub use shard::{AnySession, ShardedMatcher, ShardedSession, SpacePartitioner};
 
 /// Crate-wide result type.
 pub type Result<T> = error::Result<T>;

@@ -3,8 +3,8 @@
 //! Subcommands:
 //!   ddm match      run one matching job and report K + wall-clock
 //!   ddm xla-match  same, on the AOT-compiled XLA backend
-//!   ddm replay     replay epochs of region churn (session diffs or
-//!                  full rebuild per epoch)
+//!   ddm replay     replay epochs of region churn (session diffs,
+//!                  sharded session diffs, or full rebuild per epoch)
 //!   ddm serve      run the coordinator service on a scripted scenario
 //!   ddm info       host/Table-1 report + artifact status
 //!
@@ -12,7 +12,9 @@
 //!   ddm match --algo psbm --n 1e6 --alpha 100 --threads 8 --set bit
 //!   ddm match --algo gbm --workload koln --scale 0.1 --ncells 3000
 //!   ddm replay --n 50k --epochs 10 --churn 0.05 --mode session --verify
+//!   ddm replay --mode sharded --shards 8 --hotspot 0.8 --verify
 //!   ddm replay --workload koln --scale 0.05 --mode rebuild
+//!   ddm match --algo psbm --n 1e6 --shards 8
 //!   ddm xla-match --n 4096 --alpha 10
 //!   ddm serve --config examples/service.toml
 
@@ -62,6 +64,7 @@ fn cmd_match(args: &Args) {
         .unwrap_or_else(|e| panic!("{e}"))
         .threads(threads)
         .ncells(args.opt("ncells", 3000usize))
+        .shards(args.opt("shards", 1usize))
         .set_impl(
             args.get("set")
                 .map(|s| s.parse::<SetImpl>().unwrap_or_else(|e| panic!("{e}")))
@@ -112,11 +115,13 @@ fn cmd_xla_match(args: &Args) {
     );
 }
 
-/// Replay epochs of region churn over a workload, either on a
-/// `DdmSession` (staged batch + `MatchDiff` per epoch — the tentpole
-/// incremental path) or by full re-match per epoch (`--mode rebuild`,
-/// the baseline the session replaces). Both modes run the identical
-/// deterministic move script, so their reported per-epoch pair churn
+/// Replay epochs of region churn over a workload: on a `DdmSession`
+/// (staged batch + `MatchDiff` per epoch — the incremental path), on a
+/// spatially sharded session (`--mode sharded --shards N`, per-shard
+/// parallel commits with merged deduplicated diffs), or by full
+/// re-match per epoch (`--mode rebuild`, the baseline both replace).
+/// All modes run the identical deterministic move script — optionally
+/// skewed with `--hotspot` — so their reported per-epoch pair churn
 /// can be compared directly.
 fn cmd_replay(args: &Args) {
     use ddm::workload::churn::{diff_pair_counts, relocate, MoveScript};
@@ -124,6 +129,8 @@ fn cmd_replay(args: &Args) {
     let threads: usize = args.opt("threads", 4usize);
     let epochs: usize = args.opt("epochs", 10usize);
     let churn: f64 = args.opt("churn", 0.05f64);
+    let shards: usize = args.opt("shards", 4usize);
+    let hotspot: f64 = args.opt("hotspot", 0.0f64);
     let mode = args.get("mode").unwrap_or("session").to_string();
     let seed: u64 = args.opt("seed", 42u64);
 
@@ -150,9 +157,14 @@ fn cmd_replay(args: &Args) {
         .max(upds.bounds().map(|b| b.hi).unwrap_or(0.0));
     let n_regions = subs.len() + upds.len();
     let moves_per_epoch = ((n_regions as f64) * churn).ceil().max(1.0) as usize;
+    let shard_note = if mode == "sharded" {
+        format!(" shards={shards}")
+    } else {
+        String::new()
+    };
     println!(
-        "replay: mode={mode} epochs={epochs} churn={churn} ({moves_per_epoch} moves/epoch) \
-         threads={threads} workload=[{desc}]"
+        "replay: mode={mode}{shard_note} epochs={epochs} churn={churn} hotspot={hotspot} \
+         ({moves_per_epoch} moves/epoch) threads={threads} workload=[{desc}]"
     );
 
     let engine = DdmEngine::builder()
@@ -160,12 +172,23 @@ fn cmd_replay(args: &Args) {
         .unwrap_or_else(|e| panic!("{e}"))
         .threads(threads)
         .build();
-    // Both modes replay the identical deterministic move script.
-    let mut script = MoveScript::new(seed ^ 0xC0FFEE);
+    // All modes replay the identical deterministic move script.
+    let mut script = MoveScript::with_hotspot(seed ^ 0xC0FFEE, hotspot);
     let (mut tot_added, mut tot_removed) = (0usize, 0usize);
     match mode.as_str() {
-        "session" => {
-            let mut sess = engine.session(1);
+        "session" | "sharded" => {
+            let mut sess = if mode == "sharded" {
+                ddm::shard::AnySession::Sharded(engine.sharded_session_with(
+                    1,
+                    ddm::shard::SpacePartitioner::uniform(
+                        shards,
+                        0,
+                        ddm::core::Interval::new(0.0, space_hi),
+                    ),
+                ))
+            } else {
+                ddm::shard::AnySession::Single(engine.session(1))
+            };
             let t0 = Instant::now();
             sess.load_dense_1d(&subs, &upds);
             let d0 = sess.commit();
@@ -193,15 +216,18 @@ fn cmd_replay(args: &Args) {
             }
             let dt = t1.elapsed().as_secs_f64();
             println!(
-                "session replay: {} pairs live, +{tot_added} -{tot_removed} churned, \
+                "{mode} replay: {} pairs live, +{tot_added} -{tot_removed} churned, \
                  {} per epoch",
                 sess.n_pairs(),
                 ddm::bench::stats::fmt_secs(dt / epochs.max(1) as f64)
             );
+            if let Some(im) = sess.imbalance() {
+                println!("shard imbalance: {im:.2} over {} shards", sess.shards());
+            }
             if args.flag("verify") {
                 let want = engine.pairs_1d(&subs, &upds);
-                assert_eq!(sess.pairs(), want, "session state diverged from static match");
-                println!("verify: session pair set == fresh static match ({} pairs)", want.len());
+                assert_eq!(sess.pairs(), want, "{mode} state diverged from static match");
+                println!("verify: {mode} pair set == fresh static match ({} pairs)", want.len());
             }
         }
         "rebuild" => {
@@ -238,7 +264,7 @@ fn cmd_replay(args: &Args) {
             );
         }
         other => {
-            eprintln!("unknown replay mode '{other}' (session|rebuild)");
+            eprintln!("unknown replay mode '{other}' (session|sharded|rebuild)");
             std::process::exit(2);
         }
     }
@@ -258,12 +284,14 @@ fn cmd_serve(args: &Args) {
     let space_len = cfg.int_or("serve", "space", 100_000) as u64;
 
     let algo = cfg.str_or("serve", "algo", "psbm");
+    let shards = args.opt("shards", cfg.int_or("serve", "shards", 1) as usize);
     let coord = Coordinator::spawn(CoordinatorConfig::new(
         RoutingSpace::uniform(1, space_len),
         DdmEngine::builder()
             .algo_str(args.get("algo").unwrap_or(&algo))
             .unwrap_or_else(|e| panic!("{e}"))
             .threads(threads)
+            .shards(shards)
             .build(),
     ));
     let c = coord.client();

@@ -41,7 +41,9 @@ use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::algos::dynamic::{Side, TreeIndex};
+pub use crate::algos::dynamic::Side;
+
+use crate::algos::dynamic::TreeIndex;
 use crate::core::interval::Interval;
 use crate::core::sink::{pack_pair, unpack_pair, PairVec};
 use crate::core::{Regions1D, RegionsNd};
@@ -191,6 +193,25 @@ impl DdmSession {
     /// Currently intersecting pairs (applied state).
     pub fn n_pairs(&self) -> usize {
         self.n_pairs
+    }
+
+    /// Live regions on one side (applied state), O(1) — side-keyed
+    /// spelling of [`n_subscriptions`](Self::n_subscriptions) /
+    /// [`n_updates`](Self::n_updates) for callers that hold a
+    /// [`Side`]: the per-shard load snapshot
+    /// ([`crate::shard::ShardedSession::shard_stats`], which feeds the
+    /// imbalance gauge) is built from it.
+    pub fn region_count(&self, side: Side) -> usize {
+        match side {
+            Side::Subscription => self.n_subscriptions(),
+            Side::Update => self.n_updates(),
+        }
+    }
+
+    /// Currently retained intersecting pairs (applied state) — the
+    /// introspection alias of [`n_pairs`](Self::n_pairs), O(1).
+    pub fn retained_pair_count(&self) -> usize {
+        self.n_pairs()
     }
 
     // ---- staging -----------------------------------------------------------
@@ -347,21 +368,13 @@ impl DdmSession {
         touched.extend(sub_ops.keys().map(|&k| (Side::Subscription, k)));
         touched.extend(upd_ops.keys().map(|&k| (Side::Update, k)));
         let results: Vec<Vec<u32>> = if par && touched.len() > 1 {
-            let slots: Vec<Mutex<Vec<u32>>> =
-                touched.iter().map(|_| Mutex::new(Vec::new())).collect();
-            let cursor = AtomicUsize::new(0);
             let sub_dims = &self.sub_dims;
             let upd_dims = &self.upd_dims;
             let workers = self.nthreads.min(touched.len());
-            self.pool.run(workers, |_p| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= touched.len() {
-                    break;
-                }
+            self.pool.fan_map(workers, touched.len(), |i| {
                 let (side, key) = touched[i];
-                *slots[i].lock().unwrap() = recompute(sub_dims, upd_dims, side, key);
-            });
-            slots.into_iter().map(|m| m.into_inner().unwrap()).collect()
+                recompute(sub_dims, upd_dims, side, key)
+            })
         } else {
             touched
                 .iter()
@@ -861,6 +874,26 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// region_count / retained_pair_count / epoch answer from applied
+    /// state in O(1) — no diff accumulation needed by callers.
+    #[test]
+    fn introspection_is_cheap_and_current() {
+        let mut sess = engine().session(1);
+        sess.upsert_subscription(3, &[Interval::new(0.0, 10.0)]);
+        sess.upsert_update(4, &[Interval::new(5.0, 15.0)]);
+        assert_eq!(sess.region_count(Side::Subscription), 0, "staged ops are invisible");
+        assert_eq!(sess.retained_pair_count(), 0);
+        sess.commit();
+        assert_eq!(sess.region_count(Side::Subscription), 1);
+        assert_eq!(sess.region_count(Side::Update), 1);
+        assert_eq!(sess.retained_pair_count(), 1);
+        assert_eq!(sess.epoch(), 1);
+        sess.remove_update(4);
+        sess.flush();
+        assert_eq!(sess.region_count(Side::Update), 0);
+        assert_eq!(sess.retained_pair_count(), 0, "flush keeps counts current");
     }
 
     #[test]

@@ -1,0 +1,242 @@
+//! [`ShardedMatcher`]: spatial sharding for the **static** matching
+//! path, behind the same object-safe [`Matcher`] seam as every other
+//! backend.
+//!
+//! The wrapper stripes dimension 0 of each call's workload into
+//! `shards` uniform stripes (cuts derived from the call's own bounds),
+//! replicates regions into every stripe they overlap, matches the
+//! stripes **in parallel** with the wrapped matcher running serially
+//! per stripe, and deduplicates boundary pairs with an owner rule: a
+//! pair is reported only by the first stripe its *intersection*
+//! overlaps — `max(first stripe of s, first stripe of u)` — which both
+//! regions are guaranteed to inhabit, so every intersecting pair is
+//! reported exactly once.
+//!
+//! Inner calls get a private zero-capacity pool (single-worker regions
+//! only), keeping the engine pool's fan-out region the sole user of
+//! real workers — nested parallel regions never happen.
+
+use std::sync::Arc;
+
+use crate::core::sink::{FnSink, MatchSink};
+use crate::core::{Regions1D, RegionIdx};
+use crate::engine::{ExecCtx, Matcher};
+use crate::exec::ThreadPool;
+
+use super::partition::SpacePartitioner;
+
+/// Per-stripe dense inputs plus the map back to global indices.
+#[derive(Default)]
+struct ShardInput {
+    subs: Regions1D,
+    sub_ids: Vec<RegionIdx>,
+    upds: Regions1D,
+    upd_ids: Vec<RegionIdx>,
+}
+
+/// A [`Matcher`] that stripes the workload across `shards` spatial
+/// partitions and runs the wrapped matcher per stripe (in parallel
+/// across stripes). Built automatically by
+/// [`EngineBuilder::shards`](crate::engine::EngineBuilder::shards).
+pub struct ShardedMatcher {
+    inner: Arc<dyn Matcher>,
+    shards: usize,
+    name: String,
+    /// Zero-capacity pool for the serial inner calls — `run(1, _)`
+    /// executes on the calling worker and never contends with the
+    /// outer fan-out region.
+    serial_pool: ThreadPool,
+}
+
+impl ShardedMatcher {
+    pub fn new(inner: Arc<dyn Matcher>, shards: usize) -> Self {
+        assert!(shards >= 1, "need at least one shard");
+        let name = format!("sharded({}x{})", inner.name(), shards);
+        Self {
+            inner,
+            shards,
+            name,
+            serial_pool: ThreadPool::new(0),
+        }
+    }
+
+    /// The wrapped backend.
+    pub fn inner(&self) -> &Arc<dyn Matcher> {
+        &self.inner
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+}
+
+impl Matcher for ShardedMatcher {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn match_1d(
+        &self,
+        ctx: &ExecCtx<'_>,
+        subs: &Regions1D,
+        upds: &Regions1D,
+        sink: &mut dyn MatchSink,
+    ) {
+        let (Some(sb), Some(ub)) = (subs.bounds(), upds.bounds()) else {
+            return; // one side empty: nothing can intersect
+        };
+        let span = sb.hull(&ub);
+        if self.shards <= 1 || span.len() <= 0.0 {
+            return self.inner.match_1d(ctx, subs, upds, sink);
+        }
+        let part = SpacePartitioner::uniform(self.shards, 0, span);
+
+        // Route (replicating stripe-straddlers) and record each
+        // region's first stripe for the owner rule.
+        let mut inputs: Vec<ShardInput> = (0..self.shards).map(|_| ShardInput::default()).collect();
+        let mut sub_first: Vec<u32> = Vec::with_capacity(subs.len());
+        for i in 0..subs.len() {
+            let iv = subs.get(i);
+            let (a, b) = part.route(iv);
+            sub_first.push(a as u32);
+            for input in &mut inputs[a..=b] {
+                input.subs.push(iv);
+                input.sub_ids.push(i as RegionIdx);
+            }
+        }
+        let mut upd_first: Vec<u32> = Vec::with_capacity(upds.len());
+        for j in 0..upds.len() {
+            let iv = upds.get(j);
+            let (a, b) = part.route(iv);
+            upd_first.push(a as u32);
+            for input in &mut inputs[a..=b] {
+                input.upds.push(iv);
+                input.upd_ids.push(j as RegionIdx);
+            }
+        }
+
+        // Match one stripe serially, keeping only owner-stripe pairs.
+        let run_shard = |i: usize| -> Vec<(RegionIdx, RegionIdx)> {
+            let input = &inputs[i];
+            if input.subs.is_empty() || input.upds.is_empty() {
+                return Vec::new();
+            }
+            let sctx = ExecCtx::new(&self.serial_pool, 1);
+            let mut out = Vec::new();
+            {
+                let mut fsink = FnSink(|ls: u32, lu: u32| {
+                    let s = input.sub_ids[ls as usize];
+                    let u = input.upd_ids[lu as usize];
+                    if sub_first[s as usize].max(upd_first[u as usize]) as usize == i {
+                        out.push((s, u));
+                    }
+                });
+                self.inner.match_1d(&sctx, &input.subs, &input.upds, &mut fsink);
+            }
+            out
+        };
+
+        let workers = ctx.nthreads.min(self.shards).max(1);
+        let shard_pairs: Vec<Vec<(RegionIdx, RegionIdx)>> = if workers > 1 {
+            ctx.pool.fan_map(workers, self.shards, |i| run_shard(i))
+        } else {
+            (0..self.shards).map(run_shard).collect()
+        };
+        for pairs in shard_pairs {
+            for (s, u) in pairs {
+                sink.report(s, u);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::Algo;
+    use crate::core::interval::Interval;
+    use crate::core::region::random_regions_1d;
+    use crate::engine::{algo_matcher, DdmEngine};
+    use crate::prng::Rng;
+
+    #[test]
+    fn sharded_matcher_agrees_with_plain_backend() {
+        let mut rng = Rng::new(0x5AA0);
+        let subs = random_regions_1d(&mut rng, 400, 500.0, 12.0);
+        let upds = random_regions_1d(&mut rng, 350, 500.0, 9.0);
+        let plain = DdmEngine::builder().algo(Algo::Psbm).threads(2).build();
+        let want = plain.pairs_1d(&subs, &upds);
+        assert!(!want.is_empty());
+        for shards in [1usize, 2, 3, 8] {
+            let engine = DdmEngine::builder().algo(Algo::Psbm).threads(2).shards(shards).build();
+            assert_eq!(engine.pairs_1d(&subs, &upds), want, "shards={shards}");
+            assert_eq!(engine.count_1d(&subs, &upds), want.len() as u64, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn owner_rule_dedups_wide_regions() {
+        // One subscription spanning the whole space intersects every
+        // update exactly once no matter how many stripes replicate it.
+        let subs = Regions1D::from_intervals(&[Interval::new(0.0, 100.0)]);
+        let upds = Regions1D::from_intervals(&[
+            Interval::new(5.0, 15.0),
+            Interval::new(45.0, 55.0), // straddles the 2-shard cut
+            Interval::new(90.0, 99.0),
+        ]);
+        for shards in [2usize, 4, 7] {
+            let engine = DdmEngine::builder().algo(Algo::Bfm).threads(2).shards(shards).build();
+            assert_eq!(
+                engine.pairs_1d(&subs, &upds),
+                vec![(0, 0), (0, 1), (0, 2)],
+                "shards={shards}"
+            );
+        }
+    }
+
+    #[test]
+    fn nd_reduction_composes_with_sharding() {
+        let mut rng = Rng::new(0x5AA1);
+        let d = 3;
+        let mut subs = crate::core::RegionsNd::new(d);
+        let mut upds = crate::core::RegionsNd::new(d);
+        for _ in 0..120 {
+            let rect: Vec<Interval> = (0..d)
+                .map(|_| {
+                    let lo = rng.uniform(0.0, 80.0);
+                    Interval::new(lo, lo + rng.uniform(0.5, 25.0))
+                })
+                .collect();
+            subs.push(&rect);
+        }
+        for _ in 0..100 {
+            let rect: Vec<Interval> = (0..d)
+                .map(|_| {
+                    let lo = rng.uniform(0.0, 80.0);
+                    Interval::new(lo, lo + rng.uniform(0.5, 25.0))
+                })
+                .collect();
+            upds.push(&rect);
+        }
+        let plain = DdmEngine::builder().algo(Algo::Itm).threads(2).build();
+        let sharded = DdmEngine::builder().algo(Algo::Itm).threads(2).shards(5).build();
+        assert_eq!(sharded.pairs_nd(&subs, &upds), plain.pairs_nd(&subs, &upds));
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let m = ShardedMatcher::new(algo_matcher(Algo::Bfm, &Default::default()), 4);
+        assert_eq!(m.shards(), 4);
+        assert!(m.name().contains("bfm"));
+        let pool = ThreadPool::new(1);
+        let ctx = ExecCtx::new(&pool, 2);
+        let mut sink = crate::core::sink::VecSink::default();
+        m.match_1d(&ctx, &Regions1D::default(), &Regions1D::default(), &mut sink);
+        assert!(sink.pairs.is_empty());
+        // Zero-width span (all points identical) falls through to the
+        // plain backend.
+        let pt = Regions1D::from_intervals(&[Interval::new(5.0, 5.0)]);
+        m.match_1d(&ctx, &pt, &pt, &mut sink);
+        assert!(sink.pairs.is_empty(), "empty intervals never intersect");
+    }
+}

@@ -1,0 +1,288 @@
+//! Sharded matching: spatial partitions with per-shard sessions and
+//! merged cross-shard diffs.
+//!
+//! The paper parallelizes one shared match over a single address
+//! space; its predecessor line (*A Parallel Data Distribution
+//! Management Algorithm*, arXiv:1309.3458) exploits the complementary
+//! axis — partition the **routing space** itself so disjoint
+//! sub-problems match independently. This module adds that layer
+//! between the service and the session:
+//!
+//! * [`SpacePartitioner`] — stripes one split dimension (uniform cuts
+//!   over a span, or sample-based balanced quantile cuts) and routes
+//!   each region to every stripe its extent overlaps.
+//! * [`ShardedSession`] — one inner
+//!   [`DdmSession`](crate::session::DdmSession) per stripe; staged ops
+//!   fan out to owning shards (with boundary-crossing regions
+//!   re-routed), epochs commit shard-parallel on the
+//!   [`exec`](crate::exec) pool, per-shard
+//!   [`MatchDiff`](crate::session::MatchDiff)s merge through global
+//!   pair refcounts into one deduplicated diff.
+//! * [`ShardedMatcher`] — the static-path counterpart: a
+//!   [`Matcher`](crate::engine::Matcher) wrapper that stripes each
+//!   call's workload and dedups with an owner-stripe rule.
+//! * [`AnySession`] — runtime dispatch between a plain session and a
+//!   sharded one, so the HLA service and the CLI stay agnostic of the
+//!   builder's [`shards`](crate::engine::EngineBuilder::shards)
+//!   setting.
+//!
+//! Everything is wired through the engine:
+//! `DdmEngine::builder().shards(8).split_dim(0)` makes
+//! [`DdmEngine::sharded_session`](crate::engine::DdmEngine::sharded_session)
+//! / [`any_session`](crate::engine::DdmEngine::any_session) hand out
+//! sharded state and wraps the static matcher in a [`ShardedMatcher`].
+
+pub mod matcher;
+pub mod partition;
+pub mod session;
+
+pub use matcher::ShardedMatcher;
+pub use partition::SpacePartitioner;
+pub use session::{ShardStats, ShardedSession};
+
+use crate::core::interval::Interval;
+use crate::core::sink::PairVec;
+use crate::core::{Regions1D, RegionsNd};
+use crate::session::{DdmSession, MatchDiff};
+
+/// How a sharded session derives its stripe cuts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardStrategy {
+    /// Equal-width stripes over the configured span.
+    #[default]
+    Uniform,
+    /// Quantile cuts sampled from the first staged batch (stripes hold
+    /// roughly equal region counts even under skew); uniform cuts
+    /// serve as the fallback until data arrives.
+    Balanced,
+}
+
+/// Runtime dispatch between a plain [`DdmSession`] and a
+/// [`ShardedSession`], exposing the shared staging/commit/read surface
+/// consumers (the HLA service, `ddm replay`) program against. Built by
+/// [`DdmEngine::any_session`](crate::engine::DdmEngine::any_session).
+pub enum AnySession {
+    Single(DdmSession),
+    Sharded(ShardedSession),
+}
+
+impl AnySession {
+    pub fn d(&self) -> usize {
+        match self {
+            AnySession::Single(s) => s.d(),
+            AnySession::Sharded(s) => s.d(),
+        }
+    }
+
+    /// Number of shards (`1` for the unsharded path).
+    pub fn shards(&self) -> usize {
+        match self {
+            AnySession::Single(_) => 1,
+            AnySession::Sharded(s) => s.shards(),
+        }
+    }
+
+    /// Number of committed epochs.
+    pub fn epoch(&self) -> u64 {
+        match self {
+            AnySession::Single(s) => s.epoch(),
+            AnySession::Sharded(s) => s.epoch(),
+        }
+    }
+
+    /// Staged (coalesced) ops not yet applied.
+    pub fn pending_ops(&self) -> usize {
+        match self {
+            AnySession::Single(s) => s.pending_ops(),
+            AnySession::Sharded(s) => s.pending_ops(),
+        }
+    }
+
+    pub fn n_subscriptions(&self) -> usize {
+        match self {
+            AnySession::Single(s) => s.n_subscriptions(),
+            AnySession::Sharded(s) => s.n_subscriptions(),
+        }
+    }
+
+    pub fn n_updates(&self) -> usize {
+        match self {
+            AnySession::Single(s) => s.n_updates(),
+            AnySession::Sharded(s) => s.n_updates(),
+        }
+    }
+
+    /// Retained intersecting pairs (sharded: globally merged count as
+    /// of the last commit).
+    pub fn n_pairs(&self) -> usize {
+        match self {
+            AnySession::Single(s) => s.n_pairs(),
+            AnySession::Sharded(s) => s.n_pairs(),
+        }
+    }
+
+    pub fn upsert_subscription(&mut self, key: u32, rect: &[Interval]) {
+        match self {
+            AnySession::Single(s) => s.upsert_subscription(key, rect),
+            AnySession::Sharded(s) => s.upsert_subscription(key, rect),
+        }
+    }
+
+    pub fn upsert_update(&mut self, key: u32, rect: &[Interval]) {
+        match self {
+            AnySession::Single(s) => s.upsert_update(key, rect),
+            AnySession::Sharded(s) => s.upsert_update(key, rect),
+        }
+    }
+
+    pub fn remove_subscription(&mut self, key: u32) {
+        match self {
+            AnySession::Single(s) => s.remove_subscription(key),
+            AnySession::Sharded(s) => s.remove_subscription(key),
+        }
+    }
+
+    pub fn remove_update(&mut self, key: u32) {
+        match self {
+            AnySession::Single(s) => s.remove_update(key),
+            AnySession::Sharded(s) => s.remove_update(key),
+        }
+    }
+
+    /// Stage a whole 1-D workload keyed by dense index.
+    pub fn load_dense_1d(&mut self, subs: &Regions1D, upds: &Regions1D) {
+        match self {
+            AnySession::Single(s) => s.load_dense_1d(subs, upds),
+            AnySession::Sharded(s) => s.load_dense_1d(subs, upds),
+        }
+    }
+
+    /// Stage a whole d-dimensional workload keyed by dense index.
+    pub fn load_dense(&mut self, subs: &RegionsNd, upds: &RegionsNd) {
+        match self {
+            AnySession::Single(s) => s.load_dense(subs, upds),
+            AnySession::Sharded(s) => s.load_dense(subs, upds),
+        }
+    }
+
+    /// Apply staged ops without closing the epoch.
+    pub fn flush(&mut self) {
+        match self {
+            AnySession::Single(s) => s.flush(),
+            AnySession::Sharded(s) => s.flush(),
+        }
+    }
+
+    /// Apply staged ops and close the epoch, returning the (sharded:
+    /// merged, deduplicated) intersection delta.
+    pub fn commit(&mut self) -> MatchDiff {
+        match self {
+            AnySession::Single(s) => s.commit(),
+            AnySession::Sharded(s) => s.commit(),
+        }
+    }
+
+    /// Every currently intersecting pair, sorted and duplicate-free.
+    pub fn pairs(&self) -> PairVec {
+        match self {
+            AnySession::Single(s) => s.pairs(),
+            AnySession::Sharded(s) => s.pairs(),
+        }
+    }
+
+    pub fn updates_of(&self, sub_key: u32) -> Vec<u32> {
+        match self {
+            AnySession::Single(s) => s.updates_of(sub_key),
+            AnySession::Sharded(s) => s.updates_of(sub_key),
+        }
+    }
+
+    pub fn subscriptions_of(&self, upd_key: u32) -> Vec<u32> {
+        match self {
+            AnySession::Single(s) => s.subscriptions_of(upd_key),
+            AnySession::Sharded(s) => s.subscriptions_of(upd_key),
+        }
+    }
+
+    pub fn contains_pair(&self, sub_key: u32, upd_key: u32) -> bool {
+        match self {
+            AnySession::Single(s) => s.contains_pair(sub_key, upd_key),
+            AnySession::Sharded(s) => s.contains_pair(sub_key, upd_key),
+        }
+    }
+
+    /// Per-shard load snapshot (`None` on the unsharded path).
+    pub fn shard_stats(&self) -> Option<Vec<ShardStats>> {
+        match self {
+            AnySession::Single(_) => None,
+            AnySession::Sharded(s) => Some(s.shard_stats()),
+        }
+    }
+
+    /// Shard load imbalance gauge (`None` on the unsharded path).
+    pub fn imbalance(&self) -> Option<f64> {
+        match self {
+            AnySession::Single(_) => None,
+            AnySession::Sharded(s) => Some(s.imbalance()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::DdmEngine;
+
+    #[test]
+    fn any_session_dispatches_by_builder_shards() {
+        let span = Interval::new(0.0, 100.0);
+        let single = DdmEngine::builder().threads(1).build().any_session(1, span);
+        assert!(matches!(single, AnySession::Single(_)));
+        assert_eq!(single.shards(), 1);
+        assert!(single.shard_stats().is_none());
+        assert!(single.imbalance().is_none());
+
+        let sharded = DdmEngine::builder()
+            .threads(2)
+            .shards(4)
+            .build()
+            .any_session(2, span);
+        assert!(matches!(sharded, AnySession::Sharded(_)));
+        assert_eq!(sharded.shards(), 4);
+        assert_eq!(sharded.shard_stats().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn any_session_paths_agree_on_the_same_script() {
+        let span = Interval::new(0.0, 100.0);
+        let mut sessions = vec![
+            DdmEngine::builder().threads(2).build().any_session(1, span),
+            DdmEngine::builder()
+                .threads(2)
+                .shards(3)
+                .parallel_cutoff(1)
+                .build()
+                .any_session(1, span),
+        ];
+        let mut rng = crate::prng::Rng::new(0xA5E);
+        for _ in 0..5 {
+            for _ in 0..40 {
+                let key = rng.below(20) as u32;
+                let lo = rng.uniform(0.0, 90.0);
+                let iv = Interval::new(lo, lo + rng.uniform(1.0, 45.0));
+                let sub_side = rng.chance(0.5);
+                for s in &mut sessions {
+                    if sub_side {
+                        s.upsert_subscription(key, &[iv]);
+                    } else {
+                        s.upsert_update(key, &[iv]);
+                    }
+                }
+            }
+            let diffs: Vec<MatchDiff> = sessions.iter_mut().map(|s| s.commit()).collect();
+            assert_eq!(diffs[0], diffs[1]);
+            assert_eq!(sessions[0].pairs(), sessions[1].pairs());
+            assert_eq!(sessions[0].n_pairs(), sessions[1].n_pairs());
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Spatial partitioning of the routing space into shard stripes.
+//!
+//! A [`SpacePartitioner`] splits one chosen dimension of the routing
+//! space into `shards` contiguous half-open stripes and routes every
+//! region to the (inclusive) range of stripes its split-dimension
+//! extent overlaps. Regions wider than a stripe are **replicated**
+//! into every stripe they touch — the merge layer
+//! ([`ShardedSession`](super::ShardedSession) /
+//! [`ShardedMatcher`](super::ShardedMatcher)) owns deduplication.
+//!
+//! Two cut constructions:
+//!
+//! * [`uniform`](SpacePartitioner::uniform) — equal-width stripes over
+//!   a known span (the HLA routing-space extent, a workload's bounds);
+//! * [`balanced`](SpacePartitioner::balanced) — sample-based quantile
+//!   cuts: given a sample of region positions on the split dimension,
+//!   each stripe receives roughly the same number of sampled
+//!   positions, which keeps skewed (hotspot) workloads from
+//!   serializing on one hot shard.
+
+use crate::core::interval::Interval;
+
+/// Routes regions to the stripes of one split dimension.
+///
+/// Stripe `i` covers `[cuts[i-1], cuts[i])`, with stripe `0` open
+/// below and the last stripe open above — every point of the real
+/// line belongs to exactly one stripe, so routing never drops a
+/// region no matter how the span estimate relates to the data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpacePartitioner {
+    split_dim: usize,
+    /// Interior cut points, non-decreasing; `shards = cuts.len() + 1`.
+    cuts: Vec<f64>,
+}
+
+impl SpacePartitioner {
+    /// The trivial single-stripe partitioner (everything routes to
+    /// shard 0).
+    pub fn single(split_dim: usize) -> Self {
+        Self {
+            split_dim,
+            cuts: Vec::new(),
+        }
+    }
+
+    /// Equal-width stripes over `span` on dimension `split_dim`.
+    pub fn uniform(shards: usize, split_dim: usize, span: Interval) -> Self {
+        assert!(shards >= 1, "need at least one shard");
+        let w = span.len() / shards as f64;
+        let cuts = (1..shards).map(|i| span.lo + w * i as f64).collect();
+        Self { split_dim, cuts }
+    }
+
+    /// Sample-based balanced stripes: cut at the `shards`-quantiles of
+    /// `sample` (region positions on the split dimension), so each
+    /// stripe holds roughly the same number of sampled positions.
+    /// Duplicate quantiles (heavy point masses) are kept, degenerating
+    /// to empty stripes rather than changing the shard count.
+    pub fn balanced(shards: usize, split_dim: usize, sample: &[f64]) -> Self {
+        assert!(shards >= 1, "need at least one shard");
+        if shards == 1 || sample.is_empty() {
+            return Self::single(split_dim);
+        }
+        let mut pts: Vec<f64> = sample.iter().copied().filter(|x| x.is_finite()).collect();
+        if pts.is_empty() {
+            return Self::single(split_dim);
+        }
+        pts.sort_unstable_by(f64::total_cmp);
+        let cuts = (1..shards)
+            .map(|i| pts[(i * pts.len() / shards).min(pts.len() - 1)])
+            .collect();
+        Self { split_dim, cuts }
+    }
+
+    /// Number of stripes.
+    pub fn shards(&self) -> usize {
+        self.cuts.len() + 1
+    }
+
+    /// The dimension this partitioner splits on.
+    pub fn split_dim(&self) -> usize {
+        self.split_dim
+    }
+
+    /// The interior cut points (ascending; `shards() - 1` of them).
+    pub fn cuts(&self) -> &[f64] {
+        &self.cuts
+    }
+
+    /// The stripe containing point `x`.
+    pub fn shard_of(&self, x: f64) -> usize {
+        self.cuts.partition_point(|&c| c <= x)
+    }
+
+    /// Inclusive stripe range `(first, last)` overlapped by the
+    /// half-open interval `iv` on the split dimension. Empty intervals
+    /// route to the single stripe containing their point.
+    pub fn route(&self, iv: Interval) -> (usize, usize) {
+        let first = self.cuts.partition_point(|&c| c <= iv.lo);
+        let last = self.cuts.partition_point(|&c| c < iv.hi);
+        (first, last.max(first))
+    }
+
+    /// Route a full rectangle (convenience: projects onto the split
+    /// dimension).
+    pub fn route_rect(&self, rect: &[Interval]) -> (usize, usize) {
+        self.route(rect[self.split_dim])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_cuts_and_point_routing() {
+        let p = SpacePartitioner::uniform(4, 0, Interval::new(0.0, 100.0));
+        assert_eq!(p.shards(), 4);
+        assert_eq!(p.cuts(), &[25.0, 50.0, 75.0]);
+        assert_eq!(p.shard_of(0.0), 0);
+        assert_eq!(p.shard_of(24.999), 0);
+        assert_eq!(p.shard_of(25.0), 1, "cut points belong to the upper stripe");
+        assert_eq!(p.shard_of(99.0), 3);
+        // Out-of-span points still route (open outer stripes).
+        assert_eq!(p.shard_of(-5.0), 0);
+        assert_eq!(p.shard_of(1e9), 3);
+    }
+
+    #[test]
+    fn interval_routing_covers_exactly_the_overlapped_stripes() {
+        let p = SpacePartitioner::uniform(4, 0, Interval::new(0.0, 100.0));
+        assert_eq!(p.route(Interval::new(0.0, 10.0)), (0, 0));
+        assert_eq!(p.route(Interval::new(10.0, 30.0)), (0, 1));
+        assert_eq!(p.route(Interval::new(0.0, 100.0)), (0, 3), "full-span region hits all");
+        // Half-open: an interval ending exactly at a cut does NOT enter
+        // the upper stripe; one starting at a cut does not touch the
+        // lower one.
+        assert_eq!(p.route(Interval::new(10.0, 25.0)), (0, 0));
+        assert_eq!(p.route(Interval::new(25.0, 30.0)), (1, 1));
+        // Empty interval at a cut point routes to one stripe.
+        assert_eq!(p.route(Interval::new(25.0, 25.0)), (1, 1));
+    }
+
+    #[test]
+    fn single_and_one_shard_route_everything_to_zero() {
+        for p in [
+            SpacePartitioner::single(0),
+            SpacePartitioner::uniform(1, 0, Interval::new(0.0, 10.0)),
+        ] {
+            assert_eq!(p.shards(), 1);
+            assert_eq!(p.route(Interval::new(-1e9, 1e9)), (0, 0));
+        }
+    }
+
+    #[test]
+    fn balanced_cuts_follow_the_sample_density() {
+        // 90% of the mass in [0, 10), 10% in [10, 100): quantile cuts
+        // land inside the dense prefix.
+        let mut sample = Vec::new();
+        for i in 0..90 {
+            sample.push(i as f64 * 10.0 / 90.0);
+        }
+        for i in 0..10 {
+            sample.push(10.0 + i as f64 * 9.0);
+        }
+        let p = SpacePartitioner::balanced(4, 0, &sample);
+        assert_eq!(p.shards(), 4);
+        assert!(p.cuts()[0] < 10.0 && p.cuts()[1] < 10.0, "cuts {:?}", p.cuts());
+        // The uniform alternative puts every cut outside the hotspot.
+        let u = SpacePartitioner::uniform(4, 0, Interval::new(0.0, 100.0));
+        assert!(u.cuts().iter().all(|&c| c >= 10.0));
+    }
+
+    #[test]
+    fn balanced_keeps_shard_count_under_degenerate_samples() {
+        let p = SpacePartitioner::balanced(5, 2, &[7.0; 100]);
+        assert_eq!(p.shards(), 5);
+        assert_eq!(p.split_dim(), 2);
+        let (a, b) = p.route(Interval::new(0.0, 100.0));
+        assert_eq!((a, b), (0, 4), "wide region still spans all stripes");
+        assert!(SpacePartitioner::balanced(3, 0, &[]).shards() == 1);
+    }
+}

@@ -1,0 +1,823 @@
+//! Sharded epoch sessions: one inner [`DdmSession`] per spatial
+//! stripe, committed in parallel, with per-shard diffs merged into one
+//! globally deduplicated [`MatchDiff`].
+//!
+//! [`ShardedSession`] mirrors the [`DdmSession`] staging API (upsert /
+//! remove / [`commit`](ShardedSession::commit)) and adds a routing
+//! layer in front of it: every staged op is forwarded at apply time to
+//! the shards whose stripes the region's split-dimension extent
+//! overlaps ([`SpacePartitioner::route`]), with regions that moved
+//! across a stripe boundary re-routed (removed from the shards they
+//! left, upserted into the ones they entered). Commit then closes the
+//! epoch on every shard **in parallel on the engine's
+//! [`exec`](crate::exec) pool** — each inner session runs serially
+//! (`nthreads = 1`), so the fan-out region is the only pool user and
+//! nested parallel regions never happen.
+//!
+//! ## Diff merging and boundary replication
+//!
+//! A region wider than one stripe lives in several shards, so a pair
+//! may be live in several shards at once. The merge layer keeps one
+//! reference count per pair — the number of shards currently holding
+//! it — and folds every shard's epoch diff through it: a pair is
+//! *globally added* only on a `0 → >0` transition and *globally
+//! removed* only on a `>0 → 0` transition. This gives exactly the
+//! required semantics:
+//!
+//! * a pair discovered by `k > 1` shards in one epoch (both regions
+//!   straddle the boundary) is reported **once**;
+//! * a region crossing a boundary while still intersecting its partner
+//!   nets a shard-local remove against a shard-local add and is
+//!   reported **not at all**;
+//! * a pair leaving every shard is reported removed exactly once.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::core::interval::Interval;
+use crate::core::sink::{pack_pair, unpack_pair, PairVec};
+use crate::core::{Regions1D, RegionsNd};
+use crate::exec::ThreadPool;
+use crate::session::{DdmSession, MatchDiff, SessionParams, Side};
+
+use super::partition::SpacePartitioner;
+use super::ShardStrategy;
+
+/// Per-shard load snapshot (the coordinator's imbalance gauge and the
+/// `abl_shard` bench read these).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Stripe index.
+    pub shard: usize,
+    /// Live subscription regions routed into this shard (replicas
+    /// count once per shard they live in).
+    pub subscriptions: usize,
+    /// Live update regions routed into this shard.
+    pub updates: usize,
+    /// Pairs retained by this shard's inner session.
+    pub retained_pairs: usize,
+    /// Ops forwarded to this shard during the last committed epoch.
+    pub last_ops: usize,
+    /// Shard-local diff churn (|added| + |removed|) of the last epoch.
+    pub last_churn: usize,
+}
+
+/// A spatially sharded [`DdmSession`]: staged ops are routed to
+/// stripe-owning inner sessions, epochs commit shard-parallel, and the
+/// merged [`MatchDiff`] is globally deduplicated. See the
+/// [module docs](self) for the routing and merge rules.
+///
+/// Constructed through the engine
+/// ([`DdmEngine::sharded_session`](crate::engine::DdmEngine::sharded_session)
+/// with a span, or
+/// [`sharded_session_with`](crate::engine::DdmEngine::sharded_session_with)
+/// with an explicit [`SpacePartitioner`]).
+pub struct ShardedSession {
+    d: usize,
+    part: SpacePartitioner,
+    /// Balanced strategy: re-derive quantile cuts from the first
+    /// non-empty staged batch before anything is routed.
+    balance_pending: bool,
+    pool: Arc<ThreadPool>,
+    nthreads: usize,
+    params: SessionParams,
+    inner: Vec<Mutex<DdmSession>>,
+    /// Current stripe range of every live region (applied state).
+    sub_homes: HashMap<u32, (usize, usize)>,
+    upd_homes: HashMap<u32, (usize, usize)>,
+    /// Staged ops, coalesced last-write-wins (same contract as
+    /// [`DdmSession`]): key → `Some(rect)` upsert / `None` remove.
+    pending_subs: BTreeMap<u32, Option<Vec<Interval>>>,
+    pending_upds: BTreeMap<u32, Option<Vec<Interval>>>,
+    /// Global pair → number of shards currently holding it.
+    pair_refs: HashMap<u64, u32>,
+    /// A flush applied ops the refcounts have not absorbed yet
+    /// (cleared by commit) — `n_pairs` falls back to a live merge
+    /// while set, keeping it consistent with `pairs()`.
+    flushed_since_commit: bool,
+    epoch: u64,
+    /// Ops forwarded per shard since the last commit.
+    ops_since_commit: Vec<usize>,
+    last_epoch_ops: Vec<usize>,
+    last_epoch_churn: Vec<usize>,
+}
+
+impl ShardedSession {
+    /// A fresh `d`-dimensional sharded session. Inner sessions run
+    /// serially (`nthreads = 1` each); `nthreads` bounds the *cross-
+    /// shard* fan-out on `pool`.
+    pub fn new(
+        d: usize,
+        part: SpacePartitioner,
+        strategy: ShardStrategy,
+        pool: Arc<ThreadPool>,
+        nthreads: usize,
+        params: SessionParams,
+    ) -> Self {
+        assert!(d >= 1, "sessions need at least one dimension");
+        let split = part.split_dim();
+        assert!(split < d, "split dimension {split} out of range for d={d}");
+        let shards = part.shards();
+        let inner = (0..shards)
+            .map(|_| Mutex::new(DdmSession::new(d, Arc::clone(&pool), 1, params)))
+            .collect();
+        Self {
+            d,
+            balance_pending: strategy == ShardStrategy::Balanced && shards > 1,
+            part,
+            pool,
+            nthreads: nthreads.max(1),
+            params,
+            inner,
+            sub_homes: HashMap::new(),
+            upd_homes: HashMap::new(),
+            pending_subs: BTreeMap::new(),
+            pending_upds: BTreeMap::new(),
+            pair_refs: HashMap::new(),
+            flushed_since_commit: false,
+            epoch: 0,
+            ops_since_commit: vec![0; shards],
+            last_epoch_ops: vec![0; shards],
+            last_epoch_churn: vec![0; shards],
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of shards (stripes).
+    pub fn shards(&self) -> usize {
+        self.inner.len()
+    }
+
+    /// The active partitioner (balanced sessions: quantile cuts after
+    /// the first apply).
+    pub fn partitioner(&self) -> &SpacePartitioner {
+        &self.part
+    }
+
+    /// Number of committed epochs.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Staged (coalesced) region ops not yet routed to the shards.
+    pub fn pending_ops(&self) -> usize {
+        self.pending_subs.len() + self.pending_upds.len()
+    }
+
+    /// Live subscription regions (applied state; replicas count once).
+    pub fn n_subscriptions(&self) -> usize {
+        self.sub_homes.len()
+    }
+
+    /// Live update regions (applied state; replicas count once).
+    pub fn n_updates(&self) -> usize {
+        self.upd_homes.len()
+    }
+
+    /// Globally intersecting pairs: O(1) from the merged refcounts
+    /// when the last apply was a commit; a live merged count when a
+    /// [`flush`](Self::flush) has applied ops the refcounts have not
+    /// absorbed yet (so it always agrees with [`pairs`](Self::pairs)
+    /// and with the unsharded session behind
+    /// [`AnySession`](super::AnySession)).
+    pub fn n_pairs(&self) -> usize {
+        if self.flushed_since_commit {
+            self.packed_live_pairs().len()
+        } else {
+            self.pair_refs.len()
+        }
+    }
+
+    // ---- staging -----------------------------------------------------------
+
+    /// Stage an insert-or-replace of subscription region `key`.
+    pub fn upsert_subscription(&mut self, key: u32, rect: &[Interval]) {
+        assert_eq!(rect.len(), self.d, "rect dimension != session dimension {}", self.d);
+        self.pending_subs.insert(key, Some(rect.to_vec()));
+        self.auto_apply();
+    }
+
+    /// Stage an insert-or-replace of update region `key`.
+    pub fn upsert_update(&mut self, key: u32, rect: &[Interval]) {
+        assert_eq!(rect.len(), self.d, "rect dimension != session dimension {}", self.d);
+        self.pending_upds.insert(key, Some(rect.to_vec()));
+        self.auto_apply();
+    }
+
+    /// Stage removal of subscription region `key` (no-op if absent).
+    pub fn remove_subscription(&mut self, key: u32) {
+        self.pending_subs.insert(key, None);
+        self.auto_apply();
+    }
+
+    /// Stage removal of update region `key` (no-op if absent).
+    pub fn remove_update(&mut self, key: u32) {
+        self.pending_upds.insert(key, None);
+        self.auto_apply();
+    }
+
+    /// Honor [`SessionParams::batch_threshold`] like the unsharded
+    /// session does: once that many distinct regions are staged,
+    /// route and apply early (the epoch stays open, so the committed
+    /// diff is unchanged) — staged memory and commit latency stay
+    /// bounded under heavy churn.
+    fn auto_apply(&mut self) {
+        let threshold = self.params.batch_threshold;
+        if threshold > 0 && self.pending_ops() >= threshold {
+            self.flush();
+        }
+    }
+
+    /// Stage a whole 1-D workload keyed by dense index.
+    pub fn load_dense_1d(&mut self, subs: &Regions1D, upds: &Regions1D) {
+        assert_eq!(self.d, 1, "load_dense_1d on a {}-d session", self.d);
+        for i in 0..subs.len() {
+            self.upsert_subscription(i as u32, &[subs.get(i)]);
+        }
+        for j in 0..upds.len() {
+            self.upsert_update(j as u32, &[upds.get(j)]);
+        }
+    }
+
+    /// Stage a whole d-dimensional workload keyed by dense index.
+    pub fn load_dense(&mut self, subs: &RegionsNd, upds: &RegionsNd) {
+        assert_eq!(subs.d(), self.d, "subscription dimension mismatch");
+        assert_eq!(upds.d(), self.d, "update dimension mismatch");
+        for i in 0..subs.len() {
+            self.upsert_subscription(i as u32, &subs.get(i));
+        }
+        for j in 0..upds.len() {
+            self.upsert_update(j as u32, &upds.get(j));
+        }
+    }
+
+    // ---- routing -----------------------------------------------------------
+
+    /// Balanced strategy, first non-empty batch: replace the fallback
+    /// cuts with quantiles of the staged regions' split-dim midpoints.
+    fn maybe_balance(&mut self) {
+        if !self.balance_pending {
+            return;
+        }
+        let k = self.part.split_dim();
+        let mut sample: Vec<f64> = Vec::new();
+        for op in self.pending_subs.values().chain(self.pending_upds.values()) {
+            if let Some(rect) = op {
+                sample.push(0.5 * (rect[k].lo + rect[k].hi));
+            }
+        }
+        if sample.is_empty() {
+            return; // removal-only batch: keep waiting for real data
+        }
+        let rebuilt = SpacePartitioner::balanced(self.inner.len(), k, &sample);
+        debug_assert_eq!(rebuilt.shards(), self.inner.len());
+        self.part = rebuilt;
+        self.balance_pending = false;
+    }
+
+    /// Forward every staged op to its owning shards, re-routing
+    /// regions whose extent crossed a stripe boundary: shards the
+    /// region left get a remove, shards it now overlaps get the
+    /// upsert. Inner sessions coalesce per key, so repeated routing
+    /// within one epoch stays cheap.
+    fn route_pending(&mut self) {
+        if self.pending_subs.is_empty() && self.pending_upds.is_empty() {
+            return;
+        }
+        self.maybe_balance();
+        let sub_ops = std::mem::take(&mut self.pending_subs);
+        let upd_ops = std::mem::take(&mut self.pending_upds);
+        for (key, op) in sub_ops {
+            route_one(
+                &self.part,
+                &mut self.inner,
+                &mut self.sub_homes,
+                &mut self.ops_since_commit,
+                key,
+                op,
+                |sess, key, rect| sess.upsert_subscription(key, rect),
+                |sess, key| sess.remove_subscription(key),
+            );
+        }
+        for (key, op) in upd_ops {
+            route_one(
+                &self.part,
+                &mut self.inner,
+                &mut self.upd_homes,
+                &mut self.ops_since_commit,
+                key,
+                op,
+                |sess, key, rect| sess.upsert_update(key, rect),
+                |sess, key| sess.remove_update(key),
+            );
+        }
+    }
+
+    // ---- committing --------------------------------------------------------
+
+    /// Route and apply all staged ops **without closing the epoch**:
+    /// reads see current state, the per-shard diff accumulators stay
+    /// queued for the next [`commit`](Self::commit). No-op when
+    /// nothing is staged (routing only happens here and in `commit`,
+    /// so empty pending maps imply the inner sessions are drained too
+    /// — the read hot path never pays a fan-out).
+    pub fn flush(&mut self) {
+        if self.pending_subs.is_empty() && self.pending_upds.is_empty() {
+            return;
+        }
+        self.route_pending();
+        self.fan(|sess| sess.flush());
+        self.flushed_since_commit = true;
+    }
+
+    /// Route and apply all staged ops, close the epoch on every shard
+    /// in parallel, and merge the per-shard diffs into one globally
+    /// deduplicated [`MatchDiff`].
+    pub fn commit(&mut self) -> MatchDiff {
+        self.route_pending();
+        let diffs = self.fan(|sess| sess.commit());
+        self.epoch += 1;
+        self.last_epoch_ops = std::mem::replace(
+            &mut self.ops_since_commit,
+            vec![0; self.inner.len()],
+        );
+
+        // Fold every shard's diff through the global refcounts; only
+        // 0 ↔ >0 transitions surface.
+        let mut delta: HashMap<u64, i32> = HashMap::new();
+        for (i, diff) in diffs.iter().enumerate() {
+            self.last_epoch_churn[i] = diff.churn();
+            for &(s, u) in &diff.added {
+                *delta.entry(pack_pair(s, u)).or_insert(0) += 1;
+            }
+            for &(s, u) in &diff.removed {
+                *delta.entry(pack_pair(s, u)).or_insert(0) -= 1;
+            }
+        }
+        let mut added: PairVec = Vec::new();
+        let mut removed: PairVec = Vec::new();
+        for (pair, dv) in delta {
+            if dv == 0 {
+                continue;
+            }
+            let old = self.pair_refs.get(&pair).copied().unwrap_or(0) as i64;
+            let new = old + dv as i64;
+            debug_assert!(new >= 0, "pair refcount went negative");
+            if old == 0 && new > 0 {
+                added.push(unpack_pair(pair));
+            } else if old > 0 && new <= 0 {
+                removed.push(unpack_pair(pair));
+            }
+            if new <= 0 {
+                self.pair_refs.remove(&pair);
+            } else {
+                self.pair_refs.insert(pair, new as u32);
+            }
+        }
+        added.sort_unstable();
+        removed.sort_unstable();
+        self.flushed_since_commit = false;
+        MatchDiff {
+            epoch: self.epoch,
+            added,
+            removed,
+        }
+    }
+
+    /// Run `f` on every inner session — across shards on the worker
+    /// pool when the batch is big enough, inline otherwise. Inner
+    /// sessions are serial, so the fan-out region is the pool's only
+    /// user (no nested parallel regions).
+    fn fan<T, F>(&mut self, f: F) -> Vec<T>
+    where
+        T: Default + Send,
+        F: Fn(&mut DdmSession) -> T + Sync,
+    {
+        // Fan out whenever the pool has workers and the batch is big
+        // enough — also for a single shard, so the work lands in a
+        // pool region and the bench cost log sees it.
+        let shards = self.inner.len();
+        let staged: usize = self.ops_since_commit.iter().sum();
+        let par = self.nthreads > 1 && staged >= self.params.parallel_cutoff;
+        if !par {
+            return self
+                .inner
+                .iter_mut()
+                .map(|cell| f(cell.get_mut().unwrap()))
+                .collect();
+        }
+        let inner = &self.inner;
+        self.pool.fan_map(self.nthreads.min(shards), shards, |i| {
+            let mut guard = inner[i].lock().unwrap();
+            f(&mut *guard)
+        })
+    }
+
+    // ---- queries over the retained state -----------------------------------
+    //
+    // All of these answer from the *applied* state of the inner
+    // sessions (call `flush` first to see staged ops), except
+    // `n_pairs`, which reports the globally merged count as of the
+    // last commit.
+
+    /// Every currently intersecting (subscription key, update key)
+    /// pair, sorted, deduplicated across boundary replicas.
+    pub fn pairs(&self) -> PairVec {
+        self.packed_live_pairs().into_iter().map(unpack_pair).collect()
+    }
+
+    /// The live merged pair set, packed, sorted, deduplicated.
+    fn packed_live_pairs(&self) -> Vec<u64> {
+        let mut packed: Vec<u64> = Vec::new();
+        for cell in &self.inner {
+            let sess = cell.lock().unwrap();
+            for (s, u) in sess.pairs() {
+                packed.push(pack_pair(s, u));
+            }
+        }
+        packed.sort_unstable();
+        packed.dedup();
+        packed
+    }
+
+    /// Update keys currently intersecting subscription `key`, sorted,
+    /// deduplicated across the shards the subscription lives in.
+    pub fn updates_of(&self, sub_key: u32) -> Vec<u32> {
+        let Some(&(a, b)) = self.sub_homes.get(&sub_key) else {
+            return Vec::new();
+        };
+        let mut out: Vec<u32> = Vec::new();
+        for cell in &self.inner[a..=b] {
+            out.extend(cell.lock().unwrap().updates_of(sub_key));
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Subscription keys currently intersecting update `key`, sorted,
+    /// deduplicated across the shards the update lives in.
+    pub fn subscriptions_of(&self, upd_key: u32) -> Vec<u32> {
+        let Some(&(a, b)) = self.upd_homes.get(&upd_key) else {
+            return Vec::new();
+        };
+        let mut out: Vec<u32> = Vec::new();
+        for cell in &self.inner[a..=b] {
+            out.extend(cell.lock().unwrap().subscriptions_of(upd_key));
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Whether the pair currently intersects (in any shard).
+    pub fn contains_pair(&self, sub_key: u32, upd_key: u32) -> bool {
+        let Some(&(a, b)) = self.sub_homes.get(&sub_key) else {
+            return false;
+        };
+        self.inner[a..=b]
+            .iter()
+            .any(|cell| cell.lock().unwrap().contains_pair(sub_key, upd_key))
+    }
+
+    // ---- introspection ------------------------------------------------------
+
+    /// Per-shard load snapshot (region counts, retained pairs, last
+    /// epoch's routed ops and diff churn). One lock sweep; feed the
+    /// result to [`imbalance_of`](Self::imbalance_of) to avoid
+    /// re-reading the shards for the gauge.
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.inner
+            .iter()
+            .enumerate()
+            .map(|(i, cell)| {
+                let sess = cell.lock().unwrap();
+                ShardStats {
+                    shard: i,
+                    subscriptions: sess.region_count(Side::Subscription),
+                    updates: sess.region_count(Side::Update),
+                    retained_pairs: sess.retained_pair_count(),
+                    last_ops: self.last_epoch_ops[i],
+                    last_churn: self.last_epoch_churn[i],
+                }
+            })
+            .collect()
+    }
+
+    /// Load imbalance over a stats snapshot: max over shards of
+    /// (regions in shard) divided by the mean — `1.0` is perfectly
+    /// balanced, `stats.len()` is everything-on-one-shard; `1.0` when
+    /// empty. Pure arithmetic: no shard locks are taken.
+    pub fn imbalance_of(stats: &[ShardStats]) -> f64 {
+        let loads: Vec<usize> = stats.iter().map(|s| s.subscriptions + s.updates).collect();
+        let total: usize = loads.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / loads.len() as f64;
+        loads.into_iter().max().unwrap_or(0) as f64 / mean
+    }
+
+    /// Load imbalance gauge over the current shard state (one lock
+    /// sweep; callers that already hold a [`shard_stats`](Self::shard_stats)
+    /// snapshot should use [`imbalance_of`](Self::imbalance_of)).
+    pub fn imbalance(&self) -> f64 {
+        Self::imbalance_of(&self.shard_stats())
+    }
+}
+
+/// Route one coalesced op: diff the region's new stripe range against
+/// its old one, remove from departed shards, upsert into current ones.
+#[allow(clippy::too_many_arguments)]
+fn route_one(
+    part: &SpacePartitioner,
+    inner: &mut [Mutex<DdmSession>],
+    homes: &mut HashMap<u32, (usize, usize)>,
+    ops: &mut [usize],
+    key: u32,
+    op: Option<Vec<Interval>>,
+    upsert: impl Fn(&mut DdmSession, u32, &[Interval]),
+    remove: impl Fn(&mut DdmSession, u32),
+) {
+    match op {
+        Some(rect) => {
+            let (a, b) = part.route_rect(&rect);
+            if let Some(&(oa, ob)) = homes.get(&key) {
+                for i in oa..=ob {
+                    if i < a || i > b {
+                        remove(inner[i].get_mut().unwrap(), key);
+                        ops[i] += 1;
+                    }
+                }
+            }
+            for i in a..=b {
+                upsert(inner[i].get_mut().unwrap(), key, &rect);
+                ops[i] += 1;
+            }
+            homes.insert(key, (a, b));
+        }
+        None => {
+            if let Some((oa, ob)) = homes.remove(&key) {
+                for i in oa..=ob {
+                    remove(inner[i].get_mut().unwrap(), key);
+                    ops[i] += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::DdmEngine;
+    use crate::prng::Rng;
+
+    fn sharded(shards: usize, d: usize, span_hi: f64) -> ShardedSession {
+        let part = SpacePartitioner::uniform(shards, 0, Interval::new(0.0, span_hi));
+        DdmEngine::builder()
+            .threads(2)
+            .parallel_cutoff(1)
+            .build()
+            .sharded_session_with(d, part)
+    }
+
+    #[test]
+    fn straddling_pair_is_reported_exactly_once() {
+        // Both regions cross the single cut at 50: each lives in both
+        // shards, the pair is live in both, the diff reports it once.
+        let mut sess = sharded(2, 1, 100.0);
+        sess.upsert_subscription(1, &[Interval::new(40.0, 60.0)]);
+        sess.upsert_update(2, &[Interval::new(45.0, 55.0)]);
+        let d = sess.commit();
+        assert_eq!(d.added, vec![(1, 2)]);
+        assert!(d.removed.is_empty());
+        assert_eq!(sess.n_pairs(), 1);
+        assert_eq!(sess.pairs(), vec![(1, 2)]);
+        assert_eq!(sess.updates_of(1), vec![2]);
+        assert_eq!(sess.subscriptions_of(2), vec![1]);
+        assert!(sess.contains_pair(1, 2));
+
+        // Removing the wide subscription reports the removal once.
+        sess.remove_subscription(1);
+        let d = sess.commit();
+        assert_eq!(d.removed, vec![(1, 2)]);
+        assert!(d.added.is_empty());
+        assert_eq!(sess.n_pairs(), 0);
+        assert!(sess.pairs().is_empty());
+    }
+
+    #[test]
+    fn boundary_crossing_move_of_a_live_pair_is_silent() {
+        // Update spans both stripes; the subscription hops from stripe
+        // 0 to stripe 1 while never ceasing to intersect it. Shard 0
+        // reports a remove, shard 1 an add — the merge nets to nothing.
+        let mut sess = sharded(2, 1, 100.0);
+        sess.upsert_subscription(7, &[Interval::new(10.0, 20.0)]);
+        sess.upsert_update(9, &[Interval::new(0.0, 100.0)]);
+        assert_eq!(sess.commit().added, vec![(7, 9)]);
+        sess.upsert_subscription(7, &[Interval::new(70.0, 80.0)]);
+        let d = sess.commit();
+        assert!(d.is_empty(), "{d:?}");
+        assert_eq!(sess.n_pairs(), 1);
+        assert_eq!(sess.pairs(), vec![(7, 9)]);
+    }
+
+    #[test]
+    fn rerouting_cleans_up_departed_shards() {
+        let mut sess = sharded(4, 1, 100.0);
+        sess.upsert_subscription(1, &[Interval::new(0.0, 100.0)]); // all 4 shards
+        sess.upsert_update(2, &[Interval::new(80.0, 90.0)]); // shard 3
+        assert_eq!(sess.commit().added, vec![(1, 2)]);
+        // Shrink the subscription into stripe 0: it must leave shards
+        // 1..=3 (losing the pair) and keep exactly one home.
+        sess.upsert_subscription(1, &[Interval::new(5.0, 15.0)]);
+        let d = sess.commit();
+        assert_eq!(d.removed, vec![(1, 2)]);
+        let stats = sess.shard_stats();
+        assert_eq!(
+            stats.iter().map(|s| s.subscriptions).collect::<Vec<_>>(),
+            vec![1, 0, 0, 0]
+        );
+        assert_eq!(stats[3].updates, 1);
+    }
+
+    #[test]
+    fn one_shard_degenerates_to_plain_session_behavior() {
+        let mut sh = sharded(1, 1, 100.0);
+        let mut un = DdmEngine::builder().threads(1).build().session(1);
+        let mut rng = Rng::new(0x54A1);
+        for _ in 0..6 {
+            for _ in 0..40 {
+                let key = rng.below(25) as u32;
+                let lo = rng.uniform(0.0, 90.0);
+                let iv = Interval::new(lo, lo + rng.uniform(0.5, 15.0));
+                match rng.below(4) {
+                    0 | 1 => {
+                        sh.upsert_subscription(key, &[iv]);
+                        un.upsert_subscription(key, &[iv]);
+                    }
+                    2 => {
+                        sh.upsert_update(key, &[iv]);
+                        un.upsert_update(key, &[iv]);
+                    }
+                    _ => {
+                        sh.remove_subscription(key);
+                        un.remove_subscription(key);
+                    }
+                }
+            }
+            assert_eq!(sh.commit(), un.commit());
+            assert_eq!(sh.pairs(), un.pairs());
+            assert_eq!(sh.n_pairs(), un.n_pairs());
+        }
+    }
+
+    /// Random multi-shard churn with regions regularly wider than one
+    /// stripe: merged sharded diffs == unsharded diffs, every epoch.
+    #[test]
+    fn sharded_and_unsharded_sessions_agree_under_wide_region_churn() {
+        for shards in [2usize, 3, 7] {
+            let mut sh = sharded(shards, 1, 100.0);
+            let mut un = DdmEngine::builder().threads(2).build().session(1);
+            let mut rng = Rng::new(0x54A2 + shards as u64);
+            for _epoch in 0..8 {
+                for _ in 0..50 {
+                    let key = rng.below(30) as u32;
+                    let lo = rng.uniform(0.0, 95.0);
+                    let len = if rng.chance(0.3) {
+                        rng.uniform(20.0, 70.0) // wider than a stripe
+                    } else {
+                        rng.uniform(0.1, 8.0)
+                    };
+                    let iv = Interval::new(lo, lo + len);
+                    match rng.below(5) {
+                        0 | 1 => {
+                            sh.upsert_subscription(key, &[iv]);
+                            un.upsert_subscription(key, &[iv]);
+                        }
+                        2 | 3 => {
+                            sh.upsert_update(key, &[iv]);
+                            un.upsert_update(key, &[iv]);
+                        }
+                        _ => {
+                            sh.remove_update(key);
+                            un.remove_update(key);
+                        }
+                    }
+                }
+                let (ds, du) = (sh.commit(), un.commit());
+                assert_eq!(ds, du, "shards={shards}");
+                assert_eq!(sh.pairs(), un.pairs(), "shards={shards}");
+                assert_eq!(sh.n_pairs(), un.n_pairs());
+            }
+        }
+    }
+
+    #[test]
+    fn flush_keeps_reads_live_and_epoch_open() {
+        let mut sess = sharded(3, 1, 90.0);
+        sess.upsert_subscription(1, &[Interval::new(10.0, 70.0)]);
+        sess.upsert_update(2, &[Interval::new(55.0, 65.0)]);
+        sess.flush();
+        assert_eq!(sess.pending_ops(), 0);
+        assert_eq!(sess.pairs(), vec![(1, 2)], "flushed state is readable");
+        assert_eq!(sess.n_pairs(), 1, "n_pairs agrees with pairs() after flush");
+        assert!(sess.contains_pair(1, 2));
+        assert_eq!(sess.epoch(), 0, "flush does not close the epoch");
+        let d = sess.commit();
+        assert_eq!(d.added, vec![(1, 2)], "diff survives interleaved flush");
+        assert_eq!(sess.n_pairs(), 1, "refcounts absorbed at commit");
+    }
+
+    #[test]
+    fn balanced_strategy_samples_cuts_from_first_batch() {
+        let engine = DdmEngine::builder().threads(1).build();
+        let part = SpacePartitioner::uniform(4, 0, Interval::new(0.0, 1000.0));
+        let mut sess = engine.sharded_session_with_strategy(1, part, ShardStrategy::Balanced);
+        // 90% of regions inside [0, 100): balanced cuts must move into
+        // the hotspot where uniform cuts (250/500/750) would not.
+        let mut rng = Rng::new(0xBA1);
+        for k in 0..200u32 {
+            let lo = if k < 180 {
+                rng.uniform(0.0, 95.0)
+            } else {
+                rng.uniform(100.0, 990.0)
+            };
+            sess.upsert_subscription(k, &[Interval::new(lo, lo + 5.0)]);
+        }
+        sess.commit();
+        let cuts = sess.partitioner().cuts();
+        assert_eq!(cuts.len(), 3);
+        assert!(cuts[0] < 100.0 && cuts[1] < 100.0, "cuts {cuts:?}");
+        // And the load is correspondingly spread out.
+        assert!(sess.imbalance() < 2.0, "imbalance {}", sess.imbalance());
+    }
+
+    /// batch_threshold routes and applies eagerly on the sharded path
+    /// too, without changing the committed diff.
+    #[test]
+    fn batch_threshold_auto_applies_staged_ops() {
+        let part = SpacePartitioner::uniform(2, 0, Interval::new(0.0, 100.0));
+        let mut sess = DdmEngine::builder()
+            .threads(1)
+            .batch_threshold(1)
+            .build()
+            .sharded_session_with(1, part);
+        sess.upsert_subscription(1, &[Interval::new(40.0, 60.0)]);
+        sess.upsert_update(2, &[Interval::new(45.0, 55.0)]); // pair appears, both shards
+        assert_eq!(sess.pending_ops(), 0, "threshold applies eagerly");
+        assert_eq!(sess.n_subscriptions(), 1, "routed state visible");
+        sess.upsert_update(2, &[Interval::new(0.0, 10.0)]); // disappears, leaves shard 1
+        sess.upsert_update(2, &[Interval::new(45.0, 55.0)]); // re-appears in both
+        let d = sess.commit();
+        assert_eq!(d.added, vec![(1, 2)], "intra-epoch churn cancels to one add");
+        assert!(d.removed.is_empty());
+    }
+
+    #[test]
+    fn imbalance_gauge_tracks_skew() {
+        let mut sess = sharded(4, 1, 100.0);
+        assert_eq!(sess.imbalance(), 1.0, "empty session is balanced");
+        for k in 0..40u32 {
+            sess.upsert_subscription(k, &[Interval::new(1.0, 2.0)]); // all in stripe 0
+        }
+        sess.commit();
+        assert!((sess.imbalance() - 4.0).abs() < 1e-9, "{}", sess.imbalance());
+        let stats = sess.shard_stats();
+        assert_eq!(stats[0].subscriptions, 40);
+        assert_eq!(stats[0].last_ops, 40);
+        assert_eq!(stats[1].subscriptions, 0);
+    }
+
+    /// Parallel fan-out (threads > 1, cutoff 0) and the serial path
+    /// produce identical merged diffs.
+    #[test]
+    fn parallel_and_serial_fanout_agree() {
+        let engine_par = DdmEngine::builder().threads(4).parallel_cutoff(1).build();
+        let engine_ser = DdmEngine::builder().threads(1).build();
+        let part = || SpacePartitioner::uniform(5, 0, Interval::new(0.0, 100.0));
+        let mut a = engine_par.sharded_session_with(1, part());
+        let mut b = engine_ser.sharded_session_with(1, part());
+        let mut rng = Rng::new(0x54A3);
+        for _ in 0..6 {
+            for _ in 0..80 {
+                let key = rng.below(40) as u32;
+                let lo = rng.uniform(0.0, 90.0);
+                let iv = Interval::new(lo, lo + rng.uniform(1.0, 40.0));
+                if rng.chance(0.5) {
+                    a.upsert_subscription(key, &[iv]);
+                    b.upsert_subscription(key, &[iv]);
+                } else {
+                    a.upsert_update(key, &[iv]);
+                    b.upsert_update(key, &[iv]);
+                }
+            }
+            assert_eq!(a.commit(), b.commit());
+        }
+        assert_eq!(a.pairs(), b.pairs());
+    }
+}

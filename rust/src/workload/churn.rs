@@ -15,15 +15,33 @@ use crate::core::interval::Interval;
 use crate::core::Regions1D;
 use crate::prng::Rng;
 
-/// A reproducible stream of region moves.
+/// Fraction of the space the hotspot corner occupies (low end).
+const HOTSPOT_CORNER: f64 = 0.1;
+
+/// A reproducible stream of region moves, optionally skewed: a
+/// `hotspot` fraction of moves relocates into the low-corner tenth of
+/// the space instead of uniformly, concentrating load the way a
+/// congested intersection (or one hot spatial shard) would. With
+/// `hotspot == 0.0` the stream is bit-identical to the historical
+/// [`MoveScript::new`] behavior.
 pub struct MoveScript {
     rng: Rng,
+    hotspot: f64,
 }
 
 impl MoveScript {
+    /// Uniform moves (no skew).
     pub fn new(seed: u64) -> Self {
+        Self::with_hotspot(seed, 0.0)
+    }
+
+    /// `hotspot ∈ [0, 1]`: probability that a move targets the
+    /// low-corner tenth of the space. This is what makes shard
+    /// imbalance exercisable — `benches/abl_shard.rs` drives it.
+    pub fn with_hotspot(seed: u64, hotspot: f64) -> Self {
         Self {
             rng: Rng::new(seed),
+            hotspot: hotspot.clamp(0.0, 1.0),
         }
     }
 
@@ -37,7 +55,11 @@ impl MoveScript {
         } else {
             self.rng.below(n_upds as u64)
         } as usize;
-        (sub_side, idx, self.rng.uniform(0.0, 1.0))
+        let mut frac = self.rng.uniform(0.0, 1.0);
+        if self.hotspot > 0.0 && self.rng.chance(self.hotspot) {
+            frac *= HOTSPOT_CORNER; // drift toward the low corner
+        }
+        (sub_side, idx, frac)
     }
 }
 
@@ -88,6 +110,27 @@ mod tests {
         let mut b = MoveScript::new(9);
         for _ in 0..50 {
             assert_eq!(a.next(100, 80), b.next(100, 80));
+        }
+    }
+
+    #[test]
+    fn hotspot_skews_positions_toward_the_corner() {
+        let mut hot = MoveScript::with_hotspot(11, 0.8);
+        let mut cold = MoveScript::with_hotspot(12, 0.0);
+        let corner = |s: &mut MoveScript| {
+            (0..2000)
+                .filter(|_| s.next(100, 100).2 < HOTSPOT_CORNER)
+                .count()
+        };
+        let (n_hot, n_cold) = (corner(&mut hot), corner(&mut cold));
+        // ~84% of hot moves land in the corner vs ~10% of cold ones.
+        assert!(n_hot > 1400, "hot corner hits: {n_hot}");
+        assert!(n_cold < 400, "cold corner hits: {n_cold}");
+        // Equal seeds with equal hotspot remain lockstep.
+        let mut a = MoveScript::with_hotspot(9, 0.5);
+        let mut b = MoveScript::with_hotspot(9, 0.5);
+        for _ in 0..50 {
+            assert_eq!(a.next(10, 10), b.next(10, 10));
         }
     }
 

@@ -351,6 +351,114 @@ fn session_diffs_reproduce_static_matching() {
     }
 }
 
+/// Sharded-session equivalence (the sharding acceptance property):
+/// across shards ∈ {1, 2, 7} and d ∈ {1, 3}, with regions wider than
+/// one stripe and upserts relocating regions across stripe boundaries,
+/// the `ShardedSession` produces per-epoch diffs identical to the
+/// unsharded `DdmSession`, and the accumulated diffs reproduce exactly
+/// a fresh static `pairs_nd` over the live regions.
+#[test]
+fn sharded_session_equivalence_property() {
+    use ddm::core::{Interval, RegionsNd};
+    use ddm::shard::SpacePartitioner;
+    use std::collections::{BTreeMap, HashSet};
+
+    let pool = Arc::new(ThreadPool::new(3));
+    let engine = DdmEngine::builder()
+        .threads(3)
+        .parallel_cutoff(8)
+        .pool(Arc::clone(&pool))
+        .build();
+    for d in [1usize, 3] {
+        for shards in [1usize, 2, 7] {
+            // Stripes over [0, 100): width 100/7 ≈ 14, so the wide
+            // extents below span several stripes.
+            let part = SpacePartitioner::uniform(shards, 0, Interval::new(0.0, 100.0));
+            let mut sh = engine.sharded_session_with(d, part);
+            let mut un = engine.session(d);
+            let mut model_s: BTreeMap<u32, Vec<Interval>> = BTreeMap::new();
+            let mut model_u: BTreeMap<u32, Vec<Interval>> = BTreeMap::new();
+            let mut live: HashSet<(u32, u32)> = HashSet::new();
+            let mut rng = Rng::new(0x5A4D + d as u64 * 31 + shards as u64);
+            for epoch in 0..10 {
+                for _ in 0..40 {
+                    let key = rng.below(50) as u32;
+                    let sub_side = rng.chance(0.5);
+                    if rng.chance(0.85) {
+                        // Upserting an existing key relocates it to a
+                        // fresh uniform position — boundary crossings
+                        // happen constantly.
+                        let rect: Vec<Interval> = (0..d)
+                            .map(|k| {
+                                let lo = rng.uniform(0.0, 95.0);
+                                let len = if k == 0 && rng.chance(0.35) {
+                                    rng.uniform(20.0, 80.0) // wider than a stripe
+                                } else {
+                                    rng.uniform(0.5, 10.0)
+                                };
+                                Interval::new(lo, lo + len)
+                            })
+                            .collect();
+                        if sub_side {
+                            sh.upsert_subscription(key, &rect);
+                            un.upsert_subscription(key, &rect);
+                            model_s.insert(key, rect);
+                        } else {
+                            sh.upsert_update(key, &rect);
+                            un.upsert_update(key, &rect);
+                            model_u.insert(key, rect);
+                        }
+                    } else if sub_side {
+                        sh.remove_subscription(key);
+                        un.remove_subscription(key);
+                        model_s.remove(&key);
+                    } else {
+                        sh.remove_update(key);
+                        un.remove_update(key);
+                        model_u.remove(&key);
+                    }
+                }
+                let (ds, du) = (sh.commit(), un.commit());
+                assert_eq!(ds, du, "d={d} shards={shards} epoch={epoch}");
+                for &(s, u) in &ds.removed {
+                    assert!(live.remove(&(s, u)), "removed non-live pair");
+                }
+                for &(s, u) in &ds.added {
+                    assert!(live.insert((s, u)), "added already-live pair");
+                }
+                // Fresh static match over the same live regions.
+                let mut subs = RegionsNd::new(d);
+                let mut skeys = Vec::new();
+                for (&k, rect) in &model_s {
+                    subs.push(rect);
+                    skeys.push(k);
+                }
+                let mut upds = RegionsNd::new(d);
+                let mut ukeys = Vec::new();
+                for (&k, rect) in &model_u {
+                    upds.push(rect);
+                    ukeys.push(k);
+                }
+                let mut want: Vec<(u32, u32)> = if subs.is_empty() || upds.is_empty() {
+                    Vec::new()
+                } else {
+                    engine
+                        .pairs_nd(&subs, &upds)
+                        .into_iter()
+                        .map(|(si, uj)| (skeys[si as usize], ukeys[uj as usize]))
+                        .collect()
+                };
+                want.sort_unstable();
+                let mut acc: Vec<(u32, u32)> = live.iter().copied().collect();
+                acc.sort_unstable();
+                assert_eq!(acc, want, "d={d} shards={shards} epoch={epoch}");
+                assert_eq!(sh.pairs(), want, "retained sharded pair set");
+                assert_eq!(sh.n_pairs(), want.len());
+            }
+        }
+    }
+}
+
 /// Thread-count invariance under the engine API (heavier than the
 /// per-module variants: full workload, many P values, shared pool).
 #[test]
