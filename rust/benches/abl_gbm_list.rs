@@ -1,11 +1,13 @@
 //! Ablation A2 (paper §5): GBM phase-1 cell-list synchronization —
-//! per-cell mutex (the paper's `omp critical`) vs the ad-hoc lock-free
-//! append list — plus the dedup strategy (paper's `res` set vs the
+//! the per-worker fan-in merge (which replaced the per-cell mutexes /
+//! the paper's `omp critical`) vs the ad-hoc lock-free append list —
+//! plus the dedup strategy (paper's `res` set vs the
 //! first-shared-cell rule).
 //!
 //! The paper found the lock-free list "did not perform significantly
 //! better" and kept std::list + critical; this bench re-tests that
-//! call under Rust's cost model.
+//! call under Rust's cost model, with the lock-free fan-in standing in
+//! for the now-removed mutex strawman.
 //!
 //!   cargo bench --bench abl_gbm_list -- [--n 2e5] [--quick]
 
@@ -34,7 +36,7 @@ fn main() {
     let threads: Vec<usize> = ctx.args.list("threads", &[1, 4, 16, 32]);
     let mut table = Table::new(vec!["P", "cell-list", "dedup", "WCT(model)", "K"]);
     for &p in &threads {
-        for cell_list in [CellList::Mutex, CellList::LockFree] {
+        for cell_list in [CellList::FanIn, CellList::LockFree] {
             for dedup in [Dedup::FirstCell, Dedup::ResSet] {
                 // The strategy knobs ride the engine's parameter
                 // block, so ablations and production share one path.

@@ -1,0 +1,128 @@
+//! Ablation A7: the N-D pipeline — native sweep-and-verify
+//! (`core::ddim::sweep_and_verify` behind the matchers' `match_nd`
+//! overrides) vs the paper's per-dimension reduction
+//! (`core::ddim::ReductionNd`), across d ∈ {2, 3, 5} and per-dimension
+//! selectivity skews.
+//!
+//! Three workload families per d (the anisotropic ones are where the
+//! reduction's O(ΣK_k) combine blows up):
+//!
+//! * `iso`     — same α on every dimension;
+//! * `skew0`   — dimension 0 barely discriminates (α₀ ≫ α_rest): the
+//!               reduction must materialize the huge K₀ pair set, the
+//!               native path sweeps a selective dimension instead;
+//! * `corr`    — correlated placement (centers track dimension 0):
+//!               every projection is dense, the joint result is not.
+//!
+//! Both paths are asserted to produce the identical K. The acceptance
+//! row (d=3, skew0) additionally asserts native < reduction on the
+//! modeled WCT.
+//!
+//!   cargo bench --bench abl_nd -- [--n 20k] [--dims 2,3,5] [--quick]
+
+use ddm::algos::Algo;
+use ddm::bench::harness::FigCtx;
+use ddm::bench::stats::fmt_secs;
+use ddm::bench::table::{banner, Table};
+use ddm::core::ddim;
+use ddm::engine::{DdmEngine, NdMode};
+use ddm::workload::{nd_alpha_workload, nd_correlated_workload, NdAlphaParams};
+
+const THREADS: usize = 4;
+const SPACE: f64 = 1e6;
+
+fn main() {
+    let ctx = FigCtx::new(THREADS);
+    let n_total = ctx.args.size("n", if ctx.quick { 6_000 } else { 20_000 });
+    let default_dims: &[usize] = if ctx.quick { &[3] } else { &[2, 3, 5] };
+    let dims: Vec<usize> = ctx.args.list("dims", default_dims);
+    let alpha = ctx.args.opt("alpha", 3.0);
+    let skew = ctx.args.opt("skew", 500.0);
+    banner(
+        "A7",
+        "N-D matching: native sweep-and-verify vs per-dimension reduction",
+        &format!("N={n_total} α={alpha} skewed α₀={skew} P={THREADS}"),
+    );
+
+    let engine = |mode: NdMode| -> DdmEngine {
+        DdmEngine::builder()
+            .algo(Algo::Psbm)
+            .threads(THREADS)
+            .nd_mode(mode)
+            .pool(std::sync::Arc::clone(&ctx.pool))
+            .build()
+    };
+    let native = engine(NdMode::Native);
+    let reduce = engine(NdMode::Reduction);
+
+    let mut table = Table::new(vec![
+        "d",
+        "workload",
+        "sweep",
+        "K",
+        "native(model)",
+        "reduce(model)",
+        "speedup",
+    ]);
+    let mut accept_checked = false;
+    for &d in &dims {
+        let mut alphas = vec![alpha; d];
+        alphas[0] = skew;
+        let families: Vec<(&str, _)> = vec![
+            (
+                "iso",
+                nd_alpha_workload(101, &NdAlphaParams::iso(d, n_total, alpha, SPACE)),
+            ),
+            (
+                "skew0",
+                nd_alpha_workload(102, &NdAlphaParams::skewed(n_total, &alphas, SPACE)),
+            ),
+            (
+                "corr",
+                nd_correlated_workload(
+                    103,
+                    &NdAlphaParams::iso(d, n_total, alpha, SPACE),
+                    0.995,
+                ),
+            ),
+        ];
+        for (name, (subs, upds)) in families {
+            let sweep = ddim::select_sweep_dim(&ctx.pool, THREADS, &subs, &upds);
+            let pn = ctx.measure(THREADS, |_pool, _p| native.count_nd(&subs, &upds));
+            let pr = ctx.measure(THREADS, |_pool, _p| reduce.count_nd(&subs, &upds));
+            assert_eq!(pn.value, pr.value, "native vs reduction K diverged ({name} d={d})");
+            let speedup = pr.modeled.mean / pn.modeled.mean.max(1e-12);
+            if d == 3 && name == "skew0" {
+                // The acceptance row: a low-selectivity dimension 0
+                // must not cost the native path anything.
+                assert!(
+                    speedup > 1.0,
+                    "native ({}) must beat reduction ({}) on d=3 skew0",
+                    fmt_secs(pn.modeled.mean),
+                    fmt_secs(pr.modeled.mean)
+                );
+                accept_checked = true;
+            }
+            table.row(vec![
+                d.to_string(),
+                name.to_string(),
+                sweep.to_string(),
+                pn.value.to_string(),
+                fmt_secs(pn.modeled.mean),
+                fmt_secs(pr.modeled.mean),
+                format!("{speedup:.1}x"),
+            ]);
+        }
+    }
+    table.print();
+    ctx.emit("abl_nd", &table);
+    if !accept_checked {
+        eprintln!("(note: d=3 not in --dims; the skew0 acceptance assert did not run)");
+    }
+    println!(
+        "\nreading: on skew0 the reduction materializes dimension 0's full 1-D pair \
+         set (K₀ ≈ N·α₀/2) before any filtering, while the native path sweeps the \
+         most selective dimension and verifies the rest inline — identical K is \
+         asserted on every row, not assumed."
+    );
+}

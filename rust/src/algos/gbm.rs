@@ -4,16 +4,15 @@
 //! are binned into the cells they overlap (phase 1), then every
 //! subscription is tested against the update lists of its cells
 //! (phase 2). Two concurrency strategies for the phase-1 data race on
-//! the cell lists (paper §5: OpenMP `critical` vs their ad-hoc
-//! lock-free list) and two duplicate-suppression strategies (the
-//! paper's `res` set vs the standard first-shared-cell rule) are
-//! selectable — `benches/abl_gbm_list.rs` re-runs the paper's
-//! comparison.
+//! the cell lists (the lock-free fan-in that replaced the per-cell
+//! mutexes vs the paper's ad-hoc lock-free append list) and two
+//! duplicate-suppression strategies (the paper's `res` set vs the
+//! standard first-shared-cell rule) are selectable —
+//! `benches/abl_gbm_list.rs` re-runs the comparison.
 
-use std::sync::Mutex;
-
+use crate::core::ddim::{self, NdMode, NdPolicy};
 use crate::core::sink::MatchSink;
-use crate::core::Regions1D;
+use crate::core::{Regions1D, RegionsNd};
 use crate::exec::lflist::LfList;
 use crate::exec::pfor::chunks;
 use crate::exec::ThreadPool;
@@ -21,10 +20,14 @@ use crate::exec::ThreadPool;
 /// Phase-1 cell-list synchronization strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum CellList {
-    /// One mutex per cell (the paper's `#pragma omp critical` is one
-    /// *global* lock; per-cell locks are the charitable version).
+    /// Per-worker local bins merged in worker order
+    /// ([`ThreadPool::fan_map`]): no locks at all on the hot path, and
+    /// each cell's list ends up in ascending update order
+    /// deterministically. Replaces the per-cell mutexes (themselves
+    /// the charitable version of the paper's one-global-lock
+    /// `#pragma omp critical`).
     #[default]
-    Mutex,
+    FanIn,
     /// The ad-hoc lock-free append list (paper §5).
     LockFree,
 }
@@ -53,7 +56,7 @@ impl Default for GbmParams {
     fn default() -> Self {
         Self {
             ncells: 3000,
-            cell_list: CellList::Mutex,
+            cell_list: CellList::FanIn,
             dedup: Dedup::FirstCell,
         }
     }
@@ -159,25 +162,52 @@ pub fn match_par<S>(
 where
     S: MatchSink + Default,
 {
+    match_par_sinks(pool, nthreads, subs, upds, params, |_p| S::default())
+}
+
+/// [`match_par`] with a per-worker sink factory (worker `p` reports
+/// into `mk(p)`) — how the native N-D path wraps every worker's sink
+/// in a [`FilterSink`](crate::core::sink::FilterSink).
+pub fn match_par_sinks<S, M>(
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &Regions1D,
+    upds: &Regions1D,
+    params: &GbmParams,
+    mk: M,
+) -> Vec<S>
+where
+    S: MatchSink,
+    M: Fn(usize) -> S + Sync,
+{
     let Some(grid) = Grid::new(subs, upds, params.ncells) else {
-        return (0..nthreads).map(|_| S::default()).collect();
+        return (0..nthreads).map(&mk).collect();
     };
     let grid = &grid;
 
     // ---- Phase 1 (parallel over updates) --------------------------------
     let cells: Vec<Vec<u32>> = match params.cell_list {
-        CellList::Mutex => {
-            let lists: Vec<Mutex<Vec<u32>>> =
-                (0..grid.ncells).map(|_| Mutex::new(Vec::new())).collect();
+        CellList::FanIn => {
+            // Per-worker local bins, merged in worker order: lock-free
+            // by construction, and every cell list comes out in
+            // ascending update order no matter the interleaving.
             let ranges = chunks(upds.len(), nthreads);
-            pool.run(nthreads, |p| {
+            let locals: Vec<Vec<Vec<u32>>> = pool.fan_map(nthreads, nthreads, |p| {
+                let mut local: Vec<Vec<u32>> = vec![Vec::new(); grid.ncells];
                 for j in ranges[p].clone() {
                     for c in grid.cells(upds.lo[j], upds.hi[j]) {
-                        lists[c].lock().unwrap().push(j as u32);
+                        local[c].push(j as u32);
                     }
                 }
+                local
             });
-            lists.into_iter().map(|m| m.into_inner().unwrap()).collect()
+            let mut cells: Vec<Vec<u32>> = vec![Vec::new(); grid.ncells];
+            for local in locals {
+                for (c, list) in local.into_iter().enumerate() {
+                    cells[c].extend(list);
+                }
+            }
+            cells
         }
         CellList::LockFree => {
             let lists: Vec<LfList<u32>> =
@@ -200,7 +230,7 @@ where
 
     // ---- Phase 2 (parallel over subscriptions, independent) -------------
     let ranges = chunks(subs.len(), nthreads);
-    super::par_collect(pool, nthreads, |p, sink: &mut S| {
+    super::par_collect_with(pool, nthreads, mk, |p, sink: &mut S| {
         let mut res = std::collections::HashSet::new();
         for i in ranges[p].clone() {
             let (slo, shi) = (subs.lo[i], subs.hi[i]);
@@ -234,11 +264,21 @@ where
 /// matching, carrying its grid parameters.
 pub struct GbmMatcher {
     params: GbmParams,
+    nd: NdPolicy,
 }
 
 impl GbmMatcher {
     pub fn new(params: GbmParams) -> Self {
-        Self { params }
+        Self {
+            params,
+            nd: NdPolicy::default(),
+        }
+    }
+
+    /// Set the N-D pipeline policy (engine-injected).
+    pub fn with_nd(mut self, nd: NdPolicy) -> Self {
+        self.nd = nd;
+        self
     }
 
     pub fn params(&self) -> &GbmParams {
@@ -272,6 +312,51 @@ impl crate::engine::Matcher for GbmMatcher {
         let sinks: Vec<crate::core::sink::CountSink> =
             match_par(ctx.pool, ctx.nthreads, subs, upds, &self.params);
         crate::core::sink::total_count(&sinks)
+    }
+
+    fn match_nd(
+        &self,
+        ctx: &crate::engine::ExecCtx<'_>,
+        subs: &RegionsNd,
+        upds: &RegionsNd,
+        sink: &mut dyn MatchSink,
+    ) {
+        match self.nd.mode {
+            NdMode::Reduction => ddim::ReductionNd::match_nd_with(
+                Some(ctx.pool),
+                subs,
+                upds,
+                |s1, u1, out| self.match_1d(ctx, s1, u1, out),
+                sink,
+            ),
+            NdMode::Native => ddim::native_match(
+                self.nd.sweep,
+                ctx.pool,
+                ctx.nthreads,
+                subs,
+                upds,
+                |s1, u1, mk| match_par_sinks(ctx.pool, ctx.nthreads, s1, u1, &self.params, mk),
+                sink,
+            ),
+        }
+    }
+
+    fn count_nd(&self, ctx: &crate::engine::ExecCtx<'_>, subs: &RegionsNd, upds: &RegionsNd) -> u64 {
+        match self.nd.mode {
+            NdMode::Reduction => {
+                let mut sink = crate::core::sink::CountSink::default();
+                self.match_nd(ctx, subs, upds, &mut sink);
+                sink.count
+            }
+            NdMode::Native => ddim::native_count(
+                self.nd.sweep,
+                ctx.pool,
+                ctx.nthreads,
+                subs,
+                upds,
+                |s1, u1, mk| match_par_sinks(ctx.pool, ctx.nthreads, s1, u1, &self.params, mk),
+            ),
+        }
     }
 }
 
@@ -314,7 +399,7 @@ mod tests {
         let subs = random_regions_1d(&mut rng, 300, 500.0, 8.0);
         let upds = random_regions_1d(&mut rng, 300, 500.0, 8.0);
         let want = bfm_pairs(&subs, &upds);
-        for cell_list in [CellList::Mutex, CellList::LockFree] {
+        for cell_list in [CellList::FanIn, CellList::LockFree] {
             for dedup in [Dedup::FirstCell, Dedup::ResSet] {
                 let params = GbmParams {
                     ncells: 50,

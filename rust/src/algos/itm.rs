@@ -9,12 +9,13 @@
 //! The role swap the paper describes (build the tree on the *smaller*
 //! set) is implemented in [`match_par`].
 
+use crate::core::ddim::{self, NdMode, NdPolicy};
 use crate::core::sink::MatchSink;
-use crate::core::Regions1D;
+use crate::core::{Regions1D, RegionsNd};
 use crate::exec::ThreadPool;
 
 use super::interval_tree::IntervalTree;
-use super::par_collect;
+use super::{par_collect, par_collect_with};
 
 /// Dynamic-schedule chunk: big enough to amortize the cursor CAS,
 /// small enough to balance skewed K_u.
@@ -40,6 +41,23 @@ pub fn match_par<S>(
 where
     S: MatchSink + Default,
 {
+    match_par_sinks(pool, nthreads, subs, upds, |_p| S::default())
+}
+
+/// [`match_par`] with a per-worker sink factory (worker `p` reports
+/// into `mk(p)`) — how the native N-D path wraps every worker's sink
+/// in a [`FilterSink`](crate::core::sink::FilterSink).
+pub fn match_par_sinks<S, M>(
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &Regions1D,
+    upds: &Regions1D,
+    mk: M,
+) -> Vec<S>
+where
+    S: MatchSink,
+    M: Fn(usize) -> S + Sync,
+{
     // Build on the smaller side: tree height and build time drop, the
     // parallel query loop grows — strictly more parallel work.
     let swap = upds.len() < subs.len();
@@ -49,7 +67,7 @@ where
     // One sink per worker; queries pulled via a shared dynamic cursor
     // (per-query work K_u is skewed, so static chunks would imbalance).
     let cursor = crate::exec::pool::WorkCounter::new();
-    let collected = par_collect(pool, nthreads, |_p, sink: &mut S| {
+    let collected = par_collect_with(pool, nthreads, mk, |_p, sink: &mut S| {
         while let Some(r) = cursor.next_chunk(QUERY_CHUNK, query_side.len()) {
             for j in r {
                 let q = query_side.get(j);
@@ -91,7 +109,18 @@ where
 /// matching. The ITM family is the one with a native incremental
 /// index, so [`make_dynamic`](crate::engine::Matcher::make_dynamic)
 /// returns the interval-tree index instead of the rebuild adapter.
-pub struct ItmMatcher;
+#[derive(Default)]
+pub struct ItmMatcher {
+    nd: NdPolicy,
+}
+
+impl ItmMatcher {
+    /// Set the N-D pipeline policy (engine-injected).
+    pub fn with_nd(mut self, nd: NdPolicy) -> Self {
+        self.nd = nd;
+        self
+    }
+}
 
 impl crate::engine::Matcher for ItmMatcher {
     fn name(&self) -> &str {
@@ -119,6 +148,51 @@ impl crate::engine::Matcher for ItmMatcher {
         let sinks: Vec<crate::core::sink::CountSink> =
             match_par(ctx.pool, ctx.nthreads, subs, upds);
         crate::core::sink::total_count(&sinks)
+    }
+
+    fn match_nd(
+        &self,
+        ctx: &crate::engine::ExecCtx<'_>,
+        subs: &RegionsNd,
+        upds: &RegionsNd,
+        sink: &mut dyn MatchSink,
+    ) {
+        match self.nd.mode {
+            NdMode::Reduction => ddim::ReductionNd::match_nd_with(
+                Some(ctx.pool),
+                subs,
+                upds,
+                |s1, u1, out| self.match_1d(ctx, s1, u1, out),
+                sink,
+            ),
+            NdMode::Native => ddim::native_match(
+                self.nd.sweep,
+                ctx.pool,
+                ctx.nthreads,
+                subs,
+                upds,
+                |s1, u1, mk| match_par_sinks(ctx.pool, ctx.nthreads, s1, u1, mk),
+                sink,
+            ),
+        }
+    }
+
+    fn count_nd(&self, ctx: &crate::engine::ExecCtx<'_>, subs: &RegionsNd, upds: &RegionsNd) -> u64 {
+        match self.nd.mode {
+            NdMode::Reduction => {
+                let mut sink = crate::core::sink::CountSink::default();
+                self.match_nd(ctx, subs, upds, &mut sink);
+                sink.count
+            }
+            NdMode::Native => ddim::native_count(
+                self.nd.sweep,
+                ctx.pool,
+                ctx.nthreads,
+                subs,
+                upds,
+                |s1, u1, mk| match_par_sinks(ctx.pool, ctx.nthreads, s1, u1, mk),
+            ),
+        }
     }
 
     fn make_dynamic(&self) -> Option<Box<dyn crate::engine::DynamicMatcher>> {

@@ -22,30 +22,40 @@ pub mod psbm;
 pub mod sbm;
 pub mod sbm_binary;
 
-use std::sync::Mutex;
-
+use crate::core::ddim::NdPolicy;
 use crate::core::sink::{CountSink, MatchSink, VecSink};
 use crate::core::Regions1D;
 use crate::exec::ThreadPool;
 use crate::sets::SetImpl;
 
-/// Run `f(p, &mut local_sink)` on `nthreads` workers and return the
-/// per-worker sinks ordered by worker index. The hot path stays
-/// lock-free: each worker owns its sink and publishes it once.
+/// Run `f(p, &mut sink)` on `nthreads` workers, each with a sink built
+/// by `mk(p)`, and return the sinks in worker order. Built on
+/// [`ThreadPool::fan_map`]: indexed slots, no locks, deterministic
+/// order by construction. The factory form lets the native N-D path
+/// hand every worker a [`FilterSink`](crate::core::sink::FilterSink)
+/// wrapping its private collection sink, so residual-dimension
+/// verification runs *inside* the parallel region.
+pub fn par_collect_with<S, M, F>(pool: &ThreadPool, nthreads: usize, mk: M, f: F) -> Vec<S>
+where
+    S: MatchSink,
+    M: Fn(usize) -> S + Sync,
+    F: Fn(usize, &mut S) + Sync,
+{
+    pool.fan_map(nthreads, nthreads, |p| {
+        let mut sink = mk(p);
+        f(p, &mut sink);
+        sink
+    })
+}
+
+/// [`par_collect_with`] over default-constructed sinks — the common
+/// per-worker collection helper of the parallel matchers.
 pub fn par_collect<S, F>(pool: &ThreadPool, nthreads: usize, f: F) -> Vec<S>
 where
     S: MatchSink + Default,
     F: Fn(usize, &mut S) + Sync,
 {
-    let out: Mutex<Vec<(usize, S)>> = Mutex::new(Vec::with_capacity(nthreads));
-    pool.run(nthreads, |p| {
-        let mut sink = S::default();
-        f(p, &mut sink);
-        out.lock().unwrap().push((p, sink));
-    });
-    let mut v = out.into_inner().unwrap();
-    v.sort_by_key(|(p, _)| *p);
-    v.into_iter().map(|(_, s)| s).collect()
+    par_collect_with(pool, nthreads, |_p| S::default(), f)
 }
 
 /// Algorithm selector used by the CLI, coordinator and benches.
@@ -140,6 +150,10 @@ pub struct MatchParams {
     pub cell_list: gbm::CellList,
     /// GBM phase-2 duplicate-suppression strategy.
     pub dedup: gbm::Dedup,
+    /// N-D pipeline policy: native sweep-and-verify vs per-dimension
+    /// reduction, and the sweep-dimension choice
+    /// ([`crate::core::ddim`]).
+    pub nd: NdPolicy,
 }
 
 impl MatchParams {
@@ -160,6 +174,7 @@ impl Default for MatchParams {
             set_impl: SetImpl::Sparse,
             cell_list: gbm::CellList::default(),
             dedup: gbm::Dedup::default(),
+            nd: NdPolicy::default(),
         }
     }
 }

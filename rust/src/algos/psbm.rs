@@ -10,18 +10,27 @@
 //!    apply to SubSet/UpdSet (`Sadd/Sdel/Uadd/Udel`, Algorithm 7
 //!    lines 1–17, invariants (1)–(2) of §4), then the master combines
 //!    the deltas serially (lines 18–21; the O(N/P + P) two-level scan
-//!    of Fig. 7).
+//!    of Fig. 7). Deltas are collected through
+//!    [`ThreadPool::fan_map`] — indexed slots, no locks, segment order
+//!    by construction.
 //! 3. Every worker sweeps its segment with its private, correctly
 //!    initialized SubSet/UpdSet (Algorithm 6), reporting into a
-//!    per-worker sink — zero synchronization on the hot path.
+//!    per-worker sink — zero synchronization on the hot path (the
+//!    init sets are *moved* to their segment's worker via
+//!    [`ThreadPool::fan_map_take`]).
 //!
 //! The result is bit-identical to serial SBM for every thread count
 //! (property-tested below, including the half-open tie-breaking).
+//!
+//! For d dimensions `PsbmMatcher` overrides
+//! [`match_nd`](crate::engine::Matcher::match_nd) with the native
+//! sweep-and-verify pipeline ([`crate::core::ddim`]): only the chosen
+//! sweep dimension is swept, and each worker's sink is wrapped in a
+//! [`FilterSink`](crate::core::sink::FilterSink) that verifies the residual dimensions inline.
 
-use std::sync::Mutex;
-
+use crate::core::ddim::{self, NdMode, NdPolicy};
 use crate::core::sink::MatchSink;
-use crate::core::Regions1D;
+use crate::core::{Regions1D, RegionsNd};
 use crate::exec::pfor::chunks;
 use crate::exec::psort::par_sort_by_key;
 use crate::exec::ThreadPool;
@@ -84,6 +93,25 @@ where
     Set: ActiveSet,
     S: MatchSink + Default,
 {
+    match_par_sinks::<Set, S, _>(pool, nthreads, subs, upds, |_p| S::default())
+}
+
+/// [`match_par`] with a per-worker sink factory: worker `p` reports
+/// into `mk(p)`. The native N-D path hands every worker a
+/// [`FilterSink`](crate::core::sink::FilterSink) here, so residual-dimension verification happens
+/// inside the parallel sweep.
+pub fn match_par_sinks<Set, S, M>(
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &Regions1D,
+    upds: &Regions1D,
+    mk: M,
+) -> Vec<S>
+where
+    Set: ActiveSet,
+    S: MatchSink,
+    M: Fn(usize) -> S + Sync,
+{
     let (n, m) = (subs.len(), upds.len());
     let total = 2 * (n + m);
 
@@ -124,13 +152,11 @@ where
 
     // ---- Phase 2: per-segment deltas + master combine (Algorithm 7) -----
     let segments = chunks(total, nthreads);
-    let deltas: Mutex<Vec<(usize, Delta<Set>)>> = Mutex::new(Vec::with_capacity(nthreads));
-    pool.run(nthreads, |p| {
-        let d = segment_delta::<Set>(&endpoints[segments[p].clone()], n, m);
-        deltas.lock().unwrap().push((p, d));
+    let endpoints_ref = &endpoints;
+    let segments_ref = &segments;
+    let deltas: Vec<Delta<Set>> = pool.fan_map(nthreads, nthreads, |p| {
+        segment_delta::<Set>(&endpoints_ref[segments_ref[p].clone()], n, m)
     });
-    let mut deltas = deltas.into_inner().unwrap();
-    deltas.sort_by_key(|(p, _)| *p);
 
     // Master-only combine (Algorithm 7 lines 18–21): SubSet[p] =
     // SubSet[p-1] ∪ Sadd[p-1] \ Sdel[p-1], likewise UpdSet.
@@ -138,7 +164,7 @@ where
         let mut out = Vec::with_capacity(nthreads);
         let mut sub = Set::with_universe(n);
         let mut upd = Set::with_universe(m);
-        for (_, d) in &deltas {
+        for d in &deltas {
             out.push((sub.clone(), upd.clone()));
             sub.union_with(&d.sadd);
             sub.subtract(&d.sdel);
@@ -149,11 +175,17 @@ where
     });
 
     // ---- Phase 3: per-segment sweeps (Algorithm 6 lines 7–20) -----------
-    let init_sets: Vec<Mutex<Option<(Set, Set)>>> =
-        init_sets.into_iter().map(|s| Mutex::new(Some(s))).collect();
-    super::par_collect(pool, nthreads, |p, sink: &mut S| {
-        let (mut sub_set, mut upd_set) = init_sets[p].lock().unwrap().take().unwrap();
-        sweep(&endpoints[segments[p].clone()], &mut sub_set, &mut upd_set, sink);
+    // Each segment's init sets are moved into the worker that claims
+    // it — no locks, no clones, slot order by construction.
+    pool.fan_map_take(nthreads, init_sets, |p, (mut sub_set, mut upd_set)| {
+        let mut sink = mk(p);
+        sweep(
+            &endpoints_ref[segments_ref[p].clone()],
+            &mut sub_set,
+            &mut upd_set,
+            &mut sink,
+        );
+        sink
     })
 }
 
@@ -168,12 +200,30 @@ pub fn match_par_with<S>(
 where
     S: MatchSink + Default,
 {
+    match_par_sinks_with(set_impl, pool, nthreads, subs, upds, |_p| S::default())
+}
+
+/// Runtime-dispatched [`match_par_sinks`].
+pub fn match_par_sinks_with<S, M>(
+    set_impl: SetImpl,
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &Regions1D,
+    upds: &Regions1D,
+    mk: M,
+) -> Vec<S>
+where
+    S: MatchSink,
+    M: Fn(usize) -> S + Sync,
+{
     match set_impl {
-        SetImpl::Bit => match_par::<BitSet, S>(pool, nthreads, subs, upds),
-        SetImpl::Hash => match_par::<HashActiveSet, S>(pool, nthreads, subs, upds),
-        SetImpl::BTree => match_par::<BTreeActiveSet, S>(pool, nthreads, subs, upds),
-        SetImpl::SortedVec => match_par::<SortedVecSet, S>(pool, nthreads, subs, upds),
-        SetImpl::Sparse => match_par::<SparseSet, S>(pool, nthreads, subs, upds),
+        SetImpl::Bit => match_par_sinks::<BitSet, S, M>(pool, nthreads, subs, upds, mk),
+        SetImpl::Hash => match_par_sinks::<HashActiveSet, S, M>(pool, nthreads, subs, upds, mk),
+        SetImpl::BTree => match_par_sinks::<BTreeActiveSet, S, M>(pool, nthreads, subs, upds, mk),
+        SetImpl::SortedVec => {
+            match_par_sinks::<SortedVecSet, S, M>(pool, nthreads, subs, upds, mk)
+        }
+        SetImpl::Sparse => match_par_sinks::<SparseSet, S, M>(pool, nthreads, subs, upds, mk),
     }
 }
 
@@ -181,11 +231,21 @@ where
 /// paper's main contribution).
 pub struct PsbmMatcher {
     set_impl: SetImpl,
+    nd: NdPolicy,
 }
 
 impl PsbmMatcher {
     pub fn new(set_impl: SetImpl) -> Self {
-        Self { set_impl }
+        Self {
+            set_impl,
+            nd: NdPolicy::default(),
+        }
+    }
+
+    /// Set the N-D pipeline policy (engine-injected).
+    pub fn with_nd(mut self, nd: NdPolicy) -> Self {
+        self.nd = nd;
+        self
     }
 }
 
@@ -215,6 +275,51 @@ impl crate::engine::Matcher for PsbmMatcher {
         let sinks: Vec<crate::core::sink::CountSink> =
             match_par_with(self.set_impl, ctx.pool, ctx.nthreads, subs, upds);
         crate::core::sink::total_count(&sinks)
+    }
+
+    fn match_nd(
+        &self,
+        ctx: &crate::engine::ExecCtx<'_>,
+        subs: &RegionsNd,
+        upds: &RegionsNd,
+        sink: &mut dyn MatchSink,
+    ) {
+        match self.nd.mode {
+            NdMode::Reduction => ddim::ReductionNd::match_nd_with(
+                Some(ctx.pool),
+                subs,
+                upds,
+                |s1, u1, out| self.match_1d(ctx, s1, u1, out),
+                sink,
+            ),
+            NdMode::Native => ddim::native_match(
+                self.nd.sweep,
+                ctx.pool,
+                ctx.nthreads,
+                subs,
+                upds,
+                |s1, u1, mk| match_par_sinks_with(self.set_impl, ctx.pool, ctx.nthreads, s1, u1, mk),
+                sink,
+            ),
+        }
+    }
+
+    fn count_nd(&self, ctx: &crate::engine::ExecCtx<'_>, subs: &RegionsNd, upds: &RegionsNd) -> u64 {
+        match self.nd.mode {
+            NdMode::Reduction => {
+                let mut sink = crate::core::sink::CountSink::default();
+                self.match_nd(ctx, subs, upds, &mut sink);
+                sink.count
+            }
+            NdMode::Native => ddim::native_count(
+                self.nd.sweep,
+                ctx.pool,
+                ctx.nthreads,
+                subs,
+                upds,
+                |s1, u1, mk| match_par_sinks_with(self.set_impl, ctx.pool, ctx.nthreads, s1, u1, mk),
+            ),
+        }
     }
 }
 

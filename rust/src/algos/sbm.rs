@@ -160,11 +160,33 @@ where
 /// one thread regardless of the context's thread count.
 pub struct SbmMatcher {
     set_impl: SetImpl,
+    nd: crate::core::ddim::NdPolicy,
 }
 
 impl SbmMatcher {
     pub fn new(set_impl: SetImpl) -> Self {
-        Self { set_impl }
+        Self {
+            set_impl,
+            nd: crate::core::ddim::NdPolicy::default(),
+        }
+    }
+
+    /// Set the N-D pipeline policy (engine-injected).
+    pub fn with_nd(mut self, nd: crate::core::ddim::NdPolicy) -> Self {
+        self.nd = nd;
+        self
+    }
+
+    /// Serial sweep of one dimension's projections into `sink`
+    /// (runtime set dispatch).
+    fn sweep_into(&self, subs: &Regions1D, upds: &Regions1D, sink: &mut dyn MatchSink) {
+        match self.set_impl {
+            SetImpl::Bit => match_seq::<BitSet>(subs, upds, sink),
+            SetImpl::Hash => match_seq::<HashActiveSet>(subs, upds, sink),
+            SetImpl::BTree => match_seq::<BTreeActiveSet>(subs, upds, sink),
+            SetImpl::SortedVec => match_seq::<SortedVecSet>(subs, upds, sink),
+            SetImpl::Sparse => match_seq::<SparseSet>(subs, upds, sink),
+        }
     }
 }
 
@@ -193,6 +215,48 @@ impl crate::engine::Matcher for SbmMatcher {
     ) -> u64 {
         let counted: crate::core::sink::CountSink = match_seq_with(self.set_impl, subs, upds);
         counted.count
+    }
+
+    fn match_nd(
+        &self,
+        ctx: &crate::engine::ExecCtx<'_>,
+        subs: &crate::core::RegionsNd,
+        upds: &crate::core::RegionsNd,
+        sink: &mut dyn MatchSink,
+    ) {
+        use crate::core::ddim::{self, NdMode};
+        match self.nd.mode {
+            NdMode::Reduction => ddim::ReductionNd::match_nd_with(
+                Some(ctx.pool),
+                subs,
+                upds,
+                |s1, u1, out| self.match_1d(ctx, s1, u1, out),
+                sink,
+            ),
+            NdMode::Native => {
+                // Serial backend: one FilterSink straight over the
+                // caller's sink; the sweep is a single pass anyway.
+                let k = ddim::resolve_sweep_dim(self.nd.sweep, ctx.pool, 1, subs, upds);
+                ddim::sweep_and_verify(
+                    subs,
+                    upds,
+                    k,
+                    |s1, u1, out| self.sweep_into(s1, u1, out),
+                    sink,
+                );
+            }
+        }
+    }
+
+    fn count_nd(
+        &self,
+        ctx: &crate::engine::ExecCtx<'_>,
+        subs: &crate::core::RegionsNd,
+        upds: &crate::core::RegionsNd,
+    ) -> u64 {
+        let mut sink = crate::core::sink::CountSink::default();
+        self.match_nd(ctx, subs, upds, &mut sink);
+        sink.count
     }
 }
 

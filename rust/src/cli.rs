@@ -62,48 +62,104 @@ impl Args {
         self.opts.get(name).map(String::as_str)
     }
 
-    /// Typed option with default; panics with a readable message on a
-    /// malformed value (CLI surface, so fail fast is correct).
-    pub fn opt<T>(&self, name: &str, default: T) -> T
+    /// Typed option: `Ok(None)` when absent, `Err(one-line message)`
+    /// when present but malformed.
+    pub fn try_opt<T>(&self, name: &str) -> Result<Option<T>, String>
     where
         T: FromStr,
         T::Err: std::fmt::Display,
     {
         match self.opts.get(name) {
-            None => default,
+            None => Ok(None),
             Some(raw) => raw
                 .parse()
-                .unwrap_or_else(|e| panic!("--{name}={raw}: {e}")),
+                .map(Some)
+                .map_err(|e| format!("--{name}={raw}: {e}")),
         }
     }
 
-    /// Scientific-notation-friendly usize (`--n 1e6`).
-    pub fn size(&self, name: &str, default: usize) -> usize {
+    /// Typed option with default; a malformed value prints a one-line
+    /// error to stderr and exits nonzero (CLI surface: user input is
+    /// not a bug, so no panic, no backtrace).
+    pub fn opt<T>(&self, name: &str, default: T) -> T
+    where
+        T: FromStr,
+        T::Err: std::fmt::Display,
+    {
+        match self.try_opt(name) {
+            Ok(Some(v)) => v,
+            Ok(None) => default,
+            Err(e) => die(&e),
+        }
+    }
+
+    /// Scientific-notation-friendly usize: `Ok(None)` when absent,
+    /// `Err` on a malformed value.
+    pub fn try_size(&self, name: &str) -> Result<Option<usize>, String> {
         match self.opts.get(name) {
-            None => default,
-            Some(raw) => parse_size(raw).unwrap_or_else(|| panic!("--{name}={raw}: bad size")),
+            None => Ok(None),
+            Some(raw) => parse_size(raw)
+                .map(Some)
+                .ok_or_else(|| format!("--{name}={raw}: bad size")),
         }
     }
 
-    /// Comma-separated typed list (`--threads 1,2,4,8`).
+    /// Scientific-notation-friendly usize (`--n 1e6`); malformed
+    /// values exit with a one-line error.
+    pub fn size(&self, name: &str, default: usize) -> usize {
+        match self.try_size(name) {
+            Ok(Some(v)) => v,
+            Ok(None) => default,
+            Err(e) => die(&e),
+        }
+    }
+
+    /// Comma-separated typed list: `Ok(None)` when absent, `Err` on
+    /// the first malformed element.
+    pub fn try_list<T>(&self, name: &str) -> Result<Option<Vec<T>>, String>
+    where
+        T: FromStr,
+        T::Err: std::fmt::Display,
+    {
+        match self.opts.get(name) {
+            None => Ok(None),
+            Some(raw) => raw
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|e| format!("--{name}={raw}: {e}"))
+                })
+                .collect::<Result<Vec<T>, String>>()
+                .map(Some),
+        }
+    }
+
+    /// Comma-separated typed list (`--threads 1,2,4,8`); malformed
+    /// values exit with a one-line error.
     pub fn list<T>(&self, name: &str, default: &[T]) -> Vec<T>
     where
         T: FromStr + Clone,
         T::Err: std::fmt::Display,
     {
-        match self.opts.get(name) {
-            None => default.to_vec(),
-            Some(raw) => raw
-                .split(',')
-                .filter(|s| !s.is_empty())
-                .map(|s| s.trim().parse().unwrap_or_else(|e| panic!("--{name}: {e}")))
-                .collect(),
+        match self.try_list(name) {
+            Ok(Some(v)) => v,
+            Ok(None) => default.to_vec(),
+            Err(e) => die(&e),
         }
     }
 
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
+}
+
+/// One-line CLI failure: print to stderr and exit nonzero. Bad flags
+/// are user input, not bugs — no panic, no backtrace.
+pub fn die(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2)
 }
 
 /// Parse "1000", "1e6", "2.5e3", "10k", "3M" into usize.
@@ -163,6 +219,33 @@ mod tests {
     fn double_dash_stops_parsing() {
         let a = Args::from_iter(["--a=1", "--", "--not-an-opt"]);
         assert_eq!(a.positional(), &["--not-an-opt".to_string()]);
+    }
+
+    /// Malformed values surface as one-line `Err`s through the `try_*`
+    /// API (the panicking/aborting behavior is confined to the exiting
+    /// wrappers, which benches and the `ddm` binary use).
+    #[test]
+    fn malformed_values_are_errors_not_panics() {
+        let a = Args::from_iter(["--n", "abc", "--x", "1.5", "--l", "1,two,3"]);
+        let e = a.try_opt::<u32>("x").unwrap_err();
+        assert!(e.starts_with("--x=1.5:"), "{e}");
+        let e = a.try_size("n").unwrap_err();
+        assert_eq!(e, "--n=abc: bad size");
+        let e = a.try_list::<u32>("l").unwrap_err();
+        assert!(e.starts_with("--l=1,two,3:"), "{e}");
+        // One line each — these go straight to stderr.
+        for msg in [
+            a.try_opt::<u32>("x").unwrap_err(),
+            a.try_size("n").unwrap_err(),
+            a.try_list::<u32>("l").unwrap_err(),
+        ] {
+            assert!(!msg.contains('\n'), "{msg}");
+        }
+        // Well-formed and absent values still parse through try_*.
+        assert_eq!(a.try_opt::<f64>("x").unwrap(), Some(1.5));
+        assert_eq!(a.try_opt::<u32>("missing").unwrap(), None);
+        assert_eq!(a.try_size("missing").unwrap(), None);
+        assert_eq!(a.try_list::<u32>("missing").unwrap(), None);
     }
 
     #[test]

@@ -1,64 +1,343 @@
-//! d-dimensional reduction (paper §2, footnote 1).
+//! d-dimensional matching: the native **sweep-and-verify** pipeline
+//! and the per-dimension reduction fallback (paper §2, footnote 1).
 //!
-//! Two d-rectangles intersect iff their projections intersect on every
-//! dimension, so any 1-D matcher extends to d dimensions by running it
-//! once per dimension and intersecting the partial result sets. The
-//! paper notes the combination step must be O(f(n, m)) with hash-based
-//! sets — we intersect via a `HashSet<u64>` of packed pairs, giving
-//! O(K₀ + K₁ + … + K_{d-1}) expected combine time.
+//! The paper extends 1-D matchers to d dimensions by matching every
+//! dimension independently and intersecting the d partial pair sets
+//! ([`ReductionNd`]). That combine is O(K₀ + K₁ + … + K_{d-1}) — and on
+//! anisotropic workloads (one dimension barely discriminates, e.g. the
+//! time axis of a vehicular trace) the largest K_k can dwarf the true
+//! N-D result, making the reduction the dominant cost.
+//!
+//! The native pipeline ([`sweep_and_verify`]) instead sweeps **one**
+//! dimension — chosen by a cheap sampled selectivity estimate
+//! ([`select_sweep_dim`]) — and verifies the residual d−1 dimensions
+//! inline at report time through a
+//! [`FilterSink`](crate::core::sink::FilterSink): total cost is the
+//! best single-dimension 1-D match plus O(d) float compares per
+//! swept pair, and **no per-dimension pair set is ever materialized**.
+//! `benches/abl_nd.rs` measures both paths against each other.
+//!
+//! Which path runs is an engine policy ([`NdPolicy`], set through
+//! [`EngineBuilder::nd_mode`](crate::engine::EngineBuilder::nd_mode) /
+//! [`EngineBuilder::sweep_dim`](crate::engine::EngineBuilder::sweep_dim)
+//! and the CLI's `--nd-mode` / `--sweep-dim`).
 
 use std::collections::HashSet;
 
 use super::region::{Regions1D, RegionsNd};
-use super::sink::{pack_pair, unpack_pair, MatchSink, VecSink};
+use super::sink::{pack_pair, unpack_pair, CountSink, FilterSink, MatchSink, VecSink};
+use crate::exec::ThreadPool;
 
-/// Extend a 1-D matcher to d dimensions.
-///
-/// `match1d(s_proj, u_proj, sink)` must report every intersecting pair
-/// of the 1-D projections exactly once.
-pub fn match_nd<F>(
+/// N-D combination strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NdMode {
+    /// Sweep one dimension, verify the rest inline ([`sweep_and_verify`]).
+    #[default]
+    Native,
+    /// Match every dimension, intersect the pair sets ([`ReductionNd`]).
+    Reduction,
+}
+
+impl std::str::FromStr for NdMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let t = s.trim();
+        if t.eq_ignore_ascii_case("native") {
+            Ok(NdMode::Native)
+        } else if t.eq_ignore_ascii_case("reduce") || t.eq_ignore_ascii_case("reduction") {
+            Ok(NdMode::Reduction)
+        } else {
+            Err(format!("unknown N-D mode '{t}' (valid: native, reduce)"))
+        }
+    }
+}
+
+/// Sweep-dimension choice for [`NdMode::Native`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SweepDim {
+    /// Pick per call via [`select_sweep_dim`].
+    #[default]
+    Auto,
+    /// Always sweep dimension `k` (clamped to `d - 1`).
+    Fixed(usize),
+}
+
+impl std::str::FromStr for SweepDim {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let t = s.trim();
+        if t.eq_ignore_ascii_case("auto") {
+            return Ok(SweepDim::Auto);
+        }
+        t.parse::<usize>()
+            .map(SweepDim::Fixed)
+            .map_err(|_| format!("unknown sweep dimension '{t}' (valid: auto, or an index)"))
+    }
+}
+
+/// The engine's N-D matching policy (mode + sweep-dimension choice),
+/// carried by [`MatchParams`](crate::algos::MatchParams) into every
+/// natively-N-D matcher.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct NdPolicy {
+    pub mode: NdMode,
+    pub sweep: SweepDim,
+}
+
+/// Regions sampled per side and dimension by [`select_sweep_dim`].
+const SELECTIVITY_SAMPLE: usize = 64;
+
+/// Per-dimension selectivity score from a strided sample: the expected
+/// fraction of (s, u) pairs whose dimension-`k` projections intersect,
+/// estimated as `(E[l_s] + E[l_u]) / span_k` — the α-model's pair
+/// density from sampled endpoint statistics. Lower = more selective.
+fn dim_score(subs: &Regions1D, upds: &Regions1D, k_sample: usize) -> f64 {
+    let sample = |r: &Regions1D| -> (f64, f64, f64, usize) {
+        let n = r.len();
+        let stride = (n / k_sample).max(1);
+        let (mut len_sum, mut lo_min, mut hi_max, mut count) =
+            (0.0f64, f64::INFINITY, f64::NEG_INFINITY, 0usize);
+        let mut i = 0;
+        while i < n {
+            len_sum += r.hi[i] - r.lo[i];
+            lo_min = lo_min.min(r.lo[i]);
+            hi_max = hi_max.max(r.hi[i]);
+            count += 1;
+            i += stride;
+        }
+        (len_sum, lo_min, hi_max, count)
+    };
+    let (sl, slo, shi, sc) = sample(subs);
+    let (ul, ulo, uhi, uc) = sample(upds);
+    if sc == 0 || uc == 0 {
+        return 0.0;
+    }
+    let mean_len = sl / sc as f64 + ul / uc as f64;
+    if mean_len <= 0.0 {
+        // Zero-width sample: nothing can intersect on this dimension.
+        return 0.0;
+    }
+    let span = shi.max(uhi) - slo.min(ulo);
+    (mean_len / span.max(f64::MIN_POSITIVE)).min(1.0)
+}
+
+/// Pick the sweep dimension for the native pipeline: the dimension
+/// whose sampled endpoint density predicts the fewest 1-D pairs
+/// (strided sample of [`SELECTIVITY_SAMPLE`] regions per side per
+/// dimension; the per-dimension scores are evaluated in parallel on
+/// `pool` when it has workers to spare). Ties break to the lowest
+/// dimension; d = 1 (and empty inputs) return 0.
+pub fn select_sweep_dim(
+    pool: &ThreadPool,
+    nthreads: usize,
     subs: &RegionsNd,
     upds: &RegionsNd,
+) -> usize {
+    let d = subs.d().min(upds.d());
+    if d <= 1 || subs.is_empty() || upds.is_empty() {
+        return 0;
+    }
+    let score = |k: usize| dim_score(subs.project(k), upds.project(k), SELECTIVITY_SAMPLE);
+    let scores: Vec<f64> = if nthreads > 1 {
+        pool.fan_map(nthreads.min(d), d, score)
+    } else {
+        (0..d).map(score).collect()
+    };
+    let mut best = 0;
+    for (k, &s) in scores.iter().enumerate() {
+        if s < scores[best] {
+            best = k;
+        }
+    }
+    best
+}
+
+/// Resolve a [`SweepDim`] policy to a concrete dimension for this call.
+pub fn resolve_sweep_dim(
+    sweep: SweepDim,
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &RegionsNd,
+    upds: &RegionsNd,
+) -> usize {
+    match sweep {
+        SweepDim::Fixed(k) => k.min(subs.d().saturating_sub(1)),
+        SweepDim::Auto => select_sweep_dim(pool, nthreads, subs, upds),
+    }
+}
+
+/// Native sweep-and-verify N-D matching: run the 1-D matcher on the
+/// `sweep` projections only, verifying the residual dimensions of every
+/// reported pair inline through a [`FilterSink`] wrapped around `sink`.
+///
+/// Exactly-once follows from the 1-D matcher's exactly-once contract
+/// (the filter is deterministic and stateless per pair). Parallel
+/// matchers that want the verification inside their workers construct
+/// per-worker `FilterSink`s instead (see the `match_nd` overrides in
+/// [`crate::algos`]); this entry point is the serial/generic form.
+pub fn sweep_and_verify<F>(
+    subs: &RegionsNd,
+    upds: &RegionsNd,
+    sweep: usize,
     match1d: F,
     sink: &mut dyn MatchSink,
 ) where
-    F: Fn(&Regions1D, &Regions1D, &mut VecSink),
+    F: FnOnce(&Regions1D, &Regions1D, &mut dyn MatchSink),
 {
     assert_eq!(subs.d(), upds.d(), "dimension mismatch");
-    let d = subs.d();
-    if d == 1 {
-        let mut v = VecSink::default();
-        match1d(subs.project(0), upds.project(0), &mut v);
-        for (s, u) in v.pairs {
-            sink.report(s, u);
-        }
+    if subs.d() == 1 {
+        match1d(subs.project(0), upds.project(0), sink);
         return;
     }
+    let mut f = FilterSink::new(subs, upds, sweep, sink);
+    match1d(subs.project(sweep), upds.project(sweep), &mut f);
+}
 
-    // Dimension 0 seeds the candidate set…
-    let mut v = VecSink::default();
-    match1d(subs.project(0), upds.project(0), &mut v);
-    let mut candidates: HashSet<u64> =
-        v.pairs.iter().map(|&(s, u)| pack_pair(s, u)).collect();
+/// The paper's per-dimension reduction (§2, footnote 1), kept as the
+/// fallback N-D combiner (`--nd-mode reduce`): run the 1-D matcher once
+/// per dimension and intersect the partial pair sets via a
+/// `HashSet<u64>` of packed pairs — O(K₀ + K₁ + … + K_{d-1}) expected
+/// combine time, which is exactly what the native pipeline avoids.
+pub struct ReductionNd;
 
-    // …and each further dimension filters it.
-    for k in 1..d {
-        if candidates.is_empty() {
+impl ReductionNd {
+    /// Extend a 1-D matcher to d dimensions by reduction.
+    ///
+    /// `match1d(s_proj, u_proj, sink)` must report every intersecting
+    /// pair of the 1-D projections exactly once.
+    pub fn match_nd<F>(subs: &RegionsNd, upds: &RegionsNd, match1d: F, sink: &mut dyn MatchSink)
+    where
+        F: Fn(&Regions1D, &Regions1D, &mut VecSink),
+    {
+        Self::match_nd_with(None, subs, upds, match1d, sink);
+    }
+
+    /// [`match_nd`](Self::match_nd) charging the hash-set combine to
+    /// `pool`'s cost-log **serial** term (it is master-only work,
+    /// exactly like PSBM's Algorithm-7 combine) — so the work-span
+    /// model sees the reduction's dominant cost. The engine's matchers
+    /// route their `NdMode::Reduction` arms through this.
+    pub fn match_nd_with<F>(
+        pool: Option<&ThreadPool>,
+        subs: &RegionsNd,
+        upds: &RegionsNd,
+        match1d: F,
+        sink: &mut dyn MatchSink,
+    ) where
+        F: Fn(&Regions1D, &Regions1D, &mut VecSink),
+    {
+        let serial = |f: &mut dyn FnMut()| match pool {
+            Some(p) => p.serial_section(f),
+            None => f(),
+        };
+        assert_eq!(subs.d(), upds.d(), "dimension mismatch");
+        let d = subs.d();
+        if d == 1 {
+            let mut v = VecSink::default();
+            match1d(subs.project(0), upds.project(0), &mut v);
+            for (s, u) in v.pairs {
+                sink.report(s, u);
+            }
             return;
         }
-        let mut vk = VecSink::default();
-        match1d(subs.project(k), upds.project(k), &mut vk);
-        let dim_pairs: HashSet<u64> =
-            vk.pairs.iter().map(|&(s, u)| pack_pair(s, u)).collect();
-        candidates.retain(|p| dim_pairs.contains(p));
-    }
 
-    let mut out: Vec<u64> = candidates.into_iter().collect();
-    out.sort_unstable(); // deterministic report order
-    for p in out {
-        let (s, u) = unpack_pair(p);
-        sink.report(s, u);
+        // Dimension 0 seeds the candidate set…
+        let mut v = VecSink::default();
+        match1d(subs.project(0), upds.project(0), &mut v);
+        let mut candidates: HashSet<u64> = HashSet::new();
+        serial(&mut || {
+            candidates = v.pairs.iter().map(|&(s, u)| pack_pair(s, u)).collect();
+        });
+
+        // …and each further dimension filters it.
+        for k in 1..d {
+            if candidates.is_empty() {
+                return;
+            }
+            let mut vk = VecSink::default();
+            match1d(subs.project(k), upds.project(k), &mut vk);
+            serial(&mut || {
+                let dim_pairs: HashSet<u64> =
+                    vk.pairs.iter().map(|&(s, u)| pack_pair(s, u)).collect();
+                candidates.retain(|p| dim_pairs.contains(p));
+            });
+        }
+
+        let mut out: Vec<u64> = Vec::new();
+        serial(&mut || {
+            out = candidates.drain().collect();
+            out.sort_unstable(); // deterministic report order
+        });
+        for p in out {
+            let (s, u) = unpack_pair(p);
+            sink.report(s, u);
+        }
     }
+}
+
+/// Drive the native pipeline over a parallel 1-D matcher that accepts
+/// a per-worker sink factory, collecting pairs into `sink`: resolve
+/// the sweep dimension, project it, hand `run1d` a factory producing
+/// per-worker [`FilterSink`]`<VecSink>`s, and drain the returned
+/// sinks. The shared body of the PSBM/ITM/GBM `match_nd` overrides.
+pub fn native_match<'a, R>(
+    sweep: SweepDim,
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &'a RegionsNd,
+    upds: &'a RegionsNd,
+    run1d: R,
+    sink: &mut dyn MatchSink,
+) where
+    R: FnOnce(
+        &'a Regions1D,
+        &'a Regions1D,
+        &(dyn Fn(usize) -> FilterSink<'a, VecSink> + Sync),
+    ) -> Vec<FilterSink<'a, VecSink>>,
+{
+    let k = resolve_sweep_dim(sweep, pool, nthreads, subs, upds);
+    let mk = move |_p: usize| FilterSink::new(subs, upds, k, VecSink::default());
+    for fs in run1d(subs.project(k), upds.project(k), &mk) {
+        for (s, u) in fs.into_inner().pairs {
+            sink.report(s, u);
+        }
+    }
+}
+
+/// Counting twin of [`native_match`]: per-worker
+/// [`FilterSink`]`<CountSink>`s, summed — verification inside the
+/// workers, no pair ever collected.
+pub fn native_count<'a, R>(
+    sweep: SweepDim,
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &'a RegionsNd,
+    upds: &'a RegionsNd,
+    run1d: R,
+) -> u64
+where
+    R: FnOnce(
+        &'a Regions1D,
+        &'a Regions1D,
+        &(dyn Fn(usize) -> FilterSink<'a, CountSink> + Sync),
+    ) -> Vec<FilterSink<'a, CountSink>>,
+{
+    let k = resolve_sweep_dim(sweep, pool, nthreads, subs, upds);
+    let mk = move |_p: usize| FilterSink::new(subs, upds, k, CountSink::default());
+    run1d(subs.project(k), upds.project(k), &mk)
+        .into_iter()
+        .map(|fs| fs.into_inner().count)
+        .sum()
+}
+
+/// Back-compat spelling of [`ReductionNd::match_nd`] (the default
+/// [`Matcher::match_nd`](crate::engine::Matcher::match_nd) for
+/// backends without a native N-D override).
+pub fn match_nd<F>(subs: &RegionsNd, upds: &RegionsNd, match1d: F, sink: &mut dyn MatchSink)
+where
+    F: Fn(&Regions1D, &Regions1D, &mut VecSink),
+{
+    ReductionNd::match_nd(subs, upds, match1d, sink);
 }
 
 #[cfg(test)]
@@ -70,6 +349,16 @@ mod tests {
     /// Trivial 1-D matcher oracle (BFM is defined in algos; core tests
     /// stay dependency-free with a local quadratic loop).
     fn bf1d(s: &Regions1D, u: &Regions1D, sink: &mut VecSink) {
+        for i in 0..s.len() {
+            for j in 0..u.len() {
+                if s.get(i).intersects(&u.get(j)) {
+                    sink.report(i as u32, j as u32);
+                }
+            }
+        }
+    }
+
+    fn bf1d_dyn(s: &Regions1D, u: &Regions1D, sink: &mut dyn MatchSink) {
         for i in 0..s.len() {
             for j in 0..u.len() {
                 if s.get(i).intersects(&u.get(j)) {
@@ -91,38 +380,105 @@ mod tests {
         out
     }
 
+    fn random_rects(rng: &mut crate::prng::Rng, d: usize, count: usize) -> RegionsNd {
+        let mut out = RegionsNd::new(d);
+        for _ in 0..count {
+            let rect: Vec<Interval> = (0..d)
+                .map(|_| {
+                    let lo = rng.uniform(0.0, 50.0);
+                    Interval::new(lo, lo + rng.uniform(0.0, 20.0))
+                })
+                .collect();
+            out.push(&rect);
+        }
+        out
+    }
+
     #[test]
     fn matches_direct_nd_on_random_rects() {
         crate::bench::prop::prop_check("ddim-vs-direct", 0xD1, |rng| {
             let d = 1 + rng.below(3) as usize;
             let n = 1 + rng.below(30) as usize;
             let m = 1 + rng.below(30) as usize;
-            let mut subs = RegionsNd::new(d);
-            let mut upds = RegionsNd::new(d);
-            for _ in 0..n {
-                let rect: Vec<Interval> = (0..d)
-                    .map(|_| {
-                        let lo = rng.uniform(0.0, 50.0);
-                        Interval::new(lo, lo + rng.uniform(0.0, 20.0))
-                    })
-                    .collect();
-                subs.push(&rect);
-            }
-            for _ in 0..m {
-                let rect: Vec<Interval> = (0..d)
-                    .map(|_| {
-                        let lo = rng.uniform(0.0, 50.0);
-                        Interval::new(lo, lo + rng.uniform(0.0, 20.0))
-                    })
-                    .collect();
-                upds.push(&rect);
-            }
+            let subs = random_rects(rng, d, n);
+            let upds = random_rects(rng, d, m);
             let mut sink = VecSink::default();
-            match_nd(&subs, &upds, bf1d, &mut sink);
+            ReductionNd::match_nd(&subs, &upds, bf1d, &mut sink);
             let got = canonicalize(sink.pairs);
             let want = canonicalize(direct_nd(&subs, &upds));
             crate::bench::prop::expect_eq(&got, &want, "pair sets")
         });
+    }
+
+    /// Native sweep-and-verify equals the reduction and the direct
+    /// check for every possible sweep dimension.
+    #[test]
+    fn sweep_and_verify_equals_reduction_every_sweep_dim() {
+        crate::bench::prop::prop_check("sweep-verify-vs-direct", 0xD2, |rng| {
+            let d = 1 + rng.below(4) as usize;
+            let n = 1 + rng.below(30) as usize;
+            let m = 1 + rng.below(30) as usize;
+            let subs = random_rects(rng, d, n);
+            let upds = random_rects(rng, d, m);
+            let want = canonicalize(direct_nd(&subs, &upds));
+            for sweep in 0..d {
+                let mut sink = VecSink::default();
+                sweep_and_verify(&subs, &upds, sweep, bf1d_dyn, &mut sink);
+                crate::bench::prop::expect_eq(
+                    &canonicalize(sink.pairs),
+                    &want,
+                    &format!("sweep dim {sweep} of {d}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn select_sweep_dim_prefers_the_selective_dimension() {
+        // Dimension 0 barely discriminates (regions half the space);
+        // dimension 1 is sharp (0.1% of the space). The estimator must
+        // pick dimension 1.
+        let mut rng = crate::prng::Rng::new(0xD3);
+        let mut subs = RegionsNd::new(2);
+        let mut upds = RegionsNd::new(2);
+        for _ in 0..200 {
+            let wide = rng.uniform(0.0, 50.0);
+            let sharp = rng.uniform(0.0, 99.9);
+            subs.push(&[
+                Interval::new(wide, wide + 50.0),
+                Interval::new(sharp, sharp + 0.1),
+            ]);
+            let wide = rng.uniform(0.0, 50.0);
+            let sharp = rng.uniform(0.0, 99.9);
+            upds.push(&[
+                Interval::new(wide, wide + 50.0),
+                Interval::new(sharp, sharp + 0.1),
+            ]);
+        }
+        let pool = ThreadPool::new(1);
+        assert_eq!(select_sweep_dim(&pool, 1, &subs, &upds), 1);
+        assert_eq!(select_sweep_dim(&pool, 2, &subs, &upds), 1, "parallel estimate");
+        // Fixed policy clamps out-of-range dimensions.
+        assert_eq!(
+            resolve_sweep_dim(SweepDim::Fixed(9), &pool, 1, &subs, &upds),
+            1
+        );
+        assert_eq!(
+            resolve_sweep_dim(SweepDim::Auto, &pool, 1, &subs, &upds),
+            1
+        );
+    }
+
+    #[test]
+    fn nd_mode_and_sweep_dim_parse() {
+        assert_eq!("native".parse::<NdMode>().unwrap(), NdMode::Native);
+        assert_eq!("Reduce".parse::<NdMode>().unwrap(), NdMode::Reduction);
+        assert_eq!("reduction".parse::<NdMode>().unwrap(), NdMode::Reduction);
+        assert!("frob".parse::<NdMode>().is_err());
+        assert_eq!("auto".parse::<SweepDim>().unwrap(), SweepDim::Auto);
+        assert_eq!("2".parse::<SweepDim>().unwrap(), SweepDim::Fixed(2));
+        assert!("minus-one".parse::<SweepDim>().is_err());
     }
 
     #[test]
@@ -137,12 +493,15 @@ mod tests {
         let mut upds = RegionsNd::new(2);
         upds.push(&[Interval::new(1.0, 5.0), Interval::new(2.0, 7.0)]); // U1
         upds.push(&[Interval::new(6.0, 11.0), Interval::new(2.0, 5.0)]); // U2
+        let want = vec![(0, 0), (1, 1), (2, 0), (2, 1)];
         let mut sink = VecSink::default();
-        match_nd(&subs, &upds, bf1d, &mut sink);
-        assert_eq!(
-            canonicalize(sink.pairs),
-            vec![(0, 0), (1, 1), (2, 0), (2, 1)]
-        );
+        ReductionNd::match_nd(&subs, &upds, bf1d, &mut sink);
+        assert_eq!(canonicalize(sink.pairs), want);
+        for sweep in 0..2 {
+            let mut sink = VecSink::default();
+            sweep_and_verify(&subs, &upds, sweep, bf1d_dyn, &mut sink);
+            assert_eq!(canonicalize(sink.pairs), want, "sweep {sweep}");
+        }
     }
 
     #[test]
@@ -150,7 +509,12 @@ mod tests {
         let subs = RegionsNd::new(2);
         let upds = RegionsNd::new(2);
         let mut sink = VecSink::default();
-        match_nd(&subs, &upds, bf1d, &mut sink);
+        ReductionNd::match_nd(&subs, &upds, bf1d, &mut sink);
         assert!(sink.pairs.is_empty());
+        let mut sink = VecSink::default();
+        sweep_and_verify(&subs, &upds, 0, bf1d_dyn, &mut sink);
+        assert!(sink.pairs.is_empty());
+        let pool = ThreadPool::new(0);
+        assert_eq!(select_sweep_dim(&pool, 1, &subs, &upds), 0);
     }
 }

@@ -1,5 +1,6 @@
 //! Problem-domain types: intervals, d-rectangles, region sets, match
-//! sinks, and the d-dimensional reduction (paper §2).
+//! sinks, and the d-dimensional pipeline (native sweep-and-verify plus
+//! the paper-§2 reduction fallback, [`ddim`]).
 
 pub mod ddim;
 pub mod interval;

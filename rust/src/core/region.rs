@@ -126,6 +126,24 @@ impl RegionsNd {
             .all(|(a, b)| a.get(i).intersects(&b.get(j)))
     }
 
+    /// [`rects_intersect`](Self::rects_intersect) skipping dimension
+    /// `skip` — the native N-D pipeline's residual verification (the
+    /// swept dimension is already known to intersect). Half-open
+    /// Intersect-1D on the SoA arrays, no `Interval` construction.
+    #[inline]
+    pub fn rects_intersect_except(&self, i: usize, other: &RegionsNd, j: usize, skip: usize) -> bool {
+        debug_assert_eq!(self.d(), other.d());
+        for (k, (a, b)) in self.dims.iter().zip(&other.dims).enumerate() {
+            if k == skip {
+                continue;
+            }
+            if !(a.lo[i] < b.hi[j] && b.lo[j] < a.hi[i]) {
+                return false;
+            }
+        }
+        true
+    }
+
     /// The 1-D projection onto dimension `k`.
     pub fn project(&self, k: usize) -> &Regions1D {
         &self.dims[k]
@@ -134,10 +152,22 @@ impl RegionsNd {
 
 /// Generate `count` random 1-D regions of fixed length `l` on
 /// `[0, space)` — the paper §5 synthetic workload building block.
+///
+/// `l` is clamped to `space`: a region longer than the routing space
+/// degenerates to the whole space instead of producing an inverted
+/// placement range (`lo` drawn from a negative interval) and regions
+/// sticking out below zero. For `l < space` the produced stream is
+/// bit-identical to the historical one.
 pub fn random_regions_1d(rng: &mut Rng, count: usize, space: f64, l: f64) -> Regions1D {
+    assert!(
+        space > 0.0 && l >= 0.0 && space.is_finite() && l.is_finite(),
+        "invalid workload geometry: space={space} l={l}"
+    );
+    let l = l.min(space);
+    let max_lo = space - l;
     let mut out = Regions1D::with_capacity(count);
     for _ in 0..count {
-        let lo = rng.uniform(0.0, space - l);
+        let lo = rng.uniform(0.0, max_lo);
         out.push(Interval::new(lo, lo + l));
     }
     out
@@ -173,6 +203,28 @@ mod tests {
         b.push(&[Interval::new(1.0, 3.0), Interval::new(1.0, 3.0)]);
         assert!(!a.rects_intersect(0, &b, 0)); // dim 1 disjoint
         assert!(a.rects_intersect(0, &b, 1));
+    }
+
+    /// Regression: `l ≥ space` used to draw `lo` from an inverted
+    /// `uniform(0, negative)` range, yielding regions with negative
+    /// lower bounds; it now clamps to the whole space.
+    #[test]
+    fn oversized_region_length_clamps_to_space() {
+        let mut rng = Rng::new(11);
+        for l in [5.0, 12.5, 1e9] {
+            let r = random_regions_1d(&mut rng, 20, 5.0, l);
+            assert_eq!(r.len(), 20);
+            for iv in r.iter() {
+                assert_eq!(iv, Interval::new(0.0, 5.0), "l={l}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid workload geometry")]
+    fn nonpositive_space_is_rejected() {
+        let mut rng = Rng::new(12);
+        let _ = random_regions_1d(&mut rng, 1, 0.0, 1.0);
     }
 
     #[test]

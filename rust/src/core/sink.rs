@@ -7,11 +7,70 @@
 //! notifications. Parallel matchers use one sink per worker and merge
 //! afterwards, keeping the hot loop lock-free.
 
+use super::region::RegionsNd;
 use super::RegionIdx;
 
 /// Receiver for reported (subscription, update) intersections.
 pub trait MatchSink: Send {
     fn report(&mut self, s: RegionIdx, u: RegionIdx);
+}
+
+/// Mutable references forward, so adapters like [`FilterSink`] can
+/// wrap either an owned sink or a caller's `&mut dyn MatchSink`.
+impl<T: MatchSink + ?Sized> MatchSink for &mut T {
+    #[inline]
+    fn report(&mut self, s: RegionIdx, u: RegionIdx) {
+        (**self).report(s, u);
+    }
+}
+
+/// The native N-D pipeline's verification stage (see
+/// [`crate::core::ddim`]): wraps an inner sink and forwards a reported
+/// pair only if the **residual** dimensions — every dimension except
+/// the swept one — also intersect, checked inline with the paper's
+/// Intersect-1D on the SoA arrays. No per-dimension pair set is ever
+/// materialized; a pair that fails any residual dimension costs a few
+/// float compares and is dropped on the spot.
+///
+/// Parallel matchers construct one `FilterSink` per worker (wrapping
+/// the worker's private sink), so verification runs inside the
+/// parallel sweep; serial callers wrap the caller's sink directly.
+pub struct FilterSink<'a, S: MatchSink> {
+    subs: &'a RegionsNd,
+    upds: &'a RegionsNd,
+    /// The swept dimension (already matched; skipped here).
+    sweep: usize,
+    inner: S,
+}
+
+impl<'a, S: MatchSink> FilterSink<'a, S> {
+    pub fn new(subs: &'a RegionsNd, upds: &'a RegionsNd, sweep: usize, inner: S) -> Self {
+        debug_assert_eq!(subs.d(), upds.d(), "dimension mismatch");
+        debug_assert!(sweep < subs.d(), "sweep dimension out of range");
+        Self {
+            subs,
+            upds,
+            sweep,
+            inner,
+        }
+    }
+
+    /// Unwrap the inner sink (per-worker collection fan-in).
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: MatchSink> MatchSink for FilterSink<'_, S> {
+    #[inline]
+    fn report(&mut self, s: RegionIdx, u: RegionIdx) {
+        if self
+            .subs
+            .rects_intersect_except(s as usize, self.upds, u as usize, self.sweep)
+        {
+            self.inner.report(s, u);
+        }
+    }
 }
 
 /// Counts intersections (the paper's evaluation sink).
@@ -148,6 +207,52 @@ mod tests {
         // Packed order == tuple order.
         assert!(pack_pair(1, 9) < pack_pair(2, 0));
         assert!(pack_pair(2, 0) < pack_pair(2, 1));
+    }
+
+    #[test]
+    fn filter_sink_verifies_residual_dimensions() {
+        use crate::core::interval::Interval;
+        use crate::core::region::RegionsNd;
+
+        let mut subs = RegionsNd::new(3);
+        subs.push(&[
+            Interval::new(0.0, 10.0),
+            Interval::new(0.0, 2.0),
+            Interval::new(5.0, 6.0),
+        ]);
+        let mut upds = RegionsNd::new(3);
+        // Intersects in every dimension.
+        upds.push(&[
+            Interval::new(1.0, 2.0),
+            Interval::new(1.0, 3.0),
+            Interval::new(5.5, 7.0),
+        ]);
+        // Fails residual dim 1 (touching is not intersecting).
+        upds.push(&[
+            Interval::new(1.0, 2.0),
+            Interval::new(2.0, 3.0),
+            Interval::new(5.5, 7.0),
+        ]);
+        // Fails residual dim 2.
+        upds.push(&[
+            Interval::new(1.0, 2.0),
+            Interval::new(1.0, 3.0),
+            Interval::new(9.0, 11.0),
+        ]);
+        let mut out = VecSink::default();
+        {
+            // Sweep dim 0: the filter checks dims 1 and 2 only.
+            let mut f = FilterSink::new(&subs, &upds, 0, &mut out as &mut dyn MatchSink);
+            f.report(0, 0);
+            f.report(0, 1);
+            f.report(0, 2);
+        }
+        assert_eq!(out.pairs, vec![(0, 0)]);
+        // Sweeping dim 1 instead: dim 1 is NOT checked, dim 0/2 are.
+        let mut f = FilterSink::new(&subs, &upds, 1, VecSink::default());
+        f.report(0, 1);
+        f.report(0, 2);
+        assert_eq!(f.into_inner().pairs, vec![(0, 1)]);
     }
 
     #[test]

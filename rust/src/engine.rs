@@ -37,6 +37,7 @@ use std::sync::Arc;
 use crate::algos::{bfm, gbm, itm, psbm, sbm, sbm_binary};
 use crate::algos::{Algo, MatchParams};
 use crate::core::ddim;
+pub use crate::core::ddim::{NdMode, NdPolicy, SweepDim};
 use crate::core::interval::Interval;
 use crate::core::sink::{canonicalize, CountSink, FnSink, MatchSink, PairVec, VecSink};
 use crate::core::{Regions1D, RegionsNd};
@@ -89,9 +90,13 @@ pub trait Matcher: Send + Sync {
         sink.count
     }
 
-    /// Match d-dimensional region sets via the per-dimension reduction
-    /// of paper §2 (provided; override for natively d-dimensional
-    /// backends such as the dense XLA kernels).
+    /// Match d-dimensional region sets. The provided implementation is
+    /// the per-dimension reduction of paper §2
+    /// ([`ddim::ReductionNd`]); the in-tree SBM/PSBM/ITM/GBM backends
+    /// override it with the native sweep-and-verify pipeline
+    /// ([`ddim::sweep_and_verify`]) under the engine's
+    /// [`NdPolicy`](ddim::NdPolicy), and natively d-dimensional
+    /// backends (e.g. the dense XLA kernels) override it outright.
     fn match_nd(
         &self,
         ctx: &ExecCtx<'_>,
@@ -99,12 +104,24 @@ pub trait Matcher: Send + Sync {
         upds: &RegionsNd,
         sink: &mut dyn MatchSink,
     ) {
-        ddim::match_nd(
+        ddim::ReductionNd::match_nd_with(
+            Some(ctx.pool),
             subs,
             upds,
             |s1, u1, out| self.match_1d(ctx, s1, u1, out),
             sink,
         );
+    }
+
+    /// Count d-dimensional intersections without retaining them
+    /// (provided: a counting sink over [`match_nd`](Self::match_nd);
+    /// the native-pipeline backends override it so the count runs
+    /// through per-worker filtered counting sinks with no pair
+    /// collection at all).
+    fn count_nd(&self, ctx: &ExecCtx<'_>, subs: &RegionsNd, upds: &RegionsNd) -> u64 {
+        let mut sink = CountSink::default();
+        self.match_nd(ctx, subs, upds, &mut sink);
+        sink.count
     }
 
     /// A dynamic (incremental) index natively maintained by this
@@ -252,14 +269,17 @@ enum Selection {
     Custom(Arc<dyn Matcher>),
 }
 
-/// Construct the [`Matcher`] for one in-tree algorithm.
+/// Construct the [`Matcher`] for one in-tree algorithm. SBM, PSBM,
+/// ITM and GBM carry the parameter block's [`NdPolicy`](ddim::NdPolicy)
+/// into their native N-D overrides; BFM and binary-SBM keep the
+/// provided reduction path.
 pub fn algo_matcher(algo: Algo, params: &MatchParams) -> Arc<dyn Matcher> {
     match algo {
         Algo::Bfm => Arc::new(bfm::BfmMatcher),
-        Algo::Gbm => Arc::new(gbm::GbmMatcher::new(params.gbm())),
-        Algo::Itm => Arc::new(itm::ItmMatcher),
-        Algo::Sbm => Arc::new(sbm::SbmMatcher::new(params.set_impl)),
-        Algo::Psbm => Arc::new(psbm::PsbmMatcher::new(params.set_impl)),
+        Algo::Gbm => Arc::new(gbm::GbmMatcher::new(params.gbm()).with_nd(params.nd)),
+        Algo::Itm => Arc::new(itm::ItmMatcher::default().with_nd(params.nd)),
+        Algo::Sbm => Arc::new(sbm::SbmMatcher::new(params.set_impl).with_nd(params.nd)),
+        Algo::Psbm => Arc::new(psbm::PsbmMatcher::new(params.set_impl).with_nd(params.nd)),
         Algo::SbmBinary => Arc::new(sbm_binary::SbmBinaryMatcher),
     }
 }
@@ -377,6 +397,22 @@ impl EngineBuilder {
         self
     }
 
+    /// N-D pipeline: native sweep-and-verify (default) or the paper's
+    /// per-dimension reduction (see [`crate::core::ddim`]; CLI
+    /// `--nd-mode native|reduce`).
+    pub fn nd_mode(mut self, mode: ddim::NdMode) -> Self {
+        self.params.nd.mode = mode;
+        self
+    }
+
+    /// Sweep dimension for the native N-D pipeline: auto-selected by
+    /// sampled selectivity (default) or pinned to one dimension (CLI
+    /// `--sweep-dim auto|k`).
+    pub fn sweep_dim(mut self, sweep: ddim::SweepDim) -> Self {
+        self.params.nd.sweep = sweep;
+        self
+    }
+
     // ---- session knobs (see crate::session) --------------------------------
 
     /// Backing store of session diff retention sets
@@ -465,7 +501,7 @@ impl EngineBuilder {
         // unwrapped selection is kept for `dynamic()`.
         let wrap = |m: Arc<dyn Matcher>| -> Arc<dyn Matcher> {
             if self.shard.shards > 1 {
-                Arc::new(ShardedMatcher::new(m, self.shard.shards))
+                Arc::new(ShardedMatcher::new(m, self.shard.shards).with_nd(self.params.nd))
             } else {
                 m
             }
@@ -614,11 +650,12 @@ impl DdmEngine {
             .match_nd(&ctx, subs, upds, sink);
     }
 
-    /// Count d-dimensional intersections.
+    /// Count d-dimensional intersections (the native pipeline counts
+    /// through per-worker filtered sinks without collecting pairs).
     pub fn count_nd(&self, subs: &RegionsNd, upds: &RegionsNd) -> u64 {
-        let mut sink = CountSink::default();
-        self.match_nd(subs, upds, &mut sink);
-        sink.count
+        let ctx = self.ctx();
+        self.matcher_for(subs.len(), upds.len())
+            .count_nd(&ctx, subs, upds)
     }
 
     /// Canonical (sorted) d-dimensional pair list.
@@ -961,6 +998,52 @@ mod tests {
         let plain = DdmEngine::builder().algo(Algo::Itm).threads(1).shards(1).build();
         assert_eq!(plain.algo_name(), "itm");
         assert_eq!(plain.shard_params(), &ShardParams::default());
+    }
+
+    #[test]
+    fn builder_nd_knobs_flow_through_and_modes_agree() {
+        let native = DdmEngine::builder().algo(Algo::Psbm).threads(2).build();
+        assert_eq!(native.params().nd.mode, NdMode::Native);
+        assert_eq!(native.params().nd.sweep, SweepDim::Auto);
+        let reduce = DdmEngine::builder()
+            .algo(Algo::Psbm)
+            .threads(2)
+            .nd_mode(NdMode::Reduction)
+            .build();
+        assert_eq!(reduce.params().nd.mode, NdMode::Reduction);
+        let pinned = DdmEngine::builder()
+            .algo(Algo::Psbm)
+            .threads(2)
+            .sweep_dim(SweepDim::Fixed(1))
+            .build();
+        assert_eq!(pinned.params().nd.sweep, SweepDim::Fixed(1));
+
+        let mut rng = Rng::new(0xE7);
+        let d = 3;
+        let mut subs = RegionsNd::new(d);
+        let mut upds = RegionsNd::new(d);
+        for _ in 0..150 {
+            let rect: Vec<Interval> = (0..d)
+                .map(|_| {
+                    let lo = rng.uniform(0.0, 60.0);
+                    Interval::new(lo, lo + rng.uniform(0.0, 10.0))
+                })
+                .collect();
+            subs.push(&rect);
+            let rect: Vec<Interval> = (0..d)
+                .map(|_| {
+                    let lo = rng.uniform(0.0, 60.0);
+                    Interval::new(lo, lo + rng.uniform(0.0, 10.0))
+                })
+                .collect();
+            upds.push(&rect);
+        }
+        let want = reduce.pairs_nd(&subs, &upds);
+        assert!(!want.is_empty());
+        assert_eq!(native.pairs_nd(&subs, &upds), want);
+        assert_eq!(native.count_nd(&subs, &upds), want.len() as u64);
+        assert_eq!(pinned.pairs_nd(&subs, &upds), want);
+        assert_eq!(pinned.count_nd(&subs, &upds), want.len() as u64);
     }
 
     #[test]

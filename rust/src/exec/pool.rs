@@ -11,6 +11,7 @@
 //! but `max_p busy_p` is exactly the quantity a P-core machine's
 //! wall-clock would track.
 
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
@@ -149,14 +150,26 @@ impl ThreadPool {
     /// across up to `workers` pool workers (atomic-cursor dynamic
     /// scheduling) and collect the results in index order. The shared
     /// helper behind the shard fan-outs
-    /// ([`crate::shard::ShardedSession`], [`crate::shard::ShardedMatcher`])
-    /// and the session recompute phase.
+    /// ([`crate::shard::ShardedSession`], [`crate::shard::ShardedMatcher`]),
+    /// the per-worker sink collection of the parallel matchers
+    /// ([`crate::algos::par_collect`]) and the session recompute phase.
+    ///
+    /// The result slots are plain indexed cells, not locks: the cursor
+    /// hands each index to exactly one worker, so slot writes never
+    /// alias and the hot path carries no lock at all. Slot order is
+    /// deterministic by construction regardless of which worker claims
+    /// which index.
     pub fn fan_map<T, F>(&self, workers: usize, n: usize, f: F) -> Vec<T>
     where
-        T: Default + Send,
+        T: Send,
         F: Fn(usize) -> T + Sync,
     {
-        let slots: Vec<Mutex<T>> = (0..n).map(|_| Mutex::new(T::default())).collect();
+        struct Slots<T>(Vec<UnsafeCell<Option<T>>>);
+        // SAFETY: workers only ever touch the slot whose index the
+        // atomic cursor handed them, so concurrent access to one cell
+        // never happens.
+        unsafe impl<T: Send> Sync for Slots<T> {}
+        let slots: Slots<T> = Slots((0..n).map(|_| UnsafeCell::new(None)).collect());
         let cursor = AtomicUsize::new(0);
         self.run(workers.min(n.max(1)).max(1), |_p| loop {
             let i = cursor.fetch_add(1, Ordering::Relaxed);
@@ -164,9 +177,41 @@ impl ThreadPool {
                 break;
             }
             let out = f(i);
-            *slots[i].lock().unwrap() = out;
+            // SAFETY: index i is claimed exactly once (fetch_add), and
+            // `run` joins every worker before the slots are read back,
+            // so this write is unaliased and happens-before the reads.
+            unsafe { *slots.0[i].get() = Some(out) };
         });
-        slots.into_iter().map(|m| m.into_inner().unwrap()).collect()
+        slots
+            .0
+            .into_iter()
+            .map(|c| c.into_inner().expect("fan_map slot filled"))
+            .collect()
+    }
+
+    /// [`fan_map`](Self::fan_map) over **owned** inputs: item `i` is
+    /// moved into the worker that claims index `i` (no clone, no
+    /// `Mutex<Option<_>>::take` hand-off). Used by Parallel SBM to move
+    /// each segment's initialized active sets into its phase-3 sweep.
+    pub fn fan_map_take<I, T, F>(&self, workers: usize, items: Vec<I>, f: F) -> Vec<T>
+    where
+        I: Send,
+        T: Send,
+        F: Fn(usize, I) -> T + Sync,
+    {
+        struct Cells<I>(Vec<UnsafeCell<Option<I>>>);
+        // SAFETY: as in `fan_map`, each cell is touched by exactly one
+        // worker (the one the cursor handed its index to).
+        unsafe impl<I: Send> Sync for Cells<I> {}
+        let n = items.len();
+        let cells: Cells<I> = Cells(items.into_iter().map(|i| UnsafeCell::new(Some(i))).collect());
+        let cells = &cells;
+        self.fan_map(workers, n, |i| {
+            // SAFETY: index i is claimed exactly once; no other worker
+            // reads or writes this cell.
+            let item = unsafe { (*cells.0[i].get()).take() }.expect("fan_map_take item present");
+            f(i, item)
+        })
     }
 
     /// Fork-join parallel region: run `f(p)` for `p in 0..nthreads`,
@@ -372,6 +417,20 @@ mod tests {
         assert!(pool.fan_map(4, 0, |i| i).is_empty());
         // Fewer items than workers still covers everything once.
         assert_eq!(pool.fan_map(4, 2, |i| i + 1), vec![1, 2]);
+    }
+
+    #[test]
+    fn fan_map_take_moves_each_item_once() {
+        let pool = ThreadPool::new(3);
+        // Non-Clone, non-Default items: ownership must transfer.
+        struct Owned(String);
+        let items: Vec<Owned> = (0..50).map(|i| Owned(format!("item-{i}"))).collect();
+        let got = pool.fan_map_take(4, items, |i, item: Owned| {
+            assert_eq!(item.0, format!("item-{i}"));
+            i
+        });
+        assert_eq!(got, (0..50).collect::<Vec<_>>());
+        assert!(pool.fan_map_take(4, Vec::<Owned>::new(), |i, _| i).is_empty());
     }
 
     #[test]

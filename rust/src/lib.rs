@@ -27,6 +27,41 @@
 //! assert_eq!(engine.pairs_1d(&subs, &upds), vec![(0, 0)]);
 //! ```
 //!
+//! ## d-dimensional matching: the sweep-and-verify pipeline
+//!
+//! [`engine::DdmEngine::match_nd`] / [`engine::DdmEngine::pairs_nd`] /
+//! [`engine::DdmEngine::count_nd`] match axis-parallel d-rectangles.
+//! By default the engine runs the **native sweep-and-verify pipeline**
+//! ([`core::ddim`]): it sweeps only the most selective dimension
+//! (chosen by a sampled endpoint-density estimate, or pinned with
+//! [`engine::EngineBuilder::sweep_dim`]) and verifies the remaining
+//! dimensions inline at report time — no per-dimension pair set is
+//! ever materialized. The paper's per-dimension reduction (§2,
+//! footnote 1) stays available as a fallback via
+//! [`engine::EngineBuilder::nd_mode`]:
+//!
+//! ```
+//! use ddm::core::{Interval, RegionsNd};
+//! use ddm::engine::{DdmEngine, NdMode};
+//!
+//! let mut subs = RegionsNd::new(2);
+//! subs.push(&[Interval::new(0.0, 4.0), Interval::new(4.0, 9.0)]);
+//! subs.push(&[Interval::new(2.0, 10.0), Interval::new(1.0, 6.0)]);
+//! let mut upds = RegionsNd::new(2);
+//! upds.push(&[Interval::new(1.0, 5.0), Interval::new(2.0, 7.0)]);
+//!
+//! let native = DdmEngine::builder().threads(2).build(); // native by default
+//! assert_eq!(native.pairs_nd(&subs, &upds), vec![(0, 0), (1, 0)]);
+//! assert_eq!(native.count_nd(&subs, &upds), 2);
+//!
+//! // The §2 per-dimension reduction gives the identical pair set.
+//! let reduce = DdmEngine::builder()
+//!     .threads(2)
+//!     .nd_mode(NdMode::Reduction)
+//!     .build();
+//! assert_eq!(reduce.pairs_nd(&subs, &upds), native.pairs_nd(&subs, &upds));
+//! ```
+//!
 //! ## Incremental matching: sessions and `MatchDiff`
 //!
 //! Dynamic workloads should not re-match from scratch. A
@@ -102,8 +137,9 @@
 //!   (uniform or sample-balanced), [`shard::ShardedSession`] with
 //!   per-shard sessions and merged deduplicated diffs,
 //!   [`shard::ShardedMatcher`] for the static path.
-//! * [`core`] — intervals, d-rectangles, regions and the d-dimensional
-//!   reduction of the region matching problem (paper §2).
+//! * [`core`] — intervals, d-rectangles, regions, and the d-dimensional
+//!   pipeline: native sweep-and-verify plus the paper-§2 reduction
+//!   fallback ([`core::ddim`]).
 //! * [`exec`] — the shared-memory parallel runtime the paper builds on
 //!   OpenMP for: a thread pool, chunked `parallel_for`, parallel merge
 //!   sort and the two-level parallel prefix scan of paper Fig. 7.

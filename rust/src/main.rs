@@ -21,13 +21,14 @@
 use std::time::Instant;
 
 use ddm::bench::{rss, sysinfo};
-use ddm::cli::Args;
+use ddm::cli::{die, Args};
 use ddm::coordinator::{Coordinator, CoordinatorConfig};
-use ddm::engine::DdmEngine;
+use ddm::engine::{DdmEngine, NdMode, SweepDim};
 use ddm::hla::{RegionKind, RegionSpec, RoutingSpace};
 use ddm::sets::SetImpl;
 use ddm::workload::koln::{koln_workload, KolnParams};
-use ddm::workload::{alpha_workload, AlphaParams};
+use ddm::workload::{alpha_workload, nd_alpha_workload, nd_correlated_workload, AlphaParams,
+    NdAlphaParams};
 
 fn usage() -> ! {
     eprintln!(
@@ -57,20 +58,79 @@ fn load_workload(args: &Args) -> (ddm::core::Regions1D, ddm::core::Regions1D, St
     }
 }
 
+/// Run one matching job: 1-D by default; `--d N` (or `--alphas
+/// a0,a1,…`) switches to a d-dimensional workload and the N-D pipeline
+/// (`--nd-mode native|reduce`, `--sweep-dim auto|k`, `--rho c` for the
+/// correlated generator).
 fn cmd_match(args: &Args) {
     let threads: usize = args.opt("threads", 4usize);
+    let nd_mode: NdMode = args
+        .try_opt("nd-mode")
+        .unwrap_or_else(|e| die(&e))
+        .unwrap_or_default();
+    let sweep: SweepDim = args
+        .try_opt("sweep-dim")
+        .unwrap_or_else(|e| die(&e))
+        .unwrap_or_default();
     let engine = DdmEngine::builder()
         .algo_str(args.get("algo").unwrap_or("psbm"))
-        .unwrap_or_else(|e| panic!("{e}"))
+        .unwrap_or_else(|e| die(&e))
         .threads(threads)
         .ncells(args.opt("ncells", 3000usize))
         .shards(args.opt("shards", 1usize))
+        .nd_mode(nd_mode)
+        .sweep_dim(sweep)
         .set_impl(
             args.get("set")
-                .map(|s| s.parse::<SetImpl>().unwrap_or_else(|e| panic!("{e}")))
+                .map(|s| s.parse::<SetImpl>().unwrap_or_else(|e| die(&e)))
                 .unwrap_or(SetImpl::Sparse),
         )
         .build();
+
+    // d > 1 (or an explicit per-dimension α list): N-D workload + the
+    // engine's N-D pipeline.
+    let alphas: Option<Vec<f64>> = args.try_list("alphas").unwrap_or_else(|e| die(&e));
+    let d: usize = args.opt("d", alphas.as_ref().map_or(1, Vec::len));
+    if d > 1 || alphas.is_some() {
+        let alphas =
+            alphas.unwrap_or_else(|| vec![args.opt("alpha", 100.0); d.max(1)]);
+        if d != alphas.len() {
+            die(&format!(
+                "--d {d} disagrees with --alphas ({} values)",
+                alphas.len()
+            ));
+        }
+        let p = NdAlphaParams::skewed(
+            args.size("n", 100_000),
+            &alphas,
+            args.opt("space", 1e6),
+        );
+        let seed: u64 = args.opt("seed", 42u64);
+        let (subs, upds) = match args.try_opt::<f64>("rho").unwrap_or_else(|e| die(&e)) {
+            Some(rho) => nd_correlated_workload(seed, &p, rho),
+            None => nd_alpha_workload(seed, &p),
+        };
+        println!(
+            "match: algo={} threads={} d={} nd-mode={:?} sweep-dim={:?} α={:?} N={}",
+            engine.algo_name(),
+            threads,
+            p.d(),
+            nd_mode,
+            sweep,
+            p.alphas,
+            p.n_total
+        );
+        let t0 = Instant::now();
+        let k = engine.count_nd(&subs, &upds);
+        let dt = t0.elapsed();
+        println!(
+            "K={k} intersections in {} (peak RSS {})",
+            ddm::bench::stats::fmt_secs(dt.as_secs_f64()),
+            rss::peak_rss_bytes().map(rss::fmt_bytes).unwrap_or_default()
+        );
+        return;
+    }
+
     let (subs, upds, desc) = load_workload(args);
     println!(
         "match: algo={} threads={} set={} workload=[{}]",
@@ -169,7 +229,7 @@ fn cmd_replay(args: &Args) {
 
     let engine = DdmEngine::builder()
         .algo_str(args.get("algo").unwrap_or("psbm"))
-        .unwrap_or_else(|e| panic!("{e}"))
+        .unwrap_or_else(|e| die(&e))
         .threads(threads)
         .build();
     // All modes replay the identical deterministic move script.
@@ -289,7 +349,7 @@ fn cmd_serve(args: &Args) {
         RoutingSpace::uniform(1, space_len),
         DdmEngine::builder()
             .algo_str(args.get("algo").unwrap_or(&algo))
-            .unwrap_or_else(|e| panic!("{e}"))
+            .unwrap_or_else(|e| die(&e))
             .threads(threads)
             .shards(shards)
             .build(),

@@ -38,8 +38,7 @@
 //! and created by [`DdmEngine::session`](crate::engine::DdmEngine::session).
 
 use std::collections::{BTreeMap, HashMap, HashSet};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 pub use crate::algos::dynamic::Side;
 
@@ -319,34 +318,31 @@ impl DdmSession {
         let par = self.nthreads > 1 && touched_count >= self.params.parallel_cutoff;
 
         // Phase A: write the 2d per-dimension trees (each tree is an
-        // independent job; parallel over trees for big batches).
+        // independent job; parallel over trees for big batches — the
+        // trees are *moved* to their workers, no lock hand-off).
         if par && self.d * 2 > 1 {
             let sub_trees = std::mem::take(&mut self.sub_dims);
             let upd_trees = std::mem::take(&mut self.upd_dims);
-            let mut jobs: Vec<Mutex<(Side, usize, TreeIndex)>> = Vec::with_capacity(self.d * 2);
+            let mut jobs: Vec<(Side, usize, TreeIndex)> = Vec::with_capacity(self.d * 2);
             for (k, t) in sub_trees.into_iter().enumerate() {
-                jobs.push(Mutex::new((Side::Subscription, k, t)));
+                jobs.push((Side::Subscription, k, t));
             }
             for (k, t) in upd_trees.into_iter().enumerate() {
-                jobs.push(Mutex::new((Side::Update, k, t)));
+                jobs.push((Side::Update, k, t));
             }
-            let cursor = AtomicUsize::new(0);
             let workers = self.nthreads.min(jobs.len());
-            self.pool.run(workers, |_p| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= jobs.len() {
-                    break;
-                }
-                let mut slot = jobs[i].lock().unwrap();
-                let (side, k, tree) = &mut *slot;
-                let ops = match side {
-                    Side::Subscription => &sub_ops,
-                    Side::Update => &upd_ops,
-                };
-                apply_dim(tree, *k, ops);
-            });
-            for job in jobs {
-                let (side, _k, tree) = job.into_inner().unwrap();
+            let (sub_ops_ref, upd_ops_ref) = (&sub_ops, &upd_ops);
+            let done: Vec<(Side, TreeIndex)> =
+                self.pool
+                    .fan_map_take(workers, jobs, |_i, (side, k, mut tree)| {
+                        let ops = match side {
+                            Side::Subscription => sub_ops_ref,
+                            Side::Update => upd_ops_ref,
+                        };
+                        apply_dim(&mut tree, k, ops);
+                        (side, tree)
+                    });
+            for (side, tree) in done {
                 match side {
                     Side::Subscription => self.sub_dims.push(tree),
                     Side::Update => self.upd_dims.push(tree),
@@ -363,7 +359,11 @@ impl DdmSession {
 
         // Phase B: recompute the post-apply overlap set of every
         // touched region (read-only tree queries; parallel for big
-        // batches).
+        // batches). The seed dimension is chosen per batch by the
+        // native pipeline's sampled selectivity estimate, so a
+        // low-selectivity dimension (e.g. a barely-discriminating time
+        // axis) never seeds the candidate sets.
+        let seed = seed_dim(&self.sub_dims, &self.upd_dims);
         let mut touched: Vec<(Side, u32)> = Vec::with_capacity(touched_count);
         touched.extend(sub_ops.keys().map(|&k| (Side::Subscription, k)));
         touched.extend(upd_ops.keys().map(|&k| (Side::Update, k)));
@@ -373,12 +373,12 @@ impl DdmSession {
             let workers = self.nthreads.min(touched.len());
             self.pool.fan_map(workers, touched.len(), |i| {
                 let (side, key) = touched[i];
-                recompute(sub_dims, upd_dims, side, key)
+                recompute(sub_dims, upd_dims, side, key, seed)
             })
         } else {
             touched
                 .iter()
-                .map(|&(side, key)| recompute(&self.sub_dims, &self.upd_dims, side, key))
+                .map(|&(side, key)| recompute(&self.sub_dims, &self.upd_dims, side, key, seed))
                 .collect()
         };
 
@@ -567,22 +567,80 @@ fn apply_dim(tree: &mut TreeIndex, k: usize, ops: &BTreeMap<u32, Option<Vec<Inte
     }
 }
 
-/// Post-apply overlap set of one touched region: seed with the
-/// dimension-0 query of the opposite side's trees, then constrain by
-/// each remaining dimension — per-key interval lookups while the
-/// candidate set is small, tree query + sorted intersection once it is
-/// large. Returns ascending opposite-side keys; empty for a region
-/// removed this batch.
-fn recompute(sub_dims: &[TreeIndex], upd_dims: &[TreeIndex], side: Side, key: u32) -> Vec<u32> {
+/// Intervals sampled per tree by [`seed_dim`].
+const SEED_SAMPLE: usize = 64;
+
+/// Choose the seed (sweep) dimension for a batch's recompute queries —
+/// the session spelling of the native N-D pipeline's sampled
+/// selectivity estimate ([`crate::core::ddim::select_sweep_dim`]):
+/// for each dimension, sample up to [`SEED_SAMPLE`] stored intervals
+/// per side and score the expected 1-D hit fraction
+/// `(E[l_sub] + E[l_upd]) / span`; the lowest score seeds the
+/// candidate sets, so a barely-discriminating dimension never does.
+fn seed_dim(sub_dims: &[TreeIndex], upd_dims: &[TreeIndex]) -> usize {
+    let d = sub_dims.len();
+    if d <= 1 {
+        return 0;
+    }
+    let stat = |t: &TreeIndex| -> (f64, f64, f64, usize) {
+        let (mut len, mut lo, mut hi, mut n) = (0.0f64, f64::INFINITY, f64::NEG_INFINITY, 0usize);
+        for (_key, iv) in t.iter().take(SEED_SAMPLE) {
+            len += iv.len();
+            lo = lo.min(iv.lo);
+            hi = hi.max(iv.hi);
+            n += 1;
+        }
+        (len, lo, hi, n)
+    };
+    let mut best = 0;
+    let mut best_score = f64::INFINITY;
+    for k in 0..d {
+        let (sl, slo, shi, sn) = stat(&sub_dims[k]);
+        let (ul, ulo, uhi, un) = stat(&upd_dims[k]);
+        let score = if sn == 0 || un == 0 {
+            0.0
+        } else {
+            let mean = sl / sn as f64 + ul / un as f64;
+            if mean <= 0.0 {
+                0.0
+            } else {
+                let span = shi.max(uhi) - slo.min(ulo);
+                mean / span.max(f64::MIN_POSITIVE)
+            }
+        };
+        if score < best_score {
+            best_score = score;
+            best = k;
+        }
+    }
+    best
+}
+
+/// Post-apply overlap set of one touched region, sweep-and-verify
+/// style: seed with the `seed`-dimension query of the opposite side's
+/// trees, then verify each residual dimension — per-key interval
+/// lookups while the candidate set is small, tree query + sorted
+/// intersection once it is large. Returns ascending opposite-side
+/// keys; empty for a region removed this batch.
+fn recompute(
+    sub_dims: &[TreeIndex],
+    upd_dims: &[TreeIndex],
+    side: Side,
+    key: u32,
+    seed: usize,
+) -> Vec<u32> {
     let (own, opp) = match side {
         Side::Subscription => (sub_dims, upd_dims),
         Side::Update => (upd_dims, sub_dims),
     };
-    let Some(iv0) = own[0].get(key) else {
+    let Some(iv_seed) = own[seed].get(key) else {
         return Vec::new();
     };
-    let mut cur = opp[0].query_sorted(iv0);
-    for k in 1..own.len() {
+    let mut cur = opp[seed].query_sorted(iv_seed);
+    for k in 0..own.len() {
+        if k == seed {
+            continue;
+        }
         if cur.is_empty() {
             break;
         }
@@ -894,6 +952,51 @@ mod tests {
         sess.flush();
         assert_eq!(sess.region_count(Side::Update), 0);
         assert_eq!(sess.retained_pair_count(), 0, "flush keeps counts current");
+    }
+
+    /// The recompute seed dimension follows selectivity: a 2-d session
+    /// whose dimension 0 barely discriminates must seed from dimension
+    /// 1 — and either way, results match the brute-force oracle.
+    #[test]
+    fn anisotropic_recompute_seeds_from_selective_dim() {
+        let mut rng = Rng::new(0x5E99);
+        let mut sess = engine().session(2);
+        let mut model_s: BTreeMap<u32, Vec<Interval>> = BTreeMap::new();
+        let mut model_u: BTreeMap<u32, Vec<Interval>> = BTreeMap::new();
+        let mut rect = |rng: &mut Rng| {
+            let wide = rng.uniform(0.0, 50.0);
+            let sharp = rng.uniform(0.0, 99.0);
+            vec![
+                Interval::new(wide, wide + 50.0), // low selectivity
+                Interval::new(sharp, sharp + 1.0), // high selectivity
+            ]
+        };
+        for _epoch in 0..3 {
+            for _ in 0..40 {
+                let key = rng.below(40) as u32;
+                let r = rect(&mut rng);
+                if rng.chance(0.5) {
+                    sess.upsert_subscription(key, &r);
+                    model_s.insert(key, r);
+                } else {
+                    sess.upsert_update(key, &r);
+                    model_u.insert(key, r);
+                }
+            }
+            sess.commit();
+            // The batch estimator sees the sharp dimension.
+            assert_eq!(seed_dim(&sess.sub_dims, &sess.upd_dims), 1);
+            let mut want: Vec<(u32, u32)> = Vec::new();
+            for (&sk, sr) in &model_s {
+                for (&uk, ur) in &model_u {
+                    if sr.iter().zip(ur).all(|(a, b)| a.intersects(b)) {
+                        want.push((sk, uk));
+                    }
+                }
+            }
+            want.sort_unstable();
+            assert_eq!(sess.pairs(), want);
+        }
     }
 
     #[test]

@@ -18,8 +18,9 @@
 
 use std::sync::Arc;
 
+use crate::core::ddim::{self, NdMode, NdPolicy};
 use crate::core::sink::{FnSink, MatchSink};
-use crate::core::{Regions1D, RegionIdx};
+use crate::core::{RegionIdx, Regions1D, RegionsNd};
 use crate::engine::{ExecCtx, Matcher};
 use crate::exec::ThreadPool;
 
@@ -42,6 +43,10 @@ pub struct ShardedMatcher {
     inner: Arc<dyn Matcher>,
     shards: usize,
     name: String,
+    /// N-D policy for this wrapper's own `match_nd` override (the
+    /// stripes are 1-D calls, so the inner backend's policy never
+    /// fires; the engine injects its policy here too).
+    nd: NdPolicy,
     /// Zero-capacity pool for the serial inner calls — `run(1, _)`
     /// executes on the calling worker and never contends with the
     /// outer fan-out region.
@@ -56,8 +61,15 @@ impl ShardedMatcher {
             inner,
             shards,
             name,
+            nd: NdPolicy::default(),
             serial_pool: ThreadPool::new(0),
         }
+    }
+
+    /// Set the N-D pipeline policy (engine-injected).
+    pub fn with_nd(mut self, nd: NdPolicy) -> Self {
+        self.nd = nd;
+        self
     }
 
     /// The wrapped backend.
@@ -68,18 +80,18 @@ impl ShardedMatcher {
     pub fn shards(&self) -> usize {
         self.shards
     }
-}
 
-impl Matcher for ShardedMatcher {
-    fn name(&self) -> &str {
-        &self.name
-    }
-
-    fn match_1d(
+    /// Stripe one dimension's projections across the shards, run the
+    /// inner matcher per stripe (serially, in parallel across stripes)
+    /// and report owner-stripe pairs that survive `keep` to `sink`.
+    /// `keep(s, u)` is the residual-dimension verification of the
+    /// native N-D path (always true for plain 1-D matching).
+    fn striped_match(
         &self,
         ctx: &ExecCtx<'_>,
         subs: &Regions1D,
         upds: &Regions1D,
+        keep: &(dyn Fn(RegionIdx, RegionIdx) -> bool + Sync),
         sink: &mut dyn MatchSink,
     ) {
         let (Some(sb), Some(ub)) = (subs.bounds(), upds.bounds()) else {
@@ -87,7 +99,12 @@ impl Matcher for ShardedMatcher {
         };
         let span = sb.hull(&ub);
         if self.shards <= 1 || span.len() <= 0.0 {
-            return self.inner.match_1d(ctx, subs, upds, sink);
+            let mut fsink = FnSink(|s: u32, u: u32| {
+                if keep(s, u) {
+                    sink.report(s, u);
+                }
+            });
+            return self.inner.match_1d(ctx, subs, upds, &mut fsink);
         }
         let part = SpacePartitioner::uniform(self.shards, 0, span);
 
@@ -115,7 +132,8 @@ impl Matcher for ShardedMatcher {
             }
         }
 
-        // Match one stripe serially, keeping only owner-stripe pairs.
+        // Match one stripe serially, keeping only owner-stripe pairs
+        // that survive the residual check.
         let run_shard = |i: usize| -> Vec<(RegionIdx, RegionIdx)> {
             let input = &inputs[i];
             if input.subs.is_empty() || input.upds.is_empty() {
@@ -127,7 +145,8 @@ impl Matcher for ShardedMatcher {
                 let mut fsink = FnSink(|ls: u32, lu: u32| {
                     let s = input.sub_ids[ls as usize];
                     let u = input.upd_ids[lu as usize];
-                    if sub_first[s as usize].max(upd_first[u as usize]) as usize == i {
+                    if sub_first[s as usize].max(upd_first[u as usize]) as usize == i && keep(s, u)
+                    {
                         out.push((s, u));
                     }
                 });
@@ -145,6 +164,56 @@ impl Matcher for ShardedMatcher {
         for pairs in shard_pairs {
             for (s, u) in pairs {
                 sink.report(s, u);
+            }
+        }
+    }
+}
+
+impl Matcher for ShardedMatcher {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn match_1d(
+        &self,
+        ctx: &ExecCtx<'_>,
+        subs: &Regions1D,
+        upds: &Regions1D,
+        sink: &mut dyn MatchSink,
+    ) {
+        self.striped_match(ctx, subs, upds, &|_s, _u| true, sink);
+    }
+
+    /// Native sweep-and-verify across the stripes: stripe the chosen
+    /// sweep dimension's projections, run the inner 1-D matcher per
+    /// stripe, and fold the residual-dimension verification into the
+    /// per-stripe owner-rule filter — so sharding and the native N-D
+    /// pipeline compose without materializing any per-dimension pair
+    /// set. `--nd-mode reduce` falls back to the per-dimension
+    /// reduction over the sharded 1-D path.
+    fn match_nd(
+        &self,
+        ctx: &ExecCtx<'_>,
+        subs: &RegionsNd,
+        upds: &RegionsNd,
+        sink: &mut dyn MatchSink,
+    ) {
+        assert_eq!(subs.d(), upds.d(), "dimension mismatch");
+        match self.nd.mode {
+            NdMode::Reduction => ddim::ReductionNd::match_nd_with(
+                Some(ctx.pool),
+                subs,
+                upds,
+                |s1, u1, out| self.match_1d(ctx, s1, u1, out),
+                sink,
+            ),
+            NdMode::Native => {
+                let k =
+                    ddim::resolve_sweep_dim(self.nd.sweep, ctx.pool, ctx.nthreads, subs, upds);
+                let keep = |s: RegionIdx, u: RegionIdx| -> bool {
+                    subs.rects_intersect_except(s as usize, upds, u as usize, k)
+                };
+                self.striped_match(ctx, subs.project(k), upds.project(k), &keep, sink);
             }
         }
     }
@@ -219,8 +288,30 @@ mod tests {
             upds.push(&rect);
         }
         let plain = DdmEngine::builder().algo(Algo::Itm).threads(2).build();
+        let want = plain.pairs_nd(&subs, &upds);
+        assert!(!want.is_empty());
+        // Native sweep-and-verify across stripes (the default)…
         let sharded = DdmEngine::builder().algo(Algo::Itm).threads(2).shards(5).build();
-        assert_eq!(sharded.pairs_nd(&subs, &upds), plain.pairs_nd(&subs, &upds));
+        assert_eq!(sharded.pairs_nd(&subs, &upds), want);
+        assert_eq!(sharded.count_nd(&subs, &upds), want.len() as u64);
+        // …and the per-dimension reduction fallback over sharded 1-D.
+        let reduce = DdmEngine::builder()
+            .algo(Algo::Itm)
+            .threads(2)
+            .shards(5)
+            .nd_mode(crate::engine::NdMode::Reduction)
+            .build();
+        assert_eq!(reduce.pairs_nd(&subs, &upds), want);
+        // Pinned sweep dimensions agree too.
+        for k in 0..d {
+            let pinned = DdmEngine::builder()
+                .algo(Algo::Itm)
+                .threads(2)
+                .shards(3)
+                .sweep_dim(crate::engine::SweepDim::Fixed(k))
+                .build();
+            assert_eq!(pinned.pairs_nd(&subs, &upds), want, "sweep dim {k}");
+        }
     }
 
     #[test]

@@ -6,11 +6,17 @@
 //! * [`koln`] — a Köln-trace-like vehicular workload (Fig. 14
 //!   substitution; the real trace is not downloadable offline —
 //!   DESIGN.md §3 documents the substitution).
+//! * [`nd`] — d-dimensional workloads: the anisotropic per-dimension
+//!   α-model (per-dimension selectivity skews) and a correlated
+//!   variant (centers tracking dimension 0) for exercising the native
+//!   N-D pipeline.
 //! * [`churn`] — deterministic region-move scripts for replaying the
 //!   same churn through the session and rebuild paths.
 
 pub mod churn;
 pub mod koln;
+pub mod nd;
 pub mod synthetic;
 
+pub use nd::{nd_alpha_workload, nd_correlated_workload, NdAlphaParams};
 pub use synthetic::{alpha_workload, clustered_workload, AlphaParams};

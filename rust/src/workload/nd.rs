@@ -1,0 +1,208 @@
+//! d-dimensional synthetic workloads: the per-dimension (anisotropic)
+//! α-model and a correlated variant.
+//!
+//! The 1-D α-model ([`super::synthetic`]) fixes one overlapping degree
+//! α = N·l/L. Real N-D scenarios are rarely isotropic: a Köln-style
+//! traffic workload has sharp spatial extents but a time (or road-id)
+//! dimension that barely discriminates. [`NdAlphaParams`] gives every
+//! dimension its own α_k, so per-dimension selectivity skews are a
+//! first-class knob — exactly the regime where the native
+//! sweep-and-verify pipeline ([`crate::core::ddim`]) beats the
+//! per-dimension reduction (`benches/abl_nd.rs` measures it).
+//!
+//! [`nd_correlated_workload`] additionally correlates every
+//! dimension's placement with dimension 0 (centers drawn along the
+//! diagonal plus Gaussian noise) — each 1-D projection stays dense
+//! while the joint result concentrates, the worst case for any
+//! per-dimension combine.
+
+use crate::core::interval::Interval;
+use crate::core::RegionsNd;
+use crate::prng::Rng;
+
+/// Parameters of the anisotropic d-dimensional α-model.
+#[derive(Debug, Clone)]
+pub struct NdAlphaParams {
+    /// Total number of regions N (split evenly into S and U).
+    pub n_total: usize,
+    /// Per-dimension overlapping degrees; `d = alphas.len()`.
+    /// `α_k = N·l_k/L` fixes each dimension's region extent
+    /// `l_k = α_k·L/N` (clamped to the space).
+    pub alphas: Vec<f64>,
+    /// Routing-space length L per dimension (paper: 10⁶).
+    pub space: f64,
+}
+
+impl NdAlphaParams {
+    /// Isotropic d-dimensional model: the same α on every dimension.
+    pub fn iso(d: usize, n_total: usize, alpha: f64, space: f64) -> Self {
+        assert!(d >= 1);
+        Self {
+            n_total,
+            alphas: vec![alpha; d],
+            space,
+        }
+    }
+
+    /// Anisotropic model from explicit per-dimension α's.
+    pub fn skewed(n_total: usize, alphas: &[f64], space: f64) -> Self {
+        assert!(!alphas.is_empty());
+        Self {
+            n_total,
+            alphas: alphas.to_vec(),
+            space,
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.alphas.len()
+    }
+
+    /// Region extent on dimension `k`: `l_k = α_k·L/N`, clamped to L.
+    pub fn region_len(&self, k: usize) -> f64 {
+        (self.alphas[k] * self.space / self.n_total as f64).min(self.space)
+    }
+}
+
+/// Generate `count` rectangles. Dimension 0's center is the anchor
+/// `c0 ~ U[0, L)`; every other dimension's center comes from
+/// `center(rng, k, c0)` (clamped into the space).
+fn gen_rects<F>(rng: &mut Rng, p: &NdAlphaParams, count: usize, mut center: F) -> RegionsNd
+where
+    F: FnMut(&mut Rng, usize, f64) -> f64,
+{
+    let d = p.d();
+    let lens: Vec<f64> = (0..d).map(|k| p.region_len(k)).collect();
+    let mut out = RegionsNd::new(d);
+    let mut rect = vec![Interval::new(0.0, 0.0); d];
+    for _ in 0..count {
+        let c0 = rng.uniform(0.0, p.space);
+        for k in 0..d {
+            let c = if k == 0 { c0 } else { center(rng, k, c0) };
+            let lo = (c - lens[k] * 0.5).clamp(0.0, p.space - lens[k]);
+            rect[k] = Interval::new(lo, lo + lens[k]);
+        }
+        out.push(&rect);
+    }
+    out
+}
+
+/// Anisotropic uniform placement: every dimension's center drawn
+/// independently, extents fixed per dimension by `alphas`. Returns
+/// `(subscriptions, updates)`.
+pub fn nd_alpha_workload(seed: u64, p: &NdAlphaParams) -> (RegionsNd, RegionsNd) {
+    let mut rng = Rng::new(seed);
+    let n = p.n_total / 2;
+    let m = p.n_total - n;
+    let space = p.space;
+    let subs = gen_rects(&mut rng, p, n, |rng, _k, _c0| rng.uniform(0.0, space));
+    let upds = gen_rects(&mut rng, p, m, |rng, _k, _c0| rng.uniform(0.0, space));
+    (subs, upds)
+}
+
+/// Correlated placement: dimension k's center tracks dimension 0's
+/// (`c_k = c_0 + N(0, σ)` with `σ = (1 - rho) · L`), so `rho = 1`
+/// puts every rectangle on the diagonal and `rho = 0` degenerates to
+/// (nearly) independent placement. Models Köln-style trajectories
+/// where position and time advance together.
+pub fn nd_correlated_workload(seed: u64, p: &NdAlphaParams, rho: f64) -> (RegionsNd, RegionsNd) {
+    assert!((0.0..=1.0).contains(&rho), "rho must be in [0, 1]");
+    let mut rng = Rng::new(seed);
+    let sigma = (1.0 - rho) * p.space;
+    let n = p.n_total / 2;
+    let m = p.n_total - n;
+    let subs = gen_rects(&mut rng, p, n, |rng, _k, c0| c0 + rng.gaussian() * sigma);
+    let upds = gen_rects(&mut rng, p, m, |rng, _k, c0| c0 + rng.gaussian() * sigma);
+    (subs, upds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_bounds() {
+        let p = NdAlphaParams::skewed(1001, &[100.0, 1.0, 0.01], 1e5);
+        assert_eq!(p.d(), 3);
+        let (s, u) = nd_alpha_workload(7, &p);
+        assert_eq!(s.d(), 3);
+        assert_eq!(s.len(), 500);
+        assert_eq!(u.len(), 501);
+        for regions in [&s, &u] {
+            for k in 0..3 {
+                let l = p.region_len(k);
+                for iv in regions.project(k).iter() {
+                    assert!(iv.lo >= 0.0 && iv.hi <= p.space);
+                    assert!((iv.len() - l).abs() < 1e-9, "dim {k}");
+                }
+            }
+        }
+        // Per-dimension extents follow the per-dimension α's.
+        assert!(p.region_len(0) > p.region_len(1));
+        assert!(p.region_len(1) > p.region_len(2));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = NdAlphaParams::iso(2, 200, 5.0, 1e4);
+        let (a, _) = nd_alpha_workload(9, &p);
+        let (b, _) = nd_alpha_workload(9, &p);
+        assert_eq!(a.project(1).lo, b.project(1).lo);
+        let (c, _) = nd_alpha_workload(10, &p);
+        assert_ne!(a.project(0).lo, c.project(0).lo);
+    }
+
+    #[test]
+    fn anisotropy_skews_per_dimension_pair_counts() {
+        // α₀ ≫ α₁: dimension 0's projections must produce far more 1-D
+        // pairs than dimension 1's.
+        let p = NdAlphaParams::skewed(2000, &[200.0, 1.0], 1e5);
+        let (s, u) = nd_alpha_workload(3, &p);
+        let count_1d = |k: usize| {
+            let mut sink = crate::core::sink::CountSink::default();
+            crate::algos::bfm::match_seq(s.project(k), u.project(k), &mut sink);
+            sink.count
+        };
+        assert!(
+            count_1d(0) > 20 * count_1d(1),
+            "K0={} K1={}",
+            count_1d(0),
+            count_1d(1)
+        );
+    }
+
+    #[test]
+    fn correlation_concentrates_joint_matches() {
+        // Same per-dimension α's: the correlated workload has (much)
+        // more joint N-D intersection than the independent one, while
+        // each projection's density is comparable.
+        let p = NdAlphaParams::iso(2, 1000, 20.0, 1e5);
+        let joint = |w: &(RegionsNd, RegionsNd)| {
+            let (s, u) = w;
+            let mut k = 0u64;
+            for i in 0..s.len() {
+                for j in 0..u.len() {
+                    if s.rects_intersect(i, u, j) {
+                        k += 1;
+                    }
+                }
+            }
+            k
+        };
+        let indep = nd_alpha_workload(5, &p);
+        let corr = nd_correlated_workload(5, &p, 0.999);
+        assert!(
+            joint(&corr) > 4 * joint(&indep).max(1),
+            "corr={} indep={}",
+            joint(&corr),
+            joint(&indep)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "rho must be in")]
+    fn correlation_rho_is_validated() {
+        let p = NdAlphaParams::iso(2, 10, 1.0, 1e3);
+        let _ = nd_correlated_workload(1, &p, 1.5);
+    }
+}

@@ -459,6 +459,170 @@ fn sharded_session_equivalence_property() {
     }
 }
 
+/// N-D equivalence property suite (the native-pipeline acceptance
+/// property): the native sweep-and-verify path, the per-dimension
+/// reduction and a brute-force d-rectangle oracle produce the
+/// identical pair set for EVERY matcher × d ∈ {2, 3, 5} × thread
+/// count, on workloads salted with zero-width and boundary-touching
+/// rectangles (integer lattice coordinates make touching exact).
+#[test]
+fn nd_native_reduction_and_oracle_agree_for_every_matcher() {
+    use ddm::core::{Interval, RegionsNd};
+    use ddm::engine::{NdMode, SweepDim};
+
+    let pool = Arc::new(ThreadPool::new(3));
+    let mut rng = Rng::new(0x4D4D);
+    for d in [2usize, 3, 5] {
+        let mut rects = |count: usize| -> RegionsNd {
+            let mut out = RegionsNd::new(d);
+            for _ in 0..count {
+                let rect: Vec<Interval> = (0..d)
+                    .map(|_| {
+                        let lo = rng.below(30) as f64;
+                        // len 0 (zero-width) through 3; integer lattice
+                        // ⇒ touching endpoints are exact, not ε-away.
+                        let len = rng.below(4) as f64;
+                        Interval::new(lo, lo + len)
+                    })
+                    .collect();
+                out.push(&rect);
+            }
+            out
+        };
+        let subs = rects(100);
+        let upds = rects(90);
+        let mut want = Vec::new();
+        for i in 0..subs.len() {
+            for j in 0..upds.len() {
+                if subs.rects_intersect(i, &upds, j) {
+                    want.push((i as u32, j as u32));
+                }
+            }
+        }
+        assert!(!want.is_empty(), "d={d} oracle should not be empty");
+
+        for algo in Algo::ALL {
+            for p in [1usize, 2, 4] {
+                for mode in [NdMode::Native, NdMode::Reduction] {
+                    let engine = DdmEngine::builder()
+                        .algo(algo)
+                        .threads(p)
+                        .ncells(64)
+                        .nd_mode(mode)
+                        .pool(Arc::clone(&pool))
+                        .build();
+                    let label = format!("{}/d={d}/P={p}/{mode:?}", algo.name());
+                    assert_eq!(engine.pairs_nd(&subs, &upds), want, "{label}");
+                    assert_eq!(engine.count_nd(&subs, &upds), want.len() as u64, "{label}");
+                }
+            }
+        }
+        // Pinning the sweep to ANY dimension must not change the set.
+        for k in 0..d {
+            let engine = DdmEngine::builder()
+                .algo(Algo::Psbm)
+                .threads(3)
+                .sweep_dim(SweepDim::Fixed(k))
+                .pool(Arc::clone(&pool))
+                .build();
+            assert_eq!(engine.pairs_nd(&subs, &upds), want, "d={d} sweep={k}");
+        }
+        // The sharded static wrapper composes with both modes.
+        for mode in [NdMode::Native, NdMode::Reduction] {
+            let engine = DdmEngine::builder()
+                .algo(Algo::Psbm)
+                .threads(3)
+                .shards(4)
+                .nd_mode(mode)
+                .pool(Arc::clone(&pool))
+                .build();
+            assert_eq!(engine.pairs_nd(&subs, &upds), want, "sharded d={d} {mode:?}");
+            assert_eq!(engine.count_nd(&subs, &upds), want.len() as u64);
+        }
+    }
+}
+
+/// Session and sharded-session end states in d = 5 equal a fresh
+/// static `pairs_nd` through BOTH N-D modes (the incremental paths
+/// must agree with whatever the static pipeline computes).
+#[test]
+fn session_and_sharded_nd_end_state_equals_static_nd() {
+    use ddm::core::{Interval, RegionsNd};
+    use ddm::engine::NdMode;
+    use ddm::shard::SpacePartitioner;
+    use std::collections::BTreeMap;
+
+    let d = 5usize;
+    let engine = DdmEngine::builder().threads(3).parallel_cutoff(8).build();
+    let part = SpacePartitioner::uniform(3, 0, Interval::new(0.0, 100.0));
+    let mut sess = engine.session(d);
+    let mut sharded = engine.sharded_session_with(d, part);
+    let mut model_s: BTreeMap<u32, Vec<Interval>> = BTreeMap::new();
+    let mut model_u: BTreeMap<u32, Vec<Interval>> = BTreeMap::new();
+    let mut rng = Rng::new(0x4D5D);
+    for _epoch in 0..4 {
+        for _ in 0..60 {
+            let key = rng.below(40) as u32;
+            let rect: Vec<Interval> = (0..d)
+                .map(|k| {
+                    let lo = rng.uniform(0.0, 90.0);
+                    // Dimension 2 barely discriminates — the session's
+                    // recompute seed must route around it.
+                    let len = if k == 2 { 60.0 } else { rng.uniform(0.5, 8.0) };
+                    Interval::new(lo, lo + len)
+                })
+                .collect();
+            match rng.below(4) {
+                0 | 1 => {
+                    sess.upsert_subscription(key, &rect);
+                    sharded.upsert_subscription(key, &rect);
+                    model_s.insert(key, rect);
+                }
+                2 => {
+                    sess.upsert_update(key, &rect);
+                    sharded.upsert_update(key, &rect);
+                    model_u.insert(key, rect);
+                }
+                _ => {
+                    sess.remove_update(key);
+                    sharded.remove_update(key);
+                    model_u.remove(&key);
+                }
+            }
+        }
+        sess.commit();
+        sharded.commit();
+
+        let mut subs = RegionsNd::new(d);
+        let mut skeys = Vec::new();
+        for (&k, rect) in &model_s {
+            subs.push(rect);
+            skeys.push(k);
+        }
+        let mut upds = RegionsNd::new(d);
+        let mut ukeys = Vec::new();
+        for (&k, rect) in &model_u {
+            upds.push(rect);
+            ukeys.push(k);
+        }
+        if subs.is_empty() || upds.is_empty() {
+            assert!(sess.pairs().is_empty());
+            continue;
+        }
+        for mode in [NdMode::Native, NdMode::Reduction] {
+            let static_engine = DdmEngine::builder().threads(2).nd_mode(mode).build();
+            let mut want: Vec<(u32, u32)> = static_engine
+                .pairs_nd(&subs, &upds)
+                .into_iter()
+                .map(|(si, uj)| (skeys[si as usize], ukeys[uj as usize]))
+                .collect();
+            want.sort_unstable();
+            assert_eq!(sess.pairs(), want, "session vs static {mode:?}");
+            assert_eq!(sharded.pairs(), want, "sharded vs static {mode:?}");
+        }
+    }
+}
+
 /// Thread-count invariance under the engine API (heavier than the
 /// per-module variants: full workload, many P values, shared pool).
 #[test]
