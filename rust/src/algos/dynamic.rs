@@ -76,7 +76,18 @@ impl TreeIndex {
 
     /// Keys of stored intervals overlapping `q`, ascending.
     pub fn query_sorted(&self, q: Interval) -> Vec<u32> {
-        self.tree.query_vec(q)
+        let mut out = Vec::new();
+        self.query_into(q, &mut out);
+        out
+    }
+
+    /// [`query_sorted`](Self::query_sorted) into a reusable buffer
+    /// (cleared first) — the allocation-free form the session's
+    /// per-epoch recompute runs on.
+    pub fn query_into(&self, q: Interval, out: &mut Vec<u32>) {
+        out.clear();
+        self.tree.query(q, &mut |i| out.push(i));
+        out.sort_unstable();
     }
 
     pub fn len(&self) -> usize {

@@ -11,6 +11,7 @@
 //! `benches/abl_gbm_list.rs` re-runs the comparison.
 
 use crate::core::ddim::{self, NdMode, NdPolicy};
+use crate::core::scratch::MatchScratch;
 use crate::core::sink::MatchSink;
 use crate::core::{Regions1D, RegionsNd};
 use crate::exec::lflist::LfList;
@@ -20,16 +21,44 @@ use crate::exec::ThreadPool;
 /// Phase-1 cell-list synchronization strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum CellList {
-    /// Per-worker local bins merged in worker order
-    /// ([`ThreadPool::fan_map`]): no locks at all on the hot path, and
-    /// each cell's list ends up in ascending update order
-    /// deterministically. Replaces the per-cell mutexes (themselves
-    /// the charitable version of the paper's one-global-lock
-    /// `#pragma omp critical`).
+    /// Counting-sort scatter over the radix machinery's histogram
+    /// layout: pass 1 counts each worker's entries per cell, a master
+    /// prefix sum turns the counts into disjoint offsets (cell-major,
+    /// worker-minor), pass 2 scatters update indices straight into one
+    /// flat CSR array — no locks, no per-cell `Vec`s, and each cell's
+    /// list comes out in ascending update order deterministically.
+    /// (Replaces the per-worker-`Vec` fan-in, itself the replacement
+    /// for per-cell mutexes and the paper's one-global-lock
+    /// `#pragma omp critical`.)
     #[default]
     FanIn,
     /// The ad-hoc lock-free append list (paper §5).
     LockFree,
+}
+
+/// Phase-1 output: per-cell update lists, either as one flat CSR block
+/// (the counting-sort scatter) or per-cell vectors (lock-free lists).
+/// The CSR variant keeps its (spent) count block alive so all three
+/// pooled buffers can be returned together in take order — that keeps
+/// each buffer in the same role on the next call, so warm capacities
+/// are exactly stable.
+enum Bins {
+    Csr {
+        flat: Vec<u32>,
+        starts: Vec<u32>,
+        counts: Vec<u32>,
+    },
+    Lists(Vec<Vec<u32>>),
+}
+
+impl Bins {
+    #[inline]
+    fn cell(&self, c: usize) -> &[u32] {
+        match self {
+            Bins::Csr { flat, starts, .. } => &flat[starts[c] as usize..starts[c + 1] as usize],
+            Bins::Lists(lists) => &lists[c],
+        }
+    }
 }
 
 /// Duplicate-suppression strategy for phase 2.
@@ -180,34 +209,102 @@ where
     S: MatchSink,
     M: Fn(usize) -> S + Sync,
 {
+    match_par_sinks_scratch(pool, nthreads, subs, upds, params, &mut MatchScratch::new(), mk)
+}
+
+/// [`match_par_sinks`] over a caller-owned
+/// [`MatchScratch`](crate::core::scratch::MatchScratch): the binning
+/// count block, the cell-start array and the flat CSR cell list are
+/// all pooled, so a warm call's phase 1 allocates nothing.
+pub fn match_par_sinks_scratch<S, M>(
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &Regions1D,
+    upds: &Regions1D,
+    params: &GbmParams,
+    scratch: &mut MatchScratch,
+    mk: M,
+) -> Vec<S>
+where
+    S: MatchSink,
+    M: Fn(usize) -> S + Sync,
+{
     let Some(grid) = Grid::new(subs, upds, params.ncells) else {
         return (0..nthreads).map(&mk).collect();
     };
     let grid = &grid;
 
+    use crate::exec::SendPtr;
+
     // ---- Phase 1 (parallel over updates) --------------------------------
-    let cells: Vec<Vec<u32>> = match params.cell_list {
+    let bins: Bins = match params.cell_list {
         CellList::FanIn => {
-            // Per-worker local bins, merged in worker order: lock-free
-            // by construction, and every cell list comes out in
-            // ascending update order no matter the interleaving.
+            // Counting-sort scatter (see [`CellList::FanIn`]): count,
+            // prefix-sum into disjoint offsets, scatter — same
+            // histogram machinery as the radix sort, no per-cell Vecs.
+            let ncells = grid.ncells;
             let ranges = chunks(upds.len(), nthreads);
-            let locals: Vec<Vec<Vec<u32>>> = pool.fan_map(nthreads, nthreads, |p| {
-                let mut local: Vec<Vec<u32>> = vec![Vec::new(); grid.ncells];
-                for j in ranges[p].clone() {
-                    for c in grid.cells(upds.lo[j], upds.hi[j]) {
-                        local[c].push(j as u32);
+            let ranges = &ranges;
+            let mut counts = scratch.take_u32();
+            counts.resize(nthreads * ncells, 0);
+            {
+                let counts_ptr = SendPtr(counts.as_mut_ptr());
+                pool.run(nthreads, |p| {
+                    let counts_ptr = counts_ptr;
+                    // SAFETY: worker p owns counts segment p.
+                    let seg = unsafe {
+                        std::slice::from_raw_parts_mut(counts_ptr.0.add(p * ncells), ncells)
+                    };
+                    for j in ranges[p].clone() {
+                        for c in grid.cells(upds.lo[j], upds.hi[j]) {
+                            seg[c] += 1;
+                        }
                     }
-                }
-                local
-            });
-            let mut cells: Vec<Vec<u32>> = vec![Vec::new(); grid.ncells];
-            for local in locals {
-                for (c, list) in local.into_iter().enumerate() {
-                    cells[c].extend(list);
+                });
+            }
+            // Master: per-cell starts + in-place (cell, worker) offsets,
+            // cell-major worker-minor — each (cell, worker) pair gets a
+            // disjoint slice of the flat array, in ascending update
+            // order (workers hold ascending contiguous update ranges).
+            let mut starts = scratch.take_u32();
+            starts.resize(ncells + 1, 0);
+            let mut total = 0u64;
+            for c in 0..ncells {
+                starts[c] = total as u32;
+                for p in 0..nthreads {
+                    let cnt = counts[p * ncells + c];
+                    counts[p * ncells + c] = total as u32;
+                    total += cnt as u64;
                 }
             }
-            cells
+            assert!(total <= u32::MAX as u64, "cell-list entries exceed u32 offsets");
+            starts[ncells] = total as u32;
+            let mut flat = scratch.take_u32();
+            flat.resize(total as usize, 0);
+            {
+                let counts_ptr = SendPtr(counts.as_mut_ptr());
+                let flat_ptr = SendPtr(flat.as_mut_ptr());
+                pool.run(nthreads, |p| {
+                    let (counts_ptr, flat_ptr) = (counts_ptr, flat_ptr);
+                    // SAFETY: worker p owns counts segment p; the
+                    // offsets partition 0..total, so flat writes never
+                    // alias.
+                    let seg = unsafe {
+                        std::slice::from_raw_parts_mut(counts_ptr.0.add(p * ncells), ncells)
+                    };
+                    for j in ranges[p].clone() {
+                        for c in grid.cells(upds.lo[j], upds.hi[j]) {
+                            unsafe { *flat_ptr.0.add(seg[c] as usize) = j as u32 };
+                            seg[c] += 1;
+                        }
+                    }
+                });
+            }
+            Bins::Csr {
+                flat,
+                starts,
+                counts,
+            }
         }
         CellList::LockFree => {
             let lists: Vec<LfList<u32>> =
@@ -220,17 +317,19 @@ where
                     }
                 }
             });
-            lists
-                .iter()
-                .map(|l| l.iter().copied().collect())
-                .collect()
+            Bins::Lists(
+                lists
+                    .iter()
+                    .map(|l| l.iter().copied().collect())
+                    .collect(),
+            )
         }
     };
-    let cells = &cells;
 
     // ---- Phase 2 (parallel over subscriptions, independent) -------------
     let ranges = chunks(subs.len(), nthreads);
-    super::par_collect_with(pool, nthreads, mk, |p, sink: &mut S| {
+    let bins_ref = &bins;
+    let collected = super::par_collect_with(pool, nthreads, mk, |p, sink: &mut S| {
         let mut res = std::collections::HashSet::new();
         for i in ranges[p].clone() {
             let (slo, shi) = (subs.lo[i], subs.hi[i]);
@@ -238,7 +337,7 @@ where
                 res.clear();
             }
             for c in grid.cells(slo, shi) {
-                for &j in &cells[c] {
+                for &j in bins_ref.cell(c) {
                     let (ulo, uhi) = (upds.lo[j as usize], upds.hi[j as usize]);
                     if slo < uhi && ulo < shi {
                         match params.dedup {
@@ -257,7 +356,19 @@ where
                 }
             }
         }
-    })
+    });
+    if let Bins::Csr {
+        flat,
+        starts,
+        counts,
+    } = bins
+    {
+        // Take order was counts, starts, flat; the pool is a stack, so
+        // giving flat, starts, counts keeps every buffer in the same
+        // role next call (stable warm capacities).
+        scratch.give_u32_bufs([flat, starts, counts]);
+    }
+    collected
 }
 
 /// [`Matcher`](crate::engine::Matcher) backend for grid-based
@@ -298,9 +409,20 @@ impl crate::engine::Matcher for GbmMatcher {
         upds: &Regions1D,
         sink: &mut dyn MatchSink,
     ) {
-        let sinks: Vec<crate::core::sink::VecSink> =
-            match_par(ctx.pool, ctx.nthreads, subs, upds, &self.params);
-        crate::core::sink::replay(sinks, sink);
+        let mut guard = ctx.scratch();
+        let scratch = &mut *guard;
+        let disp =
+            crate::core::scratch::SinkDispenser::new(scratch.take_pair_sinks(ctx.nthreads));
+        let sinks: Vec<crate::core::sink::VecSink> = match_par_sinks_scratch(
+            ctx.pool,
+            ctx.nthreads,
+            subs,
+            upds,
+            &self.params,
+            scratch,
+            |p| disp.take(p),
+        );
+        scratch.drain_pair_sinks(sinks, disp.into_remaining(), sink);
     }
 
     fn count_1d(
@@ -309,8 +431,16 @@ impl crate::engine::Matcher for GbmMatcher {
         subs: &Regions1D,
         upds: &Regions1D,
     ) -> u64 {
-        let sinks: Vec<crate::core::sink::CountSink> =
-            match_par(ctx.pool, ctx.nthreads, subs, upds, &self.params);
+        let mut guard = ctx.scratch();
+        let sinks: Vec<crate::core::sink::CountSink> = match_par_sinks_scratch(
+            ctx.pool,
+            ctx.nthreads,
+            subs,
+            upds,
+            &self.params,
+            &mut guard,
+            |_p| crate::core::sink::CountSink::default(),
+        );
         crate::core::sink::total_count(&sinks)
     }
 
@@ -329,15 +459,29 @@ impl crate::engine::Matcher for GbmMatcher {
                 |s1, u1, out| self.match_1d(ctx, s1, u1, out),
                 sink,
             ),
-            NdMode::Native => ddim::native_match(
-                self.nd.sweep,
-                ctx.pool,
-                ctx.nthreads,
-                subs,
-                upds,
-                |s1, u1, mk| match_par_sinks(ctx.pool, ctx.nthreads, s1, u1, &self.params, mk),
-                sink,
-            ),
+            NdMode::Native => {
+                let mut guard = ctx.scratch();
+                ddim::native_match(
+                    self.nd.sweep,
+                    ctx.pool,
+                    ctx.nthreads,
+                    subs,
+                    upds,
+                    &mut guard,
+                    |s1, u1, scratch, mk| {
+                        match_par_sinks_scratch(
+                            ctx.pool,
+                            ctx.nthreads,
+                            s1,
+                            u1,
+                            &self.params,
+                            scratch,
+                            mk,
+                        )
+                    },
+                    sink,
+                )
+            }
         }
     }
 
@@ -348,14 +492,28 @@ impl crate::engine::Matcher for GbmMatcher {
                 self.match_nd(ctx, subs, upds, &mut sink);
                 sink.count
             }
-            NdMode::Native => ddim::native_count(
-                self.nd.sweep,
-                ctx.pool,
-                ctx.nthreads,
-                subs,
-                upds,
-                |s1, u1, mk| match_par_sinks(ctx.pool, ctx.nthreads, s1, u1, &self.params, mk),
-            ),
+            NdMode::Native => {
+                let mut guard = ctx.scratch();
+                ddim::native_count(
+                    self.nd.sweep,
+                    ctx.pool,
+                    ctx.nthreads,
+                    subs,
+                    upds,
+                    &mut guard,
+                    |s1, u1, scratch, mk| {
+                        match_par_sinks_scratch(
+                            ctx.pool,
+                            ctx.nthreads,
+                            s1,
+                            u1,
+                            &self.params,
+                            scratch,
+                            mk,
+                        )
+                    },
+                )
+            }
         }
     }
 }

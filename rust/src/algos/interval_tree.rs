@@ -184,11 +184,7 @@ impl IntervalTree {
             };
             n
         ];
-        #[derive(Clone, Copy)]
-        struct SendPtr(*mut Node);
-        unsafe impl Send for SendPtr {}
-        unsafe impl Sync for SendPtr {}
-        let base = SendPtr(nodes.as_mut_ptr());
+        let base = crate::exec::SendPtr(nodes.as_mut_ptr());
         let order_ref = &order;
         let segs = &segments;
         pool.run(nthreads.min(segments.len()), |p| {

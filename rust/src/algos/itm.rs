@@ -165,15 +165,21 @@ impl crate::engine::Matcher for ItmMatcher {
                 |s1, u1, out| self.match_1d(ctx, s1, u1, out),
                 sink,
             ),
-            NdMode::Native => ddim::native_match(
-                self.nd.sweep,
-                ctx.pool,
-                ctx.nthreads,
-                subs,
-                upds,
-                |s1, u1, mk| match_par_sinks(ctx.pool, ctx.nthreads, s1, u1, mk),
-                sink,
-            ),
+            NdMode::Native => {
+                let mut guard = ctx.scratch();
+                ddim::native_match(
+                    self.nd.sweep,
+                    ctx.pool,
+                    ctx.nthreads,
+                    subs,
+                    upds,
+                    &mut guard,
+                    // ITM has no sort/binning buffers; only the pooled
+                    // per-worker pair sinks ride the scratch.
+                    |s1, u1, _scratch, mk| match_par_sinks(ctx.pool, ctx.nthreads, s1, u1, mk),
+                    sink,
+                )
+            }
         }
     }
 
@@ -184,14 +190,18 @@ impl crate::engine::Matcher for ItmMatcher {
                 self.match_nd(ctx, subs, upds, &mut sink);
                 sink.count
             }
-            NdMode::Native => ddim::native_count(
-                self.nd.sweep,
-                ctx.pool,
-                ctx.nthreads,
-                subs,
-                upds,
-                |s1, u1, mk| match_par_sinks(ctx.pool, ctx.nthreads, s1, u1, mk),
-            ),
+            NdMode::Native => {
+                let mut guard = ctx.scratch();
+                ddim::native_count(
+                    self.nd.sweep,
+                    ctx.pool,
+                    ctx.nthreads,
+                    subs,
+                    upds,
+                    &mut guard,
+                    |s1, u1, _scratch, mk| match_par_sinks(ctx.pool, ctx.nthreads, s1, u1, mk),
+                )
+            }
         }
     }
 

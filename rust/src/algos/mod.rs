@@ -154,6 +154,10 @@ pub struct MatchParams {
     /// reduction, and the sweep-dimension choice
     /// ([`crate::core::ddim`]).
     pub nd: NdPolicy,
+    /// SBM/PSBM endpoint sort: compact-key radix (default) or the
+    /// merge-path comparison fallback ([`crate::exec::radix`]; CLI
+    /// `--sort radix|merge`).
+    pub sort: crate::exec::SortAlgo,
 }
 
 impl MatchParams {
@@ -175,6 +179,7 @@ impl Default for MatchParams {
             cell_list: gbm::CellList::default(),
             dedup: gbm::Dedup::default(),
             nd: NdPolicy::default(),
+            sort: crate::exec::SortAlgo::default(),
         }
     }
 }

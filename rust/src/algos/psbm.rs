@@ -3,8 +3,12 @@
 //!
 //! Three phases:
 //!
-//! 1. Build and sort the endpoint array in parallel
-//!    ([`super::sbm::build_endpoints`] + [`crate::exec::psort`]).
+//! 1. Build and sort the endpoint array in parallel — built in
+//!    canonical order into a reusable scratch buffer
+//!    ([`crate::core::endpoint`], [`crate::core::scratch`]), then
+//!    sorted by the compact `u64` key with the parallel LSD radix sort
+//!    ([`crate::exec::radix`]; `--sort merge` selects the
+//!    [`crate::exec::psort`] comparison fallback).
 //! 2. Initialize per-segment active sets with a prefix computation:
 //!    every worker scans its segment recording the *delta* it would
 //!    apply to SubSet/UpdSet (`Sadd/Sdel/Uadd/Udel`, Algorithm 7
@@ -29,11 +33,12 @@
 //! [`FilterSink`](crate::core::sink::FilterSink) that verifies the residual dimensions inline.
 
 use crate::core::ddim::{self, NdMode, NdPolicy};
+use crate::core::endpoint::{endpoint_slot, sort_endpoints};
+use crate::core::scratch::{MatchScratch, SinkDispenser};
 use crate::core::sink::MatchSink;
 use crate::core::{Regions1D, RegionsNd};
 use crate::exec::pfor::chunks;
-use crate::exec::psort::par_sort_by_key;
-use crate::exec::ThreadPool;
+use crate::exec::{SortAlgo, ThreadPool};
 use crate::sets::{
     ActiveSet, BTreeActiveSet, BitSet, HashActiveSet, SetImpl, SortedVecSet, SparseSet,
 };
@@ -112,47 +117,85 @@ where
     S: MatchSink,
     M: Fn(usize) -> S + Sync,
 {
+    match_par_sinks_scratch::<Set, S, M>(
+        pool,
+        nthreads,
+        SortAlgo::default(),
+        subs,
+        upds,
+        &mut MatchScratch::new(),
+        mk,
+    )
+}
+
+/// [`match_par_sinks`] over a caller-owned [`MatchScratch`] and an
+/// explicit sort selection: the endpoint array, the radix ping-pong
+/// buffer and the histogram block are all reused across calls, so the
+/// warm path allocates nothing in phases 1a/1b.
+pub fn match_par_sinks_scratch<Set, S, M>(
+    pool: &ThreadPool,
+    nthreads: usize,
+    sort: SortAlgo,
+    subs: &Regions1D,
+    upds: &Regions1D,
+    scratch: &mut MatchScratch,
+    mk: M,
+) -> Vec<S>
+where
+    Set: ActiveSet,
+    S: MatchSink,
+    M: Fn(usize) -> S + Sync,
+{
     let (n, m) = (subs.len(), upds.len());
     let total = 2 * (n + m);
 
+    let MatchScratch {
+        endpoints,
+        aux,
+        radix,
+        ..
+    } = scratch;
+
     // ---- Phase 1a: build the endpoint array in parallel -----------------
-    let mut endpoints = vec![Endpoint::default(); total];
+    // Canonical build order (uppers before lowers, subscriptions
+    // before updates, ascending idx — `endpoint_slot`): the stable
+    // radix sort's tie-break is exactly this input order. No clear()
+    // first: a warm same-size call makes resize a no-op (every slot is
+    // overwritten below), so the buffer is not redundantly memset.
+    endpoints.resize(total, Endpoint::default());
     {
-        #[derive(Clone, Copy)]
-        struct SendPtr(*mut Endpoint);
-        unsafe impl Send for SendPtr {}
-        unsafe impl Sync for SendPtr {}
-        let base = SendPtr(endpoints.as_mut_ptr());
-        // Regions (not endpoints) are chunked; each region owns two
-        // adjacent slots, so chunks stay disjoint.
+        let base = crate::exec::SendPtr(endpoints.as_mut_ptr());
         let sub_ranges = chunks(n, nthreads);
         let upd_ranges = chunks(m, nthreads);
         pool.run(nthreads, |p| {
             let base = base;
             for i in sub_ranges[p].clone() {
-                // SAFETY: slot 2i / 2i+1 written exactly once, by this worker.
+                // SAFETY: each slot belongs to exactly one region
+                // endpoint and each region to exactly one worker.
                 unsafe {
-                    *base.0.add(2 * i) = Endpoint::new(subs.lo[i], i as u32, false, false);
-                    *base.0.add(2 * i + 1) = Endpoint::new(subs.hi[i], i as u32, true, false);
+                    *base.0.add(endpoint_slot(n, m, i, true, false)) =
+                        Endpoint::new(subs.hi[i], i as u32, true, false);
+                    *base.0.add(endpoint_slot(n, m, i, false, false)) =
+                        Endpoint::new(subs.lo[i], i as u32, false, false);
                 }
             }
             for j in upd_ranges[p].clone() {
                 unsafe {
-                    *base.0.add(2 * n + 2 * j) =
-                        Endpoint::new(upds.lo[j], j as u32, false, true);
-                    *base.0.add(2 * n + 2 * j + 1) =
+                    *base.0.add(endpoint_slot(n, m, j, true, true)) =
                         Endpoint::new(upds.hi[j], j as u32, true, true);
+                    *base.0.add(endpoint_slot(n, m, j, false, true)) =
+                        Endpoint::new(upds.lo[j], j as u32, false, true);
                 }
             }
         });
     }
 
     // ---- Phase 1b: parallel sort (Algorithm 6 line 4) -------------------
-    par_sort_by_key(pool, nthreads, &mut endpoints, |e| e.sort_key());
+    sort_endpoints(Some((pool, nthreads)), endpoints, aux, radix, sort);
 
     // ---- Phase 2: per-segment deltas + master combine (Algorithm 7) -----
     let segments = chunks(total, nthreads);
-    let endpoints_ref = &endpoints;
+    let endpoints_ref: &[Endpoint] = endpoints;
     let segments_ref = &segments;
     let deltas: Vec<Delta<Set>> = pool.fan_map(nthreads, nthreads, |p| {
         segment_delta::<Set>(&endpoints_ref[segments_ref[p].clone()], n, m)
@@ -216,14 +259,50 @@ where
     S: MatchSink,
     M: Fn(usize) -> S + Sync,
 {
+    match_par_sinks_scratch_with(
+        set_impl,
+        SortAlgo::default(),
+        pool,
+        nthreads,
+        subs,
+        upds,
+        &mut MatchScratch::new(),
+        mk,
+    )
+}
+
+/// Runtime-dispatched [`match_par_sinks_scratch`].
+#[allow(clippy::too_many_arguments)]
+pub fn match_par_sinks_scratch_with<S, M>(
+    set_impl: SetImpl,
+    sort: SortAlgo,
+    pool: &ThreadPool,
+    nthreads: usize,
+    subs: &Regions1D,
+    upds: &Regions1D,
+    scratch: &mut MatchScratch,
+    mk: M,
+) -> Vec<S>
+where
+    S: MatchSink,
+    M: Fn(usize) -> S + Sync,
+{
     match set_impl {
-        SetImpl::Bit => match_par_sinks::<BitSet, S, M>(pool, nthreads, subs, upds, mk),
-        SetImpl::Hash => match_par_sinks::<HashActiveSet, S, M>(pool, nthreads, subs, upds, mk),
-        SetImpl::BTree => match_par_sinks::<BTreeActiveSet, S, M>(pool, nthreads, subs, upds, mk),
-        SetImpl::SortedVec => {
-            match_par_sinks::<SortedVecSet, S, M>(pool, nthreads, subs, upds, mk)
+        SetImpl::Bit => {
+            match_par_sinks_scratch::<BitSet, S, M>(pool, nthreads, sort, subs, upds, scratch, mk)
         }
-        SetImpl::Sparse => match_par_sinks::<SparseSet, S, M>(pool, nthreads, subs, upds, mk),
+        SetImpl::Hash => match_par_sinks_scratch::<HashActiveSet, S, M>(
+            pool, nthreads, sort, subs, upds, scratch, mk,
+        ),
+        SetImpl::BTree => match_par_sinks_scratch::<BTreeActiveSet, S, M>(
+            pool, nthreads, sort, subs, upds, scratch, mk,
+        ),
+        SetImpl::SortedVec => match_par_sinks_scratch::<SortedVecSet, S, M>(
+            pool, nthreads, sort, subs, upds, scratch, mk,
+        ),
+        SetImpl::Sparse => match_par_sinks_scratch::<SparseSet, S, M>(
+            pool, nthreads, sort, subs, upds, scratch, mk,
+        ),
     }
 }
 
@@ -231,6 +310,7 @@ where
 /// paper's main contribution).
 pub struct PsbmMatcher {
     set_impl: SetImpl,
+    sort: SortAlgo,
     nd: NdPolicy,
 }
 
@@ -238,6 +318,7 @@ impl PsbmMatcher {
     pub fn new(set_impl: SetImpl) -> Self {
         Self {
             set_impl,
+            sort: SortAlgo::default(),
             nd: NdPolicy::default(),
         }
     }
@@ -245,6 +326,13 @@ impl PsbmMatcher {
     /// Set the N-D pipeline policy (engine-injected).
     pub fn with_nd(mut self, nd: NdPolicy) -> Self {
         self.nd = nd;
+        self
+    }
+
+    /// Set the endpoint sort implementation (engine-injected; CLI
+    /// `--sort radix|merge`).
+    pub fn with_sort(mut self, sort: SortAlgo) -> Self {
+        self.sort = sort;
         self
     }
 }
@@ -261,9 +349,22 @@ impl crate::engine::Matcher for PsbmMatcher {
         upds: &Regions1D,
         sink: &mut dyn MatchSink,
     ) {
-        let sinks: Vec<crate::core::sink::VecSink> =
-            match_par_with(self.set_impl, ctx.pool, ctx.nthreads, subs, upds);
-        crate::core::sink::replay(sinks, sink);
+        let mut guard = ctx.scratch();
+        let scratch = &mut *guard;
+        // Per-worker collection sinks come from (and return to) the
+        // scratch pool, so warm calls reuse their pair buffers too.
+        let disp = SinkDispenser::new(scratch.take_pair_sinks(ctx.nthreads));
+        let sinks: Vec<crate::core::sink::VecSink> = match_par_sinks_scratch_with(
+            self.set_impl,
+            self.sort,
+            ctx.pool,
+            ctx.nthreads,
+            subs,
+            upds,
+            scratch,
+            |p| disp.take(p),
+        );
+        scratch.drain_pair_sinks(sinks, disp.into_remaining(), sink);
     }
 
     fn count_1d(
@@ -272,8 +373,17 @@ impl crate::engine::Matcher for PsbmMatcher {
         subs: &Regions1D,
         upds: &Regions1D,
     ) -> u64 {
-        let sinks: Vec<crate::core::sink::CountSink> =
-            match_par_with(self.set_impl, ctx.pool, ctx.nthreads, subs, upds);
+        let mut guard = ctx.scratch();
+        let sinks: Vec<crate::core::sink::CountSink> = match_par_sinks_scratch_with(
+            self.set_impl,
+            self.sort,
+            ctx.pool,
+            ctx.nthreads,
+            subs,
+            upds,
+            &mut guard,
+            |_p| crate::core::sink::CountSink::default(),
+        );
         crate::core::sink::total_count(&sinks)
     }
 
@@ -292,15 +402,30 @@ impl crate::engine::Matcher for PsbmMatcher {
                 |s1, u1, out| self.match_1d(ctx, s1, u1, out),
                 sink,
             ),
-            NdMode::Native => ddim::native_match(
-                self.nd.sweep,
-                ctx.pool,
-                ctx.nthreads,
-                subs,
-                upds,
-                |s1, u1, mk| match_par_sinks_with(self.set_impl, ctx.pool, ctx.nthreads, s1, u1, mk),
-                sink,
-            ),
+            NdMode::Native => {
+                let mut guard = ctx.scratch();
+                ddim::native_match(
+                    self.nd.sweep,
+                    ctx.pool,
+                    ctx.nthreads,
+                    subs,
+                    upds,
+                    &mut guard,
+                    |s1, u1, scratch, mk| {
+                        match_par_sinks_scratch_with(
+                            self.set_impl,
+                            self.sort,
+                            ctx.pool,
+                            ctx.nthreads,
+                            s1,
+                            u1,
+                            scratch,
+                            mk,
+                        )
+                    },
+                    sink,
+                )
+            }
         }
     }
 
@@ -311,14 +436,29 @@ impl crate::engine::Matcher for PsbmMatcher {
                 self.match_nd(ctx, subs, upds, &mut sink);
                 sink.count
             }
-            NdMode::Native => ddim::native_count(
-                self.nd.sweep,
-                ctx.pool,
-                ctx.nthreads,
-                subs,
-                upds,
-                |s1, u1, mk| match_par_sinks_with(self.set_impl, ctx.pool, ctx.nthreads, s1, u1, mk),
-            ),
+            NdMode::Native => {
+                let mut guard = ctx.scratch();
+                ddim::native_count(
+                    self.nd.sweep,
+                    ctx.pool,
+                    ctx.nthreads,
+                    subs,
+                    upds,
+                    &mut guard,
+                    |s1, u1, scratch, mk| {
+                        match_par_sinks_scratch_with(
+                            self.set_impl,
+                            self.sort,
+                            ctx.pool,
+                            ctx.nthreads,
+                            s1,
+                            u1,
+                            scratch,
+                            mk,
+                        )
+                    },
+                )
+            }
         }
     }
 }

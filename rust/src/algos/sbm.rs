@@ -15,89 +15,19 @@
 //! The module also exports the endpoint encoding and the sweep core so
 //! Parallel SBM ([`super::psbm`]) reuses the exact same semantics.
 
+use crate::core::scratch::MatchScratch;
 use crate::core::sink::MatchSink;
 use crate::core::Regions1D;
-use crate::exec::f64_key;
+use crate::exec::SortAlgo;
 use crate::sets::{
     ActiveSet, BTreeActiveSet, BitSet, HashActiveSet, SetImpl, SortedVecSet, SparseSet,
 };
 
-/// One interval endpoint, stored **sort-ready**: the position is kept
-/// as its order-preserving bit pattern (`f64_key`) and the tie-break
-/// bits are pre-composed, so sorting compares two plain u64 words with
-/// no per-comparison key recomputation (a measured win on the sort
-/// phase — EXPERIMENTS.md §Perf).
-///
-/// `lo` layout: bit 63 = side-first flag (0 for *upper* endpoints so
-/// they sort before lowers at equal positions — half-open semantics);
-/// bits 2.. = region idx; bit 1 = is_upper; bit 0 = is_update.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
-pub struct Endpoint {
-    /// `f64_key(pos)` — order-preserving position bits.
-    pub hi: u64,
-    /// Tie-break + payload bits (see layout above).
-    pub lo: u64,
-}
-
-const LOWER_SORTS_LAST: u64 = 1 << 63;
-
-impl Endpoint {
-    #[inline]
-    pub fn new(pos: f64, idx: u32, is_upper: bool, is_update: bool) -> Self {
-        let side = if is_upper { 0 } else { LOWER_SORTS_LAST };
-        Self {
-            hi: f64_key(pos),
-            lo: side | (idx as u64) << 2 | (is_upper as u64) << 1 | is_update as u64,
-        }
-    }
-
-    #[inline]
-    pub fn idx(self) -> u32 {
-        ((self.lo & !LOWER_SORTS_LAST) >> 2) as u32
-    }
-
-    #[inline]
-    pub fn is_upper(self) -> bool {
-        self.lo & 2 != 0
-    }
-
-    #[inline]
-    pub fn is_update(self) -> bool {
-        self.lo & 1 != 0
-    }
-
-    /// Position (decoded from the order-preserving bits; debug use).
-    pub fn pos(self) -> f64 {
-        let bits = if self.hi & (1 << 63) != 0 {
-            self.hi & !(1 << 63)
-        } else {
-            !self.hi
-        };
-        f64::from_bits(bits)
-    }
-
-    /// Total sort key: position, then side (uppers first), then
-    /// kind/idx for determinism — a pure bit concatenation of the
-    /// stored words, no recomputation.
-    #[inline]
-    pub fn sort_key(self) -> u128 {
-        (self.hi as u128) << 64 | self.lo as u128
-    }
-}
-
-/// Build the 2(n+m) endpoint array (Algorithm 4 lines 1–3).
-pub fn build_endpoints(subs: &Regions1D, upds: &Regions1D) -> Vec<Endpoint> {
-    let mut t = Vec::with_capacity(2 * (subs.len() + upds.len()));
-    for i in 0..subs.len() {
-        t.push(Endpoint::new(subs.lo[i], i as u32, false, false));
-        t.push(Endpoint::new(subs.hi[i], i as u32, true, false));
-    }
-    for j in 0..upds.len() {
-        t.push(Endpoint::new(upds.lo[j], j as u32, false, true));
-        t.push(Endpoint::new(upds.hi[j], j as u32, true, true));
-    }
-    t
-}
+// The endpoint record (compact `u64` radix key + tie-break payload)
+// and its builders live in the core layer so the scratch buffers and
+// the sort machinery share one layout; re-exported here because SBM is
+// their natural home in the paper.
+pub use crate::core::endpoint::{build_endpoints, build_endpoints_into, Endpoint};
 
 /// The sweep core (Algorithm 4 lines 6–18 / Algorithm 6 lines 8–20):
 /// process `endpoints` in order against the given active sets.
@@ -132,11 +62,60 @@ pub fn match_seq<Set: ActiveSet>(
     upds: &Regions1D,
     sink: &mut dyn MatchSink,
 ) {
-    let mut t = build_endpoints(subs, upds);
-    t.sort_unstable_by_key(|e| e.sort_key());
+    match_seq_scratch_generic::<Set>(
+        SortAlgo::default(),
+        subs,
+        upds,
+        &mut MatchScratch::new(),
+        sink,
+    );
+}
+
+/// Serial SBM over a caller-owned [`MatchScratch`]: the endpoint
+/// array, the radix aux buffer and the histogram block are all reused
+/// across calls, so the warm path allocates nothing.
+pub fn match_seq_scratch_generic<Set: ActiveSet>(
+    sort: SortAlgo,
+    subs: &Regions1D,
+    upds: &Regions1D,
+    scratch: &mut MatchScratch,
+    sink: &mut dyn MatchSink,
+) {
+    let MatchScratch {
+        endpoints,
+        aux,
+        radix,
+        ..
+    } = scratch;
+    build_endpoints_into(subs, upds, endpoints);
+    crate::core::endpoint::sort_endpoints(None, endpoints, aux, radix, sort);
     let mut sub_set = Set::with_universe(subs.len());
     let mut upd_set = Set::with_universe(upds.len());
-    sweep(&t, &mut sub_set, &mut upd_set, sink);
+    sweep(endpoints, &mut sub_set, &mut upd_set, sink);
+}
+
+/// Runtime-dispatched serial SBM over a caller-owned scratch.
+pub fn match_seq_scratch(
+    set_impl: SetImpl,
+    sort: SortAlgo,
+    subs: &Regions1D,
+    upds: &Regions1D,
+    scratch: &mut MatchScratch,
+    sink: &mut dyn MatchSink,
+) {
+    match set_impl {
+        SetImpl::Bit => match_seq_scratch_generic::<BitSet>(sort, subs, upds, scratch, sink),
+        SetImpl::Hash => {
+            match_seq_scratch_generic::<HashActiveSet>(sort, subs, upds, scratch, sink)
+        }
+        SetImpl::BTree => {
+            match_seq_scratch_generic::<BTreeActiveSet>(sort, subs, upds, scratch, sink)
+        }
+        SetImpl::SortedVec => {
+            match_seq_scratch_generic::<SortedVecSet>(sort, subs, upds, scratch, sink)
+        }
+        SetImpl::Sparse => match_seq_scratch_generic::<SparseSet>(sort, subs, upds, scratch, sink),
+    }
 }
 
 /// Runtime-dispatched serial SBM returning a fresh sink.
@@ -145,13 +124,14 @@ where
     S: MatchSink + Default,
 {
     let mut sink = S::default();
-    match set_impl {
-        SetImpl::Bit => match_seq::<BitSet>(subs, upds, &mut sink),
-        SetImpl::Hash => match_seq::<HashActiveSet>(subs, upds, &mut sink),
-        SetImpl::BTree => match_seq::<BTreeActiveSet>(subs, upds, &mut sink),
-        SetImpl::SortedVec => match_seq::<SortedVecSet>(subs, upds, &mut sink),
-        SetImpl::Sparse => match_seq::<SparseSet>(subs, upds, &mut sink),
-    }
+    match_seq_scratch(
+        set_impl,
+        SortAlgo::default(),
+        subs,
+        upds,
+        &mut MatchScratch::new(),
+        &mut sink,
+    );
     sink
 }
 
@@ -160,6 +140,7 @@ where
 /// one thread regardless of the context's thread count.
 pub struct SbmMatcher {
     set_impl: SetImpl,
+    sort: SortAlgo,
     nd: crate::core::ddim::NdPolicy,
 }
 
@@ -167,6 +148,7 @@ impl SbmMatcher {
     pub fn new(set_impl: SetImpl) -> Self {
         Self {
             set_impl,
+            sort: SortAlgo::default(),
             nd: crate::core::ddim::NdPolicy::default(),
         }
     }
@@ -177,16 +159,11 @@ impl SbmMatcher {
         self
     }
 
-    /// Serial sweep of one dimension's projections into `sink`
-    /// (runtime set dispatch).
-    fn sweep_into(&self, subs: &Regions1D, upds: &Regions1D, sink: &mut dyn MatchSink) {
-        match self.set_impl {
-            SetImpl::Bit => match_seq::<BitSet>(subs, upds, sink),
-            SetImpl::Hash => match_seq::<HashActiveSet>(subs, upds, sink),
-            SetImpl::BTree => match_seq::<BTreeActiveSet>(subs, upds, sink),
-            SetImpl::SortedVec => match_seq::<SortedVecSet>(subs, upds, sink),
-            SetImpl::Sparse => match_seq::<SparseSet>(subs, upds, sink),
-        }
+    /// Set the endpoint sort implementation (engine-injected; CLI
+    /// `--sort radix|merge`).
+    pub fn with_sort(mut self, sort: SortAlgo) -> Self {
+        self.sort = sort;
+        self
     }
 }
 
@@ -197,23 +174,23 @@ impl crate::engine::Matcher for SbmMatcher {
 
     fn match_1d(
         &self,
-        _ctx: &crate::engine::ExecCtx<'_>,
+        ctx: &crate::engine::ExecCtx<'_>,
         subs: &Regions1D,
         upds: &Regions1D,
         sink: &mut dyn MatchSink,
     ) {
-        let collected: crate::core::sink::VecSink =
-            match_seq_with(self.set_impl, subs, upds);
-        crate::core::sink::replay(vec![collected], sink);
+        let mut scratch = ctx.scratch();
+        match_seq_scratch(self.set_impl, self.sort, subs, upds, &mut scratch, sink);
     }
 
     fn count_1d(
         &self,
-        _ctx: &crate::engine::ExecCtx<'_>,
+        ctx: &crate::engine::ExecCtx<'_>,
         subs: &Regions1D,
         upds: &Regions1D,
     ) -> u64 {
-        let counted: crate::core::sink::CountSink = match_seq_with(self.set_impl, subs, upds);
+        let mut counted = crate::core::sink::CountSink::default();
+        self.match_1d(ctx, subs, upds, &mut counted);
         counted.count
     }
 
@@ -237,11 +214,15 @@ impl crate::engine::Matcher for SbmMatcher {
                 // Serial backend: one FilterSink straight over the
                 // caller's sink; the sweep is a single pass anyway.
                 let k = ddim::resolve_sweep_dim(self.nd.sweep, ctx.pool, 1, subs, upds);
+                let mut scratch = ctx.scratch();
+                let scratch = &mut *scratch;
                 ddim::sweep_and_verify(
                     subs,
                     upds,
                     k,
-                    |s1, u1, out| self.sweep_into(s1, u1, out),
+                    |s1, u1, out| {
+                        match_seq_scratch(self.set_impl, self.sort, s1, u1, scratch, out)
+                    },
                     sink,
                 );
             }
@@ -268,25 +249,106 @@ mod tests {
     use crate::core::region::random_regions_1d;
     use crate::core::sink::{canonicalize, VecSink};
 
+    /// The satellite tie-break oracle test: sweeps over equal
+    /// positions, -0.0 vs 0.0, subnormals and ±inf must match the 1-D
+    /// brute-force oracle (which only uses Intersect-1D) under BOTH
+    /// sort implementations.
     #[test]
-    fn endpoint_encoding_roundtrip() {
-        let e = Endpoint::new(3.5, 1234, true, false);
-        assert_eq!(e.idx(), 1234);
-        assert!(e.is_upper());
-        assert!(!e.is_update());
-        let e2 = Endpoint::new(-1.0, 0, false, true);
-        assert!(!e2.is_upper());
-        assert!(e2.is_update());
+    fn pathological_positions_match_bfm_under_both_sorts() {
+        use crate::core::scratch::MatchScratch;
+        use crate::exec::SortAlgo;
+
+        let specials = [
+            0.0,
+            -0.0,
+            5e-324,
+            -5e-324,
+            f64::MIN_POSITIVE,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            1.0,
+            -1.0,
+        ];
+        let mut rng = crate::prng::Rng::new(0x71E5);
+        for case in 0..40 {
+            let mut mk = |n: usize| {
+                let mut r = Regions1D::default();
+                for _ in 0..n {
+                    let pick = |rng: &mut crate::prng::Rng| -> f64 {
+                        if rng.chance(0.8) {
+                            specials[rng.below(specials.len() as u64) as usize]
+                        } else {
+                            rng.uniform(-1.0, 1.0)
+                        }
+                    };
+                    let (a, b) = (pick(&mut rng), pick(&mut rng));
+                    let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+                    r.push(Interval::new(lo, hi));
+                }
+                r
+            };
+            let subs = mk(12);
+            let upds = mk(12);
+            let mut want = VecSink::default();
+            bfm::match_seq(&subs, &upds, &mut want);
+            let want = canonicalize(want.pairs);
+            for sort in [SortAlgo::Radix, SortAlgo::Merge] {
+                let mut got = VecSink::default();
+                match_seq_scratch(
+                    SetImpl::Hash,
+                    sort,
+                    &subs,
+                    &upds,
+                    &mut MatchScratch::new(),
+                    &mut got,
+                );
+                assert_eq!(
+                    canonicalize(got.pairs),
+                    want,
+                    "case {case} sort {sort:?} diverged from Intersect-1D"
+                );
+            }
+        }
     }
 
+    /// A reused scratch yields bit-identical results to fresh
+    /// allocation, and its buffers stop growing after the first call.
     #[test]
-    fn uppers_sort_before_lowers_at_equal_pos() {
-        let upper = Endpoint::new(5.0, 7, true, false);
-        let lower = Endpoint::new(5.0, 3, false, true);
-        assert!(upper.sort_key() < lower.sort_key());
-        // and position dominates
-        let earlier = Endpoint::new(4.9, 9, false, false);
-        assert!(earlier.sort_key() < upper.sort_key());
+    fn scratch_reuse_is_identical_and_allocation_free() {
+        use crate::core::scratch::MatchScratch;
+        use crate::exec::SortAlgo;
+
+        let mut rng = crate::prng::Rng::new(0x5C4A);
+        let subs = random_regions_1d(&mut rng, 500, 800.0, 10.0);
+        let upds = random_regions_1d(&mut rng, 450, 800.0, 10.0);
+        let mut scratch = MatchScratch::new();
+        let mut first: Option<Vec<(u32, u32)>> = None;
+        let mut stats = None;
+        for call in 0..4 {
+            let mut got = VecSink::default();
+            match_seq_scratch(
+                SetImpl::Sparse,
+                SortAlgo::Radix,
+                &subs,
+                &upds,
+                &mut scratch,
+                &mut got,
+            );
+            let got = canonicalize(got.pairs);
+            match &first {
+                None => {
+                    // Fresh-allocation reference.
+                    let fresh: VecSink = match_seq_with(SetImpl::Sparse, &subs, &upds);
+                    assert_eq!(got, canonicalize(fresh.pairs));
+                    first = Some(got);
+                }
+                Some(want) => assert_eq!(&got, want, "warm call {call} diverged"),
+            }
+            match stats {
+                None => stats = Some(scratch.stats()),
+                Some(s) => assert_eq!(scratch.stats(), s, "scratch grew on warm call {call}"),
+            }
+        }
     }
 
     #[test]

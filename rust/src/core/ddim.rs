@@ -280,51 +280,72 @@ impl ReductionNd {
 /// the sweep dimension, project it, hand `run1d` a factory producing
 /// per-worker [`FilterSink`]`<VecSink>`s, and drain the returned
 /// sinks. The shared body of the PSBM/ITM/GBM `match_nd` overrides.
+///
+/// The per-worker pair buffers come from (and return to) `scratch`,
+/// and `run1d` receives the same scratch for its own buffers (the
+/// endpoint array and radix block on the PSBM path, the binning block
+/// on the GBM path), so a warm `match_nd` call allocates nothing.
 pub fn native_match<'a, R>(
     sweep: SweepDim,
     pool: &ThreadPool,
     nthreads: usize,
     subs: &'a RegionsNd,
     upds: &'a RegionsNd,
+    scratch: &mut crate::core::scratch::MatchScratch,
     run1d: R,
     sink: &mut dyn MatchSink,
 ) where
     R: FnOnce(
         &'a Regions1D,
         &'a Regions1D,
+        &mut crate::core::scratch::MatchScratch,
         &(dyn Fn(usize) -> FilterSink<'a, VecSink> + Sync),
     ) -> Vec<FilterSink<'a, VecSink>>,
 {
+    use crate::core::scratch::SinkDispenser;
     let k = resolve_sweep_dim(sweep, pool, nthreads, subs, upds);
-    let mk = move |_p: usize| FilterSink::new(subs, upds, k, VecSink::default());
-    for fs in run1d(subs.project(k), upds.project(k), &mk) {
-        for (s, u) in fs.into_inner().pairs {
-            sink.report(s, u);
-        }
-    }
+    let disp = SinkDispenser::new(
+        scratch
+            .take_pair_sinks(nthreads)
+            .into_iter()
+            .map(|v| FilterSink::new(subs, upds, k, v))
+            .collect(),
+    );
+    let mk = |p: usize| disp.take(p);
+    let out = run1d(subs.project(k), upds.project(k), &mut *scratch, &mk);
+    let collected: Vec<VecSink> = out.into_iter().map(FilterSink::into_inner).collect();
+    scratch.drain_pair_sinks(
+        collected,
+        disp.into_remaining().map(FilterSink::into_inner),
+        sink,
+    );
 }
 
 /// Counting twin of [`native_match`]: per-worker
 /// [`FilterSink`]`<CountSink>`s, summed — verification inside the
-/// workers, no pair ever collected.
+/// workers, no pair ever collected (the
+/// [`MatchScratch`](crate::core::scratch::MatchScratch) still feeds
+/// `run1d`'s endpoint/binning buffers).
 pub fn native_count<'a, R>(
     sweep: SweepDim,
     pool: &ThreadPool,
     nthreads: usize,
     subs: &'a RegionsNd,
     upds: &'a RegionsNd,
+    scratch: &mut crate::core::scratch::MatchScratch,
     run1d: R,
 ) -> u64
 where
     R: FnOnce(
         &'a Regions1D,
         &'a Regions1D,
+        &mut crate::core::scratch::MatchScratch,
         &(dyn Fn(usize) -> FilterSink<'a, CountSink> + Sync),
     ) -> Vec<FilterSink<'a, CountSink>>,
 {
     let k = resolve_sweep_dim(sweep, pool, nthreads, subs, upds);
     let mk = move |_p: usize| FilterSink::new(subs, upds, k, CountSink::default());
-    run1d(subs.project(k), upds.project(k), &mk)
+    run1d(subs.project(k), upds.project(k), scratch, &mk)
         .into_iter()
         .map(|fs| fs.into_inner().count)
         .sum()

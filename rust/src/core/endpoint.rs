@@ -1,0 +1,346 @@
+//! The sweep endpoint record and its **compact `u64` sort key**.
+//!
+//! SBM/PSBM sort the `2(n+m)` interval endpoints and sweep them in
+//! order (paper Algorithms 4/6). This module owns the endpoint
+//! encoding so the sort hot path, the scratch buffers
+//! ([`super::scratch`]) and the algorithms all agree on one layout:
+//!
+//! * `hi` — the **sort key**: the position mapped through the
+//!   order-preserving IEEE-754 sign-magnitude flip
+//!   ([`crate::exec::f64_key`]), one `u64` word. `-0.0` is normalized
+//!   to `+0.0` first, because the sweep must agree with Intersect-1D,
+//!   where `-0.0 == 0.0` (a raw `f64_key` orders them strictly and
+//!   would let `[a, -0.0)` match `[0.0, b)`).
+//! * `lo` — payload plus comparison tie-break bits (see below).
+//!
+//! **Tie-breaking.** Positions collide; intervals are half-open, so at
+//! equal position *upper* endpoints must be processed before *lower*
+//! ones (`[a, b)` and `[b, c)` must not match). The radix path
+//! ([`crate::exec::radix`]) sorts by `hi` alone and gets the tie-break
+//! from **stability + build order**: [`build_endpoints`] emits all
+//! uppers before all lowers (subscriptions before updates, ascending
+//! index), and a stable sort keeps that order within equal keys. The
+//! comparison fallback sorts by the full [`Endpoint::sort_key`]
+//! (`u128`), whose `lo` bit layout encodes the *same* order —
+//! property-tested to produce bit-identical arrays.
+//!
+//! `lo` layout: bit 63 = side (0 for uppers, so they sort first at
+//! equal positions); bit 62 = update-group (subscriptions first);
+//! bits 2..=33 = region idx; bit 1 = is_upper; bit 0 = is_update.
+
+use super::region::Regions1D;
+use crate::exec::psort::par_sort_by_key;
+use crate::exec::radix::{par_radix_sort_by_key, radix_sort_by_key, RadixScratch, SortAlgo};
+use crate::exec::{f64_key, ThreadPool};
+
+/// One interval endpoint, stored **sort-ready**: the position is kept
+/// as its order-preserving bit pattern and the tie-break bits are
+/// pre-composed, so the radix path sorts one `u64` word and the
+/// comparison fallback compares two with no per-comparison key
+/// recomputation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Endpoint {
+    /// The compact sort key: `f64_key(pos)` (with `-0.0` → `+0.0`).
+    pub hi: u64,
+    /// Tie-break + payload bits (see module docs).
+    pub lo: u64,
+}
+
+const LOWER_SORTS_LAST: u64 = 1 << 63;
+const UPDATE_SORTS_LAST: u64 = 1 << 62;
+const IDX_MASK: u64 = (1 << 62) - 1;
+
+impl Endpoint {
+    #[inline]
+    pub fn new(pos: f64, idx: u32, is_upper: bool, is_update: bool) -> Self {
+        let side = if is_upper { 0 } else { LOWER_SORTS_LAST };
+        let group = if is_update { UPDATE_SORTS_LAST } else { 0 };
+        // `+ 0.0` collapses -0.0 onto +0.0 (every other value,
+        // including NaN payloads, is unchanged): the sweep's order must
+        // match Intersect-1D, which compares positions with IEEE `<`.
+        Self {
+            hi: f64_key(pos + 0.0),
+            lo: side | group | (idx as u64) << 2 | (is_upper as u64) << 1 | is_update as u64,
+        }
+    }
+
+    #[inline]
+    pub fn idx(self) -> u32 {
+        ((self.lo & IDX_MASK) >> 2) as u32
+    }
+
+    #[inline]
+    pub fn is_upper(self) -> bool {
+        self.lo & 2 != 0
+    }
+
+    #[inline]
+    pub fn is_update(self) -> bool {
+        self.lo & 1 != 0
+    }
+
+    /// Position (decoded from the order-preserving bits; debug use).
+    pub fn pos(self) -> f64 {
+        let bits = if self.hi & (1 << 63) != 0 {
+            self.hi & !(1 << 63)
+        } else {
+            !self.hi
+        };
+        f64::from_bits(bits)
+    }
+
+    /// The compact radix key: position order, one `u64` word. Ties are
+    /// broken by stable-sort input order (see module docs).
+    #[inline]
+    pub fn radix_key(self) -> u64 {
+        self.hi
+    }
+
+    /// Total comparison key: position, then side (uppers first), then
+    /// update-group, then idx — a pure bit concatenation of the stored
+    /// words. Encodes exactly the order the stable radix path produces
+    /// from [`build_endpoints`] input order.
+    #[inline]
+    pub fn sort_key(self) -> u128 {
+        (self.hi as u128) << 64 | self.lo as u128
+    }
+}
+
+/// Slot of one endpoint in the canonical build order (uppers before
+/// lowers, subscriptions before updates, ascending index) — the order
+/// whose stable sort implements the tie-break. Shared by the serial
+/// builder below and PSBM's parallel builder.
+#[inline]
+pub fn endpoint_slot(
+    n_subs: usize,
+    n_upds: usize,
+    idx: usize,
+    is_upper: bool,
+    is_update: bool,
+) -> usize {
+    let base = match (is_upper, is_update) {
+        (true, false) => 0,
+        (true, true) => n_subs,
+        (false, false) => n_subs + n_upds,
+        (false, true) => 2 * n_subs + n_upds,
+    };
+    base + idx
+}
+
+/// Build the 2(n+m) endpoint array (Algorithm 4 lines 1–3) into a
+/// reusable buffer, in canonical build order.
+pub fn build_endpoints_into(subs: &Regions1D, upds: &Regions1D, out: &mut Vec<Endpoint>) {
+    out.clear();
+    out.reserve(2 * (subs.len() + upds.len()));
+    for i in 0..subs.len() {
+        out.push(Endpoint::new(subs.hi[i], i as u32, true, false));
+    }
+    for j in 0..upds.len() {
+        out.push(Endpoint::new(upds.hi[j], j as u32, true, true));
+    }
+    for i in 0..subs.len() {
+        out.push(Endpoint::new(subs.lo[i], i as u32, false, false));
+    }
+    for j in 0..upds.len() {
+        out.push(Endpoint::new(upds.lo[j], j as u32, false, true));
+    }
+}
+
+/// Build the 2(n+m) endpoint array into a fresh vector.
+pub fn build_endpoints(subs: &Regions1D, upds: &Regions1D) -> Vec<Endpoint> {
+    let mut t = Vec::new();
+    build_endpoints_into(subs, upds, &mut t);
+    t
+}
+
+/// Sort an endpoint array with the selected algorithm. The radix path
+/// sorts by the compact `u64` key, relying on stability + canonical
+/// build order for the tie-break, so **`endpoints` must still be in
+/// [`build_endpoints`] order** (every in-tree builder emits it). The
+/// merge path sorts by the full `u128` comparison key, which encodes
+/// the same total order — both paths yield bit-identical arrays.
+/// `pool: None` runs serially.
+pub fn sort_endpoints(
+    pool: Option<(&ThreadPool, usize)>,
+    endpoints: &mut [Endpoint],
+    aux: &mut Vec<Endpoint>,
+    radix: &mut RadixScratch,
+    sort: SortAlgo,
+) {
+    match (sort, pool) {
+        (SortAlgo::Radix, Some((pool, nthreads))) => {
+            par_radix_sort_by_key(pool, nthreads, endpoints, aux, radix, |e| e.radix_key());
+        }
+        (SortAlgo::Radix, None) => {
+            radix_sort_by_key(endpoints, aux, radix, |e| e.radix_key());
+        }
+        (SortAlgo::Merge, Some((pool, nthreads))) => {
+            par_sort_by_key(pool, nthreads, endpoints, |e| e.sort_key());
+        }
+        (SortAlgo::Merge, None) => {
+            // u128 keys are distinct (idx/side/kind bits), so an
+            // unstable sort yields the same unique order.
+            endpoints.sort_unstable_by_key(|e| e.sort_key());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::interval::Interval;
+    use crate::prng::Rng;
+
+    #[test]
+    fn endpoint_encoding_roundtrip() {
+        let e = Endpoint::new(3.5, 1234, true, false);
+        assert_eq!(e.idx(), 1234);
+        assert!(e.is_upper());
+        assert!(!e.is_update());
+        assert_eq!(e.pos(), 3.5);
+        let e2 = Endpoint::new(-1.0, 0, false, true);
+        assert!(!e2.is_upper());
+        assert!(e2.is_update());
+        assert_eq!(e2.pos(), -1.0);
+        // Large indices survive the group bits.
+        let e3 = Endpoint::new(0.0, u32::MAX, false, false);
+        assert_eq!(e3.idx(), u32::MAX);
+    }
+
+    #[test]
+    fn uppers_sort_before_lowers_at_equal_pos() {
+        let upper = Endpoint::new(5.0, 7, true, false);
+        let lower = Endpoint::new(5.0, 3, false, true);
+        assert!(upper.sort_key() < lower.sort_key());
+        assert_eq!(upper.radix_key(), lower.radix_key(), "compact keys tie");
+        // and position dominates
+        let earlier = Endpoint::new(4.9, 9, false, false);
+        assert!(earlier.sort_key() < upper.sort_key());
+        assert!(earlier.radix_key() < upper.radix_key());
+    }
+
+    #[test]
+    fn negative_zero_ties_with_positive_zero() {
+        // -0.0 == 0.0 under Intersect-1D, so their keys must be equal
+        // and the side bit must decide: an upper at 0.0 precedes a
+        // lower at -0.0 (touching intervals stay non-matching).
+        let upper = Endpoint::new(0.0, 0, true, false);
+        let lower = Endpoint::new(-0.0, 1, false, true);
+        assert_eq!(upper.radix_key(), lower.radix_key());
+        assert!(upper.sort_key() < lower.sort_key());
+    }
+
+    #[test]
+    fn build_order_is_the_comparison_tie_order() {
+        // With ALL positions equal, the canonical build order must
+        // already be sorted by the comparison key — that equivalence is
+        // what lets the stable radix path skip the tie bits entirely.
+        let iv = Interval::new(2.0, 2.0); // zero-width: all 4 kinds at one pos
+        let subs = Regions1D::from_intervals(&[iv; 3]);
+        let upds = Regions1D::from_intervals(&[iv; 2]);
+        let built = build_endpoints(&subs, &upds);
+        assert_eq!(built.len(), 10);
+        let mut sorted = built.clone();
+        sorted.sort_unstable_by_key(|e| e.sort_key());
+        assert_eq!(built, sorted, "build order must equal comparison order at ties");
+        // Slots agree with the builder.
+        for (slot, e) in built.iter().enumerate() {
+            assert_eq!(
+                endpoint_slot(3, 2, e.idx() as usize, e.is_upper(), e.is_update()),
+                slot
+            );
+        }
+    }
+
+    /// The satellite stability test: equal positions, -0.0 vs 0.0,
+    /// subnormals, ±inf — radix (serial and parallel) and comparison
+    /// sorts must produce bit-identical arrays.
+    #[test]
+    fn radix_and_comparison_sorts_agree_on_pathological_positions() {
+        let pool = ThreadPool::new(3);
+        let specials = [
+            0.0,
+            -0.0,
+            f64::MIN_POSITIVE,          // smallest normal
+            5e-324,                     // subnormal
+            -5e-324,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            1.0,
+            -1.0,
+            f64::MAX,
+            -f64::MAX,
+        ];
+        let mut rng = Rng::new(0xE9D);
+        let mut subs = Regions1D::default();
+        let mut upds = Regions1D::default();
+        for i in 0..600 {
+            let pick = |rng: &mut Rng| -> f64 {
+                if rng.chance(0.7) {
+                    specials[rng.below(specials.len() as u64) as usize]
+                } else {
+                    rng.uniform(-2.0, 2.0)
+                }
+            };
+            let (a, b) = (pick(&mut rng), pick(&mut rng));
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            if i % 2 == 0 {
+                subs.push(Interval::new(lo, hi));
+            } else {
+                upds.push(Interval::new(lo, hi));
+            }
+        }
+        let built = build_endpoints(&subs, &upds);
+
+        let mut merge = built.clone();
+        sort_endpoints(None, &mut merge, &mut Vec::new(), &mut RadixScratch::new(), SortAlgo::Merge);
+        let mut radix = built.clone();
+        sort_endpoints(None, &mut radix, &mut Vec::new(), &mut RadixScratch::new(), SortAlgo::Radix);
+        assert_eq!(radix, merge, "serial radix != comparison order");
+        for p in [1usize, 2, 4] {
+            let mut par = built.clone();
+            sort_endpoints(
+                Some((&pool, p)),
+                &mut par,
+                &mut Vec::new(),
+                &mut RadixScratch::new(),
+                SortAlgo::Radix,
+            );
+            assert_eq!(par, merge, "parallel radix (p={p}) != comparison order");
+            let mut pm = built.clone();
+            sort_endpoints(
+                Some((&pool, p)),
+                &mut pm,
+                &mut Vec::new(),
+                &mut RadixScratch::new(),
+                SortAlgo::Merge,
+            );
+            assert_eq!(pm, merge, "parallel merge (p={p}) != comparison order");
+        }
+    }
+
+    #[test]
+    fn sort_paths_agree_on_random_workloads_property() {
+        let pool = ThreadPool::new(5);
+        crate::bench::prop::prop_check("endpoint-radix-vs-merge", 0xE9E, |rng| {
+            let n = 1 + rng.below(400) as usize;
+            let m = 1 + rng.below(400) as usize;
+            let space = rng.uniform(1.0, 1e6);
+            let subs = crate::core::region::random_regions_1d(rng, n, space, space / 20.0);
+            let upds = crate::core::region::random_regions_1d(rng, m, space, space / 20.0);
+            let built = build_endpoints(&subs, &upds);
+            let mut want = built.clone();
+            want.sort_unstable_by_key(|e| e.sort_key());
+            let p = 1 + rng.below(6) as usize;
+            let mut radix = built.clone();
+            sort_endpoints(
+                Some((&pool, p)),
+                &mut radix,
+                &mut Vec::new(),
+                &mut RadixScratch::new(),
+                SortAlgo::Radix,
+            );
+            crate::bench::prop::expect_eq(&radix, &want, "radix vs comparison")
+        });
+    }
+}

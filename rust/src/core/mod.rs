@@ -1,14 +1,19 @@
 //! Problem-domain types: intervals, d-rectangles, region sets, match
-//! sinks, and the d-dimensional pipeline (native sweep-and-verify plus
-//! the paper-§2 reduction fallback, [`ddim`]).
+//! sinks, the sweep endpoint encoding with its compact `u64` sort key
+//! ([`endpoint`]), the reusable match scratch ([`scratch`]), and the
+//! d-dimensional pipeline (native sweep-and-verify plus the paper-§2
+//! reduction fallback, [`ddim`]).
 
 pub mod ddim;
+pub mod endpoint;
 pub mod interval;
 pub mod region;
+pub mod scratch;
 pub mod sink;
 
 pub use interval::Interval;
 pub use region::{Regions1D, RegionsNd};
+pub use scratch::{MatchScratch, ScratchStats};
 pub use sink::{CountSink, MatchSink, PairVec, VecSink};
 
 /// Index of a region inside its set (regions are dense arrays).

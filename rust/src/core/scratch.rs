@@ -1,0 +1,245 @@
+//! Reusable match scratch: the buffers behind the zero-allocation
+//! steady state of repeated match calls and session commits.
+//!
+//! A cold match call allocates the endpoint array, the radix ping-pong
+//! buffer, the histogram block and one pair buffer per worker; a warm
+//! call should allocate **nothing**. [`MatchScratch`] owns all of
+//! those and hands them out by capacity-preserving take/give pairs:
+//!
+//! * the [`DdmEngine`](crate::engine::DdmEngine) owns one behind a
+//!   `Mutex`, attached to every [`ExecCtx`](crate::engine::ExecCtx) it
+//!   creates, so back-to-back `match_nd`/`count_nd` calls reuse the
+//!   previous call's buffers (`try_lock`: a contended or absent
+//!   scratch degrades to per-call allocation, never blocks);
+//! * every [`DdmSession`](crate::session::DdmSession) owns one
+//!   directly and reuses its per-region query and diff buffers across
+//!   epochs (a [`ShardedSession`](crate::shard::ShardedSession) gets
+//!   per-shard scratch for free — each inner session owns its own);
+//! * [`ScratchStats`] snapshots every capacity, so benches and tests
+//!   can assert the steady state really stops growing
+//!   (`benches/abl_sort.rs`).
+
+use crate::core::endpoint::Endpoint;
+use crate::core::sink::VecSink;
+use crate::core::RegionIdx;
+use crate::exec::radix::RadixScratch;
+
+/// Reusable buffers for the matching hot paths. See the module docs
+/// for ownership; `Default`/[`new`](Self::new) is an empty scratch
+/// that fills lazily on first use.
+#[derive(Debug, Default)]
+pub struct MatchScratch {
+    /// The endpoint build buffer (SBM/PSBM phase 1a).
+    pub endpoints: Vec<Endpoint>,
+    /// The radix sort's ping-pong buffer.
+    pub aux: Vec<Endpoint>,
+    /// The radix sort's per-worker histogram block.
+    pub radix: RadixScratch,
+    /// Pooled per-worker pair buffers (cleared, capacity kept).
+    pairs_pool: Vec<Vec<(RegionIdx, RegionIdx)>>,
+    /// Pooled `u32` work buffers (session recompute/diff scratch, GBM
+    /// binning offsets; cleared, capacity kept).
+    u32_pool: Vec<Vec<u32>>,
+}
+
+impl MatchScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take `n` empty per-worker collection sinks, reusing pooled pair
+    /// buffers (most-recently-returned first).
+    pub fn take_pair_sinks(&mut self, n: usize) -> Vec<VecSink> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(VecSink {
+                pairs: self.pairs_pool.pop().unwrap_or_default(),
+            });
+        }
+        out
+    }
+
+    /// Return collection sinks to the pool (cleared, capacity kept).
+    pub fn give_pair_sinks(&mut self, sinks: impl IntoIterator<Item = VecSink>) {
+        for mut s in sinks {
+            s.pairs.clear();
+            self.pairs_pool.push(s.pairs);
+        }
+    }
+
+    /// Replay every pair from per-worker `sinks` (worker order) into
+    /// `sink`, then return all buffers — including any unclaimed
+    /// `leftovers` — to the pool in **reverse** order. The pool is a
+    /// stack, so the reversal hands worker p the same buffer (and its
+    /// grown capacity) on the next call: per-worker capacities are
+    /// exactly stable on warm paths. The one home of that invariant,
+    /// shared by the PSBM/GBM `match_1d` overrides and
+    /// [`ddim::native_match`](crate::core::ddim::native_match).
+    pub fn drain_pair_sinks(
+        &mut self,
+        sinks: Vec<VecSink>,
+        leftovers: impl IntoIterator<Item = VecSink>,
+        sink: &mut dyn crate::core::sink::MatchSink,
+    ) {
+        let mut back = sinks;
+        for s in &back {
+            for &(a, b) in &s.pairs {
+                sink.report(a, b);
+            }
+        }
+        back.extend(leftovers);
+        self.give_pair_sinks(back.into_iter().rev());
+    }
+
+    /// Take `n` empty `u32` buffers from the pool.
+    pub fn take_u32_bufs(&mut self, n: usize) -> Vec<Vec<u32>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32_pool.pop().unwrap_or_default());
+        }
+        out
+    }
+
+    /// Take one empty `u32` buffer from the pool.
+    pub fn take_u32(&mut self) -> Vec<u32> {
+        self.u32_pool.pop().unwrap_or_default()
+    }
+
+    /// Return `u32` buffers to the pool (cleared, capacity kept).
+    pub fn give_u32_bufs(&mut self, bufs: impl IntoIterator<Item = Vec<u32>>) {
+        for mut b in bufs {
+            b.clear();
+            self.u32_pool.push(b);
+        }
+    }
+
+    /// Return one `u32` buffer to the pool.
+    pub fn give_u32(&mut self, buf: Vec<u32>) {
+        self.give_u32_bufs([buf]);
+    }
+
+    /// Capacity snapshot for allocation-free assertions.
+    pub fn stats(&self) -> ScratchStats {
+        ScratchStats {
+            endpoints_cap: self.endpoints.capacity(),
+            aux_cap: self.aux.capacity(),
+            radix_counts_cap: self.radix.counts_capacity(),
+            pooled_pair_bufs: self.pairs_pool.len(),
+            pooled_pair_cap: self.pairs_pool.iter().map(Vec::capacity).sum(),
+            pooled_u32_bufs: self.u32_pool.len(),
+            pooled_u32_cap: self.u32_pool.iter().map(Vec::capacity).sum(),
+        }
+    }
+}
+
+/// Capacity snapshot of a [`MatchScratch`]: two equal snapshots around
+/// a warm call mean the call allocated nothing from the scratch's
+/// buffers (the steady-state acceptance check of `abl_sort`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ScratchStats {
+    pub endpoints_cap: usize,
+    pub aux_cap: usize,
+    pub radix_counts_cap: usize,
+    pub pooled_pair_bufs: usize,
+    pub pooled_pair_cap: usize,
+    pub pooled_u32_bufs: usize,
+    pub pooled_u32_cap: usize,
+}
+
+/// Hands pre-built per-worker sinks out by worker index, across the
+/// `Fn(usize) -> S` factory seam the parallel matchers share — so
+/// pooled sinks flow into parallel regions without locks.
+///
+/// # Safety contract
+/// `take(p)` must be called **at most once per distinct `p`** (the
+/// matchers call their factory exactly once per worker index, each
+/// from the worker that owns it). Sinks never claimed can be recovered
+/// with [`into_remaining`](Self::into_remaining).
+pub struct SinkDispenser<S> {
+    slots: Vec<std::cell::UnsafeCell<Option<S>>>,
+}
+
+// SAFETY: each slot is touched by exactly one caller (the worker whose
+// index it is), per the documented contract.
+unsafe impl<S: Send> Sync for SinkDispenser<S> {}
+
+impl<S> SinkDispenser<S> {
+    pub fn new(sinks: Vec<S>) -> Self {
+        Self {
+            slots: sinks
+                .into_iter()
+                .map(|s| std::cell::UnsafeCell::new(Some(s)))
+                .collect(),
+        }
+    }
+
+    /// Claim the sink for worker `p`. Panics if `p` is out of range or
+    /// already claimed (both indicate a broken factory contract).
+    pub fn take(&self, p: usize) -> S {
+        // SAFETY: the contract guarantees slot `p` is accessed by this
+        // call alone.
+        unsafe { (*self.slots[p].get()).take() }.expect("sink slot claimed twice")
+    }
+
+    /// Recover every unclaimed sink (for returning them to the pool).
+    pub fn into_remaining(self) -> impl Iterator<Item = S> {
+        self.slots.into_iter().filter_map(|c| c.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pools_preserve_capacity_across_take_give() {
+        let mut scratch = MatchScratch::new();
+        let mut sinks = scratch.take_pair_sinks(3);
+        for s in &mut sinks {
+            for i in 0..100u32 {
+                s.pairs.push((i, i));
+            }
+        }
+        scratch.give_pair_sinks(sinks);
+        let stats = scratch.stats();
+        assert_eq!(stats.pooled_pair_bufs, 3);
+        assert!(stats.pooled_pair_cap >= 300);
+
+        // A warm take/give cycle neither grows nor shrinks the pool.
+        let sinks = scratch.take_pair_sinks(3);
+        assert!(sinks.iter().all(|s| s.pairs.is_empty()), "sinks come back cleared");
+        assert!(sinks.iter().all(|s| s.pairs.capacity() >= 100), "capacity survives");
+        scratch.give_pair_sinks(sinks);
+        assert_eq!(scratch.stats(), stats, "warm cycle must not change capacities");
+    }
+
+    #[test]
+    fn u32_pool_round_trips() {
+        let mut scratch = MatchScratch::new();
+        let mut bufs = scratch.take_u32_bufs(2);
+        bufs[0].extend(0..50);
+        bufs[1].extend(0..10);
+        scratch.give_u32_bufs(bufs);
+        let one = scratch.take_u32();
+        assert!(one.is_empty() && one.capacity() > 0);
+        scratch.give_u32(one);
+        assert_eq!(scratch.stats().pooled_u32_bufs, 2);
+    }
+
+    #[test]
+    fn dispenser_hands_each_slot_once_and_recovers_leftovers() {
+        let disp = SinkDispenser::new(vec![VecSink::default(), VecSink::default(), VecSink::default()]);
+        let _a = disp.take(0);
+        let _b = disp.take(2);
+        let rest: Vec<VecSink> = disp.into_remaining().collect();
+        assert_eq!(rest.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "sink slot claimed twice")]
+    fn dispenser_rejects_double_take() {
+        let disp = SinkDispenser::new(vec![VecSink::default()]);
+        let _a = disp.take(0);
+        let _b = disp.take(0);
+    }
+}

@@ -32,31 +32,91 @@
 //!   [`parallel_cutoff`](EngineBuilder::parallel_cutoff)).
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::algos::{bfm, gbm, itm, psbm, sbm, sbm_binary};
 use crate::algos::{Algo, MatchParams};
 use crate::core::ddim;
 pub use crate::core::ddim::{NdMode, NdPolicy, SweepDim};
 use crate::core::interval::Interval;
+use crate::core::scratch::{MatchScratch, ScratchStats};
 use crate::core::sink::{canonicalize, CountSink, FnSink, MatchSink, PairVec, VecSink};
 use crate::core::{Regions1D, RegionsNd};
-use crate::exec::ThreadPool;
+use crate::exec::{SortAlgo, ThreadPool};
 use crate::session::{DdmSession, SessionParams};
 use crate::sets::SetImpl;
 use crate::shard::{AnySession, ShardStrategy, ShardedMatcher, ShardedSession, SpacePartitioner};
 
-/// Execution context handed to every [`Matcher`] call: the worker pool
-/// and the number of workers the matcher may use for this call.
+/// Execution context handed to every [`Matcher`] call: the worker
+/// pool, the number of workers the matcher may use for this call, and
+/// (optionally) the engine's reusable [`MatchScratch`].
 pub struct ExecCtx<'a> {
     pub pool: &'a ThreadPool,
     pub nthreads: usize,
+    /// The engine's shared scratch, if any. Matchers access it through
+    /// [`scratch`](Self::scratch); contexts built with
+    /// [`new`](Self::new) (benches, custom drivers, per-stripe serial
+    /// calls) have none and degrade to per-call allocation.
+    scratch: Option<&'a Mutex<MatchScratch>>,
 }
 
 impl<'a> ExecCtx<'a> {
     pub fn new(pool: &'a ThreadPool, nthreads: usize) -> Self {
         assert!(nthreads >= 1, "ExecCtx needs at least one thread");
-        Self { pool, nthreads }
+        Self {
+            pool,
+            nthreads,
+            scratch: None,
+        }
+    }
+
+    /// A context that hands matchers the given scratch (what
+    /// [`DdmEngine::ctx`] builds).
+    pub fn with_scratch(
+        pool: &'a ThreadPool,
+        nthreads: usize,
+        scratch: &'a Mutex<MatchScratch>,
+    ) -> Self {
+        let mut ctx = Self::new(pool, nthreads);
+        ctx.scratch = Some(scratch);
+        ctx
+    }
+
+    /// Borrow the context's scratch for the duration of one match
+    /// call. Never blocks: without an attached scratch — or when it is
+    /// already held (another thread matching on the same engine, or a
+    /// reentrant native pipeline) — a fresh owned scratch is returned
+    /// instead, which simply restores per-call allocation.
+    pub fn scratch(&self) -> ScratchGuard<'a> {
+        match self.scratch.and_then(|m| m.try_lock().ok()) {
+            Some(guard) => ScratchGuard::Pooled(guard),
+            None => ScratchGuard::Owned(Box::new(MatchScratch::new())),
+        }
+    }
+}
+
+/// A borrowed-or-owned [`MatchScratch`] (see [`ExecCtx::scratch`]).
+pub enum ScratchGuard<'a> {
+    Pooled(std::sync::MutexGuard<'a, MatchScratch>),
+    Owned(Box<MatchScratch>),
+}
+
+impl std::ops::Deref for ScratchGuard<'_> {
+    type Target = MatchScratch;
+    fn deref(&self) -> &MatchScratch {
+        match self {
+            ScratchGuard::Pooled(g) => g,
+            ScratchGuard::Owned(s) => s,
+        }
+    }
+}
+
+impl std::ops::DerefMut for ScratchGuard<'_> {
+    fn deref_mut(&mut self) -> &mut MatchScratch {
+        match self {
+            ScratchGuard::Pooled(g) => g,
+            ScratchGuard::Owned(s) => s,
+        }
     }
 }
 
@@ -278,8 +338,16 @@ pub fn algo_matcher(algo: Algo, params: &MatchParams) -> Arc<dyn Matcher> {
         Algo::Bfm => Arc::new(bfm::BfmMatcher),
         Algo::Gbm => Arc::new(gbm::GbmMatcher::new(params.gbm()).with_nd(params.nd)),
         Algo::Itm => Arc::new(itm::ItmMatcher::default().with_nd(params.nd)),
-        Algo::Sbm => Arc::new(sbm::SbmMatcher::new(params.set_impl).with_nd(params.nd)),
-        Algo::Psbm => Arc::new(psbm::PsbmMatcher::new(params.set_impl).with_nd(params.nd)),
+        Algo::Sbm => Arc::new(
+            sbm::SbmMatcher::new(params.set_impl)
+                .with_nd(params.nd)
+                .with_sort(params.sort),
+        ),
+        Algo::Psbm => Arc::new(
+            psbm::PsbmMatcher::new(params.set_impl)
+                .with_nd(params.nd)
+                .with_sort(params.sort),
+        ),
         Algo::SbmBinary => Arc::new(sbm_binary::SbmBinaryMatcher),
     }
 }
@@ -413,6 +481,14 @@ impl EngineBuilder {
         self
     }
 
+    /// SBM/PSBM endpoint sort: compact-key radix (default) or the
+    /// merge-path comparison fallback (CLI `--sort radix|merge`;
+    /// `benches/abl_sort.rs` measures the two against each other).
+    pub fn sort_algo(mut self, sort: SortAlgo) -> Self {
+        self.params.sort = sort;
+        self
+    }
+
     // ---- session knobs (see crate::session) --------------------------------
 
     /// Backing store of session diff retention sets
@@ -435,6 +511,15 @@ impl EngineBuilder {
     /// [`SessionParams::parallel_cutoff`].
     pub fn parallel_cutoff(mut self, regions: usize) -> Self {
         self.session.parallel_cutoff = regions;
+        self
+    }
+
+    /// Reuse each session's per-epoch scratch buffers across commits
+    /// (default `true`; `false` restores per-epoch allocation — the
+    /// cold baseline `benches/abl_session.rs` measures against). See
+    /// [`SessionParams::reuse_scratch`].
+    pub fn session_scratch_reuse(mut self, reuse: bool) -> Self {
+        self.session.reuse_scratch = reuse;
         self
     }
 
@@ -530,6 +615,7 @@ impl EngineBuilder {
             params: self.params,
             session: self.session,
             shard: self.shard,
+            scratch: Arc::new(Mutex::new(MatchScratch::new())),
         }
     }
 }
@@ -564,6 +650,12 @@ pub struct DdmEngine {
     params: MatchParams,
     session: SessionParams,
     shard: ShardParams,
+    /// Reusable match scratch attached to every [`ExecCtx`] this
+    /// engine creates: back-to-back match calls reuse the endpoint
+    /// array, radix buffers, GBM binning block and per-worker pair
+    /// sinks (shared across clones, like the pool; concurrent calls
+    /// degrade to per-call allocation via `try_lock`, never block).
+    scratch: Arc<Mutex<MatchScratch>>,
 }
 
 impl DdmEngine {
@@ -571,9 +663,17 @@ impl DdmEngine {
         EngineBuilder::new()
     }
 
-    /// The execution context handed to matcher calls.
+    /// The execution context handed to matcher calls (carries the
+    /// engine's reusable scratch).
     pub fn ctx(&self) -> ExecCtx<'_> {
-        ExecCtx::new(self.pool.as_ref(), self.nthreads)
+        ExecCtx::with_scratch(self.pool.as_ref(), self.nthreads, &self.scratch)
+    }
+
+    /// Capacity snapshot of the engine's match scratch — equal
+    /// snapshots around a warm call mean the call allocated nothing
+    /// from the reusable buffers (asserted by `benches/abl_sort.rs`).
+    pub fn scratch_stats(&self) -> ScratchStats {
+        self.scratch.lock().map(|s| s.stats()).unwrap_or_default()
     }
 
     pub fn nthreads(&self) -> usize {

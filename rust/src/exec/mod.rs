@@ -12,6 +12,9 @@
 //!   (`#pragma omp for schedule(static|dynamic)`).
 //! * [`psort`] — parallel merge sort (the `-D_GLIBCXX_PARALLEL`
 //!   `std::sort` replacement).
+//! * [`radix`] — parallel LSD radix sort on compact `u64` keys (the
+//!   sort-phase hot path of SBM/PSBM; `psort` stays as the
+//!   property-tested comparison fallback).
 //! * [`scan`] — sequential and two-level parallel prefix scans
 //!   (paper Fig. 7 / Algorithm 7 master step).
 //! * [`lflist`] — a lock-free append-only list (the paper's §5 ad-hoc
@@ -21,9 +24,20 @@ pub mod lflist;
 pub mod pfor;
 pub mod pool;
 pub mod psort;
+pub mod radix;
 pub mod scan;
 
 pub use pool::ThreadPool;
+pub use radix::{RadixScratch, SortAlgo};
+
+/// Raw-pointer wrapper so disjoint index ranges can cross a parallel
+/// region boundary (the crate's one shared spelling — psort, scan,
+/// radix, PSBM's endpoint builder and GBM's binning all partition
+/// their index ranges disjointly and document the per-site SAFETY).
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
 
 /// Total order for `f64` keys (sign-magnitude flip). NaNs sort above
 /// +inf; workload code never produces them, but the order stays total.

@@ -12,13 +12,7 @@
 
 use super::pfor::chunks;
 use super::pool::ThreadPool;
-
-/// Raw-pointer wrapper so disjoint `&mut` chunks can cross the region
-/// boundary. SAFETY: every use partitions index ranges disjointly.
-#[derive(Clone, Copy)]
-struct SendPtr<T>(*mut T);
-unsafe impl<T> Send for SendPtr<T> {}
-unsafe impl<T> Sync for SendPtr<T> {}
+use super::SendPtr;
 
 /// Sort `data` by `key` using up to `nthreads` workers of `pool`.
 pub fn par_sort_by_key<T, K, F>(
@@ -65,33 +59,73 @@ pub fn par_sort_by_key<T, K, F>(
             })
             .collect();
 
-        // Merge-path task decomposition: split every pair into enough
-        // sub-merges that all workers stay busy even in the last round
-        // (1 pair). Each task copies a disjoint output range.
-        let per_pair = nthreads.div_ceil(pairs.len());
+        // Merge-path task decomposition, split by TOTAL element count:
+        // worker w's share of this round is the global output ranks
+        // [n·w/W, n·(w+1)/W), and every pair is cut exactly at the
+        // worker boundaries that fall inside it. Each worker therefore
+        // copies a contiguous ≈n/W elements even in the last round
+        // (1 pair) and when the sub-merge count is not a multiple of
+        // the worker count — the old round-robin-by-task-index
+        // distribution gave some workers a whole extra sub-merge
+        // there, capping the round at ~2x the ideal span.
+        let total_all: usize = pairs.iter().map(|(a, b)| a.len() + b.len()).sum();
+        let workers = nthreads.min(total_all).max(1);
         let mut tasks: Vec<(std::ops::Range<usize>, std::ops::Range<usize>, usize)> =
-            Vec::with_capacity(pairs.len() * per_pair);
+            Vec::with_capacity(pairs.len() + workers);
+        // Owner worker per task (non-decreasing: tasks are generated in
+        // global output-rank order and never straddle a boundary).
+        let mut owners: Vec<usize> = Vec::with_capacity(pairs.len() + workers);
         {
             let src: &[T] = if src_is_data { &*data } else { &aux };
+            let mut pair_start = 0usize; // global rank of this pair's first output
+            // Owner of the task starting at global rank s: the worker
+            // whose range [n·w/W, n·(w+1)/W) contains s. Task starts
+            // are non-decreasing, so a monotone cursor resolves it
+            // exactly (a floor(s·W/n) re-derivation is NOT the inverse
+            // of the boundary formula and hands boundary-started tasks
+            // to the previous worker).
+            let mut ow = 0usize;
+            let mut owner_of = |s: usize| {
+                while ow + 1 < workers && total_all * (ow + 1) / workers <= s {
+                    ow += 1;
+                }
+                ow
+            };
             for (a, b) in &pairs {
-                let total = a.len() + b.len();
+                let len = a.len() + b.len();
+                if len == 0 {
+                    continue;
+                }
                 let mut prev = (0usize, 0usize); // (i into a, j into b)
-                for t in 1..=per_pair {
-                    let r = total * t / per_pair;
-                    let cut = if t == per_pair {
-                        (a.len(), b.len())
-                    } else {
-                        merge_path_split(&src[a.clone()], &src[b.clone()], r, &key)
-                    };
+                let mut prev_rank = 0usize;
+                for w in 1..workers {
+                    let r = total_all * w / workers;
+                    if r <= pair_start || r >= pair_start + len {
+                        continue; // boundary not inside this pair
+                    }
+                    let cut =
+                        merge_path_split(&src[a.clone()], &src[b.clone()], r - pair_start, &key);
                     if cut != prev {
+                        owners.push(owner_of(pair_start + prev_rank));
                         tasks.push((
                             a.start + prev.0..a.start + cut.0,
                             b.start + prev.1..b.start + cut.1,
                             a.start + prev.0 + prev.1,
                         ));
                         prev = cut;
+                        prev_rank = r - pair_start;
                     }
                 }
+                let end = (a.len(), b.len());
+                if end != prev {
+                    owners.push(owner_of(pair_start + prev_rank));
+                    tasks.push((
+                        a.start + prev.0..a.start + end.0,
+                        b.start + prev.1..b.start + end.1,
+                        a.start + prev.0 + prev.1,
+                    ));
+                }
+                pair_start += len;
             }
         }
 
@@ -103,19 +137,19 @@ pub fn par_sort_by_key<T, K, F>(
             };
             let key = &key;
             let tasks = &tasks;
-            let workers = tasks.len().min(nthreads);
+            let owners = &owners;
             pool.run(workers, |p| {
                 let (src_ptr, dst_ptr) = (src_ptr, dst_ptr); // capture wrappers
-                // Round-robin distribution of sub-merges over workers.
-                let mut i = p;
-                while i < tasks.len() {
+                // This worker's contiguous task group (owners sorted).
+                let s = owners.partition_point(|&o| o < p);
+                let e = owners.partition_point(|&o| o <= p);
+                for i in s..e {
                     let (a, b, out) = tasks[i].clone();
                     // SAFETY: task output ranges are disjoint; src/dst
                     // are distinct buffers.
                     unsafe {
                         merge_into(src_ptr.0, dst_ptr.0, a, b, out, key);
                     }
-                    i += workers;
                 }
             });
         }
@@ -273,6 +307,25 @@ mod tests {
             let mut v = base.clone();
             par_sort_by_key(&pool, p, &mut v, |&x| x);
             assert_eq!(v, one, "p={p}");
+        }
+    }
+
+    /// Adversarial run/worker shapes for the element-count sub-merge
+    /// split: odd chunk counts leave a lone run in the pairing, and
+    /// worker counts that don't divide the sub-merge count used to
+    /// idle workers under the old round-robin-by-task distribution.
+    #[test]
+    fn last_round_uneven_worker_counts() {
+        let pool = ThreadPool::new(7);
+        let mut rng = Rng::new(0xBA1A);
+        for &p in &[3usize, 5, 6, 7] {
+            for &n in &[4 * p, 4 * p + 1, 997, 10_001, 32 * 1024 + 17] {
+                let mut data: Vec<u64> = (0..n).map(|_| rng.next_u64() % 512).collect();
+                let mut want = data.clone();
+                want.sort_unstable();
+                par_sort_by_key(&pool, p, &mut data, |&x| x);
+                assert_eq!(data, want, "n={n} p={p}");
+            }
         }
     }
 

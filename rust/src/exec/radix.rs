@@ -1,0 +1,461 @@
+//! Parallel LSD radix sort on compact `u64` keys — the sort-phase
+//! replacement for the comparison-based merge path of
+//! [`super::psort`].
+//!
+//! The SBM/PSBM pipeline is dominated by sorting the `2(n+m)` endpoint
+//! array (the companion paper "Parallel Sort-Based Matching for DDM"
+//! measures the sort phase capping SBM speedup). The merge path pays a
+//! `u128` comparison per element per merge level; this module sorts by
+//! a single `u64` word in at most eight 256-bucket passes, each pass a
+//! per-worker histogram, an `O(buckets)` master prefix sum
+//! ([`crate::exec::scan::seq_exclusive_scan_in_place`]) and a stable
+//! scatter into a ping-pong buffer. Passes whose digit is constant
+//! across the whole array (the common case for the high bytes of
+//! bounded coordinates) are skipped after the histogram alone.
+//!
+//! **Stability is the tie-break.** LSD radix is stable by
+//! construction: per pass, bucket offsets are laid out bucket-major in
+//! worker order and every worker scatters its contiguous chunk in
+//! order, so equal keys keep their input order — independent of the
+//! worker count. Callers that need a secondary ordering (the endpoint
+//! array's upper-before-lower rule, [`crate::core::endpoint`]) encode
+//! it in the *input order* instead of widening the key.
+//!
+//! Buffers (`aux` ping-pong and the histogram block) are caller-owned
+//! ([`RadixScratch`] usually lives in a
+//! [`MatchScratch`](crate::core::scratch::MatchScratch)), so repeated
+//! sorts of same-sized arrays allocate nothing.
+
+use super::pfor::chunks;
+use super::pool::ThreadPool;
+use super::scan::seq_exclusive_scan_in_place;
+use super::SendPtr;
+
+/// Buckets per pass (8-bit digits).
+pub const RADIX_BUCKETS: usize = 256;
+
+/// Below this length a stable insertion sort beats any radix pass.
+const INSERTION_CUTOFF: usize = 64;
+
+/// Serial cutoff: below this length the parallel entry point runs the
+/// whole sort on the calling worker (histogram + scatter regions would
+/// cost more in fork-join than they save).
+const PAR_CUTOFF: usize = 8 * 1024;
+
+/// Which endpoint-sort implementation a matcher runs — the radix path
+/// of this module (default) or the comparison merge path of
+/// [`super::psort`], kept as the property-tested fallback and the
+/// `--sort merge` A/B arm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SortAlgo {
+    /// Compact-key LSD radix sort ([`par_radix_sort_by_key`]).
+    #[default]
+    Radix,
+    /// Merge-path parallel mergesort ([`super::psort::par_sort_by_key`]).
+    Merge,
+}
+
+impl SortAlgo {
+    pub fn name(self) -> &'static str {
+        match self {
+            SortAlgo::Radix => "radix",
+            SortAlgo::Merge => "merge",
+        }
+    }
+}
+
+impl std::str::FromStr for SortAlgo {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let t = s.trim();
+        if t.eq_ignore_ascii_case("radix") {
+            Ok(SortAlgo::Radix)
+        } else if t.eq_ignore_ascii_case("merge") || t.eq_ignore_ascii_case("mergesort") {
+            Ok(SortAlgo::Merge)
+        } else {
+            Err(format!("unknown sort algorithm '{t}' (valid: radix, merge)"))
+        }
+    }
+}
+
+/// Reusable histogram/offset block for the radix passes: one
+/// 256-counter segment per worker, transformed in place into scatter
+/// offsets each pass. Owned by the caller so steady-state sorts
+/// allocate nothing.
+#[derive(Debug, Default)]
+pub struct RadixScratch {
+    counts: Vec<u32>,
+}
+
+impl RadixScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current capacity of the counter block (allocation-free warm
+    /// paths assert this stops growing after the first call).
+    pub fn counts_capacity(&self) -> usize {
+        self.counts.capacity()
+    }
+}
+
+/// Stable insertion sort by key (the small-array cutoff shared by the
+/// serial and parallel entry points, so every path yields the
+/// identical order).
+fn insertion_sort_by_key<T, F>(data: &mut [T], key: &F)
+where
+    T: Copy,
+    F: Fn(&T) -> u64,
+{
+    for i in 1..data.len() {
+        let x = data[i];
+        let k = key(&x);
+        let mut j = i;
+        while j > 0 && key(&data[j - 1]) > k {
+            data[j] = data[j - 1];
+            j -= 1;
+        }
+        data[j] = x;
+    }
+}
+
+/// Serial stable LSD radix sort by a `u64` key. Exactly the order
+/// [`par_radix_sort_by_key`] produces (the parallel form is
+/// worker-count-invariant), with `aux`/`scratch` reused across calls.
+pub fn radix_sort_by_key<T, F>(
+    data: &mut [T],
+    aux: &mut Vec<T>,
+    scratch: &mut RadixScratch,
+    key: F,
+) where
+    T: Copy + Default,
+    F: Fn(&T) -> u64,
+{
+    let n = data.len();
+    if n < INSERTION_CUTOFF {
+        insertion_sort_by_key(data, &key);
+        return;
+    }
+    assert!(n <= u32::MAX as usize, "radix sort offsets are u32");
+    if aux.len() < n {
+        aux.resize(n, T::default());
+    }
+    if scratch.counts.len() < RADIX_BUCKETS {
+        scratch.counts.resize(RADIX_BUCKETS, 0);
+    }
+    let counts = &mut scratch.counts[..RADIX_BUCKETS];
+    let mut src_is_data = true;
+    for pass in 0..8 {
+        let shift = pass * 8;
+        counts.fill(0);
+        {
+            let src: &[T] = if src_is_data { &*data } else { &aux[..n] };
+            for x in src {
+                counts[(key(x) >> shift) as usize & 0xFF] += 1;
+            }
+        }
+        if counts.iter().filter(|&&c| c != 0).count() <= 1 {
+            continue; // constant digit: nothing to move
+        }
+        seq_exclusive_scan_in_place(counts);
+        // Raw pointers so src/dst can swap roles across passes without
+        // re-borrowing; they always name distinct buffers.
+        let (src_ptr, dst_ptr) = if src_is_data {
+            (data.as_ptr(), aux.as_mut_ptr())
+        } else {
+            (aux.as_ptr(), data.as_mut_ptr())
+        };
+        // SAFETY: src and dst are distinct buffers of length ≥ n; each
+        // output slot is written exactly once (offsets partition 0..n).
+        unsafe {
+            for i in 0..n {
+                let x = *src_ptr.add(i);
+                let v = (key(&x) >> shift) as usize & 0xFF;
+                *dst_ptr.add(counts[v] as usize) = x;
+                counts[v] += 1;
+            }
+        }
+        src_is_data = !src_is_data;
+    }
+    if !src_is_data {
+        data.copy_from_slice(&aux[..n]);
+    }
+}
+
+/// Parallel stable LSD radix sort by a `u64` key on up to `nthreads`
+/// workers of `pool`. Per pass: per-worker 256-bucket histograms over
+/// contiguous chunks, a master prefix sum laying the offsets out
+/// bucket-major in worker order, and a parallel stable scatter into
+/// the ping-pong buffer. Output order is identical for every
+/// `nthreads` (including 1) and identical to [`radix_sort_by_key`].
+pub fn par_radix_sort_by_key<T, F>(
+    pool: &ThreadPool,
+    nthreads: usize,
+    data: &mut [T],
+    aux: &mut Vec<T>,
+    scratch: &mut RadixScratch,
+    key: F,
+) where
+    T: Copy + Default + Send + Sync,
+    F: Fn(&T) -> u64 + Sync,
+{
+    let n = data.len();
+    if nthreads <= 1 || n < PAR_CUTOFF {
+        radix_sort_by_key(data, aux, scratch, key);
+        return;
+    }
+    let workers = nthreads;
+    assert!(n <= u32::MAX as usize, "radix sort offsets are u32");
+    if aux.len() < n {
+        aux.resize(n, T::default());
+    }
+    if scratch.counts.len() < workers * RADIX_BUCKETS {
+        scratch.counts.resize(workers * RADIX_BUCKETS, 0);
+    }
+    let counts: &mut [u32] = &mut scratch.counts[..workers * RADIX_BUCKETS];
+    let bounds = chunks(n, workers);
+
+    let mut src_is_data = true;
+    for pass in 0..8 {
+        let shift = pass * 8;
+
+        // ---- per-worker histograms (each worker owns one segment) ----
+        {
+            let src_ptr = if src_is_data {
+                SendPtr(data.as_mut_ptr())
+            } else {
+                SendPtr(aux.as_mut_ptr())
+            };
+            let counts_ptr = SendPtr(counts.as_mut_ptr());
+            let bounds = &bounds;
+            let key = &key;
+            pool.run(workers, |p| {
+                let (src_ptr, counts_ptr) = (src_ptr, counts_ptr);
+                // SAFETY: worker p touches only counts segment p and
+                // reads only its own chunk of src.
+                let seg = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        counts_ptr.0.add(p * RADIX_BUCKETS),
+                        RADIX_BUCKETS,
+                    )
+                };
+                seg.fill(0);
+                let r = bounds[p].clone();
+                let chunk = unsafe { std::slice::from_raw_parts(src_ptr.0.add(r.start), r.len()) };
+                for x in chunk {
+                    seg[(key(x) >> shift) as usize & 0xFF] += 1;
+                }
+            });
+        }
+
+        // ---- master: bucket totals, skip check, offsets ---------------
+        let mut totals = [0u32; RADIX_BUCKETS];
+        for p in 0..workers {
+            let seg = &counts[p * RADIX_BUCKETS..(p + 1) * RADIX_BUCKETS];
+            for (t, &c) in totals.iter_mut().zip(seg) {
+                *t += c;
+            }
+        }
+        if totals.iter().filter(|&&c| c != 0).count() <= 1 {
+            continue; // constant digit: nothing to move
+        }
+        seq_exclusive_scan_in_place(&mut totals);
+        // Offsets bucket-major, worker-minor: worker p's slice of
+        // bucket v starts after every lower bucket and after workers
+        // 0..p of bucket v — the layout that makes the scatter stable.
+        for v in 0..RADIX_BUCKETS {
+            let mut at = totals[v];
+            for p in 0..workers {
+                let c = counts[p * RADIX_BUCKETS + v];
+                counts[p * RADIX_BUCKETS + v] = at;
+                at += c;
+            }
+        }
+
+        // ---- parallel stable scatter ----------------------------------
+        {
+            let (src_ptr, dst_ptr) = if src_is_data {
+                (SendPtr(data.as_mut_ptr()), SendPtr(aux.as_mut_ptr()))
+            } else {
+                (SendPtr(aux.as_mut_ptr()), SendPtr(data.as_mut_ptr()))
+            };
+            let counts_ptr = SendPtr(counts.as_mut_ptr());
+            let bounds = &bounds;
+            let key = &key;
+            pool.run(workers, |p| {
+                let (src_ptr, dst_ptr, counts_ptr) = (src_ptr, dst_ptr, counts_ptr);
+                // SAFETY: worker p owns counts segment p; the offset
+                // table assigns every (bucket, worker) pair a disjoint
+                // output range, so dst writes never alias.
+                let seg = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        counts_ptr.0.add(p * RADIX_BUCKETS),
+                        RADIX_BUCKETS,
+                    )
+                };
+                let r = bounds[p].clone();
+                let chunk = unsafe { std::slice::from_raw_parts(src_ptr.0.add(r.start), r.len()) };
+                for x in chunk {
+                    let v = (key(x) >> shift) as usize & 0xFF;
+                    unsafe { *dst_ptr.0.add(seg[v] as usize) = *x };
+                    seg[v] += 1;
+                }
+            });
+        }
+        src_is_data = !src_is_data;
+    }
+
+    if !src_is_data {
+        // Result landed in aux: parallel copy back.
+        let src_ptr = SendPtr(aux.as_mut_ptr());
+        let dst_ptr = SendPtr(data.as_mut_ptr());
+        let bounds = &bounds;
+        pool.run(workers, |p| {
+            let (src_ptr, dst_ptr) = (src_ptr, dst_ptr);
+            let r = bounds[p].clone();
+            // SAFETY: disjoint chunks of distinct buffers.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    src_ptr.0.add(r.start) as *const T,
+                    dst_ptr.0.add(r.start),
+                    r.len(),
+                );
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn sort_both(n: usize, seed: u64, nthreads: usize, pool: &ThreadPool) {
+        let mut rng = Rng::new(seed);
+        // (key, payload): payload records input order so stability is
+        // observable.
+        let base: Vec<(u64, u32)> = (0..n)
+            .map(|i| (rng.next_u64() % 97, i as u32))
+            .collect();
+        let mut want = base.clone();
+        want.sort_by_key(|&(k, _)| k); // std stable sort = the oracle
+        let mut got = base.clone();
+        let mut aux = Vec::new();
+        let mut scratch = RadixScratch::new();
+        par_radix_sort_by_key(pool, nthreads, &mut got, &mut aux, &mut scratch, |&(k, _)| k);
+        assert_eq!(got, want, "n={n} p={nthreads}");
+    }
+
+    #[test]
+    fn stable_and_sorted_across_sizes_and_thread_counts() {
+        let pool = ThreadPool::new(7);
+        for &p in &[1usize, 2, 3, 4, 8] {
+            for &n in &[0usize, 1, 2, 63, 64, 100, 1000, 9000, 40_000] {
+                sort_both(n, 0x0AD ^ (n as u64) ^ ((p as u64) << 32), p, &pool);
+            }
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_orders_are_identical() {
+        let pool = ThreadPool::new(7);
+        let mut rng = Rng::new(0x5EED);
+        let base: Vec<(u64, u32)> = (0..30_011)
+            .map(|i| (rng.next_u64() % 13, i as u32))
+            .collect();
+        let mut serial = base.clone();
+        let mut aux = Vec::new();
+        let mut scratch = RadixScratch::new();
+        radix_sort_by_key(&mut serial, &mut aux, &mut scratch, |&(k, _)| k);
+        for p in [2, 4, 8] {
+            let mut par = base.clone();
+            let mut aux = Vec::new();
+            let mut scratch = RadixScratch::new();
+            par_radix_sort_by_key(&pool, p, &mut par, &mut aux, &mut scratch, |&(k, _)| k);
+            assert_eq!(par, serial, "p={p}");
+        }
+    }
+
+    #[test]
+    fn full_width_keys_and_extremes() {
+        let pool = ThreadPool::new(3);
+        let mut rng = Rng::new(0xF00D);
+        let mut data: Vec<u64> = (0..20_000).map(|_| rng.next_u64()).collect();
+        data.extend([0, u64::MAX, 1, u64::MAX - 1, 1 << 63]);
+        let mut want = data.clone();
+        want.sort_unstable();
+        let mut aux = Vec::new();
+        let mut scratch = RadixScratch::new();
+        par_radix_sort_by_key(&pool, 4, &mut data, &mut aux, &mut scratch, |&x| x);
+        assert_eq!(data, want);
+    }
+
+    #[test]
+    fn all_equal_keys_keep_input_order() {
+        let pool = ThreadPool::new(3);
+        let base: Vec<(u64, u32)> = (0..10_000).map(|i| (7, i as u32)).collect();
+        let mut data = base.clone();
+        let mut aux = Vec::new();
+        let mut scratch = RadixScratch::new();
+        par_radix_sort_by_key(&pool, 4, &mut data, &mut aux, &mut scratch, |&(k, _)| k);
+        assert_eq!(data, base, "constant keys must not move");
+    }
+
+    /// Property-tested fallback agreement: where keys are distinct the
+    /// comparison merge path (`psort`) must produce the identical
+    /// array; where they collide, radix keeps input order (stability).
+    #[test]
+    fn agrees_with_psort_fallback_property() {
+        let pool = ThreadPool::new(5);
+        crate::bench::prop::prop_check("radix-vs-psort", 0x5087, |rng| {
+            let n = rng.below(5000) as usize;
+            let spread = 1 + rng.below(1 << 40);
+            // Distinct composite: (key, unique id) — both sorts agree
+            // on the total order.
+            let base: Vec<(u64, u32)> = (0..n)
+                .map(|i| (rng.next_u64() % spread, i as u32))
+                .collect();
+            let p = 1 + rng.below(6) as usize;
+            let mut radix = base.clone();
+            let mut aux = Vec::new();
+            let mut scratch = RadixScratch::new();
+            // Radix on the key alone: ties broken by input order, which
+            // here equals ascending id.
+            par_radix_sort_by_key(&pool, p, &mut radix, &mut aux, &mut scratch, |&(k, _)| k);
+            let mut merge = base.clone();
+            crate::exec::psort::par_sort_by_key(&pool, p, &mut merge, |&(k, id)| {
+                ((k as u128) << 32) | id as u128
+            });
+            crate::bench::prop::expect_eq(&radix, &merge, "radix vs merge order")
+        });
+    }
+
+    #[test]
+    fn scratch_buffers_stop_growing_after_first_call() {
+        let pool = ThreadPool::new(3);
+        let mut rng = Rng::new(0xCAFE);
+        let base: Vec<u64> = (0..50_000).map(|_| rng.next_u64()).collect();
+        let mut aux = Vec::new();
+        let mut scratch = RadixScratch::new();
+        let mut data = base.clone();
+        par_radix_sort_by_key(&pool, 4, &mut data, &mut aux, &mut scratch, |&x| x);
+        let (aux_cap, counts_cap) = (aux.capacity(), scratch.counts_capacity());
+        for _ in 0..3 {
+            let mut data = base.clone();
+            par_radix_sort_by_key(&pool, 4, &mut data, &mut aux, &mut scratch, |&x| x);
+            assert_eq!(aux.capacity(), aux_cap, "aux must not grow on warm calls");
+            assert_eq!(scratch.counts_capacity(), counts_cap, "counts must not grow");
+        }
+    }
+
+    #[test]
+    fn sort_algo_parses() {
+        assert_eq!("radix".parse::<SortAlgo>().unwrap(), SortAlgo::Radix);
+        assert_eq!("Merge".parse::<SortAlgo>().unwrap(), SortAlgo::Merge);
+        assert_eq!("mergesort".parse::<SortAlgo>().unwrap(), SortAlgo::Merge);
+        assert!("quick".parse::<SortAlgo>().is_err());
+        assert_eq!(SortAlgo::default(), SortAlgo::Radix);
+        assert_eq!(SortAlgo::Radix.name(), "radix");
+        assert_eq!(SortAlgo::Merge.name(), "merge");
+    }
+}

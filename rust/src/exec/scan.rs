@@ -14,6 +14,7 @@
 
 use super::pfor::chunks;
 use super::pool::ThreadPool;
+use super::SendPtr;
 
 /// Exclusive scan: `out[i] = identity ⊕ x₀ ⊕ … ⊕ xᵢ₋₁`.
 pub fn seq_exclusive_scan<T, F>(items: &[T], identity: T, op: F) -> Vec<T>
@@ -28,6 +29,21 @@ where
         acc = op(&acc, x);
     }
     out
+}
+
+/// In-place exclusive prefix sum over counters, returning the total:
+/// `data[i] ← data[0] + … + data[i-1]`. The allocation-free master
+/// step of the counting-sort machinery — [`crate::exec::radix`]'s
+/// bucket starts and GBM's cell starts both run through it, so the
+/// scatter hot paths never build a fresh offsets vector.
+pub fn seq_exclusive_scan_in_place(data: &mut [u32]) -> u32 {
+    let mut acc = 0u32;
+    for x in data.iter_mut() {
+        let c = *x;
+        *x = acc;
+        acc += c;
+    }
+    acc
 }
 
 /// Inclusive scan: `out[i] = x₀ ⊕ … ⊕ xᵢ`.
@@ -69,11 +85,6 @@ pub fn par_inclusive_scan<T, F>(
         }
         return;
     }
-
-    #[derive(Clone, Copy)]
-    struct SendPtr<T>(*mut T);
-    unsafe impl<T> Send for SendPtr<T> {}
-    unsafe impl<T> Sync for SendPtr<T> {}
 
     let bounds = chunks(n, nthreads);
     let base = SendPtr(data.as_mut_ptr());
@@ -131,6 +142,15 @@ mod tests {
         assert_eq!(seq_exclusive_scan(&xs, 0, |a, b| a + b), vec![0, 1, 3, 6]);
         let empty: [i64; 0] = [];
         assert!(seq_exclusive_scan(&empty, 0, |a, b| a + b).is_empty());
+    }
+
+    #[test]
+    fn in_place_exclusive_scan_matches_definition() {
+        let mut xs = [1u32, 2, 3, 4];
+        assert_eq!(seq_exclusive_scan_in_place(&mut xs), 10);
+        assert_eq!(xs, [0, 1, 3, 6]);
+        let mut empty: [u32; 0] = [];
+        assert_eq!(seq_exclusive_scan_in_place(&mut empty), 0);
     }
 
     #[test]

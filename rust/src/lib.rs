@@ -124,6 +124,27 @@
 //! [`shard::ShardedMatcher`]. `benches/abl_shard.rs` sweeps shard
 //! counts × churn rates against the unsharded session.
 //!
+//! ## Scratch ownership: the zero-allocation steady state
+//!
+//! Repeated matching reuses buffers instead of reallocating them
+//! ([`core::scratch::MatchScratch`]): every [`engine::DdmEngine`]
+//! owns one match scratch (endpoint array, radix sort buffers, GBM
+//! binning block, per-worker pair sinks) shared by all its match
+//! calls — back-to-back `match_nd`/`count_nd` calls on one engine
+//! allocate nothing after the first — and every
+//! [`session::DdmSession`] owns its own for the per-epoch recompute
+//! and diff buffers (sharded sessions get per-shard scratch, one per
+//! inner session). Engine scratch is attached through
+//! [`engine::ExecCtx::scratch`] with `try_lock` semantics: concurrent
+//! match calls on a shared engine degrade to per-call allocation,
+//! never block. SBM/PSBM sort their endpoints by a compact `u64` key
+//! with a parallel LSD radix sort ([`exec::radix`]; select the
+//! merge-path comparison fallback with
+//! [`engine::EngineBuilder::sort_algo`] or `--sort merge`).
+//! `benches/abl_sort.rs` measures both and asserts warm calls are
+//! allocation-free; `ddm match --repeat R` shows cold vs warm from
+//! the CLI.
+//!
 //! The crate contains:
 //!
 //! * [`engine`] — the unified matching API: the [`engine::Matcher`]
@@ -137,12 +158,15 @@
 //!   (uniform or sample-balanced), [`shard::ShardedSession`] with
 //!   per-shard sessions and merged deduplicated diffs,
 //!   [`shard::ShardedMatcher`] for the static path.
-//! * [`core`] — intervals, d-rectangles, regions, and the d-dimensional
-//!   pipeline: native sweep-and-verify plus the paper-§2 reduction
-//!   fallback ([`core::ddim`]).
+//! * [`core`] — intervals, d-rectangles, regions, the compact-key
+//!   endpoint encoding ([`core::endpoint`]), the reusable match
+//!   scratch ([`core::scratch`]), and the d-dimensional pipeline:
+//!   native sweep-and-verify plus the paper-§2 reduction fallback
+//!   ([`core::ddim`]).
 //! * [`exec`] — the shared-memory parallel runtime the paper builds on
 //!   OpenMP for: a thread pool, chunked `parallel_for`, parallel merge
-//!   sort and the two-level parallel prefix scan of paper Fig. 7.
+//!   sort, the compact-key parallel radix sort ([`exec::radix`]) and
+//!   the two-level parallel prefix scan of paper Fig. 7.
 //! * [`sets`] — pluggable active-set data structures (the paper's §5
 //!   `std::set` / bit-vector / hash study).
 //! * [`algos`] — the matching algorithms: BFM (Alg. 2), GBM (Alg. 3),

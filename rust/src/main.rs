@@ -10,6 +10,8 @@
 //!
 //! Examples:
 //!   ddm match --algo psbm --n 1e6 --alpha 100 --threads 8 --set bit
+//!   ddm match --algo psbm --n 1e6 --repeat 5 --sort radix   # cold vs warm
+//!   ddm match --algo psbm --n 1e6 --sort merge              # A/B the sort
 //!   ddm match --algo gbm --workload koln --scale 0.1 --ncells 3000
 //!   ddm replay --n 50k --epochs 10 --churn 0.05 --mode session --verify
 //!   ddm replay --mode sharded --shards 8 --hotspot 0.8 --verify
@@ -24,6 +26,7 @@ use ddm::bench::{rss, sysinfo};
 use ddm::cli::{die, Args};
 use ddm::coordinator::{Coordinator, CoordinatorConfig};
 use ddm::engine::{DdmEngine, NdMode, SweepDim};
+use ddm::exec::SortAlgo;
 use ddm::hla::{RegionKind, RegionSpec, RoutingSpace};
 use ddm::sets::SetImpl;
 use ddm::workload::koln::{koln_workload, KolnParams};
@@ -61,7 +64,9 @@ fn load_workload(args: &Args) -> (ddm::core::Regions1D, ddm::core::Regions1D, St
 /// Run one matching job: 1-D by default; `--d N` (or `--alphas
 /// a0,a1,…`) switches to a d-dimensional workload and the N-D pipeline
 /// (`--nd-mode native|reduce`, `--sweep-dim auto|k`, `--rho c` for the
-/// correlated generator).
+/// correlated generator). `--sort radix|merge` A/Bs the endpoint sort;
+/// `--repeat R` re-runs the match R times and reports cold vs warm
+/// timings (warm calls reuse the engine's match scratch).
 fn cmd_match(args: &Args) {
     let threads: usize = args.opt("threads", 4usize);
     let nd_mode: NdMode = args
@@ -72,6 +77,14 @@ fn cmd_match(args: &Args) {
         .try_opt("sweep-dim")
         .unwrap_or_else(|e| die(&e))
         .unwrap_or_default();
+    let sort: SortAlgo = args
+        .try_opt("sort")
+        .unwrap_or_else(|e| die(&e))
+        .unwrap_or_default();
+    let repeat: usize = args.opt("repeat", 1usize);
+    if repeat == 0 {
+        die("--repeat=0: need at least one run");
+    }
     let engine = DdmEngine::builder()
         .algo_str(args.get("algo").unwrap_or("psbm"))
         .unwrap_or_else(|e| die(&e))
@@ -80,6 +93,7 @@ fn cmd_match(args: &Args) {
         .shards(args.opt("shards", 1usize))
         .nd_mode(nd_mode)
         .sweep_dim(sweep)
+        .sort_algo(sort)
         .set_impl(
             args.get("set")
                 .map(|s| s.parse::<SetImpl>().unwrap_or_else(|e| die(&e)))
@@ -111,41 +125,62 @@ fn cmd_match(args: &Args) {
             None => nd_alpha_workload(seed, &p),
         };
         println!(
-            "match: algo={} threads={} d={} nd-mode={:?} sweep-dim={:?} α={:?} N={}",
+            "match: algo={} threads={} d={} nd-mode={:?} sweep-dim={:?} sort={} α={:?} N={}",
             engine.algo_name(),
             threads,
             p.d(),
             nd_mode,
             sweep,
+            sort.name(),
             p.alphas,
             p.n_total
         );
-        let t0 = Instant::now();
-        let k = engine.count_nd(&subs, &upds);
-        let dt = t0.elapsed();
-        println!(
-            "K={k} intersections in {} (peak RSS {})",
-            ddm::bench::stats::fmt_secs(dt.as_secs_f64()),
-            rss::peak_rss_bytes().map(rss::fmt_bytes).unwrap_or_default()
-        );
+        report_counts(repeat, || engine.count_nd(&subs, &upds));
         return;
     }
 
     let (subs, upds, desc) = load_workload(args);
     println!(
-        "match: algo={} threads={} set={} workload=[{}]",
+        "match: algo={} threads={} set={} sort={} workload=[{}]",
         engine.algo_name(),
         threads,
         engine.params().set_impl.name(),
+        sort.name(),
         desc
     );
+    report_counts(repeat, || engine.count_1d(&subs, &upds));
+}
+
+/// Run one counting job `repeat` times and report the cold (first)
+/// and best-warm timings — warm runs reuse the engine's match
+/// scratch, so the gap is the allocation + buffer-growth cost the
+/// scratch eliminates. All runs must agree on K.
+fn report_counts(repeat: usize, mut count: impl FnMut() -> u64) {
     let t0 = Instant::now();
-    let k = engine.count_1d(&subs, &upds);
-    let dt = t0.elapsed();
+    let k = count();
+    let cold = t0.elapsed().as_secs_f64();
+    let rss = rss::peak_rss_bytes().map(rss::fmt_bytes).unwrap_or_default();
+    if repeat <= 1 {
+        println!(
+            "K={k} intersections in {} (peak RSS {rss})",
+            ddm::bench::stats::fmt_secs(cold)
+        );
+        return;
+    }
+    let mut warm_best = f64::INFINITY;
+    for r in 1..repeat {
+        let t = Instant::now();
+        let k2 = count();
+        warm_best = warm_best.min(t.elapsed().as_secs_f64());
+        if k2 != k {
+            die(&format!("repeat run {r} returned K={k2}, first run K={k}"));
+        }
+    }
     println!(
-        "K={k} intersections in {} (peak RSS {})",
-        ddm::bench::stats::fmt_secs(dt.as_secs_f64()),
-        rss::peak_rss_bytes().map(rss::fmt_bytes).unwrap_or_default()
+        "K={k} intersections; cold {} warm {} (best of {} scratch-reusing runs; peak RSS {rss})",
+        ddm::bench::stats::fmt_secs(cold),
+        ddm::bench::stats::fmt_secs(warm_best),
+        repeat - 1
     );
 }
 

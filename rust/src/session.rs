@@ -44,6 +44,7 @@ pub use crate::algos::dynamic::Side;
 
 use crate::algos::dynamic::TreeIndex;
 use crate::core::interval::Interval;
+use crate::core::scratch::MatchScratch;
 use crate::core::sink::{pack_pair, unpack_pair, PairVec};
 use crate::core::{Regions1D, RegionsNd};
 use crate::exec::ThreadPool;
@@ -69,6 +70,12 @@ pub struct SessionParams {
     /// Minimum touched regions per batch before the apply and
     /// recompute phases run on the worker pool instead of inline.
     pub parallel_cutoff: usize,
+    /// Reuse the session's [`MatchScratch`] (per-region query buffers
+    /// and diff scratch) across epochs, so steady-state commits stop
+    /// allocating (default). `false` drops the buffers after every
+    /// apply — the cold baseline `benches/abl_session.rs` measures
+    /// against.
+    pub reuse_scratch: bool,
 }
 
 impl Default for SessionParams {
@@ -77,6 +84,7 @@ impl Default for SessionParams {
             set_impl: SetImpl::Hash,
             batch_threshold: 4096,
             parallel_cutoff: 64,
+            reuse_scratch: true,
         }
     }
 }
@@ -137,6 +145,10 @@ pub struct DdmSession {
     acc_added: HashSet<u64>,
     acc_removed: HashSet<u64>,
     epoch: u64,
+    /// Reusable per-epoch buffers (recompute query results and diff
+    /// scratch) — the dominant per-commit allocations on the steady
+    /// state. See [`SessionParams::reuse_scratch`].
+    scratch: MatchScratch,
 }
 
 impl DdmSession {
@@ -162,7 +174,15 @@ impl DdmSession {
             acc_added: HashSet::new(),
             acc_removed: HashSet::new(),
             epoch: 0,
+            scratch: MatchScratch::new(),
         }
+    }
+
+    /// Capacity snapshot of the session's reusable scratch — equal
+    /// snapshots around a warm commit mean the epoch allocated nothing
+    /// from the pooled buffers.
+    pub fn scratch_stats(&self) -> crate::core::ScratchStats {
+        self.scratch.stats()
     }
 
     pub fn d(&self) -> usize {
@@ -367,31 +387,57 @@ impl DdmSession {
         let mut touched: Vec<(Side, u32)> = Vec::with_capacity(touched_count);
         touched.extend(sub_ops.keys().map(|&k| (Side::Subscription, k)));
         touched.extend(upd_ops.keys().map(|&k| (Side::Update, k)));
-        let results: Vec<Vec<u32>> = if par && touched.len() > 1 {
+        // One (result, query-tmp) buffer pair per touched region, from
+        // the scratch pool — warm epochs reuse their capacity.
+        let mut bufs = self.scratch.take_u32_bufs(2 * touched.len());
+        let mut items: Vec<(Vec<u32>, Vec<u32>)> = Vec::with_capacity(touched.len());
+        while let (Some(a), Some(b)) = (bufs.pop(), bufs.pop()) {
+            items.push((a, b));
+        }
+        let results: Vec<(Vec<u32>, Vec<u32>)> = if par && touched.len() > 1 {
             let sub_dims = &self.sub_dims;
             let upd_dims = &self.upd_dims;
+            let touched_ref = &touched;
             let workers = self.nthreads.min(touched.len());
-            self.pool.fan_map(workers, touched.len(), |i| {
-                let (side, key) = touched[i];
-                recompute(sub_dims, upd_dims, side, key, seed)
-            })
+            self.pool
+                .fan_map_take(workers, items, |i, (mut out, mut tmp)| {
+                    let (side, key) = touched_ref[i];
+                    recompute_into(sub_dims, upd_dims, side, key, seed, &mut out, &mut tmp);
+                    (out, tmp)
+                })
         } else {
             touched
                 .iter()
-                .map(|&(side, key)| recompute(&self.sub_dims, &self.upd_dims, side, key, seed))
+                .zip(items)
+                .map(|(&(side, key), (mut out, mut tmp))| {
+                    recompute_into(
+                        &self.sub_dims,
+                        &self.upd_dims,
+                        side,
+                        key,
+                        seed,
+                        &mut out,
+                        &mut tmp,
+                    );
+                    (out, tmp)
+                })
                 .collect()
         };
 
         // Phase C: diff against the retained pair set and fold into the
-        // epoch accumulator (serial; O(|diff|) set updates).
+        // epoch accumulator (serial; O(|diff|) set updates). The
+        // gone/fresh work lists are pooled too — they used to be two
+        // fresh allocations per touched region.
         let set_impl = self.params.set_impl;
         let key_hint = self.key_hint;
+        let mut gone = self.scratch.take_u32();
+        let mut fresh = self.scratch.take_u32();
         let mut ri = 0usize;
         for &skey in sub_ops.keys() {
-            let new_upds = &results[ri];
+            let new_upds = &results[ri].0;
             ri += 1;
             let old = self.sub_pairs.remove(&skey);
-            let mut gone: Vec<u32> = Vec::new();
+            gone.clear();
             if let Some(o) = &old {
                 o.for_each(&mut |u| {
                     if new_upds.binary_search(&u).is_err() {
@@ -399,7 +445,7 @@ impl DdmSession {
                     }
                 });
             }
-            let mut fresh: Vec<u32> = Vec::new();
+            fresh.clear();
             for &u in new_upds {
                 let is_new = match &old {
                     Some(o) => !o.contains(u),
@@ -409,7 +455,7 @@ impl DdmSession {
                     fresh.push(u);
                 }
             }
-            for u in gone {
+            for &u in &gone {
                 if let Some(set) = self.upd_pairs.get_mut(&u) {
                     set.remove(skey);
                 }
@@ -433,13 +479,13 @@ impl DdmSession {
             }
         }
         for &ukey in upd_ops.keys() {
-            let new_subs = &results[ri];
+            let new_subs = &results[ri].0;
             ri += 1;
             let old = self.upd_pairs.remove(&ukey);
             // Pairs whose subscription was ALSO touched this batch are
             // fully accounted by the subscription pass above — skip
             // them here so nothing is double-reported.
-            let mut gone: Vec<u32> = Vec::new();
+            gone.clear();
             if let Some(o) = &old {
                 o.for_each(&mut |s| {
                     if !sub_ops.contains_key(&s) && new_subs.binary_search(&s).is_err() {
@@ -447,7 +493,7 @@ impl DdmSession {
                     }
                 });
             }
-            let mut fresh: Vec<u32> = Vec::new();
+            fresh.clear();
             for &s in new_subs {
                 if sub_ops.contains_key(&s) {
                     continue;
@@ -460,7 +506,7 @@ impl DdmSession {
                     fresh.push(s);
                 }
             }
-            for s in gone {
+            for &s in &gone {
                 if let Some(set) = self.sub_pairs.get_mut(&s) {
                     set.remove(ukey);
                 }
@@ -482,6 +528,15 @@ impl DdmSession {
                 }
                 self.upd_pairs.insert(ukey, set);
             }
+        }
+
+        // Return every pooled buffer (cleared, capacity kept) — or
+        // drop the whole scratch in cold mode.
+        self.scratch.give_u32_bufs([gone, fresh]);
+        self.scratch
+            .give_u32_bufs(results.into_iter().flat_map(|(a, b)| [a, b]));
+        if !self.params.reuse_scratch {
+            self.scratch = MatchScratch::new();
         }
     }
 
@@ -620,57 +675,61 @@ fn seed_dim(sub_dims: &[TreeIndex], upd_dims: &[TreeIndex]) -> usize {
 /// style: seed with the `seed`-dimension query of the opposite side's
 /// trees, then verify each residual dimension — per-key interval
 /// lookups while the candidate set is small, tree query + sorted
-/// intersection once it is large. Returns ascending opposite-side
-/// keys; empty for a region removed this batch.
-fn recompute(
+/// intersection once it is large. Fills `out` with ascending
+/// opposite-side keys (empty for a region removed this batch); both
+/// `out` and the query buffer `tmp` are reusable scratch, so warm
+/// epochs run this allocation-free.
+fn recompute_into(
     sub_dims: &[TreeIndex],
     upd_dims: &[TreeIndex],
     side: Side,
     key: u32,
     seed: usize,
-) -> Vec<u32> {
+    out: &mut Vec<u32>,
+    tmp: &mut Vec<u32>,
+) {
+    out.clear();
     let (own, opp) = match side {
         Side::Subscription => (sub_dims, upd_dims),
         Side::Update => (upd_dims, sub_dims),
     };
     let Some(iv_seed) = own[seed].get(key) else {
-        return Vec::new();
+        return;
     };
-    let mut cur = opp[seed].query_sorted(iv_seed);
+    opp[seed].query_into(iv_seed, out);
     for k in 0..own.len() {
         if k == seed {
             continue;
         }
-        if cur.is_empty() {
+        if out.is_empty() {
             break;
         }
         let ivk = own[k].get(key).expect("per-dimension trees agree on keys");
-        if cur.len() <= 32 {
-            cur.retain(|&c| opp[k].get(c).is_some_and(|civ| civ.intersects(&ivk)));
+        if out.len() <= 32 {
+            out.retain(|&c| opp[k].get(c).is_some_and(|civ| civ.intersects(&ivk)));
         } else {
-            let dim_hits = opp[k].query_sorted(ivk);
-            cur = intersect_sorted(&cur, &dim_hits);
+            opp[k].query_into(ivk, tmp);
+            intersect_sorted_in_place(out, tmp);
         }
     }
-    cur
 }
 
-/// Intersection of two ascending `u32` lists.
-fn intersect_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
-    let mut out = Vec::with_capacity(a.len().min(b.len()));
-    let (mut i, mut j) = (0, 0);
+/// In-place intersection of two ascending `u32` lists: `a ← a ∩ b`.
+fn intersect_sorted_in_place(a: &mut Vec<u32>, b: &[u32]) {
+    let (mut i, mut j, mut w) = (0usize, 0usize, 0usize);
     while i < a.len() && j < b.len() {
         match a[i].cmp(&b[j]) {
             std::cmp::Ordering::Less => i += 1,
             std::cmp::Ordering::Greater => j += 1,
             std::cmp::Ordering::Equal => {
-                out.push(a[i]);
+                a[w] = a[i];
+                w += 1;
                 i += 1;
                 j += 1;
             }
         }
     }
-    out
+    a.truncate(w);
 }
 
 #[cfg(test)]
@@ -1001,8 +1060,74 @@ mod tests {
 
     #[test]
     fn intersect_sorted_basics() {
-        assert_eq!(intersect_sorted(&[1, 3, 5, 9], &[2, 3, 9, 11]), vec![3, 9]);
-        assert_eq!(intersect_sorted(&[], &[1]), Vec::<u32>::new());
-        assert_eq!(intersect_sorted(&[7], &[7]), vec![7]);
+        let isect = |a: &[u32], b: &[u32]| -> Vec<u32> {
+            let mut v = a.to_vec();
+            intersect_sorted_in_place(&mut v, b);
+            v
+        };
+        assert_eq!(isect(&[1, 3, 5, 9], &[2, 3, 9, 11]), vec![3, 9]);
+        assert_eq!(isect(&[], &[1]), Vec::<u32>::new());
+        assert_eq!(isect(&[7], &[7]), vec![7]);
+    }
+
+    /// Warm (scratch-reused) and cold (fresh-allocation) sessions
+    /// produce identical diffs and pair sets across epochs, and the
+    /// warm session's scratch stops growing once the churn pattern
+    /// stabilizes.
+    #[test]
+    fn scratch_reuse_matches_cold_sessions_and_stops_growing() {
+        let warm_engine = DdmEngine::builder().threads(2).parallel_cutoff(4).build();
+        let cold_engine = DdmEngine::builder()
+            .threads(2)
+            .session_params(SessionParams {
+                reuse_scratch: false,
+                parallel_cutoff: 4,
+                ..Default::default()
+            })
+            .build();
+        let mut warm = warm_engine.session(2);
+        let mut cold = cold_engine.session(2);
+        let mut rng = Rng::new(0x5C0A);
+        let mut stats = None;
+        for epoch in 0..6 {
+            for _ in 0..40 {
+                let key = rng.below(30) as u32;
+                let rect = [ivl(&mut rng), ivl(&mut rng)];
+                match rng.below(4) {
+                    0 | 1 => {
+                        warm.upsert_subscription(key, &rect);
+                        cold.upsert_subscription(key, &rect);
+                    }
+                    2 => {
+                        warm.upsert_update(key, &rect);
+                        cold.upsert_update(key, &rect);
+                    }
+                    _ => {
+                        warm.remove_update(key);
+                        cold.remove_update(key);
+                    }
+                }
+            }
+            let (dw, dc) = (warm.commit(), cold.commit());
+            assert_eq!(dw, dc, "epoch {epoch} diffs diverged");
+            assert_eq!(warm.pairs(), cold.pairs());
+            // Cold sessions really drop their buffers.
+            assert_eq!(cold.scratch_stats(), Default::default());
+            // Warm buffer pool stabilizes after the first epochs (the
+            // touched-region count per epoch is bounded by the key
+            // space, so the pool stops acquiring new buffers).
+            if epoch >= 3 {
+                match stats {
+                    None => stats = Some(warm.scratch_stats().pooled_u32_bufs),
+                    Some(n) => {
+                        assert!(
+                            warm.scratch_stats().pooled_u32_bufs <= n.max(2 * 60 + 2),
+                            "scratch pool kept growing: {} bufs",
+                            warm.scratch_stats().pooled_u32_bufs
+                        );
+                    }
+                }
+            }
+        }
     }
 }

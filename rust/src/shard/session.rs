@@ -151,6 +151,17 @@ impl ShardedSession {
         self.inner.len()
     }
 
+    /// Per-shard scratch capacity snapshots (each inner session owns
+    /// its own [`MatchScratch`](crate::core::scratch::MatchScratch),
+    /// so shard-parallel commits reuse buffers without sharing or
+    /// locking across shards) — for allocation-free assertions.
+    pub fn scratch_stats(&self) -> Vec<crate::core::ScratchStats> {
+        self.inner
+            .iter()
+            .map(|cell| cell.lock().unwrap().scratch_stats())
+            .collect()
+    }
+
     /// The active partitioner (balanced sessions: quantile cuts after
     /// the first apply).
     pub fn partitioner(&self) -> &SpacePartitioner {

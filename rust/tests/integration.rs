@@ -646,3 +646,111 @@ fn psbm_thread_invariance_heavy() {
         assert_eq!(got, want, "P={p}");
     }
 }
+
+/// Scratch-reuse equivalence (the zero-allocation hot path's safety
+/// net): two consecutive `match_nd` calls on ONE engine — whose
+/// second call reuses the first call's `MatchScratch` buffers — must
+/// produce bit-identical pair sets to fresh-allocation runs, across
+/// SBM/PSBM/GBM × d∈{1,3} × both sort implementations; and the
+/// scratch must stop growing after the first call. The session
+/// variant (3 epochs, warm vs cold scratch) lives in
+/// `session::tests::scratch_reuse_matches_cold_sessions_and_stops_growing`.
+#[test]
+fn scratch_reuse_is_bit_identical_to_fresh_allocation() {
+    use ddm::core::{Interval, RegionsNd};
+    use ddm::exec::SortAlgo;
+
+    let pool = Arc::new(ThreadPool::new(3));
+    let mut rng = Rng::new(0x5C4A7C4);
+    for d in [1usize, 3] {
+        let mut subs = RegionsNd::new(d);
+        let mut upds = RegionsNd::new(d);
+        for _ in 0..700 {
+            let rect: Vec<Interval> = (0..d)
+                .map(|_| {
+                    let lo = rng.uniform(0.0, 200.0);
+                    Interval::new(lo, lo + rng.uniform(0.0, 15.0))
+                })
+                .collect();
+            subs.push(&rect);
+            let rect: Vec<Interval> = (0..d)
+                .map(|_| {
+                    let lo = rng.uniform(0.0, 200.0);
+                    Interval::new(lo, lo + rng.uniform(0.0, 15.0))
+                })
+                .collect();
+            upds.push(&rect);
+        }
+        for algo in [Algo::Sbm, Algo::Psbm, Algo::Gbm] {
+            for sort in [SortAlgo::Radix, SortAlgo::Merge] {
+                let reused = DdmEngine::builder()
+                    .algo(algo)
+                    .threads(4)
+                    .ncells(64)
+                    .sort_algo(sort)
+                    .pool(Arc::clone(&pool))
+                    .build();
+                // Fresh engine per call = fresh scratch per call.
+                let fresh = || {
+                    DdmEngine::builder()
+                        .algo(algo)
+                        .threads(4)
+                        .ncells(64)
+                        .sort_algo(sort)
+                        .pool(Arc::clone(&pool))
+                        .build()
+                        .pairs_nd(&subs, &upds)
+                };
+                let want = fresh();
+                assert!(!want.is_empty());
+                let first = reused.pairs_nd(&subs, &upds);
+                assert_eq!(first, want, "{algo:?} d={d} {sort:?} cold call");
+                let stats = reused.scratch_stats();
+                for call in 0..2 {
+                    let warm = reused.pairs_nd(&subs, &upds);
+                    assert_eq!(warm, want, "{algo:?} d={d} {sort:?} warm call {call}");
+                    assert_eq!(
+                        reused.scratch_stats(),
+                        stats,
+                        "{algo:?} d={d} {sort:?} scratch grew on warm call {call}"
+                    );
+                    assert_eq!(reused.count_nd(&subs, &upds), want.len() as u64);
+                }
+                assert_eq!(fresh(), want, "fresh run after reuse");
+            }
+        }
+    }
+}
+
+/// The `--sort` A/B seam: radix and merge engines agree with each
+/// other and with brute force on every workload family.
+#[test]
+fn radix_and_merge_engines_agree_end_to_end() {
+    use ddm::exec::SortAlgo;
+
+    let pool = Arc::new(ThreadPool::new(3));
+    let ap = AlphaParams {
+        n_total: 4_000,
+        alpha: 50.0,
+        space: 1e5,
+    };
+    let (subs, upds) = alpha_workload(0x50AB, &ap);
+    let bfm = engine_on(&pool, Algo::Bfm, 1);
+    let want = bfm.pairs_1d(&subs, &upds);
+    for algo in [Algo::Sbm, Algo::Psbm] {
+        let mut per_sort = Vec::new();
+        for sort in [SortAlgo::Radix, SortAlgo::Merge] {
+            let e = DdmEngine::builder()
+                .algo(algo)
+                .threads(4)
+                .sort_algo(sort)
+                .pool(Arc::clone(&pool))
+                .build();
+            let got = e.pairs_1d(&subs, &upds);
+            assert_eq!(got, want, "{algo:?} {sort:?} vs brute force");
+            assert_eq!(e.count_1d(&subs, &upds), want.len() as u64);
+            per_sort.push(got);
+        }
+        assert_eq!(per_sort[0], per_sort[1], "{algo:?} radix vs merge");
+    }
+}
