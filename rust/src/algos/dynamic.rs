@@ -182,6 +182,8 @@ impl DynamicDdm {
             Side::Subscription => &self.tree_s,
             Side::Update => &self.tree_u,
         };
+        // xlint: allow(hot-panic): caller contract — a stale handle is
+        // a caller bug and must fail loudly, not silently mis-match.
         index.get(idx).expect("region index in range")
     }
 

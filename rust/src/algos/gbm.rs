@@ -234,7 +234,7 @@ where
     };
     let grid = &grid;
 
-    use crate::exec::SendPtr;
+    use crate::exec::DisjointWriter;
 
     // ---- Phase 1 (parallel over updates) --------------------------------
     let bins: Bins = match params.cell_list {
@@ -248,13 +248,12 @@ where
             let mut counts = scratch.take_u32();
             counts.resize(nthreads * ncells, 0);
             {
-                let counts_ptr = SendPtr(counts.as_mut_ptr());
+                let cw = DisjointWriter::new(&mut counts[..], "gbm::bin counts");
+                let cw = &cw;
                 pool.run(nthreads, |p| {
-                    let counts_ptr = counts_ptr;
-                    // SAFETY: worker p owns counts segment p.
-                    let seg = unsafe {
-                        std::slice::from_raw_parts_mut(counts_ptr.0.add(p * ncells), ncells)
-                    };
+                    // SAFETY: worker p claims exactly counts segment p;
+                    // the segments are disjoint by construction.
+                    let mut seg = unsafe { cw.claim(p * ncells..(p + 1) * ncells) };
                     for j in ranges[p].clone() {
                         for c in grid.cells(upds.lo[j], upds.hi[j]) {
                             seg[c] += 1;
@@ -282,19 +281,18 @@ where
             let mut flat = scratch.take_u32();
             flat.resize(total as usize, 0);
             {
-                let counts_ptr = SendPtr(counts.as_mut_ptr());
-                let flat_ptr = SendPtr(flat.as_mut_ptr());
+                let cw = DisjointWriter::new(&mut counts[..], "gbm::scatter counts");
+                let fw = DisjointWriter::new(&mut flat[..], "gbm::scatter flat");
+                let (cw, fw) = (&cw, &fw);
                 pool.run(nthreads, |p| {
-                    let (counts_ptr, flat_ptr) = (counts_ptr, flat_ptr);
-                    // SAFETY: worker p owns counts segment p; the
-                    // offsets partition 0..total, so flat writes never
-                    // alias.
-                    let seg = unsafe {
-                        std::slice::from_raw_parts_mut(counts_ptr.0.add(p * ncells), ncells)
-                    };
+                    // SAFETY: worker p claims exactly counts segment p.
+                    let mut seg = unsafe { cw.claim(p * ncells..(p + 1) * ncells) };
                     for j in ranges[p].clone() {
                         for c in grid.cells(upds.lo[j], upds.hi[j]) {
-                            unsafe { *flat_ptr.0.add(seg[c] as usize) = j as u32 };
+                            // SAFETY: the (cell, worker) offsets
+                            // partition 0..total, so every flat slot is
+                            // written exactly once.
+                            unsafe { fw.write(seg[c] as usize, j as u32) };
                             seg[c] += 1;
                         }
                     }

@@ -17,13 +17,15 @@ use crate::core::Regions1D;
 const NIL: i32 = -1;
 
 /// Recursively build the subtree for `range` (sorted-order indices)
-/// into implicit slots (`slot = mid`). Returns the subtree root.
+/// into implicit slots (`slot = mid`) through the claims layer.
+/// Returns the subtree root.
 ///
 /// # Safety
-/// `nodes` must have capacity covering `range`, and no other thread
-/// may touch slots inside `range`.
+/// No other thread may touch slots inside `range` for the writer's
+/// lifetime (each slot of the arena is written exactly once across the
+/// whole build — checked under `race-check`).
 unsafe fn fill_subtree(
-    nodes: *mut Node,
+    nodes: &crate::exec::DisjointWriter<'_, Node>,
     regions: &Regions1D,
     order: &[u32],
     range: std::ops::Range<usize>,
@@ -32,18 +34,27 @@ unsafe fn fill_subtree(
         return NIL;
     }
     let mid = (range.start + range.end) / 2;
-    let left = fill_subtree(nodes, regions, order, range.start..mid);
-    let right = fill_subtree(nodes, regions, order, mid + 1..range.end);
-    write_node(nodes, regions, order, mid, left, right);
+    // SAFETY: sub-ranges of an exclusively owned range stay exclusive.
+    let (left, right) = unsafe {
+        (
+            fill_subtree(nodes, regions, order, range.start..mid),
+            fill_subtree(nodes, regions, order, mid + 1..range.end),
+        )
+    };
+    // SAFETY: `mid` is inside this thread's range; both children were
+    // written by the recursion above.
+    unsafe { write_node(nodes, regions, order, mid, left, right) };
     mid as i32
 }
 
 /// Write slot `mid` from its (already written) children.
 ///
 /// # Safety
-/// Children slots must be initialized; slot `mid` owned by the caller.
+/// Both child slots must already be written through `nodes` (with a
+/// happens-before edge to this call) and slot `mid` must be owned by
+/// the caller — `race-check` enforces both.
 unsafe fn write_node(
-    nodes: *mut Node,
+    nodes: &crate::exec::DisjointWriter<'_, Node>,
     regions: &Regions1D,
     order: &[u32],
     mid: usize,
@@ -57,22 +68,30 @@ unsafe fn write_node(
     let mut maxupper = hi;
     for c in [left, right] {
         if c != NIL {
-            let cn = &*nodes.add(c as usize);
+            // SAFETY: child slots are written per the caller's
+            // contract (read-before-write panics under race-check).
+            let cn = unsafe { nodes.read(c as usize) };
             height = height.max(cn.height + 1);
             minlower = minlower.min(cn.minlower);
             maxupper = maxupper.max(cn.maxupper);
         }
     }
-    *nodes.add(mid) = Node {
-        lo,
-        hi,
-        idx,
-        left,
-        right,
-        height,
-        minlower,
-        maxupper,
-    };
+    // SAFETY: slot `mid` belongs to this caller alone.
+    unsafe {
+        nodes.write(
+            mid,
+            Node {
+                lo,
+                hi,
+                idx,
+                left,
+                right,
+                height,
+                minlower,
+                maxupper,
+            },
+        );
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -184,45 +203,50 @@ impl IntervalTree {
             };
             n
         ];
-        let base = crate::exec::SendPtr(nodes.as_mut_ptr());
-        let order_ref = &order;
-        let segs = &segments;
-        pool.run(nthreads.min(segments.len()), |p| {
-            let base = base;
-            let workers = nthreads.min(segs.len());
-            let mut s = p;
-            while s < segs.len() {
-                // SAFETY: segments are disjoint order-ranges; each node
-                // slot (= an index inside the range) is written by
-                // exactly one worker.
-                unsafe { fill_subtree(base.0, regions, order_ref, segs[s].clone()) };
-                s += workers;
-            }
-        });
+        let root;
+        {
+            let w = crate::exec::DisjointWriter::new(&mut nodes[..], "itree::par build");
+            let w = &w;
+            let order_ref = &order;
+            let segs = &segments;
+            pool.run(nthreads.min(segments.len()), |p| {
+                let workers = nthreads.min(segs.len());
+                let mut s = p;
+                while s < segs.len() {
+                    // SAFETY: segments are disjoint order-ranges; each
+                    // node slot (= an index inside the range) is
+                    // written by exactly one worker.
+                    unsafe { fill_subtree(w, regions, order_ref, segs[s].clone()) };
+                    s += workers;
+                }
+            });
 
-        // Master: stitch the levels above the segments (the recursion
-        // below segment granularity was done by workers).
-        fn stitch(
-            nodes: *mut Node,
-            regions: &Regions1D,
-            order: &[u32],
-            range: std::ops::Range<usize>,
-            segments: &[std::ops::Range<usize>],
-        ) -> i32 {
-            if range.is_empty() {
-                return NIL;
+            // Master: stitch the levels above the segments (the
+            // recursion below segment granularity was done by workers).
+            fn stitch(
+                nodes: &crate::exec::DisjointWriter<'_, Node>,
+                regions: &Regions1D,
+                order: &[u32],
+                range: std::ops::Range<usize>,
+                segments: &[std::ops::Range<usize>],
+            ) -> i32 {
+                if range.is_empty() {
+                    return NIL;
+                }
+                if segments.iter().any(|s| *s == range) {
+                    return ((range.start + range.end) / 2) as i32;
+                }
+                let mid = (range.start + range.end) / 2;
+                let left = stitch(nodes, regions, order, range.start..mid, segments);
+                let right = stitch(nodes, regions, order, mid + 1..range.end, segments);
+                // SAFETY: slot `mid` belongs to no worker segment at
+                // this level, and both children were written (by a
+                // worker past the join barrier, or by this recursion).
+                unsafe { write_node(nodes, regions, order, mid, left, right) };
+                mid as i32
             }
-            if segments.iter().any(|s| *s == range) {
-                return ((range.start + range.end) / 2) as i32;
-            }
-            let mid = (range.start + range.end) / 2;
-            let left = stitch(nodes, regions, order, range.start..mid, segments);
-            let right = stitch(nodes, regions, order, mid + 1..range.end, segments);
-            // SAFETY: slot `mid` belongs to no worker segment at this level.
-            unsafe { write_node(nodes, regions, order, mid, left, right) };
-            mid as i32
+            root = pool.serial_section(|| stitch(w, regions, &order, 0..n, &segments));
         }
-        let root = pool.serial_section(|| stitch(base.0, regions, &order, 0..n, &segments));
         Self {
             nodes,
             root,

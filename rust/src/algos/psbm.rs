@@ -164,27 +164,39 @@ where
     // overwritten below), so the buffer is not redundantly memset.
     endpoints.resize(total, Endpoint::default());
     {
-        let base = crate::exec::SendPtr(endpoints.as_mut_ptr());
+        let dw = crate::exec::DisjointWriter::new(&mut endpoints[..], "psbm::endpoint build");
+        let dw = &dw;
         let sub_ranges = chunks(n, nthreads);
         let upd_ranges = chunks(m, nthreads);
+        let (sub_ranges, upd_ranges) = (&sub_ranges, &upd_ranges);
         pool.run(nthreads, |p| {
-            let base = base;
             for i in sub_ranges[p].clone() {
-                // SAFETY: each slot belongs to exactly one region
-                // endpoint and each region to exactly one worker.
+                // SAFETY: `endpoint_slot` maps each (region, side,
+                // kind) to a distinct slot and each region belongs to
+                // exactly one worker, so all writes are disjoint.
                 unsafe {
-                    *base.0.add(endpoint_slot(n, m, i, true, false)) =
-                        Endpoint::new(subs.hi[i], i as u32, true, false);
-                    *base.0.add(endpoint_slot(n, m, i, false, false)) =
-                        Endpoint::new(subs.lo[i], i as u32, false, false);
+                    dw.write(
+                        endpoint_slot(n, m, i, true, false),
+                        Endpoint::new(subs.hi[i], i as u32, true, false),
+                    );
+                    dw.write(
+                        endpoint_slot(n, m, i, false, false),
+                        Endpoint::new(subs.lo[i], i as u32, false, false),
+                    );
                 }
             }
             for j in upd_ranges[p].clone() {
+                // SAFETY: as above — slots are distinct per (region,
+                // side, kind) and regions are partitioned by worker.
                 unsafe {
-                    *base.0.add(endpoint_slot(n, m, j, true, true)) =
-                        Endpoint::new(upds.hi[j], j as u32, true, true);
-                    *base.0.add(endpoint_slot(n, m, j, false, true)) =
-                        Endpoint::new(upds.lo[j], j as u32, false, true);
+                    dw.write(
+                        endpoint_slot(n, m, j, true, true),
+                        Endpoint::new(upds.hi[j], j as u32, true, true),
+                    );
+                    dw.write(
+                        endpoint_slot(n, m, j, false, true),
+                        Endpoint::new(upds.lo[j], j as u32, false, true),
+                    );
                 }
             }
         });

@@ -148,42 +148,42 @@ pub struct ScratchStats {
 
 /// Hands pre-built per-worker sinks out by worker index, across the
 /// `Fn(usize) -> S` factory seam the parallel matchers share — so
-/// pooled sinks flow into parallel regions without locks.
+/// pooled sinks flow into parallel regions without locks. A thin
+/// domain wrapper over the claims layer's take-once cells
+/// ([`TakeCells`](crate::exec::claims::TakeCells)).
 ///
 /// # Safety contract
 /// `take(p)` must be called **at most once per distinct `p`** (the
 /// matchers call their factory exactly once per worker index, each
-/// from the worker that owns it). Sinks never claimed can be recovered
-/// with [`into_remaining`](Self::into_remaining).
+/// from the worker that owns it). A sequential double take panics in
+/// every build; under `--features race-check` a *concurrent* double
+/// take also panics deterministically with site/thread diagnostics
+/// instead of racing. Sinks never claimed can be recovered with
+/// [`into_remaining`](Self::into_remaining).
 pub struct SinkDispenser<S> {
-    slots: Vec<std::cell::UnsafeCell<Option<S>>>,
+    cells: crate::exec::claims::TakeCells<S>,
 }
 
-// SAFETY: each slot is touched by exactly one caller (the worker whose
-// index it is), per the documented contract.
-unsafe impl<S: Send> Sync for SinkDispenser<S> {}
-
 impl<S> SinkDispenser<S> {
+    /// Wrap per-worker `sinks`; worker `p` claims index `p`.
     pub fn new(sinks: Vec<S>) -> Self {
         Self {
-            slots: sinks
-                .into_iter()
-                .map(|s| std::cell::UnsafeCell::new(Some(s)))
-                .collect(),
+            cells: crate::exec::claims::TakeCells::new(sinks, "scratch::SinkDispenser"),
         }
     }
 
     /// Claim the sink for worker `p`. Panics if `p` is out of range or
     /// already claimed (both indicate a broken factory contract).
     pub fn take(&self, p: usize) -> S {
-        // SAFETY: the contract guarantees slot `p` is accessed by this
-        // call alone.
-        unsafe { (*self.slots[p].get()).take() }.expect("sink slot claimed twice")
+        // SAFETY: per the documented contract each worker index is
+        // claimed at most once, from one thread; violations panic
+        // (always when sequential, under race-check also concurrent).
+        unsafe { self.cells.take(p) }
     }
 
     /// Recover every unclaimed sink (for returning them to the pool).
     pub fn into_remaining(self) -> impl Iterator<Item = S> {
-        self.slots.into_iter().filter_map(|c| c.into_inner())
+        self.cells.into_remaining()
     }
 }
 
@@ -235,8 +235,10 @@ mod tests {
         assert_eq!(rest.len(), 1);
     }
 
+    // "take" matches both the release backstop ("cell 0 taken twice")
+    // and the race-check diagnostic ("double take at ...").
     #[test]
-    #[should_panic(expected = "sink slot claimed twice")]
+    #[should_panic(expected = "take")]
     fn dispenser_rejects_double_take() {
         let disp = SinkDispenser::new(vec![VecSink::default()]);
         let _a = disp.take(0);

@@ -1,0 +1,601 @@
+//! Claim-checked disjoint writes — the one audited home of the
+//! crate's shared-memory write discipline.
+//!
+//! Every lock-free hot path in this crate (the pool's fan-in slots,
+//! the radix/counting-sort scatters, the merge-round outputs of
+//! [`super::psort`], PSBM's endpoint build, GBM's CSR cell lists, the
+//! interval tree's parallel arena build, the pooled-sink dispenser)
+//! rests on the same invariant: **a set of workers writes a shared
+//! buffer through disjoint indices, with a fork-join barrier between
+//! the writes and any read**. This module packages that invariant
+//! behind four small types so the `unsafe` lives in one place:
+//!
+//! * [`DisjointWriter`] — exclusive-borrow a slice, then let many
+//!   workers write disjoint indices ([`write`](DisjointWriter::write))
+//!   or claim disjoint subranges ([`claim`](DisjointWriter::claim) →
+//!   [`ClaimedSlice`]) concurrently.
+//! * [`FanSlots`] — write-once result slots (the fan-in destination).
+//! * [`TakeCells`] — take-once input cells (the fan-out source).
+//!
+//! In a normal build these compile to exactly the raw-pointer stores
+//! they replaced: no atomics, no bookkeeping, `#[inline]` wrappers
+//! around `ptr::add` (the `abl_sort` radix-vs-merge assert in CI is
+//! the regression guard on that). Under `--features race-check` every
+//! index additionally carries an atomic **claim word**, and any
+//! overlapping write, overlapping range claim, double take, or
+//! read-before-write panics with the construction site, the index and
+//! the offending thread — turning a silent data race into a
+//! deterministic diagnostic. The randomized stress suite
+//! (`tests/race_stress.rs`) drives all of the refactored call sites
+//! across worker counts and adversarial sizes under that feature.
+
+use std::cell::UnsafeCell;
+use std::marker::PhantomData;
+
+#[cfg(feature = "race-check")]
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Claim-word states (race-check builds only): a slot is free until
+/// somebody claims a range over it or writes it.
+#[cfg(feature = "race-check")]
+const FREE: u8 = 0;
+#[cfg(feature = "race-check")]
+const CLAIMED: u8 = 1;
+#[cfg(feature = "race-check")]
+const WRITTEN: u8 = 2;
+
+#[cfg(feature = "race-check")]
+fn state_name(s: u8) -> &'static str {
+    match s {
+        FREE => "free",
+        CLAIMED => "claimed by another worker",
+        _ => "already written",
+    }
+}
+
+#[cfg(feature = "race-check")]
+fn current_thread() -> String {
+    std::thread::current()
+        .name()
+        .unwrap_or("<unnamed>")
+        .to_string()
+}
+
+/// Per-index claim table shared by the three wrappers (compiled out
+/// entirely in normal builds).
+#[cfg(feature = "race-check")]
+#[derive(Debug)]
+struct Claims {
+    site: &'static str,
+    words: Vec<AtomicU8>,
+}
+
+#[cfg(feature = "race-check")]
+impl Claims {
+    fn new(site: &'static str, n: usize) -> Self {
+        Self {
+            site,
+            words: (0..n).map(|_| AtomicU8::new(FREE)).collect(),
+        }
+    }
+
+    /// Transition index `i` from `from` to `to` or panic with a
+    /// site/index/thread diagnostic.
+    fn transition(&self, i: usize, from: u8, to: u8, action: &str) {
+        if let Err(prev) =
+            self.words[i].compare_exchange(from, to, Ordering::AcqRel, Ordering::Acquire)
+        {
+            panic!(
+                "race-check: {action} at {}[{i}] by thread '{}' but the slot is {}",
+                self.site,
+                current_thread(),
+                state_name(prev),
+            );
+        }
+    }
+
+    /// Require index `i` to be in state `want` (no transition).
+    fn require(&self, i: usize, want: u8, action: &str) {
+        let s = self.words[i].load(Ordering::Acquire);
+        if s != want {
+            panic!(
+                "race-check: {action} at {}[{i}] by thread '{}' but the slot is {}",
+                self.site,
+                current_thread(),
+                state_name(s),
+            );
+        }
+    }
+}
+
+/// Exclusive borrow of a slice that hands out **disjoint** write
+/// access to many workers at once.
+///
+/// Construction takes `&mut [T]`, so the borrow checker guarantees
+/// nobody else can touch the buffer for the writer's lifetime; the
+/// caller's obligation (checked under `race-check`) is only that the
+/// *workers* stay disjoint: no index is [`write`](Self::write)-ten
+/// twice, no [`claim`](Self::claim)-ed ranges overlap, and
+/// [`read`](Self::read) only touches indices already written through
+/// this writer.
+///
+/// The fork-join barrier of [`ThreadPool::run`](super::ThreadPool::run)
+/// provides the happens-before edge between the parallel writes and
+/// the master's subsequent reads, exactly as before this abstraction
+/// existed — the writer checks disjointness, not ordering.
+#[derive(Debug)]
+pub struct DisjointWriter<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    #[cfg(feature = "race-check")]
+    claims: Claims,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: the writer only allows writes to disjoint indices (the
+// caller's contract, enforced under race-check) with a fork-join
+// barrier before reads, so sharing it across workers is sound
+// whenever T itself can move between threads.
+unsafe impl<T: Send> Sync for DisjointWriter<'_, T> {}
+// SAFETY: same argument; the writer is just a pointer + length (+
+// atomics under race-check) over data borrowed for 'a.
+unsafe impl<T: Send> Send for DisjointWriter<'_, T> {}
+
+impl<'a, T> DisjointWriter<'a, T> {
+    /// Wrap `data` for disjoint parallel writing. `site` names the
+    /// call site in race-check diagnostics (and costs nothing in
+    /// normal builds).
+    pub fn new(data: &'a mut [T], site: &'static str) -> Self {
+        let ptr = data.as_mut_ptr();
+        let len = data.len();
+        #[cfg(not(feature = "race-check"))]
+        let _ = site;
+        Self {
+            ptr,
+            len,
+            #[cfg(feature = "race-check")]
+            claims: Claims::new(site, len),
+            _marker: PhantomData,
+        }
+    }
+
+    /// Length of the wrapped slice.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the wrapped slice is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write `value` into slot `i`.
+    ///
+    /// # Safety
+    /// No other write or claim may touch index `i` for this writer's
+    /// lifetime, and `read(i)` may only happen after this write (on
+    /// the same thread, or across the region's join barrier). Under
+    /// `race-check` a violation panics instead of racing.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, value: T) {
+        debug_assert!(i < self.len, "DisjointWriter::write out of bounds");
+        #[cfg(feature = "race-check")]
+        self.claims.transition(i, FREE, WRITTEN, "overlapping write");
+        // SAFETY: i < len (checked in debug; offsets at every call
+        // site partition the buffer), the slot is initialized memory
+        // (constructed from &mut [T]) and per the caller's contract no
+        // other thread accesses it concurrently.
+        unsafe { *self.ptr.add(i) = value };
+    }
+
+    /// Read back slot `i` (interval-tree builders read child nodes
+    /// their own recursion just wrote).
+    ///
+    /// # Safety
+    /// Index `i` must have been written through this writer, with a
+    /// happens-before edge to this read (same thread or past a join
+    /// barrier), and no claim may cover it. Under `race-check`,
+    /// reading a never-written or currently-claimed slot panics
+    /// (read-before-write detection).
+    #[inline]
+    pub unsafe fn read(&self, i: usize) -> &T {
+        debug_assert!(i < self.len, "DisjointWriter::read out of bounds");
+        #[cfg(feature = "race-check")]
+        self.claims.require(i, WRITTEN, "read-before-write");
+        // SAFETY: i < len and the slot was written per the caller's
+        // contract; shared reads of a written slot are fine.
+        unsafe { &*self.ptr.add(i) }
+    }
+
+    /// Claim `range` as an exclusive sub-slice (a worker's private
+    /// segment: radix histogram segments, psort chunk sorts and
+    /// sub-merge output ranges, scan chunks).
+    ///
+    /// # Safety
+    /// `range` must be in bounds and disjoint from every other claim
+    /// and `write` on this writer for the claim's lifetime. Under
+    /// `race-check`, overlapping claims panic index-by-index.
+    #[inline]
+    pub unsafe fn claim(&self, range: std::ops::Range<usize>) -> ClaimedSlice<'_, T> {
+        debug_assert!(
+            range.start <= range.end && range.end <= self.len,
+            "DisjointWriter::claim out of bounds"
+        );
+        #[cfg(feature = "race-check")]
+        for i in range.clone() {
+            self.claims.transition(i, FREE, CLAIMED, "overlapping claim");
+        }
+        ClaimedSlice {
+            // SAFETY: in-bounds range (asserted above) of a live
+            // buffer; exclusivity is the caller's contract, enforced
+            // by the claim words under race-check.
+            slice: unsafe {
+                std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.len())
+            },
+            #[cfg(feature = "race-check")]
+            claims: &self.claims,
+            #[cfg(feature = "race-check")]
+            range,
+        }
+    }
+}
+
+/// An exclusively claimed subrange of a [`DisjointWriter`], usable as
+/// a plain `&mut [T]`. Dropping it (race-check builds) marks the
+/// range written, so post-barrier [`DisjointWriter::read`]s of it are
+/// legal.
+#[derive(Debug)]
+pub struct ClaimedSlice<'w, T> {
+    slice: &'w mut [T],
+    #[cfg(feature = "race-check")]
+    claims: &'w Claims,
+    #[cfg(feature = "race-check")]
+    range: std::ops::Range<usize>,
+}
+
+impl<T> std::ops::Deref for ClaimedSlice<'_, T> {
+    type Target = [T];
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.slice
+    }
+}
+
+impl<T> std::ops::DerefMut for ClaimedSlice<'_, T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.slice
+    }
+}
+
+#[cfg(feature = "race-check")]
+impl<T> Drop for ClaimedSlice<'_, T> {
+    fn drop(&mut self) {
+        for i in self.range.clone() {
+            self.claims.transition(i, CLAIMED, WRITTEN, "claim release");
+        }
+    }
+}
+
+/// Write-once result slots: the fan-in destination of
+/// [`ThreadPool::fan_map`](super::ThreadPool::fan_map). Slot `i` is
+/// written by exactly the worker the work cursor handed index `i`;
+/// the pool reads everything back after the join barrier.
+#[derive(Debug)]
+pub struct FanSlots<T> {
+    slots: Vec<UnsafeCell<Option<T>>>,
+    #[cfg(feature = "race-check")]
+    claims: Claims,
+}
+
+// SAFETY: each slot is written by exactly one worker (the one that
+// claimed its index — the documented contract of `put`, enforced
+// under race-check) and only read after the region's join barrier.
+unsafe impl<T: Send> Sync for FanSlots<T> {}
+
+impl<T> FanSlots<T> {
+    /// `n` empty slots; `site` names race-check diagnostics.
+    pub fn new(n: usize, site: &'static str) -> Self {
+        #[cfg(not(feature = "race-check"))]
+        let _ = site;
+        Self {
+            slots: (0..n).map(|_| UnsafeCell::new(None)).collect(),
+            #[cfg(feature = "race-check")]
+            claims: Claims::new(site, n),
+        }
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Whether there are no slots.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Fill slot `i`.
+    ///
+    /// # Safety
+    /// Each index must be filled at most once, by one thread, with no
+    /// concurrent `put` on the same index (disjoint-index fan-in);
+    /// race-check builds panic on a double put.
+    #[inline]
+    pub unsafe fn put(&self, i: usize, value: T) {
+        #[cfg(feature = "race-check")]
+        self.claims.transition(i, FREE, WRITTEN, "overlapping put");
+        // SAFETY: slot i belongs to this caller alone per the
+        // contract; the UnsafeCell write is unaliased.
+        unsafe { *self.slots[i].get() = Some(value) };
+    }
+
+    /// Consume the slots in index order (after the join barrier).
+    /// Unfilled slots yield `None`.
+    pub fn into_values(self) -> impl Iterator<Item = Option<T>> {
+        self.slots.into_iter().map(|c| c.into_inner())
+    }
+}
+
+/// Take-once input cells: the fan-out source of
+/// [`ThreadPool::fan_map_take`](super::ThreadPool::fan_map_take) and
+/// the pooled-sink dispenser
+/// ([`SinkDispenser`](crate::core::scratch::SinkDispenser)). Item `i`
+/// is moved out by exactly one caller.
+#[derive(Debug)]
+pub struct TakeCells<T> {
+    cells: Vec<UnsafeCell<Option<T>>>,
+    #[cfg(feature = "race-check")]
+    claims: Claims,
+}
+
+// SAFETY: each cell is taken by exactly one caller (the contract of
+// `take`, enforced under race-check), so the cells never see
+// concurrent access.
+unsafe impl<T: Send> Sync for TakeCells<T> {}
+
+impl<T> TakeCells<T> {
+    /// Wrap `items` as take-once cells; `site` names race-check
+    /// diagnostics.
+    pub fn new(items: Vec<T>, site: &'static str) -> Self {
+        #[cfg(not(feature = "race-check"))]
+        let _ = site;
+        #[cfg(feature = "race-check")]
+        let claims = Claims::new(site, items.len());
+        Self {
+            cells: items.into_iter().map(|i| UnsafeCell::new(Some(i))).collect(),
+            #[cfg(feature = "race-check")]
+            claims,
+        }
+    }
+
+    /// Number of cells (taken or not).
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Whether there are no cells.
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Move item `i` out. Panics on a double take (always — the
+    /// `Option` is the release-mode backstop; race-check builds panic
+    /// with the site/thread diagnostic even when the double take is
+    /// concurrent rather than sequential).
+    ///
+    /// # Safety
+    /// Each index must be taken at most once, by one thread; no
+    /// concurrent `take` on the same index.
+    #[inline]
+    pub unsafe fn take(&self, i: usize) -> T {
+        #[cfg(feature = "race-check")]
+        self.claims.transition(i, FREE, WRITTEN, "double take");
+        // SAFETY: cell i belongs to this caller alone per the
+        // contract; the UnsafeCell access is unaliased.
+        let v = unsafe { (*self.cells[i].get()).take() };
+        match v {
+            Some(v) => v,
+            None => panic!("claims::TakeCells: cell {i} taken twice"),
+        }
+    }
+
+    /// Recover every untaken item (after the join barrier) — the
+    /// dispenser returns unclaimed pooled sinks this way.
+    pub fn into_remaining(self) -> impl Iterator<Item = T> {
+        self.cells.into_iter().filter_map(|c| c.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::pool::scoped_region;
+
+    #[test]
+    fn disjoint_writes_land_in_order() {
+        let mut buf = vec![0u32; 1000];
+        {
+            let w = DisjointWriter::new(&mut buf, "test::writes");
+            scoped_region(4, |p| {
+                for i in (p..1000).step_by(4) {
+                    // SAFETY: indices are partitioned by residue class.
+                    unsafe { w.write(i, i as u32) };
+                }
+            });
+        }
+        assert!(buf.iter().enumerate().all(|(i, &v)| v == i as u32));
+    }
+
+    #[test]
+    fn claimed_ranges_act_as_slices() {
+        let mut buf = vec![0u8; 97];
+        {
+            let w = DisjointWriter::new(&mut buf, "test::claims");
+            let bounds = crate::exec::pfor::chunks(97, 5);
+            let bounds = &bounds;
+            scoped_region(5, |p| {
+                // SAFETY: chunks partition 0..97 disjointly.
+                let mut seg = unsafe { w.claim(bounds[p].clone()) };
+                for x in seg.iter_mut() {
+                    *x = p as u8 + 1;
+                }
+            });
+        }
+        assert!(buf.iter().all(|&v| v != 0));
+    }
+
+    #[test]
+    fn read_after_write_sees_the_value() {
+        let mut buf = vec![0u64; 8];
+        let w = DisjointWriter::new(&mut buf, "test::read");
+        // SAFETY: single-threaded write-then-read of one index.
+        unsafe {
+            w.write(3, 42);
+            assert_eq!(*w.read(3), 42);
+        }
+    }
+
+    #[test]
+    fn fan_slots_round_trip() {
+        let slots = FanSlots::new(10, "test::fan");
+        scoped_region(3, |p| {
+            for i in (p..10).step_by(3) {
+                // SAFETY: indices partitioned by residue class.
+                unsafe { slots.put(i, i * 2) };
+            }
+        });
+        let got: Vec<usize> = slots.into_values().map(|v| v.expect("filled")).collect();
+        assert_eq!(got, (0..10).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn take_cells_move_each_item_once() {
+        let cells = TakeCells::new((0..20).map(|i| format!("item-{i}")).collect(), "test::take");
+        let taken = std::sync::Mutex::new(Vec::new());
+        scoped_region(4, |p| {
+            for i in (p..16).step_by(4) {
+                // SAFETY: indices partitioned by residue class.
+                let v = unsafe { cells.take(i) };
+                taken.lock().unwrap().push(v);
+            }
+        });
+        assert_eq!(taken.lock().unwrap().len(), 16);
+        let rest: Vec<String> = cells.into_remaining().collect();
+        assert_eq!(rest.len(), 4, "untaken items recovered");
+    }
+
+    /// The `Option` backstop catches a *sequential* double take even
+    /// without the race-check claim words (which would panic first,
+    /// with a different message — hence the cfg).
+    #[test]
+    #[cfg(not(feature = "race-check"))]
+    #[should_panic(expected = "taken twice")]
+    fn sequential_double_take_panics_even_in_release() {
+        let cells = TakeCells::new(vec![1u8], "test::double");
+        // SAFETY: single-threaded; the second take is the deliberate
+        // contract violation under test.
+        unsafe {
+            let _a = cells.take(0);
+            let _b = cells.take(0);
+        }
+    }
+
+    /// The claim checker itself: these contract violations are
+    /// deterministic panics under `--features race-check` (and UB-free
+    /// only because the checked build never performs the second
+    /// access).
+    #[cfg(feature = "race-check")]
+    mod race_check {
+        use super::super::*;
+
+        #[test]
+        #[should_panic(expected = "overlapping write")]
+        fn overlapping_write_is_caught() {
+            let mut buf = vec![0u32; 4];
+            let w = DisjointWriter::new(&mut buf, "race::write");
+            // SAFETY: the second write is the violation under test;
+            // race-check panics before any aliased store happens.
+            unsafe {
+                w.write(2, 7);
+                w.write(2, 8);
+            }
+        }
+
+        #[test]
+        #[should_panic(expected = "overlapping claim")]
+        fn overlapping_claim_is_caught() {
+            let mut buf = vec![0u32; 10];
+            let w = DisjointWriter::new(&mut buf, "race::claim");
+            // SAFETY: overlap is the violation under test; race-check
+            // panics before the second slice exists.
+            unsafe {
+                let _a = w.claim(0..6);
+                let _b = w.claim(5..10);
+            }
+        }
+
+        #[test]
+        #[should_panic(expected = "read-before-write")]
+        fn read_before_write_is_caught() {
+            let mut buf = vec![0u32; 4];
+            let w = DisjointWriter::new(&mut buf, "race::read");
+            // SAFETY: reading an unwritten slot is the violation under
+            // test; race-check panics before the read.
+            unsafe {
+                let _ = w.read(1);
+            }
+        }
+
+        #[test]
+        #[should_panic(expected = "overlapping write")]
+        fn write_into_claimed_range_is_caught() {
+            let mut buf = vec![0u32; 8];
+            let w = DisjointWriter::new(&mut buf, "race::mixed");
+            // SAFETY: the write under an active claim is the violation
+            // under test; race-check panics before the store.
+            unsafe {
+                let _seg = w.claim(2..6);
+                w.write(3, 1);
+            }
+        }
+
+        #[test]
+        fn released_claim_allows_reads() {
+            let mut buf = vec![0u32; 8];
+            let w = DisjointWriter::new(&mut buf, "race::release");
+            // SAFETY: claim, fill, drop, then read — the legal order.
+            unsafe {
+                {
+                    let mut seg = w.claim(0..8);
+                    for (i, x) in seg.iter_mut().enumerate() {
+                        *x = i as u32;
+                    }
+                }
+                assert_eq!(*w.read(5), 5);
+            }
+        }
+
+        #[test]
+        #[should_panic(expected = "overlapping put")]
+        fn fan_slot_double_put_is_caught() {
+            let slots = FanSlots::new(3, "race::put");
+            // SAFETY: the double put is the violation under test.
+            unsafe {
+                slots.put(1, 10);
+                slots.put(1, 11);
+            }
+        }
+
+        #[test]
+        #[should_panic(expected = "double take")]
+        fn cell_double_take_is_caught() {
+            let cells = TakeCells::new(vec![5u8, 6], "race::take");
+            // SAFETY: the double take is the violation under test.
+            unsafe {
+                let _a = cells.take(1);
+                let _b = cells.take(1);
+            }
+        }
+    }
+}

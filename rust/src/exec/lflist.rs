@@ -22,6 +22,7 @@ pub struct LfList<T> {
 }
 
 impl<T> LfList<T> {
+    /// Empty list; allocation happens per-push.
     pub fn new() -> Self {
         Self {
             head: AtomicPtr::new(ptr::null_mut()),
@@ -59,10 +60,12 @@ impl<T> LfList<T> {
         }
     }
 
+    /// True if nothing has been pushed (quiescent callers only).
     pub fn is_empty(&self) -> bool {
         self.head.load(Ordering::Acquire).is_null()
     }
 
+    /// Number of elements — O(n) walk; quiescent callers only.
     pub fn len(&self) -> usize {
         self.iter().count()
     }
@@ -85,6 +88,8 @@ impl<T> Drop for LfList<T> {
     }
 }
 
+/// Borrowing iterator over an [`LfList`] at a quiescent point (see
+/// [`LfList::iter`]).
 pub struct Iter<'a, T> {
     cur: *const Node<T>,
     _marker: std::marker::PhantomData<&'a T>,
@@ -124,6 +129,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy workload; CI runs the small exec tests under Miri
     fn concurrent_pushes_lose_nothing() {
         let l = LfList::new();
         let per = 10_000u32;

@@ -19,7 +19,14 @@
 //!   (paper Fig. 7 / Algorithm 7 master step).
 //! * [`lflist`] — a lock-free append-only list (the paper's §5 ad-hoc
 //!   GBM cell list experiment).
+//! * [`claims`] — claim-checked disjoint writes: the audited wrappers
+//!   every lock-free fan-in/scatter seam above writes through, with a
+//!   `race-check` feature that turns contract violations into
+//!   deterministic panics. All raw-pointer sharing across parallel
+//!   regions goes through this module — there is no bare `SendPtr`
+//!   escape hatch anymore.
 
+pub mod claims;
 pub mod lflist;
 pub mod pfor;
 pub mod pool;
@@ -27,17 +34,9 @@ pub mod psort;
 pub mod radix;
 pub mod scan;
 
+pub use claims::{ClaimedSlice, DisjointWriter, FanSlots, TakeCells};
 pub use pool::ThreadPool;
 pub use radix::{RadixScratch, SortAlgo};
-
-/// Raw-pointer wrapper so disjoint index ranges can cross a parallel
-/// region boundary (the crate's one shared spelling — psort, scan,
-/// radix, PSBM's endpoint builder and GBM's binning all partition
-/// their index ranges disjointly and document the per-site SAFETY).
-#[derive(Clone, Copy)]
-pub struct SendPtr<T>(pub *mut T);
-unsafe impl<T> Send for SendPtr<T> {}
-unsafe impl<T> Sync for SendPtr<T> {}
 
 /// Total order for `f64` keys (sign-magnitude flip). NaNs sort above
 /// +inf; workload code never produces them, but the order stays total.

@@ -11,15 +11,29 @@
 //! but `max_p busy_p` is exactly the quantity a P-core machine's
 //! wall-clock would track.
 
-use std::cell::UnsafeCell;
+// xlint: allow-file(hot-lock): the pool's Mutex/Condvar are its
+// control plane (join barrier, cost log) — taken once per region or
+// per bench, never inside a parallel region's per-element work. The
+// per-worker busy-time slots that used to be Mutexes now go through
+// the claims layer.
+
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Duration;
 
+use super::claims::{DisjointWriter, FanSlots, TakeCells};
 use crate::bench::speedup::CostLog;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Lock a control-plane mutex, recovering from poisoning: a worker
+/// that panicked mid-region must not wedge every later region (the
+/// guarded state — join counters, cost logs, busy times — stays
+/// internally consistent even across a poisoned panic).
+fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// CPU time consumed by the calling thread (CLOCK_THREAD_CPUTIME_ID).
 ///
@@ -34,7 +48,7 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// zero. On those hosts the work-span *modeled* WCT collapses to the
 /// fork-join term and is meaningless — read the measured wall-clock
 /// column of bench output instead.
-#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+#[cfg(all(target_os = "linux", target_pointer_width = "64", not(miri)))]
 pub fn thread_cpu_time() -> Duration {
     #[repr(C)]
     struct Timespec {
@@ -58,7 +72,10 @@ pub fn thread_cpu_time() -> Duration {
     }
 }
 
-#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+/// Fallback for non-Linux targets and Miri (whose interpreter has no
+/// foreign-function `clock_gettime`): busy times collapse to zero and
+/// the modeled WCT is meaningless, but everything still runs.
+#[cfg(not(all(target_os = "linux", target_pointer_width = "64", not(miri))))]
 pub fn thread_cpu_time() -> Duration {
     Duration::ZERO
 }
@@ -96,13 +113,15 @@ impl ThreadPool {
                 .spawn(move || {
                     while let Ok(job) = rx.recv() {
                         job();
-                        let mut pending = shared2.pending.lock().unwrap();
+                        let mut pending = lock_ok(&shared2.pending);
                         *pending -= 1;
                         if *pending == 0 {
                             shared2.all_done.notify_all();
                         }
                     }
                 })
+                // xlint: allow(hot-panic): construction-time resource
+                // exhaustion, not a per-element hot path.
                 .expect("spawn pool worker");
             senders.push(tx);
             handles.push(h);
@@ -122,18 +141,18 @@ impl ThreadPool {
 
     /// Start recording region costs (resets any previous log).
     pub fn start_log(&self) {
-        *self.log.lock().unwrap() = Some(CostLog::default());
+        *lock_ok(&self.log) = Some(CostLog::default());
     }
 
     /// Stop recording and return the accumulated log.
     pub fn take_log(&self) -> CostLog {
-        self.log.lock().unwrap().take().unwrap_or_default()
+        lock_ok(&self.log).take().unwrap_or_default()
     }
 
     /// Record master-only (serial) CPU time; algorithms call this
     /// around their sequential sections (e.g. Algorithm 7 lines 18–21).
     pub fn log_serial(&self, d: Duration) {
-        if let Some(log) = self.log.lock().unwrap().as_mut() {
+        if let Some(log) = lock_ok(&self.log).as_mut() {
             log.serial += d;
         }
     }
@@ -154,22 +173,19 @@ impl ThreadPool {
     /// the per-worker sink collection of the parallel matchers
     /// ([`crate::algos::par_collect`]) and the session recompute phase.
     ///
-    /// The result slots are plain indexed cells, not locks: the cursor
-    /// hands each index to exactly one worker, so slot writes never
-    /// alias and the hot path carries no lock at all. Slot order is
-    /// deterministic by construction regardless of which worker claims
-    /// which index.
+    /// The result slots are write-once [`FanSlots`] (the claims
+    /// layer), not locks: the cursor hands each index to exactly one
+    /// worker, so slot writes never alias and the hot path carries no
+    /// lock at all. Slot order is deterministic by construction
+    /// regardless of which worker claims which index — and under
+    /// `--features race-check` an aliased write panics instead of
+    /// racing.
     pub fn fan_map<T, F>(&self, workers: usize, n: usize, f: F) -> Vec<T>
     where
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
-        struct Slots<T>(Vec<UnsafeCell<Option<T>>>);
-        // SAFETY: workers only ever touch the slot whose index the
-        // atomic cursor handed them, so concurrent access to one cell
-        // never happens.
-        unsafe impl<T: Send> Sync for Slots<T> {}
-        let slots: Slots<T> = Slots((0..n).map(|_| UnsafeCell::new(None)).collect());
+        let slots: FanSlots<T> = FanSlots::new(n, "pool::fan_map");
         let cursor = AtomicUsize::new(0);
         self.run(workers.min(n.max(1)).max(1), |_p| loop {
             let i = cursor.fetch_add(1, Ordering::Relaxed);
@@ -179,37 +195,35 @@ impl ThreadPool {
             let out = f(i);
             // SAFETY: index i is claimed exactly once (fetch_add), and
             // `run` joins every worker before the slots are read back,
-            // so this write is unaliased and happens-before the reads.
-            unsafe { *slots.0[i].get() = Some(out) };
+            // so this put is unaliased and happens-before the reads.
+            unsafe { slots.put(i, out) };
         });
         slots
-            .0
-            .into_iter()
-            .map(|c| c.into_inner().expect("fan_map slot filled"))
+            .into_values()
+            // xlint: allow(hot-panic): post-join invariant — the
+            // cursor covered 0..n, so every slot is filled.
+            .map(|c| c.expect("fan_map slot filled"))
             .collect()
     }
 
     /// [`fan_map`](Self::fan_map) over **owned** inputs: item `i` is
-    /// moved into the worker that claims index `i` (no clone, no
-    /// `Mutex<Option<_>>::take` hand-off). Used by Parallel SBM to move
-    /// each segment's initialized active sets into its phase-3 sweep.
+    /// moved into the worker that claims index `i` (take-once
+    /// [`TakeCells`] — no clone, no `Mutex<Option<_>>::take`
+    /// hand-off). Used by Parallel SBM to move each segment's
+    /// initialized active sets into its phase-3 sweep.
     pub fn fan_map_take<I, T, F>(&self, workers: usize, items: Vec<I>, f: F) -> Vec<T>
     where
         I: Send,
         T: Send,
         F: Fn(usize, I) -> T + Sync,
     {
-        struct Cells<I>(Vec<UnsafeCell<Option<I>>>);
-        // SAFETY: as in `fan_map`, each cell is touched by exactly one
-        // worker (the one the cursor handed its index to).
-        unsafe impl<I: Send> Sync for Cells<I> {}
         let n = items.len();
-        let cells: Cells<I> = Cells(items.into_iter().map(|i| UnsafeCell::new(Some(i))).collect());
+        let cells: TakeCells<I> = TakeCells::new(items, "pool::fan_map_take");
         let cells = &cells;
         self.fan_map(workers, n, |i| {
-            // SAFETY: index i is claimed exactly once; no other worker
-            // reads or writes this cell.
-            let item = unsafe { (*cells.0[i].get()).take() }.expect("fan_map_take item present");
+            // SAFETY: index i is claimed exactly once by the fan_map
+            // cursor; no other worker touches this cell.
+            let item = unsafe { cells.take(i) };
             f(i, item)
         })
     }
@@ -230,50 +244,65 @@ impl ThreadPool {
             nthreads,
             self.max_threads()
         );
-        let busy: Vec<Mutex<Duration>> =
-            (0..nthreads).map(|_| Mutex::new(Duration::ZERO)).collect();
+        let mut busy: Vec<Duration> = vec![Duration::ZERO; nthreads];
 
         {
-            let mut pending = self.shared.pending.lock().unwrap();
+            let mut pending = lock_ok(&self.shared.pending);
             *pending = nthreads - 1;
         }
 
-        // SAFETY: the closures borrow `f` and `busy`, which outlive the
-        // region because we block on `all_done` before returning (and
-        // before the borrows go out of scope). This is the standard
-        // scoped-execution pattern (what rayon/crossbeam do internally);
-        // the 'static bound on Job is satisfied by transmuting the
-        // borrow lifetime, never observed beyond the join below.
+        // SAFETY: the closures borrow `f` and the busy-time writer,
+        // which outlive the region because we block on `all_done`
+        // before returning (and before the borrows go out of scope).
+        // This is the standard scoped-execution pattern (what
+        // rayon/crossbeam do internally); the 'static bound on Job is
+        // satisfied by transmuting the borrow lifetime, never observed
+        // beyond the join below.
         let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: lifetime laundering per the block comment above; the
+        // reference never survives the join barrier below.
         let f_static: &'static (dyn Fn(usize) + Sync) =
             unsafe { std::mem::transmute(f_ref) };
-        let busy_ref: &[Mutex<Duration>] = &busy;
-        let busy_static: &'static [Mutex<Duration>] =
+        // Busy times go through the claims layer: worker p owns slot p
+        // of one region, so no lock is needed even for the metrics.
+        let busy_writer = DisjointWriter::new(&mut busy, "pool::run busy");
+        let busy_ref: &DisjointWriter<'_, Duration> = &busy_writer;
+        // SAFETY: lifetime laundering only, as for `f_static` above —
+        // the reference never survives the join barrier below.
+        let busy_static: &'static DisjointWriter<'static, Duration> =
             unsafe { std::mem::transmute(busy_ref) };
 
         for p in 1..nthreads {
             let job: Job = Box::new(move || {
                 let t0 = thread_cpu_time();
                 f_static(p);
-                *busy_static[p].lock().unwrap() =
-                    thread_cpu_time().saturating_sub(t0);
+                // SAFETY: worker p writes only busy slot p, once; the
+                // join barrier below happens-before the read-back.
+                unsafe { busy_static.write(p, thread_cpu_time().saturating_sub(t0)) };
             });
+            // xlint: allow(hot-panic): a hung-up worker channel means
+            // the pool is torn down — unrecoverable by design.
             self.senders[p - 1].send(job).expect("worker hung up");
         }
 
         let t0 = thread_cpu_time();
         f(0);
-        *busy[0].lock().unwrap() = thread_cpu_time().saturating_sub(t0);
+        // SAFETY: the master alone writes busy slot 0, once.
+        unsafe { busy_writer.write(0, thread_cpu_time().saturating_sub(t0)) };
 
         // Join: wait until every background worker of this region is done.
-        let mut pending = self.shared.pending.lock().unwrap();
+        let mut pending = lock_ok(&self.shared.pending);
         while *pending != 0 {
-            pending = self.shared.all_done.wait(pending).unwrap();
+            pending = self
+                .shared
+                .all_done
+                .wait(pending)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
         }
         drop(pending);
+        drop(busy_writer);
 
-        let busy: Vec<Duration> = busy.iter().map(|m| *m.lock().unwrap()).collect();
-        if let Some(log) = self.log.lock().unwrap().as_mut() {
+        if let Some(log) = lock_ok(&self.log).as_mut() {
             log.regions.push(busy.clone());
         }
         busy
@@ -308,9 +337,12 @@ where
 pub struct WorkCounter(AtomicUsize);
 
 impl WorkCounter {
+    /// Fresh counter starting at index 0.
     pub fn new() -> Self {
         Self(AtomicUsize::new(0))
     }
+    /// Atomically grab the next `chunk`-sized range below `limit`, or
+    /// `None` when the work is exhausted.
     #[inline]
     pub fn next_chunk(&self, chunk: usize, limit: usize) -> Option<std::ops::Range<usize>> {
         let start = self.0.fetch_add(chunk, Ordering::Relaxed);

@@ -10,9 +10,9 @@
 //! is a serial O(N) merge that caps SBM's speedup (this showed up
 //! directly in the Fig. 10 reproduction; EXPERIMENTS.md §Perf step 5).
 
+use super::claims::DisjointWriter;
 use super::pfor::chunks;
 use super::pool::ThreadPool;
-use super::SendPtr;
 
 /// Sort `data` by `key` using up to `nthreads` workers of `pool`.
 pub fn par_sort_by_key<T, K, F>(
@@ -33,15 +33,16 @@ pub fn par_sort_by_key<T, K, F>(
 
     // Phase 1: sort P disjoint chunks in parallel.
     let bounds = chunks(n, nthreads);
-    let base = SendPtr(data.as_mut_ptr());
-    pool.run(nthreads, |p| {
-        let base = base; // capture the SendPtr wrapper, not the raw field
-        let r = bounds[p].clone();
-        // SAFETY: chunks are disjoint.
-        let slice =
-            unsafe { std::slice::from_raw_parts_mut(base.0.add(r.start), r.len()) };
-        slice.sort_unstable_by_key(|x| key(x));
-    });
+    {
+        let dw = DisjointWriter::new(&mut *data, "psort::chunk_sort");
+        let (dw, bounds, key) = (&dw, &bounds, &key);
+        pool.run(nthreads, |p| {
+            // SAFETY: the chunks partition 0..n, so every worker claims
+            // a disjoint range.
+            let mut chunk = unsafe { dw.claim(bounds[p].clone()) };
+            chunk.sort_unstable_by_key(|x| key(x));
+        });
+    }
 
     // Phase 2: pairwise merge rounds, ping-ponging with an aux buffer.
     let mut aux: Vec<T> = data.to_vec();
@@ -129,29 +130,20 @@ pub fn par_sort_by_key<T, K, F>(
             }
         }
 
-        {
-            let (src_ptr, dst_ptr) = if src_is_data {
-                (SendPtr(data.as_mut_ptr()), SendPtr(aux.as_mut_ptr()))
-            } else {
-                (SendPtr(aux.as_mut_ptr()), SendPtr(data.as_mut_ptr()))
-            };
-            let key = &key;
-            let tasks = &tasks;
-            let owners = &owners;
-            pool.run(workers, |p| {
-                let (src_ptr, dst_ptr) = (src_ptr, dst_ptr); // capture wrappers
-                // This worker's contiguous task group (owners sorted).
-                let s = owners.partition_point(|&o| o < p);
-                let e = owners.partition_point(|&o| o <= p);
-                for i in s..e {
-                    let (a, b, out) = tasks[i].clone();
-                    // SAFETY: task output ranges are disjoint; src/dst
-                    // are distinct buffers.
-                    unsafe {
-                        merge_into(src_ptr.0, dst_ptr.0, a, b, out, key);
-                    }
-                }
-            });
+        // Boundary claim check: the generated tasks must cover every
+        // output rank of this round exactly once (their claimed output
+        // ranges tile; race-check verifies disjointness index-wise).
+        debug_assert_eq!(
+            tasks.iter().map(|(a, b, _)| a.len() + b.len()).sum::<usize>(),
+            total_all,
+            "psort sub-merge tasks must cover the whole round"
+        );
+        // The branch gives each round a clean (shared src, exclusive
+        // dst) borrow pair over the two distinct ping-pong buffers.
+        if src_is_data {
+            merge_round(pool, workers, &*data, &mut aux, &tasks, &owners, &key);
+        } else {
+            merge_round(pool, workers, &aux, data, &tasks, &owners, &key);
         }
         runs = pairs.iter().map(|(a, b)| a.start..b.end).collect();
         src_is_data = !src_is_data;
@@ -187,41 +179,60 @@ where
     (lo, r - lo)
 }
 
-/// Merge sorted `src[a]` and `src[b]` into `dst[out..]` (stable:
-/// a-elements win ties).
-unsafe fn merge_into<T, K, F>(
-    src: *const T,
-    dst: *mut T,
-    a: std::ops::Range<usize>,
-    b: std::ops::Range<usize>,
-    out: usize,
+/// One parallel merge round: every worker walks its contiguous task
+/// group (owners are sorted), claims each task's output range through
+/// the claims layer and runs the safe two-way merge into it. The task
+/// output ranges tile the round's outputs disjointly — checked
+/// index-by-index under `race-check`.
+fn merge_round<T, K, F>(
+    pool: &ThreadPool,
+    workers: usize,
+    src: &[T],
+    dst: &mut [T],
+    tasks: &[(std::ops::Range<usize>, std::ops::Range<usize>, usize)],
+    owners: &[usize],
     key: &F,
 ) where
+    T: Copy + Send + Sync,
+    K: Ord,
+    F: Fn(&T) -> K + Sync,
+{
+    let dw = DisjointWriter::new(dst, "psort::merge dst");
+    let dw = &dw;
+    pool.run(workers, |p| {
+        // This worker's contiguous task group (owners sorted).
+        let s = owners.partition_point(|&o| o < p);
+        let e = owners.partition_point(|&o| o <= p);
+        for i in s..e {
+            let (a, b, out) = tasks[i].clone();
+            let len = a.len() + b.len();
+            // SAFETY: the merge-path cuts assign every task a disjoint
+            // output range (together they tile the round's outputs).
+            let mut seg = unsafe { dw.claim(out..out + len) };
+            merge_into(&src[a], &src[b], &mut seg, key);
+        }
+    });
+}
+
+/// Merge sorted `a` and `b` into `dst` (stable: a-elements win ties).
+/// `dst.len()` must equal `a.len() + b.len()`; plain safe slice code —
+/// the claims layer hands each sub-merge its exclusive output slice.
+fn merge_into<T, K, F>(a: &[T], b: &[T], dst: &mut [T], key: &F)
+where
     T: Copy,
     K: Ord,
     F: Fn(&T) -> K,
 {
-    let (mut i, mut j, mut o) = (a.start, b.start, out);
-    while i < a.end && j < b.end {
-        let (x, y) = (*src.add(i), *src.add(j));
-        if key(&x) <= key(&y) {
-            *dst.add(o) = x;
+    debug_assert_eq!(dst.len(), a.len() + b.len(), "merge output must fit exactly");
+    let (mut i, mut j) = (0, 0);
+    for slot in dst.iter_mut() {
+        if j >= b.len() || (i < a.len() && key(&a[i]) <= key(&b[j])) {
+            *slot = a[i];
             i += 1;
         } else {
-            *dst.add(o) = y;
+            *slot = b[j];
             j += 1;
         }
-        o += 1;
-    }
-    while i < a.end {
-        *dst.add(o) = *src.add(i);
-        i += 1;
-        o += 1;
-    }
-    while j < b.end {
-        *dst.add(o) = *src.add(j);
-        j += 1;
-        o += 1;
     }
 }
 
@@ -240,6 +251,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy workload; CI runs the small exec tests under Miri
     fn sorts_like_std_across_thread_counts() {
         let pool = ThreadPool::new(7);
         for &p in &[1usize, 2, 3, 4, 8] {
@@ -250,6 +262,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy workload; CI runs the small exec tests under Miri
     fn sorts_already_sorted_and_reversed() {
         let pool = ThreadPool::new(3);
         let mut asc: Vec<u64> = (0..5000).collect();
@@ -262,6 +275,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy workload; CI runs the small exec tests under Miri
     fn sorts_with_many_duplicates() {
         let pool = ThreadPool::new(3);
         let mut rng = Rng::new(9);
@@ -273,6 +287,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy workload; CI runs the small exec tests under Miri
     fn all_equal_keys() {
         let pool = ThreadPool::new(7);
         let mut data: Vec<u64> = vec![7; 10_000];
@@ -281,6 +296,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy workload; CI runs the small exec tests under Miri
     fn composite_keys_via_f64_key() {
         use crate::exec::f64_key;
         let pool = ThreadPool::new(3);
@@ -297,6 +313,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy workload; CI runs the small exec tests under Miri
     fn thread_count_does_not_change_result() {
         let pool = ThreadPool::new(7);
         let mut rng = Rng::new(77);
@@ -315,6 +332,7 @@ mod tests {
     /// worker counts that don't divide the sub-merge count used to
     /// idle workers under the old round-robin-by-task distribution.
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy workload; CI runs the small exec tests under Miri
     fn last_round_uneven_worker_counts() {
         let pool = ThreadPool::new(7);
         let mut rng = Rng::new(0xBA1A);

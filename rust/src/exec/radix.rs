@@ -26,10 +26,10 @@
 //! [`MatchScratch`](crate::core::scratch::MatchScratch)), so repeated
 //! sorts of same-sized arrays allocate nothing.
 
+use super::claims::DisjointWriter;
 use super::pfor::chunks;
 use super::pool::ThreadPool;
 use super::scan::seq_exclusive_scan_in_place;
-use super::SendPtr;
 
 /// Buckets per pass (8-bit digits).
 pub const RADIX_BUCKETS: usize = 256;
@@ -56,6 +56,7 @@ pub enum SortAlgo {
 }
 
 impl SortAlgo {
+    /// Stable identifier used in CLI flags and bench JSON.
     pub fn name(self) -> &'static str {
         match self {
             SortAlgo::Radix => "radix",
@@ -88,6 +89,7 @@ pub struct RadixScratch {
 }
 
 impl RadixScratch {
+    /// Empty scratch; buffers grow on first use and are then reused.
     pub fn new() -> Self {
         Self::default()
     }
@@ -157,28 +159,37 @@ pub fn radix_sort_by_key<T, F>(
         if counts.iter().filter(|&&c| c != 0).count() <= 1 {
             continue; // constant digit: nothing to move
         }
-        seq_exclusive_scan_in_place(counts);
-        // Raw pointers so src/dst can swap roles across passes without
-        // re-borrowing; they always name distinct buffers.
-        let (src_ptr, dst_ptr) = if src_is_data {
-            (data.as_ptr(), aux.as_mut_ptr())
+        let grand = seq_exclusive_scan_in_place(counts);
+        debug_assert_eq!(grand as usize, n, "radix histogram must count every element");
+        // The branch gives each pass a clean (shared src, exclusive
+        // dst) borrow pair over the two distinct ping-pong buffers —
+        // the serial scatter needs no unsafe at all.
+        if src_is_data {
+            scatter_serial(&*data, &mut aux[..n], counts, shift, &key);
         } else {
-            (aux.as_ptr(), data.as_mut_ptr())
-        };
-        // SAFETY: src and dst are distinct buffers of length ≥ n; each
-        // output slot is written exactly once (offsets partition 0..n).
-        unsafe {
-            for i in 0..n {
-                let x = *src_ptr.add(i);
-                let v = (key(&x) >> shift) as usize & 0xFF;
-                *dst_ptr.add(counts[v] as usize) = x;
-                counts[v] += 1;
-            }
+            scatter_serial(&aux[..n], data, counts, shift, &key);
         }
         src_is_data = !src_is_data;
     }
     if !src_is_data {
         data.copy_from_slice(&aux[..n]);
+    }
+}
+
+/// One serial counting-sort scatter pass: move every `src` element to
+/// `dst[counts[digit]]`, bumping the running offsets. `counts` must
+/// hold the exclusive bucket starts for this digit (they partition
+/// `0..src.len()`, so every `dst` slot is written exactly once —
+/// safe-code bounds checks enforce it).
+fn scatter_serial<T, F>(src: &[T], dst: &mut [T], counts: &mut [u32], shift: usize, key: &F)
+where
+    T: Copy,
+    F: Fn(&T) -> u64,
+{
+    for x in src {
+        let v = (key(x) >> shift) as usize & 0xFF;
+        dst[counts[v] as usize] = *x;
+        counts[v] += 1;
     }
 }
 
@@ -220,32 +231,10 @@ pub fn par_radix_sort_by_key<T, F>(
         let shift = pass * 8;
 
         // ---- per-worker histograms (each worker owns one segment) ----
-        {
-            let src_ptr = if src_is_data {
-                SendPtr(data.as_mut_ptr())
-            } else {
-                SendPtr(aux.as_mut_ptr())
-            };
-            let counts_ptr = SendPtr(counts.as_mut_ptr());
-            let bounds = &bounds;
-            let key = &key;
-            pool.run(workers, |p| {
-                let (src_ptr, counts_ptr) = (src_ptr, counts_ptr);
-                // SAFETY: worker p touches only counts segment p and
-                // reads only its own chunk of src.
-                let seg = unsafe {
-                    std::slice::from_raw_parts_mut(
-                        counts_ptr.0.add(p * RADIX_BUCKETS),
-                        RADIX_BUCKETS,
-                    )
-                };
-                seg.fill(0);
-                let r = bounds[p].clone();
-                let chunk = unsafe { std::slice::from_raw_parts(src_ptr.0.add(r.start), r.len()) };
-                for x in chunk {
-                    seg[(key(x) >> shift) as usize & 0xFF] += 1;
-                }
-            });
+        if src_is_data {
+            histogram_pass(pool, workers, &*data, counts, &bounds, shift, &key);
+        } else {
+            histogram_pass(pool, workers, &aux[..n], counts, &bounds, shift, &key);
         }
 
         // ---- master: bucket totals, skip check, offsets ---------------
@@ -259,7 +248,8 @@ pub fn par_radix_sort_by_key<T, F>(
         if totals.iter().filter(|&&c| c != 0).count() <= 1 {
             continue; // constant digit: nothing to move
         }
-        seq_exclusive_scan_in_place(&mut totals);
+        let grand = seq_exclusive_scan_in_place(&mut totals);
+        debug_assert_eq!(grand as usize, n, "radix histograms must count every element");
         // Offsets bucket-major, worker-minor: worker p's slice of
         // bucket v starts after every lower bucket and after workers
         // 0..p of bucket v — the layout that makes the scatter stable.
@@ -270,59 +260,105 @@ pub fn par_radix_sort_by_key<T, F>(
                 counts[p * RADIX_BUCKETS + v] = at;
                 at += c;
             }
+            // Boundary claim check: bucket v's last worker slice must
+            // end exactly where bucket v+1 starts (or at n) — i.e. the
+            // (bucket, worker) offset table tiles 0..n with no gap or
+            // overlap. Compiled out in release.
+            debug_assert_eq!(
+                at as usize,
+                if v + 1 < RADIX_BUCKETS {
+                    totals[v + 1] as usize
+                } else {
+                    n
+                },
+                "radix offsets must tile 0..n (bucket {v})"
+            );
         }
 
         // ---- parallel stable scatter ----------------------------------
-        {
-            let (src_ptr, dst_ptr) = if src_is_data {
-                (SendPtr(data.as_mut_ptr()), SendPtr(aux.as_mut_ptr()))
-            } else {
-                (SendPtr(aux.as_mut_ptr()), SendPtr(data.as_mut_ptr()))
-            };
-            let counts_ptr = SendPtr(counts.as_mut_ptr());
-            let bounds = &bounds;
-            let key = &key;
-            pool.run(workers, |p| {
-                let (src_ptr, dst_ptr, counts_ptr) = (src_ptr, dst_ptr, counts_ptr);
-                // SAFETY: worker p owns counts segment p; the offset
-                // table assigns every (bucket, worker) pair a disjoint
-                // output range, so dst writes never alias.
-                let seg = unsafe {
-                    std::slice::from_raw_parts_mut(
-                        counts_ptr.0.add(p * RADIX_BUCKETS),
-                        RADIX_BUCKETS,
-                    )
-                };
-                let r = bounds[p].clone();
-                let chunk = unsafe { std::slice::from_raw_parts(src_ptr.0.add(r.start), r.len()) };
-                for x in chunk {
-                    let v = (key(x) >> shift) as usize & 0xFF;
-                    unsafe { *dst_ptr.0.add(seg[v] as usize) = *x };
-                    seg[v] += 1;
-                }
-            });
+        if src_is_data {
+            scatter_pass(pool, workers, &*data, &mut aux[..n], counts, &bounds, shift, &key);
+        } else {
+            scatter_pass(pool, workers, &aux[..n], data, counts, &bounds, shift, &key);
         }
         src_is_data = !src_is_data;
     }
 
     if !src_is_data {
         // Result landed in aux: parallel copy back.
-        let src_ptr = SendPtr(aux.as_mut_ptr());
-        let dst_ptr = SendPtr(data.as_mut_ptr());
-        let bounds = &bounds;
+        let dst = DisjointWriter::new(data, "radix::copy_back");
+        let (dst, src, bounds) = (&dst, &aux[..n], &bounds);
         pool.run(workers, |p| {
-            let (src_ptr, dst_ptr) = (src_ptr, dst_ptr);
             let r = bounds[p].clone();
-            // SAFETY: disjoint chunks of distinct buffers.
-            unsafe {
-                std::ptr::copy_nonoverlapping(
-                    src_ptr.0.add(r.start) as *const T,
-                    dst_ptr.0.add(r.start),
-                    r.len(),
-                );
-            }
+            // SAFETY: the chunks partition 0..n, so each worker claims
+            // a disjoint range of dst (and reads the same range of the
+            // distinct src buffer).
+            let mut seg = unsafe { dst.claim(r.clone()) };
+            seg.copy_from_slice(&src[r]);
         });
     }
+}
+
+/// One parallel histogram pass: worker `p` claims counts segment `p`
+/// (through the claims layer) and counts digit occurrences over its
+/// contiguous chunk of `src`.
+fn histogram_pass<T, F>(
+    pool: &ThreadPool,
+    workers: usize,
+    src: &[T],
+    counts: &mut [u32],
+    bounds: &[std::ops::Range<usize>],
+    shift: usize,
+    key: &F,
+) where
+    T: Sync,
+    F: Fn(&T) -> u64 + Sync,
+{
+    let cw = DisjointWriter::new(counts, "radix::histogram counts");
+    let cw = &cw;
+    pool.run(workers, |p| {
+        // SAFETY: worker p claims exactly counts segment p; the
+        // segments are disjoint by construction.
+        let mut seg = unsafe { cw.claim(p * RADIX_BUCKETS..(p + 1) * RADIX_BUCKETS) };
+        seg.fill(0);
+        for x in &src[bounds[p].clone()] {
+            seg[(key(x) >> shift) as usize & 0xFF] += 1;
+        }
+    });
+}
+
+/// One parallel stable scatter pass: worker `p` claims counts segment
+/// `p` (its private running offsets) and moves its chunk of `src`
+/// into `dst` through the claims layer — the offset table assigns
+/// every `(bucket, worker)` pair a disjoint `dst` range, so each slot
+/// is written exactly once (checked under `race-check`).
+fn scatter_pass<T, F>(
+    pool: &ThreadPool,
+    workers: usize,
+    src: &[T],
+    dst: &mut [T],
+    counts: &mut [u32],
+    bounds: &[std::ops::Range<usize>],
+    shift: usize,
+    key: &F,
+) where
+    T: Copy + Send + Sync,
+    F: Fn(&T) -> u64 + Sync,
+{
+    let dw = DisjointWriter::new(dst, "radix::scatter dst");
+    let cw = DisjointWriter::new(counts, "radix::scatter counts");
+    let (dw, cw) = (&dw, &cw);
+    pool.run(workers, |p| {
+        // SAFETY: worker p claims exactly counts segment p.
+        let mut seg = unsafe { cw.claim(p * RADIX_BUCKETS..(p + 1) * RADIX_BUCKETS) };
+        for x in &src[bounds[p].clone()] {
+            let v = (key(x) >> shift) as usize & 0xFF;
+            // SAFETY: seg[v] walks worker p's disjoint slice of bucket
+            // v's output range; no other worker writes these slots.
+            unsafe { dw.write(seg[v] as usize, *x) };
+            seg[v] += 1;
+        }
+    });
 }
 
 #[cfg(test)]
@@ -347,6 +383,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy workload; CI runs the small exec tests under Miri
     fn stable_and_sorted_across_sizes_and_thread_counts() {
         let pool = ThreadPool::new(7);
         for &p in &[1usize, 2, 3, 4, 8] {
@@ -357,6 +394,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy workload; CI runs the small exec tests under Miri
     fn serial_and_parallel_orders_are_identical() {
         let pool = ThreadPool::new(7);
         let mut rng = Rng::new(0x5EED);
@@ -377,6 +415,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy workload; CI runs the small exec tests under Miri
     fn full_width_keys_and_extremes() {
         let pool = ThreadPool::new(3);
         let mut rng = Rng::new(0xF00D);
@@ -391,6 +430,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy workload; CI runs the small exec tests under Miri
     fn all_equal_keys_keep_input_order() {
         let pool = ThreadPool::new(3);
         let base: Vec<(u64, u32)> = (0..10_000).map(|i| (7, i as u32)).collect();
@@ -405,6 +445,7 @@ mod tests {
     /// comparison merge path (`psort`) must produce the identical
     /// array; where they collide, radix keeps input order (stability).
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy workload; CI runs the small exec tests under Miri
     fn agrees_with_psort_fallback_property() {
         let pool = ThreadPool::new(5);
         crate::bench::prop::prop_check("radix-vs-psort", 0x5087, |rng| {
@@ -431,6 +472,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy workload; CI runs the small exec tests under Miri
     fn scratch_buffers_stop_growing_after_first_call() {
         let pool = ThreadPool::new(3);
         let mut rng = Rng::new(0xCAFE);

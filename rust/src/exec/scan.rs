@@ -12,9 +12,9 @@
 //! Pallas scan kernels (`python/compile/kernels/scan.py`) layer by
 //! layer.
 
+use super::claims::DisjointWriter;
 use super::pfor::chunks;
 use super::pool::ThreadPool;
-use super::SendPtr;
 
 /// Exclusive scan: `out[i] = identity ⊕ x₀ ⊕ … ⊕ xᵢ₋₁`.
 pub fn seq_exclusive_scan<T, F>(items: &[T], identity: T, op: F) -> Vec<T>
@@ -87,20 +87,21 @@ pub fn par_inclusive_scan<T, F>(
     }
 
     let bounds = chunks(n, nthreads);
-    let base = SendPtr(data.as_mut_ptr());
 
-    // Step ①: local inclusive scans.
-    pool.run(nthreads, |p| {
-        let base = base; // capture the SendPtr wrapper, not the raw field
-        let r = bounds[p].clone();
-        // SAFETY: disjoint chunks.
-        let s = unsafe { std::slice::from_raw_parts_mut(base.0.add(r.start), r.len()) };
-        let mut acc = identity;
-        for x in s.iter_mut() {
-            acc = op(acc, *x);
-            *x = acc;
-        }
-    });
+    // Step ①: local inclusive scans (each worker claims its chunk).
+    {
+        let dw = DisjointWriter::new(&mut *data, "scan::local");
+        let (dw, bounds, op) = (&dw, &bounds, &op);
+        pool.run(nthreads, |p| {
+            // SAFETY: the chunks partition 0..n disjointly.
+            let mut s = unsafe { dw.claim(bounds[p].clone()) };
+            let mut acc = identity;
+            for x in s.iter_mut() {
+                acc = op(acc, *x);
+                *x = acc;
+            }
+        });
+    }
 
     // Step ②: master — exclusive scan of the per-chunk totals.
     let totals: Vec<T> = bounds
@@ -116,19 +117,22 @@ pub fn par_inclusive_scan<T, F>(
     let offsets = seq_exclusive_scan(&totals, identity, |a, b| op(*a, *b));
 
     // Step ③: apply offsets (worker 0's offset is the identity).
-    pool.run(nthreads, |p| {
-        let base = base; // capture the SendPtr wrapper, not the raw field
-        if p == 0 {
-            return;
-        }
-        let r = bounds[p].clone();
-        let off = offsets[p];
-        // SAFETY: disjoint chunks.
-        let s = unsafe { std::slice::from_raw_parts_mut(base.0.add(r.start), r.len()) };
-        for x in s.iter_mut() {
-            *x = op(off, *x);
-        }
-    });
+    {
+        let dw = DisjointWriter::new(&mut *data, "scan::apply");
+        let (dw, bounds, offsets, op) = (&dw, &bounds, &offsets, &op);
+        pool.run(nthreads, |p| {
+            if p == 0 {
+                return;
+            }
+            let off = offsets[p];
+            // SAFETY: the chunks partition 0..n disjointly (worker 0
+            // claims nothing; its chunk keeps its local scan).
+            let mut s = unsafe { dw.claim(bounds[p].clone()) };
+            for x in s.iter_mut() {
+                *x = op(off, *x);
+            }
+        });
+    }
 }
 
 #[cfg(test)]

@@ -166,7 +166,14 @@
 //! * [`exec`] — the shared-memory parallel runtime the paper builds on
 //!   OpenMP for: a thread pool, chunked `parallel_for`, parallel merge
 //!   sort, the compact-key parallel radix sort ([`exec::radix`]) and
-//!   the two-level parallel prefix scan of paper Fig. 7.
+//!   the two-level parallel prefix scan of paper Fig. 7. All of its
+//!   lock-free fan-in/scatter seams write through the claim-checked
+//!   [`exec::claims`] layer: zero-cost in release, and with
+//!   `--features race-check` every disjointness-contract violation
+//!   becomes a deterministic panic. `cargo run -p xtask -- lint`
+//!   enforces the accompanying source hygiene (SAFETY comments,
+//!   lock-/panic-free hot paths); see ARCHITECTURE.md §"Unsafe code &
+//!   verification".
 //! * [`sets`] — pluggable active-set data structures (the paper's §5
 //!   `std::set` / bit-vector / hash study).
 //! * [`algos`] — the matching algorithms: BFM (Alg. 2), GBM (Alg. 3),

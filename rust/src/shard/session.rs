@@ -31,8 +31,13 @@
 //!   reported **not at all**;
 //! * a pair leaving every shard is reported removed exactly once.
 
+// xlint: allow-file(hot-lock): the per-shard Mutex is the design —
+// each inner session is locked by exactly one worker during the
+// fan-out commit (shards are the partition unit), and every other
+// access is from &mut self or read-side sweeps outside the hot loop.
+
 use std::collections::{BTreeMap, HashMap};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::core::interval::Interval;
 use crate::core::sink::{pack_pair, unpack_pair, PairVec};
@@ -42,6 +47,18 @@ use crate::session::{DdmSession, MatchDiff, SessionParams, Side};
 
 use super::partition::SpacePartitioner;
 use super::ShardStrategy;
+
+/// Poison-recovering lock: a shard whose session panicked mid-epoch
+/// still yields its state (the panic already propagated through the
+/// pool's fan-in; the data itself is a plain session).
+fn lock_ok(cell: &Mutex<DdmSession>) -> MutexGuard<'_, DdmSession> {
+    cell.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Poison-recovering `get_mut` for the serial (uncontended) paths.
+fn get_mut_ok(cell: &mut Mutex<DdmSession>) -> &mut DdmSession {
+    cell.get_mut().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// Per-shard load snapshot (the coordinator's imbalance gauge and the
 /// `abl_shard` bench read these).
@@ -158,7 +175,7 @@ impl ShardedSession {
     pub fn scratch_stats(&self) -> Vec<crate::core::ScratchStats> {
         self.inner
             .iter()
-            .map(|cell| cell.lock().unwrap().scratch_stats())
+            .map(|cell| lock_ok(cell).scratch_stats())
             .collect()
     }
 
@@ -417,12 +434,12 @@ impl ShardedSession {
             return self
                 .inner
                 .iter_mut()
-                .map(|cell| f(cell.get_mut().unwrap()))
+                .map(|cell| f(get_mut_ok(cell)))
                 .collect();
         }
         let inner = &self.inner;
         self.pool.fan_map(self.nthreads.min(shards), shards, |i| {
-            let mut guard = inner[i].lock().unwrap();
+            let mut guard = lock_ok(&inner[i]);
             f(&mut *guard)
         })
     }
@@ -444,7 +461,7 @@ impl ShardedSession {
     fn packed_live_pairs(&self) -> Vec<u64> {
         let mut packed: Vec<u64> = Vec::new();
         for cell in &self.inner {
-            let sess = cell.lock().unwrap();
+            let sess = lock_ok(cell);
             for (s, u) in sess.pairs() {
                 packed.push(pack_pair(s, u));
             }
@@ -462,7 +479,7 @@ impl ShardedSession {
         };
         let mut out: Vec<u32> = Vec::new();
         for cell in &self.inner[a..=b] {
-            out.extend(cell.lock().unwrap().updates_of(sub_key));
+            out.extend(lock_ok(cell).updates_of(sub_key));
         }
         out.sort_unstable();
         out.dedup();
@@ -477,7 +494,7 @@ impl ShardedSession {
         };
         let mut out: Vec<u32> = Vec::new();
         for cell in &self.inner[a..=b] {
-            out.extend(cell.lock().unwrap().subscriptions_of(upd_key));
+            out.extend(lock_ok(cell).subscriptions_of(upd_key));
         }
         out.sort_unstable();
         out.dedup();
@@ -491,7 +508,7 @@ impl ShardedSession {
         };
         self.inner[a..=b]
             .iter()
-            .any(|cell| cell.lock().unwrap().contains_pair(sub_key, upd_key))
+            .any(|cell| lock_ok(cell).contains_pair(sub_key, upd_key))
     }
 
     // ---- introspection ------------------------------------------------------
@@ -505,7 +522,7 @@ impl ShardedSession {
             .iter()
             .enumerate()
             .map(|(i, cell)| {
-                let sess = cell.lock().unwrap();
+                let sess = lock_ok(cell);
                 ShardStats {
                     shard: i,
                     subscriptions: sess.region_count(Side::Subscription),
@@ -559,13 +576,13 @@ fn route_one(
             if let Some(&(oa, ob)) = homes.get(&key) {
                 for i in oa..=ob {
                     if i < a || i > b {
-                        remove(inner[i].get_mut().unwrap(), key);
+                        remove(get_mut_ok(&mut inner[i]), key);
                         ops[i] += 1;
                     }
                 }
             }
             for i in a..=b {
-                upsert(inner[i].get_mut().unwrap(), key, &rect);
+                upsert(get_mut_ok(&mut inner[i]), key, &rect);
                 ops[i] += 1;
             }
             homes.insert(key, (a, b));
@@ -573,7 +590,7 @@ fn route_one(
         None => {
             if let Some((oa, ob)) = homes.remove(&key) {
                 for i in oa..=ob {
-                    remove(inner[i].get_mut().unwrap(), key);
+                    remove(get_mut_ok(&mut inner[i]), key);
                     ops[i] += 1;
                 }
             }

@@ -1,0 +1,226 @@
+//! Randomized stress tests for the claim-checked parallel seams.
+//!
+//! Every lock-free fan-in/scatter path in the crate writes through
+//! `exec::claims` (`DisjointWriter` / `ClaimedSlice` / `FanSlots` /
+//! `TakeCells`). This suite drives those seams across thread counts
+//! P ∈ {1, 2, 4, 8} and adversarial sizes (empty, one element, the
+//! insertion-sort cutoff 64 ± 1, primes, the parallel cutoff 8192 ± 1)
+//! and asserts the parallel results are bit-identical to a serial
+//! oracle.
+//!
+//! Run it twice:
+//!
+//! ```text
+//! cargo test --test race_stress                        # release contracts
+//! cargo test --test race_stress --features race-check  # claim-word teeth
+//! ```
+//!
+//! Under `race-check` every claim transition is tracked in per-index
+//! atomic words, so an overlapping write anywhere in these paths
+//! panics deterministically instead of silently racing (see the
+//! `claim_teeth` module at the bottom).
+
+use ddm::algos::gbm::{self, CellList, Dedup, GbmParams};
+use ddm::core::{sink, Interval, Regions1D, VecSink};
+use ddm::exec::radix::{par_radix_sort_by_key, radix_sort_by_key, RadixScratch};
+use ddm::exec::{psort, scan, ThreadPool};
+use ddm::prng::Rng;
+
+/// Sizes chosen to straddle every cutoff in the exec layer: the
+/// radix/psort insertion cutoff (64) and the radix parallel cutoff
+/// (8192), plus empty, singleton, and prime sizes that never divide
+/// evenly across workers.
+const SIZES: &[usize] = &[0, 1, 2, 63, 64, 65, 97, 1009, 8191, 8192, 8193];
+const THREADS: &[usize] = &[1, 2, 4, 8];
+
+fn pool() -> ThreadPool {
+    ThreadPool::new(8)
+}
+
+fn mix(i: usize) -> u64 {
+    (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17)
+}
+
+#[test]
+fn fan_map_matches_serial_map() {
+    let pool = pool();
+    for &p in THREADS {
+        for &n in SIZES {
+            let got: Vec<u64> = pool.fan_map(p, n, mix);
+            let want: Vec<u64> = (0..n).map(mix).collect();
+            assert_eq!(got, want, "fan_map p={p} n={n}");
+        }
+    }
+}
+
+#[test]
+fn fan_map_take_moves_every_item_exactly_once() {
+    let pool = pool();
+    for &p in THREADS {
+        for &n in SIZES {
+            // Boxed (non-Clone, non-Default) items: ownership must
+            // transfer through the TakeCells seam exactly once.
+            let items: Vec<Box<u64>> = (0..n).map(|i| Box::new(mix(i))).collect();
+            let got: Vec<u64> = pool.fan_map_take(p, items, |_p, b| *b ^ 1);
+            let want: Vec<u64> = (0..n).map(|i| mix(i) ^ 1).collect();
+            assert_eq!(got, want, "fan_map_take p={p} n={n}");
+        }
+    }
+}
+
+#[test]
+fn radix_sort_is_bit_identical_to_stable_oracle() {
+    let pool = pool();
+    for &p in THREADS {
+        for &n in SIZES {
+            let mut rng = Rng::new(0x0AD5 ^ mix(n) ^ ((p as u64) << 56));
+            // Narrow key range forces ties, making stability observable
+            // through the payload (= input position).
+            let base: Vec<(u64, u32)> = (0..n)
+                .map(|i| (rng.next_u64() % 61, i as u32))
+                .collect();
+            let mut want = base.clone();
+            want.sort_by_key(|&(k, _)| k);
+            let mut got = base;
+            let mut aux = Vec::new();
+            let mut scratch = RadixScratch::new();
+            par_radix_sort_by_key(&pool, p, &mut got, &mut aux, &mut scratch, |&(k, _)| k);
+            assert_eq!(got, want, "radix p={p} n={n}");
+        }
+    }
+}
+
+#[test]
+fn radix_parallel_agrees_with_radix_serial() {
+    let pool = pool();
+    for &n in SIZES {
+        let mut rng = Rng::new(mix(n + 11));
+        let base: Vec<(u64, u32)> = (0..n)
+            .map(|i| (rng.next_u64(), i as u32))
+            .collect();
+        let mut serial = base.clone();
+        let (mut aux, mut scratch) = (Vec::new(), RadixScratch::new());
+        radix_sort_by_key(&mut serial, &mut aux, &mut scratch, |&(k, _)| k);
+        for &p in THREADS {
+            let mut par = base.clone();
+            let (mut aux, mut scratch) = (Vec::new(), RadixScratch::new());
+            par_radix_sort_by_key(&pool, p, &mut par, &mut aux, &mut scratch, |&(k, _)| k);
+            assert_eq!(par, serial, "radix serial-vs-parallel p={p} n={n}");
+        }
+    }
+}
+
+#[test]
+fn psort_is_bit_identical_to_std_oracle() {
+    let pool = pool();
+    for &p in THREADS {
+        for &n in SIZES {
+            let mut rng = Rng::new(mix(n) ^ (p as u64));
+            // Composite key (key, position) is a total order, so the
+            // sorted array is unique and any sub-merge claim bug shows
+            // up as a literal mismatch.
+            let base: Vec<(u64, u32)> = (0..n)
+                .map(|i| (rng.next_u64() % 127, i as u32))
+                .collect();
+            let mut want = base.clone();
+            want.sort_unstable_by_key(|&(k, id)| (k, id));
+            let mut got = base;
+            psort::par_sort_by_key(&pool, p, &mut got, |&(k, id)| (k, id));
+            assert_eq!(got, want, "psort p={p} n={n}");
+        }
+    }
+}
+
+#[test]
+fn parallel_scan_matches_serial_scan() {
+    let pool = pool();
+    for &p in THREADS {
+        for &n in SIZES {
+            let base: Vec<u64> = (0..n).map(|i| mix(i) % 1000).collect();
+            let mut want = base.clone();
+            let mut acc = 0u64;
+            for x in want.iter_mut() {
+                acc += *x;
+                *x = acc;
+            }
+            let mut got = base;
+            scan::par_inclusive_scan(&pool, p, &mut got, 0u64, |a, b| a + b);
+            assert_eq!(got, want, "scan p={p} n={n}");
+        }
+    }
+}
+
+fn random_regions(rng: &mut Rng, n: usize, span: f64) -> Regions1D {
+    let mut r = Regions1D::with_capacity(n);
+    for _ in 0..n {
+        let lo = rng.uniform(0.0, span);
+        let len = rng.uniform(0.0, span / 16.0);
+        r.push(Interval::new(lo, lo + len));
+    }
+    r
+}
+
+#[test]
+fn gbm_scatter_matches_serial_gbm() {
+    let pool = pool();
+    // Region counts chosen like SIZES but capped: GBM is quadratic-ish
+    // in pathological overlap, and the serial oracle runs every config.
+    for &n in &[0usize, 1, 2, 63, 97, 1009, 4001] {
+        let mut rng = Rng::new(mix(n + 23));
+        let subs = random_regions(&mut rng, n, 1000.0);
+        let upds = random_regions(&mut rng, n, 1000.0);
+        for cell_list in [CellList::FanIn, CellList::LockFree] {
+            let params = GbmParams {
+                ncells: 257,
+                cell_list,
+                dedup: Dedup::FirstCell,
+            };
+            let mut serial = VecSink::default();
+            gbm::match_seq(&subs, &upds, &params, &mut serial);
+            let mut want = serial.pairs;
+            want.sort_unstable();
+            for &p in THREADS {
+                let sinks: Vec<VecSink> = gbm::match_par(&pool, p, &subs, &upds, &params);
+                let got = sink::canonical_pairs(sinks);
+                assert_eq!(got, want, "gbm {cell_list:?} p={p} n={n}");
+            }
+        }
+    }
+}
+
+/// The teeth themselves: with `race-check` on, an intentionally
+/// overlapping write through the claims layer must panic with the
+/// worker/site diagnostic instead of silently racing.
+#[cfg(feature = "race-check")]
+mod claim_teeth {
+    use ddm::exec::pool::scoped_region;
+    use ddm::exec::DisjointWriter;
+
+    #[test]
+    #[should_panic(expected = "overlapping write")]
+    fn two_workers_writing_the_same_slot_is_caught() {
+        let mut buf = vec![0u64; 4];
+        let w = DisjointWriter::new(&mut buf, "stress::overlap");
+        let w = &w;
+        scoped_region(2, |p| {
+            // Both workers write index 0: exactly one CAS wins, the
+            // loser panics (and `scoped_region` propagates it).
+            // SAFETY: intentionally NOT disjoint — that's the test.
+            unsafe { w.write(0, p as u64) };
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping claim")]
+    fn two_workers_claiming_the_same_range_is_caught() {
+        let mut buf = vec![0u64; 8];
+        let w = DisjointWriter::new(&mut buf, "stress::overlap-claim");
+        let w = &w;
+        scoped_region(2, |_p| {
+            // SAFETY: intentionally overlapping claims — the second
+            // claimant must panic under race-check.
+            let mut seg = unsafe { w.claim(2..6) };
+            seg.fill(7);
+        });
+    }
+}

@@ -1,0 +1,957 @@
+//! In-tree developer tooling for the ddm workspace (pure `std`).
+//!
+//! Subcommands:
+//!
+//! * `cargo run -p xtask -- lint` — source-hygiene lint over `rust/src`:
+//!   - **safety-comment**: every `unsafe` block / `unsafe impl` needs an
+//!     adjacent `// SAFETY:` comment (same line, or in the comment block
+//!     directly above the statement).
+//!   - **hot-lock**: no `Mutex` / `RwLock` in the hot-path modules
+//!     (`exec/`, `algos/`, `core/`, `shard/`) outside tests.
+//!   - **hot-panic**: no `.unwrap()` / `.expect(` in hot-path modules
+//!     outside tests.
+//!   - **wallclock**: no `Instant::now` outside the measurement layer
+//!     (`bench/`, `coordinator/`, `main.rs`, `cli.rs`).
+//!   - **pub-doc**: every `pub` item in `exec/` carries a `///` rustdoc.
+//!
+//!   Violations can be waived in place with a reason:
+//!   `// xlint: allow(<rule>): <reason>` on the offending line or in the
+//!   comment block directly above it, or
+//!   `// xlint: allow-file(<rule>): <reason>` anywhere in the file.
+//!
+//! * `cargo run -p xtask -- bench-snapshot` — runs the quick bench
+//!   workloads (same flags as CI) and reports the `BENCH_*.json`
+//!   artifacts they emit under `bench_results/`.
+//!
+//! The lint is intentionally a line-oriented approximation, not a full
+//! parser: sources are first masked (string/char literals blanked,
+//! comments stripped into a side channel) so the rules only ever match
+//! real code, and `#[cfg(test)] mod` regions are skipped by brace
+//! counting.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// The five lint rules. Names are what waivers reference.
+const RULES: [&str; 5] = [
+    "safety-comment",
+    "hot-lock",
+    "hot-panic",
+    "wallclock",
+    "pub-doc",
+];
+
+/// Hot-path module prefixes: lock-free by design, so locks and panics
+/// in non-test code are lint errors there.
+const HOT_PREFIXES: [&str; 4] = ["exec/", "algos/", "core/", "shard/"];
+
+/// Where `Instant::now` is legitimate: the measurement layer itself.
+const WALLCLOCK_ALLOW_PREFIXES: [&str; 2] = ["bench/", "coordinator/"];
+const WALLCLOCK_ALLOW_FILES: [&str; 2] = ["main.rs", "cli.rs"];
+
+/// One lint finding, keyed by file-relative path and 1-based line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "rust/src/{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.msg
+        )
+    }
+}
+
+/// A source line after masking: `code` has comments removed and all
+/// string/char literal contents blanked; `comment` holds the comment
+/// text that appeared on the line (including the `//` / `/*` markers).
+#[derive(Debug, Default, Clone)]
+struct MaskedLine {
+    code: String,
+    comment: String,
+}
+
+/// Lexer state for [`mask`]. Strings and block comments span lines.
+enum MaskState {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    CharLit,
+}
+
+/// Split a source file into [`MaskedLine`]s: a small Rust lexer that
+/// understands line/nested-block comments, string literals (including
+/// raw strings and byte strings), char literals vs lifetimes, and
+/// escape sequences. Literal contents are replaced by spaces so the
+/// line-oriented rules never match inside them.
+fn mask(src: &str) -> Vec<MaskedLine> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = MaskedLine::default();
+    let mut state = MaskState::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(state, MaskState::LineComment) {
+                state = MaskState::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        let next = chars.get(i + 1).copied();
+        match state {
+            MaskState::Code => {
+                let prev_ident = cur
+                    .code
+                    .chars()
+                    .next_back()
+                    .is_some_and(|p| p.is_alphanumeric() || p == '_');
+                match c {
+                    '/' if next == Some('/') => {
+                        state = MaskState::LineComment;
+                        cur.comment.push_str("//");
+                        i += 2;
+                    }
+                    '/' if next == Some('*') => {
+                        state = MaskState::BlockComment(1);
+                        cur.comment.push_str("/*");
+                        i += 2;
+                    }
+                    '"' => {
+                        state = MaskState::Str;
+                        cur.code.push('"');
+                        i += 1;
+                    }
+                    'r' | 'b' if !prev_ident => {
+                        // Possible raw string r"…" / r#"…"#, byte string
+                        // b"…", byte char b'…', or raw byte string br#"…"#.
+                        let mut j = i + 1;
+                        if c == 'b' && chars.get(j) == Some(&'r') {
+                            j += 1;
+                        }
+                        let mut hashes = 0u32;
+                        while chars.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if chars.get(j) == Some(&'"') && (c == 'r' || j > i + 1 || hashes == 0) {
+                            cur.code.extend(&chars[i..=j]);
+                            state = if hashes > 0 || c == 'r' || chars.get(i + 1) == Some(&'r') {
+                                MaskState::RawStr(hashes)
+                            } else {
+                                MaskState::Str
+                            };
+                            // Plain b"…" (no hashes, no r) is an escaped
+                            // string; r-prefixed forms are raw.
+                            if c == 'b' && chars.get(i + 1) == Some(&'"') {
+                                state = MaskState::Str;
+                            }
+                            i = j + 1;
+                        } else if c == 'b' && chars.get(i + 1) == Some(&'\'') {
+                            cur.code.push('b');
+                            cur.code.push('\'');
+                            state = MaskState::CharLit;
+                            i += 2;
+                        } else {
+                            cur.code.push(c);
+                            i += 1;
+                        }
+                    }
+                    '\'' => {
+                        // Char literal vs lifetime: a literal is '\…' or
+                        // 'X' (single char then a closing quote).
+                        let is_char = next == Some('\\')
+                            || (next.is_some() && chars.get(i + 2) == Some(&'\''));
+                        cur.code.push('\'');
+                        if is_char {
+                            state = MaskState::CharLit;
+                        }
+                        i += 1;
+                    }
+                    _ => {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+            MaskState::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            MaskState::BlockComment(depth) => {
+                if c == '*' && next == Some('/') {
+                    cur.comment.push_str("*/");
+                    state = if depth == 1 {
+                        MaskState::Code
+                    } else {
+                        MaskState::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    cur.comment.push_str("/*");
+                    state = MaskState::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            MaskState::Str => {
+                if c == '\\' {
+                    cur.code.push(' ');
+                    if next.is_some() {
+                        cur.code.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    cur.code.push('"');
+                    state = MaskState::Code;
+                    i += 1;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+            MaskState::RawStr(hashes) => {
+                if c == '"' {
+                    let ok = (0..hashes as usize).all(|k| chars.get(i + 1 + k) == Some(&'#'));
+                    if ok {
+                        cur.code.push('"');
+                        for _ in 0..hashes {
+                            cur.code.push('#');
+                        }
+                        state = MaskState::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        cur.code.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+            MaskState::CharLit => {
+                if c == '\\' {
+                    cur.code.push(' ');
+                    if next.is_some() {
+                        cur.code.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    cur.code.push('\'');
+                    state = MaskState::Code;
+                    i += 1;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// Mark the lines belonging to `#[cfg(test)]` items. For a
+/// `#[cfg(test)] mod …` the whole brace-balanced region is marked; for
+/// a single gated item the item body (or the `;`-terminated line) is.
+fn test_regions(lines: &[MaskedLine]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        let t = lines[i].code.trim();
+        if !t.starts_with("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        // Find the item the attribute attaches to (skip blank /
+        // comment-only / further attribute lines).
+        let mut j = i + 1;
+        while j < lines.len() {
+            let tj = lines[j].code.trim();
+            if tj.is_empty() || tj.starts_with("#[") {
+                j += 1;
+            } else {
+                break;
+            }
+        }
+        if j >= lines.len() {
+            break;
+        }
+        // Mark from the attribute through the end of the item: either
+        // the matching close brace, or the first `;` before any brace.
+        let mut depth = 0i32;
+        let mut opened = false;
+        let mut k = j;
+        while k < lines.len() {
+            for ch in lines[k].code.chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if !opened && lines[k].code.trim_end().ends_with(';') {
+                break;
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            k += 1;
+        }
+        let end = k.min(lines.len() - 1);
+        in_test[i..=end].fill(true);
+        i = end + 1;
+    }
+    in_test
+}
+
+/// Gather the comment context for a violation at `i`: the same-line
+/// comment plus the comment block directly above. The walk tolerates a
+/// few non-terminated code lines so the head of a multi-line statement
+/// doesn't cut the block off, but stops at blank lines and at lines
+/// that end a statement (`;`, `{`, `}`).
+fn comment_context(lines: &[MaskedLine], i: usize) -> String {
+    let mut ctx = lines[i].comment.clone();
+    let mut continuation_budget = 4;
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let code = lines[j].code.trim();
+        let comment = lines[j].comment.trim();
+        if code.is_empty() && comment.is_empty() {
+            break;
+        }
+        if code.is_empty() || code.starts_with("#[") {
+            ctx.push('\n');
+            ctx.push_str(comment);
+            continue;
+        }
+        let ends_stmt =
+            code.ends_with(';') || code.ends_with('{') || code.ends_with('}') || code.ends_with(',');
+        if ends_stmt || continuation_budget == 0 {
+            break;
+        }
+        continuation_budget -= 1;
+        if !comment.is_empty() {
+            ctx.push('\n');
+            ctx.push_str(comment);
+        }
+    }
+    ctx
+}
+
+/// True if `code` contains `word` as a standalone identifier (not a
+/// substring of a longer identifier like `MutexGuard`… which *does*
+/// start with `Mutex` — boundaries are checked on both sides).
+fn word_in(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0 || {
+            let b = bytes[at - 1];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        let end = at + word.len();
+        let after_ok = end >= bytes.len() || {
+            let b = bytes[end];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+/// True if the line-scoped waiver `// xlint: allow(<rule>): reason`
+/// appears in the comment context of line `i`.
+fn line_waived(lines: &[MaskedLine], i: usize, rule: &str) -> bool {
+    comment_context(lines, i).contains(&format!("xlint: allow({rule})"))
+}
+
+/// Collect the rules waived for the whole file via
+/// `// xlint: allow-file(<rule>): reason`.
+fn file_waivers(lines: &[MaskedLine]) -> Vec<&'static str> {
+    let mut out = Vec::new();
+    for l in lines {
+        for rule in RULES {
+            if l.comment.contains(&format!("xlint: allow-file({rule})")) && !out.contains(&rule) {
+                out.push(rule);
+            }
+        }
+    }
+    out
+}
+
+/// True if the `pub` item starting at line `i` has a rustdoc comment
+/// directly above it (attribute lines and plain comments in between are
+/// skipped; any other code line or a blank line ends the search).
+fn has_rustdoc(lines: &[MaskedLine], i: usize) -> bool {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let code = lines[j].code.trim();
+        let comment = lines[j].comment.trim();
+        if code.starts_with("#[") {
+            continue;
+        }
+        if code.is_empty() {
+            if comment.starts_with("///") || comment.starts_with("/**") {
+                return true;
+            }
+            if comment.is_empty() {
+                return false;
+            }
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+/// Lint one file. `rel` is the path relative to `rust/src` with `/`
+/// separators (e.g. `exec/radix.rs`) — rule applicability keys off it.
+fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
+    let lines = mask(src);
+    let in_test = test_regions(&lines);
+    let waived_file = file_waivers(&lines);
+    let is_hot = HOT_PREFIXES.iter().any(|p| rel.starts_with(p));
+    let wallclock_ok = WALLCLOCK_ALLOW_PREFIXES.iter().any(|p| rel.starts_with(p))
+        || WALLCLOCK_ALLOW_FILES.contains(&rel);
+    let wants_pub_doc = rel.starts_with("exec/");
+
+    let mut out = Vec::new();
+    let mut push = |line: usize, rule: &'static str, msg: String| {
+        if waived_file.contains(&rule) || line_waived(&lines, line, rule) {
+            return;
+        }
+        out.push(Violation {
+            file: rel.to_string(),
+            line: line + 1,
+            rule,
+            msg,
+        });
+    };
+
+    for (i, l) in lines.iter().enumerate() {
+        let code = l.code.as_str();
+        let trimmed = code.trim();
+
+        // safety-comment: applies everywhere, tests included — unsafe
+        // is unsafe regardless of where it runs.
+        if word_in(code, "unsafe") {
+            // Skip declarations: `unsafe fn` / `unsafe trait` /
+            // `unsafe extern` document their contract in rustdoc
+            // (`# Safety`), which clippy::missing_safety_doc enforces.
+            let after = code
+                .split("unsafe")
+                .nth(1)
+                .map(str::trim_start)
+                .unwrap_or("");
+            let is_decl = after.starts_with("fn ")
+                || after.starts_with("fn(")
+                || after.starts_with("trait ")
+                || after.starts_with("extern ");
+            if !is_decl && !comment_context(&lines, i).contains("SAFETY:") {
+                push(
+                    i,
+                    "safety-comment",
+                    "`unsafe` without an adjacent `// SAFETY:` comment".to_string(),
+                );
+            }
+        }
+
+        if is_hot && !in_test[i] {
+            for lock in ["Mutex", "RwLock"] {
+                if word_in(code, lock) {
+                    push(
+                        i,
+                        "hot-lock",
+                        format!("`{lock}` in hot-path module `{rel}` (hot paths are lock-free by design)"),
+                    );
+                }
+            }
+            for panicky in [".unwrap()", ".expect("] {
+                if code.contains(panicky) {
+                    push(
+                        i,
+                        "hot-panic",
+                        format!("`{panicky}` in hot-path module `{rel}` (recover or propagate instead)"),
+                    );
+                }
+            }
+        }
+
+        if !wallclock_ok && !in_test[i] && code.contains("Instant::now") {
+            push(
+                i,
+                "wallclock",
+                "`Instant::now` outside the measurement layer (bench/, coordinator/, main.rs, cli.rs)"
+                    .to_string(),
+            );
+        }
+
+        if wants_pub_doc && !in_test[i] {
+            if let Some(rest) = trimmed.strip_prefix("pub ") {
+                let rest = rest.trim_start();
+                let kinds = [
+                    "fn ", "struct ", "enum ", "const ", "static ", "trait ", "type ", "union ",
+                    "unsafe fn ",
+                ];
+                if kinds.iter().any(|k| rest.starts_with(k)) && !has_rustdoc(&lines, i) {
+                    push(
+                        i,
+                        "pub-doc",
+                        format!("undocumented `pub` item in exec/: `{trimmed}`"),
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for stable
+/// output.
+fn rust_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `src_root` (normally `rust/src`).
+fn lint_tree(src_root: &Path) -> Result<Vec<Violation>, String> {
+    let files = rust_files(src_root)
+        .map_err(|e| format!("cannot walk {}: {e}", src_root.display()))?;
+    if files.is_empty() {
+        return Err(format!("no .rs files under {}", src_root.display()));
+    }
+    let mut all = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(src_root)
+            .map_err(|e| e.to_string())?
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src =
+            fs::read_to_string(&path).map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        all.extend(lint_file(&rel, &src));
+    }
+    Ok(all)
+}
+
+/// Repo root: the xtask manifest dir's parent.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives one level below the repo root")
+        .to_path_buf()
+}
+
+fn run_lint(args: &[String]) -> ExitCode {
+    let src_root = match args {
+        [] => repo_root().join("rust/src"),
+        [flag, path] if flag == "--root" => PathBuf::from(path),
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint [--root <src-dir>]");
+            return ExitCode::from(2);
+        }
+    };
+    match lint_tree(&src_root) {
+        Ok(violations) if violations.is_empty() => {
+            println!("xtask lint: clean ({})", src_root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(violations) => {
+            for v in &violations {
+                println!("{v}");
+            }
+            println!(
+                "xtask lint: {} violation(s). Waive with `// xlint: allow(<rule>): <reason>`.",
+                violations.len()
+            );
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("xtask lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// Quick bench configurations — the same flags CI's smoke steps use, so
+/// a local snapshot is comparable to the CI artifact.
+const SNAPSHOT_BENCHES: [(&str, &[&str]); 4] = [
+    ("abl_session", &["--quick", "--n", "10k", "--epochs", "2"]),
+    ("abl_shard", &["--quick", "--n", "6k", "--epochs", "2"]),
+    ("abl_nd", &["--quick"]),
+    ("abl_sort", &["--quick"]),
+];
+
+fn run_bench_snapshot() -> ExitCode {
+    let root = repo_root();
+    let mut failed = false;
+    for (bench, flags) in SNAPSHOT_BENCHES {
+        println!("xtask bench-snapshot: cargo bench --bench {bench} -- {}", flags.join(" "));
+        let status = std::process::Command::new("cargo")
+            .arg("bench")
+            .arg("--bench")
+            .arg(bench)
+            .arg("--")
+            .args(flags)
+            .current_dir(&root)
+            .status();
+        match status {
+            Ok(s) if s.success() => {}
+            Ok(s) => {
+                eprintln!("xtask bench-snapshot: {bench} exited with {s}");
+                failed = true;
+            }
+            Err(e) => {
+                eprintln!("xtask bench-snapshot: cannot launch cargo: {e}");
+                failed = true;
+            }
+        }
+    }
+    // Benches emit BENCH_*.json into bench_results/ relative to their
+    // working dir; report whatever landed.
+    let mut found = Vec::new();
+    for dir in [root.join("bench_results"), root.join("rust/bench_results")] {
+        if let Ok(entries) = fs::read_dir(&dir) {
+            for entry in entries.flatten() {
+                let p = entry.path();
+                if p.extension().is_some_and(|e| e == "json") {
+                    found.push(p);
+                }
+            }
+        }
+    }
+    found.sort();
+    if found.is_empty() {
+        eprintln!("xtask bench-snapshot: no bench_results/*.json artifacts found");
+        failed = true;
+    } else {
+        println!("xtask bench-snapshot: artifacts:");
+        for p in &found {
+            println!("  {}", p.display());
+        }
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.split_first() {
+        Some((cmd, rest)) if cmd == "lint" => run_lint(rest),
+        Some((cmd, rest)) if cmd == "bench-snapshot" && rest.is_empty() => run_bench_snapshot(),
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- <lint [--root <src-dir>] | bench-snapshot>");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(vs: &[Violation]) -> Vec<&'static str> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    // ---- masking -------------------------------------------------
+
+    #[test]
+    fn mask_blanks_strings_and_strips_comments() {
+        let src = "let s = \".unwrap() // not code\"; // real .unwrap() comment\n";
+        let lines = mask(src);
+        assert_eq!(lines.len(), 1);
+        assert!(!lines[0].code.contains(".unwrap()"), "{:?}", lines[0].code);
+        assert!(lines[0].comment.contains("real .unwrap() comment"));
+    }
+
+    #[test]
+    fn mask_handles_escapes_and_char_literals() {
+        let src = "let c = '\\''; let q = '\"'; let s = \"a\\\"b\"; x.unwrap();\n";
+        let lines = mask(src);
+        assert!(lines[0].code.contains(".unwrap()"));
+        // The double quote hidden inside the char literal must not open
+        // a string that would swallow the rest of the line.
+        assert!(lines[0].code.contains("let s ="));
+    }
+
+    #[test]
+    fn mask_keeps_lifetimes_out_of_char_state() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x } y.unwrap();\n";
+        let lines = mask(src);
+        assert!(lines[0].code.contains(".unwrap()"));
+    }
+
+    #[test]
+    fn mask_handles_raw_strings() {
+        let src = "let r = r#\"unsafe { \"quoted\" }\"#; z.unwrap();\n";
+        let lines = mask(src);
+        assert!(!word_in(&lines[0].code, "unsafe"));
+        assert!(lines[0].code.contains(".unwrap()"));
+    }
+
+    #[test]
+    fn mask_handles_nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ a.unwrap();\n";
+        let lines = mask(src);
+        assert!(lines[0].code.contains(".unwrap()"));
+        assert!(!lines[0].code.contains("still comment"));
+    }
+
+    #[test]
+    fn mask_multiline_string_stays_masked() {
+        let src = "let s = \"line one\nunsafe { boo }\n\"; b.unwrap();\n";
+        let lines = mask(src);
+        assert!(!word_in(&lines[1].code, "unsafe"));
+        assert!(lines[2].code.contains(".unwrap()"));
+    }
+
+    // ---- safety-comment ------------------------------------------
+
+    #[test]
+    fn unsafe_without_safety_comment_is_flagged() {
+        let src = "fn f(p: *mut u8) {\n    unsafe { *p = 0 };\n}\n";
+        let vs = lint_file("algos/x.rs", src);
+        assert_eq!(rules_of(&vs), ["safety-comment"]);
+        assert_eq!(vs[0].line, 2);
+    }
+
+    #[test]
+    fn unsafe_with_safety_comment_above_passes() {
+        let src = "fn f(p: *mut u8) {\n    // SAFETY: p is valid for writes.\n    unsafe { *p = 0 };\n}\n";
+        assert!(lint_file("algos/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_with_same_line_safety_comment_passes() {
+        let src = "fn f(p: *mut u8) {\n    unsafe { *p = 0 }; // SAFETY: p is valid.\n}\n";
+        assert!(lint_file("algos/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_survives_multiline_statement_head() {
+        let src = "fn f(p: *mut u8) {\n    // SAFETY: laundering is fine here.\n    let q: *mut u8 =\n        unsafe { p.add(1) };\n}\n";
+        assert!(lint_file("algos/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_fn_declaration_is_not_flagged() {
+        let src = "/// Docs.\n///\n/// # Safety\n/// Caller checks bounds.\npub unsafe fn g(p: *mut u8) {\n    // SAFETY: contract forwarded from caller.\n    unsafe { *p = 0 };\n}\n";
+        assert!(lint_file("algos/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_impl_requires_safety_comment() {
+        let src = "struct W(*mut u8);\nunsafe impl Send for W {}\n";
+        let vs = lint_file("core/x.rs", src);
+        assert_eq!(rules_of(&vs), ["safety-comment"]);
+    }
+
+    #[test]
+    fn unsafe_in_tests_still_needs_safety_comment() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        unsafe { std::hint::unreachable_unchecked() };\n    }\n}\n";
+        let vs = lint_file("algos/x.rs", src);
+        assert_eq!(rules_of(&vs), ["safety-comment"]);
+    }
+
+    // ---- hot-lock ------------------------------------------------
+
+    #[test]
+    fn mutex_in_hot_module_is_flagged() {
+        let src = "use std::sync::Mutex;\n";
+        for rel in ["exec/a.rs", "algos/a.rs", "core/a.rs", "shard/a.rs"] {
+            let vs = lint_file(rel, src);
+            assert_eq!(rules_of(&vs), ["hot-lock"], "{rel}");
+        }
+    }
+
+    #[test]
+    fn mutex_outside_hot_modules_is_fine() {
+        let src = "use std::sync::{Mutex, RwLock};\n";
+        assert!(lint_file("hla/a.rs", src).is_empty());
+        assert!(lint_file("engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn rwlock_is_flagged_but_mutexguard_alone_is_not() {
+        let vs = lint_file("exec/a.rs", "use std::sync::RwLock;\n");
+        assert_eq!(rules_of(&vs), ["hot-lock"]);
+        // `MutexGuard` as a bare identifier is not `Mutex`.
+        assert!(lint_file("exec/a.rs", "fn f(g: MutexGuard<u32>) {}\n").is_empty());
+    }
+
+    #[test]
+    fn hot_lock_in_test_mod_is_fine() {
+        let src = "#[cfg(test)]\nmod tests {\n    use std::sync::Mutex;\n}\n";
+        assert!(lint_file("core/a.rs", src).is_empty());
+    }
+
+    // ---- hot-panic -----------------------------------------------
+
+    #[test]
+    fn unwrap_and_expect_in_hot_module_are_flagged() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\nfn g(x: Option<u32>) -> u32 {\n    x.expect(\"present\")\n}\n";
+        let vs = lint_file("shard/a.rs", src);
+        assert_eq!(rules_of(&vs), ["hot-panic", "hot-panic"]);
+    }
+
+    #[test]
+    fn unwrap_variants_are_not_flagged() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap_or_else(|| 0) + x.unwrap_or_default()\n}\n";
+        assert!(lint_file("shard/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_in_test_mod_is_fine() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        Some(1).unwrap();\n    }\n}\n";
+        assert!(lint_file("exec/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_in_doc_comment_is_fine() {
+        let src = "/// Call `.unwrap()` on the result.\nfn f() {}\n";
+        assert!(lint_file("exec/a.rs", src).is_empty());
+    }
+
+    // ---- wallclock -----------------------------------------------
+
+    #[test]
+    fn instant_now_outside_measurement_layer_is_flagged() {
+        let src = "fn f() {\n    let t = std::time::Instant::now();\n    drop(t);\n}\n";
+        let vs = lint_file("algos/a.rs", src);
+        assert_eq!(rules_of(&vs), ["wallclock"]);
+        assert!(lint_file("bench/a.rs", src).is_empty());
+        assert!(lint_file("coordinator/a.rs", src).is_empty());
+        assert!(lint_file("main.rs", src).is_empty());
+        assert!(lint_file("cli.rs", src).is_empty());
+    }
+
+    // ---- pub-doc -------------------------------------------------
+
+    #[test]
+    fn undocumented_pub_item_in_exec_is_flagged() {
+        let src = "pub fn undocumented() {}\n";
+        let vs = lint_file("exec/a.rs", src);
+        assert_eq!(rules_of(&vs), ["pub-doc"]);
+        // Outside exec/ the rule does not apply.
+        assert!(lint_file("algos/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn documented_pub_item_passes() {
+        let src = "/// Does the thing.\npub fn documented() {}\n";
+        assert!(lint_file("exec/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn doc_separated_by_attribute_still_counts() {
+        let src = "/// Docs here.\n#[inline]\npub fn fast() {}\n";
+        assert!(lint_file("exec/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pub_use_and_pub_crate_are_not_linted() {
+        let src = "pub use foo::Bar;\npub(crate) fn helper() {}\npub mod sub;\n";
+        assert!(lint_file("exec/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pub_struct_needs_doc_too() {
+        let src = "pub struct Bare {\n    pub field: u32,\n}\n";
+        let vs = lint_file("exec/a.rs", src);
+        // `pub field: u32` is not an item-kind start, so only the
+        // struct itself is flagged.
+        assert_eq!(rules_of(&vs), ["pub-doc"]);
+        assert_eq!(vs[0].line, 1);
+    }
+
+    // ---- waivers -------------------------------------------------
+
+    #[test]
+    fn line_waiver_suppresses_a_single_violation() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // xlint: allow(hot-panic): construction-time only.\n    x.unwrap()\n}\nfn g(y: Option<u32>) -> u32 {\n    y.unwrap()\n}\n";
+        let vs = lint_file("exec/a.rs", src);
+        assert_eq!(rules_of(&vs), ["hot-panic"]);
+        assert_eq!(vs[0].line, 6);
+    }
+
+    #[test]
+    fn same_line_waiver_works() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap() // xlint: allow(hot-panic): justified here.\n}\n";
+        assert!(lint_file("exec/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn file_waiver_suppresses_the_rule_everywhere() {
+        let src = "// xlint: allow-file(hot-lock): the lock is the control plane.\nuse std::sync::Mutex;\nfn f(m: &Mutex<u32>) {}\n";
+        assert!(lint_file("exec/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn waiver_for_one_rule_does_not_leak_to_others() {
+        let src = "// xlint: allow-file(hot-lock): locks are fine here.\nfn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+        let vs = lint_file("exec/a.rs", src);
+        assert_eq!(rules_of(&vs), ["hot-panic"]);
+    }
+
+    // ---- the real tree -------------------------------------------
+
+    #[test]
+    fn real_tree_is_lint_clean() {
+        let src_root = repo_root().join("rust/src");
+        let vs = lint_tree(&src_root).expect("lint the real tree");
+        let listing: Vec<String> = vs.iter().map(|v| v.to_string()).collect();
+        assert!(
+            vs.is_empty(),
+            "rust/src must lint clean:\n{}",
+            listing.join("\n")
+        );
+    }
+}
