@@ -7,6 +7,7 @@
 //! tables and optional CSV output.
 
 pub mod harness;
+pub mod netbench;
 pub mod prop;
 pub mod rss;
 pub mod speedup;

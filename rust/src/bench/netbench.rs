@@ -1,0 +1,173 @@
+//! Loopback measurement helpers for the network service.
+//!
+//! Lives in `bench/` (not `net/`) because it times things: the hot
+//! `net/` tree is wallclock-free by lint, while this module drives a
+//! running server over real sockets with `Instant` in hand. Used by
+//! `ddm bench-net` and `benches/abl_net.rs`.
+//!
+//! Every run doubles as a correctness check: the diff stream observed
+//! over the wire is asserted equal — epoch numbers included — to an
+//! in-process session replaying the identical op script, so a
+//! throughput number from this module is also an end-to-end
+//! equivalence witness.
+
+use std::time::Instant;
+
+use crate::core::interval::Interval;
+use crate::engine::DdmEngine;
+use crate::net::{NetClient, RegionOp};
+use crate::prng::Rng;
+use crate::shard::AnySession;
+
+/// One loopback run's outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct LoopbackResult {
+    /// Region ops staged over the wire (all connections, all epochs).
+    pub ops: usize,
+    /// Staging throughput: ops sent / wall-clock of send+sync phases.
+    pub ops_per_s: f64,
+    /// Mean commit→diff round-trip per epoch, seconds.
+    pub commit_latency_s: f64,
+    /// Total pairs added across all epoch diffs.
+    pub added: usize,
+    /// Total pairs removed across all epoch diffs.
+    pub removed: usize,
+}
+
+/// The per-connection churn script: connection `c` of `conns` owns the
+/// keys `k ≡ c (mod conns)` below `n` — disjoint ranges, so the LWW
+/// batch semantics make the multi-connection interleaving
+/// deterministic. Epoch 0 upserts a subscription + update region per
+/// owned key; later epochs move ~20% of them.
+pub fn conn_script(
+    seed: u64,
+    conn: usize,
+    conns: usize,
+    n: usize,
+    epochs: usize,
+    d: usize,
+) -> Vec<Vec<RegionOp>> {
+    let mut rng = Rng::new(seed ^ (conn as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let space = 1e6;
+    let mut rect = |rng: &mut Rng| -> Vec<Interval> {
+        (0..d)
+            .map(|_| {
+                let lo = rng.uniform(0.0, space);
+                Interval::new(lo, lo + rng.uniform(space * 1e-4, space * 1e-2))
+            })
+            .collect()
+    };
+    let keys: Vec<u32> = (0..n as u32).filter(|k| *k as usize % conns == conn).collect();
+    let mut out = Vec::with_capacity(epochs.max(1));
+    let mut first = Vec::with_capacity(2 * keys.len());
+    for &key in &keys {
+        first.push(RegionOp::UpsertSub { key, rect: rect(&mut rng) });
+        first.push(RegionOp::UpsertUpd { key, rect: rect(&mut rng) });
+    }
+    out.push(first);
+    if keys.is_empty() {
+        out.resize(epochs.max(1), Vec::new());
+        return out;
+    }
+    let moves = (keys.len() / 5).max(1);
+    for _ in 1..epochs.max(1) {
+        let mut ops = Vec::with_capacity(moves);
+        for _ in 0..moves {
+            let key = keys[rng.below(keys.len() as u64) as usize];
+            let r = rect(&mut rng);
+            ops.push(if rng.chance(0.5) {
+                RegionOp::UpsertSub { key, rect: r }
+            } else {
+                RegionOp::UpsertUpd { key, rect: r }
+            });
+        }
+        out.push(ops);
+    }
+    out
+}
+
+fn apply_local(sess: &mut AnySession, ops: &[RegionOp]) {
+    for op in ops {
+        match op {
+            RegionOp::UpsertSub { key, rect } => sess.upsert_subscription(*key, rect),
+            RegionOp::UpsertUpd { key, rect } => sess.upsert_update(*key, rect),
+            RegionOp::RemoveSub { key } => sess.remove_subscription(*key),
+            RegionOp::RemoveUpd { key } => sess.remove_update(*key),
+        }
+    }
+}
+
+/// Drive the churn script against a worker at `addr` over `conns`
+/// connections with disjoint key ranges; per epoch, every connection
+/// stages its ops and `Sync`-barriers, then connection 0 commits.
+/// The observed diff stream is asserted equal (epochs included) to an
+/// in-process single-session replay of the same ops.
+pub fn bench_loopback(
+    addr: &str,
+    conns: usize,
+    n: usize,
+    epochs: usize,
+    seed: u64,
+    d: usize,
+) -> crate::Result<LoopbackResult> {
+    let conns = conns.max(1);
+    let mut clients = Vec::with_capacity(conns);
+    for _ in 0..conns {
+        clients.push(NetClient::connect(addr)?);
+    }
+    let scripts: Vec<Vec<Vec<RegionOp>>> = (0..conns)
+        .map(|c| conn_script(seed, c, conns, n, epochs, d))
+        .collect();
+
+    let engine = DdmEngine::builder().threads(2).build();
+    let mut local = AnySession::Single(engine.session(d));
+
+    let mut total_ops = 0usize;
+    let mut stage_s = 0.0f64;
+    let mut commit_s = 0.0f64;
+    let (mut added, mut removed) = (0usize, 0usize);
+    let epochs = epochs.max(1);
+    for e in 0..epochs {
+        let t0 = Instant::now();
+        for (c, client) in clients.iter_mut().enumerate() {
+            let ops = &scripts[c][e];
+            total_ops += ops.len();
+            client.batch(ops.clone())?;
+        }
+        // Barrier: a SyncAck proves the server consumed everything this
+        // connection sent before it.
+        for (c, client) in clients.iter_mut().enumerate() {
+            client.sync((e * conns + c) as u64)?;
+        }
+        stage_s += t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let diff = clients[0].commit()?;
+        commit_s += t1.elapsed().as_secs_f64();
+
+        for script in &scripts {
+            apply_local(&mut local, &script[e]);
+        }
+        let want = local.commit();
+        if want != diff {
+            crate::bail!(
+                "epoch {e}: wire diff (epoch {}, +{} -{}) != local replay (epoch {}, +{} -{})",
+                diff.epoch,
+                diff.added.len(),
+                diff.removed.len(),
+                want.epoch,
+                want.added.len(),
+                want.removed.len()
+            );
+        }
+        added += diff.added.len();
+        removed += diff.removed.len();
+    }
+    Ok(LoopbackResult {
+        ops: total_ops,
+        ops_per_s: total_ops as f64 / stage_s.max(1e-9),
+        commit_latency_s: commit_s / epochs as f64,
+        added,
+        removed,
+    })
+}

@@ -145,6 +145,33 @@
 //! allocation-free; `ddm match --repeat R` shows cold vs warm from
 //! the CLI.
 //!
+//! ## Over the wire: the network service and federation
+//!
+//! Everything above also runs as a service ([`net`]): `ddm serve`
+//! fronts an [`shard::AnySession`] behind a compact length-prefixed
+//! binary protocol (pure `std`, no async runtime), `ddm route` serves
+//! the federation topology, and [`net::FederationClient`] spreads a
+//! workload across router + workers while merging per-worker diffs
+//! with the same refcount discipline [`shard::ShardedSession`] uses
+//! across shards — so the federated diff stream is byte-equal to the
+//! in-process one. Driving a server from code:
+//!
+//! ```no_run
+//! use ddm::core::Interval;
+//! use ddm::net::{NetClient, RegionOp};
+//!
+//! fn main() -> ddm::Result<()> {
+//!     // `ddm serve --listen 127.0.0.1:7777 --d 1` is running.
+//!     let mut client = NetClient::connect("127.0.0.1:7777")?;
+//!     client.op(RegionOp::UpsertSub { key: 0, rect: vec![Interval::new(0.0, 2.0)] })?;
+//!     client.op(RegionOp::UpsertUpd { key: 7, rect: vec![Interval::new(1.0, 3.0)] })?;
+//!     let diff = client.commit()?; // epoch closes server-side
+//!     assert_eq!(diff.added, vec![(0, 7)]);
+//!     println!("epoch {}: +{} -{}", diff.epoch, diff.added.len(), diff.removed.len());
+//!     Ok(())
+//! }
+//! ```
+//!
 //! The crate contains:
 //!
 //! * [`engine`] — the unified matching API: the [`engine::Matcher`]
@@ -179,6 +206,10 @@
 //! * [`algos`] — the matching algorithms: BFM (Alg. 2), GBM (Alg. 3),
 //!   SBM (Alg. 4), ITM (Alg. 5, §3) and **Parallel SBM** (Alg. 6+7, §4,
 //!   the paper's main contribution), plus dynamic interval management.
+//! * [`net`] — the network service: binary wire protocol
+//!   ([`net::proto`]), nonblocking TCP server core ([`net::server`]),
+//!   worker/router services, and the federation client that merges
+//!   per-worker diffs exactly once ([`net::FederationClient`]).
 //! * [`hla`] — a miniature HLA/RTI Data Distribution Management service:
 //!   dimensions, region specifications, federates and notification
 //!   routing (the system that consumes the matchers).
@@ -206,6 +237,7 @@ pub mod engine;
 pub mod error;
 pub mod session;
 pub mod shard;
+pub mod net;
 pub mod exec;
 pub mod sets;
 pub mod algos;

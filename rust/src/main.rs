@@ -5,7 +5,11 @@
 //!   ddm xla-match  same, on the AOT-compiled XLA backend
 //!   ddm replay     replay epochs of region churn (session diffs,
 //!                  sharded session diffs, or full rebuild per epoch)
-//!   ddm serve      run the coordinator service on a scripted scenario
+//!   ddm serve      with --listen: network worker serving the binary
+//!                  DDM protocol; without: scripted coordinator scenario
+//!   ddm route      network router: serves the federation topology
+//!   ddm client     scripted op stream against a worker or federation
+//!   ddm bench-net  quick loopback throughput/latency measurement
 //!   ddm info       host/Table-1 report + artifact status
 //!
 //! Examples:
@@ -19,6 +23,12 @@
 //!   ddm match --algo psbm --n 1e6 --shards 8
 //!   ddm xla-match --n 4096 --alpha 10
 //!   ddm serve --config examples/service.toml
+//!   ddm serve --listen 127.0.0.1:7777 --d 1 --shards 4 --span 0,1e6
+//!   ddm route --listen 127.0.0.1:7700 --workers 127.0.0.1:7701,127.0.0.1:7702 \
+//!             --shards 4 --span 0,1e6
+//!   ddm client --addr 127.0.0.1:7777 --n 1000 --epochs 5 --verify --metrics
+//!   ddm client --router 127.0.0.1:7700 --n 1000 --shutdown
+//!   ddm bench-net --n 2000 --conns 1,2,4
 
 use std::time::Instant;
 
@@ -35,7 +45,7 @@ use ddm::workload::{alpha_workload, nd_alpha_workload, nd_correlated_workload, A
 
 fn usage() -> ! {
     eprintln!(
-        "usage: ddm <match|xla-match|replay|serve|info> [options]\n\
+        "usage: ddm <match|xla-match|replay|serve|route|client|bench-net|info> [options]\n\
          options are documented in rust/src/main.rs and README.md"
     );
     std::process::exit(2)
@@ -365,9 +375,436 @@ fn cmd_replay(args: &Args) {
     }
 }
 
+/// `ddm serve` fronts two very different things: with `--listen` it is
+/// a network worker speaking the binary DDM protocol; without, the
+/// original scripted coordinator scenario.
 fn cmd_serve(args: &Args) {
-    // Scripted scenario driven by a config file: a population of
-    // moving vehicle federates publishing position updates each step.
+    if args.get("listen").is_some() {
+        cmd_serve_net(args);
+    } else {
+        cmd_serve_scripted(args);
+    }
+}
+
+/// Network worker: an [`AnySession`](ddm::shard::AnySession) behind
+/// `ddm::net::serve`. Sharding mirrors the in-process builder surface:
+/// `--cuts c1,c2,…` pins explicit global cut points (what a federation
+/// worker gets from `ddm route`'s printed hints), `--shards N --span
+/// LO,HI` builds uniform stripes, neither means a single unsharded
+/// session. Runs until a wire `Shutdown` arrives, then flushes, says
+/// `Goodbye`, joins every thread and prints final metrics.
+fn cmd_serve_net(args: &Args) {
+    let listen = args.get("listen").unwrap_or("127.0.0.1:0").to_string();
+    let d: usize = args.opt("d", 1usize);
+    let threads: usize = args.opt("threads", 2usize);
+    let split_dim: usize = args.opt("split-dim", 0usize);
+    if d == 0 || split_dim >= d {
+        die(&format!("--split-dim {split_dim} out of range for --d {d}"));
+    }
+    let engine = DdmEngine::builder()
+        .algo_str(args.get("algo").unwrap_or("psbm"))
+        .unwrap_or_else(|e| die(&e))
+        .threads(threads)
+        .build();
+    let cuts: Option<Vec<f64>> = args.try_list("cuts").unwrap_or_else(|e| die(&e));
+    let shards: usize = args.opt("shards", 1usize);
+    let session = match cuts {
+        Some(cuts) => ddm::shard::AnySession::Sharded(engine.sharded_session_with(
+            d,
+            ddm::shard::SpacePartitioner::from_cuts(split_dim, cuts),
+        )),
+        None if shards > 1 => {
+            let span: Vec<f64> = args.list("span", &[0.0, 1e6]);
+            if span.len() != 2 || span[0] >= span[1] {
+                die("--span needs LO,HI with LO < HI");
+            }
+            ddm::shard::AnySession::Sharded(engine.sharded_session_with(
+                d,
+                ddm::shard::SpacePartitioner::uniform(
+                    shards,
+                    split_dim,
+                    ddm::core::Interval::new(span[0], span[1]),
+                ),
+            ))
+        }
+        None => ddm::shard::AnySession::Single(engine.session(d)),
+    };
+    let stripes = session.shards();
+    let cfg = ddm::net::ServerConfig {
+        listen,
+        io_threads: args.opt("io-threads", 2usize),
+    };
+    let handle = ddm::net::serve(&cfg, ddm::net::WorkerService::new(session))
+        .unwrap_or_else(|e| die(&format!("serve: {e}")));
+    println!(
+        "serve: worker on {} (d={d}, {stripes} stripe{})",
+        handle.addr(),
+        if stripes == 1 { "" } else { "s" }
+    );
+    write_port_file(args, handle.addr());
+    let metrics = handle.join();
+    println!("serve: stopped cleanly");
+    metrics.table().print();
+}
+
+/// Network router: topology authority only. Builds the global shard
+/// map (uniform cuts over `--span`, or explicit `--cuts`), assigns
+/// contiguous stripe ranges to `--workers`, prints the exact `ddm
+/// serve --cuts …` command for each worker (the local cut slice that
+/// makes federated routing bit-identical to a flat sharded session),
+/// and serves `GetTopology` until a wire `Shutdown`.
+fn cmd_route(args: &Args) {
+    let listen = args.get("listen").unwrap_or("127.0.0.1:0").to_string();
+    let d: usize = args.opt("d", 1usize);
+    let split_dim: usize = args.opt("split-dim", 0usize);
+    if d == 0 || split_dim >= d {
+        die(&format!("--split-dim {split_dim} out of range for --d {d}"));
+    }
+    let workers: Vec<String> = args
+        .try_list("workers")
+        .unwrap_or_else(|e| die(&e))
+        .unwrap_or_default();
+    if workers.is_empty() {
+        die("--workers ADDR1,ADDR2,… is required");
+    }
+    let cuts: Vec<f64> = match args.try_list("cuts").unwrap_or_else(|e| die(&e)) {
+        Some(c) => c,
+        None => {
+            let shards: usize = args.opt("shards", workers.len());
+            let span: Vec<f64> = args.list("span", &[0.0, 1e6]);
+            if span.len() != 2 || span[0] >= span[1] {
+                die("--span needs LO,HI with LO < HI");
+            }
+            ddm::shard::SpacePartitioner::uniform(
+                shards,
+                split_dim,
+                ddm::core::Interval::new(span[0], span[1]),
+            )
+            .cuts()
+            .to_vec()
+        }
+    };
+    let shards = cuts.len() + 1;
+    if workers.len() > shards {
+        die(&format!(
+            "{} workers but only {shards} stripes; drop workers or raise --shards",
+            workers.len()
+        ));
+    }
+    let table = ddm::net::assign_stripes(shards, &workers);
+    for entry in &table {
+        let local: Vec<String> = cuts[entry.first as usize..entry.last as usize]
+            .iter()
+            .map(|c| format!("{c}"))
+            .collect();
+        println!(
+            "route: {} owns stripes {}..={}  →  ddm serve --listen {} --d {d} \
+             --split-dim {split_dim} --cuts {}",
+            entry.addr,
+            entry.first,
+            entry.last,
+            entry.addr,
+            if local.is_empty() {
+                String::new()
+            } else {
+                local.join(",")
+            }
+        );
+    }
+    let topo = ddm::net::TopologySnapshot {
+        d: d as u32,
+        split_dim: split_dim as u32,
+        cuts,
+        workers: table,
+    };
+    let n_workers = workers.len();
+    let cfg = ddm::net::ServerConfig {
+        listen,
+        io_threads: 1,
+    };
+    let handle = ddm::net::serve(&cfg, ddm::net::RouterService::new(topo))
+        .unwrap_or_else(|e| die(&format!("route: {e}")));
+    println!(
+        "route: router on {} ({shards} stripes, {n_workers} workers)",
+        handle.addr()
+    );
+    write_port_file(args, handle.addr());
+    let metrics = handle.join();
+    println!("route: stopped cleanly");
+    metrics.table().print();
+}
+
+/// Write the bound address to `--port-file` (how scripts and CI find
+/// an ephemeral port).
+fn write_port_file(args: &Args, addr: std::net::SocketAddr) {
+    if let Some(path) = args.get("port-file") {
+        std::fs::write(path, addr.to_string())
+            .unwrap_or_else(|e| die(&format!("--port-file {path}: {e}")));
+    }
+}
+
+/// The deterministic churn script every net consumer replays: epoch 0
+/// upserts `n` subscription + `n` update regions, later epochs move a
+/// `churn` fraction (with 10% of moves being remove/re-insert churn).
+/// Same seed ⇒ same ops, whether applied over a socket, through a
+/// federation, or to an in-process session — which is what makes
+/// `--verify` and the equivalence tests meaningful.
+fn net_script(
+    seed: u64,
+    d: usize,
+    n: usize,
+    epochs: usize,
+    churn: f64,
+    space: f64,
+) -> Vec<Vec<ddm::net::RegionOp>> {
+    use ddm::net::RegionOp;
+    let mut rng = ddm::prng::Rng::new(seed);
+    let mut rect = |rng: &mut ddm::prng::Rng| -> Vec<ddm::core::Interval> {
+        (0..d)
+            .map(|_| {
+                let lo = rng.uniform(0.0, space);
+                ddm::core::Interval::new(lo, lo + rng.uniform(space * 1e-4, space * 1e-2))
+            })
+            .collect()
+    };
+    let mut out = Vec::with_capacity(epochs.max(1));
+    let mut first = Vec::with_capacity(2 * n);
+    for key in 0..n as u32 {
+        first.push(RegionOp::UpsertSub { key, rect: rect(&mut rng) });
+        first.push(RegionOp::UpsertUpd { key, rect: rect(&mut rng) });
+    }
+    out.push(first);
+    if n == 0 {
+        return out;
+    }
+    let moves = (((2 * n) as f64) * churn).ceil().max(1.0) as usize;
+    for _ in 1..epochs.max(1) {
+        let mut ops = Vec::with_capacity(moves);
+        for _ in 0..moves {
+            let key = rng.below(n as u64) as u32;
+            let sub = rng.chance(0.5);
+            if rng.chance(0.1) {
+                ops.push(if sub {
+                    RegionOp::RemoveSub { key }
+                } else {
+                    RegionOp::RemoveUpd { key }
+                });
+            } else {
+                let r = rect(&mut rng);
+                ops.push(if sub {
+                    RegionOp::UpsertSub { key, rect: r }
+                } else {
+                    RegionOp::UpsertUpd { key, rect: r }
+                });
+            }
+        }
+        out.push(ops);
+    }
+    out
+}
+
+/// Apply one epoch of script ops to an in-process session (the verify
+/// baseline).
+fn apply_local(sess: &mut ddm::shard::AnySession, ops: &[ddm::net::RegionOp]) {
+    use ddm::net::RegionOp;
+    for op in ops {
+        match op {
+            RegionOp::UpsertSub { key, rect } => sess.upsert_subscription(*key, rect),
+            RegionOp::UpsertUpd { key, rect } => sess.upsert_update(*key, rect),
+            RegionOp::RemoveSub { key } => sess.remove_subscription(*key),
+            RegionOp::RemoveUpd { key } => sess.remove_update(*key),
+        }
+    }
+}
+
+/// Apply one epoch of script ops through a federation client (which
+/// routes each op to the workers owning its stripes).
+fn apply_fed(
+    fed: &mut ddm::net::FederationClient,
+    ops: &[ddm::net::RegionOp],
+) -> ddm::Result<()> {
+    use ddm::net::RegionOp;
+    for op in ops {
+        match op {
+            RegionOp::UpsertSub { key, rect } => fed.upsert_subscription(*key, rect)?,
+            RegionOp::UpsertUpd { key, rect } => fed.upsert_update(*key, rect)?,
+            RegionOp::RemoveSub { key } => fed.remove_subscription(*key)?,
+            RegionOp::RemoveUpd { key } => fed.remove_update(*key)?,
+        }
+    }
+    Ok(())
+}
+
+/// Scripted op stream against `--addr` (one worker) or `--router` (a
+/// federation). Per epoch: stage ops, commit, report the diff.
+/// `--verify` replays the identical script on an in-process session
+/// and asserts every epoch's added/removed lists match (run it against
+/// a freshly started server). `--metrics` prints the server metrics
+/// table; `--shutdown` stops the server(s) and waits for `Goodbye`.
+fn cmd_client(args: &Args) {
+    let n: usize = args.size("n", 1000);
+    let epochs: usize = args.opt("epochs", 5usize);
+    let churn: f64 = args.opt("churn", 0.1f64);
+    let seed: u64 = args.opt("seed", 42u64);
+    let space: f64 = args.opt("space", 1e6);
+
+    enum Target {
+        Single(ddm::net::NetClient),
+        Fed(ddm::net::FederationClient),
+    }
+    let mut target = match (args.get("router"), args.get("addr")) {
+        (Some(router), _) => Target::Fed(
+            ddm::net::FederationClient::connect(router)
+                .unwrap_or_else(|e| die(&format!("connect {router}: {e}"))),
+        ),
+        (None, Some(addr)) => Target::Single(
+            ddm::net::NetClient::connect(addr)
+                .unwrap_or_else(|e| die(&format!("connect {addr}: {e}"))),
+        ),
+        (None, None) => die("--addr ADDR or --router ADDR is required"),
+    };
+    let d = match &target {
+        Target::Single(c) => c.d(),
+        Target::Fed(f) => f.d(),
+    };
+
+    if n > 0 {
+        let script = net_script(seed, d, n, epochs, churn, space);
+        let mut verify = args.flag("verify").then(|| {
+            ddm::shard::AnySession::Single(
+                DdmEngine::builder()
+                    .threads(args.opt("threads", 2usize))
+                    .build()
+                    .session(d),
+            )
+        });
+        let t0 = Instant::now();
+        let mut total_ops = 0usize;
+        for (e, ops) in script.iter().enumerate() {
+            total_ops += ops.len();
+            let diff = match &mut target {
+                Target::Single(c) => {
+                    c.batch(ops.clone())
+                        .and_then(|()| c.commit())
+                        .unwrap_or_else(|err| die(&format!("epoch {e}: {err}")))
+                }
+                Target::Fed(f) => apply_fed(f, ops)
+                    .and_then(|()| f.commit())
+                    .unwrap_or_else(|err| die(&format!("epoch {e}: {err}"))),
+            };
+            println!(
+                "epoch {e}: {} ops, +{} -{} pairs (epoch {})",
+                ops.len(),
+                diff.added.len(),
+                diff.removed.len(),
+                diff.epoch
+            );
+            if let Some(local) = verify.as_mut() {
+                apply_local(local, ops);
+                let want = local.commit();
+                if want.added != diff.added || want.removed != diff.removed {
+                    die(&format!(
+                        "epoch {e}: server diff (+{} -{}) diverges from local replay (+{} -{})",
+                        diff.added.len(),
+                        diff.removed.len(),
+                        want.added.len(),
+                        want.removed.len()
+                    ));
+                }
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "client: {total_ops} ops / {} epochs in {} ({:.0} ops/s){}",
+            script.len(),
+            ddm::bench::stats::fmt_secs(dt),
+            total_ops as f64 / dt.max(1e-9),
+            if verify.is_some() {
+                " — verified against in-process replay"
+            } else {
+                ""
+            }
+        );
+    }
+
+    if args.flag("metrics") {
+        match &mut target {
+            Target::Single(c) => {
+                let m = c.metrics().unwrap_or_else(|e| die(&format!("metrics: {e}")));
+                m.table().print();
+            }
+            Target::Fed(f) => {
+                let snaps = f
+                    .worker_metrics()
+                    .unwrap_or_else(|e| die(&format!("metrics: {e}")));
+                for (i, m) in snaps.iter().enumerate() {
+                    println!("worker {i}:");
+                    m.table().print();
+                }
+            }
+        }
+    }
+
+    if args.flag("shutdown") {
+        match &mut target {
+            Target::Single(c) => {
+                c.shutdown_server()
+                    .and_then(|()| c.await_goodbye())
+                    .map(|epoch| println!("client: server said goodbye at epoch {epoch}"))
+                    .unwrap_or_else(|e| die(&format!("shutdown: {e}")));
+            }
+            Target::Fed(f) => {
+                f.shutdown_workers()
+                    .unwrap_or_else(|e| die(&format!("shutdown: {e}")));
+                println!("client: all workers said goodbye");
+            }
+        }
+    }
+}
+
+/// Quick loopback measurement (the full sweep lives in
+/// `benches/abl_net.rs`): spawns an in-process worker server, drives
+/// the churn script over `--conns` connections with disjoint key
+/// ranges, and reports staged ops/s plus commit→diff latency. With one
+/// connection the diff stream is asserted equal to an in-process
+/// replay.
+fn cmd_bench_net(args: &Args) {
+    let n: usize = args.size("n", 2000);
+    let epochs: usize = args.opt("epochs", 4usize);
+    let conns_list: Vec<usize> = args.list("conns", &[1, 2, 4]);
+    let seed: u64 = args.opt("seed", 42u64);
+    let d: usize = args.opt("d", 1usize);
+
+    let mut table = ddm::bench::table::Table::new(vec![
+        "conns", "ops", "ops_per_s", "commit_ms", "added", "removed",
+    ]);
+    for &conns in &conns_list {
+        let engine = DdmEngine::builder()
+            .threads(args.opt("threads", 2usize))
+            .build();
+        let service =
+            ddm::net::WorkerService::new(ddm::shard::AnySession::Single(engine.session(d)));
+        let handle = ddm::net::serve(&ddm::net::ServerConfig::default(), service)
+            .unwrap_or_else(|e| die(&format!("bench-net: {e}")));
+        let addr = handle.addr().to_string();
+        let r = ddm::bench::netbench::bench_loopback(&addr, conns, n, epochs, seed, d)
+            .unwrap_or_else(|e| die(&format!("bench-net ({conns} conns): {e}")));
+        let _ = handle.shutdown();
+        table.row(vec![
+            conns.to_string(),
+            r.ops.to_string(),
+            format!("{:.0}", r.ops_per_s),
+            format!("{:.3}", r.commit_latency_s * 1e3),
+            r.added.to_string(),
+            r.removed.to_string(),
+        ]);
+    }
+    table.print();
+}
+
+/// Scripted scenario driven by a config file: a population of moving
+/// vehicle federates publishing position updates each step.
+fn cmd_serve_scripted(args: &Args) {
     let cfg_path = args.get("config").map(std::path::PathBuf::from);
     let cfg = cfg_path
         .as_deref()
@@ -457,6 +894,9 @@ fn main() {
         "xla-match" => cmd_xla_match(&args),
         "replay" => cmd_replay(&args),
         "serve" => cmd_serve(&args),
+        "route" => cmd_route(&args),
+        "client" => cmd_client(&args),
+        "bench-net" => cmd_bench_net(&args),
         "info" => cmd_info(&args),
         _ => usage(),
     }

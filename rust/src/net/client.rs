@@ -1,0 +1,526 @@
+//! Blocking clients: one socket ([`NetClient`]) and the federation
+//! front-end ([`FederationClient`]) that speaks to a router + workers.
+//!
+//! `FederationClient` is where exactly-once reporting crosses process
+//! boundaries. It re-runs the refcount-merge protocol of
+//! [`ShardedSession`](crate::shard::ShardedSession) one level up:
+//!
+//! * each worker owns contiguous global stripes and reports a
+//!   *worker-local* diff per epoch — itself already a refcounted merge
+//!   over that worker's stripes;
+//! * the client folds worker diffs through a `pair → refcount` map and
+//!   surfaces only `0 ↔ >0` transitions.
+//!
+//! Refcounts compose hierarchically: a pair is globally matched iff
+//! some stripe matches it, a worker's diff is exactly its
+//! worker-presence delta, so the client-side fold reproduces — pair
+//! for pair, epoch for epoch — the diff a flat `ShardedSession` over
+//! the same global cuts would emit. The integration suite and
+//! `abl_net` assert that equality byte-for-byte.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::core::interval::Interval;
+use crate::core::sink::{pack_pair, unpack_pair, PairVec};
+use crate::session::MatchDiff;
+use crate::shard::SpacePartitioner;
+
+use super::proto::{MetricsSnapshot, Msg, RegionOp, Role, TopologySnapshot, PROTO_ID};
+
+/// One blocking connection to a DDM server, with the `Hello`/`Welcome`
+/// handshake already done.
+///
+/// Replies are matched by arrival order, so keep a connection to one
+/// conversation at a time: a connection that `Subscribe`d should not
+/// also issue `commit()` while *other* clients commit, or it may read
+/// a broadcast diff as its reply (single-committer setups — every test
+/// and bench here — are unambiguous).
+pub struct NetClient {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    role: Role,
+    d: usize,
+    epoch: u64,
+}
+
+impl NetClient {
+    /// Connect, handshake, and return a ready client. The socket gets
+    /// a read timeout (default 30 s — see
+    /// [`set_timeout`](Self::set_timeout)) so a hung server turns into
+    /// an error, never a stuck process.
+    pub fn connect(addr: &str) -> crate::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let mut c = Self {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            role: Role::Worker,
+            d: 0,
+            epoch: 0,
+        };
+        c.send(&Msg::Hello { proto: PROTO_ID })?;
+        match c.recv()? {
+            Msg::Welcome { role, d, epoch } => {
+                c.role = role;
+                c.d = d as usize;
+                c.epoch = epoch;
+                Ok(c)
+            }
+            Msg::ErrorReply { code, msg } => {
+                crate::bail!("handshake rejected by {addr}: error {code}: {msg}")
+            }
+            other => crate::bail!("unexpected handshake reply from {addr}: {other:?}"),
+        }
+    }
+
+    /// Endpoint role from the handshake.
+    pub fn role(&self) -> Role {
+        self.role
+    }
+
+    /// Session dimensionality from the handshake.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Last epoch observed (handshake or most recent diff).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Override the read timeout (benches and tests shorten it).
+    pub fn set_timeout(&mut self, t: Duration) -> crate::Result<()> {
+        self.stream.set_read_timeout(Some(t))?;
+        Ok(())
+    }
+
+    /// Encode and write one message (blocking until accepted).
+    pub fn send(&mut self, msg: &Msg) -> crate::Result<()> {
+        self.wbuf.clear();
+        msg.encode(&mut self.wbuf);
+        self.stream.write_all(&self.wbuf)?;
+        Ok(())
+    }
+
+    /// Read the next message (blocking, bounded by the read timeout).
+    pub fn recv(&mut self) -> crate::Result<Msg> {
+        let mut tmp = [0u8; 16 * 1024];
+        loop {
+            if let Some((msg, used)) = Msg::decode(&self.rbuf)? {
+                self.rbuf.drain(..used);
+                if let Msg::Diff(d) = &msg {
+                    self.epoch = d.epoch;
+                }
+                return Ok(msg);
+            }
+            let n = self.stream.read(&mut tmp)?;
+            if n == 0 {
+                crate::bail!("connection closed by server");
+            }
+            self.rbuf.extend_from_slice(&tmp[..n]);
+        }
+    }
+
+    /// Next message, with server `ErrorReply` promoted to an error.
+    fn recv_ok(&mut self, awaiting: &str) -> crate::Result<Msg> {
+        match self.recv()? {
+            Msg::ErrorReply { code, msg } => {
+                crate::bail!("server error {code} while awaiting {awaiting}: {msg}")
+            }
+            msg => Ok(msg),
+        }
+    }
+
+    /// Stage one region op (fire-and-forget; the server stages it into
+    /// the session's LWW batch).
+    pub fn op(&mut self, op: RegionOp) -> crate::Result<()> {
+        self.send(&Msg::Op(op))
+    }
+
+    /// Stage a batch of ops in one frame.
+    pub fn batch(&mut self, ops: Vec<RegionOp>) -> crate::Result<()> {
+        self.send(&Msg::Batch(ops))
+    }
+
+    /// Apply staged ops without closing an epoch.
+    pub fn flush(&mut self) -> crate::Result<()> {
+        self.send(&Msg::Flush)
+    }
+
+    /// Close an epoch: commit and return the resulting diff.
+    pub fn commit(&mut self) -> crate::Result<MatchDiff> {
+        self.send(&Msg::Commit)?;
+        self.await_diff()
+    }
+
+    /// Wait for the next [`Msg::Diff`] (skipping unrelated frames such
+    /// as `SyncAck`s from earlier pipelined requests).
+    pub fn await_diff(&mut self) -> crate::Result<MatchDiff> {
+        loop {
+            if let Msg::Diff(d) = self.recv_ok("diff")? {
+                return Ok(d);
+            }
+        }
+    }
+
+    /// Round-trip a `Sync` token: returns `(epoch, staged ops)`. Acts
+    /// as a barrier proving the server consumed everything sent before
+    /// it.
+    pub fn sync(&mut self, token: u64) -> crate::Result<(u64, u64)> {
+        self.send(&Msg::Sync { token })?;
+        loop {
+            if let Msg::SyncAck {
+                token: t,
+                epoch,
+                pending,
+            } = self.recv_ok("sync ack")?
+            {
+                if t == token {
+                    return Ok((epoch, pending));
+                }
+            }
+        }
+    }
+
+    /// Ask for every future epoch's diff on this connection.
+    pub fn subscribe(&mut self) -> crate::Result<()> {
+        self.send(&Msg::Subscribe)
+    }
+
+    /// Fetch the retained pair set.
+    pub fn pairs(&mut self) -> crate::Result<PairVec> {
+        self.send(&Msg::GetPairs)?;
+        loop {
+            if let Msg::Pairs(p) = self.recv_ok("pairs")? {
+                return Ok(p);
+            }
+        }
+    }
+
+    /// Fetch the server's metrics snapshot.
+    pub fn metrics(&mut self) -> crate::Result<MetricsSnapshot> {
+        self.send(&Msg::GetMetrics)?;
+        loop {
+            if let Msg::Metrics(m) = self.recv_ok("metrics")? {
+                return Ok(m);
+            }
+        }
+    }
+
+    /// Fetch the federation topology (router endpoints only).
+    pub fn topology(&mut self) -> crate::Result<TopologySnapshot> {
+        self.send(&Msg::GetTopology)?;
+        loop {
+            if let Msg::Topology(t) = self.recv_ok("topology")? {
+                return Ok(t);
+            }
+        }
+    }
+
+    /// Ask the server to shut down (it flushes, commits, and says
+    /// `Goodbye` to everyone).
+    pub fn shutdown_server(&mut self) -> crate::Result<()> {
+        self.send(&Msg::Shutdown)
+    }
+
+    /// Wait for the server's `Goodbye`; returns its final epoch.
+    pub fn await_goodbye(&mut self) -> crate::Result<u64> {
+        loop {
+            if let Msg::Goodbye { epoch } = self.recv_ok("goodbye")? {
+                return Ok(epoch);
+            }
+        }
+    }
+}
+
+/// Where a key currently lives: the inclusive worker range holding
+/// replicas of its region.
+type WorkerRange = (usize, usize);
+
+/// A client of a whole federation: routes ops to the workers owning
+/// each region's stripes, merges their per-epoch diffs exactly once.
+pub struct FederationClient {
+    part: SpacePartitioner,
+    /// Global stripe index → worker index (non-decreasing, so a stripe
+    /// range maps to a contiguous worker range).
+    stripe_worker: Vec<usize>,
+    workers: Vec<NetClient>,
+    sub_home: HashMap<u32, WorkerRange>,
+    upd_home: HashMap<u32, WorkerRange>,
+    /// packed pair → number of workers currently reporting it.
+    pair_refs: HashMap<u64, u32>,
+    epoch: u64,
+    d: usize,
+}
+
+impl FederationClient {
+    /// Connect to the router at `addr`, fetch the topology, connect to
+    /// every worker. The router connection is dropped afterwards — it
+    /// is not part of the hot path.
+    pub fn connect(addr: &str) -> crate::Result<Self> {
+        let mut router = NetClient::connect(addr)?;
+        if router.role() != Role::Router {
+            crate::bail!("{addr} is not a router (role {:?})", router.role());
+        }
+        let topo = router.topology()?;
+        Self::from_topology(&topo)
+    }
+
+    /// Build directly from a topology snapshot (what `connect` does
+    /// after asking the router).
+    pub fn from_topology(topo: &TopologySnapshot) -> crate::Result<Self> {
+        let shards = topo.shards();
+        if topo.workers.is_empty() {
+            crate::bail!("topology has no workers");
+        }
+        let mut stripe_worker = vec![usize::MAX; shards];
+        for (w, entry) in topo.workers.iter().enumerate() {
+            if entry.first > entry.last || entry.last as usize >= shards {
+                crate::bail!(
+                    "worker {} claims stripes {}..={} outside 0..{shards}",
+                    entry.addr,
+                    entry.first,
+                    entry.last
+                );
+            }
+            for s in entry.first..=entry.last {
+                if stripe_worker[s as usize] != usize::MAX {
+                    crate::bail!("stripe {s} claimed by two workers");
+                }
+                stripe_worker[s as usize] = w;
+            }
+        }
+        if stripe_worker.contains(&usize::MAX) {
+            crate::bail!("topology leaves stripes unowned");
+        }
+        if stripe_worker.windows(2).any(|w| w[1] < w[0]) {
+            crate::bail!("worker stripe ranges must be listed in stripe order");
+        }
+        let mut workers = Vec::with_capacity(topo.workers.len());
+        for entry in &topo.workers {
+            let c = NetClient::connect(&entry.addr)?;
+            if c.d() != topo.d as usize {
+                crate::bail!(
+                    "worker {} serves d={} but topology says d={}",
+                    entry.addr,
+                    c.d(),
+                    topo.d
+                );
+            }
+            workers.push(c);
+        }
+        Ok(Self {
+            part: SpacePartitioner::from_cuts(topo.split_dim as usize, topo.cuts.clone()),
+            stripe_worker,
+            workers,
+            sub_home: HashMap::new(),
+            upd_home: HashMap::new(),
+            pair_refs: HashMap::new(),
+            epoch: 0,
+            d: topo.d as usize,
+        })
+    }
+
+    /// Worker count.
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Dimensionality of the federation's routing space.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Last merged epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Globally matched pair count (from the merge refcounts).
+    pub fn n_pairs(&self) -> usize {
+        self.pair_refs.len()
+    }
+
+    fn worker_range(&self, rect: &[Interval]) -> WorkerRange {
+        let (a, b) = self.part.route_rect(rect);
+        (self.stripe_worker[a], self.stripe_worker[b])
+    }
+
+    /// Route an upsert: the region goes (whole) to every worker whose
+    /// stripes it overlaps; workers it *left* get a remove so stale
+    /// replicas can't keep matching.
+    fn upsert(&mut self, sub: bool, key: u32, rect: &[Interval]) -> crate::Result<()> {
+        if rect.len() != self.d {
+            crate::bail!("rect has {} dims, federation wants {}", rect.len(), self.d);
+        }
+        let (wa, wb) = self.worker_range(rect);
+        let home = if sub {
+            &mut self.sub_home
+        } else {
+            &mut self.upd_home
+        };
+        let old = home.insert(key, (wa, wb));
+        if let Some((oa, ob)) = old {
+            for w in oa..=ob {
+                if w < wa || w > wb {
+                    let op = if sub {
+                        RegionOp::RemoveSub { key }
+                    } else {
+                        RegionOp::RemoveUpd { key }
+                    };
+                    self.workers[w].op(op)?;
+                }
+            }
+        }
+        for w in wa..=wb {
+            let op = if sub {
+                RegionOp::UpsertSub {
+                    key,
+                    rect: rect.to_vec(),
+                }
+            } else {
+                RegionOp::UpsertUpd {
+                    key,
+                    rect: rect.to_vec(),
+                }
+            };
+            self.workers[w].op(op)?;
+        }
+        Ok(())
+    }
+
+    /// Insert or move a subscription region.
+    pub fn upsert_subscription(&mut self, key: u32, rect: &[Interval]) -> crate::Result<()> {
+        self.upsert(true, key, rect)
+    }
+
+    /// Insert or move an update region.
+    pub fn upsert_update(&mut self, key: u32, rect: &[Interval]) -> crate::Result<()> {
+        self.upsert(false, key, rect)
+    }
+
+    /// Delete a subscription region everywhere it lives.
+    pub fn remove_subscription(&mut self, key: u32) -> crate::Result<()> {
+        if let Some((wa, wb)) = self.sub_home.remove(&key) {
+            for w in wa..=wb {
+                self.workers[w].op(RegionOp::RemoveSub { key })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Delete an update region everywhere it lives.
+    pub fn remove_update(&mut self, key: u32) -> crate::Result<()> {
+        if let Some((wa, wb)) = self.upd_home.remove(&key) {
+            for w in wa..=wb {
+                self.workers[w].op(RegionOp::RemoveUpd { key })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Commit every worker (pipelined: all `Commit`s go out before any
+    /// diff is read) and merge their diffs into the single global diff
+    /// for this epoch. Pairs straddling a worker boundary report
+    /// exactly once: the refcount fold only surfaces `0 ↔ >0`
+    /// transitions, mirroring `ShardedSession::commit`.
+    pub fn commit(&mut self) -> crate::Result<MatchDiff> {
+        for w in &mut self.workers {
+            w.send(&Msg::Commit)?;
+        }
+        let mut delta: HashMap<u64, i32> = HashMap::new();
+        let mut epoch = 0u64;
+        for w in &mut self.workers {
+            let diff = w.await_diff()?;
+            epoch = epoch.max(diff.epoch);
+            for &(s, u) in &diff.added {
+                *delta.entry(pack_pair(s, u)).or_insert(0) += 1;
+            }
+            for &(s, u) in &diff.removed {
+                *delta.entry(pack_pair(s, u)).or_insert(0) -= 1;
+            }
+        }
+        let mut added: PairVec = Vec::new();
+        let mut removed: PairVec = Vec::new();
+        for (pair, dv) in delta {
+            if dv == 0 {
+                continue;
+            }
+            let old = i64::from(self.pair_refs.get(&pair).copied().unwrap_or(0));
+            let new = old + i64::from(dv);
+            debug_assert!(new >= 0, "worker removed a pair it never added");
+            if old == 0 && new > 0 {
+                added.push(unpack_pair(pair));
+            } else if old > 0 && new <= 0 {
+                removed.push(unpack_pair(pair));
+            }
+            if new <= 0 {
+                self.pair_refs.remove(&pair);
+            } else {
+                self.pair_refs.insert(pair, new as u32);
+            }
+        }
+        added.sort_unstable();
+        removed.sort_unstable();
+        self.epoch = epoch;
+        Ok(MatchDiff {
+            epoch,
+            added,
+            removed,
+        })
+    }
+
+    /// The global retained pair set: union of worker pair sets
+    /// (replicas deduplicate, matching a flat session's `pairs()`).
+    pub fn pairs(&mut self) -> crate::Result<PairVec> {
+        for w in &mut self.workers {
+            w.send(&Msg::GetPairs)?;
+        }
+        let mut packed: Vec<u64> = Vec::new();
+        for w in &mut self.workers {
+            loop {
+                if let Msg::Pairs(p) = w.recv()? {
+                    packed.extend(p.iter().map(|&(s, u)| pack_pair(s, u)));
+                    break;
+                }
+            }
+        }
+        packed.sort_unstable();
+        packed.dedup();
+        Ok(packed.into_iter().map(unpack_pair).collect())
+    }
+
+    /// Metrics snapshot from every worker, in topology order.
+    pub fn worker_metrics(&mut self) -> crate::Result<Vec<MetricsSnapshot>> {
+        let mut out = Vec::with_capacity(self.workers.len());
+        for w in &mut self.workers {
+            out.push(w.metrics()?);
+        }
+        Ok(out)
+    }
+
+    /// Shorten every worker socket's read timeout.
+    pub fn set_timeout(&mut self, t: Duration) -> crate::Result<()> {
+        for w in &mut self.workers {
+            w.set_timeout(t)?;
+        }
+        Ok(())
+    }
+
+    /// Ask every worker to shut down, waiting for each `Goodbye`.
+    pub fn shutdown_workers(&mut self) -> crate::Result<()> {
+        for w in &mut self.workers {
+            w.shutdown_server()?;
+        }
+        for w in &mut self.workers {
+            w.await_goodbye()?;
+        }
+        Ok(())
+    }
+}

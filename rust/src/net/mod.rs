@@ -1,0 +1,44 @@
+//! Network-facing DDM service: wire protocol, TCP server, federation.
+//!
+//! Everything below `net/` is pure `std` — no async runtime, no serde,
+//! no socket crates — in keeping with the crate's offline stance. The
+//! layers, bottom-up:
+//!
+//! * [`wire`] — framing and primitive codecs: length-prefixed frames
+//!   with a version byte, LEB128 varints, bit-exact `f64`, zero-copy
+//!   reads from `&[u8]`, typed [`wire::WireError`]s for every way a
+//!   frame can be wrong.
+//! * [`proto`] — the message catalog ([`proto::Msg`], 19 frames):
+//!   region ops, commits, `MatchDiff` deltas, topology and metrics
+//!   snapshots, error replies. See its module docs for the full table.
+//! * [`server`] — the nonblocking IO core: a listener thread, a few
+//!   socket-owning IO threads, and one state thread that owns the
+//!   [`server::Service`] — no locks anywhere, channels are the only
+//!   synchronization.
+//! * [`worker`] / [`router`] — the two services: a worker fronts an
+//!   [`AnySession`](crate::shard::AnySession) (stages ops, commits
+//!   epochs, streams diffs); a router serves the federation topology
+//!   and stays out of the hot path.
+//! * [`client`] — blocking [`client::NetClient`] for one socket and
+//!   [`client::FederationClient`] which routes ops across workers and
+//!   merges their diffs with the same refcount discipline
+//!   `ShardedSession` uses across shards, so straddling pairs report
+//!   exactly once even across process boundaries.
+//!
+//! The CLI fronts all of it: `ddm serve` (worker), `ddm route`
+//! (router), `ddm client` (scripted workload driver), `ddm bench-net`
+//! (loopback ablation).
+
+pub mod client;
+pub mod proto;
+pub mod router;
+pub mod server;
+pub mod wire;
+pub mod worker;
+
+pub use client::{FederationClient, NetClient};
+pub use proto::{MetricsSnapshot, Msg, RegionOp, Role, TopologySnapshot, WorkerEntry, PROTO_ID};
+pub use router::{assign_stripes, RouterService};
+pub use server::{serve, Outbox, ServerConfig, ServerHandle, Service};
+pub use wire::WireError;
+pub use worker::WorkerService;

@@ -1,0 +1,822 @@
+//! The frame catalog: every message that crosses a DDM socket.
+//!
+//! Layered on [`super::wire`]: this module owns *what* the frames mean
+//! (tags, payload shapes, containers), `wire` owns *how* bytes are
+//! framed and decoded. Encoding appends a complete frame into a
+//! caller-owned `Vec<u8>`; decoding borrows from a `&[u8]` and only
+//! allocates the containers the decoded message itself owns.
+//!
+//! | tag | message      | direction        | payload |
+//! |-----|--------------|------------------|---------|
+//! | 1   | `Hello`      | client → server  | protocol id |
+//! | 2   | `Welcome`    | server → client  | role, d, epoch |
+//! | 3   | `GetTopology`| client → router  | — |
+//! | 4   | `Topology`   | router → client  | split dim, cuts, worker table |
+//! | 5   | `Op`         | client → worker  | one region op |
+//! | 6   | `Batch`      | client → worker  | op count + ops |
+//! | 7   | `Flush`      | client → worker  | — |
+//! | 8   | `Commit`     | client → worker  | — |
+//! | 9   | `Diff`       | worker → client  | epoch + added/removed pairs |
+//! | 10  | `Subscribe`  | client → worker  | — |
+//! | 11  | `Sync`       | client → server  | token |
+//! | 12  | `SyncAck`    | server → client  | token, epoch, staged ops |
+//! | 13  | `GetPairs`   | client → worker  | — |
+//! | 14  | `Pairs`      | worker → client  | retained pair set |
+//! | 15  | `GetMetrics` | client → server  | — |
+//! | 16  | `Metrics`    | server → client  | counters + gauges |
+//! | 17  | `ErrorReply` | server → client  | code + message |
+//! | 18  | `Shutdown`   | client → server  | — |
+//! | 19  | `Goodbye`    | server → client  | final epoch |
+//!
+//! Pair lists ride a delta encoding over the packed `u64` key of
+//! [`pack_pair`] — `MatchDiff` lists arrive sorted and duplicate-free,
+//! so successive deltas are small positive varints. The decoder
+//! *enforces* strict ascent, which doubles as a corruption check.
+
+use crate::core::interval::Interval;
+use crate::core::sink::{pack_pair, unpack_pair, PairVec};
+use crate::coordinator::metrics::Metrics;
+use crate::session::MatchDiff;
+
+use super::wire::{self, Reader, WireError};
+
+/// Protocol identifier a [`Msg::Hello`] announces; servers reject
+/// anything else.
+pub const PROTO_ID: u32 = 0xDD01;
+
+/// Dimension cap for rectangles on the wire (matches practical DDM
+/// routing spaces; bounds decode-side allocation).
+pub const MAX_DIMS: usize = 64;
+
+/// Error codes carried by [`Msg::ErrorReply`].
+pub mod err_code {
+    /// Message not valid for this endpoint (e.g. `GetTopology` at a
+    /// worker).
+    pub const UNSUPPORTED: u32 = 1;
+    /// Frame failed to decode.
+    pub const BAD_FRAME: u32 = 2;
+    /// Handshake rejected (wrong protocol id).
+    pub const BAD_HELLO: u32 = 3;
+    /// Region op rejected (dimension mismatch).
+    pub const BAD_OP: u32 = 4;
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_GET_TOPOLOGY: u8 = 3;
+const TAG_TOPOLOGY: u8 = 4;
+const TAG_OP: u8 = 5;
+const TAG_BATCH: u8 = 6;
+const TAG_FLUSH: u8 = 7;
+const TAG_COMMIT: u8 = 8;
+const TAG_DIFF: u8 = 9;
+const TAG_SUBSCRIBE: u8 = 10;
+const TAG_SYNC: u8 = 11;
+const TAG_SYNC_ACK: u8 = 12;
+const TAG_GET_PAIRS: u8 = 13;
+const TAG_PAIRS: u8 = 14;
+const TAG_GET_METRICS: u8 = 15;
+const TAG_METRICS: u8 = 16;
+const TAG_ERROR: u8 = 17;
+const TAG_SHUTDOWN: u8 = 18;
+const TAG_GOODBYE: u8 = 19;
+
+/// What kind of endpoint answered the handshake.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Owns sessions and matches regions.
+    Worker,
+    /// Topology authority only; never in the op hot path.
+    Router,
+}
+
+impl Role {
+    fn to_u8(self) -> u8 {
+        match self {
+            Role::Worker => 0,
+            Role::Router => 1,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<Self, WireError> {
+        match v {
+            0 => Ok(Role::Worker),
+            1 => Ok(Role::Router),
+            _ => Err(WireError::Malformed("unknown role")),
+        }
+    }
+}
+
+/// One staged region mutation — the wire twin of the
+/// [`DdmSession`](crate::session::DdmSession) staging surface.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RegionOp {
+    /// Insert or move a subscription region.
+    UpsertSub { key: u32, rect: Vec<Interval> },
+    /// Insert or move an update region.
+    UpsertUpd { key: u32, rect: Vec<Interval> },
+    /// Delete a subscription region.
+    RemoveSub { key: u32 },
+    /// Delete an update region.
+    RemoveUpd { key: u32 },
+}
+
+/// One worker's stripe assignment in a [`TopologySnapshot`]:
+/// `addr` serves global stripes `first..=last`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerEntry {
+    pub addr: String,
+    pub first: u32,
+    pub last: u32,
+}
+
+/// The federation shard map a router hands to clients: the split
+/// dimension, the interior cut points (bit-exact, so client-side
+/// routing reproduces server-side routing), and which worker owns
+/// which contiguous stripe range.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologySnapshot {
+    pub d: u32,
+    pub split_dim: u32,
+    pub cuts: Vec<f64>,
+    pub workers: Vec<WorkerEntry>,
+}
+
+impl TopologySnapshot {
+    /// Total stripe count (`cuts.len() + 1`).
+    pub fn shards(&self) -> usize {
+        self.cuts.len() + 1
+    }
+}
+
+/// A point-in-time export of a server's [`Metrics`]: counters and
+/// gauges, sorted by name (latency histograms stay server-side).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+}
+
+impl MetricsSnapshot {
+    /// Snapshot the counters and gauges of `m` (already name-sorted —
+    /// `Metrics` stores them in `BTreeMap`s).
+    pub fn of(m: &Metrics) -> Self {
+        Self {
+            counters: m.counters.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+            gauges: m.gauges.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        }
+    }
+
+    /// Counter value by name (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(k, _)| k == name)
+            .map_or(0, |(_, v)| *v)
+    }
+
+    /// Gauge value by name.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    /// Render as an aligned two-column table (for `ddm client
+    /// --metrics`).
+    pub fn table(&self) -> crate::bench::table::Table {
+        let mut t = crate::bench::table::Table::new(vec!["metric", "value"]);
+        for (k, v) in &self.counters {
+            t.row(vec![k.clone(), v.to_string()]);
+        }
+        for (k, v) in &self.gauges {
+            t.row(vec![k.clone(), format!("{v:.3}")]);
+        }
+        t
+    }
+}
+
+/// Every frame in the protocol. See the module docs for the catalog.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    Hello { proto: u32 },
+    Welcome { role: Role, d: u32, epoch: u64 },
+    GetTopology,
+    Topology(TopologySnapshot),
+    Op(RegionOp),
+    Batch(Vec<RegionOp>),
+    Flush,
+    Commit,
+    Diff(MatchDiff),
+    Subscribe,
+    Sync { token: u64 },
+    SyncAck { token: u64, epoch: u64, pending: u64 },
+    GetPairs,
+    Pairs(PairVec),
+    GetMetrics,
+    Metrics(MetricsSnapshot),
+    ErrorReply { code: u32, msg: String },
+    Shutdown,
+    Goodbye { epoch: u64 },
+}
+
+fn put_rect(out: &mut Vec<u8>, rect: &[Interval]) {
+    wire::put_varint(out, rect.len() as u64);
+    for iv in rect {
+        wire::put_f64(out, iv.lo);
+        wire::put_f64(out, iv.hi);
+    }
+}
+
+fn read_rect(r: &mut Reader<'_>) -> Result<Vec<Interval>, WireError> {
+    let d = r.count(16)?;
+    if d == 0 || d > MAX_DIMS {
+        return Err(WireError::Malformed("rect dimension out of range"));
+    }
+    let mut rect = Vec::with_capacity(d);
+    for _ in 0..d {
+        let lo = r.f64()?;
+        let hi = r.f64()?;
+        rect.push(Interval { lo, hi });
+    }
+    Ok(rect)
+}
+
+fn put_op(out: &mut Vec<u8>, op: &RegionOp) {
+    match op {
+        RegionOp::UpsertSub { key, rect } => {
+            wire::put_u8(out, 0);
+            wire::put_varint(out, u64::from(*key));
+            put_rect(out, rect);
+        }
+        RegionOp::UpsertUpd { key, rect } => {
+            wire::put_u8(out, 1);
+            wire::put_varint(out, u64::from(*key));
+            put_rect(out, rect);
+        }
+        RegionOp::RemoveSub { key } => {
+            wire::put_u8(out, 2);
+            wire::put_varint(out, u64::from(*key));
+        }
+        RegionOp::RemoveUpd { key } => {
+            wire::put_u8(out, 3);
+            wire::put_varint(out, u64::from(*key));
+        }
+    }
+}
+
+fn read_key(r: &mut Reader<'_>) -> Result<u32, WireError> {
+    u32::try_from(r.varint()?).map_err(|_| WireError::Malformed("region key exceeds u32"))
+}
+
+fn read_op(r: &mut Reader<'_>) -> Result<RegionOp, WireError> {
+    let kind = r.u8()?;
+    let key = read_key(r)?;
+    Ok(match kind {
+        0 => RegionOp::UpsertSub { key, rect: read_rect(r)? },
+        1 => RegionOp::UpsertUpd { key, rect: read_rect(r)? },
+        2 => RegionOp::RemoveSub { key },
+        3 => RegionOp::RemoveUpd { key },
+        _ => return Err(WireError::Malformed("unknown region-op kind")),
+    })
+}
+
+/// Delta-encode a sorted duplicate-free pair list over packed keys.
+fn put_pairs(out: &mut Vec<u8>, pairs: &[(u32, u32)]) {
+    wire::put_varint(out, pairs.len() as u64);
+    let mut prev = 0u64;
+    for (i, &(s, u)) in pairs.iter().enumerate() {
+        let packed = pack_pair(s, u);
+        if i == 0 {
+            wire::put_varint(out, packed);
+        } else {
+            // Strict sort order is a MatchDiff invariant; encode the
+            // gap (≥ 1) so the decoder can verify it.
+            debug_assert!(packed > prev, "pair list must be strictly sorted");
+            wire::put_varint(out, packed - prev);
+        }
+        prev = packed;
+    }
+}
+
+fn read_pairs(r: &mut Reader<'_>) -> Result<PairVec, WireError> {
+    let n = r.count(1)?;
+    let mut out: PairVec = Vec::with_capacity(n);
+    let mut prev = 0u64;
+    for i in 0..n {
+        let v = r.varint()?;
+        let packed = if i == 0 {
+            v
+        } else {
+            if v == 0 {
+                return Err(WireError::Malformed("pair list not strictly sorted"));
+            }
+            prev.checked_add(v)
+                .ok_or(WireError::Malformed("pair delta overflows"))?
+        };
+        prev = packed;
+        out.push(unpack_pair(packed));
+    }
+    Ok(out)
+}
+
+fn put_diff(out: &mut Vec<u8>, diff: &MatchDiff) {
+    wire::put_varint(out, diff.epoch);
+    put_pairs(out, &diff.added);
+    put_pairs(out, &diff.removed);
+}
+
+fn read_diff(r: &mut Reader<'_>) -> Result<MatchDiff, WireError> {
+    Ok(MatchDiff {
+        epoch: r.varint()?,
+        added: read_pairs(r)?,
+        removed: read_pairs(r)?,
+    })
+}
+
+impl Msg {
+    /// Append this message as one complete frame.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Msg::Hello { proto } => wire::frame(out, TAG_HELLO, |o| {
+                wire::put_varint(o, u64::from(*proto));
+            }),
+            Msg::Welcome { role, d, epoch } => wire::frame(out, TAG_WELCOME, |o| {
+                wire::put_u8(o, role.to_u8());
+                wire::put_varint(o, u64::from(*d));
+                wire::put_varint(o, *epoch);
+            }),
+            Msg::GetTopology => wire::frame(out, TAG_GET_TOPOLOGY, |_| {}),
+            Msg::Topology(t) => wire::frame(out, TAG_TOPOLOGY, |o| {
+                wire::put_varint(o, u64::from(t.d));
+                wire::put_varint(o, u64::from(t.split_dim));
+                wire::put_varint(o, t.cuts.len() as u64);
+                for &c in &t.cuts {
+                    wire::put_f64(o, c);
+                }
+                wire::put_varint(o, t.workers.len() as u64);
+                for w in &t.workers {
+                    wire::put_bytes(o, w.addr.as_bytes());
+                    wire::put_varint(o, u64::from(w.first));
+                    wire::put_varint(o, u64::from(w.last));
+                }
+            }),
+            Msg::Op(op) => wire::frame(out, TAG_OP, |o| put_op(o, op)),
+            Msg::Batch(ops) => wire::frame(out, TAG_BATCH, |o| {
+                wire::put_varint(o, ops.len() as u64);
+                for op in ops {
+                    put_op(o, op);
+                }
+            }),
+            Msg::Flush => wire::frame(out, TAG_FLUSH, |_| {}),
+            Msg::Commit => wire::frame(out, TAG_COMMIT, |_| {}),
+            Msg::Diff(diff) => wire::frame(out, TAG_DIFF, |o| put_diff(o, diff)),
+            Msg::Subscribe => wire::frame(out, TAG_SUBSCRIBE, |_| {}),
+            Msg::Sync { token } => wire::frame(out, TAG_SYNC, |o| {
+                wire::put_varint(o, *token);
+            }),
+            Msg::SyncAck { token, epoch, pending } => wire::frame(out, TAG_SYNC_ACK, |o| {
+                wire::put_varint(o, *token);
+                wire::put_varint(o, *epoch);
+                wire::put_varint(o, *pending);
+            }),
+            Msg::GetPairs => wire::frame(out, TAG_GET_PAIRS, |_| {}),
+            Msg::Pairs(pairs) => wire::frame(out, TAG_PAIRS, |o| put_pairs(o, pairs)),
+            Msg::GetMetrics => wire::frame(out, TAG_GET_METRICS, |_| {}),
+            Msg::Metrics(m) => wire::frame(out, TAG_METRICS, |o| {
+                wire::put_varint(o, m.counters.len() as u64);
+                for (k, v) in &m.counters {
+                    wire::put_bytes(o, k.as_bytes());
+                    wire::put_varint(o, *v);
+                }
+                wire::put_varint(o, m.gauges.len() as u64);
+                for (k, v) in &m.gauges {
+                    wire::put_bytes(o, k.as_bytes());
+                    wire::put_f64(o, *v);
+                }
+            }),
+            Msg::ErrorReply { code, msg } => wire::frame(out, TAG_ERROR, |o| {
+                wire::put_varint(o, u64::from(*code));
+                wire::put_bytes(o, msg.as_bytes());
+            }),
+            Msg::Shutdown => wire::frame(out, TAG_SHUTDOWN, |_| {}),
+            Msg::Goodbye { epoch } => wire::frame(out, TAG_GOODBYE, |o| {
+                wire::put_varint(o, *epoch);
+            }),
+        }
+    }
+
+    /// This message as a fresh frame buffer (convenience for one-off
+    /// sends; batch paths reuse a buffer via [`Msg::encode`]).
+    pub fn to_frame(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode(&mut out);
+        out
+    }
+
+    /// Decode the frame at the head of `buf`.
+    ///
+    /// `Ok(None)` means the buffer holds an incomplete frame (read
+    /// more); `Ok(Some((msg, consumed)))` yields the message and how
+    /// many bytes to drain. All corruption — framing or payload — is a
+    /// typed [`WireError`], never a panic.
+    pub fn decode(buf: &[u8]) -> Result<Option<(Msg, usize)>, WireError> {
+        let Some((ver, tag, payload, consumed)) = wire::split_frame(buf)? else {
+            return Ok(None);
+        };
+        if ver != wire::VERSION {
+            return Err(WireError::BadVersion(ver));
+        }
+        let mut r = Reader::new(payload);
+        let msg = match tag {
+            TAG_HELLO => Msg::Hello {
+                proto: u32::try_from(r.varint()?)
+                    .map_err(|_| WireError::Malformed("protocol id exceeds u32"))?,
+            },
+            TAG_WELCOME => Msg::Welcome {
+                role: Role::from_u8(r.u8()?)?,
+                d: u32::try_from(r.varint()?)
+                    .map_err(|_| WireError::Malformed("dimension exceeds u32"))?,
+                epoch: r.varint()?,
+            },
+            TAG_GET_TOPOLOGY => Msg::GetTopology,
+            TAG_TOPOLOGY => {
+                let d = u32::try_from(r.varint()?)
+                    .map_err(|_| WireError::Malformed("dimension exceeds u32"))?;
+                let split_dim = u32::try_from(r.varint()?)
+                    .map_err(|_| WireError::Malformed("split dim exceeds u32"))?;
+                let ncuts = r.count(8)?;
+                let mut cuts = Vec::with_capacity(ncuts);
+                for _ in 0..ncuts {
+                    cuts.push(r.f64()?);
+                }
+                let nworkers = r.count(3)?;
+                let mut workers = Vec::with_capacity(nworkers);
+                for _ in 0..nworkers {
+                    let addr = r.str()?.to_string();
+                    let first = u32::try_from(r.varint()?)
+                        .map_err(|_| WireError::Malformed("stripe index exceeds u32"))?;
+                    let last = u32::try_from(r.varint()?)
+                        .map_err(|_| WireError::Malformed("stripe index exceeds u32"))?;
+                    workers.push(WorkerEntry { addr, first, last });
+                }
+                Msg::Topology(TopologySnapshot { d, split_dim, cuts, workers })
+            }
+            TAG_OP => Msg::Op(read_op(&mut r)?),
+            TAG_BATCH => {
+                let n = r.count(2)?;
+                let mut ops = Vec::with_capacity(n);
+                for _ in 0..n {
+                    ops.push(read_op(&mut r)?);
+                }
+                Msg::Batch(ops)
+            }
+            TAG_FLUSH => Msg::Flush,
+            TAG_COMMIT => Msg::Commit,
+            TAG_DIFF => Msg::Diff(read_diff(&mut r)?),
+            TAG_SUBSCRIBE => Msg::Subscribe,
+            TAG_SYNC => Msg::Sync { token: r.varint()? },
+            TAG_SYNC_ACK => Msg::SyncAck {
+                token: r.varint()?,
+                epoch: r.varint()?,
+                pending: r.varint()?,
+            },
+            TAG_GET_PAIRS => Msg::GetPairs,
+            TAG_PAIRS => Msg::Pairs(read_pairs(&mut r)?),
+            TAG_GET_METRICS => Msg::GetMetrics,
+            TAG_METRICS => {
+                let nc = r.count(2)?;
+                let mut counters = Vec::with_capacity(nc);
+                for _ in 0..nc {
+                    let k = r.str()?.to_string();
+                    let v = r.varint()?;
+                    counters.push((k, v));
+                }
+                let ng = r.count(9)?;
+                let mut gauges = Vec::with_capacity(ng);
+                for _ in 0..ng {
+                    let k = r.str()?.to_string();
+                    let v = r.f64()?;
+                    gauges.push((k, v));
+                }
+                Msg::Metrics(MetricsSnapshot { counters, gauges })
+            }
+            TAG_ERROR => Msg::ErrorReply {
+                code: u32::try_from(r.varint()?)
+                    .map_err(|_| WireError::Malformed("error code exceeds u32"))?,
+                msg: r.str()?.to_string(),
+            },
+            TAG_SHUTDOWN => Msg::Shutdown,
+            TAG_GOODBYE => Msg::Goodbye { epoch: r.varint()? },
+            other => return Err(WireError::BadTag(other)),
+        };
+        r.finish()?;
+        Ok(Some((msg, consumed)))
+    }
+
+    /// Decode exactly one complete frame spanning all of `buf`:
+    /// incomplete input is [`WireError::Truncated`], bytes past the
+    /// frame are [`WireError::Trailing`]. The strict entry point the
+    /// property suite drives.
+    pub fn decode_exact(buf: &[u8]) -> Result<Msg, WireError> {
+        match Msg::decode(buf)? {
+            None => Err(WireError::Truncated),
+            Some((_, consumed)) if consumed < buf.len() => {
+                Err(WireError::Trailing(buf.len() - consumed))
+            }
+            Some((msg, _)) => Ok(msg),
+        }
+    }
+}
+
+/// Deterministic random message generator for the round-trip property
+/// suite (kept out of `#[cfg(test)]` so integration tests and the
+/// loopback bench can drive the same distribution).
+pub fn arbitrary_msg(rng: &mut crate::prng::Rng, d: usize) -> Msg {
+    fn rect(rng: &mut crate::prng::Rng, d: usize) -> Vec<Interval> {
+        (0..d.max(1))
+            .map(|_| {
+                let lo = rng.uniform(-1e6, 1e6);
+                Interval::new(lo, lo + rng.uniform(0.0, 1e4))
+            })
+            .collect()
+    }
+    fn op(rng: &mut crate::prng::Rng, d: usize) -> RegionOp {
+        let key = rng.below(1 << 20) as u32;
+        match rng.below(4) {
+            0 => RegionOp::UpsertSub { key, rect: rect(rng, d) },
+            1 => RegionOp::UpsertUpd { key, rect: rect(rng, d) },
+            2 => RegionOp::RemoveSub { key },
+            _ => RegionOp::RemoveUpd { key },
+        }
+    }
+    fn pairs(rng: &mut crate::prng::Rng) -> PairVec {
+        let n = rng.below(50) as usize;
+        let mut packed: Vec<u64> = (0..n).map(|_| rng.next_u64() >> 8).collect();
+        packed.sort_unstable();
+        packed.dedup();
+        packed.into_iter().map(unpack_pair).collect()
+    }
+    match rng.below(19) {
+        0 => Msg::Hello { proto: PROTO_ID },
+        1 => Msg::Welcome {
+            role: if rng.chance(0.5) { Role::Worker } else { Role::Router },
+            d: d as u32,
+            epoch: rng.below(1 << 30),
+        },
+        2 => Msg::GetTopology,
+        3 => {
+            let shards = 1 + rng.below(8) as usize;
+            let mut cuts: Vec<f64> = (1..shards).map(|_| rng.uniform(0.0, 1e6)).collect();
+            cuts.sort_unstable_by(f64::total_cmp);
+            let nworkers = 1 + rng.below(4);
+            Msg::Topology(TopologySnapshot {
+                d: d as u32,
+                split_dim: rng.below(d.max(1) as u64) as u32,
+                cuts,
+                workers: (0..nworkers)
+                    .map(|i| WorkerEntry {
+                        addr: format!("127.0.0.1:{}", 4000 + i),
+                        first: i as u32,
+                        last: i as u32,
+                    })
+                    .collect(),
+            })
+        }
+        4 => Msg::Op(op(rng, d)),
+        5 => Msg::Batch((0..rng.below(20)).map(|_| op(rng, d)).collect()),
+        6 => Msg::Flush,
+        7 => Msg::Commit,
+        8 => Msg::Diff(MatchDiff {
+            epoch: rng.below(1 << 20),
+            added: pairs(rng),
+            removed: pairs(rng),
+        }),
+        9 => Msg::Subscribe,
+        10 => Msg::Sync { token: rng.next_u64() },
+        11 => Msg::SyncAck {
+            token: rng.next_u64(),
+            epoch: rng.below(1 << 20),
+            pending: rng.below(1 << 16),
+        },
+        12 => Msg::GetPairs,
+        13 => Msg::Pairs(pairs(rng)),
+        14 => Msg::GetMetrics,
+        15 => Msg::Metrics(MetricsSnapshot {
+            counters: vec![
+                ("commits".into(), rng.below(1 << 20)),
+                ("net_ops".into(), rng.below(1 << 30)),
+            ],
+            gauges: vec![("shard_imbalance".into(), rng.uniform(0.0, 8.0))],
+        }),
+        16 => Msg::ErrorReply {
+            code: err_code::UNSUPPORTED,
+            msg: "not here".to_string(),
+        },
+        17 => Msg::Shutdown,
+        _ => Msg::Goodbye { epoch: rng.below(1 << 20) },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn round_trip(msg: &Msg) {
+        let buf = msg.to_frame();
+        let (got, used) = Msg::decode(&buf).expect("decodes").expect("complete");
+        assert_eq!(used, buf.len());
+        assert_eq!(&got, msg);
+        assert_eq!(&Msg::decode_exact(&buf).expect("exact"), msg);
+    }
+
+    #[test]
+    fn every_variant_round_trips() {
+        // Hit every arm of the generator across dimensions 1, 3, 5.
+        for d in [1usize, 3, 5] {
+            let mut rng = Rng::new(0xBEEF ^ d as u64);
+            let mut seen = [false; 19];
+            for _ in 0..2000 {
+                let msg = arbitrary_msg(&mut rng, d);
+                seen[variant_index(&msg)] = true;
+                round_trip(&msg);
+            }
+            assert!(seen.iter().all(|&s| s), "generator missed a variant: {seen:?}");
+        }
+    }
+
+    fn variant_index(m: &Msg) -> usize {
+        match m {
+            Msg::Hello { .. } => 0,
+            Msg::Welcome { .. } => 1,
+            Msg::GetTopology => 2,
+            Msg::Topology(_) => 3,
+            Msg::Op(_) => 4,
+            Msg::Batch(_) => 5,
+            Msg::Flush => 6,
+            Msg::Commit => 7,
+            Msg::Diff(_) => 8,
+            Msg::Subscribe => 9,
+            Msg::Sync { .. } => 10,
+            Msg::SyncAck { .. } => 11,
+            Msg::GetPairs => 12,
+            Msg::Pairs(_) => 13,
+            Msg::GetMetrics => 14,
+            Msg::Metrics(_) => 15,
+            Msg::ErrorReply { .. } => 16,
+            Msg::Shutdown => 17,
+            Msg::Goodbye { .. } => 18,
+        }
+    }
+
+    #[test]
+    fn empty_payload_messages_are_two_byte_bodies() {
+        for msg in [Msg::GetTopology, Msg::Flush, Msg::Commit, Msg::Subscribe,
+                    Msg::GetPairs, Msg::GetMetrics, Msg::Shutdown] {
+            let buf = msg.to_frame();
+            assert_eq!(buf.len(), wire::HEADER, "{msg:?}");
+            round_trip(&msg);
+        }
+    }
+
+    #[test]
+    fn pair_lists_delta_compress_and_enforce_sort_order() {
+        let pairs: PairVec = vec![(0, 1), (0, 2), (3, 7), (1000, 0)];
+        round_trip(&Msg::Pairs(pairs.clone()));
+        // Hand-build an unsorted list (delta 0 = duplicate).
+        let mut buf = Vec::new();
+        wire::frame(&mut buf, 14, |o| {
+            wire::put_varint(o, 2);
+            wire::put_varint(o, 5);
+            wire::put_varint(o, 0); // duplicate of the first entry
+        });
+        assert_eq!(
+            Msg::decode(&buf),
+            Err(WireError::Malformed("pair list not strictly sorted"))
+        );
+    }
+
+    #[test]
+    fn diff_round_trips_including_empty() {
+        round_trip(&Msg::Diff(MatchDiff::default()));
+        round_trip(&Msg::Diff(MatchDiff {
+            epoch: 9,
+            added: vec![(1, 2), (1, 3)],
+            removed: vec![(0, 0)],
+        }));
+    }
+
+    #[test]
+    fn truncation_at_every_prefix_is_incomplete_or_typed_error() {
+        let mut rng = Rng::new(77);
+        for d in [1usize, 3, 5] {
+            for _ in 0..200 {
+                let buf = arbitrary_msg(&mut rng, d).to_frame();
+                for cut in 0..buf.len() {
+                    // Streaming view: a strict prefix is always
+                    // "incomplete" (the length prefix promises more).
+                    assert_eq!(Msg::decode(&buf[..cut]).expect("no error"), None);
+                    // Strict view: typed Truncated error.
+                    assert_eq!(Msg::decode_exact(&buf[..cut]), Err(WireError::Truncated));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bit_flips_never_panic() {
+        let mut rng = Rng::new(0xF11D);
+        for d in [1usize, 3, 5] {
+            for _ in 0..150 {
+                let buf = arbitrary_msg(&mut rng, d).to_frame();
+                for _ in 0..40 {
+                    let mut bad = buf.clone();
+                    let byte = rng.below(bad.len() as u64) as usize;
+                    bad[byte] ^= 1 << rng.below(8);
+                    // Any outcome is fine except a panic: Ok(None)
+                    // (length grew), Ok(Some) (benign flip), or a
+                    // typed error.
+                    let _ = Msg::decode(&bad);
+                    let _ = Msg::decode_exact(&bad);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_length_and_bad_version_and_bad_tag_are_typed() {
+        let mut buf = Vec::new();
+        wire::put_u32(&mut buf, (wire::MAX_FRAME + 7) as u32);
+        buf.extend_from_slice(&[0u8; 16]);
+        assert_eq!(Msg::decode(&buf), Err(WireError::Oversized(wire::MAX_FRAME + 7)));
+
+        let mut buf = Msg::Commit.to_frame();
+        buf[4] = 99; // version byte
+        assert_eq!(Msg::decode(&buf), Err(WireError::BadVersion(99)));
+
+        let mut buf = Msg::Commit.to_frame();
+        buf[5] = 200; // tag byte
+        assert_eq!(Msg::decode(&buf), Err(WireError::BadTag(200)));
+    }
+
+    #[test]
+    fn trailing_bytes_inside_a_frame_are_typed() {
+        let mut buf = Vec::new();
+        wire::frame(&mut buf, 8, |o| wire::put_u8(o, 42)); // Commit + junk byte
+        assert_eq!(Msg::decode(&buf), Err(WireError::Trailing(1)));
+    }
+
+    #[test]
+    fn rect_dimension_bounds_are_enforced() {
+        // d = 0
+        let mut buf = Vec::new();
+        wire::frame(&mut buf, 5, |o| {
+            wire::put_u8(o, 0);
+            wire::put_varint(o, 1);
+            wire::put_varint(o, 0);
+        });
+        assert!(matches!(Msg::decode(&buf), Err(WireError::Malformed(_))));
+        // d beyond MAX_DIMS with enough bytes to pass the count guard.
+        let mut buf = Vec::new();
+        wire::frame(&mut buf, 5, |o| {
+            wire::put_u8(o, 0);
+            wire::put_varint(o, 1);
+            wire::put_varint(o, (MAX_DIMS + 1) as u64);
+            for _ in 0..(MAX_DIMS + 1) * 2 {
+                wire::put_f64(o, 0.0);
+            }
+        });
+        assert!(matches!(Msg::decode(&buf), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn metrics_snapshot_reads_back_by_name() {
+        let mut m = Metrics::default();
+        m.inc("net_ops", 12);
+        m.gauge("shard_imbalance", 1.5);
+        let snap = MetricsSnapshot::of(&m);
+        assert_eq!(snap.counter("net_ops"), 12);
+        assert_eq!(snap.counter("absent"), 0);
+        assert_eq!(snap.gauge("shard_imbalance"), Some(1.5));
+        assert!(snap.table().render().contains("net_ops"));
+        round_trip(&Msg::Metrics(snap));
+    }
+
+    #[test]
+    fn multiple_frames_stream_decode_in_order() {
+        let mut buf = Vec::new();
+        Msg::Commit.encode(&mut buf);
+        Msg::Sync { token: 5 }.encode(&mut buf);
+        Msg::Goodbye { epoch: 3 }.encode(&mut buf);
+        let mut at = 0;
+        let mut got = Vec::new();
+        while let Some((msg, used)) = Msg::decode(&buf[at..]).expect("clean stream") {
+            got.push(msg);
+            at += used;
+        }
+        assert_eq!(at, buf.len());
+        assert_eq!(
+            got,
+            vec![Msg::Commit, Msg::Sync { token: 5 }, Msg::Goodbye { epoch: 3 }]
+        );
+    }
+}

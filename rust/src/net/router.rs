@@ -1,0 +1,174 @@
+//! The router service: topology authority, never in the hot path.
+//!
+//! A router answers exactly one substantive question — *which worker
+//! owns which stripes?* — via [`Msg::GetTopology`]. Clients connect,
+//! fetch the [`TopologySnapshot`] (split dimension, bit-exact cut
+//! points, worker address table), then talk to workers directly;
+//! region ops and diffs never traverse the router, so federation
+//! throughput scales with workers, not with the router.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::metrics::Metrics;
+
+use super::proto::{err_code, MetricsSnapshot, Msg, Role, TopologySnapshot, WorkerEntry, PROTO_ID};
+use super::server::{Outbox, Service};
+
+/// Split `shards` global stripes across `workers` addresses into
+/// contiguous ranges, balanced to within one stripe (the same
+/// remainder-first spread the thread pool uses for chunking). Panics
+/// if there are more workers than stripes.
+pub fn assign_stripes(shards: usize, workers: &[String]) -> Vec<WorkerEntry> {
+    assert!(!workers.is_empty(), "need at least one worker");
+    assert!(
+        workers.len() <= shards,
+        "more workers ({}) than stripes ({shards})",
+        workers.len()
+    );
+    let base = shards / workers.len();
+    let extra = shards % workers.len();
+    let mut first = 0usize;
+    workers
+        .iter()
+        .enumerate()
+        .map(|(i, addr)| {
+            let take = base + usize::from(i < extra);
+            let entry = WorkerEntry {
+                addr: addr.clone(),
+                first: first as u32,
+                last: (first + take - 1) as u32,
+            };
+            first += take;
+            entry
+        })
+        .collect()
+}
+
+/// [`Service`] implementation holding the federation's shard map.
+pub struct RouterService {
+    topo: TopologySnapshot,
+    metrics: Metrics,
+    stop: Option<Arc<AtomicBool>>,
+}
+
+impl RouterService {
+    /// Serve `topo` to anyone who asks.
+    pub fn new(topo: TopologySnapshot) -> Self {
+        Self {
+            topo,
+            metrics: Metrics::default(),
+            stop: None,
+        }
+    }
+}
+
+impl Service for RouterService {
+    fn bind_stop(&mut self, stop: Arc<AtomicBool>) {
+        self.stop = Some(stop);
+    }
+
+    fn on_open(&mut self, _conn: u64) {
+        self.metrics.inc("net_conns", 1);
+    }
+
+    fn on_close(&mut self, _conn: u64) {}
+
+    fn on_msg(&mut self, conn: u64, msg: Msg, out: &mut Outbox) {
+        match msg {
+            Msg::Hello { proto } => {
+                if proto != PROTO_ID {
+                    out.send(
+                        conn,
+                        &Msg::ErrorReply {
+                            code: err_code::BAD_HELLO,
+                            msg: format!("unknown protocol id {proto:#x}"),
+                        },
+                    );
+                    out.close(conn);
+                } else {
+                    out.send(
+                        conn,
+                        &Msg::Welcome {
+                            role: Role::Router,
+                            d: self.topo.d,
+                            epoch: 0,
+                        },
+                    );
+                }
+            }
+            Msg::GetTopology => {
+                self.metrics.inc("topology_reqs", 1);
+                out.send(conn, &Msg::Topology(self.topo.clone()));
+            }
+            Msg::Sync { token } => out.send(
+                conn,
+                &Msg::SyncAck {
+                    token,
+                    epoch: 0,
+                    pending: 0,
+                },
+            ),
+            Msg::GetMetrics => {
+                let snap = MetricsSnapshot::of(&self.metrics);
+                out.send(conn, &Msg::Metrics(snap));
+            }
+            Msg::Shutdown => {
+                if let Some(stop) = &self.stop {
+                    stop.store(true, Ordering::SeqCst);
+                }
+            }
+            other => out.send(
+                conn,
+                &Msg::ErrorReply {
+                    code: err_code::UNSUPPORTED,
+                    msg: format!("router cannot handle {other:?}"),
+                },
+            ),
+        }
+    }
+
+    fn on_shutdown(&mut self, open: &[u64], out: &mut Outbox) {
+        for &conn in open {
+            out.send(conn, &Msg::Goodbye { epoch: 0 });
+        }
+    }
+
+    fn metrics(&mut self) -> Metrics {
+        std::mem::take(&mut self.metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assign_stripes_is_contiguous_and_balanced() {
+        let w = |n: usize| -> Vec<String> {
+            (0..n).map(|i| format!("127.0.0.1:{}", 5000 + i)).collect()
+        };
+        for (shards, workers) in [(4, 2), (5, 2), (7, 3), (3, 3), (8, 1)] {
+            let table = assign_stripes(shards, &w(workers));
+            assert_eq!(table.len(), workers);
+            assert_eq!(table[0].first, 0);
+            assert_eq!(table[table.len() - 1].last as usize, shards - 1);
+            for pair in table.windows(2) {
+                assert_eq!(pair[1].first, pair[0].last + 1, "contiguous coverage");
+            }
+            let sizes: Vec<u32> = table.iter().map(|e| e.last - e.first + 1).collect();
+            let (lo, hi) = (
+                sizes.iter().copied().min().unwrap_or(0),
+                sizes.iter().copied().max().unwrap_or(0),
+            );
+            assert!(hi - lo <= 1, "balanced to within one stripe: {sizes:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "more workers")]
+    fn assign_stripes_rejects_worker_surplus() {
+        let workers: Vec<String> = (0..3).map(|i| format!("w{i}")).collect();
+        assign_stripes(2, &workers);
+    }
+}

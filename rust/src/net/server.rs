@@ -1,0 +1,504 @@
+//! Nonblocking TCP server core: listener + IO threads + one state
+//! thread, pure `std`.
+//!
+//! The shape is thread-per-core in spirit but split by role so the
+//! session owner never blocks on a socket:
+//!
+//! * **Listener thread** — accepts nonblocking, hands each connection
+//!   to an IO thread round-robin (`conn_id % io_threads`, the same
+//!   mapping the state thread uses to route replies).
+//! * **IO threads** — each owns its connections outright: nonblocking
+//!   reads into a per-connection buffer, frame splitting + decode
+//!   ([`Msg::decode`]), partial-write buffering. Decoded messages flow
+//!   to the state thread over an mpsc channel; reply frames flow back
+//!   the same way. No connection is ever touched by two threads.
+//! * **State thread** — owns the [`Service`] (session, metrics,
+//!   subscribers) and is the only thread that mutates it, so the whole
+//!   server needs **no locks at all** — the channels are the
+//!   synchronization, in keeping with the exec layer's lock-free
+//!   stance.
+//!
+//! Graceful shutdown (the clean stop path `ddm serve` lacked): the
+//! shared stop flag is set — by [`ServerHandle::shutdown`] or by a
+//! wire [`Msg::Shutdown`] — then the listener closes, the state thread
+//! drains every event already queued, gives the service its
+//! [`Service::on_shutdown`] hook (final commit + `Diff` to
+//! subscribers + `Goodbye` to every client), and the IO threads flush
+//! all pending writes before closing sockets and exiting. Every
+//! thread is joined; the final [`Metrics`] come back to the caller.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown as SockShutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::coordinator::metrics::Metrics;
+
+use super::proto::{err_code, Msg};
+
+/// Reply sink handed to [`Service`] hooks: frames to send and
+/// connections to close, routed to the owning IO threads by the state
+/// loop after each event batch.
+pub struct Outbox {
+    frames: Vec<(u64, Vec<u8>)>,
+    closes: Vec<u64>,
+}
+
+impl Outbox {
+    fn new() -> Self {
+        Self {
+            frames: Vec::new(),
+            closes: Vec::new(),
+        }
+    }
+
+    /// Queue `msg` for connection `conn`.
+    pub fn send(&mut self, conn: u64, msg: &Msg) {
+        self.frames.push((conn, msg.to_frame()));
+    }
+
+    /// Close `conn` once everything queued for it has flushed.
+    pub fn close(&mut self, conn: u64) {
+        self.closes.push(conn);
+    }
+}
+
+/// What the state thread runs: the protocol brain behind the IO core.
+/// [`WorkerService`](super::worker::WorkerService) (session owner) and
+/// [`RouterService`](super::router::RouterService) (topology
+/// authority) are the two implementations.
+pub trait Service: Send + 'static {
+    /// Receive the server's stop flag before any traffic; a service
+    /// sets it to initiate shutdown (e.g. on a wire [`Msg::Shutdown`]).
+    fn bind_stop(&mut self, stop: Arc<AtomicBool>);
+    /// A connection completed accept and is readable.
+    fn on_open(&mut self, conn: u64);
+    /// One decoded message from `conn`; replies go through `out`.
+    fn on_msg(&mut self, conn: u64, msg: Msg, out: &mut Outbox);
+    /// `conn` closed (EOF, error, or server-initiated).
+    fn on_close(&mut self, conn: u64);
+    /// Last chance before the server exits: `open` lists the live
+    /// connections (flush staged work, farewell frames).
+    fn on_shutdown(&mut self, open: &[u64], out: &mut Outbox);
+    /// Surrender the final metrics (called once, after `on_shutdown`).
+    fn metrics(&mut self) -> Metrics;
+}
+
+/// Server tuning: listen address and IO-thread count.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address; use port `0` for an ephemeral port (the bound
+    /// address comes back via [`ServerHandle::addr`]).
+    pub listen: String,
+    /// Socket-owning threads (≥ 1); connections are striped across
+    /// them round-robin.
+    pub io_threads: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:0".to_string(),
+            io_threads: 2,
+        }
+    }
+}
+
+/// Commands the listener and state threads send an IO thread.
+enum IoCmd {
+    /// Take ownership of a new connection.
+    Conn(u64, TcpStream),
+    /// Queue frame bytes for a connection.
+    Frame(u64, Vec<u8>),
+    /// Close a connection after its queue flushes.
+    Close(u64),
+    /// Flush every queue, close every socket, exit.
+    Stop,
+}
+
+/// Events IO threads send the state thread.
+enum Ev {
+    Open(u64),
+    Msg(u64, Msg),
+    Closed(u64),
+}
+
+/// One connection, owned by exactly one IO thread.
+struct Conn {
+    stream: TcpStream,
+    /// Unparsed inbound bytes (partial frames).
+    rbuf: Vec<u8>,
+    /// Outbound bytes not yet accepted by the socket.
+    wbuf: Vec<u8>,
+    /// Prefix of `wbuf` already written.
+    wpos: usize,
+    /// Close once `wbuf` drains.
+    closing: bool,
+    /// Socket failed or EOF'd; reap immediately.
+    dead: bool,
+}
+
+impl Conn {
+    fn flushed(&self) -> bool {
+        self.wpos >= self.wbuf.len()
+    }
+}
+
+/// A running server. Dropping the handle does NOT stop the server —
+/// call [`shutdown`](Self::shutdown) (or send a wire [`Msg::Shutdown`]
+/// and [`join`](Self::join)) to stop it and collect final metrics.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    aux: Vec<JoinHandle<()>>,
+    state: Option<JoinHandle<Metrics>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared stop flag (for wiring into signal handlers or other
+    /// external triggers).
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Initiate shutdown and wait for every thread: staged ops get a
+    /// final commit, subscribers the final diff, clients a `Goodbye`,
+    /// and all pending writes flush before sockets close.
+    pub fn shutdown(mut self) -> Metrics {
+        self.stop.store(true, Ordering::SeqCst);
+        self.join_all()
+    }
+
+    /// Wait for the server to stop on its own (a wire
+    /// [`Msg::Shutdown`] or an external [`stop_flag`](Self::stop_flag)
+    /// store), then join every thread.
+    pub fn join(mut self) -> Metrics {
+        self.join_all()
+    }
+
+    fn join_all(&mut self) -> Metrics {
+        let metrics = match self.state.take() {
+            Some(h) => h.join().unwrap_or_default(),
+            None => Metrics::default(),
+        };
+        for h in self.aux.drain(..) {
+            let _ = h.join();
+        }
+        metrics
+    }
+}
+
+/// Bind and spawn the server threads; returns immediately with the
+/// handle (the bound address is `handle.addr()`).
+pub fn serve<S: Service>(cfg: &ServerConfig, mut service: S) -> crate::Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.listen)?;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    service.bind_stop(Arc::clone(&stop));
+
+    let nio = cfg.io_threads.max(1);
+    let (ev_tx, ev_rx) = channel();
+    let mut io_tx = Vec::with_capacity(nio);
+    let mut aux = Vec::with_capacity(nio + 1);
+    for _ in 0..nio {
+        let (tx, rx) = channel();
+        io_tx.push(tx);
+        let ev = ev_tx.clone();
+        aux.push(thread::spawn(move || io_loop(rx, ev)));
+    }
+    drop(ev_tx);
+    {
+        let io_tx = io_tx.clone();
+        let stop = Arc::clone(&stop);
+        aux.push(thread::spawn(move || listen_loop(listener, io_tx, stop)));
+    }
+    let state = {
+        let stop = Arc::clone(&stop);
+        thread::spawn(move || state_loop(service, ev_rx, io_tx, stop))
+    };
+    Ok(ServerHandle {
+        addr,
+        stop,
+        aux,
+        state: Some(state),
+    })
+}
+
+/// Accept loop: nonblocking accept, stripe connections over IO
+/// threads, exit when the stop flag rises (this closes the listener).
+fn listen_loop(listener: TcpListener, io_tx: Vec<Sender<IoCmd>>, stop: Arc<AtomicBool>) {
+    let mut next_id: u64 = 0;
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nodelay(true);
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let id = next_id;
+                next_id += 1;
+                let _ = io_tx[(id as usize) % io_tx.len()].send(IoCmd::Conn(id, stream));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(1));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(1)),
+        }
+    }
+}
+
+/// One IO thread: read/decode/forward inbound, buffer/flush outbound,
+/// reap dead connections. On `Stop`, drains every write queue (bounded
+/// grace) before closing sockets.
+fn io_loop(rx: Receiver<IoCmd>, ev: Sender<Ev>) {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut tmp = [0u8; 16 * 1024];
+    let mut stopping = false;
+    // Grace iterations (×0.5 ms sleep when idle ≈ a few seconds) to
+    // flush pending writes after Stop before force-closing.
+    let mut grace: u32 = 4000;
+    loop {
+        let mut busy = false;
+
+        // Commands from the listener and state threads.
+        loop {
+            match rx.try_recv() {
+                Ok(IoCmd::Conn(id, stream)) => {
+                    busy = true;
+                    if stopping {
+                        let _ = stream.shutdown(SockShutdown::Both);
+                        continue;
+                    }
+                    conns.insert(
+                        id,
+                        Conn {
+                            stream,
+                            rbuf: Vec::new(),
+                            wbuf: Vec::new(),
+                            wpos: 0,
+                            closing: false,
+                            dead: false,
+                        },
+                    );
+                    let _ = ev.send(Ev::Open(id));
+                }
+                Ok(IoCmd::Frame(id, bytes)) => {
+                    busy = true;
+                    if let Some(c) = conns.get_mut(&id) {
+                        c.wbuf.extend_from_slice(&bytes);
+                    }
+                }
+                Ok(IoCmd::Close(id)) => {
+                    busy = true;
+                    if let Some(c) = conns.get_mut(&id) {
+                        c.closing = true;
+                    }
+                }
+                Ok(IoCmd::Stop) => {
+                    busy = true;
+                    stopping = true;
+                    for c in conns.values_mut() {
+                        c.closing = true;
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    stopping = true;
+                    for c in conns.values_mut() {
+                        c.closing = true;
+                    }
+                    break;
+                }
+            }
+        }
+
+        // Inbound: read, split frames, decode, forward.
+        for (&id, c) in conns.iter_mut() {
+            if c.closing || c.dead {
+                continue;
+            }
+            loop {
+                match c.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        c.dead = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        busy = true;
+                        c.rbuf.extend_from_slice(&tmp[..n]);
+                        let mut at = 0;
+                        loop {
+                            match Msg::decode(&c.rbuf[at..]) {
+                                Ok(Some((msg, used))) => {
+                                    at += used;
+                                    let _ = ev.send(Ev::Msg(id, msg));
+                                }
+                                Ok(None) => break,
+                                Err(e) => {
+                                    // Corrupt stream: typed reply, then
+                                    // close (resync is not possible once
+                                    // framing is untrusted).
+                                    Msg::ErrorReply {
+                                        code: err_code::BAD_FRAME,
+                                        msg: e.to_string(),
+                                    }
+                                    .encode(&mut c.wbuf);
+                                    c.closing = true;
+                                    break;
+                                }
+                            }
+                        }
+                        if at > 0 {
+                            c.rbuf.drain(..at);
+                        }
+                        if c.closing || n < tmp.len() {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        c.dead = true;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // Outbound: flush as much as each socket accepts.
+        for c in conns.values_mut() {
+            if c.dead {
+                continue;
+            }
+            while !c.flushed() {
+                match c.stream.write(&c.wbuf[c.wpos..]) {
+                    Ok(0) => {
+                        c.dead = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        busy = true;
+                        c.wpos += n;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        c.dead = true;
+                        break;
+                    }
+                }
+            }
+            if c.flushed() && !c.wbuf.is_empty() {
+                c.wbuf.clear();
+                c.wpos = 0;
+            }
+        }
+
+        // Reap: dead sockets now, closing ones once their queue flushed.
+        let reap: Vec<u64> = conns
+            .iter()
+            .filter(|(_, c)| c.dead || (c.closing && c.flushed()))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in reap {
+            if let Some(c) = conns.remove(&id) {
+                let _ = c.stream.shutdown(SockShutdown::Both);
+            }
+            let _ = ev.send(Ev::Closed(id));
+        }
+
+        if stopping {
+            if conns.is_empty() {
+                return;
+            }
+            if !busy {
+                grace = grace.saturating_sub(1);
+                if grace == 0 {
+                    // Flush grace exhausted: force-close what remains.
+                    for c in conns.values() {
+                        let _ = c.stream.shutdown(SockShutdown::Both);
+                    }
+                    return;
+                }
+            }
+        }
+        if !busy {
+            thread::sleep(Duration::from_micros(500));
+        }
+    }
+}
+
+/// The state loop: single owner of the service. Batches queued events
+/// between flushes; on stop, drains the backlog so the final commit
+/// covers every op the server already received, then runs the
+/// service's shutdown hook and stops the IO threads.
+fn state_loop<S: Service>(
+    mut service: S,
+    ev_rx: Receiver<Ev>,
+    io_tx: Vec<Sender<IoCmd>>,
+    stop: Arc<AtomicBool>,
+) -> Metrics {
+    let mut open: Vec<u64> = Vec::new();
+    let mut out = Outbox::new();
+    loop {
+        match ev_rx.recv_timeout(Duration::from_millis(2)) {
+            Ok(ev) => {
+                dispatch(&mut service, ev, &mut open, &mut out);
+                while let Ok(ev) = ev_rx.try_recv() {
+                    dispatch(&mut service, ev, &mut open, &mut out);
+                }
+                route(&mut out, &io_tx);
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    // Drain whatever the IO threads forwarded before the flag rose.
+    while let Ok(ev) = ev_rx.try_recv() {
+        dispatch(&mut service, ev, &mut open, &mut out);
+    }
+    service.on_shutdown(&open, &mut out);
+    route(&mut out, &io_tx);
+    for tx in &io_tx {
+        let _ = tx.send(IoCmd::Stop);
+    }
+    service.metrics()
+}
+
+fn dispatch<S: Service>(service: &mut S, ev: Ev, open: &mut Vec<u64>, out: &mut Outbox) {
+    match ev {
+        Ev::Open(id) => {
+            open.push(id);
+            service.on_open(id);
+        }
+        Ev::Msg(id, msg) => service.on_msg(id, msg, out),
+        Ev::Closed(id) => {
+            open.retain(|&c| c != id);
+            service.on_close(id);
+        }
+    }
+}
+
+/// Route queued frames/closes to the IO thread owning each connection
+/// (`conn % io_threads`, matching the listener's assignment).
+fn route(out: &mut Outbox, io_tx: &[Sender<IoCmd>]) {
+    for (conn, bytes) in out.frames.drain(..) {
+        let _ = io_tx[(conn as usize) % io_tx.len()].send(IoCmd::Frame(conn, bytes));
+    }
+    for conn in out.closes.drain(..) {
+        let _ = io_tx[(conn as usize) % io_tx.len()].send(IoCmd::Close(conn));
+    }
+}

@@ -1,0 +1,377 @@
+//! Byte-level wire primitives: length-prefixed frames, LEB128 varints,
+//! fixed-width floats, and a zero-copy cursor reader.
+//!
+//! This layer knows nothing about messages — [`super::proto`] owns the
+//! frame catalog. The split mirrors the builder/container pattern:
+//!
+//! * **Encode** appends into a **caller-owned** `Vec<u8>` (no writer
+//!   object, no intermediate buffers): [`put_varint`], [`put_f64`],
+//!   [`frame`].
+//! * **Decode** reads **zero-copy** from a `&[u8]` through [`Reader`],
+//!   returning primitives and subslices borrowed from the input.
+//!   Nothing in this file allocates on the decode path — the
+//!   `wire-no-alloc-in-decode` xtask lint rule enforces it.
+//!
+//! Every decode returns `Result<_, WireError>`; corrupt or truncated
+//! input is a typed error, never a panic. Frames:
+//!
+//! ```text
+//! [body_len: u32 LE] [version: u8] [tag: u8] [payload: body_len-2 bytes]
+//! ```
+//!
+//! `body_len` counts the version and tag bytes. Declared lengths above
+//! [`MAX_FRAME`] are rejected before any buffering decision, so a
+//! corrupt length prefix cannot drive allocation.
+
+use std::fmt;
+
+/// Wire protocol version carried in every frame.
+pub const VERSION: u8 = 1;
+
+/// Upper bound on a frame body; larger declared lengths are rejected
+/// as [`WireError::Oversized`] without buffering.
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// Frame header size: 4-byte length prefix + version + tag.
+pub const HEADER: usize = 6;
+
+/// Typed decode failure. Implements [`std::error::Error`], so `?`
+/// converts it into the crate-wide [`Error`](crate::error::Error).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    /// Input ended in the middle of a value or declared frame body.
+    Truncated,
+    /// Frame length prefix exceeds [`MAX_FRAME`].
+    Oversized(usize),
+    /// Version byte does not match [`VERSION`].
+    BadVersion(u8),
+    /// Unknown message tag.
+    BadTag(u8),
+    /// Structurally invalid payload (overlong varint, bad UTF-8,
+    /// unsorted pair list, out-of-range count…).
+    Malformed(&'static str),
+    /// Payload decoded cleanly but bytes remain in the frame body.
+    Trailing(usize),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::Oversized(n) => write!(f, "declared frame body of {n} bytes exceeds cap"),
+            WireError::BadVersion(v) => write!(f, "unsupported wire version {v}"),
+            WireError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            WireError::Malformed(what) => write!(f, "malformed payload: {what}"),
+            WireError::Trailing(n) => write!(f, "{n} trailing bytes after payload"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Append one byte.
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+/// Append a fixed-width little-endian `u32` (the frame length prefix).
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a LEB128 varint (1–10 bytes; compact for the small keys,
+/// counts and deltas that dominate region traffic).
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Append an `f64` as its 8 IEEE-754 bits, little-endian — bounds
+/// cross the wire bit-exact, which the federation layer relies on for
+/// identical routing on both sides.
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Append a length-prefixed byte string (varint length + bytes).
+pub fn put_bytes(out: &mut Vec<u8>, v: &[u8]) {
+    put_varint(out, v.len() as u64);
+    out.extend_from_slice(v);
+}
+
+/// Append a complete frame: reserves the length prefix, writes the
+/// version and tag, runs `payload`, then patches the prefix. The one
+/// writer all messages funnel through, so a frame can never disagree
+/// with its declared length.
+pub fn frame<F: FnOnce(&mut Vec<u8>)>(out: &mut Vec<u8>, tag: u8, payload: F) {
+    let at = out.len();
+    put_u32(out, 0);
+    put_u8(out, VERSION);
+    put_u8(out, tag);
+    payload(out);
+    let body = (out.len() - at - 4) as u32;
+    out[at..at + 4].copy_from_slice(&body.to_le_bytes());
+}
+
+/// Split the frame at the head of `buf`.
+///
+/// * `Ok(None)` — the buffer holds an incomplete frame; read more.
+/// * `Ok(Some((version, tag, payload, consumed)))` — one whole frame;
+///   `payload` excludes the version and tag bytes, `consumed` is the
+///   total byte count to drain from the buffer.
+/// * `Err` — the stream is corrupt at frame granularity (oversized or
+///   impossible length); the connection cannot resync and should
+///   close.
+pub fn split_frame(buf: &[u8]) -> Result<Option<(u8, u8, &[u8], usize)>, WireError> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let body = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if body > MAX_FRAME {
+        return Err(WireError::Oversized(body));
+    }
+    if body < 2 {
+        return Err(WireError::Malformed("frame body shorter than header"));
+    }
+    if buf.len() < 4 + body {
+        return Ok(None);
+    }
+    Ok(Some((buf[4], buf[5], &buf[6..4 + body], 4 + body)))
+}
+
+/// Zero-copy cursor over a frame payload. Every accessor advances the
+/// cursor and fails with a typed error instead of panicking; subslice
+/// accessors borrow from the input.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Cursor over `buf`, positioned at the start.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        let b = *self.buf.get(self.pos).ok_or(WireError::Truncated)?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    /// Read a LEB128 varint (rejects encodings past 10 bytes and
+    /// high-bit overflow into a 65th bit).
+    pub fn varint(&mut self) -> Result<u64, WireError> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let byte = self.u8()?;
+            if shift == 63 && byte > 1 {
+                return Err(WireError::Malformed("varint overflows u64"));
+            }
+            v |= u64::from(byte & 0x7f) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift > 63 {
+                return Err(WireError::Malformed("varint too long"));
+            }
+        }
+    }
+
+    /// Read a fixed-width little-endian `f64` (bit-exact).
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        if self.remaining() < 8 {
+            return Err(WireError::Truncated);
+        }
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&self.buf[self.pos..self.pos + 8]);
+        self.pos += 8;
+        Ok(f64::from_bits(u64::from_le_bytes(b)))
+    }
+
+    /// Read a length-prefixed byte string, borrowed from the input.
+    pub fn bytes(&mut self) -> Result<&'a [u8], WireError> {
+        let len = self.varint()? as usize;
+        if len > self.remaining() {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + len];
+        self.pos += len;
+        Ok(s)
+    }
+
+    /// Read a length-prefixed UTF-8 string, borrowed from the input.
+    pub fn str(&mut self) -> Result<&'a str, WireError> {
+        std::str::from_utf8(self.bytes()?).map_err(|_| WireError::Malformed("invalid UTF-8"))
+    }
+
+    /// Read a count that prefixes a list whose elements occupy at
+    /// least `min_elem_bytes` each — bounds the count by the bytes
+    /// actually present, so a corrupt count can never drive a huge
+    /// allocation in the callers that do collect.
+    pub fn count(&mut self, min_elem_bytes: usize) -> Result<usize, WireError> {
+        let n = self.varint()? as usize;
+        if n.saturating_mul(min_elem_bytes.max(1)) > self.remaining() {
+            return Err(WireError::Truncated);
+        }
+        Ok(n)
+    }
+
+    /// Assert the payload was consumed exactly.
+    pub fn finish(&self) -> Result<(), WireError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(WireError::Trailing(self.remaining()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_round_trips_edge_values() {
+        for v in [
+            0u64,
+            1,
+            127,
+            128,
+            16383,
+            16384,
+            u32::MAX as u64,
+            u64::MAX - 1,
+            u64::MAX,
+        ] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            assert!(buf.len() <= 10);
+            let mut r = Reader::new(&buf);
+            assert_eq!(r.varint().unwrap(), v, "v={v}");
+            r.finish().unwrap();
+        }
+    }
+
+    #[test]
+    fn varint_rejects_overlong_and_overflowing_encodings() {
+        // 11 continuation bytes: too long.
+        let buf = [0x80u8; 11];
+        assert_eq!(
+            Reader::new(&buf).varint(),
+            Err(WireError::Malformed("varint too long"))
+        );
+        // 10 bytes whose top byte overflows the 64th bit.
+        let mut buf = vec![0x80u8; 9];
+        buf.push(0x02);
+        assert_eq!(
+            Reader::new(&buf).varint(),
+            Err(WireError::Malformed("varint overflows u64"))
+        );
+        // Truncated mid-varint.
+        assert_eq!(Reader::new(&[0x80u8]).varint(), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn f64_is_bit_exact() {
+        for v in [0.0, -0.0, 1.5, f64::MIN_POSITIVE, f64::MAX, f64::NEG_INFINITY, f64::NAN] {
+            let mut buf = Vec::new();
+            put_f64(&mut buf, v);
+            let got = Reader::new(&buf).f64().unwrap();
+            assert_eq!(got.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn bytes_and_str_borrow_and_validate() {
+        let mut buf = Vec::new();
+        put_bytes(&mut buf, b"hello");
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.bytes().unwrap(), b"hello");
+        r.finish().unwrap();
+
+        let mut buf = Vec::new();
+        put_bytes(&mut buf, &[0xff, 0xfe]);
+        assert_eq!(
+            Reader::new(&buf).str(),
+            Err(WireError::Malformed("invalid UTF-8"))
+        );
+
+        // Declared length beyond the buffer: truncated, not a panic.
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 100);
+        buf.push(b'x');
+        assert_eq!(Reader::new(&buf).bytes(), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn frame_writes_and_splits() {
+        let mut buf = Vec::new();
+        frame(&mut buf, 7, |out| put_varint(out, 42));
+        let (ver, tag, payload, used) = split_frame(&buf).unwrap().unwrap();
+        assert_eq!((ver, tag, used), (VERSION, 7, buf.len()));
+        let mut r = Reader::new(payload);
+        assert_eq!(r.varint().unwrap(), 42);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn split_frame_handles_partial_oversized_and_short_bodies() {
+        let mut buf = Vec::new();
+        frame(&mut buf, 3, |out| put_bytes(out, b"abc"));
+        // Every strict prefix is "incomplete", never an error.
+        for cut in 0..buf.len() {
+            assert_eq!(split_frame(&buf[..cut]).unwrap(), None, "cut={cut}");
+        }
+        // Oversized declared length is rejected without buffering.
+        let mut bad = Vec::new();
+        put_u32(&mut bad, (MAX_FRAME + 1) as u32);
+        assert_eq!(
+            split_frame(&bad),
+            Err(WireError::Oversized(MAX_FRAME + 1))
+        );
+        // A body too short to hold version+tag is malformed.
+        let mut bad = Vec::new();
+        put_u32(&mut bad, 1);
+        bad.push(VERSION);
+        assert!(matches!(split_frame(&bad), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn count_bounds_list_headers_by_available_bytes() {
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 1 << 40); // absurd count, no elements
+        assert_eq!(Reader::new(&buf).count(8), Err(WireError::Truncated));
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 2);
+        put_f64(&mut buf, 1.0);
+        put_f64(&mut buf, 2.0);
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.count(8).unwrap(), 2);
+    }
+
+    #[test]
+    fn trailing_bytes_are_a_typed_error() {
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 5);
+        buf.push(0);
+        let mut r = Reader::new(&buf);
+        r.varint().unwrap();
+        assert_eq!(r.finish(), Err(WireError::Trailing(1)));
+    }
+}

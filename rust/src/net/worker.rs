@@ -1,0 +1,214 @@
+//! The worker service: a network front-end for one [`AnySession`].
+//!
+//! A worker owns a contiguous stripe-range of the federation's global
+//! shard space (or the whole space when it runs alone behind `ddm
+//! serve`). Decoded [`RegionOp`]s stage into the session's LWW batch
+//! path exactly as local callers would; `Commit` closes an epoch and
+//! answers with the [`MatchDiff`], which also streams to every
+//! subscribed connection. Reads (`GetPairs`, `Sync`, `GetMetrics`)
+//! answer from retained state without touching staging.
+//!
+//! Shutdown keeps the session honest: if any ops were staged or
+//! flushed since the last commit, the worker closes one final epoch
+//! and streams that diff before `Goodbye`, so a client that stops the
+//! server mid-stream still observes every transition exactly once.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::metrics::Metrics;
+use crate::session::MatchDiff;
+use crate::shard::AnySession;
+
+use super::proto::{err_code, MetricsSnapshot, Msg, RegionOp, Role, PROTO_ID};
+use super::server::{Outbox, Service};
+
+/// [`Service`] implementation wrapping a session (single or sharded).
+pub struct WorkerService {
+    session: AnySession,
+    metrics: Metrics,
+    /// Connections that asked for every epoch's diff.
+    subscribers: Vec<u64>,
+    /// Ops staged or flushed since the last commit (drives the final
+    /// commit on shutdown — `pending_ops()` alone misses flushed work).
+    dirty: bool,
+    stop: Option<Arc<AtomicBool>>,
+}
+
+impl WorkerService {
+    /// Wrap `session`; the server core calls everything else.
+    pub fn new(session: AnySession) -> Self {
+        Self {
+            session,
+            metrics: Metrics::default(),
+            subscribers: Vec::new(),
+            dirty: false,
+            stop: None,
+        }
+    }
+
+    fn stage(&mut self, conn: u64, op: RegionOp, out: &mut Outbox) {
+        let d = self.session.d();
+        match op {
+            RegionOp::UpsertSub { key, rect } => {
+                if rect.len() != d {
+                    self.reject_dims(conn, rect.len(), out);
+                    return;
+                }
+                self.session.upsert_subscription(key, &rect);
+            }
+            RegionOp::UpsertUpd { key, rect } => {
+                if rect.len() != d {
+                    self.reject_dims(conn, rect.len(), out);
+                    return;
+                }
+                self.session.upsert_update(key, &rect);
+            }
+            RegionOp::RemoveSub { key } => self.session.remove_subscription(key),
+            RegionOp::RemoveUpd { key } => self.session.remove_update(key),
+        }
+        self.dirty = true;
+        self.metrics.inc("net_ops", 1);
+    }
+
+    fn reject_dims(&mut self, conn: u64, got: usize, out: &mut Outbox) {
+        out.send(
+            conn,
+            &Msg::ErrorReply {
+                code: err_code::BAD_OP,
+                msg: format!("rect has {got} dims, session wants {}", self.session.d()),
+            },
+        );
+    }
+
+    fn commit_epoch(&mut self) -> MatchDiff {
+        let diff = self.session.commit();
+        self.dirty = false;
+        self.metrics.inc("commits", 1);
+        self.metrics.inc("diff_added", diff.added.len() as u64);
+        self.metrics.inc("diff_removed", diff.removed.len() as u64);
+        if let Some(im) = self.session.imbalance() {
+            self.metrics.gauge("shard_imbalance", im);
+        }
+        diff
+    }
+
+    /// Stream `diff` to every subscriber except `skip` (the committing
+    /// connection gets its copy as the direct reply, never twice).
+    fn stream_diff(&mut self, diff: &MatchDiff, skip: Option<u64>, out: &mut Outbox) {
+        let mut sent = 0u64;
+        for &s in &self.subscribers {
+            if Some(s) == skip {
+                continue;
+            }
+            out.send(s, &Msg::Diff(diff.clone()));
+            sent += 1;
+        }
+        self.metrics.inc("net_diff_frames", sent);
+    }
+}
+
+impl Service for WorkerService {
+    fn bind_stop(&mut self, stop: Arc<AtomicBool>) {
+        self.stop = Some(stop);
+    }
+
+    fn on_open(&mut self, _conn: u64) {
+        self.metrics.inc("net_conns", 1);
+    }
+
+    fn on_close(&mut self, conn: u64) {
+        self.subscribers.retain(|&c| c != conn);
+    }
+
+    fn on_msg(&mut self, conn: u64, msg: Msg, out: &mut Outbox) {
+        match msg {
+            Msg::Hello { proto } => {
+                if proto != PROTO_ID {
+                    out.send(
+                        conn,
+                        &Msg::ErrorReply {
+                            code: err_code::BAD_HELLO,
+                            msg: format!("unknown protocol id {proto:#x}"),
+                        },
+                    );
+                    out.close(conn);
+                } else {
+                    out.send(
+                        conn,
+                        &Msg::Welcome {
+                            role: Role::Worker,
+                            d: self.session.d() as u32,
+                            epoch: self.session.epoch(),
+                        },
+                    );
+                }
+            }
+            Msg::Op(op) => self.stage(conn, op, out),
+            Msg::Batch(ops) => {
+                for op in ops {
+                    self.stage(conn, op, out);
+                }
+            }
+            Msg::Flush => self.session.flush(),
+            Msg::Commit => {
+                let diff = self.commit_epoch();
+                self.stream_diff(&diff, Some(conn), out);
+                out.send(conn, &Msg::Diff(diff));
+                self.metrics.inc("net_diff_frames", 1);
+            }
+            Msg::Subscribe => {
+                if !self.subscribers.contains(&conn) {
+                    self.subscribers.push(conn);
+                }
+            }
+            Msg::Sync { token } => out.send(
+                conn,
+                &Msg::SyncAck {
+                    token,
+                    epoch: self.session.epoch(),
+                    pending: self.session.pending_ops() as u64,
+                },
+            ),
+            Msg::GetPairs => {
+                let pairs = self.session.pairs();
+                out.send(conn, &Msg::Pairs(pairs));
+            }
+            Msg::GetMetrics => {
+                self.metrics
+                    .gauge("net_subscribers", self.subscribers.len() as f64);
+                let snap = MetricsSnapshot::of(&self.metrics);
+                out.send(conn, &Msg::Metrics(snap));
+            }
+            Msg::Shutdown => {
+                if let Some(stop) = &self.stop {
+                    stop.store(true, Ordering::SeqCst);
+                }
+            }
+            other => out.send(
+                conn,
+                &Msg::ErrorReply {
+                    code: err_code::UNSUPPORTED,
+                    msg: format!("worker cannot handle {other:?}"),
+                },
+            ),
+        }
+    }
+
+    fn on_shutdown(&mut self, open: &[u64], out: &mut Outbox) {
+        // Flush staged work into one last epoch so nothing the server
+        // acknowledged is silently dropped.
+        if self.dirty || self.session.pending_ops() > 0 {
+            let diff = self.commit_epoch();
+            self.stream_diff(&diff, None, out);
+        }
+        let epoch = self.session.epoch();
+        for &conn in open {
+            out.send(conn, &Msg::Goodbye { epoch });
+        }
+    }
+
+    fn metrics(&mut self) -> Metrics {
+        std::mem::take(&mut self.metrics)
+    }
+}

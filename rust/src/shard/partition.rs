@@ -51,6 +51,21 @@ impl SpacePartitioner {
         Self { split_dim, cuts }
     }
 
+    /// Rebuild a partitioner from explicit interior cut points (e.g. a
+    /// topology snapshot received over the wire — see
+    /// [`net`](crate::net)). Cuts must be non-decreasing; the stripe
+    /// count is `cuts.len() + 1`. Because routing is a pure function
+    /// of the cut values, two partitioners built from bit-identical
+    /// cuts route every region identically — the property the
+    /// cross-process federation layer relies on.
+    pub fn from_cuts(split_dim: usize, cuts: Vec<f64>) -> Self {
+        assert!(
+            cuts.windows(2).all(|w| w[0] <= w[1]),
+            "cuts must be non-decreasing"
+        );
+        Self { split_dim, cuts }
+    }
+
     /// Sample-based balanced stripes: cut at the `shards`-quantiles of
     /// `sample` (region positions on the split dimension), so each
     /// stripe holds roughly the same number of sampled positions.
@@ -169,6 +184,21 @@ mod tests {
         // The uniform alternative puts every cut outside the hotspot.
         let u = SpacePartitioner::uniform(4, 0, Interval::new(0.0, 100.0));
         assert!(u.cuts().iter().all(|&c| c >= 10.0));
+    }
+
+    #[test]
+    fn from_cuts_round_trips_routing() {
+        let u = SpacePartitioner::uniform(4, 1, Interval::new(0.0, 100.0));
+        let r = SpacePartitioner::from_cuts(u.split_dim(), u.cuts().to_vec());
+        assert_eq!(r, u);
+        for iv in [
+            Interval::new(0.0, 10.0),
+            Interval::new(10.0, 30.0),
+            Interval::new(25.0, 25.0),
+            Interval::new(-5.0, 500.0),
+        ] {
+            assert_eq!(r.route(iv), u.route(iv));
+        }
     }
 
     #[test]

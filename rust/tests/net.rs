@@ -1,0 +1,394 @@
+//! End-to-end tests of the network service over real loopback sockets.
+//!
+//! Everything here runs against `127.0.0.1:0` (ephemeral ports) with
+//! short client read timeouts, so a protocol bug fails fast instead of
+//! hanging the suite. The two headline properties:
+//!
+//! * **wire = local**: a session driven over TCP produces diff streams
+//!   byte-equal (epoch numbers included) to the same ops applied to an
+//!   in-process session;
+//! * **federation = flat**: a router + two stripe-owning workers
+//!   produce diff streams and pair sets byte-equal to one flat
+//!   `ShardedSession` over the same global cuts.
+
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use ddm::bench::netbench::bench_loopback;
+use ddm::core::Interval;
+use ddm::engine::DdmEngine;
+use ddm::net::proto::arbitrary_msg;
+use ddm::net::{
+    assign_stripes, serve, FederationClient, Msg, NetClient, RegionOp, RouterService,
+    ServerConfig, ServerHandle, TopologySnapshot, WireError, WorkerService,
+};
+use ddm::prng::Rng;
+use ddm::shard::{AnySession, SpacePartitioner};
+
+const D: usize = 2;
+const SPACE: f64 = 1e6;
+
+fn cfg() -> ServerConfig {
+    ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        io_threads: 2,
+    }
+}
+
+fn single_server() -> (ServerHandle, String) {
+    let engine = DdmEngine::builder().threads(2).build();
+    let handle = serve(&cfg(), WorkerService::new(AnySession::Single(engine.session(D))))
+        .expect("serve single worker");
+    let addr = handle.addr().to_string();
+    (handle, addr)
+}
+
+fn connect(addr: &str) -> NetClient {
+    let mut c = NetClient::connect(addr).expect("connect");
+    c.set_timeout(Duration::from_secs(10)).expect("timeout");
+    c
+}
+
+fn rect(lo0: f64, hi0: f64, lo1: f64, hi1: f64) -> Vec<Interval> {
+    vec![Interval::new(lo0, hi0), Interval::new(lo1, hi1)]
+}
+
+// ---- single server ----------------------------------------------------
+
+/// One connection, three epochs: the wire-observed diff stream equals
+/// an in-process replay (asserted inside `bench_loopback`), and the
+/// server's own metrics agree on the commit count.
+#[test]
+fn loopback_single_connection_matches_local_replay() {
+    let (handle, addr) = single_server();
+    let res = bench_loopback(&addr, 1, 400, 3, 7, D).expect("loopback equivalence");
+    assert!(res.ops > 0 && res.added > 0);
+    let metrics = handle.shutdown();
+    assert_eq!(metrics.counter("commits"), 3);
+    assert_eq!(metrics.counter("net_ops"), res.ops as u64);
+}
+
+/// Three connections staging disjoint key ranges concurrently still
+/// replay to the identical diff stream.
+#[test]
+fn loopback_multi_connection_matches_local_replay() {
+    let (handle, addr) = single_server();
+    let res = bench_loopback(&addr, 3, 300, 3, 11, D).expect("loopback equivalence");
+    assert!(res.added > 0);
+    let metrics = handle.shutdown();
+    assert_eq!(metrics.counter("net_conns"), 3);
+}
+
+/// The committing connection receives the epoch's diff exactly once
+/// even while subscribed: the broadcast skips it, the direct reply
+/// carries it. A subscribed bystander gets the identical frame.
+#[test]
+fn commit_reply_is_not_duplicated_to_subscribed_committer() {
+    let (handle, addr) = single_server();
+    let mut a = connect(&addr);
+    let mut b = connect(&addr);
+    a.subscribe().expect("subscribe a");
+    b.subscribe().expect("subscribe b");
+    // Barrier so the server has registered both subscriptions before
+    // the commit below broadcasts.
+    a.sync(1).expect("sync a");
+    b.sync(2).expect("sync b");
+
+    a.op(RegionOp::UpsertSub { key: 0, rect: rect(0.0, 10.0, 0.0, 10.0) })
+        .expect("stage sub");
+    a.op(RegionOp::UpsertUpd { key: 7, rect: rect(5.0, 15.0, 5.0, 15.0) })
+        .expect("stage upd");
+    let diff_a = a.commit().expect("commit");
+    assert_eq!(diff_a.epoch, 1);
+    assert_eq!(diff_a.added, vec![(0, 7)]);
+    let diff_b = b.await_diff().expect("broadcast diff");
+    assert_eq!(diff_a, diff_b);
+
+    // Any duplicate diff would have been queued to `a` before this
+    // SyncAck; after it, `a`'s socket must be silent.
+    a.sync(3).expect("post-commit sync");
+    a.set_timeout(Duration::from_millis(200)).expect("short timeout");
+    assert!(a.recv().is_err(), "committer received a duplicate frame");
+    drop((a, b));
+    handle.shutdown();
+}
+
+/// `GetMetrics` round-trips the live counters: ops staged, epochs
+/// committed, connections seen, diff frames sent.
+#[test]
+fn metrics_travel_over_the_wire() {
+    let (handle, addr) = single_server();
+    let mut c = connect(&addr);
+    c.op(RegionOp::UpsertSub { key: 1, rect: rect(0.0, 5.0, 0.0, 5.0) })
+        .expect("stage");
+    c.op(RegionOp::UpsertUpd { key: 2, rect: rect(1.0, 6.0, 1.0, 6.0) })
+        .expect("stage");
+    let diff = c.commit().expect("commit");
+    assert_eq!(diff.added, vec![(1, 2)]);
+    let snap = c.metrics().expect("metrics frame");
+    assert_eq!(snap.counter("commits"), 1);
+    assert_eq!(snap.counter("net_ops"), 2);
+    assert_eq!(snap.counter("net_diff_frames"), 1);
+    assert!(snap.counter("net_conns") >= 1);
+    assert!(!snap.table().render().is_empty());
+    drop(c);
+    handle.shutdown();
+}
+
+/// A corrupt frame gets a typed `ErrorReply` and a close — the server
+/// neither panics nor leaves the connection dangling.
+#[test]
+fn corrupt_frame_yields_error_reply_then_close() {
+    let (handle, addr) = single_server();
+    let mut raw = std::net::TcpStream::connect(&addr).expect("raw connect");
+    raw.set_read_timeout(Some(Duration::from_secs(10))).expect("timeout");
+    // A well-framed body with an unknown version byte.
+    raw.write_all(&[2, 0, 0, 0, 99, 1, 0, 0]).expect("write garbage");
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 1024];
+    let reply = loop {
+        match Msg::decode(&buf).expect("decodable reply") {
+            Some((msg, _)) => break msg,
+            None => {
+                let n = raw.read(&mut tmp).expect("read reply");
+                assert!(n > 0, "closed before replying");
+                buf.extend_from_slice(&tmp[..n]);
+            }
+        }
+    };
+    match reply {
+        Msg::ErrorReply { code, .. } => assert_eq!(code, ddm::net::proto::err_code::BAD_FRAME),
+        other => panic!("expected ErrorReply, got {other:?}"),
+    }
+    // The server closes the connection after the reply.
+    loop {
+        match raw.read(&mut tmp) {
+            Ok(0) => break,
+            Ok(_) => continue,
+            Err(e) => panic!("expected EOF after error reply, got {e}"),
+        }
+    }
+    // The server itself is still healthy.
+    let mut c = connect(&addr);
+    c.sync(9).expect("server still serving");
+    drop(c);
+    handle.shutdown();
+}
+
+// ---- graceful shutdown ------------------------------------------------
+
+/// The shutdown regression: ops staged (and even flushed) but never
+/// committed still surface. `Shutdown` closes a final epoch, streams
+/// the diff to subscribers, and says `Goodbye` before the socket dies.
+#[test]
+fn graceful_shutdown_flushes_staged_ops_and_says_goodbye() {
+    let (handle, addr) = single_server();
+    let mut c = connect(&addr);
+    c.subscribe().expect("subscribe");
+    c.op(RegionOp::UpsertSub { key: 3, rect: rect(0.0, 9.0, 0.0, 9.0) })
+        .expect("stage sub");
+    c.op(RegionOp::UpsertUpd { key: 4, rect: rect(2.0, 11.0, 2.0, 11.0) })
+        .expect("stage upd");
+    // Flush applies the batch without closing an epoch — the classic
+    // way to lose work at shutdown if only pending_ops() is checked.
+    c.flush().expect("flush");
+    c.sync(1).expect("barrier");
+    c.shutdown_server().expect("request shutdown");
+    let diff = c.await_diff().expect("final diff before goodbye");
+    assert_eq!(diff.epoch, 1);
+    assert_eq!(diff.added, vec![(3, 4)]);
+    let epoch = c.await_goodbye().expect("goodbye");
+    assert_eq!(epoch, 1);
+    let metrics = handle.join();
+    assert_eq!(metrics.counter("commits"), 1, "shutdown must close the final epoch");
+}
+
+// ---- federation -------------------------------------------------------
+
+/// Build a router + `n_workers` workers over `shards` uniform stripes
+/// and return the handles plus the flat reference partitioner cuts.
+fn federation(
+    shards: usize,
+    n_workers: usize,
+) -> (Vec<ServerHandle>, ServerHandle, Vec<f64>) {
+    let part = SpacePartitioner::uniform(shards, 0, Interval::new(0.0, SPACE));
+    let cuts = part.cuts().to_vec();
+    let mut entries = assign_stripes(shards, &vec![String::new(); n_workers]);
+    let mut handles = Vec::new();
+    for e in &mut entries {
+        let local =
+            SpacePartitioner::from_cuts(0, cuts[e.first as usize..e.last as usize].to_vec());
+        let engine = DdmEngine::builder().threads(2).build();
+        let sess = AnySession::Sharded(engine.sharded_session_with(D, local));
+        let h = serve(&cfg(), WorkerService::new(sess)).expect("serve worker");
+        e.addr = h.addr().to_string();
+        handles.push(h);
+    }
+    let topo = TopologySnapshot {
+        d: D as u32,
+        split_dim: 0,
+        cuts: cuts.clone(),
+        workers: entries,
+    };
+    let router = serve(&cfg(), RouterService::new(topo)).expect("serve router");
+    (handles, router, cuts)
+}
+
+/// Random churn script over the full space: upserts (many straddling
+/// stripe and worker boundaries), moves, and removes.
+fn churn(seed: u64, n: usize, epochs: usize) -> Vec<Vec<RegionOp>> {
+    let mut rng = Rng::new(seed);
+    let mut r = |rng: &mut Rng, wide: bool| -> Vec<Interval> {
+        let w = if wide { SPACE * 0.6 } else { SPACE * 0.01 };
+        (0..D)
+            .map(|_| {
+                let lo = rng.uniform(0.0, SPACE - w);
+                Interval::new(lo, lo + rng.uniform(w * 0.5, w))
+            })
+            .collect()
+    };
+    let mut script = Vec::new();
+    let mut first = Vec::new();
+    for k in 0..n as u32 {
+        let wide = k % 7 == 0;
+        first.push(RegionOp::UpsertSub { key: k, rect: r(&mut rng, wide) });
+        first.push(RegionOp::UpsertUpd { key: k, rect: r(&mut rng, !wide && k % 5 == 0) });
+    }
+    script.push(first);
+    for _ in 1..epochs {
+        let mut ops = Vec::new();
+        for _ in 0..(n / 3).max(1) {
+            let key = rng.below(n as u64) as u32;
+            ops.push(match rng.below(6) {
+                0 => RegionOp::RemoveSub { key },
+                1 => RegionOp::RemoveUpd { key },
+                2 => RegionOp::UpsertSub { key, rect: r(&mut rng, true) },
+                3 => RegionOp::UpsertUpd { key, rect: r(&mut rng, true) },
+                4 => RegionOp::UpsertSub { key, rect: r(&mut rng, false) },
+                _ => RegionOp::UpsertUpd { key, rect: r(&mut rng, false) },
+            });
+        }
+        script.push(ops);
+    }
+    script
+}
+
+fn apply_flat(sess: &mut AnySession, ops: &[RegionOp]) {
+    for op in ops {
+        match op {
+            RegionOp::UpsertSub { key, rect } => sess.upsert_subscription(*key, rect),
+            RegionOp::UpsertUpd { key, rect } => sess.upsert_update(*key, rect),
+            RegionOp::RemoveSub { key } => sess.remove_subscription(*key),
+            RegionOp::RemoveUpd { key } => sess.remove_update(*key),
+        }
+    }
+}
+
+fn apply_fed(fed: &mut FederationClient, ops: &[RegionOp]) {
+    for op in ops {
+        match op {
+            RegionOp::UpsertSub { key, rect } => fed.upsert_subscription(*key, rect),
+            RegionOp::UpsertUpd { key, rect } => fed.upsert_update(*key, rect),
+            RegionOp::RemoveSub { key } => fed.remove_subscription(*key),
+            RegionOp::RemoveUpd { key } => fed.remove_update(*key),
+        }
+        .expect("federated op");
+    }
+}
+
+/// The tentpole equivalence: router + 2 workers (each a 2-stripe
+/// sharded session) vs one flat 4-stripe `ShardedSession`. Every
+/// epoch's merged diff and the final pair set must be byte-equal, so
+/// pairs straddling the worker boundary report exactly once.
+#[test]
+fn federation_matches_flat_sharded_session() {
+    let (workers, router, cuts) = federation(4, 2);
+    let mut fed = FederationClient::connect(&router.addr().to_string()).expect("fed connect");
+    assert_eq!(fed.n_workers(), 2);
+    assert_eq!(fed.d(), D);
+    fed.set_timeout(Duration::from_secs(10)).expect("timeouts");
+
+    let engine = DdmEngine::builder().threads(2).build();
+    let mut flat =
+        AnySession::Sharded(engine.sharded_session_with(D, SpacePartitioner::from_cuts(0, cuts)));
+
+    for (e, ops) in churn(1234, 120, 5).iter().enumerate() {
+        apply_fed(&mut fed, ops);
+        let got = fed.commit().expect("federated commit");
+        apply_flat(&mut flat, ops);
+        let want = flat.commit();
+        assert_eq!(got, want, "epoch {e}: federated diff != flat sharded diff");
+        assert_eq!(fed.epoch(), want.epoch);
+    }
+    assert_eq!(fed.pairs().expect("federated pairs"), flat.pairs());
+    assert_eq!(fed.n_pairs(), flat.n_pairs());
+
+    fed.shutdown_workers().expect("worker shutdown");
+    for h in workers {
+        h.join();
+    }
+    router.shutdown();
+}
+
+/// The router answers topology queries and survives clients that only
+/// ever talk to it; a `FederationClient` built from its snapshot and
+/// one built by hand are interchangeable.
+#[test]
+fn router_serves_topology() {
+    let (workers, router, cuts) = federation(3, 3);
+    let mut c = connect(&router.addr().to_string());
+    assert_eq!(c.role(), ddm::net::Role::Router);
+    let topo = c.topology().expect("topology frame");
+    assert_eq!(topo.d, D as u32);
+    assert_eq!(topo.cuts, cuts);
+    assert_eq!(topo.workers.len(), 3);
+    assert_eq!(topo.shards(), 3);
+    // One stripe each, in order.
+    for (w, e) in topo.workers.iter().enumerate() {
+        assert_eq!((e.first, e.last), (w as u32, w as u32));
+    }
+    let mut fed = FederationClient::from_topology(&topo).expect("fed from snapshot");
+    fed.upsert_subscription(0, &rect(0.0, SPACE * 0.9, 0.0, 10.0)).expect("wide sub");
+    fed.upsert_update(1, &rect(0.0, SPACE * 0.9, 0.0, 10.0)).expect("wide upd");
+    let diff = fed.commit().expect("commit");
+    assert_eq!(diff.added, vec![(0, 1)], "straddling pair reported exactly once");
+    fed.shutdown_workers().expect("worker shutdown");
+    for h in workers {
+        h.join();
+    }
+    router.shutdown();
+}
+
+// ---- wire fuzz --------------------------------------------------------
+
+/// Every frame type round-trips at several dimensionalities, and no
+/// truncation or byte corruption of a valid frame can panic the
+/// decoder — it returns `Ok(None)` (incomplete) or a typed error.
+#[test]
+fn wire_fuzz_roundtrip_and_corruption() {
+    let mut rng = Rng::new(0xAB5E);
+    for d in [1usize, 3, 5] {
+        for _ in 0..200 {
+            let msg = arbitrary_msg(&mut rng, d);
+            let frame = msg.to_frame();
+            assert_eq!(Msg::decode_exact(&frame).expect("round trip"), msg);
+            // Every strict prefix is "incomplete", never an error.
+            for cut in 0..frame.len() {
+                match Msg::decode(&frame[..cut]) {
+                    Ok(None) | Err(_) => {}
+                    Ok(Some(_)) => panic!("prefix of length {cut} decoded as complete"),
+                }
+            }
+            // Single-byte corruption never panics.
+            for _ in 0..8 {
+                let mut bad = frame.clone();
+                let at = rng.below(bad.len() as u64) as usize;
+                bad[at] ^= 1 << rng.below(8);
+                let _ = Msg::decode(&bad);
+            }
+        }
+    }
+    // Oversized length prefixes are rejected up front.
+    let huge = [0xFF, 0xFF, 0xFF, 0x7F, 1, 1];
+    assert!(matches!(Msg::decode(&huge), Err(WireError::Oversized(_))));
+}

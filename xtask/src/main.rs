@@ -7,12 +7,16 @@
 //!     adjacent `// SAFETY:` comment (same line, or in the comment block
 //!     directly above the statement).
 //!   - **hot-lock**: no `Mutex` / `RwLock` in the hot-path modules
-//!     (`exec/`, `algos/`, `core/`, `shard/`) outside tests.
+//!     (`exec/`, `algos/`, `core/`, `shard/`, `net/`) outside tests.
 //!   - **hot-panic**: no `.unwrap()` / `.expect(` in hot-path modules
 //!     outside tests.
 //!   - **wallclock**: no `Instant::now` outside the measurement layer
 //!     (`bench/`, `coordinator/`, `main.rs`, `cli.rs`).
 //!   - **pub-doc**: every `pub` item in `exec/` carries a `///` rustdoc.
+//!   - **wire-no-alloc-in-decode**: no `Vec::new` / `.to_vec()` /
+//!     `vec!` in `net/wire.rs` outside tests — the framing layer reads
+//!     zero-copy from `&[u8]`; containers are allocated one layer up in
+//!     `net/proto.rs` where counts have been bounds-checked.
 //!
 //!   Violations can be waived in place with a reason:
 //!   `// xlint: allow(<rule>): <reason>` on the offending line or in the
@@ -34,18 +38,25 @@ use std::fs;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-/// The five lint rules. Names are what waivers reference.
-const RULES: [&str; 5] = [
+/// The six lint rules. Names are what waivers reference.
+const RULES: [&str; 6] = [
     "safety-comment",
     "hot-lock",
     "hot-panic",
     "wallclock",
     "pub-doc",
+    "wire-no-alloc-in-decode",
 ];
 
 /// Hot-path module prefixes: lock-free by design, so locks and panics
-/// in non-test code are lint errors there.
-const HOT_PREFIXES: [&str; 4] = ["exec/", "algos/", "core/", "shard/"];
+/// in non-test code are lint errors there. `net/` joined when the
+/// server core shipped — its IO and state threads synchronize purely
+/// over channels.
+const HOT_PREFIXES: [&str; 5] = ["exec/", "algos/", "core/", "shard/", "net/"];
+
+/// The one file where decode-side allocation is banned outright (see
+/// the `wire-no-alloc-in-decode` rule).
+const WIRE_FILE: &str = "net/wire.rs";
 
 /// Where `Instant::now` is legitimate: the measurement layer itself.
 const WALLCLOCK_ALLOW_PREFIXES: [&str; 2] = ["bench/", "coordinator/"];
@@ -507,6 +518,25 @@ fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
             }
         }
 
+        if rel == WIRE_FILE && !in_test[i] {
+            for (alloc, found) in [
+                ("Vec::new", word_in(code, "Vec") && code.contains("Vec::new")),
+                (".to_vec()", code.contains(".to_vec()")),
+                ("vec!", code.contains("vec!")),
+            ] {
+                if found {
+                    push(
+                        i,
+                        "wire-no-alloc-in-decode",
+                        format!(
+                            "`{alloc}` in {WIRE_FILE} (framing is zero-copy; allocate in net/proto.rs \
+                             after bounds checks)"
+                        ),
+                    );
+                }
+            }
+        }
+
         if !wallclock_ok && !in_test[i] && code.contains("Instant::now") {
             push(
                 i,
@@ -619,11 +649,12 @@ fn run_lint(args: &[String]) -> ExitCode {
 
 /// Quick bench configurations — the same flags CI's smoke steps use, so
 /// a local snapshot is comparable to the CI artifact.
-const SNAPSHOT_BENCHES: [(&str, &[&str]); 4] = [
+const SNAPSHOT_BENCHES: [(&str, &[&str]); 5] = [
     ("abl_session", &["--quick", "--n", "10k", "--epochs", "2"]),
     ("abl_shard", &["--quick", "--n", "6k", "--epochs", "2"]),
     ("abl_nd", &["--quick"]),
     ("abl_sort", &["--quick"]),
+    ("abl_net", &["--quick"]),
 ];
 
 fn run_bench_snapshot() -> ExitCode {
@@ -910,6 +941,41 @@ mod tests {
         // struct itself is flagged.
         assert_eq!(rules_of(&vs), ["pub-doc"]);
         assert_eq!(vs[0].line, 1);
+    }
+
+    // ---- wire-no-alloc-in-decode ---------------------------------
+
+    #[test]
+    fn alloc_in_wire_file_is_flagged() {
+        let src = "fn a() { let v: Vec<u8> = Vec::new(); drop(v); }\nfn b(s: &[u8]) -> Vec<u8> { s.to_vec() }\nfn c() { let v = vec![1u8]; drop(v); }\n";
+        let vs = lint_file("net/wire.rs", src);
+        assert_eq!(
+            rules_of(&vs),
+            [
+                "wire-no-alloc-in-decode",
+                "wire-no-alloc-in-decode",
+                "wire-no-alloc-in-decode"
+            ]
+        );
+    }
+
+    #[test]
+    fn alloc_outside_wire_file_is_fine() {
+        let src = "fn a() -> Vec<u8> { Vec::new() }\n";
+        assert!(lint_file("net/proto.rs", src).is_empty());
+        assert!(lint_file("net/server.rs", src).is_empty());
+    }
+
+    #[test]
+    fn alloc_in_wire_test_mod_is_fine() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let v = vec![0u8; 4];\n        assert_eq!(v.to_vec(), Vec::new().iter().chain(&v).copied().collect::<Vec<u8>>());\n    }\n}\n";
+        assert!(lint_file("net/wire.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wire_alloc_waiver_works() {
+        let src = "fn a() -> Vec<u8> {\n    // xlint: allow(wire-no-alloc-in-decode): encode side, caller owns the Vec.\n    Vec::new()\n}\n";
+        assert!(lint_file("net/wire.rs", src).is_empty());
     }
 
     // ---- waivers -------------------------------------------------
