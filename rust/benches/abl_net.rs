@@ -77,7 +77,7 @@ fn main() {
         io_threads: 2,
     };
     let mut t1 = Table::new(vec![
-        "conns", "ops", "ops/s", "commit", "+pairs", "-pairs", "diff==local",
+        "conns", "ops", "ops/s", "commit", "p50", "p99", "+pairs", "-pairs", "diff==local",
     ]);
     for &conns in &conns_sweep {
         let engine = DdmEngine::builder().threads(2).build();
@@ -91,17 +91,36 @@ fn main() {
             "server saw {} commits, expected >= {epochs}",
             metrics.counter("commits")
         );
+        assert!(
+            metrics.hist("commit_ns").is_some_and(|h| !h.is_empty()),
+            "server-side commit_ns histogram missing from final metrics"
+        );
+        assert!(
+            res.commit_p50_s <= res.commit_p99_s,
+            "quantile ordering violated: p50 {} > p99 {}",
+            res.commit_p50_s,
+            res.commit_p99_s
+        );
         t1.row(vec![
             conns.to_string(),
             res.ops.to_string(),
             format!("{:.0}", res.ops_per_s),
             fmt_secs(res.commit_latency_s),
+            fmt_secs(res.commit_p50_s),
+            fmt_secs(res.commit_p99_s),
             res.added.to_string(),
             res.removed.to_string(),
             "yes".into(),
         ]);
     }
     t1.print();
+    // Schema guard for the machine-readable mirror: downstream tooling
+    // (xtask bench-snapshot, CI) keys on these columns by name.
+    let t1_json = t1.to_json(&[("fig", "abl_net")]);
+    for col in ["\"conns\"", "\"ops/s\"", "\"commit\"", "\"p50\"", "\"p99\""] {
+        assert!(t1_json.contains(col), "BENCH_abl_net.json lost column {col}: {t1_json}");
+    }
+    assert!(t1_json.contains("\"header\"") && t1_json.contains("\"rows\""), "{t1_json}");
     ctx.emit("abl_net", &t1);
 
     // ---- Table 2: router + 2 workers vs flat ShardedSession -------------

@@ -237,6 +237,7 @@ where
     use crate::exec::DisjointWriter;
 
     // ---- Phase 1 (parallel over updates) --------------------------------
+    let t_bin = scratch.span_log.start();
     let bins: Bins = match params.cell_list {
         CellList::FanIn => {
             // Counting-sort scatter (see [`CellList::FanIn`]): count,
@@ -324,6 +325,14 @@ where
         }
     };
 
+    scratch.span_log.record(
+        crate::obs::Phase::GbmBin,
+        crate::obs::trace::MASTER_WORKER,
+        t_bin,
+        upds.len() as u64,
+    );
+    let t_scan = scratch.span_log.start();
+
     // ---- Phase 2 (parallel over subscriptions, independent) -------------
     let ranges = chunks(subs.len(), nthreads);
     let bins_ref = &bins;
@@ -366,6 +375,12 @@ where
         // role next call (stable warm capacities).
         scratch.give_u32_bufs([flat, starts, counts]);
     }
+    scratch.span_log.record(
+        crate::obs::Phase::GbmScan,
+        crate::obs::trace::MASTER_WORKER,
+        t_scan,
+        subs.len() as u64,
+    );
     collected
 }
 

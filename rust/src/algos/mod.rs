@@ -158,6 +158,10 @@ pub struct MatchParams {
     /// merge-path comparison fallback ([`crate::exec::radix`]; CLI
     /// `--sort radix|merge`).
     pub sort: crate::exec::SortAlgo,
+    /// Capture phase spans ([`crate::obs`]) during matching. Off by
+    /// default: the disabled path is a branch per phase — no clock
+    /// read, no write, no allocation.
+    pub trace: bool,
 }
 
 impl MatchParams {
@@ -180,6 +184,7 @@ impl Default for MatchParams {
             dedup: gbm::Dedup::default(),
             nd: NdPolicy::default(),
             sort: crate::exec::SortAlgo::default(),
+            trace: false,
         }
     }
 }

@@ -153,8 +153,10 @@ where
         endpoints,
         aux,
         radix,
+        span_log,
         ..
     } = scratch;
+    let t_sort = span_log.start();
 
     // ---- Phase 1a: build the endpoint array in parallel -----------------
     // Canonical build order (uppers before lowers, subscriptions
@@ -204,6 +206,10 @@ where
 
     // ---- Phase 1b: parallel sort (Algorithm 6 line 4) -------------------
     sort_endpoints(Some((pool, nthreads)), endpoints, aux, radix, sort);
+    // The Sort span covers build + sort: the fork-join region timed
+    // from the master lane, items = endpoints sorted.
+    span_log.record(crate::obs::Phase::Sort, crate::obs::trace::MASTER_WORKER, t_sort, total as u64);
+    let t_sweep = span_log.start();
 
     // ---- Phase 2: per-segment deltas + master combine (Algorithm 7) -----
     let segments = chunks(total, nthreads);
@@ -232,7 +238,7 @@ where
     // ---- Phase 3: per-segment sweeps (Algorithm 6 lines 7–20) -----------
     // Each segment's init sets are moved into the worker that claims
     // it — no locks, no clones, slot order by construction.
-    pool.fan_map_take(nthreads, init_sets, |p, (mut sub_set, mut upd_set)| {
+    let sinks = pool.fan_map_take(nthreads, init_sets, |p, (mut sub_set, mut upd_set)| {
         let mut sink = mk(p);
         sweep(
             &endpoints_ref[segments_ref[p].clone()],
@@ -241,7 +247,11 @@ where
             &mut sink,
         );
         sink
-    })
+    });
+    // Sweep span = phases 2+3 (delta init + per-segment sweeps), the
+    // whole fork-join region timed from the master lane.
+    span_log.record(crate::obs::Phase::Sweep, crate::obs::trace::MASTER_WORKER, t_sweep, total as u64);
+    sinks
 }
 
 /// Runtime-dispatched Parallel SBM.

@@ -85,13 +85,19 @@ pub fn match_seq_scratch_generic<Set: ActiveSet>(
         endpoints,
         aux,
         radix,
+        span_log,
         ..
     } = scratch;
+    let t_sort = span_log.start();
     build_endpoints_into(subs, upds, endpoints);
     crate::core::endpoint::sort_endpoints(None, endpoints, aux, radix, sort);
+    let total = endpoints.len() as u64;
+    span_log.record(crate::obs::Phase::Sort, crate::obs::trace::MASTER_WORKER, t_sort, total);
+    let t_sweep = span_log.start();
     let mut sub_set = Set::with_universe(subs.len());
     let mut upd_set = Set::with_universe(upds.len());
     sweep(endpoints, &mut sub_set, &mut upd_set, sink);
+    span_log.record(crate::obs::Phase::Sweep, crate::obs::trace::MASTER_WORKER, t_sweep, total);
 }
 
 /// Runtime-dispatched serial SBM over a caller-owned scratch.

@@ -8,6 +8,7 @@
 //! [`super::speedup::ModelOpts::modeled_wct`]. Raw oversubscribed
 //! wall-clock is also recorded for transparency.
 
+use std::cell::RefCell;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -16,6 +17,7 @@ use super::stats::{summarize, Summary};
 use super::Meter;
 use crate::algos::{Algo, MatchParams};
 use crate::cli::Args;
+use crate::coordinator::metrics::Metrics;
 use crate::core::Regions1D;
 use crate::engine::{algo_matcher, DdmEngine, ExecCtx, Matcher};
 use crate::exec::ThreadPool;
@@ -30,6 +32,12 @@ pub struct FigCtx {
     pub pool: Arc<ThreadPool>,
     pub quick: bool,
     pub csv_dir: Option<std::path::PathBuf>,
+    /// The same counters/gauges/histograms registry the coordinator
+    /// and net services report through: every [`measure`](Self::measure)
+    /// rep lands in the `rep_ns` (measured) and `modeled_ns` (modeled
+    /// WCT) histograms, so bench-side tail latency renders via the one
+    /// shared [`Metrics::table`] path.
+    pub registry: RefCell<Metrics>,
 }
 
 impl FigCtx {
@@ -64,6 +72,7 @@ impl FigCtx {
             pool,
             quick,
             csv_dir,
+            registry: RefCell::new(Metrics::default()),
         }
     }
 
@@ -96,6 +105,15 @@ impl FigCtx {
             measured.push(t0.elapsed().as_secs_f64());
             let log = self.pool.take_log();
             modeled.push(self.model.modeled_wct(&log, p));
+        }
+        {
+            let mut reg = self.registry.borrow_mut();
+            for &s in &measured {
+                reg.observe_ns("rep_ns", (s * 1e9) as u64);
+            }
+            for &s in &modeled {
+                reg.observe_ns("modeled_ns", (s * 1e9) as u64);
+            }
         }
         Point {
             measured: summarize(&measured),
@@ -259,6 +277,7 @@ mod tests {
             pool: Arc::new(ThreadPool::new(1)),
             quick: true,
             csv_dir: None,
+            registry: RefCell::new(Metrics::default()),
         };
         let regions = Regions1D {
             lo: vec![0.0; 5],
@@ -266,6 +285,11 @@ mod tests {
         };
         let point = ctx.measure_matcher(&CountEverything, 2, &regions, &regions);
         assert_eq!(point.value, 25);
+        // Reps land in the shared registry's histograms.
+        let reg = ctx.registry.borrow();
+        assert!(reg.hist("rep_ns").is_some_and(|h| h.count() == 1));
+        assert!(reg.hist("modeled_ns").is_some_and(|h| h.count() == 1));
+        drop(reg);
 
         // In-tree matchers ride the same path.
         let psbm = ctx.matcher(Algo::Psbm, &MatchParams::default());

@@ -16,6 +16,7 @@ use std::time::Instant;
 use crate::core::interval::Interval;
 use crate::engine::DdmEngine;
 use crate::net::{NetClient, RegionOp};
+use crate::obs::Histogram;
 use crate::prng::Rng;
 use crate::shard::AnySession;
 
@@ -28,6 +29,11 @@ pub struct LoopbackResult {
     pub ops_per_s: f64,
     /// Mean commit→diff round-trip per epoch, seconds.
     pub commit_latency_s: f64,
+    /// Median commit→diff round-trip, seconds (log-bucketed histogram
+    /// quantile, so p50 ≤ p99 holds by construction).
+    pub commit_p50_s: f64,
+    /// 99th-percentile commit→diff round-trip, seconds.
+    pub commit_p99_s: f64,
     /// Total pairs added across all epoch diffs.
     pub added: usize,
     /// Total pairs removed across all epoch diffs.
@@ -125,6 +131,7 @@ pub fn bench_loopback(
     let mut total_ops = 0usize;
     let mut stage_s = 0.0f64;
     let mut commit_s = 0.0f64;
+    let mut commit_hist = Histogram::default();
     let (mut added, mut removed) = (0usize, 0usize);
     let epochs = epochs.max(1);
     for e in 0..epochs {
@@ -143,7 +150,9 @@ pub fn bench_loopback(
 
         let t1 = Instant::now();
         let diff = clients[0].commit()?;
-        commit_s += t1.elapsed().as_secs_f64();
+        let rt = t1.elapsed();
+        commit_s += rt.as_secs_f64();
+        commit_hist.record_duration(rt);
 
         for script in &scripts {
             apply_local(&mut local, &script[e]);
@@ -167,6 +176,8 @@ pub fn bench_loopback(
         ops: total_ops,
         ops_per_s: total_ops as f64 / stage_s.max(1e-9),
         commit_latency_s: commit_s / epochs as f64,
+        commit_p50_s: commit_hist.p50() as f64 / 1e9,
+        commit_p99_s: commit_hist.p99() as f64 / 1e9,
         added,
         removed,
     })

@@ -1,10 +1,15 @@
-//! Lightweight service metrics (counters + latency accumulators).
+//! Lightweight service metrics (counters, latency accumulators,
+//! gauges, and log-bucketed [`Histogram`]s for quantile-readable
+//! distributions).
 
 use std::collections::BTreeMap;
 use std::time::Duration;
 
+use crate::obs::Histogram;
+
 /// Latency accumulator: count, total, max (enough for service tables
-/// without a full histogram dependency).
+/// without a full histogram; use [`Metrics::observe_ns`] when
+/// quantiles matter).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct LatencyStat {
     pub count: u64,
@@ -19,16 +24,22 @@ impl LatencyStat {
         self.max = self.max.max(d);
     }
 
+    /// Arithmetic mean, computed in the u128 nanosecond domain and
+    /// rounded to nearest. (The old `total / count as u32` both
+    /// truncated sub-divisor remainders and wrapped the divisor at
+    /// 2^32 samples — dividing by a *truncated count*, a panic at
+    /// exact multiples.)
     pub fn mean(&self) -> Duration {
         if self.count == 0 {
-            Duration::ZERO
-        } else {
-            self.total / self.count as u32
+            return Duration::ZERO;
         }
+        let n = self.count as u128;
+        let ns = (self.total.as_nanos() + n / 2) / n;
+        Duration::from_nanos(ns.min(u64::MAX as u128) as u64)
     }
 }
 
-/// Named counters + latencies + gauges.
+/// Named counters + latencies + gauges + histograms.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub counters: BTreeMap<&'static str, u64>,
@@ -37,6 +48,11 @@ pub struct Metrics {
     /// gauge) — unlike counters they describe *current* state, not
     /// accumulation.
     pub gauges: BTreeMap<&'static str, f64>,
+    /// Log-bucketed nanosecond distributions ([`Metrics::observe_ns`])
+    /// — quantile-readable and mergeable, so the wire snapshot can
+    /// carry them and the client can render p50/p99 without raw
+    /// samples.
+    pub hists: BTreeMap<&'static str, Histogram>,
 }
 
 impl Metrics {
@@ -53,6 +69,23 @@ impl Metrics {
         self.gauges.insert(name, value);
     }
 
+    /// Record one nanosecond sample into the named histogram.
+    pub fn observe_ns(&mut self, name: &'static str, ns: u64) {
+        self.hists.entry(name).or_default().record(ns);
+    }
+
+    /// Record a `Duration` sample into the named histogram.
+    pub fn observe(&mut self, name: &'static str, d: Duration) {
+        self.hists.entry(name).or_default().record_duration(d);
+    }
+
+    /// Fold a ready-made histogram (an [`AtomicHist`](crate::obs::AtomicHist)
+    /// snapshot from an IO thread, a remote worker's wire copy) into
+    /// the named one.
+    pub fn merge_hist(&mut self, name: &'static str, h: &Histogram) {
+        self.hists.entry(name).or_default().merge(h);
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
@@ -61,23 +94,57 @@ impl Metrics {
         self.gauges.get(name).copied()
     }
 
-    /// Render as an aligned table.
+    /// The named histogram, if any samples were observed under it.
+    pub fn hist(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    /// Render as an aligned table (histogram rows carry the quantile
+    /// columns; plain latencies show `-` there).
     pub fn table(&self) -> crate::bench::table::Table {
+        use crate::bench::stats::fmt_secs;
+        let ns = |v: u64| fmt_secs(v as f64 / 1e9);
         let mut t = crate::bench::table::Table::new(vec![
-            "metric", "count", "mean", "max",
+            "metric", "count", "mean", "p50", "p99", "max",
         ]);
         for (name, v) in &self.counters {
-            t.row(vec![name.to_string(), v.to_string(), "-".into(), "-".into()]);
+            t.row(vec![
+                name.to_string(),
+                v.to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
         }
         for (name, v) in &self.gauges {
-            t.row(vec![name.to_string(), format!("{v:.3}"), "-".into(), "-".into()]);
+            t.row(vec![
+                name.to_string(),
+                format!("{v:.3}"),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
         }
         for (name, l) in &self.latencies {
             t.row(vec![
                 name.to_string(),
                 l.count.to_string(),
-                crate::bench::stats::fmt_secs(l.mean().as_secs_f64()),
-                crate::bench::stats::fmt_secs(l.max.as_secs_f64()),
+                fmt_secs(l.mean().as_secs_f64()),
+                "-".into(),
+                "-".into(),
+                fmt_secs(l.max.as_secs_f64()),
+            ]);
+        }
+        for (name, h) in &self.hists {
+            t.row(vec![
+                name.to_string(),
+                h.count().to_string(),
+                ns(h.mean_ns()),
+                ns(h.p50()),
+                ns(h.p99()),
+                ns(h.max_ns()),
             ]);
         }
         t
@@ -101,6 +168,50 @@ mod tests {
         assert_eq!(l.mean(), Duration::from_millis(3));
         assert_eq!(l.max, Duration::from_millis(4));
         assert!(m.table().render().contains("publishes"));
+    }
+
+    /// Satellite regression: `mean` computes in u128 nanoseconds. The
+    /// old `total / count as u32` (a) truncated — 3ns over 2 samples
+    /// reported 1ns, not the rounded 2ns — and (b) wrapped the divisor
+    /// at 2^32 samples, panicking on division by a zero-truncated
+    /// count.
+    #[test]
+    fn latency_mean_rounds_and_survives_u32_overflow_counts() {
+        let mut l = LatencyStat::default();
+        l.record(Duration::from_nanos(1));
+        l.record(Duration::from_nanos(2));
+        assert_eq!(l.mean(), Duration::from_nanos(2), "1.5ns rounds to 2ns");
+
+        let big = LatencyStat {
+            count: 1u64 << 33, // `as u32` would truncate this to 0
+            total: Duration::from_nanos(100 * (1u64 << 33)),
+            max: Duration::from_nanos(100),
+        };
+        assert_eq!(big.mean(), Duration::from_nanos(100));
+
+        assert_eq!(LatencyStat::default().mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn histograms_record_merge_and_render_quantiles() {
+        let mut m = Metrics::default();
+        assert!(m.hist("commit").is_none());
+        for ns in [100u64, 200, 400, 100_000] {
+            m.observe_ns("commit", ns);
+        }
+        m.observe("commit", Duration::from_micros(2));
+        let h = m.hist("commit").unwrap();
+        assert_eq!(h.count(), 5);
+        assert!(h.p99() >= h.p50());
+
+        let mut other = Histogram::default();
+        other.record(7);
+        m.merge_hist("commit", &other);
+        assert_eq!(m.hist("commit").unwrap().count(), 6);
+
+        let r = m.table().render();
+        assert!(r.contains("commit"), "{r}");
+        assert!(r.contains("p50") && r.contains("p99"), "{r}");
     }
 
     #[test]

@@ -320,8 +320,16 @@ fn service_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Command>) -> Metrics 
                             "shard_imbalance",
                             crate::shard::ShardedSession::imbalance_of(&stats),
                         );
+                        // The measured counterpart: max/mean of the
+                        // shards' actual inner-commit wall times.
+                        if let Some(ti) =
+                            crate::shard::ShardedSession::commit_time_imbalance_of(&stats)
+                        {
+                            metrics.gauge("shard_time_imbalance", ti);
+                        }
                     }
                     metrics.time("commit", t0.elapsed());
+                    metrics.observe("commit_ns", t0.elapsed());
                     let _ = reply.send((diff.epoch, diff.added.len(), diff.removed.len()));
                 }
                 Command::Metrics { reply } => {
@@ -491,6 +499,13 @@ mod tests {
         assert_eq!(m.gauge_value("shards"), Some(4.0));
         // Every region lands in stripe 0 of [0, 10k): maximal skew.
         assert_eq!(m.gauge_value("shard_imbalance"), Some(4.0));
+        // The measured counterpart exists and is a valid ratio.
+        let ti = m
+            .gauge_value("shard_time_imbalance")
+            .expect("commit ran, so shard timings are real");
+        assert!((1.0..=4.0).contains(&ti), "{ti}");
+        // Commit latency lands in the quantile-readable histogram too.
+        assert!(m.hist("commit_ns").is_some_and(|h| h.count() == 1));
         coord.shutdown();
     }
 

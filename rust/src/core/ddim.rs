@@ -312,8 +312,25 @@ pub fn native_match<'a, R>(
             .collect(),
     );
     let mk = |p: usize| disp.take(p);
+    let t_res = scratch.span_log.start();
     let out = run1d(subs.project(k), upds.project(k), &mut *scratch, &mk);
-    let collected: Vec<VecSink> = out.into_iter().map(FilterSink::into_inner).collect();
+    let mut checked = 0u64;
+    let collected: Vec<VecSink> = out
+        .into_iter()
+        .map(|fs| {
+            let (v, c) = fs.into_parts();
+            checked += c;
+            v
+        })
+        .collect();
+    // The Residual span brackets the sweep that drove the inline
+    // checks; items = candidate pairs residual-verified.
+    scratch.span_log.record(
+        crate::obs::Phase::Residual,
+        crate::obs::trace::MASTER_WORKER,
+        t_res,
+        checked,
+    );
     scratch.drain_pair_sinks(
         collected,
         disp.into_remaining().map(FilterSink::into_inner),
@@ -345,10 +362,21 @@ where
 {
     let k = resolve_sweep_dim(sweep, pool, nthreads, subs, upds);
     let mk = move |_p: usize| FilterSink::new(subs, upds, k, CountSink::default());
-    run1d(subs.project(k), upds.project(k), scratch, &mk)
-        .into_iter()
-        .map(|fs| fs.into_inner().count)
-        .sum()
+    let t_res = scratch.span_log.start();
+    let out = run1d(subs.project(k), upds.project(k), scratch, &mk);
+    let (mut total, mut checked) = (0u64, 0u64);
+    for fs in out {
+        let (c, n) = fs.into_parts();
+        total += c.count;
+        checked += n;
+    }
+    scratch.span_log.record(
+        crate::obs::Phase::Residual,
+        crate::obs::trace::MASTER_WORKER,
+        t_res,
+        checked,
+    );
+    total
 }
 
 /// Back-compat spelling of [`ReductionNd::match_nd`] (the default

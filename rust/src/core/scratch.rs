@@ -40,6 +40,15 @@ pub struct MatchScratch {
     /// Pooled `u32` work buffers (session recompute/diff scratch, GBM
     /// binning offsets; cleared, capacity kept).
     u32_pool: Vec<Vec<u32>>,
+    /// Phase-span capture for the match call running over this scratch
+    /// ([`crate::obs`]). Defaults to the disabled sink (a branch per
+    /// phase, no allocation); the engine/session enable it when their
+    /// `trace` knob is on and absorb it after each call/epoch.
+    /// Deliberately **not** part of [`stats`](Self::stats): the
+    /// zero-alloc steady-state assertions measure the match buffers,
+    /// and span capture is an opt-in observer with its own fixed-size
+    /// buffer.
+    pub span_log: crate::obs::SpanSink,
 }
 
 impl MatchScratch {

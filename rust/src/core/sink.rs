@@ -40,6 +40,9 @@ pub struct FilterSink<'a, S: MatchSink> {
     upds: &'a RegionsNd,
     /// The swept dimension (already matched; skipped here).
     sweep: usize,
+    /// Pairs residual-checked so far (passed or dropped) — the `items`
+    /// count of the [`Residual`](crate::obs::Phase::Residual) span.
+    checked: u64,
     inner: S,
 }
 
@@ -51,19 +54,31 @@ impl<'a, S: MatchSink> FilterSink<'a, S> {
             subs,
             upds,
             sweep,
+            checked: 0,
             inner,
         }
+    }
+
+    /// Candidate pairs residual-verified so far.
+    pub fn checked(&self) -> u64 {
+        self.checked
     }
 
     /// Unwrap the inner sink (per-worker collection fan-in).
     pub fn into_inner(self) -> S {
         self.inner
     }
+
+    /// Unwrap, also yielding the residual-check count.
+    pub fn into_parts(self) -> (S, u64) {
+        (self.inner, self.checked)
+    }
 }
 
 impl<S: MatchSink> MatchSink for FilterSink<'_, S> {
     #[inline]
     fn report(&mut self, s: RegionIdx, u: RegionIdx) {
+        self.checked += 1;
         if self
             .subs
             .rects_intersect_except(s as usize, self.upds, u as usize, self.sweep)

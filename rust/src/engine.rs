@@ -489,6 +489,17 @@ impl EngineBuilder {
         self
     }
 
+    /// Capture phase spans ([`crate::obs`]) in every match call and
+    /// every session this engine creates (CLI `--trace`). Off by
+    /// default; the disabled path is a branch per phase. Read the
+    /// timeline back with [`DdmEngine::drain_trace`] /
+    /// [`DdmSession::drain_trace`](crate::session::DdmSession::drain_trace).
+    pub fn trace(mut self, on: bool) -> Self {
+        self.params.trace = on;
+        self.session.trace = on;
+        self
+    }
+
     // ---- session knobs (see crate::session) --------------------------------
 
     /// Backing store of session diff retention sets
@@ -606,6 +617,11 @@ impl EngineBuilder {
             }),
             _ => None,
         };
+        let mut scratch = MatchScratch::new();
+        if self.params.trace {
+            scratch.span_log =
+                crate::obs::SpanSink::with_capacity(crate::obs::trace::DEFAULT_SINK_CAP);
+        }
         DdmEngine {
             selection: self.selection,
             matcher,
@@ -615,7 +631,7 @@ impl EngineBuilder {
             params: self.params,
             session: self.session,
             shard: self.shard,
-            scratch: Arc::new(Mutex::new(MatchScratch::new())),
+            scratch: Arc::new(Mutex::new(scratch)),
         }
     }
 }
@@ -674,6 +690,20 @@ impl DdmEngine {
     /// from the reusable buffers (asserted by `benches/abl_sort.rs`).
     pub fn scratch_stats(&self) -> ScratchStats {
         self.scratch.lock().map(|s| s.stats()).unwrap_or_default()
+    }
+
+    /// Take the phase spans recorded by match calls since the last
+    /// drain (empty unless built with
+    /// [`trace(true)`](EngineBuilder::trace)). Spans recorded through
+    /// a contended scratch (concurrent calls degrade to per-call
+    /// scratch) are lost — tracing follows the same try-lock policy as
+    /// the buffers themselves.
+    pub fn drain_trace(&self) -> Vec<crate::obs::SpanRecord> {
+        let mut out = Vec::new();
+        if let Ok(mut s) = self.scratch.lock() {
+            s.span_log.drain_into(&mut out);
+        }
+        out
     }
 
     pub fn nthreads(&self) -> usize {

@@ -172,6 +172,41 @@
 //! }
 //! ```
 //!
+//! ## Observability: phase tracing and latency histograms
+//!
+//! Every commit above can narrate itself ([`obs`]): one builder call
+//! turns on span capture in every session the engine creates, and the
+//! spans drain at epoch boundaries. Disabled tracing costs one branch
+//! per phase; enabled recording never allocates (fixed-capacity
+//! per-worker sinks fanned in through the claims machinery — the
+//! `obs-no-hot-alloc` lint rule keeps it that way):
+//!
+//! ```
+//! use ddm::core::Interval;
+//! use ddm::engine::DdmEngine;
+//! use ddm::obs::{phase_totals, Phase};
+//!
+//! let engine = DdmEngine::builder().threads(2).trace(true).build();
+//! let mut sess = engine.session(1);
+//! sess.upsert_subscription(0, &[Interval::new(0.0, 2.0)]);
+//! sess.upsert_update(7, &[Interval::new(1.0, 3.0)]);
+//! sess.commit();
+//! let spans = sess.drain_trace();
+//! assert!(spans.iter().any(|s| s.phase == Phase::Commit.id()));
+//! for (phase, total_ns, count, _items) in phase_totals(&spans) {
+//!     println!("{}: {count} spans, {total_ns} ns", Phase::name_of(phase));
+//! }
+//! ```
+//!
+//! `ddm trace --out trace.json` writes the same spans as Chrome
+//! trace-event JSON (load in `chrome://tracing` or Perfetto) and
+//! `--overhead-check` asserts tracing costs under 5%; `ddm replay
+//! --trace` prints per-phase totals for a churn replay; `ddm client
+//! --metrics` renders the wire-delivered histograms (`commit_ns`, the
+//! four `net_*_ns` stage histograms) as quantile tables plus the
+//! slowest spans. The span taxonomy lives in [`obs::Phase`] and
+//! ARCHITECTURE.md §"Observability".
+//!
 //! The crate contains:
 //!
 //! * [`engine`] — the unified matching API: the [`engine::Matcher`]
@@ -210,6 +245,11 @@
 //!   ([`net::proto`]), nonblocking TCP server core ([`net::server`]),
 //!   worker/router services, and the federation client that merges
 //!   per-worker diffs exactly once ([`net::FederationClient`]).
+//! * [`obs`] — observability: the sanctioned clock seam
+//!   ([`obs::clock`]), log-bucketed mergeable latency histograms
+//!   ([`obs::Histogram`]), the allocation-free span tracer
+//!   ([`obs::SpanSink`] / [`obs::Tracer`]), and Chrome trace export
+//!   ([`obs::chrome_trace_json`]).
 //! * [`hla`] — a miniature HLA/RTI Data Distribution Management service:
 //!   dimensions, region specifications, federates and notification
 //!   routing (the system that consumes the matchers).
@@ -245,6 +285,7 @@ pub mod hla;
 pub mod workload;
 pub mod runtime;
 pub mod coordinator;
+pub mod obs;
 pub mod bench;
 pub mod cli;
 pub mod config;

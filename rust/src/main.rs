@@ -4,7 +4,12 @@
 //!   ddm match      run one matching job and report K + wall-clock
 //!   ddm xla-match  same, on the AOT-compiled XLA backend
 //!   ddm replay     replay epochs of region churn (session diffs,
-//!                  sharded session diffs, or full rebuild per epoch)
+//!                  sharded session diffs, or full rebuild per epoch);
+//!                  --trace prints per-phase totals from the obs tracer
+//!   ddm trace      traced churn replay written as Chrome trace JSON
+//!                  (load in chrome://tracing or Perfetto);
+//!                  --overhead-check reruns the workload untraced vs
+//!                  traced and dies if tracing costs more than 5%
 //!   ddm serve      with --listen: network worker serving the binary
 //!                  DDM protocol; without: scripted coordinator scenario
 //!   ddm route      network router: serves the federation topology
@@ -20,6 +25,9 @@
 //!   ddm replay --n 50k --epochs 10 --churn 0.05 --mode session --verify
 //!   ddm replay --mode sharded --shards 8 --hotspot 0.8 --verify
 //!   ddm replay --workload koln --scale 0.05 --mode rebuild
+//!   ddm replay --n 50k --epochs 10 --mode sharded --shards 4 --trace
+//!   ddm trace --n 20k --epochs 5 --shards 4 --out trace.json
+//!   ddm trace --n 20k --epochs 5 --overhead-check
 //!   ddm match --algo psbm --n 1e6 --shards 8
 //!   ddm xla-match --n 4096 --alpha 10
 //!   ddm serve --config examples/service.toml
@@ -45,7 +53,7 @@ use ddm::workload::{alpha_workload, nd_alpha_workload, nd_correlated_workload, A
 
 fn usage() -> ! {
     eprintln!(
-        "usage: ddm <match|xla-match|replay|serve|route|client|bench-net|info> [options]\n\
+        "usage: ddm <match|xla-match|replay|trace|serve|route|client|bench-net|info> [options]\n\
          options are documented in rust/src/main.rs and README.md"
     );
     std::process::exit(2)
@@ -238,6 +246,10 @@ fn cmd_replay(args: &Args) {
     let hotspot: f64 = args.opt("hotspot", 0.0f64);
     let mode = args.get("mode").unwrap_or("session").to_string();
     let seed: u64 = args.opt("seed", 42u64);
+    let trace = args.flag("trace");
+    if trace && mode == "rebuild" {
+        die("--trace needs an incremental mode (session|sharded); rebuild has no commit phases");
+    }
 
     let (mut subs, mut upds, desc) = match args.get("workload").unwrap_or("alpha") {
         "koln" => {
@@ -276,6 +288,7 @@ fn cmd_replay(args: &Args) {
         .algo_str(args.get("algo").unwrap_or("psbm"))
         .unwrap_or_else(|e| die(&e))
         .threads(threads)
+        .trace(trace)
         .build();
     // All modes replay the identical deterministic move script.
     let mut script = MoveScript::with_hotspot(seed ^ 0xC0FFEE, hotspot);
@@ -294,9 +307,14 @@ fn cmd_replay(args: &Args) {
             } else {
                 ddm::shard::AnySession::Single(engine.session(1))
             };
+            let mut spans: Vec<ddm::obs::SpanRecord> = Vec::new();
+            let mut commit_wall = 0.0f64;
             let t0 = Instant::now();
             sess.load_dense_1d(&subs, &upds);
+            let tc = Instant::now();
             let d0 = sess.commit();
+            commit_wall += tc.elapsed().as_secs_f64();
+            spans.extend(sess.drain_trace());
             println!(
                 "epoch 0: {} initial pairs in {}",
                 d0.added.len(),
@@ -314,7 +332,10 @@ fn cmd_replay(args: &Args) {
                         sess.upsert_update(idx as u32, &[iv]);
                     }
                 }
+                let tc = Instant::now();
                 let d = sess.commit();
+                commit_wall += tc.elapsed().as_secs_f64();
+                spans.extend(sess.drain_trace());
                 tot_added += d.added.len();
                 tot_removed += d.removed.len();
                 println!("epoch {e}: +{} -{} pairs", d.added.len(), d.removed.len());
@@ -328,6 +349,9 @@ fn cmd_replay(args: &Args) {
             );
             if let Some(im) = sess.imbalance() {
                 println!("shard imbalance: {im:.2} over {} shards", sess.shards());
+            }
+            if trace {
+                report_trace(&spans, commit_wall, sess.trace_dropped());
             }
             if args.flag("verify") {
                 let want = engine.pairs_1d(&subs, &upds);
@@ -375,6 +399,197 @@ fn cmd_replay(args: &Args) {
     }
 }
 
+/// Per-phase totals (name, summed time, span count, items) from a
+/// drained span list.
+fn phase_table(spans: &[ddm::obs::SpanRecord]) -> ddm::bench::table::Table {
+    let mut t = ddm::bench::table::Table::new(vec!["phase", "total", "spans", "items"]);
+    for (phase, total_ns, count, items) in ddm::obs::phase_totals(spans) {
+        t.row(vec![
+            ddm::obs::Phase::name_of(phase).to_string(),
+            ddm::bench::stats::fmt_secs(total_ns as f64 / 1e9),
+            count.to_string(),
+            items.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Print per-phase totals and cross-check the `commit` envelope total
+/// against the measured commit wall-clock — the envelope tiles the
+/// whole of `commit()`, so the two should agree to within a few
+/// percent.
+fn report_trace(spans: &[ddm::obs::SpanRecord], commit_wall_s: f64, dropped: u64) {
+    phase_table(spans).print();
+    let commit_ns = ddm::obs::phase_totals(spans)
+        .iter()
+        .find(|(p, ..)| *p == ddm::obs::Phase::Commit.id())
+        .map_or(0, |&(_, total, _, _)| total);
+    let commit_s = commit_ns as f64 / 1e9;
+    let cov = if commit_wall_s > 0.0 {
+        100.0 * commit_s / commit_wall_s
+    } else {
+        0.0
+    };
+    println!(
+        "trace: {} spans ({dropped} dropped); commit envelope total {} vs measured \
+         commit wall {} ({cov:.1}% coverage)",
+        spans.len(),
+        ddm::bench::stats::fmt_secs(commit_s),
+        ddm::bench::stats::fmt_secs(commit_wall_s),
+    );
+}
+
+/// One run of the `ddm trace` workload (alpha regions + churn moves):
+/// returns the drained spans, the summed commit wall-clock in seconds,
+/// and the span-drop count. Workload and move script are regenerated
+/// from the seed on every call, so traced and untraced runs commit
+/// identical epochs — that is what makes the `--overhead-check`
+/// comparison apples-to-apples.
+fn run_trace_workload(
+    args: &Args,
+    trace: bool,
+    quiet: bool,
+) -> (Vec<ddm::obs::SpanRecord>, f64, u64) {
+    use ddm::workload::churn::{relocate, MoveScript};
+
+    let threads: usize = args.opt("threads", 4usize);
+    let epochs: usize = args.opt("epochs", 5usize);
+    let churn: f64 = args.opt("churn", 0.05f64);
+    let shards: usize = args.opt("shards", 1usize);
+    let seed: u64 = args.opt("seed", 42u64);
+
+    let p = AlphaParams {
+        n_total: args.size("n", 20_000),
+        alpha: args.opt("alpha", 100.0),
+        space: args.opt("space", 1e6),
+    };
+    let (mut subs, mut upds) = alpha_workload(seed, &p);
+    let space_hi = subs
+        .bounds()
+        .map(|b| b.hi)
+        .unwrap_or(1e6)
+        .max(upds.bounds().map(|b| b.hi).unwrap_or(0.0));
+    let moves_per_epoch = (((subs.len() + upds.len()) as f64) * churn).ceil().max(1.0) as usize;
+
+    let engine = DdmEngine::builder()
+        .algo_str(args.get("algo").unwrap_or("psbm"))
+        .unwrap_or_else(|e| die(&e))
+        .threads(threads)
+        .trace(trace)
+        .build();
+    let mut sess = if shards > 1 {
+        ddm::shard::AnySession::Sharded(engine.sharded_session_with(
+            1,
+            ddm::shard::SpacePartitioner::uniform(
+                shards,
+                0,
+                ddm::core::Interval::new(0.0, space_hi),
+            ),
+        ))
+    } else {
+        ddm::shard::AnySession::Single(engine.session(1))
+    };
+    if !quiet {
+        println!(
+            "trace: N={} epochs={epochs} churn={churn} ({moves_per_epoch} moves/epoch) \
+             threads={threads} shards={shards} algo={}",
+            p.n_total,
+            engine.algo_name()
+        );
+    }
+
+    let mut spans: Vec<ddm::obs::SpanRecord> = Vec::new();
+    let mut commit_wall = 0.0f64;
+    let mut script = MoveScript::with_hotspot(seed ^ 0xC0FFEE, 0.0);
+    sess.load_dense_1d(&subs, &upds);
+    for e in 0..=epochs {
+        if e > 0 {
+            for _ in 0..moves_per_epoch {
+                let (sub_side, idx, frac) = script.next(subs.len(), upds.len());
+                if sub_side {
+                    let iv = relocate(&mut subs, idx, frac, space_hi);
+                    sess.upsert_subscription(idx as u32, &[iv]);
+                } else {
+                    let iv = relocate(&mut upds, idx, frac, space_hi);
+                    sess.upsert_update(idx as u32, &[iv]);
+                }
+            }
+        }
+        let tc = Instant::now();
+        let d = sess.commit();
+        commit_wall += tc.elapsed().as_secs_f64();
+        spans.extend(sess.drain_trace());
+        if !quiet {
+            println!("epoch {e}: +{} -{} pairs", d.added.len(), d.removed.len());
+        }
+    }
+    (spans, commit_wall, sess.trace_dropped())
+}
+
+/// Traced churn replay written as Chrome trace JSON: every pipeline
+/// phase (sort/sweep/residual, GBM bin/scan, stage/write/recompute,
+/// per-shard commits, diff merge) becomes a duration event on its
+/// worker lane — load the file in `chrome://tracing` or Perfetto.
+/// Prints phase totals and the slowest spans alongside. With
+/// `--overhead-check`, reruns the identical workload untraced and
+/// traced (best-of-N commit walls) and dies if tracing costs more
+/// than 5%.
+fn cmd_trace(args: &Args) {
+    let top: usize = args.opt("top", 10usize);
+    let out = args.get("out").unwrap_or("trace.json").to_string();
+
+    let (spans, commit_wall, dropped) = run_trace_workload(args, true, false);
+    report_trace(&spans, commit_wall, dropped);
+    let mut slow = ddm::bench::table::Table::new(vec!["phase", "lane", "dur", "items"]);
+    for s in ddm::obs::top_slowest(&spans, top) {
+        let lane = if s.worker == ddm::obs::trace::MASTER_WORKER {
+            "master".to_string()
+        } else {
+            s.worker.to_string()
+        };
+        slow.row(vec![
+            ddm::obs::Phase::name_of(s.phase).to_string(),
+            lane,
+            ddm::bench::stats::fmt_secs(s.dur_ns() as f64 / 1e9),
+            s.items.to_string(),
+        ]);
+    }
+    slow.print();
+    std::fs::write(&out, ddm::obs::chrome_trace_json(&spans))
+        .unwrap_or_else(|e| die(&format!("--out {out}: {e}")));
+    println!(
+        "trace: {} spans written to {out} (open in chrome://tracing or Perfetto)",
+        spans.len()
+    );
+
+    if args.flag("overhead-check") {
+        // Best-of-N damps scheduler noise: the minimum commit wall is
+        // the least-perturbed run of each mode. Disabled tracing costs
+        // one branch per phase; enabled costs a cursor write per span
+        // — both should vanish inside real matching work, and 2 ms of
+        // absolute slack keeps tiny workloads from failing on jitter.
+        let reps: usize = args.opt("reps", 3usize);
+        let (mut off, mut on) = (f64::INFINITY, f64::INFINITY);
+        for _ in 0..reps.max(1) {
+            off = off.min(run_trace_workload(args, false, true).1);
+            on = on.min(run_trace_workload(args, true, true).1);
+        }
+        let pct = 100.0 * (on - off) / off.max(1e-9);
+        println!(
+            "overhead-check: untraced commit wall {} vs traced {} ({pct:+.2}%, best of {reps})",
+            ddm::bench::stats::fmt_secs(off),
+            ddm::bench::stats::fmt_secs(on),
+        );
+        if on > off * 1.05 + 0.002 {
+            die(&format!(
+                "tracing overhead {pct:.1}% exceeds the 5% budget \
+                 (untraced {off:.6}s, traced {on:.6}s)"
+            ));
+        }
+        println!("overhead-check: tracing overhead within the 5% budget");
+    }
+}
+
 /// `ddm serve` fronts two very different things: with `--listen` it is
 /// a network worker speaking the binary DDM protocol; without, the
 /// original scripted coordinator scenario.
@@ -405,6 +620,7 @@ fn cmd_serve_net(args: &Args) {
         .algo_str(args.get("algo").unwrap_or("psbm"))
         .unwrap_or_else(|e| die(&e))
         .threads(threads)
+        .trace(args.flag("trace"))
         .build();
     let cuts: Option<Vec<f64>> = args.try_list("cuts").unwrap_or_else(|e| die(&e));
     let shards: usize = args.opt("shards", 1usize);
@@ -728,10 +944,20 @@ fn cmd_client(args: &Args) {
     }
 
     if args.flag("metrics") {
+        fn print_snapshot(m: &ddm::net::MetricsSnapshot) {
+            m.table().print();
+            if !m.hists.is_empty() {
+                m.hist_table().print();
+            }
+            if !m.spans.is_empty() {
+                println!("slowest spans:");
+                m.span_table().print();
+            }
+        }
         match &mut target {
             Target::Single(c) => {
                 let m = c.metrics().unwrap_or_else(|e| die(&format!("metrics: {e}")));
-                m.table().print();
+                print_snapshot(&m);
             }
             Target::Fed(f) => {
                 let snaps = f
@@ -739,7 +965,7 @@ fn cmd_client(args: &Args) {
                     .unwrap_or_else(|e| die(&format!("metrics: {e}")));
                 for (i, m) in snaps.iter().enumerate() {
                     println!("worker {i}:");
-                    m.table().print();
+                    print_snapshot(m);
                 }
             }
         }
@@ -776,7 +1002,7 @@ fn cmd_bench_net(args: &Args) {
     let d: usize = args.opt("d", 1usize);
 
     let mut table = ddm::bench::table::Table::new(vec![
-        "conns", "ops", "ops_per_s", "commit_ms", "added", "removed",
+        "conns", "ops", "ops_per_s", "commit_ms", "p50_ms", "p99_ms", "added", "removed",
     ]);
     for &conns in &conns_list {
         let engine = DdmEngine::builder()
@@ -795,6 +1021,8 @@ fn cmd_bench_net(args: &Args) {
             r.ops.to_string(),
             format!("{:.0}", r.ops_per_s),
             format!("{:.3}", r.commit_latency_s * 1e3),
+            format!("{:.3}", r.commit_p50_s * 1e3),
+            format!("{:.3}", r.commit_p99_s * 1e3),
             r.added.to_string(),
             r.removed.to_string(),
         ]);
@@ -893,6 +1121,7 @@ fn main() {
         "match" => cmd_match(&args),
         "xla-match" => cmd_xla_match(&args),
         "replay" => cmd_replay(&args),
+        "trace" => cmd_trace(&args),
         "serve" => cmd_serve(&args),
         "route" => cmd_route(&args),
         "client" => cmd_client(&args),

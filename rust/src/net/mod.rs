@@ -39,6 +39,6 @@ pub mod worker;
 pub use client::{FederationClient, NetClient};
 pub use proto::{MetricsSnapshot, Msg, RegionOp, Role, TopologySnapshot, WorkerEntry, PROTO_ID};
 pub use router::{assign_stripes, RouterService};
-pub use server::{serve, Outbox, ServerConfig, ServerHandle, Service};
+pub use server::{serve, Outbox, ServerConfig, ServerHandle, Service, StageHists};
 pub use wire::WireError;
 pub use worker::WorkerService;

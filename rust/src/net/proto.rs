@@ -23,7 +23,7 @@
 //! | 13  | `GetPairs`   | client → worker  | — |
 //! | 14  | `Pairs`      | worker → client  | retained pair set |
 //! | 15  | `GetMetrics` | client → server  | — |
-//! | 16  | `Metrics`    | server → client  | counters + gauges |
+//! | 16  | `Metrics`    | server → client  | counters + gauges + histograms + slow spans |
 //! | 17  | `ErrorReply` | server → client  | code + message |
 //! | 18  | `Shutdown`   | client → server  | — |
 //! | 19  | `Goodbye`    | server → client  | final epoch |
@@ -36,6 +36,7 @@
 use crate::core::interval::Interval;
 use crate::core::sink::{pack_pair, unpack_pair, PairVec};
 use crate::coordinator::metrics::Metrics;
+use crate::obs::{hist, Histogram, SpanRecord};
 use crate::session::MatchDiff;
 
 use super::wire::{self, Reader, WireError};
@@ -149,22 +150,40 @@ impl TopologySnapshot {
     }
 }
 
-/// A point-in-time export of a server's [`Metrics`]: counters and
-/// gauges, sorted by name (latency histograms stay server-side).
+/// A point-in-time export of a server's [`Metrics`]: counters, gauges,
+/// and log-bucketed histograms, sorted by name, plus the top-N slowest
+/// phase spans the server has traced (empty when tracing is off).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct MetricsSnapshot {
     pub counters: Vec<(String, u64)>,
     pub gauges: Vec<(String, f64)>,
+    /// Quantile-readable distributions (commit latency, net stage
+    /// times) — whole histograms travel, so the client computes
+    /// p50/p99 itself instead of trusting pre-baked numbers.
+    pub hists: Vec<(String, Histogram)>,
+    /// The server's slowest spans, longest first
+    /// ([`crate::obs::top_slowest`]).
+    pub spans: Vec<SpanRecord>,
 }
 
 impl MetricsSnapshot {
-    /// Snapshot the counters and gauges of `m` (already name-sorted —
-    /// `Metrics` stores them in `BTreeMap`s).
+    /// Snapshot the counters, gauges, and histograms of `m` (already
+    /// name-sorted — `Metrics` stores them in `BTreeMap`s). `spans`
+    /// starts empty; servers with a live tracer fill it via
+    /// [`with_spans`](Self::with_spans).
     pub fn of(m: &Metrics) -> Self {
         Self {
             counters: m.counters.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
             gauges: m.gauges.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+            hists: m.hists.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+            spans: Vec::new(),
         }
+    }
+
+    /// Attach the top-`n` slowest of `spans` to the snapshot.
+    pub fn with_spans(mut self, spans: &[SpanRecord], n: usize) -> Self {
+        self.spans = crate::obs::top_slowest(spans, n);
+        self
     }
 
     /// Counter value by name (0 when absent).
@@ -180,8 +199,13 @@ impl MetricsSnapshot {
         self.gauges.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
     }
 
-    /// Render as an aligned two-column table (for `ddm client
-    /// --metrics`).
+    /// Histogram by name.
+    pub fn hist(&self, name: &str) -> Option<&Histogram> {
+        self.hists.iter().find(|(k, _)| k == name).map(|(_, v)| v)
+    }
+
+    /// Render counters and gauges as an aligned two-column table (for
+    /// `ddm client --metrics`).
     pub fn table(&self) -> crate::bench::table::Table {
         let mut t = crate::bench::table::Table::new(vec!["metric", "value"]);
         for (k, v) in &self.counters {
@@ -189,6 +213,49 @@ impl MetricsSnapshot {
         }
         for (k, v) in &self.gauges {
             t.row(vec![k.clone(), format!("{v:.3}")]);
+        }
+        t
+    }
+
+    /// Render the histograms as a quantile table (empty table when the
+    /// server exported none).
+    pub fn hist_table(&self) -> crate::bench::table::Table {
+        let ns = |v: u64| crate::bench::stats::fmt_secs(v as f64 / 1e9);
+        let mut t = crate::bench::table::Table::new(vec![
+            "histogram", "count", "mean", "p50", "p90", "p99", "max",
+        ]);
+        for (k, h) in &self.hists {
+            t.row(vec![
+                k.clone(),
+                h.count().to_string(),
+                ns(h.mean_ns()),
+                ns(h.p50()),
+                ns(h.p90()),
+                ns(h.p99()),
+                ns(h.max_ns()),
+            ]);
+        }
+        t
+    }
+
+    /// Render the slow-span list (phase names resolved locally via
+    /// [`Phase::name_of`](crate::obs::Phase::name_of)).
+    pub fn span_table(&self) -> crate::bench::table::Table {
+        let mut t = crate::bench::table::Table::new(vec![
+            "phase", "lane", "dur", "items",
+        ]);
+        for s in &self.spans {
+            let lane = if s.worker == crate::obs::trace::MASTER_WORKER {
+                "master".to_string()
+            } else {
+                s.worker.to_string()
+            };
+            t.row(vec![
+                crate::obs::Phase::name_of(s.phase).to_string(),
+                lane,
+                crate::bench::stats::fmt_secs(s.dur_ns() as f64 / 1e9),
+                s.items.to_string(),
+            ]);
         }
         t
     }
@@ -392,6 +459,30 @@ impl Msg {
                     wire::put_bytes(o, k.as_bytes());
                     wire::put_f64(o, *v);
                 }
+                wire::put_varint(o, m.hists.len() as u64);
+                for (k, h) in &m.hists {
+                    wire::put_bytes(o, k.as_bytes());
+                    wire::put_varint(o, h.count());
+                    wire::put_varint(o, h.total_ns());
+                    wire::put_varint(o, h.max_ns());
+                    // Trailing-zero buckets carry no information — trim
+                    // them so an idle histogram costs a few bytes, not
+                    // 64 varints.
+                    let buckets = h.bucket_counts();
+                    let nb = buckets.iter().rposition(|&b| b != 0).map_or(0, |i| i + 1);
+                    wire::put_varint(o, nb as u64);
+                    for &b in &buckets[..nb] {
+                        wire::put_varint(o, b);
+                    }
+                }
+                wire::put_varint(o, m.spans.len() as u64);
+                for s in &m.spans {
+                    wire::put_varint(o, u64::from(s.phase));
+                    wire::put_varint(o, u64::from(s.worker));
+                    wire::put_varint(o, s.t0_ns);
+                    wire::put_varint(o, s.t1_ns);
+                    wire::put_varint(o, s.items);
+                }
             }),
             Msg::ErrorReply { code, msg } => wire::frame(out, TAG_ERROR, |o| {
                 wire::put_varint(o, u64::from(*code));
@@ -497,7 +588,39 @@ impl Msg {
                     let v = r.f64()?;
                     gauges.push((k, v));
                 }
-                Msg::Metrics(MetricsSnapshot { counters, gauges })
+                let nh = r.count(5)?;
+                let mut hists = Vec::with_capacity(nh);
+                for _ in 0..nh {
+                    let k = r.str()?.to_string();
+                    let count = r.varint()?;
+                    let total_ns = r.varint()?;
+                    let max_ns = r.varint()?;
+                    let nb = r.count(1)?;
+                    if nb > hist::BUCKETS {
+                        return Err(WireError::Malformed("histogram bucket count exceeds 64"));
+                    }
+                    let mut buckets = [0u64; hist::BUCKETS];
+                    for b in buckets.iter_mut().take(nb) {
+                        *b = r.varint()?;
+                    }
+                    hists.push((k, Histogram::from_parts(count, total_ns, max_ns, &buckets)));
+                }
+                let nsp = r.count(5)?;
+                let mut spans = Vec::with_capacity(nsp);
+                for _ in 0..nsp {
+                    let phase = u16::try_from(r.varint()?)
+                        .map_err(|_| WireError::Malformed("span phase exceeds u16"))?;
+                    let worker = u16::try_from(r.varint()?)
+                        .map_err(|_| WireError::Malformed("span worker exceeds u16"))?;
+                    spans.push(SpanRecord {
+                        phase,
+                        worker,
+                        t0_ns: r.varint()?,
+                        t1_ns: r.varint()?,
+                        items: r.varint()?,
+                    });
+                }
+                Msg::Metrics(MetricsSnapshot { counters, gauges, hists, spans })
             }
             TAG_ERROR => Msg::ErrorReply {
                 code: u32::try_from(r.varint()?)
@@ -600,13 +723,33 @@ pub fn arbitrary_msg(rng: &mut crate::prng::Rng, d: usize) -> Msg {
         12 => Msg::GetPairs,
         13 => Msg::Pairs(pairs(rng)),
         14 => Msg::GetMetrics,
-        15 => Msg::Metrics(MetricsSnapshot {
-            counters: vec![
-                ("commits".into(), rng.below(1 << 20)),
-                ("net_ops".into(), rng.below(1 << 30)),
-            ],
-            gauges: vec![("shard_imbalance".into(), rng.uniform(0.0, 8.0))],
-        }),
+        15 => {
+            let mut h = Histogram::default();
+            for _ in 0..rng.below(200) {
+                h.record(rng.below(1u64 << (1 + rng.below(40) as u32)));
+            }
+            let nspans = rng.below(8) as usize;
+            Msg::Metrics(MetricsSnapshot {
+                counters: vec![
+                    ("commits".into(), rng.below(1 << 20)),
+                    ("net_ops".into(), rng.below(1 << 30)),
+                ],
+                gauges: vec![("shard_imbalance".into(), rng.uniform(0.0, 8.0))],
+                hists: vec![("commit_ns".into(), h)],
+                spans: (0..nspans)
+                    .map(|_| {
+                        let t0 = rng.below(1 << 40);
+                        SpanRecord {
+                            phase: rng.below(16) as u16,
+                            worker: rng.below(9) as u16,
+                            t0_ns: t0,
+                            t1_ns: t0 + rng.below(1 << 30),
+                            items: rng.below(1 << 20),
+                        }
+                    })
+                    .collect(),
+            })
+        }
         16 => Msg::ErrorReply {
             code: err_code::UNSUPPORTED,
             msg: "not here".to_string(),
@@ -793,11 +936,30 @@ mod tests {
         let mut m = Metrics::default();
         m.inc("net_ops", 12);
         m.gauge("shard_imbalance", 1.5);
-        let snap = MetricsSnapshot::of(&m);
+        for ns in [900u64, 1_000, 40_000, 1_000_000] {
+            m.observe_ns("commit_ns", ns);
+        }
+        let spans = vec![
+            SpanRecord { phase: 14, worker: crate::obs::trace::MASTER_WORKER, t0_ns: 10, t1_ns: 500, items: 3 },
+            SpanRecord { phase: 9, worker: 1, t0_ns: 20, t1_ns: 90, items: 2 },
+            SpanRecord { phase: 9, worker: 0, t0_ns: 20, t1_ns: 400, items: 2 },
+        ];
+        let snap = MetricsSnapshot::of(&m).with_spans(&spans, 2);
         assert_eq!(snap.counter("net_ops"), 12);
         assert_eq!(snap.counter("absent"), 0);
         assert_eq!(snap.gauge("shard_imbalance"), Some(1.5));
+        // The whole histogram travels: the client reads quantiles off
+        // the decoded copy, identical to the server's.
+        let h = snap.hist("commit_ns").expect("histogram exported");
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.p50(), m.hist("commit_ns").unwrap().p50());
+        assert!(snap.hist("absent").is_none());
+        // Top-2 slowest spans, longest first.
+        assert_eq!(snap.spans.len(), 2);
+        assert!(snap.spans[0].dur_ns() >= snap.spans[1].dur_ns());
         assert!(snap.table().render().contains("net_ops"));
+        assert!(snap.hist_table().render().contains("commit_ns"));
+        assert!(snap.span_table().render().contains("commit"));
         round_trip(&Msg::Metrics(snap));
     }
 

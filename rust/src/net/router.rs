@@ -13,7 +13,7 @@ use std::sync::Arc;
 use crate::coordinator::metrics::Metrics;
 
 use super::proto::{err_code, MetricsSnapshot, Msg, Role, TopologySnapshot, WorkerEntry, PROTO_ID};
-use super::server::{Outbox, Service};
+use super::server::{Outbox, Service, StageHists};
 
 /// Split `shards` global stripes across `workers` addresses into
 /// contiguous ranges, balanced to within one stripe (the same
@@ -50,6 +50,8 @@ pub struct RouterService {
     topo: TopologySnapshot,
     metrics: Metrics,
     stop: Option<Arc<AtomicBool>>,
+    /// Server-core stage histograms, folded into live metrics replies.
+    stages: StageHists,
 }
 
 impl RouterService {
@@ -59,6 +61,7 @@ impl RouterService {
             topo,
             metrics: Metrics::default(),
             stop: None,
+            stages: StageHists::default(),
         }
     }
 }
@@ -66,6 +69,10 @@ impl RouterService {
 impl Service for RouterService {
     fn bind_stop(&mut self, stop: Arc<AtomicBool>) {
         self.stop = Some(stop);
+    }
+
+    fn bind_stages(&mut self, stages: StageHists) {
+        self.stages = stages;
     }
 
     fn on_open(&mut self, _conn: u64) {
@@ -110,8 +117,9 @@ impl Service for RouterService {
                 },
             ),
             Msg::GetMetrics => {
-                let snap = MetricsSnapshot::of(&self.metrics);
-                out.send(conn, &Msg::Metrics(snap));
+                let mut m = self.metrics.clone();
+                self.stages.merge_into(&mut m);
+                out.send(conn, &Msg::Metrics(MetricsSnapshot::of(&m)));
             }
             Msg::Shutdown => {
                 if let Some(stop) = &self.stop {

@@ -37,8 +37,43 @@ use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
 use crate::coordinator::metrics::Metrics;
+use crate::obs::{clock, AtomicHist};
 
 use super::proto::{err_code, Msg};
+
+/// The four server-stage histograms, shared across the threads that
+/// feed them: `accept` (listener: accept → IO handoff), `decode` (IO
+/// threads: one read's frame-split+decode batch), `state` (state
+/// thread: one event batch through the service), `encode` (state
+/// thread: reply-frame encoding inside the batch). Lock-free
+/// ([`AtomicHist`]); [`serve`] creates one bundle, hands it to every
+/// thread and to the service ([`Service::bind_stages`]) so live
+/// metrics replies and the final [`Metrics`] report the same numbers.
+#[derive(Clone, Default)]
+pub struct StageHists {
+    pub accept: Arc<AtomicHist>,
+    pub decode: Arc<AtomicHist>,
+    pub state: Arc<AtomicHist>,
+    pub encode: Arc<AtomicHist>,
+}
+
+impl StageHists {
+    /// Fold current snapshots into `m` under the `net_*_ns` histogram
+    /// names (stages nothing has hit yet are skipped).
+    pub fn merge_into(&self, m: &mut Metrics) {
+        for (name, h) in [
+            ("net_accept_ns", &self.accept),
+            ("net_decode_ns", &self.decode),
+            ("net_state_ns", &self.state),
+            ("net_encode_ns", &self.encode),
+        ] {
+            let snap = h.snapshot();
+            if !snap.is_empty() {
+                m.merge_hist(name, &snap);
+            }
+        }
+    }
+}
 
 /// Reply sink handed to [`Service`] hooks: frames to send and
 /// connections to close, routed to the owning IO threads by the state
@@ -46,6 +81,10 @@ use super::proto::{err_code, Msg};
 pub struct Outbox {
     frames: Vec<(u64, Vec<u8>)>,
     closes: Vec<u64>,
+    /// Nanoseconds spent encoding reply frames since the last
+    /// [`take_encode_ns`](Self::take_encode_ns) (the state loop folds
+    /// this into [`StageHists::encode`] per batch).
+    encode_ns: u64,
 }
 
 impl Outbox {
@@ -53,17 +92,24 @@ impl Outbox {
         Self {
             frames: Vec::new(),
             closes: Vec::new(),
+            encode_ns: 0,
         }
     }
 
     /// Queue `msg` for connection `conn`.
     pub fn send(&mut self, conn: u64, msg: &Msg) {
+        let t0 = clock::now_ns();
         self.frames.push((conn, msg.to_frame()));
+        self.encode_ns += clock::now_ns().saturating_sub(t0);
     }
 
     /// Close `conn` once everything queued for it has flushed.
     pub fn close(&mut self, conn: u64) {
         self.closes.push(conn);
+    }
+
+    fn take_encode_ns(&mut self) -> u64 {
+        std::mem::take(&mut self.encode_ns)
     }
 }
 
@@ -75,6 +121,11 @@ pub trait Service: Send + 'static {
     /// Receive the server's stop flag before any traffic; a service
     /// sets it to initiate shutdown (e.g. on a wire [`Msg::Shutdown`]).
     fn bind_stop(&mut self, stop: Arc<AtomicBool>);
+    /// Receive the shared server-stage histograms before any traffic,
+    /// so live metrics replies can include accept/decode/state/encode
+    /// timing. Default: ignore them (the final [`Metrics`] still get
+    /// them — the state loop merges on exit).
+    fn bind_stages(&mut self, _stages: StageHists) {}
     /// A connection completed accept and is readable.
     fn on_open(&mut self, conn: u64);
     /// One decoded message from `conn`; replies go through `out`.
@@ -204,7 +255,9 @@ pub fn serve<S: Service>(cfg: &ServerConfig, mut service: S) -> crate::Result<Se
     listener.set_nonblocking(true)?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
+    let stages = StageHists::default();
     service.bind_stop(Arc::clone(&stop));
+    service.bind_stages(stages.clone());
 
     let nio = cfg.io_threads.max(1);
     let (ev_tx, ev_rx) = channel();
@@ -214,17 +267,19 @@ pub fn serve<S: Service>(cfg: &ServerConfig, mut service: S) -> crate::Result<Se
         let (tx, rx) = channel();
         io_tx.push(tx);
         let ev = ev_tx.clone();
-        aux.push(thread::spawn(move || io_loop(rx, ev)));
+        let decode = Arc::clone(&stages.decode);
+        aux.push(thread::spawn(move || io_loop(rx, ev, decode)));
     }
     drop(ev_tx);
     {
         let io_tx = io_tx.clone();
         let stop = Arc::clone(&stop);
-        aux.push(thread::spawn(move || listen_loop(listener, io_tx, stop)));
+        let accept = Arc::clone(&stages.accept);
+        aux.push(thread::spawn(move || listen_loop(listener, io_tx, stop, accept)));
     }
     let state = {
         let stop = Arc::clone(&stop);
-        thread::spawn(move || state_loop(service, ev_rx, io_tx, stop))
+        thread::spawn(move || state_loop(service, ev_rx, io_tx, stop, stages))
     };
     Ok(ServerHandle {
         addr,
@@ -236,11 +291,17 @@ pub fn serve<S: Service>(cfg: &ServerConfig, mut service: S) -> crate::Result<Se
 
 /// Accept loop: nonblocking accept, stripe connections over IO
 /// threads, exit when the stop flag rises (this closes the listener).
-fn listen_loop(listener: TcpListener, io_tx: Vec<Sender<IoCmd>>, stop: Arc<AtomicBool>) {
+fn listen_loop(
+    listener: TcpListener,
+    io_tx: Vec<Sender<IoCmd>>,
+    stop: Arc<AtomicBool>,
+    accept_h: Arc<AtomicHist>,
+) {
     let mut next_id: u64 = 0;
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
+                let t0 = clock::now_ns();
                 let _ = stream.set_nodelay(true);
                 if stream.set_nonblocking(true).is_err() {
                     continue;
@@ -248,6 +309,7 @@ fn listen_loop(listener: TcpListener, io_tx: Vec<Sender<IoCmd>>, stop: Arc<Atomi
                 let id = next_id;
                 next_id += 1;
                 let _ = io_tx[(id as usize) % io_tx.len()].send(IoCmd::Conn(id, stream));
+                accept_h.record(clock::now_ns().saturating_sub(t0));
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
                 thread::sleep(Duration::from_millis(1));
@@ -260,7 +322,7 @@ fn listen_loop(listener: TcpListener, io_tx: Vec<Sender<IoCmd>>, stop: Arc<Atomi
 /// One IO thread: read/decode/forward inbound, buffer/flush outbound,
 /// reap dead connections. On `Stop`, drains every write queue (bounded
 /// grace) before closing sockets.
-fn io_loop(rx: Receiver<IoCmd>, ev: Sender<Ev>) {
+fn io_loop(rx: Receiver<IoCmd>, ev: Sender<Ev>, decode_h: Arc<AtomicHist>) {
     let mut conns: HashMap<u64, Conn> = HashMap::new();
     let mut tmp = [0u8; 16 * 1024];
     let mut stopping = false;
@@ -336,6 +398,7 @@ fn io_loop(rx: Receiver<IoCmd>, ev: Sender<Ev>) {
                     Ok(n) => {
                         busy = true;
                         c.rbuf.extend_from_slice(&tmp[..n]);
+                        let t_dec = clock::now_ns();
                         let mut at = 0;
                         loop {
                             match Msg::decode(&c.rbuf[at..]) {
@@ -360,6 +423,7 @@ fn io_loop(rx: Receiver<IoCmd>, ev: Sender<Ev>) {
                         }
                         if at > 0 {
                             c.rbuf.drain(..at);
+                            decode_h.record(clock::now_ns().saturating_sub(t_dec));
                         }
                         if c.closing || n < tmp.len() {
                             break;
@@ -447,15 +511,26 @@ fn state_loop<S: Service>(
     ev_rx: Receiver<Ev>,
     io_tx: Vec<Sender<IoCmd>>,
     stop: Arc<AtomicBool>,
+    stages: StageHists,
 ) -> Metrics {
     let mut open: Vec<u64> = Vec::new();
     let mut out = Outbox::new();
     loop {
         match ev_rx.recv_timeout(Duration::from_millis(2)) {
             Ok(ev) => {
+                // One batch = everything already queued; its wall time
+                // (minus the encode share, accounted separately) is
+                // the state stage.
+                let t_state = clock::now_ns();
                 dispatch(&mut service, ev, &mut open, &mut out);
                 while let Ok(ev) = ev_rx.try_recv() {
                     dispatch(&mut service, ev, &mut open, &mut out);
+                }
+                let enc = out.take_encode_ns();
+                let batch = clock::now_ns().saturating_sub(t_state);
+                stages.state.record(batch.saturating_sub(enc));
+                if enc > 0 {
+                    stages.encode.record(enc);
                 }
                 route(&mut out, &io_tx);
             }
@@ -475,7 +550,13 @@ fn state_loop<S: Service>(
     for tx in &io_tx {
         let _ = tx.send(IoCmd::Stop);
     }
-    service.metrics()
+    // Final metrics carry the stage histograms; live GetMetrics
+    // replies get the same numbers from the service's own copy of
+    // `stages` ([`Service::bind_stages`]) — it snapshots, so there is
+    // no double counting.
+    let mut m = service.metrics();
+    stages.merge_into(&mut m);
+    m
 }
 
 fn dispatch<S: Service>(service: &mut S, ev: Ev, open: &mut Vec<u64>, out: &mut Outbox) {

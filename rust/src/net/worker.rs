@@ -17,11 +17,19 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::metrics::Metrics;
+use crate::obs::{clock, SpanRecord};
 use crate::session::MatchDiff;
-use crate::shard::AnySession;
+use crate::shard::{AnySession, ShardedSession};
 
 use super::proto::{err_code, MetricsSnapshot, Msg, RegionOp, Role, PROTO_ID};
-use super::server::{Outbox, Service};
+use super::server::{Outbox, Service, StageHists};
+
+/// Retained trace spans (newest win); [`Msg::GetMetrics`] replies carry
+/// the top slowest out of this window.
+const TRACE_LOG_CAP: usize = 1024;
+
+/// Spans per [`MetricsSnapshot`] reply.
+const SNAPSHOT_SPANS: usize = 32;
 
 /// [`Service`] implementation wrapping a session (single or sharded).
 pub struct WorkerService {
@@ -33,6 +41,13 @@ pub struct WorkerService {
     /// commit on shutdown — `pending_ops()` alone misses flushed work).
     dirty: bool,
     stop: Option<Arc<AtomicBool>>,
+    /// Server-core stage histograms (accept/decode/state/encode),
+    /// folded into metrics snapshots so live `GetMetrics` replies match
+    /// the final table.
+    stages: StageHists,
+    /// Phase spans drained from the session after each traced commit,
+    /// bounded to the most recent [`TRACE_LOG_CAP`].
+    trace_log: Vec<SpanRecord>,
 }
 
 impl WorkerService {
@@ -44,6 +59,8 @@ impl WorkerService {
             subscribers: Vec::new(),
             dirty: false,
             stop: None,
+            stages: StageHists::default(),
+            trace_log: Vec::new(),
         }
     }
 
@@ -82,13 +99,27 @@ impl WorkerService {
     }
 
     fn commit_epoch(&mut self) -> MatchDiff {
+        let t0 = clock::now_ns();
         let diff = self.session.commit();
+        self.metrics
+            .observe_ns("commit_ns", clock::now_ns().saturating_sub(t0));
         self.dirty = false;
         self.metrics.inc("commits", 1);
         self.metrics.inc("diff_added", diff.added.len() as u64);
         self.metrics.inc("diff_removed", diff.removed.len() as u64);
-        if let Some(im) = self.session.imbalance() {
-            self.metrics.gauge("shard_imbalance", im);
+        if let Some(stats) = self.session.shard_stats() {
+            self.metrics
+                .gauge("shard_imbalance", ShardedSession::imbalance_of(&stats));
+            if let Some(ti) = ShardedSession::commit_time_imbalance_of(&stats) {
+                self.metrics.gauge("shard_time_imbalance", ti);
+            }
+        }
+        if self.session.trace_enabled() {
+            self.trace_log.extend(self.session.drain_trace());
+            if self.trace_log.len() > TRACE_LOG_CAP {
+                let excess = self.trace_log.len() - TRACE_LOG_CAP;
+                self.trace_log.drain(..excess);
+            }
         }
         diff
     }
@@ -111,6 +142,10 @@ impl WorkerService {
 impl Service for WorkerService {
     fn bind_stop(&mut self, stop: Arc<AtomicBool>) {
         self.stop = Some(stop);
+    }
+
+    fn bind_stages(&mut self, stages: StageHists) {
+        self.stages = stages;
     }
 
     fn on_open(&mut self, _conn: u64) {
@@ -177,7 +212,13 @@ impl Service for WorkerService {
             Msg::GetMetrics => {
                 self.metrics
                     .gauge("net_subscribers", self.subscribers.len() as f64);
-                let snap = MetricsSnapshot::of(&self.metrics);
+                // Fold the server-core stage histograms into a copy so
+                // the live reply matches the final table without
+                // double-counting into the service's own registry.
+                let mut m = self.metrics.clone();
+                self.stages.merge_into(&mut m);
+                let snap =
+                    MetricsSnapshot::of(&m).with_spans(&self.trace_log, SNAPSHOT_SPANS);
                 out.send(conn, &Msg::Metrics(snap));
             }
             Msg::Shutdown => {

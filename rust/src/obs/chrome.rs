@@ -1,0 +1,202 @@
+//! Chrome trace-event export: turn a span timeline into JSON that
+//! `chrome://tracing` / Perfetto render as one lane per worker/shard.
+//!
+//! The format is the Trace Event Format's complete-event (`"ph":"X"`)
+//! flavor: one object per span with microsecond `ts`/`dur`, `tid` =
+//! worker lane, plus `"M"` metadata events naming each lane. Built on
+//! the crate's serde-free [`json`](crate::config::json) writer.
+
+use std::collections::BTreeMap;
+
+use crate::config::json;
+
+use super::trace::{SpanRecord, MASTER_WORKER};
+use super::Phase;
+
+/// The `n` slowest spans, longest first (ties broken by start time so
+/// the order is deterministic). Used for the wire's top-span export
+/// and the `ddm trace` summary.
+pub fn top_slowest(records: &[SpanRecord], n: usize) -> Vec<SpanRecord> {
+    let mut v: Vec<SpanRecord> = records.to_vec();
+    v.sort_by(|a, b| {
+        b.dur_ns()
+            .cmp(&a.dur_ns())
+            .then(a.t0_ns.cmp(&b.t0_ns))
+            .then(a.worker.cmp(&b.worker))
+    });
+    v.truncate(n);
+    v
+}
+
+/// Per-phase rollup of a timeline: `(phase id, total ns, span count,
+/// total items)` in phase-id order. The acceptance check "span totals
+/// ≈ commit wall-clock" and the `ddm trace` summary read this.
+pub fn phase_totals(records: &[SpanRecord]) -> Vec<(u16, u64, u64, u64)> {
+    let mut acc: BTreeMap<u16, (u64, u64, u64)> = BTreeMap::new();
+    for r in records {
+        let e = acc.entry(r.phase).or_insert((0, 0, 0));
+        e.0 += r.dur_ns();
+        e.1 += 1;
+        e.2 += r.items;
+    }
+    acc.into_iter().map(|(p, (ns, n, items))| (p, ns, n, items)).collect()
+}
+
+/// Human label for a worker lane.
+fn lane_name(worker: u16) -> String {
+    if worker == MASTER_WORKER {
+        "master".to_string()
+    } else {
+        format!("worker {worker}")
+    }
+}
+
+/// Render a timeline as a Chrome trace-event JSON document. Spans
+/// become complete events (`ph: "X"`, `ts`/`dur` in microseconds,
+/// `tid` = worker lane); each lane also gets a `thread_name` metadata
+/// event so chrome://tracing shows "master" / "worker 3" instead of
+/// raw tids. Load via chrome://tracing → Load, or ui.perfetto.dev.
+pub fn chrome_trace_json(records: &[SpanRecord]) -> String {
+    let mut events: Vec<String> = Vec::with_capacity(records.len() + 8);
+
+    // One thread_name metadata event per lane, lowest tid first.
+    let mut lanes: Vec<u16> = records.iter().map(|r| r.worker).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    for &w in &lanes {
+        events.push(json::object(&[
+            ("name", json::string("thread_name")),
+            ("ph", json::string("M")),
+            ("pid", "1".to_string()),
+            ("tid", w.to_string()),
+            (
+                "args",
+                json::object(&[("name", json::string(&lane_name(w)))]),
+            ),
+        ]));
+    }
+
+    for r in records {
+        events.push(json::object(&[
+            ("name", json::string(Phase::name_of(r.phase))),
+            ("cat", json::string("ddm")),
+            ("ph", json::string("X")),
+            ("pid", "1".to_string()),
+            ("tid", r.worker.to_string()),
+            // Trace-event times are microseconds (fractions allowed).
+            ("ts", json::num(r.t0_ns as f64 / 1000.0)),
+            ("dur", json::num(r.dur_ns() as f64 / 1000.0)),
+            (
+                "args",
+                json::object(&[
+                    ("items", r.items.to_string()),
+                    ("phase_id", r.phase.to_string()),
+                ]),
+            ),
+        ]));
+    }
+
+    json::object(&[
+        ("displayTimeUnit", json::string("ms")),
+        ("traceEvents", json::array(&events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(phase: Phase, worker: u16, t0: u64, t1: u64, items: u64) -> SpanRecord {
+        SpanRecord {
+            phase: phase.id(),
+            worker,
+            t0_ns: t0,
+            t1_ns: t1,
+            items,
+        }
+    }
+
+    #[test]
+    fn top_slowest_orders_by_duration_then_start() {
+        let rs = vec![
+            rec(Phase::Sort, 0, 0, 50, 1),
+            rec(Phase::Sweep, 1, 10, 300, 2),
+            rec(Phase::Commit, 2, 5, 55, 3), // same dur as Sort, later start
+        ];
+        let top = top_slowest(&rs, 2);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].phase, Phase::Sweep.id());
+        assert_eq!(top[1].phase, Phase::Sort.id(), "earlier start wins the tie");
+        assert!(top_slowest(&rs, 10).len() == 3);
+        assert!(top_slowest(&[], 5).is_empty());
+    }
+
+    #[test]
+    fn phase_totals_roll_up_duration_count_items() {
+        let rs = vec![
+            rec(Phase::Sort, 0, 0, 10, 100),
+            rec(Phase::Sort, 1, 0, 20, 50),
+            rec(Phase::Sweep, 0, 10, 15, 7),
+        ];
+        let totals = phase_totals(&rs);
+        assert_eq!(totals.len(), 2);
+        assert_eq!(totals[0], (Phase::Sort.id(), 30, 2, 150));
+        assert_eq!(totals[1], (Phase::Sweep.id(), 5, 1, 7));
+    }
+
+    /// Minimal structural JSON check: balanced braces/brackets outside
+    /// strings, no trailing garbage. (CI additionally parses the real
+    /// artifact with a full JSON parser.)
+    fn assert_balanced_json(s: &str) {
+        let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+        for c in s.chars() {
+            if in_str {
+                if esc {
+                    esc = false;
+                } else if c == '\\' {
+                    esc = true;
+                } else if c == '"' {
+                    in_str = false;
+                }
+                continue;
+            }
+            match c {
+                '"' => in_str = true,
+                '{' | '[' => depth += 1,
+                '}' | ']' => {
+                    depth -= 1;
+                    assert!(depth >= 0, "unbalanced close in {s}");
+                }
+                _ => {}
+            }
+        }
+        assert!(!in_str, "unterminated string");
+        assert_eq!(depth, 0, "unbalanced JSON");
+    }
+
+    #[test]
+    fn chrome_trace_is_well_formed_and_lane_labelled() {
+        let rs = vec![
+            rec(Phase::Sort, 0, 1000, 2500, 10),
+            rec(Phase::Commit, MASTER_WORKER, 0, 5000, 1),
+        ];
+        let out = chrome_trace_json(&rs);
+        assert_balanced_json(&out);
+        assert!(out.starts_with('{') && out.ends_with('}'));
+        assert!(out.contains("\"traceEvents\""));
+        assert!(out.contains("\"name\":\"sort\""));
+        assert!(out.contains("\"name\":\"master\""), "master lane named");
+        assert!(out.contains("\"name\":\"worker 0\""));
+        assert!(out.contains("\"ts\":1"), "microsecond timestamps");
+        assert!(out.contains("\"dur\":1.5"), "1500ns → 1.5µs");
+        // 2 spans + 2 lane-metadata events.
+        assert_eq!(out.matches("\"ph\":").count(), 4);
+    }
+
+    #[test]
+    fn empty_timeline_still_renders_valid_json() {
+        let out = chrome_trace_json(&[]);
+        assert_balanced_json(&out);
+        assert!(out.contains("\"traceEvents\":[]"));
+    }
+}

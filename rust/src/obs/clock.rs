@@ -1,0 +1,48 @@
+//! The monotonic clock seam: nanoseconds since the process's first
+//! observation.
+//!
+//! The `xtask lint` wallclock rule bans `Instant::now` outside the
+//! measurement layer so hot code cannot sneak in timing side effects;
+//! `obs/` is the one sanctioned owner of the clock (the lint carries an
+//! `obs/` exemption). Everything that needs a timestamp — span sinks,
+//! histograms, the net server's stage timers — calls [`now_ns`], which
+//! keeps timestamps small (they fit traces and varints comfortably),
+//! mutually comparable within one process, and mockable in tests via
+//! plain arithmetic on the returned values.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Process-wide anchor: the instant of the first [`now_ns`] call.
+static ANCHOR: OnceLock<Instant> = OnceLock::new();
+
+/// Monotonic nanoseconds since the first call in this process. The
+/// first call returns a small value (not 0 exactly — initialization
+/// itself takes time), every later call is ≥ any earlier one.
+#[inline]
+pub fn now_ns() -> u64 {
+    ANCHOR.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn now_ns_is_monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        let c = now_ns();
+        assert!(a <= b && b <= c, "{a} {b} {c}");
+    }
+
+    #[test]
+    fn now_ns_advances() {
+        let a = now_ns();
+        // Burn a little real time; even coarse clocks advance over a sleep.
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = now_ns();
+        assert!(b > a, "clock did not advance: {a} -> {b}");
+        assert!(b - a >= 1_000_000, "slept 2ms but measured {}ns", b - a);
+    }
+}

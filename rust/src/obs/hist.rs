@@ -1,0 +1,393 @@
+//! Log-bucketed latency histograms: power-of-two buckets over
+//! nanoseconds, mergeable across workers, quantile-readable.
+//!
+//! Bucket `b` holds values `v` with `floor(log2(v)) == b` (value 0
+//! shares bucket 0 with value 1), so 64 buckets cover the whole `u64`
+//! range and recording is a handful of integer ops — no allocation, no
+//! floating point, safe for per-event use on service paths. Quantiles
+//! are read by walking the cumulative counts to the nearest-rank
+//! target bucket and reporting that bucket's upper bound (clamped to
+//! the observed max), which is exact to within one power-of-two bucket
+//! of the true order statistic — the merge/quantile property tests
+//! below pin both guarantees down.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of power-of-two buckets (covers all of `u64`).
+pub const BUCKETS: usize = 64;
+
+/// Bucket index of a nanosecond value: `floor(log2(v))`, with 0 → 0.
+#[inline]
+pub fn bucket_index(ns: u64) -> usize {
+    if ns <= 1 {
+        0
+    } else {
+        63 - ns.leading_zeros() as usize
+    }
+}
+
+/// Inclusive upper bound of bucket `b` (`2^(b+1) - 1`).
+#[inline]
+pub fn bucket_hi(b: usize) -> u64 {
+    if b >= 63 {
+        u64::MAX
+    } else {
+        (1u64 << (b + 1)) - 1
+    }
+}
+
+/// A log-bucketed histogram of nanosecond values. `Default` is empty.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Histogram {
+    count: u64,
+    /// Sum of recorded values (saturating — ~584 years of nanoseconds
+    /// before that matters).
+    total_ns: u64,
+    max_ns: u64,
+    buckets: [u64; BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            count: 0,
+            total_ns: 0,
+            max_ns: 0,
+            buckets: [0; BUCKETS],
+        }
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count)
+            .field("mean_ns", &self.mean_ns())
+            .field("p50_ns", &self.p50())
+            .field("p99_ns", &self.p99())
+            .field("max_ns", &self.max_ns)
+            .finish()
+    }
+}
+
+impl Histogram {
+    /// Record one value.
+    #[inline]
+    pub fn record(&mut self, ns: u64) {
+        self.count += 1;
+        self.total_ns = self.total_ns.saturating_add(ns);
+        self.max_ns = self.max_ns.max(ns);
+        self.buckets[bucket_index(ns)] += 1;
+    }
+
+    /// Record a `Duration` (convenience for callers holding one).
+    #[inline]
+    pub fn record_duration(&mut self, d: std::time::Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Fold `other` into `self`. Merging is commutative and
+    /// associative (bucket counts are plain sums), so per-worker
+    /// histograms can fan in, in any order, to the same result.
+    pub fn merge(&mut self, other: &Histogram) {
+        self.count += other.count;
+        self.total_ns = self.total_ns.saturating_add(other.total_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// Recorded values.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Largest recorded value.
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Sum of recorded values (saturating).
+    pub fn total_ns(&self) -> u64 {
+        self.total_ns
+    }
+
+    /// Exact arithmetic mean of the recorded values (0 when empty).
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            (self.total_ns as u128 / self.count as u128) as u64
+        }
+    }
+
+    /// Nearest-rank quantile, reported as the target bucket's upper
+    /// bound clamped to the observed max: exact to within one
+    /// power-of-two bucket of the true order statistic. `q` is clamped
+    /// to [0, 1]; an empty histogram reports 0.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return bucket_hi(b).min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    /// Median.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// 90th percentile.
+    pub fn p90(&self) -> u64 {
+        self.quantile(0.90)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// The raw bucket counts (wire encode reads these).
+    pub fn bucket_counts(&self) -> &[u64; BUCKETS] {
+        &self.buckets
+    }
+
+    /// Rebuild from transported parts (wire decode). Bucket arrays
+    /// shorter than [`BUCKETS`] are zero-extended, longer ones
+    /// truncated — a forward-compatibility hedge, not a normal path.
+    pub fn from_parts(count: u64, total_ns: u64, max_ns: u64, buckets: &[u64]) -> Self {
+        let mut h = Histogram {
+            count,
+            total_ns,
+            max_ns,
+            buckets: [0; BUCKETS],
+        };
+        for (a, &b) in h.buckets.iter_mut().zip(buckets.iter()) {
+            *a = b;
+        }
+        h
+    }
+}
+
+/// Lock-free shared histogram for threads that cannot hand their
+/// samples to an owner (the net server's listener and IO threads):
+/// relaxed atomic bucket increments, snapshot on demand. `max` uses
+/// `fetch_max`, so the snapshot's max is exact; `count`/`total` are
+/// independently relaxed, so a snapshot taken mid-record can be off by
+/// the in-flight sample — fine for metrics, by design.
+pub struct AtomicHist {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+    max_ns: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for AtomicHist {
+    fn default() -> Self {
+        Self {
+            count: AtomicU64::new(0),
+            total_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl AtomicHist {
+    /// Record one value (relaxed; callers want throughput, not
+    /// cross-thread ordering).
+    #[inline]
+    pub fn record(&self, ns: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Copy the current contents into a plain [`Histogram`].
+    pub fn snapshot(&self) -> Histogram {
+        let mut h = Histogram {
+            count: self.count.load(Ordering::Relaxed),
+            total_ns: self.total_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+            buckets: [0; BUCKETS],
+        };
+        for (a, b) in h.buckets.iter_mut().zip(self.buckets.iter()) {
+            *a = b.load(Ordering::Relaxed);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    #[test]
+    fn bucket_index_is_floor_log2() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(1023), 9);
+        assert_eq!(bucket_index(1024), 10);
+        assert_eq!(bucket_index(u64::MAX), 63);
+        for b in 0..BUCKETS {
+            assert!(bucket_hi(b) >= 1u64 << b, "bucket {b}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::default();
+        assert!(h.is_empty());
+        assert_eq!(h.mean_ns(), 0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.p99(), 0);
+        assert_eq!(h.max_ns(), 0);
+    }
+
+    #[test]
+    fn single_value_quantiles_clamp_to_max() {
+        let mut h = Histogram::default();
+        h.record(1000);
+        // Bucket hi of 1000 is 1023; the clamp brings every quantile
+        // back to the observed max.
+        assert_eq!(h.p50(), 1000);
+        assert_eq!(h.p99(), 1000);
+        assert_eq!(h.mean_ns(), 1000);
+        assert_eq!(h.count(), 1);
+    }
+
+    /// Nearest-rank oracle on a sorted copy.
+    fn oracle_quantile(sorted: &[u64], q: f64) -> u64 {
+        let n = sorted.len();
+        let target = ((q * n as f64).ceil() as usize).clamp(1, n);
+        sorted[target - 1]
+    }
+
+    /// Satellite: merging K worker histograms is order-independent,
+    /// and quantiles land within one power-of-two bucket of a
+    /// sorted-oracle nearest-rank quantile.
+    #[test]
+    fn merge_is_order_independent_and_quantiles_track_oracle() {
+        crate::bench::prop::prop_check("hist-merge-quantile", 0x0B5, |rng| {
+            let k = 1 + rng.below(8) as usize;
+            let mut workers: Vec<Histogram> = (0..k).map(|_| Histogram::default()).collect();
+            let mut all: Vec<u64> = Vec::new();
+            for w in 0..k {
+                let n = rng.below(200);
+                for _ in 0..n {
+                    // Mix magnitudes: ns-scale through seconds-scale.
+                    let v = rng.below(1u64 << (3 + rng.below(28) as u32));
+                    workers[w].record(v);
+                    all.push(v);
+                }
+            }
+            // Merge forward and in reverse; fold into empty histograms.
+            let mut fwd = Histogram::default();
+            for w in &workers {
+                fwd.merge(w);
+            }
+            let mut rev = Histogram::default();
+            for w in workers.iter().rev() {
+                rev.merge(w);
+            }
+            crate::bench::prop::expect_eq(&fwd.count(), &rev.count(), "count")?;
+            crate::bench::prop::expect_eq(&fwd.total_ns(), &rev.total_ns(), "total")?;
+            crate::bench::prop::expect_eq(&fwd.max_ns(), &rev.max_ns(), "max")?;
+            crate::bench::prop::expect_eq(fwd.bucket_counts(), rev.bucket_counts(), "buckets")?;
+
+            if all.is_empty() {
+                return Ok(());
+            }
+            all.sort_unstable();
+            for &q in &[0.0, 0.5, 0.9, 0.99, 1.0] {
+                let got = fwd.quantile(q);
+                let want = oracle_quantile(&all, q);
+                let (gb, wb) = (bucket_index(got), bucket_index(want));
+                if gb.abs_diff(wb) > 1 {
+                    return Err(format!(
+                        "q={q}: got {got} (bucket {gb}) vs oracle {want} (bucket {wb})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn from_parts_round_trips_bucket_counts() {
+        let mut h = Histogram::default();
+        let mut rng = Rng::new(7);
+        for _ in 0..500 {
+            h.record(rng.below(1 << 30));
+        }
+        let back = Histogram::from_parts(
+            h.count(),
+            h.total_ns(),
+            h.max_ns(),
+            h.bucket_counts(),
+        );
+        assert_eq!(back.count(), h.count());
+        assert_eq!(back.p50(), h.p50());
+        assert_eq!(back.p99(), h.p99());
+        assert_eq!(back.bucket_counts(), h.bucket_counts());
+        // Short/long arrays do not panic.
+        let short = Histogram::from_parts(1, 5, 5, &[1, 0, 0]);
+        assert_eq!(short.count(), 1);
+    }
+
+    #[test]
+    fn atomic_hist_matches_serial_under_threads() {
+        let hist = std::sync::Arc::new(AtomicHist::default());
+        let mut want = Histogram::default();
+        let per_thread: Vec<Vec<u64>> = (0..4)
+            .map(|t| {
+                let mut rng = Rng::new(0xA7 + t);
+                (0..1000).map(|_| rng.below(1 << 20)).collect()
+            })
+            .collect();
+        for vs in &per_thread {
+            for &v in vs {
+                want.record(v);
+            }
+        }
+        let handles: Vec<_> = per_thread
+            .into_iter()
+            .map(|vs| {
+                let h = std::sync::Arc::clone(&hist);
+                std::thread::spawn(move || {
+                    for v in vs {
+                        h.record(v);
+                    }
+                })
+            })
+            .collect();
+        for t in handles {
+            t.join().unwrap();
+        }
+        let got = hist.snapshot();
+        assert_eq!(got.count(), want.count());
+        assert_eq!(got.total_ns(), want.total_ns());
+        assert_eq!(got.max_ns(), want.max_ns());
+        assert_eq!(got.bucket_counts(), want.bucket_counts());
+    }
+}

@@ -1,0 +1,168 @@
+//! Observability: phase-level tracing and log-bucketed histograms for
+//! the whole match pipeline.
+//!
+//! The source paper evaluates PSBM by decomposing wall-clock time into
+//! its phases (endpoint build, sort, local scan, merge); this module is
+//! that decomposition turned into a first-class subsystem the engine,
+//! session, shard, and net layers all report through:
+//!
+//! * [`clock`] — the one sanctioned monotonic-nanosecond seam. The
+//!   `xtask lint` wallclock rule bans `Instant::now` in hot modules;
+//!   `obs/` owns the clock, everyone else calls [`clock::now_ns`].
+//! * [`Histogram`] — log-bucketed (power-of-two buckets over
+//!   nanoseconds) latency distribution: p50/p90/p99/max, mergeable
+//!   across workers, wire-serializable. Replaces the mean/max-only
+//!   view of [`LatencyStat`](crate::coordinator::metrics::LatencyStat)
+//!   wherever tail latency matters.
+//! * [`trace`] — span records (phase id, worker id, start, end,
+//!   items) written into fixed-size per-worker buffers
+//!   ([`SpanSink`]: no growth, ever — enforced by the
+//!   `obs-no-hot-alloc` lint rule) and fanned in at epoch boundaries
+//!   via the claims machinery ([`Tracer`]/[`TraceFan`]). Disabled
+//!   tracing is a branch: no clock read, no write, no allocation.
+//! * [`chrome`] — export a span list as Chrome trace-event JSON
+//!   (`chrome://tracing` / Perfetto), one lane per worker/shard.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use ddm::obs::{clock, Histogram, Phase, SpanSink};
+//!
+//! let mut hist = Histogram::default();
+//! let mut sink = SpanSink::with_capacity(1024);
+//! let t0 = sink.start();               // 0 when the sink is disabled
+//! // … do a phase of work …
+//! sink.record(Phase::Sweep, 0, t0, 42); // end-timestamped at the call
+//! hist.record(clock::now_ns().saturating_sub(t0));
+//! assert_eq!(sink.records().len(), 1);
+//! assert!(hist.p99() >= hist.p50());
+//! ```
+//!
+//! End to end: `DdmEngine::builder().trace(true)` turns on span
+//! capture in every session the engine creates, `ddm replay --trace`
+//! / `ddm trace --out trace.json` dump a commit timeline, and `ddm
+//! client --metrics` renders the wire-delivered histograms.
+
+pub mod chrome;
+pub mod clock;
+pub mod hist;
+pub mod trace;
+
+pub use chrome::{chrome_trace_json, phase_totals, top_slowest};
+pub use hist::{AtomicHist, Histogram};
+pub use trace::{SpanRecord, SpanSink, TraceFan, Tracer};
+
+/// The span taxonomy: every traced phase of the pipeline. Stable ids
+/// (the `u16` in [`SpanRecord`]) so traces and wire payloads survive
+/// reordering here — append only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u16)]
+pub enum Phase {
+    /// SBM/PSBM endpoint build + radix/merge sort passes.
+    Sort = 0,
+    /// SBM/PSBM sweep over the sorted endpoint list.
+    Sweep = 1,
+    /// `FilterSink` residual-dimension verification (items = pairs
+    /// checked; the span brackets the sweep that drove them).
+    Residual = 2,
+    /// GBM counting-sort binning into the flat CSR cell lists.
+    GbmBin = 3,
+    /// GBM per-cell scan (brute force within each grid cell).
+    GbmScan = 4,
+    /// Session commit: staged-op apply (routing + LWW coalescing).
+    StageApply = 5,
+    /// Session commit phase A: parallel per-dimension tree writes.
+    TreeWrite = 6,
+    /// Session commit phase B: recompute of affected regions.
+    Recompute = 7,
+    /// Session commit phase C: diff vs the retained pair set.
+    DiffMerge = 8,
+    /// One shard's whole commit inside a `ShardedSession` fan-out
+    /// (worker id = shard id; the per-lane view of commit imbalance).
+    ShardCommit = 9,
+    /// Net server: frame decode batches in the IO threads.
+    NetDecode = 10,
+    /// Net server: state-thread message handling.
+    NetState = 11,
+    /// Net server: reply-frame encode in the state thread.
+    NetEncode = 12,
+    /// Net server: listener accept → IO-thread handoff.
+    NetAccept = 13,
+    /// A whole commit (session or wire), end to end.
+    Commit = 14,
+}
+
+impl Phase {
+    /// Every phase, in id order (the taxonomy table in
+    /// ARCHITECTURE.md mirrors this).
+    pub const ALL: [Phase; 15] = [
+        Phase::Sort,
+        Phase::Sweep,
+        Phase::Residual,
+        Phase::GbmBin,
+        Phase::GbmScan,
+        Phase::StageApply,
+        Phase::TreeWrite,
+        Phase::Recompute,
+        Phase::DiffMerge,
+        Phase::ShardCommit,
+        Phase::NetDecode,
+        Phase::NetState,
+        Phase::NetEncode,
+        Phase::NetAccept,
+        Phase::Commit,
+    ];
+
+    /// Stable wire/trace id.
+    #[inline]
+    pub fn id(self) -> u16 {
+        self as u16
+    }
+
+    /// Inverse of [`id`](Self::id); `None` for ids from a newer build.
+    pub fn from_id(id: u16) -> Option<Phase> {
+        Phase::ALL.get(id as usize).copied()
+    }
+
+    /// Short name (trace lanes, metric rows).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Sort => "sort",
+            Phase::Sweep => "sweep",
+            Phase::Residual => "residual",
+            Phase::GbmBin => "gbm_bin",
+            Phase::GbmScan => "gbm_scan",
+            Phase::StageApply => "stage_apply",
+            Phase::TreeWrite => "tree_write",
+            Phase::Recompute => "recompute",
+            Phase::DiffMerge => "diff_merge",
+            Phase::ShardCommit => "shard_commit",
+            Phase::NetDecode => "net_decode",
+            Phase::NetState => "net_state",
+            Phase::NetEncode => "net_encode",
+            Phase::NetAccept => "net_accept",
+            Phase::Commit => "commit",
+        }
+    }
+
+    /// Name for a raw id, tolerating ids this build does not know.
+    pub fn name_of(id: u16) -> &'static str {
+        Phase::from_id(id).map_or("unknown", Phase::name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_ids_round_trip_and_are_dense() {
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(p.id() as usize, i, "{p:?} id not dense");
+            assert_eq!(Phase::from_id(p.id()), Some(*p));
+            assert!(!p.name().is_empty());
+        }
+        assert_eq!(Phase::from_id(Phase::ALL.len() as u16), None);
+        assert_eq!(Phase::name_of(999), "unknown");
+    }
+}

@@ -1,0 +1,530 @@
+//! Span capture: fixed-size per-worker buffers fanned in at epoch
+//! boundaries through the claims machinery.
+//!
+//! The shape mirrors the pool's own fan-out/fan-in: a [`Tracer`]
+//! (owned by whoever owns the epoch — an engine, a session, the net
+//! state thread) hands each worker a private [`SpanSink`] through a
+//! [`TraceFan`]; workers stamp [`SpanRecord`]s into their sink with no
+//! locks and no allocation (the buffer is a `Box<[SpanRecord]>` filled
+//! by cursor — the `obs-no-hot-alloc` lint rule bans growth calls in
+//! the record path); after the join barrier the tracer absorbs every
+//! sink back, appends the spans to its master timeline, and recycles
+//! the buffers for the next epoch. A disabled tracer hands out
+//! zero-capacity sinks whose `start` is `0` and whose `record` is a
+//! single branch — no clock read, no write, no allocation.
+
+use crate::exec::claims::{FanSlots, TakeCells};
+
+use super::clock;
+use super::Phase;
+
+/// Worker id used for spans recorded on the master thread (the
+/// serial parts of a commit, whole-commit envelopes, net stages).
+pub const MASTER_WORKER: u16 = u16::MAX;
+
+/// One traced span: a phase of work on one worker's timeline.
+/// `phase` is a [`Phase`] id kept raw so records survive taxonomy
+/// growth; times come from [`clock::now_ns`] and are comparable
+/// across every record in a process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SpanRecord {
+    /// [`Phase`] id ([`Phase::name_of`] renders it).
+    pub phase: u16,
+    /// Worker/shard lane, or [`MASTER_WORKER`].
+    pub worker: u16,
+    /// Span start, nanoseconds ([`clock::now_ns`] domain).
+    pub t0_ns: u64,
+    /// Span end, same domain; `>= t0_ns` for clock-stamped records.
+    pub t1_ns: u64,
+    /// Work-proportional item count (endpoints sorted, pairs checked,
+    /// frames decoded — phase-specific, see the taxonomy docs).
+    pub items: u64,
+}
+
+impl SpanRecord {
+    /// All-zero record (buffer fill value).
+    pub const ZERO: SpanRecord = SpanRecord {
+        phase: 0,
+        worker: 0,
+        t0_ns: 0,
+        t1_ns: 0,
+        items: 0,
+    };
+
+    /// Span duration in nanoseconds (0 for malformed records).
+    #[inline]
+    pub fn dur_ns(&self) -> u64 {
+        self.t1_ns.saturating_sub(self.t0_ns)
+    }
+}
+
+/// A worker-private span buffer: fixed capacity decided at
+/// construction, overflow drops (and counts) rather than grows, so
+/// recording is branch + store. Capacity 0 is the disabled sink:
+/// [`start`](Self::start) skips the clock read and
+/// [`record`](Self::record) is one branch.
+#[derive(Debug)]
+pub struct SpanSink {
+    buf: Box<[SpanRecord]>,
+    len: usize,
+    dropped: u64,
+}
+
+impl Default for SpanSink {
+    /// The disabled sink — so structs embedding one (e.g.
+    /// [`MatchScratch`](crate::core::scratch::MatchScratch)) can keep
+    /// deriving `Default` with tracing off.
+    fn default() -> SpanSink {
+        SpanSink::disabled()
+    }
+}
+
+impl SpanSink {
+    /// A sink holding up to `cap` spans between drains.
+    pub fn with_capacity(cap: usize) -> SpanSink {
+        SpanSink {
+            buf: vec![SpanRecord::ZERO; cap].into_boxed_slice(),
+            len: 0,
+            dropped: 0,
+        }
+    }
+
+    /// The no-op sink (capacity 0 — an empty `Box<[T]>` does not
+    /// allocate, so disabled tracing costs nothing to construct).
+    pub fn disabled() -> SpanSink {
+        SpanSink::with_capacity(0)
+    }
+
+    /// Whether this sink captures anything at all.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        !self.buf.is_empty()
+    }
+
+    /// Maximum spans held between drains.
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Read the clock for a span about to begin — or skip the clock
+    /// entirely and return 0 when disabled.
+    #[inline]
+    pub fn start(&self) -> u64 {
+        if self.is_enabled() {
+            clock::now_ns()
+        } else {
+            0
+        }
+    }
+
+    /// Close a span begun at [`start`](Self::start): end-timestamps it
+    /// now and appends it. Disabled sinks return after one branch.
+    #[inline]
+    pub fn record(&mut self, phase: Phase, worker: u16, t0_ns: u64, items: u64) {
+        if self.buf.is_empty() {
+            return;
+        }
+        let t1_ns = clock::now_ns();
+        self.record_raw(SpanRecord {
+            phase: phase.id(),
+            worker,
+            t0_ns,
+            t1_ns,
+            items,
+        });
+    }
+
+    /// Append a pre-built record (tests and callers that timed the
+    /// work themselves). Full or disabled sinks count a drop instead.
+    #[inline]
+    pub fn record_raw(&mut self, rec: SpanRecord) {
+        if self.len < self.buf.len() {
+            self.buf[self.len] = rec;
+            self.len += 1;
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// The spans recorded since the last drain, in record order.
+    pub fn records(&self) -> &[SpanRecord] {
+        &self.buf[..self.len]
+    }
+
+    /// Spans lost to a full buffer since the last drain.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Move every record into `out`, reset the cursor, and return the
+    /// drop count (also reset). The buffer keeps its capacity.
+    pub fn drain_into(&mut self, out: &mut Vec<SpanRecord>) -> u64 {
+        out.extend_from_slice(&self.buf[..self.len]);
+        self.len = 0;
+        std::mem::take(&mut self.dropped)
+    }
+
+    /// Discard buffered records and the drop count.
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.dropped = 0;
+    }
+}
+
+/// One epoch's fan-out of sinks to workers. Worker `p` borrows its
+/// private sink with [`with`](Self::with); the claims machinery
+/// ([`TakeCells`] out, [`FanSlots`] back) makes "each lane touched by
+/// exactly one worker" a checked invariant under `race-check` instead
+/// of a comment. The barrier between the workers and
+/// [`Tracer::absorb`] is the caller's fork-join region, exactly as for
+/// every other fan in the crate.
+pub struct TraceFan {
+    cells: TakeCells<SpanSink>,
+    slots: FanSlots<SpanSink>,
+}
+
+impl TraceFan {
+    fn new(sinks: Vec<SpanSink>) -> TraceFan {
+        let n = sinks.len();
+        TraceFan {
+            cells: TakeCells::new(sinks, "obs::trace::fan"),
+            slots: FanSlots::new(n, "obs::trace::fan"),
+        }
+    }
+
+    /// Number of worker lanes (0 for a disabled tracer's fan).
+    pub fn lanes(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Run `f` with worker `p`'s private sink. Each lane must be used
+    /// at most once per fan (a second use panics — deterministically,
+    /// with a site diagnostic under `race-check`). On a disabled
+    /// tracer's fan (no lanes) `f` gets a throwaway no-op sink, so
+    /// call sites need no enabled/disabled branches.
+    pub fn with<R>(&self, p: usize, f: impl FnOnce(&mut SpanSink) -> R) -> R {
+        if self.cells.is_empty() {
+            let mut off = SpanSink::disabled();
+            return f(&mut off);
+        }
+        // SAFETY: lane p is taken at most once per fan — a repeat take
+        // panics in the Option backstop (and in the claim word under
+        // race-check) before any aliased access can happen.
+        let mut sink = unsafe { self.cells.take(p) };
+        let r = f(&mut sink);
+        // SAFETY: slot p is put exactly once, by the same caller that
+        // took cell p; the caller's fork-join barrier orders this put
+        // before the absorb that reads it.
+        unsafe { self.slots.put(p, sink) };
+        r
+    }
+
+    /// Recover every sink — used lanes (from the return slots) and
+    /// never-used lanes (still in the cells) — after the join barrier.
+    fn into_sinks(self) -> impl Iterator<Item = SpanSink> {
+        self.slots
+            .into_values()
+            .flatten()
+            .chain(self.cells.into_remaining())
+    }
+}
+
+/// The epoch-level span collector: owns the master timeline, hands
+/// out per-worker sinks ([`fan`](Self::fan)), absorbs them back at
+/// the epoch boundary, and recycles their buffers so steady-state
+/// tracing allocates nothing per epoch.
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: bool,
+    cap_per_worker: usize,
+    records: Vec<SpanRecord>,
+    dropped: u64,
+    pool: Vec<SpanSink>,
+}
+
+/// Default per-worker sink capacity (spans per epoch per worker).
+pub const DEFAULT_SINK_CAP: usize = 4096;
+
+impl Tracer {
+    /// The no-op tracer: every sink it hands out is disabled, every
+    /// span call is a branch.
+    pub fn disabled() -> Tracer {
+        Tracer {
+            enabled: false,
+            cap_per_worker: 0,
+            records: Vec::new(),
+            dropped: 0,
+            pool: Vec::new(),
+        }
+    }
+
+    /// A live tracer whose per-worker sinks hold `cap_per_worker`
+    /// spans between epoch drains.
+    pub fn enabled(cap_per_worker: usize) -> Tracer {
+        Tracer {
+            enabled: true,
+            cap_per_worker: cap_per_worker.max(1),
+            records: Vec::new(),
+            dropped: 0,
+            pool: Vec::new(),
+        }
+    }
+
+    /// Construct from a boolean knob ([`DEFAULT_SINK_CAP`] when on).
+    pub fn new(on: bool) -> Tracer {
+        if on {
+            Tracer::enabled(DEFAULT_SINK_CAP)
+        } else {
+            Tracer::disabled()
+        }
+    }
+
+    /// Whether spans are being captured.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Clock read for a master-side span (0 when disabled, like
+    /// [`SpanSink::start`]).
+    #[inline]
+    pub fn start(&self) -> u64 {
+        if self.enabled {
+            clock::now_ns()
+        } else {
+            0
+        }
+    }
+
+    /// Close a master-lane span begun at [`start`](Self::start).
+    pub fn span(&mut self, phase: Phase, t0_ns: u64, items: u64) {
+        if !self.enabled {
+            return;
+        }
+        let t1_ns = clock::now_ns();
+        self.records.push(SpanRecord {
+            phase: phase.id(),
+            worker: MASTER_WORKER,
+            t0_ns,
+            t1_ns,
+            items,
+        });
+    }
+
+    /// Append a fully specified span (callers that timed the work
+    /// themselves and know the lane — shard commits, net stages).
+    pub fn span_at(&mut self, phase: Phase, worker: u16, t0_ns: u64, t1_ns: u64, items: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.records.push(SpanRecord {
+            phase: phase.id(),
+            worker,
+            t0_ns,
+            t1_ns,
+            items,
+        });
+    }
+
+    /// A single worker sink: recycled from the pool when one is
+    /// available, freshly allocated otherwise, disabled when the
+    /// tracer is. Return it via [`absorb_sink`](Self::absorb_sink).
+    pub fn make_sink(&mut self) -> SpanSink {
+        if !self.enabled {
+            return SpanSink::disabled();
+        }
+        match self.pool.pop() {
+            Some(s) => s,
+            None => SpanSink::with_capacity(self.cap_per_worker),
+        }
+    }
+
+    /// Drain `sink` into the master timeline and recycle its buffer.
+    pub fn absorb_sink(&mut self, mut sink: SpanSink) {
+        self.dropped += sink.drain_into(&mut self.records);
+        if sink.capacity() == self.cap_per_worker && self.enabled {
+            self.pool.push(sink);
+        }
+    }
+
+    /// Drain a caller-retained sink (one embedded in long-lived
+    /// scratch) without taking ownership of its buffer.
+    pub fn absorb_from(&mut self, sink: &mut SpanSink) {
+        self.dropped += sink.drain_into(&mut self.records);
+    }
+
+    /// Fan out `n` worker lanes for one parallel region. Disabled
+    /// tracers fan zero lanes (and [`TraceFan::with`] no-ops), so the
+    /// disabled path allocates nothing.
+    pub fn fan(&mut self, n: usize) -> TraceFan {
+        if !self.enabled {
+            return TraceFan::new(Vec::new());
+        }
+        let sinks: Vec<SpanSink> = (0..n).map(|_| self.make_sink()).collect();
+        TraceFan::new(sinks)
+    }
+
+    /// Absorb every lane of a fan after its join barrier: spans are
+    /// appended to the master timeline, buffers recycled.
+    pub fn absorb(&mut self, fan: TraceFan) {
+        for sink in fan.into_sinks() {
+            self.absorb_sink(sink);
+        }
+    }
+
+    /// The master timeline so far (fan-in order: master spans in call
+    /// order, worker spans grouped per absorb).
+    pub fn records(&self) -> &[SpanRecord] {
+        &self.records
+    }
+
+    /// Total spans lost to full sinks.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Take the timeline (e.g. to export), leaving the tracer running.
+    pub fn drain(&mut self) -> Vec<SpanRecord> {
+        std::mem::take(&mut self.records)
+    }
+
+    /// Discard the timeline and drop count.
+    pub fn clear(&mut self) {
+        self.records.clear();
+        self.dropped = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::pool::scoped_region;
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        let mut s = SpanSink::disabled();
+        assert!(!s.is_enabled());
+        assert_eq!(s.start(), 0);
+        s.record(Phase::Sort, 3, 0, 10);
+        assert!(s.records().is_empty());
+        assert_eq!(s.dropped(), 0);
+    }
+
+    #[test]
+    fn sink_records_and_drops_at_capacity() {
+        let mut s = SpanSink::with_capacity(2);
+        let t0 = s.start();
+        s.record(Phase::Sweep, 1, t0, 5);
+        s.record(Phase::Sort, 1, t0, 6);
+        s.record(Phase::Residual, 1, t0, 7); // full → dropped
+        assert_eq!(s.records().len(), 2);
+        assert_eq!(s.dropped(), 1);
+        assert_eq!(s.records()[0].phase, Phase::Sweep.id());
+        assert!(s.records()[0].t1_ns >= s.records()[0].t0_ns);
+
+        let mut out = Vec::new();
+        assert_eq!(s.drain_into(&mut out), 1);
+        assert_eq!(out.len(), 2);
+        assert!(s.records().is_empty());
+        assert_eq!(s.dropped(), 0);
+        assert_eq!(s.capacity(), 2, "drain keeps the buffer");
+    }
+
+    #[test]
+    fn tracer_master_spans_use_the_master_lane() {
+        let mut t = Tracer::enabled(8);
+        let t0 = t.start();
+        t.span(Phase::Commit, t0, 100);
+        t.span_at(Phase::ShardCommit, 3, 10, 20, 7);
+        assert_eq!(t.records().len(), 2);
+        assert_eq!(t.records()[0].worker, MASTER_WORKER);
+        assert_eq!(t.records()[1].worker, 3);
+        assert_eq!(t.records()[1].dur_ns(), 10);
+
+        let mut off = Tracer::disabled();
+        assert_eq!(off.start(), 0);
+        off.span(Phase::Commit, 0, 1);
+        off.span_at(Phase::Commit, 0, 0, 9, 1);
+        assert!(off.records().is_empty());
+    }
+
+    #[test]
+    fn fan_absorb_collects_used_and_unused_lanes() {
+        let mut t = Tracer::enabled(16);
+        let fan = t.fan(4);
+        assert_eq!(fan.lanes(), 4);
+        // Only lanes 0 and 2 do any work this epoch.
+        fan.with(0, |s| s.record_raw(SpanRecord { phase: 0, worker: 0, t0_ns: 1, t1_ns: 2, items: 1 }));
+        fan.with(2, |s| s.record_raw(SpanRecord { phase: 1, worker: 2, t0_ns: 3, t1_ns: 9, items: 2 }));
+        t.absorb(fan);
+        assert_eq!(t.records().len(), 2);
+        assert_eq!(t.pool.len(), 4, "all four buffers recycled");
+
+        // The next epoch reuses the pooled buffers — no new allocation.
+        let fan2 = t.fan(4);
+        assert_eq!(t.pool.len(), 0);
+        t.absorb(fan2);
+        assert_eq!(t.pool.len(), 4);
+    }
+
+    #[test]
+    fn disabled_tracer_fan_is_a_no_op_everywhere() {
+        let mut t = Tracer::disabled();
+        let fan = t.fan(8);
+        assert_eq!(fan.lanes(), 0);
+        let r = fan.with(5, |s| {
+            assert!(!s.is_enabled());
+            s.record(Phase::Sort, 5, s.start(), 1);
+            42
+        });
+        assert_eq!(r, 42);
+        t.absorb(fan);
+        assert!(t.records().is_empty());
+    }
+
+    /// Canonical order for comparing timelines across worker counts.
+    fn canon(mut v: Vec<SpanRecord>) -> Vec<SpanRecord> {
+        v.sort_by_key(|r| (r.worker, r.t0_ns, r.phase, r.items));
+        v
+    }
+
+    /// Satellite: span fan-in is bit-stable across P ∈ {1, 2, 4, 8} —
+    /// the same deterministic per-lane records come back identical no
+    /// matter how many workers wrote them (and under `race-check` the
+    /// claims machinery verifies each lane was touched exactly once).
+    #[test]
+    fn fan_in_is_bit_stable_across_worker_counts() {
+        const LANES: usize = 8;
+        let run = |nthreads: usize| -> Vec<SpanRecord> {
+            let mut t = Tracer::enabled(64);
+            let fan = t.fan(LANES);
+            {
+                let fan = &fan;
+                scoped_region(nthreads, |p| {
+                    // Static lane assignment: worker p handles lanes
+                    // p, p+nthreads, … so every P covers all lanes.
+                    for lane in (p..LANES).step_by(nthreads) {
+                        fan.with(lane, |s| {
+                            for k in 0..10u64 {
+                                s.record_raw(SpanRecord {
+                                    phase: (k % 3) as u16,
+                                    worker: lane as u16,
+                                    t0_ns: 100 * lane as u64 + k,
+                                    t1_ns: 100 * lane as u64 + k + 5,
+                                    items: k * k,
+                                });
+                            }
+                        });
+                    }
+                });
+            }
+            t.absorb(fan);
+            canon(t.drain())
+        };
+        let want = run(1);
+        assert_eq!(want.len(), LANES * 10);
+        for p in [2usize, 4, 8] {
+            assert_eq!(run(p), want, "P={p} fan-in differs from serial");
+        }
+    }
+}

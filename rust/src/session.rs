@@ -76,6 +76,11 @@ pub struct SessionParams {
     /// apply — the cold baseline `benches/abl_session.rs` measures
     /// against.
     pub reuse_scratch: bool,
+    /// Capture commit phase spans ([`crate::obs`]): stage-apply, tree
+    /// writes, recompute, diff-merge, plus a whole-commit envelope.
+    /// Off by default — the disabled path is a branch per phase. Read
+    /// the timeline with [`DdmSession::drain_trace`].
+    pub trace: bool,
 }
 
 impl Default for SessionParams {
@@ -85,6 +90,7 @@ impl Default for SessionParams {
             batch_threshold: 4096,
             parallel_cutoff: 64,
             reuse_scratch: true,
+            trace: false,
         }
     }
 }
@@ -149,6 +155,9 @@ pub struct DdmSession {
     /// scratch) — the dominant per-commit allocations on the steady
     /// state. See [`SessionParams::reuse_scratch`].
     scratch: MatchScratch,
+    /// Commit phase-span capture ([`SessionParams::trace`]; disabled
+    /// tracers cost one branch per phase boundary).
+    tracer: crate::obs::Tracer,
 }
 
 impl DdmSession {
@@ -175,7 +184,25 @@ impl DdmSession {
             acc_removed: HashSet::new(),
             epoch: 0,
             scratch: MatchScratch::new(),
+            tracer: crate::obs::Tracer::new(params.trace),
         }
+    }
+
+    /// Whether this session is capturing commit phase spans.
+    pub fn trace_enabled(&self) -> bool {
+        self.tracer.is_enabled()
+    }
+
+    /// Take the phase spans recorded since the last drain (empty when
+    /// built without [`SessionParams::trace`]). Master-lane spans:
+    /// the commit envelope and each phase, in record order.
+    pub fn drain_trace(&mut self) -> Vec<crate::obs::SpanRecord> {
+        self.tracer.drain()
+    }
+
+    /// Spans lost to full trace buffers since construction.
+    pub fn trace_dropped(&self) -> u64 {
+        self.tracer.dropped()
     }
 
     /// Capacity snapshot of the session's reusable scratch — equal
@@ -310,12 +337,21 @@ impl DdmSession {
     /// Apply all staged ops and close the epoch, returning the
     /// intersection delta relative to the previous epoch.
     pub fn commit(&mut self) -> MatchDiff {
+        let t_commit = self.tracer.start();
         self.apply_pending();
         self.epoch += 1;
+        // The accumulator drain + sort is diff assembly — charge it to
+        // the same phase as apply_pending's phase-C diff work, so the
+        // phase totals tile the whole commit envelope.
+        let t_drain = self.tracer.start();
         let mut added: PairVec = self.acc_added.drain().map(unpack_pair).collect();
         let mut removed: PairVec = self.acc_removed.drain().map(unpack_pair).collect();
         added.sort_unstable();
         removed.sort_unstable();
+        let churn = (added.len() + removed.len()) as u64;
+        self.tracer
+            .span(crate::obs::Phase::DiffMerge, t_drain, churn);
+        self.tracer.span(crate::obs::Phase::Commit, t_commit, churn);
         MatchDiff {
             epoch: self.epoch,
             added,
@@ -332,10 +368,14 @@ impl DdmSession {
         }
         // Already coalesced at stage time: key → `Some(rect)` upsert /
         // `None` remove, per side.
+        let t_stage = self.tracer.start();
         let sub_ops = std::mem::take(&mut self.pending_subs);
         let upd_ops = std::mem::take(&mut self.pending_upds);
         let touched_count = sub_ops.len() + upd_ops.len();
         let par = self.nthreads > 1 && touched_count >= self.params.parallel_cutoff;
+        self.tracer
+            .span(crate::obs::Phase::StageApply, t_stage, touched_count as u64);
+        let t_tree = self.tracer.start();
 
         // Phase A: write the 2d per-dimension trees (each tree is an
         // independent job; parallel over trees for big batches — the
@@ -376,6 +416,9 @@ impl DdmSession {
                 apply_dim(tree, k, &upd_ops);
             }
         }
+        self.tracer
+            .span(crate::obs::Phase::TreeWrite, t_tree, touched_count as u64);
+        let t_recompute = self.tracer.start();
 
         // Phase B: recompute the post-apply overlap set of every
         // touched region (read-only tree queries; parallel for big
@@ -423,6 +466,10 @@ impl DdmSession {
                 })
                 .collect()
         };
+
+        self.tracer
+            .span(crate::obs::Phase::Recompute, t_recompute, touched_count as u64);
+        let t_diff = self.tracer.start();
 
         // Phase C: diff against the retained pair set and fold into the
         // epoch accumulator (serial; O(|diff|) set updates). The
@@ -538,6 +585,11 @@ impl DdmSession {
         if !self.params.reuse_scratch {
             self.scratch = MatchScratch::new();
         }
+        self.tracer.span(
+            crate::obs::Phase::DiffMerge,
+            t_diff,
+            (self.acc_added.len() + self.acc_removed.len()) as u64,
+        );
     }
 
     /// Fold one pair appearance/disappearance into the epoch

@@ -226,6 +226,35 @@ impl AnySession {
             AnySession::Sharded(s) => Some(s.imbalance()),
         }
     }
+
+    /// Whether phase spans are being captured
+    /// ([`SessionParams::trace`](crate::session::SessionParams::trace)).
+    pub fn trace_enabled(&self) -> bool {
+        match self {
+            AnySession::Single(s) => s.trace_enabled(),
+            AnySession::Sharded(s) => s.trace_enabled(),
+        }
+    }
+
+    /// Take the phase spans recorded since the last drain (empty when
+    /// tracing is off). Single sessions put commit phases on the
+    /// master lane; sharded sessions put each shard's phases on lane =
+    /// shard id under a per-shard
+    /// [`ShardCommit`](crate::obs::Phase::ShardCommit) envelope.
+    pub fn drain_trace(&mut self) -> Vec<crate::obs::SpanRecord> {
+        match self {
+            AnySession::Single(s) => s.drain_trace(),
+            AnySession::Sharded(s) => s.drain_trace(),
+        }
+    }
+
+    /// Spans lost to full trace buffers since construction.
+    pub fn trace_dropped(&self) -> u64 {
+        match self {
+            AnySession::Single(s) => s.trace_dropped(),
+            AnySession::Sharded(s) => s.trace_dropped(),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -77,6 +77,12 @@ pub struct ShardStats {
     pub last_ops: usize,
     /// Shard-local diff churn (|added| + |removed|) of the last epoch.
     pub last_churn: usize,
+    /// Wall time of this shard's inner commit in the last epoch,
+    /// nanoseconds ([`crate::obs::clock::now_ns`] domain; measured on
+    /// every commit, traced or not). `0` before the first commit. The
+    /// timing half of the imbalance story:
+    /// [`ShardedSession::commit_time_imbalance_of`] reads it.
+    pub last_commit_ns: u64,
 }
 
 /// A spatially sharded [`DdmSession`]: staged ops are routed to
@@ -117,6 +123,16 @@ pub struct ShardedSession {
     ops_since_commit: Vec<usize>,
     last_epoch_ops: Vec<usize>,
     last_epoch_churn: Vec<usize>,
+    /// Wall time of each shard's inner commit in the last epoch
+    /// (measured on every commit; feeds [`ShardStats::last_commit_ns`]
+    /// and the commit-time imbalance gauge).
+    last_epoch_commit_ns: Vec<u64>,
+    /// Shard-level span timeline ([`SessionParams::trace`]): one
+    /// [`Phase::ShardCommit`](crate::obs::Phase::ShardCommit) span per
+    /// shard per epoch on lane = shard id, the inner sessions' phase
+    /// spans remapped onto the same lane, plus master-lane merge and
+    /// commit-envelope spans.
+    tracer: crate::obs::Tracer,
 }
 
 impl ShardedSession {
@@ -156,6 +172,8 @@ impl ShardedSession {
             ops_since_commit: vec![0; shards],
             last_epoch_ops: vec![0; shards],
             last_epoch_churn: vec![0; shards],
+            last_epoch_commit_ns: vec![0; shards],
+            tracer: crate::obs::Tracer::new(params.trace),
         }
     }
 
@@ -365,8 +383,21 @@ impl ShardedSession {
     /// in parallel, and merge the per-shard diffs into one globally
     /// deduplicated [`MatchDiff`].
     pub fn commit(&mut self) -> MatchDiff {
+        let t_commit = self.tracer.start();
         self.route_pending();
-        let diffs = self.fan(|sess| sess.commit());
+        // Time every inner commit — two clock reads per shard, cheap
+        // enough to keep on even untraced, so the commit-time
+        // imbalance gauge always sees real durations — and, when
+        // tracing, carry each shard's drained phase spans back with
+        // its diff.
+        let traced = self.tracer.is_enabled();
+        let results = self.fan(|sess| {
+            let t0 = crate::obs::clock::now_ns();
+            let diff = sess.commit();
+            let t1 = crate::obs::clock::now_ns();
+            let spans = if traced { sess.drain_trace() } else { Vec::new() };
+            (diff, t0, t1, spans)
+        });
         self.epoch += 1;
         self.last_epoch_ops = std::mem::replace(
             &mut self.ops_since_commit,
@@ -375,9 +406,31 @@ impl ShardedSession {
 
         // Fold every shard's diff through the global refcounts; only
         // 0 ↔ >0 transitions surface.
+        let t_merge = self.tracer.start();
         let mut delta: HashMap<u64, i32> = HashMap::new();
-        for (i, diff) in diffs.iter().enumerate() {
+        for (i, (diff, t0, t1, spans)) in results.into_iter().enumerate() {
             self.last_epoch_churn[i] = diff.churn();
+            self.last_epoch_commit_ns[i] = t1.saturating_sub(t0);
+            if traced {
+                // The inner sessions' phase spans were stamped on
+                // *their* master lane, which means nothing outside
+                // their session — remap them onto lane = shard id so
+                // the trace shows each shard's sub-phases under its
+                // own ShardCommit envelope.
+                let lane = i as u16;
+                for r in spans {
+                    if let Some(p) = crate::obs::Phase::from_id(r.phase) {
+                        self.tracer.span_at(p, lane, r.t0_ns, r.t1_ns, r.items);
+                    }
+                }
+                self.tracer.span_at(
+                    crate::obs::Phase::ShardCommit,
+                    lane,
+                    t0,
+                    t1,
+                    diff.churn() as u64,
+                );
+            }
             for &(s, u) in &diff.added {
                 *delta.entry(pack_pair(s, u)).or_insert(0) += 1;
             }
@@ -407,6 +460,9 @@ impl ShardedSession {
         }
         added.sort_unstable();
         removed.sort_unstable();
+        let churn = (added.len() + removed.len()) as u64;
+        self.tracer.span(crate::obs::Phase::DiffMerge, t_merge, churn);
+        self.tracer.span(crate::obs::Phase::Commit, t_commit, churn);
         self.flushed_since_commit = false;
         MatchDiff {
             epoch: self.epoch,
@@ -530,6 +586,7 @@ impl ShardedSession {
                     retained_pairs: sess.retained_pair_count(),
                     last_ops: self.last_epoch_ops[i],
                     last_churn: self.last_epoch_churn[i],
+                    last_commit_ns: self.last_epoch_commit_ns[i],
                 }
             })
             .collect()
@@ -554,6 +611,42 @@ impl ShardedSession {
     /// snapshot should use [`imbalance_of`](Self::imbalance_of)).
     pub fn imbalance(&self) -> f64 {
         Self::imbalance_of(&self.shard_stats())
+    }
+
+    /// Commit-**time** imbalance over a stats snapshot: max over
+    /// shards of (last inner-commit wall time) divided by the mean —
+    /// the measured counterpart of the region-count gauge
+    /// [`imbalance_of`](Self::imbalance_of), answering "did the epoch
+    /// actually parallelize?" rather than "is the data spread out?".
+    /// `None` until a commit has run (all durations still zero). Pure
+    /// arithmetic: no shard locks are taken.
+    pub fn commit_time_imbalance_of(stats: &[ShardStats]) -> Option<f64> {
+        let total: u64 = stats.iter().map(|s| s.last_commit_ns).sum();
+        if total == 0 {
+            return None;
+        }
+        let mean = total as f64 / stats.len() as f64;
+        let max = stats.iter().map(|s| s.last_commit_ns).max().unwrap_or(0);
+        Some(max as f64 / mean)
+    }
+
+    /// Whether this session is capturing shard-level phase spans.
+    pub fn trace_enabled(&self) -> bool {
+        self.tracer.is_enabled()
+    }
+
+    /// Take the spans recorded since the last drain (empty when built
+    /// without [`SessionParams::trace`]): per-shard
+    /// [`ShardCommit`](crate::obs::Phase::ShardCommit) envelopes and
+    /// remapped inner phase spans on lane = shard id, merge and
+    /// whole-commit spans on the master lane.
+    pub fn drain_trace(&mut self) -> Vec<crate::obs::SpanRecord> {
+        self.tracer.drain()
+    }
+
+    /// Spans lost to full trace buffers since construction.
+    pub fn trace_dropped(&self) -> u64 {
+        self.tracer.dropped()
     }
 }
 
@@ -804,6 +897,79 @@ mod tests {
         let d = sess.commit();
         assert_eq!(d.added, vec![(1, 2)], "intra-epoch churn cancels to one add");
         assert!(d.removed.is_empty());
+    }
+
+    /// Traced sharded commits put a ShardCommit span on every shard's
+    /// lane, remap the inner sessions' phase spans onto the same lane,
+    /// and close master-lane merge + commit envelopes; the measured
+    /// per-shard durations feed the commit-time imbalance gauge (which
+    /// works untraced too).
+    #[test]
+    fn traced_commit_emits_shard_lane_spans_and_timing() {
+        use crate::obs::{trace::MASTER_WORKER, Phase};
+        let part = SpacePartitioner::uniform(3, 0, Interval::new(0.0, 90.0));
+        let mut sess = DdmEngine::builder()
+            .threads(2)
+            .parallel_cutoff(1)
+            .trace(true)
+            .build()
+            .sharded_session_with(1, part);
+        assert!(sess.trace_enabled());
+        sess.upsert_subscription(1, &[Interval::new(0.0, 90.0)]); // all shards
+        sess.upsert_update(2, &[Interval::new(40.0, 50.0)]);
+        sess.commit();
+        let spans = sess.drain_trace();
+        assert_eq!(sess.trace_dropped(), 0);
+        for shard in 0u16..3 {
+            assert!(
+                spans
+                    .iter()
+                    .any(|r| r.phase == Phase::ShardCommit.id() && r.worker == shard),
+                "no ShardCommit span on lane {shard}: {spans:?}"
+            );
+            // Inner commit envelopes were remapped off the master lane.
+            assert!(
+                spans
+                    .iter()
+                    .any(|r| r.phase == Phase::Commit.id() && r.worker == shard),
+                "no remapped inner Commit span on lane {shard}"
+            );
+        }
+        let master = |p: Phase| {
+            spans
+                .iter()
+                .any(|r| r.phase == p.id() && r.worker == MASTER_WORKER)
+        };
+        assert!(master(Phase::DiffMerge) && master(Phase::Commit));
+        // Every ShardCommit span sits inside the master Commit envelope.
+        let env = spans
+            .iter()
+            .find(|r| r.phase == Phase::Commit.id() && r.worker == MASTER_WORKER)
+            .unwrap();
+        for r in spans.iter().filter(|r| r.phase == Phase::ShardCommit.id()) {
+            assert!(r.t0_ns >= env.t0_ns && r.t1_ns <= env.t1_ns, "{r:?} outside {env:?}");
+        }
+        // Second drain is empty; timing survives in the stats.
+        assert!(sess.drain_trace().is_empty());
+        let stats = sess.shard_stats();
+        assert!(stats.iter().any(|s| s.last_commit_ns > 0));
+        let im = ShardedSession::commit_time_imbalance_of(&stats).unwrap();
+        assert!(im >= 1.0 && im <= stats.len() as f64, "{im}");
+
+        // Untraced sessions still measure commit time, capture nothing.
+        let mut off = sharded(2, 1, 100.0);
+        assert!(!off.trace_enabled());
+        off.upsert_subscription(1, &[Interval::new(10.0, 20.0)]);
+        off.commit();
+        assert!(off.drain_trace().is_empty());
+        assert!(off.shard_stats().iter().any(|s| s.last_commit_ns > 0));
+        assert!(ShardedSession::commit_time_imbalance_of(&off.shard_stats()).is_some());
+    }
+
+    #[test]
+    fn commit_time_imbalance_is_none_before_any_commit() {
+        let sess = sharded(4, 1, 100.0);
+        assert!(ShardedSession::commit_time_imbalance_of(&sess.shard_stats()).is_none());
     }
 
     #[test]

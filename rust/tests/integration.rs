@@ -754,3 +754,93 @@ fn radix_and_merge_engines_agree_end_to_end() {
         assert_eq!(per_sort[0], per_sort[1], "{algo:?} radix vs merge");
     }
 }
+
+/// Observability acceptance: with tracing on, the per-commit `commit`
+/// envelope spans must tile the wall-clock measured around each
+/// `commit()` call to within 10% (the envelope opens on commit's
+/// first statement and closes on its last, so it only undershoots by
+/// call overhead) — and with tracing off (the default), commits must
+/// record nothing at all.
+#[test]
+fn traced_commit_envelopes_cover_commit_wall() {
+    use ddm::obs::{phase_totals, Phase};
+    use ddm::workload::churn::{relocate, MoveScript};
+    use std::time::Instant;
+
+    let pool = Arc::new(ThreadPool::new(3));
+    let ap = AlphaParams {
+        n_total: 20_000,
+        alpha: 100.0,
+        space: 1e6,
+    };
+    let (mut subs, mut upds) = alpha_workload(0x0B5ACC, &ap);
+    let space_hi = ap.space;
+    let epochs = 4usize;
+
+    let engine = DdmEngine::builder()
+        .threads(3)
+        .pool(Arc::clone(&pool))
+        .trace(true)
+        .build();
+    let mut sess = engine.session(1);
+    assert!(sess.trace_enabled());
+    sess.load_dense_1d(&subs, &upds);
+
+    let mut script = MoveScript::new(0xC0B5);
+    let mut spans = Vec::new();
+    let mut wall = 0.0f64;
+    for epoch in 0..=epochs {
+        if epoch > 0 {
+            for _ in 0..1_000 {
+                let (sub_side, idx, frac) = script.next(subs.len(), upds.len());
+                if sub_side {
+                    let iv = relocate(&mut subs, idx, frac, space_hi);
+                    sess.upsert_subscription(idx as u32, &[iv]);
+                } else {
+                    let iv = relocate(&mut upds, idx, frac, space_hi);
+                    sess.upsert_update(idx as u32, &[iv]);
+                }
+            }
+        }
+        let t0 = Instant::now();
+        sess.commit();
+        wall += t0.elapsed().as_secs_f64();
+        spans.extend(sess.drain_trace());
+    }
+    assert_eq!(sess.trace_dropped(), 0, "span ring buffers overflowed");
+    assert!(sess.drain_trace().is_empty(), "drain_trace must drain");
+
+    let totals = phase_totals(&spans);
+    let (env_ns, env_count) = totals
+        .iter()
+        .find(|&&(p, ..)| p == Phase::Commit.id())
+        .map_or((0, 0), |&(_, ns, count, _)| (ns, count));
+    assert_eq!(
+        env_count,
+        (epochs + 1) as u64,
+        "one commit envelope per commit() call"
+    );
+    assert!(
+        totals.len() >= 3,
+        "expected interior phases besides the envelope, got {totals:?}"
+    );
+
+    let env_s = env_ns as f64 / 1e9;
+    assert!(
+        env_s >= wall * 0.90,
+        "commit envelopes ({env_s:.6}s) cover <90% of commit wall ({wall:.6}s)"
+    );
+    assert!(
+        env_s <= wall * 1.02,
+        "commit envelopes ({env_s:.6}s) exceed commit wall ({wall:.6}s)"
+    );
+
+    // Tracing off (the default): same workload, zero spans recorded.
+    let off = DdmEngine::builder().threads(3).pool(Arc::clone(&pool)).build();
+    let mut quiet = off.session(1);
+    assert!(!quiet.trace_enabled());
+    quiet.load_dense_1d(&subs, &upds);
+    quiet.commit();
+    assert!(quiet.drain_trace().is_empty(), "untraced session recorded spans");
+    assert_eq!(quiet.trace_dropped(), 0);
+}

@@ -11,12 +11,20 @@
 //!   - **hot-panic**: no `.unwrap()` / `.expect(` in hot-path modules
 //!     outside tests.
 //!   - **wallclock**: no `Instant::now` outside the measurement layer
-//!     (`bench/`, `coordinator/`, `main.rs`, `cli.rs`).
+//!     (`bench/`, `coordinator/`, `obs/`, `main.rs`, `cli.rs`).
 //!   - **pub-doc**: every `pub` item in `exec/` carries a `///` rustdoc.
 //!   - **wire-no-alloc-in-decode**: no `Vec::new` / `.to_vec()` /
 //!     `vec!` in `net/wire.rs` outside tests — the framing layer reads
 //!     zero-copy from `&[u8]`; containers are allocated one layer up in
 //!     `net/proto.rs` where counts have been bounds-checked.
+//!   - **obs-no-hot-alloc**: no growth calls (`.push(` / `.extend` /
+//!     `.reserve(` / `.to_vec()` / `vec!` / `with_capacity`) inside
+//!     the record-path functions of `obs/` files — any `fn` named
+//!     `start` or `record*`. Recording a span or a histogram sample
+//!     runs inside the phases being measured; an allocation there
+//!     perturbs the very latency it reports. Construction and drain
+//!     paths (`with_capacity`, `drain_into`, the tracer's master-lane
+//!     spans) are outside those fns and stay free to allocate.
 //!
 //!   Violations can be waived in place with a reason:
 //!   `// xlint: allow(<rule>): <reason>` on the offending line or in the
@@ -24,8 +32,14 @@
 //!   `// xlint: allow-file(<rule>): <reason>` anywhere in the file.
 //!
 //! * `cargo run -p xtask -- bench-snapshot` — runs the quick bench
-//!   workloads (same flags as CI) and reports the `BENCH_*.json`
-//!   artifacts they emit under `bench_results/`.
+//!   workloads (same flags as CI), reports the `BENCH_*.json`
+//!   artifacts they emit under `bench_results/`, and diffs each
+//!   artifact's column header against the baseline from before the
+//!   run — the committed `SCHEMA_<name>.json` files (header-only, no
+//!   measurements) plus any pre-existing `BENCH_<name>.json`. A
+//!   dropped column fails the snapshot (downstream tooling keys on
+//!   columns by name); new columns and new artifacts are reported as
+//!   informational drift.
 //!
 //! The lint is intentionally a line-oriented approximation, not a full
 //! parser: sources are first masked (string/char literals blanked,
@@ -38,14 +52,15 @@ use std::fs;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-/// The six lint rules. Names are what waivers reference.
-const RULES: [&str; 6] = [
+/// The seven lint rules. Names are what waivers reference.
+const RULES: [&str; 7] = [
     "safety-comment",
     "hot-lock",
     "hot-panic",
     "wallclock",
     "pub-doc",
     "wire-no-alloc-in-decode",
+    "obs-no-hot-alloc",
 ];
 
 /// Hot-path module prefixes: lock-free by design, so locks and panics
@@ -59,8 +74,19 @@ const HOT_PREFIXES: [&str; 5] = ["exec/", "algos/", "core/", "shard/", "net/"];
 const WIRE_FILE: &str = "net/wire.rs";
 
 /// Where `Instant::now` is legitimate: the measurement layer itself.
-const WALLCLOCK_ALLOW_PREFIXES: [&str; 2] = ["bench/", "coordinator/"];
+/// `obs/` joined when the tracing subsystem shipped — its clock seam
+/// (`obs::clock`) is where every other module's timestamps come from.
+const WALLCLOCK_ALLOW_PREFIXES: [&str; 3] = ["bench/", "coordinator/", "obs/"];
 const WALLCLOCK_ALLOW_FILES: [&str; 2] = ["main.rs", "cli.rs"];
+
+/// The observability tree, whose record-path fns must not allocate
+/// (see the `obs-no-hot-alloc` rule).
+const OBS_PREFIX: &str = "obs/";
+
+/// Growth calls banned inside `obs/` record-path fns: recording must
+/// never resize a container, or tracing perturbs what it measures.
+const OBS_GROWTH_TOKENS: [&str; 6] =
+    [".push(", ".extend", ".reserve(", ".to_vec()", "vec!", "with_capacity"];
 
 /// One lint finding, keyed by file-relative path and 1-based line.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -339,6 +365,69 @@ fn test_regions(lines: &[MaskedLine]) -> Vec<bool> {
     in_test
 }
 
+/// The identifier following `fn ` on a masked code line, if any
+/// (`pub fn record_raw(` → `record_raw`). Left word boundary is
+/// checked so identifiers merely ending in `fn` don't match.
+fn fn_name(code: &str) -> Option<&str> {
+    let at = code.find("fn ")?;
+    if at > 0 {
+        let b = code.as_bytes()[at - 1];
+        if b.is_ascii_alphanumeric() || b == b'_' {
+            return None;
+        }
+    }
+    let rest = code[at + 3..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_alphanumeric() || c == '_'))
+        .unwrap_or(rest.len());
+    (end > 0).then(|| &rest[..end])
+}
+
+/// Mark the lines inside record-path function bodies: any `fn` named
+/// `start` or `record*`. These are the per-event hot functions the
+/// `obs-no-hot-alloc` rule guards; a region runs from the signature
+/// line through the matching close brace (brace-counted, like
+/// [`test_regions`]; a trait declaration ending in `;` before any
+/// brace covers just the signature).
+fn record_fn_regions(lines: &[MaskedLine]) -> Vec<bool> {
+    let mut hot = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        let is_record = fn_name(&lines[i].code)
+            .is_some_and(|n| n == "start" || n.starts_with("record"));
+        if !is_record {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i32;
+        let mut opened = false;
+        let mut k = i;
+        while k < lines.len() {
+            for ch in lines[k].code.chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if !opened && lines[k].code.trim_end().ends_with(';') {
+                break;
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            k += 1;
+        }
+        let end = k.min(lines.len() - 1);
+        hot[i..=end].fill(true);
+        i = end + 1;
+    }
+    hot
+}
+
 /// Gather the comment context for a violation at `i`: the same-line
 /// comment plus the comment block directly above. The walk tolerates a
 /// few non-terminated code lines so the head of a multi-line statement
@@ -455,6 +544,12 @@ fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
     let wallclock_ok = WALLCLOCK_ALLOW_PREFIXES.iter().any(|p| rel.starts_with(p))
         || WALLCLOCK_ALLOW_FILES.contains(&rel);
     let wants_pub_doc = rel.starts_with("exec/");
+    let is_obs = rel.starts_with(OBS_PREFIX);
+    let record_hot = if is_obs {
+        record_fn_regions(&lines)
+    } else {
+        Vec::new()
+    };
 
     let mut out = Vec::new();
     let mut push = |line: usize, rule: &'static str, msg: String| {
@@ -537,11 +632,27 @@ fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
             }
         }
 
+        if is_obs && !in_test[i] && record_hot[i] {
+            for growth in OBS_GROWTH_TOKENS {
+                if code.contains(growth) {
+                    push(
+                        i,
+                        "obs-no-hot-alloc",
+                        format!(
+                            "`{growth}` inside an obs/ record-path fn (record/start must stay \
+                             allocation-free so tracing never perturbs what it measures)"
+                        ),
+                    );
+                }
+            }
+        }
+
         if !wallclock_ok && !in_test[i] && code.contains("Instant::now") {
             push(
                 i,
                 "wallclock",
-                "`Instant::now` outside the measurement layer (bench/, coordinator/, main.rs, cli.rs)"
+                "`Instant::now` outside the measurement layer (bench/, coordinator/, obs/, \
+                 main.rs, cli.rs)"
                     .to_string(),
             );
         }
@@ -657,8 +768,84 @@ const SNAPSHOT_BENCHES: [(&str, &[&str]); 5] = [
     ("abl_net", &["--quick"]),
 ];
 
+/// Pull the `"header"` column list out of a `BENCH_*.json` artifact
+/// (written by `Table::write_json`). Tolerant string scan — the
+/// workspace carries no JSON parser, and header cells never contain
+/// brackets or escaped quotes.
+fn json_header(s: &str) -> Option<Vec<String>> {
+    let at = s.find("\"header\"")?;
+    let open = s[at..].find('[')? + at;
+    let close = s[open..].find(']')? + open;
+    let cells = s[open + 1..close]
+        .split('"')
+        .skip(1)
+        .step_by(2)
+        .map(str::to_string)
+        .collect();
+    Some(cells)
+}
+
+/// The bench name a `bench_results/` artifact refers to:
+/// `BENCH_abl_net.json` and `SCHEMA_abl_net.json` both key `abl_net`,
+/// so a fresh measurement diffs against the committed schema baseline.
+fn artifact_key(file_name: &str) -> String {
+    file_name
+        .trim_start_matches("BENCH_")
+        .trim_start_matches("SCHEMA_")
+        .trim_end_matches(".json")
+        .to_string()
+}
+
+/// Map of bench name → (path, header columns) across the candidate
+/// `bench_results/` dirs. `BENCH_*` measurements win over `SCHEMA_*`
+/// baselines for the same bench (`include_schema` is how the baseline
+/// pass picks the committed schema up when no measurement exists yet);
+/// unparseable files map to an empty header rather than being skipped,
+/// so they still show up in the diff.
+fn collect_headers(
+    dirs: &[PathBuf],
+    include_schema: bool,
+) -> std::collections::BTreeMap<String, (PathBuf, Vec<String>)> {
+    let mut out = std::collections::BTreeMap::new();
+    let mut schemas = Vec::new();
+    for dir in dirs {
+        if let Ok(entries) = fs::read_dir(dir) {
+            for entry in entries.flatten() {
+                let p = entry.path();
+                if !p.extension().is_some_and(|e| e == "json") {
+                    continue;
+                }
+                let name = p
+                    .file_name()
+                    .map(|n| n.to_string_lossy().into_owned())
+                    .unwrap_or_default();
+                let header = fs::read_to_string(&p)
+                    .ok()
+                    .and_then(|s| json_header(&s))
+                    .unwrap_or_default();
+                if name.starts_with("SCHEMA_") {
+                    if include_schema {
+                        schemas.push((artifact_key(&name), (p, header)));
+                    }
+                } else {
+                    out.insert(artifact_key(&name), (p, header));
+                }
+            }
+        }
+    }
+    for (key, val) in schemas {
+        out.entry(key).or_insert(val);
+    }
+    out
+}
+
 fn run_bench_snapshot() -> ExitCode {
     let root = repo_root();
+    // Benches emit BENCH_*.json into bench_results/ relative to their
+    // working dir; the baseline is the committed SCHEMA_*.json files
+    // plus whatever BENCH_*.json measurements predate this run.
+    let dirs = [root.join("bench_results"), root.join("rust/bench_results")];
+    let baseline = collect_headers(&dirs, true);
     let mut failed = false;
     for (bench, flags) in SNAPSHOT_BENCHES {
         println!("xtask bench-snapshot: cargo bench --bench {bench} -- {}", flags.join(" "));
@@ -682,27 +869,36 @@ fn run_bench_snapshot() -> ExitCode {
             }
         }
     }
-    // Benches emit BENCH_*.json into bench_results/ relative to their
-    // working dir; report whatever landed.
-    let mut found = Vec::new();
-    for dir in [root.join("bench_results"), root.join("rust/bench_results")] {
-        if let Ok(entries) = fs::read_dir(&dir) {
-            for entry in entries.flatten() {
-                let p = entry.path();
-                if p.extension().is_some_and(|e| e == "json") {
-                    found.push(p);
-                }
-            }
-        }
-    }
-    found.sort();
-    if found.is_empty() {
+    let current = collect_headers(&dirs, false);
+    if current.is_empty() {
         eprintln!("xtask bench-snapshot: no bench_results/*.json artifacts found");
         failed = true;
     } else {
         println!("xtask bench-snapshot: artifacts:");
-        for p in &found {
-            println!("  {}", p.display());
+        for (name, (path, header)) in &current {
+            match baseline.get(name) {
+                None => println!("  {} (new; {} columns)", path.display(), header.len()),
+                Some((_, base)) if base == header => {
+                    println!("  {} (schema unchanged)", path.display());
+                }
+                Some((_, base)) => {
+                    let lost: Vec<&String> =
+                        base.iter().filter(|c| !header.contains(c)).collect();
+                    let gained: Vec<&String> =
+                        header.iter().filter(|c| !base.contains(c)).collect();
+                    println!(
+                        "  {} (schema drift: lost {lost:?}, gained {gained:?})",
+                        path.display()
+                    );
+                    if !lost.is_empty() {
+                        eprintln!(
+                            "xtask bench-snapshot: {name} dropped column(s) {lost:?} — \
+                             downstream tooling keys on columns by name"
+                        );
+                        failed = true;
+                    }
+                }
+            }
         }
     }
     if failed {
@@ -900,6 +1096,7 @@ mod tests {
         assert_eq!(rules_of(&vs), ["wallclock"]);
         assert!(lint_file("bench/a.rs", src).is_empty());
         assert!(lint_file("coordinator/a.rs", src).is_empty());
+        assert!(lint_file("obs/clock.rs", src).is_empty());
         assert!(lint_file("main.rs", src).is_empty());
         assert!(lint_file("cli.rs", src).is_empty());
     }
@@ -976,6 +1173,125 @@ mod tests {
     fn wire_alloc_waiver_works() {
         let src = "fn a() -> Vec<u8> {\n    // xlint: allow(wire-no-alloc-in-decode): encode side, caller owns the Vec.\n    Vec::new()\n}\n";
         assert!(lint_file("net/wire.rs", src).is_empty());
+    }
+
+    // ---- obs-no-hot-alloc ----------------------------------------
+
+    #[test]
+    fn fn_name_extracts_identifiers() {
+        assert_eq!(fn_name("    pub fn record_raw(&mut self) {"), Some("record_raw"));
+        assert_eq!(fn_name("fn start(&self) -> u64 {"), Some("start"));
+        assert_eq!(fn_name("    pub(crate) fn record(&mut self, ns: u64) {"), Some("record"));
+        assert_eq!(fn_name("let fnord = 3;"), None);
+        assert_eq!(fn_name("call_fn (x)"), None);
+        assert_eq!(fn_name(""), None);
+    }
+
+    #[test]
+    fn growth_in_obs_record_fn_is_flagged() {
+        let src = "impl SpanSink {\n    pub fn record(&mut self, rec: SpanRecord) {\n        self.records.push(rec);\n    }\n}\n";
+        let vs = lint_file("obs/trace.rs", src);
+        assert_eq!(rules_of(&vs), ["obs-no-hot-alloc"]);
+        assert_eq!(vs[0].line, 3);
+    }
+
+    #[test]
+    fn each_growth_token_is_caught_in_record_fns() {
+        for bad in [
+            "self.buf.push(rec);",
+            "self.buf.extend_from_slice(&[rec]);",
+            "self.buf.reserve(1);",
+            "let _ = self.buf.to_vec();",
+            "let _ = vec![0u8];",
+            "let _ = Vec::<u8>::with_capacity(4);",
+        ] {
+            let src = format!("fn record_raw(&mut self, rec: u8) {{\n    {bad}\n}}\n");
+            let vs = lint_file("obs/trace.rs", &src);
+            assert_eq!(rules_of(&vs), ["obs-no-hot-alloc"], "{bad}");
+        }
+    }
+
+    #[test]
+    fn cursor_fill_record_path_is_clean() {
+        // The real SpanSink shape: bounds-checked cursor fill, drop
+        // counter on overflow — no growth calls anywhere.
+        let src = "impl SpanSink {\n    #[inline]\n    pub fn record_raw(&mut self, rec: SpanRecord) {\n        if self.len < self.buf.len() {\n            self.buf[self.len] = rec;\n            self.len += 1;\n        } else {\n            self.dropped += 1;\n        }\n    }\n    pub fn start(&self) -> u64 {\n        if self.enabled { 7 } else { 0 }\n    }\n}\n";
+        assert!(lint_file("obs/trace.rs", src).is_empty());
+    }
+
+    #[test]
+    fn growth_outside_record_fns_in_obs_is_fine() {
+        // Construction and drain paths allocate legitimately.
+        let src = "pub fn with_capacity(cap: usize) -> Self {\n    let buf = vec![0u8; cap];\n    Self { buf, len: 0 }\n}\npub fn drain_into(&mut self, out: &mut Vec<u8>) {\n    out.extend_from_slice(&self.buf[..self.len]);\n    self.len = 0;\n}\n";
+        assert!(lint_file("obs/trace.rs", src).is_empty());
+    }
+
+    #[test]
+    fn record_fn_growth_outside_obs_is_not_linted() {
+        let src = "fn record(&mut self, x: u32) {\n    self.log.push(x);\n}\n";
+        assert!(lint_file("coordinator/metrics.rs", src).is_empty());
+        assert!(lint_file("hla/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn growth_in_obs_record_test_mod_is_fine() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn record_helper(v: &mut Vec<u8>) {\n        v.push(0);\n    }\n}\n";
+        assert!(lint_file("obs/trace.rs", src).is_empty());
+    }
+
+    #[test]
+    fn obs_alloc_waiver_works() {
+        let src = "fn record(&mut self, x: u32) {\n    // xlint: allow(obs-no-hot-alloc): cold bootstrap path, runs once.\n    self.log.push(x);\n}\n";
+        assert!(lint_file("obs/trace.rs", src).is_empty());
+    }
+
+    #[test]
+    fn multiline_record_signature_is_covered() {
+        let src = "pub fn record(\n    &mut self,\n    rec: SpanRecord,\n) {\n    self.records.push(rec);\n}\n";
+        let vs = lint_file("obs/trace.rs", src);
+        assert_eq!(rules_of(&vs), ["obs-no-hot-alloc"]);
+        assert_eq!(vs[0].line, 5);
+    }
+
+    // ---- bench-snapshot header diff ------------------------------
+
+    #[test]
+    fn artifact_key_strips_prefixes_and_extension() {
+        assert_eq!(artifact_key("BENCH_abl_net.json"), "abl_net");
+        assert_eq!(artifact_key("SCHEMA_abl_net.json"), "abl_net");
+        assert_eq!(artifact_key("abl_sort_warm.json"), "abl_sort_warm");
+    }
+
+    #[test]
+    fn schema_baselines_cover_every_snapshot_bench() {
+        // Each quick smoke workload must have a committed header
+        // baseline for the post-run diff to compare against.
+        let dir = repo_root().join("bench_results");
+        for (bench, _) in SNAPSHOT_BENCHES {
+            let p = dir.join(format!("SCHEMA_{bench}.json"));
+            let src = fs::read_to_string(&p)
+                .unwrap_or_else(|e| panic!("missing schema baseline {}: {e}", p.display()));
+            let header = json_header(&src)
+                .unwrap_or_else(|| panic!("{} has no header array", p.display()));
+            assert!(!header.is_empty(), "{} header is empty", p.display());
+            assert!(
+                src.contains("\"rows\": []"),
+                "{} is a schema baseline and must not carry measurement rows",
+                p.display()
+            );
+        }
+    }
+
+    #[test]
+    fn json_header_reads_table_json() {
+        let s = "{\"fig\": \"abl_net\", \"header\": [\"conns\", \"ops/s\", \"p99\"], \"rows\": [[1, 2]]}";
+        assert_eq!(
+            json_header(s),
+            Some(vec!["conns".to_string(), "ops/s".to_string(), "p99".to_string()])
+        );
+        assert_eq!(json_header("{\"header\": []}"), Some(Vec::new()));
+        assert_eq!(json_header("{}"), None);
+        assert_eq!(json_header("not json at all"), None);
     }
 
     // ---- waivers -------------------------------------------------
