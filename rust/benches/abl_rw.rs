@@ -1,0 +1,319 @@
+//! Ablation RW: reader tail latency under concurrent churn — locking
+//! the session around every read vs wait-free [`EpochSnapshot`] reads.
+//!
+//! The MVCC claim: once commits publish an immutable refcounted
+//! snapshot, a pure reader pays an `Arc` bump instead of waiting out a
+//! whole stage-and-commit critical section. This bench pins that down:
+//! P reader threads hammer point queries while a churn writer commits
+//! at increasing rates (smaller batches, more commits per second). The
+//! baseline shares one `Mutex<DdmSession>` between readers and writer
+//! — the pre-snapshot architecture — so every commit stalls every
+//! reader. The snapshot path publishes the post-commit
+//! [`EpochSnapshot`] into a cell readers clone in O(1); the writer
+//! runs the pipelined commit path fed with the next epoch's
+//! already-coalesced batch. Snapshot-vs-live equality is asserted
+//! after every epoch in both modes, the two modes must end in the
+//! identical pair set, and at full size (N ≥ 1e5, readers ≥ 4) the
+//! bench asserts outright that snapshot reads improve reader p99.
+//!
+//!   cargo bench --bench abl_rw -- [--n 100k] [--epochs 6] [--readers 4] [--quick]
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use ddm::algos::Algo;
+use ddm::bench::harness::FigCtx;
+use ddm::bench::stats::fmt_secs;
+use ddm::bench::table::{banner, Table};
+use ddm::core::{Interval, PairVec, Regions1D};
+use ddm::engine::DdmEngine;
+use ddm::obs::Histogram;
+use ddm::session::EpochSnapshot;
+use ddm::workload::churn::{relocate, MoveScript};
+use ddm::workload::{alpha_workload, AlphaParams};
+
+const THREADS: usize = 4;
+const SPACE: f64 = 1e6;
+const SCRIPT_SEED: u64 = 0xA5B1;
+
+/// One epoch's moves, coalesced LWW per key — the shape
+/// `commit_pipelined` prewrites and the locked path stages op-by-op.
+type Batch = BTreeMap<u32, Option<Vec<Interval>>>;
+
+fn build_batch(
+    script: &mut MoveScript,
+    subs: &mut Regions1D,
+    upds: &mut Regions1D,
+    n_moves: usize,
+) -> (Batch, Batch) {
+    let (mut bs, mut bu) = (Batch::new(), Batch::new());
+    for _ in 0..n_moves {
+        let (sub_side, idx, frac) = script.next(subs.len(), upds.len());
+        if sub_side {
+            let iv = relocate(subs, idx, frac, SPACE);
+            bs.insert(idx as u32, Some(vec![iv]));
+        } else {
+            let iv = relocate(upds, idx, frac, SPACE);
+            bu.insert(idx as u32, Some(vec![iv]));
+        }
+    }
+    (bs, bu)
+}
+
+/// Merged reader histogram (per-read latency), total reads, wall
+/// seconds, commits closed, and the final pair set of one mode run.
+struct ModeRun {
+    hist: Histogram,
+    reads: u64,
+    elapsed: f64,
+    commits: u64,
+    pairs: PairVec,
+}
+
+/// Baseline: readers and the churn writer share one mutex — each
+/// epoch's stage + commit holds the lock, so reads queue behind it.
+fn run_locked(
+    engine: &DdmEngine,
+    subs0: &Regions1D,
+    upds0: &Regions1D,
+    epochs: usize,
+    n_moves: usize,
+    readers: usize,
+) -> ModeRun {
+    let (mut subs, mut upds) = (subs0.clone(), upds0.clone());
+    let mut sess = engine.session(1);
+    sess.load_dense_1d(&subs, &upds);
+    let _ = sess.commit();
+    let probe = subs.len() as u32;
+    let sess = Mutex::new(sess);
+    let stop = AtomicBool::new(false);
+    let mut hist = Histogram::default();
+    let mut reads = 0u64;
+    let mut commits = 0u64;
+    let t_run = Instant::now();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..readers)
+            .map(|r| {
+                let (sess, stop) = (&sess, &stop);
+                scope.spawn(move || {
+                    let mut h = Histogram::default();
+                    let mut n = 0u64;
+                    let mut key = r as u32;
+                    while !stop.load(Ordering::Relaxed) {
+                        let t0 = Instant::now();
+                        {
+                            let g = sess.lock().unwrap();
+                            std::hint::black_box(g.n_pairs());
+                            std::hint::black_box(g.updates_of(key % probe));
+                        }
+                        h.record_duration(t0.elapsed());
+                        n += 1;
+                        key = key.wrapping_add(1);
+                    }
+                    (h, n)
+                })
+            })
+            .collect();
+        let mut script = MoveScript::new(SCRIPT_SEED);
+        for _ in 0..epochs {
+            let (bs, bu) = build_batch(&mut script, &mut subs, &mut upds, n_moves);
+            let mut g = sess.lock().unwrap();
+            for (key, rect) in &bs {
+                g.upsert_subscription(*key, rect.as_deref().unwrap());
+            }
+            for (key, rect) in &bu {
+                g.upsert_update(*key, rect.as_deref().unwrap());
+            }
+            let _ = g.commit();
+            commits += 1;
+            // Honesty check: the published snapshot is the live state.
+            assert_eq!(g.snapshot().pairs(), g.pairs(), "snapshot != live (locked)");
+        }
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            let (hh, n) = h.join().unwrap();
+            hist.merge(&hh);
+            reads += n;
+        }
+    });
+    let elapsed = t_run.elapsed().as_secs_f64();
+    let pairs = sess.into_inner().unwrap().pairs();
+    ModeRun {
+        hist,
+        reads,
+        elapsed,
+        commits,
+        pairs,
+    }
+}
+
+/// Snapshot path: the writer owns the session outright and publishes
+/// each post-commit [`EpochSnapshot`] into a cell; readers clone it
+/// (an `Arc` bump) and query without ever touching the session. The
+/// writer runs `commit_pipelined`, overlapping the next batch's tree
+/// writes with the current epoch's diff + snapshot build.
+fn run_snapshot(
+    engine: &DdmEngine,
+    subs0: &Regions1D,
+    upds0: &Regions1D,
+    epochs: usize,
+    n_moves: usize,
+    readers: usize,
+) -> ModeRun {
+    let (mut subs, mut upds) = (subs0.clone(), upds0.clone());
+    let mut sess = engine.session(1);
+    sess.load_dense_1d(&subs, &upds);
+    let _ = sess.commit();
+    let probe = subs.len() as u32;
+    let cell = Mutex::new(sess.snapshot());
+    let stop = AtomicBool::new(false);
+    let mut hist = Histogram::default();
+    let mut reads = 0u64;
+    let mut commits = 0u64;
+    let t_run = Instant::now();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..readers)
+            .map(|r| {
+                let (cell, stop) = (&cell, &stop);
+                scope.spawn(move || {
+                    let mut h = Histogram::default();
+                    let mut n = 0u64;
+                    let mut key = r as u32;
+                    while !stop.load(Ordering::Relaxed) {
+                        let t0 = Instant::now();
+                        let snap: EpochSnapshot = cell.lock().unwrap().clone();
+                        std::hint::black_box(snap.n_pairs());
+                        std::hint::black_box(snap.updates_of(key % probe));
+                        h.record_duration(t0.elapsed());
+                        n += 1;
+                        key = key.wrapping_add(1);
+                    }
+                    (h, n)
+                })
+            })
+            .collect();
+        let mut script = MoveScript::new(SCRIPT_SEED);
+        for _ in 0..epochs {
+            // Batch e prewrites during the commit that closes epoch
+            // e-1's churn; a trailing plain commit applies the last.
+            let (bs, bu) = build_batch(&mut script, &mut subs, &mut upds, n_moves);
+            let _ = sess.commit_pipelined(bs, bu);
+            commits += 1;
+            let snap = sess.snapshot();
+            assert_eq!(snap.epoch(), sess.epoch(), "snapshot lags the session");
+            assert_eq!(snap.pairs(), sess.pairs(), "snapshot != live (pipelined)");
+            *cell.lock().unwrap() = snap;
+        }
+        let _ = sess.commit();
+        commits += 1;
+        *cell.lock().unwrap() = sess.snapshot();
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            let (hh, n) = h.join().unwrap();
+            hist.merge(&hh);
+            reads += n;
+        }
+    });
+    let elapsed = t_run.elapsed().as_secs_f64();
+    let pairs = sess.pairs();
+    ModeRun {
+        hist,
+        reads,
+        elapsed,
+        commits,
+        pairs,
+    }
+}
+
+fn main() {
+    let ctx = FigCtx::new(THREADS);
+    let n_total = ctx.args.size("n", if ctx.quick { 10_000 } else { 100_000 });
+    let epochs = ctx.args.size("epochs", if ctx.quick { 3 } else { 6 });
+    let readers = ctx.args.size("readers", 4);
+    let alpha = ctx.args.opt("alpha", 10.0);
+    // Descending batch sizes: commits get smaller and faster down the
+    // table, i.e. the commit *rate* readers endure goes up.
+    let default_churns: &[f64] = if ctx.quick {
+        &[0.02]
+    } else {
+        &[0.10, 0.02, 0.005]
+    };
+    let churns: Vec<f64> = ctx.args.list("churns", default_churns);
+    let wp = AlphaParams {
+        n_total,
+        alpha,
+        space: SPACE,
+    };
+    banner(
+        "RW",
+        "reader tail latency under churn: locked session vs wait-free snapshots",
+        &format!("N={n_total} α={alpha} epochs={epochs} readers={readers} P={THREADS}"),
+    );
+
+    let engine = DdmEngine::builder()
+        .algo(Algo::Psbm)
+        .threads(THREADS)
+        .pool(std::sync::Arc::clone(&ctx.pool))
+        .build();
+    let (subs0, upds0) = alpha_workload(77, &wp);
+
+    let mut table = Table::new(vec![
+        "churn",
+        "moves/epoch",
+        "commits/s",
+        "reads/s locked",
+        "reads/s snap",
+        "locked p50",
+        "locked p99",
+        "snap p50",
+        "snap p99",
+        "p99 gain",
+    ]);
+    for &churn in &churns {
+        let n_moves = ((n_total as f64) * churn).ceil().max(1.0) as usize;
+        let locked = run_locked(&engine, &subs0, &upds0, epochs, n_moves, readers);
+        let snap = run_snapshot(&engine, &subs0, &upds0, epochs, n_moves, readers);
+
+        // Both modes ran the identical move script; they must agree.
+        assert_eq!(
+            locked.pairs, snap.pairs,
+            "locked and snapshot modes diverged at churn {churn}"
+        );
+
+        let (p50_l, p99_l) = (locked.hist.p50(), locked.hist.p99());
+        let (p50_s, p99_s) = (snap.hist.p50(), snap.hist.p99());
+        if n_total >= 100_000 && readers >= 4 {
+            // The tentpole's headline: wait-free reads cut tail latency
+            // under concurrent churn. Asserted, not eyeballed.
+            assert!(
+                p99_s < p99_l,
+                "snapshot reads did not improve reader p99 at churn {churn}: \
+                 snap {p99_s}ns vs locked {p99_l}ns"
+            );
+        }
+        table.row(vec![
+            format!("{:.1}%", churn * 100.0),
+            n_moves.to_string(),
+            format!("{:.1}", snap.commits as f64 / snap.elapsed),
+            format!("{:.0}", locked.reads as f64 / locked.elapsed),
+            format!("{:.0}", snap.reads as f64 / snap.elapsed),
+            fmt_secs(p50_l as f64 * 1e-9),
+            fmt_secs(p99_l as f64 * 1e-9),
+            fmt_secs(p50_s as f64 * 1e-9),
+            fmt_secs(p99_s as f64 * 1e-9),
+            format!("{:.1}x", p99_l as f64 / (p99_s.max(1)) as f64),
+        ]);
+    }
+    table.print();
+    ctx.emit("abl_rw", &table);
+    println!(
+        "\nreading: the locked columns are the pre-snapshot architecture — every \
+         read waits out any in-flight stage+commit, so reader p99 tracks the epoch \
+         length. The snap columns clone the published EpochSnapshot (an Arc bump) \
+         and never touch the session, so p99 stays flat as the commit rate climbs. \
+         Equality is asserted every epoch: each published snapshot matches a live \
+         read, and both modes end in the identical pair set."
+    );
+}

@@ -534,6 +534,17 @@ impl EngineBuilder {
         self
     }
 
+    /// Admission bound of the async ingestion front-end built for the
+    /// engine's sessions: staged-op queues
+    /// ([`ingest_queue`](crate::session::ingest_queue)) sized from the
+    /// session params admit this many in-flight ops before producers
+    /// get a typed `Busy` (the net worker surfaces it on the wire).
+    /// See [`SessionParams::ingest_backlog`].
+    pub fn ingest_backlog(mut self, ops: usize) -> Self {
+        self.session.ingest_backlog = ops;
+        self
+    }
+
     /// Replace the whole session parameter block.
     pub fn session_params(mut self, session: SessionParams) -> Self {
         self.session = session;
@@ -1095,13 +1106,16 @@ mod tests {
             .session_set_impl(SetImpl::Bit)
             .batch_threshold(7)
             .parallel_cutoff(3)
+            .ingest_backlog(128)
             .build();
         let p = e.session_params();
         assert_eq!(p.set_impl, SetImpl::Bit);
         assert_eq!(p.batch_threshold, 7);
         assert_eq!(p.parallel_cutoff, 3);
+        assert_eq!(p.ingest_backlog, 128);
         let s = e.session(3);
         assert_eq!(s.d(), 3);
+        assert_eq!(s.params().ingest_backlog, 128);
         assert_eq!(s.epoch(), 0);
         assert_eq!(s.pending_ops(), 0);
     }

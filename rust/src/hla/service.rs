@@ -9,7 +9,8 @@
 //! [`overlapping_subscriptions`](DdmService::overlapping_subscriptions))
 //! first flushes the staged batch (epoch stays open, so interleaved
 //! reads never swallow a diff) and answers from the session's
-//! retained pair set — no full re-match anywhere, and federate
+//! wait-free [`EpochSnapshot`](crate::session::EpochSnapshot) — no
+//! full re-match anywhere, and federate
 //! notifications are driven by the
 //! [`MatchDiff`](crate::session::MatchDiff)-maintained state (see
 //! [`notify_new_matches`](DdmService::notify_new_matches) for the
@@ -288,12 +289,16 @@ impl DdmService {
         self.session.flush();
     }
 
-    /// Every overlapping (subscription, update) handle pair — read from
-    /// the session's retained pair set in O(K), never re-matched.
+    /// Every overlapping (subscription, update) handle pair — answered
+    /// from the session's wait-free
+    /// [`EpochSnapshot`](crate::session::EpochSnapshot) in O(K), never
+    /// re-matched (the preceding sync republishes, so the snapshot is
+    /// current).
     pub fn match_all(&mut self) -> Vec<(RegionHandle, RegionHandle)> {
         self.sync();
         self.matches_run += 1;
         self.session
+            .snapshot()
             .pairs()
             .into_iter()
             .map(|(s, u)| {
@@ -312,7 +317,7 @@ impl DdmService {
     }
 
     /// Subscriptions overlapping one update region (the publish path):
-    /// an O(K_u) read of the session's retained pair set.
+    /// an O(K_u) read of the session's wait-free snapshot.
     pub fn overlapping_subscriptions(&mut self, update: RegionHandle) -> Result<Vec<RegionHandle>> {
         if update.kind != RegionKind::Update {
             bail!("overlapping_subscriptions takes an update handle");
@@ -321,6 +326,7 @@ impl DdmService {
         self.upds.get(update.id)?;
         Ok(self
             .session
+            .snapshot()
             .subscriptions_of(update.id)
             .into_iter()
             .map(|id| RegionHandle {

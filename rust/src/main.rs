@@ -32,6 +32,7 @@
 //!   ddm xla-match --n 4096 --alpha 10
 //!   ddm serve --config examples/service.toml
 //!   ddm serve --listen 127.0.0.1:7777 --d 1 --shards 4 --span 0,1e6
+//!   ddm serve --listen 127.0.0.1:7777 --backlog 4096   # Busy past 4096 queued ops
 //!   ddm route --listen 127.0.0.1:7700 --workers 127.0.0.1:7701,127.0.0.1:7702 \
 //!             --shards 4 --span 0,1e6
 //!   ddm client --addr 127.0.0.1:7777 --n 1000 --epochs 5 --verify --metrics
@@ -621,6 +622,9 @@ fn cmd_serve_net(args: &Args) {
         .unwrap_or_else(|e| die(&e))
         .threads(threads)
         .trace(args.flag("trace"))
+        // `--backlog N` bounds the worker's staged-op ingest queue:
+        // beyond N queued ops, clients get a typed `Busy` reply.
+        .ingest_backlog(args.opt("backlog", ddm::session::DEFAULT_INGEST_BACKLOG))
         .build();
     let cuts: Option<Vec<f64>> = args.try_list("cuts").unwrap_or_else(|e| die(&e));
     let shards: usize = args.opt("shards", 1usize);
@@ -1007,6 +1011,9 @@ fn cmd_bench_net(args: &Args) {
     for &conns in &conns_list {
         let engine = DdmEngine::builder()
             .threads(args.opt("threads", 2usize))
+            // Size the ingest backlog to the whole per-epoch op volume
+            // so the bench measures throughput, not admission control.
+            .ingest_backlog((2 * n).max(ddm::session::DEFAULT_INGEST_BACKLOG))
             .build();
         let service =
             ddm::net::WorkerService::new(ddm::shard::AnySession::Single(engine.session(d)));

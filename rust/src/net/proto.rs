@@ -27,6 +27,7 @@
 //! | 17  | `ErrorReply` | server → client  | code + message |
 //! | 18  | `Shutdown`   | client → server  | — |
 //! | 19  | `Goodbye`    | server → client  | final epoch |
+//! | 20  | `Busy`       | server → client  | backlog depth + limit |
 //!
 //! Pair lists ride a delta encoding over the packed `u64` key of
 //! [`pack_pair`] — `MatchDiff` lists arrive sorted and duplicate-free,
@@ -81,6 +82,7 @@ const TAG_METRICS: u8 = 16;
 const TAG_ERROR: u8 = 17;
 const TAG_SHUTDOWN: u8 = 18;
 const TAG_GOODBYE: u8 = 19;
+const TAG_BUSY: u8 = 20;
 
 /// What kind of endpoint answered the handshake.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -283,6 +285,11 @@ pub enum Msg {
     ErrorReply { code: u32, msg: String },
     Shutdown,
     Goodbye { epoch: u64 },
+    /// Admission-control rejection: the worker's staged-op backlog is
+    /// full. Carries the observed depth and the configured limit (the
+    /// wire twin of [`session::Busy`](crate::session::Busy)); clients
+    /// back off and retry instead of treating it as a session error.
+    Busy { pending: u64, limit: u64 },
 }
 
 fn put_rect(out: &mut Vec<u8>, rect: &[Interval]) {
@@ -492,6 +499,10 @@ impl Msg {
             Msg::Goodbye { epoch } => wire::frame(out, TAG_GOODBYE, |o| {
                 wire::put_varint(o, *epoch);
             }),
+            Msg::Busy { pending, limit } => wire::frame(out, TAG_BUSY, |o| {
+                wire::put_varint(o, *pending);
+                wire::put_varint(o, *limit);
+            }),
         }
     }
 
@@ -629,6 +640,10 @@ impl Msg {
             },
             TAG_SHUTDOWN => Msg::Shutdown,
             TAG_GOODBYE => Msg::Goodbye { epoch: r.varint()? },
+            TAG_BUSY => Msg::Busy {
+                pending: r.varint()?,
+                limit: r.varint()?,
+            },
             other => return Err(WireError::BadTag(other)),
         };
         r.finish()?;
@@ -678,7 +693,7 @@ pub fn arbitrary_msg(rng: &mut crate::prng::Rng, d: usize) -> Msg {
         packed.dedup();
         packed.into_iter().map(unpack_pair).collect()
     }
-    match rng.below(19) {
+    match rng.below(20) {
         0 => Msg::Hello { proto: PROTO_ID },
         1 => Msg::Welcome {
             role: if rng.chance(0.5) { Role::Worker } else { Role::Router },
@@ -755,7 +770,11 @@ pub fn arbitrary_msg(rng: &mut crate::prng::Rng, d: usize) -> Msg {
             msg: "not here".to_string(),
         },
         17 => Msg::Shutdown,
-        _ => Msg::Goodbye { epoch: rng.below(1 << 20) },
+        18 => Msg::Goodbye { epoch: rng.below(1 << 20) },
+        _ => Msg::Busy {
+            pending: rng.below(1 << 16),
+            limit: 1 + rng.below(1 << 16),
+        },
     }
 }
 
@@ -777,7 +796,7 @@ mod tests {
         // Hit every arm of the generator across dimensions 1, 3, 5.
         for d in [1usize, 3, 5] {
             let mut rng = Rng::new(0xBEEF ^ d as u64);
-            let mut seen = [false; 19];
+            let mut seen = [false; 20];
             for _ in 0..2000 {
                 let msg = arbitrary_msg(&mut rng, d);
                 seen[variant_index(&msg)] = true;
@@ -808,6 +827,7 @@ mod tests {
             Msg::ErrorReply { .. } => 16,
             Msg::Shutdown => 17,
             Msg::Goodbye { .. } => 18,
+            Msg::Busy { .. } => 19,
         }
     }
 

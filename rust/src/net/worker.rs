@@ -2,11 +2,19 @@
 //!
 //! A worker owns a contiguous stripe-range of the federation's global
 //! shard space (or the whole space when it runs alone behind `ddm
-//! serve`). Decoded [`RegionOp`]s stage into the session's LWW batch
-//! path exactly as local callers would; `Commit` closes an epoch and
-//! answers with the [`MatchDiff`], which also streams to every
-//! subscribed connection. Reads (`GetPairs`, `Sync`, `GetMetrics`)
-//! answer from retained state without touching staging.
+//! serve`). Decoded [`RegionOp`]s pass **admission control** first: a
+//! bounded MPSC ingest queue
+//! ([`ingest_queue`](crate::session::ingest_queue), sized by
+//! [`SessionParams::ingest_backlog`](crate::session::SessionParams::ingest_backlog))
+//! holds them until the next drain point (`Flush`, `Commit`,
+//! shutdown), where they stage into the session's LWW batch path
+//! exactly as local callers would. A full backlog rejects the op with
+//! a typed [`Msg::Busy`] reply instead of buffering without bound —
+//! clients back off and retry — and the live depth is exported as the
+//! `ingest_backlog` gauge. Reads (`GetPairs`, `Sync`, `GetMetrics`)
+//! answer from the session's wait-free
+//! [`EpochSnapshot`](crate::session::EpochSnapshot) and the queue
+//! gauges, so the state thread's read path never blocks a commit.
 //!
 //! Shutdown keeps the session honest: if any ops were staged or
 //! flushed since the last commit, the worker closes one final epoch
@@ -18,7 +26,7 @@ use std::sync::Arc;
 
 use crate::coordinator::metrics::Metrics;
 use crate::obs::{clock, SpanRecord};
-use crate::session::MatchDiff;
+use crate::session::{ingest_queue, IngestReceiver, IngestSender, MatchDiff, Side};
 use crate::shard::{AnySession, ShardedSession};
 
 use super::proto::{err_code, MetricsSnapshot, Msg, RegionOp, Role, PROTO_ID};
@@ -48,11 +56,26 @@ pub struct WorkerService {
     /// Phase spans drained from the session after each traced commit,
     /// bounded to the most recent [`TRACE_LOG_CAP`].
     trace_log: Vec<SpanRecord>,
+    /// Admission-controlled staged-op backlog: decoded ops enqueue
+    /// here (bounded, typed `Busy` on overflow) and drain into the
+    /// session at the next flush / commit / shutdown.
+    ingest_tx: IngestSender,
+    ingest_rx: IngestReceiver,
 }
 
 impl WorkerService {
-    /// Wrap `session`; the server core calls everything else.
+    /// Wrap `session`; the server core calls everything else. The
+    /// ingest backlog is sized from the session's
+    /// [`ingest_backlog`](crate::session::SessionParams::ingest_backlog)
+    /// parameter.
     pub fn new(session: AnySession) -> Self {
+        let backlog = session.params().ingest_backlog;
+        Self::with_backlog(session, backlog)
+    }
+
+    /// Wrap `session` with an explicit ingest-backlog bound (ops).
+    pub fn with_backlog(session: AnySession, backlog: usize) -> Self {
+        let (ingest_tx, ingest_rx) = ingest_queue(backlog);
         Self {
             session,
             metrics: Metrics::default(),
@@ -61,31 +84,56 @@ impl WorkerService {
             stop: None,
             stages: StageHists::default(),
             trace_log: Vec::new(),
+            ingest_tx,
+            ingest_rx,
         }
     }
 
     fn stage(&mut self, conn: u64, op: RegionOp, out: &mut Outbox) {
         let d = self.session.d();
-        match op {
+        let admitted = match op {
             RegionOp::UpsertSub { key, rect } => {
                 if rect.len() != d {
                     self.reject_dims(conn, rect.len(), out);
                     return;
                 }
-                self.session.upsert_subscription(key, &rect);
+                self.ingest_tx.try_upsert(Side::Subscription, key, &rect)
             }
             RegionOp::UpsertUpd { key, rect } => {
                 if rect.len() != d {
                     self.reject_dims(conn, rect.len(), out);
                     return;
                 }
-                self.session.upsert_update(key, &rect);
+                self.ingest_tx.try_upsert(Side::Update, key, &rect)
             }
-            RegionOp::RemoveSub { key } => self.session.remove_subscription(key),
-            RegionOp::RemoveUpd { key } => self.session.remove_update(key),
+            RegionOp::RemoveSub { key } => self.ingest_tx.try_remove(Side::Subscription, key),
+            RegionOp::RemoveUpd { key } => self.ingest_tx.try_remove(Side::Update, key),
+        };
+        match admitted {
+            Ok(()) => {
+                self.dirty = true;
+                self.metrics.inc("net_ops", 1);
+            }
+            Err(busy) => {
+                self.metrics.inc("net_busy", 1);
+                out.send(
+                    conn,
+                    &Msg::Busy {
+                        pending: busy.pending,
+                        limit: busy.limit,
+                    },
+                );
+            }
         }
-        self.dirty = true;
-        self.metrics.inc("net_ops", 1);
+    }
+
+    /// Drain the ingest backlog into the session's staging maps
+    /// (refreshing the `ingest_backlog` gauge with the pre-drain
+    /// depth), and return the drained count.
+    fn drain_backlog(&mut self) -> usize {
+        self.metrics
+            .gauge("ingest_backlog", self.ingest_rx.depth() as f64);
+        self.session.drain_ingest(&self.ingest_rx)
     }
 
     fn reject_dims(&mut self, conn: u64, got: usize, out: &mut Outbox) {
@@ -99,6 +147,7 @@ impl WorkerService {
     }
 
     fn commit_epoch(&mut self) -> MatchDiff {
+        self.drain_backlog();
         let t0 = clock::now_ns();
         let diff = self.session.commit();
         self.metrics
@@ -185,7 +234,10 @@ impl Service for WorkerService {
                     self.stage(conn, op, out);
                 }
             }
-            Msg::Flush => self.session.flush(),
+            Msg::Flush => {
+                self.drain_backlog();
+                self.session.flush();
+            }
             Msg::Commit => {
                 let diff = self.commit_epoch();
                 self.stream_diff(&diff, Some(conn), out);
@@ -202,16 +254,21 @@ impl Service for WorkerService {
                 &Msg::SyncAck {
                     token,
                     epoch: self.session.epoch(),
-                    pending: self.session.pending_ops() as u64,
+                    pending: (self.ingest_rx.depth() + self.session.pending_ops()) as u64,
                 },
             ),
             Msg::GetPairs => {
-                let pairs = self.session.pairs();
+                // Off-snapshot: an O(1) clone of the published epoch,
+                // byte-identical to an in-process read at the same
+                // point — the session is never locked or flushed here.
+                let pairs = self.session.snapshot().pairs();
                 out.send(conn, &Msg::Pairs(pairs));
             }
             Msg::GetMetrics => {
                 self.metrics
                     .gauge("net_subscribers", self.subscribers.len() as f64);
+                self.metrics
+                    .gauge("ingest_backlog", self.ingest_rx.depth() as f64);
                 // Fold the server-core stage histograms into a copy so
                 // the live reply matches the final table without
                 // double-counting into the service's own registry.
@@ -237,9 +294,9 @@ impl Service for WorkerService {
     }
 
     fn on_shutdown(&mut self, open: &[u64], out: &mut Outbox) {
-        // Flush staged work into one last epoch so nothing the server
-        // acknowledged is silently dropped.
-        if self.dirty || self.session.pending_ops() > 0 {
+        // Flush staged AND queued work into one last epoch so nothing
+        // the server acknowledged is silently dropped.
+        if self.dirty || self.session.pending_ops() > 0 || self.ingest_rx.depth() > 0 {
             let diff = self.commit_epoch();
             self.stream_diff(&diff, None, out);
         }

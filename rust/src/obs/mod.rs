@@ -90,12 +90,21 @@ pub enum Phase {
     NetAccept = 13,
     /// A whole commit (session or wire), end to end.
     Commit = 14,
+    /// Session publish: rebuild + RCU swap of the epoch's immutable
+    /// read snapshot (items = pairs in the new snapshot).
+    SnapshotSwap = 15,
+    /// Zero-length marker after a snapshot swap; items = reader
+    /// handles still pinning the previous epoch's payload.
+    ReaderPin = 16,
+    /// Dwell of a drained ingest batch in the bounded MPSC backlog
+    /// (oldest enqueue → drain; items = ops drained).
+    BacklogWait = 17,
 }
 
 impl Phase {
     /// Every phase, in id order (the taxonomy table in
     /// ARCHITECTURE.md mirrors this).
-    pub const ALL: [Phase; 15] = [
+    pub const ALL: [Phase; 18] = [
         Phase::Sort,
         Phase::Sweep,
         Phase::Residual,
@@ -111,6 +120,9 @@ impl Phase {
         Phase::NetEncode,
         Phase::NetAccept,
         Phase::Commit,
+        Phase::SnapshotSwap,
+        Phase::ReaderPin,
+        Phase::BacklogWait,
     ];
 
     /// Stable wire/trace id.
@@ -142,6 +154,9 @@ impl Phase {
             Phase::NetEncode => "net_encode",
             Phase::NetAccept => "net_accept",
             Phase::Commit => "commit",
+            Phase::SnapshotSwap => "snapshot_swap",
+            Phase::ReaderPin => "reader_pin",
+            Phase::BacklogWait => "backlog_wait",
         }
     }
 

@@ -1,0 +1,232 @@
+//! Bounded MPSC ingestion front-end with admission control.
+//!
+//! Producers (network IO threads, in-process writers) push staged
+//! region ops through a cloneable [`IngestSender`] without ever
+//! touching the session; the session's single owner drains the queue
+//! at its next flush/commit (see
+//! [`DdmSession::drain_ingest`](super::DdmSession::drain_ingest)).
+//! The queue is **bounded**: once `capacity` ops are in flight,
+//! [`IngestSender::try_upsert`] / [`try_remove`](IngestSender::try_remove)
+//! reject with a typed [`Busy`] instead of blocking or buffering
+//! without limit — the net worker turns that into a `Busy` wire reply
+//! and the live depth into the `ingest_backlog` coordinator gauge.
+//!
+//! Each op carries its enqueue timestamp; drains fold the queue dwell
+//! into a [`backlog_wait`](crate::obs::Phase::BacklogWait) span, so
+//! traced commits show how long the batch sat in the backlog before
+//! the pipeline picked it up.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+
+use super::Side;
+use crate::core::interval::Interval;
+
+/// One staged region op in flight through the queue: the same
+/// `key → Some(rect) | None` shape the session coalesces, plus the
+/// enqueue timestamp for backlog-dwell accounting.
+#[derive(Debug, Clone)]
+pub struct StagedOp {
+    pub side: Side,
+    pub key: u32,
+    /// `Some(rect)` upsert / `None` remove.
+    pub op: Option<Vec<Interval>>,
+    /// [`crate::obs::clock::now_ns`] at enqueue.
+    pub enqueued_ns: u64,
+}
+
+/// Typed admission-control rejection: the staged-op backlog is full.
+/// Carries the observed depth and the configured limit so callers can
+/// surface both (the wire protocol's `Busy` reply is exactly this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Busy {
+    /// Ops in flight when the send was rejected.
+    pub pending: u64,
+    /// The queue's capacity.
+    pub limit: u64,
+}
+
+/// Depth gauge shared by every sender and the receiver. The counter is
+/// reserved *before* the channel send, so concurrent producers can
+/// never overshoot the capacity.
+#[derive(Debug)]
+struct Gauge {
+    depth: AtomicUsize,
+    cap: usize,
+}
+
+/// The producer half: cloneable, send-only, never blocks.
+#[derive(Clone)]
+pub struct IngestSender {
+    tx: SyncSender<StagedOp>,
+    gauge: Arc<Gauge>,
+}
+
+impl IngestSender {
+    /// Enqueue an insert-or-replace of region `key` on `side`.
+    pub fn try_upsert(&self, side: Side, key: u32, rect: &[Interval]) -> Result<(), Busy> {
+        self.try_send(side, key, Some(rect.to_vec()))
+    }
+
+    /// Enqueue a removal of region `key` on `side`.
+    pub fn try_remove(&self, side: Side, key: u32) -> Result<(), Busy> {
+        self.try_send(side, key, None)
+    }
+
+    fn try_send(&self, side: Side, key: u32, op: Option<Vec<Interval>>) -> Result<(), Busy> {
+        let busy = |pending: usize| Busy {
+            pending: pending as u64,
+            limit: self.gauge.cap as u64,
+        };
+        // Reserve a slot first: the add-then-check keeps racing
+        // producers from overshooting the cap.
+        let prev = self.gauge.depth.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.gauge.cap {
+            self.gauge.depth.fetch_sub(1, Ordering::AcqRel);
+            return Err(busy(prev));
+        }
+        let staged = StagedOp {
+            side,
+            key,
+            op,
+            enqueued_ns: crate::obs::clock::now_ns(),
+        };
+        match self.tx.try_send(staged) {
+            Ok(()) => Ok(()),
+            // Full can't normally happen (the gauge reserves within the
+            // channel bound); Disconnected means the session side is
+            // gone — report it as backpressure rather than panicking.
+            Err(_) => {
+                self.gauge.depth.fetch_sub(1, Ordering::AcqRel);
+                Err(busy(self.gauge.cap))
+            }
+        }
+    }
+
+    /// Ops currently in flight (enqueued, not yet drained).
+    pub fn depth(&self) -> usize {
+        self.gauge.depth.load(Ordering::Acquire)
+    }
+
+    /// The bound the queue admits up to.
+    pub fn capacity(&self) -> usize {
+        self.gauge.cap
+    }
+}
+
+/// The consumer half, owned next to the session.
+pub struct IngestReceiver {
+    rx: Receiver<StagedOp>,
+    gauge: Arc<Gauge>,
+}
+
+impl IngestReceiver {
+    /// Ops currently in flight (enqueued, not yet drained).
+    pub fn depth(&self) -> usize {
+        self.gauge.depth.load(Ordering::Acquire)
+    }
+
+    /// The bound the queue admits up to.
+    pub fn capacity(&self) -> usize {
+        self.gauge.cap
+    }
+
+    /// Drain everything queued right now into `apply` (enqueue order).
+    /// Returns the drained count and the oldest enqueue timestamp
+    /// (`u64::MAX` when nothing was queued) — the session turns the
+    /// pair into one `backlog_wait` span.
+    pub fn drain(&self, mut apply: impl FnMut(StagedOp)) -> (usize, u64) {
+        let mut n = 0usize;
+        let mut oldest = u64::MAX;
+        while let Ok(op) = self.rx.try_recv() {
+            self.gauge.depth.fetch_sub(1, Ordering::AcqRel);
+            oldest = oldest.min(op.enqueued_ns);
+            n += 1;
+            apply(op);
+        }
+        (n, oldest)
+    }
+}
+
+/// Build a bounded MPSC staged-op queue admitting up to `cap` ops
+/// (`cap` is clamped to ≥ 1).
+pub fn ingest_queue(cap: usize) -> (IngestSender, IngestReceiver) {
+    let cap = cap.max(1);
+    let gauge = Arc::new(Gauge {
+        depth: AtomicUsize::new(0),
+        cap,
+    });
+    let (tx, rx) = sync_channel(cap);
+    (
+        IngestSender {
+            tx,
+            gauge: Arc::clone(&gauge),
+        },
+        IngestReceiver { rx, gauge },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iv() -> Interval {
+        Interval::new(0.0, 1.0)
+    }
+
+    #[test]
+    fn admits_up_to_capacity_then_rejects_typed_busy() {
+        let (tx, rx) = ingest_queue(3);
+        assert_eq!(tx.capacity(), 3);
+        for k in 0..3u32 {
+            tx.try_upsert(Side::Subscription, k, &[iv()]).unwrap();
+        }
+        assert_eq!(tx.depth(), 3);
+        let err = tx.try_remove(Side::Update, 9).unwrap_err();
+        assert_eq!(err, Busy { pending: 3, limit: 3 });
+        // Draining frees the slots again.
+        let mut keys = Vec::new();
+        let (n, oldest) = rx.drain(|op| keys.push(op.key));
+        assert_eq!(n, 3);
+        assert!(oldest != u64::MAX);
+        assert_eq!(keys, vec![0, 1, 2]);
+        assert_eq!(tx.depth(), 0);
+        tx.try_upsert(Side::Update, 4, &[iv()]).unwrap();
+        assert_eq!(rx.depth(), 1);
+    }
+
+    #[test]
+    fn drain_on_empty_queue_is_a_cheap_no_op() {
+        let (_tx, rx) = ingest_queue(4);
+        let (n, oldest) = rx.drain(|_| panic!("nothing to drain"));
+        assert_eq!(n, 0);
+        assert_eq!(oldest, u64::MAX);
+    }
+
+    #[test]
+    fn concurrent_producers_never_overshoot_the_bound() {
+        let (tx, rx) = ingest_queue(64);
+        let accepted: usize = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4u32)
+                .map(|t| {
+                    let tx = tx.clone();
+                    scope.spawn(move || {
+                        let mut ok = 0usize;
+                        for k in 0..100u32 {
+                            if tx.try_upsert(Side::Subscription, t * 1000 + k, &[iv()]).is_ok() {
+                                ok += 1;
+                            }
+                        }
+                        ok
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        assert!(accepted <= 64, "admitted {accepted} ops past the bound");
+        let (n, _) = rx.drain(|_| ());
+        assert_eq!(n, accepted, "every admitted op is drainable");
+        assert_eq!(rx.depth(), 0);
+    }
+}

@@ -36,11 +36,28 @@
 //! [`batch_threshold`](crate::engine::EngineBuilder::batch_threshold),
 //! [`parallel_cutoff`](crate::engine::EngineBuilder::parallel_cutoff))
 //! and created by [`DdmEngine::session`](crate::engine::DdmEngine::session).
+//!
+//! Since the MVCC refactor the session is split across three files:
+//! this one owns the mutable write side (staging, apply, commit),
+//! [`snapshot`] owns the immutable read side — a refcounted
+//! [`EpochSnapshot`] republished by RCU-style pointer swap at every
+//! flush/commit, so readers are wait-free and never observe a commit
+//! in progress — and [`ingest`] adds a bounded MPSC staging front-end
+//! with typed [`Busy`] backpressure.
+//! [`commit_pipelined`](DdmSession::commit_pipelined) overlaps the
+//! *next* batch's phase-A tree writes with the current epoch's diff
+//! assembly and snapshot swap.
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::Arc;
 
 pub use crate::algos::dynamic::Side;
+
+pub mod ingest;
+pub mod snapshot;
+
+pub use ingest::{ingest_queue, Busy, IngestReceiver, IngestSender, StagedOp};
+pub use snapshot::EpochSnapshot;
 
 use crate::algos::dynamic::TreeIndex;
 use crate::core::interval::Interval;
@@ -81,7 +98,16 @@ pub struct SessionParams {
     /// Off by default — the disabled path is a branch per phase. Read
     /// the timeline with [`DdmSession::drain_trace`].
     pub trace: bool,
+    /// Admission bound of the async ingestion front-end: how many
+    /// staged ops an [`ingest_queue`] built for this session admits
+    /// before senders get a typed [`Busy`] (the net worker sizes its
+    /// backlog from this and surfaces rejections as `Busy` wire
+    /// replies).
+    pub ingest_backlog: usize,
 }
+
+/// Default [`SessionParams::ingest_backlog`] bound.
+pub const DEFAULT_INGEST_BACKLOG: usize = 1 << 16;
 
 impl Default for SessionParams {
     fn default() -> Self {
@@ -91,6 +117,7 @@ impl Default for SessionParams {
             parallel_cutoff: 64,
             reuse_scratch: true,
             trace: false,
+            ingest_backlog: DEFAULT_INGEST_BACKLOG,
         }
     }
 }
@@ -146,6 +173,13 @@ pub struct DdmSession {
     /// key → `Some(rect)` upsert / `None` remove, per side.
     pending_subs: BTreeMap<u32, Option<Vec<Interval>>>,
     pending_upds: BTreeMap<u32, Option<Vec<Interval>>>,
+    /// Next-epoch ops whose phase-A tree writes already ran during a
+    /// [`commit_pipelined`](Self::commit_pipelined) overlap; the next
+    /// apply merges them in (fresh staged ops win per key) and runs
+    /// recompute + diff for them without re-writing their tree
+    /// entries.
+    prewritten_subs: BTreeMap<u32, Option<Vec<Interval>>>,
+    prewritten_upds: BTreeMap<u32, Option<Vec<Interval>>>,
     /// Pair churn accumulated by intra-epoch applies, packed; an
     /// appear/disappear of the same pair within one epoch cancels.
     acc_added: HashSet<u64>,
@@ -158,6 +192,15 @@ pub struct DdmSession {
     /// Commit phase-span capture ([`SessionParams::trace`]; disabled
     /// tracers cost one branch per phase boundary).
     tracer: crate::obs::Tracer,
+    /// The published read-side view, RCU-swapped at every publish
+    /// point (flush / commit). Readers clone it and keep reading the
+    /// old payload untouched after later swaps.
+    snap: EpochSnapshot,
+    /// Applied state has changed since the last snapshot publish
+    /// (set by `apply_pending`, cleared by `publish_snapshot`) — lets
+    /// flush republish after intra-staging auto-applies without
+    /// rebuilding on every batch.
+    dirty_since_publish: bool,
 }
 
 impl DdmSession {
@@ -180,12 +223,21 @@ impl DdmSession {
             key_hint: 64,
             pending_subs: BTreeMap::new(),
             pending_upds: BTreeMap::new(),
+            prewritten_subs: BTreeMap::new(),
+            prewritten_upds: BTreeMap::new(),
             acc_added: HashSet::new(),
             acc_removed: HashSet::new(),
             epoch: 0,
             scratch: MatchScratch::new(),
             tracer: crate::obs::Tracer::new(params.trace),
+            snap: EpochSnapshot::default(),
+            dirty_since_publish: false,
         }
+    }
+
+    /// The tuning knobs this session was built with.
+    pub fn params(&self) -> SessionParams {
+        self.params
     }
 
     /// Whether this session is capturing commit phase spans.
@@ -329,17 +381,137 @@ impl DdmSession {
     /// [`subscriptions_of`](Self::subscriptions_of), …) see current
     /// state, while the accumulated churn stays queued so the next
     /// [`commit`](Self::commit) still reports the full diff since the
-    /// last epoch. No-op when nothing is staged.
+    /// last epoch. Publishes a fresh [`EpochSnapshot`] when anything
+    /// was applied since the last publish; a flush with nothing staged
+    /// (and nothing auto-applied earlier) is a pure no-op — no apply,
+    /// no swap, no side effect a reader could observe.
     pub fn flush(&mut self) {
         self.apply_pending();
+        if self.dirty_since_publish {
+            let (ns, nu) = (self.n_subscriptions(), self.n_updates());
+            self.publish_snapshot(ns, nu);
+        }
+    }
+
+    /// The published read-side view: a wait-free, refcounted snapshot
+    /// of the applied state as of the last publish point
+    /// ([`flush`](Self::flush) / [`commit`](Self::commit)). Cloning is
+    /// an `Arc` bump; the returned snapshot's answers never change, no
+    /// matter what the session does afterwards — readers on other
+    /// threads are never blocked by (and never block) a commit.
+    pub fn snapshot(&self) -> EpochSnapshot {
+        self.snap.clone()
+    }
+
+    /// Drain a bounded [`ingest_queue`] into the staged batch (the
+    /// MPSC front-end's consumer side). Records one
+    /// [`backlog_wait`](crate::obs::Phase::BacklogWait) span covering
+    /// the oldest drained op's queue dwell. Returns the drained count.
+    pub fn drain_ingest(&mut self, rx: &IngestReceiver) -> usize {
+        let (drained, oldest) = rx.drain(|op| {
+            self.stage(op.side, op.key, op.op);
+        });
+        if drained > 0 && self.tracer.is_enabled() {
+            let now = crate::obs::clock::now_ns();
+            self.tracer.span_at(
+                crate::obs::Phase::BacklogWait,
+                crate::obs::trace::MASTER_WORKER,
+                oldest.min(now),
+                now,
+                drained as u64,
+            );
+        }
+        drained
     }
 
     /// Apply all staged ops and close the epoch, returning the
     /// intersection delta relative to the previous epoch.
     pub fn commit(&mut self) -> MatchDiff {
+        self.commit_inner(BTreeMap::new(), BTreeMap::new())
+    }
+
+    /// [`commit`](Self::commit), pipelined with the **next** epoch's
+    /// batch: while this epoch's diff is assembled and its snapshot
+    /// swapped in (master lane), a second thread runs the phase-A tree
+    /// writes for `next_subs`/`next_upds` — already-coalesced ops
+    /// (`key → Some(rect)` upsert / `None` remove), e.g. drained from
+    /// an [`ingest_queue`]. The prewritten ops then ride along with
+    /// the next apply (staged ops arriving later win per key), which
+    /// skips their tree writes and runs only recompute + diff.
+    ///
+    /// The returned diff and the published snapshot are exactly those
+    /// of a plain [`commit`](Self::commit) — the overlap only moves
+    /// *next*-epoch tree work off the critical path. Until that next
+    /// apply, [`subscription_rect`](Self::subscription_rect) /
+    /// [`update_rect`](Self::update_rect) (which read the trees) may
+    /// already see the prewritten rectangles.
+    pub fn commit_pipelined(
+        &mut self,
+        next_subs: BTreeMap<u32, Option<Vec<Interval>>>,
+        next_upds: BTreeMap<u32, Option<Vec<Interval>>>,
+    ) -> MatchDiff {
+        self.commit_inner(next_subs, next_upds)
+    }
+
+    fn commit_inner(
+        &mut self,
+        next_subs: BTreeMap<u32, Option<Vec<Interval>>>,
+        next_upds: BTreeMap<u32, Option<Vec<Interval>>>,
+    ) -> MatchDiff {
         let t_commit = self.tracer.start();
         self.apply_pending();
         self.epoch += 1;
+        let (ns, nu) = (self.n_subscriptions(), self.n_updates());
+        let (added, removed) = if next_subs.is_empty() && next_upds.is_empty() {
+            self.drain_and_publish(ns, nu)
+        } else {
+            // Pipelined overlap: the next batch's tree writes touch
+            // only `sub_dims`/`upd_dims` (taken out below), while diff
+            // assembly + snapshot build touch only the pair sets and
+            // accumulators — disjoint state, so the two run
+            // concurrently without any locking.
+            let mut sub_trees = std::mem::take(&mut self.sub_dims);
+            let mut upd_trees = std::mem::take(&mut self.upd_dims);
+            let (drained, t0, t1, wrote) = std::thread::scope(|scope| {
+                let writer = scope.spawn(|| {
+                    let t0 = crate::obs::clock::now_ns();
+                    for (k, tree) in sub_trees.iter_mut().enumerate() {
+                        apply_dim(tree, k, &next_subs);
+                    }
+                    for (k, tree) in upd_trees.iter_mut().enumerate() {
+                        apply_dim(tree, k, &next_upds);
+                    }
+                    (t0, crate::obs::clock::now_ns())
+                });
+                let drained = self.drain_and_publish(ns, nu);
+                let (t0, t1) = writer.join().expect("next-batch tree writer panicked");
+                let wrote = (next_subs.len() + next_upds.len()) as u64;
+                (drained, t0, t1, wrote)
+            });
+            self.sub_dims = sub_trees;
+            self.upd_dims = upd_trees;
+            // The overlapped writes get their own (worker 0) lane so a
+            // trace shows them tiling *under* this commit's envelope.
+            self.tracer
+                .span_at(crate::obs::Phase::TreeWrite, 0, t0, t1, wrote);
+            self.prewritten_subs = next_subs;
+            self.prewritten_upds = next_upds;
+            drained
+        };
+        let churn = (added.len() + removed.len()) as u64;
+        self.tracer.span(crate::obs::Phase::Commit, t_commit, churn);
+        MatchDiff {
+            epoch: self.epoch,
+            added,
+            removed,
+        }
+    }
+
+    /// Drain the epoch's churn accumulator into sorted added/removed
+    /// lists and publish the post-commit snapshot. Runs on the master
+    /// lane; in a pipelined commit it overlaps the next batch's tree
+    /// writes.
+    fn drain_and_publish(&mut self, n_subs: usize, n_upds: usize) -> (PairVec, PairVec) {
         // The accumulator drain + sort is diff assembly — charge it to
         // the same phase as apply_pending's phase-C diff work, so the
         // phase totals tile the whole commit envelope.
@@ -351,26 +523,53 @@ impl DdmSession {
         let churn = (added.len() + removed.len()) as u64;
         self.tracer
             .span(crate::obs::Phase::DiffMerge, t_drain, churn);
-        self.tracer.span(crate::obs::Phase::Commit, t_commit, churn);
-        MatchDiff {
-            epoch: self.epoch,
-            added,
-            removed,
+        self.publish_snapshot(n_subs, n_upds);
+        (added, removed)
+    }
+
+    /// Rebuild the read-side view from the retained pair set and
+    /// RCU-swap it in. `snapshot_swap` covers the rebuild + swap;
+    /// `reader_pin` reports how many reader handles still pin the
+    /// *previous* epoch's payload (they keep it alive until dropped).
+    fn publish_snapshot(&mut self, n_subs: usize, n_upds: usize) {
+        let t_swap = self.tracer.start();
+        let mut packed: Vec<u64> = Vec::with_capacity(self.n_pairs);
+        for (&s, set) in &self.sub_pairs {
+            set.for_each(&mut |u| packed.push(pack_pair(s, u)));
         }
+        packed.sort_unstable();
+        let next = EpochSnapshot::from_packed(self.epoch, packed, n_subs, n_upds);
+        let pinned = (self.snap.readers() - 1) as u64;
+        self.snap = next;
+        self.dirty_since_publish = false;
+        self.tracer
+            .span(crate::obs::Phase::SnapshotSwap, t_swap, self.n_pairs as u64);
+        let t_pin = self.tracer.start();
+        self.tracer
+            .span(crate::obs::Phase::ReaderPin, t_pin, pinned);
     }
 
     /// Apply the staged (already coalesced) batch: write the trees,
     /// recompute the touched regions' overlap sets, fold the churn
     /// into the epoch accumulator.
     fn apply_pending(&mut self) {
-        if self.pending_subs.is_empty() && self.pending_upds.is_empty() {
+        if self.pending_subs.is_empty()
+            && self.pending_upds.is_empty()
+            && self.prewritten_subs.is_empty()
+            && self.prewritten_upds.is_empty()
+        {
             return;
         }
         // Already coalesced at stage time: key → `Some(rect)` upsert /
-        // `None` remove, per side.
+        // `None` remove, per side. Ops prewritten by a pipelined
+        // commit merge in (fresh staged ops win per key); their tree
+        // entries are already current, so phase A below only writes
+        // the fresh keys.
         let t_stage = self.tracer.start();
-        let sub_ops = std::mem::take(&mut self.pending_subs);
-        let upd_ops = std::mem::take(&mut self.pending_upds);
+        let fresh_subs = std::mem::take(&mut self.pending_subs);
+        let fresh_upds = std::mem::take(&mut self.pending_upds);
+        let (sub_ops, sub_fresh) = merge_batch(std::mem::take(&mut self.prewritten_subs), fresh_subs);
+        let (upd_ops, upd_fresh) = merge_batch(std::mem::take(&mut self.prewritten_upds), fresh_upds);
         let touched_count = sub_ops.len() + upd_ops.len();
         let par = self.nthreads > 1 && touched_count >= self.params.parallel_cutoff;
         self.tracer
@@ -392,14 +591,15 @@ impl DdmSession {
             }
             let workers = self.nthreads.min(jobs.len());
             let (sub_ops_ref, upd_ops_ref) = (&sub_ops, &upd_ops);
+            let (sub_fresh_ref, upd_fresh_ref) = (&sub_fresh, &upd_fresh);
             let done: Vec<(Side, TreeIndex)> =
                 self.pool
                     .fan_map_take(workers, jobs, |_i, (side, k, mut tree)| {
-                        let ops = match side {
-                            Side::Subscription => sub_ops_ref,
-                            Side::Update => upd_ops_ref,
+                        let (ops, keys) = match side {
+                            Side::Subscription => (sub_ops_ref, sub_fresh_ref),
+                            Side::Update => (upd_ops_ref, upd_fresh_ref),
                         };
-                        apply_dim(&mut tree, k, ops);
+                        apply_dim_keys(&mut tree, k, ops, keys.as_deref());
                         (side, tree)
                     });
             for (side, tree) in done {
@@ -410,10 +610,10 @@ impl DdmSession {
             }
         } else {
             for (k, tree) in self.sub_dims.iter_mut().enumerate() {
-                apply_dim(tree, k, &sub_ops);
+                apply_dim_keys(tree, k, &sub_ops, sub_fresh.as_deref());
             }
             for (k, tree) in self.upd_dims.iter_mut().enumerate() {
-                apply_dim(tree, k, &upd_ops);
+                apply_dim_keys(tree, k, &upd_ops, upd_fresh.as_deref());
             }
         }
         self.tracer
@@ -585,6 +785,7 @@ impl DdmSession {
         if !self.params.reuse_scratch {
             self.scratch = MatchScratch::new();
         }
+        self.dirty_since_publish = true;
         self.tracer.span(
             crate::obs::Phase::DiffMerge,
             t_diff,
@@ -672,6 +873,47 @@ fn apply_dim(tree: &mut TreeIndex, k: usize, ops: &BTreeMap<u32, Option<Vec<Inte
             None => tree.delete(key),
         }
     }
+}
+
+/// [`apply_dim`], restricted to `keys` when given: the pipelined-apply
+/// path, where every other key in `ops` was already written to the
+/// trees during the previous commit's overlap — only the freshly
+/// staged keys (which override prewritten entries) still need their
+/// `put`/`delete`.
+fn apply_dim_keys(
+    tree: &mut TreeIndex,
+    k: usize,
+    ops: &BTreeMap<u32, Option<Vec<Interval>>>,
+    keys: Option<&[u32]>,
+) {
+    let Some(keys) = keys else {
+        apply_dim(tree, k, ops);
+        return;
+    };
+    for &key in keys {
+        match &ops[&key] {
+            Some(rect) => tree.put(key, rect[k]),
+            None => tree.delete(key),
+        }
+    }
+}
+
+/// Merge a batch prewritten by a pipelined commit (tree entries
+/// already current) with freshly staged ops (fresh wins per key).
+/// Returns the merged batch plus the keys still needing phase-A tree
+/// writes — `None` means "all of them" (the common, non-pipelined
+/// path, kept allocation-free).
+fn merge_batch(
+    prewritten: BTreeMap<u32, Option<Vec<Interval>>>,
+    fresh: BTreeMap<u32, Option<Vec<Interval>>>,
+) -> (BTreeMap<u32, Option<Vec<Interval>>>, Option<Vec<u32>>) {
+    if prewritten.is_empty() {
+        return (fresh, None);
+    }
+    let fresh_keys: Vec<u32> = fresh.keys().copied().collect();
+    let mut merged = prewritten;
+    merged.extend(fresh);
+    (merged, Some(fresh_keys))
 }
 
 /// Intervals sampled per tree by [`seed_dim`].
@@ -1181,5 +1423,214 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Satellite regression: a pure reader never observes a flush side
+    /// effect — read accessors leave staged ops staged and never swap
+    /// the published snapshot.
+    #[test]
+    fn pure_readers_never_flush_staged_ops() {
+        let mut sess = engine().session(1);
+        sess.upsert_subscription(1, &[Interval::new(0.0, 10.0)]);
+        sess.upsert_update(2, &[Interval::new(5.0, 15.0)]);
+        let snap = sess.snapshot();
+        assert_eq!(snap.readers(), 2, "this handle + the session's own");
+        assert_eq!(sess.pending_ops(), 2);
+        let _ = sess.pairs();
+        let _ = sess.n_pairs();
+        let _ = sess.region_count(Side::Subscription);
+        let _ = sess.retained_pair_count();
+        let _ = sess.updates_of(1);
+        let _ = sess.contains_pair(1, 2);
+        let _ = sess.snapshot();
+        assert_eq!(sess.pending_ops(), 2, "reads must not apply staged ops");
+        assert_eq!(snap.readers(), 2, "reads must not swap the snapshot");
+        // A flush with nothing applied since the last publish is a
+        // pure no-op too: same payload, no swap.
+        sess.commit();
+        let snap = sess.snapshot();
+        assert_eq!(snap.readers(), 2);
+        sess.flush();
+        assert_eq!(snap.readers(), 2, "empty flush must not republish");
+    }
+
+    /// Snapshots published at commit equal every live read accessor,
+    /// and an old snapshot stays bit-identical across K later commits
+    /// and after the session is dropped.
+    #[test]
+    fn snapshots_track_live_state_and_stay_immutable() {
+        let mut sess = engine().session(2);
+        let mut rng = Rng::new(0xA11CE);
+        let mut kept: Vec<(EpochSnapshot, PairVec)> = Vec::new();
+        for _epoch in 0..6 {
+            for _ in 0..40 {
+                let key = rng.below(30) as u32;
+                let rect = [ivl(&mut rng), ivl(&mut rng)];
+                match rng.below(4) {
+                    0 | 1 => sess.upsert_subscription(key, &rect),
+                    2 => sess.upsert_update(key, &rect),
+                    _ => sess.remove_update(key),
+                }
+            }
+            sess.commit();
+            let snap = sess.snapshot();
+            assert_eq!(snap.epoch(), sess.epoch());
+            assert_eq!(snap.pairs(), sess.pairs());
+            assert_eq!(snap.n_pairs(), sess.n_pairs());
+            assert_eq!(snap.n_subscriptions(), sess.n_subscriptions());
+            assert_eq!(snap.n_updates(), sess.n_updates());
+            for key in 0..30u32 {
+                assert_eq!(snap.updates_of(key), sess.updates_of(key));
+                assert_eq!(snap.subscriptions_of(key), sess.subscriptions_of(key));
+                assert_eq!(
+                    snap.contains_pair(key, (key + 1) % 30),
+                    sess.contains_pair(key, (key + 1) % 30)
+                );
+            }
+            kept.push((snap, sess.pairs()));
+        }
+        drop(sess);
+        for (e, (snap, pairs)) in kept.iter().enumerate() {
+            assert_eq!(snap.epoch(), e as u64 + 1);
+            assert_eq!(&snap.pairs(), pairs, "snapshot of epoch {} changed", e + 1);
+        }
+    }
+
+    /// flush publishes mid-epoch state under the still-open epoch
+    /// number; commit republishes under the closed epoch's.
+    #[test]
+    fn flush_publishes_and_commit_advances_snapshot_epoch() {
+        let mut sess = engine().session(1);
+        sess.upsert_subscription(1, &[Interval::new(0.0, 10.0)]);
+        sess.upsert_update(2, &[Interval::new(5.0, 15.0)]);
+        assert!(sess.snapshot().is_empty(), "nothing published before flush");
+        sess.flush();
+        let mid = sess.snapshot();
+        assert_eq!(mid.epoch(), 0, "flush keeps the epoch open");
+        assert_eq!(mid.pairs(), vec![(1, 2)]);
+        sess.upsert_update(2, &[Interval::new(50.0, 60.0)]);
+        sess.commit();
+        assert_eq!(sess.snapshot().epoch(), 1);
+        assert!(sess.snapshot().pairs().is_empty());
+        assert_eq!(mid.pairs(), vec![(1, 2)], "old handle still reads epoch-0 state");
+    }
+
+    /// A pipelined commit returns the same diffs and reaches the same
+    /// state as a plain commit whose next batch is staged the ordinary
+    /// way.
+    #[test]
+    fn pipelined_commit_agrees_with_plain_commit() {
+        let mut pip = engine().session(2);
+        let mut plain = engine().session(2);
+        let mut rng = Rng::new(0x9199);
+        for _epoch in 0..6 {
+            for _ in 0..30 {
+                let key = rng.below(25) as u32;
+                let rect = [ivl(&mut rng), ivl(&mut rng)];
+                match rng.below(4) {
+                    0 | 1 => {
+                        pip.upsert_subscription(key, &rect);
+                        plain.upsert_subscription(key, &rect);
+                    }
+                    2 => {
+                        pip.upsert_update(key, &rect);
+                        plain.upsert_update(key, &rect);
+                    }
+                    _ => {
+                        pip.remove_update(key);
+                        plain.remove_update(key);
+                    }
+                }
+            }
+            // Next epoch's batch: prewritten through the pipelined
+            // overlap on `pip`, staged the ordinary way on `plain`.
+            let mut next_subs: BTreeMap<u32, Option<Vec<Interval>>> = BTreeMap::new();
+            let mut next_upds: BTreeMap<u32, Option<Vec<Interval>>> = BTreeMap::new();
+            for _ in 0..15 {
+                let key = rng.below(25) as u32;
+                let rect = vec![ivl(&mut rng), ivl(&mut rng)];
+                match rng.below(3) {
+                    0 => next_subs.insert(key, Some(rect)),
+                    1 => next_upds.insert(key, Some(rect)),
+                    _ => next_upds.insert(key, None),
+                };
+            }
+            let dp = pip.commit_pipelined(next_subs.clone(), next_upds.clone());
+            let dq = plain.commit();
+            assert_eq!(dp, dq);
+            assert_eq!(pip.pairs(), plain.pairs());
+            assert_eq!(pip.snapshot().pairs(), plain.snapshot().pairs());
+            for (k, op) in &next_subs {
+                match op {
+                    Some(r) => plain.upsert_subscription(*k, r),
+                    None => plain.remove_subscription(*k),
+                }
+            }
+            for (k, op) in &next_upds {
+                match op {
+                    Some(r) => plain.upsert_update(*k, r),
+                    None => plain.remove_update(*k),
+                }
+            }
+        }
+        let (dp, dq) = (pip.commit(), plain.commit());
+        assert_eq!(dp, dq, "final prewritten batch lands identically");
+        assert_eq!(pip.pairs(), plain.pairs());
+        assert_eq!(pip.snapshot(), plain.snapshot());
+    }
+
+    /// Ops drained from the MPSC front-end stage like direct calls,
+    /// and a traced drain records one backlog_wait span.
+    #[test]
+    fn ingest_drain_stages_ops_and_records_backlog_wait() {
+        let mut sess = DdmEngine::builder().threads(1).trace(true).build().session(1);
+        let (tx, rx) = ingest_queue(8);
+        tx.try_upsert(Side::Subscription, 1, &[Interval::new(0.0, 10.0)])
+            .unwrap();
+        tx.try_upsert(Side::Update, 2, &[Interval::new(5.0, 15.0)])
+            .unwrap();
+        tx.try_remove(Side::Update, 7).unwrap();
+        assert_eq!(sess.drain_ingest(&rx), 3);
+        assert_eq!(sess.pending_ops(), 3);
+        assert_eq!(rx.depth(), 0, "drain empties the backlog gauge");
+        let d = sess.commit();
+        assert_eq!(d.added, vec![(1, 2)]);
+        let spans = sess.drain_trace();
+        let waits: Vec<_> = spans
+            .iter()
+            .filter(|s| s.phase == crate::obs::Phase::BacklogWait.id())
+            .collect();
+        assert_eq!(waits.len(), 1, "one span per non-empty drain");
+        assert_eq!(waits[0].items, 3);
+        assert_eq!(sess.drain_ingest(&rx), 0, "empty drain records nothing");
+    }
+
+    /// Every traced commit emits snapshot_swap + reader_pin spans that
+    /// tile inside the commit envelope.
+    #[test]
+    fn traced_commit_emits_snapshot_swap_and_reader_pin() {
+        let mut sess = DdmEngine::builder().threads(1).trace(true).build().session(1);
+        sess.upsert_subscription(1, &[Interval::new(0.0, 10.0)]);
+        sess.upsert_update(2, &[Interval::new(5.0, 15.0)]);
+        let reader = sess.snapshot(); // pins the pre-commit payload
+        sess.commit();
+        let spans = sess.drain_trace();
+        let find = |p: crate::obs::Phase| {
+            spans
+                .iter()
+                .find(|s| s.phase == p.id())
+                .unwrap_or_else(|| panic!("missing {} span", p.name()))
+        };
+        let env = find(crate::obs::Phase::Commit);
+        let swap = find(crate::obs::Phase::SnapshotSwap);
+        let pin = find(crate::obs::Phase::ReaderPin);
+        assert!(
+            swap.t0_ns >= env.t0_ns && swap.t1_ns <= env.t1_ns,
+            "snapshot_swap tiles inside the commit envelope"
+        );
+        assert!(pin.t1_ns <= env.t1_ns);
+        assert_eq!(pin.items, 1, "one reader handle pins the old payload");
+        assert_eq!(swap.items, 1, "post-commit snapshot holds one pair");
+        assert_eq!(reader.n_pairs(), 0, "pinned payload is the pre-commit one");
     }
 }

@@ -1,0 +1,249 @@
+//! Immutable per-epoch snapshots: the wait-free read side of the
+//! session's MVCC split.
+//!
+//! [`EpochSnapshot`] is a refcounted, immutable view of one epoch's
+//! applied match state — the retained pair set in both sort orders
+//! plus the live region counts. The owning
+//! [`DdmSession`](super::DdmSession) rebuilds one at every publish
+//! point (flush / commit) and RCU-swaps it in; readers that cloned the
+//! previous snapshot keep reading it untouched for as long as they
+//! hold it, even across later commits or after the session is dropped.
+//!
+//! Every read on this type is lock-free and non-blocking by
+//! construction: cloning is an `Arc` refcount bump and queries walk
+//! immutable sorted slices. `xtask lint` enforces the invariant with
+//! the `session-read-no-lock` rule — no `Mutex`/`RwLock` acquisition
+//! may appear inside this file's fns.
+
+use std::sync::Arc;
+
+use super::Side;
+use crate::core::sink::{pack_pair, unpack_pair, PairVec};
+
+/// The shared immutable payload behind an [`EpochSnapshot`].
+#[derive(Debug, Default, PartialEq, Eq)]
+struct SnapInner {
+    /// Epoch the snapshot was published at (flush publishes keep the
+    /// still-open epoch's number).
+    epoch: u64,
+    /// Packed `(subscription key << 32) | update key` pairs, ascending
+    /// — the subscription-major order [`pairs`](EpochSnapshot::pairs)
+    /// and [`updates_of`](EpochSnapshot::updates_of) answer from.
+    by_sub: Vec<u64>,
+    /// The same pairs packed `(update key << 32) | subscription key`,
+    /// ascending — the update-major order
+    /// [`subscriptions_of`](EpochSnapshot::subscriptions_of) answers
+    /// from.
+    by_upd: Vec<u64>,
+    /// Live subscription regions at publish time.
+    n_subs: usize,
+    /// Live update regions at publish time.
+    n_upds: usize,
+}
+
+/// A wait-free, refcounted view of one epoch's applied match state.
+///
+/// Obtained from
+/// [`DdmSession::snapshot`](super::DdmSession::snapshot) /
+/// [`ShardedSession::snapshot`](crate::shard::ShardedSession::snapshot)
+/// / [`AnySession::snapshot`](crate::shard::AnySession::snapshot).
+/// Cloning is O(1); all queries read immutable sorted slices and the
+/// answers never change, no matter what the session does afterwards.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct EpochSnapshot {
+    inner: Arc<SnapInner>,
+}
+
+/// Swap the two packed keys: `(hi << 32) | lo` → `(lo << 32) | hi`.
+fn swap_packed(p: u64) -> u64 {
+    (p << 32) | (p >> 32)
+}
+
+impl EpochSnapshot {
+    /// Build a snapshot from an ascending, duplicate-free packed pair
+    /// list (subscription-major, as produced by
+    /// [`pack_pair`](crate::core::sink::pack_pair)).
+    pub(crate) fn from_packed(epoch: u64, by_sub: Vec<u64>, n_subs: usize, n_upds: usize) -> Self {
+        let mut by_upd: Vec<u64> = by_sub.iter().map(|&p| swap_packed(p)).collect();
+        by_upd.sort_unstable();
+        Self {
+            inner: Arc::new(SnapInner {
+                epoch,
+                by_sub,
+                by_upd,
+                n_subs,
+                n_upds,
+            }),
+        }
+    }
+
+    /// Merge per-shard snapshots into one global view: pairs are
+    /// deduplicated (a boundary-straddling pair is retained by every
+    /// shard it crosses), region counts are the caller's global ones
+    /// (per-shard counts would double-count straddlers too).
+    pub(crate) fn merge(epoch: u64, parts: &[EpochSnapshot], n_subs: usize, n_upds: usize) -> Self {
+        let total: usize = parts.iter().map(|p| p.inner.by_sub.len()).sum();
+        let mut by_sub: Vec<u64> = Vec::with_capacity(total);
+        for part in parts {
+            by_sub.extend_from_slice(&part.inner.by_sub);
+        }
+        by_sub.sort_unstable();
+        by_sub.dedup();
+        Self::from_packed(epoch, by_sub, n_subs, n_upds)
+    }
+
+    /// Epoch this snapshot was published at.
+    pub fn epoch(&self) -> u64 {
+        self.inner.epoch
+    }
+
+    /// Number of intersecting pairs in the snapshot.
+    pub fn n_pairs(&self) -> usize {
+        self.inner.by_sub.len()
+    }
+
+    /// `true` when the snapshot holds no pairs and no regions.
+    pub fn is_empty(&self) -> bool {
+        self.inner.by_sub.is_empty() && self.inner.n_subs == 0 && self.inner.n_upds == 0
+    }
+
+    /// Live subscription regions at publish time.
+    pub fn n_subscriptions(&self) -> usize {
+        self.inner.n_subs
+    }
+
+    /// Live update regions at publish time.
+    pub fn n_updates(&self) -> usize {
+        self.inner.n_upds
+    }
+
+    /// Live regions on one side at publish time.
+    pub fn region_count(&self, side: Side) -> usize {
+        match side {
+            Side::Subscription => self.inner.n_subs,
+            Side::Update => self.inner.n_upds,
+        }
+    }
+
+    /// Every intersecting pair, sorted — identical to what
+    /// [`DdmSession::pairs`](super::DdmSession::pairs) returned at the
+    /// publish point.
+    pub fn pairs(&self) -> PairVec {
+        self.inner.by_sub.iter().map(|&p| unpack_pair(p)).collect()
+    }
+
+    /// The pairs in packed subscription-major form (ascending), no
+    /// copy.
+    pub fn packed_pairs(&self) -> &[u64] {
+        &self.inner.by_sub
+    }
+
+    /// Whether the pair intersected at the publish point.
+    pub fn contains_pair(&self, sub_key: u32, upd_key: u32) -> bool {
+        self.inner
+            .by_sub
+            .binary_search(&pack_pair(sub_key, upd_key))
+            .is_ok()
+    }
+
+    /// Update keys intersecting subscription `sub_key`, ascending.
+    pub fn updates_of(&self, sub_key: u32) -> Vec<u32> {
+        range_of(&self.inner.by_sub, sub_key)
+    }
+
+    /// Subscription keys intersecting update `upd_key`, ascending.
+    pub fn subscriptions_of(&self, upd_key: u32) -> Vec<u32> {
+        range_of(&self.inner.by_upd, upd_key)
+    }
+
+    /// How many handles (including this one) currently pin the
+    /// snapshot's payload — the session reports the lingering count as
+    /// the `reader_pin` span after each swap.
+    pub fn readers(&self) -> usize {
+        Arc::strong_count(&self.inner)
+    }
+}
+
+/// Low halves of the contiguous run of packed keys whose high half is
+/// `hi` (binary-searched range bounds on an ascending packed list).
+fn range_of(packed: &[u64], hi: u32) -> Vec<u32> {
+    let base = (hi as u64) << 32;
+    let start = packed.partition_point(|&p| p < base);
+    let end = packed.partition_point(|&p| p <= (base | u64::from(u32::MAX)));
+    packed[start..end].iter().map(|&p| p as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(pairs: &[(u32, u32)]) -> EpochSnapshot {
+        let mut packed: Vec<u64> = pairs.iter().map(|&(s, u)| pack_pair(s, u)).collect();
+        packed.sort_unstable();
+        packed.dedup();
+        EpochSnapshot::from_packed(7, packed, 3, 4)
+    }
+
+    #[test]
+    fn default_snapshot_is_empty_epoch_zero() {
+        let s = EpochSnapshot::default();
+        assert_eq!(s.epoch(), 0);
+        assert!(s.is_empty());
+        assert_eq!(s.n_pairs(), 0);
+        assert!(s.pairs().is_empty());
+        assert!(s.updates_of(0).is_empty());
+        assert!(!s.contains_pair(0, 0));
+    }
+
+    #[test]
+    fn queries_answer_both_sort_orders() {
+        let s = snap(&[(1, 9), (1, 2), (5, 2), (0, 7)]);
+        assert_eq!(s.epoch(), 7);
+        assert_eq!(s.n_pairs(), 4);
+        assert_eq!(s.n_subscriptions(), 3);
+        assert_eq!(s.region_count(Side::Update), 4);
+        assert_eq!(s.pairs(), vec![(0, 7), (1, 2), (1, 9), (5, 2)]);
+        assert_eq!(s.updates_of(1), vec![2, 9]);
+        assert_eq!(s.updates_of(4), Vec::<u32>::new());
+        assert_eq!(s.subscriptions_of(2), vec![1, 5]);
+        assert_eq!(s.subscriptions_of(7), vec![0]);
+        assert!(s.contains_pair(1, 9));
+        assert!(!s.contains_pair(9, 1));
+    }
+
+    #[test]
+    fn boundary_keys_do_not_bleed_between_runs() {
+        // Adjacent high halves with extreme low halves: the range scan
+        // must not leak u32::MAX of one run into the next.
+        let s = snap(&[(1, u32::MAX), (2, 0), (2, u32::MAX), (3, 0)]);
+        assert_eq!(s.updates_of(1), vec![u32::MAX]);
+        assert_eq!(s.updates_of(2), vec![0, u32::MAX]);
+        assert_eq!(s.updates_of(3), vec![0]);
+        assert_eq!(s.subscriptions_of(0), vec![2, 3]);
+        assert_eq!(s.subscriptions_of(u32::MAX), vec![1, 2]);
+    }
+
+    #[test]
+    fn merge_dedups_straddlers_and_keeps_global_counts() {
+        let a = snap(&[(1, 2), (3, 4)]);
+        let b = snap(&[(3, 4), (5, 6)]);
+        let m = EpochSnapshot::merge(9, &[a, b], 10, 11);
+        assert_eq!(m.epoch(), 9);
+        assert_eq!(m.pairs(), vec![(1, 2), (3, 4), (5, 6)]);
+        assert_eq!(m.n_subscriptions(), 10);
+        assert_eq!(m.n_updates(), 11);
+        assert_eq!(m.subscriptions_of(4), vec![3]);
+    }
+
+    #[test]
+    fn clones_share_the_payload_and_count_readers() {
+        let s = snap(&[(1, 2)]);
+        assert_eq!(s.readers(), 1);
+        let c = s.clone();
+        assert_eq!(s.readers(), 2);
+        assert_eq!(c.pairs(), s.pairs());
+        drop(s);
+        assert_eq!(c.readers(), 1);
+        assert_eq!(c.pairs(), vec![(1, 2)]);
+    }
+}

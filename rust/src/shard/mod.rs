@@ -43,7 +43,7 @@ pub use session::{ShardStats, ShardedSession};
 use crate::core::interval::Interval;
 use crate::core::sink::PairVec;
 use crate::core::{Regions1D, RegionsNd};
-use crate::session::{DdmSession, MatchDiff};
+use crate::session::{DdmSession, EpochSnapshot, IngestReceiver, MatchDiff, SessionParams};
 
 /// How a sharded session derives its stripe cuts.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -182,6 +182,34 @@ impl AnySession {
         }
     }
 
+    /// The current wait-free read snapshot (sharded: the cached merge
+    /// of every shard's snapshot). O(1); the handle stays valid and
+    /// bit-identical across later commits.
+    pub fn snapshot(&self) -> EpochSnapshot {
+        match self {
+            AnySession::Single(s) => s.snapshot(),
+            AnySession::Sharded(s) => s.snapshot(),
+        }
+    }
+
+    /// Drain a bounded ingest queue into the staging maps; returns the
+    /// drained count (see
+    /// [`ingest_queue`](crate::session::ingest_queue)).
+    pub fn drain_ingest(&mut self, rx: &IngestReceiver) -> usize {
+        match self {
+            AnySession::Single(s) => s.drain_ingest(rx),
+            AnySession::Sharded(s) => s.drain_ingest(rx),
+        }
+    }
+
+    /// The parameters the session was built with.
+    pub fn params(&self) -> SessionParams {
+        match self {
+            AnySession::Single(s) => s.params(),
+            AnySession::Sharded(s) => s.params(),
+        }
+    }
+
     /// Every currently intersecting pair, sorted and duplicate-free.
     pub fn pairs(&self) -> PairVec {
         match self {
@@ -312,6 +340,10 @@ mod tests {
             assert_eq!(diffs[0], diffs[1]);
             assert_eq!(sessions[0].pairs(), sessions[1].pairs());
             assert_eq!(sessions[0].n_pairs(), sessions[1].n_pairs());
+            let (a, b) = (sessions[0].snapshot(), sessions[1].snapshot());
+            assert_eq!(a.epoch(), b.epoch(), "snapshot epochs diverged");
+            assert_eq!(a.pairs(), b.pairs(), "snapshot pair sets diverged");
+            assert_eq!(a.pairs(), sessions[0].pairs(), "snapshot != live reads");
         }
     }
 }

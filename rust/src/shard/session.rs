@@ -30,6 +30,17 @@
 //!   nets a shard-local remove against a shard-local add and is
 //!   reported **not at all**;
 //! * a pair leaving every shard is reported removed exactly once.
+//!
+//! ## Wait-free reads
+//!
+//! Every publish point (flush / commit) also merges the shards'
+//! per-epoch snapshots into one cached global
+//! [`EpochSnapshot`](crate::session::EpochSnapshot). All read
+//! accessors (`pairs`, `n_pairs`, `updates_of`, `subscriptions_of`,
+//! `contains_pair`) answer from that cache — a pure reader never takes
+//! a shard lock, never routes staged ops, and never observes a flush
+//! side effect; [`snapshot`](ShardedSession::snapshot) hands the same
+//! immutable view out for readers that outlive the next commit.
 
 // xlint: allow-file(hot-lock): the per-shard Mutex is the design —
 // each inner session is locked by exactly one worker during the
@@ -43,7 +54,7 @@ use crate::core::interval::Interval;
 use crate::core::sink::{pack_pair, unpack_pair, PairVec};
 use crate::core::{Regions1D, RegionsNd};
 use crate::exec::ThreadPool;
-use crate::session::{DdmSession, MatchDiff, SessionParams, Side};
+use crate::session::{DdmSession, EpochSnapshot, IngestReceiver, MatchDiff, SessionParams, Side};
 
 use super::partition::SpacePartitioner;
 use super::ShardStrategy;
@@ -114,10 +125,10 @@ pub struct ShardedSession {
     pending_upds: BTreeMap<u32, Option<Vec<Interval>>>,
     /// Global pair → number of shards currently holding it.
     pair_refs: HashMap<u64, u32>,
-    /// A flush applied ops the refcounts have not absorbed yet
-    /// (cleared by commit) — `n_pairs` falls back to a live merge
-    /// while set, keeping it consistent with `pairs()`.
-    flushed_since_commit: bool,
+    /// Cached merged read snapshot, rebuilt at every publish point
+    /// (flush / commit) from the shards' own snapshots — the wait-free
+    /// surface every read accessor answers from (no shard locks).
+    snap: EpochSnapshot,
     epoch: u64,
     /// Ops forwarded per shard since the last commit.
     ops_since_commit: Vec<usize>,
@@ -167,7 +178,7 @@ impl ShardedSession {
             pending_subs: BTreeMap::new(),
             pending_upds: BTreeMap::new(),
             pair_refs: HashMap::new(),
-            flushed_since_commit: false,
+            snap: EpochSnapshot::default(),
             epoch: 0,
             ops_since_commit: vec![0; shards],
             last_epoch_ops: vec![0; shards],
@@ -223,18 +234,12 @@ impl ShardedSession {
         self.upd_homes.len()
     }
 
-    /// Globally intersecting pairs: O(1) from the merged refcounts
-    /// when the last apply was a commit; a live merged count when a
-    /// [`flush`](Self::flush) has applied ops the refcounts have not
-    /// absorbed yet (so it always agrees with [`pairs`](Self::pairs)
-    /// and with the unsharded session behind
-    /// [`AnySession`](super::AnySession)).
+    /// Globally intersecting pairs: O(1) from the cached merged
+    /// snapshot (rebuilt at every flush / commit, so it always agrees
+    /// with [`pairs`](Self::pairs) and with the unsharded session
+    /// behind [`AnySession`](super::AnySession)). No shard locks.
     pub fn n_pairs(&self) -> usize {
-        if self.flushed_since_commit {
-            self.packed_live_pairs().len()
-        } else {
-            self.pair_refs.len()
-        }
+        self.snap.n_pairs()
     }
 
     // ---- staging -----------------------------------------------------------
@@ -375,8 +380,11 @@ impl ShardedSession {
             return;
         }
         self.route_pending();
-        self.fan(|sess| sess.flush());
-        self.flushed_since_commit = true;
+        let snaps = self.fan(|sess| {
+            sess.flush();
+            sess.snapshot()
+        });
+        self.publish_merged(&snaps);
     }
 
     /// Route and apply all staged ops, close the epoch on every shard
@@ -396,7 +404,7 @@ impl ShardedSession {
             let diff = sess.commit();
             let t1 = crate::obs::clock::now_ns();
             let spans = if traced { sess.drain_trace() } else { Vec::new() };
-            (diff, t0, t1, spans)
+            (diff, t0, t1, spans, sess.snapshot())
         });
         self.epoch += 1;
         self.last_epoch_ops = std::mem::replace(
@@ -408,7 +416,9 @@ impl ShardedSession {
         // 0 ↔ >0 transitions surface.
         let t_merge = self.tracer.start();
         let mut delta: HashMap<u64, i32> = HashMap::new();
-        for (i, (diff, t0, t1, spans)) in results.into_iter().enumerate() {
+        let mut snaps: Vec<EpochSnapshot> = Vec::with_capacity(self.inner.len());
+        for (i, (diff, t0, t1, spans, snap)) in results.into_iter().enumerate() {
+            snaps.push(snap);
             self.last_epoch_churn[i] = diff.churn();
             self.last_epoch_commit_ns[i] = t1.saturating_sub(t0);
             if traced {
@@ -462,13 +472,73 @@ impl ShardedSession {
         removed.sort_unstable();
         let churn = (added.len() + removed.len()) as u64;
         self.tracer.span(crate::obs::Phase::DiffMerge, t_merge, churn);
+        self.publish_merged(&snaps);
         self.tracer.span(crate::obs::Phase::Commit, t_commit, churn);
-        self.flushed_since_commit = false;
         MatchDiff {
             epoch: self.epoch,
             added,
             removed,
         }
+    }
+
+    /// Merge the shards' per-epoch snapshots into one global view and
+    /// RCU-swap the read cache (same publish spans as the unsharded
+    /// session: `snapshot_swap` sized by the new pair count,
+    /// `reader_pin` counting handles still pinning the old payload).
+    fn publish_merged(&mut self, parts: &[EpochSnapshot]) {
+        let t_swap = self.tracer.start();
+        let merged = EpochSnapshot::merge(
+            self.epoch,
+            parts,
+            self.sub_homes.len(),
+            self.upd_homes.len(),
+        );
+        let pairs = merged.n_pairs() as u64;
+        let pinned = (self.snap.readers() - 1) as u64;
+        self.snap = merged;
+        self.tracer.span(crate::obs::Phase::SnapshotSwap, t_swap, pairs);
+        let t_pin = self.tracer.start();
+        self.tracer.span(crate::obs::Phase::ReaderPin, t_pin, pinned);
+    }
+
+    /// The current merged read snapshot: a wait-free, refcounted view
+    /// of the applied state as of the last flush / commit. O(1); the
+    /// returned handle stays valid (and bit-identical) across later
+    /// commits and after the session is dropped.
+    pub fn snapshot(&self) -> EpochSnapshot {
+        self.snap.clone()
+    }
+
+    /// Drain a bounded ingest queue (see
+    /// [`ingest_queue`](crate::session::ingest_queue)) into the
+    /// staging maps: every queued op becomes an ordinary staged
+    /// upsert / remove (LWW-coalesced, `batch_threshold` honored).
+    /// Returns the drained count; traced sessions fold the batch's
+    /// backlog dwell into one
+    /// [`BacklogWait`](crate::obs::Phase::BacklogWait) span.
+    pub fn drain_ingest(&mut self, rx: &IngestReceiver) -> usize {
+        let (drained, oldest) = rx.drain(|op| match (op.side, op.op) {
+            (Side::Subscription, Some(rect)) => self.upsert_subscription(op.key, &rect),
+            (Side::Subscription, None) => self.remove_subscription(op.key),
+            (Side::Update, Some(rect)) => self.upsert_update(op.key, &rect),
+            (Side::Update, None) => self.remove_update(op.key),
+        });
+        if drained > 0 && self.tracer.is_enabled() {
+            let now = crate::obs::clock::now_ns();
+            self.tracer.span_at(
+                crate::obs::Phase::BacklogWait,
+                crate::obs::trace::MASTER_WORKER,
+                oldest.min(now),
+                now,
+                drained as u64,
+            );
+        }
+        drained
+    }
+
+    /// The parameters every inner session was built with.
+    pub fn params(&self) -> SessionParams {
+        self.params
     }
 
     /// Run `f` on every inner session — across shards on the worker
@@ -502,69 +572,32 @@ impl ShardedSession {
 
     // ---- queries over the retained state -----------------------------------
     //
-    // All of these answer from the *applied* state of the inner
-    // sessions (call `flush` first to see staged ops), except
-    // `n_pairs`, which reports the globally merged count as of the
-    // last commit.
+    // All of these answer from the cached merged snapshot — the
+    // applied state as of the last flush / commit (call `flush` first
+    // to see staged ops). A pure reader takes no shard locks and
+    // triggers no routing, ever.
 
     /// Every currently intersecting (subscription key, update key)
     /// pair, sorted, deduplicated across boundary replicas.
     pub fn pairs(&self) -> PairVec {
-        self.packed_live_pairs().into_iter().map(unpack_pair).collect()
-    }
-
-    /// The live merged pair set, packed, sorted, deduplicated.
-    fn packed_live_pairs(&self) -> Vec<u64> {
-        let mut packed: Vec<u64> = Vec::new();
-        for cell in &self.inner {
-            let sess = lock_ok(cell);
-            for (s, u) in sess.pairs() {
-                packed.push(pack_pair(s, u));
-            }
-        }
-        packed.sort_unstable();
-        packed.dedup();
-        packed
+        self.snap.pairs()
     }
 
     /// Update keys currently intersecting subscription `key`, sorted,
     /// deduplicated across the shards the subscription lives in.
     pub fn updates_of(&self, sub_key: u32) -> Vec<u32> {
-        let Some(&(a, b)) = self.sub_homes.get(&sub_key) else {
-            return Vec::new();
-        };
-        let mut out: Vec<u32> = Vec::new();
-        for cell in &self.inner[a..=b] {
-            out.extend(lock_ok(cell).updates_of(sub_key));
-        }
-        out.sort_unstable();
-        out.dedup();
-        out
+        self.snap.updates_of(sub_key)
     }
 
     /// Subscription keys currently intersecting update `key`, sorted,
     /// deduplicated across the shards the update lives in.
     pub fn subscriptions_of(&self, upd_key: u32) -> Vec<u32> {
-        let Some(&(a, b)) = self.upd_homes.get(&upd_key) else {
-            return Vec::new();
-        };
-        let mut out: Vec<u32> = Vec::new();
-        for cell in &self.inner[a..=b] {
-            out.extend(lock_ok(cell).subscriptions_of(upd_key));
-        }
-        out.sort_unstable();
-        out.dedup();
-        out
+        self.snap.subscriptions_of(upd_key)
     }
 
     /// Whether the pair currently intersects (in any shard).
     pub fn contains_pair(&self, sub_key: u32, upd_key: u32) -> bool {
-        let Some(&(a, b)) = self.sub_homes.get(&sub_key) else {
-            return false;
-        };
-        self.inner[a..=b]
-            .iter()
-            .any(|cell| lock_ok(cell).contains_pair(sub_key, upd_key))
+        self.snap.contains_pair(sub_key, upd_key)
     }
 
     // ---- introspection ------------------------------------------------------
@@ -852,6 +885,56 @@ mod tests {
         let d = sess.commit();
         assert_eq!(d.added, vec![(1, 2)], "diff survives interleaved flush");
         assert_eq!(sess.n_pairs(), 1, "refcounts absorbed at commit");
+    }
+
+    /// Regression (wait-free reads): every read accessor answers from
+    /// the cached merged snapshot — staged ops stay staged, no flush
+    /// side effect is ever observable from a pure reader, and handed-
+    /// out snapshots stay bit-identical across later commits.
+    #[test]
+    fn pure_reads_answer_from_the_merged_snapshot_without_routing() {
+        let mut sess = sharded(3, 1, 90.0);
+        sess.upsert_subscription(1, &[Interval::new(10.0, 70.0)]);
+        sess.upsert_update(2, &[Interval::new(55.0, 65.0)]);
+        sess.commit();
+        let snap = sess.snapshot();
+        assert_eq!(snap.epoch(), 1);
+        assert_eq!(snap.pairs(), vec![(1, 2)]);
+        assert_eq!(snap.n_subscriptions(), 1);
+        assert_eq!(snap.n_updates(), 1);
+        // Stage without applying: reads answer from the snapshot and
+        // leave the staged ops untouched.
+        sess.upsert_update(3, &[Interval::new(20.0, 30.0)]);
+        let staged = sess.pending_ops();
+        assert_eq!(sess.pairs(), vec![(1, 2)]);
+        assert_eq!(sess.n_pairs(), 1);
+        assert_eq!(sess.updates_of(1), vec![2]);
+        assert_eq!(sess.subscriptions_of(2), vec![1]);
+        assert!(sess.contains_pair(1, 2));
+        assert!(!sess.contains_pair(1, 3));
+        assert_eq!(sess.pending_ops(), staged, "a pure read routed staged ops");
+        assert_eq!(sess.snapshot().epoch(), 1, "a pure read republished the snapshot");
+        // The handed-out snapshot survives the next commit unchanged.
+        sess.commit();
+        assert_eq!(snap.pairs(), vec![(1, 2)], "published snapshot mutated");
+        assert_eq!(sess.snapshot().epoch(), 2);
+        assert_eq!(sess.updates_of(1), vec![2, 3]);
+    }
+
+    /// Queued ingest ops route through the sharded session exactly
+    /// like directly staged ones.
+    #[test]
+    fn drain_ingest_routes_queued_ops_through_the_sharded_session() {
+        let (tx, rx) = crate::session::ingest_queue(8);
+        let mut sess = sharded(2, 1, 100.0);
+        tx.try_upsert(Side::Subscription, 1, &[Interval::new(40.0, 60.0)]).unwrap();
+        tx.try_upsert(Side::Update, 2, &[Interval::new(45.0, 55.0)]).unwrap();
+        tx.try_remove(Side::Update, 7).unwrap();
+        assert_eq!(sess.drain_ingest(&rx), 3);
+        assert_eq!(rx.depth(), 0, "drained ops must release their slots");
+        assert_eq!(sess.pending_ops(), 3);
+        assert_eq!(sess.commit().added, vec![(1, 2)]);
+        assert_eq!(sess.drain_ingest(&rx), 0);
     }
 
     #[test]

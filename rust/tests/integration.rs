@@ -459,6 +459,137 @@ fn sharded_session_equivalence_property() {
     }
 }
 
+/// MVCC immutability property (the snapshot acceptance property): an
+/// `EpochSnapshot` taken at epoch e answers identically — epoch, pair
+/// set, point lookups, and per-key indexes — after every subsequent
+/// commit and after the session itself is dropped; and at every epoch
+/// the freshly published snapshot equals both a live read and a fresh
+/// static `pairs_nd` over the same regions. Runs across sharded and
+/// unsharded sessions, d ∈ {1, 3}, P ∈ {1, 4}.
+#[test]
+fn epoch_snapshots_are_immutable_and_match_static_state() {
+    use ddm::core::{Interval, RegionsNd};
+    use ddm::session::EpochSnapshot;
+    use ddm::shard::{AnySession, SpacePartitioner};
+    use std::collections::BTreeMap;
+
+    const KEYS: u32 = 48;
+    type Fingerprint = (u64, Vec<(u32, u32)>, Vec<Vec<u32>>, Vec<Vec<u32>>);
+    let fingerprint = |snap: &EpochSnapshot| -> Fingerprint {
+        (
+            snap.epoch(),
+            snap.pairs(),
+            (0..KEYS).map(|k| snap.updates_of(k)).collect(),
+            (0..KEYS).map(|k| snap.subscriptions_of(k)).collect(),
+        )
+    };
+
+    for p in [1usize, 4] {
+        let engine = DdmEngine::builder().threads(p).parallel_cutoff(8).build();
+        for d in [1usize, 3] {
+            for shards in [0usize, 4] {
+                let label = format!("P={p} d={d} shards={shards}");
+                let mut sess = if shards == 0 {
+                    AnySession::Single(engine.session(d))
+                } else {
+                    let part =
+                        SpacePartitioner::uniform(shards, 0, Interval::new(0.0, 100.0));
+                    AnySession::Sharded(engine.sharded_session_with(d, part))
+                };
+                let mut rng = Rng::new(
+                    0xE90C ^ (d as u64 * 31) ^ (shards as u64 * 7) ^ ((p as u64) << 9),
+                );
+                let mut model_s: BTreeMap<u32, Vec<Interval>> = BTreeMap::new();
+                let mut model_u: BTreeMap<u32, Vec<Interval>> = BTreeMap::new();
+                // Every epoch's snapshot, kept pinned with its
+                // fingerprint taken at publish time.
+                let mut kept: Vec<(EpochSnapshot, Fingerprint)> = Vec::new();
+                for epoch in 0..6 {
+                    for _ in 0..30 {
+                        let key = rng.below(KEYS as u64) as u32;
+                        let sub_side = rng.chance(0.5);
+                        if rng.chance(0.85) {
+                            let rect: Vec<Interval> = (0..d)
+                                .map(|_| {
+                                    let lo = rng.uniform(0.0, 90.0);
+                                    Interval::new(lo, lo + rng.uniform(0.5, 25.0))
+                                })
+                                .collect();
+                            if sub_side {
+                                sess.upsert_subscription(key, &rect);
+                                model_s.insert(key, rect);
+                            } else {
+                                sess.upsert_update(key, &rect);
+                                model_u.insert(key, rect);
+                            }
+                        } else if sub_side {
+                            sess.remove_subscription(key);
+                            model_s.remove(&key);
+                        } else {
+                            sess.remove_update(key);
+                            model_u.remove(&key);
+                        }
+                    }
+                    let _ = sess.commit();
+                    let snap = sess.snapshot();
+                    assert_eq!(snap.epoch(), sess.epoch(), "{label} epoch {epoch}");
+                    assert_eq!(
+                        snap.pairs(),
+                        sess.pairs(),
+                        "{label} epoch {epoch}: snapshot != live"
+                    );
+
+                    // Fresh static match over the same live regions.
+                    let mut subs = RegionsNd::new(d);
+                    let mut skeys = Vec::new();
+                    for (&k, rect) in &model_s {
+                        subs.push(rect);
+                        skeys.push(k);
+                    }
+                    let mut upds = RegionsNd::new(d);
+                    let mut ukeys = Vec::new();
+                    for (&k, rect) in &model_u {
+                        upds.push(rect);
+                        ukeys.push(k);
+                    }
+                    let mut want: Vec<(u32, u32)> = if subs.is_empty() || upds.is_empty() {
+                        Vec::new()
+                    } else {
+                        engine
+                            .pairs_nd(&subs, &upds)
+                            .into_iter()
+                            .map(|(si, uj)| (skeys[si as usize], ukeys[uj as usize]))
+                            .collect()
+                    };
+                    want.sort_unstable();
+                    assert_eq!(
+                        snap.pairs(),
+                        want,
+                        "{label} epoch {epoch}: snapshot != fresh static match"
+                    );
+
+                    // Every previously taken snapshot must still answer
+                    // bit-identically despite this commit.
+                    for (old, fp) in &kept {
+                        assert_eq!(&fingerprint(old), fp, "{label}: pinned snapshot mutated");
+                    }
+                    let fp = fingerprint(&snap);
+                    kept.push((snap, fp));
+                }
+                // The snapshots outlive the session itself.
+                drop(sess);
+                for (old, fp) in &kept {
+                    assert_eq!(
+                        &fingerprint(old),
+                        fp,
+                        "{label}: snapshot changed after session drop"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// N-D equivalence property suite (the native-pipeline acceptance
 /// property): the native sweep-and-verify path, the per-dimension
 /// reduction and a brute-force d-rectangle oracle produce the

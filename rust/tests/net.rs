@@ -203,6 +203,92 @@ fn graceful_shutdown_flushes_staged_ops_and_says_goodbye() {
     assert_eq!(metrics.counter("commits"), 1, "shutdown must close the final epoch");
 }
 
+// ---- snapshot reads & admission control -------------------------------
+
+/// `GetPairs` answers from the published `EpochSnapshot`, so a wire
+/// read is byte-equal to an in-process read at every observable point:
+/// empty before the first commit, unchanged while ops sit staged or
+/// queued, and exactly the committed pair set after each epoch.
+#[test]
+fn get_pairs_is_served_from_the_published_snapshot() {
+    let (handle, addr) = single_server();
+    let mut c = connect(&addr);
+
+    // In-process twin running the identical script.
+    let engine = DdmEngine::builder().threads(2).build();
+    let mut local = engine.session(D);
+
+    assert_eq!(c.pairs().expect("pairs@0"), local.pairs(), "pre-commit");
+
+    c.op(RegionOp::UpsertSub { key: 1, rect: rect(0.0, 10.0, 0.0, 10.0) })
+        .expect("stage sub");
+    c.op(RegionOp::UpsertUpd { key: 2, rect: rect(5.0, 15.0, 5.0, 15.0) })
+        .expect("stage upd");
+    local.upsert_subscription(1, &rect(0.0, 10.0, 0.0, 10.0));
+    local.upsert_update(2, &rect(5.0, 15.0, 5.0, 15.0));
+    c.sync(1).expect("barrier");
+    // Queued-but-uncommitted ops are invisible to readers on both
+    // sides: the published snapshot still says epoch 0.
+    assert_eq!(c.pairs().expect("pairs staged"), local.pairs(), "staged ops leaked");
+    assert!(c.pairs().expect("pairs staged").is_empty());
+
+    let diff = c.commit().expect("commit");
+    let local_diff = local.commit();
+    assert_eq!(diff, local_diff, "wire diff != local diff");
+    assert_eq!(c.pairs().expect("pairs@1"), local.pairs(), "post-commit");
+    assert_eq!(c.pairs().expect("pairs@1"), vec![(1, 2)]);
+    drop(c);
+    handle.shutdown();
+}
+
+/// Admission control with a tiny backlog: the op over the bound gets a
+/// typed `Busy { pending, limit }` reply instead of unbounded
+/// buffering, the rejected op never reaches the session, and after a
+/// commit drains the queue the same op is admitted again.
+#[test]
+fn full_backlog_yields_typed_busy_reply() {
+    let engine = DdmEngine::builder().threads(2).build();
+    let svc = WorkerService::with_backlog(AnySession::Single(engine.session(D)), 2);
+    let handle = serve(&cfg(), svc).expect("serve tiny-backlog worker");
+    let mut c = connect(&handle.addr().to_string());
+
+    c.op(RegionOp::UpsertSub { key: 1, rect: rect(0.0, 10.0, 0.0, 10.0) })
+        .expect("stage 1/2");
+    c.op(RegionOp::UpsertUpd { key: 2, rect: rect(5.0, 15.0, 5.0, 15.0) })
+        .expect("stage 2/2");
+    let (_, pending) = c.sync(1).expect("barrier");
+    assert_eq!(pending, 2, "both ops queued in the backlog");
+
+    // Third op overflows the bound: the reply is Busy, not silence.
+    c.send(&Msg::Op(RegionOp::UpsertUpd { key: 9, rect: rect(0.0, 8.0, 0.0, 8.0) }))
+        .expect("send over-limit op");
+    match c.recv().expect("busy reply") {
+        Msg::Busy { pending, limit } => {
+            assert_eq!((pending, limit), (2, 2));
+        }
+        other => panic!("expected Busy, got {other:?}"),
+    }
+
+    // The rejected op left no trace: the epoch closes with only the
+    // two admitted ops.
+    let diff = c.commit().expect("commit");
+    assert_eq!(diff.added, vec![(1, 2)], "rejected op leaked into the epoch");
+
+    // The commit drained the queue — the same op is admitted now.
+    c.op(RegionOp::UpsertUpd { key: 9, rect: rect(0.0, 8.0, 0.0, 8.0) })
+        .expect("retry after drain");
+    let (_, pending) = c.sync(2).expect("barrier");
+    assert_eq!(pending, 1, "retried op queued");
+    let diff = c.commit().expect("second commit");
+    assert_eq!(diff.added, vec![(1, 9)]);
+
+    let snap = c.metrics().expect("metrics");
+    assert_eq!(snap.counter("net_busy"), 1);
+    assert_eq!(snap.counter("net_ops"), 3);
+    drop(c);
+    handle.shutdown();
+}
+
 // ---- federation -------------------------------------------------------
 
 /// Build a router + `n_workers` workers over `shards` uniform stripes

@@ -25,6 +25,12 @@
 //!     perturbs the very latency it reports. Construction and drain
 //!     paths (`with_capacity`, `drain_into`, the tracer's master-lane
 //!     spans) are outside those fns and stay free to allocate.
+//!   - **session-read-no-lock**: no `Mutex` / `RwLock` / `.lock(`
+//!     inside the function bodies of `session/snapshot.rs` outside
+//!     tests (brace-counted, like `obs-no-hot-alloc`). An
+//!     `EpochSnapshot` read is wait-free by contract — readers must
+//!     never block on (or be blocked by) a committing writer, so no
+//!     snapshot code path may acquire a lock.
 //!
 //!   Violations can be waived in place with a reason:
 //!   `// xlint: allow(<rule>): <reason>` on the offending line or in the
@@ -52,8 +58,8 @@ use std::fs;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-/// The seven lint rules. Names are what waivers reference.
-const RULES: [&str; 7] = [
+/// The eight lint rules. Names are what waivers reference.
+const RULES: [&str; 8] = [
     "safety-comment",
     "hot-lock",
     "hot-panic",
@@ -61,6 +67,7 @@ const RULES: [&str; 7] = [
     "pub-doc",
     "wire-no-alloc-in-decode",
     "obs-no-hot-alloc",
+    "session-read-no-lock",
 ];
 
 /// Hot-path module prefixes: lock-free by design, so locks and panics
@@ -82,6 +89,10 @@ const WALLCLOCK_ALLOW_FILES: [&str; 2] = ["main.rs", "cli.rs"];
 /// The observability tree, whose record-path fns must not allocate
 /// (see the `obs-no-hot-alloc` rule).
 const OBS_PREFIX: &str = "obs/";
+
+/// The snapshot read path, whose fn bodies must never acquire a lock
+/// (see the `session-read-no-lock` rule).
+const SNAPSHOT_FILE: &str = "session/snapshot.rs";
 
 /// Growth calls banned inside `obs/` record-path fns: recording must
 /// never resize a container, or tracing perturbs what it measures.
@@ -383,18 +394,16 @@ fn fn_name(code: &str) -> Option<&str> {
     (end > 0).then(|| &rest[..end])
 }
 
-/// Mark the lines inside record-path function bodies: any `fn` named
-/// `start` or `record*`. These are the per-event hot functions the
-/// `obs-no-hot-alloc` rule guards; a region runs from the signature
-/// line through the matching close brace (brace-counted, like
-/// [`test_regions`]; a trait declaration ending in `;` before any
-/// brace covers just the signature).
-fn record_fn_regions(lines: &[MaskedLine]) -> Vec<bool> {
+/// Mark the lines inside the bodies of functions whose name satisfies
+/// `pred`: a region runs from the signature line through the matching
+/// close brace (brace-counted, like [`test_regions`]; a trait
+/// declaration ending in `;` before any brace covers just the
+/// signature).
+fn fn_regions(lines: &[MaskedLine], pred: impl Fn(&str) -> bool) -> Vec<bool> {
     let mut hot = vec![false; lines.len()];
     let mut i = 0;
     while i < lines.len() {
-        let is_record = fn_name(&lines[i].code)
-            .is_some_and(|n| n == "start" || n.starts_with("record"));
+        let is_record = fn_name(&lines[i].code).is_some_and(&pred);
         if !is_record {
             i += 1;
             continue;
@@ -426,6 +435,13 @@ fn record_fn_regions(lines: &[MaskedLine]) -> Vec<bool> {
         i = end + 1;
     }
     hot
+}
+
+/// Record-path fn bodies for the `obs-no-hot-alloc` rule: any `fn`
+/// named `start` or `record*` — the per-event hot functions of the
+/// tracing layer.
+fn record_fn_regions(lines: &[MaskedLine]) -> Vec<bool> {
+    fn_regions(lines, |n| n == "start" || n.starts_with("record"))
 }
 
 /// Gather the comment context for a violation at `i`: the same-line
@@ -550,6 +566,14 @@ fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
     } else {
         Vec::new()
     };
+    let is_snapshot = rel == SNAPSHOT_FILE;
+    // Every fn in the snapshot file is a read-path fn: the type's whole
+    // surface is reads over immutable refcounted state.
+    let snapshot_fns = if is_snapshot {
+        fn_regions(&lines, |_| true)
+    } else {
+        Vec::new()
+    };
 
     let mut out = Vec::new();
     let mut push = |line: usize, rule: &'static str, msg: String| {
@@ -644,6 +668,24 @@ fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
                         ),
                     );
                 }
+            }
+        }
+
+        if is_snapshot && !in_test[i] && snapshot_fns[i] {
+            let locky = ["Mutex", "RwLock"]
+                .iter()
+                .find(|w| word_in(code, w))
+                .copied()
+                .or_else(|| code.contains(".lock(").then_some(".lock("));
+            if let Some(tok) = locky {
+                push(
+                    i,
+                    "session-read-no-lock",
+                    format!(
+                        "`{tok}` inside a {SNAPSHOT_FILE} fn (snapshot reads are wait-free by \
+                         contract — they must never acquire a lock)"
+                    ),
+                );
             }
         }
 
@@ -760,12 +802,13 @@ fn run_lint(args: &[String]) -> ExitCode {
 
 /// Quick bench configurations — the same flags CI's smoke steps use, so
 /// a local snapshot is comparable to the CI artifact.
-const SNAPSHOT_BENCHES: [(&str, &[&str]); 5] = [
+const SNAPSHOT_BENCHES: [(&str, &[&str]); 6] = [
     ("abl_session", &["--quick", "--n", "10k", "--epochs", "2"]),
     ("abl_shard", &["--quick", "--n", "6k", "--epochs", "2"]),
     ("abl_nd", &["--quick"]),
     ("abl_sort", &["--quick"]),
     ("abl_net", &["--quick"]),
+    ("abl_rw", &["--quick"]),
 ];
 
 /// Pull the `"header"` column list out of a `BENCH_*.json` artifact
@@ -1251,6 +1294,58 @@ mod tests {
         let vs = lint_file("obs/trace.rs", src);
         assert_eq!(rules_of(&vs), ["obs-no-hot-alloc"]);
         assert_eq!(vs[0].line, 5);
+    }
+
+    // ---- session-read-no-lock ------------------------------------
+
+    #[test]
+    fn lock_acquisition_in_snapshot_fn_is_flagged() {
+        for bad in [
+            "let g: std::sync::MutexGuard<u32> = m.lock().unwrap();",
+            "let m = std::sync::Mutex::new(0u32);",
+            "let l: &RwLock<u32> = lock;",
+        ] {
+            let src = format!("pub fn pairs(&self) -> Vec<u32> {{\n    {bad}\n    Vec::new()\n}}\n");
+            let vs = lint_file("session/snapshot.rs", &src);
+            assert_eq!(rules_of(&vs), ["session-read-no-lock"], "{bad}");
+            assert_eq!(vs[0].line, 2, "{bad}");
+        }
+    }
+
+    #[test]
+    fn lock_in_snapshot_signature_is_flagged_too() {
+        let src = "pub fn merge(&self, other: &Mutex<Snap>) -> Snap {\n    todo!()\n}\n";
+        let vs = lint_file("session/snapshot.rs", src);
+        assert_eq!(rules_of(&vs), ["session-read-no-lock"]);
+    }
+
+    #[test]
+    fn snapshot_rule_does_not_apply_elsewhere_in_session() {
+        // session/mod.rs (the writer side) may lock; only the snapshot
+        // read path is lock-free by contract.
+        let src = "fn drain(&mut self) {\n    let _g = self.m.lock().unwrap();\n}\n";
+        assert!(lint_file("session/mod.rs", src).is_empty());
+        assert!(lint_file("session/ingest.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lock_in_snapshot_test_mod_is_fine() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn helper() {\n        let m = std::sync::Mutex::new(0u32);\n        let _ = m.lock().unwrap();\n    }\n}\n";
+        assert!(lint_file("session/snapshot.rs", src).is_empty());
+    }
+
+    #[test]
+    fn snapshot_lock_waiver_works() {
+        let src = "pub fn pairs(&self) -> Vec<u32> {\n    // xlint: allow(session-read-no-lock): cold diagnostics path.\n    let _g = self.m.lock().unwrap();\n    Vec::new()\n}\n";
+        assert!(lint_file("session/snapshot.rs", src).is_empty());
+    }
+
+    #[test]
+    fn snapshot_use_outside_fn_bodies_is_not_flagged() {
+        // The rule brace-counts fn bodies: a (hypothetical) import line
+        // acquires nothing, so it is not a violation by itself.
+        let src = "use std::sync::Arc;\npub fn epoch(&self) -> u64 {\n    self.inner.epoch\n}\n";
+        assert!(lint_file("session/snapshot.rs", src).is_empty());
     }
 
     // ---- bench-snapshot header diff ------------------------------
