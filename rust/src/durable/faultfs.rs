@@ -1,0 +1,231 @@
+//! Fault injection for the durability layer: a [`WalSink`] wrapper
+//! that kills the log at a chosen point — truncating, tearing, or
+//! erroring the Nth write — so the recovery suite can prove that
+//! *every* crash point recovers to a committed-epoch prefix.
+//!
+//! Gated on `cfg(any(test, feature = "failpoints"))`: production
+//! builds never link it, the unit/property suites always can.
+//!
+//! The plan vocabulary mirrors how real storage fails:
+//!
+//! * [`FailPlan::TruncateAt`] — the process dies before write N hits
+//!   the file at all (power loss with an empty page cache).
+//! * [`FailPlan::TearAt`] — write N lands partially (a sector-straddling
+//!   append torn mid-record).
+//! * [`FailPlan::ErrorAt`] — write N fails with an IO error but the
+//!   process lives (ENOSPC, EIO): the log must degrade, not panic.
+//! * [`FailPlan::FlipBit`] — a byte in an otherwise-complete write is
+//!   corrupted (bit rot; caught later by the per-record CRC).
+
+use std::io;
+use std::sync::{Arc, Mutex};
+
+use super::wal::WalSink;
+
+/// What to do to the Nth write (0-based) through a [`FaultSink`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailPlan {
+    /// Drop write N and every later write/sync entirely.
+    TruncateAt { nth: usize },
+    /// Write only `keep` bytes of write N, then drop everything later.
+    TearAt { nth: usize, keep: usize },
+    /// Fail write N with an IO error (later writes proceed — the WAL
+    /// is expected to have degraded and stopped calling us).
+    ErrorAt { nth: usize },
+    /// XOR one byte of write N with `mask`, then keep going normally.
+    FlipBit { nth: usize, byte: usize, mask: u8 },
+}
+
+/// Shared observation handle: how many writes/syncs the sink saw and
+/// whether the plan fired.
+#[derive(Debug, Default)]
+pub struct FaultLog {
+    inner: Mutex<FaultLogInner>,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct FaultLogInner {
+    writes: usize,
+    syncs: usize,
+    fired: bool,
+}
+
+impl FaultLog {
+    /// Writes attempted through the sink so far.
+    pub fn writes(&self) -> usize {
+        match self.inner.lock() {
+            Ok(g) => g.writes,
+            Err(_) => 0,
+        }
+    }
+
+    /// Syncs attempted through the sink so far.
+    pub fn syncs(&self) -> usize {
+        match self.inner.lock() {
+            Ok(g) => g.syncs,
+            Err(_) => 0,
+        }
+    }
+
+    /// Whether the failure plan has triggered.
+    pub fn fired(&self) -> bool {
+        match self.inner.lock() {
+            Ok(g) => g.fired,
+            Err(_) => false,
+        }
+    }
+}
+
+/// A [`WalSink`] that forwards to an inner sink until its [`FailPlan`]
+/// triggers.
+pub struct FaultSink<S: WalSink> {
+    inner: S,
+    plan: FailPlan,
+    log: Arc<FaultLog>,
+    /// After a truncate/tear fired, all subsequent IO is swallowed
+    /// (the "process" is dead as far as the file is concerned).
+    dead: bool,
+}
+
+impl<S: WalSink> FaultSink<S> {
+    /// Wrap `inner`, applying `plan`; returns the sink and its
+    /// observation handle.
+    pub fn new(inner: S, plan: FailPlan) -> (Self, Arc<FaultLog>) {
+        let log = Arc::new(FaultLog::default());
+        (
+            Self {
+                inner,
+                plan,
+                log: Arc::clone(&log),
+                dead: false,
+            },
+            log,
+        )
+    }
+}
+
+impl<S: WalSink> WalSink for FaultSink<S> {
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        let nth = {
+            let Ok(mut g) = self.log.inner.lock() else {
+                return Err(io::Error::other("fault log poisoned"));
+            };
+            let nth = g.writes;
+            g.writes += 1;
+            nth
+        };
+        if self.dead {
+            return Ok(());
+        }
+        let fire = |log: &FaultLog| {
+            if let Ok(mut g) = log.inner.lock() {
+                g.fired = true;
+            }
+        };
+        match self.plan {
+            FailPlan::TruncateAt { nth: n } if nth >= n => {
+                fire(&self.log);
+                self.dead = true;
+                Ok(())
+            }
+            FailPlan::TearAt { nth: n, keep } if nth == n => {
+                fire(&self.log);
+                self.dead = true;
+                self.inner.write_all(&buf[..keep.min(buf.len())])
+            }
+            FailPlan::ErrorAt { nth: n } if nth == n => {
+                fire(&self.log);
+                Err(io::Error::other("injected wal write failure"))
+            }
+            FailPlan::FlipBit { nth: n, byte, mask } if nth == n => {
+                fire(&self.log);
+                let mut corrupted = buf.to_vec();
+                if let Some(b) = corrupted.get_mut(byte.min(buf.len().saturating_sub(1))) {
+                    *b ^= mask;
+                }
+                self.inner.write_all(&corrupted)
+            }
+            _ => self.inner.write_all(buf),
+        }
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        if let Ok(mut g) = self.log.inner.lock() {
+            g.syncs += 1;
+        }
+        if self.dead {
+            return Ok(());
+        }
+        self.inner.sync()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// In-memory sink so the unit tests need no filesystem.
+    #[derive(Default)]
+    pub(crate) struct MemSink {
+        pub data: Arc<Mutex<Vec<u8>>>,
+    }
+
+    impl WalSink for MemSink {
+        fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+            if let Ok(mut g) = self.data.lock() {
+                g.extend_from_slice(buf);
+            }
+            Ok(())
+        }
+        fn sync(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn truncate_drops_everything_from_nth_write() {
+        let mem = MemSink::default();
+        let data = Arc::clone(&mem.data);
+        let (mut sink, log) = FaultSink::new(mem, FailPlan::TruncateAt { nth: 1 });
+        sink.write_all(b"aaaa").expect("write 0");
+        sink.write_all(b"bbbb").expect("write 1 swallowed");
+        sink.write_all(b"cccc").expect("write 2 swallowed");
+        assert_eq!(data.lock().expect("lock").as_slice(), b"aaaa");
+        assert!(log.fired());
+        assert_eq!(log.writes(), 3);
+    }
+
+    #[test]
+    fn tear_keeps_a_prefix_of_the_nth_write() {
+        let mem = MemSink::default();
+        let data = Arc::clone(&mem.data);
+        let (mut sink, log) = FaultSink::new(mem, FailPlan::TearAt { nth: 1, keep: 2 });
+        sink.write_all(b"aaaa").expect("write 0");
+        sink.write_all(b"bbbb").expect("write 1 torn");
+        sink.write_all(b"cccc").expect("write 2 swallowed");
+        assert_eq!(data.lock().expect("lock").as_slice(), b"aaaabb");
+        assert!(log.fired());
+    }
+
+    #[test]
+    fn error_fails_exactly_the_nth_write() {
+        let mem = MemSink::default();
+        let (mut sink, log) = FaultSink::new(mem, FailPlan::ErrorAt { nth: 1 });
+        sink.write_all(b"aaaa").expect("write 0");
+        assert!(sink.write_all(b"bbbb").is_err());
+        assert!(log.fired());
+        // The WAL degrades after an error; if someone keeps writing
+        // anyway the sink behaves normally again.
+        sink.write_all(b"cccc").expect("write 2");
+    }
+
+    #[test]
+    fn flip_bit_corrupts_in_flight_bytes() {
+        let mem = MemSink::default();
+        let data = Arc::clone(&mem.data);
+        let (mut sink, _log) = FaultSink::new(mem, FailPlan::FlipBit { nth: 0, byte: 1, mask: 0x40 });
+        sink.write_all(b"aaaa").expect("write 0");
+        sink.write_all(b"bbbb").expect("write 1");
+        assert_eq!(data.lock().expect("lock").as_slice(), b"a!aabbbb");
+    }
+}

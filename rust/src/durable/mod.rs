@@ -1,0 +1,130 @@
+//! Crash-consistent durability: write-ahead op log, epoch-snapshot
+//! files, and recovery back to the exact last durable epoch.
+//!
+//! The paper's DDM service is in-memory; this module is what makes the
+//! session layer survive a `kill -9`. The design is the classic
+//! WAL + checkpoint pair, specialised to the session's epoch model:
+//!
+//! * [`wal`] — a length-prefixed record log reusing the
+//!   [`net::wire`](crate::net::wire) codecs: every staged op becomes an
+//!   *op record*, every `commit()` closes with a *commit marker*
+//!   carrying the epoch and a CRC32 **fingerprint** of the post-commit
+//!   packed pair set. Each record carries its own CRC32, so torn,
+//!   truncated, or bit-flipped tails are detected and discarded back to
+//!   the last valid marker — never replayed as a partial epoch.
+//! * [`snapfile`] — a compact checkpoint file: the serialized
+//!   [`EpochSnapshot`](crate::session::EpochSnapshot) packed pair
+//!   array plus the live region tables (key → rectangle, both sides).
+//!   Written atomically (tmp + rename) every
+//!   [`snapshot_every`](crate::engine::EngineBuilder::durability_snapshot_every)
+//!   commits, after which the log is truncated.
+//! * [`recover`] — scan the directory, decode snapshot + committed log
+//!   tail, rebuild a live session by replaying the batches, and force
+//!   the epoch counter to the last durable epoch. The rebuilt pair set
+//!   is verified against the stored fingerprint before the session is
+//!   handed back.
+//! * [`faultfs`] — a failpoint [`WalSink`](wal::WalSink) that can
+//!   truncate, tear, or error the Nth write (test/`failpoints`-gated),
+//!   driving the recovery property suite.
+//!
+//! Wiring: `DdmEngine::builder().durability(dir)` attaches a WAL to
+//! every session the engine creates;
+//! [`DdmEngine::recover_session`](crate::engine::DdmEngine::recover_session)
+//! / [`recover_any_session`](crate::engine::DdmEngine::recover_any_session)
+//! resume one. On the CLI: `ddm serve --wal DIR [--resume]`, `ddm
+//! replay --record DIR` / `--resume DIR`, and `ddm wal-info --dir DIR`
+//! for offline inspection. Commit-path WAL work is traced as the
+//! [`WalAppend`](crate::obs::Phase::WalAppend) /
+//! [`WalFsync`](crate::obs::Phase::WalFsync) phases; recovery records
+//! [`RecoverScan`](crate::obs::Phase::RecoverScan).
+//!
+//! ## Failure policy
+//!
+//! Commits never fail because a disk does: a WAL write error flips the
+//! log into a *degraded* state (the error is kept, counted in
+//! [`WalStats::errors`](wal::WalStats), and surfaced through
+//! `wal_stats()` / the `wal_errors` gauge) while the in-memory session
+//! keeps serving. Recovery, by contrast, is strict: a corrupt
+//! *snapshot* file is a hard error, and a rebuilt state whose
+//! fingerprint disagrees with the last durable marker refuses to come
+//! up rather than serve silently wrong matches.
+
+pub mod crc;
+#[cfg(any(test, feature = "failpoints"))]
+pub mod faultfs;
+pub mod recover;
+pub mod snapfile;
+pub mod wal;
+
+pub use crc::{crc32, Crc32};
+pub use recover::{DurableState, RecoverReport};
+pub use snapfile::SnapshotFile;
+pub use wal::{CommittedBatch, SessionWal, Wal, WalOptions, WalScan, WalStats};
+
+use std::path::PathBuf;
+
+/// Engine-level durability configuration
+/// ([`EngineBuilder::durability`](crate::engine::EngineBuilder::durability)
+/// and friends). One directory holds one session's history: the op log
+/// ([`wal::LOG_FILE`]) and the latest checkpoint
+/// ([`snapfile::SNAP_FILE`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DurabilityCfg {
+    /// Directory holding the log + snapshot files (created on demand).
+    pub dir: PathBuf,
+    /// `fsync` the log after every commit marker (crash-through-power
+    /// durability) instead of trusting the OS page cache.
+    pub fsync_commits: bool,
+    /// Checkpoint (snapshot file + log truncation) every this many
+    /// commits; `u64::MAX` disables periodic checkpoints.
+    pub snapshot_every: u64,
+}
+
+impl DurabilityCfg {
+    /// Default knobs for `dir`: no per-commit fsync, checkpoint every
+    /// 64 commits.
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            fsync_commits: false,
+            snapshot_every: 64,
+        }
+    }
+}
+
+/// The pair-set fingerprint commit markers and snapshot files carry:
+/// CRC32 over the ascending packed pair array's little-endian bytes.
+/// Two session states fingerprint equal iff their retained pair sets
+/// are identical (up to CRC collision), which is what `--resume`
+/// verification and the recovery suite key on.
+pub fn fingerprint_packed(packed: &[u64]) -> u32 {
+    let mut c = Crc32::new();
+    for &p in packed {
+        c.update(&p.to_le_bytes());
+    }
+    c.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_is_order_and_content_sensitive() {
+        assert_eq!(fingerprint_packed(&[]), 0);
+        let a = fingerprint_packed(&[1, 2, 3]);
+        let b = fingerprint_packed(&[1, 2, 4]);
+        let c = fingerprint_packed(&[1, 3, 2]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, fingerprint_packed(&[1, 2, 3]));
+    }
+
+    #[test]
+    fn cfg_defaults() {
+        let cfg = DurabilityCfg::new("/tmp/x");
+        assert!(!cfg.fsync_commits);
+        assert_eq!(cfg.snapshot_every, 64);
+        assert_eq!(cfg.dir, PathBuf::from("/tmp/x"));
+    }
+}

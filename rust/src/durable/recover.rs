@@ -1,0 +1,371 @@
+//! Recovery: scan a durability directory, keep exactly the committed
+//! epoch history, and replay it into a fresh session.
+//!
+//! The recovery state machine:
+//!
+//! ```text
+//!   scan_dir ──► decode snap.bin (strict: corrupt ⇒ hard error)
+//!        │
+//!        ├────► scan wal.log (tolerant: torn/flipped tail ⇒ discard
+//!        │      back to the last valid commit marker)
+//!        │
+//!        └────► drop batches ≤ snapshot epoch (the crash window
+//!               between checkpoint rename and log truncation), then
+//!               require the rest to be epoch-contiguous
+//!
+//!   replay_into ──► stage snapshot regions, commit, pin the epoch
+//!        │          counter to the checkpoint epoch
+//!        │
+//!        ├──────► per batch: stage ops in log order, commit, check
+//!        │        the rebuilt pair-set fingerprint + count against
+//!        │        the batch's marker (mismatch ⇒ refuse to come up)
+//!        │
+//!        └──────► final state: exact last durable epoch, traced as
+//!                 one `recover_scan` span
+//! ```
+//!
+//! Replay re-runs the real matcher over the logged ops, so a recovered
+//! session is not a deserialized facsimile but the same state the
+//! original session computed — which is exactly what the per-epoch
+//! fingerprint check proves.
+
+use std::path::Path;
+
+use crate::net::proto::RegionOp;
+use crate::obs::Phase;
+use crate::shard::AnySession;
+
+use super::snapfile::{self, SnapshotFile};
+use super::wal::{self, CommittedBatch};
+use super::fingerprint_packed;
+
+/// Everything durable a directory held: the decoded checkpoint plus
+/// the committed log tail, already filtered down to the batches replay
+/// must apply.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DurableState {
+    /// The checkpoint, if one was installed.
+    pub snapshot: Option<SnapshotFile>,
+    /// Committed batches past the checkpoint, epoch-contiguous.
+    pub batches: Vec<CommittedBatch>,
+    /// The last durable epoch (0: empty history).
+    pub last_epoch: u64,
+    /// Pair count at `last_epoch`, per the last marker / checkpoint.
+    pub last_n_pairs: u64,
+    /// Pair-set fingerprint at `last_epoch`.
+    pub last_fingerprint: u32,
+    /// Log bytes past the durable prefix that the scan discarded.
+    pub tail_bytes: usize,
+    /// Op records after the last marker (a batch that never committed).
+    pub open_ops: usize,
+    /// Structurally valid log records scanned.
+    pub log_records: u64,
+    /// Total log file size scanned.
+    pub log_bytes: u64,
+}
+
+/// What a completed recovery did — surfaced by
+/// [`DdmEngine::recover_session`](crate::engine::DdmEngine::recover_session)
+/// and printed by `ddm serve --resume` / `ddm wal-info`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoverReport {
+    /// Epoch the session came back at.
+    pub epoch: u64,
+    /// Regions restored from the checkpoint.
+    pub snapshot_regions: usize,
+    /// Committed batches replayed from the log tail.
+    pub batches: usize,
+    /// Ops replayed from those batches.
+    pub ops: usize,
+    /// Pairs in the recovered match set.
+    pub n_pairs: usize,
+    /// Fingerprint of the recovered pair set.
+    pub fingerprint: u32,
+    /// Discarded log tail bytes (0 for a clean shutdown).
+    pub tail_bytes: usize,
+    /// Discarded uncommitted trailing ops.
+    pub open_ops: usize,
+}
+
+impl DurableState {
+    /// The live region tables at `last_epoch`: checkpoint regions with
+    /// the committed log tail applied last-writer-wins on top. This is
+    /// what a freshly recovered session re-seeds its WAL shadow tables
+    /// from, so the next checkpoint serializes exactly this state.
+    pub fn final_regions(
+        &self,
+    ) -> (
+        std::collections::HashMap<u32, Vec<crate::core::interval::Interval>>,
+        std::collections::HashMap<u32, Vec<crate::core::interval::Interval>>,
+    ) {
+        let mut subs = std::collections::HashMap::new();
+        let mut upds = std::collections::HashMap::new();
+        if let Some(snap) = &self.snapshot {
+            for (key, rect) in &snap.subs {
+                subs.insert(*key, rect.clone());
+            }
+            for (key, rect) in &snap.upds {
+                upds.insert(*key, rect.clone());
+            }
+        }
+        for batch in &self.batches {
+            for op in &batch.ops {
+                match op {
+                    RegionOp::UpsertSub { key, rect } => {
+                        subs.insert(*key, rect.clone());
+                    }
+                    RegionOp::UpsertUpd { key, rect } => {
+                        upds.insert(*key, rect.clone());
+                    }
+                    RegionOp::RemoveSub { key } => {
+                        subs.remove(key);
+                    }
+                    RegionOp::RemoveUpd { key } => {
+                        upds.remove(key);
+                    }
+                }
+            }
+        }
+        (subs, upds)
+    }
+}
+
+/// Read and validate a durability directory without touching any
+/// session: strict on the snapshot, tolerant on the log tail, strict
+/// on epoch continuity between the two.
+pub fn scan_dir(dir: &Path) -> crate::Result<DurableState> {
+    let log_path = dir.join(wal::LOG_FILE);
+    let snap_path = dir.join(snapfile::SNAP_FILE);
+    if !log_path.exists() && !snap_path.exists() {
+        crate::bail!(
+            "nothing to recover in {dir:?}: no {} or {}",
+            wal::LOG_FILE,
+            snapfile::SNAP_FILE
+        );
+    }
+    let mut st = DurableState::default();
+    if snap_path.exists() {
+        let bytes = std::fs::read(&snap_path)
+            .map_err(|e| crate::error::Error::msg(format!("read {snap_path:?}: {e}")))?;
+        st.snapshot = Some(SnapshotFile::decode(&bytes)?);
+    }
+    let base = st.snapshot.as_ref().map_or(0, |s| s.epoch);
+    if log_path.exists() {
+        let bytes = std::fs::read(&log_path)
+            .map_err(|e| crate::error::Error::msg(format!("read {log_path:?}: {e}")))?;
+        let scan = wal::scan_log(&bytes);
+        st.log_records = scan.records;
+        st.log_bytes = bytes.len().try_into().unwrap_or(u64::MAX);
+        st.tail_bytes = scan.tail_bytes;
+        st.open_ops = scan.open_ops;
+        let mut expect = base.saturating_add(1);
+        for b in scan.batches {
+            if b.epoch <= base {
+                // The crash window between checkpoint rename and log
+                // truncation: the old log still holds batches the
+                // snapshot already covers.
+                continue;
+            }
+            if b.epoch != expect {
+                crate::bail!(
+                    "log holds epoch {} where {expect} was expected — \
+                     mixed or inconsistent durability history in {dir:?}",
+                    b.epoch
+                );
+            }
+            expect = expect.saturating_add(1);
+            st.batches.push(b);
+        }
+    }
+    if let Some(last) = st.batches.last() {
+        st.last_epoch = last.epoch;
+        st.last_n_pairs = last.n_pairs;
+        st.last_fingerprint = last.fingerprint;
+    } else if let Some(snap) = &st.snapshot {
+        st.last_epoch = snap.epoch;
+        st.last_n_pairs = snap.pairs.len().try_into().unwrap_or(u64::MAX);
+        st.last_fingerprint = snap.fingerprint();
+    }
+    Ok(st)
+}
+
+/// Replay a scanned history into a fresh session (epoch 0, no WAL
+/// attached), leaving it at the exact last durable epoch. Every commit
+/// boundary is verified against its marker's fingerprint and pair
+/// count; any disagreement aborts recovery with the session discarded.
+pub fn replay_into(session: &mut AnySession, st: &DurableState) -> crate::Result<RecoverReport> {
+    if session.epoch() != 0 {
+        crate::bail!("recovery needs a fresh session, got one at epoch {}", session.epoch());
+    }
+    let t0 = session.trace_start();
+    let mut report = RecoverReport {
+        tail_bytes: st.tail_bytes,
+        open_ops: st.open_ops,
+        ..RecoverReport::default()
+    };
+    if let Some(snap) = &st.snapshot {
+        if snap.d != session.d() {
+            crate::bail!("snapshot is {}-d but the session is {}-d", snap.d, session.d());
+        }
+        for (key, rect) in &snap.subs {
+            session.upsert_subscription(*key, rect);
+        }
+        for (key, rect) in &snap.upds {
+            session.upsert_update(*key, rect);
+        }
+        report.snapshot_regions = snap.subs.len() + snap.upds.len();
+        session.commit();
+        session.force_epoch(snap.epoch);
+        let got = fingerprint_packed(session.snapshot().packed_pairs());
+        let want = snap.fingerprint();
+        if got != want {
+            crate::bail!(
+                "checkpoint replay diverged at epoch {}: fingerprint {got:#010x} != stored {want:#010x}",
+                snap.epoch
+            );
+        }
+    }
+    for batch in &st.batches {
+        for op in &batch.ops {
+            apply_op(session, op);
+        }
+        report.ops += batch.ops.len();
+        report.batches += 1;
+        let diff = session.commit();
+        if diff.epoch != batch.epoch {
+            crate::bail!("replay reached epoch {} where the log says {}", diff.epoch, batch.epoch);
+        }
+        let snap = session.snapshot();
+        let got = fingerprint_packed(snap.packed_pairs());
+        let got_n = u64::try_from(snap.n_pairs()).unwrap_or(u64::MAX);
+        if got != batch.fingerprint || got_n != batch.n_pairs {
+            crate::bail!(
+                "replay diverged at epoch {}: {} pairs fingerprint {got:#010x}, \
+                 marker says {} pairs fingerprint {:#010x}",
+                batch.epoch,
+                got_n,
+                batch.n_pairs,
+                batch.fingerprint
+            );
+        }
+    }
+    let snap = session.snapshot();
+    report.epoch = snap.epoch();
+    report.n_pairs = snap.n_pairs();
+    report.fingerprint = fingerprint_packed(snap.packed_pairs());
+    if report.epoch != st.last_epoch {
+        crate::bail!("recovered epoch {} != last durable epoch {}", report.epoch, st.last_epoch);
+    }
+    let items = u64::try_from(report.ops + report.snapshot_regions).unwrap_or(u64::MAX);
+    session.trace_span(Phase::RecoverScan, t0, items);
+    Ok(report)
+}
+
+fn apply_op(session: &mut AnySession, op: &RegionOp) {
+    match op {
+        RegionOp::UpsertSub { key, rect } => session.upsert_subscription(*key, rect),
+        RegionOp::UpsertUpd { key, rect } => session.upsert_update(*key, rect),
+        RegionOp::RemoveSub { key } => session.remove_subscription(*key),
+        RegionOp::RemoveUpd { key } => session.remove_update(*key),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::interval::Interval;
+    use crate::engine::DdmEngine;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ddm-recover-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn scan_dir_on_missing_dir_is_an_error() {
+        assert!(scan_dir(Path::new("/nonexistent/ddm-recover-test")).is_err());
+    }
+
+    #[test]
+    fn empty_log_recovers_to_epoch_zero() {
+        let dir = tmp("empty");
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        std::fs::write(dir.join(wal::LOG_FILE), wal::WAL_MAGIC).expect("write log");
+        let st = scan_dir(&dir).expect("scan");
+        assert_eq!(st.last_epoch, 0);
+        assert!(st.batches.is_empty());
+        let engine = DdmEngine::builder().threads(1).build();
+        let mut session = engine.any_session(1, Interval::new(0.0, 100.0));
+        let report = replay_into(&mut session, &st).expect("replay");
+        assert_eq!(report.epoch, 0);
+        assert_eq!(session.epoch(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn epoch_gap_in_log_is_a_hard_error() {
+        let dir = tmp("gap");
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let mut log = wal::WAL_MAGIC.to_vec();
+        wal::encode_commit_record(&mut log, 1, 0, 0);
+        wal::encode_commit_record(&mut log, 3, 0, 0);
+        std::fs::write(dir.join(wal::LOG_FILE), &log).expect("write log");
+        let err = scan_dir(&dir).expect_err("gap must fail");
+        assert!(err.to_string().contains("epoch 3"), "got: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batches_at_or_below_snapshot_epoch_are_skipped() {
+        let dir = tmp("overlap");
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let snap = SnapshotFile { epoch: 2, d: 1, ..SnapshotFile::default() };
+        std::fs::write(dir.join(snapfile::SNAP_FILE), snap.encode()).expect("write snap");
+        // Old log from before the (crash-interrupted) truncation:
+        // epochs 1 and 2 are covered by the snapshot, 3 is new.
+        let mut log = wal::WAL_MAGIC.to_vec();
+        wal::encode_commit_record(&mut log, 1, 0, 0);
+        wal::encode_commit_record(&mut log, 2, 0, 0);
+        wal::encode_commit_record(&mut log, 3, 0, 0);
+        std::fs::write(dir.join(wal::LOG_FILE), &log).expect("write log");
+        let st = scan_dir(&dir).expect("scan");
+        assert_eq!(st.batches.len(), 1);
+        assert_eq!(st.batches[0].epoch, 3);
+        assert_eq!(st.last_epoch, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_snapshot_is_a_hard_error_even_with_a_good_log() {
+        let dir = tmp("badsnap");
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let mut bytes = SnapshotFile { epoch: 1, d: 1, ..SnapshotFile::default() }.encode();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(dir.join(snapfile::SNAP_FILE), &bytes).expect("write snap");
+        std::fs::write(dir.join(wal::LOG_FILE), wal::WAL_MAGIC).expect("write log");
+        assert!(scan_dir(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_mismatch_refuses_to_come_up() {
+        let dir = tmp("badfp");
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let mut log = wal::WAL_MAGIC.to_vec();
+        let op = crate::net::proto::RegionOp::UpsertSub {
+            key: 1,
+            rect: vec![Interval::new(0.0, 1.0)],
+        };
+        wal::encode_op_record(&mut log, &op);
+        // Marker lies about the fingerprint.
+        wal::encode_commit_record(&mut log, 1, 5, 0xBAD0_F00D);
+        std::fs::write(dir.join(wal::LOG_FILE), &log).expect("write log");
+        let st = scan_dir(&dir).expect("scan is tolerant; replay is not");
+        let engine = DdmEngine::builder().threads(1).build();
+        let mut session = engine.any_session(1, Interval::new(0.0, 100.0));
+        let err = replay_into(&mut session, &st).expect_err("must refuse");
+        assert!(err.to_string().contains("diverged"), "got: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,239 @@
+//! The epoch-snapshot (checkpoint) file: a compact, single-read image
+//! of one session's durable state at a commit boundary.
+//!
+//! ## File format
+//!
+//! ```text
+//! [magic: 8 bytes "DDMSNAP1"][payload][crc32(payload): u32 LE]
+//! ```
+//!
+//! with `payload` encoded by the [`net::wire`](crate::net::wire)
+//! primitives:
+//!
+//! | field | encoding |
+//! |-------|----------|
+//! | epoch | varint |
+//! | d | varint (1..=`MAX_DIMS`) |
+//! | subscriptions | varint count, then per region: varint key + rect (varint d + 2·d bit-exact f64) |
+//! | updates | same |
+//! | packed pairs | varint count, then one varint per packed `sub<<32|upd` key, ascending |
+//!
+//! The pair array is the [`EpochSnapshot`](crate::session::EpochSnapshot)
+//! packed form verbatim; the region tables are what replay needs to
+//! rebuild the trees. Unlike the tolerant WAL scan, decoding is
+//! **strict**: any truncation, checksum mismatch, or malformed field is
+//! a hard error — a checkpoint is written atomically (tmp + rename by
+//! [`Wal::install_checkpoint`](super::wal::Wal::install_checkpoint)),
+//! so a bad one means real corruption, and recovery must refuse to
+//! come up rather than guess.
+
+use crate::core::interval::Interval;
+use crate::net::proto::{put_rect, read_rect};
+use crate::net::wire::{self, Reader};
+
+use super::crc::crc32;
+use super::fingerprint_packed;
+
+/// Snapshot file name inside a durability directory.
+pub const SNAP_FILE: &str = "snap.bin";
+
+/// Magic + version prefix of the snapshot file.
+pub const SNAP_MAGIC: [u8; 8] = *b"DDMSNAP1";
+
+/// Decoded checkpoint: everything needed to rebuild a session at
+/// `epoch` before replaying the log tail.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SnapshotFile {
+    /// Epoch the checkpoint was taken at.
+    pub epoch: u64,
+    /// Space dimensionality of every rectangle below.
+    pub d: usize,
+    /// Live subscription regions (key → rectangle), ascending by key.
+    pub subs: Vec<(u32, Vec<Interval>)>,
+    /// Live update regions, ascending by key.
+    pub upds: Vec<(u32, Vec<Interval>)>,
+    /// The packed matched-pair array (`sub<<32|upd`, ascending) — the
+    /// `EpochSnapshot` payload verbatim.
+    pub pairs: Vec<u64>,
+}
+
+impl SnapshotFile {
+    /// CRC32 fingerprint of the pair set (what commit markers carry).
+    pub fn fingerprint(&self) -> u32 {
+        fingerprint_packed(&self.pairs)
+    }
+
+    /// Serialize to a complete file image (magic + payload + CRC).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut payload = Vec::with_capacity(64 + 24 * (self.subs.len() + self.upds.len()));
+        wire::put_varint(&mut payload, self.epoch);
+        wire::put_varint(&mut payload, self.d as u64);
+        put_regions(&mut payload, &self.subs);
+        put_regions(&mut payload, &self.upds);
+        wire::put_varint(&mut payload, self.pairs.len() as u64);
+        for &p in &self.pairs {
+            wire::put_varint(&mut payload, p);
+        }
+        let mut out = Vec::with_capacity(SNAP_MAGIC.len() + payload.len() + 4);
+        out.extend_from_slice(&SNAP_MAGIC);
+        out.extend_from_slice(&payload);
+        wire::put_u32(&mut out, crc32(&payload));
+        out
+    }
+
+    /// Strictly decode a file image. Every failure mode (short file,
+    /// foreign magic, checksum mismatch, malformed or trailing bytes,
+    /// rect dimensionality disagreeing with the header) is an error.
+    pub fn decode(bytes: &[u8]) -> crate::Result<Self> {
+        let magic_len = SNAP_MAGIC.len();
+        if bytes.len() < magic_len + 4 {
+            crate::bail!("snapshot file too short ({} bytes)", bytes.len());
+        }
+        if bytes[..magic_len] != SNAP_MAGIC {
+            crate::bail!("snapshot file has foreign magic");
+        }
+        let crc_at = bytes.len() - 4;
+        let payload = &bytes[magic_len..crc_at];
+        let Ok(crc_bytes) = <[u8; 4]>::try_from(&bytes[crc_at..]) else {
+            crate::bail!("snapshot checksum unreadable");
+        };
+        let want = u32::from_le_bytes(crc_bytes);
+        let got = crc32(payload);
+        if got != want {
+            crate::bail!("snapshot checksum mismatch: stored {want:#010x}, computed {got:#010x}");
+        }
+        let mut r = Reader::new(payload);
+        let epoch = r.varint().map_err(snap_err)?;
+        let d_raw = r.varint().map_err(snap_err)?;
+        let Ok(d) = usize::try_from(d_raw) else {
+            crate::bail!("snapshot dimension {d_raw} out of range");
+        };
+        if d == 0 || d > crate::net::proto::MAX_DIMS {
+            crate::bail!("snapshot dimension {d} out of range");
+        }
+        let subs = read_regions(&mut r, d)?;
+        let upds = read_regions(&mut r, d)?;
+        let n_pairs = r.count(1).map_err(snap_err)?;
+        let mut pairs = Vec::with_capacity(n_pairs);
+        let mut prev: Option<u64> = None;
+        for _ in 0..n_pairs {
+            let p = r.varint().map_err(snap_err)?;
+            if prev.is_some_and(|q| q >= p) {
+                crate::bail!("snapshot pair array not strictly ascending");
+            }
+            prev = Some(p);
+            pairs.push(p);
+        }
+        r.finish().map_err(snap_err)?;
+        Ok(Self { epoch, d, subs, upds, pairs })
+    }
+}
+
+fn snap_err(e: crate::net::wire::WireError) -> crate::error::Error {
+    crate::error::Error::msg(format!("snapshot payload malformed: {e}"))
+}
+
+fn put_regions(out: &mut Vec<u8>, regions: &[(u32, Vec<Interval>)]) {
+    wire::put_varint(out, regions.len() as u64);
+    for (key, rect) in regions {
+        wire::put_varint(out, u64::from(*key));
+        put_rect(out, rect);
+    }
+}
+
+fn read_regions(r: &mut Reader<'_>, d: usize) -> crate::Result<Vec<(u32, Vec<Interval>)>> {
+    // Each region is at least 1 byte of key + d * 16 bytes of rect.
+    let n = r.count(1 + d * 16).map_err(snap_err)?;
+    let mut regions = Vec::with_capacity(n);
+    let mut prev: Option<u32> = None;
+    for _ in 0..n {
+        let key_raw = r.varint().map_err(snap_err)?;
+        let Ok(key) = u32::try_from(key_raw) else {
+            crate::bail!("snapshot region key {key_raw} exceeds u32");
+        };
+        if prev.is_some_and(|q| q >= key) {
+            crate::bail!("snapshot region keys not strictly ascending");
+        }
+        prev = Some(key);
+        let rect = read_rect(r).map_err(snap_err)?;
+        if rect.len() != d {
+            crate::bail!("snapshot rect is {}-d in a {d}-d file", rect.len());
+        }
+        regions.push((key, rect));
+    }
+    Ok(regions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SnapshotFile {
+        SnapshotFile {
+            epoch: 42,
+            d: 2,
+            subs: vec![
+                (1, vec![Interval::new(0.0, 1.0), Interval::new(2.0, 3.0)]),
+                (7, vec![Interval::new(-1.5, 0.5), Interval::new(0.0, 0.25)]),
+            ],
+            upds: vec![(3, vec![Interval::new(0.5, 0.75), Interval::new(2.5, 2.75)])],
+            pairs: vec![(1 << 32) | 3, (7 << 32) | 3],
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trips() {
+        let snap = sample();
+        let bytes = snap.encode();
+        assert_eq!(SnapshotFile::decode(&bytes).expect("decode"), snap);
+    }
+
+    #[test]
+    fn empty_snapshot_round_trips() {
+        let snap = SnapshotFile { epoch: 0, d: 1, ..SnapshotFile::default() };
+        assert_eq!(SnapshotFile::decode(&snap.encode()).expect("decode"), snap);
+        assert_eq!(snap.fingerprint(), 0);
+    }
+
+    #[test]
+    fn every_truncation_is_a_hard_error() {
+        let bytes = sample().encode();
+        for cut in 0..bytes.len() {
+            assert!(
+                SnapshotFile::decode(&bytes[..cut]).is_err(),
+                "truncation to {cut} bytes decoded"
+            );
+        }
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_a_hard_error() {
+        let bytes = sample().encode();
+        for byte in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut bad = bytes.clone();
+                bad[byte] ^= 1 << bit;
+                assert!(
+                    SnapshotFile::decode(&bad).is_err(),
+                    "flip at {byte}:{bit} decoded"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let snap = sample();
+        let mut bytes = snap.encode();
+        // Valid payload + CRC, then garbage after: the CRC no longer
+        // covers the right span, so this must fail.
+        bytes.push(0);
+        assert!(SnapshotFile::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn fingerprint_matches_module_fingerprint() {
+        let snap = sample();
+        assert_eq!(snap.fingerprint(), fingerprint_packed(&snap.pairs));
+    }
+}

@@ -1,0 +1,771 @@
+//! The write-ahead op log: length-prefixed, CRC-checked records the
+//! session appends before a commit publishes its snapshot.
+//!
+//! ## Record format
+//!
+//! The log starts with the 8-byte magic [`WAL_MAGIC`]; every record is
+//!
+//! ```text
+//! [len: u32 LE][payload: len bytes][crc32(payload): u32 LE]
+//! ```
+//!
+//! with `payload = [kind: u8][body]` encoded with the
+//! [`net::wire`](crate::net::wire) primitives:
+//!
+//! | kind | record | body |
+//! |------|--------|------|
+//! | [`REC_OP`] | one staged op | the [`RegionOp`] wire encoding (op tag, varint key, rect as varint d + 2·d bit-exact f64) |
+//! | [`REC_COMMIT`] | commit marker | varint epoch, varint pair count, varint CRC32 pair-set fingerprint |
+//!
+//! A commit is durable iff its marker record is intact: recovery
+//! ([`scan_log`]) walks records until the first length/CRC/decode
+//! failure and discards everything after the last valid marker, so a
+//! torn or bit-flipped tail can lose at most the epochs that never
+//! finished writing — never produce a partial one.
+//!
+//! ## Write path
+//!
+//! Ops are encoded into an in-memory buffer at stage time (no
+//! syscalls on the staging path); `commit()` flushes the buffer
+//! (`wal_append` phase), publishes its snapshot, then appends the
+//! marker and optionally fsyncs (`wal_fsync`). A buffer past
+//! [`BUF_HIWAT`] flushes early so bulk loads don't accumulate
+//! unbounded. IO errors degrade the log (sticky
+//! [`WalStats::errors`] + [`last_error`](Wal::last_error)) instead of
+//! failing the commit — see the [module docs](super) failure policy.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::core::interval::Interval;
+use crate::net::proto::{put_op, read_op, RegionOp};
+use crate::net::wire::{self, Reader};
+use crate::obs::Tracer;
+
+use super::crc::crc32;
+use super::DurabilityCfg;
+
+/// Log file name inside a durability directory.
+pub const LOG_FILE: &str = "wal.log";
+
+/// Magic + version prefix of the log file.
+pub const WAL_MAGIC: [u8; 8] = *b"DDMWAL01";
+
+/// Record kind: one staged region op.
+pub const REC_OP: u8 = 1;
+
+/// Record kind: a commit marker (epoch + pair-set fingerprint).
+pub const REC_COMMIT: u8 = 2;
+
+/// Upper bound on one record's payload; scan treats larger declared
+/// lengths as corruption. Generous: the largest op (a 64-d upsert) is
+/// ~1 KiB.
+pub const MAX_RECORD: usize = 1 << 20;
+
+/// Buffered op bytes past this flush to the file outside the commit
+/// path (bounds staging-path memory during bulk loads).
+const BUF_HIWAT: usize = 1 << 20;
+
+/// Destination of log writes — a seam so the fault-injection harness
+/// ([`faultfs`](super::faultfs)) can truncate, tear, or error the Nth
+/// write.
+pub trait WalSink: Send {
+    /// Write the whole buffer or fail.
+    fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()>;
+    /// Flush to stable storage (`fsync`).
+    fn sync(&mut self) -> std::io::Result<()>;
+}
+
+impl WalSink for std::fs::File {
+    fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()> {
+        Write::write_all(self, buf)
+    }
+    fn sync(&mut self) -> std::io::Result<()> {
+        self.sync_data()
+    }
+}
+
+/// Monotonic log-side counters, surfaced as `wal_*` metrics gauges and
+/// asserted by the durability tests/benches.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WalStats {
+    /// Bytes handed to the sink (magic + records).
+    pub bytes: u64,
+    /// Records encoded (op + commit), including still-buffered ones.
+    pub records: u64,
+    /// Commit markers appended.
+    pub commits: u64,
+    /// `fsync`s issued on the log.
+    pub fsyncs: u64,
+    /// Checkpoints installed (snapshot written + log truncated).
+    pub checkpoints: u64,
+    /// Failed writes/syncs — nonzero means the log is degraded.
+    pub errors: u64,
+}
+
+/// Log behaviour knobs (the session-facing subset of
+/// [`DurabilityCfg`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WalOptions {
+    /// `fsync` after every commit marker.
+    pub fsync_commits: bool,
+    /// Checkpoint every this many commits (`u64::MAX`: never).
+    pub snapshot_every: u64,
+}
+
+impl Default for WalOptions {
+    fn default() -> Self {
+        Self {
+            fsync_commits: false,
+            snapshot_every: 64,
+        }
+    }
+}
+
+/// One durable epoch recovered from the log: the staged ops between
+/// the previous marker and this one, plus the marker's own metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommittedBatch {
+    /// Epoch the marker closed.
+    pub epoch: u64,
+    /// Retained pair count the marker recorded.
+    pub n_pairs: u64,
+    /// CRC32 fingerprint of the post-commit packed pair set.
+    pub fingerprint: u32,
+    /// The batch's op records, in append (stage) order.
+    pub ops: Vec<RegionOp>,
+}
+
+/// Result of walking a log image ([`scan_log`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WalScan {
+    /// Fully committed batches, in log order.
+    pub batches: Vec<CommittedBatch>,
+    /// Byte length of the durable prefix: everything up to and
+    /// including the last valid commit marker. Appends after recovery
+    /// resume here.
+    pub valid_len: usize,
+    /// End offset of every structurally valid record (the crash-point
+    /// menu the property suite truncates at).
+    pub record_ends: Vec<usize>,
+    /// Structurally valid records decoded.
+    pub records: u64,
+    /// Bytes past `valid_len` (uncommitted tail ops + any corruption)
+    /// that recovery discards.
+    pub tail_bytes: usize,
+    /// Op records after the last marker (the discarded open batch).
+    pub open_ops: usize,
+}
+
+/// Append one op record (framing + CRC) to `out`.
+pub fn encode_op_record(out: &mut Vec<u8>, op: &RegionOp) {
+    let mut payload = Vec::with_capacity(64);
+    wire::put_u8(&mut payload, REC_OP);
+    put_op(&mut payload, op);
+    put_record(out, &payload);
+}
+
+/// Append one commit-marker record to `out`.
+pub fn encode_commit_record(out: &mut Vec<u8>, epoch: u64, n_pairs: u64, fingerprint: u32) {
+    let mut payload = Vec::with_capacity(24);
+    wire::put_u8(&mut payload, REC_COMMIT);
+    wire::put_varint(&mut payload, epoch);
+    wire::put_varint(&mut payload, n_pairs);
+    wire::put_varint(&mut payload, u64::from(fingerprint));
+    put_record(out, &payload);
+}
+
+fn put_record(out: &mut Vec<u8>, payload: &[u8]) {
+    debug_assert!(payload.len() <= MAX_RECORD, "record payload over MAX_RECORD");
+    wire::put_u32(out, payload.len() as u32);
+    out.extend_from_slice(payload);
+    wire::put_u32(out, crc32(payload));
+}
+
+/// Decode one record payload into the scan state. `None` = the
+/// payload is malformed (scan stops there).
+fn decode_payload(payload: &[u8], open: &mut Vec<RegionOp>) -> Option<Result<CommittedBatch, ()>> {
+    let mut r = Reader::new(payload);
+    let kind = r.u8().ok()?;
+    match kind {
+        REC_OP => {
+            let op = read_op(&mut r).ok()?;
+            r.finish().ok()?;
+            open.push(op);
+            Some(Err(()))
+        }
+        REC_COMMIT => {
+            let epoch = r.varint().ok()?;
+            let n_pairs = r.varint().ok()?;
+            let fingerprint = u32::try_from(r.varint().ok()?).ok()?;
+            r.finish().ok()?;
+            Some(Ok(CommittedBatch {
+                epoch,
+                n_pairs,
+                fingerprint,
+                ops: std::mem::take(open),
+            }))
+        }
+        _ => None,
+    }
+}
+
+/// Walk a log image record by record, stopping at the first
+/// length/CRC/decode failure, and return every fully committed batch.
+/// Never errors and never panics: a missing/foreign magic, a torn
+/// record, or a bit-flipped byte all just shorten the durable prefix.
+pub fn scan_log(bytes: &[u8]) -> WalScan {
+    let mut scan = WalScan::default();
+    if bytes.len() < WAL_MAGIC.len() || bytes[..WAL_MAGIC.len()] != WAL_MAGIC {
+        scan.tail_bytes = bytes.len();
+        return scan;
+    }
+    let mut at = WAL_MAGIC.len();
+    scan.valid_len = at;
+    let mut open: Vec<RegionOp> = Vec::new();
+    loop {
+        let Some(head) = bytes.get(at..at.checked_add(4).unwrap_or(usize::MAX)) else {
+            break;
+        };
+        let Ok(len_bytes) = <[u8; 4]>::try_from(head) else {
+            break;
+        };
+        let Ok(len) = usize::try_from(u32::from_le_bytes(len_bytes)) else {
+            break;
+        };
+        if len > MAX_RECORD {
+            break;
+        }
+        let Some(body_end) = at.checked_add(4).and_then(|v| v.checked_add(len)) else {
+            break;
+        };
+        let Some(rec_end) = body_end.checked_add(4) else {
+            break;
+        };
+        let (Some(payload), Some(crc_slice)) = (bytes.get(at + 4..body_end), bytes.get(body_end..rec_end))
+        else {
+            break;
+        };
+        let Ok(crc_bytes) = <[u8; 4]>::try_from(crc_slice) else {
+            break;
+        };
+        if crc32(payload) != u32::from_le_bytes(crc_bytes) {
+            break;
+        }
+        let Some(decoded) = decode_payload(payload, &mut open) else {
+            break;
+        };
+        at = rec_end;
+        scan.records += 1;
+        scan.record_ends.push(at);
+        if let Ok(batch) = decoded {
+            scan.batches.push(batch);
+            scan.valid_len = at;
+        }
+    }
+    scan.open_ops = open.len();
+    scan.tail_bytes = bytes.len().saturating_sub(scan.valid_len);
+    scan
+}
+
+/// The session-attached write-ahead log: an op buffer, a sink, and the
+/// checkpoint cadence. Constructed by the engine
+/// ([`durability`](crate::engine::EngineBuilder::durability)) and
+/// driven from the session commit path.
+pub struct Wal {
+    dir: PathBuf,
+    sink: Option<Box<dyn WalSink>>,
+    /// Encoded op records staged since the last file write.
+    buf: Vec<u8>,
+    buf_records: u64,
+    opts: WalOptions,
+    commits_since_checkpoint: u64,
+    stats: WalStats,
+    last_error: Option<String>,
+}
+
+impl Wal {
+    /// Open a log handle on `cfg.dir` (creating the directory). No log
+    /// file is touched yet — follow with [`start_fresh`](Self::start_fresh)
+    /// (new history) or [`install_checkpoint`](Self::install_checkpoint)
+    /// (resume after recovery).
+    pub fn open(cfg: &DurabilityCfg) -> crate::Result<Self> {
+        std::fs::create_dir_all(&cfg.dir)
+            .map_err(|e| crate::error::Error::msg(format!("durability dir {:?}: {e}", cfg.dir)))?;
+        Ok(Self {
+            dir: cfg.dir.clone(),
+            sink: None,
+            buf: Vec::new(),
+            buf_records: 0,
+            opts: WalOptions {
+                fsync_commits: cfg.fsync_commits,
+                snapshot_every: cfg.snapshot_every.max(1),
+            },
+            commits_since_checkpoint: 0,
+            stats: WalStats::default(),
+            last_error: None,
+        })
+    }
+
+    /// [`open`](Self::open) + [`start_fresh`](Self::start_fresh): a new
+    /// empty history at `cfg.dir`.
+    pub fn create_fresh(cfg: &DurabilityCfg) -> crate::Result<Self> {
+        let mut wal = Self::open(cfg)?;
+        wal.start_fresh()?;
+        Ok(wal)
+    }
+
+    /// Begin a new history: delete any previous snapshot file and
+    /// truncate the log to its magic. Destroys whatever the directory
+    /// held — resuming callers go through
+    /// [`DdmEngine::recover_session`](crate::engine::DdmEngine::recover_session)
+    /// instead.
+    pub fn start_fresh(&mut self) -> crate::Result<()> {
+        let snap = self.dir.join(super::snapfile::SNAP_FILE);
+        if snap.exists() {
+            std::fs::remove_file(&snap)
+                .map_err(|e| crate::error::Error::msg(format!("remove {snap:?}: {e}")))?;
+        }
+        self.new_log()
+            .map_err(|e| crate::error::Error::msg(format!("create log in {:?}: {e}", self.dir)))
+    }
+
+    fn new_log(&mut self) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(self.dir.join(LOG_FILE))?;
+        Write::write_all(&mut f, &WAL_MAGIC)?;
+        f.sync_data()?;
+        self.sink = Some(Box::new(f));
+        self.stats.bytes += WAL_MAGIC.len() as u64;
+        Ok(())
+    }
+
+    /// Directory this log lives in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Counters since construction.
+    pub fn stats(&self) -> WalStats {
+        self.stats
+    }
+
+    /// The error that degraded the log, if any write/sync has failed.
+    pub fn last_error(&self) -> Option<&str> {
+        self.last_error.as_deref()
+    }
+
+    /// Replace the sink — the fault-injection seam.
+    #[cfg(any(test, feature = "failpoints"))]
+    pub fn set_sink(&mut self, sink: Box<dyn WalSink>) {
+        self.sink = Some(sink);
+    }
+
+    /// Buffer one staged op (no IO unless the buffer passed
+    /// [`BUF_HIWAT`]). Called from the session staging path.
+    pub(crate) fn log_op(&mut self, sub: bool, key: u32, rect: Option<&[Interval]>) {
+        let op = match (sub, rect) {
+            (true, Some(r)) => RegionOp::UpsertSub { key, rect: r.to_vec() },
+            (false, Some(r)) => RegionOp::UpsertUpd { key, rect: r.to_vec() },
+            (true, None) => RegionOp::RemoveSub { key },
+            (false, None) => RegionOp::RemoveUpd { key },
+        };
+        encode_op_record(&mut self.buf, &op);
+        self.stats.records += 1;
+        self.buf_records += 1;
+        if self.buf.len() >= BUF_HIWAT {
+            self.write_buffered();
+        }
+    }
+
+    /// Flush buffered op records to the file — the write-ahead point a
+    /// commit runs before publishing its snapshot (`wal_append`).
+    pub(crate) fn flush_ops(&mut self, tracer: &mut Tracer) {
+        if self.buf.is_empty() {
+            return;
+        }
+        let t0 = tracer.start();
+        let n = self.buf_records;
+        self.write_buffered();
+        tracer.span(crate::obs::Phase::WalAppend, t0, n);
+    }
+
+    /// Append the commit marker for `epoch` (and fsync per policy) —
+    /// the point after which the epoch is durable.
+    pub(crate) fn append_commit(
+        &mut self,
+        epoch: u64,
+        n_pairs: u64,
+        fingerprint: u32,
+        tracer: &mut Tracer,
+    ) {
+        let t0 = tracer.start();
+        let mut rec = Vec::with_capacity(24);
+        encode_commit_record(&mut rec, epoch, n_pairs, fingerprint);
+        self.stats.records += 1;
+        self.stats.commits += 1;
+        self.commits_since_checkpoint += 1;
+        self.write(&rec);
+        tracer.span(crate::obs::Phase::WalAppend, t0, 1);
+        if self.opts.fsync_commits {
+            let t1 = tracer.start();
+            self.sync();
+            tracer.span(crate::obs::Phase::WalFsync, t1, 1);
+        }
+    }
+
+    /// Whether the checkpoint cadence says this commit should install a
+    /// snapshot and truncate the log.
+    pub(crate) fn should_checkpoint(&self) -> bool {
+        self.sink.is_some() && self.commits_since_checkpoint >= self.opts.snapshot_every
+    }
+
+    /// Install a checkpoint: atomically replace the snapshot file with
+    /// `snapshot_payload` (tmp + rename, both synced) and truncate the
+    /// log back to its magic. Buffered-but-unflushed op records are
+    /// kept — they belong to the next, not-yet-durable epoch and will
+    /// land in the fresh log.
+    pub(crate) fn install_checkpoint(&mut self, snapshot_payload: &[u8]) {
+        let snap = self.dir.join(super::snapfile::SNAP_FILE);
+        let tmp = self.dir.join(format!("{}.tmp", super::snapfile::SNAP_FILE));
+        let res = (|| -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            Write::write_all(&mut f, snapshot_payload)?;
+            f.sync_data()?;
+            drop(f);
+            std::fs::rename(&tmp, &snap)?;
+            self.new_log()
+        })();
+        match res {
+            Ok(()) => {
+                self.commits_since_checkpoint = 0;
+                self.stats.checkpoints += 1;
+                self.stats.bytes += snapshot_payload.len() as u64;
+            }
+            Err(e) => self.degrade(&format!("checkpoint: {e}")),
+        }
+    }
+
+    fn write_buffered(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        self.buf_records = 0;
+        self.write(&buf);
+        self.buf = buf;
+        self.buf.clear();
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        if bytes.is_empty() {
+            return;
+        }
+        let Some(sink) = self.sink.as_mut() else {
+            return;
+        };
+        match sink.write_all(bytes) {
+            Ok(()) => self.stats.bytes += bytes.len() as u64,
+            Err(e) => self.degrade(&format!("write: {e}")),
+        }
+    }
+
+    fn sync(&mut self) {
+        let Some(sink) = self.sink.as_mut() else {
+            return;
+        };
+        match sink.sync() {
+            Ok(()) => self.stats.fsyncs += 1,
+            Err(e) => self.degrade(&format!("fsync: {e}")),
+        }
+    }
+
+    /// Record the error, count it, and stop writing: the in-memory
+    /// session keeps serving while the log is degraded.
+    fn degrade(&mut self, msg: &str) {
+        self.stats.errors += 1;
+        self.last_error = Some(msg.to_string());
+        self.sink = None;
+    }
+}
+
+/// The WAL as a session holds it: the log itself plus shadow tables of
+/// the *committed* region state (key → rectangle, both sides), which
+/// is what checkpoints serialize.
+///
+/// The shadow exists because the session's trees are not a safe
+/// checkpoint source: a pipelined commit
+/// ([`commit_pipelined`](crate::session::DdmSession::commit_pipelined))
+/// writes the *next* epoch's rectangles into the trees while this
+/// epoch's marker is being appended, so at checkpoint time the trees
+/// can be one batch ahead of the durable epoch. The shadow is updated
+/// only from the merged batch an apply actually commits, so it always
+/// equals the marker's epoch exactly.
+pub struct SessionWal {
+    wal: Wal,
+    d: usize,
+    subs: std::collections::HashMap<u32, Vec<Interval>>,
+    upds: std::collections::HashMap<u32, Vec<Interval>>,
+}
+
+impl SessionWal {
+    /// Wrap `wal` for a `d`-dimensional session with no prior state.
+    pub fn new(wal: Wal, d: usize) -> Self {
+        assert!(
+            d >= 1 && d <= crate::net::proto::MAX_DIMS,
+            "durability supports 1..={} dimensions, got {d}",
+            crate::net::proto::MAX_DIMS
+        );
+        Self {
+            wal,
+            d,
+            subs: std::collections::HashMap::new(),
+            upds: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Wrap `wal` with the shadow tables pre-seeded — the resume path,
+    /// where the session already holds recovered regions.
+    pub fn with_regions(
+        wal: Wal,
+        d: usize,
+        subs: std::collections::HashMap<u32, Vec<Interval>>,
+        upds: std::collections::HashMap<u32, Vec<Interval>>,
+    ) -> Self {
+        let mut sw = Self::new(wal, d);
+        sw.subs = subs;
+        sw.upds = upds;
+        sw
+    }
+
+    /// Buffer one staged op (see [`Wal::log_op`]).
+    pub(crate) fn log_op(&mut self, sub: bool, key: u32, rect: Option<&[Interval]>) {
+        self.wal.log_op(sub, key, rect);
+    }
+
+    /// Fold one *applied* (merged, coalesced) batch into the shadow
+    /// tables — called where the session actually writes its indexes.
+    pub(crate) fn apply_committed(
+        &mut self,
+        subs: &std::collections::BTreeMap<u32, Option<Vec<Interval>>>,
+        upds: &std::collections::BTreeMap<u32, Option<Vec<Interval>>>,
+    ) {
+        for (key, op) in subs {
+            match op {
+                Some(rect) => {
+                    self.subs.insert(*key, rect.clone());
+                }
+                None => {
+                    self.subs.remove(key);
+                }
+            }
+        }
+        for (key, op) in upds {
+            match op {
+                Some(rect) => {
+                    self.upds.insert(*key, rect.clone());
+                }
+                None => {
+                    self.upds.remove(key);
+                }
+            }
+        }
+    }
+
+    /// Write-ahead flush of the buffered op records (see
+    /// [`Wal::flush_ops`]).
+    pub(crate) fn flush_ops(&mut self, tracer: &mut Tracer) {
+        self.wal.flush_ops(tracer);
+    }
+
+    /// Close the epoch durably: append the marker for the
+    /// just-published `snap` (epoch, pair count, fingerprint), fsync
+    /// per policy, and install a checkpoint when the cadence says so.
+    pub(crate) fn on_commit(&mut self, snap: &crate::session::EpochSnapshot, tracer: &mut Tracer) {
+        let fingerprint = super::fingerprint_packed(snap.packed_pairs());
+        let n_pairs = u64::try_from(snap.n_pairs()).unwrap_or(u64::MAX);
+        self.wal.append_commit(snap.epoch(), n_pairs, fingerprint, tracer);
+        if self.wal.should_checkpoint() {
+            self.checkpoint(snap);
+        }
+    }
+
+    /// Unconditionally install a checkpoint of `snap` + the shadow
+    /// region tables (the resume path calls this right after recovery
+    /// so the torn tail is physically gone).
+    pub(crate) fn checkpoint(&mut self, snap: &crate::session::EpochSnapshot) {
+        let mut subs: Vec<(u32, Vec<Interval>)> =
+            self.subs.iter().map(|(k, r)| (*k, r.clone())).collect();
+        subs.sort_unstable_by_key(|(k, _)| *k);
+        let mut upds: Vec<(u32, Vec<Interval>)> =
+            self.upds.iter().map(|(k, r)| (*k, r.clone())).collect();
+        upds.sort_unstable_by_key(|(k, _)| *k);
+        let file = super::snapfile::SnapshotFile {
+            epoch: snap.epoch(),
+            d: self.d,
+            subs,
+            upds,
+            pairs: snap.packed_pairs().to_vec(),
+        };
+        self.wal.install_checkpoint(&file.encode());
+    }
+
+    /// Counters since construction (see [`Wal::stats`]).
+    pub fn stats(&self) -> WalStats {
+        self.wal.stats()
+    }
+
+    /// The error that degraded the log, if any (see
+    /// [`Wal::last_error`]).
+    pub fn last_error(&self) -> Option<&str> {
+        self.wal.last_error()
+    }
+
+    /// Directory the log lives in.
+    pub fn dir(&self) -> &Path {
+        self.wal.dir()
+    }
+
+    /// Replace the sink — the fault-injection seam.
+    #[cfg(any(test, feature = "failpoints"))]
+    pub fn set_sink(&mut self, sink: Box<dyn WalSink>) {
+        self.wal.set_sink(sink);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(key: u32) -> RegionOp {
+        RegionOp::UpsertSub {
+            key,
+            rect: vec![Interval::new(f64::from(key), f64::from(key) + 1.0)],
+        }
+    }
+
+    fn sample_log(epochs: u64, ops_per: u32) -> Vec<u8> {
+        let mut log = WAL_MAGIC.to_vec();
+        for e in 1..=epochs {
+            for k in 0..ops_per {
+                encode_op_record(&mut log, &op(k));
+            }
+            encode_commit_record(&mut log, e, u64::from(ops_per), 0xDEAD_0000 + e as u32);
+        }
+        log
+    }
+
+    #[test]
+    fn scan_round_trips_committed_batches() {
+        let log = sample_log(3, 4);
+        let scan = scan_log(&log);
+        assert_eq!(scan.batches.len(), 3);
+        assert_eq!(scan.records, 15);
+        assert_eq!(scan.valid_len, log.len());
+        assert_eq!(scan.tail_bytes, 0);
+        assert_eq!(scan.open_ops, 0);
+        for (i, b) in scan.batches.iter().enumerate() {
+            assert_eq!(b.epoch, i as u64 + 1);
+            assert_eq!(b.n_pairs, 4);
+            assert_eq!(b.fingerprint, 0xDEAD_0000 + i as u32 + 1);
+            assert_eq!(b.ops.len(), 4);
+            assert_eq!(b.ops[2], op(2));
+        }
+    }
+
+    #[test]
+    fn uncommitted_tail_ops_are_discarded() {
+        let mut log = sample_log(2, 3);
+        let durable = log.len();
+        encode_op_record(&mut log, &op(9));
+        encode_op_record(&mut log, &op(10));
+        let scan = scan_log(&log);
+        assert_eq!(scan.batches.len(), 2);
+        assert_eq!(scan.valid_len, durable);
+        assert_eq!(scan.open_ops, 2);
+        assert_eq!(scan.tail_bytes, log.len() - durable);
+    }
+
+    #[test]
+    fn truncation_at_every_byte_never_panics_and_keeps_a_prefix() {
+        let log = sample_log(3, 2);
+        let full = scan_log(&log);
+        for cut in 0..=log.len() {
+            let scan = scan_log(&log[..cut]);
+            assert!(scan.batches.len() <= full.batches.len());
+            // Whatever survives is an exact prefix of the full history.
+            assert_eq!(
+                scan.batches[..],
+                full.batches[..scan.batches.len()],
+                "cut at {cut} is not a committed prefix"
+            );
+            assert!(scan.valid_len <= cut.max(WAL_MAGIC.len()));
+        }
+    }
+
+    #[test]
+    fn single_bit_flips_truncate_to_a_committed_prefix() {
+        let log = sample_log(3, 2);
+        let full = scan_log(&log);
+        assert_eq!(full.batches.len(), 3);
+        for byte in 0..log.len() {
+            let mut bad = log.clone();
+            bad[byte] ^= 0x10;
+            let scan = scan_log(&bad);
+            // The flip may kill the whole log (magic), a middle record
+            // (everything after discards), or a tail record — but the
+            // result is always a prefix of the real history.
+            assert!(
+                scan.batches.len() <= full.batches.len(),
+                "flip at {byte} grew the history"
+            );
+            assert_eq!(
+                scan.batches[..],
+                full.batches[..scan.batches.len()],
+                "flip at {byte} yielded a non-prefix"
+            );
+        }
+    }
+
+    #[test]
+    fn foreign_or_missing_magic_discards_everything() {
+        assert_eq!(scan_log(b""), WalScan { tail_bytes: 0, ..WalScan::default() });
+        let scan = scan_log(b"NOTAWAL0rest");
+        assert!(scan.batches.is_empty());
+        assert_eq!(scan.valid_len, 0);
+        assert_eq!(scan.tail_bytes, 12);
+    }
+
+    #[test]
+    fn oversized_declared_length_stops_the_scan() {
+        let mut log = sample_log(1, 1);
+        let durable = scan_log(&log).valid_len;
+        wire::put_u32(&mut log, (MAX_RECORD + 1) as u32);
+        log.extend_from_slice(&[0u8; 16]);
+        let scan = scan_log(&log);
+        assert_eq!(scan.batches.len(), 1);
+        assert_eq!(scan.valid_len, durable);
+    }
+
+    #[test]
+    fn wal_degrades_on_error_instead_of_panicking() {
+        let dir = std::env::temp_dir().join(format!("ddm-wal-degrade-{}", std::process::id()));
+        let mut wal = Wal::create_fresh(&DurabilityCfg::new(&dir)).expect("create");
+        struct Boom;
+        impl WalSink for Boom {
+            fn write_all(&mut self, _b: &[u8]) -> std::io::Result<()> {
+                Err(std::io::Error::other("disk on fire"))
+            }
+            fn sync(&mut self) -> std::io::Result<()> {
+                Err(std::io::Error::other("disk on fire"))
+            }
+        }
+        wal.set_sink(Box::new(Boom));
+        let mut tracer = Tracer::new(false);
+        wal.log_op(true, 1, Some(&[Interval::new(0.0, 1.0)]));
+        wal.flush_ops(&mut tracer);
+        wal.append_commit(1, 0, 0, &mut tracer);
+        assert!(wal.stats().errors >= 1);
+        assert!(wal.last_error().is_some());
+        // Degraded log swallows later writes silently.
+        wal.log_op(true, 2, None);
+        wal.flush_ops(&mut tracer);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

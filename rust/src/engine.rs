@@ -387,6 +387,7 @@ pub struct EngineBuilder {
     session: SessionParams,
     shard: ShardParams,
     pool: Option<Arc<ThreadPool>>,
+    durability: Option<crate::durable::DurabilityCfg>,
 }
 
 impl EngineBuilder {
@@ -398,6 +399,7 @@ impl EngineBuilder {
             session: SessionParams::default(),
             shard: ShardParams::default(),
             pool: None,
+            durability: None,
         }
     }
 
@@ -593,6 +595,55 @@ impl EngineBuilder {
         self
     }
 
+    // ---- durability knobs (see crate::durable) ------------------------------
+
+    /// Make every session this engine creates crash-consistent: staged
+    /// ops are written ahead to `dir`'s op log before each commit
+    /// publishes, commit markers carry the epoch's pair-set
+    /// fingerprint, and checkpoints truncate the log on a cadence. A
+    /// *new* session truncates whatever history `dir` held; to come
+    /// back from an earlier run use
+    /// [`DdmEngine::recover_session`] / [`DdmEngine::recover_any_session`]
+    /// instead. One directory belongs to one live session at a time.
+    ///
+    /// CLI: `ddm serve --wal DIR`, `ddm replay --record DIR`.
+    pub fn durability(mut self, dir: impl AsRef<std::path::Path>) -> Self {
+        let dir = dir.as_ref().to_path_buf();
+        match self.durability.as_mut() {
+            Some(cfg) => cfg.dir = dir,
+            None => self.durability = Some(crate::durable::DurabilityCfg::new(dir)),
+        }
+        self
+    }
+
+    /// `fsync` the op log after every commit marker (crash-through-power
+    /// durability; default `false` trusts the OS page cache). Call
+    /// after [`durability`](Self::durability).
+    ///
+    /// # Panics
+    /// If no durability directory has been configured yet.
+    pub fn durability_fsync(mut self, on: bool) -> Self {
+        self.durability
+            .as_mut()
+            .expect("durability_fsync needs durability(dir) first")
+            .fsync_commits = on;
+        self
+    }
+
+    /// Checkpoint (snapshot file + log truncation) every `commits`
+    /// commits (default 64; `u64::MAX` disables the cadence). Call
+    /// after [`durability`](Self::durability).
+    ///
+    /// # Panics
+    /// If no durability directory has been configured yet.
+    pub fn durability_snapshot_every(mut self, commits: u64) -> Self {
+        self.durability
+            .as_mut()
+            .expect("durability_snapshot_every needs durability(dir) first")
+            .snapshot_every = commits.max(1);
+        self
+    }
+
     pub fn build(self) -> DdmEngine {
         let pool = self
             .pool
@@ -642,6 +693,7 @@ impl EngineBuilder {
             params: self.params,
             session: self.session,
             shard: self.shard,
+            durability: self.durability,
             scratch: Arc::new(Mutex::new(scratch)),
         }
     }
@@ -677,6 +729,7 @@ pub struct DdmEngine {
     params: MatchParams,
     session: SessionParams,
     shard: ShardParams,
+    durability: Option<crate::durable::DurabilityCfg>,
     /// Reusable match scratch attached to every [`ExecCtx`] this
     /// engine creates: back-to-back match calls reuse the endpoint
     /// array, radix buffers, GBM binning block and per-worker pair
@@ -838,12 +891,37 @@ impl DdmEngine {
     /// [`MatchDiff`](crate::session::MatchDiff) of intersections. See
     /// [`crate::session`] for the full model.
     pub fn session(&self, d: usize) -> DdmSession {
-        DdmSession::new(d, Arc::clone(&self.pool), self.nthreads, self.session)
+        let mut s = DdmSession::new(d, Arc::clone(&self.pool), self.nthreads, self.session);
+        if let Some(wal) = self.fresh_wal(d) {
+            s.attach_wal(wal);
+        }
+        s
     }
 
     /// The session knobs new sessions are created with.
     pub fn session_params(&self) -> &SessionParams {
         &self.session
+    }
+
+    /// The durability configuration sessions are created with, if any
+    /// (see [`EngineBuilder::durability`]).
+    pub fn durability_cfg(&self) -> Option<&crate::durable::DurabilityCfg> {
+        self.durability.as_ref()
+    }
+
+    /// A fresh-history [`SessionWal`](crate::durable::SessionWal) per
+    /// the builder's durability knobs; `None` without them.
+    ///
+    /// # Panics
+    /// On an unwritable durability directory — a misconfiguration, not
+    /// a runtime fault (runtime IO errors degrade the log instead; see
+    /// [`crate::durable`]).
+    fn fresh_wal(&self, d: usize) -> Option<crate::durable::SessionWal> {
+        self.durability.as_ref().map(|cfg| {
+            let wal = crate::durable::Wal::create_fresh(cfg)
+                .unwrap_or_else(|e| panic!("durability setup failed: {e}"));
+            crate::durable::SessionWal::new(wal, d)
+        })
     }
 
     // ---- sharding ----------------------------------------------------------
@@ -881,14 +959,18 @@ impl DdmEngine {
         part: SpacePartitioner,
         strategy: ShardStrategy,
     ) -> ShardedSession {
-        ShardedSession::new(
+        let mut s = ShardedSession::new(
             d,
             part,
             strategy,
             Arc::clone(&self.pool),
             self.nthreads,
             self.session,
-        )
+        );
+        if let Some(wal) = self.fresh_wal(d) {
+            s.attach_wal(wal);
+        }
+        s
     }
 
     /// A session dispatched by the builder's shard count: a plain
@@ -901,6 +983,64 @@ impl DdmEngine {
         } else {
             AnySession::Single(self.session(d))
         }
+    }
+
+    // ---- recovery ----------------------------------------------------------
+
+    /// Rebuild a plain [`DdmSession`] to the exact last durable epoch
+    /// in the builder's durability directory: decode the checkpoint,
+    /// replay the committed log tail through the real matcher, verify
+    /// every epoch's pair-set fingerprint, then resume logging into the
+    /// same directory (installing a fresh checkpoint so any torn tail
+    /// is physically discarded). See [`crate::durable::recover`] for
+    /// the state machine; `ddm replay --resume` / `ddm serve --resume`
+    /// are this, on the CLI.
+    ///
+    /// Errors: no durability configured, nothing to recover, corrupt
+    /// checkpoint, inconsistent epoch history, or a replay that does
+    /// not reproduce the logged fingerprints.
+    pub fn recover_session(&self, d: usize) -> crate::Result<(DdmSession, crate::durable::RecoverReport)> {
+        let (any, report) = self.recover_impl(d, |bare| AnySession::Single(bare.session(d)))?;
+        match any {
+            AnySession::Single(s) => Ok((s, report)),
+            AnySession::Sharded(_) => unreachable!("recover_impl preserves the session shape"),
+        }
+    }
+
+    /// [`recover_session`](Self::recover_session) through the
+    /// [`any_session`](Self::any_session) dispatch: recovers into a
+    /// sharded session when the builder says `shards > 1`, a plain one
+    /// otherwise. The WAL is shape-agnostic (one op log per session
+    /// either way), so a history recorded unsharded can be recovered
+    /// sharded and vice versa.
+    pub fn recover_any_session(
+        &self,
+        d: usize,
+        span: crate::core::Interval,
+    ) -> crate::Result<(AnySession, crate::durable::RecoverReport)> {
+        self.recover_impl(d, |bare| bare.any_session(d, span))
+    }
+
+    fn recover_impl(
+        &self,
+        d: usize,
+        make: impl FnOnce(&DdmEngine) -> AnySession,
+    ) -> crate::Result<(AnySession, crate::durable::RecoverReport)> {
+        let Some(cfg) = self.durability.clone() else {
+            crate::bail!("recover needs an engine built with durability(dir)");
+        };
+        let st = crate::durable::recover::scan_dir(&cfg.dir)?;
+        // Replay into a WAL-less session so recovery writes nothing,
+        // then attach a resumed log seeded with the recovered regions.
+        let mut bare = self.clone();
+        bare.durability = None;
+        let mut session = make(&bare);
+        let report = crate::durable::recover::replay_into(&mut session, &st)?;
+        let (subs, upds) = st.final_regions();
+        let wal = crate::durable::Wal::open(&cfg)?;
+        session.attach_wal(crate::durable::SessionWal::with_regions(wal, d, subs, upds));
+        session.checkpoint_now();
+        Ok((session, report))
     }
 }
 
@@ -967,6 +1107,52 @@ mod tests {
                 algo.name()
             );
         }
+    }
+
+    #[test]
+    fn durable_sessions_recover_to_the_last_committed_epoch() {
+        for shards in [1usize, 3] {
+            let dir = std::env::temp_dir()
+                .join(format!("ddm-engine-wal-{shards}-{}", std::process::id()));
+            std::fs::remove_dir_all(&dir).ok();
+            let engine = DdmEngine::builder()
+                .threads(2)
+                .shards(shards)
+                .durability(&dir)
+                .build();
+            let span = Interval::new(0.0, 100.0);
+            {
+                let mut s = engine.any_session(1, span);
+                s.upsert_subscription(0, &[Interval::new(0.0, 10.0)]);
+                s.upsert_update(1, &[Interval::new(5.0, 15.0)]);
+                s.commit();
+                s.upsert_update(2, &[Interval::new(50.0, 60.0)]);
+                s.commit();
+                assert!(s.wal_stats().is_some());
+                assert_eq!(s.wal_error(), None);
+            }
+            let (mut s, report) = engine.recover_any_session(1, span).expect("recover");
+            assert_eq!(report.epoch, 2, "shards={shards}");
+            assert_eq!(s.epoch(), 2, "shards={shards}");
+            assert_eq!(report.batches, 2);
+            assert!(s.contains_pair(0, 1));
+            assert!(!s.contains_pair(0, 2));
+            // The recovered session keeps logging: one more commit
+            // lands at epoch 3 and is itself recoverable.
+            s.remove_subscription(0);
+            s.commit();
+            drop(s);
+            let (s2, r2) = engine.recover_any_session(1, span).expect("re-recover");
+            assert_eq!((r2.epoch, s2.epoch()), (3, 3));
+            assert!(!s2.contains_pair(0, 1));
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn recover_without_durability_is_an_error() {
+        let engine = DdmEngine::builder().threads(1).build();
+        assert!(engine.recover_session(1).is_err());
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //!   ddm route      network router: serves the federation topology
 //!   ddm client     scripted op stream against a worker or federation
 //!   ddm bench-net  quick loopback throughput/latency measurement
+//!   ddm wal-info   offline scan of a durability directory
 //!   ddm info       host/Table-1 report + artifact status
 //!
 //! Examples:
@@ -33,11 +34,19 @@
 //!   ddm serve --config examples/service.toml
 //!   ddm serve --listen 127.0.0.1:7777 --d 1 --shards 4 --span 0,1e6
 //!   ddm serve --listen 127.0.0.1:7777 --backlog 4096   # Busy past 4096 queued ops
+//!   ddm serve --listen 127.0.0.1:7777 --wal /var/lib/ddm       # durable epochs
+//!   ddm serve --listen 127.0.0.1:7777 --wal /var/lib/ddm --resume --fsync
+//!   ddm replay --n 50k --epochs 10 --record wal-dir            # log every epoch
+//!   ddm replay --resume wal-dir --epochs 10                    # recover, keep churning
 //!   ddm route --listen 127.0.0.1:7700 --workers 127.0.0.1:7701,127.0.0.1:7702 \
 //!             --shards 4 --span 0,1e6
 //!   ddm client --addr 127.0.0.1:7777 --n 1000 --epochs 5 --verify --metrics
+//!   ddm client --addr 127.0.0.1:7777 --timeout-ms 2000 --n 1000
+//!   ddm client --addr 127.0.0.1:7777 --n 0 --expect-epoch 11 \
+//!             --expect-fingerprint 0x1c2d3e4f
 //!   ddm client --router 127.0.0.1:7700 --n 1000 --shutdown
 //!   ddm bench-net --n 2000 --conns 1,2,4
+//!   ddm wal-info --dir wal-dir
 
 use std::time::Instant;
 
@@ -54,7 +63,8 @@ use ddm::workload::{alpha_workload, nd_alpha_workload, nd_correlated_workload, A
 
 fn usage() -> ! {
     eprintln!(
-        "usage: ddm <match|xla-match|replay|trace|serve|route|client|bench-net|info> [options]\n\
+        "usage: ddm <match|xla-match|replay|trace|serve|route|client|bench-net|wal-info|info> \
+         [options]\n\
          options are documented in rust/src/main.rs and README.md"
     );
     std::process::exit(2)
@@ -236,7 +246,10 @@ fn cmd_xla_match(args: &Args) {
 /// re-match per epoch (`--mode rebuild`, the baseline both replace).
 /// All modes run the identical deterministic move script — optionally
 /// skewed with `--hotspot` — so their reported per-epoch pair churn
-/// can be compared directly.
+/// can be compared directly. `--record DIR` writes every committed
+/// epoch to a durability directory; `--resume DIR` rebuilds the
+/// session from one (verifying per-epoch fingerprints) and keeps
+/// churning — together they make a crash/restart cycle scriptable.
 fn cmd_replay(args: &Args) {
     use ddm::workload::churn::{diff_pair_counts, relocate, MoveScript};
 
@@ -250,6 +263,20 @@ fn cmd_replay(args: &Args) {
     let trace = args.flag("trace");
     if trace && mode == "rebuild" {
         die("--trace needs an incremental mode (session|sharded); rebuild has no commit phases");
+    }
+    // `--record DIR` logs every committed epoch to DIR; `--resume DIR`
+    // rebuilds the session from DIR first and churns on from there.
+    let record = args.get("record").map(str::to_string);
+    let resume = args.get("resume").map(str::to_string);
+    if record.is_some() && resume.is_some() {
+        die("--record and --resume are exclusive (resume keeps logging into its own dir)");
+    }
+    let wal_dir = record.clone().or_else(|| resume.clone());
+    if wal_dir.is_some() && mode == "rebuild" {
+        die("--record/--resume need an incremental mode (session|sharded)");
+    }
+    if resume.is_some() && args.flag("verify") {
+        die("--verify compares against a fresh static match; it cannot follow --resume");
     }
 
     let (mut subs, mut upds, desc) = match args.get("workload").unwrap_or("alpha") {
@@ -285,18 +312,34 @@ fn cmd_replay(args: &Args) {
          ({moves_per_epoch} moves/epoch) threads={threads} workload=[{desc}]"
     );
 
-    let engine = DdmEngine::builder()
+    let mut builder = DdmEngine::builder()
         .algo_str(args.get("algo").unwrap_or("psbm"))
         .unwrap_or_else(|e| die(&e))
         .threads(threads)
-        .trace(trace)
-        .build();
+        .trace(trace);
+    if let Some(dir) = &wal_dir {
+        builder = with_durability(builder, args, dir);
+    }
+    if resume.is_some() {
+        builder = builder.shards(if mode == "sharded" { shards } else { 1 });
+    }
+    let engine = builder.build();
     // All modes replay the identical deterministic move script.
     let mut script = MoveScript::with_hotspot(seed ^ 0xC0FFEE, hotspot);
     let (mut tot_added, mut tot_removed) = (0usize, 0usize);
     match mode.as_str() {
         "session" | "sharded" => {
-            let mut sess = if mode == "sharded" {
+            let mut spans: Vec<ddm::obs::SpanRecord> = Vec::new();
+            let mut commit_wall = 0.0f64;
+            let mut sess = if resume.is_some() {
+                // Recovered state replaces the dense epoch-0 load; the
+                // churn script then moves regions on top of it.
+                let (sess, report) = engine
+                    .recover_any_session(1, ddm::core::Interval::new(0.0, space_hi))
+                    .unwrap_or_else(|e| die(&format!("--resume: {e}")));
+                print_recover_report(&report);
+                sess
+            } else if mode == "sharded" {
                 ddm::shard::AnySession::Sharded(engine.sharded_session_with(
                     1,
                     ddm::shard::SpacePartitioner::uniform(
@@ -308,19 +351,19 @@ fn cmd_replay(args: &Args) {
             } else {
                 ddm::shard::AnySession::Single(engine.session(1))
             };
-            let mut spans: Vec<ddm::obs::SpanRecord> = Vec::new();
-            let mut commit_wall = 0.0f64;
-            let t0 = Instant::now();
-            sess.load_dense_1d(&subs, &upds);
-            let tc = Instant::now();
-            let d0 = sess.commit();
-            commit_wall += tc.elapsed().as_secs_f64();
-            spans.extend(sess.drain_trace());
-            println!(
-                "epoch 0: {} initial pairs in {}",
-                d0.added.len(),
-                ddm::bench::stats::fmt_secs(t0.elapsed().as_secs_f64())
-            );
+            if resume.is_none() {
+                let t0 = Instant::now();
+                sess.load_dense_1d(&subs, &upds);
+                let tc = Instant::now();
+                let d0 = sess.commit();
+                commit_wall += tc.elapsed().as_secs_f64();
+                spans.extend(sess.drain_trace());
+                println!(
+                    "epoch 0: {} initial pairs in {}",
+                    d0.added.len(),
+                    ddm::bench::stats::fmt_secs(t0.elapsed().as_secs_f64())
+                );
+            }
             let t1 = Instant::now();
             for e in 1..=epochs {
                 for _ in 0..moves_per_epoch {
@@ -350,6 +393,19 @@ fn cmd_replay(args: &Args) {
             );
             if let Some(im) = sess.imbalance() {
                 println!("shard imbalance: {im:.2} over {} shards", sess.shards());
+            }
+            if let Some(ws) = sess.wal_stats() {
+                println!(
+                    "wal: {} records / {} commits / {} checkpoints, {} bytes, {} fsyncs{}",
+                    ws.records,
+                    ws.commits,
+                    ws.checkpoints,
+                    ws.bytes,
+                    ws.fsyncs,
+                    sess.wal_error()
+                        .map(|e| format!(" — DEGRADED: {e}"))
+                        .unwrap_or_default()
+                );
             }
             if trace {
                 report_trace(&spans, commit_wall, sess.trace_dropped());
@@ -602,13 +658,46 @@ fn cmd_serve(args: &Args) {
     }
 }
 
+/// Apply the shared durability flags (`--wal DIR`, `--fsync`,
+/// `--snap-every N`) to an engine builder.
+fn with_durability(
+    mut b: ddm::engine::EngineBuilder,
+    args: &Args,
+    dir: &str,
+) -> ddm::engine::EngineBuilder {
+    b = b.durability(dir);
+    if args.flag("fsync") {
+        b = b.durability_fsync(true);
+    }
+    if let Some(every) = args.try_opt::<u64>("snap-every").unwrap_or_else(|e| die(&e)) {
+        b = b.durability_snapshot_every(every);
+    }
+    b
+}
+
+/// Print what a recovery rebuilt (shared by `serve --resume`, `replay
+/// --resume` and `wal-info`).
+fn print_recover_report(r: &ddm::durable::RecoverReport) {
+    println!(
+        "resume: epoch={} pairs={} fingerprint={:08x} \
+         ({} snapshot regions + {} batches / {} ops replayed; \
+         discarded {} torn tail bytes, {} uncommitted ops)",
+        r.epoch, r.n_pairs, r.fingerprint, r.snapshot_regions, r.batches, r.ops,
+        r.tail_bytes, r.open_ops
+    );
+}
+
 /// Network worker: an [`AnySession`](ddm::shard::AnySession) behind
 /// `ddm::net::serve`. Sharding mirrors the in-process builder surface:
 /// `--cuts c1,c2,…` pins explicit global cut points (what a federation
 /// worker gets from `ddm route`'s printed hints), `--shards N --span
 /// LO,HI` builds uniform stripes, neither means a single unsharded
-/// session. Runs until a wire `Shutdown` arrives, then flushes, says
-/// `Goodbye`, joins every thread and prints final metrics.
+/// session. `--wal DIR` makes every committed epoch durable
+/// (`--fsync`, `--snap-every N` tune the policy) and `--resume`
+/// rebuilds the session from DIR before listening, so a killed worker
+/// comes back at its last durable epoch. Runs until a wire `Shutdown`
+/// arrives, then flushes, says `Goodbye`, joins every thread and
+/// prints final metrics.
 fn cmd_serve_net(args: &Args) {
     let listen = args.get("listen").unwrap_or("127.0.0.1:0").to_string();
     let d: usize = args.opt("d", 1usize);
@@ -617,37 +706,61 @@ fn cmd_serve_net(args: &Args) {
     if d == 0 || split_dim >= d {
         die(&format!("--split-dim {split_dim} out of range for --d {d}"));
     }
-    let engine = DdmEngine::builder()
+    let cuts: Option<Vec<f64>> = args.try_list("cuts").unwrap_or_else(|e| die(&e));
+    let shards: usize = args.opt("shards", 1usize);
+    let resume = args.flag("resume");
+    let mut builder = DdmEngine::builder()
         .algo_str(args.get("algo").unwrap_or("psbm"))
         .unwrap_or_else(|e| die(&e))
         .threads(threads)
         .trace(args.flag("trace"))
         // `--backlog N` bounds the worker's staged-op ingest queue:
         // beyond N queued ops, clients get a typed `Busy` reply.
-        .ingest_backlog(args.opt("backlog", ddm::session::DEFAULT_INGEST_BACKLOG))
-        .build();
-    let cuts: Option<Vec<f64>> = args.try_list("cuts").unwrap_or_else(|e| die(&e));
-    let shards: usize = args.opt("shards", 1usize);
-    let session = match cuts {
-        Some(cuts) => ddm::shard::AnySession::Sharded(engine.sharded_session_with(
-            d,
-            ddm::shard::SpacePartitioner::from_cuts(split_dim, cuts),
-        )),
-        None if shards > 1 => {
-            let span: Vec<f64> = args.list("span", &[0.0, 1e6]);
-            if span.len() != 2 || span[0] >= span[1] {
-                die("--span needs LO,HI with LO < HI");
-            }
-            ddm::shard::AnySession::Sharded(engine.sharded_session_with(
-                d,
-                ddm::shard::SpacePartitioner::uniform(
-                    shards,
-                    split_dim,
-                    ddm::core::Interval::new(span[0], span[1]),
-                ),
-            ))
+        .ingest_backlog(args.opt("backlog", ddm::session::DEFAULT_INGEST_BACKLOG));
+    match args.get("wal") {
+        Some(dir) => builder = with_durability(builder, args, dir),
+        None if resume => die("--resume needs --wal DIR"),
+        None => {}
+    }
+    if resume {
+        builder = builder.shards(shards).split_dim(split_dim);
+    }
+    let engine = builder.build();
+    let session = if resume {
+        if cuts.is_some() {
+            die("--resume supports --shards/--span striping, not explicit --cuts");
         }
-        None => ddm::shard::AnySession::Single(engine.session(d)),
+        let span: Vec<f64> = args.list("span", &[0.0, 1e6]);
+        if span.len() != 2 || span[0] >= span[1] {
+            die("--span needs LO,HI with LO < HI");
+        }
+        let (sess, report) = engine
+            .recover_any_session(d, ddm::core::Interval::new(span[0], span[1]))
+            .unwrap_or_else(|e| die(&format!("--resume: {e}")));
+        print_recover_report(&report);
+        sess
+    } else {
+        match cuts {
+            Some(cuts) => ddm::shard::AnySession::Sharded(engine.sharded_session_with(
+                d,
+                ddm::shard::SpacePartitioner::from_cuts(split_dim, cuts),
+            )),
+            None if shards > 1 => {
+                let span: Vec<f64> = args.list("span", &[0.0, 1e6]);
+                if span.len() != 2 || span[0] >= span[1] {
+                    die("--span needs LO,HI with LO < HI");
+                }
+                ddm::shard::AnySession::Sharded(engine.sharded_session_with(
+                    d,
+                    ddm::shard::SpacePartitioner::uniform(
+                        shards,
+                        split_dim,
+                        ddm::core::Interval::new(span[0], span[1]),
+                    ),
+                ))
+            }
+            None => ddm::shard::AnySession::Single(engine.session(d)),
+        }
     };
     let stripes = session.shards();
     let cfg = ddm::net::ServerConfig {
@@ -672,7 +785,10 @@ fn cmd_serve_net(args: &Args) {
 /// contiguous stripe ranges to `--workers`, prints the exact `ddm
 /// serve --cuts …` command for each worker (the local cut slice that
 /// makes federated routing bit-identical to a flat sharded session),
-/// and serves `GetTopology` until a wire `Shutdown`.
+/// and serves `GetTopology` until a wire `Shutdown`. `--probe` dials
+/// every worker first (handshake bounded by `--timeout-ms`, default
+/// 2000) so a dead or wedged worker fails the router fast instead of
+/// surfacing as a hung federation client later.
 fn cmd_route(args: &Args) {
     let listen = args.get("listen").unwrap_or("127.0.0.1:0").to_string();
     let d: usize = args.opt("d", 1usize);
@@ -730,6 +846,14 @@ fn cmd_route(args: &Args) {
                 local.join(",")
             }
         );
+    }
+    if args.flag("probe") {
+        let timeout = std::time::Duration::from_millis(args.opt("timeout-ms", 2_000u64));
+        for entry in &table {
+            ddm::net::NetClient::connect_with(&entry.addr, timeout)
+                .unwrap_or_else(|e| die(&format!("--probe {}: {e}", entry.addr)));
+        }
+        println!("route: probed {} worker(s), all reachable", table.len());
     }
     let topo = ddm::net::TopologySnapshot {
         d: d as u32,
@@ -859,14 +983,20 @@ fn apply_fed(
 /// federation). Per epoch: stage ops, commit, report the diff.
 /// `--verify` replays the identical script on an in-process session
 /// and asserts every epoch's added/removed lists match (run it against
-/// a freshly started server). `--metrics` prints the server metrics
-/// table; `--shutdown` stops the server(s) and waits for `Goodbye`.
+/// a freshly started server). `--timeout-ms N` bounds connect and
+/// every read/write (0 = no deadline). `--expect-epoch N` /
+/// `--expect-fingerprint HEX` assert the server's epoch and pair-set
+/// fingerprint after the script runs (with `--n 0`, they audit a
+/// freshly resumed server without staging anything). `--metrics`
+/// prints the server metrics table; `--shutdown` stops the server(s)
+/// and waits for `Goodbye`.
 fn cmd_client(args: &Args) {
     let n: usize = args.size("n", 1000);
     let epochs: usize = args.opt("epochs", 5usize);
     let churn: f64 = args.opt("churn", 0.1f64);
     let seed: u64 = args.opt("seed", 42u64);
     let space: f64 = args.opt("space", 1e6);
+    let timeout = std::time::Duration::from_millis(args.opt("timeout-ms", 30_000u64));
 
     enum Target {
         Single(ddm::net::NetClient),
@@ -874,11 +1004,11 @@ fn cmd_client(args: &Args) {
     }
     let mut target = match (args.get("router"), args.get("addr")) {
         (Some(router), _) => Target::Fed(
-            ddm::net::FederationClient::connect(router)
+            ddm::net::FederationClient::connect_with(router, timeout)
                 .unwrap_or_else(|e| die(&format!("connect {router}: {e}"))),
         ),
         (None, Some(addr)) => Target::Single(
-            ddm::net::NetClient::connect(addr)
+            ddm::net::NetClient::connect_with(addr, timeout)
                 .unwrap_or_else(|e| die(&format!("connect {addr}: {e}"))),
         ),
         (None, None) => die("--addr ADDR or --router ADDR is required"),
@@ -945,6 +1075,47 @@ fn cmd_client(args: &Args) {
                 ""
             }
         );
+    }
+
+    let expect_epoch: Option<u64> = args.try_opt("expect-epoch").unwrap_or_else(|e| die(&e));
+    let expect_fp: Option<u32> = args.get("expect-fingerprint").map(|s| {
+        u32::from_str_radix(s.trim_start_matches("0x"), 16)
+            .unwrap_or_else(|e| die(&format!("--expect-fingerprint {s}: {e}")))
+    });
+    if expect_epoch.is_some() || expect_fp.is_some() {
+        let (epoch, pairs) = match &mut target {
+            Target::Single(c) => {
+                let (epoch, _pending) =
+                    c.sync(0xC0DE).unwrap_or_else(|e| die(&format!("sync: {e}")));
+                let pairs = c.pairs().unwrap_or_else(|e| die(&format!("pairs: {e}")));
+                (epoch, pairs)
+            }
+            Target::Fed(f) => {
+                let pairs = f.pairs().unwrap_or_else(|e| die(&format!("pairs: {e}")));
+                (f.epoch(), pairs)
+            }
+        };
+        let packed: Vec<u64> = pairs
+            .iter()
+            .map(|&(s, u)| ddm::core::sink::pack_pair(s, u))
+            .collect();
+        let fp = ddm::durable::fingerprint_packed(&packed);
+        println!(
+            "state: epoch={epoch} pairs={} fingerprint={fp:08x}",
+            pairs.len()
+        );
+        if let Some(want) = expect_epoch {
+            if epoch != want {
+                die(&format!("--expect-epoch {want}: server is at epoch {epoch}"));
+            }
+        }
+        if let Some(want) = expect_fp {
+            if fp != want {
+                die(&format!(
+                    "--expect-fingerprint {want:08x}: server pair set fingerprints to {fp:08x}"
+                ));
+            }
+        }
     }
 
     if args.flag("metrics") {
@@ -1097,6 +1268,43 @@ fn cmd_serve_scripted(args: &Args) {
     m.table().print();
 }
 
+/// Offline scan of a durability directory: decode the checkpoint and
+/// the committed log tail (exactly what recovery would keep) without
+/// building a session, and print the last durable epoch, pair count
+/// and fingerprint — the values `ddm client --expect-epoch
+/// --expect-fingerprint` asserts against a resumed server.
+fn cmd_wal_info(args: &Args) {
+    let Some(dir) = args.get("dir") else {
+        die("--dir DIR is required");
+    };
+    let st = ddm::durable::recover::scan_dir(std::path::Path::new(dir))
+        .unwrap_or_else(|e| die(&format!("wal-info {dir}: {e}")));
+    println!(
+        "epoch={} pairs={} fingerprint={:08x}",
+        st.last_epoch, st.last_n_pairs, st.last_fingerprint
+    );
+    match &st.snapshot {
+        Some(snap) => println!(
+            "snapshot: epoch {} ({} subscription + {} update regions)",
+            snap.epoch,
+            snap.subs.len(),
+            snap.upds.len()
+        ),
+        None => println!("snapshot: none"),
+    }
+    let batch_ops: usize = st.batches.iter().map(|b| b.ops.len()).sum();
+    println!(
+        "log: {} committed batches ({} ops) in {} records / {} bytes; \
+         tail: {} torn bytes, {} uncommitted ops",
+        st.batches.len(),
+        batch_ops,
+        st.log_records,
+        st.log_bytes,
+        st.tail_bytes,
+        st.open_ops
+    );
+}
+
 fn cmd_info(_args: &Args) {
     println!("host:");
     sysinfo::table1().print();
@@ -1133,6 +1341,7 @@ fn main() {
         "route" => cmd_route(&args),
         "client" => cmd_client(&args),
         "bench-net" => cmd_bench_net(&args),
+        "wal-info" => cmd_wal_info(&args),
         "info" => cmd_info(&args),
         _ => usage(),
     }

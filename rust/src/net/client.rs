@@ -30,6 +30,50 @@ use crate::shard::SpacePartitioner;
 
 use super::proto::{MetricsSnapshot, Msg, RegionOp, Role, TopologySnapshot, PROTO_ID};
 
+/// Typed client-side failure surface. `Busy` is the one *retryable*
+/// error: the worker's admission control rejected staged ops
+/// ([`Msg::Busy`]), and because region ops are idempotent last-writer-
+/// wins upserts/removes, the cure is to back off and resend the
+/// in-flight window — which is exactly what
+/// [`FederationClient::settle`] does. Everything else is fatal for the
+/// frames in flight (reconnect and resync, or give up).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NetError {
+    /// Admission-control rejection: ops were dropped, retry after
+    /// backoff. Carries the observed backlog depth and its limit.
+    Busy { pending: u64, limit: u64 },
+    /// Transport or protocol failure.
+    Fatal(String),
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Busy { pending, limit } => {
+                write!(f, "server busy: backlog {pending}/{limit}, retry after backoff")
+            }
+            NetError::Fatal(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+/// What a [`NetClient::barrier`] round-trip observed on its way to the
+/// matching `SyncAck`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BarrierInfo {
+    /// Server epoch at the ack.
+    pub epoch: u64,
+    /// Ops staged (accepted) server-side at the ack.
+    pub pending: u64,
+    /// `Busy` rejections consumed while waiting — each one is an op
+    /// the server dropped since the last barrier.
+    pub busy: u64,
+    /// Backlog limit from the last `Busy` frame (0 when none seen).
+    pub limit: u64,
+}
+
 /// One blocking connection to a DDM server, with the `Hello`/`Welcome`
 /// handshake already done.
 ///
@@ -49,13 +93,44 @@ pub struct NetClient {
 
 impl NetClient {
     /// Connect, handshake, and return a ready client. The socket gets
-    /// a read timeout (default 30 s — see
-    /// [`set_timeout`](Self::set_timeout)) so a hung server turns into
-    /// an error, never a stuck process.
+    /// a 30 s connect/read/write deadline (see
+    /// [`connect_with`](Self::connect_with) to choose one) so a hung
+    /// server turns into an error, never a stuck process.
     pub fn connect(addr: &str) -> crate::Result<Self> {
-        let stream = TcpStream::connect(addr)?;
+        Self::connect_with(addr, Duration::from_secs(30))
+    }
+
+    /// Connect with an explicit deadline applied to the TCP connect
+    /// and, as read/write timeouts, to every frame after it (CLI
+    /// `--timeout-ms`). A zero duration means no deadline anywhere —
+    /// block forever, the pre-timeout behavior.
+    pub fn connect_with(addr: &str, timeout: Duration) -> crate::Result<Self> {
+        use std::net::ToSocketAddrs;
+        let stream = if timeout.is_zero() {
+            TcpStream::connect(addr)?
+        } else {
+            let mut last: Option<std::io::Error> = None;
+            let mut found = None;
+            for sa in addr.to_socket_addrs()? {
+                match TcpStream::connect_timeout(&sa, timeout) {
+                    Ok(s) => {
+                        found = Some(s);
+                        break;
+                    }
+                    Err(e) => last = Some(e),
+                }
+            }
+            match (found, last) {
+                (Some(s), _) => s,
+                (None, Some(e)) => return Err(e.into()),
+                (None, None) => crate::bail!("{addr} resolved to no addresses"),
+            }
+        };
         stream.set_nodelay(true)?;
-        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        if !timeout.is_zero() {
+            stream.set_read_timeout(Some(timeout))?;
+            stream.set_write_timeout(Some(timeout))?;
+        }
         let mut c = Self {
             stream,
             rbuf: Vec::new(),
@@ -97,6 +172,18 @@ impl NetClient {
     /// Override the read timeout (benches and tests shorten it).
     pub fn set_timeout(&mut self, t: Duration) -> crate::Result<()> {
         self.stream.set_read_timeout(Some(t))?;
+        Ok(())
+    }
+
+    /// Read deadline per `recv` (`None`: block forever).
+    pub fn set_read_timeout(&mut self, t: Option<Duration>) -> crate::Result<()> {
+        self.stream.set_read_timeout(t)?;
+        Ok(())
+    }
+
+    /// Write deadline per `send` (`None`: block forever).
+    pub fn set_write_timeout(&mut self, t: Option<Duration>) -> crate::Result<()> {
+        self.stream.set_write_timeout(t)?;
         Ok(())
     }
 
@@ -188,6 +275,34 @@ impl NetClient {
         }
     }
 
+    /// [`sync`](Self::sync), but accounting for admission control: any
+    /// [`Msg::Busy`] consumed on the way to the ack is an op the
+    /// server *dropped* since the last barrier, reported in
+    /// [`BarrierInfo::busy`] so the caller knows its in-flight window
+    /// needs resending ([`FederationClient::settle`] is that loop).
+    pub fn barrier(&mut self, token: u64) -> crate::Result<BarrierInfo> {
+        self.send(&Msg::Sync { token })?;
+        let mut info = BarrierInfo::default();
+        loop {
+            match self.recv_ok("sync ack")? {
+                Msg::SyncAck {
+                    token: t,
+                    epoch,
+                    pending,
+                } if t == token => {
+                    info.epoch = epoch;
+                    info.pending = pending;
+                    return Ok(info);
+                }
+                Msg::Busy { limit, .. } => {
+                    info.busy += 1;
+                    info.limit = limit;
+                }
+                _ => {}
+            }
+        }
+    }
+
     /// Ask for every future epoch's diff on this connection.
     pub fn subscribe(&mut self) -> crate::Result<()> {
         self.send(&Msg::Subscribe)
@@ -251,12 +366,24 @@ pub struct FederationClient {
     /// range maps to a contiguous worker range).
     stripe_worker: Vec<usize>,
     workers: Vec<NetClient>,
+    /// Worker addresses from the topology, kept for reconnects.
+    addrs: Vec<String>,
+    /// Per-worker ops sent since that worker's last clean barrier:
+    /// the resend window admission control ([`NetError::Busy`]) and
+    /// reconnects replay. Idempotent LWW ops make over-resending safe.
+    inflight: Vec<Vec<RegionOp>>,
     sub_home: HashMap<u32, WorkerRange>,
     upd_home: HashMap<u32, WorkerRange>,
     /// packed pair → number of workers currently reporting it.
     pair_refs: HashMap<u64, u32>,
     epoch: u64,
     d: usize,
+    /// Connect/read/write deadline for reconnects (what the original
+    /// connections were made with).
+    timeout: Duration,
+    sync_token: u64,
+    /// Backoff jitter source (seeded once from the monotonic clock).
+    rng: crate::prng::Rng,
 }
 
 impl FederationClient {
@@ -264,17 +391,33 @@ impl FederationClient {
     /// every worker. The router connection is dropped afterwards — it
     /// is not part of the hot path.
     pub fn connect(addr: &str) -> crate::Result<Self> {
-        let mut router = NetClient::connect(addr)?;
+        Self::connect_with(addr, Duration::from_secs(30))
+    }
+
+    /// [`connect`](Self::connect) with an explicit connect/read/write
+    /// deadline applied to the router and every worker connection
+    /// (and remembered for reconnects). Zero: no deadline.
+    pub fn connect_with(addr: &str, timeout: Duration) -> crate::Result<Self> {
+        let mut router = NetClient::connect_with(addr, timeout)?;
         if router.role() != Role::Router {
             crate::bail!("{addr} is not a router (role {:?})", router.role());
         }
         let topo = router.topology()?;
-        Self::from_topology(&topo)
+        Self::from_topology_timeout(&topo, timeout)
     }
 
     /// Build directly from a topology snapshot (what `connect` does
     /// after asking the router).
     pub fn from_topology(topo: &TopologySnapshot) -> crate::Result<Self> {
+        Self::from_topology_timeout(topo, Duration::from_secs(30))
+    }
+
+    /// [`from_topology`](Self::from_topology) with an explicit worker
+    /// connect/read/write deadline. Zero: no deadline.
+    pub fn from_topology_timeout(
+        topo: &TopologySnapshot,
+        timeout: Duration,
+    ) -> crate::Result<Self> {
         let shards = topo.shards();
         if topo.workers.is_empty() {
             crate::bail!("topology has no workers");
@@ -302,9 +445,18 @@ impl FederationClient {
         if stripe_worker.windows(2).any(|w| w[1] < w[0]) {
             crate::bail!("worker stripe ranges must be listed in stripe order");
         }
+        Self::from_topology_with(topo, stripe_worker, timeout)
+    }
+
+    fn from_topology_with(
+        topo: &TopologySnapshot,
+        stripe_worker: Vec<usize>,
+        timeout: Duration,
+    ) -> crate::Result<Self> {
         let mut workers = Vec::with_capacity(topo.workers.len());
+        let mut addrs = Vec::with_capacity(topo.workers.len());
         for entry in &topo.workers {
-            let c = NetClient::connect(&entry.addr)?;
+            let c = NetClient::connect_with(&entry.addr, timeout)?;
             if c.d() != topo.d as usize {
                 crate::bail!(
                     "worker {} serves d={} but topology says d={}",
@@ -314,16 +466,23 @@ impl FederationClient {
                 );
             }
             workers.push(c);
+            addrs.push(entry.addr.clone());
         }
+        let n = workers.len();
         Ok(Self {
             part: SpacePartitioner::from_cuts(topo.split_dim as usize, topo.cuts.clone()),
             stripe_worker,
             workers,
+            addrs,
+            inflight: vec![Vec::new(); n],
             sub_home: HashMap::new(),
             upd_home: HashMap::new(),
             pair_refs: HashMap::new(),
             epoch: 0,
             d: topo.d as usize,
+            timeout,
+            sync_token: 0,
+            rng: crate::prng::Rng::new(crate::obs::clock::now_ns() | 1),
         })
     }
 
@@ -352,6 +511,14 @@ impl FederationClient {
         (self.stripe_worker[a], self.stripe_worker[b])
     }
 
+    /// Send one op to worker `w`, recording it in the in-flight window
+    /// so [`settle`](Self::settle) can resend it if the worker's
+    /// admission control drops it (or the connection does).
+    fn push_op(&mut self, w: usize, op: RegionOp) -> crate::Result<()> {
+        self.inflight[w].push(op.clone());
+        self.workers[w].op(op)
+    }
+
     /// Route an upsert: the region goes (whole) to every worker whose
     /// stripes it overlaps; workers it *left* get a remove so stale
     /// replicas can't keep matching.
@@ -374,7 +541,7 @@ impl FederationClient {
                     } else {
                         RegionOp::RemoveUpd { key }
                     };
-                    self.workers[w].op(op)?;
+                    self.push_op(w, op)?;
                 }
             }
         }
@@ -390,7 +557,7 @@ impl FederationClient {
                     rect: rect.to_vec(),
                 }
             };
-            self.workers[w].op(op)?;
+            self.push_op(w, op)?;
         }
         Ok(())
     }
@@ -409,7 +576,7 @@ impl FederationClient {
     pub fn remove_subscription(&mut self, key: u32) -> crate::Result<()> {
         if let Some((wa, wb)) = self.sub_home.remove(&key) {
             for w in wa..=wb {
-                self.workers[w].op(RegionOp::RemoveSub { key })?;
+                self.push_op(w, RegionOp::RemoveSub { key })?;
             }
         }
         Ok(())
@@ -419,18 +586,159 @@ impl FederationClient {
     pub fn remove_update(&mut self, key: u32) -> crate::Result<()> {
         if let Some((wa, wb)) = self.upd_home.remove(&key) {
             for w in wa..=wb {
-                self.workers[w].op(RegionOp::RemoveUpd { key })?;
+                self.push_op(w, RegionOp::RemoveUpd { key })?;
             }
         }
         Ok(())
+    }
+
+    /// Prove every op sent so far actually landed in its worker's
+    /// staged batch, retrying past admission control and transient
+    /// transport failures:
+    ///
+    /// * a [`NetClient::barrier`] per worker counts the `Busy`
+    ///   rejections since the last clean barrier;
+    /// * rejections back off (capped exponential, jittered), then the
+    ///   whole in-flight window is resent in backlog-sized chunks with
+    ///   a `Flush` ahead of each chunk so the server drains room first
+    ///   — safe because region ops are idempotent LWW;
+    /// * a transport error reconnects to the worker's address,
+    ///   resends the window, and re-barriers (epoch catch-up rides the
+    ///   barrier's `SyncAck`).
+    ///
+    /// On success every in-flight window is empty. On giving up (the
+    /// retry caps) the typed [`NetError`] is returned — `Busy` if the
+    /// server still cannot absorb the window.
+    pub fn settle(&mut self) -> crate::Result<()> {
+        for w in 0..self.workers.len() {
+            self.settle_worker(w)?;
+        }
+        Ok(())
+    }
+
+    fn settle_worker(&mut self, w: usize) -> crate::Result<()> {
+        const MAX_BUSY_ROUNDS: u32 = 10;
+        const MAX_RECONNECTS: u32 = 2;
+        let mut rounds = 0u32;
+        let mut reconnects = 0u32;
+        loop {
+            self.sync_token += 1;
+            let token = self.sync_token;
+            let info = match self.workers[w].barrier(token) {
+                Ok(info) => info,
+                Err(e) => {
+                    if reconnects >= MAX_RECONNECTS {
+                        return Err(e);
+                    }
+                    reconnects += 1;
+                    self.reconnect(w)?;
+                    self.resend(w, 0)?;
+                    continue;
+                }
+            };
+            if info.busy == 0 {
+                self.inflight[w].clear();
+                return Ok(());
+            }
+            rounds += 1;
+            if rounds > MAX_BUSY_ROUNDS {
+                return Err(NetError::Busy {
+                    pending: info.pending,
+                    limit: info.limit,
+                }
+                .into());
+            }
+            self.backoff_sleep(rounds);
+            self.resend(w, info.limit)?;
+        }
+    }
+
+    /// Capped exponential backoff with jitter: `2^round` ms capped at
+    /// 64 ms, plus up to the same again of jitter so a fleet of
+    /// clients rejected together does not retry together.
+    fn backoff_sleep(&mut self, round: u32) {
+        let base_ms = 1u64 << round.min(6);
+        let jitter_ms = self.rng.below(base_ms + 1);
+        std::thread::sleep(Duration::from_millis(base_ms + jitter_ms));
+    }
+
+    /// Resend worker `w`'s whole in-flight window in chunks of at most
+    /// `limit` ops (0: a default chunk), with a `Flush` ahead of each
+    /// chunk so the server drains its backlog into the session first.
+    fn resend(&mut self, w: usize, limit: u64) -> crate::Result<()> {
+        let chunk = usize::try_from(limit)
+            .ok()
+            .filter(|&n| n > 0)
+            .unwrap_or(64);
+        let n = self.inflight[w].len();
+        for start in (0..n).step_by(chunk) {
+            self.workers[w].send(&Msg::Flush)?;
+            for i in start..(start + chunk).min(n) {
+                let op = self.inflight[w][i].clone();
+                self.workers[w].send(&Msg::Op(op))?;
+            }
+        }
+        self.workers[w].send(&Msg::Flush)?;
+        Ok(())
+    }
+
+    /// Replace worker `w`'s connection with a fresh one to the same
+    /// address (new handshake, same deadline).
+    fn reconnect(&mut self, w: usize) -> crate::Result<()> {
+        let c = NetClient::connect_with(&self.addrs[w], self.timeout)?;
+        if c.d() != self.d {
+            crate::bail!(
+                "worker {} came back serving d={} but the federation is d={}",
+                self.addrs[w],
+                c.d(),
+                self.d
+            );
+        }
+        self.workers[w] = c;
+        Ok(())
+    }
+
+    /// Rebuild the client's merge state from the workers themselves
+    /// (the recovery path after reconnects left the refcounts in
+    /// doubt): re-count `pair → worker` refs from every worker's
+    /// retained pair set and re-learn the epoch via a barrier. Returns
+    /// the federation epoch.
+    pub fn resync(&mut self) -> crate::Result<u64> {
+        let mut refs: HashMap<u64, u32> = HashMap::new();
+        for w in &mut self.workers {
+            w.send(&Msg::GetPairs)?;
+        }
+        for w in &mut self.workers {
+            loop {
+                if let Msg::Pairs(p) = w.recv()? {
+                    for &(s, u) in &p {
+                        *refs.entry(pack_pair(s, u)).or_insert(0) += 1;
+                    }
+                    break;
+                }
+            }
+        }
+        self.pair_refs = refs;
+        let mut epoch = 0u64;
+        for w in 0..self.workers.len() {
+            self.sync_token += 1;
+            let info = self.workers[w].barrier(self.sync_token)?;
+            epoch = epoch.max(info.epoch);
+        }
+        self.epoch = epoch;
+        Ok(epoch)
     }
 
     /// Commit every worker (pipelined: all `Commit`s go out before any
     /// diff is read) and merge their diffs into the single global diff
     /// for this epoch. Pairs straddling a worker boundary report
     /// exactly once: the refcount fold only surfaces `0 ↔ >0`
-    /// transitions, mirroring `ShardedSession::commit`.
+    /// transitions, mirroring `ShardedSession::commit`. A
+    /// [`settle`](Self::settle) runs first, so admission-control
+    /// rejections and dropped connections are cured — not silently
+    /// missing ops — before the epoch closes.
     pub fn commit(&mut self) -> crate::Result<MatchDiff> {
+        self.settle()?;
         for w in &mut self.workers {
             w.send(&Msg::Commit)?;
         }

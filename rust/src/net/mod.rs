@@ -36,7 +36,7 @@ pub mod server;
 pub mod wire;
 pub mod worker;
 
-pub use client::{FederationClient, NetClient};
+pub use client::{BarrierInfo, FederationClient, NetClient, NetError};
 pub use proto::{MetricsSnapshot, Msg, RegionOp, Role, TopologySnapshot, WorkerEntry, PROTO_ID};
 pub use router::{assign_stripes, RouterService};
 pub use server::{serve, Outbox, ServerConfig, ServerHandle, Service, StageHists};

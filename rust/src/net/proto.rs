@@ -292,7 +292,9 @@ pub enum Msg {
     Busy { pending: u64, limit: u64 },
 }
 
-fn put_rect(out: &mut Vec<u8>, rect: &[Interval]) {
+/// Encode one rectangle (varint d + 2·d bit-exact f64) — shared with
+/// the durability snapshot format ([`crate::durable::snapfile`]).
+pub(crate) fn put_rect(out: &mut Vec<u8>, rect: &[Interval]) {
     wire::put_varint(out, rect.len() as u64);
     for iv in rect {
         wire::put_f64(out, iv.lo);
@@ -300,7 +302,9 @@ fn put_rect(out: &mut Vec<u8>, rect: &[Interval]) {
     }
 }
 
-fn read_rect(r: &mut Reader<'_>) -> Result<Vec<Interval>, WireError> {
+/// Decode one rectangle (inverse of [`put_rect`]; rejects `d == 0` or
+/// `d > MAX_DIMS`).
+pub(crate) fn read_rect(r: &mut Reader<'_>) -> Result<Vec<Interval>, WireError> {
     let d = r.count(16)?;
     if d == 0 || d > MAX_DIMS {
         return Err(WireError::Malformed("rect dimension out of range"));
@@ -314,7 +318,10 @@ fn read_rect(r: &mut Reader<'_>) -> Result<Vec<Interval>, WireError> {
     Ok(rect)
 }
 
-fn put_op(out: &mut Vec<u8>, op: &RegionOp) {
+/// Encode one region op — shared with the WAL record format
+/// ([`crate::durable::wal`]), which wraps these bytes in its own
+/// CRC-checked frame.
+pub(crate) fn put_op(out: &mut Vec<u8>, op: &RegionOp) {
     match op {
         RegionOp::UpsertSub { key, rect } => {
             wire::put_u8(out, 0);
@@ -341,7 +348,8 @@ fn read_key(r: &mut Reader<'_>) -> Result<u32, WireError> {
     u32::try_from(r.varint()?).map_err(|_| WireError::Malformed("region key exceeds u32"))
 }
 
-fn read_op(r: &mut Reader<'_>) -> Result<RegionOp, WireError> {
+/// Decode one region op (inverse of [`put_op`]).
+pub(crate) fn read_op(r: &mut Reader<'_>) -> Result<RegionOp, WireError> {
     let kind = r.u8()?;
     let key = read_key(r)?;
     Ok(match kind {

@@ -170,7 +170,23 @@ impl WorkerService {
                 self.trace_log.drain(..excess);
             }
         }
+        self.publish_wal_gauges();
         diff
+    }
+
+    /// Export the session's WAL counters (when durability is attached)
+    /// as gauges, so `GetMetrics` replies and the final table report
+    /// how much the log has absorbed and whether it has degraded.
+    fn publish_wal_gauges(&mut self) {
+        let Some(stats) = self.session.wal_stats() else {
+            return;
+        };
+        self.metrics.gauge("wal_bytes", stats.bytes as f64);
+        self.metrics.gauge("wal_records", stats.records as f64);
+        self.metrics.gauge("wal_commits", stats.commits as f64);
+        self.metrics.gauge("wal_fsyncs", stats.fsyncs as f64);
+        self.metrics.gauge("wal_checkpoints", stats.checkpoints as f64);
+        self.metrics.gauge("wal_errors", stats.errors as f64);
     }
 
     /// Stream `diff` to every subscriber except `skip` (the committing
@@ -269,6 +285,7 @@ impl Service for WorkerService {
                     .gauge("net_subscribers", self.subscribers.len() as f64);
                 self.metrics
                     .gauge("ingest_backlog", self.ingest_rx.depth() as f64);
+                self.publish_wal_gauges();
                 // Fold the server-core stage histograms into a copy so
                 // the live reply matches the final table without
                 // double-counting into the service's own registry.

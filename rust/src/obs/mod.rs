@@ -99,12 +99,21 @@ pub enum Phase {
     /// Dwell of a drained ingest batch in the bounded MPSC backlog
     /// (oldest enqueue → drain; items = ops drained).
     BacklogWait = 17,
+    /// Write-ahead log append: buffered op records / the commit marker
+    /// hitting the log file (items = records written).
+    WalAppend = 18,
+    /// Write-ahead log `fsync` after a commit marker
+    /// ([`DurabilityCfg::fsync_commits`](crate::durable::DurabilityCfg)).
+    WalFsync = 19,
+    /// Recovery replay envelope: snapshot decode + committed log-tail
+    /// re-apply (items = regions + ops replayed).
+    RecoverScan = 20,
 }
 
 impl Phase {
     /// Every phase, in id order (the taxonomy table in
     /// ARCHITECTURE.md mirrors this).
-    pub const ALL: [Phase; 18] = [
+    pub const ALL: [Phase; 21] = [
         Phase::Sort,
         Phase::Sweep,
         Phase::Residual,
@@ -123,6 +132,9 @@ impl Phase {
         Phase::SnapshotSwap,
         Phase::ReaderPin,
         Phase::BacklogWait,
+        Phase::WalAppend,
+        Phase::WalFsync,
+        Phase::RecoverScan,
     ];
 
     /// Stable wire/trace id.
@@ -157,6 +169,9 @@ impl Phase {
             Phase::SnapshotSwap => "snapshot_swap",
             Phase::ReaderPin => "reader_pin",
             Phase::BacklogWait => "backlog_wait",
+            Phase::WalAppend => "wal_append",
+            Phase::WalFsync => "wal_fsync",
+            Phase::RecoverScan => "recover_scan",
         }
     }
 

@@ -201,6 +201,12 @@ pub struct DdmSession {
     /// flush republish after intra-staging auto-applies without
     /// rebuilding on every batch.
     dirty_since_publish: bool,
+    /// Crash-consistency: staged ops are appended here at stage time
+    /// and flushed to disk *before* a commit publishes; every commit
+    /// closes with a durable marker
+    /// ([`crate::engine::EngineBuilder::durability`]). `None` (the
+    /// default) costs one branch per stage/commit.
+    wal: Option<crate::durable::SessionWal>,
 }
 
 impl DdmSession {
@@ -232,6 +238,46 @@ impl DdmSession {
             tracer: crate::obs::Tracer::new(params.trace),
             snap: EpochSnapshot::default(),
             dirty_since_publish: false,
+            wal: None,
+        }
+    }
+
+    /// Attach a write-ahead log: every op staged from here on is
+    /// journaled, and every commit appends a durable marker. Called by
+    /// the engine's construction/recovery paths; attaching mid-life is
+    /// only sound when the log's history matches the session's state
+    /// (fresh log on a fresh session, or a recovered log on the
+    /// session recovery just rebuilt).
+    pub(crate) fn attach_wal(&mut self, wal: crate::durable::SessionWal) {
+        self.wal = Some(wal);
+    }
+
+    /// Write-ahead log counters, if durability is attached.
+    pub fn wal_stats(&self) -> Option<crate::durable::WalStats> {
+        self.wal.as_ref().map(crate::durable::SessionWal::stats)
+    }
+
+    /// The error that degraded the log, if any.
+    pub fn wal_error(&self) -> Option<String> {
+        self.wal
+            .as_ref()
+            .and_then(|w| w.last_error().map(str::to_string))
+    }
+
+    /// Force the epoch counter and republish the snapshot under it —
+    /// recovery's final step, pinning a replayed session to the exact
+    /// durable epoch its history ended at.
+    pub(crate) fn force_epoch(&mut self, epoch: u64) {
+        self.epoch = epoch;
+        let (ns, nu) = (self.n_subscriptions(), self.n_updates());
+        self.publish_snapshot(ns, nu);
+    }
+
+    /// Install a checkpoint of the current committed state right now
+    /// (resume does this so the recovered-from log tail is truncated).
+    pub(crate) fn checkpoint_now(&mut self) {
+        if let Some(wal) = self.wal.as_mut() {
+            wal.checkpoint(&self.snap);
         }
     }
 
@@ -255,6 +301,18 @@ impl DdmSession {
     /// Spans lost to full trace buffers since construction.
     pub fn trace_dropped(&self) -> u64 {
         self.tracer.dropped()
+    }
+
+    /// Timestamp for a caller-recorded span (recovery's
+    /// [`recover_scan`](crate::obs::Phase::RecoverScan) envelope).
+    pub(crate) fn trace_start(&self) -> u64 {
+        self.tracer.start()
+    }
+
+    /// Record a caller-timed master-lane span on this session's
+    /// tracer.
+    pub(crate) fn trace_span(&mut self, phase: crate::obs::Phase, t0: u64, items: u64) {
+        self.tracer.span(phase, t0, items);
     }
 
     /// Capacity snapshot of the session's reusable scratch — equal
@@ -365,6 +423,9 @@ impl DdmSession {
             assert_eq!(rect.len(), self.d, "rect dimension != session dimension {}", self.d);
             self.key_hint = self.key_hint.max(key as usize + 1);
         }
+        if let Some(wal) = self.wal.as_mut() {
+            wal.log_op(side == Side::Subscription, key, op.as_deref());
+        }
         match side {
             Side::Subscription => self.pending_subs.insert(key, op),
             Side::Update => self.pending_upds.insert(key, op),
@@ -459,6 +520,11 @@ impl DdmSession {
         next_upds: BTreeMap<u32, Option<Vec<Interval>>>,
     ) -> MatchDiff {
         let t_commit = self.tracer.start();
+        // Write-ahead point: the epoch's op records must be on disk
+        // before anything of this commit becomes observable.
+        if let Some(wal) = self.wal.as_mut() {
+            wal.flush_ops(&mut self.tracer);
+        }
         self.apply_pending();
         self.epoch += 1;
         let (ns, nu) = (self.n_subscriptions(), self.n_updates());
@@ -498,6 +564,19 @@ impl DdmSession {
             self.prewritten_upds = next_upds;
             drained
         };
+        if let Some(wal) = self.wal.as_mut() {
+            // The marker makes the epoch durable; after it, journal
+            // the pipelined next batch (its records belong to the
+            // *next* epoch, so they must follow this marker) — they
+            // stay buffered until the next commit's flush.
+            wal.on_commit(&self.snap, &mut self.tracer);
+            for (key, op) in &self.prewritten_subs {
+                wal.log_op(true, *key, op.as_deref());
+            }
+            for (key, op) in &self.prewritten_upds {
+                wal.log_op(false, *key, op.as_deref());
+            }
+        }
         let churn = (added.len() + removed.len()) as u64;
         self.tracer.span(crate::obs::Phase::Commit, t_commit, churn);
         MatchDiff {
@@ -570,6 +649,13 @@ impl DdmSession {
         let fresh_upds = std::mem::take(&mut self.pending_upds);
         let (sub_ops, sub_fresh) = merge_batch(std::mem::take(&mut self.prewritten_subs), fresh_subs);
         let (upd_ops, upd_fresh) = merge_batch(std::mem::take(&mut self.prewritten_upds), fresh_upds);
+        if let Some(wal) = self.wal.as_mut() {
+            // Shadow the committed region tables for checkpoints: the
+            // trees may already hold next-epoch prewrites by the time
+            // a checkpoint is cut, this merged batch is exactly what
+            // the epoch commits.
+            wal.apply_committed(&sub_ops, &upd_ops);
+        }
         let touched_count = sub_ops.len() + upd_ops.len();
         let par = self.nthreads > 1 && touched_count >= self.params.parallel_cutoff;
         self.tracer

@@ -283,6 +283,64 @@ impl AnySession {
             AnySession::Sharded(s) => s.trace_dropped(),
         }
     }
+
+    // ---- durability ---------------------------------------------------------
+
+    /// Attach a write-ahead log (engine construction/recovery paths).
+    pub(crate) fn attach_wal(&mut self, wal: crate::durable::SessionWal) {
+        match self {
+            AnySession::Single(s) => s.attach_wal(wal),
+            AnySession::Sharded(s) => s.attach_wal(wal),
+        }
+    }
+
+    /// Write-ahead log counters (`None` without durability).
+    pub fn wal_stats(&self) -> Option<crate::durable::WalStats> {
+        match self {
+            AnySession::Single(s) => s.wal_stats(),
+            AnySession::Sharded(s) => s.wal_stats(),
+        }
+    }
+
+    /// The error that degraded the log, if any.
+    pub fn wal_error(&self) -> Option<String> {
+        match self {
+            AnySession::Single(s) => s.wal_error(),
+            AnySession::Sharded(s) => s.wal_error(),
+        }
+    }
+
+    /// Force the epoch counter and republish — recovery's final step.
+    pub(crate) fn force_epoch(&mut self, epoch: u64) {
+        match self {
+            AnySession::Single(s) => s.force_epoch(epoch),
+            AnySession::Sharded(s) => s.force_epoch(epoch),
+        }
+    }
+
+    /// Install a checkpoint of the committed state right now (resume).
+    pub(crate) fn checkpoint_now(&mut self) {
+        match self {
+            AnySession::Single(s) => s.checkpoint_now(),
+            AnySession::Sharded(s) => s.checkpoint_now(),
+        }
+    }
+
+    /// Timestamp for a caller-recorded span (recovery envelope).
+    pub(crate) fn trace_start(&self) -> u64 {
+        match self {
+            AnySession::Single(s) => s.trace_start(),
+            AnySession::Sharded(s) => s.trace_start(),
+        }
+    }
+
+    /// Record a caller-timed master-lane span on the session tracer.
+    pub(crate) fn trace_span(&mut self, phase: crate::obs::Phase, t0: u64, items: u64) {
+        match self {
+            AnySession::Single(s) => s.trace_span(phase, t0, items),
+            AnySession::Sharded(s) => s.trace_span(phase, t0, items),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -144,6 +144,11 @@ pub struct ShardedSession {
     /// spans remapped onto the same lane, plus master-lane merge and
     /// commit-envelope spans.
     tracer: crate::obs::Tracer,
+    /// Crash-consistency at the *sharded* level: one log for the whole
+    /// session (inner shard sessions stay WAL-free — replay re-routes
+    /// through the same partitioner), appended at stage time, marked
+    /// durable after each merged publish.
+    wal: Option<crate::durable::SessionWal>,
 }
 
 impl ShardedSession {
@@ -185,7 +190,58 @@ impl ShardedSession {
             last_epoch_churn: vec![0; shards],
             last_epoch_commit_ns: vec![0; shards],
             tracer: crate::obs::Tracer::new(params.trace),
+            wal: None,
         }
+    }
+
+    /// Attach a write-ahead log (engine construction/recovery paths;
+    /// same contract as
+    /// [`DdmSession::attach_wal`](crate::session::DdmSession)).
+    pub(crate) fn attach_wal(&mut self, wal: crate::durable::SessionWal) {
+        self.wal = Some(wal);
+    }
+
+    /// Write-ahead log counters, if durability is attached.
+    pub fn wal_stats(&self) -> Option<crate::durable::WalStats> {
+        self.wal.as_ref().map(crate::durable::SessionWal::stats)
+    }
+
+    /// The error that degraded the log, if any.
+    pub fn wal_error(&self) -> Option<String> {
+        self.wal
+            .as_ref()
+            .and_then(|w| w.last_error().map(str::to_string))
+    }
+
+    /// Force the epoch counter and republish the merged snapshot under
+    /// it — recovery's final step (see
+    /// [`DdmSession::force_epoch`](crate::session::DdmSession)).
+    pub(crate) fn force_epoch(&mut self, epoch: u64) {
+        let snaps: Vec<EpochSnapshot> = self
+            .inner
+            .iter()
+            .map(|cell| lock_ok(cell).snapshot())
+            .collect();
+        self.epoch = epoch;
+        self.publish_merged(&snaps);
+    }
+
+    /// Install a checkpoint of the current committed state right now
+    /// (the resume path truncates the recovered-from log with this).
+    pub(crate) fn checkpoint_now(&mut self) {
+        if let Some(wal) = self.wal.as_mut() {
+            wal.checkpoint(&self.snap);
+        }
+    }
+
+    /// Timestamp for a caller-recorded span (recovery envelope).
+    pub(crate) fn trace_start(&self) -> u64 {
+        self.tracer.start()
+    }
+
+    /// Record a caller-timed master-lane span on this session's tracer.
+    pub(crate) fn trace_span(&mut self, phase: crate::obs::Phase, t0: u64, items: u64) {
+        self.tracer.span(phase, t0, items);
     }
 
     pub fn d(&self) -> usize {
@@ -247,6 +303,9 @@ impl ShardedSession {
     /// Stage an insert-or-replace of subscription region `key`.
     pub fn upsert_subscription(&mut self, key: u32, rect: &[Interval]) {
         assert_eq!(rect.len(), self.d, "rect dimension != session dimension {}", self.d);
+        if let Some(wal) = self.wal.as_mut() {
+            wal.log_op(true, key, Some(rect));
+        }
         self.pending_subs.insert(key, Some(rect.to_vec()));
         self.auto_apply();
     }
@@ -254,18 +313,27 @@ impl ShardedSession {
     /// Stage an insert-or-replace of update region `key`.
     pub fn upsert_update(&mut self, key: u32, rect: &[Interval]) {
         assert_eq!(rect.len(), self.d, "rect dimension != session dimension {}", self.d);
+        if let Some(wal) = self.wal.as_mut() {
+            wal.log_op(false, key, Some(rect));
+        }
         self.pending_upds.insert(key, Some(rect.to_vec()));
         self.auto_apply();
     }
 
     /// Stage removal of subscription region `key` (no-op if absent).
     pub fn remove_subscription(&mut self, key: u32) {
+        if let Some(wal) = self.wal.as_mut() {
+            wal.log_op(true, key, None);
+        }
         self.pending_subs.insert(key, None);
         self.auto_apply();
     }
 
     /// Stage removal of update region `key` (no-op if absent).
     pub fn remove_update(&mut self, key: u32) {
+        if let Some(wal) = self.wal.as_mut() {
+            wal.log_op(false, key, None);
+        }
         self.pending_upds.insert(key, None);
         self.auto_apply();
     }
@@ -341,6 +409,11 @@ impl ShardedSession {
         self.maybe_balance();
         let sub_ops = std::mem::take(&mut self.pending_subs);
         let upd_ops = std::mem::take(&mut self.pending_upds);
+        if let Some(wal) = self.wal.as_mut() {
+            // Shadow the committed region tables for checkpoints (the
+            // routed batch is exactly what this epoch applies).
+            wal.apply_committed(&sub_ops, &upd_ops);
+        }
         for (key, op) in sub_ops {
             route_one(
                 &self.part,
@@ -392,6 +465,11 @@ impl ShardedSession {
     /// deduplicated [`MatchDiff`].
     pub fn commit(&mut self) -> MatchDiff {
         let t_commit = self.tracer.start();
+        // Write-ahead point: this epoch's op records hit the disk
+        // before any shard applies or the merged snapshot publishes.
+        if let Some(wal) = self.wal.as_mut() {
+            wal.flush_ops(&mut self.tracer);
+        }
         self.route_pending();
         // Time every inner commit — two clock reads per shard, cheap
         // enough to keep on even untraced, so the commit-time
@@ -473,6 +551,9 @@ impl ShardedSession {
         let churn = (added.len() + removed.len()) as u64;
         self.tracer.span(crate::obs::Phase::DiffMerge, t_merge, churn);
         self.publish_merged(&snaps);
+        if let Some(wal) = self.wal.as_mut() {
+            wal.on_commit(&self.snap, &mut self.tracer);
+        }
         self.tracer.span(crate::obs::Phase::Commit, t_commit, churn);
         MatchDiff {
             epoch: self.epoch,

@@ -1,0 +1,466 @@
+//! Crash-recovery property suite for the durability layer.
+//!
+//! Strategy: drive a deterministic random churn script through a
+//! WAL-attached session, recording the log length after every commit
+//! (the marker boundaries), then simulate crashes by truncating a copy
+//! of the log at every structurally valid record end, mid-record (torn
+//! writes), and under single bit-flips. Each crash image is recovered
+//! into a fresh engine and compared against an *oracle*: a WAL-less
+//! session that replayed exactly the script prefix the surviving
+//! markers cover. The invariants, from the durability contract
+//! (`rust/src/durable/mod.rs`):
+//!
+//! * recovery never panics and never surfaces a partial epoch — the
+//!   recovered epoch is exactly the number of commit markers intact in
+//!   the crash image;
+//! * the recovered state (epoch, pair set, per-key queries) is
+//!   bit-equal to the prefix-replay oracle at that epoch;
+//! * this holds unsharded and sharded, for d ∈ {1, 3}, with and
+//!   without checkpoint files, and a history recorded in one session
+//!   shape recovers in the other;
+//! * a recovered session resumes logging, so a second crash after the
+//!   resume recovers the continuation too.
+
+use std::path::{Path, PathBuf};
+
+use ddm::core::Interval;
+use ddm::durable::{snapfile, wal, RecoverReport};
+use ddm::engine::DdmEngine;
+use ddm::prng::Rng;
+use ddm::shard::AnySession;
+
+const SPACE: f64 = 1_000.0;
+const KEYS: u32 = 16;
+
+/// One scripted staging op — the suite's own type so the oracle and
+/// the durable run share a replayable description of the workload.
+#[derive(Clone)]
+enum Op {
+    UpsertSub { key: u32, rect: Vec<Interval> },
+    UpsertUpd { key: u32, rect: Vec<Interval> },
+    RemoveSub { key: u32 },
+    RemoveUpd { key: u32 },
+}
+
+fn random_rect(rng: &mut Rng, d: usize) -> Vec<Interval> {
+    (0..d)
+        .map(|_| {
+            let lo = rng.uniform(0.0, SPACE * 0.9);
+            let hi = (lo + rng.uniform(0.01, 0.25) * SPACE).min(SPACE);
+            Interval::new(lo, hi)
+        })
+        .collect()
+}
+
+/// Deterministic churn script: epoch 1 seeds every key on both sides,
+/// later epochs upsert (80%) or remove (20%) random keys.
+fn churn_script(seed: u64, d: usize, epochs: usize, ops_per_epoch: usize) -> Vec<Vec<Op>> {
+    let mut rng = Rng::new(seed);
+    let mut script = Vec::with_capacity(epochs);
+    let mut first = Vec::with_capacity(2 * KEYS as usize);
+    for key in 0..KEYS {
+        first.push(Op::UpsertSub { key, rect: random_rect(&mut rng, d) });
+        first.push(Op::UpsertUpd { key, rect: random_rect(&mut rng, d) });
+    }
+    script.push(first);
+    for _ in 1..epochs {
+        let mut ops = Vec::with_capacity(ops_per_epoch);
+        for _ in 0..ops_per_epoch {
+            let key = rng.below(u64::from(KEYS)) as u32;
+            let sub_side = rng.chance(0.5);
+            ops.push(match (rng.chance(0.8), sub_side) {
+                (true, true) => Op::UpsertSub { key, rect: random_rect(&mut rng, d) },
+                (true, false) => Op::UpsertUpd { key, rect: random_rect(&mut rng, d) },
+                (false, true) => Op::RemoveSub { key },
+                (false, false) => Op::RemoveUpd { key },
+            });
+        }
+        script.push(ops);
+    }
+    script
+}
+
+fn apply(sess: &mut AnySession, ops: &[Op]) {
+    for op in ops {
+        match op {
+            Op::UpsertSub { key, rect } => sess.upsert_subscription(*key, rect),
+            Op::UpsertUpd { key, rect } => sess.upsert_update(*key, rect),
+            Op::RemoveSub { key } => sess.remove_subscription(*key),
+            Op::RemoveUpd { key } => sess.remove_update(*key),
+        }
+    }
+}
+
+/// Everything the suite compares between a recovered session and the
+/// oracle: epoch, the full pair set, and both per-key query directions
+/// for every key (sorted, so single and sharded sessions digest equal).
+#[derive(Debug, Clone, PartialEq)]
+struct Digest {
+    epoch: u64,
+    n_pairs: usize,
+    pairs: Vec<(u32, u32)>,
+    updates_of: Vec<Vec<u32>>,
+    subscriptions_of: Vec<Vec<u32>>,
+}
+
+fn digest(sess: &AnySession) -> Digest {
+    let mut pairs = sess.pairs();
+    pairs.sort_unstable();
+    let sorted = |mut v: Vec<u32>| {
+        v.sort_unstable();
+        v
+    };
+    Digest {
+        epoch: sess.epoch(),
+        n_pairs: sess.n_pairs(),
+        pairs,
+        updates_of: (0..KEYS).map(|k| sorted(sess.updates_of(k))).collect(),
+        subscriptions_of: (0..KEYS).map(|k| sorted(sess.subscriptions_of(k))).collect(),
+    }
+}
+
+/// Prefix-replay oracle: digests[e] is the state a WAL-less session
+/// holds after committing the first `e` epochs of the script.
+fn oracle_digests(d: usize, script: &[Vec<Op>]) -> Vec<Digest> {
+    let engine = DdmEngine::builder().threads(1).build();
+    let mut sess = engine.any_session(d, Interval::new(0.0, SPACE));
+    let mut digests = Vec::with_capacity(script.len() + 1);
+    digests.push(digest(&sess));
+    for ops in script {
+        apply(&mut sess, ops);
+        sess.commit();
+        digests.push(digest(&sess));
+    }
+    digests
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ddm-durprop-{tag}-{}", std::process::id()))
+}
+
+/// What a durable run left behind: the raw log image, the log length
+/// right after each commit (byte position of each marker's end — the
+/// independent crash-point ↦ epoch map), the snapshot file if the
+/// checkpoint cadence installed one, and the live session's digest.
+struct History {
+    log: Vec<u8>,
+    commit_lens: Vec<u64>,
+    snap: Option<Vec<u8>>,
+    live: Digest,
+}
+
+fn record_history(
+    dir: &Path,
+    d: usize,
+    shards: usize,
+    snapshot_every: u64,
+    script: &[Vec<Op>],
+) -> History {
+    let _ = std::fs::remove_dir_all(dir);
+    let mut builder = DdmEngine::builder()
+        .threads(1)
+        .durability(dir)
+        .durability_snapshot_every(snapshot_every);
+    if shards > 1 {
+        builder = builder.shards(shards);
+    }
+    let engine = builder.build();
+    let mut sess = engine.any_session(d, Interval::new(0.0, SPACE));
+    let mut commit_lens = Vec::with_capacity(script.len());
+    for ops in script {
+        apply(&mut sess, ops);
+        sess.commit();
+        let len = std::fs::metadata(dir.join(wal::LOG_FILE)).expect("log metadata").len();
+        commit_lens.push(len);
+    }
+    assert_eq!(sess.wal_error(), None, "durable run degraded its WAL");
+    History {
+        log: std::fs::read(dir.join(wal::LOG_FILE)).expect("read log"),
+        commit_lens,
+        snap: std::fs::read(dir.join(snapfile::SNAP_FILE)).ok(),
+        live: digest(&sess),
+    }
+}
+
+/// Install a crash image: a fresh directory holding `log` (and
+/// optionally a snapshot file) as a kill -9 would have left them.
+fn install_crash_image(dir: &Path, log: &[u8], snap: Option<&[u8]>) {
+    let _ = std::fs::remove_dir_all(dir);
+    std::fs::create_dir_all(dir).expect("create crash dir");
+    std::fs::write(dir.join(wal::LOG_FILE), log).expect("write crash log");
+    if let Some(bytes) = snap {
+        std::fs::write(dir.join(snapfile::SNAP_FILE), bytes).expect("write crash snapshot");
+    }
+}
+
+fn recover(dir: &Path, d: usize, shards: usize) -> ddm::Result<(AnySession, RecoverReport)> {
+    let mut builder = DdmEngine::builder().threads(1).durability(dir);
+    if shards > 1 {
+        builder = builder.shards(shards);
+    }
+    builder.build().recover_any_session(d, Interval::new(0.0, SPACE))
+}
+
+/// Number of commit markers fully contained in the first `cut` bytes —
+/// the epoch a crash at that byte must recover to. Computed from the
+/// recorded post-commit lengths, independently of the scanner.
+fn expected_epoch(cut: u64, commit_lens: &[u64]) -> u64 {
+    commit_lens.iter().filter(|&&len| len <= cut).count() as u64
+}
+
+#[test]
+fn cuts_at_every_record_boundary_recover_the_exact_marker_prefix() {
+    let d = 1;
+    let script = churn_script(0xD1CE, d, 6, 10);
+    let oracle = oracle_digests(d, &script);
+    let dir = tmp("bound");
+    let hist = record_history(&dir, d, 1, u64::MAX, &script);
+    assert_eq!(hist.live, oracle[script.len()], "durable run diverged from the oracle");
+    assert!(hist.snap.is_none(), "checkpoints were disabled");
+
+    let scan = wal::scan_log(&hist.log);
+    assert_eq!(scan.batches.len(), script.len());
+    assert_eq!(scan.tail_bytes, 0, "a clean shutdown leaves no tail");
+    for &len in &hist.commit_lens {
+        assert!(
+            scan.record_ends.contains(&(len as usize)),
+            "post-commit length {len} is not a record boundary"
+        );
+    }
+
+    let crash_dir = tmp("bound-crash");
+    let mut cuts = vec![wal::WAL_MAGIC.len()];
+    cuts.extend(scan.record_ends.iter().copied());
+    for cut in cuts {
+        install_crash_image(&crash_dir, &hist.log[..cut], None);
+        let want = expected_epoch(cut as u64, &hist.commit_lens);
+        let (sess, report) =
+            recover(&crash_dir, d, 1).unwrap_or_else(|e| panic!("cut at byte {cut}: {e}"));
+        assert_eq!(report.epoch, want, "cut at byte {cut}");
+        assert_eq!(digest(&sess), oracle[want as usize], "cut at byte {cut}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&crash_dir).ok();
+}
+
+#[test]
+fn mid_record_tears_recover_to_the_last_intact_epoch() {
+    let d = 1;
+    let script = churn_script(0x7EA4, d, 4, 6);
+    let oracle = oracle_digests(d, &script);
+    let dir = tmp("tear");
+    let hist = record_history(&dir, d, 1, u64::MAX, &script);
+
+    let scan = wal::scan_log(&hist.log);
+    let mut bounds = vec![wal::WAL_MAGIC.len()];
+    bounds.extend(scan.record_ends.iter().copied());
+    let crash_dir = tmp("tear-crash");
+    // A torn magic is also just a short durable prefix.
+    install_crash_image(&crash_dir, &hist.log[..4], None);
+    let (sess, report) = recover(&crash_dir, d, 1).expect("torn magic");
+    assert_eq!(report.epoch, 0);
+    assert_eq!(digest(&sess), oracle[0]);
+    for window in bounds.windows(2) {
+        let (start, end) = (window[0], window[1]);
+        for cut in [start + 1, start + (end - start) / 2, end - 1] {
+            if cut <= start || cut >= end {
+                continue;
+            }
+            install_crash_image(&crash_dir, &hist.log[..cut], None);
+            let want = expected_epoch(cut as u64, &hist.commit_lens);
+            let (sess, report) =
+                recover(&crash_dir, d, 1).unwrap_or_else(|e| panic!("tear at byte {cut}: {e}"));
+            assert_eq!(report.epoch, want, "tear at byte {cut}");
+            assert!(report.tail_bytes > 0, "tear at byte {cut} discarded nothing");
+            assert_eq!(digest(&sess), oracle[want as usize], "tear at byte {cut}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&crash_dir).ok();
+}
+
+#[test]
+fn single_bit_flips_never_panic_and_never_surface_a_partial_epoch() {
+    let d = 1;
+    let script = churn_script(0xF11B, d, 5, 8);
+    let oracle = oracle_digests(d, &script);
+    let dir = tmp("flip");
+    let hist = record_history(&dir, d, 1, u64::MAX, &script);
+
+    let mut rng = Rng::new(0xB17F);
+    let mut offsets: Vec<usize> =
+        (0..40).map(|_| rng.below(hist.log.len() as u64) as usize).collect();
+    offsets.push(0); // magic: the whole log becomes a discarded tail
+    offsets.push(hist.log.len() - 1); // final marker's CRC
+    let crash_dir = tmp("flip-crash");
+    for off in offsets {
+        let mut mutated = hist.log.clone();
+        let bit = rng.below(8) as u8;
+        mutated[off] ^= 1 << bit;
+        install_crash_image(&crash_dir, &mutated, None);
+        // Every record ending at or before the flip is untouched; the
+        // record containing it fails its CRC, so the scan stops there.
+        let want = expected_epoch(off as u64, &hist.commit_lens);
+        let (sess, report) = recover(&crash_dir, d, 1)
+            .unwrap_or_else(|e| panic!("bit {bit} flipped at byte {off}: {e}"));
+        assert_eq!(report.epoch, want, "bit {bit} flipped at byte {off}");
+        assert_eq!(digest(&sess), oracle[want as usize], "bit {bit} flipped at byte {off}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&crash_dir).ok();
+}
+
+#[test]
+fn three_dimensional_histories_survive_boundary_and_marker_tear_cuts() {
+    let d = 3;
+    let script = churn_script(0x3D, d, 4, 6);
+    let oracle = oracle_digests(d, &script);
+    let dir = tmp("d3");
+    let hist = record_history(&dir, d, 1, u64::MAX, &script);
+    assert_eq!(hist.live, oracle[script.len()]);
+
+    let crash_dir = tmp("d3-crash");
+    for (k, &len) in hist.commit_lens.iter().enumerate() {
+        let epoch = k as u64 + 1;
+        install_crash_image(&crash_dir, &hist.log[..len as usize], None);
+        let (sess, report) =
+            recover(&crash_dir, d, 1).unwrap_or_else(|e| panic!("boundary epoch {epoch}: {e}"));
+        assert_eq!(report.epoch, epoch);
+        assert_eq!(digest(&sess), oracle[epoch as usize]);
+
+        // Tear the marker itself: exactly this epoch is lost, even
+        // though every one of its op records landed.
+        install_crash_image(&crash_dir, &hist.log[..len as usize - 3], None);
+        let (sess, report) = recover(&crash_dir, d, 1)
+            .unwrap_or_else(|e| panic!("torn marker epoch {epoch}: {e}"));
+        assert_eq!(report.epoch, epoch - 1, "torn marker of epoch {epoch}");
+        assert_eq!(digest(&sess), oracle[k], "torn marker of epoch {epoch}");
+    }
+
+    // The same 3-d history also recovers into a sharded session.
+    install_crash_image(&crash_dir, &hist.log, None);
+    let (sess, report) = recover(&crash_dir, d, 3).expect("sharded 3-d recovery");
+    assert!(matches!(sess, AnySession::Sharded(_)));
+    assert_eq!(report.epoch, script.len() as u64);
+    assert_eq!(digest(&sess), oracle[script.len()]);
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&crash_dir).ok();
+}
+
+#[test]
+fn histories_recover_across_session_shapes() {
+    let d = 1;
+    let script = churn_script(0x54A2D, d, 4, 8);
+    let oracle = oracle_digests(d, &script);
+
+    // Recorded unsharded, recovered sharded — at every marker boundary.
+    let dir = tmp("shape-single");
+    let hist = record_history(&dir, d, 1, u64::MAX, &script);
+    let crash_dir = tmp("shape-crash");
+    for (k, &len) in hist.commit_lens.iter().enumerate() {
+        let epoch = k as u64 + 1;
+        install_crash_image(&crash_dir, &hist.log[..len as usize], None);
+        let (sess, report) = recover(&crash_dir, d, 3)
+            .unwrap_or_else(|e| panic!("sharded recovery at epoch {epoch}: {e}"));
+        assert!(matches!(sess, AnySession::Sharded(_)), "shards=3 must recover sharded");
+        assert_eq!(report.epoch, epoch);
+        assert_eq!(digest(&sess), oracle[epoch as usize], "sharded recovery at epoch {epoch}");
+    }
+
+    // Recorded sharded, recovered unsharded.
+    let sharded_dir = tmp("shape-sharded");
+    let sharded = record_history(&sharded_dir, d, 3, u64::MAX, &script);
+    assert_eq!(sharded.live, oracle[script.len()], "sharded run diverged from the oracle");
+    let (sess, report) = recover(&sharded_dir, d, 1).expect("unsharded recovery of a sharded log");
+    assert!(matches!(sess, AnySession::Single(_)));
+    assert_eq!(report.epoch, script.len() as u64);
+    assert_eq!(digest(&sess), oracle[script.len()]);
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&crash_dir).ok();
+    std::fs::remove_dir_all(&sharded_dir).ok();
+}
+
+#[test]
+fn checkpoint_cadence_recovers_snapshot_plus_log_tail() {
+    let d = 1;
+    let epochs = 7;
+    let script = churn_script(0xCADE, d, epochs, 8);
+    let oracle = oracle_digests(d, &script);
+    let dir = tmp("ckpt");
+    // Checkpoint every 2 commits: snapshots at epochs 2, 4 and 6, so
+    // the directory ends as a snapshot at 6 plus a log holding epoch 7.
+    let hist = record_history(&dir, d, 1, 2, &script);
+    assert_eq!(hist.live, oracle[epochs]);
+    let snap = hist.snap.as_deref().expect("cadence installed no snapshot");
+
+    let crash_dir = tmp("ckpt-crash");
+    let scan = wal::scan_log(&hist.log);
+    let last_len = *hist.commit_lens.last().expect("commit lengths");
+    let mut cuts = vec![wal::WAL_MAGIC.len()];
+    cuts.extend(scan.record_ends.iter().copied());
+    for cut in cuts {
+        install_crash_image(&crash_dir, &hist.log[..cut], Some(snap));
+        let want = if cut as u64 >= last_len { epochs as u64 } else { epochs as u64 - 1 };
+        let (sess, report) =
+            recover(&crash_dir, d, 1).unwrap_or_else(|e| panic!("cut at byte {cut}: {e}"));
+        assert_eq!(report.epoch, want, "cut at byte {cut}");
+        assert!(report.snapshot_regions > 0, "cut at byte {cut} ignored the snapshot");
+        assert_eq!(digest(&sess), oracle[want as usize], "cut at byte {cut}");
+    }
+
+    // The log lost entirely: the snapshot alone carries its epoch.
+    let _ = std::fs::remove_dir_all(&crash_dir);
+    std::fs::create_dir_all(&crash_dir).expect("create crash dir");
+    std::fs::write(crash_dir.join(snapfile::SNAP_FILE), snap).expect("write snapshot");
+    let (sess, report) = recover(&crash_dir, d, 1).expect("snapshot-only recovery");
+    assert_eq!(report.epoch, epochs as u64 - 1);
+    assert_eq!(digest(&sess), oracle[epochs - 1]);
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&crash_dir).ok();
+}
+
+#[test]
+fn recovery_resumes_logging_and_a_second_crash_recovers_the_continuation() {
+    let d = 1;
+    let epochs = 6;
+    let script = churn_script(0x5E5, d, epochs, 8);
+    let oracle = oracle_digests(d, &script);
+    let dir = tmp("resume");
+    let hist = record_history(&dir, d, 1, u64::MAX, &script);
+
+    // Crash right after epoch 3's marker.
+    let cut = hist.commit_lens[2] as usize;
+    let crash_dir = tmp("resume-crash");
+    install_crash_image(&crash_dir, &hist.log[..cut], None);
+
+    // Recovery is idempotent: a second recovery (after the first one
+    // checkpointed and truncated the directory) sees the same state.
+    let (first, report) = recover(&crash_dir, d, 1).expect("first recovery");
+    assert_eq!(report.epoch, 3);
+    let at_crash = digest(&first);
+    assert_eq!(at_crash, oracle[3]);
+    drop(first);
+    let (mut resumed, report) = recover(&crash_dir, d, 1).expect("second recovery");
+    assert_eq!(report.epoch, 3);
+    assert_eq!(digest(&resumed), at_crash);
+
+    // Continue the script where the crash cut it off; the resumed WAL
+    // must make the continuation durable too.
+    for ops in &script[3..] {
+        apply(&mut resumed, ops);
+        resumed.commit();
+    }
+    assert_eq!(resumed.wal_error(), None, "resumed WAL degraded");
+    assert_eq!(digest(&resumed), oracle[epochs]);
+    drop(resumed);
+
+    let (reborn, report) = recover(&crash_dir, d, 1).expect("recovery of the continuation");
+    assert_eq!(report.epoch, epochs as u64);
+    assert_eq!(digest(&reborn), oracle[epochs]);
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&crash_dir).ok();
+}

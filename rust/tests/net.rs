@@ -445,6 +445,102 @@ fn router_serves_topology() {
     router.shutdown();
 }
 
+// ---- timeouts & retry/backoff -----------------------------------------
+
+/// A listener that accepts and then never speaks: with a deadline the
+/// handshake fails in bounded time instead of hanging the client
+/// forever (the regression `--timeout-ms` exists to prevent).
+#[test]
+fn silent_listener_times_out_instead_of_hanging() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind silent listener");
+    let addr = listener.local_addr().expect("addr").to_string();
+    // Keep accepted sockets alive (but mute) so the client sees an
+    // open connection, not a reset.
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let held = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+    let (stop2, held2) = (std::sync::Arc::clone(&stop), std::sync::Arc::clone(&held));
+    let accepter = std::thread::spawn(move || {
+        listener
+            .set_nonblocking(true)
+            .expect("nonblocking accept loop");
+        while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((sock, _)) => held2.lock().unwrap().push(sock),
+                Err(_) => std::thread::sleep(Duration::from_millis(5)),
+            }
+        }
+    });
+
+    let t0 = std::time::Instant::now();
+    let res = NetClient::connect_with(&addr, Duration::from_millis(300));
+    let elapsed = t0.elapsed();
+    assert!(res.is_err(), "handshake against a silent listener must fail");
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "timeout did not bound the handshake: {elapsed:?}"
+    );
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    accepter.join().expect("accepter thread");
+}
+
+/// A burst far over the worker's admission cap still lands completely:
+/// `Busy` rejections surface as typed retryable errors, the settle
+/// loop backs off, flushes, and resends in `limit`-sized chunks until
+/// the barrier reports a clean backlog — and the epoch that follows
+/// contains every op exactly once.
+#[test]
+fn over_cap_burst_eventually_lands_every_op() {
+    const CAP: usize = 4;
+    const KEYS: u32 = 30;
+    let engine = DdmEngine::builder().threads(2).build();
+    let svc = WorkerService::with_backlog(AnySession::Single(engine.session(D)), CAP);
+    let handle = serve(&cfg(), svc).expect("serve tiny-backlog worker");
+
+    let topo = TopologySnapshot {
+        d: D as u32,
+        split_dim: 0,
+        cuts: Vec::new(),
+        workers: vec![ddm::net::WorkerEntry {
+            addr: handle.addr().to_string(),
+            first: 0,
+            last: 0,
+        }],
+    };
+    let mut fed = FederationClient::from_topology(&topo).expect("fed connect");
+
+    // 2×KEYS ops in one burst, 15× the backlog cap: every key's sub
+    // and upd share a rect, so the epoch must end with KEYS pairs.
+    for k in 0..KEYS {
+        let lo = f64::from(k) * 10.0;
+        let r = rect(lo, lo + 5.0, 0.0, 5.0);
+        fed.upsert_subscription(k, &r).expect("burst sub");
+        fed.upsert_update(k, &r).expect("burst upd");
+    }
+    let diff = fed.commit().expect("settle + commit over-cap burst");
+    assert_eq!(
+        diff.added.len(),
+        KEYS as usize,
+        "retry/backoff dropped ops: {} of {KEYS} pairs arrived",
+        diff.added.len()
+    );
+    for k in 0..KEYS {
+        assert!(diff.added.contains(&(k, k)), "pair ({k},{k}) missing");
+    }
+    assert_eq!(fed.n_pairs(), KEYS as usize);
+
+    // The server really did reject ops along the way (the test is
+    // meaningless if the burst fit the backlog).
+    let snaps = fed.worker_metrics().expect("metrics");
+    assert!(
+        snaps[0].counter("net_busy") > 0,
+        "burst never overflowed the cap — raise KEYS or lower CAP"
+    );
+
+    fed.shutdown_workers().expect("worker shutdown");
+    handle.join();
+}
+
 // ---- wire fuzz --------------------------------------------------------
 
 /// Every frame type round-trips at several dimensionalities, and no

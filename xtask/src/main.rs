@@ -31,6 +31,13 @@
 //!     `EpochSnapshot` read is wait-free by contract — readers must
 //!     never block on (or be blocked by) a committing writer, so no
 //!     snapshot code path may acquire a lock.
+//!   - **durable-decode-no-panic**: no `.unwrap()` / `.expect(` / bare
+//!     `as` casts inside the record-decode fns of `durable/` — any
+//!     `fn` named `decode*`, `read*`, or `scan*`. Those functions are
+//!     fed bytes that crashed mid-write: torn, truncated, bit-flipped.
+//!     Every length is attacker-ish input; recovery must reject bad
+//!     tails with a clean error (or a tolerated-prefix scan), never a
+//!     panic or a silent truncating cast.
 //!
 //!   Violations can be waived in place with a reason:
 //!   `// xlint: allow(<rule>): <reason>` on the offending line or in the
@@ -58,8 +65,8 @@ use std::fs;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-/// The eight lint rules. Names are what waivers reference.
-const RULES: [&str; 8] = [
+/// The nine lint rules. Names are what waivers reference.
+const RULES: [&str; 9] = [
     "safety-comment",
     "hot-lock",
     "hot-panic",
@@ -68,6 +75,7 @@ const RULES: [&str; 8] = [
     "wire-no-alloc-in-decode",
     "obs-no-hot-alloc",
     "session-read-no-lock",
+    "durable-decode-no-panic",
 ];
 
 /// Hot-path module prefixes: lock-free by design, so locks and panics
@@ -93,6 +101,10 @@ const OBS_PREFIX: &str = "obs/";
 /// The snapshot read path, whose fn bodies must never acquire a lock
 /// (see the `session-read-no-lock` rule).
 const SNAPSHOT_FILE: &str = "session/snapshot.rs";
+
+/// The durability tree, whose record-decode fns must neither panic nor
+/// truncate lengths with bare casts (see `durable-decode-no-panic`).
+const DURABLE_PREFIX: &str = "durable/";
 
 /// Growth calls banned inside `obs/` record-path fns: recording must
 /// never resize a container, or tracing perturbs what it measures.
@@ -574,6 +586,14 @@ fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
     } else {
         Vec::new()
     };
+    let is_durable = rel.starts_with(DURABLE_PREFIX);
+    let durable_decode = if is_durable {
+        fn_regions(&lines, |n| {
+            n.starts_with("decode") || n.starts_with("read") || n.starts_with("scan")
+        })
+    } else {
+        Vec::new()
+    };
 
     let mut out = Vec::new();
     let mut push = |line: usize, rule: &'static str, msg: String| {
@@ -685,6 +705,30 @@ fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
                         "`{tok}` inside a {SNAPSHOT_FILE} fn (snapshot reads are wait-free by \
                          contract — they must never acquire a lock)"
                     ),
+                );
+            }
+        }
+
+        if is_durable && !in_test[i] && durable_decode[i] {
+            for panicky in [".unwrap()", ".expect("] {
+                if code.contains(panicky) {
+                    push(
+                        i,
+                        "durable-decode-no-panic",
+                        format!(
+                            "`{panicky}` inside a durable/ record-decode fn (crash-torn input \
+                             must yield an error or a tolerated prefix, never a panic)"
+                        ),
+                    );
+                }
+            }
+            if word_in(code, "as") {
+                push(
+                    i,
+                    "durable-decode-no-panic",
+                    "bare `as` cast inside a durable/ record-decode fn (use `try_from`/`try_into` \
+                     so corrupt lengths fail instead of truncating)"
+                        .to_string(),
                 );
             }
         }
@@ -802,13 +846,14 @@ fn run_lint(args: &[String]) -> ExitCode {
 
 /// Quick bench configurations — the same flags CI's smoke steps use, so
 /// a local snapshot is comparable to the CI artifact.
-const SNAPSHOT_BENCHES: [(&str, &[&str]); 6] = [
+const SNAPSHOT_BENCHES: [(&str, &[&str]); 7] = [
     ("abl_session", &["--quick", "--n", "10k", "--epochs", "2"]),
     ("abl_shard", &["--quick", "--n", "6k", "--epochs", "2"]),
     ("abl_nd", &["--quick"]),
     ("abl_sort", &["--quick"]),
     ("abl_net", &["--quick"]),
     ("abl_rw", &["--quick"]),
+    ("abl_wal", &["--quick"]),
 ];
 
 /// Pull the `"header"` column list out of a `BENCH_*.json` artifact
@@ -1346,6 +1391,47 @@ mod tests {
         // acquires nothing, so it is not a violation by itself.
         let src = "use std::sync::Arc;\npub fn epoch(&self) -> u64 {\n    self.inner.epoch\n}\n";
         assert!(lint_file("session/snapshot.rs", src).is_empty());
+    }
+
+    // ---- durable-decode-no-panic ---------------------------------
+
+    #[test]
+    fn panicky_decode_in_durable_is_flagged() {
+        let src = "fn decode_record(buf: &[u8]) -> u64 {\n    let n = buf.len() as u64;\n    let first = buf.first().copied().unwrap();\n    n + u64::from(first)\n}\n";
+        let vs = lint_file("durable/wal.rs", src);
+        assert_eq!(
+            rules_of(&vs),
+            ["durable-decode-no-panic", "durable-decode-no-panic"]
+        );
+        assert_eq!(vs[0].line, 2);
+        assert_eq!(vs[1].line, 3);
+    }
+
+    #[test]
+    fn non_decode_durable_fn_may_unwrap() {
+        // The rule scopes to record-decode fns: setup/teardown paths in
+        // durable/ answer to the ordinary panic policy, not this one.
+        let src = "fn install(path: &std::path::Path) {\n    std::fs::remove_file(path).unwrap();\n}\n";
+        assert!(lint_file("durable/wal.rs", src).is_empty());
+    }
+
+    #[test]
+    fn decode_fn_outside_durable_is_not_this_rules_business() {
+        let src = "fn decode_header(buf: &[u8]) -> u64 {\n    buf.len() as u64\n}\n";
+        assert!(lint_file("hla/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn durable_decode_waiver_works() {
+        let src = "fn scan_tail(buf: &[u8]) -> usize {\n    // xlint: allow(durable-decode-no-panic): index bounded by the caller.\n    buf.len() as usize\n}\n";
+        assert!(lint_file("durable/log.rs", src).is_empty());
+    }
+
+    #[test]
+    fn durable_decode_ident_boundaries_do_not_trip_as() {
+        // `as_ref`/`as_bytes` contain the letters but not the cast.
+        let src = "fn read_magic(buf: &[u8]) -> bool {\n    buf.first().map(u8::to_owned).is_some() && !buf.as_ref().is_empty()\n}\n";
+        assert!(lint_file("durable/snapshot.rs", src).is_empty());
     }
 
     // ---- bench-snapshot header diff ------------------------------
